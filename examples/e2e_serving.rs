@@ -1,0 +1,84 @@
+//! End-to-end serving driver (the DESIGN.md §5 validation run): starts
+//! the TCP server with the trained model, submits a mixed batch of
+//! long-context requests through the real client protocol, and reports
+//! per-request latency plus aggregate throughput — the serving-paper
+//! analogue of "load a small real model and serve batched requests".
+//!
+//! ```bash
+//! cargo run --release --example e2e_serving
+//! ```
+//! The measured numbers are recorded in EXPERIMENTS.md §E2E.
+
+use std::thread;
+use std::time::Duration;
+
+use specpv::config::Config;
+use specpv::json::Json;
+use specpv::runtime::Runtime;
+use specpv::server::{serve, Client};
+use specpv::{corpus, util::Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.server_addr = "127.0.0.1:7799".into();
+    let addr = cfg.server_addr.clone();
+
+    let server = thread::spawn(move || {
+        let rt = Runtime::new(&cfg.artifacts_dir).expect("runtime");
+        serve(&rt, cfg).expect("server");
+    });
+    thread::sleep(Duration::from_millis(500));
+
+    let mut client = Client::connect(&addr)?;
+    // workload: continuation + summarization + needle QA, mixed engines
+    let mut jobs: Vec<(String, String, usize)> = Vec::new();
+    for seed in 0..2u64 {
+        jobs.push((
+            format!("continue/{seed}"),
+            corpus::continuation_prompt(seed, 1400),
+            96,
+        ));
+    }
+    jobs.push((
+        "summarize".into(),
+        corpus::summarize_prompt(&corpus::report_text(9, 1200)),
+        96,
+    ));
+    let qa = corpus::needle_qa(17, 1200, 6);
+    jobs.push(("needle_qa".into(), format!("{}{}", qa.context, qa.question), 12));
+
+    let sw = Stopwatch::new();
+    let mut total_tokens = 0usize;
+    println!("| request | engine | tokens | latency | tok/s | tau | modes F/P/R |");
+    println!("|---|---|---|---|---|---|---|");
+    for (i, (name, prompt, max_new)) in jobs.iter().enumerate() {
+        let engine = if i % 2 == 0 { "spec_pv" } else { "spec_full" };
+        let r = client.generate(prompt, *max_new, engine)?;
+        anyhow::ensure!(
+            r.get("ok").and_then(|x| x.as_bool()) == Some(true),
+            "request failed: {r:?}"
+        );
+        let tokens = r.get("tokens").and_then(|x| x.as_usize()).unwrap_or(0);
+        total_tokens += tokens;
+        let modes = r.get("modes").cloned().unwrap_or(Json::Null);
+        println!(
+            "| {name} | {engine} | {tokens} | {:.2}s | {:.1} | {:.2} | {}/{}/{} |",
+            r.get("latency_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            r.get("tok_per_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            r.get("tau").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            modes.get("full").and_then(|x| x.as_i64()).unwrap_or(0),
+            modes.get("partial").and_then(|x| x.as_i64()).unwrap_or(0),
+            modes.get("refresh").and_then(|x| x.as_i64()).unwrap_or(0),
+        );
+    }
+    let wall = sw.total();
+    let m = client.call(Json::obj().set("op", "metrics"))?;
+    println!(
+        "\naggregate: {total_tokens} tokens in {wall:.1}s = {:.1} tok/s end-to-end",
+        total_tokens as f64 / wall
+    );
+    println!("server: {}", m.get("summary").and_then(|x| x.as_str()).unwrap_or("?"));
+    client.shutdown()?;
+    server.join().unwrap();
+    Ok(())
+}

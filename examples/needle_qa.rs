@@ -1,0 +1,58 @@
+//! Needle-in-a-haystack QA (the paper's Fig. 5 scenario): facts buried
+//! in a long context; the model must retrieve the queried one. Shows how
+//! partial-KV retrieval quality depends on the budget.
+//!
+//! ```bash
+//! cargo run --release --example needle_qa [-- <ctx_bytes> <n_instances>]
+//! ```
+
+use specpv::config::{Config, EngineKind};
+use specpv::engine::{self, GenRequest};
+use specpv::metrics::exact_match;
+use specpv::runtime::Runtime;
+use specpv::{corpus, tokenizer};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let ctx: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let cfg = Config::default();
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+
+    println!("| method | hits | accuracy |");
+    println!("|---|---|---|");
+    for budget in [None, Some(512), Some(256), Some(64)] {
+        let mut c = cfg.clone();
+        match budget {
+            None => c.engine = EngineKind::SpecFull,
+            Some(b) => {
+                c.engine = EngineKind::SpecPv;
+                c.specpv.retrieval_budget = b;
+            }
+        }
+        let mut hits = 0usize;
+        for i in 0..n {
+            let qa = corpus::needle_qa(100 + i as u64, ctx, 8);
+            let prompt = format!("{}{}", qa.context, qa.question);
+            let req = GenRequest::greedy(tokenizer::encode(&prompt), 12);
+            let r = engine::generate_with(&c, &rt, &req)?;
+            let text = r.text();
+            let got = text
+                .split_whitespace()
+                .next()
+                .unwrap_or("")
+                .trim_matches(|ch: char| !ch.is_alphanumeric());
+            if exact_match(got, &qa.answer) {
+                hits += 1;
+            } else if i == 0 {
+                eprintln!("  miss: wanted {:?}, got {:?}", qa.answer, got);
+            }
+        }
+        let label = match budget {
+            None => "full".to_string(),
+            Some(b) => format!("SpecPV-{b}"),
+        };
+        println!("| {label} | {hits}/{n} | {:.0}% |", hits as f64 / n as f64 * 100.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quickstart: load the AOT artifacts, generate a continuation with
+//! SpecPV, and print the efficiency telemetry.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use specpv::config::{Config, EngineKind};
+use specpv::engine::{self, GenRequest};
+use specpv::runtime::Runtime;
+use specpv::{corpus, tokenizer};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config {
+        engine: EngineKind::SpecPv,
+        ..Config::default()
+    };
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+
+    // A PG-19-style synthetic prompt long enough for partial verification
+    // to engage (budget 512 → core ≈ 608 tokens).
+    let prompt = corpus::continuation_prompt(/*seed=*/ 1, /*bytes=*/ 1200);
+    println!("--- prompt tail ---\n...{}", &prompt[prompt.len() - 160..]);
+
+    let req = GenRequest::greedy(tokenizer::encode(&prompt), 128);
+    let result = engine::generate_with(&cfg, &rt, &req)?;
+
+    println!("--- SpecPV continuation ---\n{}", result.text());
+    let s = &result.stats;
+    println!(
+        "\n{} new tokens | {:.1} tok/s | accept length τ = {:.2}",
+        s.new_tokens,
+        s.throughput(),
+        s.accept_len()
+    );
+    println!(
+        "verification modes: {} full, {} partial, {} refresh",
+        s.full_steps, s.partial_steps, s.refresh_steps
+    );
+    Ok(())
+}

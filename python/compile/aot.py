@@ -1,0 +1,607 @@
+"""AOT lowering: every executable of the SpecPV stack → HLO *text*.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+FLAT-STATE ABI.  The CPU PJRT client exposed by the xla crate neither
+untuples executable results (multi-output programs come back as ONE tuple
+buffer that cannot be re-fed as an input) nor implements CopyRawToHost
+(no partial downloads). Every stateful executable therefore has exactly
+ONE output: a flat f32 "state" vector with a fixed per-(model, bucket)
+layout
+
+    full    state = [ kv(L,2,H,B,D) | logits(256,V) | feats(256,3h) | queries(L,H,64,D) ]
+    partial state = [ kv(L,2,H,P,D) | logits(16,V)  | feats(16,3h) ]
+    draft   state = [ kv(2,H,B,D)   | logits(4,V)   | hidden(4,h) ]
+    tiny    state = [ kv(2,2,H,B,D) | logits_last(V) ]
+
+A variant that produces fewer rows than the region (e.g. T=1 AR decode)
+writes its rows at the top and zero-pads the rest. The state buffer is
+threaded device-side call-to-call (zero host↔device KV traffic in steady
+state); the rust runtime downloads ONLY the outputs of the tiny `read_*`
+extractor executables, which slice the small regions out of a state.
+Weights are trailing runtime arguments (uploaded once per process);
+`manifest.json` records arg order, shapes, layouts and attributes — the
+rust side is entirely manifest-driven.
+
+Executable families (see DESIGN.md §4):
+  verify_{s}_b{B}_t{T}   target fwd, full bucket (AR decode T=1, tree
+                         verify T=16, refresh T=64/192, prefill T=256)
+  pverify_{s}_p{P}_t16   partial verification (same graph, small bucket)
+  score_{s}_b{B}         retrieval scores (3 reductions) from a full state
+  gather_{s}_b{B}_p{P}   full state + block ids → fresh partial state
+  draft_prefill_{s}_b{B} EAGLE draft prefill (slices feats from the target
+                         state internally — no host round-trip)
+  draft_step_{s}_b{B}    EAGLE draft tree-level step (W nodes)
+  read_full_{s}_b{B}     state → [logits(64,V) | feats(64,3h)]
+  read_last_{s}_b{B}     state, idx → [logits[idx] | feats[idx]]
+  read_partial_{s}_p{P}  state → [logits(16,V) | feats(16,3h)]
+  read_draft_{s}_b{B}    state → [logits(4,V) | hidden(4,h)]
+  medusa_{s}             top feature → 3 Medusa head logits
+  verify_tiny_b512_t{T}, read_tiny_b512   TriForce independent draft
+
+Usage: python -m compile.aot --out-dir ../artifacts [--sizes s,m,l]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+CHUNK = 256              # prefill chunk length == max logits/feats rows
+TREE_T = 16              # verification tree size
+REFRESH_T = 64           # refresh step capacity (pv tokens + tree)
+BIG_REFRESH_T = 192      # fig6 large-buffer ablation (bucket 4096 only)
+QROWS = 64               # query rows kept for retrieval scoring
+DRAFT_W = 8              # draft slots per call (catch-up chain or level)
+DRAFT_REGION = 32        # draft-tree scratch region (max drafted per round)
+PREV_MAX = 8             # max accepted rows compacted by a fused verify
+PREV_WINDOW = 16         # window the fused compaction gathers from (= TREE_T)
+BLOCK = 32               # KV block size (paged cache granularity)
+YARN_FACTOR = 16.0
+
+FULL_BUCKETS = [1024, 2048, 4096, 8192]
+PARTIAL_BUCKETS = [512, 768, 1280]   # budgets 256/512/1024 + sink/local/buffer
+TINY_BUCKET = 512                    # TriForce streaming draft cache
+
+ML_FULL_BUCKETS = [1024, 2048, 4096]
+ML_PARTIAL_BUCKETS = [768]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# State layouts (mirrored in rust/src/model.rs; manifest carries the offsets)
+# ---------------------------------------------------------------------------
+
+def full_layout(cfg: M.ModelCfg, B: int) -> dict:
+    L, H, D, V, h = cfg.n_layer, cfg.n_head, cfg.d_head, cfg.vocab, cfg.d_model
+    kv = L * 2 * H * B * D
+    logits = CHUNK * V
+    feats = CHUNK * 3 * h
+    queries = L * H * QROWS * D
+    return {"kv": kv, "logits": logits, "feats": feats, "queries": queries,
+            "total": kv + logits + feats + queries}
+
+
+def partial_layout(cfg: M.ModelCfg, P: int) -> dict:
+    L, H, D, V, h = cfg.n_layer, cfg.n_head, cfg.d_head, cfg.vocab, cfg.d_model
+    kv = L * 2 * H * P * D
+    logits = TREE_T * V
+    feats = TREE_T * 3 * h
+    return {"kv": kv, "logits": logits, "feats": feats, "queries": 0,
+            "total": kv + logits + feats}
+
+
+def draft_layout(cfg: M.ModelCfg, B: int) -> dict:
+    # hidden region is CHUNK rows: draft_prefill writes the whole chunk's
+    # hidden states (the engine needs the last real prompt row, which may
+    # be anywhere in a padded chunk); draft_step writes rows 0..W.
+    H, D, V, h = cfg.n_head, cfg.d_head, cfg.vocab, cfg.d_model
+    kv = 2 * H * B * D
+    logits = DRAFT_W * V
+    hidden = CHUNK * h
+    return {"kv": kv, "logits": logits, "feats": hidden, "queries": 0,
+            "total": kv + logits + hidden}
+
+
+def tiny_layout(cfg: M.ModelCfg, B: int) -> dict:
+    kv = cfg.n_layer * 2 * cfg.n_head * B * cfg.d_head
+    return {"kv": kv, "logits": cfg.vocab, "feats": 0, "queries": 0,
+            "total": kv + cfg.vocab}
+
+
+def _pad_rows(x, rows):
+    """Pad [T, …] to [rows, …] with zeros (T ≤ rows)."""
+    T = x.shape[0]
+    if T == rows:
+        return x
+    pad = [(0, rows - T)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def pack_full(cfg, B, kv, logits, feats, queries):
+    T = logits.shape[0]
+    q = queries  # [L, H, T, D]
+    if T >= QROWS:
+        q = q[:, :, :QROWS]
+    else:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, QROWS - T), (0, 0)))
+    return jnp.concatenate([
+        kv.reshape(-1),
+        _pad_rows(logits, CHUNK).reshape(-1),
+        _pad_rows(feats, CHUNK).reshape(-1),
+        q.reshape(-1),
+    ])
+
+
+def pack_partial(cfg, P, kv, logits, feats):
+    return jnp.concatenate([
+        kv.reshape(-1),
+        _pad_rows(logits, TREE_T).reshape(-1),
+        _pad_rows(feats, TREE_T).reshape(-1),
+    ])
+
+
+def unpack_kv(state, cfg, B, n_layer=None):
+    L = cfg.n_layer if n_layer is None else n_layer
+    H, D = cfg.n_head, cfg.d_head
+    n = L * 2 * H * B * D
+    return state[:n].reshape(L, 2, H, B, D)
+
+
+def unpack_queries(state, cfg, B):
+    lay = full_layout(cfg, B)
+    off = lay["kv"] + lay["logits"] + lay["feats"]
+    L, H, D = cfg.n_layer, cfg.n_head, cfg.d_head
+    return state[off:off + lay["queries"]].reshape(L, H, QROWS, D)
+
+
+def unpack_feats_row(state, cfg, B, idx):
+    lay = full_layout(cfg, B)
+    off = lay["kv"] + lay["logits"]
+    h3 = 3 * cfg.d_model
+    return jax.lax.dynamic_slice(state, (off + idx * h3,), (h3,))
+
+
+# ---------------------------------------------------------------------------
+# Emitter
+# ---------------------------------------------------------------------------
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: dict = {"executables": {}, "models": {}, "consts": {
+            "chunk": CHUNK, "tree_t": TREE_T, "refresh_t": REFRESH_T,
+            "big_refresh_t": BIG_REFRESH_T, "qrows": QROWS,
+            "draft_w": DRAFT_W, "draft_region": DRAFT_REGION, "block": BLOCK,
+            "prev_max": PREV_MAX, "prev_window": PREV_WINDOW,
+            "yarn_factor": YARN_FACTOR, "vocab": M.VOCAB,
+            "full_buckets": FULL_BUCKETS, "partial_buckets": PARTIAL_BUCKETS,
+            "tiny_bucket": TINY_BUCKET,
+        }}
+
+    def emit(self, name, fn, arg_specs, arg_names, attrs=None, layout=None):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(self.out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        # jax.jit drops arguments the computation never reads (e.g. the
+        # LM head in draft_prefill, whose logits are not emitted); the
+        # manifest must record the COMPILED entry signature, so filter by
+        # kept_var_idx — the rust runtime passes exactly these.
+        kept = lowered._lowering.compile_args.get("kept_var_idx")
+        if kept is None:
+            kept = set(range(len(arg_specs)))
+        args = [
+            {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+            for i, (n, s) in enumerate(zip(arg_names, arg_specs))
+            if i in kept
+        ]
+        if len(args) != len(arg_specs):
+            dropped = [n for i, n in enumerate(arg_names) if i not in kept]
+            print(f"    note: {name} dropped unused args {dropped}")
+        self.manifest["executables"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": args,
+            "attrs": attrs or {},
+            "layout": layout,
+        }
+        print(f"  emitted {name} ({len(text) // 1024} KiB)", flush=True)
+
+
+def weight_specs(shapes: dict, prefix: str):
+    names = sorted(n for n in shapes if n.startswith(prefix))
+    return names, [spec(tuple(shapes[n])) for n in names]
+
+
+def load_weight_shapes(path: str) -> dict:
+    shapes = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"SPVW"
+        _ver, n = struct.unpack("<II", f.read(8))
+        for _ in range(n):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode()
+            (nd,) = struct.unpack("<B", f.read(1))
+            dims = [struct.unpack("<I", f.read(4))[0] for _ in range(nd)]
+            f.seek(4 * int(np.prod(dims)) if dims else 4, 1)
+            shapes[name] = dims
+    return shapes
+
+
+def params_from_args(names, args, strip):
+    return {n[len(strip):]: a for n, a in zip(names, args)}
+
+
+# ---------------------------------------------------------------------------
+# Families
+# ---------------------------------------------------------------------------
+
+def emit_target_family(em, size, cfg, shapes, full_buckets, partial_buckets,
+                       t_variants):
+    L, H, D = cfg.n_layer, cfg.n_head, cfg.d_head
+    V, h = cfg.vocab, cfg.d_model
+    wnames, wspecs = weight_specs(shapes, "t.")
+
+    def make_verify(B, T, chunk, partial):
+        """Verification step with fused acceptance compaction: the accepted
+        rows of the PREVIOUS step's tree (prev_idx, n_prev) are compacted
+        into the committed region before the new T tokens are processed and
+        appended at kv_len + n_prev."""
+        lay = partial_layout(cfg, B) if partial else full_layout(cfg, B)
+
+        def fn(tokens, pos, tree_mask, state, kv_len, prev_idx, n_prev,
+               *weights):
+            params = params_from_args(wnames, weights, "t.")
+            kv = unpack_kv(state, cfg, B)
+            kv = M.compact_window(kv, kv_len, prev_idx, n_prev, PREV_WINDOW)
+            eff = kv_len + n_prev
+            out = M.target_fwd(
+                params, cfg, tokens, pos, kv, eff, tree_mask,
+                yarn_factor=YARN_FACTOR, chunk=chunk)
+            if partial:
+                return pack_partial(cfg, B, out["kv"], out["logits"],
+                                    out["feats"])
+            return pack_full(cfg, B, out["kv"], out["logits"], out["feats"],
+                             out["queries"])
+        return fn, lay
+
+    for B in full_buckets:
+        chunk = 512 if B % 512 == 0 else 256
+        lay = full_layout(cfg, B)
+        for T in t_variants(B):
+            fn, _ = make_verify(B, T, chunk, partial=False)
+            em.emit(
+                f"verify_{size}_b{B}_t{T}", fn,
+                [spec((T,), jnp.int32), spec((T,), jnp.int32), spec((T, T)),
+                 spec((lay["total"],)), spec((), jnp.int32),
+                 spec((PREV_MAX,), jnp.int32), spec((), jnp.int32), *wspecs],
+                ["tokens", "pos", "tree_mask", "state", "kv_len",
+                 "prev_idx", "n_prev", *wnames],
+                attrs={"family": "verify", "size": size, "bucket": B, "t": T},
+                layout=lay)
+
+        # standalone commit (used after Refresh steps, where up to
+        # REFRESH_T rows must be compacted before score/gather run)
+        for W in ([REFRESH_T, BIG_REFRESH_T] if B == 4096
+                  else [REFRESH_T]):
+            def commit_fn(state, idx, n, kv_len, W=W):
+                kv = unpack_kv(state, cfg, B)
+                kv = M.compact_window(kv, kv_len, idx, n, W)
+                return jnp.concatenate(
+                    [kv.reshape(-1), state[lay["kv"]:]])
+
+            em.emit(f"commit_{size}_b{B}_w{W}", commit_fn,
+                    [spec((lay["total"],)), spec((W,), jnp.int32),
+                     spec((), jnp.int32), spec((), jnp.int32)],
+                    ["state", "idx", "n", "kv_len"],
+                    attrs={"family": "commit", "size": size, "bucket": B,
+                           "t": W},
+                    layout=lay)
+
+        # extractors: a QROWS-row window of logits+feats starting at `start`
+        # (start > 0 is used by the large-buffer Refresh ablation where the
+        # tree sits past row 64)
+        def read_full(state, start):
+            lg = jax.lax.dynamic_slice(
+                state, (lay["kv"] + start * V,), (QROWS * V,))
+            fs = jax.lax.dynamic_slice(
+                state, (lay["kv"] + lay["logits"] + start * 3 * h,),
+                (QROWS * 3 * h,))
+            return jnp.concatenate([lg, fs])
+
+        em.emit(f"read_full_{size}_b{B}", read_full,
+                [spec((lay["total"],)), spec((), jnp.int32)],
+                ["state", "start"],
+                attrs={"family": "read_full", "size": size, "bucket": B,
+                       "rows": QROWS})
+
+        def read_last(state, idx):
+            lg = jax.lax.dynamic_slice(state, (lay["kv"] + idx * V,), (V,))
+            fs = unpack_feats_row(state, cfg, B, idx)
+            return jnp.concatenate([lg, fs])
+
+        em.emit(f"read_last_{size}_b{B}", read_last,
+                [spec((lay["total"],)), spec((), jnp.int32)],
+                ["state", "idx"],
+                attrs={"family": "read_last", "size": size, "bucket": B})
+
+        # retrieval scoring (queries sliced from the refresh state)
+        NB = B // BLOCK
+
+        def score_fn(state, kv_len, n_queries):
+            kv = unpack_kv(state, cfg, B)
+            q = unpack_queries(state, cfg, B)
+            return M.score_fwd(kv, q, kv_len, n_queries,
+                               block_size=BLOCK).reshape(-1)
+
+        em.emit(f"score_{size}_b{B}", score_fn,
+                [spec((lay["total"],)), spec((), jnp.int32),
+                 spec((), jnp.int32)],
+                ["state", "kv_len", "n_queries"],
+                attrs={"family": "score", "size": size, "bucket": B,
+                       "nb": NB})
+
+        # gather → fresh partial state
+        for P in partial_buckets:
+            nsel = P // BLOCK
+            play = partial_layout(cfg, P)
+
+            def gather_fn(state, idx, P=P, play=play):
+                kv = unpack_kv(state, cfg, B)
+                pkv = M.gather_fwd(kv, idx, block_size=BLOCK)
+                pad = play["total"] - play["kv"]
+                return jnp.concatenate(
+                    [pkv.reshape(-1), jnp.zeros((pad,), jnp.float32)])
+
+            em.emit(f"gather_{size}_b{B}_p{P}", gather_fn,
+                    [spec((lay["total"],)), spec((L, nsel), jnp.int32)],
+                    ["state", "block_idx"],
+                    attrs={"family": "gather", "size": size, "bucket": B,
+                           "p": P, "nsel": nsel},
+                    layout=play)
+
+    for P in partial_buckets:
+        chunk = 512 if P % 512 == 0 else 256
+        play = partial_layout(cfg, P)
+        fn, _ = make_verify(P, TREE_T, chunk, partial=True)
+        em.emit(
+            f"pverify_{size}_p{P}_t{TREE_T}", fn,
+            [spec((TREE_T,), jnp.int32), spec((TREE_T,), jnp.int32),
+             spec((TREE_T, TREE_T)), spec((play["total"],)),
+             spec((), jnp.int32), spec((PREV_MAX,), jnp.int32),
+             spec((), jnp.int32), *wspecs],
+            ["tokens", "pos", "tree_mask", "state", "kv_len", "prev_idx",
+             "n_prev", *wnames],
+            attrs={"family": "pverify", "size": size, "bucket": P,
+                   "t": TREE_T},
+            layout=play)
+
+        def read_partial(state, play=play):
+            lg = state[play["kv"]:play["kv"] + TREE_T * V]
+            fs = state[play["kv"] + play["logits"]:play["total"]]
+            return jnp.concatenate([lg, fs])
+
+        em.emit(f"read_partial_{size}_p{P}", read_partial,
+                [spec((play["total"],))], ["state"],
+                attrs={"family": "read_partial", "size": size, "bucket": P,
+                       "rows": TREE_T})
+
+
+def emit_draft_family(em, size, cfg, shapes, full_buckets):
+    H, D, h, V = cfg.n_head, cfg.d_head, cfg.d_model, cfg.vocab
+    dnames, dspecs = weight_specs(shapes, "d.")
+    shared = ["t.embed", "t.head"]
+    sspecs = [spec(tuple(shapes[n])) for n in shared]
+
+    for B in full_buckets:
+        chunk = 512 if B % 512 == 0 else 256
+        dlay = draft_layout(cfg, B)
+        flay = full_layout(cfg, B)
+
+        # prefill: feats sliced from the TARGET state (device-side)
+        def prefill_fn(tokens, tstate, pos, tree_mask, dstate, kv_len,
+                       write_pos, *weights, B=B, dlay=dlay, chunk=chunk):
+            dp = params_from_args(dnames, weights[:len(dnames)], "d.")
+            embed, head = weights[len(dnames)], weights[len(dnames) + 1]
+            lay = full_layout(cfg, B)
+            off = lay["kv"] + lay["logits"]
+            feats = tstate[off:off + CHUNK * 3 * h].reshape(CHUNK, 3 * h)
+            kv = dstate[:dlay["kv"]].reshape(2, H, B, D)
+            logits, hidden, kv2 = M.draft_fwd(
+                dp, head, embed, cfg, tokens, feats, pos, kv, kv_len,
+                tree_mask, yarn_factor=YARN_FACTOR, chunk=chunk,
+                write_pos=write_pos)
+            return jnp.concatenate([
+                kv2.reshape(-1),
+                jnp.zeros((dlay["logits"],), jnp.float32),
+                hidden.reshape(-1),          # full chunk's hidden rows
+            ])
+
+        em.emit(
+            f"draft_prefill_{size}_b{B}", prefill_fn,
+            [spec((CHUNK,), jnp.int32), spec((flay["total"],)),
+             spec((CHUNK,), jnp.int32), spec((CHUNK, CHUNK)),
+             spec((dlay["total"],)), spec((), jnp.int32),
+             spec((), jnp.int32), *dspecs, *sspecs],
+            ["tokens", "tstate", "pos", "tree_mask", "dstate", "kv_len",
+             "write_pos", *dnames, *shared],
+            attrs={"family": "draft_prefill", "size": size, "bucket": B,
+                   "t": CHUNK},
+            layout=dlay)
+
+        def step_fn(tokens, feats, pos, tree_mask, dstate, kv_len,
+                    write_pos, *weights, B=B, dlay=dlay, chunk=chunk):
+            dp = params_from_args(dnames, weights[:len(dnames)], "d.")
+            embed, head = weights[len(dnames)], weights[len(dnames) + 1]
+            kv = dstate[:dlay["kv"]].reshape(2, H, B, D)
+            logits, hidden, kv2 = M.draft_fwd(
+                dp, head, embed, cfg, tokens, feats, pos, kv, kv_len,
+                tree_mask, yarn_factor=YARN_FACTOR, chunk=chunk,
+                write_pos=write_pos)
+            pad = dlay["feats"] - DRAFT_W * h
+            return jnp.concatenate([
+                kv2.reshape(-1), logits.reshape(-1), hidden.reshape(-1),
+                jnp.zeros((pad,), jnp.float32)])
+
+        em.emit(
+            f"draft_step_{size}_b{B}", step_fn,
+            [spec((DRAFT_W,), jnp.int32), spec((DRAFT_W, 3 * h)),
+             spec((DRAFT_W,), jnp.int32), spec((DRAFT_W, DRAFT_REGION)),
+             spec((dlay["total"],)), spec((), jnp.int32),
+             spec((), jnp.int32), *dspecs, *sspecs],
+            ["tokens", "feats", "pos", "tree_mask", "dstate", "kv_len",
+             "write_pos", *dnames, *shared],
+            attrs={"family": "draft_step", "size": size, "bucket": B,
+                   "t": DRAFT_W, "region": DRAFT_REGION},
+            layout=dlay)
+
+        def read_draft(dstate, dlay=dlay):
+            lg = dstate[dlay["kv"]:dlay["kv"] + dlay["logits"]]
+            off = dlay["kv"] + dlay["logits"]
+            hd = dstate[off:off + DRAFT_W * h]
+            return jnp.concatenate([lg, hd])
+
+        em.emit(f"read_draft_{size}_b{B}", read_draft,
+                [spec((dlay["total"],))], ["dstate"],
+                attrs={"family": "read_draft", "size": size, "bucket": B})
+
+        # single hidden row by index (last real prompt token of a padded
+        # prefill chunk)
+        def read_draft_row(dstate, idx, dlay=dlay):
+            off = dlay["kv"] + dlay["logits"]
+            return jax.lax.dynamic_slice(dstate, (off + idx * h,), (h,))
+
+        em.emit(f"read_draft_row_{size}_b{B}", read_draft_row,
+                [spec((dlay["total"],)), spec((), jnp.int32)],
+                ["dstate", "idx"],
+                attrs={"family": "read_draft_row", "size": size,
+                       "bucket": B})
+
+
+def emit_medusa(em, size, cfg, shapes):
+    mnames, mspecs = weight_specs(shapes, "md.")
+
+    def fn(feat, *weights):
+        mp = params_from_args(mnames, weights, "md.")
+        return M.medusa_fwd(mp, feat).reshape(-1)
+
+    em.emit(f"medusa_{size}", fn,
+            [spec((cfg.d_model,)), *mspecs], ["feat", *mnames],
+            attrs={"family": "medusa", "size": size})
+
+
+def emit_tiny(em, shapes):
+    cfg = M.TINY
+    B = TINY_BUCKET
+    wnames, wspecs = weight_specs(shapes, "t.")
+    lay = tiny_layout(cfg, B)
+
+    def make(T):
+        def fn(tokens, pos, tree_mask, state, kv_len, write_pos, last_idx,
+               *weights):
+            params = params_from_args(wnames, weights, "t.")
+            kv = unpack_kv(state, cfg, B)
+            out = M.target_fwd(
+                params, cfg, tokens, pos, kv, kv_len, tree_mask,
+                yarn_factor=YARN_FACTOR, chunk=256, write_pos=write_pos)
+            last = jax.lax.dynamic_slice(
+                out["logits"], (last_idx, 0), (1, cfg.vocab))[0]
+            return jnp.concatenate([out["kv"].reshape(-1), last])
+        return fn
+
+    for T in (1, CHUNK):
+        em.emit(
+            f"verify_tiny_b{B}_t{T}", make(T),
+            [spec((T,), jnp.int32), spec((T,), jnp.int32), spec((T, T)),
+             spec((lay["total"],)), spec((), jnp.int32), spec((), jnp.int32),
+             spec((), jnp.int32), *wspecs],
+            ["tokens", "pos", "tree_mask", "state", "kv_len", "write_pos",
+             "last_idx", *wnames],
+            attrs={"family": "verify_tiny", "size": "tiny", "bucket": B,
+                   "t": T},
+            layout=lay)
+
+    def read_tiny(state):
+        return state[lay["kv"]:]
+
+    em.emit(f"read_tiny_b{B}", read_tiny, [spec((lay["total"],))], ["state"],
+            attrs={"family": "read_tiny", "size": "tiny", "bucket": B})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="s,m,l")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    em = Emitter(args.out_dir)
+
+    for size in [s for s in args.sizes.split(",") if s]:
+        cfg = M.SIZES[size]
+        shapes = load_weight_shapes(
+            os.path.join(args.out_dir, f"weights_{size}.bin"))
+        em.manifest["models"][size] = {
+            "n_layer": cfg.n_layer, "d_model": cfg.d_model,
+            "n_head": cfg.n_head, "d_head": cfg.d_head, "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab, "weights": f"weights_{size}.bin",
+            "train_ctx": cfg.train_ctx, "yarn_factor": YARN_FACTOR,
+        }
+        if size == "s":
+            fb, pb = FULL_BUCKETS, PARTIAL_BUCKETS
+
+            def t_variants(B):
+                ts = [1, TREE_T, REFRESH_T, CHUNK]
+                if B == 4096:
+                    ts.append(BIG_REFRESH_T)
+                return ts
+        else:
+            fb, pb = ML_FULL_BUCKETS, ML_PARTIAL_BUCKETS
+
+            def t_variants(B):
+                return [1, TREE_T, REFRESH_T, CHUNK]
+
+        print(f"== size {size} ==", flush=True)
+        emit_target_family(em, size, cfg, shapes, fb, pb, t_variants)
+        emit_draft_family(em, size, cfg, shapes, fb)
+        emit_medusa(em, size, cfg, shapes)
+
+    tiny_shapes = load_weight_shapes(
+        os.path.join(args.out_dir, "weights_tiny.bin"))
+    em.manifest["models"]["tiny"] = {
+        "n_layer": M.TINY.n_layer, "d_model": M.TINY.d_model,
+        "n_head": M.TINY.n_head, "d_head": M.TINY.d_head,
+        "d_ff": M.TINY.d_ff, "vocab": M.TINY.vocab,
+        "weights": "weights_tiny.bin", "train_ctx": M.TINY.train_ctx,
+        "yarn_factor": YARN_FACTOR,
+    }
+    emit_tiny(em, tiny_shapes)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(em.manifest, f, indent=1)
+    print(f"manifest: {len(em.manifest['executables'])} executables")
+
+
+if __name__ == "__main__":
+    main()

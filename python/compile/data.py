@@ -1,0 +1,288 @@
+"""Synthetic corpora for SpecPV reproduction (PG-19 / GovReport / QMSum /
+needle-QA substitutes).
+
+Everything here is DETERMINISTIC given a seed and mirrored 1:1 by the rust
+`corpus` module (same xorshift64* RNG, same word lists, same structure) so
+that python-side training data and rust-side serving workloads come from the
+same distribution, and golden-file parity tests can hold across languages.
+
+Tokenization is byte-level: token id = byte value, plus BOS=256, EOS=257,
+PAD=258; vocab padded to 320.
+"""
+
+from __future__ import annotations
+
+VOCAB_SIZE = 320
+BOS, EOS, PAD = 256, 257, 258
+
+MASK64 = (1 << 64) - 1
+
+
+class XorShift64Star:
+    """xorshift64* PRNG; mirrored exactly in rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = (seed | 1) & MASK64
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= (x >> 12)
+        x &= MASK64
+        x ^= (x << 25) & MASK64
+        x ^= (x >> 27)
+        self.state = x & MASK64
+        return (x * 0x2545F4914F6CDD1D) & MASK64
+
+    def below(self, n: int) -> int:
+        """Uniform in [0, n) via multiply-shift (no modulo bias games —
+        rust side uses the identical 128-bit multiply)."""
+        return ((self.next_u64() >> 11) * n) >> 53
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+
+# ---------------------------------------------------------------------------
+# Word inventory — compact but produces locally-coherent "novel" prose.
+# Kept in one flat place so the rust port is a literal transcription.
+# ---------------------------------------------------------------------------
+
+NAMES = [
+    "Armand", "Beatrice", "Clement", "Dorothea", "Edmund", "Felicity",
+    "Gideon", "Harriet", "Isadora", "Jasper", "Katherine", "Leopold",
+    "Margaret", "Nathaniel", "Octavia", "Percival",
+]
+
+PLACES = [
+    "the harbour", "the old mill", "the vicarage", "the moor", "the library",
+    "the garden", "the station", "the courthouse", "the lighthouse",
+    "the market square", "the abbey", "the orchard",
+]
+
+NOUNS = [
+    "letter", "storm", "candle", "ledger", "portrait", "carriage", "sermon",
+    "fortune", "rumour", "voyage", "inheritance", "debt", "promise",
+    "manuscript", "telegram", "garden", "winter", "journey", "secret",
+    "bargain", "fever", "wedding", "funeral", "harvest", "quarrel",
+]
+
+VERBS = [
+    "remembered", "concealed", "discovered", "promised", "refused",
+    "demanded", "whispered", "confessed", "regretted", "imagined",
+    "suspected", "announced", "abandoned", "forgave", "inherited",
+    "questioned", "observed", "resolved", "feared", "admired",
+]
+
+ADJS = [
+    "pale", "weathered", "solemn", "curious", "forgotten", "distant",
+    "quiet", "restless", "grave", "peculiar", "faded", "earnest",
+    "bitter", "gentle", "obstinate", "melancholy",
+]
+
+CONNECTIVES = [
+    "and yet", "however", "meanwhile", "at length", "in truth",
+    "nevertheless", "presently", "by morning", "after some reflection",
+    "against all advice",
+]
+
+TOPICS = [
+    "the drainage works", "the school inspection", "the parish budget",
+    "the railway extension", "the water supply", "the grain tariff",
+    "the hospital wing", "the coastal survey", "the census returns",
+    "the bridge repairs", "the timber contract", "the postal service",
+]
+
+SPEAKERS = [
+    "the chairman", "the secretary", "the inspector", "the treasurer",
+    "the delegate", "the engineer", "the clerk", "the surveyor",
+]
+
+
+def _sentence(rng: XorShift64Star) -> str:
+    """One pseudo-Victorian sentence. Markov-ish: structure templates with
+    sampled slots; enough statistical regularity for a 1M-param char LM to
+    learn and for attention locality to be meaningful."""
+    t = rng.below(5)
+    n1 = NAMES[rng.below(len(NAMES))]
+    n2 = NAMES[rng.below(len(NAMES))]
+    v = VERBS[rng.below(len(VERBS))]
+    noun = NOUNS[rng.below(len(NOUNS))]
+    adj = ADJS[rng.below(len(ADJS))]
+    place = PLACES[rng.below(len(PLACES))]
+    if t == 0:
+        return f"{n1} {v} the {adj} {noun} near {place}."
+    if t == 1:
+        return f"At {place[4:] if place.startswith('the ') else place}, {n1} {v} that {n2} had kept the {noun}."
+    if t == 2:
+        c = CONNECTIVES[rng.below(len(CONNECTIVES))]
+        return f"{c.capitalize()}, the {noun} remained {adj}, and {n1} {v} it."
+    if t == 3:
+        return f'"I have {v} the {noun}," said {n1}, looking toward {place}.'
+    return f"The {adj} {noun} of {n1} was known in every corner of {place}."
+
+
+def novel_text(seed: int, n_bytes: int) -> str:
+    """PG-19 substitute: chapters of generated prose, ~n_bytes long."""
+    rng = XorShift64Star(seed)
+    out: list[str] = []
+    total = 0
+    chapter = 1
+    while total < n_bytes:
+        head = f"CHAPTER {chapter}.\n\n"
+        out.append(head)
+        total += len(head)
+        sentences = 30 + rng.below(30)
+        para: list[str] = []
+        for i in range(sentences):
+            para.append(_sentence(rng))
+            if (i + 1) % (4 + rng.below(4)) == 0:
+                para.append("\n\n")
+            else:
+                para.append(" ")
+            if total > n_bytes:
+                break
+            total += len(para[-2]) + len(para[-1])
+        out.extend(para)
+        out.append("\n\n")
+        chapter += 1
+    return "".join(out)[:n_bytes]
+
+
+def report_text(seed: int, n_bytes: int) -> str:
+    """GovReport substitute: sectioned bureaucratic report."""
+    rng = XorShift64Star(seed)
+    out: list[str] = []
+    total = 0
+    sec = 1
+    while total < n_bytes:
+        topic = TOPICS[rng.below(len(TOPICS))]
+        head = f"SECTION {sec}. REPORT ON {topic.upper()}.\n"
+        out.append(head)
+        total += len(head)
+        for _ in range(6 + rng.below(8)):
+            amount = 100 + rng.below(9900)
+            year = 1860 + rng.below(60)
+            s = (
+                f"The committee on {topic} recorded an expenditure of "
+                f"{amount} pounds in the year {year}, and "
+                f"{VERBS[rng.below(len(VERBS))]} further works. "
+            )
+            out.append(s)
+            total += len(s)
+            if total > n_bytes:
+                break
+        out.append("\n")
+        total += 1
+        sec += 1
+    return "".join(out)[:n_bytes]
+
+
+def meeting_text(seed: int, n_bytes: int) -> str:
+    """QMSum substitute: meeting transcript with speakers."""
+    rng = XorShift64Star(seed)
+    out: list[str] = []
+    total = 0
+    while total < n_bytes:
+        sp = SPEAKERS[rng.below(len(SPEAKERS))]
+        topic = TOPICS[rng.below(len(TOPICS))]
+        t = rng.below(3)
+        if t == 0:
+            s = f"{sp.upper()}: We must return to the question of {topic}. "
+        elif t == 1:
+            s = f"{sp.upper()}: The figures for {topic} were {ADJS[rng.below(len(ADJS))]} at best. "
+        else:
+            s = f"{sp.upper()}: I move that {topic} be deferred until the next session. "
+        out.append(s + "\n")
+        total += len(s) + 1
+    return "".join(out)[:n_bytes]
+
+
+# ---------------------------------------------------------------------------
+# Needle-QA (HotpotQA / LongBench substitute): key→value facts buried in
+# filler prose; question asks for the value of one key. Exact-match scoring.
+# Format is chosen to be learnable by a char-level model with induction
+# heads: the answer is a literal copy of a span seen once in context.
+# ---------------------------------------------------------------------------
+
+def _code_word(rng: XorShift64Star) -> str:
+    # 6-letter pronounceable code: CVCVCV
+    cons = "bdfgklmnprstvz"
+    vow = "aeiou"
+    w = []
+    for i in range(6):
+        src = cons if i % 2 == 0 else vow
+        w.append(src[rng.below(len(src))])
+    return "".join(w)
+
+
+def needle_qa(seed: int, n_bytes: int, n_facts: int) -> tuple[str, str, str]:
+    """Returns (context, question, answer). Facts 'The code of <name-i> is
+    <code>.' are spread uniformly through filler prose; the question asks for
+    one of them."""
+    rng = XorShift64Star(seed)
+    facts = []
+    for i in range(n_facts):
+        key = f"{NAMES[rng.below(len(NAMES))]}-{rng.below(90) + 10}"
+        val = _code_word(rng)
+        facts.append((key, val))
+    # filler segments between facts
+    seg = max(1, n_bytes // (n_facts + 1))
+    out: list[str] = []
+    frng = XorShift64Star(seed ^ 0x9E3779B97F4A7C15)
+    for i in range(n_facts):
+        total = 0
+        while total < seg:
+            s = _sentence(frng) + " "
+            out.append(s)
+            total += len(s)
+        k, v = facts[i]
+        out.append(f"\nThe code of agent {k} is {v}.\n")
+    qi = rng.below(n_facts)
+    qk, qv = facts[qi]
+    context = "".join(out)[: n_bytes + 40 * n_facts]
+    question = f"\nQuestion: what is the code of agent {qk}?\nAnswer: the code of agent {qk} is"
+    return context, question, qv
+
+
+# ---------------------------------------------------------------------------
+# Training-mix stream: novel prose + copy-format facts, so the LM learns both
+# local structure and the induction/copy behaviour needle-QA needs.
+# ---------------------------------------------------------------------------
+
+def training_text(seed: int, n_bytes: int) -> str:
+    rng = XorShift64Star(seed)
+    out: list[str] = []
+    total = 0
+    while total < n_bytes:
+        r = rng.below(10)
+        if r < 5:
+            s = _sentence(rng) + " "
+        elif r < 7:
+            # copy-task material: same key repeated with its value
+            key = f"{NAMES[rng.below(len(NAMES))]}-{rng.below(90) + 10}"
+            val = _code_word(rng)
+            gap = _sentence(rng)
+            s = (
+                f"The code of agent {key} is {val}. {gap} "
+                f"Question: what is the code of agent {key}?"
+                f"\nAnswer: the code of agent {key} is {val}.\n"
+            )
+        elif r < 9:
+            sp = SPEAKERS[rng.below(len(SPEAKERS))]
+            s = f"{sp.upper()}: We must return to the question of {TOPICS[rng.below(len(TOPICS))]}. \n"
+        else:
+            amount = 100 + rng.below(9900)
+            s = f"The committee recorded an expenditure of {amount} pounds. "
+        out.append(s)
+        total += len(s)
+    return "".join(out)[:n_bytes]
+
+
+def encode(text: str) -> list[int]:
+    """Byte-level encoding (no specials)."""
+    return list(text.encode("utf-8", errors="replace"))
+
+
+def decode(ids) -> str:
+    bs = bytes(int(i) for i in ids if 0 <= int(i) < 256)
+    return bs.decode("utf-8", errors="replace")

@@ -1,0 +1,74 @@
+"""Continue training the size-s target + draft from saved weights
+(sharpens greedy rollouts; the initial budgeted run plateaus before the
+model commits to word-level continuations). Build-time only.
+
+Usage: python -m compile.finetune --out-dir ../artifacts --steps 300
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .train import (Windows, adam_init, adam_update, draft_ttt_loss,
+                    run_phase, save_weights, SEQ)
+
+
+def load_all(path):
+    import struct
+    t = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"SPVW"
+        _, n = struct.unpack("<II", f.read(8))
+        for _ in range(n):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode()
+            (nd,) = struct.unpack("<B", f.read(1))
+            dims = [struct.unpack("<I", f.read(4))[0] for _ in range(nd)]
+            cnt = int(np.prod(dims)) if dims else 1
+            t[name] = jnp.array(
+                np.frombuffer(f.read(4 * cnt), np.float32).reshape(dims))
+    return t
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--steps-draft", type=int, default=150)
+    args = ap.parse_args()
+
+    path = f"{args.out_dir}/weights_s.bin"
+    tensors = load_all(path)
+    cfg = M.SIZES["s"]
+    tparams = {k[2:]: v for k, v in tensors.items() if k.startswith("t.")}
+    dparams = {k[2:]: v for k, v in tensors.items() if k.startswith("d.")}
+
+    log: dict = {}
+    win = Windows(seed=0xC0FFEE + ord("s") + 1)
+    tparams = run_phase(
+        "target_s_ft", tparams,
+        lambda p, b, o: M.lm_loss(p, cfg, b, o, chunk=SEQ),
+        win, args.steps, 8, 1e-3, log)
+    dparams = run_phase(
+        "draft_s_ft", dparams,
+        lambda p, b, o: draft_ttt_loss(p, tparams, cfg, b, o),
+        win, args.steps_draft, 4, 1e-3, log)
+
+    tensors.update({f"t.{k}": v for k, v in tparams.items()})
+    tensors.update({f"d.{k}": v for k, v in dparams.items()})
+    save_weights(path, tensors)
+
+    old = json.load(open(f"{args.out_dir}/train_log.json"))
+    old.update(log)
+    json.dump(old, open(f"{args.out_dir}/train_log.json", "w"))
+    print("finetune saved")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Pallas block-summary + retrieval-scoring kernel (paper §3.2, Eqs. 1–3).
+
+At each Refresh step SpecPV re-selects the retrieval blocks of the partial
+KV cache. The score of block i under the step's query set {q_j} is
+
+    S_i      = (K_i^max, K_i^min)                 (elementwise over block)
+    s_{i,j}  = max(q_j · K_i^maxᵀ, q_j · K_i^minᵀ)
+    s_i      = f(s_{i,1} … s_{i,M})               f ∈ {mean, max, last}
+
+This kernel fuses the summary reduction and the scoring matmuls; it emits
+the per-(query, block) score matrix summed over heads, and the host-side
+reduction `f` (3 flops/block) is applied by the caller so one compiled
+kernel serves all three ablation modes of paper Table 4.
+
+Grid = (heads,): each cell stages one head's full key row into VMEM,
+reduces it to (NB × D) max/min summaries, and issues two (T×D)·(D×NB) MXU
+matmuls. VMEM worst case (H=8, B=8192, D=32): 1 MiB keys + 2·32 KiB
+summaries + 64·256·4 = 64 KiB scores ≈ 1.1 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _score_kernel(kv_len_ref, q_ref, k_ref, o_ref, *, block_size: int):
+    h = pl.program_id(0)
+    kv_len = kv_len_ref[0, 0]
+    k = k_ref[0]                                  # [B, D]
+    q = q_ref[0]                                  # [T, D]
+    B, D = k.shape
+    NB = B // block_size
+
+    kb = k.reshape(NB, block_size, D)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (NB, block_size), 0) * block_size \
+        + jax.lax.broadcasted_iota(jnp.int32, (NB, block_size), 1)
+    valid = (rows < kv_len)[:, :, None]           # [NB, bs, 1]
+    kmax = jnp.max(jnp.where(valid, kb, -jnp.inf), axis=1)   # [NB, D]
+    kmin = jnp.min(jnp.where(valid, kb, jnp.inf), axis=1)
+    any_valid = rows[:, 0] < kv_len               # block has ≥1 valid row
+    kmax = jnp.where(any_valid[:, None], kmax, 0.0)
+    kmin = jnp.where(any_valid[:, None], kmin, 0.0)
+
+    s = jnp.maximum(
+        jnp.dot(q, kmax.T, preferred_element_type=jnp.float32),
+        jnp.dot(q, kmin.T, preferred_element_type=jnp.float32),
+    )                                             # [T, NB]
+
+    @pl.when(h == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += s
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def block_scores(k, q, kv_len, *, block_size: int = 32):
+    """Per-(query, block) retrieval scores summed over heads.
+
+    Args:
+      k:      [H, B, D] f32 post-RoPE key cache.
+      q:      [H, T, D] f32 verification-step queries.
+      kv_len: () int32 committed length.
+    Returns:
+      [T, NB] f32; blocks entirely past kv_len are NEG_INF.
+    """
+    H, B, D = k.shape
+    T = q.shape[1]
+    assert B % block_size == 0
+    NB = B // block_size
+    kv_len_arr = jnp.reshape(kv_len.astype(jnp.int32), (1, 1))
+
+    s = pl.pallas_call(
+        functools.partial(_score_kernel, block_size=block_size),
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h: (0, 0)),
+            pl.BlockSpec((1, T, D), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, B, D), lambda h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, NB), lambda h: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, NB), jnp.float32),
+        interpret=True,
+    )(kv_len_arr, q, k)
+
+    blk_start = jnp.arange(NB, dtype=jnp.int32) * block_size
+    any_valid = blk_start < kv_len
+    return jnp.where(any_valid[None, :], s, NEG_INF)
+
+
+def reduce_scores(s, n_queries, reduction: str):
+    """Host-side reduction f over the query axis of [T, NB] scores.
+
+    Only the first `n_queries` rows are real (the rest are padded tree
+    slots); `last` means the most recently verified token's query.
+    """
+    T = s.shape[0]
+    rows = jnp.arange(T)
+    real = (rows < n_queries)[:, None]
+    if reduction == "mean":
+        return jnp.sum(jnp.where(real, s, 0.0), axis=0) / jnp.maximum(
+            n_queries.astype(jnp.float32), 1.0)
+    if reduction == "max":
+        return jnp.max(jnp.where(real, s, NEG_INF), axis=0)
+    if reduction == "last":
+        idx = jnp.clip(n_queries - 1, 0, T - 1)
+        return s[idx]
+    raise ValueError(reduction)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for the pallas kernels.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+compare every kernel against these functions across shapes, lengths and
+masks. They are written for clarity, not speed.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def tree_attention_ref(q, k, v, kv_len, tree_mask, sm_scale):
+    """Reference fused verification attention.
+
+    Args:
+      q:         [H, T, D]  query states (tree/candidate tokens).
+      k, v:      [H, B, D]  bucketed KV cache. Rows `< kv_len` are committed
+                 history; rows `[kv_len, kv_len + TK)` are the "new region"
+                 holding this step's tokens; rows beyond are garbage.
+      kv_len:    scalar int32, number of committed tokens.
+      tree_mask: [T, TK] {0,1} — visibility of query i over new-region slot j
+                 (must include the self edge for real queries).
+      sm_scale:  softmax scale (1/sqrt(D), possibly YARN-tempered).
+
+    Returns:
+      [H, T, D] attention output.
+    """
+    H, T, D = q.shape
+    B = k.shape[1]
+    TK = tree_mask.shape[1]
+    cols = jnp.arange(B)[None, :]                      # [1, B]
+    hist = jnp.broadcast_to(cols < kv_len, (T, B))     # visible history
+    rel = jnp.broadcast_to(cols - kv_len, (T, B))      # new-region offset
+    in_new = (rel >= 0) & (rel < TK)
+    rel_c = jnp.clip(rel, 0, TK - 1)
+    tm = tree_mask.astype(bool)                        # [T, TK]
+    new_vis = jnp.take_along_axis(tm, rel_c, axis=1) & in_new
+    visible = hist | new_vis                           # [T, B]
+
+    scores = jnp.einsum("htd,hbd->htb", q, k) * sm_scale
+    scores = jnp.where(visible[None, :, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores - m)
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("htb,hbd->htd", probs, v)
+
+
+def block_score_ref(k, q, kv_len, block_size, reduction):
+    """Reference Quest-style block scoring (paper Eqs. 1–3).
+
+    Args:
+      k:        [H, B, D] key cache (post-RoPE), rows >= kv_len invalid.
+      q:        [H, T, D] query states from the verification step.
+      kv_len:   scalar int32 — blocks entirely beyond kv_len score NEG_INF.
+      block_size: tokens per KV block.
+      reduction: 'mean' | 'max' | 'last' over the T query scores.
+
+    Returns:
+      [NB] float32 scores, NB = B // block_size, summed over heads.
+    """
+    H, B, D = k.shape
+    NB = B // block_size
+    kb = k.reshape(H, NB, block_size, D)
+    idx = jnp.arange(B).reshape(NB, block_size)
+    valid = (idx < kv_len)[None, :, :, None]           # [1, NB, bs, 1]
+    kmax = jnp.max(jnp.where(valid, kb, -jnp.inf), axis=2)   # [H, NB, D]
+    kmin = jnp.min(jnp.where(valid, kb, jnp.inf), axis=2)
+    any_valid = jnp.any(idx < kv_len, axis=1)          # [NB]
+    kmax = jnp.where(any_valid[None, :, None], kmax, 0.0)
+    kmin = jnp.where(any_valid[None, :, None], kmin, 0.0)
+
+    s = jnp.maximum(
+        jnp.einsum("htd,hnd->htn", q, kmax),
+        jnp.einsum("htd,hnd->htn", q, kmin),
+    )                                                  # [H, T, NB]
+    s = jnp.sum(s, axis=0)                             # heads -> [T, NB]
+    if reduction == "mean":
+        r = jnp.mean(s, axis=0)
+    elif reduction == "max":
+        r = jnp.max(s, axis=0)
+    elif reduction == "last":
+        r = s[-1]
+    else:
+        raise ValueError(reduction)
+    return jnp.where(any_valid, r, NEG_INF)

@@ -1,0 +1,116 @@
+"""Pallas fused tree/verification attention — the L1 hot-spot kernel.
+
+One kernel serves every attention site in the stack (prefill chunks, AR
+decode, full verification, partial verification, draft decoding): the only
+thing that changes is the KV bucket size and the tree mask, which is exactly
+the SpecPV trick — partial verification is *this same kernel* run over a
+budget-sized cache instead of the full one.
+
+TPU design (paper targets CUDA; see DESIGN.md §Hardware-Adaptation):
+  * grid = (heads, kv_chunks): each grid cell stages one (chunk × d_head)
+    K/V tile from HBM into VMEM via BlockSpec — the explicit analogue of the
+    paper's threadblock HBM→SMEM staging.
+  * online-softmax carry (m, l, acc) lives in VMEM scratch across the kv
+    grid dimension (flash-attention-on-TPU structure).
+  * scores are computed as (T × chunk) MXU matmuls; T and chunk are padded
+    to MXU-friendly multiples by the caller.
+  * visibility = committed-history test (col < kv_len, via iota compare)
+    OR tree-mask lookup for the new-token region written at
+    [kv_len, kv_len + TK).
+
+Runs with interpret=True everywhere in this repo (CPU PJRT cannot execute
+Mosaic custom-calls); the structure above is what would compile for real
+TPU. VMEM budget per cell (worst case H=8, T=64, chunk=512, D=32):
+  K,V tiles 2·512·32·4 = 128 KiB, scores 64·512·4 = 128 KiB,
+  q 8 KiB, carry ~17 KiB  →  ≈ 280 KiB  (≪ 16 MiB VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(kv_len_ref, tm_ref, q_ref, k_ref, v_ref, o_ref,
+                 *, sm_scale: float, chunk: int, n_chunks: int):
+    """Body for one head. The kv-chunk loop is unrolled at trace time
+    (n_chunks is static); carry stays in registers/VMEM values."""
+    q = q_ref[0]                       # [T, D]
+    tm = tm_ref[...]                   # [T, TK] {0,1}
+    kv_len = kv_len_ref[0, 0]          # scalar i32
+    T = q.shape[0]
+    TK = tm.shape[1]
+
+    m = jnp.full((T,), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((T,), dtype=jnp.float32)
+    acc = jnp.zeros((T, q.shape[1]), dtype=jnp.float32)
+
+    for c in range(n_chunks):
+        kc = k_ref[0, c * chunk:(c + 1) * chunk, :]   # [C, D] ← VMEM tile
+        vc = v_ref[0, c * chunk:(c + 1) * chunk, :]
+        s = jnp.dot(q, kc.T, preferred_element_type=jnp.float32) * sm_scale
+
+        cols = c * chunk + jax.lax.broadcasted_iota(jnp.int32, (T, chunk), 1)
+        hist = cols < kv_len                           # committed history
+        rel = cols - kv_len                            # new-region offset
+        in_new = (rel >= 0) & (rel < TK)
+        relc = jnp.clip(rel, 0, TK - 1)
+        new_vis = jnp.take_along_axis(tm, relc, axis=1) > 0.5
+        visible = hist | (new_vis & in_new)
+        s = jnp.where(visible, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, vc, preferred_element_type=jnp.float32)
+        m = m_new
+
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "chunk"))
+def tree_attention(q, k, v, kv_len, tree_mask, *, sm_scale: float,
+                   chunk: int = 512):
+    """Fused verification attention over a bucketed KV cache.
+
+    Args:
+      q:         [H, T, D] f32 queries.
+      k, v:      [H, B, D] f32 KV bucket; rows < kv_len are history, rows
+                 [kv_len, kv_len+TK) are this step's new tokens.
+      kv_len:    () int32.
+      tree_mask: [T, TK] f32 {0,1} tree visibility (self edge included).
+      sm_scale:  float softmax scale.
+      chunk:     KV tile length staged per inner step.
+
+    Returns: [H, T, D] f32.
+    """
+    H, T, D = q.shape
+    B = k.shape[1]
+    chunk = min(chunk, B)
+    assert B % chunk == 0, (B, chunk)
+    n_chunks = B // chunk
+    kv_len_arr = jnp.reshape(kv_len.astype(jnp.int32), (1, 1))
+
+    kernel = functools.partial(
+        _attn_kernel, sm_scale=sm_scale, chunk=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h: (0, 0)),           # kv_len
+            pl.BlockSpec(tree_mask.shape, lambda h: (0, 0)),  # tree mask
+            pl.BlockSpec((1, T, D), lambda h: (h, 0, 0)),     # q row
+            pl.BlockSpec((1, B, D), lambda h: (h, 0, 0)),     # k row
+            pl.BlockSpec((1, B, D), lambda h: (h, 0, 0)),     # v row
+        ],
+        out_specs=pl.BlockSpec((1, T, D), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, T, D), jnp.float32),
+        interpret=True,
+    )(kv_len_arr, tree_mask.astype(jnp.float32), q, k, v)

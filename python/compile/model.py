@@ -1,0 +1,430 @@
+"""L2 — the JAX compute graphs for the SpecPV stack.
+
+Everything is purely functional: params are pytrees (dict name → array),
+KV caches are explicit inputs/outputs so the rust coordinator can thread
+them through as device-resident PJRT buffers.
+
+Model family ("specpv-s/m/l"): LLaMA-style pre-norm transformer —
+RMSNorm, RoPE (+YARN long-context scaling), MHA, SwiGLU — at char level.
+All attention runs through the L1 pallas `tree_attention` kernel, so full
+verification, partial verification, AR decode, prefill and the EAGLE draft
+layer all share one fused kernel (the SpecPV trick is just the KV bucket
+that's passed in).
+
+Draft modules (paper §2/§3.1, appendix A):
+  * EAGLE-3-style head: fuses features from a low/mid/top target layer
+    with the token embedding, one decoder layer, tied LM head, trained
+    with the multi-step training-time-test loss (Eq. 5).
+  * Medusa heads (TokenSwift baseline): 3 independent heads off the top
+    feature predicting t+1..t+3.
+  * Independent tiny 2-layer LM (TriForce baseline draft).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.tree_attention import tree_attention
+from .kernels.block_score import block_scores, reduce_scores
+from .kernels.ref import tree_attention_ref
+from . import data as data_mod
+
+VOCAB = data_mod.VOCAB_SIZE
+
+
+class ModelCfg(NamedTuple):
+    name: str
+    n_layer: int
+    d_model: int
+    n_head: int
+    d_head: int
+    d_ff: int
+    vocab: int = VOCAB
+    rope_theta: float = 10000.0
+    # YARN long-context scaling (paper appendix A): trained at train_ctx,
+    # served at yarn_factor × train_ctx.
+    train_ctx: int = 512
+    yarn_factor: float = 16.0
+    # which layers feed the EAGLE-3 fused feature (low/mid/top)
+    feat_layers: tuple = ()
+
+    @property
+    def feats(self):
+        if self.feat_layers:
+            return self.feat_layers
+        lo = 0
+        mid = self.n_layer // 2
+        return (lo, mid, self.n_layer - 1)
+
+
+# The three evaluation sizes (Table 3 substitute: Qwen3 4B/8B/14B → s/m/l).
+SIZES = {
+    "s": ModelCfg("s", n_layer=4, d_model=128, n_head=4, d_head=32, d_ff=512),
+    "m": ModelCfg("m", n_layer=6, d_model=192, n_head=6, d_head=32, d_ff=768),
+    "l": ModelCfg("l", n_layer=8, d_model=256, n_head=8, d_head=32, d_ff=1024),
+}
+
+# independent tiny draft LM (TriForce baseline)
+TINY = ModelCfg("tiny", n_layer=2, d_model=64, n_head=2, d_head=32, d_ff=256)
+
+DRAFT_SUFFIX = "_draft"
+
+
+# ---------------------------------------------------------------------------
+# RoPE with YARN scaling
+# ---------------------------------------------------------------------------
+
+def yarn_inv_freq(cfg: ModelCfg, factor: float):
+    """YARN-scaled inverse frequencies + attention temperature (mscale).
+
+    NTK-by-parts: low-frequency dims are interpolated by `factor`, high-
+    frequency dims are left alone, with a linear ramp between (Peng et al.
+    2023). beta_fast/beta_slow defaults 32/1.
+    """
+    d = cfg.d_head
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    if factor <= 1.0:
+        return inv, 1.0
+    L = cfg.train_ctx
+    beta_fast, beta_slow = 32.0, 1.0
+
+    def corr_dim(rot):
+        return (d * math.log(L / (rot * 2 * math.pi))) / (
+            2 * math.log(cfg.rope_theta))
+
+    low = max(math.floor(corr_dim(beta_fast)), 0)
+    high = min(math.ceil(corr_dim(beta_slow)), d // 2 - 1)
+    ramp = jnp.clip(
+        (jnp.arange(d // 2, dtype=jnp.float32) - low) / max(high - low, 1),
+        0.0, 1.0)
+    # ramp=0 → extrapolate (keep inv), ramp=1 → interpolate (inv/factor)
+    inv_scaled = inv / factor
+    inv_yarn = inv * (1 - ramp) + inv_scaled * ramp
+    mscale = 0.1 * math.log(factor) + 1.0
+    return inv_yarn, float(mscale)
+
+
+def rope_apply(x, pos, inv_freq):
+    """x: [H, T, D], pos: [T] int32 → rotated x."""
+    ang = pos.astype(jnp.float32)[:, None] * inv_freq[None, :]   # [T, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    r1 = x1 * cos[None] - x2 * sin[None]
+    r2 = x1 * sin[None] + x2 * cos[None]
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+def _dense(key, fan_in, fan_out):
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * (
+        1.0 / math.sqrt(fan_in))
+
+
+def init_target(cfg: ModelCfg, key) -> dict:
+    keys = jax.random.split(key, 4 + cfg.n_layer * 8)
+    p = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "head": _dense(keys[1], cfg.d_model, cfg.vocab),
+    }
+    hd = cfg.n_head * cfg.d_head
+    for i in range(cfg.n_layer):
+        k = keys[4 + i * 8:]
+        p[f"l{i}.ln1"] = jnp.ones((cfg.d_model,))
+        p[f"l{i}.wq"] = _dense(k[0], cfg.d_model, hd)
+        p[f"l{i}.wk"] = _dense(k[1], cfg.d_model, hd)
+        p[f"l{i}.wv"] = _dense(k[2], cfg.d_model, hd)
+        p[f"l{i}.wo"] = _dense(k[3], hd, cfg.d_model)
+        p[f"l{i}.ln2"] = jnp.ones((cfg.d_model,))
+        p[f"l{i}.wg"] = _dense(k[4], cfg.d_model, cfg.d_ff)
+        p[f"l{i}.wu"] = _dense(k[5], cfg.d_model, cfg.d_ff)
+        p[f"l{i}.wd"] = _dense(k[6], cfg.d_ff, cfg.d_model)
+    return p
+
+
+def init_draft(cfg: ModelCfg, key) -> dict:
+    """EAGLE-3-style draft: fuse 3 target features + token embed → one
+    decoder layer → tied target head (the head is NOT duplicated here; the
+    executables take the target head as input)."""
+    keys = jax.random.split(key, 12)
+    hd = cfg.n_head * cfg.d_head
+    p = {
+        "fuse": _dense(keys[0], 3 * cfg.d_model, cfg.d_model),
+        "inp": _dense(keys[1], 2 * cfg.d_model, cfg.d_model),
+        "ln1": jnp.ones((cfg.d_model,)),
+        "wq": _dense(keys[2], cfg.d_model, hd),
+        "wk": _dense(keys[3], cfg.d_model, hd),
+        "wv": _dense(keys[4], cfg.d_model, hd),
+        "wo": _dense(keys[5], hd, cfg.d_model),
+        "ln2": jnp.ones((cfg.d_model,)),
+        "wg": _dense(keys[6], cfg.d_model, cfg.d_ff),
+        "wu": _dense(keys[7], cfg.d_model, cfg.d_ff),
+        "wd": _dense(keys[8], cfg.d_ff, cfg.d_model),
+        "ln_f": jnp.ones((cfg.d_model,)),
+    }
+    return p
+
+
+def init_medusa(cfg: ModelCfg, key, n_heads: int = 3) -> dict:
+    keys = jax.random.split(key, n_heads * 2)
+    p = {}
+    for i in range(n_heads):
+        p[f"m{i}.w1"] = _dense(keys[2 * i], cfg.d_model, cfg.d_model)
+        p[f"m{i}.w2"] = _dense(keys[2 * i + 1], cfg.d_model, cfg.vocab)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-5):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _split_heads(x, n_head, d_head):
+    T = x.shape[0]
+    return x.reshape(T, n_head, d_head).transpose(1, 0, 2)   # [H, T, D]
+
+
+def _merge_heads(x):
+    H, T, D = x.shape
+    return x.transpose(1, 0, 2).reshape(T, H * D)
+
+
+def layer_fwd(p, i, x, pos, kv_l, kv_len, tree_mask, cfg, inv_freq, mscale,
+              chunk, prefix=None, attn_impl="pallas", write_pos=None):
+    """One transformer layer.
+
+    kv_l: [2, H, B, D] this layer's KV bucket.
+    Returns (x_out, kv_l_updated, q_rope) — q_rope is exported for the
+    retrieval scorer.
+    """
+    pfx = f"l{i}." if prefix is None else prefix
+    T = x.shape[0]
+    h = rmsnorm(x, p[f"{pfx}ln1"])
+    xq = _split_heads(h @ p[f"{pfx}wq"], cfg.n_head, cfg.d_head)
+    xk = _split_heads(h @ p[f"{pfx}wk"], cfg.n_head, cfg.d_head)
+    xv = _split_heads(h @ p[f"{pfx}wv"], cfg.n_head, cfg.d_head)
+    xq = rope_apply(xq, pos, inv_freq)
+    xk = rope_apply(xk, pos, inv_freq)
+
+    # write new K/V into the bucket at write_pos (functional update).
+    # write_pos == kv_len for verification; draft tree levels and the
+    # TriForce streaming ring write elsewhere inside/behind the region.
+    write_pos = kv_len if write_pos is None else write_pos
+    kv_l = jax.lax.dynamic_update_slice(
+        kv_l, jnp.stack([xk, xv]), (0, 0, write_pos, 0))
+
+    scale = mscale / math.sqrt(cfg.d_head)
+    if attn_impl == "pallas":
+        att = tree_attention(
+            xq, kv_l[0], kv_l[1], kv_len, tree_mask, sm_scale=scale,
+            chunk=chunk)
+    else:
+        # differentiable jnp path (training); identical semantics, checked
+        # against the pallas kernel by python/tests.
+        att = tree_attention_ref(xq, kv_l[0], kv_l[1], kv_len, tree_mask,
+                                 scale)
+    x = x + _merge_heads(att) @ p[f"{pfx}wo"]
+
+    h2 = rmsnorm(x, p[f"{pfx}ln2"])
+    x = x + (jax.nn.silu(h2 @ p[f"{pfx}wg"]) * (h2 @ p[f"{pfx}wu"])) @ p[
+        f"{pfx}wd"]
+    return x, kv_l, xq
+
+
+def compact_window(kv, kv_len, prev_idx, n_prev, window: int):
+    """Acceptance compaction, fused into the next verification step.
+
+    After step k the KV rows of step k's tree live at
+    [kv_len, kv_len + T_k) with accepted and rejected rows interleaved.
+    Step k+1 receives the accepted row indices (`prev_idx`, within the
+    window) and moves row `kv_len + prev_idx[j]` → `kv_len + j` for
+    j < n_prev, making the committed region contiguous again before the
+    new tokens are appended at `kv_len + n_prev`.
+
+    kv: [L, 2, H, B, D]; prev_idx: [PREV] int32 (PREV ≤ window).
+    """
+    L, _, H, B, D = kv.shape
+    win = jax.lax.dynamic_slice(
+        kv, (0, 0, 0, kv_len, 0), (L, 2, H, window, D))
+    PREV = prev_idx.shape[0]
+    gathered = jnp.take(win, jnp.clip(prev_idx, 0, window - 1), axis=3)
+    rows = jnp.arange(PREV, dtype=jnp.int32)
+    keep = (rows < n_prev)[None, None, None, :, None]
+    head = jnp.where(keep, gathered, jax.lax.dynamic_slice(
+        win, (0, 0, 0, 0, 0), (L, 2, H, PREV, D)))
+    win = jax.lax.dynamic_update_slice(win, head, (0, 0, 0, 0, 0))
+    return jax.lax.dynamic_update_slice(kv, win, (0, 0, 0, kv_len, 0))
+
+
+def target_fwd(params, cfg: ModelCfg, tokens, pos, kv, kv_len, tree_mask,
+               yarn_factor: float, chunk: int = 512, attn_impl="pallas",
+               write_pos=None):
+    """Target-model forward over a bucketed KV cache.
+
+    Serves prefill (tree_mask = causal chain), AR decode (T=1), full
+    verification (bucket = full) and partial verification (bucket = P):
+    the executables only differ in the static bucket size B and token
+    count T.
+
+    Args:
+      tokens:   [T] int32.
+      pos:      [T] int32 absolute positions (RoPE).
+      kv:       [L, 2, H, B, D] f32.
+      kv_len:   () int32 committed length (write offset for new K/V).
+      tree_mask:[T, T] f32.
+
+    Returns dict with: logits [T, V], feats [T, 3*d_model] (EAGLE-3 fused
+    feature input), queries [L, H, T, D] (retrieval scoring), kv updated.
+    """
+    inv_freq, mscale = yarn_inv_freq(cfg, yarn_factor)
+    x = params["embed"][tokens]
+    feats = []
+    queries = []
+    kv_out = []
+    for i in range(cfg.n_layer):
+        if i in cfg.feats:
+            feats.append(x)
+        x, kv_l, xq = layer_fwd(
+            params, i, x, pos, kv[i], kv_len, tree_mask, cfg, inv_freq,
+            mscale, chunk, attn_impl=attn_impl, write_pos=write_pos)
+        kv_out.append(kv_l)
+        queries.append(xq)
+    # EAGLE-3 takes the *inputs* of the low/mid/top layers plus needs the
+    # normalised top output for the LM head.
+    xf = rmsnorm(x, params["ln_f"])
+    logits = xf @ params["head"]
+    fused = jnp.concatenate(feats, axis=-1) if len(feats) == 3 else None
+    return {
+        "logits": logits,
+        "feats": fused,
+        "queries": jnp.stack(queries),       # [L, H, T, D]
+        "kv": jnp.stack(kv_out),             # [L, 2, H, B, D]
+    }
+
+
+def score_fwd(kv, queries, kv_len, n_queries, *, block_size: int):
+    """Retrieval scores for every layer (refresh step).
+
+    kv:      [L, 2, H, B, D]; queries: [L, H, T, D].
+    Returns [L, 3, NB]: the three reductions (mean/max/last) stacked, so a
+    single compiled executable serves the Table-4 ablation.
+    """
+    L = kv.shape[0]
+    outs = []
+    for i in range(L):
+        s = block_scores(kv[i, 0], queries[i], kv_len, block_size=block_size)
+        outs.append(jnp.stack([
+            reduce_scores(s, n_queries, "mean"),
+            reduce_scores(s, n_queries, "max"),
+            reduce_scores(s, n_queries, "last"),
+        ]))
+    return jnp.stack(outs)                   # [L, 3, NB]
+
+
+def gather_fwd(kv, block_idx, *, block_size: int):
+    """Assemble the partial-cache core by gathering whole KV blocks.
+
+    kv:        [L, 2, H, B, D] full cache.
+    block_idx: [L, NSEL] int32 block ids (sink ++ retrieval ++ local, in
+               token order — rust builds this list).
+    Returns    [L, 2, H, NSEL*block_size, D].
+    """
+    L, _, H, B, D = kv.shape
+    NB = B // block_size
+    kvb = kv.reshape(L, 2, H, NB, block_size, D)
+
+    def per_layer(kv_l, idx_l):
+        return jnp.take(kv_l, idx_l, axis=2)     # [2, H, NSEL, bs, D]
+
+    out = jax.vmap(per_layer)(kvb, block_idx)
+    L2, _, H2, NSEL, bs, D2 = out.shape
+    return out.reshape(L, 2, H, NSEL * block_size, D)
+
+
+# ---------------------------------------------------------------------------
+# EAGLE-3 draft module
+# ---------------------------------------------------------------------------
+
+def draft_fwd(dparams, head, embed, cfg: ModelCfg, tokens, feats, pos, kv,
+              kv_len, tree_mask, yarn_factor: float, chunk: int = 512,
+              attn_impl="pallas", write_pos=None):
+    """Draft decoder forward (one EAGLE-3 step over W tree nodes or a
+    prefill chunk).
+
+    tokens: [T] int32 — the tokens being *extended from*.
+    feats:  [T, 3*d_model] fused target features for those tokens (or the
+            draft's own recycled hidden states, pre-tiled to 3h — see
+            `recycle`).
+    kv:     [2, H, B, D] the draft layer's bucket.
+    Returns (logits [T, V], hidden [T, d_model], kv').
+    """
+    inv_freq, mscale = yarn_inv_freq(cfg, yarn_factor)
+    f = feats @ dparams["fuse"]                         # [T, h]
+    x = jnp.concatenate([embed[tokens], f], axis=-1) @ dparams["inp"]
+    x, kv, _ = layer_fwd(
+        dparams, 0, x, pos, kv, kv_len, tree_mask, cfg, inv_freq, mscale,
+        chunk, prefix="", attn_impl=attn_impl, write_pos=write_pos)
+    hidden = x
+    logits = rmsnorm(x, dparams["ln_f"]) @ head
+    return logits, hidden, kv
+
+
+def recycle(hidden):
+    """EAGLE-3 feeds its own hidden state back as the 'feature' for tokens
+    it drafted itself; we tile it to the 3h fused-feature width."""
+    return jnp.concatenate([hidden, hidden, hidden], axis=-1)
+
+
+def medusa_fwd(mparams, feat, n_heads: int = 3):
+    """Medusa heads (TokenSwift baseline): feat [d_model] → [n_heads, V]."""
+    outs = []
+    for i in range(n_heads):
+        h = jax.nn.silu(feat @ mparams[f"m{i}.w1"]) + feat
+        outs.append(h @ mparams[f"m{i}.w2"])
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# Training-side helpers (used by train.py; not exported to rust)
+# ---------------------------------------------------------------------------
+
+SERVE_YARN = 16.0   # must match aot.YARN_FACTOR — trained == served
+MAX_POS = 8192      # serving position range; training offsets cover it
+
+
+def lm_loss(params, cfg: ModelCfg, batch, offsets=None, chunk: int = 512):
+    """Plain next-token loss over [N, S] token batches (teacher forcing).
+
+    Trains with the SERVING YARN factor and random absolute-position
+    offsets (one per sequence) so every RoPE angle the serving stack uses
+    (positions up to MAX_POS) is in-distribution — the collapsed
+    equivalent of the paper's YARN fine-tuning stage (appendix A)."""
+    if offsets is None:
+        offsets = jnp.zeros((batch.shape[0],), jnp.int32)
+
+    def one(seq, off):
+        S = seq.shape[0]
+        kv = jnp.zeros((cfg.n_layer, 2, cfg.n_head, S, cfg.d_head))
+        out = target_fwd(
+            params, cfg, seq, off + jnp.arange(S, dtype=jnp.int32), kv,
+            jnp.int32(0), jnp.tril(jnp.ones((S, S), jnp.float32)),
+            yarn_factor=SERVE_YARN, chunk=min(chunk, S), attn_impl="jnp")
+        logits = out["logits"][:-1]
+        tgt = seq[1:]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tgt[:, None], axis=1)[:, 0]
+        return jnp.mean(lse - ll), (out["feats"][:-1] if out["feats"] is not
+                                    None else None)
+
+    losses, _ = jax.vmap(one)(batch, offsets)
+    return jnp.mean(losses)

@@ -1,0 +1,277 @@
+"""Build-time training for the SpecPV reproduction (runs ONCE; never on
+the request path).
+
+Trains, per model size s/m/l:
+  1. the target char-LM on the synthetic training mix,
+  2. the EAGLE-3-style draft head with the multi-step training-time-test
+     loss  L = L0 + a·L1 + a²·L2  (paper Eq. 5, a = 0.8) — this is the
+     YARN-fit stage of paper appendix A collapsed into one run (our model
+     trains with YARN scaling baked into serving, so there is no separate
+     repair phase; the *loss curves* land in artifacts/train_log.json and
+     regenerate paper Fig. 8),
+  3. Medusa heads (TokenSwift baseline),
+plus the independent tiny draft LM (TriForce baseline).
+
+Outputs:
+  artifacts/weights_{s,m,l}.bin   (target "t." + draft "d." + medusa "md.")
+  artifacts/weights_tiny.bin
+  artifacts/train_log.json        (per-phase loss curves + EMA — Fig. 8)
+
+Usage: python -m compile.train --out-dir ../artifacts [--quick] [--sizes s,m,l]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as M
+
+SEQ = 256
+TTT_ALPHA = 0.8
+TTT_STEPS = 3  # L0..L2
+
+
+# ---------------------------------------------------------------------------
+# Minimal Adam (optax is unavailable offline)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+class Windows:
+    """Random fixed-length windows over the synthetic training mix."""
+
+    def __init__(self, seed: int, n_bytes: int = 1 << 21):
+        text = data_mod.training_text(seed, n_bytes)
+        self.ids = np.frombuffer(
+            text.encode("utf-8", errors="replace")[:n_bytes], dtype=np.uint8
+        ).astype(np.int32)
+        self.rng = np.random.default_rng(seed)
+
+    def batch(self, n: int, seq: int = SEQ):
+        starts = self.rng.integers(0, len(self.ids) - seq - 1, n)
+        toks = jnp.stack([jnp.array(self.ids[s:s + seq]) for s in starts])
+        # random absolute-position offsets: serving positions up to
+        # MAX_POS must be in-distribution under the serving YARN factor
+        offs = jnp.array(
+            self.rng.integers(0, M.MAX_POS - seq, n), jnp.int32)
+        return toks, offs
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def _xent(logits, targets):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[:, None], axis=1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def draft_ttt_loss(dparams, tparams, cfg: M.ModelCfg, batch, offsets):
+    """EAGLE-3 training-time-test loss over teacher-forced sequences.
+
+    Pass 0 predicts x_{t+1} from (x_t, target feature f_t); pass k>0
+    recycles the previous pass's draft hidden state as the feature,
+    simulating autoregressive drafting k tokens ahead. Positions carry
+    the same random offsets as the target so the draft's YARN RoPE is
+    in-distribution at serving positions (paper appendix A).
+    """
+    def one(seq, off):
+        S = seq.shape[0]
+        kv = jnp.zeros((cfg.n_layer, 2, cfg.n_head, S, cfg.d_head))
+        tout = M.target_fwd(
+            tparams, cfg, seq, off + jnp.arange(S, dtype=jnp.int32), kv,
+            jnp.int32(0), jnp.tril(jnp.ones((S, S), jnp.float32)),
+            yarn_factor=M.SERVE_YARN, chunk=S, attn_impl="jnp")
+        feats = jax.lax.stop_gradient(tout["feats"])       # [S, 3h]
+
+        total = 0.0
+        cur_feats = feats
+        for step in range(TTT_STEPS):
+            # tokens shifted by `step`: at TTT step k the draft extends
+            # from x_{t+k} (teacher forced) toward x_{t+k+1}
+            Sk = S - 1 - step
+            toks = jax.lax.dynamic_slice_in_dim(seq, step, Sk)
+            tgts = jax.lax.dynamic_slice_in_dim(seq, step + 1, Sk)
+            f = cur_feats[:Sk]
+            dkv = jnp.zeros((2, cfg.n_head, Sk, cfg.d_head))
+            logits, hidden, _ = M.draft_fwd(
+                dparams, tparams["head"], tparams["embed"], cfg, toks, f,
+                off + jnp.arange(step, step + Sk, dtype=jnp.int32), dkv,
+                jnp.int32(0), jnp.tril(jnp.ones((Sk, Sk), jnp.float32)),
+                yarn_factor=M.SERVE_YARN, chunk=Sk, attn_impl="jnp")
+            total = total + (TTT_ALPHA ** step) * _xent(logits, tgts)
+            # recycle: hidden at position t becomes the feature for x_{t+1}
+            cur_feats = M.recycle(hidden)
+        return total
+
+    return jnp.mean(jax.vmap(one)(batch, offsets))
+
+
+def medusa_loss(mparams, tparams, cfg: M.ModelCfg, batch, offsets, n_heads=3):
+    def one(seq, off):
+        S = seq.shape[0]
+        kv = jnp.zeros((cfg.n_layer, 2, cfg.n_head, S, cfg.d_head))
+        tout = M.target_fwd(
+            tparams, cfg, seq, off + jnp.arange(S, dtype=jnp.int32), kv,
+            jnp.int32(0), jnp.tril(jnp.ones((S, S), jnp.float32)),
+            yarn_factor=M.SERVE_YARN, chunk=S, attn_impl="jnp")
+        # top-layer fused slice = input of the final layer
+        feats = jax.lax.stop_gradient(tout["feats"][:, 2 * cfg.d_model:])
+        total = 0.0
+        for h in range(n_heads):
+            k = h + 1
+            logits = jax.vmap(lambda f: M.medusa_fwd(mparams, f, n_heads)[h])(
+                feats[: S - k - 1])
+            total = total + _xent(logits, seq[k + 1: S])
+        return total / n_heads
+
+    return jnp.mean(jax.vmap(one)(batch, offsets))
+
+
+# ---------------------------------------------------------------------------
+# Serialization: own binary format, mirrored by rust/src/weights.
+# ---------------------------------------------------------------------------
+
+def save_weights(path: str, tensors: dict):
+    with open(path, "wb") as f:
+        f.write(b"SPVW")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.asarray(tensors[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------------
+
+def run_phase(name, params, loss_fn, windows, steps, batch_size, lr, log):
+    state = adam_init(params)
+    step_fn = jax.jit(jax.value_and_grad(loss_fn))
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        batch, offs = windows.batch(batch_size)
+        loss, grads = step_fn(params, batch, offs)
+        params, state = adam_update(params, grads, state, lr)
+        losses.append(float(loss))
+        if i % 20 == 0 or i == steps - 1:
+            print(f"[{name}] step {i:4d}/{steps} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    ema, es = [], None
+    for x in losses:
+        es = x if es is None else 0.95 * es + 0.05 * x
+        ema.append(es)
+    log[name] = {"loss": losses, "ema": ema}
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="s,m,l")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny step counts (CI / pytest smoke)")
+    ap.add_argument("--steps-target", type=int, default=0)
+    ap.add_argument("--steps-draft", type=int, default=0)
+    args = ap.parse_args()
+
+    log: dict = {}
+    sizes = [s for s in args.sizes.split(",") if s]
+
+    # step budgets per size (1 CPU core → keep ~20 min total)
+    budget = {
+        "s": (300, 220, 60),    # target, draft, medusa
+        "m": (140, 100, 40),
+        "l": (100, 80, 30),
+    }
+
+    for size in sizes:
+        cfg = M.SIZES[size]
+        st, sd, sm = budget[size]
+        if args.quick:
+            st, sd, sm = 3, 3, 2
+        if args.steps_target:
+            st = args.steps_target
+        if args.steps_draft:
+            sd = args.steps_draft
+        bsz = {"s": 6, "m": 4, "l": 3}[size]
+        win = Windows(seed=0xC0FFEE + ord(size))
+
+        key = jax.random.PRNGKey(ord(size))
+        tparams = M.init_target(cfg, key)
+        tparams = run_phase(
+            f"target_{size}", tparams,
+            lambda p, b, o: M.lm_loss(p, cfg, b, o, chunk=SEQ),
+            win, st, bsz, 3e-3, log)
+
+        dparams = M.init_draft(cfg, jax.random.fold_in(key, 1))
+        dparams = run_phase(
+            f"draft_{size}", dparams,
+            lambda p, b, o: draft_ttt_loss(p, tparams, cfg, b, o),
+            win, sd, max(bsz - 2, 2), 3e-3, log)
+
+        mparams = M.init_medusa(cfg, jax.random.fold_in(key, 2))
+        mparams = run_phase(
+            f"medusa_{size}", mparams,
+            lambda p, b, o: medusa_loss(p, tparams, cfg, b, o),
+            win, sm, max(bsz - 2, 2), 3e-3, log)
+
+        tensors = {}
+        tensors.update({f"t.{k}": v for k, v in tparams.items()})
+        tensors.update({f"d.{k}": v for k, v in dparams.items()})
+        tensors.update({f"md.{k}": v for k, v in mparams.items()})
+        save_weights(f"{args.out_dir}/weights_{size}.bin", tensors)
+        print(f"saved weights_{size}.bin ({len(tensors)} tensors)")
+
+    # independent tiny draft LM (TriForce baseline)
+    cfg = M.TINY
+    win = Windows(seed=0xC0FFEE)
+    steps = 3 if args.quick else 160
+    tiny = M.init_target(cfg, jax.random.PRNGKey(99))
+    tiny = run_phase(
+        "tiny", tiny, lambda p, b, o: M.lm_loss(p, cfg, b, o, chunk=SEQ),
+        win, steps, 6, 3e-3, log)
+    save_weights(f"{args.out_dir}/weights_tiny.bin",
+                 {f"t.{k}": v for k, v in tiny.items()})
+
+    with open(f"{args.out_dir}/train_log.json", "w") as f:
+        json.dump(log, f)
+    print("wrote train_log.json")
+
+
+if __name__ == "__main__":
+    main()

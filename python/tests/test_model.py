@@ -1,0 +1,197 @@
+"""L2 model invariants: chunked-prefill consistency, verify-vs-dense
+equivalence, compaction semantics, YARN properties, draft shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+CFG = M.SIZES["s"]
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_target(CFG, KEY)
+
+
+def causal(t):
+    return jnp.tril(jnp.ones((t, t), jnp.float32))
+
+
+def zero_kv(bucket, cfg=CFG):
+    return jnp.zeros((cfg.n_layer, 2, cfg.n_head, bucket, cfg.d_head))
+
+
+def toks(n, seed=0):
+    return jnp.array(
+        np.random.default_rng(seed).integers(0, 255, n), jnp.int32)
+
+
+class TestTargetForward:
+    def test_chunked_prefill_matches_dense(self, params):
+        t = toks(96)
+        dense = M.target_fwd(
+            params, CFG, t, jnp.arange(96, dtype=jnp.int32), zero_kv(128),
+            jnp.int32(0), causal(96), yarn_factor=16.0, chunk=128)
+        kv = zero_kv(128)
+        outs = []
+        for c in range(3):
+            o = M.target_fwd(
+                params, CFG, t[c * 32:(c + 1) * 32],
+                jnp.arange(c * 32, (c + 1) * 32, dtype=jnp.int32), kv,
+                jnp.int32(c * 32), causal(32), yarn_factor=16.0, chunk=128)
+            kv = o["kv"]
+            outs.append(o["logits"])
+        np.testing.assert_allclose(
+            jnp.concatenate(outs), dense["logits"], rtol=1e-3, atol=1e-4)
+
+    def test_verify_equals_decode_chain(self, params):
+        """Verifying a 4-token chain == 4 AR decode steps (losslessness of
+        chain verification)."""
+        prompt = toks(64, 1)
+        pre = M.target_fwd(
+            params, CFG, prompt, jnp.arange(64, dtype=jnp.int32),
+            zero_kv(128), jnp.int32(0), causal(64), yarn_factor=16.0,
+            chunk=128)
+        chain = toks(4, 2)
+        # chain verification in one call
+        ver = M.target_fwd(
+            params, CFG, chain, jnp.arange(64, 68, dtype=jnp.int32),
+            pre["kv"], jnp.int32(64), causal(4), yarn_factor=16.0, chunk=128)
+        # step-by-step
+        kv = pre["kv"]
+        logits = []
+        for i in range(4):
+            o = M.target_fwd(
+                params, CFG, chain[i:i + 1],
+                jnp.arange(64 + i, 65 + i, dtype=jnp.int32), kv,
+                jnp.int32(64 + i), causal(1), yarn_factor=16.0, chunk=128)
+            kv = o["kv"]
+            logits.append(o["logits"][0])
+        np.testing.assert_allclose(
+            ver["logits"], jnp.stack(logits), rtol=1e-3, atol=1e-4)
+
+    def test_tree_siblings_independent(self, params):
+        """Changing a sibling's token must not change the other branch's
+        logits (the tree mask isolates branches)."""
+        prompt = toks(32, 3)
+        pre = M.target_fwd(
+            params, CFG, prompt, jnp.arange(32, dtype=jnp.int32),
+            zero_kv(64), jnp.int32(0), causal(32), yarn_factor=16.0,
+            chunk=64)
+        # tree: root(0); children 1, 2
+        tm = jnp.array(
+            [[1, 0, 0], [1, 1, 0], [1, 0, 1]], jnp.float32)
+        pos = jnp.array([32, 33, 33], jnp.int32)
+        t1 = jnp.array([10, 20, 30], jnp.int32)
+        t2 = jnp.array([10, 20, 99], jnp.int32)  # change sibling 2
+        o1 = M.target_fwd(params, CFG, t1, pos, pre["kv"], jnp.int32(32),
+                          tm, yarn_factor=16.0, chunk=64)
+        o2 = M.target_fwd(params, CFG, t2, pos, pre["kv"], jnp.int32(32),
+                          tm, yarn_factor=16.0, chunk=64)
+        np.testing.assert_allclose(
+            o1["logits"][1], o2["logits"][1], rtol=1e-4, atol=1e-5)
+
+
+class TestCompaction:
+    def test_compact_window_moves_rows(self):
+        L, H, B, D = 1, 1, 64, 4
+        kv = jnp.arange(L * 2 * H * B * D, dtype=jnp.float32).reshape(
+            L, 2, H, B, D)
+        out = M.compact_window(
+            kv, jnp.int32(10), jnp.array([1, 3, 0, 0, 0, 0, 0, 0], jnp.int32),
+            jnp.int32(2), 16)
+        # row 10 ← old row 11, row 11 ← old row 13
+        np.testing.assert_allclose(out[0, 0, 0, 10], kv[0, 0, 0, 11])
+        np.testing.assert_allclose(out[0, 0, 0, 11], kv[0, 0, 0, 13])
+        # untouched regions identical
+        np.testing.assert_allclose(out[0, 0, 0, :10], kv[0, 0, 0, :10])
+        np.testing.assert_allclose(out[0, 0, 0, 26:], kv[0, 0, 0, 26:])
+
+    def test_compact_noop_when_empty(self):
+        kv = jax.random.normal(KEY, (2, 2, 2, 32, 4))
+        out = M.compact_window(
+            kv, jnp.int32(5), jnp.zeros((8,), jnp.int32), jnp.int32(0), 16)
+        np.testing.assert_allclose(out, kv)
+
+
+class TestYarn:
+    def test_mscale_grows_with_factor(self):
+        _, m1 = M.yarn_inv_freq(CFG, 1.0)
+        _, m16 = M.yarn_inv_freq(CFG, 16.0)
+        assert m1 == 1.0
+        assert m16 > 1.0
+
+    def test_high_freq_dims_preserved(self):
+        base, _ = M.yarn_inv_freq(CFG, 1.0)
+        yarn, _ = M.yarn_inv_freq(CFG, 16.0)
+        # dim 0 is the highest frequency: extrapolated (unchanged)
+        np.testing.assert_allclose(yarn[0], base[0], rtol=1e-6)
+        # the lowest-frequency dim is interpolated (divided by ~factor)
+        assert yarn[-1] < base[-1] / 4
+
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(KEY, (2, 8, 32))
+        inv, _ = M.yarn_inv_freq(CFG, 16.0)
+        r = M.rope_apply(x, jnp.arange(100, 108, dtype=jnp.int32), inv)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(r, axis=-1), jnp.linalg.norm(x, axis=-1),
+            rtol=1e-5)
+
+    def test_rope_relative_property(self):
+        """q·k after RoPE depends on relative distance only (per 2-dim
+        pair), so shifting both positions equally preserves scores."""
+        q = jax.random.normal(KEY, (1, 1, 32))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 32))
+        inv, _ = M.yarn_inv_freq(CFG, 16.0)
+        def score(pq, pk):
+            qq = M.rope_apply(q, jnp.array([pq], jnp.int32), inv)
+            kk = M.rope_apply(k, jnp.array([pk], jnp.int32), inv)
+            return float(jnp.sum(qq * kk))
+        assert abs(score(100, 90) - score(1100, 1090)) < 1e-3
+
+
+class TestDraft:
+    def test_shapes_and_determinism(self, params):
+        dp = M.init_draft(CFG, KEY)
+        t = toks(8, 5)
+        feats = jax.random.normal(KEY, (8, 3 * CFG.d_model))
+        kv = jnp.zeros((2, CFG.n_head, 64, CFG.d_head))
+        lg, hid, kv2 = M.draft_fwd(
+            dp, params["head"], params["embed"], CFG, t, feats,
+            jnp.arange(8, dtype=jnp.int32), kv, jnp.int32(0), causal(8),
+            yarn_factor=16.0, chunk=64)
+        assert lg.shape == (8, CFG.vocab)
+        assert hid.shape == (8, CFG.d_model)
+        assert kv2.shape == kv.shape
+        lg2, _, _ = M.draft_fwd(
+            dp, params["head"], params["embed"], CFG, t, feats,
+            jnp.arange(8, dtype=jnp.int32), kv, jnp.int32(0), causal(8),
+            yarn_factor=16.0, chunk=64)
+        np.testing.assert_allclose(lg, lg2)
+
+    def test_medusa_heads_shape(self):
+        mp = M.init_medusa(CFG, KEY)
+        out = M.medusa_fwd(mp, jnp.ones((CFG.d_model,)))
+        assert out.shape == (3, CFG.vocab)
+
+
+class TestScoreGather:
+    def test_gather_reassembles_blocks(self, params):
+        kv = jax.random.normal(KEY, (CFG.n_layer, 2, CFG.n_head, 128,
+                                     CFG.d_head))
+        idx = jnp.array([[0, 2, 3]] * CFG.n_layer, jnp.int32)
+        g = M.gather_fwd(kv, idx, block_size=32)
+        np.testing.assert_allclose(g[:, :, :, :32], kv[:, :, :, 0:32])
+        np.testing.assert_allclose(g[:, :, :, 32:64], kv[:, :, :, 64:96])
+
+    def test_score_shapes(self, params):
+        kv = jax.random.normal(KEY, (CFG.n_layer, 2, CFG.n_head, 256,
+                                     CFG.d_head))
+        q = jax.random.normal(KEY, (CFG.n_layer, CFG.n_head, 16, CFG.d_head))
+        s = M.score_fwd(kv, q, jnp.int32(200), jnp.int32(16), block_size=32)
+        assert s.shape == (CFG.n_layer, 3, 8)

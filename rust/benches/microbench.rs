@@ -1,0 +1,110 @@
+//! Micro-benchmarks of the L3 hot paths (run via `cargo bench`).
+//! Criterion is not available offline; this uses the in-repo harness
+//! (`specpv::bench::measure`) and prints mean/p50 per operation.
+//! These are the pure-rust costs that sit *between* executable calls on
+//! the decode path — they must stay ≪ 1 ms so the coordinator is never
+//! the bottleneck (DESIGN.md §9 L3 target).
+
+use specpv::bench::measure;
+use specpv::config::SpecPvConfig;
+use specpv::retrieval::plan_gather;
+use specpv::sampling::{log_softmax, top_k};
+use specpv::tree::Tree;
+use specpv::util::rng::Rng;
+use specpv::{corpus, json::Json, metrics};
+
+fn report(name: &str, iters: usize, s: &specpv::util::stats::Samples) {
+    println!(
+        "{name:40} {:>10.1} us/iter  (p50 {:>8.1} us, {iters} iters)",
+        s.mean() * 1e6,
+        s.p50() * 1e6
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== L3 micro-benchmarks ==");
+
+    // draft-tree build + flatten + mask (per decode round)
+    let mut rng = Rng::new(7);
+    let s = measure(10, 2000, || {
+        let mut t = Tree::new(65);
+        for _ in 0..12 {
+            let p = rng.below(t.len());
+            t.add(p, rng.below(320) as u32, -0.3);
+        }
+        let t = t.prune_top(16);
+        let f = t.flatten(16);
+        std::hint::black_box(f);
+        Ok(())
+    })?;
+    report("tree build+prune+flatten(16)", 2000, &s);
+
+    // retrieval planning over a 8192-token cache (256 blocks, 4 layers)
+    let scores: Vec<f32> = (0..4 * 3 * 256).map(|i| (i % 97) as f32).collect();
+    let cfg = SpecPvConfig::default();
+    let s = measure(10, 2000, || {
+        let plan = plan_gather(&scores, 4, 256, 32, 8100, 24, &cfg);
+        std::hint::black_box(plan);
+        Ok(())
+    })?;
+    report("retrieval plan_gather(256 blocks)", 2000, &s);
+
+    // logits post-processing per verify step (16 rows of vocab 320)
+    let logits: Vec<f32> = (0..320).map(|i| (i as f32 * 0.37).sin()).collect();
+    let s = measure(10, 2000, || {
+        for _ in 0..16 {
+            std::hint::black_box(top_k(&logits, 4));
+        }
+        std::hint::black_box(log_softmax(&logits));
+        Ok(())
+    })?;
+    report("per-step logits topk+softmax", 2000, &s);
+
+    // refresh mask construction (t=64)
+    let mut t = Tree::new(1);
+    for i in 0..12 {
+        t.add(i % (i + 1), 2, -0.1);
+    }
+    let flat = t.flatten(16);
+    let s = measure(10, 2000, || {
+        std::hint::black_box(specpv::tree::refresh_mask(40, &flat, 64));
+        Ok(())
+    })?;
+    report("refresh_mask(40+16 -> 64)", 2000, &s);
+
+    // metrics on ~1KB texts (per-result cost in quality harnesses)
+    let a = corpus::novel_text(1, 1000);
+    let b = corpus::novel_text(2, 1000);
+    let s = measure(5, 200, || {
+        std::hint::black_box(metrics::rouge_l(&a, &b));
+        Ok(())
+    })?;
+    report("rouge_l(1KB, 1KB)", 200, &s);
+
+    let s = measure(5, 200, || {
+        std::hint::black_box(metrics::bleurt_proxy(&a, &b));
+        Ok(())
+    })?;
+    report("bleurt_proxy(1KB, 1KB)", 200, &s);
+
+    // JSON protocol round-trip (per server request)
+    let req = Json::obj()
+        .set("op", "generate")
+        .set("prompt", a.as_str())
+        .set("max_new", 128usize);
+    let txt = req.to_string();
+    let s = measure(10, 1000, || {
+        std::hint::black_box(Json::parse(&txt)?);
+        Ok(())
+    })?;
+    report("json parse 1KB request", 1000, &s);
+
+    // corpus generation (workload-gen cost in benches)
+    let s = measure(2, 50, || {
+        std::hint::black_box(corpus::continuation_prompt(3, 4096));
+        Ok(())
+    })?;
+    report("corpus novel_text(4KB)", 50, &s);
+
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! In-repo benchmark harness (criterion is not in the offline vendor
+//! set). Provides warmup/measure loops, Markdown/JSON table emission and
+//! the `results/` directory convention used by every paper-table driver.
+
+use std::fs;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::json::Json;
+use crate::util::stats::Samples;
+
+/// Measure a closure: `warmup` unrecorded runs, then `iters` recorded.
+pub fn measure<F: FnMut() -> Result<()>>(
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> Result<Samples> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut s = Samples::default();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f()?;
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(s)
+}
+
+/// A rendered results table (rows of strings) with machine-readable rows.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub json_rows: Vec<Json>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            json_rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>, json: Json) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+        self.json_rows.push(json);
+    }
+
+    /// Render GitHub-flavoured Markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("## {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.headers.len())
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+
+    /// Print to stdout and persist under `dir` as `<name>.md` + `<name>.json`.
+    pub fn emit(&self, dir: &Path, name: &str) -> Result<()> {
+        let md = self.to_markdown();
+        println!("{md}");
+        fs::create_dir_all(dir)?;
+        fs::write(dir.join(format!("{name}.md")), &md)?;
+        let j = Json::obj()
+            .set("title", self.title.as_str())
+            .set(
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+            )
+            .set("rows", Json::Arr(self.json_rows.clone()));
+        fs::write(dir.join(format!("{name}.json")), j.to_string())?;
+        Ok(())
+    }
+}
+
+/// Format a speedup multiple like the paper ("2.53×").
+pub fn fmt_speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts() {
+        let mut n = 0;
+        let s = measure(2, 5, || {
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 7);
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn table_markdown() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(
+            vec!["1".into(), "2".into()],
+            Json::obj().set("a", 1usize).set("b", 2usize),
+        );
+        let md = t.to_markdown();
+        assert!(md.contains("## demo"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_arity_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()], Json::Null);
+    }
+}

@@ -1,0 +1,330 @@
+//! KV-cache bookkeeping. The tensors themselves live on the PJRT device
+//! (flat-state buffers threaded between executables — see runtime); this
+//! module owns the *accounting*: committed lengths, pending-acceptance
+//! compaction indices, partial-cache segment map (sink/retrieval/local/
+//! buffer, paper §3.2) and the paged block arithmetic — all pure logic
+//! with invariant checks, unit-testable without artifacts.
+
+use anyhow::{bail, Result};
+
+/// Accounting for a full (bucketed) target KV cache.
+///
+/// Invariants:
+/// * `committed + pending.len() + headroom ≤ bucket`
+/// * `pending` holds strictly-increasing row offsets (< window) of the
+///   accepted rows of the last verification step's tree region, which the
+///   NEXT verify call compacts (fused) before appending.
+#[derive(Debug, Clone)]
+pub struct FullCache {
+    pub bucket: usize,
+    pub committed: usize,
+    pub pending: Vec<usize>,
+}
+
+impl FullCache {
+    pub fn new(bucket: usize) -> FullCache {
+        FullCache { bucket, committed: 0, pending: Vec::new() }
+    }
+
+    /// Length after the pending rows commit.
+    pub fn effective_len(&self) -> usize {
+        self.committed + self.pending.len()
+    }
+
+    /// Record a prefill chunk (rows written contiguously; no compaction).
+    pub fn push_prefill(&mut self, n: usize) -> Result<()> {
+        if !self.pending.is_empty() {
+            bail!("prefill with pending acceptance");
+        }
+        if self.committed + n > self.bucket {
+            bail!(
+                "bucket overflow: {} + {n} > {}",
+                self.committed,
+                self.bucket
+            );
+        }
+        self.committed += n;
+        Ok(())
+    }
+
+    /// Consume the pending set for a fused-compaction verify call:
+    /// returns (kv_len, prev_idx padded to `prev_max`, n_prev) and
+    /// advances `committed`.
+    pub fn take_pending(
+        &mut self,
+        prev_max: usize,
+    ) -> Result<(usize, Vec<i32>, usize)> {
+        let n = self.pending.len();
+        if n > prev_max {
+            bail!("pending {n} exceeds fused window {prev_max}");
+        }
+        let kv_len = self.committed;
+        let mut idx: Vec<i32> = self.pending.iter().map(|&i| i as i32).collect();
+        idx.resize(prev_max, 0);
+        self.committed += n;
+        self.pending.clear();
+        Ok((kv_len, idx, n))
+    }
+
+    /// Record this step's accepted tree rows (for the next call).
+    pub fn set_pending(&mut self, rows: Vec<usize>, window: usize) -> Result<()> {
+        if !self.pending.is_empty() {
+            bail!("pending already set");
+        }
+        let mut prev = None;
+        for &r in &rows {
+            if r >= window {
+                bail!("pending row {r} outside window {window}");
+            }
+            if let Some(p) = prev {
+                if r <= p {
+                    bail!("pending rows not strictly increasing");
+                }
+            }
+            prev = Some(r);
+        }
+        if self.committed + rows.len() > self.bucket {
+            bail!("bucket overflow on acceptance");
+        }
+        self.pending = rows;
+        Ok(())
+    }
+
+    /// Immediate commit (standalone `commit_*` executable path, used after
+    /// Refresh steps): advances committed by `n` and clears pending.
+    pub fn commit_now(&mut self, n: usize) -> Result<()> {
+        if self.committed + n > self.bucket {
+            bail!("bucket overflow on commit");
+        }
+        self.committed += n;
+        self.pending.clear();
+        Ok(())
+    }
+
+    /// Room left for new rows (tree + compaction slack).
+    pub fn headroom(&self) -> usize {
+        self.bucket - self.effective_len()
+    }
+}
+
+/// Accounting for the SpecPV partial cache (one device buffer holding
+/// sink ++ retrieval ++ local ++ buffer, contiguous in token order).
+#[derive(Debug, Clone)]
+pub struct PartialCache {
+    /// partial bucket size P (compiled)
+    pub bucket: usize,
+    /// valid tokens in the gathered core (≤ core capacity)
+    pub core_len: usize,
+    /// committed tokens in the buffer region
+    pub buf_committed: usize,
+    /// pending accepted rows of the last partial step (fused compaction)
+    pub pending: Vec<usize>,
+    /// tokens partially verified since the last refresh (pv chain,
+    /// including per-step bonus tokens) — re-verified at the next Refresh
+    pub pv_tokens: Vec<u32>,
+    /// buffer capacity before a Refresh is forced (paper §3.3/§4.4)
+    pub buffer_cap: usize,
+}
+
+impl PartialCache {
+    pub fn new(bucket: usize, buffer_cap: usize) -> PartialCache {
+        PartialCache {
+            bucket,
+            core_len: 0,
+            buf_committed: 0,
+            pending: Vec::new(),
+            pv_tokens: Vec::new(),
+            buffer_cap,
+        }
+    }
+
+    /// Reset after a refresh+gather with a fresh core of `core_len` tokens.
+    pub fn refresh(&mut self, core_len: usize) {
+        self.core_len = core_len;
+        self.buf_committed = 0;
+        self.pending.clear();
+        self.pv_tokens.clear();
+    }
+
+    /// kv_len for the next partial verify (committed core + buffer).
+    pub fn kv_len(&self) -> usize {
+        self.core_len + self.buf_committed
+    }
+
+    /// Would a tree of `t` tokens still fit the buffer (slots + cap)?
+    /// Paper Alg. 1 `SelectMode`: when it does not, Refresh is selected.
+    pub fn fits(&self, t: usize, prev_max: usize) -> bool {
+        let after_pending = self.kv_len() + self.pending.len();
+        let slots_ok = after_pending + t <= self.bucket;
+        let cap_ok = self.pv_tokens.len() + t <= self.buffer_cap;
+        let fused_ok = self.pending.len() <= prev_max;
+        slots_ok && cap_ok && fused_ok
+    }
+
+    pub fn take_pending(
+        &mut self,
+        prev_max: usize,
+    ) -> Result<(usize, Vec<i32>, usize)> {
+        let n = self.pending.len();
+        if n > prev_max {
+            bail!("partial pending {n} exceeds fused window {prev_max}");
+        }
+        let kv_len = self.kv_len();
+        let mut idx: Vec<i32> = self.pending.iter().map(|&i| i as i32).collect();
+        idx.resize(prev_max, 0);
+        self.buf_committed += n;
+        self.pending.clear();
+        Ok((kv_len, idx, n))
+    }
+
+    pub fn set_pending(&mut self, rows: Vec<usize>) -> Result<()> {
+        if !self.pending.is_empty() {
+            bail!("partial pending already set");
+        }
+        self.pending = rows;
+        Ok(())
+    }
+}
+
+/// Draft-cache accounting (committed rows + per-round scratch region).
+#[derive(Debug, Clone)]
+pub struct DraftCache {
+    pub bucket: usize,
+    /// committed rows (prompt prefill + catch-up chains)
+    pub committed: usize,
+    /// scratch rows drafted this round (overwritten next round)
+    pub scratch: usize,
+    /// scratch region capacity (compiled DRAFT_REGION)
+    pub region: usize,
+}
+
+impl DraftCache {
+    pub fn new(bucket: usize, region: usize) -> DraftCache {
+        DraftCache { bucket, committed: 0, scratch: 0, region }
+    }
+
+    pub fn push_prefill(&mut self, n: usize) -> Result<()> {
+        if self.committed + n + self.region > self.bucket {
+            bail!("draft bucket overflow in prefill");
+        }
+        self.committed += n;
+        Ok(())
+    }
+
+    /// Commit a catch-up chain of `n` rows (written at `committed`).
+    pub fn push_chain(&mut self, n: usize) -> Result<()> {
+        if self.committed + n + self.region > self.bucket {
+            bail!("draft bucket overflow in catch-up");
+        }
+        self.committed += n;
+        self.scratch = 0;
+        Ok(())
+    }
+
+    /// Reserve `n` scratch rows for a level expansion; returns the write
+    /// offset within the scratch region.
+    pub fn push_scratch(&mut self, n: usize) -> Result<usize> {
+        if self.scratch + n > self.region {
+            bail!("draft scratch region overflow ({} + {n})", self.scratch);
+        }
+        let off = self.scratch;
+        self.scratch += n;
+        Ok(off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+
+    #[test]
+    fn full_cache_flow() {
+        let mut c = FullCache::new(1024);
+        c.push_prefill(500).unwrap();
+        c.set_pending(vec![0, 2, 5], 16).unwrap();
+        assert_eq!(c.effective_len(), 503);
+        let (kv_len, idx, n) = c.take_pending(8).unwrap();
+        assert_eq!(kv_len, 500);
+        assert_eq!(n, 3);
+        assert_eq!(&idx[..3], &[0, 2, 5]);
+        assert_eq!(idx.len(), 8);
+        assert_eq!(c.committed, 503);
+        assert!(c.pending.is_empty());
+    }
+
+    #[test]
+    fn full_cache_rejects_bad_pending() {
+        let mut c = FullCache::new(64);
+        c.push_prefill(10).unwrap();
+        assert!(c.set_pending(vec![5, 3], 16).is_err()); // not increasing
+        assert!(c.set_pending(vec![16], 16).is_err()); // outside window
+        c.set_pending(vec![1], 16).unwrap();
+        assert!(c.set_pending(vec![2], 16).is_err()); // double set
+    }
+
+    #[test]
+    fn full_cache_overflow() {
+        let mut c = FullCache::new(32);
+        assert!(c.push_prefill(33).is_err());
+        c.push_prefill(30).unwrap();
+        assert!(c.set_pending(vec![0, 1, 2], 16).is_err());
+    }
+
+    #[test]
+    fn partial_cache_mode_logic() {
+        let mut p = PartialCache::new(512, 36);
+        p.refresh(420);
+        assert!(p.fits(16, 8));
+        // fill the pv budget
+        for _ in 0..3 {
+            p.pv_tokens.extend([0; 7]);
+        }
+        // 21 pv + 16 > 36 → must refresh
+        assert!(!p.fits(16, 8));
+        p.refresh(430);
+        assert!(p.fits(16, 8));
+        assert_eq!(p.kv_len(), 430);
+    }
+
+    #[test]
+    fn partial_pending_roundtrip() {
+        let mut p = PartialCache::new(512, 100);
+        p.refresh(400);
+        p.set_pending(vec![0, 1]).unwrap();
+        let (kv_len, idx, n) = p.take_pending(8).unwrap();
+        assert_eq!((kv_len, n), (400, 2));
+        assert_eq!(idx.len(), 8);
+        assert_eq!(p.kv_len(), 402);
+    }
+
+    #[test]
+    fn draft_cache_regions() {
+        let mut d = DraftCache::new(256, 32);
+        d.push_prefill(100).unwrap();
+        let o1 = d.push_scratch(8).unwrap();
+        let o2 = d.push_scratch(8).unwrap();
+        assert_eq!((o1, o2), (0, 8));
+        d.push_chain(5).unwrap();
+        assert_eq!(d.committed, 105);
+        assert_eq!(d.scratch, 0);
+        assert!(d.push_scratch(33).is_err());
+    }
+
+    #[test]
+    fn cache_invariants_property() {
+        Prop::new("full cache never exceeds bucket", 200).run(|g| {
+            let bucket = g.usize_in(64, 512);
+            let mut c = FullCache::new(bucket);
+            let _ = c.push_prefill(g.usize_in(0, bucket));
+            for _ in 0..g.usize_in(0, 30) {
+                let m = g.usize_in(0, 6);
+                let rows: Vec<usize> = (0..m).map(|i| i * 2).collect();
+                if c.set_pending(rows, 16).is_ok() {
+                    let _ = c.take_pending(8);
+                }
+                assert!(c.effective_len() <= bucket);
+            }
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Grammar: `specpv <command> [subcommand] [--flag value]... [--bool-flag]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    /// positional arguments in order
+    pub positional: Vec<String>,
+    /// `--key value` options
+    pub options: BTreeMap<String, String>,
+    /// bare `--key` switches
+    pub flags: Vec<String>,
+}
+
+impl Cli {
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value or --key value or bare flag
+                if let Some((k, v)) = key.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    cli.options.insert(key.to_string(), v);
+                } else {
+                    cli.flags.push(key.to_string());
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("short options not supported: '{a}'");
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn sub(&self) -> Option<&str> {
+        self.positional.get(1).map(|s| s.as_str())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let c = parse("bench table1 --ctx 4096 --engine spec_pv --verbose");
+        assert_eq!(c.command(), Some("bench"));
+        assert_eq!(c.sub(), Some("table1"));
+        assert_eq!(c.opt("ctx"), Some("4096"));
+        assert_eq!(c.opt("engine"), Some("spec_pv"));
+        assert!(c.has_flag("verbose"));
+    }
+
+    #[test]
+    fn eq_form() {
+        let c = parse("run --budget=512");
+        assert_eq!(c.opt("budget"), Some("512"));
+    }
+
+    #[test]
+    fn typed() {
+        let c = parse("x --n 42");
+        assert_eq!(c.opt_parse::<usize>("n").unwrap(), Some(42));
+        assert!(parse("x --n abc").opt_parse::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn rejects_short() {
+        assert!(Cli::parse(vec!["-x".to_string()]).is_err());
+    }
+}

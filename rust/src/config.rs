@@ -1,0 +1,289 @@
+//! Configuration for the serving stack: model size, SpecPV cache geometry,
+//! engine selection, offload simulation. Loadable from a simple `key=value`
+//! file with CLI overrides (no TOML crate offline; the format is a strict
+//! subset of TOML).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Retrieval score reduction over the verification step's queries
+/// (paper Eq. 3 / Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reduction {
+    Mean,
+    Max,
+    Last,
+}
+
+impl Reduction {
+    /// Row index within the stacked `[mean, max, last]` score output of
+    /// the `score_*` executables.
+    pub fn row(self) -> usize {
+        match self {
+            Reduction::Mean => 0,
+            Reduction::Max => 1,
+            Reduction::Last => 2,
+        }
+    }
+}
+
+impl std::str::FromStr for Reduction {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "mean" => Ok(Reduction::Mean),
+            "max" => Ok(Reduction::Max),
+            "last" => Ok(Reduction::Last),
+            _ => bail!("unknown reduction '{s}' (mean|max|last)"),
+        }
+    }
+}
+
+impl fmt::Display for Reduction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Reduction::Mean => "mean",
+            Reduction::Max => "max",
+            Reduction::Last => "last",
+        })
+    }
+}
+
+/// Decoding engine selection (paper §4.1 baselines + SpecPV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// standard autoregressive decoding (the speedup denominator)
+    Autoregressive,
+    /// EAGLE3-YARN: tree speculation, full verification every step
+    SpecFull,
+    /// SpecPV: partial verification + periodic refresh (the paper)
+    SpecPv,
+    /// TriForce-like: independent tiny draft LM, full verification
+    TriForce,
+    /// TokenSwift-like: Medusa heads, full verification
+    TokenSwift,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "ar" | "autoregressive" => Ok(EngineKind::Autoregressive),
+            "spec_full" | "eagle3" => Ok(EngineKind::SpecFull),
+            "spec_pv" | "specpv" => Ok(EngineKind::SpecPv),
+            "triforce" => Ok(EngineKind::TriForce),
+            "tokenswift" => Ok(EngineKind::TokenSwift),
+            _ => bail!("unknown engine '{s}'"),
+        }
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            EngineKind::Autoregressive => "ar",
+            EngineKind::SpecFull => "spec_full",
+            EngineKind::SpecPv => "spec_pv",
+            EngineKind::TriForce => "triforce",
+            EngineKind::TokenSwift => "tokenswift",
+        })
+    }
+}
+
+/// SpecPV partial-cache geometry (paper §3.2). All unit = tokens unless
+/// noted. `retrieval_budget` is the headline "SpecPV-xK" knob.
+#[derive(Debug, Clone)]
+pub struct SpecPvConfig {
+    /// retrieval-segment budget in tokens (256 | 512 | 1024 here ≙ the
+    /// paper's 2K | 4K | 8K at its 10× context scale)
+    pub retrieval_budget: usize,
+    /// attention-sink blocks always kept (tokens = blocks × block_size)
+    pub sink_blocks: usize,
+    /// local-window blocks always kept
+    pub local_blocks: usize,
+    /// buffer capacity: partially-verified tokens held before a Refresh
+    /// is forced (paper default: one verification step's tokens + 20)
+    pub buffer_cap: usize,
+    /// score reduction f (paper Eq. 3)
+    pub reduction: Reduction,
+}
+
+impl Default for SpecPvConfig {
+    fn default() -> Self {
+        SpecPvConfig {
+            retrieval_budget: 512,
+            sink_blocks: 1,
+            local_blocks: 2,
+            buffer_cap: 16 + 20,
+            reduction: Reduction::Mean,
+        }
+    }
+}
+
+impl SpecPvConfig {
+    /// Partial bucket required: core tokens (sink+retrieval+local) plus
+    /// buffer headroom, rounded up to the compiled partial buckets.
+    pub fn core_tokens(&self, block: usize) -> usize {
+        (self.sink_blocks + self.local_blocks) * block + self.retrieval_budget
+    }
+}
+
+/// Offload simulation (paper Fig. 4: RTX 4090 + PCIe KV offload).
+#[derive(Debug, Clone)]
+pub struct OffloadConfig {
+    pub enabled: bool,
+    /// effective host↔device bandwidth, GB/s (PCIe 4.0 x16 effective)
+    pub pcie_gbps: f64,
+    /// fraction of transfer hidden by per-layer prefetch overlap
+    pub overlap: f64,
+}
+
+impl Default for OffloadConfig {
+    fn default() -> Self {
+        OffloadConfig { enabled: false, pcie_gbps: 12.0, overlap: 0.3 }
+    }
+}
+
+/// Top-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub artifacts_dir: PathBuf,
+    pub model_size: String,
+    pub engine: EngineKind,
+    pub specpv: SpecPvConfig,
+    pub offload: OffloadConfig,
+    pub temperature: f32,
+    pub max_new_tokens: usize,
+    /// draft tree: children of the root level
+    pub tree_top_k: usize,
+    /// draft tree: expansion depth (levels after the root)
+    pub tree_depth: usize,
+    /// total tree nodes (≤ compiled TREE_T)
+    pub tree_size: usize,
+    /// TriForce chain draft length γ
+    pub chain_gamma: usize,
+    pub server_addr: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model_size: "s".into(),
+            engine: EngineKind::SpecPv,
+            specpv: SpecPvConfig::default(),
+            offload: OffloadConfig::default(),
+            temperature: 0.0,
+            max_new_tokens: 256,
+            tree_top_k: 4,
+            tree_depth: 3,
+            tree_size: 16,
+            chain_gamma: 4,
+            server_addr: "127.0.0.1:7799".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Parse a `key = value` config file (strict TOML subset: no sections,
+    /// `#` comments, unquoted or double-quoted scalars).
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config {path:?}: {e}"))?;
+        let mut kv = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key=value", lineno + 1))?;
+            kv.insert(
+                k.trim().to_string(),
+                v.trim().trim_matches('"').to_string(),
+            );
+        }
+        let mut cfg = Config::default();
+        cfg.apply_overrides(&kv)?;
+        Ok(cfg)
+    }
+
+    /// Apply `key=value` overrides (also used for CLI `--set key=value`).
+    pub fn apply_overrides(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in kv {
+            match k.as_str() {
+                "artifacts_dir" => self.artifacts_dir = PathBuf::from(v),
+                "model_size" => self.model_size = v.clone(),
+                "engine" => self.engine = v.parse()?,
+                "retrieval_budget" => {
+                    self.specpv.retrieval_budget = v.parse()?
+                }
+                "sink_blocks" => self.specpv.sink_blocks = v.parse()?,
+                "local_blocks" => self.specpv.local_blocks = v.parse()?,
+                "buffer_cap" => self.specpv.buffer_cap = v.parse()?,
+                "reduction" => self.specpv.reduction = v.parse()?,
+                "offload" => self.offload.enabled = v.parse()?,
+                "pcie_gbps" => self.offload.pcie_gbps = v.parse()?,
+                "overlap" => self.offload.overlap = v.parse()?,
+                "temperature" => self.temperature = v.parse()?,
+                "max_new_tokens" => self.max_new_tokens = v.parse()?,
+                "tree_top_k" => self.tree_top_k = v.parse()?,
+                "tree_depth" => self.tree_depth = v.parse()?,
+                "tree_size" => self.tree_size = v.parse()?,
+                "chain_gamma" => self.chain_gamma = v.parse()?,
+                "server_addr" => self.server_addr = v.clone(),
+                _ => bail!("unknown config key '{k}'"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert_eq!(c.specpv.retrieval_budget, 512);
+        assert_eq!(c.specpv.core_tokens(32), 512 + 3 * 32);
+        assert!(c.tree_size <= 16);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("engine".to_string(), "triforce".to_string());
+        kv.insert("retrieval_budget".to_string(), "256".to_string());
+        kv.insert("reduction".to_string(), "last".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.engine, EngineKind::TriForce);
+        assert_eq!(c.specpv.retrieval_budget, 256);
+        assert_eq!(c.specpv.reduction, Reduction::Last);
+    }
+
+    #[test]
+    fn bad_key_rejected() {
+        let mut c = Config::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("nope".to_string(), "1".to_string());
+        assert!(c.apply_overrides(&kv).is_err());
+    }
+
+    #[test]
+    fn reduction_parse_display() {
+        for r in ["mean", "max", "last"] {
+            let red: Reduction = r.parse().unwrap();
+            assert_eq!(red.to_string(), r);
+        }
+        assert!("avg".parse::<Reduction>().is_err());
+    }
+}

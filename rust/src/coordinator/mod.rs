@@ -1,0 +1,243 @@
+//! Serving coordinator: session/request management over one runtime.
+//!
+//! The PJRT CPU client is single-device and the engines are synchronous,
+//! so the coordinator runs a FIFO + round-robin *decode scheduler*: many
+//! requests can be admitted concurrently (from the TCP server or the
+//! batch API) and are interleaved at generation granularity, with
+//! per-request telemetry and an aggregate metrics registry. This is the
+//! vLLM-router-shaped outer loop the L3 layer owns; the inner
+//! draft/verify loop lives in `engine`.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::config::{Config, EngineKind};
+use crate::engine::{self, GenRequest, GenResult};
+use crate::metrics::GenStats;
+use crate::runtime::Runtime;
+use crate::util::stats::Samples;
+use crate::util::Stopwatch;
+
+/// Request ids are coordinator-scoped.
+pub type RequestId = u64;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Running,
+    Done,
+    Failed(String),
+}
+
+#[derive(Debug)]
+pub struct TrackedRequest {
+    pub id: RequestId,
+    pub req: GenRequest,
+    pub engine: EngineKind,
+    pub state: RequestState,
+    pub result: Option<GenResult>,
+    pub queued_secs: f64,
+    pub service_secs: f64,
+}
+
+/// Aggregate serving metrics (reported by `metrics` server command and
+/// the e2e example).
+#[derive(Debug, Default)]
+pub struct Registry {
+    pub completed: u64,
+    pub failed: u64,
+    pub tokens_out: u64,
+    pub latency: Samples,
+    pub queue_wait: Samples,
+    pub throughput_tok_s: Samples,
+    pub accept_len: Samples,
+}
+
+impl Registry {
+    pub fn record(&mut self, tr: &TrackedRequest) {
+        match &tr.state {
+            RequestState::Done => {
+                self.completed += 1;
+                if let Some(r) = &tr.result {
+                    self.tokens_out += r.tokens.len() as u64;
+                    self.latency.push(tr.service_secs);
+                    self.queue_wait.push(tr.queued_secs);
+                    self.throughput_tok_s.push(r.stats.throughput());
+                    if r.stats.verify_steps > 0 {
+                        self.accept_len.push(r.stats.accept_len());
+                    }
+                }
+            }
+            RequestState::Failed(_) => self.failed += 1,
+            _ => {}
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} failed={} tokens={} p50_latency={:.2}s p99={:.2}s \
+             mean_tok_s={:.1} mean_tau={:.2}",
+            self.completed,
+            self.failed,
+            self.tokens_out,
+            self.latency.p50(),
+            self.latency.p99(),
+            self.throughput_tok_s.mean(),
+            self.accept_len.mean(),
+        )
+    }
+}
+
+/// Admission control limits.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    pub max_prompt: usize,
+    pub max_new: usize,
+    pub max_queue: usize,
+}
+
+impl Default for Admission {
+    fn default() -> Self {
+        Admission { max_prompt: 7 * 1024, max_new: 1024, max_queue: 256 }
+    }
+}
+
+pub struct Coordinator<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: Config,
+    pub admission: Admission,
+    queue: VecDeque<RequestId>,
+    requests: Vec<TrackedRequest>,
+    pub registry: Registry,
+}
+
+impl<'rt> Coordinator<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: Config) -> Coordinator<'rt> {
+        Coordinator {
+            rt,
+            cfg,
+            admission: Admission::default(),
+            queue: VecDeque::new(),
+            requests: Vec::new(),
+            registry: Registry::default(),
+        }
+    }
+
+    /// Admit a request (engine defaults to the config's engine).
+    pub fn submit(
+        &mut self,
+        req: GenRequest,
+        engine: Option<EngineKind>,
+    ) -> Result<RequestId> {
+        if req.prompt.len() > self.admission.max_prompt {
+            anyhow::bail!(
+                "prompt {} exceeds admission limit {}",
+                req.prompt.len(),
+                self.admission.max_prompt
+            );
+        }
+        if req.max_new > self.admission.max_new {
+            anyhow::bail!("max_new {} exceeds limit", req.max_new);
+        }
+        if self.queue.len() >= self.admission.max_queue {
+            anyhow::bail!("queue full ({})", self.queue.len());
+        }
+        let id = self.requests.len() as RequestId;
+        self.requests.push(TrackedRequest {
+            id,
+            req,
+            engine: engine.unwrap_or(self.cfg.engine),
+            state: RequestState::Queued,
+            result: None,
+            queued_secs: 0.0,
+            service_secs: 0.0,
+        });
+        self.queue.push_back(id);
+        Ok(id)
+    }
+
+    /// Run the next queued request to completion; returns its id.
+    pub fn step(&mut self) -> Option<RequestId> {
+        let id = self.queue.pop_front()?;
+        let sw = Stopwatch::new();
+        let (engine_kind, req) = {
+            let tr = &mut self.requests[id as usize];
+            tr.state = RequestState::Running;
+            (tr.engine, tr.req.clone())
+        };
+        let mut cfg = self.cfg.clone();
+        cfg.engine = engine_kind;
+        let result = engine::generate_with(&cfg, self.rt, &req);
+        let tr = &mut self.requests[id as usize];
+        tr.service_secs = sw.total();
+        match result {
+            Ok(r) => {
+                tr.result = Some(r);
+                tr.state = RequestState::Done;
+            }
+            Err(e) => tr.state = RequestState::Failed(format!("{e:#}")),
+        }
+        let tr = &self.requests[id as usize];
+        self.registry.record(tr);
+        Some(id)
+    }
+
+    /// Drain the whole queue.
+    pub fn run_all(&mut self) {
+        while self.step().is_some() {}
+    }
+
+    pub fn get(&self, id: RequestId) -> Option<&TrackedRequest> {
+        self.requests.get(id as usize)
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// Aggregate stats across a batch of GenStats (used by the harness).
+pub fn aggregate(stats: &[GenStats]) -> GenStats {
+    let mut agg = GenStats::default();
+    for s in stats {
+        agg.new_tokens += s.new_tokens;
+        agg.decode_secs += s.decode_secs;
+        agg.prefill_secs += s.prefill_secs;
+        agg.verify_steps += s.verify_steps;
+        agg.accepted_total += s.accepted_total;
+        agg.draft_secs += s.draft_secs;
+        agg.verify_secs += s.verify_secs;
+        agg.other_secs += s.other_secs;
+        agg.full_steps += s.full_steps;
+        agg.partial_steps += s.partial_steps;
+        agg.refresh_steps += s.refresh_steps;
+        agg.offload_secs += s.offload_secs;
+    }
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_limits() {
+        // Coordinator::submit validation is runtime-independent; build a
+        // dangling coordinator via a null-ish runtime is not possible, so
+        // validate the Admission type directly here and the full flow in
+        // rust/tests/.
+        let a = Admission::default();
+        assert!(a.max_prompt > 1024);
+    }
+
+    #[test]
+    fn aggregate_sums() {
+        let a = GenStats { new_tokens: 10, decode_secs: 1.0, ..Default::default() };
+        let b = GenStats { new_tokens: 5, decode_secs: 0.5, ..Default::default() };
+        let s = aggregate(&[a, b]);
+        assert_eq!(s.new_tokens, 15);
+        assert!((s.decode_secs - 1.5).abs() < 1e-12);
+        assert!((s.throughput() - 10.0).abs() < 1e-9);
+    }
+}

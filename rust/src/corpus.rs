@@ -1,0 +1,329 @@
+//! Synthetic corpora — the exact rust mirror of `python/compile/data.py`.
+//!
+//! PG-19 / GovReport / QMSum / needle-QA substitutes (see DESIGN.md §3).
+//! Generators are deterministic given a seed and produce byte-identical
+//! text to the python implementations (same xorshift64* stream, same word
+//! lists, same assembly order); `python/tests/test_parity.py` and the
+//! golden tests below pin this.
+
+use crate::util::rng::Rng;
+
+pub const NAMES: [&str; 16] = [
+    "Armand", "Beatrice", "Clement", "Dorothea", "Edmund", "Felicity",
+    "Gideon", "Harriet", "Isadora", "Jasper", "Katherine", "Leopold",
+    "Margaret", "Nathaniel", "Octavia", "Percival",
+];
+
+pub const PLACES: [&str; 12] = [
+    "the harbour", "the old mill", "the vicarage", "the moor", "the library",
+    "the garden", "the station", "the courthouse", "the lighthouse",
+    "the market square", "the abbey", "the orchard",
+];
+
+pub const NOUNS: [&str; 25] = [
+    "letter", "storm", "candle", "ledger", "portrait", "carriage", "sermon",
+    "fortune", "rumour", "voyage", "inheritance", "debt", "promise",
+    "manuscript", "telegram", "garden", "winter", "journey", "secret",
+    "bargain", "fever", "wedding", "funeral", "harvest", "quarrel",
+];
+
+pub const VERBS: [&str; 20] = [
+    "remembered", "concealed", "discovered", "promised", "refused",
+    "demanded", "whispered", "confessed", "regretted", "imagined",
+    "suspected", "announced", "abandoned", "forgave", "inherited",
+    "questioned", "observed", "resolved", "feared", "admired",
+];
+
+pub const ADJS: [&str; 16] = [
+    "pale", "weathered", "solemn", "curious", "forgotten", "distant",
+    "quiet", "restless", "grave", "peculiar", "faded", "earnest",
+    "bitter", "gentle", "obstinate", "melancholy",
+];
+
+pub const CONNECTIVES: [&str; 10] = [
+    "and yet", "however", "meanwhile", "at length", "in truth",
+    "nevertheless", "presently", "by morning", "after some reflection",
+    "against all advice",
+];
+
+pub const TOPICS: [&str; 12] = [
+    "the drainage works", "the school inspection", "the parish budget",
+    "the railway extension", "the water supply", "the grain tariff",
+    "the hospital wing", "the coastal survey", "the census returns",
+    "the bridge repairs", "the timber contract", "the postal service",
+];
+
+pub const SPEAKERS: [&str; 8] = [
+    "the chairman", "the secretary", "the inspector", "the treasurer",
+    "the delegate", "the engineer", "the clerk", "the surveyor",
+];
+
+fn capitalize(s: &str) -> String {
+    let mut cs = s.chars();
+    match cs.next() {
+        Some(c) => c.to_uppercase().collect::<String>() + cs.as_str(),
+        None => String::new(),
+    }
+}
+
+/// One pseudo-Victorian sentence — mirrors `data._sentence`.
+pub fn sentence(rng: &mut Rng) -> String {
+    let t = rng.below(5);
+    let n1 = NAMES[rng.below(NAMES.len())];
+    let n2 = NAMES[rng.below(NAMES.len())];
+    let v = VERBS[rng.below(VERBS.len())];
+    let noun = NOUNS[rng.below(NOUNS.len())];
+    let adj = ADJS[rng.below(ADJS.len())];
+    let place = PLACES[rng.below(PLACES.len())];
+    match t {
+        0 => format!("{n1} {v} the {adj} {noun} near {place}."),
+        1 => {
+            let p = place.strip_prefix("the ").unwrap_or(place);
+            format!("At {p}, {n1} {v} that {n2} had kept the {noun}.")
+        }
+        2 => {
+            let c = CONNECTIVES[rng.below(CONNECTIVES.len())];
+            format!("{}, the {noun} remained {adj}, and {n1} {v} it.",
+                    capitalize(c))
+        }
+        3 => format!(
+            "\"I have {v} the {noun},\" said {n1}, looking toward {place}."
+        ),
+        _ => format!(
+            "The {adj} {noun} of {n1} was known in every corner of {place}."
+        ),
+    }
+}
+
+/// PG-19 substitute: chapters of generated prose, ~`n_bytes` long.
+pub fn novel_text(seed: u64, n_bytes: usize) -> String {
+    let mut rng = Rng::new(seed);
+    let mut out: Vec<String> = Vec::new();
+    let mut total = 0usize;
+    let mut chapter = 1;
+    while total < n_bytes {
+        let head = format!("CHAPTER {chapter}.\n\n");
+        total += head.len();
+        out.push(head);
+        let sentences = 30 + rng.below(30);
+        let mut para: Vec<String> = Vec::new();
+        for i in 0..sentences {
+            para.push(sentence(&mut rng));
+            if (i + 1) % (4 + rng.below(4)) == 0 {
+                para.push("\n\n".to_string());
+            } else {
+                para.push(" ".to_string());
+            }
+            if total > n_bytes {
+                break;
+            }
+            total += para[para.len() - 2].len() + para[para.len() - 1].len();
+        }
+        out.extend(para);
+        out.push("\n\n".to_string());
+        chapter += 1;
+    }
+    let joined: String = out.concat();
+    joined.chars().take(n_bytes).collect()
+}
+
+/// GovReport substitute: sectioned bureaucratic report.
+pub fn report_text(seed: u64, n_bytes: usize) -> String {
+    let mut rng = Rng::new(seed);
+    let mut out: Vec<String> = Vec::new();
+    let mut total = 0usize;
+    let mut sec = 1;
+    while total < n_bytes {
+        let topic = TOPICS[rng.below(TOPICS.len())];
+        let head = format!("SECTION {sec}. REPORT ON {}.\n",
+                           topic.to_uppercase());
+        total += head.len();
+        out.push(head);
+        let n = 6 + rng.below(8);
+        for _ in 0..n {
+            let amount = 100 + rng.below(9900);
+            let year = 1860 + rng.below(60);
+            let s = format!(
+                "The committee on {topic} recorded an expenditure of \
+                 {amount} pounds in the year {year}, and {} further works. ",
+                VERBS[rng.below(VERBS.len())]
+            );
+            total += s.len();
+            out.push(s);
+            if total > n_bytes {
+                break;
+            }
+        }
+        out.push("\n".to_string());
+        total += 1;
+        sec += 1;
+    }
+    out.concat().chars().take(n_bytes).collect()
+}
+
+/// QMSum substitute: meeting transcript with speakers.
+pub fn meeting_text(seed: u64, n_bytes: usize) -> String {
+    let mut rng = Rng::new(seed);
+    let mut out: Vec<String> = Vec::new();
+    let mut total = 0usize;
+    while total < n_bytes {
+        let sp = SPEAKERS[rng.below(SPEAKERS.len())];
+        let topic = TOPICS[rng.below(TOPICS.len())];
+        let t = rng.below(3);
+        let s = match t {
+            0 => format!(
+                "{}: We must return to the question of {topic}. ",
+                sp.to_uppercase()
+            ),
+            1 => format!(
+                "{}: The figures for {topic} were {} at best. ",
+                sp.to_uppercase(),
+                ADJS[rng.below(ADJS.len())]
+            ),
+            _ => format!(
+                "{}: I move that {topic} be deferred until the next session. ",
+                sp.to_uppercase()
+            ),
+        };
+        total += s.len() + 1;
+        out.push(s);
+        out.push("\n".to_string());
+    }
+    out.concat().chars().take(n_bytes).collect()
+}
+
+/// 6-letter pronounceable code word (CVCVCV) — mirrors `data._code_word`.
+pub fn code_word(rng: &mut Rng) -> String {
+    const CONS: &[u8] = b"bdfgklmnprstvz";
+    const VOW: &[u8] = b"aeiou";
+    (0..6)
+        .map(|i| {
+            let src = if i % 2 == 0 { CONS } else { VOW };
+            src[rng.below(src.len())] as char
+        })
+        .collect()
+}
+
+/// A needle-QA instance (HotpotQA / LongBench substitute).
+#[derive(Debug, Clone)]
+pub struct NeedleQa {
+    pub context: String,
+    pub question: String,
+    pub answer: String,
+}
+
+/// Key→value facts buried in filler prose; the question asks for one of
+/// them. Mirrors `data.needle_qa`.
+pub fn needle_qa(seed: u64, n_bytes: usize, n_facts: usize) -> NeedleQa {
+    let mut rng = Rng::new(seed);
+    let mut facts: Vec<(String, String)> = Vec::new();
+    for _ in 0..n_facts {
+        let key = format!(
+            "{}-{}",
+            NAMES[rng.below(NAMES.len())],
+            rng.below(90) + 10
+        );
+        let val = code_word(&mut rng);
+        facts.push((key, val));
+    }
+    let seg = std::cmp::max(1, n_bytes / (n_facts + 1));
+    let mut out: Vec<String> = Vec::new();
+    let mut frng = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+    for (k, v) in facts.iter() {
+        let mut total = 0usize;
+        while total < seg {
+            let s = sentence(&mut frng) + " ";
+            total += s.len();
+            out.push(s);
+        }
+        out.push(format!("\nThe code of agent {k} is {v}.\n"));
+    }
+    let qi = rng.below(n_facts);
+    let (qk, qv) = facts[qi].clone();
+    let context: String = out
+        .concat()
+        .chars()
+        .take(n_bytes + 40 * n_facts)
+        .collect();
+    let question = format!(
+        "\nQuestion: what is the code of agent {qk}?\nAnswer: the code of \
+         agent {qk} is"
+    );
+    NeedleQa { context, question, answer: qv }
+}
+
+/// Prompt builders for the evaluation tasks.
+pub fn continuation_prompt(seed: u64, ctx_bytes: usize) -> String {
+    novel_text(seed, ctx_bytes)
+}
+
+pub fn summarize_prompt(doc: &str) -> String {
+    format!("{doc}\n\nSummary:\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(novel_text(1, 2000), novel_text(1, 2000));
+        assert_ne!(novel_text(1, 2000), novel_text(2, 2000));
+    }
+
+    #[test]
+    fn exact_length() {
+        for n in [100, 1000, 5000] {
+            assert_eq!(novel_text(3, n).len(), n);
+            assert_eq!(report_text(3, n).len(), n);
+            assert_eq!(meeting_text(3, n).len(), n);
+        }
+    }
+
+    #[test]
+    fn novel_structure() {
+        let t = novel_text(7, 4000);
+        assert!(t.starts_with("CHAPTER 1.\n\n"));
+        assert!(t.contains('.'));
+    }
+
+    #[test]
+    fn needle_has_answer_in_context() {
+        let qa = needle_qa(11, 4000, 8);
+        assert!(qa.context.contains(&qa.answer));
+        assert!(qa.question.contains("what is the code of agent"));
+        // the queried key appears in both context and question
+        let key = qa
+            .question
+            .split("agent ")
+            .nth(1)
+            .unwrap()
+            .split('?')
+            .next()
+            .unwrap();
+        assert!(qa.context.contains(&format!("agent {key} is")));
+    }
+
+    #[test]
+    fn code_word_shape() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let w = code_word(&mut rng);
+            assert_eq!(w.len(), 6);
+            assert!(w.chars().all(|c| c.is_ascii_lowercase()));
+        }
+    }
+
+    #[test]
+    fn ascii_only() {
+        // python parity depends on len()==bytes; all corpora must be ASCII
+        for t in [
+            novel_text(1, 3000),
+            report_text(2, 3000),
+            meeting_text(3, 3000),
+            needle_qa(4, 3000, 6).context,
+        ] {
+            assert!(t.is_ascii());
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Standard autoregressive decoding — the speedup denominator of every
+//! table in the paper (Eq. 4).
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::GenStats;
+use crate::model::bucket_need;
+use crate::offload::OffloadSim;
+use crate::runtime::Runtime;
+use crate::sampling::pick_token;
+use crate::tokenizer::is_eos;
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+use super::session::TargetSession;
+use super::{Engine, GenRequest, GenResult};
+
+pub struct ArEngine {
+    cfg: Config,
+}
+
+impl ArEngine {
+    pub fn new(cfg: Config) -> ArEngine {
+        ArEngine { cfg }
+    }
+}
+
+impl Engine for ArEngine {
+    fn kind(&self) -> crate::config::EngineKind {
+        crate::config::EngineKind::Autoregressive
+    }
+
+    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult> {
+        let mut stats = GenStats::default();
+        let mut rng = Rng::new(req.seed | 1);
+        let need = bucket_need(req.prompt.len(), req.max_new, &rt.manifest.consts);
+        let mut target = TargetSession::new(
+            rt,
+            &self.cfg.model_size,
+            need,
+            OffloadSim::new(self.cfg.offload.clone()),
+        )?;
+
+        let mut sw = Stopwatch::new();
+        let (logits, _) = target.prefill(&req.prompt, None)?;
+        stats.prefill_secs = sw.lap();
+
+        let mut out: Vec<u32> = Vec::new();
+        let mut next = pick_token(&logits, req.temperature, &mut rng);
+        out.push(next);
+        while out.len() < req.max_new && !is_eos(next) {
+            let pos = req.prompt.len() + out.len() - 1;
+            let logits = target.decode_one(next, pos)?;
+            next = pick_token(&logits, req.temperature, &mut rng);
+            out.push(next);
+            stats.verify_steps += 1;
+        }
+        stats.decode_secs = sw.lap();
+        stats.verify_secs = stats.decode_secs;
+        stats.new_tokens = out.len();
+        stats.offload_secs = target.offload.secs;
+        Ok(GenResult { tokens: out, stats })
+    }
+}

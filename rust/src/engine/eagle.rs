@@ -1,0 +1,151 @@
+//! EAGLE-3-style tree drafting controller (paper §3.1/Fig. 3).
+//!
+//! Per decode round, matching the training-time-test conventions of
+//! `train.py::draft_ttt_loss` exactly:
+//! 1. **catch-up chain** (pass-0 convention) — the previous step's
+//!    accepted path tokens run through the draft layer paired with their
+//!    *target* features, committing clean draft-KV rows;
+//! 2. **bonus step** (pass-1 convention) — the bonus token runs with the
+//!    *recycled draft hidden* of its predecessor (the deepest accepted
+//!    token, or the prompt tail after prefill); its logits seed the
+//!    tree's first children;
+//! 3. **level expansions** (pass-k) — `depth-1` rounds of node expansion
+//!    over the scratch region, recycling each node's own hidden;
+//! 4. **prune** — keep the best `tree_size` nodes by cumulative draft
+//!    log-probability (EAGLE-2-style top-N selection).
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::sampling::{log_softmax, top_k};
+use crate::tree::Tree;
+
+use super::session::DraftSession;
+
+/// Tile a hidden state (h) to the 3h fused-feature width (model.recycle).
+pub fn recycle(hidden: &[f32]) -> Vec<f32> {
+    let mut v = Vec::with_capacity(hidden.len() * 3);
+    for _ in 0..3 {
+        v.extend_from_slice(hidden);
+    }
+    v
+}
+
+/// Inputs for one drafting round.
+pub struct DraftInputs {
+    /// accepted path to catch up on: (token, fused target feature 3h)
+    pub chain: Vec<(u32, Vec<f32>)>,
+    /// the bonus token (tree root)
+    pub bonus: u32,
+    /// absolute position of the first chain token
+    pub chain_start_pos: usize,
+    /// recycled-hidden feature for the bonus when the chain is empty
+    /// (i.e. the draft hidden of the last committed draft row); when the
+    /// chain is non-empty the hidden comes from the chain call itself
+    pub prev_hidden: Vec<f32>,
+}
+
+/// Output: the pruned tree plus the draft hidden of the bonus token
+/// (becomes `prev_hidden` when the next round's path is empty).
+pub struct DraftRound {
+    pub tree: Tree,
+    pub bonus_hidden: Vec<f32>,
+}
+
+/// Run one full drafting round.
+pub fn draft_tree(
+    draft: &mut DraftSession,
+    cfg: &Config,
+    inp: &DraftInputs,
+) -> Result<DraftRound> {
+    let w = draft.consts.draft_w;
+    let h = draft.info.d_model;
+    let f3 = 3 * h;
+
+    // --- 1. catch-up chain (pass-0: target features) ----------------------
+    let n_chain = inp.chain.len();
+    let mut prev_hidden = inp.prev_hidden.clone();
+    if n_chain > 0 {
+        assert!(n_chain <= w, "chain {n_chain} exceeds draft width {w}");
+        let tokens: Vec<u32> = inp.chain.iter().map(|(t, _)| *t).collect();
+        let mut feats = vec![0f32; w * f3];
+        for (i, (_, f)) in inp.chain.iter().enumerate() {
+            feats[i * f3..(i + 1) * f3].copy_from_slice(f);
+        }
+        let out = draft.chain(&tokens, &feats, inp.chain_start_pos)?;
+        prev_hidden = out.hidden(n_chain - 1).to_vec();
+    }
+
+    // --- 2. bonus step (pass-1: recycled predecessor hidden) --------------
+    let root_pos = inp.chain_start_pos + n_chain;
+    let mut feats = vec![0f32; w * f3];
+    feats[..f3].copy_from_slice(&recycle(&prev_hidden));
+    let out = draft.chain(&[inp.bonus], &feats, root_pos)?;
+    let root_logits = log_softmax(out.logits(0));
+    let root_hidden = out.hidden(0).to_vec();
+
+    let mut tree = Tree::new(inp.bonus);
+
+    // node bookkeeping: tree idx → (scratch ancestors, recycled feature)
+    struct Meta {
+        anc: Vec<usize>,
+        feat: Vec<f32>,
+    }
+    let mut meta: Vec<(usize, Meta)> = Vec::new();
+
+    // --- 3a. level 1: root's children --------------------------------------
+    let mut frontier: Vec<usize> = Vec::new();
+    for &tk in top_k(&root_logits, cfg.tree_top_k).iter() {
+        let idx = tree.add(0, tk as u32, root_logits[tk]);
+        meta.push((idx, Meta { anc: Vec::new(), feat: recycle(&root_hidden) }));
+        frontier.push(idx);
+    }
+
+    // --- 3b. deeper levels --------------------------------------------------
+    for _level in 1..cfg.tree_depth {
+        if frontier.is_empty() {
+            break;
+        }
+        frontier.sort_by(|&a, &b| {
+            tree.nodes[b]
+                .score
+                .partial_cmp(&tree.nodes[a].score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        frontier.truncate(w.min(cfg.tree_top_k));
+        let toks: Vec<u32> = frontier.iter().map(|&i| tree.nodes[i].token).collect();
+        let mut fts = vec![0f32; w * f3];
+        let mut ancs: Vec<Vec<usize>> = Vec::new();
+        let mut pos: Vec<i32> = Vec::new();
+        for (s, &ti) in frontier.iter().enumerate() {
+            let m = &meta.iter().find(|(i, _)| *i == ti).unwrap().1;
+            fts[s * f3..(s + 1) * f3].copy_from_slice(&m.feat);
+            ancs.push(m.anc.clone());
+            pos.push((root_pos + tree.nodes[ti].depth) as i32);
+        }
+        for _ in frontier.len()..w {
+            pos.push(*pos.last().unwrap_or(&(root_pos as i32)));
+        }
+        let (out, offsets) = draft.level(&toks, &fts, &pos, &ancs)?;
+
+        let parents = frontier.clone();
+        frontier.clear();
+        for (s, &pi) in parents.iter().enumerate() {
+            let lp = log_softmax(out.logits(s));
+            let hid = out.hidden(s);
+            let panc = {
+                let m = &meta.iter().find(|(i, _)| *i == pi).unwrap().1;
+                let mut a = m.anc.clone();
+                a.push(offsets[s]);
+                a
+            };
+            for &tk in top_k(&lp, 2).iter() {
+                let idx = tree.add(pi, tk as u32, lp[tk]);
+                meta.push((idx, Meta { anc: panc.clone(), feat: recycle(hid) }));
+                frontier.push(idx);
+            }
+        }
+    }
+
+    Ok(DraftRound { tree: tree.prune_top(cfg.tree_size), bonus_hidden: root_hidden })
+}

@@ -1,0 +1,80 @@
+//! Decoding engines: the SpecPV generator and the paper's baselines,
+//! behind a common `Engine` trait.
+//!
+//! | engine      | draft                     | verification            |
+//! |-------------|---------------------------|-------------------------|
+//! | `ar`        | —                         | full KV, 1 token/step   |
+//! | `spec_full` | EAGLE-3 tree              | full KV (EAGLE3-YARN)   |
+//! | `spec_pv`   | EAGLE-3 tree              | partial KV + Refresh    |
+//! | `triforce`  | independent tiny LM chain | full KV                 |
+//! | `tokenswift`| Medusa heads              | full KV                 |
+
+pub mod ar;
+pub mod eagle;
+pub mod session;
+pub mod spec_full;
+pub mod spec_pv;
+pub mod tokenswift;
+pub mod triforce;
+
+use anyhow::Result;
+
+use crate::config::{Config, EngineKind};
+use crate::metrics::GenStats;
+use crate::runtime::Runtime;
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl GenRequest {
+    pub fn greedy(prompt: Vec<u32>, max_new: usize) -> GenRequest {
+        GenRequest { prompt, max_new, temperature: 0.0, seed: 0 }
+    }
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub tokens: Vec<u32>,
+    pub stats: GenStats,
+}
+
+impl GenResult {
+    pub fn text(&self) -> String {
+        crate::tokenizer::decode(&self.tokens)
+    }
+}
+
+/// A decoding engine bound to a runtime + config.
+pub trait Engine {
+    fn kind(&self) -> EngineKind;
+
+    /// Run one full generation (prefill + decode loop).
+    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult>;
+}
+
+/// Construct the engine selected by the config.
+pub fn build(cfg: &Config) -> Box<dyn Engine> {
+    match cfg.engine {
+        EngineKind::Autoregressive => Box::new(ar::ArEngine::new(cfg.clone())),
+        EngineKind::SpecFull => Box::new(spec_full::SpecFullEngine::new(cfg.clone())),
+        EngineKind::SpecPv => Box::new(spec_pv::SpecPvEngine::new(cfg.clone())),
+        EngineKind::TriForce => Box::new(triforce::TriForceEngine::new(cfg.clone())),
+        EngineKind::TokenSwift => Box::new(tokenswift::TokenSwiftEngine::new(cfg.clone())),
+    }
+}
+
+/// Convenience used by harnesses: build + generate in one call.
+pub fn generate_with(
+    cfg: &Config,
+    rt: &Runtime,
+    req: &GenRequest,
+) -> Result<GenResult> {
+    build(cfg).generate(rt, req)
+}

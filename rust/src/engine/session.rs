@@ -1,0 +1,645 @@
+//! Device-state sessions: thin stateful wrappers that pair a threaded
+//! flat-state buffer with its rust-side cache accounting and the
+//! manifest-driven executable calls.
+//!
+//! * [`TargetSession`] — the target model over a full bucket (prefill,
+//!   verify/refresh, commit, score, gather, reads)
+//! * [`PartialSession`] — the SpecPV partial cache (pverify + reads)
+//! * [`DraftSession`] — the EAGLE-3 draft layer (prefill, chain, levels)
+//! * [`TinySession`] — the independent TriForce draft LM (streaming ring)
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::cache::{DraftCache, FullCache, PartialCache};
+use crate::config::SpecPvConfig;
+use crate::manifest::{Consts, ModelInfo, StateLayout};
+use crate::model::{self, DraftOut, ReadOut};
+use crate::offload::OffloadSim;
+use crate::retrieval::GatherPlan;
+use crate::runtime::{Arg, Runtime};
+use crate::tokenizer::PAD;
+use crate::tree::{chain_mask, FlatTree};
+
+pub struct TargetSession<'a> {
+    rt: &'a Runtime,
+    pub size: String,
+    pub bucket: usize,
+    pub state: PjRtBuffer,
+    pub cache: FullCache,
+    pub info: ModelInfo,
+    pub consts: Consts,
+    pub layout: StateLayout,
+    pub offload: OffloadSim,
+}
+
+impl<'a> TargetSession<'a> {
+    /// Create a session whose bucket can hold `need` tokens.
+    pub fn new(
+        rt: &'a Runtime,
+        size: &str,
+        need: usize,
+        offload: OffloadSim,
+    ) -> Result<TargetSession<'a>> {
+        let bucket = model::pick_full_bucket(&rt.manifest, size, need)?;
+        let consts = rt.manifest.consts.clone();
+        let info = rt.manifest.model(size)?.clone();
+        let spec = rt
+            .manifest
+            .exec(&model::verify_name(size, bucket, consts.tree_t))?;
+        let layout = spec.layout.context("verify exec missing layout")?;
+        let state = rt.zero_state(layout.total)?;
+        Ok(TargetSession {
+            rt,
+            size: size.to_string(),
+            bucket,
+            state,
+            cache: FullCache::new(bucket),
+            info,
+            consts,
+            layout,
+            offload,
+        })
+    }
+
+    fn kv_bpt(&self) -> usize {
+        model::kv_bytes_per_token(&self.info)
+    }
+
+    /// Chunked prefill; pairs each chunk with the draft session (when
+    /// present) so the draft consumes the chunk's features device-side.
+    /// Returns (last-token logits, last-token fused features).
+    pub fn prefill(
+        &mut self,
+        tokens: &[u32],
+        mut draft: Option<&mut DraftSession<'a>>,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        let c = self.consts.chunk;
+        let name = model::verify_name(&self.size, self.bucket, c);
+        let zero_prev = vec![0i32; self.consts.prev_max()];
+        let mut last_real = 0usize;
+        for (ci, chunk) in tokens.chunks(c).enumerate() {
+            let r = chunk.len();
+            last_real = r;
+            let base = ci * c;
+            let mut toks = vec![PAD as i32; c];
+            for (i, &t) in chunk.iter().enumerate() {
+                toks[i] = t as i32;
+            }
+            let pos: Vec<i32> = (0..c).map(|i| (base + i) as i32).collect();
+            let mask = chain_mask(r, c);
+            let out = self.rt.invoke(
+                &name,
+                &[
+                    Arg::I32(&toks),
+                    Arg::I32(&pos),
+                    Arg::F32(&mask),
+                    Arg::Buf(&self.state),
+                    Arg::Scalar(self.cache.committed as i32),
+                    Arg::I32(&zero_prev),
+                    Arg::Scalar(0),
+                ],
+            )?;
+            self.state = out;
+            self.offload.touch_full(self.cache.committed + r, self.kv_bpt());
+            if let Some(d) = draft.as_deref_mut() {
+                d.prefill_chunk(&toks, r, &pos, &self.state)?;
+            }
+            self.cache.push_prefill(r)?;
+        }
+        let (logits, feats) = self.read_last(last_real - 1)?;
+        Ok((logits, feats))
+    }
+
+    /// Verify a draft tree against the full cache (EAGLE3-full path and
+    /// the SpecPV "Full" mode). Applies the pending fused compaction.
+    pub fn verify_tree(&mut self, flat: &FlatTree, root_pos: usize) -> Result<ReadOut> {
+        let t = self.consts.tree_t;
+        let name = model::verify_name(&self.size, self.bucket, t);
+        let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
+        let pos = flat.positions(root_pos);
+        let out = self.rt.invoke(
+            &name,
+            &[
+                Arg::I32(&flat.tokens),
+                Arg::I32(&pos),
+                Arg::F32(&flat.mask),
+                Arg::Buf(&self.state),
+                Arg::Scalar(kv_len as i32),
+                Arg::I32(&idx),
+                Arg::Scalar(n_prev as i32),
+            ],
+        )?;
+        self.state = out;
+        self.offload
+            .touch_full(self.cache.committed + flat.n, self.kv_bpt());
+        self.read_window(0)
+    }
+
+    /// AR decode step (T=1): returns the token's logits row.
+    pub fn decode_one(&mut self, token: u32, pos: usize) -> Result<Vec<f32>> {
+        let name = model::verify_name(&self.size, self.bucket, 1);
+        let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
+        let mask = vec![1f32];
+        let out = self.rt.invoke(
+            &name,
+            &[
+                Arg::I32(&[token as i32]),
+                Arg::I32(&[pos as i32]),
+                Arg::F32(&mask),
+                Arg::Buf(&self.state),
+                Arg::Scalar(kv_len as i32),
+                Arg::I32(&idx),
+                Arg::Scalar(n_prev as i32),
+            ],
+        )?;
+        self.state = out;
+        self.offload.touch_full(self.cache.committed + 1, self.kv_bpt());
+        self.cache.set_pending(vec![0], self.consts.prev_window())?;
+        let (logits, _) = self.read_last(0)?;
+        Ok(logits)
+    }
+
+    /// Refresh verification (SpecPV): a pv chain of `chain` tokens
+    /// followed by the draft tree, against the full cache, using the
+    /// `t_refresh`-wide executable. Returns the read window positioned at
+    /// the tree (rows 0.. = chain.len() offset applied).
+    pub fn verify_refresh(
+        &mut self,
+        chain: &[u32],
+        chain_start_pos: usize,
+        flat: &FlatTree,
+        t_refresh: usize,
+    ) -> Result<ReadOut> {
+        let n_chain = chain.len();
+        let t_tree = flat.tokens.len();
+        if n_chain + t_tree > t_refresh {
+            bail!("refresh overflow: {n_chain}+{t_tree} > {t_refresh}");
+        }
+        let name = model::verify_name(&self.size, self.bucket, t_refresh);
+        let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
+
+        let mut toks = vec![PAD as i32; t_refresh];
+        let mut pos = vec![0i32; t_refresh];
+        for (i, &t) in chain.iter().enumerate() {
+            toks[i] = t as i32;
+            pos[i] = (chain_start_pos + i) as i32;
+        }
+        let root_pos = chain_start_pos + n_chain;
+        let tree_pos = flat.positions(root_pos);
+        for i in 0..t_tree {
+            toks[n_chain + i] = flat.tokens[i];
+            pos[n_chain + i] = tree_pos[i];
+        }
+        let mask = crate::tree::refresh_mask(n_chain, flat, t_refresh);
+        let out = self.rt.invoke(
+            &name,
+            &[
+                Arg::I32(&toks),
+                Arg::I32(&pos),
+                Arg::F32(&mask),
+                Arg::Buf(&self.state),
+                Arg::Scalar(kv_len as i32),
+                Arg::I32(&idx),
+                Arg::Scalar(n_prev as i32),
+            ],
+        )?;
+        self.state = out;
+        self.offload
+            .touch_full(self.cache.committed + n_chain + flat.n, self.kv_bpt());
+        // window positioned so the tree starts at row 0 when possible
+        self.read_window(n_chain)
+    }
+
+    /// Standalone commit after a Refresh: keep `rows` (chain + accepted
+    /// tree path, window-relative, strictly increasing) of the last step.
+    pub fn commit_now(&mut self, rows: &[usize], window: usize) -> Result<()> {
+        let name = model::commit_name(&self.size, self.bucket, window);
+        let mut idx = vec![0i32; window];
+        for (j, &r) in rows.iter().enumerate() {
+            if r >= window {
+                bail!("commit row {r} outside window {window}");
+            }
+            idx[j] = r as i32;
+        }
+        let out = self.rt.invoke(
+            &name,
+            &[
+                Arg::Buf(&self.state),
+                Arg::I32(&idx),
+                Arg::Scalar(rows.len() as i32),
+                Arg::Scalar(self.cache.committed as i32),
+            ],
+        )?;
+        self.state = out;
+        self.offload.touch_full(self.cache.committed, self.kv_bpt());
+        self.cache.commit_now(rows.len())
+    }
+
+    /// Retrieval scores over the committed cache using the queries the
+    /// last (refresh) verification wrote. Flat `[L, 3, NB]`.
+    pub fn score(&mut self, n_queries: usize) -> Result<Vec<f32>> {
+        let name = model::score_name(&self.size, self.bucket);
+        let out = self.rt.invoke_download(
+            &name,
+            &[
+                Arg::Buf(&self.state),
+                Arg::Scalar(self.cache.committed as i32),
+                Arg::Scalar(n_queries as i32),
+            ],
+        )?;
+        self.offload.touch_full(self.cache.committed, self.kv_bpt());
+        Ok(out)
+    }
+
+    /// Assemble a fresh partial state from a gather plan.
+    pub fn gather(&mut self, plan: &GatherPlan, p_bucket: usize) -> Result<PjRtBuffer> {
+        let name = model::gather_name(&self.size, self.bucket, p_bucket);
+        let nsel = plan.block_idx[0].len();
+        let mut idx = Vec::with_capacity(self.info.n_layer * nsel);
+        for l in &plan.block_idx {
+            idx.extend_from_slice(l);
+        }
+        let out = self
+            .rt
+            .invoke(&name, &[Arg::Buf(&self.state), Arg::I32(&idx)])?;
+        self.offload.touch_full(self.cache.committed, self.kv_bpt());
+        Ok(out)
+    }
+
+    /// Logits+feats window of `qrows` rows starting at `start`.
+    pub fn read_window(&self, start: usize) -> Result<ReadOut> {
+        let name = model::read_full_name(&self.size, self.bucket);
+        let data = self.rt.invoke_download(
+            &name,
+            &[Arg::Buf(&self.state), Arg::Scalar(start as i32)],
+        )?;
+        ReadOut::new(
+            data,
+            self.consts.qrows,
+            self.info.vocab,
+            3 * self.info.d_model,
+        )
+    }
+
+    /// Single row logits+feats at `idx` (prefill tail).
+    pub fn read_last(&self, idx: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let name = model::read_last_name(&self.size, self.bucket);
+        let data = self.rt.invoke_download(
+            &name,
+            &[Arg::Buf(&self.state), Arg::Scalar(idx as i32)],
+        )?;
+        let v = self.info.vocab;
+        Ok((data[..v].to_vec(), data[v..].to_vec()))
+    }
+}
+
+/// SpecPV partial-cache session.
+pub struct PartialSession<'a> {
+    rt: &'a Runtime,
+    pub size: String,
+    pub bucket: usize,
+    pub state: Option<PjRtBuffer>,
+    pub cache: PartialCache,
+    pub info: ModelInfo,
+    pub consts: Consts,
+}
+
+impl<'a> PartialSession<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        size: &str,
+        cfg: &SpecPvConfig,
+    ) -> Result<PartialSession<'a>> {
+        let consts = rt.manifest.consts.clone();
+        let need = cfg.core_tokens(consts.block) + consts.tree_t + cfg.buffer_cap;
+        let bucket = model::pick_partial_bucket(&rt.manifest, size, need)?;
+        Ok(PartialSession {
+            rt,
+            size: size.to_string(),
+            bucket,
+            state: None,
+            cache: PartialCache::new(bucket, cfg.buffer_cap),
+            info: rt.manifest.model(size)?.clone(),
+            consts,
+        })
+    }
+
+    /// Install a freshly gathered core.
+    pub fn install(&mut self, state: PjRtBuffer, core_len: usize) {
+        self.state = Some(state);
+        self.cache.refresh(core_len);
+    }
+
+    pub fn ready(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Partial verification of a draft tree (paper §3.2). Same ABI as the
+    /// full verify, small bucket.
+    pub fn verify_tree(&mut self, flat: &FlatTree, root_pos: usize) -> Result<ReadOut> {
+        let state = match self.state.take() {
+            Some(s) => s,
+            None => bail!("partial cache not initialised"),
+        };
+        let t = self.consts.tree_t;
+        let name = model::pverify_name(&self.size, self.bucket, t);
+        let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
+        let pos = flat.positions(root_pos);
+        let out = self.rt.invoke(
+            &name,
+            &[
+                Arg::I32(&flat.tokens),
+                Arg::I32(&pos),
+                Arg::F32(&flat.mask),
+                Arg::Buf(&state),
+                Arg::Scalar(kv_len as i32),
+                Arg::I32(&idx),
+                Arg::Scalar(n_prev as i32),
+            ],
+        )?;
+        self.state = Some(out);
+        let name = model::read_partial_name(&self.size, self.bucket);
+        let data = self.rt.invoke_download(
+            &name,
+            &[Arg::Buf(self.state.as_ref().unwrap())],
+        )?;
+        ReadOut::new(data, t, self.info.vocab, 3 * self.info.d_model)
+    }
+}
+
+/// EAGLE-3 draft session (one decoder layer, own bucket).
+pub struct DraftSession<'a> {
+    rt: &'a Runtime,
+    pub size: String,
+    pub bucket: usize,
+    pub state: PjRtBuffer,
+    pub cache: DraftCache,
+    pub info: ModelInfo,
+    pub consts: Consts,
+}
+
+impl<'a> DraftSession<'a> {
+    pub fn new(rt: &'a Runtime, size: &str, bucket: usize) -> Result<DraftSession<'a>> {
+        let consts = rt.manifest.consts.clone();
+        let spec = rt
+            .manifest
+            .exec(&model::draft_step_name(size, bucket))?;
+        let layout = spec.layout.context("draft exec missing layout")?;
+        let state = rt.zero_state(layout.total)?;
+        Ok(DraftSession {
+            rt,
+            size: size.to_string(),
+            bucket,
+            state,
+            cache: DraftCache::new(bucket, consts.draft_region),
+            info: rt.manifest.model(size)?.clone(),
+            consts,
+        })
+    }
+
+    /// Consume one target prefill chunk's features (device-side).
+    pub fn prefill_chunk(
+        &mut self,
+        toks: &[i32],
+        real: usize,
+        pos: &[i32],
+        target_state: &PjRtBuffer,
+    ) -> Result<()> {
+        let c = self.consts.chunk;
+        let name = model::draft_prefill_name(&self.size, self.bucket);
+        let mask = chain_mask(real, c);
+        let out = self.rt.invoke(
+            &name,
+            &[
+                Arg::I32(toks),
+                Arg::Buf(target_state),
+                Arg::I32(pos),
+                Arg::F32(&mask),
+                Arg::Buf(&self.state),
+                Arg::Scalar(self.cache.committed as i32),
+                Arg::Scalar(self.cache.committed as i32),
+            ],
+        )?;
+        self.state = out;
+        self.cache.push_prefill(real)
+    }
+
+    /// Hidden state of prefill-chunk row `idx` (the recycled feature for
+    /// the first draft after prefill).
+    pub fn read_hidden_row(&self, idx: usize) -> Result<Vec<f32>> {
+        let name = format!("read_draft_row_{}_b{}", self.size, self.bucket);
+        self.rt.invoke_download(
+            &name,
+            &[Arg::Buf(&self.state), Arg::Scalar(idx as i32)],
+        )
+    }
+
+    fn step(
+        &mut self,
+        tokens: &[u32],
+        feats: &[f32],
+        pos: &[i32],
+        mask: &[f32],
+        write_pos: usize,
+    ) -> Result<DraftOut> {
+        let w = self.consts.draft_w;
+        let name = model::draft_step_name(&self.size, self.bucket);
+        let mut toks = vec![PAD as i32; w];
+        for (i, &t) in tokens.iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        let out = self.rt.invoke(
+            &name,
+            &[
+                Arg::I32(&toks),
+                Arg::F32(feats),
+                Arg::I32(pos),
+                Arg::F32(mask),
+                Arg::Buf(&self.state),
+                Arg::Scalar(self.cache.committed as i32),
+                Arg::Scalar(write_pos as i32),
+            ],
+        )?;
+        self.state = out;
+        let name = model::read_draft_name(&self.size, self.bucket);
+        let data = self
+            .rt
+            .invoke_download(&name, &[Arg::Buf(&self.state)])?;
+        DraftOut::new(data, w, self.info.vocab, self.info.d_model)
+    }
+
+    /// Catch-up chain: commit `tokens` (the previously accepted path +
+    /// bonus) into the draft cache with their features. Returns draft
+    /// outputs per chain slot (the last row's logits seed the tree).
+    pub fn chain(
+        &mut self,
+        tokens: &[u32],
+        feats: &[f32],
+        start_pos: usize,
+    ) -> Result<DraftOut> {
+        let w = self.consts.draft_w;
+        let n = tokens.len();
+        if n == 0 || n > w {
+            bail!("chain length {n} outside 1..={w}");
+        }
+        let region = self.consts.draft_region;
+        // chain mask within the region: token i sees region cols 0..=i
+        let mut mask = vec![0f32; w * region];
+        for i in 0..w {
+            for j in 0..=i.min(region - 1) {
+                mask[i * region + j] = 1.0;
+            }
+        }
+        let pos: Vec<i32> = (0..w).map(|i| (start_pos + i.min(n - 1)) as i32).collect();
+        let write = self.cache.committed;
+        let out = self.step(tokens, feats, &pos, &mask, write)?;
+        self.cache.push_chain(n)?;
+        Ok(out)
+    }
+
+    /// Expand one tree level: `tokens[i]` under scratch ancestors
+    /// `anc_scratch[i]` (indices into the scratch region, self excluded).
+    /// Returns (outputs, scratch offsets of the new rows).
+    pub fn level(
+        &mut self,
+        tokens: &[u32],
+        feats: &[f32],
+        pos: &[i32],
+        anc_scratch: &[Vec<usize>],
+    ) -> Result<(DraftOut, Vec<usize>)> {
+        let w = self.consts.draft_w;
+        let n = tokens.len();
+        if n == 0 || n > w {
+            bail!("level width {n} outside 1..={w}");
+        }
+        let region = self.consts.draft_region;
+        let off = self.cache.push_scratch(n)?;
+        let mut mask = vec![0f32; w * region];
+        for i in 0..n {
+            for &a in &anc_scratch[i] {
+                if a >= region {
+                    bail!("scratch ancestor {a} outside region");
+                }
+                mask[i * region + a] = 1.0;
+            }
+            mask[i * region + off + i] = 1.0; // self
+        }
+        for i in n..w {
+            mask[i * region + (off + i).min(region - 1)] = 1.0;
+        }
+        let write = self.cache.committed + off;
+        let out = self.step(tokens, feats, pos, &mask, write)?;
+        Ok((out, (off..off + n).collect()))
+    }
+}
+
+/// TriForce independent tiny draft LM with a streaming (sink+ring) cache.
+pub struct TinySession<'a> {
+    rt: &'a Runtime,
+    pub state: PjRtBuffer,
+    pub bucket: usize,
+    /// valid rows (grows to bucket, then stays)
+    pub valid: usize,
+    /// ring write cursor
+    pub write: usize,
+    pub vocab: usize,
+    consts: Consts,
+}
+
+impl<'a> TinySession<'a> {
+    pub fn new(rt: &'a Runtime) -> Result<TinySession<'a>> {
+        let consts = rt.manifest.consts.clone();
+        let bucket = consts.tiny_bucket;
+        let spec = rt.manifest.exec(&format!("verify_tiny_b{bucket}_t1"))?;
+        let layout = spec.layout.context("tiny exec missing layout")?;
+        let state = rt.zero_state(layout.total)?;
+        let vocab = rt.manifest.model("tiny")?.vocab;
+        Ok(TinySession { rt, state, bucket, valid: 0, write: 0, vocab, consts })
+    }
+
+    /// Prefill the streaming cache with (up to) the last `bucket - γ`
+    /// prompt tokens (TriForce keeps a sink+window draft cache; for the
+    /// byte-level tiny LM a pure window suffices and is documented in
+    /// DESIGN.md).
+    pub fn prefill(&mut self, prompt: &[u32], gamma: usize) -> Result<Vec<f32>> {
+        let c = self.consts.chunk;
+        let keep = (self.bucket - gamma - 1).min(prompt.len());
+        let tail = &prompt[prompt.len() - keep..];
+        let base_pos = prompt.len() - keep;
+        let name = format!("verify_tiny_b{}_t{}", self.bucket, c);
+        let mut logits = Vec::new();
+        for (ci, chunk) in tail.chunks(c).enumerate() {
+            let r = chunk.len();
+            let mut toks = vec![PAD as i32; c];
+            for (i, &t) in chunk.iter().enumerate() {
+                toks[i] = t as i32;
+            }
+            let pos: Vec<i32> =
+                (0..c).map(|i| (base_pos + ci * c + i) as i32).collect();
+            let mask = chain_mask(r, c);
+            let out = self.rt.invoke(
+                &name,
+                &[
+                    Arg::I32(&toks),
+                    Arg::I32(&pos),
+                    Arg::F32(&mask),
+                    Arg::Buf(&self.state),
+                    Arg::Scalar(self.valid as i32),
+                    Arg::Scalar(self.valid as i32),
+                    Arg::Scalar((r - 1) as i32),
+                ],
+            )?;
+            self.state = out;
+            self.valid += r;
+            self.write = self.valid;
+            logits = self.read()?;
+        }
+        Ok(logits)
+    }
+
+    /// One draft step: process `token` at absolute `pos`, return logits.
+    /// The cache is a streaming ring: once full, new rows overwrite the
+    /// oldest slots (TriForce's StreamingLLM-style draft cache).
+    pub fn step(&mut self, token: u32, pos: usize) -> Result<Vec<f32>> {
+        let name = format!("verify_tiny_b{}_t1", self.bucket);
+        let kv_len = self.valid.min(self.bucket);
+        let out = self.rt.invoke(
+            &name,
+            &[
+                Arg::I32(&[token as i32]),
+                Arg::I32(&[pos as i32]),
+                Arg::F32(&[1.0]),
+                Arg::Buf(&self.state),
+                Arg::Scalar(kv_len as i32),
+                Arg::Scalar(self.write as i32),
+                Arg::Scalar(0),
+            ],
+        )?;
+        self.state = out;
+        if self.valid < self.bucket {
+            self.valid += 1;
+        }
+        self.write = (self.write + 1) % self.bucket;
+        self.read()
+    }
+
+    /// Roll the write cursor back over `n` rejected draft rows (their
+    /// slots are reused next round; see DESIGN.md on ring pollution).
+    pub fn rollback(&mut self, n: usize) {
+        let n = n.min(self.bucket);
+        self.write = (self.write + self.bucket - n) % self.bucket;
+        if self.valid < self.bucket {
+            self.valid = self.valid.saturating_sub(n);
+        }
+    }
+
+    fn read(&self) -> Result<Vec<f32>> {
+        let name = format!("read_tiny_b{}", self.bucket);
+        self.rt
+            .invoke_download(&name, &[Arg::Buf(&self.state)])
+    }
+}

@@ -1,0 +1,162 @@
+//! EAGLE3-YARN baseline: EAGLE-3 tree drafting with **full-KV**
+//! verification every step (the paper's strongest lossless baseline,
+//! Tables 1/3 row 3). Also the shared implementation of the "Full" mode
+//! rounds inside SpecPV.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::GenStats;
+use crate::model::{bucket_need, ReadOut};
+use crate::offload::OffloadSim;
+use crate::runtime::Runtime;
+use crate::sampling::pick_token;
+use crate::tokenizer::is_eos;
+use crate::tree::Tree;
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+use super::eagle::{draft_tree, DraftInputs};
+use super::session::{DraftSession, TargetSession};
+use super::{Engine, GenRequest, GenResult};
+
+pub struct SpecFullEngine {
+    cfg: Config,
+}
+
+impl SpecFullEngine {
+    pub fn new(cfg: Config) -> SpecFullEngine {
+        SpecFullEngine { cfg }
+    }
+}
+
+/// Pick the target's committed token at every tree node.
+pub fn tree_picks(
+    tree: &Tree,
+    read: &ReadOut,
+    row_off: usize,
+    temperature: f32,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    (0..tree.len())
+        .map(|i| pick_token(read.logits(row_off + i), temperature, rng))
+        .collect()
+}
+
+/// One round's acceptance bookkeeping shared by the spec engines.
+pub struct RoundAccept {
+    /// accepted drafted tokens in path order
+    pub path_tokens: Vec<u32>,
+    /// flat-tree indices of the accepted path
+    pub path_idx: Vec<usize>,
+    /// the new bonus token
+    pub bonus: u32,
+    /// flat index of the deepest accepted node (0 = root)
+    pub deepest: usize,
+}
+
+pub fn accept_round(tree: &Tree, picks: &[u32]) -> RoundAccept {
+    let (path_idx, bonus) = tree.greedy_accept(picks);
+    let path_tokens = path_idx.iter().map(|&i| tree.nodes[i].token).collect();
+    let deepest = *path_idx.last().unwrap_or(&0);
+    RoundAccept { path_tokens, path_idx, bonus, deepest }
+}
+
+impl Engine for SpecFullEngine {
+    fn kind(&self) -> crate::config::EngineKind {
+        crate::config::EngineKind::SpecFull
+    }
+
+    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult> {
+        let mut stats = GenStats::default();
+        let mut rng = Rng::new(req.seed | 1);
+        let consts = rt.manifest.consts.clone();
+        let need = bucket_need(req.prompt.len(), req.max_new, &consts);
+        let mut target = TargetSession::new(
+            rt,
+            &self.cfg.model_size,
+            need,
+            OffloadSim::new(self.cfg.offload.clone()),
+        )?;
+        let mut draft = DraftSession::new(rt, &self.cfg.model_size, target.bucket)?;
+
+        let mut sw = Stopwatch::new();
+        let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft))?;
+        stats.prefill_secs = sw.lap();
+
+        let mut out: Vec<u32> = Vec::new();
+        let mut bonus = pick_token(&logits, req.temperature, &mut rng);
+        out.push(bonus);
+        // first round: no catch-up chain; the bonus's predecessor hidden
+        // is the draft hidden of the last prompt token (pass-1 convention)
+        let mut chain: Vec<(u32, Vec<f32>)> = Vec::new();
+        let mut prev_hidden =
+            draft.read_hidden_row((req.prompt.len() - 1) % consts.chunk)?;
+
+        while out.len() < req.max_new && !is_eos(bonus) {
+            // --- draft ----------------------------------------------------
+            let chain_start =
+                req.prompt.len() + out.len() - 1 - chain.len();
+            let round = draft_tree(
+                &mut draft,
+                &self.cfg,
+                &DraftInputs {
+                    chain: std::mem::take(&mut chain),
+                    bonus,
+                    chain_start_pos: chain_start,
+                    prev_hidden: std::mem::take(&mut prev_hidden),
+                },
+            )?;
+            let tree = round.tree;
+            prev_hidden = round.bonus_hidden;
+            stats.draft_secs += sw.lap();
+
+            // --- verify ---------------------------------------------------
+            let flat = tree.flatten(consts.tree_t);
+            let root_pos = req.prompt.len() + out.len() - 1;
+            let read = target.verify_tree(&flat, root_pos)?;
+            stats.verify_secs += sw.lap();
+
+            // --- accept ---------------------------------------------------
+            let picks = tree_picks(&tree, &read, 0, req.temperature, &mut rng);
+            let acc = accept_round(&tree, &picks);
+            if std::env::var("SPECPV_DEBUG").is_ok() && stats.verify_steps < 10 {
+                let kids: Vec<u32> = tree.children(0).iter().map(|&c| tree.nodes[c].token).collect();
+                eprintln!(
+                    "round {}: root={:?} target_pick={:?} draft_kids={:?} hit={}",
+                    stats.verify_steps,
+                    char::from_u32(bonus).unwrap_or('?'),
+                    char::from_u32(picks[0]).unwrap_or('?'),
+                    kids.iter().map(|&k| char::from_u32(k).unwrap_or('?')).collect::<Vec<_>>(),
+                    kids.contains(&picks[0]),
+                );
+            }
+            stats.verify_steps += 1;
+            stats.accepted_total += acc.path_tokens.len();
+            stats.full_steps += 1;
+
+            out.extend(&acc.path_tokens);
+            out.push(acc.bonus);
+
+            // pending compaction rows: root + accepted path
+            let mut rows = vec![0usize];
+            rows.extend(&acc.path_idx);
+            target.cache.set_pending(rows, consts.prev_window())?;
+
+            // next round's draft chain: accepted path tokens with their
+            // target features; bonus feature = feature of deepest node
+            chain = acc
+                .path_idx
+                .iter()
+                .map(|&i| (tree.nodes[i].token, read.feats(i).to_vec()))
+                .collect();
+            bonus = acc.bonus;
+            stats.other_secs += sw.lap();
+        }
+        out.truncate(req.max_new); // multi-token acceptance can overshoot
+        stats.decode_secs = stats.draft_secs + stats.verify_secs + stats.other_secs;
+        stats.new_tokens = out.len();
+        stats.offload_secs = target.offload.secs;
+        Ok(GenResult { tokens: out, stats })
+    }
+}

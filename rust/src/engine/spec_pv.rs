@@ -1,0 +1,244 @@
+//! **SpecPV** — self-speculative decoding with partial verification
+//! (the paper's contribution; Algorithm 1).
+//!
+//! Mode machine per decode round (paper Fig. 2 / §3.3):
+//! * **Full** — while the context is shorter than the partial-cache core,
+//!   verify against the full cache (identical to EAGLE3-full rounds);
+//! * **Refresh** — when the partial cache must be (re)built: verify the
+//!   accumulated partially-verified chain + the new tree against the
+//!   full cache, commit the exact KV, re-score the blocks with the fresh
+//!   queries (Eqs. 1–3), gather the new core, clear the buffer;
+//! * **Partial** — verify the tree against the partial cache only
+//!   (sink ++ retrieval ++ local ++ buffer); accepted tokens accumulate
+//!   in the buffer until its cap forces a Refresh.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::GenStats;
+use crate::model::bucket_need;
+use crate::offload::OffloadSim;
+use crate::retrieval::plan_gather;
+use crate::runtime::Runtime;
+use crate::sampling::pick_token;
+use crate::tokenizer::is_eos;
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+use super::eagle::{draft_tree, DraftInputs};
+use super::session::{DraftSession, PartialSession, TargetSession};
+use super::spec_full::{accept_round, tree_picks};
+use super::{Engine, GenRequest, GenResult};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Full,
+    Partial,
+    Refresh,
+}
+
+pub struct SpecPvEngine {
+    cfg: Config,
+}
+
+impl SpecPvEngine {
+    pub fn new(cfg: Config) -> SpecPvEngine {
+        SpecPvEngine { cfg }
+    }
+}
+
+impl Engine for SpecPvEngine {
+    fn kind(&self) -> crate::config::EngineKind {
+        crate::config::EngineKind::SpecPv
+    }
+
+    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult> {
+        let mut stats = GenStats::default();
+        let mut rng = Rng::new(req.seed | 1);
+        let consts = rt.manifest.consts.clone();
+        let need = bucket_need(req.prompt.len(), req.max_new, &consts);
+        let mut target = TargetSession::new(
+            rt,
+            &self.cfg.model_size,
+            need,
+            OffloadSim::new(self.cfg.offload.clone()),
+        )?;
+        let mut draft = DraftSession::new(rt, &self.cfg.model_size, target.bucket)?;
+        let mut partial = PartialSession::new(rt, &self.cfg.model_size, &self.cfg.specpv)?;
+        let nsel = partial.bucket / consts.block;
+        let nb = target.bucket / consts.block;
+
+        // available refresh widths for this bucket
+        let t_refresh = consts.refresh_t;
+        let big_refresh = rt
+            .manifest
+            .executables
+            .contains_key(&crate::model::verify_name(
+                &self.cfg.model_size,
+                target.bucket,
+                consts.big_refresh_t,
+            ))
+            .then_some(consts.big_refresh_t);
+
+        let mut sw = Stopwatch::new();
+        let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft))?;
+        stats.prefill_secs = sw.lap();
+
+        let mut out: Vec<u32> = Vec::new();
+        let mut bonus = pick_token(&logits, req.temperature, &mut rng);
+        out.push(bonus);
+        let mut chain: Vec<(u32, Vec<f32>)> = Vec::new();
+        let mut prev_hidden =
+            draft.read_hidden_row((req.prompt.len() - 1) % consts.chunk)?;
+        // pv chain: output tokens not yet in the full cache (buffer
+        // residents); the *last* output (current bonus) is excluded — it
+        // becomes the next tree's root
+        let mut pv: Vec<u32> = Vec::new();
+
+        while out.len() < req.max_new && !is_eos(bonus) {
+            // --- draft ----------------------------------------------------
+            let chain_start = req.prompt.len() + out.len() - 1 - chain.len();
+            let round = draft_tree(
+                &mut draft,
+                &self.cfg,
+                &DraftInputs {
+                    chain: std::mem::take(&mut chain),
+                    bonus,
+                    chain_start_pos: chain_start,
+                    prev_hidden: std::mem::take(&mut prev_hidden),
+                },
+            )?;
+            let tree = round.tree;
+            prev_hidden = round.bonus_hidden;
+            stats.draft_secs += sw.lap();
+            let flat = tree.flatten(consts.tree_t);
+            let root_pos = req.prompt.len() + out.len() - 1;
+
+            // --- SelectMode (Alg. 1) ---------------------------------------
+            let core_needed = self.cfg.specpv.core_tokens(consts.block);
+            let mode = if partial.ready()
+                && partial.cache.fits(flat.n, consts.prev_max())
+            {
+                Mode::Partial
+            } else if target.cache.effective_len() + pv.len()
+                > core_needed.max(2 * consts.block)
+            {
+                Mode::Refresh
+            } else {
+                Mode::Full
+            };
+
+            let (read, row_off) = match mode {
+                Mode::Full => {
+                    let r = target.verify_tree(&flat, root_pos)?;
+                    (r, 0usize)
+                }
+                Mode::Partial => {
+                    let r = partial.verify_tree(&flat, root_pos)?;
+                    (r, 0usize)
+                }
+                Mode::Refresh => {
+                    // how wide a refresh do we need?
+                    let width = pv.len() + consts.tree_t;
+                    let t_use = if width <= t_refresh {
+                        t_refresh
+                    } else if let Some(big) = big_refresh {
+                        if width <= big {
+                            big
+                        } else {
+                            anyhow::bail!(
+                                "pv chain {} exceeds refresh capacity",
+                                pv.len()
+                            );
+                        }
+                    } else {
+                        anyhow::bail!(
+                            "pv chain {} exceeds refresh capacity {t_refresh}",
+                            pv.len()
+                        );
+                    };
+                    let chain_pos = req.prompt.len() + out.len() - 1 - pv.len();
+                    let r = target.verify_refresh(&pv, chain_pos, &flat, t_use)?;
+                    (r, 0usize)
+                }
+            };
+            stats.verify_secs += sw.lap();
+
+            // --- accept -----------------------------------------------------
+            // read window is positioned at the tree for all modes
+            let picks = tree_picks(&tree, &read, row_off, req.temperature, &mut rng);
+            let acc = accept_round(&tree, &picks);
+            stats.verify_steps += 1;
+            stats.accepted_total += acc.path_tokens.len();
+
+            match mode {
+                Mode::Full => {
+                    stats.full_steps += 1;
+                    let mut rows = vec![0usize];
+                    rows.extend(&acc.path_idx);
+                    target.cache.set_pending(rows, consts.prev_window())?;
+                }
+                Mode::Partial => {
+                    stats.partial_steps += 1;
+                    let mut rows = vec![0usize];
+                    rows.extend(&acc.path_idx);
+                    partial.cache.set_pending(rows)?;
+                    partial.cache.pv_tokens.push(bonus);
+                    partial
+                        .cache
+                        .pv_tokens
+                        .extend(&acc.path_tokens);
+                    pv.push(bonus);
+                    pv.extend(&acc.path_tokens);
+                }
+                Mode::Refresh => {
+                    stats.refresh_steps += 1;
+                    // commit: pv chain ++ root ++ accepted path (window-
+                    // relative rows)
+                    let n_chain = pv.len();
+                    let width = if n_chain + consts.tree_t <= t_refresh {
+                        t_refresh
+                    } else {
+                        big_refresh.unwrap()
+                    };
+                    let mut rows: Vec<usize> = (0..=n_chain).collect();
+                    rows.extend(acc.path_idx.iter().map(|&i| n_chain + i));
+                    target.commit_now(&rows, width)?;
+                    pv.clear();
+
+                    // re-select retrieval blocks with the fresh queries
+                    let n_queries =
+                        (n_chain + flat.n).min(consts.qrows);
+                    let scores = target.score(n_queries)?;
+                    let plan = plan_gather(
+                        &scores,
+                        target.info.n_layer,
+                        nb,
+                        consts.block,
+                        target.cache.committed,
+                        nsel,
+                        &self.cfg.specpv,
+                    );
+                    let pstate = target.gather(&plan, partial.bucket)?;
+                    partial.install(pstate, plan.core_len);
+                }
+            }
+
+            out.extend(&acc.path_tokens);
+            out.push(acc.bonus);
+
+            chain = acc
+                .path_idx
+                .iter()
+                .map(|&i| (tree.nodes[i].token, read.feats(row_off + i).to_vec()))
+                .collect();
+            bonus = acc.bonus;
+            stats.other_secs += sw.lap();
+        }
+        out.truncate(req.max_new); // multi-token acceptance can overshoot
+        stats.decode_secs = stats.draft_secs + stats.verify_secs + stats.other_secs;
+        stats.new_tokens = out.len();
+        stats.offload_secs = target.offload.secs;
+        Ok(GenResult { tokens: out, stats })
+    }
+}

@@ -1,0 +1,131 @@
+//! TokenSwift-like baseline (Wu et al.): Medusa-style multi-position
+//! heads draft a static tree; the target verifies against the full KV
+//! cache. Token-reutilization and contextual-penalty (ultra-long-sequence
+//! techniques with little effect at our scale, as the paper itself notes
+//! in §4.2) are omitted; the Medusa-draft + full-verification structure
+//! is what Table 1 row 2 measures.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::GenStats;
+use crate::model::{bucket_need, medusa_name};
+use crate::offload::OffloadSim;
+use crate::runtime::{Arg, Runtime};
+use crate::sampling::{pick_token, top_k};
+use crate::tokenizer::is_eos;
+use crate::tree::Tree;
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+use super::session::{DraftSession, TargetSession};
+use super::spec_full::{accept_round, tree_picks};
+use super::{Engine, GenRequest, GenResult};
+
+pub struct TokenSwiftEngine {
+    cfg: Config,
+}
+
+impl TokenSwiftEngine {
+    pub fn new(cfg: Config) -> TokenSwiftEngine {
+        TokenSwiftEngine { cfg }
+    }
+
+    /// Build the static Medusa tree from the 3 head distributions:
+    /// root → top-4 of head 1 → ×top-2 of head 2 → best path gets head 3's
+    /// top-1 (≤ 14 nodes).
+    fn medusa_tree(&self, bonus: u32, heads: &[f32], vocab: usize) -> Tree {
+        let h1 = &heads[0..vocab];
+        let h2 = &heads[vocab..2 * vocab];
+        let h3 = &heads[2 * vocab..3 * vocab];
+        let l1 = crate::sampling::log_softmax(h1);
+        let l2 = crate::sampling::log_softmax(h2);
+        let l3 = crate::sampling::log_softmax(h3);
+
+        let mut tree = Tree::new(bonus);
+        let mut best_leaf = 0usize;
+        let mut best_score = f32::NEG_INFINITY;
+        for &a in top_k(&l1, 4).iter() {
+            let ia = tree.add(0, a as u32, l1[a]);
+            for &b in top_k(&l2, 2).iter() {
+                let ib = tree.add(ia, b as u32, l2[b]);
+                if tree.nodes[ib].score > best_score {
+                    best_score = tree.nodes[ib].score;
+                    best_leaf = ib;
+                }
+            }
+        }
+        let c = top_k(&l3, 1)[0];
+        tree.add(best_leaf, c as u32, l3[c]);
+        tree
+    }
+}
+
+impl Engine for TokenSwiftEngine {
+    fn kind(&self) -> crate::config::EngineKind {
+        crate::config::EngineKind::TokenSwift
+    }
+
+    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult> {
+        let mut stats = GenStats::default();
+        let mut rng = Rng::new(req.seed | 1);
+        let consts = rt.manifest.consts.clone();
+        let need = bucket_need(req.prompt.len(), req.max_new, &consts);
+        let mut target = TargetSession::new(
+            rt,
+            &self.cfg.model_size,
+            need,
+            OffloadSim::new(self.cfg.offload.clone()),
+        )?;
+        // Medusa heads read the top-layer feature only; no draft KV needed,
+        // but we reuse DraftSession's model info for dims.
+        let _ = DraftSession::new(rt, &self.cfg.model_size, target.bucket); // warm check
+        let vocab = target.info.vocab;
+        let h = target.info.d_model;
+        let mname = medusa_name(&self.cfg.model_size);
+
+        let mut sw = Stopwatch::new();
+        let (logits, feat_last) = target.prefill(&req.prompt, None)?;
+        stats.prefill_secs = sw.lap();
+
+        let mut out: Vec<u32> = Vec::new();
+        let mut bonus = pick_token(&logits, req.temperature, &mut rng);
+        out.push(bonus);
+        let mut feat = feat_last[2 * h..3 * h].to_vec();
+
+        while out.len() < req.max_new && !is_eos(bonus) {
+            // --- Medusa draft ----------------------------------------------
+            let heads = rt.invoke_download(&mname, &[Arg::F32(&feat)])?;
+            let tree = self.medusa_tree(bonus, &heads, vocab);
+            stats.draft_secs += sw.lap();
+
+            // --- full verification ------------------------------------------
+            let flat = tree.flatten(consts.tree_t);
+            let root_pos = req.prompt.len() + out.len() - 1;
+            let read = target.verify_tree(&flat, root_pos)?;
+            stats.verify_secs += sw.lap();
+
+            let picks = tree_picks(&tree, &read, 0, req.temperature, &mut rng);
+            let acc = accept_round(&tree, &picks);
+            stats.verify_steps += 1;
+            stats.accepted_total += acc.path_tokens.len();
+            stats.full_steps += 1;
+
+            out.extend(&acc.path_tokens);
+            out.push(acc.bonus);
+
+            let mut rows = vec![0usize];
+            rows.extend(&acc.path_idx);
+            target.cache.set_pending(rows, consts.prev_window())?;
+
+            feat = read.feats(acc.deepest)[2 * h..3 * h].to_vec();
+            bonus = acc.bonus;
+            stats.other_secs += sw.lap();
+        }
+        out.truncate(req.max_new); // multi-token acceptance can overshoot
+        stats.decode_secs = stats.draft_secs + stats.verify_secs + stats.other_secs;
+        stats.new_tokens = out.len();
+        stats.offload_secs = target.offload.secs;
+        Ok(GenResult { tokens: out, stats })
+    }
+}

@@ -1,0 +1,130 @@
+//! TriForce-like baseline (Sun et al.): an **independent** tiny draft LM
+//! with a streaming (ring) cache proposes a γ-token chain; the target
+//! verifies against the full KV cache every step (lossless — TriForce
+//! never refreshes a partial target cache).
+//!
+//! Substitutions vs the original (DESIGN.md §3): the Qwama-0.5B draft is
+//! replaced by our 2-layer tiny char-LM trained on the same corpus, and
+//! the hierarchical (two-stage) speculation is collapsed into one stage —
+//! the properties under test (independent draft, full verification,
+//! streaming draft cache) are preserved.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::GenStats;
+use crate::model::bucket_need;
+use crate::offload::OffloadSim;
+use crate::runtime::Runtime;
+use crate::sampling::pick_token;
+use crate::tokenizer::is_eos;
+use crate::tree::{chain_mask, FlatTree};
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+use super::session::{TargetSession, TinySession};
+use super::{Engine, GenRequest, GenResult};
+
+pub struct TriForceEngine {
+    cfg: Config,
+}
+
+impl TriForceEngine {
+    pub fn new(cfg: Config) -> TriForceEngine {
+        TriForceEngine { cfg }
+    }
+}
+
+/// Flatten a token chain as a degenerate "tree" (row i = depth i).
+fn chain_flat(tokens: &[u32], t_pad: usize) -> FlatTree {
+    let mut toks = vec![crate::tokenizer::PAD as i32; t_pad];
+    let mut depth = vec![0usize; t_pad];
+    for (i, &t) in tokens.iter().enumerate() {
+        toks[i] = t as i32;
+        depth[i] = i;
+    }
+    FlatTree {
+        tokens: toks,
+        depth,
+        mask: chain_mask(tokens.len(), t_pad),
+        n: tokens.len(),
+    }
+}
+
+impl Engine for TriForceEngine {
+    fn kind(&self) -> crate::config::EngineKind {
+        crate::config::EngineKind::TriForce
+    }
+
+    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult> {
+        let mut stats = GenStats::default();
+        let mut rng = Rng::new(req.seed | 1);
+        let consts = rt.manifest.consts.clone();
+        let gamma = self.cfg.chain_gamma;
+        let need = bucket_need(req.prompt.len(), req.max_new, &consts);
+        let mut target = TargetSession::new(
+            rt,
+            &self.cfg.model_size,
+            need,
+            OffloadSim::new(self.cfg.offload.clone()),
+        )?;
+        let mut tiny = TinySession::new(rt)?;
+
+        let mut sw = Stopwatch::new();
+        let (logits, _) = target.prefill(&req.prompt, None)?;
+        tiny.prefill(&req.prompt, gamma)?;
+        stats.prefill_secs = sw.lap();
+
+        let mut out: Vec<u32> = Vec::new();
+        let mut bonus = pick_token(&logits, req.temperature, &mut rng);
+        out.push(bonus);
+
+        while out.len() < req.max_new && !is_eos(bonus) {
+            // --- draft a γ-chain with the tiny LM --------------------------
+            let mut chain: Vec<u32> = vec![bonus];
+            let mut cur = bonus;
+            for g in 0..gamma {
+                let pos = req.prompt.len() + out.len() - 1 + g;
+                let lg = tiny.step(cur, pos)?;
+                cur = pick_token(&lg, req.temperature, &mut rng) as u32;
+                chain.push(cur);
+            }
+            stats.draft_secs += sw.lap();
+
+            // --- target verifies [bonus, d1..dγ] ---------------------------
+            let flat = chain_flat(&chain, consts.tree_t);
+            let root_pos = req.prompt.len() + out.len() - 1;
+            let read = target.verify_tree(&flat, root_pos)?;
+            stats.verify_secs += sw.lap();
+
+            // greedy walk down the chain
+            let mut accepted = 0usize;
+            let mut next = pick_token(read.logits(0), req.temperature, &mut rng);
+            while accepted < gamma && chain[accepted + 1] == next {
+                accepted += 1;
+                next = pick_token(read.logits(accepted), req.temperature, &mut rng);
+            }
+            stats.verify_steps += 1;
+            stats.accepted_total += accepted;
+            stats.full_steps += 1;
+
+            for &t in &chain[1..=accepted] {
+                out.push(t);
+            }
+            out.push(next);
+
+            // rejected tiny-cache rows are reused next round
+            tiny.rollback(gamma - accepted);
+
+            let rows: Vec<usize> = (0..=accepted).collect();
+            target.cache.set_pending(rows, consts.prev_window())?;
+            bonus = next;
+            stats.other_secs += sw.lap();
+        }
+        out.truncate(req.max_new); // multi-token acceptance can overshoot
+        stats.decode_secs = stats.draft_secs + stats.verify_secs + stats.other_secs;
+        stats.new_tokens = out.len();
+        stats.offload_secs = target.offload.secs;
+        Ok(GenResult { tokens: out, stats })
+    }
+}

@@ -1,0 +1,42 @@
+//! # SpecPV — self-speculative decoding with partial verification
+//!
+//! Rust/JAX/Pallas reproduction of *"SpecPV: Improving Self-Speculative
+//! Decoding for Long-Context Generation via Partial Verification"*
+//! (Tan et al., 2025).
+//!
+//! This crate is the **L3 coordinator**: it owns the serving event loop,
+//! the paged KV-cache bookkeeping, draft-tree construction, the
+//! Full/Partial/Refresh verification mode machine (paper Alg. 1),
+//! speculative sampling, the offload simulator, the TCP server and all
+//! evaluation baselines. The model compute (L2 JAX graphs wrapping the L1
+//! Pallas kernels) is AOT-compiled to HLO text by `python/compile/aot.py`
+//! and executed through the PJRT CPU client (`runtime` module); Python is
+//! never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index.
+
+pub mod bench;
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod engine;
+pub mod harness;
+pub mod json;
+pub mod manifest;
+pub mod metrics;
+pub mod model;
+pub mod offload;
+pub mod retrieval;
+pub mod runtime;
+pub mod sampling;
+pub mod server;
+pub mod tokenizer;
+pub mod tree;
+pub mod util;
+pub mod weights;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

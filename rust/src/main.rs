@@ -1,0 +1,177 @@
+//! `specpv` — launcher CLI for the SpecPV serving stack.
+//!
+//! ```text
+//! specpv generate --prompt-file f.txt [--engine spec_pv] [--max-new 256]
+//! specpv continue --ctx 4096 --seed 1 [--engine ...]   # PG-19-style demo
+//! specpv serve    [--addr 127.0.0.1:7799]
+//! specpv bench    <fig1|table1|fig4|table2|table3|fig5|table4|fig6|fig7|fig8|all>
+//!                 [--out results] [--quick]
+//! specpv inspect  # artifact / manifest summary
+//! ```
+//! Common flags: `--artifacts DIR --size s|m|l --engine E --budget N
+//! --set key=value`.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use specpv::cli::Cli;
+use specpv::config::Config;
+use specpv::engine::{self, GenRequest};
+use specpv::harness;
+use specpv::runtime::Runtime;
+use specpv::{corpus, server, tokenizer};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: specpv <generate|continue|serve|bench|inspect> [options]\n\
+         see rust/src/main.rs header for the full flag list"
+    );
+    std::process::exit(2);
+}
+
+fn build_config(cli: &Cli) -> Result<Config> {
+    let mut cfg = match cli.opt("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(d) = cli.opt("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(d);
+    }
+    if let Some(s) = cli.opt("size") {
+        cfg.model_size = s.to_string();
+    }
+    if let Some(e) = cli.opt("engine") {
+        cfg.engine = e.parse()?;
+    }
+    if let Some(b) = cli.opt_parse::<usize>("budget")? {
+        cfg.specpv.retrieval_budget = b;
+    }
+    if let Some(n) = cli.opt_parse::<usize>("max-new")? {
+        cfg.max_new_tokens = n;
+    }
+    if let Some(t) = cli.opt_parse::<f32>("temperature")? {
+        cfg.temperature = t;
+    }
+    if let Some(a) = cli.opt("addr") {
+        cfg.server_addr = a.to_string();
+    }
+    if cli.has_flag("offload") {
+        cfg.offload.enabled = true;
+    }
+    // generic overrides: --set key=value (repeatable via comma list)
+    if let Some(kvs) = cli.opt("set") {
+        let mut map = BTreeMap::new();
+        for kv in kvs.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("--set '{kv}' is not key=value"))?;
+            map.insert(k.to_string(), v.to_string());
+        }
+        cfg.apply_overrides(&map)?;
+    }
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1))?;
+    let cfg = build_config(&cli)?;
+    match cli.command() {
+        Some("generate") => {
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let prompt = match (cli.opt("prompt"), cli.opt("prompt-file")) {
+                (Some(p), _) => p.to_string(),
+                (None, Some(f)) => std::fs::read_to_string(f)?,
+                (None, None) => bail!("--prompt or --prompt-file required"),
+            };
+            let req = GenRequest {
+                prompt: tokenizer::encode(&prompt),
+                max_new: cfg.max_new_tokens,
+                temperature: cfg.temperature,
+                seed: cli.opt_parse::<u64>("seed")?.unwrap_or(0),
+            };
+            let r = engine::generate_with(&cfg, &rt, &req)?;
+            println!("{}", r.text());
+            eprintln!(
+                "[{} tokens, {:.1} tok/s, τ={:.2}, modes F/P/R = {}/{}/{}]",
+                r.tokens.len(),
+                r.stats.throughput(),
+                r.stats.accept_len(),
+                r.stats.full_steps,
+                r.stats.partial_steps,
+                r.stats.refresh_steps,
+            );
+        }
+        Some("continue") => {
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let ctx = cli.opt_parse::<usize>("ctx")?.unwrap_or(2048);
+            let seed = cli.opt_parse::<u64>("seed")?.unwrap_or(1);
+            let prompt = corpus::continuation_prompt(seed, ctx);
+            let req = GenRequest {
+                prompt: tokenizer::encode(&prompt),
+                max_new: cfg.max_new_tokens,
+                temperature: cfg.temperature,
+                seed,
+            };
+            let r = engine::generate_with(&cfg, &rt, &req)?;
+            println!("...{}", &prompt[prompt.len().saturating_sub(200)..]);
+            println!("--- continuation ({} engine) ---", cfg.engine);
+            println!("{}", r.text());
+            eprintln!(
+                "[{:.1} tok/s, τ={:.2}, modes F/P/R = {}/{}/{}]",
+                r.stats.throughput(),
+                r.stats.accept_len(),
+                r.stats.full_steps,
+                r.stats.partial_steps,
+                r.stats.refresh_steps,
+            );
+        }
+        Some("serve") => {
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            server::serve(&rt, cfg)?;
+        }
+        Some("bench") => {
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let id = cli.sub().unwrap_or("all").to_string();
+            let out = PathBuf::from(cli.opt_or("out", "results"));
+            harness::run_experiment(&rt, &cfg, &id, &out, cli.has_flag("quick"))?;
+            let c = rt.counters.borrow();
+            eprintln!(
+                "[runtime: {} executions ({:.1}s), {} compiles ({:.1}s)]",
+                c.executions, c.exec_secs, c.compilations, c.compile_secs
+            );
+            let mut per: Vec<_> = c.per_exec.iter().collect();
+            per.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());
+            for (name, (n, secs)) in per.iter().take(12) {
+                eprintln!(
+                    "  {name:32} {n:>6} calls {secs:>8.2}s ({:>7.2} ms/call)",
+                    secs / *n as f64 * 1e3
+                );
+            }
+        }
+        Some("inspect") => {
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let m = &rt.manifest;
+            println!("artifacts: {:?}", m.dir);
+            println!("models:");
+            for (name, info) in &m.models {
+                println!(
+                    "  {name}: L={} d={} H={} vocab={} ({})",
+                    info.n_layer, info.d_model, info.n_head, info.vocab,
+                    info.weights_file
+                );
+            }
+            println!("executables: {}", m.executables.len());
+            let mut by_family: BTreeMap<&str, usize> = BTreeMap::new();
+            for e in m.executables.values() {
+                *by_family.entry(e.family.as_str()).or_default() += 1;
+            }
+            for (f, n) in by_family {
+                println!("  {f}: {n}");
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,334 @@
+//! Parser for `artifacts/manifest.json` (written by `python/compile/aot.py`).
+//! The rust runtime is entirely manifest-driven: argument order (including
+//! the exact weight-tensor order), shapes, state layouts, and the static
+//! attributes (bucket, T, family) all come from here.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::Json;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// Is this argument a weight tensor (vs a per-call input)?
+    pub fn is_weight(&self) -> bool {
+        self.name.starts_with("t.")
+            || self.name.starts_with("d.")
+            || self.name.starts_with("md.")
+    }
+}
+
+/// Flat-state region layout, in f32 element counts (see aot.py docstring).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StateLayout {
+    pub kv: usize,
+    pub logits: usize,
+    pub feats: usize,
+    pub queries: usize,
+    pub total: usize,
+}
+
+impl StateLayout {
+    pub fn off_logits(&self) -> usize {
+        self.kv
+    }
+
+    pub fn off_feats(&self) -> usize {
+        self.kv + self.logits
+    }
+
+    pub fn off_queries(&self) -> usize {
+        self.kv + self.logits + self.feats
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub layout: Option<StateLayout>,
+    pub family: String,
+    pub size: String,
+    pub bucket: usize,
+    pub t: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub weights_file: String,
+    pub yarn_factor: f64,
+}
+
+/// Global constants shared between aot.py and the coordinator.
+#[derive(Debug, Clone)]
+pub struct Consts {
+    pub chunk: usize,
+    pub tree_t: usize,
+    pub refresh_t: usize,
+    pub big_refresh_t: usize,
+    pub qrows: usize,
+    pub draft_w: usize,
+    pub draft_region: usize,
+    pub block: usize,
+    pub prev_max_: usize,
+    pub prev_window_: usize,
+    pub vocab: usize,
+    pub full_buckets: Vec<usize>,
+    pub partial_buckets: Vec<usize>,
+    pub tiny_bucket: usize,
+}
+
+impl Consts {
+    /// Max accepted rows the fused verify compaction can absorb.
+    pub fn prev_max(&self) -> usize {
+        self.prev_max_
+    }
+
+    /// Window the fused compaction gathers from (== tree_t).
+    pub fn prev_window(&self) -> usize {
+        self.prev_window_
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub executables: BTreeMap<String, ExecSpec>,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub consts: Consts,
+}
+
+fn req_usize(j: &Json, k: &str) -> Result<usize> {
+    j.at(k)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("'{k}' is not a number"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let cj = j.at("consts")?;
+        let usizes = |k: &str| -> Result<Vec<usize>> {
+            Ok(cj
+                .at(k)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("'{k}' not an array"))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect())
+        };
+        let consts = Consts {
+            chunk: req_usize(cj, "chunk")?,
+            tree_t: req_usize(cj, "tree_t")?,
+            refresh_t: req_usize(cj, "refresh_t")?,
+            big_refresh_t: req_usize(cj, "big_refresh_t")?,
+            qrows: req_usize(cj, "qrows")?,
+            draft_w: req_usize(cj, "draft_w")?,
+            draft_region: req_usize(cj, "draft_region")?,
+            block: req_usize(cj, "block")?,
+            prev_max_: req_usize(cj, "prev_max")?,
+            prev_window_: req_usize(cj, "prev_window")?,
+            vocab: req_usize(cj, "vocab")?,
+            full_buckets: usizes("full_buckets")?,
+            partial_buckets: usizes("partial_buckets")?,
+            tiny_bucket: req_usize(cj, "tiny_bucket")?,
+        };
+
+        let mut models = BTreeMap::new();
+        for (name, mj) in j
+            .at("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    n_layer: req_usize(mj, "n_layer")?,
+                    d_model: req_usize(mj, "d_model")?,
+                    n_head: req_usize(mj, "n_head")?,
+                    d_head: req_usize(mj, "d_head")?,
+                    d_ff: req_usize(mj, "d_ff")?,
+                    vocab: req_usize(mj, "vocab")?,
+                    weights_file: mj
+                        .at("weights")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("weights not a string"))?
+                        .to_string(),
+                    yarn_factor: mj
+                        .at("yarn_factor")?
+                        .as_f64()
+                        .unwrap_or(1.0),
+                },
+            );
+        }
+
+        let mut executables = BTreeMap::new();
+        for (name, ej) in j
+            .at("executables")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("executables not an object"))?
+        {
+            let mut args = Vec::new();
+            for aj in ej
+                .at("args")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("args not an array"))?
+            {
+                let dtype = match aj.at("dtype")?.as_str() {
+                    Some("float32") => DType::F32,
+                    Some("int32") => DType::I32,
+                    other => bail!("unsupported dtype {other:?}"),
+                };
+                args.push(ArgSpec {
+                    name: aj
+                        .at("name")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("arg name"))?
+                        .to_string(),
+                    shape: aj
+                        .at("shape")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("arg shape"))?
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect(),
+                    dtype,
+                });
+            }
+            let layout = match ej.get("layout") {
+                Some(Json::Obj(_)) => {
+                    let lj = ej.at("layout")?;
+                    Some(StateLayout {
+                        kv: req_usize(lj, "kv")?,
+                        logits: req_usize(lj, "logits")?,
+                        feats: req_usize(lj, "feats")?,
+                        queries: req_usize(lj, "queries")?,
+                        total: req_usize(lj, "total")?,
+                    })
+                }
+                _ => None,
+            };
+            let attrs = ej.at("attrs")?;
+            executables.insert(
+                name.clone(),
+                ExecSpec {
+                    name: name.clone(),
+                    file: ej
+                        .at("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("file"))?
+                        .to_string(),
+                    args,
+                    layout,
+                    family: attrs
+                        .get("family")
+                        .and_then(|x| x.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    size: attrs
+                        .get("size")
+                        .and_then(|x| x.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    bucket: attrs
+                        .get("bucket")
+                        .and_then(|x| x.as_usize())
+                        .unwrap_or(0),
+                    t: attrs.get("t").and_then(|x| x.as_usize()).unwrap_or(0),
+                },
+            );
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), executables, models, consts })
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("executable '{name}' not in manifest"))
+    }
+
+    pub fn model(&self, size: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(size)
+            .ok_or_else(|| anyhow!("model size '{size}' not in manifest"))
+    }
+
+    /// Smallest full bucket that can hold `len` tokens for `size`.
+    pub fn pick_bucket(&self, size: &str, len: usize) -> Result<usize> {
+        let mut buckets: Vec<usize> = self
+            .executables
+            .values()
+            .filter(|e| e.family == "verify" && e.size == size)
+            .map(|e| e.bucket)
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        buckets
+            .into_iter()
+            .find(|&b| b >= len)
+            .ok_or_else(|| anyhow!("no bucket for size {size} len {len}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argspec_weight_detection() {
+        let w = ArgSpec {
+            name: "t.embed".into(),
+            shape: vec![320, 128],
+            dtype: DType::F32,
+        };
+        let a = ArgSpec { name: "tokens".into(), shape: vec![16], dtype: DType::I32 };
+        assert!(w.is_weight());
+        assert!(!a.is_weight());
+        assert_eq!(w.elems(), 320 * 128);
+    }
+
+    #[test]
+    fn layout_offsets() {
+        let l = StateLayout { kv: 100, logits: 10, feats: 20, queries: 5, total: 135 };
+        assert_eq!(l.off_logits(), 100);
+        assert_eq!(l.off_feats(), 110);
+        assert_eq!(l.off_queries(), 130);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

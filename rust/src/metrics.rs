@@ -1,0 +1,203 @@
+//! Text-quality metrics (paper §4.1 "Metrics") and serving telemetry.
+//!
+//! * ROUGE-L — longest-common-subsequence F1 over word tokens (Lin 2004),
+//!   used for the Table 2 / Fig. 6 similarity-to-full-verification scores.
+//! * exact-match — normalized QA accuracy (Fig. 5).
+//! * bleurt_proxy — BLEURT is a learned metric and unavailable offline; we
+//!   substitute a smooth bag-of-character-ngram cosine similarity mapped to
+//!   [0, 100] (see DESIGN.md §3 substitutions).
+
+use std::collections::HashMap;
+
+/// Lowercase word tokens (unicode-whitespace split, punctuation stripped).
+fn words(s: &str) -> Vec<String> {
+    s.split_whitespace()
+        .map(|w| {
+            w.chars()
+                .filter(|c| c.is_alphanumeric())
+                .flat_map(|c| c.to_lowercase())
+                .collect::<String>()
+        })
+        .filter(|w| !w.is_empty())
+        .collect()
+}
+
+/// LCS length via the classic O(n·m) DP (rolling row).
+fn lcs_len(a: &[String], b: &[String]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for ai in a {
+        for (j, bj) in b.iter().enumerate() {
+            cur[j + 1] = if ai == bj {
+                prev[j] + 1
+            } else {
+                cur[j].max(prev[j + 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// ROUGE-L F1 in [0, 100].
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let c = words(candidate);
+    let r = words(reference);
+    if c.is_empty() || r.is_empty() {
+        return if c.is_empty() && r.is_empty() { 100.0 } else { 0.0 };
+    }
+    let l = lcs_len(&c, &r) as f64;
+    let p = l / c.len() as f64;
+    let rec = l / r.len() as f64;
+    if p + rec == 0.0 {
+        return 0.0;
+    }
+    100.0 * 2.0 * p * rec / (p + rec)
+}
+
+/// Exact match after normalization (lowercase, squeeze whitespace, strip
+/// punctuation) — the Fig. 5 QA metric.
+pub fn exact_match(candidate: &str, gold: &str) -> bool {
+    let norm = |s: &str| words(s).join(" ");
+    let c = norm(candidate);
+    let g = norm(gold);
+    // answer containment counts for generative QA ("the code ... is X.")
+    c == g || (!g.is_empty() && c.split(' ').any(|w| w == g))
+}
+
+/// BLEURT substitute: cosine similarity between character-3gram count
+/// vectors, mapped to [0, 100]. Smooth, symmetric, semantic-overlap-ish.
+pub fn bleurt_proxy(a: &str, b: &str) -> f64 {
+    fn grams(s: &str) -> HashMap<[u8; 3], f64> {
+        let bytes: Vec<u8> = s
+            .to_lowercase()
+            .bytes()
+            .filter(|b| b.is_ascii_alphanumeric() || *b == b' ')
+            .collect();
+        let mut m = HashMap::new();
+        for w in bytes.windows(3) {
+            *m.entry([w[0], w[1], w[2]]).or_insert(0.0) += 1.0;
+        }
+        m
+    }
+    let ga = grams(a);
+    let gb = grams(b);
+    if ga.is_empty() || gb.is_empty() {
+        return if ga.is_empty() && gb.is_empty() { 100.0 } else { 0.0 };
+    }
+    let dot: f64 = ga
+        .iter()
+        .filter_map(|(k, v)| gb.get(k).map(|w| v * w))
+        .sum();
+    let na: f64 = ga.values().map(|v| v * v).sum::<f64>().sqrt();
+    let nb: f64 = gb.values().map(|v| v * v).sum::<f64>().sqrt();
+    100.0 * dot / (na * nb)
+}
+
+/// Per-generation efficiency record (paper §4.1: speedup α is computed by
+/// the harness as a throughput ratio; accept length τ is macro-averaged).
+#[derive(Debug, Clone, Default)]
+pub struct GenStats {
+    /// tokens produced (excluding prompt)
+    pub new_tokens: usize,
+    /// wall-clock seconds of the decode loop (excludes prefill)
+    pub decode_secs: f64,
+    /// prefill seconds
+    pub prefill_secs: f64,
+    /// verification forward passes
+    pub verify_steps: usize,
+    /// accepted draft tokens per verify step, summed
+    pub accepted_total: usize,
+    /// time split (Fig. 1)
+    pub draft_secs: f64,
+    pub verify_secs: f64,
+    pub other_secs: f64,
+    /// SpecPV mode counts (Alg. 1)
+    pub full_steps: usize,
+    pub partial_steps: usize,
+    pub refresh_steps: usize,
+    /// simulated PCIe transfer seconds (offload runs; Fig. 4)
+    pub offload_secs: f64,
+}
+
+impl GenStats {
+    pub fn throughput(&self) -> f64 {
+        if self.decode_secs <= 0.0 {
+            return 0.0;
+        }
+        self.new_tokens as f64 / self.decode_secs
+    }
+
+    /// Average accepted draft tokens per verification step (τ). Counts
+    /// only the *drafted* tokens accepted, i.e. excludes the bonus token
+    /// the target emits itself, and may be 0 when everything is rejected.
+    pub fn accept_len(&self) -> f64 {
+        if self.verify_steps == 0 {
+            return 0.0;
+        }
+        self.accepted_total as f64 / self.verify_steps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rouge_identical() {
+        assert!((rouge_l("the cat sat", "the cat sat") - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_disjoint() {
+        assert_eq!(rouge_l("aaa bbb", "ccc ddd"), 0.0);
+    }
+
+    #[test]
+    fn rouge_partial_sane() {
+        let r = rouge_l("the cat sat on the mat", "the cat lay on a mat");
+        assert!(r > 30.0 && r < 90.0, "{r}");
+    }
+
+    #[test]
+    fn rouge_order_matters() {
+        // LCS is order-sensitive: reversal should lose score
+        let a = "one two three four five six";
+        let b = "six five four three two one";
+        assert!(rouge_l(a, a) > rouge_l(a, b));
+    }
+
+    #[test]
+    fn em_normalization() {
+        assert!(exact_match("  BaTaKo ", "batako"));
+        assert!(exact_match("the code of agent X is batako.", "batako"));
+        assert!(!exact_match("batak", "batako"));
+    }
+
+    #[test]
+    fn bleurt_proxy_bounds() {
+        assert!((bleurt_proxy("same text", "same text") - 100.0).abs() < 1e-9);
+        assert_eq!(bleurt_proxy("aaaa", "zzzz"), 0.0);
+        let mid = bleurt_proxy(
+            "the committee recorded an expenditure",
+            "the committee noted an expense",
+        );
+        assert!(mid > 20.0 && mid < 95.0, "{mid}");
+    }
+
+    #[test]
+    fn stats_math() {
+        let s = GenStats {
+            new_tokens: 100,
+            decode_secs: 2.0,
+            verify_steps: 25,
+            accepted_total: 75,
+            ..Default::default()
+        };
+        assert!((s.throughput() - 50.0).abs() < 1e-9);
+        assert!((s.accept_len() - 3.0).abs() < 1e-9);
+    }
+}

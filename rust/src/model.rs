@@ -1,0 +1,199 @@
+//! Model-facing helpers: executable naming, bucket selection, and the
+//! decoding of extractor outputs — the thin glue between the manifest's
+//! flat-state ABI and the engines.
+
+use anyhow::{bail, Result};
+
+use crate::manifest::{Consts, Manifest, ModelInfo};
+
+/// Executable names for one model size (manifest naming scheme).
+pub fn verify_name(size: &str, bucket: usize, t: usize) -> String {
+    format!("verify_{size}_b{bucket}_t{t}")
+}
+
+pub fn pverify_name(size: &str, p: usize, t: usize) -> String {
+    format!("pverify_{size}_p{p}_t{t}")
+}
+
+pub fn commit_name(size: &str, bucket: usize, w: usize) -> String {
+    format!("commit_{size}_b{bucket}_w{w}")
+}
+
+pub fn score_name(size: &str, bucket: usize) -> String {
+    format!("score_{size}_b{bucket}")
+}
+
+pub fn gather_name(size: &str, bucket: usize, p: usize) -> String {
+    format!("gather_{size}_b{bucket}_p{p}")
+}
+
+pub fn read_full_name(size: &str, bucket: usize) -> String {
+    format!("read_full_{size}_b{bucket}")
+}
+
+pub fn read_last_name(size: &str, bucket: usize) -> String {
+    format!("read_last_{size}_b{bucket}")
+}
+
+pub fn read_partial_name(size: &str, p: usize) -> String {
+    format!("read_partial_{size}_p{p}")
+}
+
+pub fn draft_prefill_name(size: &str, bucket: usize) -> String {
+    format!("draft_prefill_{size}_b{bucket}")
+}
+
+pub fn draft_step_name(size: &str, bucket: usize) -> String {
+    format!("draft_step_{size}_b{bucket}")
+}
+
+pub fn read_draft_name(size: &str, bucket: usize) -> String {
+    format!("read_draft_{size}_b{bucket}")
+}
+
+pub fn medusa_name(size: &str) -> String {
+    format!("medusa_{size}")
+}
+
+/// Smallest compiled full bucket for `size` that holds `need` tokens
+/// (including tree/compaction headroom).
+pub fn pick_full_bucket(m: &Manifest, size: &str, need: usize) -> Result<usize> {
+    let mut buckets: Vec<usize> = m
+        .executables
+        .values()
+        .filter(|e| e.family == "verify" && e.size == size)
+        .map(|e| e.bucket)
+        .collect();
+    buckets.sort_unstable();
+    buckets.dedup();
+    match buckets.iter().find(|&&b| b >= need) {
+        Some(&b) => Ok(b),
+        None => bail!(
+            "no full bucket ≥ {need} for size {size} (have {buckets:?})"
+        ),
+    }
+}
+
+/// Smallest compiled partial bucket for `size` holding `core + headroom`.
+pub fn pick_partial_bucket(m: &Manifest, size: &str, need: usize) -> Result<usize> {
+    let mut buckets: Vec<usize> = m
+        .executables
+        .values()
+        .filter(|e| e.family == "pverify" && e.size == size)
+        .map(|e| e.bucket)
+        .collect();
+    buckets.sort_unstable();
+    buckets.dedup();
+    match buckets.iter().find(|&&b| b >= need) {
+        Some(&b) => Ok(b),
+        None => bail!(
+            "no partial bucket ≥ {need} for size {size} (have {buckets:?})"
+        ),
+    }
+}
+
+/// Decoded output of a `read_full_*` / `read_partial_*` extractor: `rows`
+/// rows of logits `[rows, vocab]` and fused features `[rows, 3h]`.
+#[derive(Debug)]
+pub struct ReadOut {
+    pub rows: usize,
+    pub vocab: usize,
+    pub feat_dim: usize,
+    data: Vec<f32>,
+}
+
+impl ReadOut {
+    pub fn new(data: Vec<f32>, rows: usize, vocab: usize, feat_dim: usize) -> Result<ReadOut> {
+        if data.len() != rows * (vocab + feat_dim) {
+            bail!(
+                "read output length {} != rows {rows} × (V {vocab} + F {feat_dim})",
+                data.len()
+            );
+        }
+        Ok(ReadOut { rows, vocab, feat_dim, data })
+    }
+
+    pub fn logits(&self, row: usize) -> &[f32] {
+        assert!(row < self.rows);
+        &self.data[row * self.vocab..(row + 1) * self.vocab]
+    }
+
+    pub fn feats(&self, row: usize) -> &[f32] {
+        let off = self.rows * self.vocab;
+        &self.data[off + row * self.feat_dim..off + (row + 1) * self.feat_dim]
+    }
+}
+
+/// Decoded `read_draft_*` output: `[w, vocab]` logits + `[w, h]` hiddens.
+#[derive(Debug)]
+pub struct DraftOut {
+    pub w: usize,
+    pub vocab: usize,
+    pub hidden: usize,
+    data: Vec<f32>,
+}
+
+impl DraftOut {
+    pub fn new(data: Vec<f32>, w: usize, vocab: usize, hidden: usize) -> Result<DraftOut> {
+        if data.len() != w * (vocab + hidden) {
+            bail!("draft read length {} mismatch", data.len());
+        }
+        Ok(DraftOut { w, vocab, hidden, data })
+    }
+
+    pub fn logits(&self, i: usize) -> &[f32] {
+        &self.data[i * self.vocab..(i + 1) * self.vocab]
+    }
+
+    pub fn hidden(&self, i: usize) -> &[f32] {
+        let off = self.w * self.vocab;
+        &self.data[off + i * self.hidden..off + (i + 1) * self.hidden]
+    }
+}
+
+/// Bytes of one token's K+V rows across all layers (offload cost model).
+pub fn kv_bytes_per_token(info: &ModelInfo) -> usize {
+    info.n_layer * 2 * info.n_head * info.d_head * 4
+}
+
+/// Required full bucket for a request: prompt + generation + tree/refresh
+/// headroom.
+pub fn bucket_need(prompt: usize, max_new: usize, consts: &Consts) -> usize {
+    prompt + max_new + consts.chunk + consts.refresh_t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names() {
+        assert_eq!(verify_name("s", 1024, 16), "verify_s_b1024_t16");
+        assert_eq!(pverify_name("s", 768, 16), "pverify_s_p768_t16");
+        assert_eq!(commit_name("s", 4096, 192), "commit_s_b4096_w192");
+    }
+
+    #[test]
+    fn readout_slicing() {
+        // 2 rows, vocab 3, feat 2
+        let data = vec![
+            1.0, 2.0, 3.0, 4.0, 5.0, 6.0, // logits rows
+            0.1, 0.2, 0.3, 0.4, // feats rows
+        ];
+        let r = ReadOut::new(data, 2, 3, 2).unwrap();
+        assert_eq!(r.logits(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(r.feats(0), &[0.1, 0.2]);
+        assert!(ReadOut::new(vec![0.0; 7], 2, 3, 2).is_err());
+    }
+
+    #[test]
+    fn draftout_slicing() {
+        let data = vec![
+            1.0, 2.0, // logits w=2, vocab=1
+            9.0, 8.0, 7.0, 6.0, // hidden w=2, h=2
+        ];
+        let d = DraftOut::new(data, 2, 1, 2).unwrap();
+        assert_eq!(d.logits(1), &[2.0]);
+        assert_eq!(d.hidden(0), &[9.0, 8.0]);
+    }
+}

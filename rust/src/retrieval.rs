@@ -1,0 +1,192 @@
+//! Retrieval-block selection for the partial KV cache (paper §3.2).
+//!
+//! The `score_*` executable returns, per layer, the three reductions
+//! (mean/max/last) of the Quest-style block scores; this module picks the
+//! top-k retrieval blocks per layer, merges them with the always-kept
+//! sink and local blocks, and produces the per-layer gather index list
+//! (token order: sink ++ retrieval ++ local) the `gather_*` executable
+//! consumes, plus the valid-length bookkeeping of the resulting cache.
+
+use crate::config::{Reduction, SpecPvConfig};
+
+pub const NEG_INF: f32 = -1e30;
+
+/// The gather plan for one refresh: per-layer block ids (each `nsel`
+/// long, padded by repeating the final block) and the valid token count
+/// of the assembled core.
+#[derive(Debug, Clone)]
+pub struct GatherPlan {
+    /// [L][nsel] block indices in token order
+    pub block_idx: Vec<Vec<i32>>,
+    /// valid tokens in the partial cache after gathering (== write offset
+    /// for the buffer region); identical across layers by construction
+    pub core_len: usize,
+    /// number of real (unpadded) blocks per layer
+    pub core_blocks: usize,
+}
+
+/// Scores layout from the executable: `[L, 3, NB]` flattened.
+pub fn layer_scores<'a>(
+    scores: &'a [f32],
+    layer: usize,
+    nb: usize,
+    red: Reduction,
+) -> &'a [f32] {
+    let off = layer * 3 * nb + red.row() * nb;
+    &scores[off..off + nb]
+}
+
+/// Top-k block indices by score, excluding `excluded`, ascending order.
+fn top_blocks(
+    scores: &[f32],
+    k: usize,
+    lo_excluded: usize,
+    hi_start: usize,
+) -> Vec<usize> {
+    // candidates: [lo_excluded, hi_start) — sink blocks below, local above
+    let mut idx: Vec<usize> = (lo_excluded..hi_start)
+        .filter(|&i| scores[i] > NEG_INF / 2.0)
+        .collect();
+    idx.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+/// Build the gather plan after a Refresh.
+///
+/// * `scores`: flat `[L, 3, NB]` download from the score executable.
+/// * `committed`: target-cache committed token count (post-commit).
+/// * `nsel`: gather width in blocks (partial bucket / block).
+pub fn plan_gather(
+    scores: &[f32],
+    n_layer: usize,
+    nb: usize,
+    block: usize,
+    committed: usize,
+    nsel: usize,
+    cfg: &SpecPvConfig,
+) -> GatherPlan {
+    assert!(committed > 0, "cannot build a partial cache before prefill");
+    let valid_blocks = committed.div_ceil(block).min(nb);
+    let sink = cfg.sink_blocks.min(valid_blocks);
+    let local = cfg.local_blocks.min(valid_blocks - sink);
+    let local_start = valid_blocks - local;
+    let want_ret = (cfg.retrieval_budget / block)
+        .min(nsel.saturating_sub(sink + local));
+
+    let mut block_idx = Vec::with_capacity(n_layer);
+    let mut core_blocks = 0usize;
+    for l in 0..n_layer {
+        let s = layer_scores(scores, l, nb, cfg.reduction);
+        let ret = top_blocks(s, want_ret, sink, local_start);
+        let mut ids: Vec<i32> = Vec::with_capacity(nsel);
+        ids.extend((0..sink).map(|b| b as i32));
+        ids.extend(ret.iter().map(|&b| b as i32));
+        ids.extend((local_start..valid_blocks).map(|b| b as i32));
+        core_blocks = ids.len();
+        // pad by repeating the final block; padded slots land beyond the
+        // valid length and are never visible to attention
+        let last = *ids.last().expect("nonempty plan");
+        while ids.len() < nsel {
+            ids.push(last);
+        }
+        assert_eq!(ids.len(), nsel);
+        block_idx.push(ids);
+    }
+
+    // the final core block is the one containing token committed-1; it is
+    // partially filled unless committed % block == 0
+    let fill = (committed - 1) % block + 1;
+    let core_len = (core_blocks - 1) * block + fill;
+    GatherPlan { block_idx, core_len, core_blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+
+    fn cfg(budget: usize) -> SpecPvConfig {
+        SpecPvConfig { retrieval_budget: budget, ..Default::default() }
+    }
+
+    fn mk_scores(n_layer: usize, nb: usize, f: impl Fn(usize, usize) -> f32) -> Vec<f32> {
+        // identical mean/max/last rows for test simplicity
+        let mut v = vec![0f32; n_layer * 3 * nb];
+        for l in 0..n_layer {
+            for r in 0..3 {
+                for b in 0..nb {
+                    v[l * 3 * nb + r * nb + b] = f(l, b);
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn picks_highest_scoring_blocks() {
+        let nb = 32;
+        let scores = mk_scores(2, nb, |_, b| if b == 10 || b == 20 { 5.0 } else { 0.1 });
+        // budget 2 blocks => exactly blocks 10, 20 chosen as retrieval
+        let plan = plan_gather(&scores, 2, nb, 32, 32 * 30, 2 + 1 + 2, &cfg(64));
+        for l in 0..2 {
+            let ids = &plan.block_idx[l];
+            assert_eq!(ids[0], 0); // sink
+            assert_eq!(&ids[1..3], &[10, 20]); // retrieval ascending
+            assert_eq!(&ids[3..5], &[28, 29]); // local = last two blocks
+        }
+    }
+
+    #[test]
+    fn partial_last_block_shortens_core_len() {
+        let nb = 16;
+        let scores = mk_scores(1, nb, |_, b| b as f32);
+        let committed = 32 * 7 + 5; // last block holds 5 tokens
+        let plan = plan_gather(&scores, 1, nb, 32, committed, 6, &cfg(64));
+        assert_eq!(plan.core_blocks, 1 + 2 + 2); // sink + 2 ret + 2 local
+        assert_eq!(plan.core_len, (5 - 1) * 32 + 5);
+    }
+
+    #[test]
+    fn pads_to_nsel() {
+        let nb = 8;
+        let scores = mk_scores(1, nb, |_, b| b as f32);
+        let plan = plan_gather(&scores, 1, nb, 32, 32 * 8, 16, &cfg(1024));
+        assert_eq!(plan.block_idx[0].len(), 16);
+        // padding repeats the last real block
+        let last_real = plan.block_idx[0][plan.core_blocks - 1];
+        for &p in &plan.block_idx[0][plan.core_blocks..] {
+            assert_eq!(p, last_real);
+        }
+    }
+
+    #[test]
+    fn excludes_sink_and_local_from_retrieval() {
+        Prop::new("retrieval excludes sink/local", 100).run(|g| {
+            let nb = g.usize_in(8, 64);
+            let n_layer = g.usize_in(1, 4);
+            let committed = g.usize_in(5 * 32, nb * 32);
+            let scores: Vec<f32> =
+                (0..n_layer * 3 * nb).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let c = cfg(*g.pick(&[64usize, 128, 256]));
+            let nsel = (c.retrieval_budget / 32 + 3).min(nb);
+            let plan = plan_gather(&scores, n_layer, nb, 32, committed, nsel, &c);
+            let valid_blocks = committed.div_ceil(32).min(nb);
+            for ids in &plan.block_idx {
+                // strictly ascending within the real core, within range
+                for w in ids[..plan.core_blocks].windows(2) {
+                    assert!(w[0] < w[1], "{ids:?}");
+                }
+                for &b in &ids[..plan.core_blocks] {
+                    assert!((b as usize) < valid_blocks);
+                }
+            }
+            // core_len consistent with committed fill
+            let fill = (committed - 1) % 32 + 1;
+            assert_eq!(plan.core_len, (plan.core_blocks - 1) * 32 + fill);
+        });
+    }
+}

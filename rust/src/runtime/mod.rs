@@ -1,0 +1,297 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) and executes them on
+//! the CPU PJRT client with device-resident state threading.
+//!
+//! Key design points (see DESIGN.md §4 and aot.py's FLAT-STATE ABI note):
+//! * executables are compiled lazily on first use and cached — a process
+//!   only pays for the (size, bucket, T) variants its run touches;
+//! * weights are uploaded once per model size and reused as device
+//!   buffers across every call (`execute_b`);
+//! * each stateful executable returns exactly one flat f32 state buffer,
+//!   which stays on device and is passed straight into the next call —
+//!   zero host↔device KV traffic in steady state;
+//! * small host-visible results flow through the tiny `read_*` extractor
+//!   executables (the CPU client implements neither result untupling nor
+//!   CopyRawToHost).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::manifest::{ArgSpec, DType, ExecSpec, Manifest};
+use crate::weights::Weights;
+
+/// A per-call argument value. Weight arguments are appended automatically
+/// by the runtime in manifest order.
+pub enum Arg<'a> {
+    /// i32 tensor (tokens, positions, indices)
+    I32(&'a [i32]),
+    /// f32 tensor (tree masks, features)
+    F32(&'a [f32]),
+    /// i32 scalar (kv_len, n_prev, …)
+    Scalar(i32),
+    /// a device-resident buffer (threaded state, another exec's output)
+    Buf(&'a PjRtBuffer),
+}
+
+/// Execution counters for the perf pass and the metrics registry.
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    pub executions: u64,
+    pub exec_secs: f64,
+    pub compilations: u64,
+    pub compile_secs: f64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    pub per_exec: HashMap<String, (u64, f64)>,
+}
+
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    compiled: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    weight_bufs: RefCell<HashMap<String, Rc<Vec<(String, PjRtBuffer)>>>>,
+    pub counters: RefCell<Counters>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (must contain
+    /// `manifest.json`, the `*.hlo.txt` files and the weights binaries).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            compiled: RefCell::new(HashMap::new()),
+            weight_bufs: RefCell::new(HashMap::new()),
+            counters: RefCell::new(Counters::default()),
+        })
+    }
+
+    fn compile(&self, spec: &ExecSpec) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.borrow().get(&spec.name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("loading {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e}", spec.name))?,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut c = self.counters.borrow_mut();
+            c.compilations += 1;
+            c.compile_secs += dt;
+        }
+        self.compiled
+            .borrow_mut()
+            .insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload (once) and return the weight buffer set for a model size.
+    fn weights_for(&self, size: &str) -> Result<Rc<Vec<(String, PjRtBuffer)>>> {
+        if let Some(w) = self.weight_bufs.borrow().get(size) {
+            return Ok(w.clone());
+        }
+        let info = self.manifest.model(size)?;
+        let w = Weights::load(&self.manifest.dir.join(&info.weights_file))?;
+        let mut bufs = Vec::new();
+        let mut bytes = 0u64;
+        for (name, t) in &w.tensors {
+            let buf = self
+                .client
+                .buffer_from_host_buffer(&t.data, &t.dims, None)
+                .map_err(|e| anyhow::anyhow!("uploading {name}: {e}"))?;
+            bytes += (t.data.len() * 4) as u64;
+            bufs.push((name.clone(), buf));
+        }
+        self.counters.borrow_mut().upload_bytes += bytes;
+        let rc = Rc::new(bufs);
+        self.weight_bufs
+            .borrow_mut()
+            .insert(size.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload a host f32 tensor as a device buffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.counters.borrow_mut().upload_bytes += (data.len() * 4) as u64;
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload_f32: {e}"))
+    }
+
+    /// Fresh all-zero state buffer of `n` f32 elements.
+    pub fn zero_state(&self, n: usize) -> Result<PjRtBuffer> {
+        self.upload_f32(&vec![0f32; n], &[n])
+    }
+
+    /// Download a whole f32 device buffer to the host.
+    pub fn download_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit: Literal = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+        let v = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?;
+        self.counters.borrow_mut().download_bytes += (v.len() * 4) as u64;
+        Ok(v)
+    }
+
+    /// Invoke an executable by manifest name. `inputs` must cover the
+    /// non-weight arguments in manifest order; weight args are appended
+    /// automatically from the per-size weight set. Returns the single
+    /// output buffer (flat state or extractor result).
+    pub fn invoke(&self, name: &str, inputs: &[Arg]) -> Result<PjRtBuffer> {
+        let spec = self.manifest.exec(name)?.clone();
+        let exe = self.compile(&spec)?;
+
+        let call_args: Vec<&ArgSpec> =
+            spec.args.iter().filter(|a| !a.is_weight()).collect();
+        if call_args.len() != inputs.len() {
+            bail!(
+                "{name}: expected {} call args, got {}",
+                call_args.len(),
+                inputs.len()
+            );
+        }
+
+        // temporaries must outlive the arg-ref vector
+        let mut tmp: Vec<PjRtBuffer> = Vec::new();
+        
+        enum Slot {
+            Tmp(usize),
+            Ext,
+            Weight(usize),
+        }
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut ext_refs: Vec<&PjRtBuffer> = Vec::new();
+
+        let mut input_iter = inputs.iter();
+        let weights = if spec.args.iter().any(|a| a.is_weight()) {
+            Some(self.weights_for(&spec.size)?)
+        } else {
+            None
+        };
+        let mut widx = 0usize;
+        for a in &spec.args {
+            if a.is_weight() {
+                let ws = weights.as_ref().unwrap();
+                // weight args appear in manifest order == sorted order ==
+                // BTreeMap iteration order, but draft executables mix "d."
+                // and "t." groups — look up by name for robustness.
+                let pos = ws
+                    .iter()
+                    .position(|(n, _)| n == &a.name)
+                    .with_context(|| format!("{name}: weight {} missing", a.name))?;
+                slots.push(Slot::Weight(pos));
+                widx += 1;
+                continue;
+            }
+            let v = input_iter.next().unwrap();
+            match v {
+                Arg::I32(xs) => {
+                    if xs.len() != a.elems() {
+                        bail!("{name}: arg {} wants {} i32, got {}",
+                              a.name, a.elems(), xs.len());
+                    }
+                    if a.dtype != DType::I32 {
+                        bail!("{name}: arg {} is not i32", a.name);
+                    }
+                    let b = self
+                        .client
+                        .buffer_from_host_buffer(xs, &a.shape, None)
+                        .map_err(|e| anyhow::anyhow!("{name}/{}: {e}", a.name))?;
+                    tmp.push(b);
+                    slots.push(Slot::Tmp(tmp.len() - 1));
+                }
+                Arg::F32(xs) => {
+                    if xs.len() != a.elems() || a.dtype != DType::F32 {
+                        bail!("{name}: arg {} f32 shape mismatch", a.name);
+                    }
+                    let b = self
+                        .client
+                        .buffer_from_host_buffer(xs, &a.shape, None)
+                        .map_err(|e| anyhow::anyhow!("{name}/{}: {e}", a.name))?;
+                    tmp.push(b);
+                    slots.push(Slot::Tmp(tmp.len() - 1));
+                }
+                Arg::Scalar(x) => {
+                    if !a.shape.is_empty() {
+                        bail!("{name}: arg {} is not scalar", a.name);
+                    }
+                    let b = self
+                        .client
+                        .buffer_from_host_buffer(&[*x], &[], None)
+                        .map_err(|e| anyhow::anyhow!("{name}/{}: {e}", a.name))?;
+                    tmp.push(b);
+                    slots.push(Slot::Tmp(tmp.len() - 1));
+                }
+                Arg::Buf(b) => {
+                    ext_refs.push(b);
+                    slots.push(Slot::Ext);
+                }
+            }
+        }
+        let _ = widx;
+
+        let mut ext_iter = ext_refs.iter();
+        let refs: Vec<&PjRtBuffer> = slots
+            .iter()
+            .map(|s| match s {
+                Slot::Tmp(i) => &tmp[*i],
+                Slot::Ext => *ext_iter.next().unwrap(),
+                Slot::Weight(i) => &weights.as_ref().unwrap()[*i].1,
+            })
+            .collect();
+
+        let t0 = Instant::now();
+        let mut outs = exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut c = self.counters.borrow_mut();
+            c.executions += 1;
+            c.exec_secs += dt;
+            let e = c.per_exec.entry(name.to_string()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += dt;
+        }
+        let mut replica = outs
+            .pop()
+            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) });
+        // execute_b returns outputs[replica][buffer]; single replica here
+        // (first Vec level is per-output for untupled single results)
+        match replica.take() {
+            Some(b) => Ok(b),
+            None => bail!("{name}: no output buffer"),
+        }
+    }
+
+    /// Convenience: invoke + download (for extractor executables).
+    pub fn invoke_download(&self, name: &str, inputs: &[Arg]) -> Result<Vec<f32>> {
+        let b = self.invoke(name, inputs)?;
+        self.download_f32(&b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime integration tests live in rust/tests/ (they need artifacts);
+    // here we only check pure helpers.
+}

@@ -1,0 +1,199 @@
+//! Token selection: greedy argmax, temperature sampling, and tree-walk
+//! speculative sampling (Leviathan et al. 2023 / SpecInfer-style multi-
+//! candidate verification). The efficiency benches run at temperature 0
+//! like the paper (§4.2); stochastic verification is exercised by unit
+//! tests and available through the server API.
+
+use crate::util::rng::Rng;
+
+/// Softmax over a logits row (numerically stable), optionally tempered.
+pub fn softmax(logits: &[f32], temperature: f32) -> Vec<f32> {
+    let t = temperature.max(1e-6);
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| ((x - m) / t).exp()).collect();
+    let z: f32 = exps.iter().sum::<f32>().max(1e-30);
+    exps.iter().map(|e| e / z).collect()
+}
+
+/// log-softmax (for draft-tree cumulative scores).
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let z: f32 = logits.iter().map(|&x| (x - m).exp()).sum();
+    let lz = z.ln() + m;
+    logits.iter().map(|&x| x - lz).collect()
+}
+
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the top-k logits, descending.
+pub fn top_k(logits: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    let k = k.min(idx.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+/// Sample an index from a probability vector.
+pub fn sample(probs: &[f32], rng: &mut Rng) -> usize {
+    let r = rng.f64() as f32;
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if r < acc {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+/// Pick the committed token at a verified node: greedy argmax at
+/// temperature 0, otherwise a categorical sample.
+pub fn pick_token(logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 {
+        argmax(logits) as u32
+    } else {
+        sample(&softmax(logits, temperature), rng) as u32
+    }
+}
+
+/// Single-candidate speculative acceptance (Leviathan et al. 2023):
+/// accept draft token `x` with prob min(1, p(x)/q(x)); on rejection,
+/// resample from normalize(max(p − q, 0)). `p`/`q` are target/draft
+/// probability vectors. Returns (accepted, committed_token).
+pub fn spec_accept(
+    p: &[f32],
+    q: &[f32],
+    x: usize,
+    rng: &mut Rng,
+) -> (bool, usize) {
+    let px = p[x];
+    let qx = q[x].max(1e-30);
+    if (rng.f64() as f32) < (px / qx).min(1.0) {
+        return (true, x);
+    }
+    // residual distribution
+    let resid: Vec<f32> = p
+        .iter()
+        .zip(q.iter())
+        .map(|(&pi, &qi)| (pi - qi).max(0.0))
+        .collect();
+    let z: f32 = resid.iter().sum();
+    if z <= 0.0 {
+        // p ≤ q everywhere except x (can't happen with proper dists, but
+        // guard): fall back to sampling from p
+        return (false, sample(p, rng));
+    }
+    let norm: Vec<f32> = resid.iter().map(|r| r / z).collect();
+    (false, sample(&norm, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_temperature_sharpens() {
+        let hot = softmax(&[1.0, 2.0], 2.0);
+        let cold = softmax(&[1.0, 2.0], 0.1);
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn argmax_topk() {
+        let l = [0.1f32, 5.0, -1.0, 3.0];
+        assert_eq!(argmax(&l), 1);
+        assert_eq!(top_k(&l, 2), vec![1, 3]);
+        assert_eq!(top_k(&l, 10).len(), 4);
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let l = [0.5f32, 1.5, -0.5];
+        let ls = log_softmax(&l);
+        let p = softmax(&l, 1.0);
+        for i in 0..3 {
+            assert!((ls[i].exp() - p[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sample_respects_support() {
+        let mut rng = Rng::new(1);
+        let probs = [0.0f32, 1.0, 0.0];
+        for _ in 0..100 {
+            assert_eq!(sample(&probs, &mut rng), 1);
+        }
+    }
+
+    /// The headline correctness property of speculative sampling: the
+    /// committed-token distribution equals the target distribution p,
+    /// regardless of the draft q (Leviathan et al., Thm 1).
+    #[test]
+    fn spec_sampling_preserves_distribution() {
+        let p = vec![0.5f32, 0.3, 0.2];
+        let q = vec![0.2f32, 0.2, 0.6];
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 3];
+        let n = 60_000;
+        for _ in 0..n {
+            let x = sample(&q, &mut rng);
+            let (_, committed) = spec_accept(&p, &q, x, &mut rng);
+            counts[committed] += 1;
+        }
+        for i in 0..3 {
+            let freq = counts[i] as f32 / n as f32;
+            assert!(
+                (freq - p[i]).abs() < 0.02,
+                "token {i}: freq {freq} vs p {}",
+                p[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pick_token_greedy_matches_argmax() {
+        Prop::new("greedy pick == argmax", 100).run(|g| {
+            let n = g.usize_in(1, 50);
+            let l = g.vec_f32(n, -5.0, 5.0);
+            let mut rng = Rng::new(g.u64());
+            assert_eq!(pick_token(&l, 0.0, &mut rng), argmax(&l) as u32);
+        });
+    }
+
+    #[test]
+    fn topk_property_sorted_and_maximal() {
+        Prop::new("top_k sorted desc, contains max", 100).run(|g| {
+            let n = g.usize_in(1, 64);
+            let l = g.vec_f32(n, -10.0, 10.0);
+            let k = g.usize_in(1, l.len());
+            let t = top_k(&l, k);
+            assert_eq!(t.len(), k);
+            for w in t.windows(2) {
+                assert!(l[w[0]] >= l[w[1]]);
+            }
+            assert_eq!(t[0], argmax(&l));
+        });
+    }
+}

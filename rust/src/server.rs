@@ -1,0 +1,192 @@
+//! TCP JSON-lines serving protocol (std::net — tokio is not in the
+//! offline vendor set, and the PJRT client is single-device anyway, so a
+//! blocking accept loop with a request queue is the right shape).
+//!
+//! Protocol: one JSON object per line.
+//!   → {"op":"generate","prompt":"...","max_new":128,"engine":"spec_pv",
+//!      "temperature":0.0}
+//!   ← {"ok":true,"text":"...","tokens":57,"tok_per_s":31.2,"tau":2.9,
+//!      "modes":{"full":1,"partial":12,"refresh":3}}
+//!   → {"op":"metrics"}           ← {"ok":true,"summary":"..."}
+//!   → {"op":"ping"}              ← {"ok":true}
+//!   → {"op":"shutdown"}          ← {"ok":true}  (server exits)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Config;
+use crate::coordinator::Coordinator;
+use crate::engine::GenRequest;
+use crate::json::Json;
+use crate::runtime::Runtime;
+use crate::tokenizer;
+
+/// Serve forever (or until a `shutdown` op). One connection at a time:
+/// the device is serial, so parallel accepts would only queue anyway.
+pub fn serve(rt: &Runtime, cfg: Config) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.server_addr)
+        .with_context(|| format!("binding {}", cfg.server_addr))?;
+    println!("specpv server listening on {}", cfg.server_addr);
+    let mut coord = Coordinator::new(rt, cfg);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        match handle_conn(stream, &mut coord) {
+            Ok(true) => break, // shutdown requested
+            Ok(false) => {}
+            Err(e) => eprintln!("connection error: {e:#}"),
+        }
+    }
+    println!("server metrics: {}", coord.registry.summary());
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, coord: &mut Coordinator) -> Result<bool> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(false); // client closed
+        }
+        let req = match Json::parse(line.trim()) {
+            Ok(j) => j,
+            Err(e) => {
+                write_json(
+                    &mut writer,
+                    Json::obj().set("ok", false).set("error", format!("{e:#}")),
+                )?;
+                continue;
+            }
+        };
+        let op = req.get("op").and_then(|x| x.as_str()).unwrap_or("generate");
+        match op {
+            "ping" => write_json(&mut writer, Json::obj().set("ok", true))?,
+            "metrics" => write_json(
+                &mut writer,
+                Json::obj()
+                    .set("ok", true)
+                    .set("summary", coord.registry.summary()),
+            )?,
+            "shutdown" => {
+                write_json(&mut writer, Json::obj().set("ok", true))?;
+                return Ok(true);
+            }
+            "generate" => {
+                let resp = match handle_generate(&req, coord) {
+                    Ok(j) => j,
+                    Err(e) => Json::obj()
+                        .set("ok", false)
+                        .set("error", format!("{e:#}")),
+                };
+                write_json(&mut writer, resp)?;
+            }
+            other => write_json(
+                &mut writer,
+                Json::obj()
+                    .set("ok", false)
+                    .set("error", format!("unknown op '{other}' from {peer}")),
+            )?,
+        }
+    }
+}
+
+fn handle_generate(req: &Json, coord: &mut Coordinator) -> Result<Json> {
+    let prompt = req
+        .get("prompt")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow!("missing 'prompt'"))?;
+    let max_new = req
+        .get("max_new")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(coord.cfg.max_new_tokens);
+    let temperature = req
+        .get("temperature")
+        .and_then(|x| x.as_f64())
+        .unwrap_or(coord.cfg.temperature as f64) as f32;
+    let engine = match req.get("engine").and_then(|x| x.as_str()) {
+        Some(e) => Some(e.parse()?),
+        None => None,
+    };
+    let seed = req.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
+
+    let gen = GenRequest {
+        prompt: tokenizer::encode(prompt),
+        max_new,
+        temperature,
+        seed,
+    };
+    let id = coord.submit(gen, engine)?;
+    coord.step();
+    let tr = coord.get(id).ok_or_else(|| anyhow!("request vanished"))?;
+    match (&tr.state, &tr.result) {
+        (crate::coordinator::RequestState::Done, Some(r)) => Ok(Json::obj()
+            .set("ok", true)
+            .set("text", r.text())
+            .set("tokens", r.tokens.len())
+            .set("tok_per_s", r.stats.throughput())
+            .set("tau", r.stats.accept_len())
+            .set(
+                "modes",
+                Json::obj()
+                    .set("full", r.stats.full_steps)
+                    .set("partial", r.stats.partial_steps)
+                    .set("refresh", r.stats.refresh_steps),
+            )
+            .set("latency_s", tr.service_secs)),
+        (crate::coordinator::RequestState::Failed(e), _) => {
+            Ok(Json::obj().set("ok", false).set("error", e.as_str()))
+        }
+        _ => Ok(Json::obj().set("ok", false).set("error", "not finished")),
+    }
+}
+
+fn write_json(w: &mut TcpStream, j: Json) -> Result<()> {
+    let mut s = j.to_string();
+    s.push('\n');
+    w.write_all(s.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Blocking client for examples/tests.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    pub fn call(&mut self, req: Json) -> Result<Json> {
+        let mut s = req.to_string();
+        s.push('\n');
+        self.stream.write_all(s.as_bytes())?;
+        self.stream.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim())
+    }
+
+    pub fn generate(&mut self, prompt: &str, max_new: usize, engine: &str) -> Result<Json> {
+        self.call(
+            Json::obj()
+                .set("op", "generate")
+                .set("prompt", prompt)
+                .set("max_new", max_new)
+                .set("engine", engine),
+        )
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.call(Json::obj().set("op", "shutdown"))?;
+        Ok(())
+    }
+}

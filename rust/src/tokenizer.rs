@@ -1,0 +1,69 @@
+//! Byte-level tokenizer (+ BOS/EOS/PAD specials), mirroring
+//! `python/compile/data.py`: token id == byte value for 0..=255.
+
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+pub const PAD: u32 = 258;
+pub const VOCAB: usize = 320;
+
+/// Encode UTF-8 text to byte-level token ids (no specials added).
+pub fn encode(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| b as u32).collect()
+}
+
+/// Decode token ids back to text; specials and out-of-range ids are
+/// dropped, invalid UTF-8 is replaced.
+pub fn decode(ids: &[u32]) -> String {
+    let bytes: Vec<u8> =
+        ids.iter().filter(|&&t| t < 256).map(|&t| t as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Is this token a sequence terminator?
+pub fn is_eos(t: u32) -> bool {
+    t == EOS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let s = "Hello, SpecPV! 123";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let s = "café → λ";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let mut ids = encode("ab");
+        ids.insert(0, BOS);
+        ids.push(EOS);
+        ids.push(PAD);
+        assert_eq!(decode(&ids), "ab");
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        for t in encode("any text ü") {
+            assert!((t as usize) < VOCAB);
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        Prop::new("tokenizer ascii roundtrip", 200).run(|g| {
+            let s: String = (0..g.usize_in(0, 64))
+                .map(|_| (g.usize_in(0x20, 0x7e) as u8) as char)
+                .collect();
+            assert_eq!(decode(&encode(&s)), s);
+        });
+    }
+}

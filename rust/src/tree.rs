@@ -1,0 +1,374 @@
+//! Draft-tree construction and flattening (EAGLE-2-style dynamic trees,
+//! paper §2 "organize candidate tokens … token tree").
+//!
+//! The engine drafts level by level; this module owns the tree data
+//! structure, the selection of which nodes enter the verification step,
+//! the [T, T] ancestor mask the `tree_attention` kernel consumes, and the
+//! greedy accept-path walk.
+
+/// One candidate node. `parent == usize::MAX` marks the root.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub token: u32,
+    pub parent: usize,
+    /// cumulative log-probability under the draft (root = 0)
+    pub score: f32,
+    pub depth: usize,
+}
+
+/// A draft tree rooted at the last committed ("bonus") token.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+pub const ROOT: usize = usize::MAX;
+
+impl Tree {
+    /// New tree whose root is the bonus token from the previous step.
+    pub fn new(root_token: u32) -> Tree {
+        Tree {
+            nodes: vec![Node { token: root_token, parent: ROOT, score: 0.0, depth: 0 }],
+        }
+    }
+
+    /// Add a candidate under `parent` (index into `nodes`).
+    pub fn add(&mut self, parent: usize, token: u32, logprob: f32) -> usize {
+        assert!(parent < self.nodes.len(), "bad parent");
+        let score = self.nodes[parent].score + logprob;
+        let depth = self.nodes[parent].depth + 1;
+        self.nodes.push(Node { token, parent, score, depth });
+        self.nodes.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Keep the root plus the best `max_nodes - 1` candidates by
+    /// cumulative score, closed under ancestors (EAGLE-2 top-N selection).
+    /// Returns the pruned tree with nodes in topological (parent-first)
+    /// order, plus the mapping old→new index.
+    pub fn prune_top(&self, max_nodes: usize) -> Tree {
+        assert!(max_nodes >= 1);
+        let n = self.nodes.len();
+        let mut order: Vec<usize> = (1..n).collect();
+        order.sort_by(|&a, &b| {
+            self.nodes[b]
+                .score
+                .partial_cmp(&self.nodes[a].score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut keep = vec![false; n];
+        keep[0] = true;
+        let mut kept = 1;
+        for &i in &order {
+            if kept >= max_nodes {
+                break;
+            }
+            // include i and any not-yet-kept ancestors
+            let mut chain = vec![];
+            let mut j = i;
+            while !keep[j] {
+                chain.push(j);
+                j = self.nodes[j].parent;
+            }
+            if kept + chain.len() <= max_nodes {
+                for &c in &chain {
+                    keep[c] = true;
+                }
+                kept += chain.len();
+            }
+        }
+        // topological order = original insertion order filtered (parents
+        // were always inserted before children)
+        let mut remap = vec![usize::MAX; n];
+        let mut nodes = Vec::with_capacity(kept);
+        for i in 0..n {
+            if keep[i] {
+                remap[i] = nodes.len();
+                let nd = &self.nodes[i];
+                nodes.push(Node {
+                    token: nd.token,
+                    parent: if nd.parent == ROOT { ROOT } else { remap[nd.parent] },
+                    score: nd.score,
+                    depth: nd.depth,
+                });
+            }
+        }
+        Tree { nodes }
+    }
+
+    /// Flatten for verification: token ids, per-node depth offsets and the
+    /// `[t_pad, t_pad]` ancestor mask (row i attends column j iff j is an
+    /// ancestor-or-self of i). Rows/cols past `len()` get a self-edge so
+    /// padded softmax rows stay finite.
+    pub fn flatten(&self, t_pad: usize) -> FlatTree {
+        let n = self.nodes.len();
+        assert!(n <= t_pad, "tree {n} exceeds pad {t_pad}");
+        let mut tokens = vec![0i32; t_pad];
+        let mut depth = vec![0usize; t_pad];
+        let mut mask = vec![0f32; t_pad * t_pad];
+        for (i, nd) in self.nodes.iter().enumerate() {
+            tokens[i] = nd.token as i32;
+            depth[i] = nd.depth;
+            // walk ancestors
+            let mut j = i;
+            loop {
+                mask[i * t_pad + j] = 1.0;
+                let p = self.nodes[j].parent;
+                if p == ROOT {
+                    break;
+                }
+                j = p;
+            }
+        }
+        for i in n..t_pad {
+            mask[i * t_pad + i] = 1.0;
+        }
+        FlatTree { tokens, depth, mask, n }
+    }
+
+    /// Greedy accept walk: `pick[i]` is the target's argmax token at node
+    /// i. Returns the accepted node indices (excluding the root) in path
+    /// order, plus the bonus token (target argmax at the deepest accepted
+    /// node).
+    pub fn greedy_accept(&self, pick: &[u32]) -> (Vec<usize>, u32) {
+        let mut cur = 0usize;
+        let mut path = Vec::new();
+        loop {
+            let want = pick[cur];
+            let next = (0..self.nodes.len()).find(|&j| {
+                self.nodes[j].parent == cur && self.nodes[j].token == want
+            });
+            match next {
+                Some(j) => {
+                    path.push(j);
+                    cur = j;
+                }
+                None => break,
+            }
+        }
+        (path, pick[cur])
+    }
+
+    /// All children of node `i`.
+    pub fn children(&self, i: usize) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&j| self.nodes[j].parent == i)
+            .collect()
+    }
+}
+
+/// Flattened tree ready for a verification call.
+#[derive(Debug)]
+pub struct FlatTree {
+    pub tokens: Vec<i32>,
+    pub depth: Vec<usize>,
+    pub mask: Vec<f32>,
+    /// real node count (≤ tokens.len())
+    pub n: usize,
+}
+
+impl FlatTree {
+    /// Absolute positions given the root's absolute position.
+    pub fn positions(&self, root_pos: usize) -> Vec<i32> {
+        self.depth.iter().map(|&d| (root_pos + d) as i32).collect()
+    }
+}
+
+/// Build a causal-chain mask [t_pad, t_pad] whose first `n` rows form a
+/// chain (row i sees 0..=i), used for prefill chunks, catch-up calls and
+/// the pv-chain part of Refresh steps.
+pub fn chain_mask(n: usize, t_pad: usize) -> Vec<f32> {
+    let mut mask = vec![0f32; t_pad * t_pad];
+    for i in 0..t_pad {
+        if i < n {
+            for j in 0..=i {
+                mask[i * t_pad + j] = 1.0;
+            }
+        } else {
+            mask[i * t_pad + i] = 1.0;
+        }
+    }
+    mask
+}
+
+/// Mask for a Refresh step: rows 0..n_chain are a causal chain; rows
+/// n_chain.. hold a tree whose own mask is `tree_mask` (t_tree wide) and
+/// which sees the whole chain.
+pub fn refresh_mask(n_chain: usize, tree: &FlatTree, t_pad: usize) -> Vec<f32> {
+    let t_tree = tree.tokens.len();
+    assert!(n_chain + t_tree <= t_pad);
+    let mut mask = chain_mask(n_chain, t_pad);
+    // clear the default self-edges in the tree block rows
+    for i in n_chain..t_pad {
+        for j in 0..t_pad {
+            mask[i * t_pad + j] = 0.0;
+        }
+    }
+    for ti in 0..t_tree {
+        let row = n_chain + ti;
+        for j in 0..n_chain {
+            mask[row * t_pad + j] = 1.0; // tree sees the whole chain
+        }
+        for tj in 0..t_tree {
+            mask[row * t_pad + n_chain + tj] = tree.mask[ti * t_tree + tj];
+        }
+    }
+    for i in (n_chain + t_tree)..t_pad {
+        mask[i * t_pad + i] = 1.0;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+
+    fn demo_tree() -> Tree {
+        // root(10) -> a(1), b(2); a -> c(3); b -> d(4)
+        let mut t = Tree::new(10);
+        let a = t.add(0, 1, -0.1);
+        let b = t.add(0, 2, -0.5);
+        t.add(a, 3, -0.2);
+        t.add(b, 4, -0.1);
+        t
+    }
+
+    #[test]
+    fn flatten_mask_ancestors() {
+        let t = demo_tree();
+        let f = t.flatten(8);
+        assert_eq!(f.n, 5);
+        // node 3 (= c) sees root, a, itself; not b
+        let row = |i: usize, j: usize| f.mask[i * 8 + j];
+        assert_eq!(row(3, 0), 1.0);
+        assert_eq!(row(3, 1), 1.0);
+        assert_eq!(row(3, 3), 1.0);
+        assert_eq!(row(3, 2), 0.0);
+        // padded rows: self-edge only
+        assert_eq!(row(7, 7), 1.0);
+        assert_eq!(row(7, 0), 0.0);
+    }
+
+    #[test]
+    fn greedy_accept_walks_path() {
+        let t = demo_tree();
+        // target argmax: at root→1 (a), at a→3 (c), at c→99
+        let pick = vec![1, 3, 0, 99, 0];
+        let (path, bonus) = t.greedy_accept(&pick);
+        assert_eq!(path, vec![1, 3]);
+        assert_eq!(bonus, 99);
+    }
+
+    #[test]
+    fn greedy_reject_all() {
+        let t = demo_tree();
+        let pick = vec![7, 0, 0, 0, 0]; // root wants 7, no child has it
+        let (path, bonus) = t.greedy_accept(&pick);
+        assert!(path.is_empty());
+        assert_eq!(bonus, 7);
+    }
+
+    #[test]
+    fn prune_keeps_ancestor_closure() {
+        let t = demo_tree();
+        let p = t.prune_top(3);
+        assert_eq!(p.len(), 3);
+        // every node's parent must be in the tree, before it
+        for (i, n) in p.nodes.iter().enumerate() {
+            if n.parent != ROOT {
+                assert!(n.parent < i);
+            }
+        }
+        assert_eq!(p.nodes[0].parent, ROOT);
+    }
+
+    #[test]
+    fn chain_mask_shape() {
+        let m = chain_mask(3, 5);
+        assert_eq!(m[0], 1.0);
+        assert_eq!(m[1 * 5 + 0], 1.0);
+        assert_eq!(m[1 * 5 + 2], 0.0);
+        assert_eq!(m[4 * 5 + 4], 1.0);
+        assert_eq!(m[4 * 5 + 0], 0.0);
+    }
+
+    #[test]
+    fn refresh_mask_blocks() {
+        let t = demo_tree();
+        let f = t.flatten(5);
+        let m = refresh_mask(3, &f, 10);
+        // chain row 2 sees 0..=2
+        assert_eq!(m[2 * 10 + 2], 1.0);
+        assert_eq!(m[2 * 10 + 3], 0.0);
+        // tree root (row 3) sees whole chain + itself
+        assert_eq!(m[3 * 10 + 0], 1.0);
+        assert_eq!(m[3 * 10 + 3], 1.0);
+        // tree node c (flat idx 3 → row 6) sees chain, root, a, self
+        assert_eq!(m[6 * 10 + 1], 1.0);
+        assert_eq!(m[6 * 10 + 3], 1.0);
+        assert_eq!(m[6 * 10 + 4], 1.0);
+        assert_eq!(m[6 * 10 + 5], 0.0);
+        assert_eq!(m[6 * 10 + 6], 1.0);
+    }
+
+    #[test]
+    fn mask_property_ancestors_only() {
+        Prop::new("tree mask = ancestor closure", 100).run(|g| {
+            let mut t = Tree::new(0);
+            let n = g.usize_in(1, 12);
+            for _ in 0..n {
+                let parent = g.usize_in(0, t.len() - 1);
+                t.add(parent, g.u32() % 320, -(g.f32_in(0.0, 3.0)));
+            }
+            let pad = t.len() + g.usize_in(0, 4);
+            let f = t.flatten(pad);
+            for i in 0..t.len() {
+                for j in 0..t.len() {
+                    // ancestor check by walking
+                    let mut anc = false;
+                    let mut k = i;
+                    loop {
+                        if k == j {
+                            anc = true;
+                            break;
+                        }
+                        if t.nodes[k].parent == ROOT {
+                            break;
+                        }
+                        k = t.nodes[k].parent;
+                    }
+                    assert_eq!(f.mask[i * pad + j] > 0.5, anc, "i={i} j={j}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prune_property_topological_and_bounded() {
+        Prop::new("prune topological", 100).run(|g| {
+            let mut t = Tree::new(0);
+            for _ in 0..g.usize_in(0, 20) {
+                let parent = g.usize_in(0, t.len() - 1);
+                t.add(parent, g.u32() % 320, -(g.f32_in(0.0, 5.0)));
+            }
+            let max = g.usize_in(1, 16);
+            let p = t.prune_top(max);
+            assert!(p.len() <= max.max(1));
+            for (i, n) in p.nodes.iter().enumerate() {
+                if i == 0 {
+                    assert_eq!(n.parent, ROOT);
+                } else {
+                    assert!(n.parent < i);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! Small substrates: RNG, timing, statistics, property-testing.
+//!
+//! The offline build environment has no `rand`, `criterion` or `proptest`
+//! crates, so the pieces of them this project needs are implemented here
+//! (and double as paper-faithful determinism: the corpus generators must
+//! match `python/compile/data.py` bit-for-bit).
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch with split support, used by the engines to
+/// attribute time to draft / verify / overhead phases (paper Fig. 1).
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn total(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous `lap()` (or construction).
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
+/// Format seconds human-readably for logs and tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::new();
+        let a = sw.lap();
+        let b = sw.lap();
+        assert!(a >= 0.0 && b >= 0.0);
+        assert!(sw.total() >= a + b - 1e-9);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(0.5e-3).ends_with("us"));
+        assert!(fmt_secs(0.5).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal property-testing framework (the `proptest` crate is not
+//! available in the offline vendor set).
+//!
+//! Usage (no_run: doctest binaries don't inherit the cargo-config rpath
+//! to libxla_extension.so in this offline environment):
+//! ```no_run
+//! use specpv::util::proptest::Prop;
+//! Prop::new("sorted stays sorted", 200).run(|g| {
+//!     let n = g.usize_in(0, 50);
+//!     let mut v: Vec<u32> = (0..n).map(|_| g.u32()).collect();
+//!     v.sort();
+//!     for w in v.windows(2) { assert!(w[0] <= w[1]); }
+//! });
+//! ```
+//! On failure the seed of the failing case is printed so it can be
+//! replayed with `Prop::replay`.
+
+use super::rng::Rng;
+
+/// Case generator handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u64() as u32
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f64() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+}
+
+/// A named property with an iteration budget.
+pub struct Prop {
+    name: &'static str,
+    cases: u64,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str, cases: u64) -> Self {
+        // stable per-name base seed so failures are reproducible run-to-run
+        let mut h = 0xcbf29ce484222325u64;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Prop { name, cases, base_seed: h }
+    }
+
+    /// Run the property for `cases` generated inputs; panic (with the
+    /// failing seed) on the first failure.
+    pub fn run<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(&self, f: F) {
+        for i in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+            let result = std::panic::catch_unwind(|| {
+                let mut g = Gen::new(seed);
+                f(&mut g);
+            });
+            if let Err(e) = result {
+                eprintln!(
+                    "property '{}' failed at case {i} (replay seed {seed:#x})",
+                    self.name
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+
+    /// Replay a single failing seed printed by `run`.
+    pub fn replay<F: FnOnce(&mut Gen)>(seed: u64, f: F) {
+        let mut g = Gen::new(seed);
+        f(&mut g);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_ranges() {
+        Prop::new("usize_in bounds", 300).run(|g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(0, 10);
+            let x = g.usize_in(lo, hi);
+            assert!(x >= lo && x <= hi);
+        });
+    }
+
+    #[test]
+    fn deterministic_base_seed() {
+        let a = Prop::new("same name", 1).base_seed;
+        let b = Prop::new("same name", 1).base_seed;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        Prop::new("always fails", 5).run(|_| panic!("boom"));
+    }
+}

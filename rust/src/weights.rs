@@ -1,0 +1,195 @@
+//! Reader for the `artifacts/weights_*.bin` format written by
+//! `python/compile/train.py::save_weights`:
+//!
+//! ```text
+//! magic "SPVW" | u32 version | u32 n_tensors
+//! per tensor: u16 name_len | name | u8 ndim | u32 dims[ndim] | f32 data
+//! ```
+//! All integers little-endian, data row-major f32.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// A named tensor collection (BTreeMap: iteration order == the sorted
+/// order the AOT manifest records for executable weight arguments).
+#[derive(Debug, Default)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let buf = fs::read(path)
+            .with_context(|| format!("reading weights {path:?}"))?;
+        Self::parse(&buf).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Weights> {
+        let mut r = Reader { buf, off: 0 };
+        if r.bytes(4)? != b"SPVW" {
+            bail!("bad magic (not a SPVW weights file)");
+        }
+        let version = r.u32()?;
+        if version != 1 {
+            bail!("unsupported weights version {version}");
+        }
+        let n = r.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.bytes(name_len)?.to_vec())?;
+            let ndim = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let count: usize = dims.iter().product::<usize>().max(1);
+            let raw = r.bytes(count * 4)?;
+            let mut data = vec![0f32; count];
+            for (i, ch) in raw.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+            tensors.insert(name.clone(), Tensor { name, dims, data });
+        }
+        if r.off != buf.len() {
+            bail!("{} trailing bytes after last tensor", buf.len() - r.off);
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing weight tensor '{name}'"))
+    }
+
+    /// Tensor names with the given prefix, sorted (== python `sorted()`).
+    pub fn names_with_prefix(&self, prefix: &str) -> Vec<&str> {
+        self.tensors
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(|s| s.as_str())
+            .collect()
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.buf.len() {
+            bail!(
+                "truncated weights file (want {n} bytes at {}, have {})",
+                self.off,
+                self.buf.len() - self.off
+            );
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        // two tensors: "a" scalar-ish [2], "b" [2,3]
+        let mut v = Vec::new();
+        v.extend(b"SPVW");
+        v.extend(1u32.to_le_bytes());
+        v.extend(2u32.to_le_bytes());
+        // tensor a
+        v.extend(1u16.to_le_bytes());
+        v.extend(b"a");
+        v.push(1);
+        v.extend(2u32.to_le_bytes());
+        for x in [1.0f32, 2.0] {
+            v.extend(x.to_le_bytes());
+        }
+        // tensor b
+        v.extend(1u16.to_le_bytes());
+        v.extend(b"b");
+        v.push(2);
+        v.extend(2u32.to_le_bytes());
+        v.extend(3u32.to_le_bytes());
+        for x in [0.5f32, -0.5, 1.5, -1.5, 2.5, -2.5] {
+            v.extend(x.to_le_bytes());
+        }
+        v
+    }
+
+    #[test]
+    fn parse_ok() {
+        let w = Weights::parse(&sample()).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        assert_eq!(w.get("a").unwrap().data, vec![1.0, 2.0]);
+        assert_eq!(w.get("b").unwrap().dims, vec![2, 3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample();
+        b[0] = b'X';
+        assert!(Weights::parse(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let b = sample();
+        for cut in [3, 10, b.len() - 1] {
+            assert!(Weights::parse(&b[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        let mut b = sample();
+        b.push(0);
+        assert!(Weights::parse(&b).is_err());
+    }
+
+    #[test]
+    fn prefix_listing_sorted() {
+        let w = Weights::parse(&sample()).unwrap();
+        assert_eq!(w.names_with_prefix(""), vec!["a", "b"]);
+    }
+}

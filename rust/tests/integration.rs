@@ -1,0 +1,246 @@
+//! Integration tests over the real runtime + artifacts.
+//!
+//! These need `make artifacts` to have run; they skip (pass trivially)
+//! when `artifacts/manifest.json` is absent so `cargo test` works in a
+//! fresh checkout. The heavyweight guarantees:
+//!   * AR decoding == chunk-prefill continuation (runtime coherence)
+//!   * spec_full output == AR output  (LOSSLESSNESS of tree verification)
+//!   * spec_pv with an oversized budget ≈ spec_full
+//!   * every engine runs and reports sane telemetry
+//!   * the coordinator + TCP server round-trip
+
+use std::path::{Path, PathBuf};
+
+use specpv::config::{Config, EngineKind};
+use specpv::engine::{self, GenRequest};
+use specpv::runtime::Runtime;
+use specpv::{corpus, tokenizer};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+/// Per-test runtime (the PJRT wrapper holds raw pointers and is not
+/// Sync; tests run with --test-threads=1 via the Makefile, but each test
+/// owning its runtime keeps them correct under any harness settings).
+fn runtime() -> Option<Runtime> {
+    let dir = artifacts()?;
+    Some(Runtime::new(&dir).expect("runtime init"))
+}
+
+fn base_cfg() -> Config {
+    let mut c = Config::default();
+    c.artifacts_dir = artifacts().unwrap_or_else(|| PathBuf::from("artifacts"));
+    c
+}
+
+fn gen(rt: &Runtime, kind: EngineKind, prompt: &str, max_new: usize) -> specpv::engine::GenResult {
+    let mut cfg = base_cfg();
+    cfg.engine = kind;
+    engine::generate_with(&cfg, rt, &GenRequest::greedy(tokenizer::encode(prompt), max_new))
+        .expect("generation")
+}
+
+#[test]
+fn ar_generates_text() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let prompt = corpus::continuation_prompt(5, 600);
+    let r = gen(rt, EngineKind::Autoregressive, &prompt, 32);
+    assert_eq!(r.tokens.len(), 32);
+    assert!(r.stats.throughput() > 0.0);
+    // trained char-LM must produce mostly printable ASCII words
+    let text = r.text();
+    let printable = text.chars().filter(|c| c.is_ascii_graphic() || *c == ' ' || *c == '\n').count();
+    assert!(printable * 10 >= text.len() * 9, "garbage output: {text:?}");
+}
+
+#[test]
+fn spec_full_is_lossless_vs_ar() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let prompt = corpus::continuation_prompt(7, 700);
+    let a = gen(rt, EngineKind::Autoregressive, &prompt, 48);
+    let b = gen(rt, EngineKind::SpecFull, &prompt, 48);
+    assert_eq!(
+        a.tokens, b.tokens,
+        "speculative full verification must match AR greedy decoding\nAR:  {:?}\nSF:  {:?}",
+        a.text(), b.text()
+    );
+    assert!(b.stats.accept_len() >= 0.0);
+}
+
+#[test]
+fn spec_pv_runs_all_modes() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    // long enough prompt that the partial cache engages (budget 256 →
+    // core ≈ 352 tokens)
+    let prompt = corpus::continuation_prompt(9, 900);
+    let mut cfg = base_cfg();
+    cfg.engine = EngineKind::SpecPv;
+    cfg.specpv.retrieval_budget = 256;
+    let r = engine::generate_with(
+        &cfg,
+        rt,
+        &GenRequest::greedy(tokenizer::encode(&prompt), 64),
+    )
+    .unwrap();
+    assert_eq!(r.tokens.len(), 64);
+    assert!(r.stats.refresh_steps >= 1, "no refresh happened: {:?}", r.stats);
+    assert!(r.stats.partial_steps >= 1, "no partial steps: {:?}", r.stats);
+}
+
+#[test]
+fn spec_pv_matches_full_on_short_context() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    // prompt shorter than the partial core → SpecPV stays in Full mode
+    // and must be exactly lossless
+    let prompt = corpus::continuation_prompt(11, 300);
+    let mut cfg = base_cfg();
+    cfg.engine = EngineKind::SpecPv;
+    cfg.specpv.retrieval_budget = 512;
+    let pv = engine::generate_with(
+        &cfg,
+        rt,
+        &GenRequest::greedy(tokenizer::encode(&prompt), 40),
+    )
+    .unwrap();
+    let full = gen(rt, EngineKind::SpecFull, &prompt, 40);
+    assert_eq!(pv.tokens, full.tokens);
+    assert_eq!(pv.stats.partial_steps, 0);
+}
+
+#[test]
+fn triforce_and_tokenswift_run() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let prompt = corpus::continuation_prompt(13, 700);
+    for kind in [EngineKind::TriForce, EngineKind::TokenSwift] {
+        let r = gen(rt, kind, &prompt, 32);
+        assert_eq!(r.tokens.len(), 32, "{kind:?}");
+        // both verify on the full cache → lossless vs AR
+        let a = gen(rt, EngineKind::Autoregressive, &prompt, 32);
+        assert_eq!(r.tokens, a.tokens, "{kind:?} diverged from AR");
+    }
+}
+
+#[test]
+fn offload_sim_adds_cost_to_full_but_not_partial() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let prompt = corpus::continuation_prompt(15, 900);
+    let mut cfg = base_cfg();
+    cfg.offload.enabled = true;
+    cfg.engine = EngineKind::SpecFull;
+    let full = engine::generate_with(
+        &cfg,
+        rt,
+        &GenRequest::greedy(tokenizer::encode(&prompt), 32),
+    )
+    .unwrap();
+    assert!(full.stats.offload_secs > 0.0);
+    cfg.engine = EngineKind::SpecPv;
+    cfg.specpv.retrieval_budget = 256;
+    let pv = engine::generate_with(
+        &cfg,
+        rt,
+        &GenRequest::greedy(tokenizer::encode(&prompt), 32),
+    )
+    .unwrap();
+    // partial steps don't touch the offloaded cache → less simulated PCIe
+    assert!(pv.stats.offload_secs < full.stats.offload_secs);
+}
+
+#[test]
+fn coordinator_queue_and_metrics() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let mut coord = specpv::coordinator::Coordinator::new(rt, base_cfg());
+    let p = corpus::continuation_prompt(21, 400);
+    let id1 = coord
+        .submit(GenRequest::greedy(tokenizer::encode(&p), 16), None)
+        .unwrap();
+    let id2 = coord
+        .submit(
+            GenRequest::greedy(tokenizer::encode(&p), 16),
+            Some(EngineKind::Autoregressive),
+        )
+        .unwrap();
+    coord.run_all();
+    for id in [id1, id2] {
+        let tr = coord.get(id).unwrap();
+        assert_eq!(tr.state, specpv::coordinator::RequestState::Done);
+        assert_eq!(tr.result.as_ref().unwrap().tokens.len(), 16);
+    }
+    assert_eq!(coord.registry.completed, 2);
+}
+
+#[test]
+fn coordinator_rejects_oversized() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let mut coord = specpv::coordinator::Coordinator::new(rt, base_cfg());
+    let huge = vec![65u32; 100_000];
+    assert!(coord.submit(GenRequest::greedy(huge, 16), None).is_err());
+    assert!(coord
+        .submit(GenRequest::greedy(vec![65; 10], 1 << 20), None)
+        .is_err());
+}
+
+#[test]
+fn server_roundtrip() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = base_cfg();
+    cfg.server_addr = "127.0.0.1:7913".into();
+    std::thread::scope(|s| {
+        // the server thread owns its runtime (PJRT handles are !Send)
+        let cfg2 = cfg.clone();
+        let dir2 = dir.clone();
+        let h = s.spawn(move || {
+            let rt = Runtime::new(&dir2).expect("server runtime");
+            let _ = specpv::server::serve(&rt, cfg2);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        let mut client = specpv::server::Client::connect("127.0.0.1:7913").unwrap();
+        let pong = client
+            .call(specpv::json::Json::obj().set("op", "ping"))
+            .unwrap();
+        assert_eq!(pong.get("ok").and_then(|x| x.as_bool()), Some(true));
+        let r = client.generate("Once upon a time, ", 16, "spec_full").unwrap();
+        assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(true), "{r:?}");
+        assert!(r.get("text").and_then(|x| x.as_str()).is_some());
+        client.shutdown().unwrap();
+        h.join().unwrap();
+    });
+}
+
+#[test]
+fn runtime_rejects_bad_invocations() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    // unknown executable
+    assert!(rt.invoke("nope_exec", &[]).is_err());
+    // wrong arg count
+    let name = "read_tiny_b512";
+    assert!(rt.invoke(name, &[]).is_err());
+}
+
+#[test]
+fn failure_injection_truncated_artifact() {
+    let Some(dir) = artifacts() else { return };
+    // copy artifacts manifest into a temp dir with a truncated hlo file
+    let tmp = std::env::temp_dir().join("specpv_bad_artifacts");
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::copy(dir.join("manifest.json"), tmp.join("manifest.json")).unwrap();
+    std::fs::copy(dir.join("weights_s.bin"), tmp.join("weights_s.bin")).unwrap();
+    std::fs::write(tmp.join("verify_s_b1024_t1.hlo.txt"), "HloModule garbage{{{").unwrap();
+    let rt = Runtime::new(&tmp).unwrap(); // lazy compile → ok to build
+    let err = rt.invoke("verify_s_b1024_t1", &[]);
+    assert!(err.is_err());
+    let missing = rt.invoke("verify_s_b8192_t1", &[]);
+    assert!(missing.is_err()); // file absent in the temp dir
+}

@@ -1,0 +1,281 @@
+//! Artifact-free invariant tests across the coordinator substrates:
+//! deeper property sweeps and failure injection that complement the
+//! per-module unit tests (these exercise cross-module behaviour).
+
+use specpv::cache::{DraftCache, FullCache, PartialCache};
+use specpv::config::{Config, Reduction, SpecPvConfig};
+use specpv::metrics::{bleurt_proxy, rouge_l};
+use specpv::retrieval::plan_gather;
+use specpv::sampling::{argmax, pick_token, softmax, spec_accept};
+use specpv::tree::{chain_mask, refresh_mask, Tree};
+use specpv::util::proptest::Prop;
+use specpv::util::rng::Rng;
+use specpv::{corpus, tokenizer};
+
+/// Simulated decode loop over the cache accounting: random accept
+/// patterns must never violate bucket bounds or pending invariants.
+#[test]
+fn full_cache_random_decode_simulation() {
+    Prop::new("full-cache decode sim", 300).run(|g| {
+        let bucket = 1024;
+        let mut c = FullCache::new(bucket);
+        c.push_prefill(g.usize_in(1, 500)).unwrap();
+        for _ in 0..g.usize_in(0, 60) {
+            // tree verify: accept 0..=4 strictly-increasing rows < 16
+            let m = g.usize_in(0, 4);
+            let mut rows = vec![0usize];
+            let mut last = 0;
+            for _ in 0..m {
+                last += g.usize_in(1, 3);
+                if last < 16 {
+                    rows.push(last);
+                }
+            }
+            if c.headroom() < 16 + rows.len() {
+                break;
+            }
+            let (kv_len, idx, n) = c.take_pending(8).unwrap();
+            assert!(kv_len + n <= bucket);
+            assert_eq!(idx.len(), 8);
+            c.set_pending(rows, 16).unwrap();
+        }
+        assert!(c.effective_len() <= bucket);
+    });
+}
+
+/// SpecPV mode machine: for any (budget, cap) geometry the partial cache
+/// must force a refresh before the buffer or the bucket overflows.
+#[test]
+fn partial_cache_never_overflows() {
+    Prop::new("partial-cache refresh forcing", 300).run(|g| {
+        let bucket = *g.pick(&[512usize, 768, 1280]);
+        let cap = g.usize_in(17, 60);
+        let mut p = PartialCache::new(bucket, cap);
+        p.refresh(g.usize_in(64, bucket - 64));
+        let mut steps = 0;
+        loop {
+            if !p.fits(16, 8) {
+                // refresh: everything resets
+                p.refresh(g.usize_in(64, bucket - 64));
+                steps += 1;
+                if steps > 5 {
+                    break;
+                }
+                continue;
+            }
+            // partial step: accept root + up to 3 drafted
+            let m = g.usize_in(0, 3);
+            let rows: Vec<usize> = (0..=m).collect();
+            p.set_pending(rows).unwrap();
+            let (kv_len, _, n) = p.take_pending(8).unwrap();
+            assert!(kv_len + n + 16 <= bucket + 16);
+            for _ in 0..=m {
+                p.pv_tokens.push(1);
+            }
+            assert!(p.pv_tokens.len() <= cap, "buffer cap violated");
+        }
+    });
+}
+
+#[test]
+fn draft_cache_scratch_never_collides_with_chain() {
+    Prop::new("draft scratch/commit discipline", 200).run(|g| {
+        let mut d = DraftCache::new(4096, 32);
+        d.push_prefill(g.usize_in(1, 1000)).unwrap();
+        for _ in 0..g.usize_in(1, 40) {
+            let chain = g.usize_in(1, 6);
+            let before = d.committed;
+            d.push_chain(chain).unwrap();
+            assert_eq!(d.committed, before + chain);
+            assert_eq!(d.scratch, 0);
+            let mut used = 0;
+            for _ in 0..g.usize_in(0, 3) {
+                let w = g.usize_in(1, 8);
+                if used + w > 32 {
+                    break;
+                }
+                let off = d.push_scratch(w).unwrap();
+                assert_eq!(off, used, "scratch must be contiguous");
+                used += w;
+            }
+        }
+    });
+}
+
+/// The verification masks must keep padded rows softmax-safe (≥1 visible
+/// column) — a padded row with no visible key would produce NaNs that
+/// poison the whole attention output through the flat state.
+#[test]
+fn masks_always_give_every_row_a_visible_column() {
+    Prop::new("mask rows non-empty", 300).run(|g| {
+        let mut t = Tree::new(0);
+        for _ in 0..g.usize_in(0, 14) {
+            let p = g.usize_in(0, t.len() - 1);
+            t.add(p, g.u32() % 320, -1.0);
+        }
+        let t = t.prune_top(16);
+        let flat = t.flatten(16);
+        for i in 0..16 {
+            assert!(
+                (0..16).any(|j| flat.mask[i * 16 + j] > 0.5),
+                "tree row {i} fully masked"
+            );
+        }
+        let n_chain = g.usize_in(0, 40);
+        let m = refresh_mask(n_chain, &flat, 64);
+        for i in 0..64 {
+            assert!(
+                (0..64).any(|j| m[i * 64 + j] > 0.5),
+                "refresh row {i} fully masked"
+            );
+        }
+        let cm = chain_mask(g.usize_in(0, 64), 64);
+        for i in 0..64 {
+            assert!((0..64).any(|j| cm[i * 64 + j] > 0.5));
+        }
+    });
+}
+
+/// Retrieval planning: the assembled core must always contain the sink
+/// block(s) and the newest (local) block — the two segments the paper
+/// says are unconditionally kept.
+#[test]
+fn gather_plan_always_keeps_sink_and_local() {
+    Prop::new("plan keeps sink+local", 300).run(|g| {
+        let nb = g.usize_in(8, 128);
+        let committed = g.usize_in(4 * 32, nb * 32);
+        let n_layer = g.usize_in(1, 6);
+        let scores: Vec<f32> =
+            (0..n_layer * 3 * nb).map(|_| g.f32_in(-2.0, 2.0)).collect();
+        let cfg = SpecPvConfig {
+            retrieval_budget: *g.pick(&[64usize, 256, 512]),
+            reduction: *g.pick(&[Reduction::Mean, Reduction::Max, Reduction::Last]),
+            ..Default::default()
+        };
+        let nsel = (cfg.retrieval_budget / 32 + 3).min(nb);
+        let plan = plan_gather(&scores, n_layer, nb, 32, committed, nsel, &cfg);
+        let newest = (committed - 1) / 32;
+        for ids in &plan.block_idx {
+            assert_eq!(ids[0], 0, "sink block missing");
+            assert!(
+                ids[..plan.core_blocks].contains(&(newest as i32)),
+                "newest block {newest} missing from {ids:?}"
+            );
+        }
+        assert!(plan.core_len <= plan.core_blocks * 32);
+        assert!(plan.core_len > (plan.core_blocks - 1) * 32);
+    });
+}
+
+/// Speculative sampling correctness under adversarial draft dists.
+#[test]
+fn spec_sampling_extreme_drafts() {
+    let mut rng = Rng::new(3);
+    let p = vec![0.9f32, 0.05, 0.05];
+    // draft almost never proposes the likely token
+    let q = vec![0.01f32, 0.495, 0.495];
+    let n = 40_000;
+    let mut counts = [0usize; 3];
+    for _ in 0..n {
+        let x = specpv::sampling::sample(&q, &mut rng);
+        let (_, committed) = spec_accept(&p, &q, x, &mut rng);
+        counts[committed] += 1;
+    }
+    let f0 = counts[0] as f32 / n as f32;
+    assert!((f0 - 0.9).abs() < 0.02, "committed dist broken: {f0}");
+}
+
+#[test]
+fn temperature_extremes_are_safe() {
+    let mut rng = Rng::new(5);
+    let logits = vec![1e4f32, -1e4, 0.0];
+    // huge logits at tiny temperature must not NaN
+    let p = softmax(&logits, 1e-8);
+    assert!((p[0] - 1.0).abs() < 1e-5);
+    assert_eq!(pick_token(&logits, 0.0, &mut rng), argmax(&logits) as u32);
+    let p2 = softmax(&logits, 1e6);
+    assert!(p2.iter().all(|x| x.is_finite()));
+}
+
+/// Metrics sanity over generated corpora (symmetric, bounded, identical
+/// text maximal).
+#[test]
+fn metrics_properties() {
+    Prop::new("metrics bounded+symmetricish", 60).run(|g| {
+        let a = corpus::novel_text(g.u64(), 300 + g.usize_in(0, 300));
+        let b = corpus::meeting_text(g.u64(), 300 + g.usize_in(0, 300));
+        for m in [rouge_l(&a, &b), bleurt_proxy(&a, &b)] {
+            assert!((0.0..=100.0001).contains(&m));
+        }
+        assert!((bleurt_proxy(&a, &a) - 100.0).abs() < 1e-6);
+        assert!((rouge_l(&a, &a) - 100.0).abs() < 1e-6);
+        // bleurt proxy is symmetric by construction
+        assert!((bleurt_proxy(&a, &b) - bleurt_proxy(&b, &a)).abs() < 1e-6);
+    });
+}
+
+/// Tokenizer/corpus cross-checks at scale.
+#[test]
+fn corpus_tokens_roundtrip_everywhere() {
+    Prop::new("corpus↔tokens roundtrip", 40).run(|g| {
+        let n = 200 + g.usize_in(0, 2000);
+        let t = match g.usize_in(0, 3) {
+            0 => corpus::novel_text(g.u64(), n),
+            1 => corpus::report_text(g.u64(), n),
+            2 => corpus::meeting_text(g.u64(), n),
+            _ => corpus::needle_qa(g.u64(), n, 4).context,
+        };
+        let ids = tokenizer::encode(&t);
+        assert_eq!(tokenizer::decode(&ids), t);
+        assert!(ids.iter().all(|&i| i < 256));
+    });
+}
+
+/// Config file parsing failure injection.
+#[test]
+fn config_failure_injection() {
+    let dir = std::env::temp_dir().join("specpv_cfg_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    // valid file
+    let good = dir.join("good.conf");
+    std::fs::write(&good, "engine = spec_pv\nretrieval_budget = 256\n# c\n").unwrap();
+    let c = Config::from_file(&good).unwrap();
+    assert_eq!(c.specpv.retrieval_budget, 256);
+    // malformed lines
+    for bad in ["novalue\n", "engine = warp9\n", "retrieval_budget = many\n"] {
+        let p = dir.join("bad.conf");
+        std::fs::write(&p, bad).unwrap();
+        assert!(Config::from_file(&p).is_err(), "accepted {bad:?}");
+    }
+    assert!(Config::from_file(&dir.join("missing.conf")).is_err());
+}
+
+/// Greedy accept on a chain tree == longest matching prefix.
+#[test]
+fn chain_acceptance_is_prefix_match() {
+    Prop::new("chain accept == prefix", 200).run(|g| {
+        let gamma = g.usize_in(1, 6);
+        let mut t = Tree::new(10);
+        let mut parent = 0;
+        let chain: Vec<u32> = (0..gamma).map(|_| g.u32() % 50).collect();
+        for &c in &chain {
+            parent = t.add(parent, c, -0.1);
+        }
+        // picks: target wants chain[i] at node i with prob; flip some
+        let mut picks = vec![0u32; t.len()];
+        let mut expected = 0;
+        let mut broken = false;
+        for i in 0..gamma {
+            if !broken && g.f32_in(0.0, 1.0) < 0.7 {
+                picks[i] = chain[i];
+                expected += 1;
+            } else {
+                picks[i] = 333; // not in vocab of children
+                broken = true;
+            }
+        }
+        picks[gamma] = 99;
+        let (path, _) = t.greedy_accept(&picks);
+        assert_eq!(path.len(), expected);
+    });
+}
