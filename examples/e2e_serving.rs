@@ -1,8 +1,11 @@
 //! End-to-end serving driver (the DESIGN.md §5 validation run): starts
 //! the TCP server with the trained model, submits a mixed batch of
-//! long-context requests through the real client protocol, and reports
-//! per-request latency plus aggregate throughput — the serving-paper
-//! analogue of "load a small real model and serve batched requests".
+//! long-context requests through **concurrent** client connections (one
+//! of them streaming), and reports per-request latency/TTFT plus
+//! aggregate throughput — the serving-paper analogue of "load a small
+//! real model and serve batched requests". The server interleaves the
+//! generations at decode-round granularity (continuous batching), so the
+//! requests genuinely share the device instead of queuing.
 //!
 //! ```bash
 //! cargo run --release --example e2e_serving
@@ -10,7 +13,6 @@
 //! The measured numbers are recorded in EXPERIMENTS.md §E2E.
 
 use std::thread;
-use std::time::Duration;
 
 use specpv::config::Config;
 use specpv::json::Json;
@@ -19,17 +21,17 @@ use specpv::server::{serve, Client};
 use specpv::{corpus, util::Stopwatch};
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = Config::default();
-    cfg.server_addr = "127.0.0.1:7799".into();
+    let cfg = Config {
+        server_addr: "127.0.0.1:7799".into(),
+        max_active: 4,
+        ..Config::default()
+    };
     let addr = cfg.server_addr.clone();
 
     let server = thread::spawn(move || {
         let rt = Runtime::new(&cfg.artifacts_dir).expect("runtime");
         serve(&rt, cfg).expect("server");
     });
-    thread::sleep(Duration::from_millis(500));
-
-    let mut client = Client::connect(&addr)?;
     // workload: continuation + summarization + needle QA, mixed engines
     let mut jobs: Vec<(String, String, usize)> = Vec::new();
     for seed in 0..2u64 {
@@ -48,12 +50,35 @@ fn main() -> anyhow::Result<()> {
     jobs.push(("needle_qa".into(), format!("{}{}", qa.context, qa.question), 12));
 
     let sw = Stopwatch::new();
+    // all jobs in flight at once, each on its own connection; the last
+    // one streams and counts its incremental deltas
+    let handles: Vec<_> = jobs
+        .into_iter()
+        .enumerate()
+        .map(|(i, (name, prompt, max_new))| {
+            let addr = addr.clone();
+            thread::spawn(move || -> anyhow::Result<(String, &'static str, Json, usize)> {
+                let engine = if i % 2 == 0 { "spec_pv" } else { "spec_full" };
+                let mut client = connect_retry(&addr);
+                if i == 3 {
+                    let (steps, fin) =
+                        client.generate_stream(&prompt, max_new, engine)?;
+                    let deltas =
+                        steps.iter().filter(|j| j.get("delta").is_some()).count();
+                    Ok((name, engine, fin, deltas))
+                } else {
+                    let r = client.generate(&prompt, max_new, engine)?;
+                    Ok((name, engine, r, 0))
+                }
+            })
+        })
+        .collect();
+
     let mut total_tokens = 0usize;
-    println!("| request | engine | tokens | latency | tok/s | tau | modes F/P/R |");
-    println!("|---|---|---|---|---|---|---|");
-    for (i, (name, prompt, max_new)) in jobs.iter().enumerate() {
-        let engine = if i % 2 == 0 { "spec_pv" } else { "spec_full" };
-        let r = client.generate(prompt, *max_new, engine)?;
+    println!("| request | engine | tokens | latency | ttft | tok/s | tau | modes F/P/R | stream deltas |");
+    println!("|---|---|---|---|---|---|---|---|---|");
+    for h in handles {
+        let (name, engine, r, deltas) = h.join().expect("client thread")?;
         anyhow::ensure!(
             r.get("ok").and_then(|x| x.as_bool()) == Some(true),
             "request failed: {r:?}"
@@ -62,8 +87,9 @@ fn main() -> anyhow::Result<()> {
         total_tokens += tokens;
         let modes = r.get("modes").cloned().unwrap_or(Json::Null);
         println!(
-            "| {name} | {engine} | {tokens} | {:.2}s | {:.1} | {:.2} | {}/{}/{} |",
+            "| {name} | {engine} | {tokens} | {:.2}s | {:.2}s | {:.1} | {:.2} | {}/{}/{} | {deltas} |",
             r.get("latency_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            r.get("ttft_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
             r.get("tok_per_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
             r.get("tau").and_then(|x| x.as_f64()).unwrap_or(0.0),
             modes.get("full").and_then(|x| x.as_i64()).unwrap_or(0),
@@ -72,13 +98,26 @@ fn main() -> anyhow::Result<()> {
         );
     }
     let wall = sw.total();
-    let m = client.call(Json::obj().set("op", "metrics"))?;
+    let mut client = connect_retry(&addr);
+    let m = client.metrics()?;
     println!(
         "\naggregate: {total_tokens} tokens in {wall:.1}s = {:.1} tok/s end-to-end",
         total_tokens as f64 / wall
     );
     println!("server: {}", m.get("summary").and_then(|x| x.as_str()).unwrap_or("?"));
     client.shutdown()?;
+    drop(client);
     server.join().unwrap();
     Ok(())
+}
+
+/// Retry the connect until the server thread has bound the listener.
+fn connect_retry(addr: &str) -> Client {
+    for _ in 0..50 {
+        if let Ok(c) = Client::connect(addr) {
+            return c;
+        }
+        thread::sleep(std::time::Duration::from_millis(100));
+    }
+    panic!("server did not come up on {addr}");
 }

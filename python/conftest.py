@@ -1,0 +1,10 @@
+"""Pytest bootstrap: make `compile.*` importable when the suite is run
+from the repo root (`python -m pytest python/tests -q`, the CI
+invocation) as well as from `python/` directly."""
+
+import sys
+from pathlib import Path
+
+_PY_ROOT = str(Path(__file__).resolve().parent)
+if _PY_ROOT not in sys.path:
+    sys.path.insert(0, _PY_ROOT)

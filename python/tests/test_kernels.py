@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property sweeps need the hypothesis package"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels.tree_attention import tree_attention
 from compile.kernels.block_score import block_scores, reduce_scores

@@ -15,8 +15,7 @@ fn main() -> anyhow::Result<()> {
         println!("artifacts/ not built — run `make artifacts` first; skipping");
         return Ok(());
     }
-    let mut cfg = Config::default();
-    cfg.artifacts_dir = dir.clone();
+    let cfg = Config { artifacts_dir: dir.clone(), ..Config::default() };
     let rt = Runtime::new(&dir)?;
     let out = PathBuf::from("results/bench_quick");
     for id in ["fig1", "table1", "table4", "fig6", "fig8"] {

@@ -168,6 +168,9 @@ pub struct Config {
     /// TriForce chain draft length γ
     pub chain_gamma: usize,
     pub server_addr: String,
+    /// continuous-batching width: concurrent live sessions the
+    /// coordinator's round-robin scheduler interleaves
+    pub max_active: usize,
 }
 
 impl Default for Config {
@@ -185,6 +188,7 @@ impl Default for Config {
             tree_size: 16,
             chain_gamma: 4,
             server_addr: "127.0.0.1:7799".into(),
+            max_active: 4,
         }
     }
 }
@@ -238,6 +242,7 @@ impl Config {
                 "tree_size" => self.tree_size = v.parse()?,
                 "chain_gamma" => self.chain_gamma = v.parse()?,
                 "server_addr" => self.server_addr = v.clone(),
+                "max_active" => self.max_active = v.parse()?,
                 _ => bail!("unknown config key '{k}'"),
             }
         }
@@ -264,10 +269,12 @@ mod tests {
         kv.insert("engine".to_string(), "triforce".to_string());
         kv.insert("retrieval_budget".to_string(), "256".to_string());
         kv.insert("reduction".to_string(), "last".to_string());
+        kv.insert("max_active".to_string(), "8".to_string());
         c.apply_overrides(&kv).unwrap();
         assert_eq!(c.engine, EngineKind::TriForce);
         assert_eq!(c.specpv.retrieval_budget, 256);
         assert_eq!(c.specpv.reduction, Reduction::Last);
+        assert_eq!(c.max_active, 8);
     }
 
     #[test]

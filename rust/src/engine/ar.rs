@@ -1,5 +1,5 @@
 //! Standard autoregressive decoding — the speedup denominator of every
-//! table in the paper (Eq. 4).
+//! table in the paper (Eq. 4). One `step()` = one decoded token.
 
 use anyhow::Result;
 
@@ -9,12 +9,11 @@ use crate::model::bucket_need;
 use crate::offload::OffloadSim;
 use crate::runtime::Runtime;
 use crate::sampling::pick_token;
-use crate::tokenizer::is_eos;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 use super::session::TargetSession;
-use super::{Engine, GenRequest, GenResult};
+use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
 
 pub struct ArEngine {
     cfg: Config,
@@ -26,12 +25,25 @@ impl ArEngine {
     }
 }
 
+pub struct ArSession<'rt> {
+    target: TargetSession<'rt>,
+    out: SessionOut,
+    rng: Rng,
+    stats: GenStats,
+    prompt_len: usize,
+    temperature: f32,
+}
+
 impl Engine for ArEngine {
     fn kind(&self) -> crate::config::EngineKind {
         crate::config::EngineKind::Autoregressive
     }
 
-    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult> {
+    fn start<'rt>(
+        &self,
+        rt: &'rt Runtime,
+        req: &GenRequest,
+    ) -> Result<Box<dyn EngineSession + 'rt>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
         let need = bucket_need(req.prompt.len(), req.max_new, &rt.manifest.consts);
@@ -46,20 +58,50 @@ impl Engine for ArEngine {
         let (logits, _) = target.prefill(&req.prompt, None)?;
         stats.prefill_secs = sw.lap();
 
-        let mut out: Vec<u32> = Vec::new();
-        let mut next = pick_token(&logits, req.temperature, &mut rng);
-        out.push(next);
-        while out.len() < req.max_new && !is_eos(next) {
-            let pos = req.prompt.len() + out.len() - 1;
-            let logits = target.decode_one(next, pos)?;
-            next = pick_token(&logits, req.temperature, &mut rng);
-            out.push(next);
-            stats.verify_steps += 1;
+        let mut out = SessionOut::new(req.max_new);
+        out.push_first(pick_token(&logits, req.temperature, &mut rng));
+        Ok(Box::new(ArSession {
+            target,
+            out,
+            rng,
+            stats,
+            prompt_len: req.prompt.len(),
+            temperature: req.temperature,
+        }))
+    }
+}
+
+impl EngineSession for ArSession<'_> {
+    fn kind(&self) -> crate::config::EngineKind {
+        crate::config::EngineKind::Autoregressive
+    }
+
+    fn is_finished(&self) -> bool {
+        self.out.done
+    }
+
+    fn emitted(&self) -> usize {
+        self.out.len()
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if !self.out.done {
+            let mut sw = Stopwatch::new();
+            let pos = self.prompt_len + self.out.len() - 1;
+            let logits = self.target.decode_one(self.out.last(), pos)?;
+            let next = pick_token(&logits, self.temperature, &mut self.rng);
+            self.out.push_round(&[], next);
+            self.stats.verify_steps += 1;
+            self.stats.decode_secs += sw.lap();
         }
-        stats.decode_secs = sw.lap();
+        Ok(self.out.outcome())
+    }
+
+    fn finish(self: Box<Self>) -> GenResult {
+        let ArSession { target, out, mut stats, .. } = *self;
         stats.verify_secs = stats.decode_secs;
-        stats.new_tokens = out.len();
+        stats.new_tokens = out.tokens.len();
         stats.offload_secs = target.offload.secs;
-        Ok(GenResult { tokens: out, stats })
+        GenResult { tokens: out.tokens, stats }
     }
 }

@@ -1,5 +1,5 @@
 //! Decoding engines: the SpecPV generator and the paper's baselines,
-//! behind a common `Engine` trait.
+//! behind a common step-resumable session API.
 //!
 //! | engine      | draft                     | verification            |
 //! |-------------|---------------------------|-------------------------|
@@ -8,9 +8,16 @@
 //! | `spec_pv`   | EAGLE-3 tree              | partial KV + Refresh    |
 //! | `triforce`  | independent tiny LM chain | full KV                 |
 //! | `tokenswift`| Medusa heads              | full KV                 |
+//!
+//! An [`Engine`] is a stateless constructor: `start()` runs prefill and
+//! returns a live [`EngineSession`] whose `step()` advances exactly one
+//! draft→verify→accept round (one decode token for `ar`). The coordinator
+//! interleaves `step()` calls across many sessions (continuous batching);
+//! `generate_with` is the run-to-completion convenience built on top.
 
 pub mod ar;
 pub mod eagle;
+pub mod scripted;
 pub mod session;
 pub mod spec_full;
 pub mod spec_pv;
@@ -22,6 +29,7 @@ use anyhow::Result;
 use crate::config::{Config, EngineKind};
 use crate::metrics::GenStats;
 use crate::runtime::Runtime;
+use crate::tokenizer::is_eos;
 
 /// One generation request.
 #[derive(Debug, Clone)]
@@ -51,12 +59,111 @@ impl GenResult {
     }
 }
 
-/// A decoding engine bound to a runtime + config.
+/// What one scheduler-visible `step()` produced.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// tokens newly available since the previous `step()` (includes the
+    /// prefill bonus token on the first step)
+    pub new_tokens: Vec<u32>,
+    /// the session reached `max_new` or emitted EOS
+    pub finished: bool,
+}
+
+/// A live, step-resumable generation. Created by [`Engine::start`] (which
+/// performs prefill and picks the first token); each `step()` runs one
+/// draft→verify→accept round; `finish()` packages the result.
+pub trait EngineSession {
+    fn kind(&self) -> EngineKind;
+
+    /// True once the output is complete; further `step()` calls are no-ops
+    /// that only drain unreported tokens.
+    fn is_finished(&self) -> bool;
+
+    /// Tokens emitted so far (never exceeds the request's `max_new`).
+    fn emitted(&self) -> usize;
+
+    /// Advance one decode round and report newly produced tokens.
+    fn step(&mut self) -> Result<StepOutcome>;
+
+    /// Consume the session, yielding the final result. Valid at any point
+    /// (cancellation yields the partial output produced so far).
+    fn finish(self: Box<Self>) -> GenResult;
+}
+
+/// A decoding engine bound to a config; `start` binds it to a runtime and
+/// a request.
 pub trait Engine {
     fn kind(&self) -> EngineKind;
 
-    /// Run one full generation (prefill + decode loop).
-    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult>;
+    /// Prefill and return a live session positioned after the first token.
+    fn start<'rt>(
+        &self,
+        rt: &'rt Runtime,
+        req: &GenRequest,
+    ) -> Result<Box<dyn EngineSession + 'rt>>;
+}
+
+/// Shared output accounting for sessions: enforces the `max_new` bound as
+/// tokens are produced (so overshooting acceptance rounds never skew the
+/// reported counters — the truncated tokens are excluded from both the
+/// output and `accepted_total`) and tracks the not-yet-reported cursor
+/// that `StepOutcome::new_tokens` drains.
+#[derive(Debug, Default)]
+pub struct SessionOut {
+    pub tokens: Vec<u32>,
+    pub max_new: usize,
+    reported: usize,
+    pub done: bool,
+}
+
+impl SessionOut {
+    pub fn new(max_new: usize) -> SessionOut {
+        SessionOut { tokens: Vec::new(), max_new, reported: 0, done: max_new == 0 }
+    }
+
+    /// The prefill bonus token (the first output token of every engine).
+    pub fn push_first(&mut self, t: u32) {
+        if self.max_new == 0 {
+            self.done = true;
+            return;
+        }
+        self.tokens.push(t);
+        self.done = self.tokens.len() >= self.max_new || is_eos(t);
+    }
+
+    /// Append one round's output: the accepted drafted path followed by
+    /// the round's bonus token, clipped to `max_new`. Returns how many
+    /// *drafted* tokens were actually kept (the τ numerator contribution).
+    pub fn push_round(&mut self, drafted: &[u32], bonus: u32) -> usize {
+        let room = self.max_new.saturating_sub(self.tokens.len());
+        let kept = drafted.len().min(room);
+        self.tokens.extend_from_slice(&drafted[..kept]);
+        if self.tokens.len() < self.max_new {
+            self.tokens.push(bonus);
+        }
+        self.done = self.tokens.len() >= self.max_new || is_eos(bonus);
+        kept
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Last emitted token (sessions only call this when non-empty).
+    pub fn last(&self) -> u32 {
+        *self.tokens.last().expect("SessionOut::last on empty output")
+    }
+
+    /// Drain the unreported tail into a `StepOutcome`.
+    pub fn outcome(&mut self) -> StepOutcome {
+        let new_tokens = self.tokens[self.reported..].to_vec();
+        self.reported = self.tokens.len();
+        StepOutcome { new_tokens, finished: self.done }
+    }
 }
 
 /// Construct the engine selected by the config.
@@ -70,11 +177,105 @@ pub fn build(cfg: &Config) -> Box<dyn Engine> {
     }
 }
 
-/// Convenience used by harnesses: build + generate in one call.
+/// Creates sessions for the scheduler. The production implementation is
+/// [`RuntimeFactory`]; tests inject [`scripted::ScriptedFactory`] to
+/// exercise scheduling without artifacts.
+pub trait SessionFactory<'rt> {
+    fn start_session(
+        &mut self,
+        kind: EngineKind,
+        req: &GenRequest,
+    ) -> Result<Box<dyn EngineSession + 'rt>>;
+}
+
+/// Session factory over a real runtime: builds the engine named by `kind`
+/// (with the base config's geometry) and starts it.
+pub struct RuntimeFactory<'rt> {
+    rt: &'rt Runtime,
+    base: Config,
+}
+
+impl<'rt> RuntimeFactory<'rt> {
+    pub fn new(rt: &'rt Runtime, base: Config) -> RuntimeFactory<'rt> {
+        RuntimeFactory { rt, base }
+    }
+}
+
+impl<'rt> SessionFactory<'rt> for RuntimeFactory<'rt> {
+    fn start_session(
+        &mut self,
+        kind: EngineKind,
+        req: &GenRequest,
+    ) -> Result<Box<dyn EngineSession + 'rt>> {
+        let mut cfg = self.base.clone();
+        cfg.engine = kind;
+        build(&cfg).start(self.rt, req)
+    }
+}
+
+/// Convenience used by harnesses: start → step loop → finish. Produces
+/// byte-identical tokens to the pre-session monolithic decode loops.
 pub fn generate_with(
     cfg: &Config,
     rt: &Runtime,
     req: &GenRequest,
 ) -> Result<GenResult> {
-    build(cfg).generate(rt, req)
+    let mut session = build(cfg).start(rt, req)?;
+    while !session.is_finished() {
+        session.step()?;
+    }
+    Ok(session.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_out_clips_overshoot() {
+        let mut o = SessionOut::new(5);
+        o.push_first(65);
+        assert!(!o.done);
+        // round accepts 3 drafted + bonus: only 4 slots remain
+        let kept = o.push_round(&[66, 67, 68], 69);
+        assert_eq!(kept, 3);
+        assert_eq!(o.tokens, vec![65, 66, 67, 68, 69]);
+        assert!(o.done);
+        // overshooting round: 2 slots of drafted kept, bonus dropped
+        let mut o = SessionOut::new(3);
+        o.push_first(65);
+        let kept = o.push_round(&[66, 67, 68], 69);
+        assert_eq!(kept, 2);
+        assert_eq!(o.tokens, vec![65, 66, 67]);
+        assert!(o.done);
+    }
+
+    #[test]
+    fn session_out_eos_finishes() {
+        let mut o = SessionOut::new(100);
+        o.push_first(65);
+        o.push_round(&[], crate::tokenizer::EOS);
+        assert!(o.done);
+        assert_eq!(o.len(), 2);
+    }
+
+    #[test]
+    fn session_out_outcome_drains() {
+        let mut o = SessionOut::new(10);
+        o.push_first(65);
+        o.push_round(&[66], 67);
+        let s = o.outcome();
+        assert_eq!(s.new_tokens, vec![65, 66, 67]);
+        assert!(!s.finished);
+        let s2 = o.outcome();
+        assert!(s2.new_tokens.is_empty());
+    }
+
+    #[test]
+    fn session_out_zero_max_new() {
+        let mut o = SessionOut::new(0);
+        o.push_first(65);
+        assert!(o.done);
+        assert!(o.is_empty());
+    }
 }

@@ -1,0 +1,204 @@
+//! Scripted (model-free) engine sessions: deterministic token streams
+//! with no runtime or artifacts behind them. Two uses:
+//!
+//! * scheduler/server tests — exercise continuous batching, streaming,
+//!   cancellation and failure paths without compiled models;
+//! * load simulation — drive the coordinator with thousands of synthetic
+//!   requests to measure scheduler overhead in isolation.
+//!
+//! The token stream is lowercase ASCII (`a`, `b`, `c`, …) so decoded
+//! output is printable; a session emits one "bonus" token at start (like
+//! the real engines' prefill pick) and `tokens_per_step` tokens per
+//! `step()` until `max_new`.
+
+use anyhow::{bail, Result};
+
+use crate::config::EngineKind;
+use crate::metrics::GenStats;
+
+use super::{
+    EngineSession, GenRequest, GenResult, SessionFactory, SessionOut, StepOutcome,
+};
+
+fn token_at(i: usize) -> u32 {
+    (b'a' + (i % 26) as u8) as u32
+}
+
+pub struct ScriptedSession {
+    kind: EngineKind,
+    out: SessionOut,
+    tokens_per_step: usize,
+    steps: usize,
+    /// inject an engine error on the step with this index (0-based)
+    fail_at_step: Option<usize>,
+    /// sleep this long per step (simulates device latency; makes
+    /// mid-generation cancellation tests deterministic)
+    step_micros: u64,
+    stats: GenStats,
+}
+
+impl ScriptedSession {
+    pub fn new(
+        kind: EngineKind,
+        req: &GenRequest,
+        tokens_per_step: usize,
+        fail_at_step: Option<usize>,
+    ) -> ScriptedSession {
+        let mut out = SessionOut::new(req.max_new);
+        out.push_first(token_at(0));
+        let stats = GenStats { prefill_secs: 1e-6, ..GenStats::default() };
+        ScriptedSession {
+            kind,
+            out,
+            tokens_per_step: tokens_per_step.max(1),
+            steps: 0,
+            fail_at_step,
+            step_micros: 0,
+            stats,
+        }
+    }
+
+    pub fn with_step_micros(mut self, us: u64) -> ScriptedSession {
+        self.step_micros = us;
+        self
+    }
+}
+
+impl EngineSession for ScriptedSession {
+    fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    fn is_finished(&self) -> bool {
+        self.out.done
+    }
+
+    fn emitted(&self) -> usize {
+        self.out.len()
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.fail_at_step == Some(self.steps) {
+            bail!("scripted failure at step {}", self.steps);
+        }
+        if self.step_micros > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(self.step_micros));
+        }
+        if !self.out.done {
+            // a "round": tokens_per_step-1 drafted + 1 bonus, like a spec
+            // engine with a fixed acceptance length
+            let base = self.out.len();
+            let drafted: Vec<u32> =
+                (0..self.tokens_per_step - 1).map(|i| token_at(base + i)).collect();
+            let bonus = token_at(base + drafted.len());
+            let kept = self.out.push_round(&drafted, bonus);
+            self.steps += 1;
+            self.stats.verify_steps += 1;
+            self.stats.accepted_total += kept;
+            self.stats.decode_secs += 1e-6;
+        }
+        Ok(self.out.outcome())
+    }
+
+    fn finish(self: Box<Self>) -> GenResult {
+        let ScriptedSession { out, mut stats, .. } = *self;
+        stats.new_tokens = out.tokens.len();
+        GenResult { tokens: out.tokens, stats }
+    }
+}
+
+/// Factory producing [`ScriptedSession`]s — inject into the coordinator
+/// (or `server::serve_on`) to test scheduling without artifacts.
+#[derive(Debug, Clone)]
+pub struct ScriptedFactory {
+    /// tokens produced per step (≥ 1)
+    pub tokens_per_step: usize,
+    /// per-step simulated device latency in microseconds
+    pub step_micros: u64,
+    /// prompts containing this token fail at `start` (admission-time
+    /// engine failure)
+    pub fail_start_marker: Option<u32>,
+    /// prompts containing this token fail on their first `step()`
+    pub fail_step_marker: Option<u32>,
+}
+
+impl Default for ScriptedFactory {
+    fn default() -> Self {
+        ScriptedFactory {
+            tokens_per_step: 1,
+            step_micros: 0,
+            fail_start_marker: None,
+            fail_step_marker: None,
+        }
+    }
+}
+
+impl SessionFactory<'static> for ScriptedFactory {
+    fn start_session(
+        &mut self,
+        kind: EngineKind,
+        req: &GenRequest,
+    ) -> Result<Box<dyn EngineSession + 'static>> {
+        if let Some(m) = self.fail_start_marker {
+            if req.prompt.contains(&m) {
+                bail!("scripted start failure");
+            }
+        }
+        let fail_at = self
+            .fail_step_marker
+            .filter(|m| req.prompt.contains(m))
+            .map(|_| 0usize);
+        Ok(Box::new(
+            ScriptedSession::new(kind, req, self.tokens_per_step, fail_at)
+                .with_step_micros(self.step_micros),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_emits_exactly_max_new() {
+        let req = GenRequest::greedy(vec![65, 66], 10);
+        let mut s: Box<dyn EngineSession> =
+            Box::new(ScriptedSession::new(EngineKind::SpecPv, &req, 3, None));
+        let mut collected = Vec::new();
+        let mut steps = 0;
+        while !s.is_finished() {
+            let o = s.step().unwrap();
+            collected.extend(o.new_tokens);
+            steps += 1;
+            assert!(steps < 100, "did not terminate");
+        }
+        assert_eq!(collected.len(), 10);
+        let r = s.finish();
+        assert_eq!(r.tokens, collected);
+        assert_eq!(r.stats.new_tokens, 10);
+        // 1 at start + 3/step → steps = ceil(9/3) = 3
+        assert_eq!(steps, 3);
+    }
+
+    #[test]
+    fn scripted_failure_injection() {
+        let req = GenRequest::greedy(vec![1], 10);
+        let mut s = ScriptedSession::new(EngineKind::SpecPv, &req, 1, Some(1));
+        assert!(s.step().is_ok());
+        assert!(s.step().is_err());
+    }
+
+    #[test]
+    fn factory_markers() {
+        let mut f = ScriptedFactory {
+            fail_start_marker: Some(999),
+            ..ScriptedFactory::default()
+        };
+        assert!(f
+            .start_session(EngineKind::SpecPv, &GenRequest::greedy(vec![999], 4))
+            .is_err());
+        assert!(f
+            .start_session(EngineKind::SpecPv, &GenRequest::greedy(vec![1], 4))
+            .is_ok());
+    }
+}

@@ -1,24 +1,24 @@
 //! EAGLE3-YARN baseline: EAGLE-3 tree drafting with **full-KV**
 //! verification every step (the paper's strongest lossless baseline,
 //! Tables 1/3 row 3). Also the shared implementation of the "Full" mode
-//! rounds inside SpecPV.
+//! rounds inside SpecPV. One `step()` = one draft→verify→accept round.
 
 use anyhow::Result;
 
 use crate::config::Config;
+use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::{bucket_need, ReadOut};
 use crate::offload::OffloadSim;
 use crate::runtime::Runtime;
 use crate::sampling::pick_token;
-use crate::tokenizer::is_eos;
 use crate::tree::Tree;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 use super::eagle::{draft_tree, DraftInputs};
 use super::session::{DraftSession, TargetSession};
-use super::{Engine, GenRequest, GenResult};
+use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
 
 pub struct SpecFullEngine {
     cfg: Config,
@@ -62,12 +62,34 @@ pub fn accept_round(tree: &Tree, picks: &[u32]) -> RoundAccept {
     RoundAccept { path_tokens, path_idx, bonus, deepest }
 }
 
+pub struct SpecFullSession<'rt> {
+    target: TargetSession<'rt>,
+    draft: DraftSession<'rt>,
+    out: SessionOut,
+    /// the current round's tree root (last emitted by the target itself)
+    bonus: u32,
+    /// previous round's accepted path: (token, fused target feature)
+    chain: Vec<(u32, Vec<f32>)>,
+    /// recycled draft hidden of the bonus's predecessor
+    prev_hidden: Vec<f32>,
+    rng: Rng,
+    stats: GenStats,
+    cfg: Config,
+    consts: Consts,
+    prompt_len: usize,
+    temperature: f32,
+}
+
 impl Engine for SpecFullEngine {
     fn kind(&self) -> crate::config::EngineKind {
         crate::config::EngineKind::SpecFull
     }
 
-    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult> {
+    fn start<'rt>(
+        &self,
+        rt: &'rt Runtime,
+        req: &GenRequest,
+    ) -> Result<Box<dyn EngineSession + 'rt>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
         let consts = rt.manifest.consts.clone();
@@ -84,79 +106,117 @@ impl Engine for SpecFullEngine {
         let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft))?;
         stats.prefill_secs = sw.lap();
 
-        let mut out: Vec<u32> = Vec::new();
-        let mut bonus = pick_token(&logits, req.temperature, &mut rng);
-        out.push(bonus);
+        let bonus = pick_token(&logits, req.temperature, &mut rng);
+        let mut out = SessionOut::new(req.max_new);
+        out.push_first(bonus);
         // first round: no catch-up chain; the bonus's predecessor hidden
         // is the draft hidden of the last prompt token (pass-1 convention)
-        let mut chain: Vec<(u32, Vec<f32>)> = Vec::new();
-        let mut prev_hidden =
+        let prev_hidden =
             draft.read_hidden_row((req.prompt.len() - 1) % consts.chunk)?;
 
-        while out.len() < req.max_new && !is_eos(bonus) {
-            // --- draft ----------------------------------------------------
-            let chain_start =
-                req.prompt.len() + out.len() - 1 - chain.len();
-            let round = draft_tree(
-                &mut draft,
-                &self.cfg,
-                &DraftInputs {
-                    chain: std::mem::take(&mut chain),
-                    bonus,
-                    chain_start_pos: chain_start,
-                    prev_hidden: std::mem::take(&mut prev_hidden),
-                },
-            )?;
-            let tree = round.tree;
-            prev_hidden = round.bonus_hidden;
-            stats.draft_secs += sw.lap();
+        Ok(Box::new(SpecFullSession {
+            target,
+            draft,
+            out,
+            bonus,
+            chain: Vec::new(),
+            prev_hidden,
+            rng,
+            stats,
+            cfg: self.cfg.clone(),
+            consts,
+            prompt_len: req.prompt.len(),
+            temperature: req.temperature,
+        }))
+    }
+}
 
-            // --- verify ---------------------------------------------------
-            let flat = tree.flatten(consts.tree_t);
-            let root_pos = req.prompt.len() + out.len() - 1;
-            let read = target.verify_tree(&flat, root_pos)?;
-            stats.verify_secs += sw.lap();
+impl EngineSession for SpecFullSession<'_> {
+    fn kind(&self) -> crate::config::EngineKind {
+        crate::config::EngineKind::SpecFull
+    }
 
-            // --- accept ---------------------------------------------------
-            let picks = tree_picks(&tree, &read, 0, req.temperature, &mut rng);
-            let acc = accept_round(&tree, &picks);
-            if std::env::var("SPECPV_DEBUG").is_ok() && stats.verify_steps < 10 {
-                let kids: Vec<u32> = tree.children(0).iter().map(|&c| tree.nodes[c].token).collect();
-                eprintln!(
-                    "round {}: root={:?} target_pick={:?} draft_kids={:?} hit={}",
-                    stats.verify_steps,
-                    char::from_u32(bonus).unwrap_or('?'),
-                    char::from_u32(picks[0]).unwrap_or('?'),
-                    kids.iter().map(|&k| char::from_u32(k).unwrap_or('?')).collect::<Vec<_>>(),
-                    kids.contains(&picks[0]),
-                );
-            }
-            stats.verify_steps += 1;
-            stats.accepted_total += acc.path_tokens.len();
-            stats.full_steps += 1;
+    fn is_finished(&self) -> bool {
+        self.out.done
+    }
 
-            out.extend(&acc.path_tokens);
-            out.push(acc.bonus);
+    fn emitted(&self) -> usize {
+        self.out.len()
+    }
 
-            // pending compaction rows: root + accepted path
-            let mut rows = vec![0usize];
-            rows.extend(&acc.path_idx);
-            target.cache.set_pending(rows, consts.prev_window())?;
-
-            // next round's draft chain: accepted path tokens with their
-            // target features; bonus feature = feature of deepest node
-            chain = acc
-                .path_idx
-                .iter()
-                .map(|&i| (tree.nodes[i].token, read.feats(i).to_vec()))
-                .collect();
-            bonus = acc.bonus;
-            stats.other_secs += sw.lap();
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.out.done {
+            return Ok(self.out.outcome());
         }
-        out.truncate(req.max_new); // multi-token acceptance can overshoot
+        let mut sw = Stopwatch::new();
+
+        // --- draft ----------------------------------------------------
+        let chain_start = self.prompt_len + self.out.len() - 1 - self.chain.len();
+        let round = draft_tree(
+            &mut self.draft,
+            &self.cfg,
+            &DraftInputs {
+                chain: std::mem::take(&mut self.chain),
+                bonus: self.bonus,
+                chain_start_pos: chain_start,
+                prev_hidden: std::mem::take(&mut self.prev_hidden),
+            },
+        )?;
+        let tree = round.tree;
+        self.prev_hidden = round.bonus_hidden;
+        self.stats.draft_secs += sw.lap();
+
+        // --- verify ---------------------------------------------------
+        let flat = tree.flatten(self.consts.tree_t);
+        let root_pos = self.prompt_len + self.out.len() - 1;
+        let read = self.target.verify_tree(&flat, root_pos)?;
+        self.stats.verify_secs += sw.lap();
+
+        // --- accept ---------------------------------------------------
+        let picks = tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
+        let acc = accept_round(&tree, &picks);
+        if std::env::var("SPECPV_DEBUG").is_ok() && self.stats.verify_steps < 10 {
+            let kids: Vec<u32> =
+                tree.children(0).iter().map(|&c| tree.nodes[c].token).collect();
+            eprintln!(
+                "round {}: root={:?} target_pick={:?} draft_kids={:?} hit={}",
+                self.stats.verify_steps,
+                char::from_u32(self.bonus).unwrap_or('?'),
+                char::from_u32(picks[0]).unwrap_or('?'),
+                kids.iter()
+                    .map(|&k| char::from_u32(k).unwrap_or('?'))
+                    .collect::<Vec<_>>(),
+                kids.contains(&picks[0]),
+            );
+        }
+        self.stats.verify_steps += 1;
+        let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
+        self.stats.accepted_total += kept;
+        self.stats.full_steps += 1;
+
+        // pending compaction rows: root + accepted path
+        let mut rows = vec![0usize];
+        rows.extend(&acc.path_idx);
+        self.target.cache.set_pending(rows, self.consts.prev_window())?;
+
+        // next round's draft chain: accepted path tokens with their
+        // target features; bonus feature = feature of deepest node
+        self.chain = acc
+            .path_idx
+            .iter()
+            .map(|&i| (tree.nodes[i].token, read.feats(i).to_vec()))
+            .collect();
+        self.bonus = acc.bonus;
+        self.stats.other_secs += sw.lap();
+
+        Ok(self.out.outcome())
+    }
+
+    fn finish(self: Box<Self>) -> GenResult {
+        let SpecFullSession { target, out, mut stats, .. } = *self;
         stats.decode_secs = stats.draft_secs + stats.verify_secs + stats.other_secs;
-        stats.new_tokens = out.len();
+        stats.new_tokens = out.tokens.len();
         stats.offload_secs = target.offload.secs;
-        Ok(GenResult { tokens: out, stats })
+        GenResult { tokens: out.tokens, stats }
     }
 }

@@ -11,24 +11,29 @@
 //! * **Partial** — verify the tree against the partial cache only
 //!   (sink ++ retrieval ++ local ++ buffer); accepted tokens accumulate
 //!   in the buffer until its cap forces a Refresh.
+//!
+//! The whole mode machine is step-resumable: its loop state (pv chain,
+//! bonus, recycled hidden, partial-cache installation) lives in
+//! [`SpecPvSession`] fields so the coordinator can interleave rounds of
+//! many generations over one runtime.
 
 use anyhow::Result;
 
 use crate::config::Config;
+use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
 use crate::offload::OffloadSim;
 use crate::retrieval::plan_gather;
 use crate::runtime::Runtime;
 use crate::sampling::pick_token;
-use crate::tokenizer::is_eos;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 use super::eagle::{draft_tree, DraftInputs};
 use super::session::{DraftSession, PartialSession, TargetSession};
 use super::spec_full::{accept_round, tree_picks};
-use super::{Engine, GenRequest, GenResult};
+use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Mode {
@@ -47,12 +52,45 @@ impl SpecPvEngine {
     }
 }
 
+pub struct SpecPvSession<'rt> {
+    target: TargetSession<'rt>,
+    draft: DraftSession<'rt>,
+    partial: PartialSession<'rt>,
+    out: SessionOut,
+    /// the current round's tree root (last emitted by the target itself)
+    bonus: u32,
+    /// previous round's accepted path: (token, fused target feature)
+    chain: Vec<(u32, Vec<f32>)>,
+    /// recycled draft hidden of the bonus's predecessor
+    prev_hidden: Vec<f32>,
+    /// pv chain: output tokens not yet in the full cache (buffer
+    /// residents); the *last* output (current bonus) is excluded — it
+    /// becomes the next tree's root
+    pv: Vec<u32>,
+    rng: Rng,
+    stats: GenStats,
+    cfg: Config,
+    consts: Consts,
+    prompt_len: usize,
+    temperature: f32,
+    /// retrieval-gather geometry (selected / total blocks)
+    nsel: usize,
+    nb: usize,
+    /// compiled refresh widths for this bucket
+    t_refresh: usize,
+    big_refresh: Option<usize>,
+}
+
 impl Engine for SpecPvEngine {
     fn kind(&self) -> crate::config::EngineKind {
         crate::config::EngineKind::SpecPv
     }
 
-    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult> {
+    fn start<'rt>(
+        &self,
+        rt: &'rt Runtime,
+        req: &GenRequest,
+    ) -> Result<Box<dyn EngineSession + 'rt>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
         let consts = rt.manifest.consts.clone();
@@ -64,7 +102,7 @@ impl Engine for SpecPvEngine {
             OffloadSim::new(self.cfg.offload.clone()),
         )?;
         let mut draft = DraftSession::new(rt, &self.cfg.model_size, target.bucket)?;
-        let mut partial = PartialSession::new(rt, &self.cfg.model_size, &self.cfg.specpv)?;
+        let partial = PartialSession::new(rt, &self.cfg.model_size, &self.cfg.specpv)?;
         let nsel = partial.bucket / consts.block;
         let nb = target.bucket / consts.block;
 
@@ -84,161 +122,198 @@ impl Engine for SpecPvEngine {
         let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft))?;
         stats.prefill_secs = sw.lap();
 
-        let mut out: Vec<u32> = Vec::new();
-        let mut bonus = pick_token(&logits, req.temperature, &mut rng);
-        out.push(bonus);
-        let mut chain: Vec<(u32, Vec<f32>)> = Vec::new();
-        let mut prev_hidden =
+        let bonus = pick_token(&logits, req.temperature, &mut rng);
+        let mut out = SessionOut::new(req.max_new);
+        out.push_first(bonus);
+        let prev_hidden =
             draft.read_hidden_row((req.prompt.len() - 1) % consts.chunk)?;
-        // pv chain: output tokens not yet in the full cache (buffer
-        // residents); the *last* output (current bonus) is excluded — it
-        // becomes the next tree's root
-        let mut pv: Vec<u32> = Vec::new();
 
-        while out.len() < req.max_new && !is_eos(bonus) {
-            // --- draft ----------------------------------------------------
-            let chain_start = req.prompt.len() + out.len() - 1 - chain.len();
-            let round = draft_tree(
-                &mut draft,
-                &self.cfg,
-                &DraftInputs {
-                    chain: std::mem::take(&mut chain),
-                    bonus,
-                    chain_start_pos: chain_start,
-                    prev_hidden: std::mem::take(&mut prev_hidden),
-                },
-            )?;
-            let tree = round.tree;
-            prev_hidden = round.bonus_hidden;
-            stats.draft_secs += sw.lap();
-            let flat = tree.flatten(consts.tree_t);
-            let root_pos = req.prompt.len() + out.len() - 1;
+        Ok(Box::new(SpecPvSession {
+            target,
+            draft,
+            partial,
+            out,
+            bonus,
+            chain: Vec::new(),
+            prev_hidden,
+            pv: Vec::new(),
+            rng,
+            stats,
+            cfg: self.cfg.clone(),
+            consts,
+            prompt_len: req.prompt.len(),
+            temperature: req.temperature,
+            nsel,
+            nb,
+            t_refresh,
+            big_refresh,
+        }))
+    }
+}
 
-            // --- SelectMode (Alg. 1) ---------------------------------------
-            let core_needed = self.cfg.specpv.core_tokens(consts.block);
-            let mode = if partial.ready()
-                && partial.cache.fits(flat.n, consts.prev_max())
-            {
-                Mode::Partial
-            } else if target.cache.effective_len() + pv.len()
-                > core_needed.max(2 * consts.block)
-            {
-                Mode::Refresh
-            } else {
-                Mode::Full
-            };
+impl EngineSession for SpecPvSession<'_> {
+    fn kind(&self) -> crate::config::EngineKind {
+        crate::config::EngineKind::SpecPv
+    }
 
-            let (read, row_off) = match mode {
-                Mode::Full => {
-                    let r = target.verify_tree(&flat, root_pos)?;
-                    (r, 0usize)
-                }
-                Mode::Partial => {
-                    let r = partial.verify_tree(&flat, root_pos)?;
-                    (r, 0usize)
-                }
-                Mode::Refresh => {
-                    // how wide a refresh do we need?
-                    let width = pv.len() + consts.tree_t;
-                    let t_use = if width <= t_refresh {
-                        t_refresh
-                    } else if let Some(big) = big_refresh {
-                        if width <= big {
-                            big
-                        } else {
-                            anyhow::bail!(
-                                "pv chain {} exceeds refresh capacity",
-                                pv.len()
-                            );
-                        }
+    fn is_finished(&self) -> bool {
+        self.out.done
+    }
+
+    fn emitted(&self) -> usize {
+        self.out.len()
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.out.done {
+            return Ok(self.out.outcome());
+        }
+        let mut sw = Stopwatch::new();
+
+        // --- draft ----------------------------------------------------
+        let chain_start = self.prompt_len + self.out.len() - 1 - self.chain.len();
+        let round = draft_tree(
+            &mut self.draft,
+            &self.cfg,
+            &DraftInputs {
+                chain: std::mem::take(&mut self.chain),
+                bonus: self.bonus,
+                chain_start_pos: chain_start,
+                prev_hidden: std::mem::take(&mut self.prev_hidden),
+            },
+        )?;
+        let tree = round.tree;
+        self.prev_hidden = round.bonus_hidden;
+        self.stats.draft_secs += sw.lap();
+        let flat = tree.flatten(self.consts.tree_t);
+        let root_pos = self.prompt_len + self.out.len() - 1;
+
+        // --- SelectMode (Alg. 1) ---------------------------------------
+        let core_needed = self.cfg.specpv.core_tokens(self.consts.block);
+        let mode = if self.partial.ready()
+            && self.partial.cache.fits(flat.n, self.consts.prev_max())
+        {
+            Mode::Partial
+        } else if self.target.cache.effective_len() + self.pv.len()
+            > core_needed.max(2 * self.consts.block)
+        {
+            Mode::Refresh
+        } else {
+            Mode::Full
+        };
+
+        let (read, row_off) = match mode {
+            Mode::Full => {
+                let r = self.target.verify_tree(&flat, root_pos)?;
+                (r, 0usize)
+            }
+            Mode::Partial => {
+                let r = self.partial.verify_tree(&flat, root_pos)?;
+                (r, 0usize)
+            }
+            Mode::Refresh => {
+                // how wide a refresh do we need?
+                let width = self.pv.len() + self.consts.tree_t;
+                let t_use = if width <= self.t_refresh {
+                    self.t_refresh
+                } else if let Some(big) = self.big_refresh {
+                    if width <= big {
+                        big
                     } else {
                         anyhow::bail!(
-                            "pv chain {} exceeds refresh capacity {t_refresh}",
-                            pv.len()
+                            "pv chain {} exceeds refresh capacity",
+                            self.pv.len()
                         );
-                    };
-                    let chain_pos = req.prompt.len() + out.len() - 1 - pv.len();
-                    let r = target.verify_refresh(&pv, chain_pos, &flat, t_use)?;
-                    (r, 0usize)
-                }
-            };
-            stats.verify_secs += sw.lap();
-
-            // --- accept -----------------------------------------------------
-            // read window is positioned at the tree for all modes
-            let picks = tree_picks(&tree, &read, row_off, req.temperature, &mut rng);
-            let acc = accept_round(&tree, &picks);
-            stats.verify_steps += 1;
-            stats.accepted_total += acc.path_tokens.len();
-
-            match mode {
-                Mode::Full => {
-                    stats.full_steps += 1;
-                    let mut rows = vec![0usize];
-                    rows.extend(&acc.path_idx);
-                    target.cache.set_pending(rows, consts.prev_window())?;
-                }
-                Mode::Partial => {
-                    stats.partial_steps += 1;
-                    let mut rows = vec![0usize];
-                    rows.extend(&acc.path_idx);
-                    partial.cache.set_pending(rows)?;
-                    partial.cache.pv_tokens.push(bonus);
-                    partial
-                        .cache
-                        .pv_tokens
-                        .extend(&acc.path_tokens);
-                    pv.push(bonus);
-                    pv.extend(&acc.path_tokens);
-                }
-                Mode::Refresh => {
-                    stats.refresh_steps += 1;
-                    // commit: pv chain ++ root ++ accepted path (window-
-                    // relative rows)
-                    let n_chain = pv.len();
-                    let width = if n_chain + consts.tree_t <= t_refresh {
-                        t_refresh
-                    } else {
-                        big_refresh.unwrap()
-                    };
-                    let mut rows: Vec<usize> = (0..=n_chain).collect();
-                    rows.extend(acc.path_idx.iter().map(|&i| n_chain + i));
-                    target.commit_now(&rows, width)?;
-                    pv.clear();
-
-                    // re-select retrieval blocks with the fresh queries
-                    let n_queries =
-                        (n_chain + flat.n).min(consts.qrows);
-                    let scores = target.score(n_queries)?;
-                    let plan = plan_gather(
-                        &scores,
-                        target.info.n_layer,
-                        nb,
-                        consts.block,
-                        target.cache.committed,
-                        nsel,
-                        &self.cfg.specpv,
+                    }
+                } else {
+                    anyhow::bail!(
+                        "pv chain {} exceeds refresh capacity {}",
+                        self.pv.len(),
+                        self.t_refresh
                     );
-                    let pstate = target.gather(&plan, partial.bucket)?;
-                    partial.install(pstate, plan.core_len);
-                }
+                };
+                let chain_pos = self.prompt_len + self.out.len() - 1 - self.pv.len();
+                let r =
+                    self.target.verify_refresh(&self.pv, chain_pos, &flat, t_use)?;
+                (r, 0usize)
             }
+        };
+        self.stats.verify_secs += sw.lap();
 
-            out.extend(&acc.path_tokens);
-            out.push(acc.bonus);
+        // --- accept -----------------------------------------------------
+        // read window is positioned at the tree for all modes
+        let picks = tree_picks(&tree, &read, row_off, self.temperature, &mut self.rng);
+        let acc = accept_round(&tree, &picks);
+        self.stats.verify_steps += 1;
 
-            chain = acc
-                .path_idx
-                .iter()
-                .map(|&i| (tree.nodes[i].token, read.feats(row_off + i).to_vec()))
-                .collect();
-            bonus = acc.bonus;
-            stats.other_secs += sw.lap();
+        match mode {
+            Mode::Full => {
+                self.stats.full_steps += 1;
+                let mut rows = vec![0usize];
+                rows.extend(&acc.path_idx);
+                self.target.cache.set_pending(rows, self.consts.prev_window())?;
+            }
+            Mode::Partial => {
+                self.stats.partial_steps += 1;
+                let mut rows = vec![0usize];
+                rows.extend(&acc.path_idx);
+                self.partial.cache.set_pending(rows)?;
+                self.partial.cache.pv_tokens.push(self.bonus);
+                self.partial.cache.pv_tokens.extend(&acc.path_tokens);
+                self.pv.push(self.bonus);
+                self.pv.extend(&acc.path_tokens);
+            }
+            Mode::Refresh => {
+                self.stats.refresh_steps += 1;
+                // commit: pv chain ++ root ++ accepted path (window-
+                // relative rows)
+                let n_chain = self.pv.len();
+                let width = if n_chain + self.consts.tree_t <= self.t_refresh {
+                    self.t_refresh
+                } else {
+                    self.big_refresh.unwrap()
+                };
+                let mut rows: Vec<usize> = (0..=n_chain).collect();
+                rows.extend(acc.path_idx.iter().map(|&i| n_chain + i));
+                self.target.commit_now(&rows, width)?;
+                self.pv.clear();
+
+                // re-select retrieval blocks with the fresh queries
+                let n_queries = (n_chain + flat.n).min(self.consts.qrows);
+                let scores = self.target.score(n_queries)?;
+                let plan = plan_gather(
+                    &scores,
+                    self.target.info.n_layer,
+                    self.nb,
+                    self.consts.block,
+                    self.target.cache.committed,
+                    self.nsel,
+                    &self.cfg.specpv,
+                );
+                let pstate = self.target.gather(&plan, self.partial.bucket)?;
+                self.partial.install(pstate, plan.core_len);
+            }
         }
-        out.truncate(req.max_new); // multi-token acceptance can overshoot
+
+        let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
+        self.stats.accepted_total += kept;
+
+        self.chain = acc
+            .path_idx
+            .iter()
+            .map(|&i| (tree.nodes[i].token, read.feats(row_off + i).to_vec()))
+            .collect();
+        self.bonus = acc.bonus;
+        self.stats.other_secs += sw.lap();
+
+        Ok(self.out.outcome())
+    }
+
+    fn finish(self: Box<Self>) -> GenResult {
+        let SpecPvSession { target, out, mut stats, .. } = *self;
         stats.decode_secs = stats.draft_secs + stats.verify_secs + stats.other_secs;
-        stats.new_tokens = out.len();
+        stats.new_tokens = out.tokens.len();
         stats.offload_secs = target.offload.secs;
-        Ok(GenResult { tokens: out, stats })
+        GenResult { tokens: out.tokens, stats }
     }
 }

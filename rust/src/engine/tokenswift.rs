@@ -8,19 +8,19 @@
 use anyhow::Result;
 
 use crate::config::Config;
+use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::{bucket_need, medusa_name};
 use crate::offload::OffloadSim;
 use crate::runtime::{Arg, Runtime};
 use crate::sampling::{pick_token, top_k};
-use crate::tokenizer::is_eos;
 use crate::tree::Tree;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 use super::session::{DraftSession, TargetSession};
 use super::spec_full::{accept_round, tree_picks};
-use super::{Engine, GenRequest, GenResult};
+use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
 
 pub struct TokenSwiftEngine {
     cfg: Config,
@@ -30,35 +30,52 @@ impl TokenSwiftEngine {
     pub fn new(cfg: Config) -> TokenSwiftEngine {
         TokenSwiftEngine { cfg }
     }
+}
 
-    /// Build the static Medusa tree from the 3 head distributions:
-    /// root → top-4 of head 1 → ×top-2 of head 2 → best path gets head 3's
-    /// top-1 (≤ 14 nodes).
-    fn medusa_tree(&self, bonus: u32, heads: &[f32], vocab: usize) -> Tree {
-        let h1 = &heads[0..vocab];
-        let h2 = &heads[vocab..2 * vocab];
-        let h3 = &heads[2 * vocab..3 * vocab];
-        let l1 = crate::sampling::log_softmax(h1);
-        let l2 = crate::sampling::log_softmax(h2);
-        let l3 = crate::sampling::log_softmax(h3);
+/// Build the static Medusa tree from the 3 head distributions:
+/// root → top-4 of head 1 → ×top-2 of head 2 → best path gets head 3's
+/// top-1 (≤ 14 nodes).
+fn medusa_tree(bonus: u32, heads: &[f32], vocab: usize) -> Tree {
+    let h1 = &heads[0..vocab];
+    let h2 = &heads[vocab..2 * vocab];
+    let h3 = &heads[2 * vocab..3 * vocab];
+    let l1 = crate::sampling::log_softmax(h1);
+    let l2 = crate::sampling::log_softmax(h2);
+    let l3 = crate::sampling::log_softmax(h3);
 
-        let mut tree = Tree::new(bonus);
-        let mut best_leaf = 0usize;
-        let mut best_score = f32::NEG_INFINITY;
-        for &a in top_k(&l1, 4).iter() {
-            let ia = tree.add(0, a as u32, l1[a]);
-            for &b in top_k(&l2, 2).iter() {
-                let ib = tree.add(ia, b as u32, l2[b]);
-                if tree.nodes[ib].score > best_score {
-                    best_score = tree.nodes[ib].score;
-                    best_leaf = ib;
-                }
+    let mut tree = Tree::new(bonus);
+    let mut best_leaf = 0usize;
+    let mut best_score = f32::NEG_INFINITY;
+    for &a in top_k(&l1, 4).iter() {
+        let ia = tree.add(0, a as u32, l1[a]);
+        for &b in top_k(&l2, 2).iter() {
+            let ib = tree.add(ia, b as u32, l2[b]);
+            if tree.nodes[ib].score > best_score {
+                best_score = tree.nodes[ib].score;
+                best_leaf = ib;
             }
         }
-        let c = top_k(&l3, 1)[0];
-        tree.add(best_leaf, c as u32, l3[c]);
-        tree
     }
+    let c = top_k(&l3, 1)[0];
+    tree.add(best_leaf, c as u32, l3[c]);
+    tree
+}
+
+pub struct TokenSwiftSession<'rt> {
+    rt: &'rt Runtime,
+    target: TargetSession<'rt>,
+    out: SessionOut,
+    bonus: u32,
+    /// top-layer feature of the deepest accepted node (drives the heads)
+    feat: Vec<f32>,
+    rng: Rng,
+    stats: GenStats,
+    consts: Consts,
+    vocab: usize,
+    d_model: usize,
+    mname: String,
+    prompt_len: usize,
+    temperature: f32,
 }
 
 impl Engine for TokenSwiftEngine {
@@ -66,7 +83,11 @@ impl Engine for TokenSwiftEngine {
         crate::config::EngineKind::TokenSwift
     }
 
-    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult> {
+    fn start<'rt>(
+        &self,
+        rt: &'rt Runtime,
+        req: &GenRequest,
+    ) -> Result<Box<dyn EngineSession + 'rt>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
         let consts = rt.manifest.consts.clone();
@@ -88,44 +109,84 @@ impl Engine for TokenSwiftEngine {
         let (logits, feat_last) = target.prefill(&req.prompt, None)?;
         stats.prefill_secs = sw.lap();
 
-        let mut out: Vec<u32> = Vec::new();
-        let mut bonus = pick_token(&logits, req.temperature, &mut rng);
-        out.push(bonus);
-        let mut feat = feat_last[2 * h..3 * h].to_vec();
+        let bonus = pick_token(&logits, req.temperature, &mut rng);
+        let mut out = SessionOut::new(req.max_new);
+        out.push_first(bonus);
+        let feat = feat_last[2 * h..3 * h].to_vec();
 
-        while out.len() < req.max_new && !is_eos(bonus) {
-            // --- Medusa draft ----------------------------------------------
-            let heads = rt.invoke_download(&mname, &[Arg::F32(&feat)])?;
-            let tree = self.medusa_tree(bonus, &heads, vocab);
-            stats.draft_secs += sw.lap();
+        Ok(Box::new(TokenSwiftSession {
+            rt,
+            target,
+            out,
+            bonus,
+            feat,
+            rng,
+            stats,
+            consts,
+            vocab,
+            d_model: h,
+            mname,
+            prompt_len: req.prompt.len(),
+            temperature: req.temperature,
+        }))
+    }
+}
 
-            // --- full verification ------------------------------------------
-            let flat = tree.flatten(consts.tree_t);
-            let root_pos = req.prompt.len() + out.len() - 1;
-            let read = target.verify_tree(&flat, root_pos)?;
-            stats.verify_secs += sw.lap();
+impl EngineSession for TokenSwiftSession<'_> {
+    fn kind(&self) -> crate::config::EngineKind {
+        crate::config::EngineKind::TokenSwift
+    }
 
-            let picks = tree_picks(&tree, &read, 0, req.temperature, &mut rng);
-            let acc = accept_round(&tree, &picks);
-            stats.verify_steps += 1;
-            stats.accepted_total += acc.path_tokens.len();
-            stats.full_steps += 1;
+    fn is_finished(&self) -> bool {
+        self.out.done
+    }
 
-            out.extend(&acc.path_tokens);
-            out.push(acc.bonus);
+    fn emitted(&self) -> usize {
+        self.out.len()
+    }
 
-            let mut rows = vec![0usize];
-            rows.extend(&acc.path_idx);
-            target.cache.set_pending(rows, consts.prev_window())?;
-
-            feat = read.feats(acc.deepest)[2 * h..3 * h].to_vec();
-            bonus = acc.bonus;
-            stats.other_secs += sw.lap();
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.out.done {
+            return Ok(self.out.outcome());
         }
-        out.truncate(req.max_new); // multi-token acceptance can overshoot
+        let mut sw = Stopwatch::new();
+        let h = self.d_model;
+
+        // --- Medusa draft ----------------------------------------------
+        let heads = self.rt.invoke_download(&self.mname, &[Arg::F32(&self.feat)])?;
+        let tree = medusa_tree(self.bonus, &heads, self.vocab);
+        self.stats.draft_secs += sw.lap();
+
+        // --- full verification ------------------------------------------
+        let flat = tree.flatten(self.consts.tree_t);
+        let root_pos = self.prompt_len + self.out.len() - 1;
+        let read = self.target.verify_tree(&flat, root_pos)?;
+        self.stats.verify_secs += sw.lap();
+
+        let picks = tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
+        let acc = accept_round(&tree, &picks);
+        self.stats.verify_steps += 1;
+        self.stats.full_steps += 1;
+
+        let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
+        self.stats.accepted_total += kept;
+
+        let mut rows = vec![0usize];
+        rows.extend(&acc.path_idx);
+        self.target.cache.set_pending(rows, self.consts.prev_window())?;
+
+        self.feat = read.feats(acc.deepest)[2 * h..3 * h].to_vec();
+        self.bonus = acc.bonus;
+        self.stats.other_secs += sw.lap();
+
+        Ok(self.out.outcome())
+    }
+
+    fn finish(self: Box<Self>) -> GenResult {
+        let TokenSwiftSession { target, out, mut stats, .. } = *self;
         stats.decode_secs = stats.draft_secs + stats.verify_secs + stats.other_secs;
-        stats.new_tokens = out.len();
+        stats.new_tokens = out.tokens.len();
         stats.offload_secs = target.offload.secs;
-        Ok(GenResult { tokens: out, stats })
+        GenResult { tokens: out.tokens, stats }
     }
 }

@@ -12,18 +12,18 @@
 use anyhow::Result;
 
 use crate::config::Config;
+use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
 use crate::offload::OffloadSim;
 use crate::runtime::Runtime;
 use crate::sampling::pick_token;
-use crate::tokenizer::is_eos;
 use crate::tree::{chain_mask, FlatTree};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 use super::session::{TargetSession, TinySession};
-use super::{Engine, GenRequest, GenResult};
+use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
 
 pub struct TriForceEngine {
     cfg: Config,
@@ -51,12 +51,29 @@ fn chain_flat(tokens: &[u32], t_pad: usize) -> FlatTree {
     }
 }
 
+pub struct TriForceSession<'rt> {
+    target: TargetSession<'rt>,
+    tiny: TinySession<'rt>,
+    out: SessionOut,
+    bonus: u32,
+    rng: Rng,
+    stats: GenStats,
+    consts: Consts,
+    gamma: usize,
+    prompt_len: usize,
+    temperature: f32,
+}
+
 impl Engine for TriForceEngine {
     fn kind(&self) -> crate::config::EngineKind {
         crate::config::EngineKind::TriForce
     }
 
-    fn generate(&mut self, rt: &Runtime, req: &GenRequest) -> Result<GenResult> {
+    fn start<'rt>(
+        &self,
+        rt: &'rt Runtime,
+        req: &GenRequest,
+    ) -> Result<Box<dyn EngineSession + 'rt>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
         let consts = rt.manifest.consts.clone();
@@ -75,56 +92,91 @@ impl Engine for TriForceEngine {
         tiny.prefill(&req.prompt, gamma)?;
         stats.prefill_secs = sw.lap();
 
-        let mut out: Vec<u32> = Vec::new();
-        let mut bonus = pick_token(&logits, req.temperature, &mut rng);
-        out.push(bonus);
+        let bonus = pick_token(&logits, req.temperature, &mut rng);
+        let mut out = SessionOut::new(req.max_new);
+        out.push_first(bonus);
 
-        while out.len() < req.max_new && !is_eos(bonus) {
-            // --- draft a γ-chain with the tiny LM --------------------------
-            let mut chain: Vec<u32> = vec![bonus];
-            let mut cur = bonus;
-            for g in 0..gamma {
-                let pos = req.prompt.len() + out.len() - 1 + g;
-                let lg = tiny.step(cur, pos)?;
-                cur = pick_token(&lg, req.temperature, &mut rng) as u32;
-                chain.push(cur);
-            }
-            stats.draft_secs += sw.lap();
+        Ok(Box::new(TriForceSession {
+            target,
+            tiny,
+            out,
+            bonus,
+            rng,
+            stats,
+            consts,
+            gamma,
+            prompt_len: req.prompt.len(),
+            temperature: req.temperature,
+        }))
+    }
+}
 
-            // --- target verifies [bonus, d1..dγ] ---------------------------
-            let flat = chain_flat(&chain, consts.tree_t);
-            let root_pos = req.prompt.len() + out.len() - 1;
-            let read = target.verify_tree(&flat, root_pos)?;
-            stats.verify_secs += sw.lap();
+impl EngineSession for TriForceSession<'_> {
+    fn kind(&self) -> crate::config::EngineKind {
+        crate::config::EngineKind::TriForce
+    }
 
-            // greedy walk down the chain
-            let mut accepted = 0usize;
-            let mut next = pick_token(read.logits(0), req.temperature, &mut rng);
-            while accepted < gamma && chain[accepted + 1] == next {
-                accepted += 1;
-                next = pick_token(read.logits(accepted), req.temperature, &mut rng);
-            }
-            stats.verify_steps += 1;
-            stats.accepted_total += accepted;
-            stats.full_steps += 1;
+    fn is_finished(&self) -> bool {
+        self.out.done
+    }
 
-            for &t in &chain[1..=accepted] {
-                out.push(t);
-            }
-            out.push(next);
+    fn emitted(&self) -> usize {
+        self.out.len()
+    }
 
-            // rejected tiny-cache rows are reused next round
-            tiny.rollback(gamma - accepted);
-
-            let rows: Vec<usize> = (0..=accepted).collect();
-            target.cache.set_pending(rows, consts.prev_window())?;
-            bonus = next;
-            stats.other_secs += sw.lap();
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.out.done {
+            return Ok(self.out.outcome());
         }
-        out.truncate(req.max_new); // multi-token acceptance can overshoot
+        let mut sw = Stopwatch::new();
+        let gamma = self.gamma;
+
+        // --- draft a γ-chain with the tiny LM --------------------------
+        let mut chain: Vec<u32> = vec![self.bonus];
+        let mut cur = self.bonus;
+        for g in 0..gamma {
+            let pos = self.prompt_len + self.out.len() - 1 + g;
+            let lg = self.tiny.step(cur, pos)?;
+            cur = pick_token(&lg, self.temperature, &mut self.rng);
+            chain.push(cur);
+        }
+        self.stats.draft_secs += sw.lap();
+
+        // --- target verifies [bonus, d1..dγ] ---------------------------
+        let flat = chain_flat(&chain, self.consts.tree_t);
+        let root_pos = self.prompt_len + self.out.len() - 1;
+        let read = self.target.verify_tree(&flat, root_pos)?;
+        self.stats.verify_secs += sw.lap();
+
+        // greedy walk down the chain
+        let mut accepted = 0usize;
+        let mut next = pick_token(read.logits(0), self.temperature, &mut self.rng);
+        while accepted < gamma && chain[accepted + 1] == next {
+            accepted += 1;
+            next = pick_token(read.logits(accepted), self.temperature, &mut self.rng);
+        }
+        self.stats.verify_steps += 1;
+        self.stats.full_steps += 1;
+
+        let kept = self.out.push_round(&chain[1..=accepted], next);
+        self.stats.accepted_total += kept;
+
+        // rejected tiny-cache rows are reused next round
+        self.tiny.rollback(gamma - accepted);
+
+        let rows: Vec<usize> = (0..=accepted).collect();
+        self.target.cache.set_pending(rows, self.consts.prev_window())?;
+        self.bonus = next;
+        self.stats.other_secs += sw.lap();
+
+        Ok(self.out.outcome())
+    }
+
+    fn finish(self: Box<Self>) -> GenResult {
+        let TriForceSession { target, out, mut stats, .. } = *self;
         stats.decode_secs = stats.draft_secs + stats.verify_secs + stats.other_secs;
-        stats.new_tokens = out.len();
+        stats.new_tokens = out.tokens.len();
         stats.offload_secs = target.offload.secs;
-        Ok(GenResult { tokens: out, stats })
+        GenResult { tokens: out.tokens, stats }
     }
 }

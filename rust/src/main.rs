@@ -3,7 +3,7 @@
 //! ```text
 //! specpv generate --prompt-file f.txt [--engine spec_pv] [--max-new 256]
 //! specpv continue --ctx 4096 --seed 1 [--engine ...]   # PG-19-style demo
-//! specpv serve    [--addr 127.0.0.1:7799]
+//! specpv serve    [--addr 127.0.0.1:7799] [--max-active 4]
 //! specpv bench    <fig1|table1|fig4|table2|table3|fig5|table4|fig6|fig7|fig8|all>
 //!                 [--out results] [--quick]
 //! specpv inspect  # artifact / manifest summary
@@ -56,6 +56,9 @@ fn build_config(cli: &Cli) -> Result<Config> {
     }
     if let Some(a) = cli.opt("addr") {
         cfg.server_addr = a.to_string();
+    }
+    if let Some(n) = cli.opt_parse::<usize>("max-active")? {
+        cfg.max_active = n;
     }
     if cli.has_flag("offload") {
         cfg.offload.enabled = true;

@@ -1,130 +1,410 @@
 //! TCP JSON-lines serving protocol (std::net — tokio is not in the
-//! offline vendor set, and the PJRT client is single-device anyway, so a
-//! blocking accept loop with a request queue is the right shape).
+//! offline vendor set). Connections are served **concurrently**: each
+//! accepted socket gets a reader thread (parses ops into [`WorkItem`]s)
+//! and a writer thread (drains response lines), all feeding one shared
+//! `std::sync::mpsc` work queue. The device loop — the only thread that
+//! touches the PJRT runtime, whose handles are not `Send` — drains the
+//! queue and drives the coordinator's continuous-batching `tick()`, so
+//! many clients interleave at decode-round granularity instead of
+//! waiting for whole generations.
 //!
-//! Protocol: one JSON object per line.
+//! Protocol: one JSON object per line (see DESIGN.md §"Serving protocol").
 //!   → {"op":"generate","prompt":"...","max_new":128,"engine":"spec_pv",
-//!      "temperature":0.0}
-//!   ← {"ok":true,"text":"...","tokens":57,"tok_per_s":31.2,"tau":2.9,
+//!      "temperature":0.0,"seed":0,"deadline_s":30.0}
+//!   ← {"ok":true,"id":0,"done":true,"text":"...","tokens":57,
+//!      "tok_per_s":31.2,"tau":2.9,"ttft_s":0.21,"steps":19,
 //!      "modes":{"full":1,"partial":12,"refresh":3}}
-//!   → {"op":"metrics"}           ← {"ok":true,"summary":"..."}
+//!   → {"op":"generate","stream":true,...}
+//!   ← {"ok":true,"id":1,"stream":true,"queued":true}      (ack with id)
+//!   ← {"ok":true,"id":1,"stream":true,"step":1,"delta":"…","done":false}*
+//!   ← {"ok":true,"id":1,"done":true,"text":"…",...}       (final)
+//!   → {"op":"cancel","id":1}     ← {"ok":true,"cancelled":true}
+//!   → {"op":"metrics"}           ← {"ok":true,"summary":"...",
+//!                                   "queue_depth":0,"active":0,...}
 //!   → {"op":"ping"}              ← {"ok":true}
 //!   → {"op":"shutdown"}          ← {"ok":true}  (server exits)
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::Config;
-use crate::coordinator::Coordinator;
+use crate::config::{Config, EngineKind};
+use crate::coordinator::{Coordinator, Event, RequestId, RequestState};
 use crate::engine::GenRequest;
 use crate::json::Json;
 use crate::runtime::Runtime;
 use crate::tokenizer;
 
-/// Serve forever (or until a `shutdown` op). One connection at a time:
-/// the device is serial, so parallel accepts would only queue anyway.
+/// One parsed client operation, routed to the device loop together with
+/// the originating connection's reply channel.
+enum WorkItem {
+    Generate {
+        gen: GenRequest,
+        engine: Option<EngineKind>,
+        stream: bool,
+        deadline_secs: Option<f64>,
+        reply: Sender<String>,
+    },
+    Cancel { id: RequestId, reply: Sender<String> },
+    Metrics { reply: Sender<String> },
+    Ping { reply: Sender<String> },
+    Shutdown { reply: Sender<String> },
+}
+
+/// Request-level defaults a reader thread needs to parse `generate` ops
+/// without touching the coordinator.
+#[derive(Clone)]
+struct Defaults {
+    max_new: usize,
+    temperature: f32,
+}
+
+/// Serve forever (or until a `shutdown` op) on the configured address.
 pub fn serve(rt: &Runtime, cfg: Config) -> Result<()> {
     let listener = TcpListener::bind(&cfg.server_addr)
         .with_context(|| format!("binding {}", cfg.server_addr))?;
     println!("specpv server listening on {}", cfg.server_addr);
-    let mut coord = Coordinator::new(rt, cfg);
-    for stream in listener.incoming() {
-        let stream = stream?;
-        match handle_conn(stream, &mut coord) {
-            Ok(true) => break, // shutdown requested
-            Ok(false) => {}
-            Err(e) => eprintln!("connection error: {e:#}"),
-        }
-    }
+    let coord = Coordinator::new(rt, cfg);
+    serve_on(listener, coord)
+}
+
+/// Serve on an already-bound listener with an existing coordinator.
+/// Tests inject a scripted coordinator here; `serve` binds the real one.
+pub fn serve_on(listener: TcpListener, mut coord: Coordinator<'_>) -> Result<()> {
+    let addr = listener.local_addr()?;
+    let defaults = Defaults {
+        max_new: coord.cfg.max_new_tokens,
+        temperature: coord.cfg.temperature,
+    };
+    let (work_tx, work_rx) = channel::<WorkItem>();
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    thread::scope(|s| {
+        let accept_shutdown = shutdown.clone();
+        let accept_tx = work_tx.clone();
+        let accept_defaults = defaults;
+        s.spawn(move || {
+            for stream in listener.incoming() {
+                if accept_shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                // short read timeout so reader threads can observe
+                // shutdown instead of blocking on idle clients forever
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                let Ok(write_half) = stream.try_clone() else { continue };
+                let (conn_tx, conn_rx) = channel::<String>();
+                let wsd = accept_shutdown.clone();
+                s.spawn(move || writer_loop(write_half, conn_rx, wsd));
+                let tx = accept_tx.clone();
+                let sd = accept_shutdown.clone();
+                let d = accept_defaults.clone();
+                s.spawn(move || reader_loop(stream, tx, conn_tx, sd, d));
+            }
+        });
+
+        let served = device_loop(&mut coord, &work_rx);
+        // unblock the acceptor (and, via their timeouts, readers/writers)
+        shutdown.store(true, Ordering::SeqCst);
+        // drop work items still buffered in the channel: they hold clones
+        // of per-connection reply senders that would otherwise keep
+        // writer threads alive past shutdown
+        while work_rx.try_recv().is_ok() {}
+        let _ = TcpStream::connect(addr);
+        served
+    })?;
     println!("server metrics: {}", coord.registry.summary());
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, coord: &mut Coordinator) -> Result<bool> {
-    let peer = stream.peer_addr()?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
+/// Per-connection writer: drains response lines onto the socket. Polls
+/// the shutdown flag so a sender clone buffered somewhere (e.g. a work
+/// item that was never consumed) cannot keep the thread alive past
+/// server exit.
+fn writer_loop(mut stream: TcpStream, rx: Receiver<String>, shutdown: Arc<AtomicBool>) {
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(false); // client closed
-        }
-        let req = match Json::parse(line.trim()) {
-            Ok(j) => j,
-            Err(e) => {
-                write_json(
-                    &mut writer,
-                    Json::obj().set("ok", false).set("error", format!("{e:#}")),
-                )?;
-                continue;
+        match rx.recv_timeout(Duration::from_millis(200)) {
+            Ok(line) => {
+                if stream
+                    .write_all(line.as_bytes())
+                    .and_then(|_| stream.flush())
+                    .is_err()
+                {
+                    return;
+                }
             }
-        };
-        let op = req.get("op").and_then(|x| x.as_str()).unwrap_or("generate");
-        match op {
-            "ping" => write_json(&mut writer, Json::obj().set("ok", true))?,
-            "metrics" => write_json(
-                &mut writer,
-                Json::obj()
-                    .set("ok", true)
-                    .set("summary", coord.registry.summary()),
-            )?,
-            "shutdown" => {
-                write_json(&mut writer, Json::obj().set("ok", true))?;
-                return Ok(true);
+            Err(RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
             }
-            "generate" => {
-                let resp = match handle_generate(&req, coord) {
-                    Ok(j) => j,
-                    Err(e) => Json::obj()
-                        .set("ok", false)
-                        .set("error", format!("{e:#}")),
-                };
-                write_json(&mut writer, resp)?;
-            }
-            other => write_json(
-                &mut writer,
-                Json::obj()
-                    .set("ok", false)
-                    .set("error", format!("unknown op '{other}' from {peer}")),
-            )?,
+            Err(RecvTimeoutError::Disconnected) => return,
         }
     }
 }
 
-fn handle_generate(req: &Json, coord: &mut Coordinator) -> Result<Json> {
-    let prompt = req
-        .get("prompt")
-        .and_then(|x| x.as_str())
-        .ok_or_else(|| anyhow!("missing 'prompt'"))?;
-    let max_new = req
-        .get("max_new")
-        .and_then(|x| x.as_usize())
-        .unwrap_or(coord.cfg.max_new_tokens);
-    let temperature = req
-        .get("temperature")
-        .and_then(|x| x.as_f64())
-        .unwrap_or(coord.cfg.temperature as f64) as f32;
-    let engine = match req.get("engine").and_then(|x| x.as_str()) {
-        Some(e) => Some(e.parse()?),
-        None => None,
-    };
-    let seed = req.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
+/// Per-connection reader: parses JSON lines into work items.
+fn reader_loop(
+    stream: TcpStream,
+    work: Sender<WorkItem>,
+    out: Sender<String>,
+    shutdown: Arc<AtomicBool>,
+    defaults: Defaults,
+) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // client closed
+            Ok(_) => {
+                let trimmed = line.trim();
+                if !trimmed.is_empty() {
+                    match parse_item(trimmed, &defaults, out.clone()) {
+                        Ok(item) => {
+                            if work.send(item).is_err() {
+                                let _ = out.send(line_of(
+                                    Json::obj()
+                                        .set("ok", false)
+                                        .set("error", "server shutting down"),
+                                ));
+                                return;
+                            }
+                        }
+                        Err(e) => {
+                            let _ = out.send(line_of(
+                                Json::obj()
+                                    .set("ok", false)
+                                    .set("error", format!("{e:#}")),
+                            ));
+                        }
+                    }
+                }
+                line.clear();
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
 
-    let gen = GenRequest {
-        prompt: tokenizer::encode(prompt),
-        max_new,
-        temperature,
-        seed,
+fn parse_item(raw: &str, defaults: &Defaults, reply: Sender<String>) -> Result<WorkItem> {
+    let req = Json::parse(raw)?;
+    let op = req.get("op").and_then(|x| x.as_str()).unwrap_or("generate");
+    match op {
+        "ping" => Ok(WorkItem::Ping { reply }),
+        "metrics" => Ok(WorkItem::Metrics { reply }),
+        "shutdown" => Ok(WorkItem::Shutdown { reply }),
+        "cancel" => {
+            let id = req
+                .get("id")
+                .and_then(|x| x.as_i64())
+                .ok_or_else(|| anyhow!("cancel needs 'id'"))? as RequestId;
+            Ok(WorkItem::Cancel { id, reply })
+        }
+        "generate" => {
+            let prompt = req
+                .get("prompt")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("missing 'prompt'"))?;
+            let max_new = req
+                .get("max_new")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(defaults.max_new);
+            let temperature = req
+                .get("temperature")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(defaults.temperature as f64) as f32;
+            let engine = match req.get("engine").and_then(|x| x.as_str()) {
+                Some(e) => Some(e.parse()?),
+                None => None,
+            };
+            let seed = req.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
+            let stream =
+                req.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
+            let deadline_secs = req.get("deadline_s").and_then(|x| x.as_f64());
+            Ok(WorkItem::Generate {
+                gen: GenRequest {
+                    prompt: tokenizer::encode(prompt),
+                    max_new,
+                    temperature,
+                    seed,
+                },
+                engine,
+                stream,
+                deadline_secs,
+                reply,
+            })
+        }
+        other => Err(anyhow!("unknown op '{other}'")),
+    }
+}
+
+/// Per-request reply routing held by the device loop.
+struct PendingReply {
+    reply: Sender<String>,
+    stream: bool,
+}
+
+/// The single device-owning loop: drain work items, tick the scheduler,
+/// route events back to the right connection. Returns on `shutdown`.
+fn device_loop(coord: &mut Coordinator<'_>, work_rx: &Receiver<WorkItem>) -> Result<()> {
+    let mut pending: HashMap<RequestId, PendingReply> = HashMap::new();
+    loop {
+        // block when there is nothing to schedule, drain otherwise
+        if coord.idle() {
+            match work_rx.recv() {
+                Ok(item) => {
+                    if handle_item(item, coord, &mut pending) {
+                        return Ok(());
+                    }
+                }
+                Err(_) => return Ok(()),
+            }
+        }
+        loop {
+            match work_rx.try_recv() {
+                Ok(item) => {
+                    if handle_item(item, coord, &mut pending) {
+                        return Ok(());
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+        for ev in coord.tick() {
+            route_event(ev, coord, &mut pending);
+        }
+    }
+}
+
+/// Apply one work item; returns true on shutdown.
+fn handle_item(
+    item: WorkItem,
+    coord: &mut Coordinator<'_>,
+    pending: &mut HashMap<RequestId, PendingReply>,
+) -> bool {
+    match item {
+        WorkItem::Ping { reply } => {
+            send(&reply, Json::obj().set("ok", true));
+        }
+        WorkItem::Metrics { reply } => {
+            let reg = &coord.registry;
+            send(
+                &reply,
+                Json::obj()
+                    .set("ok", true)
+                    .set("summary", reg.summary())
+                    .set("queue_depth", coord.queue_len())
+                    .set("active", coord.active_len())
+                    .set("completed", reg.completed as i64)
+                    .set("failed", reg.failed as i64)
+                    .set("cancelled", reg.cancelled as i64)
+                    .set("ttft_p50_s", reg.ttft.p50())
+                    .set("ttft_p99_s", reg.ttft.p99()),
+            );
+        }
+        WorkItem::Shutdown { reply } => {
+            send(&reply, Json::obj().set("ok", true));
+            return true;
+        }
+        WorkItem::Cancel { id, reply } => {
+            let cancelled = coord.cancel(id);
+            if cancelled {
+                if let Some(p) = pending.remove(&id) {
+                    send_final(&p, coord, id);
+                }
+            }
+            send(&reply, Json::obj().set("ok", true).set("cancelled", cancelled));
+        }
+        WorkItem::Generate { gen, engine, stream, deadline_secs, reply } => {
+            match coord.submit_with_deadline(gen, engine, deadline_secs) {
+                Ok(id) => {
+                    if stream {
+                        // ack with the id so the client can cancel
+                        send(
+                            &reply,
+                            Json::obj()
+                                .set("ok", true)
+                                .set("id", id as i64)
+                                .set("stream", true)
+                                .set("queued", true),
+                        );
+                    }
+                    pending.insert(id, PendingReply { reply, stream });
+                }
+                Err(e) => {
+                    send(
+                        &reply,
+                        Json::obj().set("ok", false).set("error", format!("{e:#}")),
+                    );
+                }
+            }
+        }
+    }
+    false
+}
+
+fn route_event(
+    ev: Event,
+    coord: &Coordinator<'_>,
+    pending: &mut HashMap<RequestId, PendingReply>,
+) {
+    match ev {
+        Event::Started { .. } => {}
+        Event::Step { id, new_tokens, step, .. } => {
+            if let Some(p) = pending.get(&id) {
+                if p.stream && !new_tokens.is_empty() {
+                    send(
+                        &p.reply,
+                        Json::obj()
+                            .set("ok", true)
+                            .set("id", id as i64)
+                            .set("stream", true)
+                            .set("step", step)
+                            .set("delta", tokenizer::decode(&new_tokens))
+                            .set("done", false),
+                    );
+                }
+            }
+        }
+        Event::Finished { id } | Event::Cancelled { id } | Event::Failed { id, .. } => {
+            if let Some(p) = pending.remove(&id) {
+                send_final(&p, coord, id);
+            }
+        }
+    }
+}
+
+/// The terminal response line for a request (results keyed by id — the
+/// device loop never assumes "the last submitted request finished").
+fn send_final(p: &PendingReply, coord: &Coordinator<'_>, id: RequestId) {
+    let Some(tr) = coord.get(id) else {
+        send(
+            &p.reply,
+            Json::obj().set("ok", false).set("error", "request vanished"),
+        );
+        return;
     };
-    let id = coord.submit(gen, engine)?;
-    coord.step();
-    let tr = coord.get(id).ok_or_else(|| anyhow!("request vanished"))?;
-    match (&tr.state, &tr.result) {
-        (crate::coordinator::RequestState::Done, Some(r)) => Ok(Json::obj()
+    let resp = match (&tr.state, &tr.result) {
+        (RequestState::Done, Some(r)) => Json::obj()
             .set("ok", true)
+            .set("id", id as i64)
+            .set("done", true)
             .set("text", r.text())
             .set("tokens", r.tokens.len())
             .set("tok_per_s", r.stats.throughput())
@@ -136,20 +416,39 @@ fn handle_generate(req: &Json, coord: &mut Coordinator) -> Result<Json> {
                     .set("partial", r.stats.partial_steps)
                     .set("refresh", r.stats.refresh_steps),
             )
-            .set("latency_s", tr.service_secs)),
-        (crate::coordinator::RequestState::Failed(e), _) => {
-            Ok(Json::obj().set("ok", false).set("error", e.as_str()))
-        }
-        _ => Ok(Json::obj().set("ok", false).set("error", "not finished")),
-    }
+            .set("latency_s", tr.service_secs)
+            .set("ttft_s", tr.ttft_secs)
+            .set("steps", tr.steps),
+        (RequestState::Cancelled, r) => Json::obj()
+            .set("ok", true)
+            .set("id", id as i64)
+            .set("done", true)
+            .set("cancelled", true)
+            .set(
+                "text",
+                r.as_ref().map(|r| r.text()).unwrap_or_default(),
+            ),
+        (RequestState::Failed(e), _) => Json::obj()
+            .set("ok", false)
+            .set("id", id as i64)
+            .set("done", true)
+            .set("error", e.as_str()),
+        _ => Json::obj()
+            .set("ok", false)
+            .set("id", id as i64)
+            .set("error", "not finished"),
+    };
+    send(&p.reply, resp);
 }
 
-fn write_json(w: &mut TcpStream, j: Json) -> Result<()> {
+fn line_of(j: Json) -> String {
     let mut s = j.to_string();
     s.push('\n');
-    w.write_all(s.as_bytes())?;
-    w.flush()?;
-    Ok(())
+    s
+}
+
+fn send(tx: &Sender<String>, j: Json) {
+    let _ = tx.send(line_of(j));
 }
 
 /// Blocking client for examples/tests.
@@ -160,22 +459,51 @@ pub struct Client {
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(Client { stream, reader })
     }
 
-    pub fn call(&mut self, req: Json) -> Result<Json> {
+    fn send_line(&mut self, req: &Json) -> Result<()> {
         let mut s = req.to_string();
         s.push('\n');
         self.stream.write_all(s.as_bytes())?;
         self.stream.flush()?;
+        Ok(())
+    }
+
+    fn read_json(&mut self) -> Result<Json> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        if self.reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed the connection");
+        }
         Json::parse(line.trim())
     }
 
-    pub fn generate(&mut self, prompt: &str, max_new: usize, engine: &str) -> Result<Json> {
+    /// One request → one response line.
+    pub fn call(&mut self, req: Json) -> Result<Json> {
+        self.send_line(&req)?;
+        self.read_json()
+    }
+
+    /// Fire a request without waiting for the reply (used to interleave a
+    /// `cancel` op with an in-flight streaming generation).
+    pub fn send(&mut self, req: Json) -> Result<()> {
+        self.send_line(&req)
+    }
+
+    /// Read the next response line.
+    pub fn recv(&mut self) -> Result<Json> {
+        self.read_json()
+    }
+
+    pub fn generate(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        engine: &str,
+    ) -> Result<Json> {
         self.call(
             Json::obj()
                 .set("op", "generate")
@@ -183,6 +511,43 @@ impl Client {
                 .set("max_new", max_new)
                 .set("engine", engine),
         )
+    }
+
+    /// Streaming generation: returns (per-step delta lines, final line).
+    /// The first line the server sends is the `queued` ack carrying the
+    /// request id; it is included in the step-line vector.
+    pub fn generate_stream(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        engine: &str,
+    ) -> Result<(Vec<Json>, Json)> {
+        self.send_line(
+            &Json::obj()
+                .set("op", "generate")
+                .set("prompt", prompt)
+                .set("max_new", max_new)
+                .set("engine", engine)
+                .set("stream", true),
+        )?;
+        let mut steps = Vec::new();
+        loop {
+            let j = self.read_json()?;
+            if j.get("done").and_then(|x| x.as_bool()) == Some(true)
+                || j.get("ok").and_then(|x| x.as_bool()) == Some(false)
+            {
+                return Ok((steps, j));
+            }
+            steps.push(j);
+        }
+    }
+
+    pub fn cancel(&mut self, id: u64) -> Result<Json> {
+        self.call(Json::obj().set("op", "cancel").set("id", id as i64))
+    }
+
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.call(Json::obj().set("op", "metrics"))
     }
 
     pub fn shutdown(&mut self) -> Result<()> {

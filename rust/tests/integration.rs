@@ -30,9 +30,10 @@ fn runtime() -> Option<Runtime> {
 }
 
 fn base_cfg() -> Config {
-    let mut c = Config::default();
-    c.artifacts_dir = artifacts().unwrap_or_else(|| PathBuf::from("artifacts"));
-    c
+    Config {
+        artifacts_dir: artifacts().unwrap_or_else(|| PathBuf::from("artifacts")),
+        ..Config::default()
+    }
 }
 
 fn gen(rt: &Runtime, kind: EngineKind, prompt: &str, max_new: usize) -> specpv::engine::GenResult {

@@ -1,0 +1,271 @@
+//! Continuous-batching scheduler tests over scripted (model-free)
+//! sessions — no artifacts required, so these run everywhere (including
+//! CI). The behaviours pinned here:
+//!   * round-robin fairness: concurrent sessions interleave per tick
+//!     rather than running head-of-line to completion
+//!   * cancellation mid-generation frees the slot and keeps the partial
+//!     output
+//!   * admission rejection (prompt/max_new/queue limits)
+//!   * deadlines expire in-flight requests
+//!   * engine failures surface as Failed events, not panics
+//!   * registry gauges + TTFT telemetry
+
+use specpv::config::Config;
+use specpv::coordinator::{Coordinator, Event, RequestId, RequestState};
+use specpv::engine::scripted::ScriptedFactory;
+use specpv::engine::GenRequest;
+
+fn coord(max_active: usize, tokens_per_step: usize) -> Coordinator<'static> {
+    let cfg = Config { max_active, ..Config::default() };
+    let factory = ScriptedFactory { tokens_per_step, ..ScriptedFactory::default() };
+    Coordinator::with_factory(cfg, Box::new(factory))
+}
+
+fn submit(c: &mut Coordinator<'static>, max_new: usize) -> RequestId {
+    c.submit(GenRequest::greedy(vec![104, 105], max_new), None).unwrap()
+}
+
+/// Ids of Step events, in emission order.
+fn step_ids(events: &[Event]) -> Vec<RequestId> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Step { id, .. } => Some(*id),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn round_robin_fairness_three_sessions() {
+    let mut c = coord(3, 1);
+    let ids = [submit(&mut c, 6), submit(&mut c, 6), submit(&mut c, 6)];
+    let mut all = Vec::new();
+    while !c.idle() {
+        let evs = c.tick();
+        // within a tick, each active session steps exactly once
+        let sids = step_ids(&evs);
+        let mut sorted = sids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), sids.len(), "a session stepped twice in one tick");
+        all.extend(evs);
+    }
+    // every consecutive window of 3 steps covers all three sessions
+    let sids = step_ids(&all);
+    assert_eq!(sids.len(), 3 * 5, "6 tokens = 1 prefill + 5 steps each");
+    for w in sids.chunks(3) {
+        let mut ws = w.to_vec();
+        ws.sort_unstable();
+        assert_eq!(ws, ids.to_vec(), "unfair window: {sids:?}");
+    }
+    for id in ids {
+        let tr = c.get(id).unwrap();
+        assert_eq!(tr.state, RequestState::Done);
+        assert_eq!(tr.result.as_ref().unwrap().tokens.len(), 6);
+    }
+    assert_eq!(c.registry.completed, 3);
+    assert_eq!(c.registry.ttft.len(), 3);
+}
+
+/// The acceptance-criterion shape: two concurrent requests finish with
+/// interleaved step counts rather than sequential completion.
+#[test]
+fn two_concurrent_requests_interleave() {
+    let mut c = coord(2, 1);
+    let a = submit(&mut c, 8);
+    let b = submit(&mut c, 8);
+    let mut events = Vec::new();
+    while !c.idle() {
+        events.extend(c.tick());
+    }
+    let sids = step_ids(&events);
+    // b makes progress strictly before a finishes (and vice versa):
+    let a_last = sids.iter().rposition(|&i| i == a).unwrap();
+    let b_first = sids.iter().position(|&i| i == b).unwrap();
+    let b_last = sids.iter().rposition(|&i| i == b).unwrap();
+    let a_first = sids.iter().position(|&i| i == a).unwrap();
+    assert!(b_first < a_last, "sequential completion, no interleave: {sids:?}");
+    assert!(a_first < b_last, "sequential completion, no interleave: {sids:?}");
+    // both completed with the same number of scheduler steps
+    assert_eq!(c.get(a).unwrap().steps, c.get(b).unwrap().steps);
+    assert_eq!(c.registry.completed, 2);
+}
+
+#[test]
+fn admission_waits_for_free_slot() {
+    let mut c = coord(1, 1);
+    let a = submit(&mut c, 4);
+    let b = submit(&mut c, 4);
+    let mut started = Vec::new();
+    let mut finished = Vec::new();
+    while !c.idle() {
+        for e in c.tick() {
+            match e {
+                Event::Started { id } => started.push(id),
+                Event::Finished { id } => finished.push(id),
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(started, vec![a, b]);
+    assert_eq!(finished, vec![a, b]);
+    // with max_active=1 the second request starts only after the first
+    // finishes — verified by the registry having recorded queue wait
+    assert_eq!(c.registry.completed, 2);
+    assert!(c.get(b).unwrap().queued_secs >= c.get(a).unwrap().queued_secs);
+}
+
+#[test]
+fn cancellation_mid_generation() {
+    let mut c = coord(2, 1);
+    let id = submit(&mut c, 100);
+    c.tick(); // admit + step 1
+    c.tick();
+    assert_eq!(c.active_len(), 1);
+    assert!(c.cancel(id), "cancel running request");
+    let tr = c.get(id).unwrap();
+    assert_eq!(tr.state, RequestState::Cancelled);
+    let partial = tr.result.as_ref().expect("partial result kept");
+    assert!(!partial.tokens.is_empty() && partial.tokens.len() < 100);
+    assert_eq!(c.active_len(), 0, "slot freed");
+    assert_eq!(c.registry.cancelled, 1);
+    // double-cancel and cancel of unknown ids are no-ops
+    assert!(!c.cancel(id));
+    assert!(!c.cancel(999));
+}
+
+#[test]
+fn cancellation_of_queued_request() {
+    let mut c = coord(1, 1);
+    let a = submit(&mut c, 50);
+    let b = submit(&mut c, 50);
+    c.tick(); // admits a only
+    assert!(c.cancel(b));
+    assert_eq!(c.get(b).unwrap().state, RequestState::Cancelled);
+    c.run_all();
+    assert_eq!(c.get(a).unwrap().state, RequestState::Done);
+    assert_eq!(c.registry.completed, 1);
+    assert_eq!(c.registry.cancelled, 1);
+}
+
+#[test]
+fn admission_rejection() {
+    let mut c = coord(2, 1);
+    // oversized prompt
+    let huge = vec![65u32; 100_000];
+    assert!(c.submit(GenRequest::greedy(huge, 16), None).is_err());
+    // oversized max_new
+    assert!(c.submit(GenRequest::greedy(vec![65; 10], 1 << 20), None).is_err());
+    // queue overflow
+    c.admission.max_queue = 2;
+    submit(&mut c, 4);
+    submit(&mut c, 4);
+    assert!(c.submit(GenRequest::greedy(vec![65; 10], 4), None).is_err());
+    assert_eq!(c.queue_len(), 2);
+    c.run_all();
+    assert_eq!(c.registry.completed, 2);
+}
+
+#[test]
+fn deadline_expires_request() {
+    let mut c = coord(2, 1);
+    let id = c
+        .submit_with_deadline(GenRequest::greedy(vec![65; 4], 500), None, Some(0.0))
+        .unwrap();
+    let ok = submit(&mut c, 4);
+    let mut failed = Vec::new();
+    while !c.idle() {
+        for e in c.tick() {
+            if let Event::Failed { id, error } = e {
+                assert!(error.contains("deadline"), "{error}");
+                failed.push(id);
+            }
+        }
+    }
+    assert_eq!(failed, vec![id]);
+    assert!(matches!(c.get(id).unwrap().state, RequestState::Failed(_)));
+    assert_eq!(c.get(ok).unwrap().state, RequestState::Done);
+    assert_eq!(c.registry.failed, 1);
+    assert_eq!(c.registry.completed, 1);
+}
+
+#[test]
+fn engine_failure_is_contained() {
+    let cfg = Config { max_active: 2, ..Config::default() };
+    let factory = ScriptedFactory {
+        tokens_per_step: 1,
+        fail_step_marker: Some(666),
+        ..ScriptedFactory::default()
+    };
+    let mut c = Coordinator::with_factory(cfg, Box::new(factory));
+    let bad = c.submit(GenRequest::greedy(vec![666], 8), None).unwrap();
+    let good = c.submit(GenRequest::greedy(vec![65], 8), None).unwrap();
+    c.run_all();
+    assert!(matches!(c.get(bad).unwrap().state, RequestState::Failed(_)));
+    assert_eq!(c.get(good).unwrap().state, RequestState::Done);
+    assert_eq!(c.registry.failed, 1);
+    assert_eq!(c.registry.completed, 1);
+}
+
+#[test]
+fn start_failure_is_contained() {
+    let cfg = Config { max_active: 2, ..Config::default() };
+    let factory = ScriptedFactory {
+        tokens_per_step: 1,
+        fail_start_marker: Some(666),
+        ..ScriptedFactory::default()
+    };
+    let mut c = Coordinator::with_factory(cfg, Box::new(factory));
+    let bad = c.submit(GenRequest::greedy(vec![666], 8), None).unwrap();
+    c.run_all();
+    assert!(matches!(c.get(bad).unwrap().state, RequestState::Failed(_)));
+}
+
+#[test]
+fn run_until_leaves_others_in_flight() {
+    let mut c = coord(2, 1);
+    let a = submit(&mut c, 4);
+    let b = submit(&mut c, 64);
+    c.run_until(a);
+    assert_eq!(c.get(a).unwrap().state, RequestState::Done);
+    // b was co-scheduled and has made progress, but is not done
+    let b_tr = c.get(b).unwrap();
+    assert_eq!(b_tr.state, RequestState::Running);
+    assert!(b_tr.steps > 0);
+    c.run_all();
+    assert_eq!(c.get(b).unwrap().state, RequestState::Done);
+}
+
+#[test]
+fn registry_gauges_track_queue_and_active() {
+    let mut c = coord(1, 1);
+    submit(&mut c, 8);
+    submit(&mut c, 8);
+    submit(&mut c, 8);
+    assert_eq!(c.registry.queue_depth, 3);
+    c.tick();
+    assert_eq!(c.registry.active_sessions, 1);
+    assert_eq!(c.registry.queue_depth, 2);
+    c.run_all();
+    assert_eq!(c.registry.queue_depth, 0);
+    assert_eq!(c.registry.active_sessions, 0);
+    let s = c.registry.summary();
+    assert!(s.contains("completed=3"), "{s}");
+    assert!(s.contains("p50_ttft="), "{s}");
+}
+
+/// Byte-level check that the scripted engine respects max_new exactly
+/// (the SessionOut clipping that also fixes the tau accounting).
+#[test]
+fn emitted_tokens_respect_max_new() {
+    let mut c = coord(1, 3);
+    let id = submit(&mut c, 10);
+    c.run_all();
+    let r = c.get(id).unwrap().result.as_ref().unwrap().clone();
+    assert_eq!(r.tokens.len(), 10);
+    assert_eq!(r.stats.new_tokens, 10);
+    // accepted_total only counts kept drafted tokens: 9 post-prefill
+    // tokens over 3-token rounds = 3 steps × ≤2 drafted
+    assert!(r.stats.accepted_total <= 2 * r.stats.verify_steps);
+}

@@ -1,0 +1,186 @@
+//! Loopback integration tests of the concurrent TCP server over scripted
+//! sessions — no artifacts needed. The server (device loop) runs on the
+//! test thread via `serve_on`; clients run in spawned threads. Covered:
+//!   * two concurrent clients, one streaming, both complete correctly
+//!     (results keyed by request id — the old submit/step front-of-queue
+//!     race would hand one client the other's completion)
+//!   * streaming emits a queued ack + per-step delta lines + a final line
+//!     whose text equals the concatenated deltas
+//!   * mid-generation cancellation over the wire keeps the partial text
+//!   * metrics op exposes queue/active gauges and TTFT percentiles
+
+use std::net::TcpListener;
+use std::thread;
+
+use specpv::config::Config;
+use specpv::coordinator::Coordinator;
+use specpv::engine::scripted::ScriptedFactory;
+use specpv::json::Json;
+use specpv::server::{serve_on, Client};
+
+fn scripted_coordinator(
+    max_active: usize,
+    tokens_per_step: usize,
+    step_micros: u64,
+) -> Coordinator<'static> {
+    let cfg = Config { max_active, ..Config::default() };
+    let factory = ScriptedFactory {
+        tokens_per_step,
+        step_micros,
+        ..ScriptedFactory::default()
+    };
+    Coordinator::with_factory(cfg, Box::new(factory))
+}
+
+#[test]
+fn two_concurrent_clients_one_streaming() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let coord = scripted_coordinator(4, 2, 0);
+
+    let a1 = addr.clone();
+    let t1 = thread::spawn(move || {
+        let mut c = Client::connect(&a1).unwrap();
+        let r = c.generate("hello from client one", 24, "spec_pv").unwrap();
+        assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(true), "{r:?}");
+        assert_eq!(r.get("done").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(r.get("tokens").and_then(|x| x.as_usize()), Some(24));
+        assert!(r.get("text").and_then(|x| x.as_str()).is_some());
+        assert!(r.get("id").is_some());
+        assert!(r.get("ttft_s").is_some());
+    });
+    let a2 = addr.clone();
+    let t2 = thread::spawn(move || {
+        let mut c = Client::connect(&a2).unwrap();
+        let (steps, fin) =
+            c.generate_stream("stream me please", 24, "spec_full").unwrap();
+        // first line is the queued ack with the request id
+        assert_eq!(steps[0].get("queued").and_then(|x| x.as_bool()), Some(true));
+        assert!(steps[0].get("id").is_some());
+        // at least one incremental delta line, then the final line
+        let deltas: Vec<&Json> =
+            steps.iter().filter(|j| j.get("delta").is_some()).collect();
+        assert!(!deltas.is_empty(), "no stream deltas: {steps:?}");
+        let delta_text: String = deltas
+            .iter()
+            .map(|j| j.get("delta").and_then(|x| x.as_str()).unwrap_or(""))
+            .collect();
+        assert_eq!(fin.get("ok").and_then(|x| x.as_bool()), Some(true), "{fin:?}");
+        assert_eq!(fin.get("tokens").and_then(|x| x.as_usize()), Some(24));
+        // the concatenated deltas reproduce the final text exactly
+        assert_eq!(
+            Some(delta_text.as_str()),
+            fin.get("text").and_then(|x| x.as_str())
+        );
+    });
+    let closer = thread::spawn(move || {
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let mut c = Client::connect(&addr).unwrap();
+        let m = c.metrics().unwrap();
+        assert_eq!(m.get("ok").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(m.get("completed").and_then(|x| x.as_i64()), Some(2), "{m:?}");
+        assert_eq!(m.get("queue_depth").and_then(|x| x.as_i64()), Some(0));
+        assert_eq!(m.get("active").and_then(|x| x.as_i64()), Some(0));
+        assert!(m.get("ttft_p50_s").is_some());
+        c.shutdown().unwrap();
+    });
+
+    serve_on(listener, coord).unwrap();
+    closer.join().unwrap();
+}
+
+#[test]
+fn cancel_streaming_request_mid_generation() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // 1 token/step with 300µs simulated device latency → a 1024-token
+    // generation takes ~0.3s, so the cancel lands mid-flight
+    let coord = scripted_coordinator(2, 1, 300);
+
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr).unwrap();
+        c.send(
+            Json::obj()
+                .set("op", "generate")
+                .set("prompt", "cancel me")
+                .set("max_new", 1024)
+                .set("stream", true),
+        )
+        .unwrap();
+        let ack = c.recv().unwrap();
+        assert_eq!(ack.get("queued").and_then(|x| x.as_bool()), Some(true), "{ack:?}");
+        let id = ack.get("id").and_then(|x| x.as_i64()).unwrap();
+
+        let mut deltas = 0usize;
+        let mut cancel_sent = false;
+        let fin = loop {
+            let j = c.recv().unwrap();
+            if j.get("done").and_then(|x| x.as_bool()) == Some(true) {
+                break j;
+            }
+            if j.get("delta").is_some() {
+                deltas += 1;
+                if deltas == 2 && !cancel_sent {
+                    c.send(Json::obj().set("op", "cancel").set("id", id)).unwrap();
+                    cancel_sent = true;
+                }
+            }
+        };
+        assert_eq!(
+            fin.get("cancelled").and_then(|x| x.as_bool()),
+            Some(true),
+            "generation was not cancelled mid-flight: {fin:?}"
+        );
+        let text = fin.get("text").and_then(|x| x.as_str()).unwrap();
+        assert!(!text.is_empty() && text.len() < 1024, "partial text: {text:?}");
+        // the cancel op's own ack arrives after the final line
+        let cancel_ack = c.recv().unwrap();
+        assert_eq!(
+            cancel_ack.get("cancelled").and_then(|x| x.as_bool()),
+            Some(true),
+            "{cancel_ack:?}"
+        );
+        c.shutdown().unwrap();
+    });
+
+    serve_on(listener, coord).unwrap();
+    client.join().unwrap();
+}
+
+#[test]
+fn bad_requests_get_error_lines_not_disconnects() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let coord = scripted_coordinator(2, 1, 0);
+
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr).unwrap();
+        // malformed JSON
+        let r = c.call(Json::Str("not an object".into())).unwrap();
+        assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(false));
+        // unknown op
+        let r = c.call(Json::obj().set("op", "frobnicate")).unwrap();
+        assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(false));
+        // generate without a prompt
+        let r = c.call(Json::obj().set("op", "generate")).unwrap();
+        assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(false));
+        // oversized max_new rejected by admission, connection still fine
+        let r = c
+            .call(
+                Json::obj()
+                    .set("op", "generate")
+                    .set("prompt", "hi")
+                    .set("max_new", 1usize << 20),
+            )
+            .unwrap();
+        assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(false));
+        // and a good request still works afterwards
+        let r = c.generate("hi", 8, "spec_pv").unwrap();
+        assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(true), "{r:?}");
+        c.shutdown().unwrap();
+    });
+
+    serve_on(listener, coord).unwrap();
+    client.join().unwrap();
+}
