@@ -9,12 +9,12 @@
 use specpv::config::{Config, EngineKind};
 use specpv::engine::{self, GenRequest};
 use specpv::metrics::rouge_l;
-use specpv::runtime::Runtime;
+use specpv::backend;
 use specpv::{corpus, tokenizer};
 
 fn main() -> anyhow::Result<()> {
     let cfg = Config::default();
-    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let be = backend::from_config(&cfg)?;
 
     let book = corpus::novel_text(0xB00C, 3000);
     let prompt = corpus::summarize_prompt(&book);
@@ -22,12 +22,12 @@ fn main() -> anyhow::Result<()> {
 
     let mut full_cfg = cfg.clone();
     full_cfg.engine = EngineKind::SpecFull;
-    let full = engine::generate_with(&full_cfg, &rt, &req)?;
+    let full = engine::generate_with(&full_cfg, be.as_ref(), &req)?;
 
     let mut pv_cfg = cfg.clone();
     pv_cfg.engine = EngineKind::SpecPv;
     pv_cfg.specpv.retrieval_budget = 256;
-    let pv = engine::generate_with(&pv_cfg, &rt, &req)?;
+    let pv = engine::generate_with(&pv_cfg, be.as_ref(), &req)?;
 
     // first divergence point
     let ft = full.tokens.clone();

@@ -16,7 +16,7 @@ use std::thread;
 
 use specpv::config::Config;
 use specpv::json::Json;
-use specpv::runtime::Runtime;
+use specpv::backend;
 use specpv::server::{serve, Client};
 use specpv::{corpus, util::Stopwatch};
 
@@ -29,8 +29,9 @@ fn main() -> anyhow::Result<()> {
     let addr = cfg.server_addr.clone();
 
     let server = thread::spawn(move || {
-        let rt = Runtime::new(&cfg.artifacts_dir).expect("runtime");
-        serve(&rt, cfg).expect("server");
+        // the server thread owns its backend (device handles are !Send)
+        let be = backend::from_config(&cfg).expect("backend");
+        serve(be.as_ref(), cfg).expect("server");
     });
     // workload: continuation + summarization + needle QA, mixed engines
     let mut jobs: Vec<(String, String, usize)> = Vec::new();

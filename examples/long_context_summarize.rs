@@ -10,7 +10,7 @@
 use specpv::config::{Config, EngineKind};
 use specpv::engine::{self, GenRequest};
 use specpv::metrics::{bleurt_proxy, rouge_l};
-use specpv::runtime::Runtime;
+use specpv::backend;
 use specpv::{corpus, tokenizer};
 
 fn main() -> anyhow::Result<()> {
@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(2800);
     let cfg = Config::default();
-    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let be = backend::from_config(&cfg)?;
 
     let doc = corpus::report_text(0xD0C, ctx);
     let prompt = corpus::summarize_prompt(&doc);
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut full_cfg = cfg.clone();
     full_cfg.engine = EngineKind::SpecFull;
-    let full = engine::generate_with(&full_cfg, &rt, &req)?;
+    let full = engine::generate_with(&full_cfg, be.as_ref(), &req)?;
     println!("=== full verification ===\n{}\n", full.text());
 
     println!("| budget | ROUGE-L | BLEURT* | tok/s | refreshes |");
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         let mut c = cfg.clone();
         c.engine = EngineKind::SpecPv;
         c.specpv.retrieval_budget = budget;
-        let r = engine::generate_with(&c, &rt, &req)?;
+        let r = engine::generate_with(&c, be.as_ref(), &req)?;
         println!(
             "| {budget} | {:.1} | {:.1} | {:.1} | {} |",
             rouge_l(&r.text(), &full.text()),

@@ -9,7 +9,7 @@
 use specpv::config::{Config, EngineKind};
 use specpv::engine::{self, GenRequest};
 use specpv::metrics::exact_match;
-use specpv::runtime::Runtime;
+use specpv::backend;
 use specpv::{corpus, tokenizer};
 
 fn main() -> anyhow::Result<()> {
@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let ctx: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(2000);
     let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(5);
     let cfg = Config::default();
-    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let be = backend::from_config(&cfg)?;
 
     println!("| method | hits | accuracy |");
     println!("|---|---|---|");
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
             let qa = corpus::needle_qa(100 + i as u64, ctx, 8);
             let prompt = format!("{}{}", qa.context, qa.question);
             let req = GenRequest::greedy(tokenizer::encode(&prompt), 12);
-            let r = engine::generate_with(&c, &rt, &req)?;
+            let r = engine::generate_with(&c, be.as_ref(), &req)?;
             let text = r.text();
             let got = text
                 .split_whitespace()

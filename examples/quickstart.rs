@@ -1,13 +1,15 @@
-//! Quickstart: load the AOT artifacts, generate a continuation with
-//! SpecPV, and print the efficiency telemetry.
+//! Quickstart: generate a continuation with SpecPV and print the
+//! efficiency telemetry. Runs on the AOT artifacts when present and on
+//! the pure-Rust reference backend otherwise, so it works on a fresh
+//! checkout:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use specpv::config::{Config, EngineKind};
 use specpv::engine::{self, GenRequest};
-use specpv::runtime::Runtime;
+use specpv::backend;
 use specpv::{corpus, tokenizer};
 
 fn main() -> anyhow::Result<()> {
@@ -15,7 +17,7 @@ fn main() -> anyhow::Result<()> {
         engine: EngineKind::SpecPv,
         ..Config::default()
     };
-    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let be = backend::from_config(&cfg)?;
 
     // A PG-19-style synthetic prompt long enough for partial verification
     // to engage (budget 512 → core ≈ 608 tokens).
@@ -23,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     println!("--- prompt tail ---\n...{}", &prompt[prompt.len() - 160..]);
 
     let req = GenRequest::greedy(tokenizer::encode(&prompt), 128);
-    let result = engine::generate_with(&cfg, &rt, &req)?;
+    let result = engine::generate_with(&cfg, be.as_ref(), &req)?;
 
     println!("--- SpecPV continuation ---\n{}", result.text());
     let s = &result.stats;

@@ -1,30 +1,28 @@
 //! `cargo bench` entry point that regenerates the paper's tables/figures
 //! in quick mode through the experiment harness (full runs:
-//! `specpv bench all --out results`). Skips gracefully when artifacts are
-//! missing so `cargo bench` works in a fresh checkout.
+//! `specpv bench all --out results`). Runs on the AOT artifacts when
+//! present, otherwise on the pure-Rust reference backend (fig8 needs the
+//! build-time train log and self-skips without it).
 
 use std::path::{Path, PathBuf};
 
+use specpv::backend::{self, Backend};
 use specpv::config::Config;
 use specpv::harness;
-use specpv::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("artifacts/ not built — run `make artifacts` first; skipping");
-        return Ok(());
-    }
     let cfg = Config { artifacts_dir: dir.clone(), ..Config::default() };
-    let rt = Runtime::new(&dir)?;
+    let be = backend::from_config(&cfg)?;
+    println!("[{} backend]", be.name());
     let out = PathBuf::from("results/bench_quick");
     for id in ["fig1", "table1", "table4", "fig6", "fig8"] {
         println!("=== {id} (quick) ===");
-        harness::run_experiment(&rt, &cfg, id, &out, true)?;
+        harness::run_experiment(be.as_ref(), &cfg, id, &out, true)?;
     }
-    let c = rt.counters.borrow();
+    let c = be.counters();
     println!(
-        "[runtime totals: {} executions {:.1}s, {} compiles {:.1}s]",
+        "[backend totals: {} executions {:.1}s, {} compiles {:.1}s]",
         c.executions, c.exec_secs, c.compilations, c.compile_secs
     );
     Ok(())

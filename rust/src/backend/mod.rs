@@ -1,0 +1,397 @@
+//! Device abstraction: the typed kernel-op API every engine runs on.
+//!
+//! The engines' hot path used to be hard-wired to the PJRT runtime
+//! through a stringly-typed `invoke("verify_s_b1024_t16", &[Arg])` ABI.
+//! This module replaces that contract with a [`Backend`] trait whose
+//! methods are the *semantic* operations of the SpecPV stack — each a
+//! struct carrying bucket/tree geometry instead of a formatted
+//! executable name:
+//!
+//! | op                | semantics                                          |
+//! |-------------------|----------------------------------------------------|
+//! | `prefill`         | target fwd over one causal prompt chunk            |
+//! | `verify_full`     | tree/AR/refresh verification against the full KV   |
+//! | `verify_partial`  | tree verification against the partial KV (§3.2)    |
+//! | `commit`          | standalone acceptance compaction after a Refresh   |
+//! | `score`           | Quest-style retrieval block scores (Eqs. 1–3)      |
+//! | `refresh_gather`  | assemble a fresh partial state from a gather plan  |
+//! | `draft_prefill`   | EAGLE draft prefill consuming target-state feats   |
+//! | `draft_expand`    | EAGLE draft chain/level step over W tree slots     |
+//! | `medusa`          | Medusa heads off the top target feature            |
+//! | `tiny_forward`    | TriForce independent tiny-LM step (streaming ring) |
+//! | `read_logits`     | host-visible extractor reads from a state          |
+//!
+//! Two implementations ship:
+//! * [`pjrt::PjrtBackend`] — the AOT-artifact player: maps typed ops to
+//!   manifest executable names in one place and executes them on the
+//!   PJRT CPU client (`crate::runtime`);
+//! * [`reference::ReferenceBackend`] — a pure-Rust host backend with the
+//!   same char-LM forward semantics and deterministic seeded weights, so
+//!   every engine runs end-to-end with no artifacts (CI, tests, demos).
+//!
+//! State buffers are opaque [`StateBuf`] handles (device buffers for
+//! pjrt, host vectors for the reference backend) threaded call-to-call;
+//! ops that mutate a state take it by value and return the successor, so
+//! a host backend can update in place while a device backend re-threads
+//! buffers. See DESIGN.md §10.
+
+pub mod pjrt;
+pub mod reference;
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{BackendKind, Config};
+use crate::manifest::{Consts, ModelInfo, StateLayout};
+
+/// Execution counters every backend tracks (surfaced through
+/// `Registry::summary` and the server `metrics` op so operators can see
+/// which backend served a request and what it cost).
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    pub executions: u64,
+    pub exec_secs: f64,
+    pub compilations: u64,
+    pub compile_secs: f64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    pub per_exec: HashMap<String, (u64, f64)>,
+}
+
+/// An opaque, backend-owned state buffer (the flat f32 state of
+/// DESIGN.md §4). Only the backend that produced it can interpret it.
+pub struct StateBuf(Box<dyn Any>);
+
+impl StateBuf {
+    pub fn new<T: 'static>(inner: T) -> StateBuf {
+        StateBuf(Box::new(inner))
+    }
+
+    /// Placeholder used when moving a state out of a session field.
+    pub fn nil() -> StateBuf {
+        StateBuf(Box::new(()))
+    }
+
+    pub fn downcast<T: 'static>(self) -> Result<T> {
+        self.0
+            .downcast::<T>()
+            .map(|b| *b)
+            .map_err(|_| anyhow!("state buffer belongs to a different backend"))
+    }
+
+    pub fn downcast_ref<T: 'static>(&self) -> Result<&T> {
+        self.0
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow!("state buffer belongs to a different backend"))
+    }
+
+    pub fn downcast_mut<T: 'static>(&mut self) -> Result<&mut T> {
+        self.0
+            .downcast_mut::<T>()
+            .ok_or_else(|| anyhow!("state buffer belongs to a different backend"))
+    }
+}
+
+impl std::fmt::Debug for StateBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("StateBuf(..)")
+    }
+}
+
+/// Which flat-state layout a buffer follows (DESIGN.md §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StateKind {
+    /// target model over a full bucket: kv | logits | feats | queries
+    Full,
+    /// SpecPV partial cache: kv | logits | feats
+    Partial,
+    /// EAGLE draft layer: kv | logits | hidden
+    Draft,
+    /// TriForce tiny LM: kv | last-row logits
+    Tiny,
+}
+
+/// Target forward over one causal prompt chunk (tokens padded to the
+/// chunk width, `mask` a causal chain over the real rows).
+#[derive(Debug)]
+pub struct PrefillOp<'a> {
+    pub size: &'a str,
+    pub bucket: usize,
+    pub tokens: &'a [i32],
+    pub pos: &'a [i32],
+    pub mask: &'a [f32],
+    /// committed KV length (write offset for the chunk's rows)
+    pub kv_len: usize,
+}
+
+/// Verification step with fused acceptance compaction: the accepted rows
+/// of the previous step (`prev_idx[..n_prev]`, window-relative) are
+/// compacted into the committed region before the `t` new tokens are
+/// processed and appended at `kv_len + n_prev`. Used for AR decode
+/// (`t == 1`), tree verification (`t == tree_t`) and Refresh steps
+/// (`t` = a refresh width); against the full bucket (`verify_full`) or
+/// the partial bucket (`verify_partial`).
+#[derive(Debug)]
+pub struct VerifyOp<'a> {
+    pub size: &'a str,
+    /// full bucket B (verify_full) or partial bucket P (verify_partial)
+    pub bucket: usize,
+    /// token-slot width of this step (compiled T variant on pjrt)
+    pub t: usize,
+    pub tokens: &'a [i32],
+    pub pos: &'a [i32],
+    /// `[t, t]` ancestor mask
+    pub mask: &'a [f32],
+    pub kv_len: usize,
+    /// accepted rows of the previous step, padded to the fused window
+    pub prev_idx: &'a [i32],
+    pub n_prev: usize,
+}
+
+/// Standalone acceptance compaction (after a Refresh step, where up to a
+/// refresh-width of rows must commit before score/gather run).
+#[derive(Debug)]
+pub struct CommitOp<'a> {
+    pub size: &'a str,
+    pub bucket: usize,
+    /// compaction window width (a refresh width)
+    pub window: usize,
+    /// kept rows, window-relative, padded to `window`
+    pub idx: &'a [i32],
+    pub n: usize,
+    pub kv_len: usize,
+}
+
+/// Retrieval block scores from the queries the last verification wrote.
+/// Returns flat `[L, 3, NB]` (mean/max/last reductions stacked).
+#[derive(Debug)]
+pub struct ScoreOp<'a> {
+    pub size: &'a str,
+    pub bucket: usize,
+    pub kv_len: usize,
+    pub n_queries: usize,
+}
+
+/// Assemble a fresh partial state by gathering whole KV blocks out of a
+/// full state (the Refresh step's cache rebuild).
+#[derive(Debug)]
+pub struct GatherOp<'a> {
+    pub size: &'a str,
+    /// source full bucket
+    pub bucket: usize,
+    /// destination partial bucket
+    pub p_bucket: usize,
+    /// flat `[L, nsel]` block ids in token order (sink ++ retrieval ++
+    /// local), padded by repeating the final block
+    pub block_idx: &'a [i32],
+}
+
+/// EAGLE draft prefill over one chunk; the fused target features are
+/// sliced from the target state backend-side (no host round-trip).
+#[derive(Debug)]
+pub struct DraftPrefillOp<'a> {
+    pub size: &'a str,
+    pub bucket: usize,
+    pub tokens: &'a [i32],
+    pub pos: &'a [i32],
+    pub mask: &'a [f32],
+    pub kv_len: usize,
+    pub write_pos: usize,
+}
+
+/// EAGLE draft chain/level step over the W draft slots.
+#[derive(Debug)]
+pub struct DraftExpandOp<'a> {
+    pub size: &'a str,
+    pub bucket: usize,
+    pub tokens: &'a [i32],
+    /// `[W, 3h]` fused features (target feats or recycled hiddens)
+    pub feats: &'a [f32],
+    pub pos: &'a [i32],
+    /// `[W, draft_region]` scratch-region visibility mask
+    pub mask: &'a [f32],
+    pub kv_len: usize,
+    pub write_pos: usize,
+}
+
+/// TriForce tiny-LM forward (streaming ring cache: `write_pos` may lie
+/// behind `kv_len` once the ring wraps).
+#[derive(Debug)]
+pub struct TinyForwardOp<'a> {
+    pub t: usize,
+    pub tokens: &'a [i32],
+    pub pos: &'a [i32],
+    pub mask: &'a [f32],
+    pub kv_len: usize,
+    pub write_pos: usize,
+    /// which row's logits the state keeps (last real token of the chunk)
+    pub last_idx: usize,
+}
+
+/// Host-visible extractor reads (the only downloads on the request path).
+#[derive(Debug)]
+pub enum ReadOp<'a> {
+    /// `qrows` rows of `[logits | feats]` starting at row `start`
+    FullWindow { size: &'a str, bucket: usize, start: usize },
+    /// single row `[logits | feats]` at `idx` (prefill tail)
+    LastRow { size: &'a str, bucket: usize, idx: usize },
+    /// the partial state's `tree_t` rows of `[logits | feats]`
+    Partial { size: &'a str, bucket: usize },
+    /// the draft state's `[W·V logits | W·h hiddens]`
+    Draft { size: &'a str, bucket: usize },
+    /// one draft hidden row (last real prompt token of a padded chunk)
+    DraftHiddenRow { size: &'a str, bucket: usize, idx: usize },
+    /// the tiny state's kept logits row
+    Tiny,
+}
+
+/// A device (or host) executor for the SpecPV kernel-op set. Object-safe
+/// so engines, the coordinator and the server are generic over
+/// `&dyn Backend`.
+///
+/// The catalog methods (`consts`, `model`, `full_buckets`, …) describe
+/// the geometry this backend can execute — manifest-driven for pjrt,
+/// built-in for the reference backend — and replace every direct
+/// manifest access the engines used to perform.
+pub trait Backend {
+    /// Short stable identifier ("pjrt", "reference") for telemetry.
+    fn name(&self) -> &'static str;
+
+    /// Global geometry constants (chunk, tree_t, refresh widths, …).
+    fn consts(&self) -> &Consts;
+
+    /// Model hyperparameters for a size ("s", "m", "l", "tiny").
+    fn model(&self, size: &str) -> Result<ModelInfo>;
+
+    /// Model sizes this backend can execute (sorted).
+    fn sizes(&self) -> Vec<String>;
+
+    /// Full target buckets available for `size`, ascending.
+    fn full_buckets(&self, size: &str) -> Vec<usize>;
+
+    /// Partial buckets available for `size`, ascending.
+    fn partial_buckets(&self, size: &str) -> Vec<usize>;
+
+    /// Refresh widths executable against `(size, bucket)`, ascending.
+    fn refresh_widths(&self, size: &str, bucket: usize) -> Vec<usize>;
+
+    /// Flat-state layout of a `(kind, size, bucket)` state.
+    fn state_layout(&self, kind: StateKind, size: &str, bucket: usize) -> Result<StateLayout>;
+
+    /// Fresh all-zero state of the given kind.
+    fn alloc_state(&self, kind: StateKind, size: &str, bucket: usize) -> Result<StateBuf>;
+
+    // --- kernel ops -----------------------------------------------------
+
+    fn prefill(&self, op: &PrefillOp, state: StateBuf) -> Result<StateBuf>;
+
+    fn verify_full(&self, op: &VerifyOp, state: StateBuf) -> Result<StateBuf>;
+
+    fn verify_partial(&self, op: &VerifyOp, state: StateBuf) -> Result<StateBuf>;
+
+    fn commit(&self, op: &CommitOp, state: StateBuf) -> Result<StateBuf>;
+
+    fn score(&self, op: &ScoreOp, state: &StateBuf) -> Result<Vec<f32>>;
+
+    fn refresh_gather(&self, op: &GatherOp, state: &StateBuf) -> Result<StateBuf>;
+
+    fn draft_prefill(
+        &self,
+        op: &DraftPrefillOp,
+        target_state: &StateBuf,
+        draft_state: StateBuf,
+    ) -> Result<StateBuf>;
+
+    fn draft_expand(&self, op: &DraftExpandOp, draft_state: StateBuf) -> Result<StateBuf>;
+
+    /// Medusa heads: top-layer feature `[d_model]` → flat `[3, V]` logits.
+    fn medusa(&self, size: &str, feat: &[f32]) -> Result<Vec<f32>>;
+
+    fn tiny_forward(&self, op: &TinyForwardOp, state: StateBuf) -> Result<StateBuf>;
+
+    fn read_logits(&self, op: &ReadOp, state: &StateBuf) -> Result<Vec<f32>>;
+
+    /// Snapshot of the execution counters.
+    fn counters(&self) -> Counters;
+
+    /// Human-readable catalog summary (`specpv inspect`).
+    fn describe(&self) -> String {
+        let c = self.consts();
+        format!(
+            "{} backend: chunk={} tree_t={} refresh_t={} block={} vocab={}",
+            self.name(),
+            c.chunk,
+            c.tree_t,
+            c.refresh_t,
+            c.block,
+            c.vocab
+        )
+    }
+}
+
+/// Smallest bucket in `buckets` (ascending or not) holding `need` tokens.
+pub fn pick_bucket(buckets: &[usize], need: usize, what: &str, size: &str) -> Result<usize> {
+    let mut bs = buckets.to_vec();
+    bs.sort_unstable();
+    bs.dedup();
+    match bs.iter().find(|&&b| b >= need) {
+        Some(&b) => Ok(b),
+        None => bail!("no {what} bucket ≥ {need} for size {size} (have {bs:?})"),
+    }
+}
+
+/// Construct the backend selected by the config. `Auto` resolves to pjrt
+/// when the artifacts directory holds a manifest and to the reference
+/// backend otherwise, so fresh checkouts (and CI) run end-to-end with no
+/// artifacts.
+pub fn from_config(cfg: &Config) -> Result<Box<dyn Backend>> {
+    match resolve_kind(cfg.backend, &cfg.artifacts_dir) {
+        BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new(&cfg.artifacts_dir)?)),
+        _ => Ok(Box::new(reference::ReferenceBackend::new())),
+    }
+}
+
+/// The concrete kind `Auto` resolves to for an artifacts directory.
+pub fn resolve_kind(kind: BackendKind, artifacts_dir: &Path) -> BackendKind {
+    match kind {
+        BackendKind::Auto => {
+            if artifacts_dir.join("manifest.json").exists() {
+                BackendKind::Pjrt
+            } else {
+                BackendKind::Reference
+            }
+        }
+        k => k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn statebuf_downcast_roundtrip() {
+        let b = StateBuf::new(vec![1f32, 2.0]);
+        assert_eq!(b.downcast_ref::<Vec<f32>>().unwrap(), &vec![1.0, 2.0]);
+        let v: Vec<f32> = b.downcast().unwrap();
+        assert_eq!(v, vec![1.0, 2.0]);
+        let wrong = StateBuf::new(3usize);
+        assert!(wrong.downcast::<Vec<f32>>().is_err());
+    }
+
+    #[test]
+    fn pick_bucket_smallest_fit() {
+        assert_eq!(pick_bucket(&[512, 128, 288], 200, "full", "s").unwrap(), 288);
+        assert!(pick_bucket(&[128], 200, "full", "s").is_err());
+    }
+
+    #[test]
+    fn auto_resolves_to_reference_without_artifacts() {
+        let kind = resolve_kind(BackendKind::Auto, Path::new("/nonexistent"));
+        assert_eq!(kind, BackendKind::Reference);
+        assert_eq!(resolve_kind(BackendKind::Pjrt, Path::new("/nonexistent")), BackendKind::Pjrt);
+    }
+}

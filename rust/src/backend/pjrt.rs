@@ -1,0 +1,301 @@
+//! PJRT implementation of the [`Backend`](super::Backend) trait: the AOT
+//! artifact player. This is the **only** place that maps the typed
+//! kernel-op API to manifest executable names — engines never format an
+//! executable name again. The low-level compile/upload/execute machinery
+//! stays in [`crate::runtime`].
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use crate::manifest::{Consts, Manifest, ModelInfo, StateLayout};
+use crate::model;
+use crate::runtime::{Arg, Runtime};
+
+use super::{
+    CommitOp, Counters, DraftExpandOp, DraftPrefillOp, GatherOp, PrefillOp, ReadOp, ScoreOp,
+    StateBuf, StateKind, TinyForwardOp, VerifyOp,
+};
+
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    /// Backend over an artifacts directory (`manifest.json`, `*.hlo.txt`,
+    /// weights binaries).
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: Runtime::new(artifacts_dir)? })
+    }
+
+    pub fn from_runtime(rt: Runtime) -> PjrtBackend {
+        PjrtBackend { rt }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    fn buckets_of_family(&self, family: &str, size: &str) -> Vec<usize> {
+        let mut buckets: Vec<usize> = self
+            .rt
+            .manifest
+            .executables
+            .values()
+            .filter(|e| e.family == family && e.size == size)
+            .map(|e| e.bucket)
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        buckets
+    }
+
+    /// Shared verify-ABI invocation (prefill / verify_full / verify_partial
+    /// all compile the same graph; only the name family differs).
+    fn verify_like(&self, name: &str, op: &VerifyOp, state: StateBuf) -> Result<StateBuf> {
+        let buf: PjRtBuffer = state.downcast()?;
+        let out = self.rt.invoke(
+            name,
+            &[
+                Arg::I32(op.tokens),
+                Arg::I32(op.pos),
+                Arg::F32(op.mask),
+                Arg::Buf(&buf),
+                Arg::Scalar(op.kv_len as i32),
+                Arg::I32(op.prev_idx),
+                Arg::Scalar(op.n_prev as i32),
+            ],
+        )?;
+        Ok(StateBuf::new(out))
+    }
+}
+
+impl super::Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn consts(&self) -> &Consts {
+        &self.rt.manifest.consts
+    }
+
+    fn model(&self, size: &str) -> Result<ModelInfo> {
+        Ok(self.rt.manifest.model(size)?.clone())
+    }
+
+    fn sizes(&self) -> Vec<String> {
+        self.rt.manifest.models.keys().cloned().collect()
+    }
+
+    fn full_buckets(&self, size: &str) -> Vec<usize> {
+        self.buckets_of_family("verify", size)
+    }
+
+    fn partial_buckets(&self, size: &str) -> Vec<usize> {
+        self.buckets_of_family("pverify", size)
+    }
+
+    fn refresh_widths(&self, size: &str, bucket: usize) -> Vec<usize> {
+        let c = self.consts();
+        let mut widths: Vec<usize> = [c.refresh_t, c.big_refresh_t]
+            .into_iter()
+            .filter(|&w| {
+                self.rt
+                    .manifest
+                    .executables
+                    .contains_key(&model::verify_name(size, bucket, w))
+            })
+            .collect();
+        widths.sort_unstable();
+        widths.dedup();
+        widths
+    }
+
+    fn state_layout(&self, kind: StateKind, size: &str, bucket: usize) -> Result<StateLayout> {
+        let name = match kind {
+            StateKind::Full => model::verify_name(size, bucket, self.consts().tree_t),
+            StateKind::Partial => model::pverify_name(size, bucket, self.consts().tree_t),
+            StateKind::Draft => model::draft_step_name(size, bucket),
+            StateKind::Tiny => format!("verify_tiny_b{bucket}_t1"),
+        };
+        self.rt
+            .manifest
+            .exec(&name)?
+            .layout
+            .with_context(|| format!("{name} missing state layout"))
+    }
+
+    fn alloc_state(&self, kind: StateKind, size: &str, bucket: usize) -> Result<StateBuf> {
+        let layout = self.state_layout(kind, size, bucket)?;
+        Ok(StateBuf::new(self.rt.zero_state(layout.total)?))
+    }
+
+    fn prefill(&self, op: &PrefillOp, state: StateBuf) -> Result<StateBuf> {
+        let name = model::verify_name(op.size, op.bucket, self.consts().chunk);
+        let zero_prev = vec![0i32; self.consts().prev_max()];
+        self.verify_like(
+            &name,
+            &VerifyOp {
+                size: op.size,
+                bucket: op.bucket,
+                t: self.consts().chunk,
+                tokens: op.tokens,
+                pos: op.pos,
+                mask: op.mask,
+                kv_len: op.kv_len,
+                prev_idx: &zero_prev,
+                n_prev: 0,
+            },
+            state,
+        )
+    }
+
+    fn verify_full(&self, op: &VerifyOp, state: StateBuf) -> Result<StateBuf> {
+        self.verify_like(&model::verify_name(op.size, op.bucket, op.t), op, state)
+    }
+
+    fn verify_partial(&self, op: &VerifyOp, state: StateBuf) -> Result<StateBuf> {
+        self.verify_like(&model::pverify_name(op.size, op.bucket, op.t), op, state)
+    }
+
+    fn commit(&self, op: &CommitOp, state: StateBuf) -> Result<StateBuf> {
+        let buf: PjRtBuffer = state.downcast()?;
+        let out = self.rt.invoke(
+            &model::commit_name(op.size, op.bucket, op.window),
+            &[
+                Arg::Buf(&buf),
+                Arg::I32(op.idx),
+                Arg::Scalar(op.n as i32),
+                Arg::Scalar(op.kv_len as i32),
+            ],
+        )?;
+        Ok(StateBuf::new(out))
+    }
+
+    fn score(&self, op: &ScoreOp, state: &StateBuf) -> Result<Vec<f32>> {
+        let buf = state.downcast_ref::<PjRtBuffer>()?;
+        self.rt.invoke_download(
+            &model::score_name(op.size, op.bucket),
+            &[
+                Arg::Buf(buf),
+                Arg::Scalar(op.kv_len as i32),
+                Arg::Scalar(op.n_queries as i32),
+            ],
+        )
+    }
+
+    fn refresh_gather(&self, op: &GatherOp, state: &StateBuf) -> Result<StateBuf> {
+        let buf = state.downcast_ref::<PjRtBuffer>()?;
+        let out = self.rt.invoke(
+            &model::gather_name(op.size, op.bucket, op.p_bucket),
+            &[Arg::Buf(buf), Arg::I32(op.block_idx)],
+        )?;
+        Ok(StateBuf::new(out))
+    }
+
+    fn draft_prefill(
+        &self,
+        op: &DraftPrefillOp,
+        target_state: &StateBuf,
+        draft_state: StateBuf,
+    ) -> Result<StateBuf> {
+        let tbuf = target_state.downcast_ref::<PjRtBuffer>()?;
+        let dbuf: PjRtBuffer = draft_state.downcast()?;
+        let out = self.rt.invoke(
+            &model::draft_prefill_name(op.size, op.bucket),
+            &[
+                Arg::I32(op.tokens),
+                Arg::Buf(tbuf),
+                Arg::I32(op.pos),
+                Arg::F32(op.mask),
+                Arg::Buf(&dbuf),
+                Arg::Scalar(op.kv_len as i32),
+                Arg::Scalar(op.write_pos as i32),
+            ],
+        )?;
+        Ok(StateBuf::new(out))
+    }
+
+    fn draft_expand(&self, op: &DraftExpandOp, draft_state: StateBuf) -> Result<StateBuf> {
+        let dbuf: PjRtBuffer = draft_state.downcast()?;
+        let out = self.rt.invoke(
+            &model::draft_step_name(op.size, op.bucket),
+            &[
+                Arg::I32(op.tokens),
+                Arg::F32(op.feats),
+                Arg::I32(op.pos),
+                Arg::F32(op.mask),
+                Arg::Buf(&dbuf),
+                Arg::Scalar(op.kv_len as i32),
+                Arg::Scalar(op.write_pos as i32),
+            ],
+        )?;
+        Ok(StateBuf::new(out))
+    }
+
+    fn medusa(&self, size: &str, feat: &[f32]) -> Result<Vec<f32>> {
+        self.rt
+            .invoke_download(&model::medusa_name(size), &[Arg::F32(feat)])
+    }
+
+    fn tiny_forward(&self, op: &TinyForwardOp, state: StateBuf) -> Result<StateBuf> {
+        let buf: PjRtBuffer = state.downcast()?;
+        let name = format!("verify_tiny_b{}_t{}", self.consts().tiny_bucket, op.t);
+        let out = self.rt.invoke(
+            &name,
+            &[
+                Arg::I32(op.tokens),
+                Arg::I32(op.pos),
+                Arg::F32(op.mask),
+                Arg::Buf(&buf),
+                Arg::Scalar(op.kv_len as i32),
+                Arg::Scalar(op.write_pos as i32),
+                Arg::Scalar(op.last_idx as i32),
+            ],
+        )?;
+        Ok(StateBuf::new(out))
+    }
+
+    fn read_logits(&self, op: &ReadOp, state: &StateBuf) -> Result<Vec<f32>> {
+        let buf = state.downcast_ref::<PjRtBuffer>()?;
+        match *op {
+            ReadOp::FullWindow { size, bucket, start } => self.rt.invoke_download(
+                &model::read_full_name(size, bucket),
+                &[Arg::Buf(buf), Arg::Scalar(start as i32)],
+            ),
+            ReadOp::LastRow { size, bucket, idx } => self.rt.invoke_download(
+                &model::read_last_name(size, bucket),
+                &[Arg::Buf(buf), Arg::Scalar(idx as i32)],
+            ),
+            ReadOp::Partial { size, bucket } => self
+                .rt
+                .invoke_download(&model::read_partial_name(size, bucket), &[Arg::Buf(buf)]),
+            ReadOp::Draft { size, bucket } => self
+                .rt
+                .invoke_download(&model::read_draft_name(size, bucket), &[Arg::Buf(buf)]),
+            ReadOp::DraftHiddenRow { size, bucket, idx } => self.rt.invoke_download(
+                &format!("read_draft_row_{size}_b{bucket}"),
+                &[Arg::Buf(buf), Arg::Scalar(idx as i32)],
+            ),
+            ReadOp::Tiny => self.rt.invoke_download(
+                &format!("read_tiny_b{}", self.consts().tiny_bucket),
+                &[Arg::Buf(buf)],
+            ),
+        }
+    }
+
+    fn counters(&self) -> Counters {
+        self.rt.counters.borrow().clone()
+    }
+
+    fn describe(&self) -> String {
+        let m = &self.rt.manifest;
+        format!(
+            "pjrt backend over {:?}: {} executables, models {:?}",
+            m.dir,
+            m.executables.len(),
+            m.models.keys().collect::<Vec<_>>()
+        )
+    }
+}

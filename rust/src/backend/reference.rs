@@ -1,0 +1,1297 @@
+//! Pure-Rust **reference backend**: executes the same char-LM forward
+//! semantics as the AOT artifacts (`python/compile/model.py`) directly on
+//! the host — embedding → RMSNorm → RoPE(+YARN) → tree attention over the
+//! flat-state KV layout → SwiGLU → logits — with deterministic seeded
+//! weights, so every engine runs end-to-end with **no artifacts**.
+//!
+//! Design goals (in priority order):
+//! 1. *semantic parity* with the JAX graphs: same state layouts
+//!    (kv | logits | feats | queries), same fused acceptance compaction,
+//!    same visibility rule (`history < kv_len` ∪ masked new region), same
+//!    Quest block scoring and block gather — so the decode algorithms
+//!    (including SpecPV's partial-verify ≡ full-verify-over-the-same-rows
+//!    property) are directly testable;
+//! 2. *determinism*: weights come from a seeded xorshift init and all
+//!    float loops run in a fixed order, so identical requests produce
+//!    byte-identical outputs across runs and machines;
+//! 3. *CI speed*: a scaled-down geometry (chunk 64, buckets ≤ 1024,
+//!    d_model 16–64) keeps an end-to-end generation in the tens of
+//!    milliseconds.
+//!
+//! The weights are random (not trained), which is irrelevant to the
+//! properties under test: losslessness (spec_full ≡ ar), the SpecPV mode
+//! machine, cache accounting and scheduler behaviour are all functions of
+//! the *algorithm*, not of output quality.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::manifest::{Consts, ModelInfo, StateLayout};
+use crate::util::rng::Rng;
+
+use super::{
+    CommitOp, Counters, DraftExpandOp, DraftPrefillOp, GatherOp, PrefillOp, ReadOp, ScoreOp,
+    StateBuf, StateKind, TinyForwardOp, VerifyOp,
+};
+
+// Scaled-down geometry (the aot.py constants at CI scale). CHUNK is both
+// the prefill chunk and the logits/feats row capacity, so it must cover
+// the widest refresh variant.
+const CHUNK: usize = 64;
+const TREE_T: usize = 16;
+const REFRESH_T: usize = 48;
+const BIG_REFRESH_T: usize = 64;
+const QROWS: usize = 16;
+const DRAFT_W: usize = 8;
+const DRAFT_REGION: usize = 32;
+const PREV_MAX: usize = 8;
+const PREV_WINDOW: usize = 16;
+const BLOCK: usize = 16;
+const YARN_FACTOR: f64 = 16.0;
+const FULL_BUCKETS: [usize; 7] = [128, 288, 512, 1024, 2048, 4096, 8192];
+const PARTIAL_BUCKETS: [usize; 6] = [96, 160, 224, 384, 640, 1280];
+// must be ≥ 2·CHUNK so the tiny prefill's chunked writes never clamp
+// (mirrors aot.py: TINY_BUCKET = 2 × CHUNK)
+const TINY_BUCKET: usize = 128;
+
+const NEG_INF: f32 = -1e30;
+
+/// Model hyperparameters (mirrors `model.py::ModelCfg` at reduced scale).
+#[derive(Debug, Clone)]
+struct RefCfg {
+    n_layer: usize,
+    d_model: usize,
+    n_head: usize,
+    d_head: usize,
+    d_ff: usize,
+    vocab: usize,
+    rope_theta: f64,
+    train_ctx: usize,
+}
+
+impl RefCfg {
+    fn hd(&self) -> usize {
+        self.n_head * self.d_head
+    }
+
+    /// EAGLE-3 feature taps (low/mid/top layer inputs); fewer than three
+    /// distinct layers (the tiny LM) means no fused feature.
+    fn feat_layers(&self) -> Vec<usize> {
+        let mut v = vec![0, self.n_layer / 2, self.n_layer - 1];
+        v.dedup();
+        v
+    }
+
+    fn has_feats(&self) -> bool {
+        self.feat_layers().len() == 3
+    }
+}
+
+struct LayerW {
+    ln1: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    ln2: Vec<f32>,
+    wg: Vec<f32>,
+    wu: Vec<f32>,
+    wd: Vec<f32>,
+}
+
+struct TargetW {
+    embed: Vec<f32>,
+    ln_f: Vec<f32>,
+    head: Vec<f32>,
+    layers: Vec<LayerW>,
+}
+
+struct DraftW {
+    fuse: Vec<f32>,
+    inp: Vec<f32>,
+    ln_f: Vec<f32>,
+    layer: LayerW,
+}
+
+struct MedusaW {
+    /// per head: (w1 [h,h], w2 [h,V])
+    heads: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+struct RefModel {
+    cfg: RefCfg,
+    target: TargetW,
+    draft: Option<DraftW>,
+    medusa: Option<MedusaW>,
+    inv_freq: Vec<f32>,
+    mscale: f32,
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic init (seeded xorshift; scales mirror model.py)
+// ---------------------------------------------------------------------------
+
+fn normal_mat(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Vec<f32> {
+    (0..rows * cols).map(|_| rng.normal() as f32 * std).collect()
+}
+
+fn dense(rng: &mut Rng, fan_in: usize, fan_out: usize) -> Vec<f32> {
+    normal_mat(rng, fan_in, fan_out, 1.0 / (fan_in as f32).sqrt())
+}
+
+fn init_layer(rng: &mut Rng, cfg: &RefCfg) -> LayerW {
+    let (h, hd, ff) = (cfg.d_model, cfg.hd(), cfg.d_ff);
+    LayerW {
+        ln1: vec![1.0; h],
+        wq: dense(rng, h, hd),
+        wk: dense(rng, h, hd),
+        wv: dense(rng, h, hd),
+        wo: dense(rng, hd, h),
+        ln2: vec![1.0; h],
+        wg: dense(rng, h, ff),
+        wu: dense(rng, h, ff),
+        wd: dense(rng, ff, h),
+    }
+}
+
+fn seed_of(size: &str) -> u64 {
+    size.bytes()
+        .fold(0x5EED_CAFE_F00Du64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64))
+}
+
+fn init_model(size: &str, cfg: RefCfg, with_draft: bool) -> RefModel {
+    let mut rng = Rng::new(seed_of(size));
+    let h = cfg.d_model;
+    let target = TargetW {
+        embed: normal_mat(&mut rng, cfg.vocab, h, 0.02),
+        ln_f: vec![1.0; h],
+        head: dense(&mut rng, h, cfg.vocab),
+        layers: (0..cfg.n_layer).map(|_| init_layer(&mut rng, &cfg)).collect(),
+    };
+    let draft = with_draft.then(|| DraftW {
+        fuse: dense(&mut rng, 3 * h, h),
+        inp: dense(&mut rng, 2 * h, h),
+        ln_f: vec![1.0; h],
+        layer: init_layer(&mut rng, &cfg),
+    });
+    let medusa = with_draft.then(|| MedusaW {
+        heads: (0..3)
+            .map(|_| (dense(&mut rng, h, h), dense(&mut rng, h, cfg.vocab)))
+            .collect(),
+    });
+    let (inv_freq, mscale) = yarn_inv_freq(&cfg, YARN_FACTOR);
+    RefModel { cfg, target, draft, medusa, inv_freq, mscale }
+}
+
+/// YARN-scaled inverse frequencies + attention temperature
+/// (`model.py::yarn_inv_freq`, NTK-by-parts).
+fn yarn_inv_freq(cfg: &RefCfg, factor: f64) -> (Vec<f32>, f32) {
+    let d = cfg.d_head;
+    let inv: Vec<f64> = (0..d / 2)
+        .map(|k| 1.0 / cfg.rope_theta.powf(2.0 * k as f64 / d as f64))
+        .collect();
+    if factor <= 1.0 {
+        return (inv.iter().map(|&x| x as f32).collect(), 1.0);
+    }
+    let l = cfg.train_ctx as f64;
+    let (beta_fast, beta_slow) = (32.0f64, 1.0f64);
+    let corr_dim = |rot: f64| -> f64 {
+        (d as f64 * (l / (rot * 2.0 * std::f64::consts::PI)).ln())
+            / (2.0 * cfg.rope_theta.ln())
+    };
+    let low = corr_dim(beta_fast).floor().max(0.0);
+    let high = corr_dim(beta_slow).ceil().min(d as f64 / 2.0 - 1.0);
+    let denom = (high - low).max(1.0);
+    let inv_yarn: Vec<f32> = inv
+        .iter()
+        .enumerate()
+        .map(|(k, &f)| {
+            let ramp = ((k as f64 - low) / denom).clamp(0.0, 1.0);
+            (f * (1.0 - ramp) + (f / factor) * ramp) as f32
+        })
+        .collect();
+    let mscale = (0.1 * factor.ln() + 1.0) as f32;
+    (inv_yarn, mscale)
+}
+
+// ---------------------------------------------------------------------------
+// Flat-state layouts (mirrors aot.py, element counts in f32)
+// ---------------------------------------------------------------------------
+
+fn full_layout(cfg: &RefCfg, b: usize) -> StateLayout {
+    let kv = cfg.n_layer * 2 * cfg.n_head * b * cfg.d_head;
+    let logits = CHUNK * cfg.vocab;
+    let feats = CHUNK * 3 * cfg.d_model;
+    let queries = cfg.n_layer * cfg.n_head * QROWS * cfg.d_head;
+    StateLayout { kv, logits, feats, queries, total: kv + logits + feats + queries }
+}
+
+fn partial_layout(cfg: &RefCfg, p: usize) -> StateLayout {
+    let kv = cfg.n_layer * 2 * cfg.n_head * p * cfg.d_head;
+    let logits = TREE_T * cfg.vocab;
+    let feats = TREE_T * 3 * cfg.d_model;
+    StateLayout { kv, logits, feats, queries: 0, total: kv + logits + feats }
+}
+
+fn draft_layout(cfg: &RefCfg, b: usize) -> StateLayout {
+    let kv = 2 * cfg.n_head * b * cfg.d_head;
+    let logits = DRAFT_W * cfg.vocab;
+    let hidden = CHUNK * cfg.d_model;
+    StateLayout { kv, logits, feats: hidden, queries: 0, total: kv + logits + hidden }
+}
+
+fn tiny_layout(cfg: &RefCfg, b: usize) -> StateLayout {
+    let kv = cfg.n_layer * 2 * cfg.n_head * b * cfg.d_head;
+    StateLayout { kv, logits: cfg.vocab, feats: 0, queries: 0, total: kv + cfg.vocab }
+}
+
+// ---------------------------------------------------------------------------
+// Dense math helpers (fixed loop order for determinism)
+// ---------------------------------------------------------------------------
+
+/// `out[t, dout] += x[t, din] @ w[din, dout]` (out must be zeroed).
+fn matmul_into(out: &mut [f32], x: &[f32], w: &[f32], t: usize, din: usize, dout: usize) {
+    for i in 0..t {
+        let xr = &x[i * din..(i + 1) * din];
+        let or = &mut out[i * dout..(i + 1) * dout];
+        for (k, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[k * dout..(k + 1) * dout];
+            for (o, &wv) in wr.iter().enumerate() {
+                or[o] += xv * wv;
+            }
+        }
+    }
+}
+
+fn matmul(x: &[f32], w: &[f32], t: usize, din: usize, dout: usize) -> Vec<f32> {
+    let mut out = vec![0f32; t * dout];
+    matmul_into(&mut out, x, w, t, din, dout);
+    out
+}
+
+/// Row-wise RMSNorm (`model.py::rmsnorm`, eps 1e-5).
+fn rmsnorm(x: &[f32], g: &[f32], t: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0f32; t * h];
+    for i in 0..t {
+        let row = &x[i * h..(i + 1) * h];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+        let r = 1.0 / (ms + 1e-5).sqrt();
+        for j in 0..h {
+            out[i * h + j] = row[j] * g[j] * r;
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Rotate `[T, H·D]` rows in place (per head, interleaved pairs).
+fn rope_apply(x: &mut [f32], pos: &[i32], inv_freq: &[f32], t: usize, n_head: usize, d: usize) {
+    let hd = n_head * d;
+    for i in 0..t {
+        let p = pos[i] as f32;
+        for hh in 0..n_head {
+            let base = i * hd + hh * d;
+            for (k, &f) in inv_freq.iter().enumerate() {
+                let ang = p * f;
+                let (sin, cos) = ang.sin_cos();
+                let x1 = x[base + 2 * k];
+                let x2 = x[base + 2 * k + 1];
+                x[base + 2 * k] = x1 * cos - x2 * sin;
+                x[base + 2 * k + 1] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KV-cache addressing over a flat `[L, 2, H, B, D]` region
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct KvDims {
+    l: usize,
+    h: usize,
+    b: usize,
+    d: usize,
+}
+
+impl KvDims {
+    fn row(&self, layer: usize, plane: usize, head: usize, row: usize) -> usize {
+        (((layer * 2 + plane) * self.h + head) * self.b + row) * self.d
+    }
+}
+
+/// Acceptance compaction fused into the next verification step
+/// (`model.py::compact_window`): move row `kv_len + prev_idx[j]` →
+/// `kv_len + j` for `j < n_prev`. `prev_idx` is strictly increasing with
+/// `prev_idx[j] ≥ j`, so an ascending in-place copy matches the
+/// gather-then-scatter of the JAX graph.
+fn compact_window(
+    kv: &mut [f32],
+    dims: KvDims,
+    kv_len: usize,
+    prev_idx: &[i32],
+    n_prev: usize,
+    window: usize,
+) {
+    // dynamic_slice clamp semantics
+    let start = kv_len.min(dims.b.saturating_sub(window));
+    for layer in 0..dims.l {
+        for plane in 0..2 {
+            for head in 0..dims.h {
+                for j in 0..n_prev.min(prev_idx.len()) {
+                    let src = (prev_idx[j].max(0) as usize).min(window - 1);
+                    if src == j {
+                        continue;
+                    }
+                    // src row is strictly behind dst (prev_idx[j] > j)
+                    let s = dims.row(layer, plane, head, start + src);
+                    let t = dims.row(layer, plane, head, start + j);
+                    let (head_seg, tail_seg) = kv.split_at_mut(s);
+                    head_seg[t..t + dims.d].copy_from_slice(&tail_seg[..dims.d]);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transformer forward
+// ---------------------------------------------------------------------------
+
+struct FwdOut {
+    /// [T, V]
+    logits: Vec<f32>,
+    /// [T, 3h] fused EAGLE-3 feature (empty when the model has < 3 taps)
+    feats: Vec<f32>,
+    /// per layer `[H, T, D]` post-RoPE queries (empty unless requested)
+    queries: Vec<Vec<f32>>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attention(
+    out: &mut [f32],
+    q: &[f32],
+    kv: &[f32],
+    dims: KvDims,
+    layer: usize,
+    t: usize,
+    tk: usize,
+    mask: &[f32],
+    kv_len: usize,
+    scale: f32,
+) {
+    let d = dims.d;
+    let hd = dims.h * d;
+    let mut scores: Vec<(usize, f32)> = Vec::with_capacity(kv_len + tk);
+    for hh in 0..dims.h {
+        for i in 0..t {
+            let qr = &q[i * hd + hh * d..i * hd + hh * d + d];
+            scores.clear();
+            let mut m = f32::NEG_INFINITY;
+            // committed history rows, then the masked new region — the
+            // same visibility rule as kernels/ref.py::tree_attention_ref
+            for j in 0..kv_len.min(dims.b) {
+                let kr = &kv[dims.row(layer, 0, hh, j)..dims.row(layer, 0, hh, j) + d];
+                let s = dot(qr, kr) * scale;
+                if s > m {
+                    m = s;
+                }
+                scores.push((j, s));
+            }
+            for r in 0..tk {
+                let j = kv_len + r;
+                if j >= dims.b || mask[i * tk + r] <= 0.5 {
+                    continue;
+                }
+                let kr = &kv[dims.row(layer, 0, hh, j)..dims.row(layer, 0, hh, j) + d];
+                let s = dot(qr, kr) * scale;
+                if s > m {
+                    m = s;
+                }
+                scores.push((j, s));
+            }
+            let or = &mut out[i * hd + hh * d..i * hd + hh * d + d];
+            if scores.is_empty() {
+                continue; // fully masked row (never happens for real rows)
+            }
+            let mut z = 0f32;
+            for (_, s) in scores.iter_mut() {
+                *s = (*s - m).exp();
+                z += *s;
+            }
+            let zr = 1.0 / z.max(1e-30);
+            for &(j, p) in scores.iter() {
+                let vr = &kv[dims.row(layer, 1, hh, j)..dims.row(layer, 1, hh, j) + d];
+                let w = p * zr;
+                for dd in 0..d {
+                    or[dd] += w * vr[dd];
+                }
+            }
+        }
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// One transformer layer (`model.py::layer_fwd`): writes this step's K/V
+/// rows at `write_pos`, runs tree attention, returns the post-RoPE
+/// queries for the retrieval scorer.
+#[allow(clippy::too_many_arguments)]
+fn layer_fwd(
+    w: &LayerW,
+    cfg: &RefCfg,
+    x: &mut Vec<f32>,
+    pos: &[i32],
+    kv: &mut [f32],
+    dims: KvDims,
+    layer: usize,
+    kv_len: usize,
+    write_pos: usize,
+    mask: &[f32],
+    inv_freq: &[f32],
+    mscale: f32,
+) -> Vec<f32> {
+    let t = pos.len();
+    let (h, hd, d) = (cfg.d_model, cfg.hd(), cfg.d_head);
+    let tk = mask.len() / t;
+    let hn = rmsnorm(x, &w.ln1, t, h);
+    let mut xq = matmul(&hn, &w.wq, t, h, hd);
+    let mut xk = matmul(&hn, &w.wk, t, h, hd);
+    let xv = matmul(&hn, &w.wv, t, h, hd);
+    rope_apply(&mut xq, pos, inv_freq, t, cfg.n_head, d);
+    rope_apply(&mut xk, pos, inv_freq, t, cfg.n_head, d);
+
+    // functional dynamic_update_slice (clamped start, full T-row block)
+    let start = write_pos.min(dims.b.saturating_sub(t));
+    for i in 0..t {
+        for hh in 0..cfg.n_head {
+            let krow = dims.row(layer, 0, hh, start + i);
+            kv[krow..krow + d].copy_from_slice(&xk[i * hd + hh * d..i * hd + hh * d + d]);
+            let vrow = dims.row(layer, 1, hh, start + i);
+            kv[vrow..vrow + d].copy_from_slice(&xv[i * hd + hh * d..i * hd + hh * d + d]);
+        }
+    }
+
+    let scale = mscale / (d as f32).sqrt();
+    let mut att = vec![0f32; t * hd];
+    attention(&mut att, &xq, kv, dims, layer, t, tk, mask, kv_len, scale);
+    let proj = matmul(&att, &w.wo, t, hd, h);
+    for (xx, p) in x.iter_mut().zip(&proj) {
+        *xx += p;
+    }
+
+    let h2 = rmsnorm(x, &w.ln2, t, h);
+    let g = matmul(&h2, &w.wg, t, h, cfg.d_ff);
+    let u = matmul(&h2, &w.wu, t, h, cfg.d_ff);
+    let act: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
+    let down = matmul(&act, &w.wd, t, cfg.d_ff, h);
+    for (xx, p) in x.iter_mut().zip(&down) {
+        *xx += p;
+    }
+    xq
+}
+
+/// Target forward (`model.py::target_fwd`): serves prefill, AR decode,
+/// full/partial/refresh verification and the tiny LM — only the bucket,
+/// token count and mask differ.
+#[allow(clippy::too_many_arguments)]
+fn target_fwd(
+    model: &RefModel,
+    kv: &mut [f32],
+    bucket: usize,
+    tokens: &[i32],
+    pos: &[i32],
+    mask: &[f32],
+    kv_len: usize,
+    write_pos: usize,
+    want_queries: bool,
+) -> FwdOut {
+    let cfg = &model.cfg;
+    let t = tokens.len();
+    let h = cfg.d_model;
+    let dims = KvDims { l: cfg.n_layer, h: cfg.n_head, b: bucket, d: cfg.d_head };
+    let mut x = vec![0f32; t * h];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let row = (tok.max(0) as usize).min(cfg.vocab - 1);
+        x[i * h..(i + 1) * h].copy_from_slice(&model.target.embed[row * h..(row + 1) * h]);
+    }
+    let taps = cfg.feat_layers();
+    let mut feats: Vec<Vec<f32>> = Vec::new();
+    let mut queries: Vec<Vec<f32>> = Vec::new();
+    for (l, w) in model.target.layers.iter().enumerate() {
+        if cfg.has_feats() && taps.contains(&l) {
+            feats.push(x.clone());
+        }
+        let xq = layer_fwd(
+            w, cfg, &mut x, pos, kv, dims, l, kv_len, write_pos, mask, &model.inv_freq,
+            model.mscale,
+        );
+        if want_queries {
+            // [T, H·D] → [H, T, D]
+            let (hd, d) = (cfg.hd(), cfg.d_head);
+            let mut q = vec![0f32; hd * t];
+            for i in 0..t {
+                for hh in 0..cfg.n_head {
+                    q[(hh * t + i) * d..(hh * t + i) * d + d]
+                        .copy_from_slice(&xq[i * hd + hh * d..i * hd + hh * d + d]);
+                }
+            }
+            queries.push(q);
+        }
+    }
+    let xf = rmsnorm(&x, &model.target.ln_f, t, h);
+    let logits = matmul(&xf, &model.target.head, t, h, cfg.vocab);
+    let fused = if cfg.has_feats() {
+        let mut f = vec![0f32; t * 3 * h];
+        for i in 0..t {
+            for (s, fv) in feats.iter().enumerate() {
+                f[i * 3 * h + s * h..i * 3 * h + (s + 1) * h]
+                    .copy_from_slice(&fv[i * h..(i + 1) * h]);
+            }
+        }
+        f
+    } else {
+        Vec::new()
+    };
+    FwdOut { logits, feats: fused, queries }
+}
+
+/// Draft decoder forward (`model.py::draft_fwd`).
+#[allow(clippy::too_many_arguments)]
+fn draft_fwd(
+    model: &RefModel,
+    kv: &mut [f32],
+    bucket: usize,
+    tokens: &[i32],
+    feats: &[f32],
+    pos: &[i32],
+    mask: &[f32],
+    kv_len: usize,
+    write_pos: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let cfg = &model.cfg;
+    let dw = model.draft.as_ref().expect("draft weights");
+    let t = tokens.len();
+    let h = cfg.d_model;
+    let dims = KvDims { l: 1, h: cfg.n_head, b: bucket, d: cfg.d_head };
+    let f = matmul(feats, &dw.fuse, t, 3 * h, h);
+    let mut cat = vec![0f32; t * 2 * h];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let row = (tok.max(0) as usize).min(cfg.vocab - 1);
+        cat[i * 2 * h..i * 2 * h + h]
+            .copy_from_slice(&model.target.embed[row * h..(row + 1) * h]);
+        cat[i * 2 * h + h..(i + 1) * 2 * h].copy_from_slice(&f[i * h..(i + 1) * h]);
+    }
+    let mut x = matmul(&cat, &dw.inp, t, 2 * h, h);
+    layer_fwd(
+        &dw.layer, cfg, &mut x, pos, kv, dims, 0, kv_len, write_pos, mask, &model.inv_freq,
+        model.mscale,
+    );
+    let hidden = x.clone();
+    let xf = rmsnorm(&x, &dw.ln_f, t, h);
+    let logits = matmul(&xf, &model.target.head, t, h, cfg.vocab);
+    (logits, hidden)
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+pub struct ReferenceBackend {
+    consts: Consts,
+    models: BTreeMap<String, RefModel>,
+    counters: RefCell<Counters>,
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReferenceBackend {
+    pub fn new() -> ReferenceBackend {
+        let vocab = crate::tokenizer::VOCAB;
+        let mk = |l, h, nh, d, ff| RefCfg {
+            n_layer: l,
+            d_model: h,
+            n_head: nh,
+            d_head: d,
+            d_ff: ff,
+            vocab,
+            rope_theta: 10000.0,
+            train_ctx: 128,
+        };
+        let mut models = BTreeMap::new();
+        models.insert("s".to_string(), init_model("s", mk(4, 32, 2, 16, 64), true));
+        models.insert("m".to_string(), init_model("m", mk(6, 48, 3, 16, 96), true));
+        models.insert("l".to_string(), init_model("l", mk(8, 64, 4, 16, 128), true));
+        models.insert("tiny".to_string(), init_model("tiny", mk(2, 16, 2, 8, 32), false));
+        let consts = Consts {
+            chunk: CHUNK,
+            tree_t: TREE_T,
+            refresh_t: REFRESH_T,
+            big_refresh_t: BIG_REFRESH_T,
+            qrows: QROWS,
+            draft_w: DRAFT_W,
+            draft_region: DRAFT_REGION,
+            block: BLOCK,
+            prev_max_: PREV_MAX,
+            prev_window_: PREV_WINDOW,
+            vocab,
+            full_buckets: FULL_BUCKETS.to_vec(),
+            partial_buckets: PARTIAL_BUCKETS.to_vec(),
+            tiny_bucket: TINY_BUCKET,
+        };
+        ReferenceBackend { consts, models, counters: RefCell::new(Counters::default()) }
+    }
+
+    fn model_of(&self, size: &str) -> Result<&RefModel> {
+        self.models
+            .get(size)
+            .ok_or_else(|| anyhow!("reference backend has no model size '{size}'"))
+    }
+
+    fn count(&self, label: &str, t0: Instant) {
+        let dt = t0.elapsed().as_secs_f64();
+        let mut c = self.counters.borrow_mut();
+        c.executions += 1;
+        c.exec_secs += dt;
+        let e = c.per_exec.entry(label.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dt;
+    }
+
+    /// Shared body of prefill / verify_full / verify_partial.
+    fn verify_like(&self, op: &VerifyOp, mut state: StateBuf, partial: bool) -> Result<StateBuf> {
+        let t0 = Instant::now();
+        let model = self.model_of(op.size)?;
+        let cfg = &model.cfg;
+        let lay = if partial {
+            partial_layout(cfg, op.bucket)
+        } else {
+            full_layout(cfg, op.bucket)
+        };
+        let rows = if partial { TREE_T } else { CHUNK };
+        if op.t > rows {
+            bail!("verify t={} exceeds the {}-row state region", op.t, rows);
+        }
+        if op.tokens.len() != op.t || op.pos.len() != op.t || op.mask.len() != op.t * op.t {
+            bail!("verify op geometry mismatch (t={})", op.t);
+        }
+        let buf = state.downcast_mut::<Vec<f32>>()?;
+        if buf.len() != lay.total {
+            bail!("state length {} != layout total {}", buf.len(), lay.total);
+        }
+        let dims =
+            KvDims { l: cfg.n_layer, h: cfg.n_head, b: op.bucket, d: cfg.d_head };
+        compact_window(&mut buf[..lay.kv], dims, op.kv_len, op.prev_idx, op.n_prev, PREV_WINDOW);
+        let eff = op.kv_len + op.n_prev;
+        let out = target_fwd(
+            model,
+            &mut buf[..lay.kv],
+            op.bucket,
+            op.tokens,
+            op.pos,
+            op.mask,
+            eff,
+            eff,
+            !partial,
+        );
+        // pack: zero-padded logits/feats rows (+ queries for full states)
+        let (v, h3) = (cfg.vocab, 3 * cfg.d_model);
+        let lg = &mut buf[lay.off_logits()..lay.off_logits() + lay.logits];
+        lg.fill(0.0);
+        lg[..op.t * v].copy_from_slice(&out.logits);
+        let fs = &mut buf[lay.off_feats()..lay.off_feats() + lay.feats];
+        fs.fill(0.0);
+        if !out.feats.is_empty() {
+            fs[..op.t * h3].copy_from_slice(&out.feats);
+        }
+        if !partial {
+            let d = cfg.d_head;
+            let qr = &mut buf[lay.off_queries()..lay.off_queries() + lay.queries];
+            qr.fill(0.0);
+            let keep = op.t.min(QROWS);
+            for (l, q) in out.queries.iter().enumerate() {
+                for hh in 0..cfg.n_head {
+                    for i in 0..keep {
+                        let dst = ((l * cfg.n_head + hh) * QROWS + i) * d;
+                        let src = (hh * op.t + i) * d;
+                        qr[dst..dst + d].copy_from_slice(&q[src..src + d]);
+                    }
+                }
+            }
+        }
+        let fam = if partial { "pverify" } else { "verify" };
+        self.count(&format!("{fam}_{}_b{}_t{}", op.size, op.bucket, op.t), t0);
+        Ok(state)
+    }
+}
+
+impl super::Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn consts(&self) -> &Consts {
+        &self.consts
+    }
+
+    fn model(&self, size: &str) -> Result<ModelInfo> {
+        let m = self.model_of(size)?;
+        Ok(ModelInfo {
+            n_layer: m.cfg.n_layer,
+            d_model: m.cfg.d_model,
+            n_head: m.cfg.n_head,
+            d_head: m.cfg.d_head,
+            d_ff: m.cfg.d_ff,
+            vocab: m.cfg.vocab,
+            weights_file: format!("builtin://{size}"),
+            yarn_factor: YARN_FACTOR,
+        })
+    }
+
+    fn sizes(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    fn full_buckets(&self, size: &str) -> Vec<usize> {
+        if self.models.contains_key(size) {
+            FULL_BUCKETS.to_vec()
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn partial_buckets(&self, size: &str) -> Vec<usize> {
+        if self.models.contains_key(size) {
+            PARTIAL_BUCKETS.to_vec()
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn refresh_widths(&self, size: &str, _bucket: usize) -> Vec<usize> {
+        if self.models.contains_key(size) {
+            vec![REFRESH_T, BIG_REFRESH_T]
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn state_layout(&self, kind: StateKind, size: &str, bucket: usize) -> Result<StateLayout> {
+        let cfg = &self.model_of(size)?.cfg;
+        Ok(match kind {
+            StateKind::Full => full_layout(cfg, bucket),
+            StateKind::Partial => partial_layout(cfg, bucket),
+            StateKind::Draft => draft_layout(cfg, bucket),
+            StateKind::Tiny => tiny_layout(cfg, bucket),
+        })
+    }
+
+    fn alloc_state(&self, kind: StateKind, size: &str, bucket: usize) -> Result<StateBuf> {
+        let lay = self.state_layout(kind, size, bucket)?;
+        Ok(StateBuf::new(vec![0f32; lay.total]))
+    }
+
+    fn prefill(&self, op: &PrefillOp, state: StateBuf) -> Result<StateBuf> {
+        let zero_prev = [0i32; PREV_MAX];
+        self.verify_like(
+            &VerifyOp {
+                size: op.size,
+                bucket: op.bucket,
+                t: CHUNK,
+                tokens: op.tokens,
+                pos: op.pos,
+                mask: op.mask,
+                kv_len: op.kv_len,
+                prev_idx: &zero_prev,
+                n_prev: 0,
+            },
+            state,
+            false,
+        )
+    }
+
+    fn verify_full(&self, op: &VerifyOp, state: StateBuf) -> Result<StateBuf> {
+        self.verify_like(op, state, false)
+    }
+
+    fn verify_partial(&self, op: &VerifyOp, state: StateBuf) -> Result<StateBuf> {
+        self.verify_like(op, state, true)
+    }
+
+    fn commit(&self, op: &CommitOp, mut state: StateBuf) -> Result<StateBuf> {
+        let t0 = Instant::now();
+        let model = self.model_of(op.size)?;
+        let cfg = &model.cfg;
+        let lay = full_layout(cfg, op.bucket);
+        let buf = state.downcast_mut::<Vec<f32>>()?;
+        let dims = KvDims { l: cfg.n_layer, h: cfg.n_head, b: op.bucket, d: cfg.d_head };
+        compact_window(&mut buf[..lay.kv], dims, op.kv_len, op.idx, op.n, op.window);
+        self.count(&format!("commit_{}_b{}_w{}", op.size, op.bucket, op.window), t0);
+        Ok(state)
+    }
+
+    fn score(&self, op: &ScoreOp, state: &StateBuf) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let model = self.model_of(op.size)?;
+        let cfg = &model.cfg;
+        let lay = full_layout(cfg, op.bucket);
+        let buf = state.downcast_ref::<Vec<f32>>()?;
+        let dims = KvDims { l: cfg.n_layer, h: cfg.n_head, b: op.bucket, d: cfg.d_head };
+        let nb = op.bucket / BLOCK;
+        let d = cfg.d_head;
+        let mut out = vec![0f32; cfg.n_layer * 3 * nb];
+        for layer in 0..cfg.n_layer {
+            // s[t][blk]: Quest block scores summed over heads
+            let mut s = vec![0f32; QROWS * nb];
+            let mut any_valid = vec![false; nb];
+            for hh in 0..cfg.n_head {
+                for (blk, valid) in any_valid.iter_mut().enumerate() {
+                    let b0 = blk * BLOCK;
+                    let mut kmax = vec![f32::NEG_INFINITY; d];
+                    let mut kmin = vec![f32::INFINITY; d];
+                    let mut any = false;
+                    for r in b0..(b0 + BLOCK).min(op.kv_len.min(op.bucket)) {
+                        any = true;
+                        let kr = &buf[dims.row(layer, 0, hh, r)..dims.row(layer, 0, hh, r) + d];
+                        for dd in 0..d {
+                            kmax[dd] = kmax[dd].max(kr[dd]);
+                            kmin[dd] = kmin[dd].min(kr[dd]);
+                        }
+                    }
+                    if !any {
+                        kmax.fill(0.0);
+                        kmin.fill(0.0);
+                    } else {
+                        *valid = true;
+                    }
+                    let qbase = lay.off_queries() + (layer * cfg.n_head + hh) * QROWS * d;
+                    for t in 0..QROWS {
+                        let qr = &buf[qbase + t * d..qbase + (t + 1) * d];
+                        s[t * nb + blk] += dot(qr, &kmax).max(dot(qr, &kmin));
+                    }
+                }
+            }
+            let n = op.n_queries.clamp(1, QROWS);
+            for blk in 0..nb {
+                let (mean, max, last) = if any_valid[blk] {
+                    let mut sum = 0f32;
+                    let mut mx = f32::NEG_INFINITY;
+                    for t in 0..n {
+                        sum += s[t * nb + blk];
+                        mx = mx.max(s[t * nb + blk]);
+                    }
+                    (sum / n as f32, mx, s[(n - 1) * nb + blk])
+                } else {
+                    (NEG_INF, NEG_INF, NEG_INF)
+                };
+                out[layer * 3 * nb + blk] = mean;
+                out[layer * 3 * nb + nb + blk] = max;
+                out[layer * 3 * nb + 2 * nb + blk] = last;
+            }
+        }
+        self.counters.borrow_mut().download_bytes += (out.len() * 4) as u64;
+        self.count(&format!("score_{}_b{}", op.size, op.bucket), t0);
+        Ok(out)
+    }
+
+    fn refresh_gather(&self, op: &GatherOp, state: &StateBuf) -> Result<StateBuf> {
+        let t0 = Instant::now();
+        let model = self.model_of(op.size)?;
+        let cfg = &model.cfg;
+        let play = partial_layout(cfg, op.p_bucket);
+        let nsel = op.p_bucket / BLOCK;
+        if op.block_idx.len() != cfg.n_layer * nsel {
+            bail!(
+                "gather wants {} block ids, got {}",
+                cfg.n_layer * nsel,
+                op.block_idx.len()
+            );
+        }
+        let buf = state.downcast_ref::<Vec<f32>>()?;
+        let src = KvDims { l: cfg.n_layer, h: cfg.n_head, b: op.bucket, d: cfg.d_head };
+        let dst = KvDims { l: cfg.n_layer, h: cfg.n_head, b: op.p_bucket, d: cfg.d_head };
+        let nb = op.bucket / BLOCK;
+        let d = cfg.d_head;
+        let mut out = vec![0f32; play.total];
+        for layer in 0..cfg.n_layer {
+            for (sel, &blk) in op.block_idx[layer * nsel..(layer + 1) * nsel].iter().enumerate() {
+                let blk = (blk.max(0) as usize).min(nb - 1);
+                for plane in 0..2 {
+                    for hh in 0..cfg.n_head {
+                        for r in 0..BLOCK {
+                            let s = src.row(layer, plane, hh, blk * BLOCK + r);
+                            let t = dst.row(layer, plane, hh, sel * BLOCK + r);
+                            out[t..t + d].copy_from_slice(&buf[s..s + d]);
+                        }
+                    }
+                }
+            }
+        }
+        self.count(&format!("gather_{}_b{}_p{}", op.size, op.bucket, op.p_bucket), t0);
+        Ok(StateBuf::new(out))
+    }
+
+    fn draft_prefill(
+        &self,
+        op: &DraftPrefillOp,
+        target_state: &StateBuf,
+        mut draft_state: StateBuf,
+    ) -> Result<StateBuf> {
+        let t0 = Instant::now();
+        let model = self.model_of(op.size)?;
+        let cfg = &model.cfg;
+        let flay = full_layout(cfg, op.bucket);
+        let dlay = draft_layout(cfg, op.bucket);
+        if op.tokens.len() != CHUNK {
+            bail!("draft prefill wants {CHUNK} tokens");
+        }
+        let tbuf = target_state.downcast_ref::<Vec<f32>>()?;
+        let feats = &tbuf[flay.off_feats()..flay.off_feats() + CHUNK * 3 * cfg.d_model];
+        let dbuf = draft_state.downcast_mut::<Vec<f32>>()?;
+        // draft prefill does not emit logits (aot parity): the logits
+        // region is zeroed and only the chunk's hidden rows are kept
+        let (_logits, hidden) = {
+            let kv = &mut dbuf[..dlay.kv];
+            draft_fwd(
+                model, kv, op.bucket, op.tokens, feats, op.pos, op.mask, op.kv_len,
+                op.write_pos,
+            )
+        };
+        dbuf[dlay.off_logits()..dlay.off_logits() + dlay.logits].fill(0.0);
+        let hd = &mut dbuf[dlay.off_feats()..dlay.off_feats() + dlay.feats];
+        hd.fill(0.0);
+        hd[..CHUNK * cfg.d_model].copy_from_slice(&hidden);
+        self.count(&format!("draft_prefill_{}_b{}", op.size, op.bucket), t0);
+        Ok(draft_state)
+    }
+
+    fn draft_expand(&self, op: &DraftExpandOp, mut draft_state: StateBuf) -> Result<StateBuf> {
+        let t0 = Instant::now();
+        let model = self.model_of(op.size)?;
+        let cfg = &model.cfg;
+        let dlay = draft_layout(cfg, op.bucket);
+        if op.tokens.len() != DRAFT_W || op.mask.len() != DRAFT_W * DRAFT_REGION {
+            bail!("draft expand wants W={DRAFT_W} tokens and a [W, region] mask");
+        }
+        let dbuf = draft_state.downcast_mut::<Vec<f32>>()?;
+        let (logits, hidden) = {
+            let kv = &mut dbuf[..dlay.kv];
+            draft_fwd(
+                model, kv, op.bucket, op.tokens, op.feats, op.pos, op.mask, op.kv_len,
+                op.write_pos,
+            )
+        };
+        dbuf[dlay.off_logits()..dlay.off_logits() + dlay.logits].copy_from_slice(&logits);
+        let hd = &mut dbuf[dlay.off_feats()..dlay.off_feats() + dlay.feats];
+        hd.fill(0.0);
+        hd[..DRAFT_W * cfg.d_model].copy_from_slice(&hidden);
+        self.count(&format!("draft_step_{}_b{}", op.size, op.bucket), t0);
+        Ok(draft_state)
+    }
+
+    fn medusa(&self, size: &str, feat: &[f32]) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let model = self.model_of(size)?;
+        let cfg = &model.cfg;
+        let mw = model
+            .medusa
+            .as_ref()
+            .ok_or_else(|| anyhow!("model '{size}' has no medusa heads"))?;
+        if feat.len() != cfg.d_model {
+            bail!("medusa feat wants d_model={}", cfg.d_model);
+        }
+        let h = cfg.d_model;
+        let mut out = Vec::with_capacity(3 * cfg.vocab);
+        for (w1, w2) in &mw.heads {
+            let mut hid = matmul(feat, w1, 1, h, h);
+            for (x, &f) in hid.iter_mut().zip(feat) {
+                *x = silu(*x) + f;
+            }
+            out.extend(matmul(&hid, w2, 1, h, cfg.vocab));
+        }
+        self.count(&format!("medusa_{size}"), t0);
+        Ok(out)
+    }
+
+    fn tiny_forward(&self, op: &TinyForwardOp, mut state: StateBuf) -> Result<StateBuf> {
+        let t0 = Instant::now();
+        let model = self.model_of("tiny")?;
+        let cfg = &model.cfg;
+        let lay = tiny_layout(cfg, TINY_BUCKET);
+        if op.tokens.len() != op.t || op.mask.len() != op.t * op.t {
+            bail!("tiny op geometry mismatch (t={})", op.t);
+        }
+        let buf = state.downcast_mut::<Vec<f32>>()?;
+        let out = {
+            let kv = &mut buf[..lay.kv];
+            target_fwd(
+                model, kv, TINY_BUCKET, op.tokens, op.pos, op.mask, op.kv_len,
+                op.write_pos, false,
+            )
+        };
+        let v = cfg.vocab;
+        let row = op.last_idx.min(op.t - 1);
+        buf[lay.kv..lay.kv + v].copy_from_slice(&out.logits[row * v..(row + 1) * v]);
+        self.count(&format!("verify_tiny_b{TINY_BUCKET}_t{}", op.t), t0);
+        Ok(state)
+    }
+
+    fn read_logits(&self, op: &ReadOp, state: &StateBuf) -> Result<Vec<f32>> {
+        let buf = state.downcast_ref::<Vec<f32>>()?;
+        let out = match *op {
+            ReadOp::FullWindow { size, bucket, start } => {
+                let cfg = &self.model_of(size)?.cfg;
+                let lay = full_layout(cfg, bucket);
+                let (v, h3) = (cfg.vocab, 3 * cfg.d_model);
+                let start = start.min(CHUNK - QROWS);
+                let mut out = Vec::with_capacity(QROWS * (v + h3));
+                out.extend_from_slice(
+                    &buf[lay.off_logits() + start * v..lay.off_logits() + (start + QROWS) * v],
+                );
+                out.extend_from_slice(
+                    &buf[lay.off_feats() + start * h3..lay.off_feats() + (start + QROWS) * h3],
+                );
+                out
+            }
+            ReadOp::LastRow { size, bucket, idx } => {
+                let cfg = &self.model_of(size)?.cfg;
+                let lay = full_layout(cfg, bucket);
+                let (v, h3) = (cfg.vocab, 3 * cfg.d_model);
+                let idx = idx.min(CHUNK - 1);
+                let mut out = Vec::with_capacity(v + h3);
+                out.extend_from_slice(
+                    &buf[lay.off_logits() + idx * v..lay.off_logits() + (idx + 1) * v],
+                );
+                out.extend_from_slice(
+                    &buf[lay.off_feats() + idx * h3..lay.off_feats() + (idx + 1) * h3],
+                );
+                out
+            }
+            ReadOp::Partial { size, bucket } => {
+                let cfg = &self.model_of(size)?.cfg;
+                let lay = partial_layout(cfg, bucket);
+                buf[lay.off_logits()..lay.total].to_vec()
+            }
+            ReadOp::Draft { size, bucket } => {
+                let cfg = &self.model_of(size)?.cfg;
+                let lay = draft_layout(cfg, bucket);
+                let mut out = Vec::with_capacity(lay.logits + DRAFT_W * cfg.d_model);
+                out.extend_from_slice(&buf[lay.off_logits()..lay.off_logits() + lay.logits]);
+                out.extend_from_slice(
+                    &buf[lay.off_feats()..lay.off_feats() + DRAFT_W * cfg.d_model],
+                );
+                out
+            }
+            ReadOp::DraftHiddenRow { size, bucket, idx } => {
+                let cfg = &self.model_of(size)?.cfg;
+                let lay = draft_layout(cfg, bucket);
+                let h = cfg.d_model;
+                let idx = idx.min(CHUNK - 1);
+                buf[lay.off_feats() + idx * h..lay.off_feats() + (idx + 1) * h].to_vec()
+            }
+            ReadOp::Tiny => {
+                let cfg = &self.model_of("tiny")?.cfg;
+                let lay = tiny_layout(cfg, TINY_BUCKET);
+                buf[lay.kv..lay.kv + cfg.vocab].to_vec()
+            }
+        };
+        self.counters.borrow_mut().download_bytes += (out.len() * 4) as u64;
+        Ok(out)
+    }
+
+    fn counters(&self) -> Counters {
+        self.counters.borrow().clone()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "reference backend (pure rust, deterministic seeded weights): \
+             models {:?}, full buckets {:?}, partial buckets {:?}",
+            self.models.keys().collect::<Vec<_>>(),
+            FULL_BUCKETS,
+            PARTIAL_BUCKETS
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Backend;
+    use super::*;
+
+    fn be() -> ReferenceBackend {
+        ReferenceBackend::new()
+    }
+
+    #[test]
+    fn catalog_is_consistent() {
+        let b = be();
+        let info = b.model("s").unwrap();
+        assert_eq!(info.vocab, crate::tokenizer::VOCAB);
+        assert_eq!(b.full_buckets("s"), FULL_BUCKETS.to_vec());
+        assert!(b.model("xl").is_err());
+        let lay = b.state_layout(StateKind::Full, "s", 288).unwrap();
+        assert_eq!(
+            lay.total,
+            lay.kv + lay.logits + lay.feats + lay.queries
+        );
+    }
+
+    #[test]
+    fn weights_are_deterministic() {
+        let a = init_model("s", be().models["s"].cfg.clone(), true);
+        let b = init_model("s", be().models["s"].cfg.clone(), true);
+        assert_eq!(a.target.embed, b.target.embed);
+        assert_eq!(a.target.layers[2].wq, b.target.layers[2].wq);
+        assert_eq!(a.draft.unwrap().fuse, b.draft.unwrap().fuse);
+    }
+
+    #[test]
+    fn verify_is_deterministic_and_shapes_hold() {
+        let b = be();
+        let run = || -> Vec<f32> {
+            let st = b.alloc_state(StateKind::Full, "s", 128).unwrap();
+            let t = TREE_T;
+            let tokens: Vec<i32> = (0..t as i32).map(|i| 65 + i).collect();
+            let pos: Vec<i32> = (0..t as i32).collect();
+            let mask = crate::tree::chain_mask(t, t);
+            let zero = [0i32; PREV_MAX];
+            let op = VerifyOp {
+                size: "s",
+                bucket: 128,
+                t,
+                tokens: &tokens,
+                pos: &pos,
+                mask: &mask,
+                kv_len: 0,
+                prev_idx: &zero,
+                n_prev: 0,
+            };
+            let st = b.verify_full(&op, st).unwrap();
+            b.read_logits(&ReadOp::FullWindow { size: "s", bucket: 128, start: 0 }, &st)
+                .unwrap()
+        };
+        let x = run();
+        let y = run();
+        assert_eq!(x, y, "reference forward must be bit-deterministic");
+        let info = b.model("s").unwrap();
+        assert_eq!(x.len(), QROWS * (info.vocab + 3 * info.d_model));
+        assert!(x.iter().all(|v| v.is_finite()));
+        // rows 0..T hold real logits, later rows are zero padding
+        assert!(x[..info.vocab].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn chain_verify_matches_stepwise_decode() {
+        // processing [a, b] in one chain call must equal processing a then
+        // b in two T=1 calls — the losslessness property spec engines rely
+        // on (same rows visible, same write positions).
+        let b = be();
+        let zero = [0i32; PREV_MAX];
+        // one-shot: chain of 2
+        let st = b.alloc_state(StateKind::Full, "s", 128).unwrap();
+        let mask2 = crate::tree::chain_mask(2, 2);
+        let st = b
+            .verify_full(
+                &VerifyOp {
+                    size: "s",
+                    bucket: 128,
+                    t: 2,
+                    tokens: &[72, 105],
+                    pos: &[0, 1],
+                    mask: &mask2,
+                    kv_len: 0,
+                    prev_idx: &zero,
+                    n_prev: 0,
+                },
+                st,
+            )
+            .unwrap();
+        let chain =
+            b.read_logits(&ReadOp::LastRow { size: "s", bucket: 128, idx: 1 }, &st).unwrap();
+        // stepwise: two T=1 calls
+        let st = b.alloc_state(StateKind::Full, "s", 128).unwrap();
+        let one = |st, tok: i32, pos: i32, kv_len: usize| {
+            b.verify_full(
+                &VerifyOp {
+                    size: "s",
+                    bucket: 128,
+                    t: 1,
+                    tokens: &[tok],
+                    pos: &[pos],
+                    mask: &[1.0],
+                    kv_len,
+                    prev_idx: &zero,
+                    n_prev: 0,
+                },
+                st,
+            )
+            .unwrap()
+        };
+        let st = one(st, 72, 0, 0);
+        let st = one(st, 105, 1, 1);
+        let step =
+            b.read_logits(&ReadOp::LastRow { size: "s", bucket: 128, idx: 0 }, &st).unwrap();
+        let v = b.model("s").unwrap().vocab;
+        for (i, (a, bb)) in chain[..v].iter().zip(&step[..v]).enumerate() {
+            assert!((a - bb).abs() < 1e-5, "logit {i}: {a} vs {bb}");
+        }
+    }
+
+    #[test]
+    fn compact_window_moves_accepted_rows() {
+        let dims = KvDims { l: 1, h: 1, b: 32, d: 2 };
+        let mut kv: Vec<f32> = (0..dims.l * 2 * dims.h * dims.b * dims.d)
+            .map(|i| i as f32)
+            .collect();
+        let before_row6 = kv[dims.row(0, 0, 0, 10 + 6)..dims.row(0, 0, 0, 10 + 6) + 2].to_vec();
+        // kv_len 10, accepted window rows [2, 6] → rows 12, 16 move to 10, 11
+        compact_window(&mut kv, dims, 10, &[2, 6, 0, 0], 2, PREV_WINDOW);
+        let r10 = &kv[dims.row(0, 0, 0, 10)..dims.row(0, 0, 0, 10) + 2];
+        assert_eq!(r10, &[(12 * 2) as f32, (12 * 2 + 1) as f32][..]);
+        let r11 = &kv[dims.row(0, 0, 0, 11)..dims.row(0, 0, 0, 11) + 2];
+        assert_eq!(r11, &before_row6[..]);
+    }
+
+    #[test]
+    fn medusa_and_tiny_shapes() {
+        let b = be();
+        let info = b.model("s").unwrap();
+        let heads = b.medusa("s", &vec![0.1; info.d_model]).unwrap();
+        assert_eq!(heads.len(), 3 * info.vocab);
+        let st = b.alloc_state(StateKind::Tiny, "tiny", TINY_BUCKET).unwrap();
+        let st = b
+            .tiny_forward(
+                &TinyForwardOp {
+                    t: 1,
+                    tokens: &[65],
+                    pos: &[0],
+                    mask: &[1.0],
+                    kv_len: 0,
+                    write_pos: 0,
+                    last_idx: 0,
+                },
+                st,
+            )
+            .unwrap();
+        let lg = b.read_logits(&ReadOp::Tiny, &st).unwrap();
+        assert_eq!(lg.len(), b.model("tiny").unwrap().vocab);
+        assert!(b.counters().executions >= 2);
+    }
+}

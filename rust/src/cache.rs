@@ -177,9 +177,28 @@ impl PartialCache {
         Ok((kv_len, idx, n))
     }
 
-    pub fn set_pending(&mut self, rows: Vec<usize>) -> Result<()> {
+    /// Record this step's accepted tree rows (for the next call). Rows
+    /// must be strictly increasing and inside the fused-compaction
+    /// `window` — the same validation (and error shapes) as
+    /// [`FullCache::set_pending`].
+    pub fn set_pending(&mut self, rows: Vec<usize>, window: usize) -> Result<()> {
         if !self.pending.is_empty() {
-            bail!("partial pending already set");
+            bail!("pending already set");
+        }
+        let mut prev = None;
+        for &r in &rows {
+            if r >= window {
+                bail!("pending row {r} outside window {window}");
+            }
+            if let Some(p) = prev {
+                if r <= p {
+                    bail!("pending rows not strictly increasing");
+                }
+            }
+            prev = Some(r);
+        }
+        if self.kv_len() + rows.len() > self.bucket {
+            bail!("bucket overflow on acceptance");
         }
         self.pending = rows;
         Ok(())
@@ -291,11 +310,60 @@ mod tests {
     fn partial_pending_roundtrip() {
         let mut p = PartialCache::new(512, 100);
         p.refresh(400);
-        p.set_pending(vec![0, 1]).unwrap();
+        p.set_pending(vec![0, 1], 16).unwrap();
         let (kv_len, idx, n) = p.take_pending(8).unwrap();
         assert_eq!((kv_len, n), (400, 2));
         assert_eq!(idx.len(), 8);
         assert_eq!(p.kv_len(), 402);
+    }
+
+    #[test]
+    fn partial_cache_rejects_bad_pending() {
+        // same validation + error shapes as FullCache::set_pending
+        let mut p = PartialCache::new(128, 40);
+        p.refresh(64);
+        assert!(p.set_pending(vec![5, 3], 16).is_err()); // not increasing
+        assert!(p.set_pending(vec![3, 3], 16).is_err()); // not strictly
+        assert!(p.set_pending(vec![16], 16).is_err()); // outside window
+        p.set_pending(vec![1], 16).unwrap();
+        assert!(p.set_pending(vec![2], 16).is_err()); // double set
+        // overflow: kv_len + rows > bucket
+        let mut p = PartialCache::new(66, 40);
+        p.refresh(64);
+        assert!(p.set_pending(vec![0, 1, 2], 16).is_err());
+    }
+
+    #[test]
+    fn partial_cache_invariants_property() {
+        Prop::new("partial cache kv_len/buffer caps", 200).run(|g| {
+            let bucket = g.usize_in(64, 512);
+            let cap = g.usize_in(17, 60);
+            let mut p = PartialCache::new(bucket, cap);
+            p.refresh(g.usize_in(1, bucket));
+            for _ in 0..g.usize_in(0, 40) {
+                if !p.fits(16, 8) {
+                    // mode machine forces a Refresh before any overflow
+                    assert!(p.kv_len() + p.pending.len() <= bucket);
+                    p.refresh(g.usize_in(1, bucket));
+                    continue;
+                }
+                let m = g.usize_in(0, 6);
+                let rows: Vec<usize> = (0..=m).map(|i| i * 2).collect();
+                if p.set_pending(rows, 16).is_ok() {
+                    let (kv_len, idx, n) = p.take_pending(8).unwrap();
+                    assert_eq!(idx.len(), 8);
+                    assert!(kv_len + n <= bucket, "kv overflow");
+                    for _ in 0..n {
+                        p.pv_tokens.push(0);
+                    }
+                }
+                assert!(p.kv_len() <= bucket, "kv_len exceeded bucket");
+                assert!(
+                    p.pv_tokens.len() <= cap + 16,
+                    "pv buffer blew past cap + one tree"
+                );
+            }
+        });
     }
 
     #[test]

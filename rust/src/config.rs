@@ -95,6 +95,40 @@ impl fmt::Display for EngineKind {
     }
 }
 
+/// Which device backend executes the kernel ops (`backend::Backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// pjrt when `artifacts/manifest.json` exists, reference otherwise
+    Auto,
+    /// PJRT CPU client over the AOT artifacts (`backend::pjrt`)
+    Pjrt,
+    /// pure-Rust host executor, no artifacts (`backend::reference`)
+    Reference,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            "reference" | "ref" | "host" => Ok(BackendKind::Reference),
+            _ => bail!("unknown backend '{s}' (auto|pjrt|reference)"),
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Reference => "reference",
+        })
+    }
+}
+
 /// SpecPV partial-cache geometry (paper §3.2). All unit = tokens unless
 /// noted. `retrieval_budget` is the headline "SpecPV-xK" knob.
 #[derive(Debug, Clone)]
@@ -155,6 +189,8 @@ pub struct Config {
     pub artifacts_dir: PathBuf,
     pub model_size: String,
     pub engine: EngineKind,
+    /// device backend (auto: pjrt with artifacts, reference without)
+    pub backend: BackendKind,
     pub specpv: SpecPvConfig,
     pub offload: OffloadConfig,
     pub temperature: f32,
@@ -179,6 +215,7 @@ impl Default for Config {
             artifacts_dir: PathBuf::from("artifacts"),
             model_size: "s".into(),
             engine: EngineKind::SpecPv,
+            backend: BackendKind::Auto,
             specpv: SpecPvConfig::default(),
             offload: OffloadConfig::default(),
             temperature: 0.0,
@@ -225,6 +262,7 @@ impl Config {
                 "artifacts_dir" => self.artifacts_dir = PathBuf::from(v),
                 "model_size" => self.model_size = v.clone(),
                 "engine" => self.engine = v.parse()?,
+                "backend" => self.backend = v.parse()?,
                 "retrieval_budget" => {
                     self.specpv.retrieval_budget = v.parse()?
                 }
@@ -283,6 +321,17 @@ mod tests {
         let mut kv = BTreeMap::new();
         kv.insert("nope".to_string(), "1".to_string());
         assert!(c.apply_overrides(&kv).is_err());
+    }
+
+    #[test]
+    fn backend_parse_display() {
+        for b in ["auto", "pjrt", "reference"] {
+            let k: BackendKind = b.parse().unwrap();
+            assert_eq!(k.to_string(), b);
+        }
+        assert_eq!("ref".parse::<BackendKind>().unwrap(), BackendKind::Reference);
+        assert!("cuda".parse::<BackendKind>().is_err());
+        assert_eq!(Config::default().backend, BackendKind::Auto);
     }
 
     #[test]

@@ -25,12 +25,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::{Config, EngineKind};
 use crate::engine::{
-    EngineSession, GenRequest, GenResult, RuntimeFactory, SessionFactory,
+    BackendFactory, EngineSession, GenRequest, GenResult, SessionFactory,
 };
 use crate::metrics::GenStats;
-use crate::runtime::Runtime;
 use crate::util::stats::Samples;
 
 /// Request ids are coordinator-scoped.
@@ -108,6 +108,14 @@ pub struct Registry {
     pub failed: u64,
     pub cancelled: u64,
     pub tokens_out: u64,
+    /// which backend serves this coordinator ("pjrt", "reference",
+    /// "scripted" for injected test factories)
+    pub backend: String,
+    /// backend execution counters (synced on demand via
+    /// `Coordinator::sync_backend_counters` — not on the per-tick path)
+    pub executions: u64,
+    pub exec_secs: f64,
+    pub compilations: u64,
     /// gauge: requests waiting for a session slot (as of the last tick)
     pub queue_depth: usize,
     /// gauge: live sessions (as of the last tick)
@@ -148,15 +156,20 @@ impl Registry {
 
     pub fn summary(&self) -> String {
         format!(
-            "completed={} failed={} cancelled={} tokens={} queue_depth={} \
-             active={} p50_latency={:.2}s p99={:.2}s p50_ttft={:.3}s \
+            "backend={} completed={} failed={} cancelled={} tokens={} \
+             queue_depth={} active={} execs={} exec_secs={:.2}s compiles={} \
+             p50_latency={:.2}s p99={:.2}s p50_ttft={:.3}s \
              p99_ttft={:.3}s mean_tok_s={:.1} mean_tau={:.2}",
+            if self.backend.is_empty() { "scripted" } else { self.backend.as_str() },
             self.completed,
             self.failed,
             self.cancelled,
             self.tokens_out,
             self.queue_depth,
             self.active_sessions,
+            self.executions,
+            self.exec_secs,
+            self.compilations,
             self.latency.p50(),
             self.latency.p99(),
             self.ttft.p50(),
@@ -192,6 +205,8 @@ pub struct Coordinator<'rt> {
     pub cfg: Config,
     pub admission: Admission,
     factory: Box<dyn SessionFactory<'rt> + 'rt>,
+    /// the backend behind the factory, when there is one (counters)
+    backend: Option<&'rt dyn Backend>,
     queue: VecDeque<RequestId>,
     requests: Vec<TrackedRequest>,
     active: Vec<ActiveEntry<'rt>>,
@@ -201,11 +216,14 @@ pub struct Coordinator<'rt> {
 }
 
 impl<'rt> Coordinator<'rt> {
-    /// Production constructor: sessions are started on `rt` with the
+    /// Production constructor: sessions are started on `be` with the
     /// config's engine geometry.
-    pub fn new(rt: &'rt Runtime, cfg: Config) -> Coordinator<'rt> {
-        let factory = Box::new(RuntimeFactory::new(rt, cfg.clone()));
-        Coordinator::with_factory(cfg, factory)
+    pub fn new(be: &'rt dyn Backend, cfg: Config) -> Coordinator<'rt> {
+        let factory = Box::new(BackendFactory::new(be, cfg.clone()));
+        let mut coord = Coordinator::with_factory(cfg, factory);
+        coord.backend = Some(be);
+        coord.registry.backend = be.name().to_string();
+        coord
     }
 
     /// Test/simulation constructor with an injected session factory.
@@ -221,6 +239,7 @@ impl<'rt> Coordinator<'rt> {
             cfg,
             admission,
             factory,
+            backend: None,
             queue: VecDeque::new(),
             requests: Vec::new(),
             active: Vec::new(),
@@ -324,6 +343,19 @@ impl<'rt> Coordinator<'rt> {
         self.registry.queue_depth = self.queue.len();
         self.registry.active_sessions = self.active.len();
         events
+    }
+
+    /// Pull the backend's execution counters into the registry. Called on
+    /// demand (the `metrics` op, end of a drain) rather than per tick —
+    /// the counter snapshot clones a per-executable map and has no place
+    /// on the hot device loop.
+    pub fn sync_backend_counters(&mut self) {
+        if let Some(be) = self.backend {
+            let c = be.counters();
+            self.registry.executions = c.executions;
+            self.registry.exec_secs = c.exec_secs;
+            self.registry.compilations = c.compilations;
+        }
     }
 
     fn expire_deadlines(&mut self, events: &mut Vec<Event>) {
@@ -469,6 +501,7 @@ impl<'rt> Coordinator<'rt> {
         while !self.idle() {
             self.tick();
         }
+        self.sync_backend_counters();
     }
 
     pub fn get(&self, id: RequestId) -> Option<&TrackedRequest> {

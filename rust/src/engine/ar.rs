@@ -3,11 +3,11 @@
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::Config;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
 use crate::offload::OffloadSim;
-use crate::runtime::Runtime;
 use crate::sampling::pick_token;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
@@ -39,16 +39,16 @@ impl Engine for ArEngine {
         crate::config::EngineKind::Autoregressive
     }
 
-    fn start<'rt>(
+    fn start<'be>(
         &self,
-        rt: &'rt Runtime,
+        be: &'be dyn Backend,
         req: &GenRequest,
-    ) -> Result<Box<dyn EngineSession + 'rt>> {
+    ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
-        let need = bucket_need(req.prompt.len(), req.max_new, &rt.manifest.consts);
+        let need = bucket_need(req.prompt.len(), req.max_new, be.consts());
         let mut target = TargetSession::new(
-            rt,
+            be,
             &self.cfg.model_size,
             need,
             OffloadSim::new(self.cfg.offload.clone()),

@@ -14,6 +14,10 @@
 //! draft→verify→accept round (one decode token for `ar`). The coordinator
 //! interleaves `step()` calls across many sessions (continuous batching);
 //! `generate_with` is the run-to-completion convenience built on top.
+//!
+//! Engines are generic over `&dyn Backend` (the typed kernel-op API), so
+//! the same decode algorithms run on the PJRT artifact player and the
+//! pure-Rust reference executor.
 
 pub mod ar;
 pub mod eagle;
@@ -26,9 +30,9 @@ pub mod triforce;
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::{Config, EngineKind};
 use crate::metrics::GenStats;
-use crate::runtime::Runtime;
 use crate::tokenizer::is_eos;
 
 /// One generation request.
@@ -90,17 +94,17 @@ pub trait EngineSession {
     fn finish(self: Box<Self>) -> GenResult;
 }
 
-/// A decoding engine bound to a config; `start` binds it to a runtime and
+/// A decoding engine bound to a config; `start` binds it to a backend and
 /// a request.
 pub trait Engine {
     fn kind(&self) -> EngineKind;
 
     /// Prefill and return a live session positioned after the first token.
-    fn start<'rt>(
+    fn start<'be>(
         &self,
-        rt: &'rt Runtime,
+        be: &'be dyn Backend,
         req: &GenRequest,
-    ) -> Result<Box<dyn EngineSession + 'rt>>;
+    ) -> Result<Box<dyn EngineSession + 'be>>;
 }
 
 /// Shared output accounting for sessions: enforces the `max_new` bound as
@@ -178,38 +182,38 @@ pub fn build(cfg: &Config) -> Box<dyn Engine> {
 }
 
 /// Creates sessions for the scheduler. The production implementation is
-/// [`RuntimeFactory`]; tests inject [`scripted::ScriptedFactory`] to
-/// exercise scheduling without artifacts.
-pub trait SessionFactory<'rt> {
+/// [`BackendFactory`]; tests inject [`scripted::ScriptedFactory`] to
+/// exercise scheduling without any model behind it.
+pub trait SessionFactory<'be> {
     fn start_session(
         &mut self,
         kind: EngineKind,
         req: &GenRequest,
-    ) -> Result<Box<dyn EngineSession + 'rt>>;
+    ) -> Result<Box<dyn EngineSession + 'be>>;
 }
 
-/// Session factory over a real runtime: builds the engine named by `kind`
+/// Session factory over a real backend: builds the engine named by `kind`
 /// (with the base config's geometry) and starts it.
-pub struct RuntimeFactory<'rt> {
-    rt: &'rt Runtime,
+pub struct BackendFactory<'be> {
+    be: &'be dyn Backend,
     base: Config,
 }
 
-impl<'rt> RuntimeFactory<'rt> {
-    pub fn new(rt: &'rt Runtime, base: Config) -> RuntimeFactory<'rt> {
-        RuntimeFactory { rt, base }
+impl<'be> BackendFactory<'be> {
+    pub fn new(be: &'be dyn Backend, base: Config) -> BackendFactory<'be> {
+        BackendFactory { be, base }
     }
 }
 
-impl<'rt> SessionFactory<'rt> for RuntimeFactory<'rt> {
+impl<'be> SessionFactory<'be> for BackendFactory<'be> {
     fn start_session(
         &mut self,
         kind: EngineKind,
         req: &GenRequest,
-    ) -> Result<Box<dyn EngineSession + 'rt>> {
+    ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut cfg = self.base.clone();
         cfg.engine = kind;
-        build(&cfg).start(self.rt, req)
+        build(&cfg).start(self.be, req)
     }
 }
 
@@ -217,10 +221,10 @@ impl<'rt> SessionFactory<'rt> for RuntimeFactory<'rt> {
 /// byte-identical tokens to the pre-session monolithic decode loops.
 pub fn generate_with(
     cfg: &Config,
-    rt: &Runtime,
+    be: &dyn Backend,
     req: &GenRequest,
 ) -> Result<GenResult> {
-    let mut session = build(cfg).start(rt, req)?;
+    let mut session = build(cfg).start(be, req)?;
     while !session.is_finished() {
         session.step()?;
     }

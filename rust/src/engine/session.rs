@@ -1,63 +1,69 @@
 //! Device-state sessions: thin stateful wrappers that pair a threaded
-//! flat-state buffer with its rust-side cache accounting and the
-//! manifest-driven executable calls.
+//! flat-state buffer with its rust-side cache accounting and the typed
+//! [`Backend`] kernel-op calls.
 //!
 //! * [`TargetSession`] — the target model over a full bucket (prefill,
 //!   verify/refresh, commit, score, gather, reads)
 //! * [`PartialSession`] — the SpecPV partial cache (pverify + reads)
 //! * [`DraftSession`] — the EAGLE-3 draft layer (prefill, chain, levels)
 //! * [`TinySession`] — the independent TriForce draft LM (streaming ring)
+//!
+//! Sessions are generic over `&dyn Backend`, so the same draft/verify/
+//! accept logic runs against the PJRT artifact player or the pure-Rust
+//! reference executor unchanged.
 
-use anyhow::{bail, Context, Result};
-use xla::PjRtBuffer;
+use anyhow::{bail, Result};
 
+use crate::backend::{
+    pick_bucket, Backend, CommitOp, DraftExpandOp, DraftPrefillOp, GatherOp, PrefillOp, ReadOp,
+    ScoreOp, StateBuf, StateKind, TinyForwardOp, VerifyOp,
+};
 use crate::cache::{DraftCache, FullCache, PartialCache};
 use crate::config::SpecPvConfig;
-use crate::manifest::{Consts, ModelInfo, StateLayout};
+use crate::manifest::{Consts, ModelInfo};
 use crate::model::{self, DraftOut, ReadOut};
 use crate::offload::OffloadSim;
 use crate::retrieval::GatherPlan;
-use crate::runtime::{Arg, Runtime};
 use crate::tokenizer::PAD;
 use crate::tree::{chain_mask, FlatTree};
 
+/// Move a session's state out for an ownership-taking backend op (the
+/// field gets a nil placeholder until the op's successor is stored).
+fn take(state: &mut StateBuf) -> StateBuf {
+    std::mem::replace(state, StateBuf::nil())
+}
+
 pub struct TargetSession<'a> {
-    rt: &'a Runtime,
+    be: &'a dyn Backend,
     pub size: String,
     pub bucket: usize,
-    pub state: PjRtBuffer,
+    pub state: StateBuf,
     pub cache: FullCache,
     pub info: ModelInfo,
     pub consts: Consts,
-    pub layout: StateLayout,
     pub offload: OffloadSim,
 }
 
 impl<'a> TargetSession<'a> {
     /// Create a session whose bucket can hold `need` tokens.
     pub fn new(
-        rt: &'a Runtime,
+        be: &'a dyn Backend,
         size: &str,
         need: usize,
         offload: OffloadSim,
     ) -> Result<TargetSession<'a>> {
-        let bucket = model::pick_full_bucket(&rt.manifest, size, need)?;
-        let consts = rt.manifest.consts.clone();
-        let info = rt.manifest.model(size)?.clone();
-        let spec = rt
-            .manifest
-            .exec(&model::verify_name(size, bucket, consts.tree_t))?;
-        let layout = spec.layout.context("verify exec missing layout")?;
-        let state = rt.zero_state(layout.total)?;
+        let bucket = pick_bucket(&be.full_buckets(size), need, "full", size)?;
+        let consts = be.consts().clone();
+        let info = be.model(size)?;
+        let state = be.alloc_state(StateKind::Full, size, bucket)?;
         Ok(TargetSession {
-            rt,
+            be,
             size: size.to_string(),
             bucket,
             state,
             cache: FullCache::new(bucket),
             info,
             consts,
-            layout,
             offload,
         })
     }
@@ -78,8 +84,6 @@ impl<'a> TargetSession<'a> {
             bail!("empty prompt");
         }
         let c = self.consts.chunk;
-        let name = model::verify_name(&self.size, self.bucket, c);
-        let zero_prev = vec![0i32; self.consts.prev_max()];
         let mut last_real = 0usize;
         for (ci, chunk) in tokens.chunks(c).enumerate() {
             let r = chunk.len();
@@ -91,19 +95,16 @@ impl<'a> TargetSession<'a> {
             }
             let pos: Vec<i32> = (0..c).map(|i| (base + i) as i32).collect();
             let mask = chain_mask(r, c);
-            let out = self.rt.invoke(
-                &name,
-                &[
-                    Arg::I32(&toks),
-                    Arg::I32(&pos),
-                    Arg::F32(&mask),
-                    Arg::Buf(&self.state),
-                    Arg::Scalar(self.cache.committed as i32),
-                    Arg::I32(&zero_prev),
-                    Arg::Scalar(0),
-                ],
-            )?;
-            self.state = out;
+            let op = PrefillOp {
+                size: &self.size,
+                bucket: self.bucket,
+                tokens: &toks,
+                pos: &pos,
+                mask: &mask,
+                kv_len: self.cache.committed,
+            };
+            let state = take(&mut self.state);
+            self.state = self.be.prefill(&op, state)?;
             self.offload.touch_full(self.cache.committed + r, self.kv_bpt());
             if let Some(d) = draft.as_deref_mut() {
                 d.prefill_chunk(&toks, r, &pos, &self.state)?;
@@ -118,22 +119,21 @@ impl<'a> TargetSession<'a> {
     /// the SpecPV "Full" mode). Applies the pending fused compaction.
     pub fn verify_tree(&mut self, flat: &FlatTree, root_pos: usize) -> Result<ReadOut> {
         let t = self.consts.tree_t;
-        let name = model::verify_name(&self.size, self.bucket, t);
         let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
         let pos = flat.positions(root_pos);
-        let out = self.rt.invoke(
-            &name,
-            &[
-                Arg::I32(&flat.tokens),
-                Arg::I32(&pos),
-                Arg::F32(&flat.mask),
-                Arg::Buf(&self.state),
-                Arg::Scalar(kv_len as i32),
-                Arg::I32(&idx),
-                Arg::Scalar(n_prev as i32),
-            ],
-        )?;
-        self.state = out;
+        let op = VerifyOp {
+            size: &self.size,
+            bucket: self.bucket,
+            t,
+            tokens: &flat.tokens,
+            pos: &pos,
+            mask: &flat.mask,
+            kv_len,
+            prev_idx: &idx,
+            n_prev,
+        };
+        let state = take(&mut self.state);
+        self.state = self.be.verify_full(&op, state)?;
         self.offload
             .touch_full(self.cache.committed + flat.n, self.kv_bpt());
         self.read_window(0)
@@ -141,22 +141,20 @@ impl<'a> TargetSession<'a> {
 
     /// AR decode step (T=1): returns the token's logits row.
     pub fn decode_one(&mut self, token: u32, pos: usize) -> Result<Vec<f32>> {
-        let name = model::verify_name(&self.size, self.bucket, 1);
         let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
-        let mask = vec![1f32];
-        let out = self.rt.invoke(
-            &name,
-            &[
-                Arg::I32(&[token as i32]),
-                Arg::I32(&[pos as i32]),
-                Arg::F32(&mask),
-                Arg::Buf(&self.state),
-                Arg::Scalar(kv_len as i32),
-                Arg::I32(&idx),
-                Arg::Scalar(n_prev as i32),
-            ],
-        )?;
-        self.state = out;
+        let op = VerifyOp {
+            size: &self.size,
+            bucket: self.bucket,
+            t: 1,
+            tokens: &[token as i32],
+            pos: &[pos as i32],
+            mask: &[1.0],
+            kv_len,
+            prev_idx: &idx,
+            n_prev,
+        };
+        let state = take(&mut self.state);
+        self.state = self.be.verify_full(&op, state)?;
         self.offload.touch_full(self.cache.committed + 1, self.kv_bpt());
         self.cache.set_pending(vec![0], self.consts.prev_window())?;
         let (logits, _) = self.read_last(0)?;
@@ -165,8 +163,8 @@ impl<'a> TargetSession<'a> {
 
     /// Refresh verification (SpecPV): a pv chain of `chain` tokens
     /// followed by the draft tree, against the full cache, using the
-    /// `t_refresh`-wide executable. Returns the read window positioned at
-    /// the tree (rows 0.. = chain.len() offset applied).
+    /// `t_refresh`-wide step. Returns the read window positioned at the
+    /// tree (rows 0.. = chain.len() offset applied).
     pub fn verify_refresh(
         &mut self,
         chain: &[u32],
@@ -179,7 +177,6 @@ impl<'a> TargetSession<'a> {
         if n_chain + t_tree > t_refresh {
             bail!("refresh overflow: {n_chain}+{t_tree} > {t_refresh}");
         }
-        let name = model::verify_name(&self.size, self.bucket, t_refresh);
         let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
 
         let mut toks = vec![PAD as i32; t_refresh];
@@ -195,19 +192,19 @@ impl<'a> TargetSession<'a> {
             pos[n_chain + i] = tree_pos[i];
         }
         let mask = crate::tree::refresh_mask(n_chain, flat, t_refresh);
-        let out = self.rt.invoke(
-            &name,
-            &[
-                Arg::I32(&toks),
-                Arg::I32(&pos),
-                Arg::F32(&mask),
-                Arg::Buf(&self.state),
-                Arg::Scalar(kv_len as i32),
-                Arg::I32(&idx),
-                Arg::Scalar(n_prev as i32),
-            ],
-        )?;
-        self.state = out;
+        let op = VerifyOp {
+            size: &self.size,
+            bucket: self.bucket,
+            t: t_refresh,
+            tokens: &toks,
+            pos: &pos,
+            mask: &mask,
+            kv_len,
+            prev_idx: &idx,
+            n_prev,
+        };
+        let state = take(&mut self.state);
+        self.state = self.be.verify_full(&op, state)?;
         self.offload
             .touch_full(self.cache.committed + n_chain + flat.n, self.kv_bpt());
         // window positioned so the tree starts at row 0 when possible
@@ -217,7 +214,6 @@ impl<'a> TargetSession<'a> {
     /// Standalone commit after a Refresh: keep `rows` (chain + accepted
     /// tree path, window-relative, strictly increasing) of the last step.
     pub fn commit_now(&mut self, rows: &[usize], window: usize) -> Result<()> {
-        let name = model::commit_name(&self.size, self.bucket, window);
         let mut idx = vec![0i32; window];
         for (j, &r) in rows.iter().enumerate() {
             if r >= window {
@@ -225,16 +221,16 @@ impl<'a> TargetSession<'a> {
             }
             idx[j] = r as i32;
         }
-        let out = self.rt.invoke(
-            &name,
-            &[
-                Arg::Buf(&self.state),
-                Arg::I32(&idx),
-                Arg::Scalar(rows.len() as i32),
-                Arg::Scalar(self.cache.committed as i32),
-            ],
-        )?;
-        self.state = out;
+        let op = CommitOp {
+            size: &self.size,
+            bucket: self.bucket,
+            window,
+            idx: &idx,
+            n: rows.len(),
+            kv_len: self.cache.committed,
+        };
+        let state = take(&mut self.state);
+        self.state = self.be.commit(&op, state)?;
         self.offload.touch_full(self.cache.committed, self.kv_bpt());
         self.cache.commit_now(rows.len())
     }
@@ -242,40 +238,40 @@ impl<'a> TargetSession<'a> {
     /// Retrieval scores over the committed cache using the queries the
     /// last (refresh) verification wrote. Flat `[L, 3, NB]`.
     pub fn score(&mut self, n_queries: usize) -> Result<Vec<f32>> {
-        let name = model::score_name(&self.size, self.bucket);
-        let out = self.rt.invoke_download(
-            &name,
-            &[
-                Arg::Buf(&self.state),
-                Arg::Scalar(self.cache.committed as i32),
-                Arg::Scalar(n_queries as i32),
-            ],
-        )?;
+        let op = ScoreOp {
+            size: &self.size,
+            bucket: self.bucket,
+            kv_len: self.cache.committed,
+            n_queries,
+        };
+        let out = self.be.score(&op, &self.state)?;
         self.offload.touch_full(self.cache.committed, self.kv_bpt());
         Ok(out)
     }
 
     /// Assemble a fresh partial state from a gather plan.
-    pub fn gather(&mut self, plan: &GatherPlan, p_bucket: usize) -> Result<PjRtBuffer> {
-        let name = model::gather_name(&self.size, self.bucket, p_bucket);
+    pub fn gather(&mut self, plan: &GatherPlan, p_bucket: usize) -> Result<StateBuf> {
         let nsel = plan.block_idx[0].len();
         let mut idx = Vec::with_capacity(self.info.n_layer * nsel);
         for l in &plan.block_idx {
             idx.extend_from_slice(l);
         }
-        let out = self
-            .rt
-            .invoke(&name, &[Arg::Buf(&self.state), Arg::I32(&idx)])?;
+        let op = GatherOp {
+            size: &self.size,
+            bucket: self.bucket,
+            p_bucket,
+            block_idx: &idx,
+        };
+        let out = self.be.refresh_gather(&op, &self.state)?;
         self.offload.touch_full(self.cache.committed, self.kv_bpt());
         Ok(out)
     }
 
     /// Logits+feats window of `qrows` rows starting at `start`.
     pub fn read_window(&self, start: usize) -> Result<ReadOut> {
-        let name = model::read_full_name(&self.size, self.bucket);
-        let data = self.rt.invoke_download(
-            &name,
-            &[Arg::Buf(&self.state), Arg::Scalar(start as i32)],
+        let data = self.be.read_logits(
+            &ReadOp::FullWindow { size: &self.size, bucket: self.bucket, start },
+            &self.state,
         )?;
         ReadOut::new(
             data,
@@ -287,10 +283,9 @@ impl<'a> TargetSession<'a> {
 
     /// Single row logits+feats at `idx` (prefill tail).
     pub fn read_last(&self, idx: usize) -> Result<(Vec<f32>, Vec<f32>)> {
-        let name = model::read_last_name(&self.size, self.bucket);
-        let data = self.rt.invoke_download(
-            &name,
-            &[Arg::Buf(&self.state), Arg::Scalar(idx as i32)],
+        let data = self.be.read_logits(
+            &ReadOp::LastRow { size: &self.size, bucket: self.bucket, idx },
+            &self.state,
         )?;
         let v = self.info.vocab;
         Ok((data[..v].to_vec(), data[v..].to_vec()))
@@ -299,10 +294,10 @@ impl<'a> TargetSession<'a> {
 
 /// SpecPV partial-cache session.
 pub struct PartialSession<'a> {
-    rt: &'a Runtime,
+    be: &'a dyn Backend,
     pub size: String,
     pub bucket: usize,
-    pub state: Option<PjRtBuffer>,
+    pub state: Option<StateBuf>,
     pub cache: PartialCache,
     pub info: ModelInfo,
     pub consts: Consts,
@@ -310,26 +305,26 @@ pub struct PartialSession<'a> {
 
 impl<'a> PartialSession<'a> {
     pub fn new(
-        rt: &'a Runtime,
+        be: &'a dyn Backend,
         size: &str,
         cfg: &SpecPvConfig,
     ) -> Result<PartialSession<'a>> {
-        let consts = rt.manifest.consts.clone();
+        let consts = be.consts().clone();
         let need = cfg.core_tokens(consts.block) + consts.tree_t + cfg.buffer_cap;
-        let bucket = model::pick_partial_bucket(&rt.manifest, size, need)?;
+        let bucket = pick_bucket(&be.partial_buckets(size), need, "partial", size)?;
         Ok(PartialSession {
-            rt,
+            be,
             size: size.to_string(),
             bucket,
             state: None,
             cache: PartialCache::new(bucket, cfg.buffer_cap),
-            info: rt.manifest.model(size)?.clone(),
+            info: be.model(size)?,
             consts,
         })
     }
 
     /// Install a freshly gathered core.
-    pub fn install(&mut self, state: PjRtBuffer, core_len: usize) {
+    pub fn install(&mut self, state: StateBuf, core_len: usize) {
         self.state = Some(state);
         self.cache.refresh(core_len);
     }
@@ -338,34 +333,34 @@ impl<'a> PartialSession<'a> {
         self.state.is_some()
     }
 
-    /// Partial verification of a draft tree (paper §3.2). Same ABI as the
-    /// full verify, small bucket.
+    /// Partial verification of a draft tree (paper §3.2). Same op shape
+    /// as the full verify, small bucket.
     pub fn verify_tree(&mut self, flat: &FlatTree, root_pos: usize) -> Result<ReadOut> {
         let state = match self.state.take() {
             Some(s) => s,
             None => bail!("partial cache not initialised"),
         };
         let t = self.consts.tree_t;
-        let name = model::pverify_name(&self.size, self.bucket, t);
         let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
         let pos = flat.positions(root_pos);
-        let out = self.rt.invoke(
-            &name,
-            &[
-                Arg::I32(&flat.tokens),
-                Arg::I32(&pos),
-                Arg::F32(&flat.mask),
-                Arg::Buf(&state),
-                Arg::Scalar(kv_len as i32),
-                Arg::I32(&idx),
-                Arg::Scalar(n_prev as i32),
-            ],
-        )?;
+        let op = VerifyOp {
+            size: &self.size,
+            bucket: self.bucket,
+            t,
+            tokens: &flat.tokens,
+            pos: &pos,
+            mask: &flat.mask,
+            kv_len,
+            prev_idx: &idx,
+            n_prev,
+        };
+        let out = self.be.verify_partial(&op, state)?;
+        // store the successor before the download so a failed read keeps
+        // the (valid) partial state instead of dropping it
         self.state = Some(out);
-        let name = model::read_partial_name(&self.size, self.bucket);
-        let data = self.rt.invoke_download(
-            &name,
-            &[Arg::Buf(self.state.as_ref().unwrap())],
+        let data = self.be.read_logits(
+            &ReadOp::Partial { size: &self.size, bucket: self.bucket },
+            self.state.as_ref().unwrap(),
         )?;
         ReadOut::new(data, t, self.info.vocab, 3 * self.info.d_model)
     }
@@ -373,30 +368,26 @@ impl<'a> PartialSession<'a> {
 
 /// EAGLE-3 draft session (one decoder layer, own bucket).
 pub struct DraftSession<'a> {
-    rt: &'a Runtime,
+    be: &'a dyn Backend,
     pub size: String,
     pub bucket: usize,
-    pub state: PjRtBuffer,
+    pub state: StateBuf,
     pub cache: DraftCache,
     pub info: ModelInfo,
     pub consts: Consts,
 }
 
 impl<'a> DraftSession<'a> {
-    pub fn new(rt: &'a Runtime, size: &str, bucket: usize) -> Result<DraftSession<'a>> {
-        let consts = rt.manifest.consts.clone();
-        let spec = rt
-            .manifest
-            .exec(&model::draft_step_name(size, bucket))?;
-        let layout = spec.layout.context("draft exec missing layout")?;
-        let state = rt.zero_state(layout.total)?;
+    pub fn new(be: &'a dyn Backend, size: &str, bucket: usize) -> Result<DraftSession<'a>> {
+        let consts = be.consts().clone();
+        let state = be.alloc_state(StateKind::Draft, size, bucket)?;
         Ok(DraftSession {
-            rt,
+            be,
             size: size.to_string(),
             bucket,
             state,
             cache: DraftCache::new(bucket, consts.draft_region),
-            info: rt.manifest.model(size)?.clone(),
+            info: be.model(size)?,
             consts,
         })
     }
@@ -407,34 +398,30 @@ impl<'a> DraftSession<'a> {
         toks: &[i32],
         real: usize,
         pos: &[i32],
-        target_state: &PjRtBuffer,
+        target_state: &StateBuf,
     ) -> Result<()> {
         let c = self.consts.chunk;
-        let name = model::draft_prefill_name(&self.size, self.bucket);
         let mask = chain_mask(real, c);
-        let out = self.rt.invoke(
-            &name,
-            &[
-                Arg::I32(toks),
-                Arg::Buf(target_state),
-                Arg::I32(pos),
-                Arg::F32(&mask),
-                Arg::Buf(&self.state),
-                Arg::Scalar(self.cache.committed as i32),
-                Arg::Scalar(self.cache.committed as i32),
-            ],
-        )?;
-        self.state = out;
+        let op = DraftPrefillOp {
+            size: &self.size,
+            bucket: self.bucket,
+            tokens: toks,
+            pos,
+            mask: &mask,
+            kv_len: self.cache.committed,
+            write_pos: self.cache.committed,
+        };
+        let state = take(&mut self.state);
+        self.state = self.be.draft_prefill(&op, target_state, state)?;
         self.cache.push_prefill(real)
     }
 
     /// Hidden state of prefill-chunk row `idx` (the recycled feature for
     /// the first draft after prefill).
     pub fn read_hidden_row(&self, idx: usize) -> Result<Vec<f32>> {
-        let name = format!("read_draft_row_{}_b{}", self.size, self.bucket);
-        self.rt.invoke_download(
-            &name,
-            &[Arg::Buf(&self.state), Arg::Scalar(idx as i32)],
+        self.be.read_logits(
+            &ReadOp::DraftHiddenRow { size: &self.size, bucket: self.bucket, idx },
+            &self.state,
         )
     }
 
@@ -447,28 +434,26 @@ impl<'a> DraftSession<'a> {
         write_pos: usize,
     ) -> Result<DraftOut> {
         let w = self.consts.draft_w;
-        let name = model::draft_step_name(&self.size, self.bucket);
         let mut toks = vec![PAD as i32; w];
         for (i, &t) in tokens.iter().enumerate() {
             toks[i] = t as i32;
         }
-        let out = self.rt.invoke(
-            &name,
-            &[
-                Arg::I32(&toks),
-                Arg::F32(feats),
-                Arg::I32(pos),
-                Arg::F32(mask),
-                Arg::Buf(&self.state),
-                Arg::Scalar(self.cache.committed as i32),
-                Arg::Scalar(write_pos as i32),
-            ],
+        let op = DraftExpandOp {
+            size: &self.size,
+            bucket: self.bucket,
+            tokens: &toks,
+            feats,
+            pos,
+            mask,
+            kv_len: self.cache.committed,
+            write_pos,
+        };
+        let state = take(&mut self.state);
+        self.state = self.be.draft_expand(&op, state)?;
+        let data = self.be.read_logits(
+            &ReadOp::Draft { size: &self.size, bucket: self.bucket },
+            &self.state,
         )?;
-        self.state = out;
-        let name = model::read_draft_name(&self.size, self.bucket);
-        let data = self
-            .rt
-            .invoke_download(&name, &[Arg::Buf(&self.state)])?;
         DraftOut::new(data, w, self.info.vocab, self.info.d_model)
     }
 
@@ -539,8 +524,8 @@ impl<'a> DraftSession<'a> {
 
 /// TriForce independent tiny draft LM with a streaming (sink+ring) cache.
 pub struct TinySession<'a> {
-    rt: &'a Runtime,
-    pub state: PjRtBuffer,
+    be: &'a dyn Backend,
+    pub state: StateBuf,
     pub bucket: usize,
     /// valid rows (grows to bucket, then stays)
     pub valid: usize,
@@ -551,14 +536,12 @@ pub struct TinySession<'a> {
 }
 
 impl<'a> TinySession<'a> {
-    pub fn new(rt: &'a Runtime) -> Result<TinySession<'a>> {
-        let consts = rt.manifest.consts.clone();
+    pub fn new(be: &'a dyn Backend) -> Result<TinySession<'a>> {
+        let consts = be.consts().clone();
         let bucket = consts.tiny_bucket;
-        let spec = rt.manifest.exec(&format!("verify_tiny_b{bucket}_t1"))?;
-        let layout = spec.layout.context("tiny exec missing layout")?;
-        let state = rt.zero_state(layout.total)?;
-        let vocab = rt.manifest.model("tiny")?.vocab;
-        Ok(TinySession { rt, state, bucket, valid: 0, write: 0, vocab, consts })
+        let state = be.alloc_state(StateKind::Tiny, "tiny", bucket)?;
+        let vocab = be.model("tiny")?.vocab;
+        Ok(TinySession { be, state, bucket, valid: 0, write: 0, vocab, consts })
     }
 
     /// Prefill the streaming cache with (up to) the last `bucket - γ`
@@ -570,7 +553,6 @@ impl<'a> TinySession<'a> {
         let keep = (self.bucket - gamma - 1).min(prompt.len());
         let tail = &prompt[prompt.len() - keep..];
         let base_pos = prompt.len() - keep;
-        let name = format!("verify_tiny_b{}_t{}", self.bucket, c);
         let mut logits = Vec::new();
         for (ci, chunk) in tail.chunks(c).enumerate() {
             let r = chunk.len();
@@ -581,19 +563,17 @@ impl<'a> TinySession<'a> {
             let pos: Vec<i32> =
                 (0..c).map(|i| (base_pos + ci * c + i) as i32).collect();
             let mask = chain_mask(r, c);
-            let out = self.rt.invoke(
-                &name,
-                &[
-                    Arg::I32(&toks),
-                    Arg::I32(&pos),
-                    Arg::F32(&mask),
-                    Arg::Buf(&self.state),
-                    Arg::Scalar(self.valid as i32),
-                    Arg::Scalar(self.valid as i32),
-                    Arg::Scalar((r - 1) as i32),
-                ],
-            )?;
-            self.state = out;
+            let op = TinyForwardOp {
+                t: c,
+                tokens: &toks,
+                pos: &pos,
+                mask: &mask,
+                kv_len: self.valid,
+                write_pos: self.valid,
+                last_idx: r - 1,
+            };
+            let state = take(&mut self.state);
+            self.state = self.be.tiny_forward(&op, state)?;
             self.valid += r;
             self.write = self.valid;
             logits = self.read()?;
@@ -605,21 +585,18 @@ impl<'a> TinySession<'a> {
     /// The cache is a streaming ring: once full, new rows overwrite the
     /// oldest slots (TriForce's StreamingLLM-style draft cache).
     pub fn step(&mut self, token: u32, pos: usize) -> Result<Vec<f32>> {
-        let name = format!("verify_tiny_b{}_t1", self.bucket);
         let kv_len = self.valid.min(self.bucket);
-        let out = self.rt.invoke(
-            &name,
-            &[
-                Arg::I32(&[token as i32]),
-                Arg::I32(&[pos as i32]),
-                Arg::F32(&[1.0]),
-                Arg::Buf(&self.state),
-                Arg::Scalar(kv_len as i32),
-                Arg::Scalar(self.write as i32),
-                Arg::Scalar(0),
-            ],
-        )?;
-        self.state = out;
+        let op = TinyForwardOp {
+            t: 1,
+            tokens: &[token as i32],
+            pos: &[pos as i32],
+            mask: &[1.0],
+            kv_len,
+            write_pos: self.write,
+            last_idx: 0,
+        };
+        let state = take(&mut self.state);
+        self.state = self.be.tiny_forward(&op, state)?;
         if self.valid < self.bucket {
             self.valid += 1;
         }
@@ -638,8 +615,6 @@ impl<'a> TinySession<'a> {
     }
 
     fn read(&self) -> Result<Vec<f32>> {
-        let name = format!("read_tiny_b{}", self.bucket);
-        self.rt
-            .invoke_download(&name, &[Arg::Buf(&self.state)])
+        self.be.read_logits(&ReadOp::Tiny, &self.state)
     }
 }

@@ -5,12 +5,12 @@
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::Config;
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::{bucket_need, ReadOut};
 use crate::offload::OffloadSim;
-use crate::runtime::Runtime;
 use crate::sampling::pick_token;
 use crate::tree::Tree;
 use crate::util::rng::Rng;
@@ -85,22 +85,22 @@ impl Engine for SpecFullEngine {
         crate::config::EngineKind::SpecFull
     }
 
-    fn start<'rt>(
+    fn start<'be>(
         &self,
-        rt: &'rt Runtime,
+        be: &'be dyn Backend,
         req: &GenRequest,
-    ) -> Result<Box<dyn EngineSession + 'rt>> {
+    ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
-        let consts = rt.manifest.consts.clone();
+        let consts = be.consts().clone();
         let need = bucket_need(req.prompt.len(), req.max_new, &consts);
         let mut target = TargetSession::new(
-            rt,
+            be,
             &self.cfg.model_size,
             need,
             OffloadSim::new(self.cfg.offload.clone()),
         )?;
-        let mut draft = DraftSession::new(rt, &self.cfg.model_size, target.bucket)?;
+        let mut draft = DraftSession::new(be, &self.cfg.model_size, target.bucket)?;
 
         let mut sw = Stopwatch::new();
         let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft))?;

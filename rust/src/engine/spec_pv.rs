@@ -19,13 +19,13 @@
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::Config;
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
 use crate::offload::OffloadSim;
 use crate::retrieval::plan_gather;
-use crate::runtime::Runtime;
 use crate::sampling::pick_token;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
@@ -86,37 +86,32 @@ impl Engine for SpecPvEngine {
         crate::config::EngineKind::SpecPv
     }
 
-    fn start<'rt>(
+    fn start<'be>(
         &self,
-        rt: &'rt Runtime,
+        be: &'be dyn Backend,
         req: &GenRequest,
-    ) -> Result<Box<dyn EngineSession + 'rt>> {
+    ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
-        let consts = rt.manifest.consts.clone();
+        let consts = be.consts().clone();
         let need = bucket_need(req.prompt.len(), req.max_new, &consts);
         let mut target = TargetSession::new(
-            rt,
+            be,
             &self.cfg.model_size,
             need,
             OffloadSim::new(self.cfg.offload.clone()),
         )?;
-        let mut draft = DraftSession::new(rt, &self.cfg.model_size, target.bucket)?;
-        let partial = PartialSession::new(rt, &self.cfg.model_size, &self.cfg.specpv)?;
+        let mut draft = DraftSession::new(be, &self.cfg.model_size, target.bucket)?;
+        let partial = PartialSession::new(be, &self.cfg.model_size, &self.cfg.specpv)?;
         let nsel = partial.bucket / consts.block;
         let nb = target.bucket / consts.block;
 
-        // available refresh widths for this bucket
-        let t_refresh = consts.refresh_t;
-        let big_refresh = rt
-            .manifest
-            .executables
-            .contains_key(&crate::model::verify_name(
-                &self.cfg.model_size,
-                target.bucket,
-                consts.big_refresh_t,
-            ))
-            .then_some(consts.big_refresh_t);
+        // refresh widths the backend can execute against this bucket: the
+        // narrow width is the default, a wider one (when available)
+        // absorbs long pv chains (fig6 large-buffer ablation)
+        let widths = be.refresh_widths(&self.cfg.model_size, target.bucket);
+        let t_refresh = widths.first().copied().unwrap_or(consts.refresh_t);
+        let big_refresh = widths.get(1).copied();
 
         let mut sw = Stopwatch::new();
         let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft))?;
@@ -257,7 +252,7 @@ impl EngineSession for SpecPvSession<'_> {
                 self.stats.partial_steps += 1;
                 let mut rows = vec![0usize];
                 rows.extend(&acc.path_idx);
-                self.partial.cache.set_pending(rows)?;
+                self.partial.cache.set_pending(rows, self.consts.prev_window())?;
                 self.partial.cache.pv_tokens.push(self.bonus);
                 self.partial.cache.pv_tokens.extend(&acc.path_tokens);
                 self.pv.push(self.bonus);

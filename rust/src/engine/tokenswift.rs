@@ -7,18 +7,18 @@
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::Config;
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
-use crate::model::{bucket_need, medusa_name};
+use crate::model::bucket_need;
 use crate::offload::OffloadSim;
-use crate::runtime::{Arg, Runtime};
 use crate::sampling::{pick_token, top_k};
 use crate::tree::Tree;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
-use super::session::{DraftSession, TargetSession};
+use super::session::TargetSession;
 use super::spec_full::{accept_round, tree_picks};
 use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
 
@@ -62,7 +62,7 @@ fn medusa_tree(bonus: u32, heads: &[f32], vocab: usize) -> Tree {
 }
 
 pub struct TokenSwiftSession<'rt> {
-    rt: &'rt Runtime,
+    be: &'rt dyn Backend,
     target: TargetSession<'rt>,
     out: SessionOut,
     bonus: u32,
@@ -73,7 +73,6 @@ pub struct TokenSwiftSession<'rt> {
     consts: Consts,
     vocab: usize,
     d_model: usize,
-    mname: String,
     prompt_len: usize,
     temperature: f32,
 }
@@ -83,27 +82,24 @@ impl Engine for TokenSwiftEngine {
         crate::config::EngineKind::TokenSwift
     }
 
-    fn start<'rt>(
+    fn start<'be>(
         &self,
-        rt: &'rt Runtime,
+        be: &'be dyn Backend,
         req: &GenRequest,
-    ) -> Result<Box<dyn EngineSession + 'rt>> {
+    ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
-        let consts = rt.manifest.consts.clone();
+        let consts = be.consts().clone();
         let need = bucket_need(req.prompt.len(), req.max_new, &consts);
         let mut target = TargetSession::new(
-            rt,
+            be,
             &self.cfg.model_size,
             need,
             OffloadSim::new(self.cfg.offload.clone()),
         )?;
-        // Medusa heads read the top-layer feature only; no draft KV needed,
-        // but we reuse DraftSession's model info for dims.
-        let _ = DraftSession::new(rt, &self.cfg.model_size, target.bucket); // warm check
+        // Medusa heads read the top-layer feature only; no draft KV needed.
         let vocab = target.info.vocab;
         let h = target.info.d_model;
-        let mname = medusa_name(&self.cfg.model_size);
 
         let mut sw = Stopwatch::new();
         let (logits, feat_last) = target.prefill(&req.prompt, None)?;
@@ -115,7 +111,7 @@ impl Engine for TokenSwiftEngine {
         let feat = feat_last[2 * h..3 * h].to_vec();
 
         Ok(Box::new(TokenSwiftSession {
-            rt,
+            be,
             target,
             out,
             bonus,
@@ -125,7 +121,6 @@ impl Engine for TokenSwiftEngine {
             consts,
             vocab,
             d_model: h,
-            mname,
             prompt_len: req.prompt.len(),
             temperature: req.temperature,
         }))
@@ -153,7 +148,7 @@ impl EngineSession for TokenSwiftSession<'_> {
         let h = self.d_model;
 
         // --- Medusa draft ----------------------------------------------
-        let heads = self.rt.invoke_download(&self.mname, &[Arg::F32(&self.feat)])?;
+        let heads = self.be.medusa(&self.target.size, &self.feat)?;
         let tree = medusa_tree(self.bonus, &heads, self.vocab);
         self.stats.draft_secs += sw.lap();
 

@@ -11,12 +11,12 @@
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::Config;
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
 use crate::offload::OffloadSim;
-use crate::runtime::Runtime;
 use crate::sampling::pick_token;
 use crate::tree::{chain_mask, FlatTree};
 use crate::util::rng::Rng;
@@ -69,23 +69,23 @@ impl Engine for TriForceEngine {
         crate::config::EngineKind::TriForce
     }
 
-    fn start<'rt>(
+    fn start<'be>(
         &self,
-        rt: &'rt Runtime,
+        be: &'be dyn Backend,
         req: &GenRequest,
-    ) -> Result<Box<dyn EngineSession + 'rt>> {
+    ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
-        let consts = rt.manifest.consts.clone();
+        let consts = be.consts().clone();
         let gamma = self.cfg.chain_gamma;
         let need = bucket_need(req.prompt.len(), req.max_new, &consts);
         let mut target = TargetSession::new(
-            rt,
+            be,
             &self.cfg.model_size,
             need,
             OffloadSim::new(self.cfg.offload.clone()),
         )?;
-        let mut tiny = TinySession::new(rt)?;
+        let mut tiny = TinySession::new(be)?;
 
         let mut sw = Stopwatch::new();
         let (logits, _) = target.prefill(&req.prompt, None)?;

@@ -6,6 +6,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::bench::{fmt_speedup, Table};
 use crate::config::{Config, EngineKind, Reduction};
 use crate::coordinator::aggregate;
@@ -13,7 +14,6 @@ use crate::corpus;
 use crate::engine::{self, GenRequest};
 use crate::json::Json;
 use crate::metrics::{bleurt_proxy, exact_match, rouge_l};
-use crate::runtime::Runtime;
 use crate::tokenizer;
 
 use super::{engine_cfg, macro_tau, micro_throughput, run_continuation, BUDGETS};
@@ -40,7 +40,7 @@ fn n_prompts(_quick: bool) -> usize {
 
 /// AR throughput per context (the α denominator), computed once.
 fn ar_baseline(
-    rt: &Runtime,
+    be: &dyn Backend,
     base: &Config,
     ctxs: &[usize],
     gen: usize,
@@ -51,7 +51,7 @@ fn ar_baseline(
     cfg.offload.enabled = offload;
     let mut m = BTreeMap::new();
     for &ctx in ctxs {
-        let stats = run_continuation(rt, &cfg, ctx, gen, n, 0xA11)?;
+        let stats = run_continuation(be, &cfg, ctx, gen, n, 0xA11)?;
         m.insert(ctx, micro_throughput(&stats, offload));
     }
     Ok(m)
@@ -60,14 +60,14 @@ fn ar_baseline(
 // ---------------------------------------------------------------------------
 // Fig. 1 — drafting vs verification time share as context grows
 // ---------------------------------------------------------------------------
-pub fn fig1(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> {
+pub fn fig1(be: &dyn Backend, base: &Config, out: &Path, quick: bool) -> Result<()> {
     let mut t = Table::new(
         "Fig.1 — EAGLE3-full: draft vs verification time share vs context",
         &["ctx", "draft_ms/step", "verify_ms/step", "draft_%", "verify_%"],
     );
     let cfg = engine_cfg(base, EngineKind::SpecFull, None);
     for ctx in ladder(quick) {
-        let stats = run_continuation(rt, &cfg, ctx, gen_len(quick), n_prompts(quick), 0xF16)?;
+        let stats = run_continuation(be, &cfg, ctx, gen_len(quick), n_prompts(quick), 0xF16)?;
         let agg = aggregate(&stats);
         let steps = agg.verify_steps.max(1) as f64;
         let d = agg.draft_secs / steps * 1e3;
@@ -94,12 +94,12 @@ pub fn fig1(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> 
 // ---------------------------------------------------------------------------
 // Table 1 — α and τ across engines × context (the headline table)
 // ---------------------------------------------------------------------------
-pub fn table1(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> {
-    table1_inner(rt, base, out, quick, false, "table1")
+pub fn table1(be: &dyn Backend, base: &Config, out: &Path, quick: bool) -> Result<()> {
+    table1_inner(be, base, out, quick, false, "table1")
 }
 
 fn table1_inner(
-    rt: &Runtime,
+    be: &dyn Backend,
     base: &Config,
     out: &Path,
     quick: bool,
@@ -109,7 +109,7 @@ fn table1_inner(
     let ctxs = ladder(quick);
     let gen = gen_len(quick);
     let n = n_prompts(quick);
-    let ar = ar_baseline(rt, base, &ctxs, gen, n, offload)?;
+    let ar = ar_baseline(be, base, &ctxs, gen, n, offload)?;
 
     let mut engines: Vec<(String, Config)> = vec![
         (
@@ -154,7 +154,7 @@ fn table1_inner(
         let mut cells = vec![label.clone()];
         let mut j = Json::obj().set("method", label.clone());
         for &ctx in &ctxs {
-            let stats = run_continuation(rt, &cfg, ctx, gen, n, 0x7AB1)?;
+            let stats = run_continuation(be, &cfg, ctx, gen, n, 0x7AB1)?;
             let tp = micro_throughput(&stats, offload);
             let alpha = tp / ar[&ctx].max(1e-9);
             let tau = macro_tau(&stats);
@@ -176,14 +176,14 @@ fn table1_inner(
 // ---------------------------------------------------------------------------
 // Fig. 4 — offloaded-KV throughput (PCIe simulator)
 // ---------------------------------------------------------------------------
-pub fn fig4(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> {
-    table1_inner(rt, base, out, quick, true, "fig4")
+pub fn fig4(be: &dyn Backend, base: &Config, out: &Path, quick: bool) -> Result<()> {
+    table1_inner(be, base, out, quick, true, "fig4")
 }
 
 // ---------------------------------------------------------------------------
 // Table 2 — similarity between SpecPV and full-verification generation
 // ---------------------------------------------------------------------------
-pub fn table2(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> {
+pub fn table2(be: &dyn Backend, base: &Config, out: &Path, quick: bool) -> Result<()> {
     let ctx = if quick { 2048 } else { 3072 };
     let gen = if quick { 64 } else { 160 };
     let n_docs = if quick { 1 } else { 2 };
@@ -207,13 +207,13 @@ pub fn table2(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()
             let req = GenRequest::greedy(tokenizer::encode(&prompt), gen);
             let full = engine::generate_with(
                 &engine_cfg(base, EngineKind::SpecFull, None),
-                rt,
+                be,
                 &req,
             )?;
             refs.push(full.text());
             let arr = engine::generate_with(
                 &engine_cfg(base, EngineKind::Autoregressive, None),
-                rt,
+                be,
                 &req,
             )?;
             ar_out.push(arr.text());
@@ -243,7 +243,7 @@ pub fn table2(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()
             for d in 0..n_docs {
                 let prompt = corpus::summarize_prompt(&gen_doc(0x2b0 + d as u64, ctx));
                 let req = GenRequest::greedy(tokenizer::encode(&prompt), gen);
-                let r = engine::generate_with(&cfg, rt, &req)?;
+                let r = engine::generate_with(&cfg, be, &req)?;
                 rl += rouge_l(&r.text(), &refs[d]);
                 bl += bleurt_proxy(&r.text(), &refs[d]);
             }
@@ -271,17 +271,15 @@ pub fn table2(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()
 // ---------------------------------------------------------------------------
 // Table 3 — model-size sweep (paper: Qwen3 4B/8B/14B → specpv s/m/l)
 // ---------------------------------------------------------------------------
-pub fn table3(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> {
+pub fn table3(be: &dyn Backend, base: &Config, out: &Path, quick: bool) -> Result<()> {
     // m/l ship buckets up to 4096 → max ctx leaves prefill+refresh headroom
     let ctxs: Vec<usize> = if quick { vec![1024] } else { vec![1024, 2048, 3584] };
     let gen = gen_len(quick);
     let n = 1;
-    let sizes: Vec<&str> = rt
-        .manifest
-        .models
-        .keys()
-        .filter(|s| s.as_str() != "tiny")
-        .map(|s| s.as_str())
+    let sizes: Vec<String> = be
+        .sizes()
+        .into_iter()
+        .filter(|s| s != "tiny")
         .collect();
 
     let mut headers = vec!["size".to_string(), "method".to_string()];
@@ -295,7 +293,7 @@ pub fn table3(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()
     for size in sizes {
         let mut base_s = base.clone();
         base_s.model_size = size.to_string();
-        let ar = ar_baseline(rt, &base_s, &ctxs, gen, n, false)?;
+        let ar = ar_baseline(be, &base_s, &ctxs, gen, n, false)?;
         for (label, cfg) in [
             (
                 "EAGLE3-YARN".to_string(),
@@ -311,9 +309,9 @@ pub fn table3(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()
             ),
         ] {
             let mut cells = vec![size.to_string(), label.clone()];
-            let mut j = Json::obj().set("size", size).set("method", label.clone());
+            let mut j = Json::obj().set("size", size.as_str()).set("method", label.clone());
             for &ctx in &ctxs {
-                let stats = run_continuation(rt, &cfg, ctx, gen, n, 0x3AB)?;
+                let stats = run_continuation(be, &cfg, ctx, gen, n, 0x3AB)?;
                 let alpha = micro_throughput(&stats, false) / ar[&ctx].max(1e-9);
                 let tau = macro_tau(&stats);
                 cells.push(fmt_speedup(alpha));
@@ -332,7 +330,7 @@ pub fn table3(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()
 // ---------------------------------------------------------------------------
 // Fig. 5 — needle-QA accuracy under shrinking partial budgets
 // ---------------------------------------------------------------------------
-pub fn fig5(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> {
+pub fn fig5(be: &dyn Backend, base: &Config, out: &Path, quick: bool) -> Result<()> {
     let ctxs: Vec<usize> = if quick { vec![1536] } else { vec![1536, 3072] };
     let n_inst = if quick { 3 } else { 6 };
     let budgets: Vec<Option<usize>> =
@@ -353,7 +351,7 @@ pub fn fig5(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> 
                 let qa = corpus::needle_qa(0x9A + i as u64 * 7 + ctx as u64, ctx, 8);
                 let prompt = format!("{}{}", qa.context, qa.question);
                 let req = GenRequest::greedy(tokenizer::encode(&prompt), 12);
-                let r = engine::generate_with(&cfg, rt, &req)?;
+                let r = engine::generate_with(&cfg, be, &req)?;
                 // the answer is the first code-word-shaped token run
                 let out_text = r.text();
                 let got = out_text
@@ -386,7 +384,7 @@ pub fn fig5(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> 
 // ---------------------------------------------------------------------------
 // Table 4 — reduction-strategy ablation (mean/max/last)
 // ---------------------------------------------------------------------------
-pub fn table4(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> {
+pub fn table4(be: &dyn Backend, base: &Config, out: &Path, quick: bool) -> Result<()> {
     let ctx = if quick { 2048 } else { 3072 };
     let gen = if quick { 64 } else { 160 };
     let n_docs = if quick { 1 } else { 2 };
@@ -397,7 +395,7 @@ pub fn table4(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()
         let prompt = corpus::summarize_prompt(&corpus::report_text(0x4AB + d as u64, ctx));
         let req = GenRequest::greedy(tokenizer::encode(&prompt), gen);
         refs.push(
-            engine::generate_with(&engine_cfg(base, EngineKind::SpecFull, None), rt, &req)?
+            engine::generate_with(&engine_cfg(base, EngineKind::SpecFull, None), be, &req)?
                 .text(),
         );
     }
@@ -415,7 +413,7 @@ pub fn table4(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()
             let prompt =
                 corpus::summarize_prompt(&corpus::report_text(0x4AB + d as u64, ctx));
             let req = GenRequest::greedy(tokenizer::encode(&prompt), gen);
-            let r = engine::generate_with(&cfg, rt, &req)?;
+            let r = engine::generate_with(&cfg, be, &req)?;
             rl += rouge_l(&r.text(), &refs[d]);
             taus.push(r.stats);
         }
@@ -436,7 +434,7 @@ pub fn table4(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()
 // ---------------------------------------------------------------------------
 // Fig. 6 — refresh-interval (buffer size) vs similarity and speedup
 // ---------------------------------------------------------------------------
-pub fn fig6(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> {
+pub fn fig6(be: &dyn Backend, base: &Config, out: &Path, quick: bool) -> Result<()> {
     let ctx = if quick { 2048 } else { 3072 };
     let gen = if quick { 64 } else { 160 };
     let caps: Vec<usize> = if quick {
@@ -447,10 +445,10 @@ pub fn fig6(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> 
 
     let prompt = corpus::summarize_prompt(&corpus::meeting_text(0x6F6, ctx));
     let req = GenRequest::greedy(tokenizer::encode(&prompt), gen);
-    let full = engine::generate_with(&engine_cfg(base, EngineKind::SpecFull, None), rt, &req)?;
+    let full = engine::generate_with(&engine_cfg(base, EngineKind::SpecFull, None), be, &req)?;
     let ar = engine::generate_with(
         &engine_cfg(base, EngineKind::Autoregressive, None),
-        rt,
+        be,
         &req,
     )?;
     let ar_tp = ar.stats.throughput();
@@ -462,7 +460,7 @@ pub fn fig6(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> 
     for cap in caps {
         let mut cfg = engine_cfg(base, EngineKind::SpecPv, Some(256));
         cfg.specpv.buffer_cap = cap;
-        let r = engine::generate_with(&cfg, rt, &req)?;
+        let r = engine::generate_with(&cfg, be, &req)?;
         let rl = rouge_l(&r.text(), &full.text());
         let sp = r.stats.throughput() / ar_tp.max(1e-9);
         println!(
@@ -489,14 +487,14 @@ pub fn fig6(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> 
 // ---------------------------------------------------------------------------
 // Fig. 7 — case study: side-by-side summaries
 // ---------------------------------------------------------------------------
-pub fn fig7(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> {
+pub fn fig7(be: &dyn Backend, base: &Config, out: &Path, quick: bool) -> Result<()> {
     let ctx = if quick { 2048 } else { 4096 };
     let gen = if quick { 96 } else { 224 };
     let prompt = corpus::summarize_prompt(&corpus::novel_text(0x777, ctx));
     let req = GenRequest::greedy(tokenizer::encode(&prompt), gen);
 
-    let full = engine::generate_with(&engine_cfg(base, EngineKind::SpecFull, None), rt, &req)?;
-    let pv = engine::generate_with(&engine_cfg(base, EngineKind::SpecPv, Some(256)), rt, &req)?;
+    let full = engine::generate_with(&engine_cfg(base, EngineKind::SpecFull, None), be, &req)?;
+    let pv = engine::generate_with(&engine_cfg(base, EngineKind::SpecPv, Some(256)), be, &req)?;
 
     let mut t = Table::new(
         "Fig.7 — case study: full verification vs SpecPV-256 continuation",
@@ -524,8 +522,14 @@ pub fn fig7(rt: &Runtime, base: &Config, out: &Path, quick: bool) -> Result<()> 
 // ---------------------------------------------------------------------------
 // Fig. 8 — draft-training loss curves (from the build-time train log)
 // ---------------------------------------------------------------------------
-pub fn fig8(rt: &Runtime, _base: &Config, out: &Path) -> Result<()> {
-    let path = rt.manifest.dir.join("train_log.json");
+pub fn fig8(_be: &dyn Backend, base: &Config, out: &Path) -> Result<()> {
+    let path = base.artifacts_dir.join("train_log.json");
+    if !path.exists() {
+        // the train log only exists after `make artifacts`; the reference
+        // backend has no training phase, so `bench all` skips this figure
+        println!("  [fig8] {path:?} not found (needs `make artifacts`) — skipped");
+        return Ok(());
+    }
     let text = std::fs::read_to_string(&path)?;
     let log = Json::parse(&text)?;
     let mut t = Table::new(

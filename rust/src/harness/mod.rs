@@ -9,11 +9,11 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::{Config, EngineKind};
 use crate::coordinator::aggregate;
 use crate::engine::{self, GenRequest};
 use crate::metrics::GenStats;
-use crate::runtime::Runtime;
 use crate::tokenizer;
 
 /// Default scaled context ladder (paper: 10K…60K; ours: 1K…6K).
@@ -25,7 +25,7 @@ pub const BUDGETS: [usize; 3] = [1024, 512, 256];
 /// Run one engine over `n_prompts` continuation prompts of `ctx` bytes,
 /// generating `gen` tokens each; returns per-prompt stats.
 pub fn run_continuation(
-    rt: &Runtime,
+    be: &dyn Backend,
     cfg: &Config,
     ctx: usize,
     gen: usize,
@@ -38,13 +38,13 @@ pub fn run_continuation(
     {
         let text = crate::corpus::continuation_prompt(seed0 ^ 0xFFFF, ctx);
         let req = GenRequest::greedy(tokenizer::encode(&text), 4);
-        let _ = engine::generate_with(cfg, rt, &req)?;
+        let _ = engine::generate_with(cfg, be, &req)?;
     }
     let mut out = Vec::new();
     for i in 0..n_prompts {
         let text = crate::corpus::continuation_prompt(seed0 + i as u64, ctx);
         let req = GenRequest::greedy(tokenizer::encode(&text), gen);
-        let r = engine::generate_with(cfg, rt, &req)?;
+        let r = engine::generate_with(cfg, be, &req)?;
         out.push(r.stats);
     }
     Ok(out)
@@ -80,25 +80,31 @@ pub fn engine_cfg(base: &Config, kind: EngineKind, budget: Option<usize>) -> Con
 }
 
 /// Dispatch an experiment by id ("fig1", "table1", … or "all").
-pub fn run_experiment(rt: &Runtime, base: &Config, id: &str, out: &Path, quick: bool) -> Result<()> {
+pub fn run_experiment(
+    be: &dyn Backend,
+    base: &Config,
+    id: &str,
+    out: &Path,
+    quick: bool,
+) -> Result<()> {
     match id {
-        "fig1" => experiments::fig1(rt, base, out, quick),
-        "table1" => experiments::table1(rt, base, out, quick),
-        "fig4" => experiments::fig4(rt, base, out, quick),
-        "table2" => experiments::table2(rt, base, out, quick),
-        "table3" => experiments::table3(rt, base, out, quick),
-        "fig5" => experiments::fig5(rt, base, out, quick),
-        "table4" => experiments::table4(rt, base, out, quick),
-        "fig6" => experiments::fig6(rt, base, out, quick),
-        "fig7" => experiments::fig7(rt, base, out, quick),
-        "fig8" => experiments::fig8(rt, base, out),
+        "fig1" => experiments::fig1(be, base, out, quick),
+        "table1" => experiments::table1(be, base, out, quick),
+        "fig4" => experiments::fig4(be, base, out, quick),
+        "table2" => experiments::table2(be, base, out, quick),
+        "table3" => experiments::table3(be, base, out, quick),
+        "fig5" => experiments::fig5(be, base, out, quick),
+        "table4" => experiments::table4(be, base, out, quick),
+        "fig6" => experiments::fig6(be, base, out, quick),
+        "fig7" => experiments::fig7(be, base, out, quick),
+        "fig8" => experiments::fig8(be, base, out),
         "all" => {
             for id in [
                 "table1", "fig1", "fig4", "fig8", "table4", "fig6",
                 "table2", "fig7", "table3", "fig5",
             ] {
                 println!("=== {id} ===");
-                run_experiment(rt, base, id, out, quick)?;
+                run_experiment(be, base, id, out, quick)?;
             }
             Ok(())
         }

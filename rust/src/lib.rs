@@ -8,13 +8,17 @@
 //! the paged KV-cache bookkeeping, draft-tree construction, the
 //! Full/Partial/Refresh verification mode machine (paper Alg. 1),
 //! speculative sampling, the offload simulator, the TCP server and all
-//! evaluation baselines. The model compute (L2 JAX graphs wrapping the L1
-//! Pallas kernels) is AOT-compiled to HLO text by `python/compile/aot.py`
-//! and executed through the PJRT CPU client (`runtime` module); Python is
-//! never on the request path.
+//! evaluation baselines. Engines run on the typed kernel-op API of the
+//! [`backend::Backend`] trait: the `backend::pjrt` implementation plays
+//! the AOT artifacts (L2 JAX graphs wrapping the L1 Pallas kernels,
+//! compiled to HLO text by `python/compile/aot.py`) through the PJRT CPU
+//! client, and `backend::reference` executes the same char-LM forward
+//! semantics in pure Rust so the whole stack runs artifact-free. Python
+//! is never on the request path.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index.
 
+pub mod backend;
 pub mod bench;
 pub mod cache;
 pub mod cli;

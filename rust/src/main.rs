@@ -6,21 +6,25 @@
 //! specpv serve    [--addr 127.0.0.1:7799] [--max-active 4]
 //! specpv bench    <fig1|table1|fig4|table2|table3|fig5|table4|fig6|fig7|fig8|all>
 //!                 [--out results] [--quick]
-//! specpv inspect  # artifact / manifest summary
+//! specpv inspect  # backend / artifact catalog summary
 //! ```
 //! Common flags: `--artifacts DIR --size s|m|l --engine E --budget N
-//! --set key=value`.
+//! --backend auto|pjrt|reference --set key=value`.
+//!
+//! The backend defaults to `auto`: the PJRT artifact player when
+//! `artifacts/manifest.json` exists, the pure-Rust reference backend
+//! otherwise — so every command works on a fresh checkout.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use specpv::backend::{self, Backend};
 use specpv::cli::Cli;
 use specpv::config::Config;
 use specpv::engine::{self, GenRequest};
 use specpv::harness;
-use specpv::runtime::Runtime;
 use specpv::{corpus, server, tokenizer};
 
 fn usage() -> ! {
@@ -44,6 +48,9 @@ fn build_config(cli: &Cli) -> Result<Config> {
     }
     if let Some(e) = cli.opt("engine") {
         cfg.engine = e.parse()?;
+    }
+    if let Some(b) = cli.opt("backend") {
+        cfg.backend = b.parse()?;
     }
     if let Some(b) = cli.opt_parse::<usize>("budget")? {
         cfg.specpv.retrieval_budget = b;
@@ -82,7 +89,7 @@ fn main() -> Result<()> {
     let cfg = build_config(&cli)?;
     match cli.command() {
         Some("generate") => {
-            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let be = backend::from_config(&cfg)?;
             let prompt = match (cli.opt("prompt"), cli.opt("prompt-file")) {
                 (Some(p), _) => p.to_string(),
                 (None, Some(f)) => std::fs::read_to_string(f)?,
@@ -94,7 +101,7 @@ fn main() -> Result<()> {
                 temperature: cfg.temperature,
                 seed: cli.opt_parse::<u64>("seed")?.unwrap_or(0),
             };
-            let r = engine::generate_with(&cfg, &rt, &req)?;
+            let r = engine::generate_with(&cfg, be.as_ref(), &req)?;
             println!("{}", r.text());
             eprintln!(
                 "[{} tokens, {:.1} tok/s, τ={:.2}, modes F/P/R = {}/{}/{}]",
@@ -107,7 +114,7 @@ fn main() -> Result<()> {
             );
         }
         Some("continue") => {
-            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let be = backend::from_config(&cfg)?;
             let ctx = cli.opt_parse::<usize>("ctx")?.unwrap_or(2048);
             let seed = cli.opt_parse::<u64>("seed")?.unwrap_or(1);
             let prompt = corpus::continuation_prompt(seed, ctx);
@@ -117,7 +124,7 @@ fn main() -> Result<()> {
                 temperature: cfg.temperature,
                 seed,
             };
-            let r = engine::generate_with(&cfg, &rt, &req)?;
+            let r = engine::generate_with(&cfg, be.as_ref(), &req)?;
             println!("...{}", &prompt[prompt.len().saturating_sub(200)..]);
             println!("--- continuation ({} engine) ---", cfg.engine);
             println!("{}", r.text());
@@ -131,18 +138,18 @@ fn main() -> Result<()> {
             );
         }
         Some("serve") => {
-            let rt = Runtime::new(&cfg.artifacts_dir)?;
-            server::serve(&rt, cfg)?;
+            let be = backend::from_config(&cfg)?;
+            server::serve(be.as_ref(), cfg)?;
         }
         Some("bench") => {
-            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let be = backend::from_config(&cfg)?;
             let id = cli.sub().unwrap_or("all").to_string();
             let out = PathBuf::from(cli.opt_or("out", "results"));
-            harness::run_experiment(&rt, &cfg, &id, &out, cli.has_flag("quick"))?;
-            let c = rt.counters.borrow();
+            harness::run_experiment(be.as_ref(), &cfg, &id, &out, cli.has_flag("quick"))?;
+            let c = be.counters();
             eprintln!(
-                "[runtime: {} executions ({:.1}s), {} compiles ({:.1}s)]",
-                c.executions, c.exec_secs, c.compilations, c.compile_secs
+                "[{} backend: {} executions ({:.1}s), {} compiles ({:.1}s)]",
+                be.name(), c.executions, c.exec_secs, c.compilations, c.compile_secs
             );
             let mut per: Vec<_> = c.per_exec.iter().collect();
             per.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());
@@ -154,24 +161,20 @@ fn main() -> Result<()> {
             }
         }
         Some("inspect") => {
-            let rt = Runtime::new(&cfg.artifacts_dir)?;
-            let m = &rt.manifest;
-            println!("artifacts: {:?}", m.dir);
+            let be = backend::from_config(&cfg)?;
+            println!("{}", be.describe());
             println!("models:");
-            for (name, info) in &m.models {
+            for size in be.sizes() {
+                let info = be.model(&size)?;
                 println!(
-                    "  {name}: L={} d={} H={} vocab={} ({})",
-                    info.n_layer, info.d_model, info.n_head, info.vocab,
-                    info.weights_file
+                    "  {size}: L={} d={} H={} vocab={} ({}) full buckets {:?}",
+                    info.n_layer,
+                    info.d_model,
+                    info.n_head,
+                    info.vocab,
+                    info.weights_file,
+                    be.full_buckets(&size),
                 );
-            }
-            println!("executables: {}", m.executables.len());
-            let mut by_family: BTreeMap<&str, usize> = BTreeMap::new();
-            for e in m.executables.values() {
-                *by_family.entry(e.family.as_str()).or_default() += 1;
-            }
-            for (f, n) in by_family {
-                println!("  {f}: {n}");
             }
         }
         _ => usage(),

@@ -1,10 +1,10 @@
-//! Model-facing helpers: executable naming, bucket selection, and the
-//! decoding of extractor outputs — the thin glue between the manifest's
-//! flat-state ABI and the engines.
+//! Model-facing helpers: executable naming (consumed only by
+//! `backend::pjrt`, which maps typed kernel ops to manifest entries) and
+//! the decoding of extractor outputs shared by the engines.
 
 use anyhow::{bail, Result};
 
-use crate::manifest::{Consts, Manifest, ModelInfo};
+use crate::manifest::{Consts, ModelInfo};
 
 /// Executable names for one model size (manifest naming scheme).
 pub fn verify_name(size: &str, bucket: usize, t: usize) -> String {
@@ -53,43 +53,6 @@ pub fn read_draft_name(size: &str, bucket: usize) -> String {
 
 pub fn medusa_name(size: &str) -> String {
     format!("medusa_{size}")
-}
-
-/// Smallest compiled full bucket for `size` that holds `need` tokens
-/// (including tree/compaction headroom).
-pub fn pick_full_bucket(m: &Manifest, size: &str, need: usize) -> Result<usize> {
-    let mut buckets: Vec<usize> = m
-        .executables
-        .values()
-        .filter(|e| e.family == "verify" && e.size == size)
-        .map(|e| e.bucket)
-        .collect();
-    buckets.sort_unstable();
-    buckets.dedup();
-    match buckets.iter().find(|&&b| b >= need) {
-        Some(&b) => Ok(b),
-        None => bail!(
-            "no full bucket ≥ {need} for size {size} (have {buckets:?})"
-        ),
-    }
-}
-
-/// Smallest compiled partial bucket for `size` holding `core + headroom`.
-pub fn pick_partial_bucket(m: &Manifest, size: &str, need: usize) -> Result<usize> {
-    let mut buckets: Vec<usize> = m
-        .executables
-        .values()
-        .filter(|e| e.family == "pverify" && e.size == size)
-        .map(|e| e.bucket)
-        .collect();
-    buckets.sort_unstable();
-    buckets.dedup();
-    match buckets.iter().find(|&&b| b >= need) {
-        Some(&b) => Ok(b),
-        None => bail!(
-            "no partial bucket ≥ {need} for size {size} (have {buckets:?})"
-        ),
-    }
 }
 
 /// Decoded output of a `read_full_*` / `read_partial_*` extractor: `rows`

@@ -1,5 +1,8 @@
 //! PJRT runtime: loads the AOT artifacts (HLO text) and executes them on
-//! the CPU PJRT client with device-resident state threading.
+//! the CPU PJRT client with device-resident state threading. This is the
+//! low-level machinery behind [`crate::backend::pjrt::PjrtBackend`] —
+//! engines talk to the typed [`crate::backend::Backend`] op API, never to
+//! `invoke` directly.
 //!
 //! Key design points (see DESIGN.md §4 and aot.py's FLAT-STATE ABI note):
 //! * executables are compiled lazily on first use and cached — a process
@@ -22,6 +25,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
+use crate::backend::Counters;
 use crate::manifest::{ArgSpec, DType, ExecSpec, Manifest};
 use crate::weights::Weights;
 
@@ -36,18 +40,6 @@ pub enum Arg<'a> {
     Scalar(i32),
     /// a device-resident buffer (threaded state, another exec's output)
     Buf(&'a PjRtBuffer),
-}
-
-/// Execution counters for the perf pass and the metrics registry.
-#[derive(Debug, Default, Clone)]
-pub struct Counters {
-    pub executions: u64,
-    pub exec_secs: f64,
-    pub compilations: u64,
-    pub compile_secs: f64,
-    pub upload_bytes: u64,
-    pub download_bytes: u64,
-    pub per_exec: HashMap<String, (u64, f64)>,
 }
 
 pub struct Runtime {
@@ -170,16 +162,19 @@ impl Runtime {
             );
         }
 
-        // temporaries must outlive the arg-ref vector
-        let mut tmp: Vec<PjRtBuffer> = Vec::new();
-        
-        enum Slot {
+        // Uploaded temporaries must outlive the arg-ref vector, so the
+        // pass is two-phase: resolve every manifest arg to an indexed
+        // `Slot`, then materialise the `&PjRtBuffer` list.
+        enum Slot<'s> {
+            /// uploaded host temporary (index into `tmp`)
             Tmp(usize),
-            Ext,
+            /// caller-provided device buffer (threaded state)
+            Ext(&'s PjRtBuffer),
+            /// per-size weight set entry (index into `weights`)
             Weight(usize),
         }
-        let mut slots: Vec<Slot> = Vec::new();
-        let mut ext_refs: Vec<&PjRtBuffer> = Vec::new();
+        let mut tmp: Vec<PjRtBuffer> = Vec::new();
+        let mut slots: Vec<Slot> = Vec::with_capacity(spec.args.len());
 
         let mut input_iter = inputs.iter();
         let weights = if spec.args.iter().any(|a| a.is_weight()) {
@@ -187,7 +182,6 @@ impl Runtime {
         } else {
             None
         };
-        let mut widx = 0usize;
         for a in &spec.args {
             if a.is_weight() {
                 let ws = weights.as_ref().unwrap();
@@ -199,7 +193,6 @@ impl Runtime {
                     .position(|(n, _)| n == &a.name)
                     .with_context(|| format!("{name}: weight {} missing", a.name))?;
                 slots.push(Slot::Weight(pos));
-                widx += 1;
                 continue;
             }
             let v = input_iter.next().unwrap();
@@ -241,20 +234,15 @@ impl Runtime {
                     tmp.push(b);
                     slots.push(Slot::Tmp(tmp.len() - 1));
                 }
-                Arg::Buf(b) => {
-                    ext_refs.push(b);
-                    slots.push(Slot::Ext);
-                }
+                Arg::Buf(b) => slots.push(Slot::Ext(*b)),
             }
         }
-        let _ = widx;
 
-        let mut ext_iter = ext_refs.iter();
         let refs: Vec<&PjRtBuffer> = slots
             .iter()
             .map(|s| match s {
                 Slot::Tmp(i) => &tmp[*i],
-                Slot::Ext => *ext_iter.next().unwrap(),
+                Slot::Ext(b) => *b,
                 Slot::Weight(i) => &weights.as_ref().unwrap()[*i].1,
             })
             .collect();

@@ -3,7 +3,7 @@
 //! accepted socket gets a reader thread (parses ops into [`WorkItem`]s)
 //! and a writer thread (drains response lines), all feeding one shared
 //! `std::sync::mpsc` work queue. The device loop — the only thread that
-//! touches the PJRT runtime, whose handles are not `Send` — drains the
+//! touches the backend, whose handles are not `Send` — drains the
 //! queue and drives the coordinator's continuous-batching `tick()`, so
 //! many clients interleave at decode-round granularity instead of
 //! waiting for whole generations.
@@ -35,11 +35,11 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::backend::Backend;
 use crate::config::{Config, EngineKind};
 use crate::coordinator::{Coordinator, Event, RequestId, RequestState};
 use crate::engine::GenRequest;
 use crate::json::Json;
-use crate::runtime::Runtime;
 use crate::tokenizer;
 
 /// One parsed client operation, routed to the device loop together with
@@ -67,11 +67,15 @@ struct Defaults {
 }
 
 /// Serve forever (or until a `shutdown` op) on the configured address.
-pub fn serve(rt: &Runtime, cfg: Config) -> Result<()> {
+pub fn serve(be: &dyn Backend, cfg: Config) -> Result<()> {
     let listener = TcpListener::bind(&cfg.server_addr)
         .with_context(|| format!("binding {}", cfg.server_addr))?;
-    println!("specpv server listening on {}", cfg.server_addr);
-    let coord = Coordinator::new(rt, cfg);
+    println!(
+        "specpv server listening on {} ({} backend)",
+        cfg.server_addr,
+        be.name()
+    );
+    let coord = Coordinator::new(be, cfg);
     serve_on(listener, coord)
 }
 
@@ -120,6 +124,7 @@ pub fn serve_on(listener: TcpListener, mut coord: Coordinator<'_>) -> Result<()>
         let _ = TcpStream::connect(addr);
         served
     })?;
+    coord.sync_backend_counters();
     println!("server metrics: {}", coord.registry.summary());
     Ok(())
 }
@@ -303,12 +308,20 @@ fn handle_item(
             send(&reply, Json::obj().set("ok", true));
         }
         WorkItem::Metrics { reply } => {
+            coord.sync_backend_counters();
             let reg = &coord.registry;
             send(
                 &reply,
                 Json::obj()
                     .set("ok", true)
                     .set("summary", reg.summary())
+                    .set(
+                        "backend",
+                        if reg.backend.is_empty() { "scripted" } else { reg.backend.as_str() },
+                    )
+                    .set("executions", reg.executions as i64)
+                    .set("exec_secs", reg.exec_secs)
+                    .set("compilations", reg.compilations as i64)
                     .set("queue_depth", coord.queue_len())
                     .set("active", coord.active_len())
                     .set("completed", reg.completed as i64)

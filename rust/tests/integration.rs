@@ -1,8 +1,10 @@
-//! Integration tests over the real runtime + artifacts.
+//! Integration tests over the **pjrt backend** + AOT artifacts.
 //!
 //! These need `make artifacts` to have run; they skip (pass trivially)
 //! when `artifacts/manifest.json` is absent so `cargo test` works in a
-//! fresh checkout. The heavyweight guarantees:
+//! fresh checkout. The artifact-free equivalents of the engine-level
+//! guarantees run unconditionally against the reference backend in
+//! `rust/tests/reference_e2e.rs`. The heavyweight guarantees here:
 //!   * AR decoding == chunk-prefill continuation (runtime coherence)
 //!   * spec_full output == AR output  (LOSSLESSNESS of tree verification)
 //!   * spec_pv with an oversized budget ≈ spec_full
@@ -11,6 +13,8 @@
 
 use std::path::{Path, PathBuf};
 
+use specpv::backend::pjrt::PjrtBackend;
+use specpv::backend::Backend;
 use specpv::config::{Config, EngineKind};
 use specpv::engine::{self, GenRequest};
 use specpv::runtime::Runtime;
@@ -21,12 +25,12 @@ fn artifacts() -> Option<PathBuf> {
     p.join("manifest.json").exists().then_some(p)
 }
 
-/// Per-test runtime (the PJRT wrapper holds raw pointers and is not
+/// Per-test backend (the PJRT wrapper holds raw pointers and is not
 /// Sync; tests run with --test-threads=1 via the Makefile, but each test
-/// owning its runtime keeps them correct under any harness settings).
-fn runtime() -> Option<Runtime> {
+/// owning its backend keeps them correct under any harness settings).
+fn backend() -> Option<PjrtBackend> {
     let dir = artifacts()?;
-    Some(Runtime::new(&dir).expect("runtime init"))
+    Some(PjrtBackend::new(&dir).expect("pjrt backend init"))
 }
 
 fn base_cfg() -> Config {
@@ -36,34 +40,42 @@ fn base_cfg() -> Config {
     }
 }
 
-fn gen(rt: &Runtime, kind: EngineKind, prompt: &str, max_new: usize) -> specpv::engine::GenResult {
+fn gen(
+    be: &dyn Backend,
+    kind: EngineKind,
+    prompt: &str,
+    max_new: usize,
+) -> specpv::engine::GenResult {
     let mut cfg = base_cfg();
     cfg.engine = kind;
-    engine::generate_with(&cfg, rt, &GenRequest::greedy(tokenizer::encode(prompt), max_new))
+    engine::generate_with(&cfg, be, &GenRequest::greedy(tokenizer::encode(prompt), max_new))
         .expect("generation")
 }
 
 #[test]
 fn ar_generates_text() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
+    let Some(be) = backend() else { return };
+    let be: &dyn Backend = &be;
     let prompt = corpus::continuation_prompt(5, 600);
-    let r = gen(rt, EngineKind::Autoregressive, &prompt, 32);
+    let r = gen(be, EngineKind::Autoregressive, &prompt, 32);
     assert_eq!(r.tokens.len(), 32);
     assert!(r.stats.throughput() > 0.0);
     // trained char-LM must produce mostly printable ASCII words
     let text = r.text();
-    let printable = text.chars().filter(|c| c.is_ascii_graphic() || *c == ' ' || *c == '\n').count();
+    let printable = text
+        .chars()
+        .filter(|c| c.is_ascii_graphic() || *c == ' ' || *c == '\n')
+        .count();
     assert!(printable * 10 >= text.len() * 9, "garbage output: {text:?}");
 }
 
 #[test]
 fn spec_full_is_lossless_vs_ar() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
+    let Some(be) = backend() else { return };
+    let be: &dyn Backend = &be;
     let prompt = corpus::continuation_prompt(7, 700);
-    let a = gen(rt, EngineKind::Autoregressive, &prompt, 48);
-    let b = gen(rt, EngineKind::SpecFull, &prompt, 48);
+    let a = gen(be, EngineKind::Autoregressive, &prompt, 48);
+    let b = gen(be, EngineKind::SpecFull, &prompt, 48);
     assert_eq!(
         a.tokens, b.tokens,
         "speculative full verification must match AR greedy decoding\nAR:  {:?}\nSF:  {:?}",
@@ -74,8 +86,8 @@ fn spec_full_is_lossless_vs_ar() {
 
 #[test]
 fn spec_pv_runs_all_modes() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
+    let Some(be) = backend() else { return };
+    let be: &dyn Backend = &be;
     // long enough prompt that the partial cache engages (budget 256 →
     // core ≈ 352 tokens)
     let prompt = corpus::continuation_prompt(9, 900);
@@ -84,7 +96,7 @@ fn spec_pv_runs_all_modes() {
     cfg.specpv.retrieval_budget = 256;
     let r = engine::generate_with(
         &cfg,
-        rt,
+        be,
         &GenRequest::greedy(tokenizer::encode(&prompt), 64),
     )
     .unwrap();
@@ -95,8 +107,8 @@ fn spec_pv_runs_all_modes() {
 
 #[test]
 fn spec_pv_matches_full_on_short_context() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
+    let Some(be) = backend() else { return };
+    let be: &dyn Backend = &be;
     // prompt shorter than the partial core → SpecPV stays in Full mode
     // and must be exactly lossless
     let prompt = corpus::continuation_prompt(11, 300);
@@ -105,40 +117,40 @@ fn spec_pv_matches_full_on_short_context() {
     cfg.specpv.retrieval_budget = 512;
     let pv = engine::generate_with(
         &cfg,
-        rt,
+        be,
         &GenRequest::greedy(tokenizer::encode(&prompt), 40),
     )
     .unwrap();
-    let full = gen(rt, EngineKind::SpecFull, &prompt, 40);
+    let full = gen(be, EngineKind::SpecFull, &prompt, 40);
     assert_eq!(pv.tokens, full.tokens);
     assert_eq!(pv.stats.partial_steps, 0);
 }
 
 #[test]
 fn triforce_and_tokenswift_run() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
+    let Some(be) = backend() else { return };
+    let be: &dyn Backend = &be;
     let prompt = corpus::continuation_prompt(13, 700);
     for kind in [EngineKind::TriForce, EngineKind::TokenSwift] {
-        let r = gen(rt, kind, &prompt, 32);
+        let r = gen(be, kind, &prompt, 32);
         assert_eq!(r.tokens.len(), 32, "{kind:?}");
         // both verify on the full cache → lossless vs AR
-        let a = gen(rt, EngineKind::Autoregressive, &prompt, 32);
+        let a = gen(be, EngineKind::Autoregressive, &prompt, 32);
         assert_eq!(r.tokens, a.tokens, "{kind:?} diverged from AR");
     }
 }
 
 #[test]
 fn offload_sim_adds_cost_to_full_but_not_partial() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
+    let Some(be) = backend() else { return };
+    let be: &dyn Backend = &be;
     let prompt = corpus::continuation_prompt(15, 900);
     let mut cfg = base_cfg();
     cfg.offload.enabled = true;
     cfg.engine = EngineKind::SpecFull;
     let full = engine::generate_with(
         &cfg,
-        rt,
+        be,
         &GenRequest::greedy(tokenizer::encode(&prompt), 32),
     )
     .unwrap();
@@ -147,7 +159,7 @@ fn offload_sim_adds_cost_to_full_but_not_partial() {
     cfg.specpv.retrieval_budget = 256;
     let pv = engine::generate_with(
         &cfg,
-        rt,
+        be,
         &GenRequest::greedy(tokenizer::encode(&prompt), 32),
     )
     .unwrap();
@@ -157,9 +169,8 @@ fn offload_sim_adds_cost_to_full_but_not_partial() {
 
 #[test]
 fn coordinator_queue_and_metrics() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
-    let mut coord = specpv::coordinator::Coordinator::new(rt, base_cfg());
+    let Some(be) = backend() else { return };
+    let mut coord = specpv::coordinator::Coordinator::new(&be, base_cfg());
     let p = corpus::continuation_prompt(21, 400);
     let id1 = coord
         .submit(GenRequest::greedy(tokenizer::encode(&p), 16), None)
@@ -177,13 +188,15 @@ fn coordinator_queue_and_metrics() {
         assert_eq!(tr.result.as_ref().unwrap().tokens.len(), 16);
     }
     assert_eq!(coord.registry.completed, 2);
+    // per-backend counters flow into the registry summary
+    assert!(coord.registry.executions > 0);
+    assert!(coord.registry.summary().contains("backend=pjrt"));
 }
 
 #[test]
 fn coordinator_rejects_oversized() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
-    let mut coord = specpv::coordinator::Coordinator::new(rt, base_cfg());
+    let Some(be) = backend() else { return };
+    let mut coord = specpv::coordinator::Coordinator::new(&be, base_cfg());
     let huge = vec![65u32; 100_000];
     assert!(coord.submit(GenRequest::greedy(huge, 16), None).is_err());
     assert!(coord
@@ -197,12 +210,12 @@ fn server_roundtrip() {
     let mut cfg = base_cfg();
     cfg.server_addr = "127.0.0.1:7913".into();
     std::thread::scope(|s| {
-        // the server thread owns its runtime (PJRT handles are !Send)
+        // the server thread owns its backend (PJRT handles are !Send)
         let cfg2 = cfg.clone();
         let dir2 = dir.clone();
         let h = s.spawn(move || {
-            let rt = Runtime::new(&dir2).expect("server runtime");
-            let _ = specpv::server::serve(&rt, cfg2);
+            let be = PjrtBackend::new(&dir2).expect("server backend");
+            let _ = specpv::server::serve(&be, cfg2);
         });
         std::thread::sleep(std::time::Duration::from_millis(300));
         let mut client = specpv::server::Client::connect("127.0.0.1:7913").unwrap();
@@ -220,8 +233,8 @@ fn server_roundtrip() {
 
 #[test]
 fn runtime_rejects_bad_invocations() {
-    let Some(rt) = runtime() else { return };
-    let rt = &rt;
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).expect("runtime init");
     // unknown executable
     assert!(rt.invoke("nope_exec", &[]).is_err());
     // wrong arg count

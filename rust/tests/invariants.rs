@@ -66,7 +66,7 @@ fn partial_cache_never_overflows() {
             // partial step: accept root + up to 3 drafted
             let m = g.usize_in(0, 3);
             let rows: Vec<usize> = (0..=m).collect();
-            p.set_pending(rows).unwrap();
+            p.set_pending(rows, 16).unwrap();
             let (kv_len, _, n) = p.take_pending(8).unwrap();
             assert!(kv_len + n + 16 <= bucket + 16);
             for _ in 0..=m {
