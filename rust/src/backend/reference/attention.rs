@@ -1,0 +1,416 @@
+//! Tree attention over the flat `[L, 2, H, B, D]` KV layout, RoPE with
+//! precomputed cos/sin tables, and the fused acceptance compaction.
+//!
+//! The fast path walks each head's keys/values as one contiguous
+//! `[B, D]` slab (consecutive rows of a head are adjacent in the flat
+//! layout), reuses per-task score buffers, and parallelizes over
+//! `(head, query-row)` pairs — every pair writes a disjoint `[D]` output
+//! slice, so scheduling cannot change results. Softmax order is the
+//! original's exactly: committed rows ascending, then masked new-region
+//! rows ascending; max, exp and the weighted-V accumulation all run in
+//! that one fixed order.
+
+use crate::util::pool::{split_range, Pool};
+
+use super::kernels::{dot, SendPtr, PAR_MIN_WORK};
+
+/// KV-cache addressing over a flat `[L, 2, H, B, D]` region.
+#[derive(Clone, Copy)]
+pub(crate) struct KvDims {
+    pub l: usize,
+    pub h: usize,
+    pub b: usize,
+    pub d: usize,
+}
+
+impl KvDims {
+    #[inline]
+    pub fn row(&self, layer: usize, plane: usize, head: usize, row: usize) -> usize {
+        (((layer * 2 + plane) * self.h + head) * self.b + row) * self.d
+    }
+}
+
+/// Acceptance compaction fused into the next verification step
+/// (`model.py::compact_window`): move row `kv_len + prev_idx[j]` →
+/// `kv_len + j` for `j < n_prev`. `prev_idx` is strictly increasing with
+/// `prev_idx[j] ≥ j`, so an ascending in-place copy matches the
+/// gather-then-scatter of the JAX graph.
+pub(crate) fn compact_window(
+    kv: &mut [f32],
+    dims: KvDims,
+    kv_len: usize,
+    prev_idx: &[i32],
+    n_prev: usize,
+    window: usize,
+) {
+    // dynamic_slice clamp semantics
+    let start = kv_len.min(dims.b.saturating_sub(window));
+    for layer in 0..dims.l {
+        for plane in 0..2 {
+            for head in 0..dims.h {
+                for j in 0..n_prev.min(prev_idx.len()) {
+                    let src = (prev_idx[j].max(0) as usize).min(window - 1);
+                    if src == j {
+                        continue;
+                    }
+                    // src row is strictly behind dst (prev_idx[j] > j)
+                    let s = dims.row(layer, plane, head, start + src);
+                    let t = dims.row(layer, plane, head, start + j);
+                    let (head_seg, tail_seg) = kv.split_at_mut(s);
+                    head_seg[t..t + dims.d].copy_from_slice(&tail_seg[..dims.d]);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RoPE
+// ---------------------------------------------------------------------------
+
+/// Per-op cos/sin table `[T, D/2]`. Positions are shared by every layer
+/// and head, so one table replaces `L × 2 × H` rounds of `sin_cos` calls
+/// per forward (the angles — and therefore the rotated values — are
+/// bit-identical to the per-token computation).
+pub(crate) struct RopeTab {
+    sin: Vec<f32>,
+    cos: Vec<f32>,
+    half: usize,
+}
+
+pub(crate) fn rope_tab(pos: &[i32], inv_freq: &[f32]) -> RopeTab {
+    let half = inv_freq.len();
+    let mut sin = vec![0f32; pos.len() * half];
+    let mut cos = vec![0f32; pos.len() * half];
+    for (i, &p) in pos.iter().enumerate() {
+        let pf = p as f32;
+        for (k, &f) in inv_freq.iter().enumerate() {
+            let (s, c) = (pf * f).sin_cos();
+            sin[i * half + k] = s;
+            cos[i * half + k] = c;
+        }
+    }
+    RopeTab { sin, cos, half }
+}
+
+/// Rotate `[T, H·D]` rows in place using a precomputed table.
+pub(crate) fn rope_apply_tab(x: &mut [f32], tab: &RopeTab, t: usize, n_head: usize, d: usize) {
+    let hd = n_head * d;
+    let half = tab.half;
+    for i in 0..t {
+        let srow = &tab.sin[i * half..(i + 1) * half];
+        let crow = &tab.cos[i * half..(i + 1) * half];
+        for hh in 0..n_head {
+            let base = i * hd + hh * d;
+            for k in 0..half {
+                let (sin, cos) = (srow[k], crow[k]);
+                let x1 = x[base + 2 * k];
+                let x2 = x[base + 2 * k + 1];
+                x[base + 2 * k] = x1 * cos - x2 * sin;
+                x[base + 2 * k + 1] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+/// The original per-token RoPE (oracle path).
+pub(crate) fn rope_apply_naive(
+    x: &mut [f32],
+    pos: &[i32],
+    inv_freq: &[f32],
+    t: usize,
+    n_head: usize,
+    d: usize,
+) {
+    let hd = n_head * d;
+    for i in 0..t {
+        let p = pos[i] as f32;
+        for hh in 0..n_head {
+            let base = i * hd + hh * d;
+            for (k, &f) in inv_freq.iter().enumerate() {
+                let ang = p * f;
+                let (sin, cos) = ang.sin_cos();
+                let x1 = x[base + 2 * k];
+                let x2 = x[base + 2 * k + 1];
+                x[base + 2 * k] = x1 * cos - x2 * sin;
+                x[base + 2 * k + 1] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Attention
+// ---------------------------------------------------------------------------
+
+/// One `(head, query-row)` softmax-attention in the original reduction
+/// order. `keys`/`vals` are the head's contiguous `[B, D]` slabs; `or`
+/// is the query's `[D]` output slice (zeroed by the caller).
+#[allow(clippy::too_many_arguments)]
+fn att_row(
+    or: &mut [f32],
+    qr: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    d: usize,
+    b: usize,
+    kv_len: usize,
+    mask_row: &[f32],
+    scale: f32,
+    probs: &mut Vec<f32>,
+    midx: &mut Vec<usize>,
+) {
+    let kvn = kv_len.min(b);
+    probs.clear();
+    midx.clear();
+    let mut m = f32::NEG_INFINITY;
+    // committed history rows, then the masked new region — the same
+    // visibility rule as kernels/ref.py::tree_attention_ref
+    for j in 0..kvn {
+        let s = dot(qr, &keys[j * d..j * d + d]) * scale;
+        if s > m {
+            m = s;
+        }
+        probs.push(s);
+    }
+    for (r, &mv) in mask_row.iter().enumerate() {
+        let j = kv_len + r;
+        if j >= b || mv <= 0.5 {
+            continue;
+        }
+        let s = dot(qr, &keys[j * d..j * d + d]) * scale;
+        if s > m {
+            m = s;
+        }
+        probs.push(s);
+        midx.push(j);
+    }
+    if probs.is_empty() {
+        return; // fully masked row (never happens for real rows)
+    }
+    let mut z = 0f32;
+    for p in probs.iter_mut() {
+        *p = (*p - m).exp();
+        z += *p;
+    }
+    let zr = 1.0 / z.max(1e-30);
+    for j in 0..kvn {
+        let w = probs[j] * zr;
+        let vr = &vals[j * d..j * d + d];
+        for dd in 0..d {
+            or[dd] += w * vr[dd];
+        }
+    }
+    for (q2, &j) in midx.iter().enumerate() {
+        let w = probs[kvn + q2] * zr;
+        let vr = &vals[j * d..j * d + d];
+        for dd in 0..d {
+            or[dd] += w * vr[dd];
+        }
+    }
+}
+
+/// Tree attention for one layer: `out[T, H·D]` (zeroed by the caller)
+/// from queries `q[T, H·D]` against the layer's KV slabs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention(
+    pool: &Pool,
+    out: &mut [f32],
+    q: &[f32],
+    kv: &[f32],
+    dims: KvDims,
+    layer: usize,
+    t: usize,
+    tk: usize,
+    mask: &[f32],
+    kv_len: usize,
+    scale: f32,
+) {
+    let d = dims.d;
+    let hd = dims.h * d;
+    let kvn = kv_len.min(dims.b);
+    let items = dims.h * t;
+    let per_item = |hh: usize, i: usize, or: &mut [f32], probs: &mut Vec<f32>, midx: &mut Vec<usize>| {
+        let qr = &q[i * hd + hh * d..i * hd + hh * d + d];
+        let kbase = dims.row(layer, 0, hh, 0);
+        let vbase = dims.row(layer, 1, hh, 0);
+        let keys = &kv[kbase..kbase + dims.b * d];
+        let vals = &kv[vbase..vbase + dims.b * d];
+        att_row(
+            or,
+            qr,
+            keys,
+            vals,
+            d,
+            dims.b,
+            kv_len,
+            &mask[i * tk..(i + 1) * tk],
+            scale,
+            probs,
+            midx,
+        );
+    };
+    let work = items * (kvn + tk) * d;
+    if pool.threads() == 1 || work < PAR_MIN_WORK {
+        let mut probs = Vec::with_capacity(kvn + tk);
+        let mut midx = Vec::with_capacity(tk);
+        for hh in 0..dims.h {
+            for i in 0..t {
+                per_item(hh, i, &mut out[i * hd + hh * d..i * hd + hh * d + d], &mut probs, &mut midx);
+            }
+        }
+        return;
+    }
+    let chunks = pool.threads().min(items);
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(chunks, &|c| {
+        let (a, b) = split_range(items, chunks, c);
+        let mut probs = Vec::with_capacity(kvn + tk);
+        let mut midx = Vec::with_capacity(tk);
+        for it in a..b {
+            let hh = it / t;
+            let i = it % t;
+            // SAFETY: (head, row) output slices are disjoint and each
+            // pair belongs to exactly one chunk
+            let or =
+                unsafe { std::slice::from_raw_parts_mut(optr.0.add(i * hd + hh * d), d) };
+            per_item(hh, i, or, &mut probs, &mut midx);
+        }
+    });
+}
+
+/// The original tuple-vector attention (oracle path).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_naive(
+    out: &mut [f32],
+    q: &[f32],
+    kv: &[f32],
+    dims: KvDims,
+    layer: usize,
+    t: usize,
+    tk: usize,
+    mask: &[f32],
+    kv_len: usize,
+    scale: f32,
+) {
+    let d = dims.d;
+    let hd = dims.h * d;
+    let mut scores: Vec<(usize, f32)> = Vec::with_capacity(kv_len + tk);
+    for hh in 0..dims.h {
+        for i in 0..t {
+            let qr = &q[i * hd + hh * d..i * hd + hh * d + d];
+            scores.clear();
+            let mut m = f32::NEG_INFINITY;
+            for j in 0..kv_len.min(dims.b) {
+                let kr = &kv[dims.row(layer, 0, hh, j)..dims.row(layer, 0, hh, j) + d];
+                let s = dot(qr, kr) * scale;
+                if s > m {
+                    m = s;
+                }
+                scores.push((j, s));
+            }
+            for r in 0..tk {
+                let j = kv_len + r;
+                if j >= dims.b || mask[i * tk + r] <= 0.5 {
+                    continue;
+                }
+                let kr = &kv[dims.row(layer, 0, hh, j)..dims.row(layer, 0, hh, j) + d];
+                let s = dot(qr, kr) * scale;
+                if s > m {
+                    m = s;
+                }
+                scores.push((j, s));
+            }
+            let or = &mut out[i * hd + hh * d..i * hd + hh * d + d];
+            if scores.is_empty() {
+                continue;
+            }
+            let mut z = 0f32;
+            for (_, s) in scores.iter_mut() {
+                *s = (*s - m).exp();
+                z += *s;
+            }
+            let zr = 1.0 / z.max(1e-30);
+            for &(j, p) in scores.iter() {
+                let vr = &kv[dims.row(layer, 1, hh, j)..dims.row(layer, 1, hh, j) + d];
+                let w = p * zr;
+                for dd in 0..d {
+                    or[dd] += w * vr[dd];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn compact_window_moves_accepted_rows() {
+        let dims = KvDims { l: 1, h: 1, b: 32, d: 2 };
+        let mut kv: Vec<f32> =
+            (0..dims.l * 2 * dims.h * dims.b * dims.d).map(|i| i as f32).collect();
+        let before_row6 =
+            kv[dims.row(0, 0, 0, 10 + 6)..dims.row(0, 0, 0, 10 + 6) + 2].to_vec();
+        // kv_len 10, accepted window rows [2, 6] → rows 12, 16 move to 10, 11
+        compact_window(&mut kv, dims, 10, &[2, 6, 0, 0], 2, 16);
+        let r10 = &kv[dims.row(0, 0, 0, 10)..dims.row(0, 0, 0, 10) + 2];
+        assert_eq!(r10, &[(12 * 2) as f32, (12 * 2 + 1) as f32][..]);
+        let r11 = &kv[dims.row(0, 0, 0, 11)..dims.row(0, 0, 0, 11) + 2];
+        assert_eq!(r11, &before_row6[..]);
+    }
+
+    #[test]
+    fn rope_tab_matches_per_token_rotation() {
+        let inv_freq = vec![1.0f32, 0.25, 0.0625];
+        let pos = vec![0i32, 3, 17, 100];
+        let (t, n_head, d) = (4usize, 2usize, 6usize);
+        let mut rng = Rng::new(5);
+        let base: Vec<f32> = (0..t * n_head * d).map(|_| rng.normal() as f32).collect();
+        let mut a = base.clone();
+        let mut b = base;
+        rope_apply_naive(&mut a, &pos, &inv_freq, t, n_head, d);
+        let tab = rope_tab(&pos, &inv_freq);
+        rope_apply_tab(&mut b, &tab, t, n_head, d);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn fast_attention_matches_naive_bytewise() {
+        let dims = KvDims { l: 2, h: 3, b: 64, d: 8 };
+        let mut rng = Rng::new(21);
+        let mut kv: Vec<f32> =
+            (0..dims.l * 2 * dims.h * dims.b * dims.d).map(|_| rng.normal() as f32).collect();
+        // zero the "unwritten" tail like a real cache
+        let kv_len = 40usize;
+        let t = 5usize;
+        let tk = t;
+        for layer in 0..dims.l {
+            for plane in 0..2 {
+                for hh in 0..dims.h {
+                    for row in kv_len + t..dims.b {
+                        let s = dims.row(layer, plane, hh, row);
+                        kv[s..s + dims.d].iter_mut().for_each(|x| *x = 0.0);
+                    }
+                }
+            }
+        }
+        let q: Vec<f32> = (0..t * dims.h * dims.d).map(|_| rng.normal() as f32).collect();
+        let mask = crate::tree::chain_mask(t, t);
+        for layer in 0..dims.l {
+            let mut want = vec![0f32; t * dims.h * dims.d];
+            attention_naive(&mut want, &q, &kv, dims, layer, t, tk, &mask, kv_len, 0.35);
+            for threads in [1usize, 3] {
+                let pool = Pool::new(threads);
+                let mut got = vec![0f32; t * dims.h * dims.d];
+                attention(&pool, &mut got, &q, &kv, dims, layer, t, tk, &mask, kv_len, 0.35);
+                assert!(
+                    got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "layer {layer}, {threads} threads"
+                );
+            }
+        }
+    }
+}

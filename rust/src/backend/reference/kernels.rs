@@ -1,0 +1,235 @@
+//! Dense kernels for the reference backend: cache-blocked, thread-pooled
+//! matmul over a pre-transposed weight layout, plus the original scalar
+//! kernels kept as the **naive oracle** (`specpv bench backend` measures
+//! fast-vs-naive, and `rust/tests/backend_parity.rs` asserts the two are
+//! byte-identical — which is why the oracle is a runtime mode rather
+//! than a `#[cfg(test)]` item).
+//!
+//! Determinism contract: for every output element `out[i][o]` both paths
+//! accumulate `x[i][k] · w[k][o]` over `k` **ascending, with a single
+//! accumulator, skipping `x[i][k] == 0` terms** — the exact reduction
+//! order of the original scalar kernel. Parallelism only ever partitions
+//! *output elements* (rows or column blocks), never the `k` reduction,
+//! so results are byte-identical at any thread count.
+
+use crate::util::pool::{split_range, Pool};
+
+/// Below this many multiply-accumulates a kernel runs serially — the
+/// pool's wake/latch round-trip (a few µs) dwarfs the work.
+pub(crate) const PAR_MIN_WORK: usize = 16 * 1024;
+
+/// Raw `*mut f32` that may cross a pool boundary. Chunks index disjoint
+/// ranges, computed deterministically from the chunk id.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub *mut f32);
+
+// SAFETY: every user writes only the chunk-id-derived disjoint range, and
+// Pool::run blocks until all chunks finished.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// A dense weight matrix `[din, dout]` stored twice: `rm` row-major
+/// (what the seeded init produces and what the naive oracle streams, so
+/// the oracle keeps the original kernel's access pattern) and `t`
+/// transposed `[dout, din]` (so the fast path computes each output as a
+/// contiguous–contiguous dot). ~1 MB of weights at the CI geometry, so
+/// the duplication is free.
+pub(crate) struct Mat {
+    pub rm: Vec<f32>,
+    pub t: Vec<f32>,
+    pub din: usize,
+    pub dout: usize,
+}
+
+impl Mat {
+    pub fn from_row_major(rm: Vec<f32>, din: usize, dout: usize) -> Mat {
+        debug_assert_eq!(rm.len(), din * dout);
+        let mut t = vec![0f32; rm.len()];
+        for k in 0..din {
+            for o in 0..dout {
+                t[o * din + k] = rm[k * dout + o];
+            }
+        }
+        Mat { rm, t, din, dout }
+    }
+
+    #[inline]
+    pub fn trow(&self, o: usize) -> &[f32] {
+        &self.t[o * self.din..(o + 1) * self.din]
+    }
+}
+
+/// Plain dot product, ascending, single accumulator (the attention
+/// score/readout reduction — no zero-skip, matching the original).
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Matmul reduction for one output element: ascending `k`, single
+/// accumulator, zero-input terms skipped (original kernel order).
+#[inline]
+pub(crate) fn dot_skip(x: &[f32], w: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for (&xv, &wv) in x.iter().zip(w) {
+        if xv != 0.0 {
+            acc += xv * wv;
+        }
+    }
+    acc
+}
+
+#[inline]
+fn mm_cols(out: &mut [f32], xr: &[f32], w: &Mat, o0: usize, o1: usize) {
+    for (ov, o) in out.iter_mut().zip(o0..o1) {
+        *ov = dot_skip(xr, w.trow(o));
+    }
+}
+
+/// `out[t, dout] = x[t, din] @ w`, parallel over rows (tall inputs) or
+/// output-column blocks (wide single-row projections like `lm_head`).
+/// Every element of `out` is written (no pre-zeroing needed).
+pub(crate) fn matmul_t(pool: &Pool, out: &mut [f32], x: &[f32], w: &Mat, t: usize) {
+    let (din, dout) = (w.din, w.dout);
+    debug_assert_eq!(out.len(), t * dout);
+    debug_assert_eq!(x.len(), t * din);
+    if t == 0 {
+        return;
+    }
+    let work = t * din * dout;
+    if pool.threads() == 1 || work < PAR_MIN_WORK {
+        for i in 0..t {
+            mm_cols(&mut out[i * dout..(i + 1) * dout], &x[i * din..(i + 1) * din], w, 0, dout);
+        }
+        return;
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    if t >= 2 * pool.threads() {
+        // row-parallel: each chunk owns a contiguous row band
+        let chunks = pool.threads().min(t);
+        pool.run(chunks, &|c| {
+            let (r0, r1) = split_range(t, chunks, c);
+            for i in r0..r1 {
+                // SAFETY: row i belongs to exactly one chunk
+                let orow =
+                    unsafe { std::slice::from_raw_parts_mut(optr.0.add(i * dout), dout) };
+                mm_cols(orow, &x[i * din..(i + 1) * din], w, 0, dout);
+            }
+        });
+    } else {
+        // column-parallel: each chunk owns a contiguous column band of
+        // every row (the t=1 lm_head projection lands here)
+        let chunks = pool.threads().min(dout);
+        pool.run(chunks, &|c| {
+            let (o0, o1) = split_range(dout, chunks, c);
+            if o0 == o1 {
+                return;
+            }
+            for i in 0..t {
+                // SAFETY: columns o0..o1 of row i belong to this chunk only
+                let oseg = unsafe {
+                    std::slice::from_raw_parts_mut(optr.0.add(i * dout + o0), o1 - o0)
+                };
+                mm_cols(oseg, &x[i * din..(i + 1) * din], w, o0, o1);
+            }
+        });
+    }
+}
+
+/// The original scalar matmul (axpy over row-major weights, fresh-output
+/// accumulation). Kept verbatim as the parity oracle and the bench
+/// baseline. `out` must be zeroed.
+pub(crate) fn matmul_naive(out: &mut [f32], x: &[f32], w: &Mat, t: usize) {
+    let (din, dout) = (w.din, w.dout);
+    for i in 0..t {
+        let xr = &x[i * din..(i + 1) * din];
+        let or = &mut out[i * dout..(i + 1) * dout];
+        for (k, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w.rm[k * dout..(k + 1) * dout];
+            for (o, &wv) in wr.iter().enumerate() {
+                or[o] += xv * wv;
+            }
+        }
+    }
+}
+
+/// Row-wise RMSNorm into a caller-provided buffer (eps 1e-5, original
+/// reduction order).
+pub(crate) fn rmsnorm_into(out: &mut [f32], x: &[f32], g: &[f32], t: usize, h: usize) {
+    for i in 0..t {
+        let row = &x[i * h..(i + 1) * h];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+        let r = 1.0 / (ms + 1e-5).sqrt();
+        let orow = &mut out[i * h..(i + 1) * h];
+        for j in 0..h {
+            orow[j] = row[j] * g[j] * r;
+        }
+    }
+}
+
+#[inline]
+pub(crate) fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mat(rng: &mut Rng, din: usize, dout: usize) -> Mat {
+        let rm: Vec<f32> = (0..din * dout).map(|_| rng.normal() as f32).collect();
+        Mat::from_row_major(rm, din, dout)
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_row_major(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        // rm[k, o] == t[o, k]
+        assert_eq!(m.trow(0), &[1.0, 4.0]);
+        assert_eq!(m.trow(2), &[3.0, 6.0]);
+    }
+
+    #[test]
+    fn fast_matches_naive_bytewise_at_any_thread_count() {
+        let mut rng = Rng::new(11);
+        // shapes cover the serial path, the row-parallel band split and
+        // the column-parallel t=1 lm_head projection
+        for (t, din, dout) in
+            [(1usize, 32, 320), (1, 64, 512), (16, 48, 48), (64, 32, 96), (5, 7, 9)]
+        {
+            let w = mat(&mut rng, din, dout);
+            let mut x: Vec<f32> = (0..t * din).map(|_| rng.normal() as f32).collect();
+            // sprinkle exact zeros to exercise the skip path
+            for i in (0..x.len()).step_by(7) {
+                x[i] = 0.0;
+            }
+            let mut want = vec![0f32; t * dout];
+            matmul_naive(&mut want, &x, &w, t);
+            for threads in [1usize, 2, 4] {
+                let pool = Pool::new(threads);
+                let mut got = vec![f32::NAN; t * dout];
+                matmul_t(&pool, &mut got, &x, &w, t);
+                assert!(
+                    got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "t={t} din={din} dout={dout} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rmsnorm_shape_and_scale() {
+        let x = vec![3.0f32, 4.0, 0.0, 0.0];
+        let g = vec![1.0f32, 1.0];
+        let mut out = vec![0f32; 4];
+        rmsnorm_into(&mut out, &x, &g, 2, 2);
+        // row 0: ms = 12.5, r = 1/sqrt(12.500_01)
+        let r = 1.0 / (12.5f32 + 1e-5).sqrt();
+        assert_eq!(out[0].to_bits(), (3.0 * r).to_bits());
+        assert_eq!(out[2], 0.0);
+    }
+}

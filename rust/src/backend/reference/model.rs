@@ -1,0 +1,575 @@
+//! Model definition and forward passes for the reference backend: the
+//! seeded-weight char LM (`python/compile/model.py` semantics) with two
+//! execution paths over identical math:
+//!
+//! * **fast** — arena-backed buffers, pooled blocked matmuls, one RoPE
+//!   table per forward, and *no* `lm_head` projection (the post-final-norm
+//!   hidden rows are returned so logits materialize lazily at read time);
+//! * **naive** — the original scalar pipeline kept verbatim as the parity
+//!   oracle and bench baseline (fresh `Vec` per op, per-token `sin_cos`,
+//!   eager full-vocab logits).
+//!
+//! Both accumulate every float in the same fixed order, so their outputs
+//! are byte-identical (`rust/tests/backend_parity.rs`).
+
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+
+use super::attention::{
+    attention, attention_naive, rope_apply_naive, rope_apply_tab, rope_tab, KvDims,
+};
+use super::kernels::{matmul_naive, matmul_t, rmsnorm_into, silu, Mat};
+use super::scratch::Arena;
+
+/// Model hyperparameters (mirrors `model.py::ModelCfg` at reduced scale).
+#[derive(Debug, Clone)]
+pub(crate) struct RefCfg {
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub rope_theta: f64,
+    pub train_ctx: usize,
+}
+
+impl RefCfg {
+    pub fn hd(&self) -> usize {
+        self.n_head * self.d_head
+    }
+
+    /// EAGLE-3 feature taps (low/mid/top layer inputs); fewer than three
+    /// distinct layers (the tiny LM) means no fused feature.
+    pub fn feat_layers(&self) -> Vec<usize> {
+        let mut v = vec![0, self.n_layer / 2, self.n_layer - 1];
+        v.dedup();
+        v
+    }
+
+    pub fn has_feats(&self) -> bool {
+        self.feat_layers().len() == 3
+    }
+}
+
+pub(crate) struct LayerW {
+    pub ln1: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub ln2: Vec<f32>,
+    pub wg: Mat,
+    pub wu: Mat,
+    pub wd: Mat,
+}
+
+pub(crate) struct TargetW {
+    pub embed: Vec<f32>,
+    pub ln_f: Vec<f32>,
+    pub head: Mat,
+    pub layers: Vec<LayerW>,
+}
+
+pub(crate) struct DraftW {
+    pub fuse: Mat,
+    pub inp: Mat,
+    pub ln_f: Vec<f32>,
+    pub layer: LayerW,
+}
+
+pub(crate) struct MedusaW {
+    /// per head: (w1 [h,h], w2 [h,V])
+    pub heads: Vec<(Mat, Mat)>,
+}
+
+pub(crate) struct RefModel {
+    pub cfg: RefCfg,
+    pub target: TargetW,
+    pub draft: Option<DraftW>,
+    pub medusa: Option<MedusaW>,
+    pub inv_freq: Vec<f32>,
+    pub mscale: f32,
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic init (seeded xorshift; scales mirror model.py). The RNG
+// stream order is unchanged from the scalar backend, so weights — and
+// therefore every generated token — are byte-identical across the
+// refactor.
+// ---------------------------------------------------------------------------
+
+fn normal_mat(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Vec<f32> {
+    (0..rows * cols).map(|_| rng.normal() as f32 * std).collect()
+}
+
+fn dense(rng: &mut Rng, fan_in: usize, fan_out: usize) -> Mat {
+    let rm = normal_mat(rng, fan_in, fan_out, 1.0 / (fan_in as f32).sqrt());
+    Mat::from_row_major(rm, fan_in, fan_out)
+}
+
+fn init_layer(rng: &mut Rng, cfg: &RefCfg) -> LayerW {
+    let (h, hd, ff) = (cfg.d_model, cfg.hd(), cfg.d_ff);
+    LayerW {
+        ln1: vec![1.0; h],
+        wq: dense(rng, h, hd),
+        wk: dense(rng, h, hd),
+        wv: dense(rng, h, hd),
+        wo: dense(rng, hd, h),
+        ln2: vec![1.0; h],
+        wg: dense(rng, h, ff),
+        wu: dense(rng, h, ff),
+        wd: dense(rng, ff, h),
+    }
+}
+
+pub(crate) fn seed_of(size: &str) -> u64 {
+    size.bytes()
+        .fold(0x5EED_CAFE_F00Du64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64))
+}
+
+pub(crate) fn init_model(size: &str, cfg: RefCfg, with_draft: bool) -> RefModel {
+    let mut rng = Rng::new(seed_of(size));
+    let h = cfg.d_model;
+    let target = TargetW {
+        embed: normal_mat(&mut rng, cfg.vocab, h, 0.02),
+        ln_f: vec![1.0; h],
+        head: dense(&mut rng, h, cfg.vocab),
+        layers: (0..cfg.n_layer).map(|_| init_layer(&mut rng, &cfg)).collect(),
+    };
+    let draft = with_draft.then(|| DraftW {
+        fuse: dense(&mut rng, 3 * h, h),
+        inp: dense(&mut rng, 2 * h, h),
+        ln_f: vec![1.0; h],
+        layer: init_layer(&mut rng, &cfg),
+    });
+    let medusa = with_draft.then(|| MedusaW {
+        heads: (0..3)
+            .map(|_| (dense(&mut rng, h, h), dense(&mut rng, h, cfg.vocab)))
+            .collect(),
+    });
+    let (inv_freq, mscale) = yarn_inv_freq(&cfg, super::YARN_FACTOR);
+    RefModel { cfg, target, draft, medusa, inv_freq, mscale }
+}
+
+/// YARN-scaled inverse frequencies + attention temperature
+/// (`model.py::yarn_inv_freq`, NTK-by-parts).
+pub(crate) fn yarn_inv_freq(cfg: &RefCfg, factor: f64) -> (Vec<f32>, f32) {
+    let d = cfg.d_head;
+    let inv: Vec<f64> = (0..d / 2)
+        .map(|k| 1.0 / cfg.rope_theta.powf(2.0 * k as f64 / d as f64))
+        .collect();
+    if factor <= 1.0 {
+        return (inv.iter().map(|&x| x as f32).collect(), 1.0);
+    }
+    let l = cfg.train_ctx as f64;
+    let (beta_fast, beta_slow) = (32.0f64, 1.0f64);
+    let corr_dim = |rot: f64| -> f64 {
+        (d as f64 * (l / (rot * 2.0 * std::f64::consts::PI)).ln())
+            / (2.0 * cfg.rope_theta.ln())
+    };
+    let low = corr_dim(beta_fast).floor().max(0.0);
+    let high = corr_dim(beta_slow).ceil().min(d as f64 / 2.0 - 1.0);
+    let denom = (high - low).max(1.0);
+    let inv_yarn: Vec<f32> = inv
+        .iter()
+        .enumerate()
+        .map(|(k, &f)| {
+            let ramp = ((k as f64 - low) / denom).clamp(0.0, 1.0);
+            (f * (1.0 - ramp) + (f / factor) * ramp) as f32
+        })
+        .collect();
+    let mscale = (0.1 * factor.ln() + 1.0) as f32;
+    (inv_yarn, mscale)
+}
+
+// ---------------------------------------------------------------------------
+// Forward outputs
+// ---------------------------------------------------------------------------
+
+pub(crate) struct FwdOut {
+    /// `[T, h]` post-final-norm rows (fast path; logits materialize
+    /// lazily at read time). Empty on the naive path.
+    pub hidden: Vec<f32>,
+    /// `[T, V]` eager logits (naive path). Empty on the fast path.
+    pub logits: Vec<f32>,
+    /// `[T, 3h]` fused EAGLE-3 feature (empty when the model has < 3 taps)
+    pub feats: Vec<f32>,
+    /// per layer `[H, T, D]` post-RoPE queries (empty unless requested)
+    pub queries: Vec<Vec<f32>>,
+}
+
+impl FwdOut {
+    /// Return the arena-owned buffers for reuse.
+    pub fn recycle(self, arena: &mut Arena) {
+        arena.give(self.hidden);
+        arena.give(self.logits);
+        arena.give(self.feats);
+    }
+}
+
+fn embed_rows(x: &mut [f32], tokens: &[i32], embed: &[f32], h: usize, vocab: usize) {
+    for (i, &tok) in tokens.iter().enumerate() {
+        let row = (tok.max(0) as usize).min(vocab - 1);
+        x[i * h..(i + 1) * h].copy_from_slice(&embed[row * h..(row + 1) * h]);
+    }
+}
+
+fn queries_transposed(xq: &[f32], t: usize, n_head: usize, d: usize) -> Vec<f32> {
+    // [T, H·D] → [H, T, D]
+    let hd = n_head * d;
+    let mut q = vec![0f32; hd * t];
+    for i in 0..t {
+        for hh in 0..n_head {
+            q[(hh * t + i) * d..(hh * t + i) * d + d]
+                .copy_from_slice(&xq[i * hd + hh * d..i * hd + hh * d + d]);
+        }
+    }
+    q
+}
+
+// ---------------------------------------------------------------------------
+// Fast path
+// ---------------------------------------------------------------------------
+
+/// One transformer layer (`model.py::layer_fwd`): writes this step's K/V
+/// rows at `write_pos`, runs tree attention, returns the post-RoPE
+/// queries (an arena buffer the caller must `give` back).
+#[allow(clippy::too_many_arguments)]
+fn layer_fwd(
+    w: &LayerW,
+    cfg: &RefCfg,
+    pool: &Pool,
+    arena: &mut Arena,
+    x: &mut [f32],
+    pos: &[i32],
+    kv: &mut [f32],
+    dims: KvDims,
+    layer: usize,
+    kv_len: usize,
+    write_pos: usize,
+    mask: &[f32],
+    rope: &RopeTab,
+    mscale: f32,
+) -> Vec<f32> {
+    let t = pos.len();
+    let (h, hd, d) = (cfg.d_model, cfg.hd(), cfg.d_head);
+    let tk = mask.len() / t;
+    let mut hn = arena.take(t * h);
+    rmsnorm_into(&mut hn, x, &w.ln1, t, h);
+    let mut xq = arena.take(t * hd);
+    let mut xk = arena.take(t * hd);
+    let mut xv = arena.take(t * hd);
+    matmul_t(pool, &mut xq, &hn, &w.wq, t);
+    matmul_t(pool, &mut xk, &hn, &w.wk, t);
+    matmul_t(pool, &mut xv, &hn, &w.wv, t);
+    rope_apply_tab(&mut xq, rope, t, cfg.n_head, d);
+    rope_apply_tab(&mut xk, rope, t, cfg.n_head, d);
+
+    // functional dynamic_update_slice (clamped start, full T-row block)
+    let start = write_pos.min(dims.b.saturating_sub(t));
+    for i in 0..t {
+        for hh in 0..cfg.n_head {
+            let krow = dims.row(layer, 0, hh, start + i);
+            kv[krow..krow + d].copy_from_slice(&xk[i * hd + hh * d..i * hd + hh * d + d]);
+            let vrow = dims.row(layer, 1, hh, start + i);
+            kv[vrow..vrow + d].copy_from_slice(&xv[i * hd + hh * d..i * hd + hh * d + d]);
+        }
+    }
+
+    let scale = mscale / (d as f32).sqrt();
+    let mut att = arena.take(t * hd);
+    attention(pool, &mut att, &xq, kv, dims, layer, t, tk, mask, kv_len, scale);
+    let mut proj = arena.take(t * h);
+    matmul_t(pool, &mut proj, &att, &w.wo, t);
+    for (xx, p) in x.iter_mut().zip(&proj) {
+        *xx += p;
+    }
+
+    // MLP; hn is re-normed in place, proj doubles as the down buffer
+    rmsnorm_into(&mut hn, x, &w.ln2, t, h);
+    let mut g = arena.take(t * cfg.d_ff);
+    let mut u = arena.take(t * cfg.d_ff);
+    matmul_t(pool, &mut g, &hn, &w.wg, t);
+    matmul_t(pool, &mut u, &hn, &w.wu, t);
+    for (gv, &uv) in g.iter_mut().zip(&u) {
+        *gv = silu(*gv) * uv;
+    }
+    matmul_t(pool, &mut proj, &g, &w.wd, t);
+    for (xx, p) in x.iter_mut().zip(&proj) {
+        *xx += p;
+    }
+    arena.give(hn);
+    arena.give(xk);
+    arena.give(xv);
+    arena.give(att);
+    arena.give(proj);
+    arena.give(g);
+    arena.give(u);
+    xq
+}
+
+/// Target forward (`model.py::target_fwd`): serves prefill, AR decode,
+/// full/partial/refresh verification and the tiny LM — only the bucket,
+/// token count and mask differ. Fast path: returns post-final-norm
+/// hidden rows instead of projecting the vocabulary.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn target_fwd(
+    model: &RefModel,
+    pool: &Pool,
+    arena: &mut Arena,
+    kv: &mut [f32],
+    bucket: usize,
+    tokens: &[i32],
+    pos: &[i32],
+    mask: &[f32],
+    kv_len: usize,
+    write_pos: usize,
+    want_queries: bool,
+) -> FwdOut {
+    let cfg = &model.cfg;
+    let t = tokens.len();
+    let h = cfg.d_model;
+    let dims = KvDims { l: cfg.n_layer, h: cfg.n_head, b: bucket, d: cfg.d_head };
+    let mut x = arena.take(t * h);
+    embed_rows(&mut x, tokens, &model.target.embed, h, cfg.vocab);
+    let rope = rope_tab(pos, &model.inv_freq);
+    let taps = cfg.feat_layers();
+    let has_feats = cfg.has_feats();
+    let mut feats = if has_feats { arena.take(t * 3 * h) } else { Vec::new() };
+    let mut queries: Vec<Vec<f32>> = Vec::new();
+    for (l, w) in model.target.layers.iter().enumerate() {
+        if has_feats {
+            if let Some(slot) = taps.iter().position(|&tl| tl == l) {
+                for i in 0..t {
+                    feats[i * 3 * h + slot * h..i * 3 * h + (slot + 1) * h]
+                        .copy_from_slice(&x[i * h..(i + 1) * h]);
+                }
+            }
+        }
+        let xq = layer_fwd(
+            w, cfg, pool, arena, &mut x, pos, kv, dims, l, kv_len, write_pos, mask, &rope,
+            model.mscale,
+        );
+        if want_queries {
+            queries.push(queries_transposed(&xq, t, cfg.n_head, cfg.d_head));
+        }
+        arena.give(xq);
+    }
+    let mut hidden = arena.take(t * h);
+    rmsnorm_into(&mut hidden, &x, &model.target.ln_f, t, h);
+    arena.give(x);
+    FwdOut { hidden, logits: Vec::new(), feats, queries }
+}
+
+/// Draft decoder forward (`model.py::draft_fwd`). Expand steps keep
+/// eager logits (every draft row is read every step); prefill passes
+/// `want_logits = false` — the op contract zeroes the logits region, so
+/// projecting the chunk would be the op's single largest matmul thrown
+/// away. The returned hidden is the pre-norm residual, moved without a
+/// copy.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn draft_fwd(
+    model: &RefModel,
+    pool: &Pool,
+    arena: &mut Arena,
+    kv: &mut [f32],
+    bucket: usize,
+    tokens: &[i32],
+    feats: &[f32],
+    pos: &[i32],
+    mask: &[f32],
+    kv_len: usize,
+    write_pos: usize,
+    want_logits: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    let cfg = &model.cfg;
+    let dw = model.draft.as_ref().expect("draft weights");
+    let t = tokens.len();
+    let h = cfg.d_model;
+    let dims = KvDims { l: 1, h: cfg.n_head, b: bucket, d: cfg.d_head };
+    let mut f = arena.take(t * h);
+    matmul_t(pool, &mut f, feats, &dw.fuse, t);
+    let mut cat = arena.take(t * 2 * h);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let row = (tok.max(0) as usize).min(cfg.vocab - 1);
+        cat[i * 2 * h..i * 2 * h + h]
+            .copy_from_slice(&model.target.embed[row * h..(row + 1) * h]);
+        cat[i * 2 * h + h..(i + 1) * 2 * h].copy_from_slice(&f[i * h..(i + 1) * h]);
+    }
+    let mut x = arena.take(t * h);
+    matmul_t(pool, &mut x, &cat, &dw.inp, t);
+    let rope = rope_tab(pos, &model.inv_freq);
+    let xq = layer_fwd(
+        &dw.layer, cfg, pool, arena, &mut x, pos, kv, dims, 0, kv_len, write_pos, mask,
+        &rope, model.mscale,
+    );
+    arena.give(xq);
+    arena.give(cat);
+    if !want_logits {
+        arena.give(f);
+        return (Vec::new(), x);
+    }
+    let mut xf = f; // reuse the fuse buffer for the final norm
+    rmsnorm_into(&mut xf, &x, &dw.ln_f, t, h);
+    let mut logits = arena.take(t * cfg.vocab);
+    matmul_t(pool, &mut logits, &xf, &model.target.head, t);
+    arena.give(xf);
+    (logits, x)
+}
+
+// ---------------------------------------------------------------------------
+// Naive oracle path (the original scalar pipeline, kept verbatim)
+// ---------------------------------------------------------------------------
+
+fn matmul_alloc(x: &[f32], w: &Mat, t: usize) -> Vec<f32> {
+    let mut out = vec![0f32; t * w.dout];
+    matmul_naive(&mut out, x, w, t);
+    out
+}
+
+fn rmsnorm_alloc(x: &[f32], g: &[f32], t: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0f32; t * h];
+    rmsnorm_into(&mut out, x, g, t, h);
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn layer_fwd_naive(
+    w: &LayerW,
+    cfg: &RefCfg,
+    x: &mut Vec<f32>,
+    pos: &[i32],
+    kv: &mut [f32],
+    dims: KvDims,
+    layer: usize,
+    kv_len: usize,
+    write_pos: usize,
+    mask: &[f32],
+    inv_freq: &[f32],
+    mscale: f32,
+) -> Vec<f32> {
+    let t = pos.len();
+    let (h, hd, d) = (cfg.d_model, cfg.hd(), cfg.d_head);
+    let tk = mask.len() / t;
+    let hn = rmsnorm_alloc(x, &w.ln1, t, h);
+    let mut xq = matmul_alloc(&hn, &w.wq, t);
+    let mut xk = matmul_alloc(&hn, &w.wk, t);
+    let xv = matmul_alloc(&hn, &w.wv, t);
+    rope_apply_naive(&mut xq, pos, inv_freq, t, cfg.n_head, d);
+    rope_apply_naive(&mut xk, pos, inv_freq, t, cfg.n_head, d);
+
+    let start = write_pos.min(dims.b.saturating_sub(t));
+    for i in 0..t {
+        for hh in 0..cfg.n_head {
+            let krow = dims.row(layer, 0, hh, start + i);
+            kv[krow..krow + d].copy_from_slice(&xk[i * hd + hh * d..i * hd + hh * d + d]);
+            let vrow = dims.row(layer, 1, hh, start + i);
+            kv[vrow..vrow + d].copy_from_slice(&xv[i * hd + hh * d..i * hd + hh * d + d]);
+        }
+    }
+
+    let scale = mscale / (d as f32).sqrt();
+    let mut att = vec![0f32; t * hd];
+    attention_naive(&mut att, &xq, kv, dims, layer, t, tk, mask, kv_len, scale);
+    let proj = matmul_alloc(&att, &w.wo, t);
+    for (xx, p) in x.iter_mut().zip(&proj) {
+        *xx += p;
+    }
+
+    let h2 = rmsnorm_alloc(x, &w.ln2, t, h);
+    let g = matmul_alloc(&h2, &w.wg, t);
+    let u = matmul_alloc(&h2, &w.wu, t);
+    let act: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
+    let down = matmul_alloc(&act, &w.wd, t);
+    for (xx, p) in x.iter_mut().zip(&down) {
+        *xx += p;
+    }
+    xq
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn target_fwd_naive(
+    model: &RefModel,
+    kv: &mut [f32],
+    bucket: usize,
+    tokens: &[i32],
+    pos: &[i32],
+    mask: &[f32],
+    kv_len: usize,
+    write_pos: usize,
+    want_queries: bool,
+) -> FwdOut {
+    let cfg = &model.cfg;
+    let t = tokens.len();
+    let h = cfg.d_model;
+    let dims = KvDims { l: cfg.n_layer, h: cfg.n_head, b: bucket, d: cfg.d_head };
+    let mut x = vec![0f32; t * h];
+    embed_rows(&mut x, tokens, &model.target.embed, h, cfg.vocab);
+    let taps = cfg.feat_layers();
+    let mut feats: Vec<Vec<f32>> = Vec::new();
+    let mut queries: Vec<Vec<f32>> = Vec::new();
+    for (l, w) in model.target.layers.iter().enumerate() {
+        if cfg.has_feats() && taps.contains(&l) {
+            feats.push(x.clone());
+        }
+        let xq = layer_fwd_naive(
+            w, cfg, &mut x, pos, kv, dims, l, kv_len, write_pos, mask, &model.inv_freq,
+            model.mscale,
+        );
+        if want_queries {
+            queries.push(queries_transposed(&xq, t, cfg.n_head, cfg.d_head));
+        }
+    }
+    let xf = rmsnorm_alloc(&x, &model.target.ln_f, t, h);
+    let logits = matmul_alloc(&xf, &model.target.head, t);
+    let fused = if cfg.has_feats() {
+        let mut f = vec![0f32; t * 3 * h];
+        for i in 0..t {
+            for (s, fv) in feats.iter().enumerate() {
+                f[i * 3 * h + s * h..i * 3 * h + (s + 1) * h]
+                    .copy_from_slice(&fv[i * h..(i + 1) * h]);
+            }
+        }
+        f
+    } else {
+        Vec::new()
+    };
+    FwdOut { hidden: Vec::new(), logits, feats: fused, queries }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn draft_fwd_naive(
+    model: &RefModel,
+    kv: &mut [f32],
+    bucket: usize,
+    tokens: &[i32],
+    feats: &[f32],
+    pos: &[i32],
+    mask: &[f32],
+    kv_len: usize,
+    write_pos: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let cfg = &model.cfg;
+    let dw = model.draft.as_ref().expect("draft weights");
+    let t = tokens.len();
+    let h = cfg.d_model;
+    let dims = KvDims { l: 1, h: cfg.n_head, b: bucket, d: cfg.d_head };
+    let f = matmul_alloc(feats, &dw.fuse, t);
+    let mut cat = vec![0f32; t * 2 * h];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let row = (tok.max(0) as usize).min(cfg.vocab - 1);
+        cat[i * 2 * h..i * 2 * h + h]
+            .copy_from_slice(&model.target.embed[row * h..(row + 1) * h]);
+        cat[i * 2 * h + h..(i + 1) * 2 * h].copy_from_slice(&f[i * h..(i + 1) * h]);
+    }
+    let mut x = matmul_alloc(&cat, &dw.inp, t);
+    layer_fwd_naive(
+        &dw.layer, cfg, &mut x, pos, kv, dims, 0, kv_len, write_pos, mask, &model.inv_freq,
+        model.mscale,
+    );
+    let hidden = x.clone();
+    let xf = rmsnorm_alloc(&x, &dw.ln_f, t, h);
+    let logits = matmul_alloc(&xf, &model.target.head, t);
+    (logits, hidden)
+}

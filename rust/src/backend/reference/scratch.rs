@@ -1,0 +1,73 @@
+//! Scratch arena for the reference backend's hot paths.
+//!
+//! Every forward used to allocate a dozen fresh `Vec<f32>` temporaries
+//! per layer (`matmul`, `rmsnorm`, attention accumulators, feature taps).
+//! The arena keeps those buffers alive across backend ops: a kernel
+//! `take`s a zeroed buffer, uses it, and `give`s it back when the op
+//! finishes, so the per-layer temporaries of the steady-state decode
+//! loop allocate nothing. (A few small per-forward buffers remain plain
+//! `Vec`s by design: the RoPE table, the per-layer transposed query
+//! copies when a verify requests them, and the vectors an op returns to
+//! the caller.)
+//!
+//! Lifetimes are intentionally simple: buffers live exactly for one
+//! backend op (the op's entry point borrows the backend's
+//! `RefCell<Arena>` for its whole duration, which is fine because a
+//! backend serves one op at a time). Worker threads never touch the
+//! arena — parallel kernels receive pre-`take`n buffers and write
+//! disjoint chunks of them.
+
+/// A free-list of reusable `f32` buffers. `take` pops (or allocates) and
+/// zero-fills to the requested length; `give` returns a buffer to the
+/// list. Capacity grows to the high-water mark of each slot and stays.
+#[derive(Default)]
+pub(crate) struct Arena {
+    free: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// A zero-filled buffer of exactly `len` elements.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer for reuse. Zero-capacity vectors (the empty
+    /// placeholders various ops pass around) are dropped, not pooled.
+    pub fn give(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.free.len() < 32 {
+            self.free.push(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reuses_capacity() {
+        let mut a = Arena::new();
+        let mut v = a.take(8);
+        assert_eq!(v, vec![0.0; 8]);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        let cap = v.capacity();
+        a.give(v);
+        let v2 = a.take(4);
+        assert_eq!(v2, vec![0.0; 4], "reused buffer must be re-zeroed");
+        assert!(v2.capacity() >= 4 && cap >= 8);
+    }
+
+    #[test]
+    fn empty_buffers_are_not_pooled() {
+        let mut a = Arena::new();
+        a.give(Vec::new());
+        assert!(a.free.is_empty());
+    }
+}

@@ -1,0 +1,497 @@
+//! `specpv bench backend` — per-op microbenchmarks of the reference
+//! backend at the CI-scale geometry, fast kernels vs the naive scalar
+//! oracle, plus end-to-end decoding across the five engines.
+//!
+//! Emits the usual `results/backend_ops.{md,json}` pair **and**
+//! `BENCH_backend.json` at the current directory (the repo root in CI),
+//! so the perf trajectory of the host path is tracked PR over PR. With
+//! `--check`, compares the fast-path op means against the committed
+//! `BENCH_baseline.json` ceilings and fails on a >2× regression.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::reference::ReferenceBackend;
+use crate::backend::{
+    Backend, CommitOp, DraftExpandOp, DraftPrefillOp, GatherOp, PrefillOp, ReadOp, ScoreOp,
+    StateKind, TinyForwardOp, VerifyOp,
+};
+use crate::config::{BackendKind, Config, EngineKind, SpecPvConfig};
+use crate::engine::{self, GenRequest};
+use crate::json::Json;
+use crate::util::stats::Samples;
+use crate::{corpus, tokenizer, tree};
+
+use super::{fmt_speedup, measure, Table, SCHEMA_VERSION};
+
+/// Regression tolerance for `--check`: an op fails when its fast-path
+/// mean exceeds `REGRESSION_FACTOR ×` the committed baseline ceiling.
+const REGRESSION_FACTOR: f64 = 2.0;
+
+/// The file `--check` compares against (committed at the repo root).
+const BASELINE_FILE: &str = "BENCH_baseline.json";
+
+/// The rolling per-PR output (repo root; uploaded as a CI artifact).
+const OUTPUT_FILE: &str = "BENCH_backend.json";
+
+// CI-scale scenario geometry: a long-context session mid-decode.
+const SIZE: &str = "s";
+const FULL_BUCKET: usize = 1024;
+const PARTIAL_BUCKET: usize = 384;
+const COMMITTED: usize = 512;
+const CORE_LEN: usize = 192;
+
+struct OpTimes {
+    name: &'static str,
+    samples: Samples,
+}
+
+/// Run the op scenario against one backend instance.
+fn bench_ops(be: &ReferenceBackend, warmup: usize, iters: usize) -> Result<Vec<OpTimes>> {
+    let consts = be.consts().clone();
+    let c = consts.chunk;
+    let t_tree = consts.tree_t;
+    let t_refresh = consts.refresh_t;
+    let block = consts.block;
+    let info = be.model(SIZE)?;
+    let zero_prev = [0i32; 8];
+
+    // -- setup: prefill COMMITTED tokens into a full state ------------------
+    let mut full = Some(be.alloc_state(StateKind::Full, SIZE, FULL_BUCKET)?);
+    for ci in 0..COMMITTED / c {
+        let toks: Vec<i32> = (0..c).map(|i| 65 + ((ci * c + i) % 26) as i32).collect();
+        let pos: Vec<i32> = (0..c).map(|i| (ci * c + i) as i32).collect();
+        let mask = tree::chain_mask(c, c);
+        let op = PrefillOp {
+            size: SIZE,
+            bucket: FULL_BUCKET,
+            tokens: &toks,
+            pos: &pos,
+            mask: &mask,
+            kv_len: ci * c,
+        };
+        full = Some(be.prefill(&op, full.take().unwrap())?);
+    }
+
+    let mut out = Vec::new();
+    let chunk_toks: Vec<i32> = (0..c).map(|i| 65 + (i % 26) as i32).collect();
+    let chunk_pos: Vec<i32> = (0..c).map(|i| (COMMITTED + i) as i32).collect();
+    let chunk_mask = tree::chain_mask(c, c);
+
+    // -- prefill (one chunk appended at COMMITTED, + the tail-row read) -----
+    out.push(OpTimes {
+        name: "prefill",
+        samples: measure(warmup, iters, || {
+            let op = PrefillOp {
+                size: SIZE,
+                bucket: FULL_BUCKET,
+                tokens: &chunk_toks,
+                pos: &chunk_pos,
+                mask: &chunk_mask,
+                kv_len: COMMITTED,
+            };
+            let st = be.prefill(&op, full.take().unwrap())?;
+            be.read_logits(&ReadOp::LastRow { size: SIZE, bucket: FULL_BUCKET, idx: c - 1 }, &st)?;
+            full = Some(st);
+            Ok(())
+        })?,
+    });
+
+    // -- verify_full (tree step at COMMITTED, + the window read) ------------
+    let tree_toks: Vec<i32> = (0..t_tree).map(|i| 65 + (i % 26) as i32).collect();
+    let tree_pos: Vec<i32> = (0..t_tree).map(|i| (COMMITTED + i) as i32).collect();
+    let tree_mask = tree::chain_mask(t_tree, t_tree);
+    out.push(OpTimes {
+        name: "verify_full",
+        samples: measure(warmup, iters, || {
+            let op = VerifyOp {
+                size: SIZE,
+                bucket: FULL_BUCKET,
+                t: t_tree,
+                tokens: &tree_toks,
+                pos: &tree_pos,
+                mask: &tree_mask,
+                kv_len: COMMITTED,
+                prev_idx: &zero_prev,
+                n_prev: 0,
+            };
+            let st = be.verify_full(&op, full.take().unwrap())?;
+            be.read_logits(&ReadOp::FullWindow { size: SIZE, bucket: FULL_BUCKET, start: 0 }, &st)?;
+            full = Some(st);
+            Ok(())
+        })?,
+    });
+
+    // -- verify_refresh (the wide refresh variant) --------------------------
+    let rf_toks: Vec<i32> = (0..t_refresh).map(|i| 65 + (i % 26) as i32).collect();
+    let rf_pos: Vec<i32> = (0..t_refresh).map(|i| (COMMITTED + i) as i32).collect();
+    let rf_mask = tree::chain_mask(t_refresh, t_refresh);
+    out.push(OpTimes {
+        name: "verify_refresh",
+        samples: measure(warmup, iters, || {
+            let op = VerifyOp {
+                size: SIZE,
+                bucket: FULL_BUCKET,
+                t: t_refresh,
+                tokens: &rf_toks,
+                pos: &rf_pos,
+                mask: &rf_mask,
+                kv_len: COMMITTED,
+                prev_idx: &zero_prev,
+                n_prev: 0,
+            };
+            let st = be.verify_full(&op, full.take().unwrap())?;
+            be.read_logits(&ReadOp::FullWindow { size: SIZE, bucket: FULL_BUCKET, start: 0 }, &st)?;
+            full = Some(st);
+            Ok(())
+        })?,
+    });
+
+    // -- score + gather (Refresh support ops) -------------------------------
+    out.push(OpTimes {
+        name: "score",
+        samples: measure(warmup, iters, || {
+            let op = ScoreOp {
+                size: SIZE,
+                bucket: FULL_BUCKET,
+                kv_len: COMMITTED,
+                n_queries: 8,
+            };
+            be.score(&op, full.as_ref().unwrap())?;
+            Ok(())
+        })?,
+    });
+
+    // block plan: the first CORE_LEN/block committed blocks, padded by
+    // repeating the final selection (the documented GatherOp convention)
+    let nsel = PARTIAL_BUCKET / block;
+    let ncore = CORE_LEN / block;
+    let mut block_idx = Vec::with_capacity(info.n_layer * nsel);
+    for _layer in 0..info.n_layer {
+        for s in 0..nsel {
+            block_idx.push(s.min(ncore - 1) as i32);
+        }
+    }
+    out.push(OpTimes {
+        name: "gather",
+        samples: measure(warmup, iters, || {
+            let op = GatherOp {
+                size: SIZE,
+                bucket: FULL_BUCKET,
+                p_bucket: PARTIAL_BUCKET,
+                block_idx: &block_idx,
+            };
+            be.refresh_gather(&op, full.as_ref().unwrap())?;
+            Ok(())
+        })?,
+    });
+
+    // -- verify_partial (tree step against the gathered core) ---------------
+    let gop = GatherOp {
+        size: SIZE,
+        bucket: FULL_BUCKET,
+        p_bucket: PARTIAL_BUCKET,
+        block_idx: &block_idx,
+    };
+    let mut partial = Some(be.refresh_gather(&gop, full.as_ref().unwrap())?);
+    let ptree_pos: Vec<i32> = (0..t_tree).map(|i| (COMMITTED + i) as i32).collect();
+    out.push(OpTimes {
+        name: "verify_partial",
+        samples: measure(warmup, iters, || {
+            let op = VerifyOp {
+                size: SIZE,
+                bucket: PARTIAL_BUCKET,
+                t: t_tree,
+                tokens: &tree_toks,
+                pos: &ptree_pos,
+                mask: &tree_mask,
+                kv_len: CORE_LEN,
+                prev_idx: &zero_prev,
+                n_prev: 0,
+            };
+            let st = be.verify_partial(&op, partial.take().unwrap())?;
+            be.read_logits(&ReadOp::Partial { size: SIZE, bucket: PARTIAL_BUCKET }, &st)?;
+            partial = Some(st);
+            Ok(())
+        })?,
+    });
+
+    // -- commit (standalone post-Refresh compaction) ------------------------
+    // keep every other window row so the compaction actually moves data
+    let commit_idx: Vec<i32> =
+        (0..t_refresh).map(|i| (2 * i).min(t_refresh - 1) as i32).collect();
+    out.push(OpTimes {
+        name: "commit",
+        samples: measure(warmup, iters, || {
+            let op = CommitOp {
+                size: SIZE,
+                bucket: FULL_BUCKET,
+                window: t_refresh,
+                idx: &commit_idx,
+                n: 24,
+                kv_len: COMMITTED,
+            };
+            let st = be.commit(&op, full.take().unwrap())?;
+            full = Some(st);
+            Ok(())
+        })?,
+    });
+
+    // -- draft_expand (EAGLE W-slot step) -----------------------------------
+    let mut draft = Some(be.alloc_state(StateKind::Draft, SIZE, FULL_BUCKET)?);
+    {
+        let op = DraftPrefillOp {
+            size: SIZE,
+            bucket: FULL_BUCKET,
+            tokens: &chunk_toks,
+            pos: &chunk_pos,
+            mask: &chunk_mask,
+            kv_len: 0,
+            write_pos: 0,
+        };
+        draft = Some(be.draft_prefill(&op, full.as_ref().unwrap(), draft.take().unwrap())?);
+    }
+    let w = consts.draft_w;
+    let region = consts.draft_region;
+    let dr_toks: Vec<i32> = (0..w).map(|i| 66 + i as i32).collect();
+    let dr_feats = vec![0.05f32; w * 3 * info.d_model];
+    let dr_pos: Vec<i32> = (0..w).map(|i| (c + i) as i32).collect();
+    let mut dr_mask = vec![0f32; w * region];
+    for i in 0..w {
+        for j in 0..=i {
+            dr_mask[i * region + j] = 1.0;
+        }
+    }
+    out.push(OpTimes {
+        name: "draft_expand",
+        samples: measure(warmup, iters, || {
+            let op = DraftExpandOp {
+                size: SIZE,
+                bucket: FULL_BUCKET,
+                tokens: &dr_toks,
+                feats: &dr_feats,
+                pos: &dr_pos,
+                mask: &dr_mask,
+                kv_len: c,
+                write_pos: c,
+            };
+            let st = be.draft_expand(&op, draft.take().unwrap())?;
+            be.read_logits(&ReadOp::Draft { size: SIZE, bucket: FULL_BUCKET }, &st)?;
+            draft = Some(st);
+            Ok(())
+        })?,
+    });
+
+    // -- tiny_forward (TriForce draft step) ---------------------------------
+    let mut tiny = Some(be.alloc_state(StateKind::Tiny, "tiny", consts.tiny_bucket)?);
+    {
+        let tiny_pos: Vec<i32> = (0..c).map(|i| i as i32).collect();
+        let op = TinyForwardOp {
+            t: c,
+            tokens: &chunk_toks,
+            pos: &tiny_pos,
+            mask: &chunk_mask,
+            kv_len: 0,
+            write_pos: 0,
+            last_idx: c - 1,
+        };
+        tiny = Some(be.tiny_forward(&op, tiny.take().unwrap())?);
+    }
+    out.push(OpTimes {
+        name: "tiny_forward",
+        samples: measure(warmup, iters, || {
+            let op = TinyForwardOp {
+                t: 1,
+                tokens: &[70],
+                pos: &[c as i32],
+                mask: &[1.0],
+                kv_len: c,
+                write_pos: c,
+                last_idx: 0,
+            };
+            let st = be.tiny_forward(&op, tiny.take().unwrap())?;
+            be.read_logits(&ReadOp::Tiny, &st)?;
+            tiny = Some(st);
+            Ok(())
+        })?,
+    });
+
+    // -- medusa ------------------------------------------------------------
+    let feat = vec![0.1f32; info.d_model];
+    out.push(OpTimes {
+        name: "medusa",
+        samples: measure(warmup, iters, || {
+            be.medusa(SIZE, &feat)?;
+            Ok(())
+        })?,
+    });
+
+    Ok(out)
+}
+
+/// End-to-end decode timing per engine on the fast backend.
+fn bench_engines(be: &dyn Backend, iters: usize) -> Result<Vec<(EngineKind, Samples, usize)>> {
+    let base = Config {
+        backend: BackendKind::Reference,
+        specpv: SpecPvConfig { retrieval_budget: 64, ..SpecPvConfig::default() },
+        ..Config::default()
+    };
+    let prompt = corpus::continuation_prompt(1, 600);
+    let req = GenRequest::greedy(tokenizer::encode(&prompt), 32);
+    let mut out = Vec::new();
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::SpecFull,
+        EngineKind::SpecPv,
+        EngineKind::TriForce,
+        EngineKind::TokenSwift,
+    ] {
+        let mut cfg = base.clone();
+        cfg.engine = kind;
+        let mut toks = 0usize;
+        let samples = measure(1, iters, || {
+            let r = engine::generate_with(&cfg, be, &req)?;
+            toks = r.tokens.len();
+            Ok(())
+        })?;
+        out.push((kind, samples, toks));
+    }
+    Ok(out)
+}
+
+fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Drive the whole backend bench; see the module docs for outputs.
+pub fn run(out_dir: &Path, quick: bool, check: bool) -> Result<()> {
+    let (warm, fast_iters, naive_iters, eng_iters) =
+        if quick { (2, 10, 3, 2) } else { (3, 50, 8, 5) };
+
+    let fast_be = ReferenceBackend::new();
+    let naive_be = ReferenceBackend::naive();
+    eprintln!("[bench backend] {}", fast_be.describe());
+
+    let fast = bench_ops(&fast_be, warm, fast_iters)?;
+    let naive = bench_ops(&naive_be, 1, naive_iters)?;
+
+    let mut ops_table = Table::new(
+        "Reference-backend op timings (CI geometry, fast vs naive oracle)",
+        &["op", "naive ms", "fast ms", "speedup", "fast p50 ms", "fast p95 ms"],
+    );
+    let mut op_rows = Vec::new();
+    let mut core_speedups = Vec::new();
+    let mut fast_ms = std::collections::BTreeMap::new();
+    for (f, n) in fast.iter().zip(&naive) {
+        assert_eq!(f.name, n.name, "op order must match across modes");
+        let fm = f.samples.mean() * 1e3;
+        let nm = n.samples.mean() * 1e3;
+        let speedup = if fm > 0.0 { nm / fm } else { 0.0 };
+        if matches!(f.name, "prefill" | "verify_full" | "verify_partial") {
+            core_speedups.push(speedup);
+        }
+        fast_ms.insert(f.name.to_string(), fm);
+        let row_json = Json::obj()
+            .set("op", f.name)
+            .set("naive_ms", nm)
+            .set("fast_ms", fm)
+            .set("speedup", speedup)
+            .set("p50_ms", f.samples.p50() * 1e3)
+            .set("p95_ms", f.samples.p95() * 1e3);
+        ops_table.row(
+            vec![
+                f.name.to_string(),
+                format!("{nm:.3}"),
+                format!("{fm:.3}"),
+                fmt_speedup(speedup),
+                format!("{:.3}", f.samples.p50() * 1e3),
+                format!("{:.3}", f.samples.p95() * 1e3),
+            ],
+            row_json.clone(),
+        );
+        op_rows.push(row_json);
+    }
+    let gm = geomean(&core_speedups);
+    eprintln!(
+        "[bench backend] geomean speedup over prefill/verify_full/verify_partial: {}",
+        fmt_speedup(gm)
+    );
+    if let (Some(vf), Some(vp)) = (fast_ms.get("verify_full"), fast_ms.get("verify_partial")) {
+        eprintln!(
+            "[bench backend] verify_partial / verify_full cost ratio: {:.2} ({vp:.3} vs {vf:.3} ms)",
+            vp / vf
+        );
+    }
+    ops_table.emit(out_dir, "backend_ops")?;
+
+    let engines = bench_engines(&fast_be, eng_iters)?;
+    let mut eng_table = Table::new(
+        "Engine end-to-end decode (fast reference backend, 32 new tokens)",
+        &["engine", "mean ms/gen", "tok/s"],
+    );
+    let mut eng_rows = Vec::new();
+    for (kind, s, toks) in &engines {
+        let tps = s.per_sec(*toks as f64);
+        let row_json = Json::obj()
+            .set("engine", format!("{kind:?}"))
+            .set("mean_ms", s.mean() * 1e3)
+            .set("tokens", *toks)
+            .set("tok_per_sec", tps);
+        eng_table.row(
+            vec![
+                format!("{kind:?}"),
+                format!("{:.2}", s.mean() * 1e3),
+                format!("{tps:.1}"),
+            ],
+            row_json.clone(),
+        );
+        eng_rows.push(row_json);
+    }
+    eng_table.emit(out_dir, "backend_engines")?;
+
+    let combined = Json::obj()
+        .set("schema_version", SCHEMA_VERSION)
+        .set("threads", crate::util::pool::global().threads())
+        .set("geomean_speedup", gm)
+        .set("ops", Json::Arr(op_rows))
+        .set("engines", Json::Arr(eng_rows));
+    std::fs::write(OUTPUT_FILE, combined.to_string())?;
+    eprintln!("[bench backend] wrote {OUTPUT_FILE}");
+
+    if check {
+        check_baseline(&fast_ms)?;
+    }
+    Ok(())
+}
+
+/// Compare fast-path means against the committed ceilings; fail on >2×.
+fn check_baseline(fast_ms: &std::collections::BTreeMap<String, f64>) -> Result<()> {
+    let text = std::fs::read_to_string(BASELINE_FILE)
+        .with_context(|| format!("--check requires {BASELINE_FILE} in the current directory"))?;
+    let base = Json::parse(&text)?;
+    let ops = base
+        .at("ops")?
+        .as_arr()
+        .context("baseline 'ops' must be an array")?;
+    let mut violations = Vec::new();
+    for entry in ops {
+        let name = entry.at("op")?.as_str().context("baseline op name")?;
+        let ceiling = entry.at("mean_ms")?.as_f64().context("baseline mean_ms")?;
+        match fast_ms.get(name) {
+            Some(&got) if got > REGRESSION_FACTOR * ceiling => violations.push(format!(
+                "{name}: {got:.3} ms > {REGRESSION_FACTOR}x baseline {ceiling:.3} ms"
+            )),
+            Some(_) => {}
+            None => eprintln!("[bench backend] baseline op '{name}' not measured, skipping"),
+        }
+    }
+    if !violations.is_empty() {
+        bail!("perf regression vs {BASELINE_FILE}:\n  {}", violations.join("\n  "));
+    }
+    eprintln!("[bench backend] baseline check passed ({} ops)", ops.len());
+    Ok(())
+}

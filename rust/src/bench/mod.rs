@@ -1,6 +1,9 @@
 //! In-repo benchmark harness (criterion is not in the offline vendor
 //! set). Provides warmup/measure loops, Markdown/JSON table emission and
-//! the `results/` directory convention used by every paper-table driver.
+//! the `results/` directory convention used by every paper-table driver,
+//! plus the backend micro-bench behind `specpv bench backend`.
+
+pub mod backend;
 
 use std::fs;
 use std::path::Path;
@@ -10,6 +13,11 @@ use anyhow::Result;
 
 use crate::json::Json;
 use crate::util::stats::Samples;
+
+/// Version stamp written into every emitted `*.json` result so
+/// `BENCH_*.json` files are comparable across PRs; bump when the row
+/// shape of any table changes incompatibly.
+pub const SCHEMA_VERSION: usize = 1;
 
 /// Measure a closure: `warmup` unrecorded runs, then `iters` recorded.
 pub fn measure<F: FnMut() -> Result<()>>(
@@ -73,15 +81,21 @@ impl Table {
         println!("{md}");
         fs::create_dir_all(dir)?;
         fs::write(dir.join(format!("{name}.md")), &md)?;
-        let j = Json::obj()
+        let j = self.to_json();
+        fs::write(dir.join(format!("{name}.json")), j.to_string())?;
+        Ok(())
+    }
+
+    /// Machine-readable form (the same object `emit` persists).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema_version", SCHEMA_VERSION)
             .set("title", self.title.as_str())
             .set(
                 "headers",
                 Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
             )
-            .set("rows", Json::Arr(self.json_rows.clone()));
-        fs::write(dir.join(format!("{name}.json")), j.to_string())?;
-        Ok(())
+            .set("rows", Json::Arr(self.json_rows.clone()))
     }
 }
 
@@ -123,5 +137,17 @@ mod tests {
     fn table_row_arity_checked() {
         let mut t = Table::new("x", &["a"]);
         t.row(vec!["1".into(), "2".into()], Json::Null);
+    }
+
+    #[test]
+    fn emitted_json_carries_schema_version() {
+        let mut t = Table::new("demo", &["a"]);
+        t.row(vec!["1".into()], Json::obj().set("a", 1usize));
+        let j = t.to_json();
+        assert_eq!(
+            j.get("schema_version").and_then(|x| x.as_usize()),
+            Some(SCHEMA_VERSION)
+        );
+        assert!(j.get("rows").and_then(|x| x.as_arr()).is_some());
     }
 }

@@ -14,6 +14,8 @@
 //! 4. **prune** — keep the best `tree_size` nodes by cumulative draft
 //!    log-probability (EAGLE-2-style top-N selection).
 
+use std::collections::HashMap;
+
 use anyhow::Result;
 
 use crate::config::Config;
@@ -23,12 +25,23 @@ use crate::tree::Tree;
 use super::session::DraftSession;
 
 /// Tile a hidden state (h) to the 3h fused-feature width (model.recycle).
+/// The tick path below tiles straight into the feats buffer via `tile3`;
+/// this allocating form is kept for callers that need an owned feature.
 pub fn recycle(hidden: &[f32]) -> Vec<f32> {
-    let mut v = Vec::with_capacity(hidden.len() * 3);
-    for _ in 0..3 {
-        v.extend_from_slice(hidden);
-    }
+    let mut v = vec![0f32; hidden.len() * 3];
+    tile3(&mut v, hidden);
     v
+}
+
+/// `recycle` into an existing `[3h]` slot — the per-node tick path uses
+/// this to tile hiddens straight into the feats buffer without the
+/// intermediate allocation.
+fn tile3(dst: &mut [f32], hidden: &[f32]) {
+    let h = hidden.len();
+    debug_assert_eq!(dst.len(), 3 * h);
+    for s in 0..3 {
+        dst[s * h..(s + 1) * h].copy_from_slice(hidden);
+    }
 }
 
 /// Inputs for one drafting round.
@@ -64,40 +77,44 @@ pub fn draft_tree(
 
     // --- 1. catch-up chain (pass-0: target features) ----------------------
     let n_chain = inp.chain.len();
-    let mut prev_hidden = inp.prev_hidden.clone();
-    if n_chain > 0 {
+    let chain_out;
+    let prev_hidden: &[f32] = if n_chain > 0 {
         assert!(n_chain <= w, "chain {n_chain} exceeds draft width {w}");
         let tokens: Vec<u32> = inp.chain.iter().map(|(t, _)| *t).collect();
         let mut feats = vec![0f32; w * f3];
         for (i, (_, f)) in inp.chain.iter().enumerate() {
             feats[i * f3..(i + 1) * f3].copy_from_slice(f);
         }
-        let out = draft.chain(&tokens, &feats, inp.chain_start_pos)?;
-        prev_hidden = out.hidden(n_chain - 1).to_vec();
-    }
+        chain_out = draft.chain(&tokens, &feats, inp.chain_start_pos)?;
+        chain_out.hidden(n_chain - 1)
+    } else {
+        &inp.prev_hidden
+    };
 
     // --- 2. bonus step (pass-1: recycled predecessor hidden) --------------
     let root_pos = inp.chain_start_pos + n_chain;
     let mut feats = vec![0f32; w * f3];
-    feats[..f3].copy_from_slice(&recycle(&prev_hidden));
+    tile3(&mut feats[..f3], prev_hidden);
     let out = draft.chain(&[inp.bonus], &feats, root_pos)?;
     let root_logits = log_softmax(out.logits(0));
     let root_hidden = out.hidden(0).to_vec();
 
     let mut tree = Tree::new(inp.bonus);
 
-    // node bookkeeping: tree idx → (scratch ancestors, recycled feature)
+    // node bookkeeping: tree idx → (scratch ancestors, node hidden);
+    // keyed map instead of the old linear-scan pair list, and hiddens are
+    // stored untiled (h, not 3h) and tiled straight into the feats buffer
     struct Meta {
         anc: Vec<usize>,
-        feat: Vec<f32>,
+        hidden: Vec<f32>,
     }
-    let mut meta: Vec<(usize, Meta)> = Vec::new();
+    let mut meta: HashMap<usize, Meta> = HashMap::new();
 
     // --- 3a. level 1: root's children --------------------------------------
     let mut frontier: Vec<usize> = Vec::new();
     for &tk in top_k(&root_logits, cfg.tree_top_k).iter() {
         let idx = tree.add(0, tk as u32, root_logits[tk]);
-        meta.push((idx, Meta { anc: Vec::new(), feat: recycle(&root_hidden) }));
+        meta.insert(idx, Meta { anc: Vec::new(), hidden: root_hidden.clone() });
         frontier.push(idx);
     }
 
@@ -115,11 +132,11 @@ pub fn draft_tree(
         frontier.truncate(w.min(cfg.tree_top_k));
         let toks: Vec<u32> = frontier.iter().map(|&i| tree.nodes[i].token).collect();
         let mut fts = vec![0f32; w * f3];
-        let mut ancs: Vec<Vec<usize>> = Vec::new();
-        let mut pos: Vec<i32> = Vec::new();
+        let mut ancs: Vec<Vec<usize>> = Vec::with_capacity(frontier.len());
+        let mut pos: Vec<i32> = Vec::with_capacity(w);
         for (s, &ti) in frontier.iter().enumerate() {
-            let m = &meta.iter().find(|(i, _)| *i == ti).unwrap().1;
-            fts[s * f3..(s + 1) * f3].copy_from_slice(&m.feat);
+            let m = &meta[&ti];
+            tile3(&mut fts[s * f3..(s + 1) * f3], &m.hidden);
             ancs.push(m.anc.clone());
             pos.push((root_pos + tree.nodes[ti].depth) as i32);
         }
@@ -128,20 +145,15 @@ pub fn draft_tree(
         }
         let (out, offsets) = draft.level(&toks, &fts, &pos, &ancs)?;
 
-        let parents = frontier.clone();
-        frontier.clear();
+        let parents = std::mem::take(&mut frontier);
         for (s, &pi) in parents.iter().enumerate() {
             let lp = log_softmax(out.logits(s));
             let hid = out.hidden(s);
-            let panc = {
-                let m = &meta.iter().find(|(i, _)| *i == pi).unwrap().1;
-                let mut a = m.anc.clone();
-                a.push(offsets[s]);
-                a
-            };
+            let mut panc = meta[&pi].anc.clone();
+            panc.push(offsets[s]);
             for &tk in top_k(&lp, 2).iter() {
                 let idx = tree.add(pi, tk as u32, lp[tk]);
-                meta.push((idx, Meta { anc: panc.clone(), feat: recycle(hid) }));
+                meta.insert(idx, Meta { anc: panc.clone(), hidden: hid.to_vec() });
                 frontier.push(idx);
             }
         }

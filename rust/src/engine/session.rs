@@ -283,12 +283,13 @@ impl<'a> TargetSession<'a> {
 
     /// Single row logits+feats at `idx` (prefill tail).
     pub fn read_last(&self, idx: usize) -> Result<(Vec<f32>, Vec<f32>)> {
-        let data = self.be.read_logits(
+        let mut data = self.be.read_logits(
             &ReadOp::LastRow { size: &self.size, bucket: self.bucket, idx },
             &self.state,
         )?;
-        let v = self.info.vocab;
-        Ok((data[..v].to_vec(), data[v..].to_vec()))
+        // split the download in place instead of copying both halves
+        let feats = data.split_off(self.info.vocab);
+        Ok((data, feats))
     }
 }
 

@@ -6,6 +6,10 @@
 //! specpv serve    [--addr 127.0.0.1:7799] [--max-active 4]
 //! specpv bench    <fig1|table1|fig4|table2|table3|fig5|table4|fig6|fig7|fig8|all>
 //!                 [--out results] [--quick]
+//! specpv bench backend [--quick] [--check]   # reference-backend op bench
+//!                 # fast vs naive-oracle timings + five-engine e2e;
+//!                 # writes BENCH_backend.json at the repo root; --check
+//!                 # fails on a >2x regression vs BENCH_baseline.json
 //! specpv inspect  # backend / artifact catalog summary
 //! ```
 //! Common flags: `--artifacts DIR --size s|m|l --engine E --budget N
@@ -142,9 +146,19 @@ fn main() -> Result<()> {
             server::serve(be.as_ref(), cfg)?;
         }
         Some("bench") => {
-            let be = backend::from_config(&cfg)?;
             let id = cli.sub().unwrap_or("all").to_string();
             let out = PathBuf::from(cli.opt_or("out", "results"));
+            if id == "backend" {
+                // reference-backend microbench: times each kernel op fast
+                // vs the naive oracle and the five engines end-to-end;
+                // writes BENCH_backend.json at the repo root
+                return specpv::bench::backend::run(
+                    &out,
+                    cli.has_flag("quick"),
+                    cli.has_flag("check"),
+                );
+            }
+            let be = backend::from_config(&cfg)?;
             harness::run_experiment(be.as_ref(), &cfg, &id, &out, cli.has_flag("quick"))?;
             let c = be.counters();
             eprintln!(

@@ -1,10 +1,13 @@
-//! Small substrates: RNG, timing, statistics, property-testing.
+//! Small substrates: RNG, timing, statistics, threading, property-testing.
 //!
-//! The offline build environment has no `rand`, `criterion` or `proptest`
-//! crates, so the pieces of them this project needs are implemented here
-//! (and double as paper-faithful determinism: the corpus generators must
-//! match `python/compile/data.py` bit-for-bit).
+//! The offline build environment has no `rand`, `criterion`, `rayon` or
+//! `proptest` crates, so the pieces of them this project needs are
+//! implemented here (and double as paper-faithful determinism: the corpus
+//! generators must match `python/compile/data.py` bit-for-bit, and the
+//! thread pool's chunked parallel-for keeps kernel results byte-identical
+//! at any thread count).
 
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,326 @@
+//! Hand-rolled scoped thread pool for the reference backend's kernels
+//! (rayon is not in the offline vendor set).
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Determinism**: [`Pool::run`] executes `f(0)…f(chunks-1)` where
+//!    every chunk writes a *disjoint* part of the output and no chunk
+//!    reads another chunk's output. Because no floating-point reduction
+//!    ever crosses a chunk boundary, results are byte-identical at any
+//!    thread count (including 1) and under any scheduling order.
+//! 2. **No per-call spawn cost**: workers are persistent and block on a
+//!    condvar; a `run` call posts one broadcast job per helper and the
+//!    calling thread participates in the chunk loop itself, so a pool of
+//!    size 1 (or a tiny job) degenerates to a plain serial loop.
+//! 3. **No new dependencies**: `std` only.
+//!
+//! The default pool size comes from the `SPECPV_THREADS` environment
+//! variable, falling back to `available_parallelism` capped at 8 (the
+//! reference geometry is small; more threads only add sync overhead).
+//!
+//! Safety model: `run` erases the closure's lifetime to move it across
+//! threads, and is sound because it blocks on a completion latch before
+//! returning — no worker can observe the closure (or anything it
+//! borrows) after `run` returns. A panicking chunk is caught on the
+//! worker, recorded, and re-raised on the calling thread once every
+//! chunk finished, so the latch always completes.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// A persistent pool of `threads - 1` workers; the caller of [`Pool::run`]
+/// is always the remaining participant.
+pub struct Pool {
+    inner: Arc<Inner>,
+    threads: usize,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+struct Inner {
+    q: Mutex<Queue>,
+    cv: Condvar,
+}
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Type-erased pointer to the on-stack [`RunCtx`] of an active `run`
+/// call. Valid for the duration of that call (the latch guarantees it).
+struct Job(*const ());
+
+// SAFETY: the pointee is a RunCtx pinned on the stack of a `run` call
+// that blocks until every job referencing it has counted down.
+unsafe impl Send for Job {}
+
+/// Shared state of one `run` call: the chunk cursor, the closure and the
+/// completion latch the caller blocks on.
+struct RunCtx<'a> {
+    f: &'a (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    n: usize,
+    latch: Latch,
+    /// first caught panic payload, re-raised on the calling thread so
+    /// the original assertion message/location survives the pool hop
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl RunCtx<'_> {
+    /// Claim-and-run chunks until the cursor runs out.
+    fn drive(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            let f = self.f;
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        }
+    }
+}
+
+/// Count-down latch (Mutex + Condvar; `std::sync::Barrier` cannot express
+/// "wait for k helpers that may be busy elsewhere").
+struct Latch {
+    left: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { left: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut left = self.left.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.left.lock().unwrap();
+        while *left > 0 {
+            left = self.cv.wait(left).unwrap();
+        }
+    }
+}
+
+fn worker(inner: Arc<Inner>) {
+    loop {
+        let job = {
+            let mut q = inner.q.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = inner.cv.wait(q).unwrap();
+            }
+        };
+        // SAFETY: the posting `run` call blocks on ctx.latch until this
+        // count_down, so ctx outlives every access here.
+        let ctx = unsafe { &*(job.0 as *const RunCtx) };
+        ctx.drive();
+        ctx.latch.count_down();
+    }
+}
+
+impl Pool {
+    /// Pool with `threads` total participants (min 1). `threads - 1`
+    /// worker threads are spawned; the `run` caller is the last one.
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let inner = Arc::new(Inner {
+            q: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|w| {
+                let inner = Arc::clone(&inner);
+                thread::Builder::new()
+                    .name(format!("specpv-pool-{w}"))
+                    .spawn(move || worker(inner))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { inner, threads, workers }
+    }
+
+    /// Total participants (workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0)…f(chunks-1)` across the pool and block until all chunks
+    /// completed. Chunks must be independent (each writes disjoint data),
+    /// which is what keeps results identical at any thread count.
+    ///
+    /// Panics (on the calling thread) if any chunk panicked.
+    pub fn run(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        if self.threads == 1 || chunks == 1 {
+            for i in 0..chunks {
+                f(i);
+            }
+            return;
+        }
+        let helpers = (self.threads - 1).min(chunks - 1);
+        let ctx = RunCtx {
+            f,
+            next: AtomicUsize::new(0),
+            n: chunks,
+            latch: Latch::new(helpers),
+            panic: Mutex::new(None),
+        };
+        let job_ptr = &ctx as *const RunCtx as *const ();
+        {
+            let mut q = self.inner.q.lock().unwrap();
+            for _ in 0..helpers {
+                q.jobs.push_back(Job(job_ptr));
+            }
+        }
+        self.inner.cv.notify_all();
+        ctx.drive();
+        ctx.latch.wait();
+        if let Some(payload) = ctx.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.inner.q.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Thread count for the process-wide pool: `SPECPV_THREADS` override, else
+/// `available_parallelism` capped at 8.
+pub fn default_threads() -> usize {
+    match std::env::var("SPECPV_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n.min(64),
+        _ => thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8),
+    }
+}
+
+/// Process-wide shared pool (kernels are tiny at the reference geometry;
+/// one pool amortizes worker spawn across every backend instance).
+pub fn global() -> &'static Arc<Pool> {
+    static GLOBAL: OnceLock<Arc<Pool>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(Pool::new(default_threads())))
+}
+
+/// Split `n` items into `chunks` near-equal contiguous ranges; returns
+/// the half-open range of chunk `c`. Deterministic in (n, chunks, c).
+pub fn split_range(n: usize, chunks: usize, c: usize) -> (usize, usize) {
+    let base = n / chunks;
+    let rem = n % chunks;
+    let start = c * base + c.min(rem);
+    let len = base + usize::from(c < rem);
+    (start, (start + len).min(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn split_range_covers_everything() {
+        for n in [0usize, 1, 5, 16, 17, 100] {
+            for chunks in [1usize, 2, 3, 7, 16] {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for c in 0..chunks {
+                    let (a, b) = split_range(n, chunks, c);
+                    assert_eq!(a, prev_end, "ranges must be contiguous");
+                    assert!(b >= a);
+                    covered += b - a;
+                    prev_end = b;
+                }
+                assert_eq!(covered, n, "n={n} chunks={chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_executes_every_chunk_once() {
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let hits: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+            pool.run(37, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64).sin()).collect();
+        let pool = Pool::new(4);
+        // per-chunk partial sums into disjoint slots, combined in fixed order
+        let chunks = 8;
+        let mut partial = vec![0f64; chunks];
+        {
+            let slots: Vec<Mutex<f64>> = (0..chunks).map(|_| Mutex::new(0.0)).collect();
+            pool.run(chunks, &|c| {
+                let (a, b) = split_range(xs.len(), chunks, c);
+                *slots[c].lock().unwrap() = xs[a..b].iter().sum::<f64>();
+            });
+            for (p, s) in partial.iter_mut().zip(&slots) {
+                *p = *s.lock().unwrap();
+            }
+        }
+        let serial: f64 = (0..chunks)
+            .map(|c| {
+                let (a, b) = split_range(xs.len(), chunks, c);
+                xs[a..b].iter().sum::<f64>()
+            })
+            .sum();
+        assert_eq!(partial.iter().sum::<f64>(), serial);
+    }
+
+    #[test]
+    fn chunk_panic_propagates_without_deadlock() {
+        let pool = Pool::new(3);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, &|i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must surface on the caller");
+        // pool still usable afterwards
+        let n = AtomicU64::new(0);
+        pool.run(8, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
+    }
+}

@@ -85,8 +85,24 @@ impl Samples {
         self.percentile(50.0)
     }
 
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
     pub fn p99(&self) -> f64 {
         self.percentile(99.0)
+    }
+
+    /// Throughput derivation for duration samples: `units` of work per
+    /// mean sample (e.g. tokens per second when the samples are seconds
+    /// per generation of `units` tokens). 0.0 on empty/degenerate input.
+    pub fn per_sec(&self, units: f64) -> f64 {
+        let m = self.mean();
+        if m <= 0.0 {
+            0.0
+        } else {
+            units / m
+        }
     }
 }
 
@@ -123,5 +139,15 @@ mod tests {
         let s = Samples::default();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.p95(), 0.0);
+        assert_eq!(s.per_sec(100.0), 0.0);
+    }
+
+    #[test]
+    fn per_sec_derivation() {
+        let mut s = Samples::default();
+        s.push(0.5);
+        s.push(1.5); // mean 1.0s per batch
+        assert!((s.per_sec(32.0) - 32.0).abs() < 1e-12);
     }
 }

@@ -1,0 +1,106 @@
+//! Parity and determinism pins for the optimized reference backend:
+//!
+//!   * the fast kernel pipeline (blocked parallel matmuls, scratch arena,
+//!     RoPE tables, lazy logits) is **byte-identical** to the naive
+//!     scalar oracle (`ReferenceBackend::naive()`) — at the raw-op level
+//!     and across whole engine generations;
+//!   * the thread count never changes a single byte: a SpecPV session at
+//!     1 thread equals the same session at N threads, bit for bit.
+
+use specpv::backend::reference::ReferenceBackend;
+use specpv::backend::{Backend, PrefillOp, ReadOp, StateKind, VerifyOp};
+use specpv::config::{BackendKind, Config, EngineKind, SpecPvConfig};
+use specpv::corpus;
+use specpv::engine::{self, GenRequest};
+use specpv::tokenizer;
+use specpv::tree;
+
+fn base_cfg() -> Config {
+    Config {
+        backend: BackendKind::Reference,
+        // small core so SpecPV leaves Full mode on the test prompts
+        specpv: SpecPvConfig { retrieval_budget: 64, ..SpecPvConfig::default() },
+        ..Config::default()
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run a fixed op sequence (prefill chunk → tail read → tree verify →
+/// window read) and return every downloaded byte.
+fn op_trace(be: &dyn Backend) -> Vec<u32> {
+    let consts = be.consts().clone();
+    let c = consts.chunk;
+    let bucket = 288;
+    let st = be.alloc_state(StateKind::Full, "s", bucket).unwrap();
+    let toks: Vec<i32> = (0..c).map(|i| 65 + (i % 26) as i32).collect();
+    let pos: Vec<i32> = (0..c as i32).collect();
+    let mask = tree::chain_mask(c, c);
+    let op = PrefillOp { size: "s", bucket, tokens: &toks, pos: &pos, mask: &mask, kv_len: 0 };
+    let st = be.prefill(&op, st).unwrap();
+    let mut out = bits(
+        &be.read_logits(&ReadOp::LastRow { size: "s", bucket, idx: c - 1 }, &st).unwrap(),
+    );
+    let t = consts.tree_t;
+    let ttoks: Vec<i32> = (0..t as i32).map(|i| 70 + i).collect();
+    let tpos: Vec<i32> = (0..t).map(|i| (c + i) as i32).collect();
+    let tmask = tree::chain_mask(t, t);
+    let zero = [0i32; 8];
+    let vop = VerifyOp {
+        size: "s",
+        bucket,
+        t,
+        tokens: &ttoks,
+        pos: &tpos,
+        mask: &tmask,
+        kv_len: c,
+        prev_idx: &zero,
+        n_prev: 0,
+    };
+    let st = be.verify_full(&vop, st).unwrap();
+    out.extend(bits(
+        &be.read_logits(&ReadOp::FullWindow { size: "s", bucket, start: 0 }, &st).unwrap(),
+    ));
+    out
+}
+
+#[test]
+fn fast_backend_matches_naive_oracle_at_op_level() {
+    let fast = op_trace(&ReferenceBackend::new());
+    let naive = op_trace(&ReferenceBackend::naive());
+    assert_eq!(fast.len(), naive.len());
+    assert_eq!(fast, naive, "fast kernels diverged from the scalar oracle");
+}
+
+#[test]
+fn generation_is_identical_across_kernel_modes() {
+    let fast = ReferenceBackend::new();
+    let naive = ReferenceBackend::naive();
+    let prompt = corpus::continuation_prompt(7, 160);
+    let req = GenRequest::greedy(tokenizer::encode(&prompt), 32);
+    for kind in [EngineKind::SpecFull, EngineKind::SpecPv, EngineKind::TriForce] {
+        let mut cfg = base_cfg();
+        cfg.engine = kind;
+        let a = engine::generate_with(&cfg, &fast, &req).unwrap();
+        let b = engine::generate_with(&cfg, &naive, &req).unwrap();
+        assert_eq!(a.tokens, b.tokens, "{kind:?}: kernel mode changed the output");
+    }
+}
+
+#[test]
+fn generation_is_identical_across_thread_counts() {
+    let one = ReferenceBackend::with_threads(1);
+    let four = ReferenceBackend::with_threads(4);
+    assert_eq!(op_trace(&one), op_trace(&four), "thread count changed raw op bytes");
+    let prompt = corpus::continuation_prompt(9, 170);
+    let req = GenRequest::greedy(tokenizer::encode(&prompt), 40);
+    for kind in [EngineKind::Autoregressive, EngineKind::SpecPv] {
+        let mut cfg = base_cfg();
+        cfg.engine = kind;
+        let a = engine::generate_with(&cfg, &one, &req).unwrap();
+        let b = engine::generate_with(&cfg, &four, &req).unwrap();
+        assert_eq!(a.tokens, b.tokens, "{kind:?}: thread count changed the output");
+    }
+}
