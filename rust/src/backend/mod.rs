@@ -101,6 +101,45 @@ impl std::fmt::Debug for StateBuf {
     }
 }
 
+/// A host-side snapshot of a state buffer (the KV state manager's unit
+/// of exchange — see DESIGN.md §11): the flat f32 state of DESIGN.md §4
+/// plus any backend-private lazy rows, tagged with the geometry needed to
+/// re-import it. Produced by [`Backend::export_state`], consumed by
+/// [`Backend::import_state`]; stored by `kvstore` for prefix caching and
+/// session swapping.
+#[derive(Clone)]
+pub struct StateSnapshot {
+    pub kind: StateKind,
+    pub size: String,
+    pub bucket: usize,
+    /// the flat state (kv | logits | feats | queries)
+    pub data: Vec<f32>,
+    /// backend-private extra rows (reference backend: the lazy-logits
+    /// hidden rows; always empty on pjrt)
+    pub extra: Vec<f32>,
+}
+
+impl StateSnapshot {
+    /// Host bytes this snapshot occupies.
+    pub fn bytes(&self) -> usize {
+        (self.data.len() + self.extra.len()) * 4
+    }
+}
+
+impl std::fmt::Debug for StateSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "StateSnapshot({:?} {} b{}, {} f32 + {} extra)",
+            self.kind,
+            self.size,
+            self.bucket,
+            self.data.len(),
+            self.extra.len()
+        )
+    }
+}
+
 /// Which flat-state layout a buffer follows (DESIGN.md §4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StateKind {
@@ -283,6 +322,27 @@ pub trait Backend {
 
     /// Fresh all-zero state of the given kind.
     fn alloc_state(&self, kind: StateKind, size: &str, bucket: usize) -> Result<StateBuf>;
+
+    /// Resident bytes of one `(kind, size, bucket)` state — the unit the
+    /// KV pool's admission accounting is denominated in.
+    fn state_bytes(&self, kind: StateKind, size: &str, bucket: usize) -> Result<usize> {
+        Ok(self.state_layout(kind, size, bucket)?.total * 4)
+    }
+
+    /// Host snapshot of a state buffer (device→host readback on pjrt; a
+    /// host copy on the reference backend). The snapshot is exact: a
+    /// state rebuilt by [`Backend::import_state`] continues generation
+    /// byte-identically.
+    fn export_state(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        state: &StateBuf,
+    ) -> Result<StateSnapshot>;
+
+    /// Rebuild a state buffer from a snapshot produced by this backend.
+    fn import_state(&self, snap: &StateSnapshot) -> Result<StateBuf>;
 
     // --- kernel ops -----------------------------------------------------
 

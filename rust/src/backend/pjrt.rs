@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use xla::PjRtBuffer;
 
 use crate::manifest::{Consts, Manifest, ModelInfo, StateLayout};
@@ -129,6 +129,53 @@ impl super::Backend for PjrtBackend {
     fn alloc_state(&self, kind: StateKind, size: &str, bucket: usize) -> Result<StateBuf> {
         let layout = self.state_layout(kind, size, bucket)?;
         Ok(StateBuf::new(self.rt.zero_state(layout.total)?))
+    }
+
+    fn export_state(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        state: &StateBuf,
+    ) -> Result<super::StateSnapshot> {
+        // device→host readback over the existing flat-state ABI: the
+        // threaded buffer IS the whole state, so one download suffices
+        let buf = state.downcast_ref::<PjRtBuffer>()?;
+        let data = self.rt.download_f32(buf)?;
+        let layout = self.state_layout(kind, size, bucket)?;
+        if data.len() != layout.total {
+            bail!(
+                "export: device buffer holds {} f32, {:?} {size} b{bucket} layout wants {}",
+                data.len(),
+                kind,
+                layout.total
+            );
+        }
+        Ok(super::StateSnapshot {
+            kind,
+            size: size.to_string(),
+            bucket,
+            data,
+            extra: Vec::new(),
+        })
+    }
+
+    fn import_state(&self, snap: &super::StateSnapshot) -> Result<StateBuf> {
+        if !snap.extra.is_empty() {
+            bail!("pjrt snapshots carry no extra rows (got {})", snap.extra.len());
+        }
+        let layout = self.state_layout(snap.kind, &snap.size, snap.bucket)?;
+        if snap.data.len() != layout.total {
+            bail!(
+                "import: snapshot holds {} f32, {:?} {} b{} layout wants {}",
+                snap.data.len(),
+                snap.kind,
+                snap.size,
+                snap.bucket,
+                layout.total
+            );
+        }
+        Ok(StateBuf::new(self.rt.upload_f32(&snap.data, &[snap.data.len()])?))
     }
 
     fn prefill(&self, op: &PrefillOp, state: StateBuf) -> Result<StateBuf> {

@@ -426,6 +426,54 @@ impl super::Backend for ReferenceBackend {
         Ok(StateBuf::new(HostState::zeroed(lay.total)))
     }
 
+    fn export_state(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        state: &StateBuf,
+    ) -> Result<super::StateSnapshot> {
+        let lay = self.state_layout(kind, size, bucket)?;
+        let hs = state.downcast_ref::<HostState>()?;
+        if hs.data.len() != lay.total {
+            bail!(
+                "export: state length {} != {:?} {size} b{bucket} layout total {}",
+                hs.data.len(),
+                kind,
+                lay.total
+            );
+        }
+        // the lazy hidden rows travel with the snapshot, so a restored
+        // state materializes the exact same logits bytes on read
+        self.counters.borrow_mut().download_bytes += ((hs.data.len() + hs.hidden.len()) * 4) as u64;
+        Ok(super::StateSnapshot {
+            kind,
+            size: size.to_string(),
+            bucket,
+            data: hs.data.clone(),
+            extra: hs.hidden.clone(),
+        })
+    }
+
+    fn import_state(&self, snap: &super::StateSnapshot) -> Result<StateBuf> {
+        let lay = self.state_layout(snap.kind, &snap.size, snap.bucket)?;
+        if snap.data.len() != lay.total {
+            bail!(
+                "import: snapshot length {} != {:?} {} b{} layout total {}",
+                snap.data.len(),
+                snap.kind,
+                snap.size,
+                snap.bucket,
+                lay.total
+            );
+        }
+        self.counters.borrow_mut().upload_bytes += snap.bytes() as u64;
+        Ok(StateBuf::new(HostState {
+            data: snap.data.clone(),
+            hidden: snap.extra.clone(),
+        }))
+    }
+
     fn prefill(&self, op: &PrefillOp, state: StateBuf) -> Result<StateBuf> {
         let zero_prev = [0i32; PREV_MAX];
         self.verify_like(
@@ -946,6 +994,53 @@ mod tests {
         for (i, (a, bb)) in chain[..v].iter().zip(&step[..v]).enumerate() {
             assert!((a - bb).abs() < 1e-5, "logit {i}: {a} vs {bb}");
         }
+    }
+
+    #[test]
+    fn export_import_roundtrip_preserves_reads_bytewise() {
+        // export → import must preserve the lazy-hidden rows: reads off
+        // the imported state (which re-run the lm_head projection) must
+        // match reads off the original byte-for-byte
+        let b = be();
+        let st = b.alloc_state(StateKind::Full, "s", 128).unwrap();
+        let t = TREE_T;
+        let tokens: Vec<i32> = (0..t as i32).map(|i| 66 + i).collect();
+        let pos: Vec<i32> = (0..t as i32).collect();
+        let mask = crate::tree::chain_mask(t, t);
+        let zero = [0i32; PREV_MAX];
+        let op = VerifyOp {
+            size: "s",
+            bucket: 128,
+            t,
+            tokens: &tokens,
+            pos: &pos,
+            mask: &mask,
+            kv_len: 0,
+            prev_idx: &zero,
+            n_prev: 0,
+        };
+        let st = b.verify_full(&op, st).unwrap();
+        let read = |s: &StateBuf| {
+            b.read_logits(&ReadOp::FullWindow { size: "s", bucket: 128, start: 0 }, s)
+                .unwrap()
+        };
+        let before = read(&st);
+        let snap = b.export_state(StateKind::Full, "s", 128, &st).unwrap();
+        assert!(!snap.extra.is_empty(), "fast path must export hidden rows");
+        assert_eq!(snap.bytes(), (snap.data.len() + snap.extra.len()) * 4);
+        let st2 = b.import_state(&snap).unwrap();
+        let after = read(&st2);
+        assert!(
+            before.iter().zip(&after).all(|(a, c)| a.to_bits() == c.to_bits()),
+            "imported state reads diverged"
+        );
+        // geometry mismatches are rejected
+        let mut bad = snap.clone();
+        bad.data.pop();
+        assert!(b.import_state(&bad).is_err());
+        // and state_bytes matches the layout
+        let lay = b.state_layout(StateKind::Full, "s", 128).unwrap();
+        assert_eq!(b.state_bytes(StateKind::Full, "s", 128).unwrap(), lay.total * 4);
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! `specpv bench kvstore` — measures what the KV state manager buys and
+//! what it costs on the reference backend:
+//!
+//! * **prefix-hit TTFT vs cold-prefill TTFT** at the 1024-token bucket:
+//!   the same long prompt started cold (every chunk prefilled) and warm
+//!   (restored from the prompt-prefix snapshot cache, only the tail
+//!   chunk prefilled). The run fails if the hit path is not strictly
+//!   faster — that speedup is the subsystem's reason to exist.
+//! * **snapshot export/import** cost of a full 1024-bucket state (the
+//!   unit of both prefix caching and swapping).
+//! * **swap round-trip** cost of a live spec_pv session mid-generation
+//!   (suspend → resume), plus a byte-identity check against an
+//!   undisturbed run.
+//!
+//! Emits `results/kvstore_{ttft,costs}.{md,json}` and a combined
+//! `BENCH_kvstore.json` at the current directory (the repo root in CI).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::backend::reference::ReferenceBackend;
+use crate::backend::Backend;
+use crate::config::{BackendKind, Config, EngineKind, SpecPvConfig};
+use crate::engine::{self, GenRequest};
+use crate::json::Json;
+use crate::kvstore::KvStore;
+use crate::offload::OffloadSim;
+use crate::util::stats::Samples;
+use crate::{corpus, tokenizer};
+
+use super::{fmt_speedup, measure, Table, SCHEMA_VERSION};
+
+const OUTPUT_FILE: &str = "BENCH_kvstore.json";
+
+/// Prompt length targeting the 1024 full bucket (prompt + max_new +
+/// chunk + refresh headroom ≤ 1024 on the reference geometry).
+const PROMPT_TOKENS: usize = 850;
+const MAX_NEW: usize = 16;
+
+fn prompt_req(be: &dyn Backend) -> (GenRequest, usize) {
+    let text = corpus::continuation_prompt(1, 4 * PROMPT_TOKENS);
+    let mut toks = tokenizer::encode(&text);
+    toks.truncate(PROMPT_TOKENS);
+    let req = GenRequest::greedy(toks, MAX_NEW);
+    let need = crate::model::bucket_need(req.prompt.len(), req.max_new, be.consts());
+    let bucket = crate::backend::pick_bucket(&be.full_buckets("s"), need, "full", "s")
+        .expect("reference backend has a bucket for the bench prompt");
+    (req, bucket)
+}
+
+/// Cold vs prefix-hit time-to-first-token (engine start = prefill + the
+/// first pick, i.e. the TTFT the coordinator reports).
+fn bench_ttft(
+    be: &ReferenceBackend,
+    warmup: usize,
+    iters: usize,
+) -> Result<(Samples, Samples, usize, KvStore)> {
+    let cfg = Config {
+        backend: BackendKind::Reference,
+        engine: EngineKind::Autoregressive,
+        ..Config::default()
+    };
+    let (req, bucket) = prompt_req(be);
+
+    let cold = measure(warmup, iters, || {
+        let session = engine::build(&cfg).start(be, &req, None)?;
+        drop(session);
+        Ok(())
+    })?;
+
+    let store = KvStore::new(64 << 20);
+    // prime: one miss inserts the boundary snapshot
+    drop(engine::build(&cfg).start(be, &req, Some(&store))?);
+    let warm = measure(warmup, iters, || {
+        let session = engine::build(&cfg).start(be, &req, Some(&store))?;
+        drop(session);
+        Ok(())
+    })?;
+    Ok((cold, warm, bucket, store))
+}
+
+/// Export/import of a full state at the bench bucket.
+fn bench_snapshot(
+    be: &ReferenceBackend,
+    warmup: usize,
+    iters: usize,
+) -> Result<(Samples, Samples, usize)> {
+    let (req, _bucket) = prompt_req(be);
+    let mut target = crate::engine::session::TargetSession::new(
+        be,
+        "s",
+        crate::model::bucket_need(req.prompt.len(), req.max_new, be.consts()),
+        OffloadSim::new(Default::default()),
+    )?;
+    target.prefill(&req.prompt, None, None)?;
+    let mut bytes = 0usize;
+    let export = measure(warmup, iters, || {
+        let snap = target.export()?;
+        bytes = snap.bytes();
+        Ok(())
+    })?;
+    let snap = target.export()?;
+    let import = measure(warmup, iters, || {
+        target.restore(&snap)?;
+        Ok(())
+    })?;
+    Ok((export, import, bytes))
+}
+
+/// Swap round-trip (suspend → resume) on a live spec_pv session, with a
+/// byte-identity check against an undisturbed run.
+fn bench_swap(be: &ReferenceBackend, iters: usize) -> Result<(Samples, Samples, usize)> {
+    let cfg = Config {
+        backend: BackendKind::Reference,
+        engine: EngineKind::SpecPv,
+        specpv: SpecPvConfig { retrieval_budget: 64, ..SpecPvConfig::default() },
+        ..Config::default()
+    };
+    let text = corpus::continuation_prompt(2, 2400);
+    let mut toks = tokenizer::encode(&text);
+    toks.truncate(600);
+    let req = GenRequest::greedy(toks, 32);
+
+    let baseline = engine::generate_with(&cfg, be, &req)?;
+
+    let mut session = engine::build(&cfg).start(be, &req, None)?;
+    session.step()?;
+    let state_bytes = session.state_bytes();
+    let mut out_s = Samples::default();
+    let mut in_s = Samples::default();
+    for _ in 0..iters {
+        if session.is_finished() {
+            break;
+        }
+        let t0 = Instant::now();
+        let snaps = session.suspend()?;
+        out_s.push(t0.elapsed().as_secs_f64());
+        let t1 = Instant::now();
+        session.resume(snaps)?;
+        in_s.push(t1.elapsed().as_secs_f64());
+        session.step()?;
+    }
+    while !session.is_finished() {
+        session.step()?;
+    }
+    let swapped = session.finish();
+    if swapped.tokens != baseline.tokens {
+        bail!(
+            "swap round-trip changed the output ({} vs {} tokens)",
+            swapped.tokens.len(),
+            baseline.tokens.len()
+        );
+    }
+    Ok((out_s, in_s, state_bytes))
+}
+
+/// Drive the kvstore bench; see the module docs for outputs.
+pub fn run(out_dir: &Path, quick: bool) -> Result<()> {
+    let (warmup, iters, swap_iters) = if quick { (1, 3, 4) } else { (2, 8, 10) };
+    let be = ReferenceBackend::new();
+    eprintln!("[bench kvstore] {}", be.describe());
+
+    let (cold, warm, bucket, store) = bench_ttft(&be, warmup, iters)?;
+    let speedup = if warm.mean() > 0.0 { cold.mean() / warm.mean() } else { 0.0 };
+    let ps = store.stats();
+    let mut ttft_table = Table::new(
+        "KV state manager: prefix-hit vs cold-prefill TTFT",
+        &["path", "mean ms", "p50 ms", "p95 ms"],
+    );
+    let mut ttft_rows = Vec::new();
+    for (name, s) in [("cold_prefill", &cold), ("prefix_hit", &warm)] {
+        let row = Json::obj()
+            .set("path", name)
+            .set("mean_ms", s.mean() * 1e3)
+            .set("p50_ms", s.p50() * 1e3)
+            .set("p95_ms", s.p95() * 1e3)
+            .set("prompt_tokens", PROMPT_TOKENS)
+            .set("bucket", bucket);
+        ttft_table.row(
+            vec![
+                name.to_string(),
+                format!("{:.3}", s.mean() * 1e3),
+                format!("{:.3}", s.p50() * 1e3),
+                format!("{:.3}", s.p95() * 1e3),
+            ],
+            row.clone(),
+        );
+        ttft_rows.push(row);
+    }
+    ttft_table.emit(out_dir, "kvstore_ttft")?;
+    eprintln!(
+        "[bench kvstore] prefix-hit TTFT speedup at b{bucket}: {} \
+         ({} hits / {} misses, {} entries, {} bytes cached)",
+        fmt_speedup(speedup),
+        ps.hits,
+        ps.misses,
+        ps.entries,
+        ps.bytes
+    );
+
+    let (export, import, snap_bytes) = bench_snapshot(&be, warmup, iters)?;
+    let (swap_out, swap_in, session_bytes) = bench_swap(&be, swap_iters)?;
+    let mut costs = Table::new(
+        "KV state manager: snapshot + swap round-trip costs",
+        &["op", "mean ms", "bytes"],
+    );
+    let mut cost_rows = Vec::new();
+    for (name, s, bytes) in [
+        ("export_state", &export, snap_bytes),
+        ("import_state", &import, snap_bytes),
+        ("swap_out", &swap_out, session_bytes),
+        ("swap_in", &swap_in, session_bytes),
+    ] {
+        let row = Json::obj()
+            .set("op", name)
+            .set("mean_ms", s.mean() * 1e3)
+            .set("bytes", bytes);
+        costs.row(
+            vec![name.to_string(), format!("{:.3}", s.mean() * 1e3), format!("{bytes}")],
+            row.clone(),
+        );
+        cost_rows.push(row);
+    }
+    costs.emit(out_dir, "kvstore_costs")?;
+
+    let combined = Json::obj()
+        .set("schema_version", SCHEMA_VERSION)
+        .set("prompt_tokens", PROMPT_TOKENS)
+        .set("bucket", bucket)
+        .set("ttft_speedup", speedup)
+        .set("ttft", Json::Arr(ttft_rows))
+        .set("costs", Json::Arr(cost_rows))
+        .set("prefix_hits", ps.hits as i64)
+        .set("prefix_misses", ps.misses as i64);
+    std::fs::write(OUTPUT_FILE, combined.to_string())?;
+    eprintln!("[bench kvstore] wrote {OUTPUT_FILE}");
+
+    if warm.mean() >= cold.mean() {
+        bail!(
+            "prefix-hit TTFT ({:.3} ms) is not below cold-prefill TTFT ({:.3} ms)",
+            warm.mean() * 1e3,
+            cold.mean() * 1e3
+        );
+    }
+    Ok(())
+}

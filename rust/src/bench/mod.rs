@@ -4,6 +4,7 @@
 //! plus the backend micro-bench behind `specpv bench backend`.
 
 pub mod backend;
+pub mod kvstore;
 
 use std::fs;
 use std::path::Path;

@@ -207,6 +207,17 @@ pub struct Config {
     /// continuous-batching width: concurrent live sessions the
     /// coordinator's round-robin scheduler interleaves
     pub max_active: usize,
+    /// admission: longest accepted prompt, tokens
+    pub max_prompt: usize,
+    /// admission: deepest request queue before submits are rejected
+    pub max_queue: usize,
+    /// KV state manager: byte budget for resident session state; the
+    /// coordinator gates admission on it and swaps the lowest-priority
+    /// session out under pressure (0 = unlimited, count-only admission)
+    pub kv_budget_bytes: usize,
+    /// KV state manager: byte budget of the prompt-prefix snapshot cache
+    /// consulted by prefill (0 = disabled)
+    pub prefix_cache_bytes: usize,
 }
 
 impl Default for Config {
@@ -226,6 +237,10 @@ impl Default for Config {
             chain_gamma: 4,
             server_addr: "127.0.0.1:7799".into(),
             max_active: 4,
+            max_prompt: 7 * 1024,
+            max_queue: 256,
+            kv_budget_bytes: 0,
+            prefix_cache_bytes: 16 << 20,
         }
     }
 }
@@ -281,6 +296,10 @@ impl Config {
                 "chain_gamma" => self.chain_gamma = v.parse()?,
                 "server_addr" => self.server_addr = v.clone(),
                 "max_active" => self.max_active = v.parse()?,
+                "max_prompt" => self.max_prompt = v.parse()?,
+                "max_queue" => self.max_queue = v.parse()?,
+                "kv_budget_bytes" => self.kv_budget_bytes = v.parse()?,
+                "prefix_cache_bytes" => self.prefix_cache_bytes = v.parse()?,
                 _ => bail!("unknown config key '{k}'"),
             }
         }
@@ -313,6 +332,23 @@ mod tests {
         assert_eq!(c.specpv.retrieval_budget, 256);
         assert_eq!(c.specpv.reduction, Reduction::Last);
         assert_eq!(c.max_active, 8);
+    }
+
+    #[test]
+    fn kv_and_admission_keys_parse() {
+        let mut c = Config::default();
+        assert_eq!(c.kv_budget_bytes, 0, "default: unlimited");
+        assert!(c.prefix_cache_bytes > 0, "default: prefix cache on");
+        let mut kv = BTreeMap::new();
+        kv.insert("kv_budget_bytes".to_string(), "1048576".to_string());
+        kv.insert("prefix_cache_bytes".to_string(), "0".to_string());
+        kv.insert("max_queue".to_string(), "32".to_string());
+        kv.insert("max_prompt".to_string(), "2048".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.kv_budget_bytes, 1 << 20);
+        assert_eq!(c.prefix_cache_bytes, 0);
+        assert_eq!(c.max_queue, 32);
+        assert_eq!(c.max_prompt, 2048);
     }
 
     #[test]

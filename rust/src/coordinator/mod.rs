@@ -11,16 +11,28 @@
 //! ```text
 //! submit → Queued → (admit: prefill via SessionFactory) → Running
 //!        → step()* → Done | Failed | Cancelled
+//!                  ↘ (KV pressure: suspend → host store) → Swapped
+//!                       → re-queued → (resume: restore) → Running
 //! ```
 //!
-//! `tick()` returns [`Event`]s (per-step token deltas, completions,
-//! failures) so the server can stream results keyed by request id; the
-//! [`Registry`] tracks queue depth, active-set size and time-to-first-
-//! token percentiles alongside the per-request latency/throughput
-//! telemetry. This is the vLLM-router-shaped outer loop the L3 layer
-//! owns; the inner draft/verify loop lives in `engine`.
+//! Admission is **byte-aware** (the KV state manager, DESIGN.md §11):
+//! every live session registers its resident state bytes with a
+//! [`KvPool`], and a queued request is admitted only when it fits the
+//! `kv_budget_bytes` budget — `max_active` remains as a width cap, but
+//! the KV footprint governs who runs. Under pressure the lowest-priority
+//! active session is preempted: its states are exported to the host
+//! [`SwapStore`] and it re-queues, resuming byte-identically when bytes
+//! free up (PR 1's step-resumable sessions make this exact).
+//!
+//! `tick()` returns [`Event`]s (per-step token deltas, swap transitions,
+//! completions, failures) so the server can stream results keyed by
+//! request id; the [`Registry`] tracks queue depth, active-set size,
+//! resident KV bytes and time-to-first-token percentiles alongside the
+//! per-request latency/throughput telemetry. This is the vLLM-router-
+//! shaped outer loop the L3 layer owns; the inner draft/verify loop
+//! lives in `engine`.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -30,6 +42,7 @@ use crate::config::{Config, EngineKind};
 use crate::engine::{
     BackendFactory, EngineSession, GenRequest, GenResult, SessionFactory,
 };
+use crate::kvstore::{KvPool, KvStats, KvStore, SwapStore};
 use crate::metrics::GenStats;
 use crate::util::stats::Samples;
 
@@ -40,6 +53,9 @@ pub type RequestId = u64;
 pub enum RequestState {
     Queued,
     Running,
+    /// preempted under KV-byte pressure: state exported to the host swap
+    /// store, waiting in the queue for restore-on-resume
+    Swapped,
     Done,
     Cancelled,
     Failed(String),
@@ -70,6 +86,9 @@ pub struct TrackedRequest {
     pub steps: usize,
     /// wall-clock budget from submit; exceeded → Failed("deadline …")
     pub deadline_secs: Option<f64>,
+    /// preemption rank: under KV-byte pressure the lowest-priority
+    /// active session is swapped out first (default 0)
+    pub priority: i32,
     submitted: Instant,
     started: Option<Instant>,
 }
@@ -81,6 +100,10 @@ pub enum Event {
     Started { id: RequestId },
     /// One step produced tokens (includes the prefill token on step 1).
     Step { id: RequestId, new_tokens: Vec<u32>, step: usize, finished: bool },
+    /// Preempted under KV-byte pressure; state parked in the swap store.
+    SwappedOut { id: RequestId },
+    /// Swapped-out session restored and running again.
+    Resumed { id: RequestId },
     /// Terminal: result available via `Coordinator::get`.
     Finished { id: RequestId },
     Cancelled { id: RequestId },
@@ -92,6 +115,8 @@ impl Event {
         match self {
             Event::Started { id }
             | Event::Step { id, .. }
+            | Event::SwappedOut { id }
+            | Event::Resumed { id }
             | Event::Finished { id }
             | Event::Cancelled { id }
             | Event::Failed { id, .. } => *id,
@@ -120,6 +145,20 @@ pub struct Registry {
     pub queue_depth: usize,
     /// gauge: live sessions (as of the last tick)
     pub active_sessions: usize,
+    /// gauge: device bytes registered to live sessions (KV pool)
+    pub kv_resident_bytes: usize,
+    /// admission byte budget (0 = unlimited)
+    pub kv_budget_bytes: usize,
+    /// sessions preempted to the host swap store (lifetime counter)
+    pub swap_outs: u64,
+    /// sessions restored from the host swap store (lifetime counter)
+    pub swap_ins: u64,
+    /// prompt-prefix cache counters (synced with the backend counters)
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    /// admission knobs, echoed for operators
+    pub max_queue: usize,
+    pub max_prompt: usize,
     pub latency: Samples,
     pub queue_wait: Samples,
     /// submit → first token, sampled at session start
@@ -157,7 +196,9 @@ impl Registry {
     pub fn summary(&self) -> String {
         format!(
             "backend={} completed={} failed={} cancelled={} tokens={} \
-             queue_depth={} active={} execs={} exec_secs={:.2}s compiles={} \
+             queue_depth={} active={} max_queue={} max_prompt={} \
+             kv_resident={} kv_budget={} swaps={}/{} prefix_hits={} \
+             prefix_misses={} execs={} exec_secs={:.2}s compiles={} \
              p50_latency={:.2}s p99={:.2}s p50_ttft={:.3}s \
              p99_ttft={:.3}s mean_tok_s={:.1} mean_tau={:.2}",
             if self.backend.is_empty() { "scripted" } else { self.backend.as_str() },
@@ -167,6 +208,14 @@ impl Registry {
             self.tokens_out,
             self.queue_depth,
             self.active_sessions,
+            self.max_queue,
+            self.max_prompt,
+            self.kv_resident_bytes,
+            self.kv_budget_bytes,
+            self.swap_outs,
+            self.swap_ins,
+            self.prefix_hits,
+            self.prefix_misses,
             self.executions,
             self.exec_secs,
             self.compilations,
@@ -188,12 +237,31 @@ pub struct Admission {
     pub max_queue: usize,
     /// concurrent live sessions (continuous-batching width)
     pub max_active: usize,
+    /// resident KV-state byte budget across live sessions (0 = unlimited)
+    pub kv_budget_bytes: usize,
 }
 
 impl Default for Admission {
     fn default() -> Self {
-        Admission { max_prompt: 7 * 1024, max_new: 1024, max_queue: 256, max_active: 4 }
+        Admission {
+            max_prompt: 7 * 1024,
+            max_new: 1024,
+            max_queue: 256,
+            max_active: 4,
+            kv_budget_bytes: 0,
+        }
     }
+}
+
+/// Options for [`Coordinator::submit_opts`].
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOpts {
+    /// engine override (None = the config's engine)
+    pub engine: Option<EngineKind>,
+    /// wall-clock budget from submit, seconds
+    pub deadline_secs: Option<f64>,
+    /// preemption rank — lower is swapped out first under byte pressure
+    pub priority: i32,
 }
 
 struct ActiveEntry<'rt> {
@@ -210,6 +278,15 @@ pub struct Coordinator<'rt> {
     queue: VecDeque<RequestId>,
     requests: Vec<TrackedRequest>,
     active: Vec<ActiveEntry<'rt>>,
+    /// dormant (swapped-out) session objects awaiting re-admission;
+    /// their exported state lives in `swaps`
+    swapped: HashMap<RequestId, Box<dyn EngineSession + 'rt>>,
+    /// host store of swapped-out state snapshots
+    pub swaps: SwapStore,
+    /// byte-denominated admission accounting over live sessions
+    pub pool: KvPool,
+    /// shared prompt-prefix snapshot cache (None = disabled)
+    prefix: Option<KvStore>,
     /// round-robin rotation cursor
     rr: usize,
     pub registry: Registry,
@@ -217,11 +294,22 @@ pub struct Coordinator<'rt> {
 
 impl<'rt> Coordinator<'rt> {
     /// Production constructor: sessions are started on `be` with the
-    /// config's engine geometry.
+    /// config's engine geometry. A prompt-prefix snapshot cache of
+    /// `cfg.prefix_cache_bytes` is shared with every session the factory
+    /// starts (0 disables it).
     pub fn new(be: &'rt dyn Backend, cfg: Config) -> Coordinator<'rt> {
-        let factory = Box::new(BackendFactory::new(be, cfg.clone()));
-        let mut coord = Coordinator::with_factory(cfg, factory);
+        let prefix = if cfg.prefix_cache_bytes > 0 {
+            Some(KvStore::new(cfg.prefix_cache_bytes))
+        } else {
+            None
+        };
+        let mut factory = BackendFactory::new(be, cfg.clone());
+        if let Some(st) = &prefix {
+            factory = factory.with_prefix(st.clone());
+        }
+        let mut coord = Coordinator::with_factory(cfg, Box::new(factory));
         coord.backend = Some(be);
+        coord.prefix = prefix;
         coord.registry.backend = be.name().to_string();
         coord
     }
@@ -233,8 +321,20 @@ impl<'rt> Coordinator<'rt> {
     ) -> Coordinator<'rt> {
         // max_active = 0 would admit nothing while never going idle —
         // the device loop would spin forever; clamp to a working width
-        let admission =
-            Admission { max_active: cfg.max_active.max(1), ..Admission::default() };
+        let admission = Admission {
+            max_active: cfg.max_active.max(1),
+            max_prompt: cfg.max_prompt,
+            max_queue: cfg.max_queue,
+            kv_budget_bytes: cfg.kv_budget_bytes,
+            ..Admission::default()
+        };
+        let pool = KvPool::new(admission.kv_budget_bytes);
+        let registry = Registry {
+            kv_budget_bytes: admission.kv_budget_bytes,
+            max_queue: admission.max_queue,
+            max_prompt: admission.max_prompt,
+            ..Registry::default()
+        };
         Coordinator {
             cfg,
             admission,
@@ -243,8 +343,12 @@ impl<'rt> Coordinator<'rt> {
             queue: VecDeque::new(),
             requests: Vec::new(),
             active: Vec::new(),
+            swapped: HashMap::new(),
+            swaps: SwapStore::default(),
+            pool,
+            prefix: None,
             rr: 0,
-            registry: Registry::default(),
+            registry,
         }
     }
 
@@ -265,6 +369,12 @@ impl<'rt> Coordinator<'rt> {
         engine: Option<EngineKind>,
         deadline_secs: Option<f64>,
     ) -> Result<RequestId> {
+        self.submit_opts(req, SubmitOpts { engine, deadline_secs, priority: 0 })
+    }
+
+    /// Admit a request with full submit options (engine override,
+    /// deadline, preemption priority).
+    pub fn submit_opts(&mut self, req: GenRequest, opts: SubmitOpts) -> Result<RequestId> {
         if req.prompt.len() > self.admission.max_prompt {
             anyhow::bail!(
                 "prompt {} exceeds admission limit {}",
@@ -282,14 +392,15 @@ impl<'rt> Coordinator<'rt> {
         self.requests.push(TrackedRequest {
             id,
             req,
-            engine: engine.unwrap_or(self.cfg.engine),
+            engine: opts.engine.unwrap_or(self.cfg.engine),
             state: RequestState::Queued,
             result: None,
             queued_secs: 0.0,
             service_secs: 0.0,
             ttft_secs: 0.0,
             steps: 0,
-            deadline_secs,
+            deadline_secs: opts.deadline_secs,
+            priority: opts.priority,
             submitted: Instant::now(),
             started: None,
         });
@@ -319,6 +430,7 @@ impl<'rt> Coordinator<'rt> {
                     return false;
                 };
                 let entry = self.active.remove(idx);
+                self.pool.release(id);
                 let result = entry.session.finish();
                 let tr = &mut self.requests[id as usize];
                 tr.service_secs =
@@ -329,12 +441,27 @@ impl<'rt> Coordinator<'rt> {
                 self.registry.active_sessions = self.active.len();
                 true
             }
+            RequestState::Swapped => {
+                self.queue.retain(|&q| q != id);
+                self.swaps.discard(id);
+                let result = self.swapped.remove(&id).map(|s| s.finish());
+                let tr = &mut self.requests[id as usize];
+                tr.service_secs =
+                    tr.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+                tr.result = result;
+                tr.state = RequestState::Cancelled;
+                self.registry.record(tr);
+                self.registry.queue_depth = self.queue.len();
+                true
+            }
             _ => false,
         }
     }
 
-    /// One scheduler tick: expire deadlines, admit up to `max_active`,
-    /// then run one `step()` per active session (round-robin order).
+    /// One scheduler tick: expire deadlines, admit up to `max_active`
+    /// within the KV-byte budget (preempting lower-priority sessions
+    /// under pressure), then run one `step()` per active session
+    /// (round-robin order).
     pub fn tick(&mut self) -> Vec<Event> {
         let mut events = Vec::new();
         self.expire_deadlines(&mut events);
@@ -342,6 +469,7 @@ impl<'rt> Coordinator<'rt> {
         self.step_active(&mut events);
         self.registry.queue_depth = self.queue.len();
         self.registry.active_sessions = self.active.len();
+        self.registry.kv_resident_bytes = self.pool.resident();
         events
     }
 
@@ -355,6 +483,26 @@ impl<'rt> Coordinator<'rt> {
             self.registry.executions = c.executions;
             self.registry.exec_secs = c.exec_secs;
             self.registry.compilations = c.compilations;
+        }
+        if let Some(st) = &self.prefix {
+            let ps = st.stats();
+            self.registry.prefix_hits = ps.hits;
+            self.registry.prefix_misses = ps.misses;
+        }
+        self.registry.kv_resident_bytes = self.pool.resident();
+    }
+
+    /// Aggregated KV-subsystem stats (the server `cache` op).
+    pub fn kv_stats(&self) -> KvStats {
+        KvStats {
+            prefix: self.prefix.as_ref().map(|s| s.stats()).unwrap_or_default(),
+            resident_bytes: self.pool.resident(),
+            budget_bytes: self.pool.budget(),
+            live_states: self.pool.live(),
+            swapped: self.swaps.len(),
+            swap_bytes: self.swaps.bytes(),
+            swap_outs: self.registry.swap_outs,
+            swap_ins: self.registry.swap_ins,
         }
     }
 
@@ -381,8 +529,13 @@ impl<'rt> Coordinator<'rt> {
             self.queue.retain(|&q| q != id);
             if let Some(idx) = self.active.iter().position(|e| e.id == id) {
                 let entry = self.active.remove(idx);
+                self.pool.release(id);
                 let result = entry.session.finish();
                 self.requests[id as usize].result = Some(result);
+            }
+            if let Some(session) = self.swapped.remove(&id) {
+                self.swaps.discard(id);
+                self.requests[id as usize].result = Some(session.finish());
             }
             let tr = &mut self.requests[id as usize];
             tr.service_secs =
@@ -395,30 +548,142 @@ impl<'rt> Coordinator<'rt> {
 
     fn admit(&mut self, events: &mut Vec<Event>) {
         while self.active.len() < self.admission.max_active {
-            let Some(id) = self.queue.pop_front() else { break };
-            let (kind, req) = {
-                let tr = &mut self.requests[id as usize];
-                tr.queued_secs = tr.submitted.elapsed().as_secs_f64();
-                (tr.engine, tr.req.clone())
+            let Some(&id) = self.queue.front() else { break };
+            let (kind, prio) = {
+                let tr = &self.requests[id as usize];
+                (tr.engine, tr.priority)
             };
-            match self.factory.start_session(kind, &req) {
-                Ok(session) => {
-                    let tr = &mut self.requests[id as usize];
-                    tr.state = RequestState::Running;
-                    tr.started = Some(Instant::now());
-                    // prefill picked the first token → TTFT stops here
-                    tr.ttft_secs = tr.submitted.elapsed().as_secs_f64();
-                    self.registry.ttft.push(tr.ttft_secs);
-                    self.active.push(ActiveEntry { id, session });
-                    events.push(Event::Started { id });
+            // byte gate: the footprint the session will register — exact
+            // for a swapped session (it still knows its layouts), the
+            // engine-geometry estimate for a fresh one
+            let need = match self.swapped.get(&id) {
+                Some(session) => session.state_bytes(),
+                None => self
+                    .factory
+                    .estimate_bytes(kind, &self.requests[id as usize].req),
+            };
+            if !self.pool.admits(need) {
+                // make room by preempting a strictly lower-priority
+                // session; if none exists, the head waits
+                if !self.preempt_below(prio, events) {
+                    break;
                 }
-                Err(e) => {
-                    let msg = format!("{e:#}");
+                continue;
+            }
+            self.queue.pop_front();
+            if self.swapped.contains_key(&id) {
+                self.resume_swapped(id, events);
+            } else {
+                // queue wait stops at first admission only — a resumed
+                // session's re-queue time is service-side, not queue-side
+                let req = {
                     let tr = &mut self.requests[id as usize];
-                    tr.state = RequestState::Failed(msg.clone());
-                    self.registry.record(tr);
-                    events.push(Event::Failed { id, error: msg });
-                }
+                    tr.queued_secs = tr.submitted.elapsed().as_secs_f64();
+                    tr.req.clone()
+                };
+                self.start_fresh(id, kind, &req, events);
+            }
+        }
+    }
+
+    fn start_fresh(
+        &mut self,
+        id: RequestId,
+        kind: EngineKind,
+        req: &GenRequest,
+        events: &mut Vec<Event>,
+    ) {
+        match self.factory.start_session(kind, req) {
+            Ok(session) => {
+                self.pool.register(id, session.state_bytes());
+                let tr = &mut self.requests[id as usize];
+                tr.state = RequestState::Running;
+                tr.started = Some(Instant::now());
+                // prefill picked the first token → TTFT stops here
+                tr.ttft_secs = tr.submitted.elapsed().as_secs_f64();
+                self.registry.ttft.push(tr.ttft_secs);
+                self.active.push(ActiveEntry { id, session });
+                events.push(Event::Started { id });
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let tr = &mut self.requests[id as usize];
+                tr.state = RequestState::Failed(msg.clone());
+                self.registry.record(tr);
+                events.push(Event::Failed { id, error: msg });
+            }
+        }
+    }
+
+    /// Restore-on-resume: re-import a swapped session's snapshots and
+    /// put it back in the active set.
+    fn resume_swapped(&mut self, id: RequestId, events: &mut Vec<Event>) {
+        let mut session = self.swapped.remove(&id).expect("swapped session present");
+        let snaps = self.swaps.take(id).unwrap_or_default();
+        match session.resume(snaps) {
+            Ok(()) => {
+                self.pool.register(id, session.state_bytes());
+                self.registry.swap_ins += 1;
+                self.requests[id as usize].state = RequestState::Running;
+                self.active.push(ActiveEntry { id, session });
+                events.push(Event::Resumed { id });
+            }
+            Err(e) => {
+                let msg = format!("resume after swap: {e:#}");
+                let result = session.finish();
+                let tr = &mut self.requests[id as usize];
+                tr.service_secs =
+                    tr.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+                tr.result = Some(result);
+                tr.state = RequestState::Failed(msg.clone());
+                self.registry.record(tr);
+                events.push(Event::Failed { id, error: msg });
+            }
+        }
+    }
+
+    /// Swap out the lowest-priority active session, provided it is
+    /// strictly below `prio`. Returns whether bytes were freed.
+    fn preempt_below(&mut self, prio: i32, events: &mut Vec<Event>) -> bool {
+        let victim = self
+            .active
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| self.requests[e.id as usize].priority)
+            .map(|(i, e)| (i, self.requests[e.id as usize].priority));
+        let Some((idx, vprio)) = victim else { return false };
+        if vprio >= prio {
+            return false;
+        }
+        let mut entry = self.active.remove(idx);
+        let id = entry.id;
+        match entry.session.suspend() {
+            Ok(snaps) => {
+                self.pool.release(id);
+                self.swaps.put(id, snaps);
+                self.swapped.insert(id, entry.session);
+                self.requests[id as usize].state = RequestState::Swapped;
+                // re-queue behind the preemptor: it resumes as soon as
+                // bytes free up again
+                self.queue.push_back(id);
+                self.registry.swap_outs += 1;
+                events.push(Event::SwappedOut { id });
+                true
+            }
+            Err(e) => {
+                // a session that cannot suspend is lost — fail it with
+                // its partial output, which also frees its bytes
+                let msg = format!("suspend for swap: {e:#}");
+                self.pool.release(id);
+                let result = entry.session.finish();
+                let tr = &mut self.requests[id as usize];
+                tr.service_secs =
+                    tr.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+                tr.result = Some(result);
+                tr.state = RequestState::Failed(msg.clone());
+                self.registry.record(tr);
+                events.push(Event::Failed { id, error: msg });
+                true
             }
         }
     }
@@ -466,6 +731,7 @@ impl<'rt> Coordinator<'rt> {
                 .position(|e| e.id == id)
                 .expect("finished id in active set");
             let entry = self.active.remove(idx);
+            self.pool.release(id);
             let result = entry.session.finish();
             let tr = &mut self.requests[id as usize];
             tr.service_secs =

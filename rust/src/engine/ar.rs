@@ -1,10 +1,11 @@
 //! Standard autoregressive decoding — the speedup denominator of every
 //! table in the paper (Eq. 4). One `step()` = one decoded token.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::backend::Backend;
+use crate::backend::{Backend, StateKind, StateSnapshot};
 use crate::config::Config;
+use crate::kvstore::KvStore;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
 use crate::offload::OffloadSim;
@@ -43,6 +44,7 @@ impl Engine for ArEngine {
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
+        prefix: Option<&KvStore>,
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
@@ -55,7 +57,7 @@ impl Engine for ArEngine {
         )?;
 
         let mut sw = Stopwatch::new();
-        let (logits, _) = target.prefill(&req.prompt, None)?;
+        let (logits, _) = target.prefill(&req.prompt, None, prefix)?;
         stats.prefill_secs = sw.lap();
 
         let mut out = SessionOut::new(req.max_new);
@@ -103,5 +105,32 @@ impl EngineSession for ArSession<'_> {
         stats.new_tokens = out.tokens.len();
         stats.offload_secs = target.offload.secs;
         GenResult { tokens: out.tokens, stats }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.target.state_bytes()
+    }
+
+    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
+        let snap = self.target.export()?;
+        self.target.drop_state();
+        Ok(vec![snap])
+    }
+
+    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+        let mut full = false;
+        for s in &snaps {
+            match s.kind {
+                StateKind::Full => {
+                    self.target.restore(s)?;
+                    full = true;
+                }
+                k => bail!("unexpected {k:?} snapshot for an ar session"),
+            }
+        }
+        if !full {
+            bail!("ar resume needs a full snapshot");
+        }
+        Ok(())
     }
 }

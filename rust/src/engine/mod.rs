@@ -30,9 +30,11 @@ pub mod triforce;
 
 use anyhow::Result;
 
-use crate::backend::Backend;
+use crate::backend::{pick_bucket, Backend, StateKind, StateSnapshot};
 use crate::config::{Config, EngineKind};
+use crate::kvstore::KvStore;
 use crate::metrics::GenStats;
+use crate::model::bucket_need;
 use crate::tokenizer::is_eos;
 
 /// One generation request.
@@ -92,6 +94,32 @@ pub trait EngineSession {
     /// Consume the session, yielding the final result. Valid at any point
     /// (cancellation yields the partial output produced so far).
     fn finish(self: Box<Self>) -> GenResult;
+
+    /// Resident device bytes this session's states hold (what the KV
+    /// pool's admission accounting charges). 0 for stateless (scripted)
+    /// sessions.
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    /// Swap-out: export every device state to host snapshots and drop
+    /// the device buffers. The session keeps its host-side bookkeeping
+    /// (caches, RNG, output cursor) and is dormant — `step()` is invalid
+    /// — until the snapshots come back through `resume`. Default:
+    /// stateless sessions suspend to nothing.
+    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
+        Ok(Vec::new())
+    }
+
+    /// Swap-in: re-import the snapshots produced by `suspend`, after
+    /// which `step()` continues byte-identically to an unsuspended run.
+    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+        if snaps.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("session holds no device state to resume")
+        }
+    }
 }
 
 /// A decoding engine bound to a config; `start` binds it to a backend and
@@ -99,12 +127,49 @@ pub trait EngineSession {
 pub trait Engine {
     fn kind(&self) -> EngineKind;
 
-    /// Prefill and return a live session positioned after the first token.
+    /// Prefill and return a live session positioned after the first
+    /// token. `prefix` is the shared prompt-prefix snapshot cache (None
+    /// disables consultation) — see `crate::kvstore`.
     fn start<'be>(
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
+        prefix: Option<&KvStore>,
     ) -> Result<Box<dyn EngineSession + 'be>>;
+}
+
+/// Predicted resident state bytes of a `(engine, request)` session —
+/// mirrors each engine's allocation geometry so the coordinator can gate
+/// admission before paying for prefill. Pinned equal to the live
+/// session's `state_bytes()` by `rust/tests/kvstore.rs`.
+pub fn estimate_state_bytes(
+    be: &dyn Backend,
+    cfg: &Config,
+    kind: EngineKind,
+    req: &GenRequest,
+) -> usize {
+    let consts = be.consts();
+    let size = cfg.model_size.as_str();
+    let need = bucket_need(req.prompt.len(), req.max_new, consts);
+    let Ok(bucket) = pick_bucket(&be.full_buckets(size), need, "full", size) else {
+        return 0;
+    };
+    let sb = |kind: StateKind, sz: &str, b: usize| be.state_bytes(kind, sz, b).unwrap_or(0);
+    let mut total = sb(StateKind::Full, size, bucket);
+    match kind {
+        EngineKind::Autoregressive | EngineKind::TokenSwift => {}
+        EngineKind::SpecFull => total += sb(StateKind::Draft, size, bucket),
+        EngineKind::SpecPv => {
+            total += sb(StateKind::Draft, size, bucket);
+            let pneed =
+                cfg.specpv.core_tokens(consts.block) + consts.tree_t + cfg.specpv.buffer_cap;
+            if let Ok(pb) = pick_bucket(&be.partial_buckets(size), pneed, "partial", size) {
+                total += sb(StateKind::Partial, size, pb);
+            }
+        }
+        EngineKind::TriForce => total += sb(StateKind::Tiny, "tiny", consts.tiny_bucket),
+    }
+    total
 }
 
 /// Shared output accounting for sessions: enforces the `max_new` bound as
@@ -190,18 +255,32 @@ pub trait SessionFactory<'be> {
         kind: EngineKind,
         req: &GenRequest,
     ) -> Result<Box<dyn EngineSession + 'be>>;
+
+    /// Predicted resident state bytes of the session `start_session`
+    /// would build (admission gating; 0 = unknown / stateless).
+    fn estimate_bytes(&self, _kind: EngineKind, _req: &GenRequest) -> usize {
+        0
+    }
 }
 
 /// Session factory over a real backend: builds the engine named by `kind`
-/// (with the base config's geometry) and starts it.
+/// (with the base config's geometry) and starts it, threading the shared
+/// prompt-prefix cache into every prefill when one is attached.
 pub struct BackendFactory<'be> {
     be: &'be dyn Backend,
     base: Config,
+    prefix: Option<KvStore>,
 }
 
 impl<'be> BackendFactory<'be> {
     pub fn new(be: &'be dyn Backend, base: Config) -> BackendFactory<'be> {
-        BackendFactory { be, base }
+        BackendFactory { be, base, prefix: None }
+    }
+
+    /// Attach a shared prompt-prefix snapshot cache.
+    pub fn with_prefix(mut self, store: KvStore) -> BackendFactory<'be> {
+        self.prefix = Some(store);
+        self
     }
 }
 
@@ -213,7 +292,11 @@ impl<'be> SessionFactory<'be> for BackendFactory<'be> {
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut cfg = self.base.clone();
         cfg.engine = kind;
-        build(&cfg).start(self.be, req)
+        build(&cfg).start(self.be, req, self.prefix.as_ref())
+    }
+
+    fn estimate_bytes(&self, kind: EngineKind, req: &GenRequest) -> usize {
+        estimate_state_bytes(self.be, &self.base, kind, req)
     }
 }
 
@@ -224,7 +307,18 @@ pub fn generate_with(
     be: &dyn Backend,
     req: &GenRequest,
 ) -> Result<GenResult> {
-    let mut session = build(cfg).start(be, req)?;
+    generate_with_store(cfg, be, req, None)
+}
+
+/// [`generate_with`] consulting (and feeding) a prompt-prefix snapshot
+/// cache. Output is byte-identical with or without the store.
+pub fn generate_with_store(
+    cfg: &Config,
+    be: &dyn Backend,
+    req: &GenRequest,
+    prefix: Option<&KvStore>,
+) -> Result<GenResult> {
+    let mut session = build(cfg).start(be, req, prefix)?;
     while !session.is_finished() {
         session.step()?;
     }

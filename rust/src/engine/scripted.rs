@@ -34,6 +34,8 @@ pub struct ScriptedSession {
     /// sleep this long per step (simulates device latency; makes
     /// mid-generation cancellation tests deterministic)
     step_micros: u64,
+    /// simulated resident state bytes (KV-pool admission tests)
+    state_bytes: usize,
     stats: GenStats,
 }
 
@@ -54,12 +56,18 @@ impl ScriptedSession {
             steps: 0,
             fail_at_step,
             step_micros: 0,
+            state_bytes: 0,
             stats,
         }
     }
 
     pub fn with_step_micros(mut self, us: u64) -> ScriptedSession {
         self.step_micros = us;
+        self
+    }
+
+    pub fn with_state_bytes(mut self, bytes: usize) -> ScriptedSession {
+        self.state_bytes = bytes;
         self
     }
 }
@@ -105,6 +113,12 @@ impl EngineSession for ScriptedSession {
         stats.new_tokens = out.tokens.len();
         GenResult { tokens: out.tokens, stats }
     }
+
+    // suspend/resume use the trait defaults (a scripted session has no
+    // device state to export — only the synthetic pool footprint below)
+    fn state_bytes(&self) -> usize {
+        self.state_bytes
+    }
 }
 
 /// Factory producing [`ScriptedSession`]s — inject into the coordinator
@@ -120,6 +134,9 @@ pub struct ScriptedFactory {
     pub fail_start_marker: Option<u32>,
     /// prompts containing this token fail on their first `step()`
     pub fail_step_marker: Option<u32>,
+    /// simulated resident bytes per session (reported by both
+    /// `estimate_bytes` and the live session — KV-pool admission tests)
+    pub session_bytes: usize,
 }
 
 impl Default for ScriptedFactory {
@@ -129,6 +146,7 @@ impl Default for ScriptedFactory {
             step_micros: 0,
             fail_start_marker: None,
             fail_step_marker: None,
+            session_bytes: 0,
         }
     }
 }
@@ -150,8 +168,13 @@ impl SessionFactory<'static> for ScriptedFactory {
             .map(|_| 0usize);
         Ok(Box::new(
             ScriptedSession::new(kind, req, self.tokens_per_step, fail_at)
-                .with_step_micros(self.step_micros),
+                .with_step_micros(self.step_micros)
+                .with_state_bytes(self.session_bytes),
         ))
+    }
+
+    fn estimate_bytes(&self, _kind: EngineKind, _req: &GenRequest) -> usize {
+        self.session_bytes
     }
 }
 

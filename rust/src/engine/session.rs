@@ -16,10 +16,11 @@ use anyhow::{bail, Result};
 
 use crate::backend::{
     pick_bucket, Backend, CommitOp, DraftExpandOp, DraftPrefillOp, GatherOp, PrefillOp, ReadOp,
-    ScoreOp, StateBuf, StateKind, TinyForwardOp, VerifyOp,
+    ScoreOp, StateBuf, StateKind, StateSnapshot, TinyForwardOp, VerifyOp,
 };
 use crate::cache::{DraftCache, FullCache, PartialCache};
 use crate::config::SpecPvConfig;
+use crate::kvstore::{prefix::geom_hash, KvStore};
 use crate::manifest::{Consts, ModelInfo};
 use crate::model::{self, DraftOut, ReadOut};
 use crate::offload::OffloadSim;
@@ -31,6 +32,18 @@ use crate::tree::{chain_mask, FlatTree};
 /// field gets a nil placeholder until the op's successor is stored).
 fn take(state: &mut StateBuf) -> StateBuf {
     std::mem::replace(state, StateBuf::nil())
+}
+
+/// Prefix-cache geometry key for a target prefill: anything that would
+/// make a cached snapshot non-reusable must be folded in here.
+fn prefix_geom(backend: &str, size: &str, bucket: usize, chunk: usize, with_draft: bool) -> u64 {
+    geom_hash(&[
+        backend.as_bytes(),
+        size.as_bytes(),
+        &(bucket as u64).to_le_bytes(),
+        &(chunk as u64).to_le_bytes(),
+        &[with_draft as u8],
+    ])
 }
 
 pub struct TargetSession<'a> {
@@ -74,21 +87,64 @@ impl<'a> TargetSession<'a> {
 
     /// Chunked prefill; pairs each chunk with the draft session (when
     /// present) so the draft consumes the chunk's features device-side.
+    ///
+    /// When a [`KvStore`] is supplied, the prompt-prefix cache is
+    /// consulted first: the longest cached snapshot whose prefix matches
+    /// this prompt (at a chunk boundary) restores directly and only the
+    /// tail chunks run, so TTFT for a repeated long document collapses
+    /// from O(context) to O(tail). Cold prefills (and hits that this
+    /// prompt extends) insert a snapshot at the last whole-chunk boundary
+    /// on the way through. Cache hits are exact — the restored state is
+    /// byte-identical to recomputing the prefix.
+    ///
     /// Returns (last-token logits, last-token fused features).
     pub fn prefill(
         &mut self,
         tokens: &[u32],
         mut draft: Option<&mut DraftSession<'a>>,
+        store: Option<&KvStore>,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         if tokens.is_empty() {
             bail!("empty prompt");
         }
         let c = self.consts.chunk;
+        let store = store.filter(|s| s.enabled());
+        let geom = prefix_geom(self.be.name(), &self.size, self.bucket, c, draft.is_some());
+        // tokens already present after a prefix-cache restore
+        let mut restored = 0usize;
+        if let Some(st) = store {
+            if let Some((len, snaps)) = st.lookup_longest(geom, tokens, c) {
+                let want = if draft.is_some() { 2 } else { 1 };
+                if snaps.len() == want {
+                    self.restore(&snaps[0])?;
+                    self.cache = FullCache::new(self.bucket);
+                    for _ in 0..len / c {
+                        self.cache.push_prefill(c)?;
+                    }
+                    self.offload.touch_full(len, self.kv_bpt());
+                    if let Some(d) = draft.as_deref_mut() {
+                        d.restore(&snaps[1])?;
+                        d.cache = DraftCache::new(d.bucket, d.consts.draft_region);
+                        for _ in 0..len / c {
+                            d.cache.push_prefill(c)?;
+                        }
+                    }
+                    restored = len;
+                }
+            }
+        }
+        // snapshot boundary: the last whole-chunk prefix that still
+        // leaves a tail, so the final-row read always has a freshly
+        // computed chunk behind it
+        let boundary = ((tokens.len() - 1) / c) * c;
         let mut last_real = 0usize;
         for (ci, chunk) in tokens.chunks(c).enumerate() {
             let r = chunk.len();
-            last_real = r;
             let base = ci * c;
+            if base + r <= restored {
+                continue; // chunk fully covered by the restored prefix
+            }
+            last_real = r;
             let mut toks = vec![PAD as i32; c];
             for (i, &t) in chunk.iter().enumerate() {
                 toks[i] = t as i32;
@@ -110,9 +166,54 @@ impl<'a> TargetSession<'a> {
                 d.prefill_chunk(&toks, r, &pos, &self.state)?;
             }
             self.cache.push_prefill(r)?;
+            if let Some(st) = store {
+                if base + r == boundary && boundary > restored {
+                    // gate on an upper bound of the entry size before
+                    // exporting: an entry the budget can never hold must
+                    // not pay a device→host readback just to be dropped.
+                    // Bound = state layouts + the widest lazy-hidden
+                    // region a backend may export + the stored prefix,
+                    // so it never under-counts what insert() charges.
+                    let est = self.state_bytes()
+                        + self.consts.chunk * self.info.d_model * 4
+                        + draft.as_deref().map(|d| d.state_bytes()).unwrap_or(0)
+                        + boundary * 4;
+                    if st.accepts(est) {
+                        let mut snaps = vec![self.export()?];
+                        if let Some(d) = draft.as_deref() {
+                            snaps.push(d.export()?);
+                        }
+                        st.insert(geom, &tokens[..boundary], snaps);
+                    }
+                }
+            }
         }
         let (logits, feats) = self.read_last(last_real - 1)?;
         Ok((logits, feats))
+    }
+
+    /// Resident device bytes of this session's state (pool accounting).
+    pub fn state_bytes(&self) -> usize {
+        self.be.state_bytes(StateKind::Full, &self.size, self.bucket).unwrap_or(0)
+    }
+
+    /// Host snapshot of the threaded full state (checkpoint / swap-out).
+    pub fn export(&self) -> Result<StateSnapshot> {
+        self.be.export_state(StateKind::Full, &self.size, self.bucket, &self.state)
+    }
+
+    /// Replace the threaded state with an imported snapshot.
+    pub fn restore(&mut self, snap: &StateSnapshot) -> Result<()> {
+        if snap.kind != StateKind::Full || snap.size != self.size || snap.bucket != self.bucket {
+            bail!("snapshot {snap:?} does not match full session {} b{}", self.size, self.bucket);
+        }
+        self.state = self.be.import_state(snap)?;
+        Ok(())
+    }
+
+    /// Drop the device state (swap-out); `restore` re-installs it.
+    pub fn drop_state(&mut self) {
+        self.state = StateBuf::nil();
     }
 
     /// Verify a draft tree against the full cache (EAGLE3-full path and
@@ -334,6 +435,48 @@ impl<'a> PartialSession<'a> {
         self.state.is_some()
     }
 
+    /// Resident device bytes of this session's state. The partial bucket
+    /// capacity counts whether or not a core is installed yet — admission
+    /// must reserve the peak footprint, not the warm-up one.
+    pub fn state_bytes(&self) -> usize {
+        self.be.state_bytes(StateKind::Partial, &self.size, self.bucket).unwrap_or(0)
+    }
+
+    /// Host snapshot of the partial state (None before the first gather).
+    pub fn export(&self) -> Result<Option<StateSnapshot>> {
+        match &self.state {
+            Some(s) => Ok(Some(self.be.export_state(
+                StateKind::Partial,
+                &self.size,
+                self.bucket,
+                s,
+            )?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Re-install an exported partial state (cache accounting is kept by
+    /// the session object across a swap, so only the buffer moves).
+    pub fn restore(&mut self, snap: &StateSnapshot) -> Result<()> {
+        if snap.kind != StateKind::Partial
+            || snap.size != self.size
+            || snap.bucket != self.bucket
+        {
+            bail!(
+                "snapshot {snap:?} does not match partial session {} p{}",
+                self.size,
+                self.bucket
+            );
+        }
+        self.state = Some(self.be.import_state(snap)?);
+        Ok(())
+    }
+
+    /// Drop the device state (swap-out); `restore` re-installs it.
+    pub fn drop_state(&mut self) {
+        self.state = None;
+    }
+
     /// Partial verification of a draft tree (paper §3.2). Same op shape
     /// as the full verify, small bucket.
     pub fn verify_tree(&mut self, flat: &FlatTree, root_pos: usize) -> Result<ReadOut> {
@@ -415,6 +558,30 @@ impl<'a> DraftSession<'a> {
         let state = take(&mut self.state);
         self.state = self.be.draft_prefill(&op, target_state, state)?;
         self.cache.push_prefill(real)
+    }
+
+    /// Resident device bytes of this session's state (pool accounting).
+    pub fn state_bytes(&self) -> usize {
+        self.be.state_bytes(StateKind::Draft, &self.size, self.bucket).unwrap_or(0)
+    }
+
+    /// Host snapshot of the draft state (checkpoint / swap-out).
+    pub fn export(&self) -> Result<StateSnapshot> {
+        self.be.export_state(StateKind::Draft, &self.size, self.bucket, &self.state)
+    }
+
+    /// Replace the threaded state with an imported snapshot.
+    pub fn restore(&mut self, snap: &StateSnapshot) -> Result<()> {
+        if snap.kind != StateKind::Draft || snap.size != self.size || snap.bucket != self.bucket {
+            bail!("snapshot {snap:?} does not match draft session {} b{}", self.size, self.bucket);
+        }
+        self.state = self.be.import_state(snap)?;
+        Ok(())
+    }
+
+    /// Drop the device state (swap-out); `restore` re-installs it.
+    pub fn drop_state(&mut self) {
+        self.state = StateBuf::nil();
     }
 
     /// Hidden state of prefill-chunk row `idx` (the recycled feature for
@@ -543,6 +710,31 @@ impl<'a> TinySession<'a> {
         let state = be.alloc_state(StateKind::Tiny, "tiny", bucket)?;
         let vocab = be.model("tiny")?.vocab;
         Ok(TinySession { be, state, bucket, valid: 0, write: 0, vocab, consts })
+    }
+
+    /// Resident device bytes of this session's state (pool accounting).
+    pub fn state_bytes(&self) -> usize {
+        self.be.state_bytes(StateKind::Tiny, "tiny", self.bucket).unwrap_or(0)
+    }
+
+    /// Host snapshot of the tiny state (checkpoint / swap-out).
+    pub fn export(&self) -> Result<StateSnapshot> {
+        self.be.export_state(StateKind::Tiny, "tiny", self.bucket, &self.state)
+    }
+
+    /// Replace the threaded state with an imported snapshot (the ring
+    /// cursors live on the session object and survive the swap).
+    pub fn restore(&mut self, snap: &StateSnapshot) -> Result<()> {
+        if snap.kind != StateKind::Tiny || snap.bucket != self.bucket {
+            bail!("snapshot {snap:?} does not match tiny session b{}", self.bucket);
+        }
+        self.state = self.be.import_state(snap)?;
+        Ok(())
+    }
+
+    /// Drop the device state (swap-out); `restore` re-installs it.
+    pub fn drop_state(&mut self) {
+        self.state = StateBuf::nil();
     }
 
     /// Prefill the streaming cache with (up to) the last `bucket - γ`

@@ -3,10 +3,11 @@
 //! Tables 1/3 row 3). Also the shared implementation of the "Full" mode
 //! rounds inside SpecPV. One `step()` = one draft→verify→accept round.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::backend::Backend;
+use crate::backend::{Backend, StateKind, StateSnapshot};
 use crate::config::Config;
+use crate::kvstore::KvStore;
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::{bucket_need, ReadOut};
@@ -89,6 +90,7 @@ impl Engine for SpecFullEngine {
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
+        prefix: Option<&KvStore>,
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
@@ -103,7 +105,7 @@ impl Engine for SpecFullEngine {
         let mut draft = DraftSession::new(be, &self.cfg.model_size, target.bucket)?;
 
         let mut sw = Stopwatch::new();
-        let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft))?;
+        let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft), prefix)?;
         stats.prefill_secs = sw.lap();
 
         let bonus = pick_token(&logits, req.temperature, &mut rng);
@@ -218,5 +220,37 @@ impl EngineSession for SpecFullSession<'_> {
         stats.new_tokens = out.tokens.len();
         stats.offload_secs = target.offload.secs;
         GenResult { tokens: out.tokens, stats }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.target.state_bytes() + self.draft.state_bytes()
+    }
+
+    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
+        let snaps = vec![self.target.export()?, self.draft.export()?];
+        self.target.drop_state();
+        self.draft.drop_state();
+        Ok(snaps)
+    }
+
+    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+        let (mut full, mut draft) = (false, false);
+        for s in &snaps {
+            match s.kind {
+                StateKind::Full => {
+                    self.target.restore(s)?;
+                    full = true;
+                }
+                StateKind::Draft => {
+                    self.draft.restore(s)?;
+                    draft = true;
+                }
+                k => bail!("unexpected {k:?} snapshot for a spec_full session"),
+            }
+        }
+        if !(full && draft) {
+            bail!("spec_full resume needs full + draft snapshots");
+        }
+        Ok(())
     }
 }

@@ -17,10 +17,11 @@
 //! [`SpecPvSession`] fields so the coordinator can interleave rounds of
 //! many generations over one runtime.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::backend::Backend;
+use crate::backend::{Backend, StateKind, StateSnapshot};
 use crate::config::Config;
+use crate::kvstore::KvStore;
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
@@ -90,6 +91,7 @@ impl Engine for SpecPvEngine {
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
+        prefix: Option<&KvStore>,
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
@@ -114,7 +116,7 @@ impl Engine for SpecPvEngine {
         let big_refresh = widths.get(1).copied();
 
         let mut sw = Stopwatch::new();
-        let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft))?;
+        let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft), prefix)?;
         stats.prefill_secs = sw.lap();
 
         let bonus = pick_token(&logits, req.temperature, &mut rng);
@@ -310,5 +312,45 @@ impl EngineSession for SpecPvSession<'_> {
         stats.new_tokens = out.tokens.len();
         stats.offload_secs = target.offload.secs;
         GenResult { tokens: out.tokens, stats }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.target.state_bytes() + self.draft.state_bytes() + self.partial.state_bytes()
+    }
+
+    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
+        let mut snaps = vec![self.target.export()?, self.draft.export()?];
+        if let Some(p) = self.partial.export()? {
+            snaps.push(p);
+        }
+        self.target.drop_state();
+        self.draft.drop_state();
+        self.partial.drop_state();
+        Ok(snaps)
+    }
+
+    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+        let (mut full, mut draft) = (false, false);
+        for s in &snaps {
+            match s.kind {
+                StateKind::Full => {
+                    self.target.restore(s)?;
+                    full = true;
+                }
+                StateKind::Draft => {
+                    self.draft.restore(s)?;
+                    draft = true;
+                }
+                // the partial snapshot is present iff a core was
+                // installed before the swap; its cache accounting (core
+                // length, buffer, pv chain) never left the session
+                StateKind::Partial => self.partial.restore(s)?,
+                k => bail!("unexpected {k:?} snapshot for a spec_pv session"),
+            }
+        }
+        if !(full && draft) {
+            bail!("spec_pv resume needs full + draft snapshots");
+        }
+        Ok(())
     }
 }

@@ -5,10 +5,11 @@
 //! in §4.2) are omitted; the Medusa-draft + full-verification structure
 //! is what Table 1 row 2 measures.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::backend::Backend;
+use crate::backend::{Backend, StateKind, StateSnapshot};
 use crate::config::Config;
+use crate::kvstore::KvStore;
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
@@ -86,6 +87,7 @@ impl Engine for TokenSwiftEngine {
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
+        prefix: Option<&KvStore>,
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
@@ -102,7 +104,7 @@ impl Engine for TokenSwiftEngine {
         let h = target.info.d_model;
 
         let mut sw = Stopwatch::new();
-        let (logits, feat_last) = target.prefill(&req.prompt, None)?;
+        let (logits, feat_last) = target.prefill(&req.prompt, None, prefix)?;
         stats.prefill_secs = sw.lap();
 
         let bonus = pick_token(&logits, req.temperature, &mut rng);
@@ -183,5 +185,32 @@ impl EngineSession for TokenSwiftSession<'_> {
         stats.new_tokens = out.tokens.len();
         stats.offload_secs = target.offload.secs;
         GenResult { tokens: out.tokens, stats }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.target.state_bytes()
+    }
+
+    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
+        let snap = self.target.export()?;
+        self.target.drop_state();
+        Ok(vec![snap])
+    }
+
+    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+        let mut full = false;
+        for s in &snaps {
+            match s.kind {
+                StateKind::Full => {
+                    self.target.restore(s)?;
+                    full = true;
+                }
+                k => bail!("unexpected {k:?} snapshot for a tokenswift session"),
+            }
+        }
+        if !full {
+            bail!("tokenswift resume needs a full snapshot");
+        }
+        Ok(())
     }
 }

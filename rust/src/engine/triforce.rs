@@ -9,10 +9,11 @@
 //! the properties under test (independent draft, full verification,
 //! streaming draft cache) are preserved.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::backend::Backend;
+use crate::backend::{Backend, StateKind, StateSnapshot};
 use crate::config::Config;
+use crate::kvstore::KvStore;
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
@@ -73,6 +74,7 @@ impl Engine for TriForceEngine {
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
+        prefix: Option<&KvStore>,
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
@@ -88,7 +90,7 @@ impl Engine for TriForceEngine {
         let mut tiny = TinySession::new(be)?;
 
         let mut sw = Stopwatch::new();
-        let (logits, _) = target.prefill(&req.prompt, None)?;
+        let (logits, _) = target.prefill(&req.prompt, None, prefix)?;
         tiny.prefill(&req.prompt, gamma)?;
         stats.prefill_secs = sw.lap();
 
@@ -178,5 +180,37 @@ impl EngineSession for TriForceSession<'_> {
         stats.new_tokens = out.tokens.len();
         stats.offload_secs = target.offload.secs;
         GenResult { tokens: out.tokens, stats }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.target.state_bytes() + self.tiny.state_bytes()
+    }
+
+    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
+        let snaps = vec![self.target.export()?, self.tiny.export()?];
+        self.target.drop_state();
+        self.tiny.drop_state();
+        Ok(snaps)
+    }
+
+    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+        let (mut full, mut tiny) = (false, false);
+        for s in &snaps {
+            match s.kind {
+                StateKind::Full => {
+                    self.target.restore(s)?;
+                    full = true;
+                }
+                StateKind::Tiny => {
+                    self.tiny.restore(s)?;
+                    tiny = true;
+                }
+                k => bail!("unexpected {k:?} snapshot for a triforce session"),
+            }
+        }
+        if !(full && tiny) {
+            bail!("triforce resume needs full + tiny snapshots");
+        }
+        Ok(())
     }
 }

@@ -1,0 +1,55 @@
+//! KV state manager: the subsystem that makes long-context KV state a
+//! first-class, *movable* resource instead of an opaque device buffer
+//! (DESIGN.md §11).
+//!
+//! Three cooperating pieces, all built on the `Backend` trait's
+//! snapshot/restore ABI ([`crate::backend::StateSnapshot`]):
+//!
+//! * [`KvStore`] ([`prefix`]) — a content-addressed **prompt-prefix
+//!   cache**: post-prefill snapshots keyed by (geometry, prompt-prefix
+//!   hash, prefix length) with LRU + byte-budget eviction.
+//!   `TargetSession::prefill` consults it, so a request whose prompt
+//!   extends a cached prefix restores the snapshot and prefills only the
+//!   tail — TTFT for repeated long documents collapses from O(context)
+//!   to O(tail).
+//! * [`KvPool`] ([`pool`]) — **byte-denominated admission accounting**:
+//!   the coordinator registers each live session's resident state bytes
+//!   (from `Backend::state_bytes`) and gates admission on a configurable
+//!   budget (`kv_budget_bytes`) instead of a session head-count alone.
+//! * [`SwapStore`] ([`swap`]) — the **host store for swapped-out
+//!   sessions**: under byte pressure the coordinator preempts the
+//!   lowest-priority active session, exports its states here, and
+//!   re-queues it; re-admission imports the snapshots back
+//!   (restore-on-resume), turning step-resumable sessions into real
+//!   elastic scheduling.
+//!
+//! Everything is exact: export → import → continue is byte-identical to
+//! an unsuspended run (pinned by `rust/tests/kvstore.rs`), so neither
+//! prefix hits nor swaps are observable in the output stream.
+
+pub mod pool;
+pub mod prefix;
+pub mod swap;
+
+pub use pool::KvPool;
+pub use prefix::{KvStore, PrefixStats};
+pub use swap::SwapStore;
+
+/// Aggregated snapshot of the KV subsystem, reported by the server's
+/// `{"op":"cache"}` admin op and `Coordinator::kv_stats`.
+#[derive(Debug, Default, Clone)]
+pub struct KvStats {
+    pub prefix: PrefixStats,
+    /// device bytes currently registered to live sessions
+    pub resident_bytes: usize,
+    /// admission byte budget (0 = unlimited)
+    pub budget_bytes: usize,
+    /// live sessions with registered state
+    pub live_states: usize,
+    /// sessions currently swapped out to the host store
+    pub swapped: usize,
+    /// host bytes held by swapped-out snapshots
+    pub swap_bytes: usize,
+    pub swap_outs: u64,
+    pub swap_ins: u64,
+}

@@ -1,0 +1,89 @@
+//! Byte-denominated admission accounting for live KV state.
+//!
+//! The coordinator registers every live session's resident state bytes
+//! (computed from `Backend::state_bytes` over the session's full /
+//! partial / draft / tiny buckets) and asks [`KvPool::admits`] before
+//! starting or resuming a session. The KV footprint — not a session
+//! head-count — is what governs who runs; `max_active` remains only as a
+//! scheduling-width cap.
+
+use std::collections::HashMap;
+
+/// Tracks resident bytes per live session against a budget.
+#[derive(Debug, Default)]
+pub struct KvPool {
+    budget: usize,
+    resident: usize,
+    by_id: HashMap<u64, usize>,
+}
+
+impl KvPool {
+    /// A pool with `budget_bytes` capacity (0 = unlimited).
+    pub fn new(budget_bytes: usize) -> KvPool {
+        KvPool { budget: budget_bytes, resident: 0, by_id: HashMap::new() }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently registered to live sessions.
+    pub fn resident(&self) -> usize {
+        self.resident
+    }
+
+    /// Live sessions with registered state.
+    pub fn live(&self) -> usize {
+        self.by_id.len()
+    }
+
+    /// Would a new state of `bytes` fit? Unlimited when the budget is 0;
+    /// an empty pool always admits, so one oversized session degrades to
+    /// run-alone instead of deadlocking the scheduler.
+    pub fn admits(&self, bytes: usize) -> bool {
+        self.budget == 0 || self.by_id.is_empty() || self.resident + bytes <= self.budget
+    }
+
+    /// Register (or re-register) a session's resident bytes.
+    pub fn register(&mut self, id: u64, bytes: usize) {
+        let prev = self.by_id.insert(id, bytes).unwrap_or(0);
+        self.resident = self.resident - prev + bytes;
+    }
+
+    /// Release a session's bytes (idempotent); returns what was held.
+    pub fn release(&mut self, id: u64) -> usize {
+        let b = self.by_id.remove(&id).unwrap_or(0);
+        self.resident -= b;
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_roundtrip() {
+        let mut p = KvPool::new(100);
+        assert!(p.admits(100));
+        p.register(1, 60);
+        assert_eq!((p.resident(), p.live()), (60, 1));
+        assert!(p.admits(40));
+        assert!(!p.admits(41));
+        p.register(1, 70); // re-register replaces, not adds
+        assert_eq!(p.resident(), 70);
+        assert_eq!(p.release(1), 70);
+        assert_eq!(p.release(1), 0);
+        assert_eq!((p.resident(), p.live()), (0, 0));
+    }
+
+    #[test]
+    fn zero_budget_is_unlimited_and_empty_pool_admits_oversize() {
+        let p = KvPool::new(0);
+        assert!(p.admits(usize::MAX / 2));
+        let mut p = KvPool::new(10);
+        assert!(p.admits(1 << 30), "empty pool must admit (no deadlock)");
+        p.register(1, 5);
+        assert!(!p.admits(1 << 30));
+    }
+}

@@ -1,0 +1,323 @@
+//! Content-addressed prompt-prefix snapshot cache (LRU + byte budget).
+//!
+//! Keys are `(geometry hash, fnv1a over the prefix tokens, prefix len)`;
+//! the geometry hash folds in everything that makes a snapshot
+//! re-usable: backend name, model size, full bucket, prefill chunk width
+//! and whether a paired EAGLE draft state rides along. Prefixes are only
+//! cached at whole-chunk boundaries strictly inside the prompt, so a hit
+//! always leaves at least one tail token to prefill (the final-row read
+//! then comes from a freshly computed chunk). Hash collisions cannot
+//! corrupt output: the stored prefix tokens are compared verbatim before
+//! a hit is declared.
+//!
+//! The store is a cheaply clonable shared handle (`Rc<RefCell<..>>`) —
+//! the coordinator, its session factory and every live session on the
+//! single device thread share one instance.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::backend::StateSnapshot;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// fnv1a-64, continued from `h` over `bytes`.
+pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Hash a set of geometry-defining byte strings into one prefix-cache
+/// geometry key.
+pub fn geom_hash(parts: &[&[u8]]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for p in parts {
+        h = fnv1a(h, p);
+        h = fnv1a(h, &[0xff]); // separator so ("ab","c") != ("a","bc")
+    }
+    h
+}
+
+/// Rolling fnv1a over a token stream, sampled at every whole multiple of
+/// `chunk` that still leaves a tail: returns `(prefix_len, hash)` pairs
+/// ascending, each with `prefix_len < tokens.len()`.
+pub fn chunk_boundary_hashes(tokens: &[u32], chunk: usize) -> Vec<(usize, u64)> {
+    let mut out = Vec::new();
+    if chunk == 0 || tokens.len() < 2 {
+        return out;
+    }
+    let max_len = ((tokens.len() - 1) / chunk) * chunk;
+    let mut h = FNV_OFFSET;
+    for (i, &t) in tokens.iter().enumerate().take(max_len) {
+        h = fnv1a(h, &t.to_le_bytes());
+        let len = i + 1;
+        if len % chunk == 0 {
+            out.push((len, h));
+        }
+    }
+    out
+}
+
+/// Observable counters + occupancy of a [`KvStore`].
+#[derive(Debug, Default, Clone)]
+pub struct PrefixStats {
+    pub entries: usize,
+    pub bytes: usize,
+    pub budget_bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+struct Entry {
+    /// the exact prefix tokens (collision guard; also what `bytes` counts
+    /// beyond the snapshots)
+    tokens: Vec<u32>,
+    snaps: Rc<Vec<StateSnapshot>>,
+    bytes: usize,
+    /// LRU stamp (monotone per-store clock)
+    stamp: u64,
+}
+
+struct Inner {
+    budget: usize,
+    bytes: usize,
+    clock: u64,
+    map: HashMap<(u64, u64, usize), Entry>,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+/// Shared handle to the prefix cache. Cloning shares the store.
+#[derive(Clone)]
+pub struct KvStore {
+    inner: Rc<RefCell<Inner>>,
+}
+
+impl KvStore {
+    /// A store evicting LRU entries beyond `budget_bytes` (0 disables
+    /// insertion entirely — every lookup misses).
+    pub fn new(budget_bytes: usize) -> KvStore {
+        KvStore {
+            inner: Rc::new(RefCell::new(Inner {
+                budget: budget_bytes,
+                bytes: 0,
+                clock: 0,
+                map: HashMap::new(),
+                hits: 0,
+                misses: 0,
+                insertions: 0,
+                evictions: 0,
+            })),
+        }
+    }
+
+    /// Whether this store can ever hold an entry.
+    pub fn enabled(&self) -> bool {
+        self.inner.borrow().budget > 0
+    }
+
+    /// Whether an entry of roughly `bytes` could ever be inserted —
+    /// callers gate the (expensive, possibly device→host) export on this
+    /// so oversized snapshots are never materialized just to be dropped.
+    pub fn accepts(&self, bytes: usize) -> bool {
+        let budget = self.inner.borrow().budget;
+        budget > 0 && bytes <= budget
+    }
+
+    /// Longest cached prefix of `tokens` at a chunk boundary under
+    /// geometry `geom`. Returns `(prefix_len, snapshots)`; the snapshots
+    /// are shared (`Rc`), not copied. Counts one hit or one miss.
+    pub fn lookup_longest(
+        &self,
+        geom: u64,
+        tokens: &[u32],
+        chunk: usize,
+    ) -> Option<(usize, Rc<Vec<StateSnapshot>>)> {
+        let bounds = chunk_boundary_hashes(tokens, chunk);
+        let mut inner = self.inner.borrow_mut();
+        inner.clock += 1;
+        let stamp = inner.clock;
+        for &(len, h) in bounds.iter().rev() {
+            let mut found = None;
+            if let Some(e) = inner.map.get_mut(&(geom, h, len)) {
+                if e.tokens[..] == tokens[..len] {
+                    e.stamp = stamp;
+                    found = Some(Rc::clone(&e.snaps));
+                }
+            }
+            if let Some(snaps) = found {
+                inner.hits += 1;
+                return Some((len, snaps));
+            }
+        }
+        inner.misses += 1;
+        None
+    }
+
+    /// Insert a post-prefill snapshot set for `prefix` under `geom`,
+    /// evicting LRU entries until the byte budget holds. Oversized
+    /// entries and duplicates are dropped silently.
+    pub fn insert(&self, geom: u64, prefix: &[u32], snaps: Vec<StateSnapshot>) {
+        let bytes =
+            snaps.iter().map(|s| s.bytes()).sum::<usize>() + prefix.len() * 4;
+        let mut inner = self.inner.borrow_mut();
+        if inner.budget == 0 || bytes > inner.budget {
+            return;
+        }
+        let mut h = FNV_OFFSET;
+        for &t in prefix {
+            h = fnv1a(h, &t.to_le_bytes());
+        }
+        let key = (geom, h, prefix.len());
+        if inner.map.contains_key(&key) {
+            return;
+        }
+        inner.clock += 1;
+        let stamp = inner.clock;
+        inner.map.insert(
+            key,
+            Entry { tokens: prefix.to_vec(), snaps: Rc::new(snaps), bytes, stamp },
+        );
+        inner.bytes += bytes;
+        inner.insertions += 1;
+        while inner.bytes > inner.budget {
+            // the just-inserted entry carries the newest stamp, so the
+            // LRU scan can never evict it (bytes ≤ budget was checked)
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k);
+            let Some(k) = victim else { break };
+            if let Some(e) = inner.map.remove(&k) {
+                inner.bytes -= e.bytes;
+                inner.evictions += 1;
+            }
+        }
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        let inner = self.inner.borrow();
+        PrefixStats {
+            entries: inner.map.len(),
+            bytes: inner.bytes,
+            budget_bytes: inner.budget,
+            hits: inner.hits,
+            misses: inner.misses,
+            insertions: inner.insertions,
+            evictions: inner.evictions,
+        }
+    }
+
+}
+
+impl std::fmt::Debug for KvStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "KvStore({} entries, {}/{} bytes, {} hits / {} misses)",
+            s.entries, s.bytes, s.budget_bytes, s.hits, s.misses
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{StateKind, StateSnapshot};
+
+    fn snap(n: usize) -> StateSnapshot {
+        StateSnapshot {
+            kind: StateKind::Full,
+            size: "s".into(),
+            bucket: 128,
+            data: vec![0.5; n],
+            extra: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn boundary_hashes_leave_a_tail() {
+        let toks: Vec<u32> = (0..10).collect();
+        let b = chunk_boundary_hashes(&toks, 4);
+        assert_eq!(b.iter().map(|&(l, _)| l).collect::<Vec<_>>(), vec![4, 8]);
+        // an exact-multiple prompt still reserves the final chunk
+        let toks: Vec<u32> = (0..8).collect();
+        let b = chunk_boundary_hashes(&toks, 4);
+        assert_eq!(b.iter().map(|&(l, _)| l).collect::<Vec<_>>(), vec![4]);
+        assert!(chunk_boundary_hashes(&toks[..1], 4).is_empty());
+        // prefix hashes are rolling: boundary k's hash equals a fresh
+        // hash over the first k tokens
+        let toks: Vec<u32> = (10..30).collect();
+        let b = chunk_boundary_hashes(&toks, 8);
+        let fresh = chunk_boundary_hashes(&toks[..9], 8);
+        assert_eq!(b[0], fresh[0]);
+    }
+
+    #[test]
+    fn lookup_prefers_longest_and_checks_tokens() {
+        let st = KvStore::new(1 << 20);
+        let toks: Vec<u32> = (0..100).collect();
+        st.insert(7, &toks[..32], vec![snap(10)]);
+        st.insert(7, &toks[..64], vec![snap(10)]);
+        let (len, _) = st.lookup_longest(7, &toks, 32).unwrap();
+        assert_eq!(len, 64);
+        // different geometry misses
+        assert!(st.lookup_longest(8, &toks, 32).is_none());
+        // a diverging prompt with the same length misses
+        let mut other = toks.clone();
+        other[10] = 999;
+        assert!(st.lookup_longest(7, &other[..40], 32).is_none());
+        let s = st.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.insertions, 2);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget() {
+        // each entry ≈ 4000 (snap) + 128 (tokens) bytes
+        let st = KvStore::new(9000);
+        let toks: Vec<u32> = (0..200).collect();
+        st.insert(1, &toks[..32], vec![snap(1000)]);
+        st.insert(2, &toks[..32], vec![snap(1000)]);
+        assert_eq!(st.stats().entries, 2);
+        // touch entry 1 so entry 2 becomes LRU
+        assert!(st.lookup_longest(1, &toks[..40], 32).is_some());
+        st.insert(3, &toks[..32], vec![snap(1000)]);
+        let s = st.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes <= 9000);
+        assert!(st.lookup_longest(1, &toks[..40], 32).is_some(), "MRU kept");
+        assert!(st.lookup_longest(2, &toks[..40], 32).is_none(), "LRU evicted");
+        // oversized entries never land (and `accepts` predicts that
+        // without materializing the snapshot)
+        assert!(st.accepts(4000));
+        assert!(!st.accepts(10_000));
+        st.insert(4, &toks[..32], vec![snap(1 << 20)]);
+        assert!(st.lookup_longest(4, &toks[..40], 32).is_none());
+        // a zero-budget store is inert
+        let off = KvStore::new(0);
+        assert!(!off.enabled());
+        assert!(!off.accepts(1));
+        off.insert(1, &toks[..32], vec![snap(10)]);
+        assert!(off.lookup_longest(1, &toks, 32).is_none());
+    }
+
+    #[test]
+    fn geom_hash_separates_parts() {
+        assert_ne!(geom_hash(&[b"ab", b"c"]), geom_hash(&[b"a", b"bc"]));
+        assert_eq!(geom_hash(&[b"x", b"y"]), geom_hash(&[b"x", b"y"]));
+    }
+}

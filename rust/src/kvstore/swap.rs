@@ -1,0 +1,101 @@
+//! Host store for swapped-out session state.
+//!
+//! When the coordinator preempts a session, its exported
+//! [`StateSnapshot`]s land here keyed by request id; re-admission takes
+//! them back for restore-on-resume. The store owns only the *state* —
+//! the dormant session object itself (host-side accounting, RNG, output
+//! cursor) stays with the coordinator.
+
+use std::collections::HashMap;
+
+use crate::backend::StateSnapshot;
+
+#[derive(Default)]
+pub struct SwapStore {
+    entries: HashMap<u64, Vec<StateSnapshot>>,
+    bytes: usize,
+}
+
+impl SwapStore {
+    fn bytes_of_entry(snaps: &[StateSnapshot]) -> usize {
+        snaps.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Park a swapped-out session's snapshots.
+    pub fn put(&mut self, id: u64, snaps: Vec<StateSnapshot>) {
+        self.bytes += Self::bytes_of_entry(&snaps);
+        if let Some(old) = self.entries.insert(id, snaps) {
+            self.bytes -= Self::bytes_of_entry(&old);
+        }
+    }
+
+    /// Take a session's snapshots back for resume.
+    pub fn take(&mut self, id: u64) -> Option<Vec<StateSnapshot>> {
+        let snaps = self.entries.remove(&id)?;
+        self.bytes -= Self::bytes_of_entry(&snaps);
+        Some(snaps)
+    }
+
+    /// Drop a session's snapshots (cancellation / expiry while swapped).
+    pub fn discard(&mut self, id: u64) {
+        let _ = self.take(id);
+    }
+
+    pub fn bytes_of(&self, id: u64) -> Option<usize> {
+        self.entries.get(&id).map(|s| Self::bytes_of_entry(s))
+    }
+
+    /// Host bytes held across all parked sessions.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl std::fmt::Debug for SwapStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SwapStore({} sessions, {} bytes)", self.entries.len(), self.bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::StateKind;
+
+    fn snap(n: usize) -> StateSnapshot {
+        StateSnapshot {
+            kind: StateKind::Full,
+            size: "s".into(),
+            bucket: 128,
+            data: vec![0.0; n],
+            extra: vec![0.0; n],
+        }
+    }
+
+    #[test]
+    fn put_take_accounting() {
+        let mut s = SwapStore::default();
+        assert!(s.is_empty());
+        s.put(3, vec![snap(10), snap(5)]);
+        assert_eq!(s.bytes(), (10 + 10 + 5 + 5) * 4);
+        assert_eq!(s.bytes_of(3), Some(s.bytes()));
+        // re-put replaces the old entry without double counting
+        s.put(3, vec![snap(2)]);
+        assert_eq!(s.bytes(), 16);
+        let got = s.take(3).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!((s.bytes(), s.len()), (0, 0));
+        assert!(s.take(3).is_none());
+        s.put(4, vec![snap(1)]);
+        s.discard(4);
+        assert!(s.is_empty());
+    }
+}

@@ -28,6 +28,7 @@ pub mod corpus;
 pub mod engine;
 pub mod harness;
 pub mod json;
+pub mod kvstore;
 pub mod manifest;
 pub mod metrics;
 pub mod model;

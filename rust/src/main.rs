@@ -4,12 +4,20 @@
 //! specpv generate --prompt-file f.txt [--engine spec_pv] [--max-new 256]
 //! specpv continue --ctx 4096 --seed 1 [--engine ...]   # PG-19-style demo
 //! specpv serve    [--addr 127.0.0.1:7799] [--max-active 4]
+//!                 [--max-queue 256] [--max-prompt 7168]
+//!                 [--kv-budget-bytes N] [--prefix-cache-bytes N]
 //! specpv bench    <fig1|table1|fig4|table2|table3|fig5|table4|fig6|fig7|fig8|all>
 //!                 [--out results] [--quick]
-//! specpv bench backend [--quick] [--check]   # reference-backend op bench
-//!                 # fast vs naive-oracle timings + five-engine e2e;
-//!                 # writes BENCH_backend.json at the repo root; --check
-//!                 # fails on a >2x regression vs BENCH_baseline.json
+//! specpv bench backend [--quick] [--check] [--update-baseline]
+//!                 # reference-backend op bench: fast vs naive-oracle
+//!                 # timings + five-engine e2e; writes BENCH_backend.json
+//!                 # at the repo root; --check fails on a >2x regression
+//!                 # vs BENCH_baseline.json; --update-baseline rewrites
+//!                 # the committed ceilings from this run
+//! specpv bench kvstore [--quick]   # KV state manager bench: prefix-hit
+//!                 # vs cold-prefill TTFT at the 1024 bucket, snapshot
+//!                 # export/import and swap round-trip costs; writes
+//!                 # BENCH_kvstore.json at the repo root
 //! specpv inspect  # backend / artifact catalog summary
 //! ```
 //! Common flags: `--artifacts DIR --size s|m|l --engine E --budget N
@@ -70,6 +78,18 @@ fn build_config(cli: &Cli) -> Result<Config> {
     }
     if let Some(n) = cli.opt_parse::<usize>("max-active")? {
         cfg.max_active = n;
+    }
+    if let Some(n) = cli.opt_parse::<usize>("max-queue")? {
+        cfg.max_queue = n;
+    }
+    if let Some(n) = cli.opt_parse::<usize>("max-prompt")? {
+        cfg.max_prompt = n;
+    }
+    if let Some(n) = cli.opt_parse::<usize>("kv-budget-bytes")? {
+        cfg.kv_budget_bytes = n;
+    }
+    if let Some(n) = cli.opt_parse::<usize>("prefix-cache-bytes")? {
+        cfg.prefix_cache_bytes = n;
     }
     if cli.has_flag("offload") {
         cfg.offload.enabled = true;
@@ -156,7 +176,13 @@ fn main() -> Result<()> {
                     &out,
                     cli.has_flag("quick"),
                     cli.has_flag("check"),
+                    cli.has_flag("update-baseline"),
                 );
+            }
+            if id == "kvstore" {
+                // KV state manager bench: prefix-hit vs cold TTFT,
+                // snapshot export/import, swap round-trip
+                return specpv::bench::kvstore::run(&out, cli.has_flag("quick"));
             }
             let be = backend::from_config(&cfg)?;
             harness::run_experiment(be.as_ref(), &cfg, &id, &out, cli.has_flag("quick"))?;

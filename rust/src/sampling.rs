@@ -172,6 +172,80 @@ mod tests {
         }
     }
 
+    /// Greedy limit of speculative acceptance: as temperature → 0 the
+    /// target distribution is one-hot at its argmax, so `spec_accept`
+    /// commits exactly the argmax regardless of the draft — i.e. the
+    /// greedy chain walk the engines use is the T=0 special case.
+    #[test]
+    fn spec_accept_greedy_limit_equals_argmax_chain() {
+        Prop::new("one-hot target commits its argmax", 200).run(|g| {
+            let n = g.usize_in(2, 32);
+            // one-hot target (greedy limit), arbitrary proper-ish draft
+            let best = g.usize_in(0, n - 1);
+            let mut p = vec![0f32; n];
+            p[best] = 1.0;
+            let mut q: Vec<f32> = (0..n).map(|_| g.f32_in(0.01, 1.0)).collect();
+            let z: f32 = q.iter().sum();
+            for x in &mut q {
+                *x /= z;
+            }
+            let mut rng = Rng::new(g.u64());
+            let x = g.usize_in(0, n - 1);
+            let (accepted, committed) = spec_accept(&p, &q, x, &mut rng);
+            assert_eq!(committed, best, "greedy limit must commit argmax(p)");
+            if x == best {
+                // p(x)/q(x) ≥ 1 → acceptance is certain
+                assert!(accepted, "drafting the argmax must always accept");
+            }
+        });
+    }
+
+    /// Chain acceptance preserves the target distribution position-wise:
+    /// walking a drafted chain with `spec_accept` (stop at the first
+    /// rejection, as the engines do) leaves the first committed token
+    /// distributed exactly as p, and the second committed token — on
+    /// chains whose first draft was accepted — again as p (the i.i.d.
+    /// target of this synthetic setup).
+    #[test]
+    fn spec_accept_chain_prefix_matches_target_distribution() {
+        let p = vec![0.45f32, 0.35, 0.2];
+        let q = vec![0.2f32, 0.3, 0.5];
+        let mut rng = Rng::new(42);
+        let n = 60_000;
+        let mut first = [0usize; 3];
+        let mut second = [0usize; 3];
+        let mut second_n = 0usize;
+        for _ in 0..n {
+            // draft a 2-chain from q, verify both positions
+            let x0 = sample(&q, &mut rng);
+            let (acc0, c0) = spec_accept(&p, &q, x0, &mut rng);
+            first[c0] += 1;
+            if acc0 {
+                let x1 = sample(&q, &mut rng);
+                let (_, c1) = spec_accept(&p, &q, x1, &mut rng);
+                second[c1] += 1;
+                second_n += 1;
+            }
+        }
+        for i in 0..3 {
+            let f = first[i] as f32 / n as f32;
+            assert!(
+                (f - p[i]).abs() < 0.02,
+                "pos 0 token {i}: freq {f} vs p {}",
+                p[i]
+            );
+        }
+        assert!(second_n > n / 4, "acceptance rate implausibly low");
+        for i in 0..3 {
+            let f = second[i] as f32 / second_n as f32;
+            assert!(
+                (f - p[i]).abs() < 0.02,
+                "pos 1 token {i}: freq {f} vs p {}",
+                p[i]
+            );
+        }
+    }
+
     #[test]
     fn pick_token_greedy_matches_argmax() {
         Prop::new("greedy pick == argmax", 100).run(|g| {

@@ -21,8 +21,14 @@
 //!   → {"op":"cancel","id":1}     ← {"ok":true,"cancelled":true}
 //!   → {"op":"metrics"}           ← {"ok":true,"summary":"...",
 //!                                   "queue_depth":0,"active":0,...}
+//!   → {"op":"cache"}             ← {"ok":true,"prefix_hits":3,
+//!                                   "kv_resident_bytes":..., "swap_outs":0,...}
+//!                                   (KV state manager stats, DESIGN.md §11)
 //!   → {"op":"ping"}              ← {"ok":true}
 //!   → {"op":"shutdown"}          ← {"ok":true}  (server exits)
+//!
+//! `generate` also accepts `"priority":N` — under KV-byte pressure the
+//! coordinator swaps out the lowest-priority active session first.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
@@ -50,10 +56,12 @@ enum WorkItem {
         engine: Option<EngineKind>,
         stream: bool,
         deadline_secs: Option<f64>,
+        priority: i32,
         reply: Sender<String>,
     },
     Cancel { id: RequestId, reply: Sender<String> },
     Metrics { reply: Sender<String> },
+    Cache { reply: Sender<String> },
     Ping { reply: Sender<String> },
     Shutdown { reply: Sender<String> },
 }
@@ -212,6 +220,7 @@ fn parse_item(raw: &str, defaults: &Defaults, reply: Sender<String>) -> Result<W
     match op {
         "ping" => Ok(WorkItem::Ping { reply }),
         "metrics" => Ok(WorkItem::Metrics { reply }),
+        "cache" => Ok(WorkItem::Cache { reply }),
         "shutdown" => Ok(WorkItem::Shutdown { reply }),
         "cancel" => {
             let id = req
@@ -241,6 +250,8 @@ fn parse_item(raw: &str, defaults: &Defaults, reply: Sender<String>) -> Result<W
             let stream =
                 req.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
             let deadline_secs = req.get("deadline_s").and_then(|x| x.as_f64());
+            let priority =
+                req.get("priority").and_then(|x| x.as_i64()).unwrap_or(0) as i32;
             Ok(WorkItem::Generate {
                 gen: GenRequest {
                     prompt: tokenizer::encode(prompt),
@@ -251,6 +262,7 @@ fn parse_item(raw: &str, defaults: &Defaults, reply: Sender<String>) -> Result<W
                 engine,
                 stream,
                 deadline_secs,
+                priority,
                 reply,
             })
         }
@@ -327,8 +339,36 @@ fn handle_item(
                     .set("completed", reg.completed as i64)
                     .set("failed", reg.failed as i64)
                     .set("cancelled", reg.cancelled as i64)
+                    .set("kv_resident_bytes", reg.kv_resident_bytes)
+                    .set("kv_budget_bytes", reg.kv_budget_bytes)
+                    .set("swap_outs", reg.swap_outs as i64)
+                    .set("swap_ins", reg.swap_ins as i64)
+                    .set("prefix_hits", reg.prefix_hits as i64)
+                    .set("prefix_misses", reg.prefix_misses as i64)
                     .set("ttft_p50_s", reg.ttft.p50())
                     .set("ttft_p99_s", reg.ttft.p99()),
+            );
+        }
+        WorkItem::Cache { reply } => {
+            let s = coord.kv_stats();
+            send(
+                &reply,
+                Json::obj()
+                    .set("ok", true)
+                    .set("prefix_entries", s.prefix.entries)
+                    .set("prefix_bytes", s.prefix.bytes)
+                    .set("prefix_budget_bytes", s.prefix.budget_bytes)
+                    .set("prefix_hits", s.prefix.hits as i64)
+                    .set("prefix_misses", s.prefix.misses as i64)
+                    .set("prefix_insertions", s.prefix.insertions as i64)
+                    .set("prefix_evictions", s.prefix.evictions as i64)
+                    .set("kv_resident_bytes", s.resident_bytes)
+                    .set("kv_budget_bytes", s.budget_bytes)
+                    .set("live_states", s.live_states)
+                    .set("swapped", s.swapped)
+                    .set("swap_bytes", s.swap_bytes)
+                    .set("swap_outs", s.swap_outs as i64)
+                    .set("swap_ins", s.swap_ins as i64),
             );
         }
         WorkItem::Shutdown { reply } => {
@@ -344,8 +384,11 @@ fn handle_item(
             }
             send(&reply, Json::obj().set("ok", true).set("cancelled", cancelled));
         }
-        WorkItem::Generate { gen, engine, stream, deadline_secs, reply } => {
-            match coord.submit_with_deadline(gen, engine, deadline_secs) {
+        WorkItem::Generate { gen, engine, stream, deadline_secs, priority, reply } => {
+            match coord.submit_opts(
+                gen,
+                crate::coordinator::SubmitOpts { engine, deadline_secs, priority },
+            ) {
                 Ok(id) => {
                     if stream {
                         // ack with the id so the client can cancel
@@ -378,7 +421,9 @@ fn route_event(
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
     match ev {
-        Event::Started { .. } => {}
+        // swap transitions are scheduler-internal (output is unaffected);
+        // operators observe them through the metrics/cache ops
+        Event::Started { .. } | Event::SwappedOut { .. } | Event::Resumed { .. } => {}
         Event::Step { id, new_tokens, step, .. } => {
             if let Some(p) = pending.get(&id) {
                 if p.stream && !new_tokens.is_empty() {
@@ -561,6 +606,11 @@ impl Client {
 
     pub fn metrics(&mut self) -> Result<Json> {
         self.call(Json::obj().set("op", "metrics"))
+    }
+
+    /// KV state manager stats (prefix cache, resident bytes, swaps).
+    pub fn cache(&mut self) -> Result<Json> {
+        self.call(Json::obj().set("op", "cache"))
     }
 
     pub fn shutdown(&mut self) -> Result<()> {

@@ -145,7 +145,7 @@ fn partial_verify_equals_full_verify_after_total_coverage_refresh() {
         OffloadSim::new(Default::default()),
     )
     .unwrap();
-    let (logits, _) = target.prefill(&toks, None).unwrap();
+    let (logits, _) = target.prefill(&toks, None, None).unwrap();
     let committed = target.cache.committed;
     assert_eq!(committed, toks.len());
 

@@ -11,7 +11,7 @@
 //!   * registry gauges + TTFT telemetry
 
 use specpv::config::Config;
-use specpv::coordinator::{Coordinator, Event, RequestId, RequestState};
+use specpv::coordinator::{Coordinator, Event, RequestId, RequestState, SubmitOpts};
 use specpv::engine::scripted::ScriptedFactory;
 use specpv::engine::GenRequest;
 
@@ -253,6 +253,108 @@ fn registry_gauges_track_queue_and_active() {
     let s = c.registry.summary();
     assert!(s.contains("completed=3"), "{s}");
     assert!(s.contains("p50_ttft="), "{s}");
+}
+
+/// Coordinator with a KV byte budget that fits exactly one scripted
+/// session at a time (each reports 100 synthetic bytes).
+fn kv_coord(kv_budget_bytes: usize) -> Coordinator<'static> {
+    let cfg = Config { max_active: 4, kv_budget_bytes, ..Config::default() };
+    let factory =
+        ScriptedFactory { tokens_per_step: 1, session_bytes: 100, ..ScriptedFactory::default() };
+    Coordinator::with_factory(cfg, Box::new(factory))
+}
+
+fn submit_prio(c: &mut Coordinator<'static>, max_new: usize, priority: i32) -> RequestId {
+    c.submit_opts(
+        GenRequest::greedy(vec![104, 105], max_new),
+        SubmitOpts { priority, ..SubmitOpts::default() },
+    )
+    .unwrap()
+}
+
+#[test]
+fn byte_budget_gates_admission_without_priorities() {
+    // budget fits one session; equal priorities → no preemption, the
+    // second request simply waits (head-of-line, not starvation: it
+    // starts as soon as the first finishes)
+    let mut c = kv_coord(150);
+    let a = submit_prio(&mut c, 4, 0);
+    let b = submit_prio(&mut c, 4, 0);
+    c.tick();
+    assert_eq!(c.active_len(), 1, "only one session fits the byte budget");
+    assert_eq!(c.registry.kv_resident_bytes, 100);
+    let mut started = Vec::new();
+    while !c.idle() {
+        for e in c.tick() {
+            if let Event::Started { id } = e {
+                started.push(id);
+            }
+        }
+    }
+    assert_eq!(started, vec![b], "b started only after a finished");
+    assert_eq!(c.registry.swap_outs, 0, "equal priority never preempts");
+    assert_eq!(c.get(a).unwrap().state, RequestState::Done);
+    assert_eq!(c.get(b).unwrap().state, RequestState::Done);
+    assert_eq!(c.registry.kv_resident_bytes, 0, "pool drains at idle");
+}
+
+#[test]
+fn higher_priority_preempts_and_victim_resumes() {
+    let mut c = kv_coord(150);
+    let low = submit_prio(&mut c, 12, 0);
+    c.tick();
+    c.tick();
+    assert_eq!(c.active_len(), 1);
+    let high = submit_prio(&mut c, 4, 5);
+    let mut swapped = Vec::new();
+    let mut resumed = Vec::new();
+    while !c.idle() {
+        for e in c.tick() {
+            match e {
+                Event::SwappedOut { id } => {
+                    swapped.push(id);
+                    assert_eq!(
+                        c.get(id).unwrap().state,
+                        RequestState::Swapped
+                    );
+                }
+                Event::Resumed { id } => resumed.push(id),
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(swapped, vec![low], "the low-priority session is the victim");
+    assert_eq!(resumed, vec![low]);
+    assert_eq!((c.registry.swap_outs, c.registry.swap_ins), (1, 1));
+    // both completed in full — swapping lost no output
+    for (id, max_new) in [(low, 12), (high, 4)] {
+        let tr = c.get(id).unwrap();
+        assert_eq!(tr.state, RequestState::Done);
+        assert_eq!(tr.result.as_ref().unwrap().tokens.len(), max_new);
+    }
+    let s = c.registry.summary();
+    assert!(s.contains("swaps=1/1"), "{s}");
+    assert!(s.contains("kv_budget=150"), "{s}");
+}
+
+#[test]
+fn swapped_request_can_be_cancelled_with_partial_output() {
+    let mut c = kv_coord(150);
+    let low = submit_prio(&mut c, 50, 0);
+    c.tick();
+    c.tick();
+    let _high = submit_prio(&mut c, 50, 5);
+    c.tick(); // preempts low, admits high
+    assert_eq!(c.get(low).unwrap().state, RequestState::Swapped);
+    assert!(c.cancel(low));
+    let tr = c.get(low).unwrap();
+    assert_eq!(tr.state, RequestState::Cancelled);
+    let partial = tr.result.as_ref().expect("partial output kept");
+    assert!(!partial.tokens.is_empty() && partial.tokens.len() < 50);
+    c.run_all();
+    assert_eq!(c.registry.cancelled, 1);
+    assert_eq!(c.registry.completed, 1);
+    assert_eq!(c.registry.kv_resident_bytes, 0);
 }
 
 /// Byte-level check that the scripted engine respects max_new exactly

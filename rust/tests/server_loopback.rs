@@ -149,6 +149,47 @@ fn cancel_streaming_request_mid_generation() {
 }
 
 #[test]
+fn cache_op_reports_kv_state_manager_stats() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // scripted coordinator: no prefix store, empty pool — the op must
+    // still answer with zeroed stats rather than an error
+    let coord = scripted_coordinator(2, 2, 0);
+
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c.generate("warm the scheduler", 8, "spec_pv").unwrap();
+        assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(true), "{r:?}");
+        let s = c.cache().unwrap();
+        assert_eq!(s.get("ok").and_then(|x| x.as_bool()), Some(true), "{s:?}");
+        for key in [
+            "prefix_entries",
+            "prefix_bytes",
+            "prefix_hits",
+            "prefix_misses",
+            "kv_resident_bytes",
+            "kv_budget_bytes",
+            "swapped",
+            "swap_outs",
+            "swap_ins",
+        ] {
+            assert!(s.get(key).is_some(), "missing {key}: {s:?}");
+        }
+        assert_eq!(s.get("kv_resident_bytes").and_then(|x| x.as_i64()), Some(0));
+        assert_eq!(s.get("swapped").and_then(|x| x.as_i64()), Some(0));
+        // metrics op carries the same gauges for dashboards
+        let m = c.metrics().unwrap();
+        assert!(m.get("kv_resident_bytes").is_some(), "{m:?}");
+        assert!(m.get("swap_outs").is_some(), "{m:?}");
+        assert!(m.get("prefix_hits").is_some(), "{m:?}");
+        c.shutdown().unwrap();
+    });
+
+    serve_on(listener, coord).unwrap();
+    client.join().unwrap();
+}
+
+#[test]
 fn bad_requests_get_error_lines_not_disconnects() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
