@@ -21,6 +21,13 @@
 //! | `tiny_forward`    | TriForce independent tiny-LM step (streaming ring) |
 //! | `read_logits`     | host-visible extractor reads from a state          |
 //!
+//! The bandwidth-bound ops additionally ship **batched variants**
+//! (`prefill_batch`, `verify_full_batch`, `verify_partial_batch`,
+//! `draft_expand_batch`, `tiny_forward_batch`) that execute many
+//! independent sessions' ops in one invocation with a strict byte-parity
+//! contract — see DESIGN.md §12. Default impls fall back to a sequential
+//! loop; the reference backend fuses them into stacked matmuls.
+//!
 //! Two implementations ship:
 //! * [`pjrt::PjrtBackend`] — the AOT-artifact player: maps typed ops to
 //!   manifest executable names in one place and executes them on the
@@ -374,6 +381,90 @@ pub trait Backend {
 
     fn read_logits(&self, op: &ReadOp, state: &StateBuf) -> Result<Vec<f32>>;
 
+    // --- batched kernel ops (cross-session fusion, DESIGN.md §12) -------
+    //
+    // Each takes parallel slices of per-session ops and the state buffers
+    // they mutate in place. The contract is strict byte parity: executing
+    // a batch must leave every state (and every subsequent read off it)
+    // bit-identical to executing the ops one at a time in slice order, at
+    // any batch size and thread count. The defaults below are exactly
+    // that sequential loop, so a backend without a fused path (pjrt plays
+    // single-sequence AOT executables) is automatically correct; the
+    // reference backend overrides them to stack per-session rows into one
+    // matmul per layer per op, amortizing weight traffic B×.
+    //
+    // Failure semantics: a fused implementation must validate every op
+    // before mutating any state (all-or-nothing); the sequential defaults
+    // stop at the first error, which may leave earlier members executed
+    // and the failing member's state nil. Callers treat any batch error
+    // as fatal for the whole group (the coordinator fails every member),
+    // so a partially-executed state is never stepped again either way.
+
+    /// True when this backend's `*_batch` ops actually fuse work across
+    /// sessions (rather than inheriting the sequential default loop).
+    /// The coordinator uses this to report honest occupancy metrics.
+    fn fuses_batches(&self) -> bool {
+        false
+    }
+
+    /// Batched [`Backend::prefill`] over independent sessions' chunks.
+    fn prefill_batch(&self, ops: &[PrefillOp], states: &mut [&mut StateBuf]) -> Result<()> {
+        check_batch(ops.len(), states.len())?;
+        for (op, st) in ops.iter().zip(states.iter_mut()) {
+            let owned = std::mem::replace(&mut **st, StateBuf::nil());
+            **st = self.prefill(op, owned)?;
+        }
+        Ok(())
+    }
+
+    /// Batched [`Backend::verify_full`] over independent sessions.
+    fn verify_full_batch(&self, ops: &[VerifyOp], states: &mut [&mut StateBuf]) -> Result<()> {
+        check_batch(ops.len(), states.len())?;
+        for (op, st) in ops.iter().zip(states.iter_mut()) {
+            let owned = std::mem::replace(&mut **st, StateBuf::nil());
+            **st = self.verify_full(op, owned)?;
+        }
+        Ok(())
+    }
+
+    /// Batched [`Backend::verify_partial`] over independent sessions.
+    fn verify_partial_batch(&self, ops: &[VerifyOp], states: &mut [&mut StateBuf]) -> Result<()> {
+        check_batch(ops.len(), states.len())?;
+        for (op, st) in ops.iter().zip(states.iter_mut()) {
+            let owned = std::mem::replace(&mut **st, StateBuf::nil());
+            **st = self.verify_partial(op, owned)?;
+        }
+        Ok(())
+    }
+
+    /// Batched [`Backend::draft_expand`] over independent draft sessions.
+    fn draft_expand_batch(
+        &self,
+        ops: &[DraftExpandOp],
+        states: &mut [&mut StateBuf],
+    ) -> Result<()> {
+        check_batch(ops.len(), states.len())?;
+        for (op, st) in ops.iter().zip(states.iter_mut()) {
+            let owned = std::mem::replace(&mut **st, StateBuf::nil());
+            **st = self.draft_expand(op, owned)?;
+        }
+        Ok(())
+    }
+
+    /// Batched [`Backend::tiny_forward`] over independent tiny sessions.
+    fn tiny_forward_batch(
+        &self,
+        ops: &[TinyForwardOp],
+        states: &mut [&mut StateBuf],
+    ) -> Result<()> {
+        check_batch(ops.len(), states.len())?;
+        for (op, st) in ops.iter().zip(states.iter_mut()) {
+            let owned = std::mem::replace(&mut **st, StateBuf::nil());
+            **st = self.tiny_forward(op, owned)?;
+        }
+        Ok(())
+    }
+
     /// Snapshot of the execution counters.
     fn counters(&self) -> Counters;
 
@@ -392,6 +483,15 @@ pub trait Backend {
     }
 }
 
+/// Shared arity check for the batched kernel-op entry points (also used
+/// by backend implementations' fused paths).
+pub(crate) fn check_batch(ops: usize, states: usize) -> Result<()> {
+    if ops != states {
+        bail!("batched op count {ops} != state count {states}");
+    }
+    Ok(())
+}
+
 /// Smallest bucket in `buckets` (ascending or not) holding `need` tokens.
 pub fn pick_bucket(buckets: &[usize], need: usize, what: &str, size: &str) -> Result<usize> {
     let mut bs = buckets.to_vec();
@@ -406,10 +506,15 @@ pub fn pick_bucket(buckets: &[usize], need: usize, what: &str, size: &str) -> Re
 /// Construct the backend selected by the config. `Auto` resolves to pjrt
 /// when the artifacts directory holds a manifest and to the reference
 /// backend otherwise, so fresh checkouts (and CI) run end-to-end with no
-/// artifacts.
+/// artifacts. An explicit `threads` override (config key / `--threads`
+/// flag) sizes a private kernel pool for the reference backend; 0 keeps
+/// the process-wide pool (`SPECPV_THREADS` env / auto).
 pub fn from_config(cfg: &Config) -> Result<Box<dyn Backend>> {
     match resolve_kind(cfg.backend, &cfg.artifacts_dir) {
         BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new(&cfg.artifacts_dir)?)),
+        _ if cfg.threads >= 1 => Ok(Box::new(reference::ReferenceBackend::with_threads(
+            crate::util::pool::resolve_threads(cfg.threads),
+        ))),
         _ => Ok(Box::new(reference::ReferenceBackend::new())),
     }
 }

@@ -3,6 +3,13 @@
 //! kernel-op API to manifest executable names — engines never format an
 //! executable name again. The low-level compile/upload/execute machinery
 //! stays in [`crate::runtime`].
+//!
+//! The batched kernel ops (`*_batch`, DESIGN.md §12) use the trait's
+//! default sequential loop: every AOT executable is compiled for a
+//! single sequence, so a fused cross-session invocation has no artifact
+//! to run — the coordinator's grouping still works, it just degrades to
+//! per-session execution (and the scheduler's occupancy metrics report
+//! the fallback).
 
 use std::path::Path;
 

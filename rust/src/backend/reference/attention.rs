@@ -279,6 +279,108 @@ pub(crate) fn attention(
     });
 }
 
+/// One session's slice of a batched attention call (DESIGN.md §12):
+/// `q` is this session's `[t, H·D]` query rows, `kv` its own KV slab,
+/// `out_off` the row offset of its output inside the stacked buffer.
+pub(crate) struct AttItem<'a> {
+    pub q: &'a [f32],
+    pub kv: &'a [f32],
+    pub dims: KvDims,
+    pub layer: usize,
+    pub t: usize,
+    pub tk: usize,
+    pub mask: &'a [f32],
+    pub kv_len: usize,
+    pub out_off: usize,
+}
+
+/// Tree attention for one layer across **many sessions** in one pool
+/// dispatch. Attention never mixes sessions — each `(session, head,
+/// query-row)` unit runs [`att_row`] over that session's own KV slab in
+/// the exact single-session reduction order — so the fusion only widens
+/// the parallel work list: B sessions' units share one wake/latch
+/// round-trip instead of B. Byte-identical to per-session
+/// [`attention`] calls at any thread count.
+pub(crate) fn attention_batch(pool: &Pool, out: &mut [f32], items: &[AttItem], scale: f32) {
+    let counts: Vec<usize> = items.iter().map(|it| it.dims.h * it.t).collect();
+    let total_units: usize = counts.iter().sum();
+    if total_units == 0 {
+        return;
+    }
+    let run_unit = |it: &AttItem,
+                    hh: usize,
+                    i: usize,
+                    or: &mut [f32],
+                    probs: &mut Vec<f32>,
+                    midx: &mut Vec<usize>| {
+        let d = it.dims.d;
+        let hd = it.dims.h * d;
+        let qr = &it.q[i * hd + hh * d..i * hd + hh * d + d];
+        let kbase = it.dims.row(it.layer, 0, hh, 0);
+        let vbase = it.dims.row(it.layer, 1, hh, 0);
+        att_row(
+            or,
+            qr,
+            &it.kv[kbase..kbase + it.dims.b * d],
+            &it.kv[vbase..vbase + it.dims.b * d],
+            d,
+            it.dims.b,
+            it.kv_len,
+            &it.mask[i * it.tk..(i + 1) * it.tk],
+            scale,
+            probs,
+            midx,
+        );
+    };
+    let work: usize = items
+        .iter()
+        .map(|it| it.dims.h * it.t * (it.kv_len.min(it.dims.b) + it.tk) * it.dims.d)
+        .sum();
+    if pool.threads() == 1 || work < PAR_MIN_WORK {
+        let mut probs = Vec::new();
+        let mut midx = Vec::new();
+        for it in items {
+            let d = it.dims.d;
+            let hd = it.dims.h * d;
+            for hh in 0..it.dims.h {
+                for i in 0..it.t {
+                    let o = (it.out_off + i) * hd + hh * d;
+                    run_unit(it, hh, i, &mut out[o..o + d], &mut probs, &mut midx);
+                }
+            }
+        }
+        return;
+    }
+    let chunks = pool.threads().min(total_units);
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(chunks, &|c| {
+        let (a, b) = split_range(total_units, chunks, c);
+        let mut probs = Vec::new();
+        let mut midx = Vec::new();
+        for u in a..b {
+            // locate the owning item (B ≤ a dozen; linear scan is fine)
+            let mut idx = u;
+            let mut bi = 0usize;
+            while idx >= counts[bi] {
+                idx -= counts[bi];
+                bi += 1;
+            }
+            let it = &items[bi];
+            let hh = idx / it.t;
+            let i = idx % it.t;
+            let d = it.dims.d;
+            let hd = it.dims.h * d;
+            // SAFETY: every (item, head, row) output slice is disjoint
+            // (items have disjoint out_off row bands) and each unit
+            // belongs to exactly one chunk
+            let or = unsafe {
+                std::slice::from_raw_parts_mut(optr.0.add((it.out_off + i) * hd + hh * d), d)
+            };
+            run_unit(it, hh, i, or, &mut probs, &mut midx);
+        }
+    });
+}
+
 /// The original tuple-vector attention (oracle path).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attention_naive(
@@ -375,6 +477,69 @@ mod tests {
         let tab = rope_tab(&pos, &inv_freq);
         rope_apply_tab(&mut b, &tab, t, n_head, d);
         assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn batched_attention_matches_per_session_calls_bytewise() {
+        let mut rng = Rng::new(33);
+        // two "sessions" with different buckets, kv_lens and t widths
+        let specs = [(KvDims { l: 1, h: 2, b: 32, d: 8 }, 20usize, 3usize),
+                     (KvDims { l: 1, h: 2, b: 64, d: 8 }, 45, 5)];
+        let mut kvs: Vec<Vec<f32>> = Vec::new();
+        let mut qs: Vec<Vec<f32>> = Vec::new();
+        let mut masks: Vec<Vec<f32>> = Vec::new();
+        for &(dims, _kv_len, t) in &specs {
+            kvs.push((0..dims.l * 2 * dims.h * dims.b * dims.d).map(|_| rng.normal() as f32).collect());
+            qs.push((0..t * dims.h * dims.d).map(|_| rng.normal() as f32).collect());
+            masks.push(crate::tree::chain_mask(t, t));
+        }
+        let hd = specs[0].0.h * specs[0].0.d;
+        let total_rows: usize = specs.iter().map(|&(_, _, t)| t).sum();
+        for threads in [1usize, 4] {
+            let pool = Pool::new(threads);
+            // per-session reference
+            let mut want = vec![0f32; total_rows * hd];
+            let mut off = 0usize;
+            for (si, &(dims, kv_len, t)) in specs.iter().enumerate() {
+                attention(
+                    &pool,
+                    &mut want[off * hd..(off + t) * hd],
+                    &qs[si],
+                    &kvs[si],
+                    dims,
+                    0,
+                    t,
+                    t,
+                    &masks[si],
+                    kv_len,
+                    0.4,
+                );
+                off += t;
+            }
+            // one fused dispatch
+            let mut items = Vec::new();
+            let mut off = 0usize;
+            for (si, &(dims, kv_len, t)) in specs.iter().enumerate() {
+                items.push(AttItem {
+                    q: &qs[si],
+                    kv: &kvs[si],
+                    dims,
+                    layer: 0,
+                    t,
+                    tk: t,
+                    mask: &masks[si],
+                    kv_len,
+                    out_off: off,
+                });
+                off += t;
+            }
+            let mut got = vec![0f32; total_rows * hd];
+            attention_batch(&pool, &mut got, &items, 0.4);
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "batched attention diverged at {threads} threads"
+            );
+        }
     }
 
     #[test]

@@ -52,6 +52,8 @@ use self::kernels::{dot, matmul_naive, matmul_t};
 use self::model::{init_model, RefCfg, RefModel};
 use self::scratch::Arena;
 
+use super::Backend as _;
+
 use super::{
     CommitOp, Counters, DraftExpandOp, DraftPrefillOp, GatherOp, PrefillOp, ReadOp, ScoreOp,
     StateBuf, StateKind, TinyForwardOp, VerifyOp,
@@ -332,6 +334,251 @@ impl ReferenceBackend {
         let fam = if partial { "pverify" } else { "verify" };
         self.count(&format!("{fam}_{}_b{}_t{}", op.size, op.bucket, op.t), t0);
         Ok(state)
+    }
+
+    /// Fused body of `prefill_batch` / `verify_full_batch` /
+    /// `verify_partial_batch`: one stacked forward over every session's
+    /// rows (DESIGN.md §12). Naive mode and width-1 groups fall back to
+    /// the sequential single-op path, which keeps the oracle pipeline
+    /// oracle-shaped and makes B=1 trivially byte-identical.
+    fn verify_like_batch(
+        &self,
+        ops: &[VerifyOp],
+        states: &mut [&mut StateBuf],
+        partial: bool,
+    ) -> Result<()> {
+        super::check_batch(ops.len(), states.len())?;
+        if ops.is_empty() {
+            return Ok(());
+        }
+        if self.mode == KernelMode::Naive || ops.len() == 1 {
+            for (op, st) in ops.iter().zip(states.iter_mut()) {
+                let owned = std::mem::replace(&mut **st, StateBuf::nil());
+                **st = self.verify_like(op, owned, partial)?;
+            }
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let size = ops[0].size;
+        let model = self.model_of(size)?;
+        let cfg = &model.cfg;
+        let rows = if partial { TREE_T } else { CHUNK };
+        // validate every op + state before mutating anything, so a batch
+        // error never leaves a half-executed group behind
+        let mut lays = Vec::with_capacity(ops.len());
+        for (op, st) in ops.iter().zip(states.iter()) {
+            if op.size != size {
+                bail!("batched verify ops must share one model size ({} vs {size})", op.size);
+            }
+            if op.t > rows {
+                bail!("verify t={} exceeds the {rows}-row state region", op.t);
+            }
+            if op.tokens.len() != op.t || op.pos.len() != op.t || op.mask.len() != op.t * op.t {
+                bail!("verify op geometry mismatch (t={})", op.t);
+            }
+            let lay = if partial {
+                partial_layout(cfg, op.bucket)
+            } else {
+                full_layout(cfg, op.bucket)
+            };
+            let hs = st.downcast_ref::<HostState>()?;
+            if hs.data.len() != lay.total {
+                bail!("state length {} != layout total {}", hs.data.len(), lay.total);
+            }
+            lays.push(lay);
+        }
+        let b = ops.len();
+        let (h, h3) = (cfg.d_model, 3 * cfg.d_model);
+        let mut items: Vec<model::BatchItem> = Vec::with_capacity(b);
+        let mut rests: Vec<&mut [f32]> = Vec::with_capacity(b);
+        let mut hiddens: Vec<&mut Vec<f32>> = Vec::with_capacity(b);
+        for ((st, op), lay) in states.iter_mut().zip(ops).zip(&lays) {
+            let hs = st.downcast_mut::<HostState>().expect("state validated above");
+            let HostState { data, hidden } = hs;
+            let (kvr, rest) = data.split_at_mut(lay.kv);
+            let dims = KvDims { l: cfg.n_layer, h: cfg.n_head, b: op.bucket, d: cfg.d_head };
+            compact_window(kvr, dims, op.kv_len, op.prev_idx, op.n_prev, PREV_WINDOW);
+            let eff = op.kv_len + op.n_prev;
+            items.push(model::BatchItem {
+                kv: kvr,
+                bucket: op.bucket,
+                tokens: op.tokens,
+                pos: op.pos,
+                mask: op.mask,
+                kv_len: eff,
+                write_pos: eff,
+                want_queries: !partial,
+            });
+            rests.push(rest);
+            hiddens.push(hidden);
+        }
+        {
+            let mut arena = self.scratch.borrow_mut();
+            let outs = model::target_fwd_batch(model, &self.pool, &mut arena, &mut items);
+            for (i, out) in outs.into_iter().enumerate() {
+                let (op, lay) = (&ops[i], &lays[i]);
+                let fo = lay.off_feats() - lay.kv;
+                pack_feats(&mut rests[i][fo..fo + lay.feats], &out.feats, op.t, h3);
+                if !partial {
+                    let qo = lay.off_queries() - lay.kv;
+                    pack_queries(&mut rests[i][qo..qo + lay.queries], &out.queries, cfg, op.t);
+                }
+                hiddens[i].clear();
+                hiddens[i].resize(rows * h, 0.0);
+                hiddens[i][..op.t * h].copy_from_slice(&out.hidden);
+                out.recycle(&mut arena);
+            }
+        }
+        let fam = if partial { "pverify" } else { "verify" };
+        self.count(&format!("{fam}_{size}_b{}_t{}_x{b}", ops[0].bucket, ops[0].t), t0);
+        Ok(())
+    }
+
+    /// Fused body of `draft_expand_batch`.
+    fn draft_expand_batch_impl(
+        &self,
+        ops: &[DraftExpandOp],
+        states: &mut [&mut StateBuf],
+    ) -> Result<()> {
+        super::check_batch(ops.len(), states.len())?;
+        if ops.is_empty() {
+            return Ok(());
+        }
+        if self.mode == KernelMode::Naive || ops.len() == 1 {
+            for (op, st) in ops.iter().zip(states.iter_mut()) {
+                let owned = std::mem::replace(&mut **st, StateBuf::nil());
+                **st = self.draft_expand(op, owned)?;
+            }
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let size = ops[0].size;
+        let model = self.model_of(size)?;
+        let cfg = &model.cfg;
+        let mut lays = Vec::with_capacity(ops.len());
+        for (op, st) in ops.iter().zip(states.iter()) {
+            if op.size != size {
+                bail!("batched draft ops must share one model size ({} vs {size})", op.size);
+            }
+            if op.tokens.len() != DRAFT_W || op.mask.len() != DRAFT_W * DRAFT_REGION {
+                bail!("draft expand wants W={DRAFT_W} tokens and a [W, region] mask");
+            }
+            let lay = draft_layout(cfg, op.bucket);
+            let hs = st.downcast_ref::<HostState>()?;
+            if hs.data.len() != lay.total {
+                bail!("state length {} != layout total {}", hs.data.len(), lay.total);
+            }
+            lays.push(lay);
+        }
+        let b = ops.len();
+        let h = cfg.d_model;
+        let mut items: Vec<model::DraftItem> = Vec::with_capacity(b);
+        let mut rests: Vec<&mut [f32]> = Vec::with_capacity(b);
+        for ((st, op), lay) in states.iter_mut().zip(ops).zip(&lays) {
+            let hs = st.downcast_mut::<HostState>().expect("state validated above");
+            let (kvr, rest) = hs.data.split_at_mut(lay.kv);
+            items.push(model::DraftItem {
+                kv: kvr,
+                bucket: op.bucket,
+                tokens: op.tokens,
+                feats: op.feats,
+                pos: op.pos,
+                mask: op.mask,
+                kv_len: op.kv_len,
+                write_pos: op.write_pos,
+            });
+            rests.push(rest);
+        }
+        {
+            let mut arena = self.scratch.borrow_mut();
+            let outs = model::draft_fwd_batch(model, &self.pool, &mut arena, &mut items);
+            for (i, (lg, hid)) in outs.into_iter().enumerate() {
+                let lay = &lays[i];
+                rests[i][..lay.logits].copy_from_slice(&lg);
+                let ho = lay.off_feats() - lay.kv;
+                rests[i][ho..ho + lay.feats].fill(0.0);
+                rests[i][ho..ho + DRAFT_W * h].copy_from_slice(&hid);
+                arena.give(lg);
+                arena.give(hid);
+            }
+        }
+        self.count(&format!("draft_step_{size}_b{}_x{b}", ops[0].bucket), t0);
+        Ok(())
+    }
+
+    /// Fused body of `tiny_forward_batch`: stacked tiny-LM forward plus
+    /// one fused `lm_head` projection over every session's kept row.
+    fn tiny_forward_batch_impl(
+        &self,
+        ops: &[TinyForwardOp],
+        states: &mut [&mut StateBuf],
+    ) -> Result<()> {
+        super::check_batch(ops.len(), states.len())?;
+        if ops.is_empty() {
+            return Ok(());
+        }
+        if self.mode == KernelMode::Naive || ops.len() == 1 {
+            for (op, st) in ops.iter().zip(states.iter_mut()) {
+                let owned = std::mem::replace(&mut **st, StateBuf::nil());
+                **st = self.tiny_forward(op, owned)?;
+            }
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let model = self.model_of("tiny")?;
+        let cfg = &model.cfg;
+        let lay = tiny_layout(cfg, TINY_BUCKET);
+        for (op, st) in ops.iter().zip(states.iter()) {
+            if op.tokens.len() != op.t || op.mask.len() != op.t * op.t {
+                bail!("tiny op geometry mismatch (t={})", op.t);
+            }
+            let hs = st.downcast_ref::<HostState>()?;
+            if hs.data.len() != lay.total {
+                bail!("state length {} != layout total {}", hs.data.len(), lay.total);
+            }
+        }
+        let b = ops.len();
+        let (h, v) = (cfg.d_model, cfg.vocab);
+        let mut items: Vec<model::BatchItem> = Vec::with_capacity(b);
+        let mut rests: Vec<&mut [f32]> = Vec::with_capacity(b);
+        for (st, op) in states.iter_mut().zip(ops) {
+            let hs = st.downcast_mut::<HostState>().expect("state validated above");
+            let (kvr, rest) = hs.data.split_at_mut(lay.kv);
+            items.push(model::BatchItem {
+                kv: kvr,
+                bucket: TINY_BUCKET,
+                tokens: op.tokens,
+                pos: op.pos,
+                mask: op.mask,
+                kv_len: op.kv_len,
+                write_pos: op.write_pos,
+                want_queries: false,
+            });
+            rests.push(rest);
+        }
+        {
+            let mut arena = self.scratch.borrow_mut();
+            let outs = model::target_fwd_batch(model, &self.pool, &mut arena, &mut items);
+            // fused lm_head over the kept rows: one [B, h] × head matmul
+            // replaces B single-row projections (identical per-row dots)
+            let mut rows_buf = arena.take(b * h);
+            for (i, out) in outs.iter().enumerate() {
+                let row = ops[i].last_idx.min(ops[i].t - 1);
+                rows_buf[i * h..(i + 1) * h].copy_from_slice(&out.hidden[row * h..(row + 1) * h]);
+            }
+            let mut lg = arena.take(b * v);
+            matmul_t(&self.pool, &mut lg, &rows_buf, &model.target.head, b);
+            for (i, rest) in rests.iter_mut().enumerate() {
+                rest[..v].copy_from_slice(&lg[i * v..(i + 1) * v]);
+            }
+            arena.give(rows_buf);
+            arena.give(lg);
+            for out in outs {
+                out.recycle(&mut arena);
+            }
+        }
+        self.count(&format!("verify_tiny_b{TINY_BUCKET}_t{}_x{b}", ops[0].t), t0);
+        Ok(())
     }
 }
 
@@ -764,6 +1011,56 @@ impl super::Backend for ReferenceBackend {
         Ok(state)
     }
 
+    // --- batched kernel ops (stacked-row fusion, DESIGN.md §12) ---------
+
+    fn fuses_batches(&self) -> bool {
+        // naive mode keeps the oracle pipeline sequential by design
+        self.mode == KernelMode::Fast
+    }
+
+    fn prefill_batch(&self, ops: &[PrefillOp], states: &mut [&mut StateBuf]) -> Result<()> {
+        let zero_prev = [0i32; PREV_MAX];
+        let vops: Vec<VerifyOp> = ops
+            .iter()
+            .map(|op| VerifyOp {
+                size: op.size,
+                bucket: op.bucket,
+                t: CHUNK,
+                tokens: op.tokens,
+                pos: op.pos,
+                mask: op.mask,
+                kv_len: op.kv_len,
+                prev_idx: &zero_prev,
+                n_prev: 0,
+            })
+            .collect();
+        self.verify_like_batch(&vops, states, false)
+    }
+
+    fn verify_full_batch(&self, ops: &[VerifyOp], states: &mut [&mut StateBuf]) -> Result<()> {
+        self.verify_like_batch(ops, states, false)
+    }
+
+    fn verify_partial_batch(&self, ops: &[VerifyOp], states: &mut [&mut StateBuf]) -> Result<()> {
+        self.verify_like_batch(ops, states, true)
+    }
+
+    fn draft_expand_batch(
+        &self,
+        ops: &[DraftExpandOp],
+        states: &mut [&mut StateBuf],
+    ) -> Result<()> {
+        self.draft_expand_batch_impl(ops, states)
+    }
+
+    fn tiny_forward_batch(
+        &self,
+        ops: &[TinyForwardOp],
+        states: &mut [&mut StateBuf],
+    ) -> Result<()> {
+        self.tiny_forward_batch_impl(ops, states)
+    }
+
     fn read_logits(&self, op: &ReadOp, state: &StateBuf) -> Result<Vec<f32>> {
         let hs = state.downcast_ref::<HostState>()?;
         let out = match *op {
@@ -1053,6 +1350,89 @@ mod tests {
             .read_logits(&ReadOp::FullWindow { size: "s", bucket: 128, start: 0 }, &st)
             .unwrap();
         assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn batched_verify_matches_sequential_bytewise() {
+        // two sessions with different kv_lens: batch ≡ sequential bytes,
+        // pinned via the reads that materialize the lazy logits
+        let b = be();
+        let t = TREE_T;
+        let mask = crate::tree::chain_mask(t, t);
+        let zero = [0i32; PREV_MAX];
+        let mut specs = Vec::new();
+        for kl in [0usize, 16] {
+            let tokens: Vec<i32> =
+                (0..t as i32).map(|i| 65 + (i + kl as i32) % 26).collect();
+            let pos: Vec<i32> = (0..t as i32).map(|i| kl as i32 + i).collect();
+            specs.push((tokens, pos, kl));
+        }
+        let run = |batched: bool| -> Vec<Vec<f32>> {
+            let mut states: Vec<StateBuf> = (0..specs.len())
+                .map(|_| b.alloc_state(StateKind::Full, "s", 128).unwrap())
+                .collect();
+            // warm the kv prefix of the second state so kv_len=16 is real
+            for (si, (tokens, _pos, kl)) in specs.iter().enumerate() {
+                if *kl > 0 {
+                    let warm_pos: Vec<i32> = (0..*kl as i32).collect();
+                    let warm_mask = crate::tree::chain_mask(*kl, *kl);
+                    let op = VerifyOp {
+                        size: "s",
+                        bucket: 128,
+                        t: *kl,
+                        tokens: &tokens[..*kl],
+                        pos: &warm_pos,
+                        mask: &warm_mask,
+                        kv_len: 0,
+                        prev_idx: &zero,
+                        n_prev: 0,
+                    };
+                    let st = states.remove(si);
+                    states.insert(si, b.verify_full(&op, st).unwrap());
+                }
+            }
+            let ops: Vec<VerifyOp> = specs
+                .iter()
+                .map(|(tokens, pos, kl)| VerifyOp {
+                    size: "s",
+                    bucket: 128,
+                    t,
+                    tokens,
+                    pos,
+                    mask: &mask,
+                    kv_len: *kl,
+                    prev_idx: &zero,
+                    n_prev: 0,
+                })
+                .collect();
+            if batched {
+                let mut refs: Vec<&mut StateBuf> = states.iter_mut().collect();
+                b.verify_full_batch(&ops, &mut refs).unwrap();
+            } else {
+                for (idx, op) in ops.iter().enumerate() {
+                    let st = std::mem::replace(&mut states[idx], StateBuf::nil());
+                    states[idx] = b.verify_full(op, st).unwrap();
+                }
+            }
+            states
+                .iter()
+                .map(|st| {
+                    b.read_logits(
+                        &ReadOp::FullWindow { size: "s", bucket: 128, start: 0 },
+                        st,
+                    )
+                    .unwrap()
+                })
+                .collect()
+        };
+        let seq = run(false);
+        let bat = run(true);
+        for (a, c) in seq.iter().zip(&bat) {
+            assert!(
+                a.iter().zip(c.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "batched verify diverged from sequential"
+            );
+        }
     }
 
     #[test]

@@ -16,7 +16,8 @@ use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
 use super::attention::{
-    attention, attention_naive, rope_apply_naive, rope_apply_tab, rope_tab, KvDims,
+    attention, attention_batch, attention_naive, rope_apply_naive, rope_apply_tab, rope_tab,
+    AttItem, KvDims, RopeTab,
 };
 use super::kernels::{matmul_naive, matmul_t, rmsnorm_into, silu, Mat};
 use super::scratch::Arena;
@@ -416,6 +417,325 @@ pub(crate) fn draft_fwd(
     matmul_t(pool, &mut logits, &xf, &model.target.head, t);
     arena.give(xf);
     (logits, x)
+}
+
+// ---------------------------------------------------------------------------
+// Batched fast path (cross-session fusion, DESIGN.md §12)
+//
+// One session's per-layer matmuls stream the full weight matrix for a
+// handful of rows; stacking B sessions' rows into one matmul amortizes
+// that weight traffic (and the pool wake/latch round-trip) B×. Everything
+// that is *row-independent* — embedding, RMSNorm, the six per-layer
+// matmuls, SwiGLU, residual adds, the final norm — runs over the stacked
+// `[ΣT, …]` buffer; everything *sequence-dependent* — RoPE positions, KV
+// writes, attention over each session's own KV slab — stays per-session
+// (attention units are fused into one pool dispatch, never one softmax).
+// Because every per-row reduction runs in the exact single-session order,
+// batched outputs are byte-identical to sequential execution at any batch
+// size and thread count (`rust/tests/batched_parity.rs`).
+// ---------------------------------------------------------------------------
+
+/// One session's slice of a batched target/tiny forward.
+pub(crate) struct BatchItem<'a> {
+    pub kv: &'a mut [f32],
+    pub bucket: usize,
+    pub tokens: &'a [i32],
+    pub pos: &'a [i32],
+    pub mask: &'a [f32],
+    /// visible history length (== write offset for verify-shaped ops)
+    pub kv_len: usize,
+    pub write_pos: usize,
+    pub want_queries: bool,
+}
+
+/// One session's slice of a batched draft-expand forward.
+pub(crate) struct DraftItem<'a> {
+    pub kv: &'a mut [f32],
+    pub bucket: usize,
+    pub tokens: &'a [i32],
+    pub feats: &'a [f32],
+    pub pos: &'a [i32],
+    pub mask: &'a [f32],
+    pub kv_len: usize,
+    pub write_pos: usize,
+}
+
+/// The per-layer view `layer_fwd_batch` needs of either item kind.
+struct LayerItem<'a> {
+    kv: &'a mut [f32],
+    bucket: usize,
+    mask: &'a [f32],
+    kv_len: usize,
+    write_pos: usize,
+}
+
+/// One transformer layer over the stacked rows of many sessions: fused
+/// matmuls over `[ΣT, …]`, per-session RoPE/KV-write/attention. Returns
+/// the stacked post-RoPE queries (an arena buffer the caller `give`s).
+#[allow(clippy::too_many_arguments)]
+fn layer_fwd_batch(
+    w: &LayerW,
+    cfg: &RefCfg,
+    pool: &Pool,
+    arena: &mut Arena,
+    x: &mut [f32],
+    items: &mut [LayerItem<'_>],
+    ts: &[usize],
+    offs: &[usize],
+    ropes: &[RopeTab],
+    kv_layers: usize,
+    layer: usize,
+    mscale: f32,
+) -> Vec<f32> {
+    let total: usize = ts.iter().sum();
+    let (h, hd, d) = (cfg.d_model, cfg.hd(), cfg.d_head);
+    let mut hn = arena.take(total * h);
+    rmsnorm_into(&mut hn, x, &w.ln1, total, h);
+    let mut xq = arena.take(total * hd);
+    let mut xk = arena.take(total * hd);
+    let mut xv = arena.take(total * hd);
+    matmul_t(pool, &mut xq, &hn, &w.wq, total);
+    matmul_t(pool, &mut xk, &hn, &w.wk, total);
+    matmul_t(pool, &mut xv, &hn, &w.wv, total);
+    for (bi, _it) in items.iter().enumerate() {
+        let (t, off) = (ts[bi], offs[bi]);
+        rope_apply_tab(&mut xq[off * hd..(off + t) * hd], &ropes[bi], t, cfg.n_head, d);
+        rope_apply_tab(&mut xk[off * hd..(off + t) * hd], &ropes[bi], t, cfg.n_head, d);
+    }
+    for (bi, it) in items.iter_mut().enumerate() {
+        let (t, off) = (ts[bi], offs[bi]);
+        let dims = KvDims { l: kv_layers, h: cfg.n_head, b: it.bucket, d };
+        let start = it.write_pos.min(dims.b.saturating_sub(t));
+        for i in 0..t {
+            for hh in 0..cfg.n_head {
+                let src = (off + i) * hd + hh * d;
+                let krow = dims.row(layer, 0, hh, start + i);
+                it.kv[krow..krow + d].copy_from_slice(&xk[src..src + d]);
+                let vrow = dims.row(layer, 1, hh, start + i);
+                it.kv[vrow..vrow + d].copy_from_slice(&xv[src..src + d]);
+            }
+        }
+    }
+
+    let scale = mscale / (d as f32).sqrt();
+    let mut att = arena.take(total * hd);
+    {
+        let atts: Vec<AttItem> = items
+            .iter()
+            .enumerate()
+            .map(|(bi, it)| AttItem {
+                q: &xq[offs[bi] * hd..(offs[bi] + ts[bi]) * hd],
+                kv: &*it.kv,
+                dims: KvDims { l: kv_layers, h: cfg.n_head, b: it.bucket, d },
+                layer,
+                t: ts[bi],
+                tk: it.mask.len() / ts[bi],
+                mask: it.mask,
+                kv_len: it.kv_len,
+                out_off: offs[bi],
+            })
+            .collect();
+        attention_batch(pool, &mut att, &atts, scale);
+    }
+    let mut proj = arena.take(total * h);
+    matmul_t(pool, &mut proj, &att, &w.wo, total);
+    for (xx, p) in x.iter_mut().zip(&proj) {
+        *xx += p;
+    }
+
+    rmsnorm_into(&mut hn, x, &w.ln2, total, h);
+    let mut g = arena.take(total * cfg.d_ff);
+    let mut u = arena.take(total * cfg.d_ff);
+    matmul_t(pool, &mut g, &hn, &w.wg, total);
+    matmul_t(pool, &mut u, &hn, &w.wu, total);
+    for (gv, &uv) in g.iter_mut().zip(&u) {
+        *gv = silu(*gv) * uv;
+    }
+    matmul_t(pool, &mut proj, &g, &w.wd, total);
+    for (xx, p) in x.iter_mut().zip(&proj) {
+        *xx += p;
+    }
+    arena.give(hn);
+    arena.give(xk);
+    arena.give(xv);
+    arena.give(att);
+    arena.give(proj);
+    arena.give(g);
+    arena.give(u);
+    xq
+}
+
+/// Batched target forward over many sessions (verify/prefill/tiny step
+/// shapes). Per-item outputs are split back out at the end; `hidden` and
+/// `feats` in each returned [`FwdOut`] are arena buffers the caller must
+/// `recycle`.
+pub(crate) fn target_fwd_batch(
+    model: &RefModel,
+    pool: &Pool,
+    arena: &mut Arena,
+    items: &mut [BatchItem<'_>],
+) -> Vec<FwdOut> {
+    let cfg = &model.cfg;
+    let (h, hd, d) = (cfg.d_model, cfg.hd(), cfg.d_head);
+    let ts: Vec<usize> = items.iter().map(|it| it.tokens.len()).collect();
+    let mut offs = Vec::with_capacity(ts.len());
+    let mut total = 0usize;
+    for &t in &ts {
+        offs.push(total);
+        total += t;
+    }
+    let mut x = arena.take(total * h);
+    for (bi, it) in items.iter().enumerate() {
+        embed_rows(
+            &mut x[offs[bi] * h..(offs[bi] + ts[bi]) * h],
+            it.tokens,
+            &model.target.embed,
+            h,
+            cfg.vocab,
+        );
+    }
+    let ropes: Vec<RopeTab> = items.iter().map(|it| rope_tab(it.pos, &model.inv_freq)).collect();
+    let taps = cfg.feat_layers();
+    let has_feats = cfg.has_feats();
+    let mut feats = if has_feats { arena.take(total * 3 * h) } else { Vec::new() };
+    let mut queries: Vec<Vec<Vec<f32>>> = items.iter().map(|_| Vec::new()).collect();
+    for (l, w) in model.target.layers.iter().enumerate() {
+        if has_feats {
+            if let Some(slot) = taps.iter().position(|&tl| tl == l) {
+                for i in 0..total {
+                    feats[i * 3 * h + slot * h..i * 3 * h + (slot + 1) * h]
+                        .copy_from_slice(&x[i * h..(i + 1) * h]);
+                }
+            }
+        }
+        let xq = {
+            let mut litems: Vec<LayerItem> = items
+                .iter_mut()
+                .map(|it| LayerItem {
+                    kv: &mut *it.kv,
+                    bucket: it.bucket,
+                    mask: it.mask,
+                    kv_len: it.kv_len,
+                    write_pos: it.write_pos,
+                })
+                .collect();
+            layer_fwd_batch(
+                w, cfg, pool, arena, &mut x, &mut litems, &ts, &offs, &ropes, cfg.n_layer, l,
+                model.mscale,
+            )
+        };
+        for (bi, it) in items.iter().enumerate() {
+            if it.want_queries {
+                let (t, off) = (ts[bi], offs[bi]);
+                queries[bi]
+                    .push(queries_transposed(&xq[off * hd..(off + t) * hd], t, cfg.n_head, d));
+            }
+        }
+        arena.give(xq);
+    }
+    let mut hidden = arena.take(total * h);
+    rmsnorm_into(&mut hidden, &x, &model.target.ln_f, total, h);
+    arena.give(x);
+    let mut outs = Vec::with_capacity(items.len());
+    for bi in 0..items.len() {
+        let (t, off) = (ts[bi], offs[bi]);
+        let mut hid = arena.take(t * h);
+        hid.copy_from_slice(&hidden[off * h..(off + t) * h]);
+        let ft = if has_feats {
+            let mut f = arena.take(t * 3 * h);
+            f.copy_from_slice(&feats[off * 3 * h..(off + t) * 3 * h]);
+            f
+        } else {
+            Vec::new()
+        };
+        outs.push(FwdOut {
+            hidden: hid,
+            logits: Vec::new(),
+            feats: ft,
+            queries: std::mem::take(&mut queries[bi]),
+        });
+    }
+    arena.give(hidden);
+    arena.give(feats);
+    outs
+}
+
+/// Batched EAGLE draft-expand forward: the fuse/input projections, the
+/// single decoder layer and the `lm_head` projection all run over the
+/// stacked `[ΣW, …]` rows. Returns per-item `(logits, hidden)` pairs
+/// (arena buffers the caller must `give` back).
+pub(crate) fn draft_fwd_batch(
+    model: &RefModel,
+    pool: &Pool,
+    arena: &mut Arena,
+    items: &mut [DraftItem<'_>],
+) -> Vec<(Vec<f32>, Vec<f32>)> {
+    let cfg = &model.cfg;
+    let dw = model.draft.as_ref().expect("draft weights");
+    let h = cfg.d_model;
+    let ts: Vec<usize> = items.iter().map(|it| it.tokens.len()).collect();
+    let mut offs = Vec::with_capacity(ts.len());
+    let mut total = 0usize;
+    for &t in &ts {
+        offs.push(total);
+        total += t;
+    }
+    let mut fin = arena.take(total * 3 * h);
+    for (bi, it) in items.iter().enumerate() {
+        fin[offs[bi] * 3 * h..(offs[bi] + ts[bi]) * 3 * h].copy_from_slice(it.feats);
+    }
+    let mut f = arena.take(total * h);
+    matmul_t(pool, &mut f, &fin, &dw.fuse, total);
+    arena.give(fin);
+    let mut cat = arena.take(total * 2 * h);
+    for (bi, it) in items.iter().enumerate() {
+        for (i, &tok) in it.tokens.iter().enumerate() {
+            let row = (tok.max(0) as usize).min(cfg.vocab - 1);
+            let dst = (offs[bi] + i) * 2 * h;
+            cat[dst..dst + h].copy_from_slice(&model.target.embed[row * h..(row + 1) * h]);
+            cat[dst + h..dst + 2 * h]
+                .copy_from_slice(&f[(offs[bi] + i) * h..(offs[bi] + i + 1) * h]);
+        }
+    }
+    arena.give(f);
+    let mut x = arena.take(total * h);
+    matmul_t(pool, &mut x, &cat, &dw.inp, total);
+    arena.give(cat);
+    let ropes: Vec<RopeTab> = items.iter().map(|it| rope_tab(it.pos, &model.inv_freq)).collect();
+    let xq = {
+        let mut litems: Vec<LayerItem> = items
+            .iter_mut()
+            .map(|it| LayerItem {
+                kv: &mut *it.kv,
+                bucket: it.bucket,
+                mask: it.mask,
+                kv_len: it.kv_len,
+                write_pos: it.write_pos,
+            })
+            .collect();
+        layer_fwd_batch(
+            &dw.layer, cfg, pool, arena, &mut x, &mut litems, &ts, &offs, &ropes, 1, 0,
+            model.mscale,
+        )
+    };
+    arena.give(xq);
+    let mut xf = arena.take(total * h);
+    rmsnorm_into(&mut xf, &x, &dw.ln_f, total, h);
+    let mut logits = arena.take(total * cfg.vocab);
+    matmul_t(pool, &mut logits, &xf, &model.target.head, total);
+    arena.give(xf);
+    let mut outs = Vec::with_capacity(items.len());
+    for bi in 0..items.len() {
+        let (t, off) = (ts[bi], offs[bi]);
+        let mut lg = arena.take(t * cfg.vocab);
+        lg.copy_from_slice(&logits[off * cfg.vocab..(off + t) * cfg.vocab]);
+        let mut hid = arena.take(t * h);
+        hid.copy_from_slice(&x[off * h..(off + t) * h]);
+        outs.push((lg, hid));
+    }
+    arena.give(logits);
+    arena.give(x);
+    outs
 }
 
 // ---------------------------------------------------------------------------

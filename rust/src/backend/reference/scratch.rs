@@ -10,6 +10,14 @@
 //! copies when a verify requests them, and the vectors an op returns to
 //! the caller.)
 //!
+//! Batched execution (DESIGN.md §12) widened the size distribution: a
+//! fused op takes `B×`-row temporaries while interleaved single ops take
+//! the 1-session sizes. `take` therefore picks the **smallest free
+//! buffer whose capacity already fits** (falling back to the largest
+//! free buffer when none fits), so the arena converges on one buffer per
+//! size class instead of repeatedly regrowing a small vector to batch
+//! width — steady-state mixed batched/single traffic allocates nothing.
+//!
 //! Lifetimes are intentionally simple: buffers live exactly for one
 //! backend op (the op's entry point borrows the backend's
 //! `RefCell<Arena>` for its whole duration, which is fine because a
@@ -17,9 +25,15 @@
 //! arena — parallel kernels receive pre-`take`n buffers and write
 //! disjoint chunks of them.
 
-/// A free-list of reusable `f32` buffers. `take` pops (or allocates) and
-/// zero-fills to the requested length; `give` returns a buffer to the
-/// list. Capacity grows to the high-water mark of each slot and stays.
+/// Free-list capacity: a batched verify holds ~10 temporaries at once
+/// and the drafting loop a handful more; 64 slots cover every op mix
+/// without letting a pathological caller hoard memory.
+const MAX_FREE: usize = 64;
+
+/// A free-list of reusable `f32` buffers. `take` pops the best-fitting
+/// buffer (or allocates) and zero-fills to the requested length; `give`
+/// returns a buffer to the list. Capacity grows to the high-water mark
+/// of each size class and stays.
 #[derive(Default)]
 pub(crate) struct Arena {
     free: Vec<Vec<f32>>,
@@ -30,9 +44,25 @@ impl Arena {
         Arena::default()
     }
 
-    /// A zero-filled buffer of exactly `len` elements.
+    /// A zero-filled buffer of exactly `len` elements. Best-fit reuse:
+    /// the smallest free buffer with `capacity >= len`, else the largest
+    /// free buffer (which then grows once), else a fresh allocation.
     pub fn take(&mut self, len: usize) -> Vec<f32> {
-        let mut v = self.free.pop().unwrap_or_default();
+        let mut best: Option<usize> = None; // smallest capacity >= len
+        let mut largest: Option<usize> = None; // fallback: largest capacity
+        for (i, v) in self.free.iter().enumerate() {
+            let cap = v.capacity();
+            if cap >= len && best.map(|b| cap < self.free[b].capacity()).unwrap_or(true) {
+                best = Some(i);
+            }
+            if largest.map(|l| cap > self.free[l].capacity()).unwrap_or(true) {
+                largest = Some(i);
+            }
+        }
+        let mut v = match best.or(largest) {
+            Some(i) => self.free.swap_remove(i),
+            None => Vec::new(),
+        };
         v.clear();
         v.resize(len, 0.0);
         v
@@ -41,7 +71,7 @@ impl Arena {
     /// Return a buffer for reuse. Zero-capacity vectors (the empty
     /// placeholders various ops pass around) are dropped, not pooled.
     pub fn give(&mut self, v: Vec<f32>) {
-        if v.capacity() > 0 && self.free.len() < 32 {
+        if v.capacity() > 0 && self.free.len() < MAX_FREE {
             self.free.push(v);
         }
     }
@@ -69,5 +99,21 @@ mod tests {
         let mut a = Arena::new();
         a.give(Vec::new());
         assert!(a.free.is_empty());
+    }
+
+    #[test]
+    fn take_prefers_best_fit_over_regrowing_small_buffers() {
+        let mut a = Arena::new();
+        a.give(Vec::with_capacity(4));
+        a.give(Vec::with_capacity(64));
+        a.give(Vec::with_capacity(16));
+        // len 10 → the 16-cap buffer, not the 4-cap one (which would
+        // regrow) and not the 64-cap one (reserved for bigger takes)
+        let v = a.take(10);
+        assert!(v.capacity() >= 10 && v.capacity() < 64, "cap {}", v.capacity());
+        // len 100 → the largest (64) grows once rather than allocating
+        let w = a.take(100);
+        assert!(w.capacity() >= 100);
+        assert_eq!(a.free.len(), 1, "only the 4-cap buffer remains");
     }
 }

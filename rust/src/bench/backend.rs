@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 use crate::backend::reference::ReferenceBackend;
 use crate::backend::{
     Backend, CommitOp, DraftExpandOp, DraftPrefillOp, GatherOp, PrefillOp, ReadOp, ScoreOp,
-    StateKind, TinyForwardOp, VerifyOp,
+    StateBuf, StateKind, TinyForwardOp, VerifyOp,
 };
 use crate::config::{BackendKind, Config, EngineKind, SpecPvConfig};
 use crate::engine::{self, GenRequest};
@@ -323,6 +323,138 @@ fn bench_ops(be: &ReferenceBackend, warmup: usize, iters: usize) -> Result<Vec<O
         name: "medusa",
         samples: measure(warmup, iters, || {
             be.medusa(SIZE, &feat)?;
+            Ok(())
+        })?,
+    });
+
+    // -- batched ops (cross-session fusion at B=4, DESIGN.md §12) -----------
+    // Each batched op runs over 4 independent snapshots of the states
+    // prepared above. On the fast pipeline these hit the fused stacked-row
+    // kernels; in naive mode they fall back to the sequential loop, so
+    // the speedup column directly shows the fusion win.
+    const B: usize = 4;
+    let full_snap = be.export_state(StateKind::Full, SIZE, FULL_BUCKET, full.as_ref().unwrap())?;
+    let mut fulls = Vec::with_capacity(B);
+    for _ in 0..B {
+        fulls.push(be.import_state(&full_snap)?);
+    }
+    out.push(OpTimes {
+        name: "verify_full_batch4",
+        samples: measure(warmup, iters, || {
+            let ops: Vec<VerifyOp> = (0..B)
+                .map(|_| VerifyOp {
+                    size: SIZE,
+                    bucket: FULL_BUCKET,
+                    t: t_tree,
+                    tokens: &tree_toks,
+                    pos: &tree_pos,
+                    mask: &tree_mask,
+                    kv_len: COMMITTED,
+                    prev_idx: &zero_prev,
+                    n_prev: 0,
+                })
+                .collect();
+            let mut refs: Vec<&mut StateBuf> = fulls.iter_mut().collect();
+            be.verify_full_batch(&ops, &mut refs)?;
+            Ok(())
+        })?,
+    });
+    out.push(OpTimes {
+        name: "prefill_batch4",
+        samples: measure(warmup, iters, || {
+            let ops: Vec<PrefillOp> = (0..B)
+                .map(|_| PrefillOp {
+                    size: SIZE,
+                    bucket: FULL_BUCKET,
+                    tokens: &chunk_toks,
+                    pos: &chunk_pos,
+                    mask: &chunk_mask,
+                    kv_len: COMMITTED,
+                })
+                .collect();
+            let mut refs: Vec<&mut StateBuf> = fulls.iter_mut().collect();
+            be.prefill_batch(&ops, &mut refs)?;
+            Ok(())
+        })?,
+    });
+
+    let part_snap =
+        be.export_state(StateKind::Partial, SIZE, PARTIAL_BUCKET, partial.as_ref().unwrap())?;
+    let mut partials = Vec::with_capacity(B);
+    for _ in 0..B {
+        partials.push(be.import_state(&part_snap)?);
+    }
+    out.push(OpTimes {
+        name: "verify_partial_batch4",
+        samples: measure(warmup, iters, || {
+            let ops: Vec<VerifyOp> = (0..B)
+                .map(|_| VerifyOp {
+                    size: SIZE,
+                    bucket: PARTIAL_BUCKET,
+                    t: t_tree,
+                    tokens: &tree_toks,
+                    pos: &ptree_pos,
+                    mask: &tree_mask,
+                    kv_len: CORE_LEN,
+                    prev_idx: &zero_prev,
+                    n_prev: 0,
+                })
+                .collect();
+            let mut refs: Vec<&mut StateBuf> = partials.iter_mut().collect();
+            be.verify_partial_batch(&ops, &mut refs)?;
+            Ok(())
+        })?,
+    });
+
+    let draft_snap =
+        be.export_state(StateKind::Draft, SIZE, FULL_BUCKET, draft.as_ref().unwrap())?;
+    let mut drafts = Vec::with_capacity(B);
+    for _ in 0..B {
+        drafts.push(be.import_state(&draft_snap)?);
+    }
+    out.push(OpTimes {
+        name: "draft_expand_batch4",
+        samples: measure(warmup, iters, || {
+            let ops: Vec<DraftExpandOp> = (0..B)
+                .map(|_| DraftExpandOp {
+                    size: SIZE,
+                    bucket: FULL_BUCKET,
+                    tokens: &dr_toks,
+                    feats: &dr_feats,
+                    pos: &dr_pos,
+                    mask: &dr_mask,
+                    kv_len: c,
+                    write_pos: c,
+                })
+                .collect();
+            let mut refs: Vec<&mut StateBuf> = drafts.iter_mut().collect();
+            be.draft_expand_batch(&ops, &mut refs)?;
+            Ok(())
+        })?,
+    });
+
+    let tiny_snap =
+        be.export_state(StateKind::Tiny, "tiny", consts.tiny_bucket, tiny.as_ref().unwrap())?;
+    let mut tinies = Vec::with_capacity(B);
+    for _ in 0..B {
+        tinies.push(be.import_state(&tiny_snap)?);
+    }
+    out.push(OpTimes {
+        name: "tiny_forward_batch4",
+        samples: measure(warmup, iters, || {
+            let ops: Vec<TinyForwardOp> = (0..B)
+                .map(|_| TinyForwardOp {
+                    t: 1,
+                    tokens: &[70],
+                    pos: &[c as i32],
+                    mask: &[1.0],
+                    kv_len: c,
+                    write_pos: c,
+                    last_idx: 0,
+                })
+                .collect();
+            let mut refs: Vec<&mut StateBuf> = tinies.iter_mut().collect();
+            be.tiny_forward_batch(&ops, &mut refs)?;
             Ok(())
         })?,
     });

@@ -218,6 +218,10 @@ pub struct Config {
     /// KV state manager: byte budget of the prompt-prefix snapshot cache
     /// consulted by prefill (0 = disabled)
     pub prefix_cache_bytes: usize,
+    /// kernel thread-pool width for the reference backend, mirroring the
+    /// `SPECPV_THREADS` env override (0 = env/auto default); echoed in
+    /// `Registry::summary`
+    pub threads: usize,
 }
 
 impl Default for Config {
@@ -241,6 +245,7 @@ impl Default for Config {
             max_queue: 256,
             kv_budget_bytes: 0,
             prefix_cache_bytes: 16 << 20,
+            threads: 0,
         }
     }
 }
@@ -300,6 +305,7 @@ impl Config {
                 "max_queue" => self.max_queue = v.parse()?,
                 "kv_budget_bytes" => self.kv_budget_bytes = v.parse()?,
                 "prefix_cache_bytes" => self.prefix_cache_bytes = v.parse()?,
+                "threads" => self.threads = v.parse()?,
                 _ => bail!("unknown config key '{k}'"),
             }
         }
@@ -349,6 +355,16 @@ mod tests {
         assert_eq!(c.prefix_cache_bytes, 0);
         assert_eq!(c.max_queue, 32);
         assert_eq!(c.max_prompt, 2048);
+    }
+
+    #[test]
+    fn threads_key_parses() {
+        let mut c = Config::default();
+        assert_eq!(c.threads, 0, "default: SPECPV_THREADS/auto");
+        let mut kv = BTreeMap::new();
+        kv.insert("threads".to_string(), "3".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.threads, 3);
     }
 
     #[test]

@@ -37,10 +37,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::backend::Backend;
+use crate::backend::{Backend, StateBuf};
 use crate::config::{Config, EngineKind};
+use crate::engine::plan::{exec_batch, exec_single, PlanKey};
 use crate::engine::{
-    BackendFactory, EngineSession, GenRequest, GenResult, SessionFactory,
+    BackendFactory, Drive, EngineSession, GenRequest, GenResult, KernelPlan, SessionFactory,
+    StepOutcome,
 };
 use crate::kvstore::{KvPool, KvStats, KvStore, SwapStore};
 use crate::metrics::GenStats;
@@ -159,6 +161,28 @@ pub struct Registry {
     /// admission knobs, echoed for operators
     pub max_queue: usize,
     pub max_prompt: usize,
+    /// kernel thread-pool width serving this coordinator (the `threads`
+    /// config key / `--threads` flag, or the `SPECPV_THREADS`/auto
+    /// default when unset), echoed for operators
+    pub threads: usize,
+    /// cross-session batched execution (DESIGN.md §12): fused groups
+    /// (width ≥ 2, actually fused by the backend) issued over the
+    /// coordinator's lifetime
+    pub batch_groups: u64,
+    /// kernel ops executed inside fused groups
+    pub batch_ops_fused: u64,
+    /// protocol kernel ops executed one session at a time (width-1
+    /// groups, and width ≥ 2 groups on a backend whose `*_batch` entry
+    /// points are the sequential default — e.g. pjrt)
+    pub batch_ops_single: u64,
+    /// whole `step()` calls taken by sessions outside the plan/apply
+    /// protocol (scripted/foreign sessions, or batching disabled);
+    /// tracked separately because one step spans many kernel ops
+    pub fallback_steps: u64,
+    /// widest fused group observed
+    pub batch_width_max: usize,
+    /// gauge: fused groups issued by the last tick
+    pub batch_tick_groups: usize,
     pub latency: Samples,
     pub queue_wait: Samples,
     /// submit → first token, sampled at session start
@@ -168,6 +192,28 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Mean width of fused groups (0 before any group fused).
+    pub fn batch_mean_width(&self) -> f64 {
+        if self.batch_groups == 0 {
+            0.0
+        } else {
+            self.batch_ops_fused as f64 / self.batch_groups as f64
+        }
+    }
+
+    /// Fraction of *protocol* kernel-op executions that ran fused rather
+    /// than one session at a time (0 before any protocol op ran).
+    /// Non-protocol sessions' whole-step fallbacks are excluded — see
+    /// [`Registry::fallback_steps`] — because one step spans many ops.
+    pub fn batched_frac(&self) -> f64 {
+        let total = self.batch_ops_fused + self.batch_ops_single;
+        if total == 0 {
+            0.0
+        } else {
+            self.batch_ops_fused as f64 / total as f64
+        }
+    }
+
     pub fn record(&mut self, tr: &TrackedRequest) {
         match &tr.state {
             RequestState::Done => {
@@ -197,9 +243,10 @@ impl Registry {
         format!(
             "backend={} completed={} failed={} cancelled={} tokens={} \
              queue_depth={} active={} max_queue={} max_prompt={} \
-             kv_resident={} kv_budget={} swaps={}/{} prefix_hits={} \
-             prefix_misses={} execs={} exec_secs={:.2}s compiles={} \
-             p50_latency={:.2}s p99={:.2}s p50_ttft={:.3}s \
+             threads={} fused_groups={} batch_mean_w={:.2} batch_max_w={} \
+             batched_frac={:.2} fallback_steps={} kv_resident={} kv_budget={} swaps={}/{} \
+             prefix_hits={} prefix_misses={} execs={} exec_secs={:.2}s \
+             compiles={} p50_latency={:.2}s p99={:.2}s p50_ttft={:.3}s \
              p99_ttft={:.3}s mean_tok_s={:.1} mean_tau={:.2}",
             if self.backend.is_empty() { "scripted" } else { self.backend.as_str() },
             self.completed,
@@ -210,6 +257,12 @@ impl Registry {
             self.active_sessions,
             self.max_queue,
             self.max_prompt,
+            self.threads,
+            self.batch_groups,
+            self.batch_mean_width(),
+            self.batch_width_max,
+            self.batched_frac(),
+            self.fallback_steps,
             self.kv_resident_bytes,
             self.kv_budget_bytes,
             self.swap_outs,
@@ -269,6 +322,17 @@ struct ActiveEntry<'rt> {
     session: Box<dyn EngineSession + 'rt>,
 }
 
+/// A pending kernel plan moved out of its session for (possibly fused)
+/// execution, together with the state buffer it mutates. Holding the
+/// plan and the state as owned values sidesteps simultaneous borrows of
+/// many sessions — the session is dormant until `restore_pending`.
+struct InFlight {
+    /// index into the active set
+    idx: usize,
+    plan: KernelPlan,
+    state: StateBuf,
+}
+
 pub struct Coordinator<'rt> {
     pub cfg: Config,
     pub admission: Admission,
@@ -289,6 +353,9 @@ pub struct Coordinator<'rt> {
     prefix: Option<KvStore>,
     /// round-robin rotation cursor
     rr: usize,
+    /// fuse compatible kernel ops across sessions (DESIGN.md §12);
+    /// off = every session steps through the sequential `step()` path
+    batching: bool,
     pub registry: Registry,
 }
 
@@ -333,6 +400,7 @@ impl<'rt> Coordinator<'rt> {
             kv_budget_bytes: admission.kv_budget_bytes,
             max_queue: admission.max_queue,
             max_prompt: admission.max_prompt,
+            threads: crate::util::pool::resolve_threads(cfg.threads),
             ..Registry::default()
         };
         Coordinator {
@@ -348,8 +416,17 @@ impl<'rt> Coordinator<'rt> {
             pool,
             prefix: None,
             rr: 0,
+            batching: true,
             registry,
         }
+    }
+
+    /// Disable (or re-enable) cross-session batched execution. With
+    /// batching off every active session steps through the sequential
+    /// `step()` path — the parity harness compares the two, and it is an
+    /// operator escape hatch.
+    pub fn set_batching(&mut self, on: bool) {
+        self.batching = on;
     }
 
     /// Admit a request (engine defaults to the config's engine).
@@ -688,6 +765,18 @@ impl<'rt> Coordinator<'rt> {
         }
     }
 
+    /// Run one `step()` per active session. With a backend present (and
+    /// batching on), sessions advance in lock-step **waves** under the
+    /// plan/apply protocol: every session runs host-side work up to its
+    /// next batchable kernel op, the pending ops are grouped by
+    /// [`PlanKey`] and issued as fused backend invocations, and the wave
+    /// repeats until every session completed its step. Per-session op
+    /// sequences are untouched — only cross-session execution fuses — so
+    /// outputs, step events and commit order are byte-identical to the
+    /// sequential rotation (pinned by `rust/tests/batched_parity.rs`).
+    /// Sessions that do not implement the protocol (scripted tests, any
+    /// foreign `EngineSession`) fall back to plain `step()` at their
+    /// rotation position.
     fn step_active(&mut self, events: &mut Vec<Event>) {
         let n = self.active.len();
         if n == 0 {
@@ -695,11 +784,116 @@ impl<'rt> Coordinator<'rt> {
         }
         let start = self.rr % n;
         self.rr = self.rr.wrapping_add(1);
+        let order: Vec<usize> = (0..n).map(|k| (start + k) % n).collect();
+        let batched = self.batching && self.backend.is_some();
+        // honest occupancy: a width ≥ 2 group only counts as fused when
+        // the backend's `*_batch` ops actually fuse (pjrt inherits the
+        // sequential defaults and must not report phantom fusion)
+        let backend_fuses = self.backend.map(|b| b.fuses_batches()).unwrap_or(false);
+        let mut results: Vec<Option<Result<StepOutcome>>> = Vec::with_capacity(n);
+        results.resize_with(n, || None);
+        let mut planned = vec![false; n];
+        let mut tick_groups = 0usize;
+        loop {
+            // advance every undecided session to its next pending op,
+            // completion, or sequential-fallback step
+            for &i in &order {
+                if results[i].is_some() || planned[i] {
+                    continue;
+                }
+                if !batched {
+                    self.registry.fallback_steps += 1;
+                    results[i] = Some(self.active[i].session.step());
+                    continue;
+                }
+                match self.active[i].session.drive() {
+                    Ok(Drive::Pending) => planned[i] = true,
+                    Ok(Drive::Complete(o)) => results[i] = Some(Ok(o)),
+                    Ok(Drive::Unsupported) => {
+                        self.registry.fallback_steps += 1;
+                        results[i] = Some(self.active[i].session.step());
+                    }
+                    Err(e) => results[i] = Some(Err(e)),
+                }
+            }
+            if results.iter().all(|r| r.is_some()) {
+                break;
+            }
+            // move the pending plans out (rotation order) …
+            let mut flight: Vec<InFlight> = Vec::new();
+            for &i in &order {
+                if !planned[i] {
+                    continue;
+                }
+                match self.active[i].session.take_pending() {
+                    Some((plan, state)) => flight.push(InFlight { idx: i, plan, state }),
+                    None => {
+                        planned[i] = false;
+                        results[i] = Some(Err(anyhow::anyhow!(
+                            "session reported a pending op but exposed none"
+                        )));
+                    }
+                }
+            }
+            // … group by geometry key …
+            let mut groups: Vec<(PlanKey, Vec<usize>)> = Vec::new();
+            for (fi, f) in flight.iter().enumerate() {
+                let key = f.plan.key();
+                match groups.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, v)) => v.push(fi),
+                    None => groups.push((key, vec![fi])),
+                }
+            }
+            // … execute each group (fused when width ≥ 2) …
+            for (_, members) in &groups {
+                let be = self.backend.expect("batched path requires a backend");
+                let outcome = if members.len() == 1 {
+                    let f = &mut flight[members[0]];
+                    exec_single(be, &f.plan, &mut f.state)
+                } else {
+                    let mut plans: Vec<&KernelPlan> = Vec::with_capacity(members.len());
+                    let mut states: Vec<&mut StateBuf> = Vec::with_capacity(members.len());
+                    for (fi, f) in flight.iter_mut().enumerate() {
+                        if members.contains(&fi) {
+                            plans.push(&f.plan);
+                            states.push(&mut f.state);
+                        }
+                    }
+                    exec_batch(be, &plans, &mut states)
+                };
+                if members.len() >= 2 && backend_fuses {
+                    self.registry.batch_groups += 1;
+                    self.registry.batch_ops_fused += members.len() as u64;
+                    self.registry.batch_width_max =
+                        self.registry.batch_width_max.max(members.len());
+                    tick_groups += 1;
+                } else {
+                    self.registry.batch_ops_single += members.len() as u64;
+                }
+                if let Err(e) = outcome {
+                    // batch errors are invariant violations; fused
+                    // backends validate before mutating, and a
+                    // sequential-default backend may leave earlier
+                    // members executed — either way every member is
+                    // failed here, so no half-executed state is ever
+                    // stepped again
+                    let msg = format!("batched kernel exec: {e:#}");
+                    for &fi in members {
+                        results[flight[fi].idx] = Some(Err(anyhow::anyhow!(msg.clone())));
+                    }
+                }
+            }
+            // … and hand the (mutated) states back for the next wave
+            for f in flight {
+                self.active[f.idx].session.restore_pending(f.state);
+                planned[f.idx] = false;
+            }
+        }
+        self.registry.batch_tick_groups = tick_groups;
         let mut done: Vec<RequestId> = Vec::new();
-        for k in 0..n {
-            let i = (start + k) % n;
+        for &i in &order {
             let id = self.active[i].id;
-            match self.active[i].session.step() {
+            match results[i].take().expect("every active session stepped") {
                 Ok(outcome) => {
                     let tr = &mut self.requests[id as usize];
                     tr.steps += 1;

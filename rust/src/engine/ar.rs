@@ -1,9 +1,12 @@
 //! Standard autoregressive decoding — the speedup denominator of every
-//! table in the paper (Eq. 4). One `step()` = one decoded token.
+//! table in the paper (Eq. 4). One `step()` = one decoded token,
+//! exposed to the scheduler as a two-phase plan/apply machine (plan the
+//! T=1 verify, then consume its logits) so concurrent AR sessions'
+//! decode ops can fuse into one batched backend invocation.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::backend::{Backend, StateKind, StateSnapshot};
+use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
 use crate::config::Config;
 use crate::kvstore::KvStore;
 use crate::metrics::GenStats;
@@ -13,6 +16,7 @@ use crate::sampling::pick_token;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
+use super::plan::{exec_single, Drive, KernelPlan};
 use super::session::TargetSession;
 use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
 
@@ -26,13 +30,25 @@ impl ArEngine {
     }
 }
 
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// between steps; the next drive plans a T=1 verify
+    Idle,
+    /// the planned verify is executing; the next drive consumes it
+    Verify,
+}
+
 pub struct ArSession<'rt> {
+    be: &'rt dyn Backend,
     target: TargetSession<'rt>,
     out: SessionOut,
     rng: Rng,
     stats: GenStats,
     prompt_len: usize,
     temperature: f32,
+    phase: Phase,
+    pending: Option<KernelPlan>,
+    sw: Stopwatch,
 }
 
 impl Engine for ArEngine {
@@ -63,12 +79,16 @@ impl Engine for ArEngine {
         let mut out = SessionOut::new(req.max_new);
         out.push_first(pick_token(&logits, req.temperature, &mut rng));
         Ok(Box::new(ArSession {
+            be,
             target,
             out,
             rng,
             stats,
             prompt_len: req.prompt.len(),
             temperature: req.temperature,
+            phase: Phase::Idle,
+            pending: None,
+            sw: Stopwatch::new(),
         }))
     }
 }
@@ -87,16 +107,53 @@ impl EngineSession for ArSession<'_> {
     }
 
     fn step(&mut self) -> Result<StepOutcome> {
-        if !self.out.done {
-            let mut sw = Stopwatch::new();
-            let pos = self.prompt_len + self.out.len() - 1;
-            let logits = self.target.decode_one(self.out.last(), pos)?;
-            let next = pick_token(&logits, self.temperature, &mut self.rng);
-            self.out.push_round(&[], next);
-            self.stats.verify_steps += 1;
-            self.stats.decode_secs += sw.lap();
+        loop {
+            match self.drive()? {
+                Drive::Complete(o) => return Ok(o),
+                Drive::Pending => {
+                    let plan =
+                        self.pending.as_ref().expect("pending plan after Drive::Pending");
+                    exec_single(self.be, plan, &mut self.target.state)?;
+                }
+                Drive::Unsupported => unreachable!("ar sessions implement the protocol"),
+            }
         }
-        Ok(self.out.outcome())
+    }
+
+    fn drive(&mut self) -> Result<Drive> {
+        match self.phase {
+            Phase::Idle => {
+                if self.out.done {
+                    return Ok(Drive::Complete(self.out.outcome()));
+                }
+                self.sw = Stopwatch::new();
+                let pos = self.prompt_len + self.out.len() - 1;
+                let plan = self.target.plan_decode_one(self.out.last(), pos)?;
+                self.pending = Some(plan);
+                self.phase = Phase::Verify;
+                Ok(Drive::Pending)
+            }
+            Phase::Verify => {
+                self.pending = None;
+                self.phase = Phase::Idle;
+                let logits = self.target.finish_decode_one()?;
+                let next = pick_token(&logits, self.temperature, &mut self.rng);
+                self.out.push_round(&[], next);
+                self.stats.verify_steps += 1;
+                self.stats.decode_secs += self.sw.lap();
+                Ok(Drive::Complete(self.out.outcome()))
+            }
+        }
+    }
+
+    fn take_pending(&mut self) -> Option<(KernelPlan, StateBuf)> {
+        let plan = self.pending.take()?;
+        let state = std::mem::replace(&mut self.target.state, StateBuf::nil());
+        Some((plan, state))
+    }
+
+    fn restore_pending(&mut self, state: StateBuf) {
+        self.target.state = state;
     }
 
     fn finish(self: Box<Self>) -> GenResult {
@@ -125,11 +182,11 @@ impl EngineSession for ArSession<'_> {
                     self.target.restore(s)?;
                     full = true;
                 }
-                k => bail!("unexpected {k:?} snapshot for an ar session"),
+                k => anyhow::bail!("unexpected {k:?} snapshot for an ar session"),
             }
         }
         if !full {
-            bail!("ar resume needs a full snapshot");
+            anyhow::bail!("ar resume needs a full snapshot");
         }
         Ok(())
     }

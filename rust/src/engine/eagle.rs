@@ -13,6 +13,15 @@
 //!    over the scratch region, recycling each node's own hidden;
 //! 4. **prune** — keep the best `tree_size` nodes by cumulative draft
 //!    log-probability (EAGLE-2-style top-N selection).
+//!
+//! The round is a resumable state machine ([`DraftTreeRun`]) so the
+//! coordinator can fuse the draft-expand kernel ops of concurrent
+//! sessions (plan/apply protocol, DESIGN.md §12): `next_op` runs the
+//! host-side tree bookkeeping up to the next `draft_expand` and returns
+//! it as a [`KernelPlan`]; after the caller executes the plan (alone or
+//! batched), the following `next_op` call consumes the expand's outputs
+//! and continues. [`draft_tree`] is the run-to-completion convenience
+//! over the same machine.
 
 use std::collections::HashMap;
 
@@ -22,6 +31,7 @@ use crate::config::Config;
 use crate::sampling::{log_softmax, top_k};
 use crate::tree::Tree;
 
+use super::plan::{exec_single, KernelPlan};
 use super::session::DraftSession;
 
 /// Tile a hidden state (h) to the 3h fused-feature width (model.recycle).
@@ -65,99 +75,207 @@ pub struct DraftRound {
     pub bonus_hidden: Vec<f32>,
 }
 
-/// Run one full drafting round.
-pub fn draft_tree(
-    draft: &mut DraftSession,
-    cfg: &Config,
-    inp: &DraftInputs,
-) -> Result<DraftRound> {
-    let w = draft.consts.draft_w;
-    let h = draft.info.d_model;
-    let f3 = 3 * h;
+/// Per-node bookkeeping: scratch ancestors + untiled hidden.
+struct Meta {
+    anc: Vec<usize>,
+    hidden: Vec<f32>,
+}
 
-    // --- 1. catch-up chain (pass-0: target features) ----------------------
-    let n_chain = inp.chain.len();
-    let chain_out;
-    let prev_hidden: &[f32] = if n_chain > 0 {
-        assert!(n_chain <= w, "chain {n_chain} exceeds draft width {w}");
-        let tokens: Vec<u32> = inp.chain.iter().map(|(t, _)| *t).collect();
+/// Where a [`DraftTreeRun`] is between `next_op` calls. `After*` stages
+/// mean a planned op's execution is pending consumption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Stage {
+    Start,
+    AfterChain,
+    AfterBonus,
+    LevelBegin,
+    AfterLevel,
+    Done,
+}
+
+/// One drafting round as a resumable state machine over the draft
+/// session's batchable expand ops.
+pub struct DraftTreeRun {
+    top_k: usize,
+    depth: usize,
+    size_cap: usize,
+    inp: DraftInputs,
+    stage: Stage,
+    tree: Tree,
+    meta: HashMap<usize, Meta>,
+    frontier: Vec<usize>,
+    root_pos: usize,
+    root_hidden: Vec<f32>,
+    level: usize,
+    chain_n: usize,
+    /// parents of the level expand in flight, slot order
+    parents: Vec<usize>,
+    /// scratch offsets of the in-flight level's rows
+    offsets: Vec<usize>,
+}
+
+impl DraftTreeRun {
+    pub fn new(cfg: &Config, inp: DraftInputs) -> DraftTreeRun {
+        let tree = Tree::new(inp.bonus);
+        let root_pos = inp.chain_start_pos + inp.chain.len();
+        DraftTreeRun {
+            top_k: cfg.tree_top_k,
+            depth: cfg.tree_depth,
+            size_cap: cfg.tree_size,
+            inp,
+            stage: Stage::Start,
+            tree,
+            meta: HashMap::new(),
+            frontier: Vec::new(),
+            root_pos,
+            root_hidden: Vec::new(),
+            level: 1,
+            chain_n: 0,
+            parents: Vec::new(),
+            offsets: Vec::new(),
+        }
+    }
+
+    /// Plan the bonus step (pass-1): the bonus token with the recycled
+    /// predecessor hidden.
+    fn plan_bonus(
+        &mut self,
+        draft: &mut DraftSession,
+        prev_hidden: &[f32],
+    ) -> Result<(KernelPlan, usize)> {
+        let w = draft.consts.draft_w;
+        let f3 = 3 * draft.info.d_model;
         let mut feats = vec![0f32; w * f3];
-        for (i, (_, f)) in inp.chain.iter().enumerate() {
-            feats[i * f3..(i + 1) * f3].copy_from_slice(f);
-        }
-        chain_out = draft.chain(&tokens, &feats, inp.chain_start_pos)?;
-        chain_out.hidden(n_chain - 1)
-    } else {
-        &inp.prev_hidden
-    };
-
-    // --- 2. bonus step (pass-1: recycled predecessor hidden) --------------
-    let root_pos = inp.chain_start_pos + n_chain;
-    let mut feats = vec![0f32; w * f3];
-    tile3(&mut feats[..f3], prev_hidden);
-    let out = draft.chain(&[inp.bonus], &feats, root_pos)?;
-    let root_logits = log_softmax(out.logits(0));
-    let root_hidden = out.hidden(0).to_vec();
-
-    let mut tree = Tree::new(inp.bonus);
-
-    // node bookkeeping: tree idx → (scratch ancestors, node hidden);
-    // keyed map instead of the old linear-scan pair list, and hiddens are
-    // stored untiled (h, not 3h) and tiled straight into the feats buffer
-    struct Meta {
-        anc: Vec<usize>,
-        hidden: Vec<f32>,
-    }
-    let mut meta: HashMap<usize, Meta> = HashMap::new();
-
-    // --- 3a. level 1: root's children --------------------------------------
-    let mut frontier: Vec<usize> = Vec::new();
-    for &tk in top_k(&root_logits, cfg.tree_top_k).iter() {
-        let idx = tree.add(0, tk as u32, root_logits[tk]);
-        meta.insert(idx, Meta { anc: Vec::new(), hidden: root_hidden.clone() });
-        frontier.push(idx);
+        tile3(&mut feats[..f3], prev_hidden);
+        draft.plan_chain(&[self.inp.bonus], &feats, self.root_pos)
     }
 
-    // --- 3b. deeper levels --------------------------------------------------
-    for _level in 1..cfg.tree_depth {
-        if frontier.is_empty() {
-            break;
-        }
-        frontier.sort_by(|&a, &b| {
-            tree.nodes[b]
-                .score
-                .partial_cmp(&tree.nodes[a].score)
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        frontier.truncate(w.min(cfg.tree_top_k));
-        let toks: Vec<u32> = frontier.iter().map(|&i| tree.nodes[i].token).collect();
-        let mut fts = vec![0f32; w * f3];
-        let mut ancs: Vec<Vec<usize>> = Vec::with_capacity(frontier.len());
-        let mut pos: Vec<i32> = Vec::with_capacity(w);
-        for (s, &ti) in frontier.iter().enumerate() {
-            let m = &meta[&ti];
-            tile3(&mut fts[s * f3..(s + 1) * f3], &m.hidden);
-            ancs.push(m.anc.clone());
-            pos.push((root_pos + tree.nodes[ti].depth) as i32);
-        }
-        for _ in frontier.len()..w {
-            pos.push(*pos.last().unwrap_or(&(root_pos as i32)));
-        }
-        let (out, offsets) = draft.level(&toks, &fts, &pos, &ancs)?;
-
-        let parents = std::mem::take(&mut frontier);
-        for (s, &pi) in parents.iter().enumerate() {
-            let lp = log_softmax(out.logits(s));
-            let hid = out.hidden(s);
-            let mut panc = meta[&pi].anc.clone();
-            panc.push(offsets[s]);
-            for &tk in top_k(&lp, 2).iter() {
-                let idx = tree.add(pi, tk as u32, lp[tk]);
-                meta.insert(idx, Meta { anc: panc.clone(), hidden: hid.to_vec() });
-                frontier.push(idx);
+    /// Advance to the next pending draft-expand op, consuming the
+    /// previous one's outputs on the way. Returns `None` once the round
+    /// is complete (then call [`DraftTreeRun::finish`]).
+    pub fn next_op(&mut self, draft: &mut DraftSession) -> Result<Option<KernelPlan>> {
+        loop {
+            match self.stage {
+                Stage::Start => {
+                    let n_chain = self.inp.chain.len();
+                    if n_chain > 0 {
+                        let w = draft.consts.draft_w;
+                        let f3 = 3 * draft.info.d_model;
+                        assert!(n_chain <= w, "chain {n_chain} exceeds draft width {w}");
+                        let tokens: Vec<u32> = self.inp.chain.iter().map(|(t, _)| *t).collect();
+                        let mut feats = vec![0f32; w * f3];
+                        for (i, (_, f)) in self.inp.chain.iter().enumerate() {
+                            feats[i * f3..(i + 1) * f3].copy_from_slice(f);
+                        }
+                        let (plan, n) =
+                            draft.plan_chain(&tokens, &feats, self.inp.chain_start_pos)?;
+                        self.chain_n = n;
+                        self.stage = Stage::AfterChain;
+                        return Ok(Some(plan));
+                    }
+                    let prev = std::mem::take(&mut self.inp.prev_hidden);
+                    let (plan, _) = self.plan_bonus(draft, &prev)?;
+                    self.stage = Stage::AfterBonus;
+                    return Ok(Some(plan));
+                }
+                Stage::AfterChain => {
+                    let out = draft.finish_chain(self.chain_n)?;
+                    let prev = out.hidden(self.chain_n - 1).to_vec();
+                    let (plan, _) = self.plan_bonus(draft, &prev)?;
+                    self.stage = Stage::AfterBonus;
+                    return Ok(Some(plan));
+                }
+                Stage::AfterBonus => {
+                    let out = draft.finish_chain(1)?;
+                    let root_logits = log_softmax(out.logits(0));
+                    self.root_hidden = out.hidden(0).to_vec();
+                    for &tk in top_k(&root_logits, self.top_k).iter() {
+                        let idx = self.tree.add(0, tk as u32, root_logits[tk]);
+                        self.meta.insert(
+                            idx,
+                            Meta { anc: Vec::new(), hidden: self.root_hidden.clone() },
+                        );
+                        self.frontier.push(idx);
+                    }
+                    self.level = 1;
+                    self.stage = Stage::LevelBegin;
+                }
+                Stage::LevelBegin => {
+                    if self.level >= self.depth || self.frontier.is_empty() {
+                        self.stage = Stage::Done;
+                        return Ok(None);
+                    }
+                    let w = draft.consts.draft_w;
+                    let f3 = 3 * draft.info.d_model;
+                    self.frontier.sort_by(|&a, &b| {
+                        self.tree.nodes[b]
+                            .score
+                            .partial_cmp(&self.tree.nodes[a].score)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    self.frontier.truncate(w.min(self.top_k));
+                    let toks: Vec<u32> =
+                        self.frontier.iter().map(|&i| self.tree.nodes[i].token).collect();
+                    let mut fts = vec![0f32; w * f3];
+                    let mut ancs: Vec<Vec<usize>> = Vec::with_capacity(self.frontier.len());
+                    let mut pos: Vec<i32> = Vec::with_capacity(w);
+                    for (s, &ti) in self.frontier.iter().enumerate() {
+                        let m = &self.meta[&ti];
+                        tile3(&mut fts[s * f3..(s + 1) * f3], &m.hidden);
+                        ancs.push(m.anc.clone());
+                        pos.push((self.root_pos + self.tree.nodes[ti].depth) as i32);
+                    }
+                    for _ in self.frontier.len()..w {
+                        pos.push(*pos.last().unwrap_or(&(self.root_pos as i32)));
+                    }
+                    let (plan, offsets) = draft.plan_level(&toks, &fts, &pos, &ancs)?;
+                    self.parents = std::mem::take(&mut self.frontier);
+                    self.offsets = offsets;
+                    self.stage = Stage::AfterLevel;
+                    return Ok(Some(plan));
+                }
+                Stage::AfterLevel => {
+                    let out = draft.finish_level()?;
+                    let parents = std::mem::take(&mut self.parents);
+                    for (s, &pi) in parents.iter().enumerate() {
+                        let lp = log_softmax(out.logits(s));
+                        let hid = out.hidden(s);
+                        let mut panc = self.meta[&pi].anc.clone();
+                        panc.push(self.offsets[s]);
+                        for &tk in top_k(&lp, 2).iter() {
+                            let idx = self.tree.add(pi, tk as u32, lp[tk]);
+                            self.meta
+                                .insert(idx, Meta { anc: panc.clone(), hidden: hid.to_vec() });
+                            self.frontier.push(idx);
+                        }
+                    }
+                    self.level += 1;
+                    self.stage = Stage::LevelBegin;
+                }
+                Stage::Done => return Ok(None),
             }
         }
     }
 
-    Ok(DraftRound { tree: tree.prune_top(cfg.tree_size), bonus_hidden: root_hidden })
+    /// Package the round once [`DraftTreeRun::next_op`] returned `None`.
+    pub fn finish(self) -> DraftRound {
+        DraftRound {
+            tree: self.tree.prune_top(self.size_cap),
+            bonus_hidden: self.root_hidden,
+        }
+    }
+}
+
+/// Run one full drafting round to completion (the single-session path:
+/// every planned expand executes immediately and unbatched).
+pub fn draft_tree(
+    draft: &mut DraftSession,
+    cfg: &Config,
+    inp: DraftInputs,
+) -> Result<DraftRound> {
+    let mut run = DraftTreeRun::new(cfg, inp);
+    while let Some(plan) = run.next_op(draft)? {
+        exec_single(draft.backend(), &plan, &mut draft.state)?;
+    }
+    Ok(run.finish())
 }

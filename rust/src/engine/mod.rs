@@ -21,6 +21,7 @@
 
 pub mod ar;
 pub mod eagle;
+pub mod plan;
 pub mod scripted;
 pub mod session;
 pub mod spec_full;
@@ -30,7 +31,9 @@ pub mod triforce;
 
 use anyhow::Result;
 
-use crate::backend::{pick_bucket, Backend, StateKind, StateSnapshot};
+use crate::backend::{pick_bucket, Backend, StateBuf, StateKind, StateSnapshot};
+
+pub use self::plan::{Drive, KernelPlan};
 use crate::config::{Config, EngineKind};
 use crate::kvstore::KvStore;
 use crate::metrics::GenStats;
@@ -119,6 +122,33 @@ pub trait EngineSession {
         } else {
             anyhow::bail!("session holds no device state to resume")
         }
+    }
+
+    // --- plan/apply protocol (batched execution, DESIGN.md §12) ---------
+
+    /// Advance the step state machine: run host-side work (and
+    /// non-batchable backend ops) until the next batchable kernel op is
+    /// pending ([`Drive::Pending`]) or the step completes
+    /// ([`Drive::Complete`]). The default reports
+    /// [`Drive::Unsupported`]; the coordinator then falls back to
+    /// `step()` for this session.
+    fn drive(&mut self) -> Result<Drive> {
+        Ok(Drive::Unsupported)
+    }
+
+    /// Move the pending [`KernelPlan`] and the state buffer it targets
+    /// out of the session so the coordinator can fuse the op with other
+    /// sessions' plans. `None` when nothing is pending. The session is
+    /// dormant until [`EngineSession::restore_pending`] hands the
+    /// (mutated) state back.
+    fn take_pending(&mut self) -> Option<(KernelPlan, StateBuf)> {
+        None
+    }
+
+    /// Return the state buffer moved out by
+    /// [`EngineSession::take_pending`] after the op executed.
+    fn restore_pending(&mut self, state: StateBuf) {
+        let _ = state;
     }
 }
 

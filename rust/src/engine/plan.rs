@@ -1,0 +1,239 @@
+//! The **plan/apply protocol** behind cross-session batched decode
+//! (DESIGN.md §12).
+//!
+//! An [`EngineSession`](super::EngineSession) that supports the protocol
+//! splits each `step()` into a resumable state machine driven by
+//! `drive()`: host-side work (tree building, sampling, cache accounting,
+//! non-batchable backend ops) runs inline, and every *batchable* kernel
+//! op — the ops whose cost is dominated by streaming weight matrices —
+//! is surfaced as a [`KernelPlan`] instead of being executed
+//! immediately. The coordinator collects the plans of every active
+//! session, groups them by [`PlanKey`] (op class + model size + bucket +
+//! token width) and issues each group as **one** batched backend
+//! invocation, then resumes each session's `drive()` to consume the
+//! results (which live in the mutated state buffer — plans carry inputs,
+//! never outputs).
+//!
+//! `step()` for protocol sessions is the degenerate single-session loop
+//! over the same machine (`drive` → [`exec_single`] → `drive` …), so the
+//! batched and unbatched paths execute the *identical* op sequence —
+//! byte parity between them reduces to the backend's batched-op parity
+//! contract, pinned by `rust/tests/batched_parity.rs`.
+
+use anyhow::{bail, Result};
+
+use crate::backend::{
+    Backend, DraftExpandOp, PrefillOp, StateBuf, TinyForwardOp, VerifyOp,
+};
+
+use super::StepOutcome;
+
+/// Which batchable kernel op a [`KernelPlan`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Prefill,
+    VerifyFull,
+    VerifyPartial,
+    DraftExpand,
+    TinyForward,
+}
+
+/// Grouping key for batched execution: plans with equal keys are
+/// geometry-compatible and may run as one fused backend invocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanKey {
+    pub class: OpClass,
+    pub size: String,
+    pub bucket: usize,
+    pub t: usize,
+}
+
+/// One pending batchable kernel op with **owned** inputs, so the
+/// coordinator can hold the op descriptor and the state buffer it
+/// mutates at the same time. Field meaning follows the corresponding
+/// `backend` op struct; unused fields stay empty/zero per class.
+#[derive(Debug)]
+pub struct KernelPlan {
+    pub class: OpClass,
+    pub size: String,
+    pub bucket: usize,
+    /// token-slot width (chunk for prefill, W for draft expand)
+    pub t: usize,
+    pub tokens: Vec<i32>,
+    pub pos: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub kv_len: usize,
+    /// draft expand / tiny forward write cursor
+    pub write_pos: usize,
+    /// tiny forward: which row's logits the state keeps
+    pub last_idx: usize,
+    /// verify ops: fused-compaction rows of the previous step
+    pub prev_idx: Vec<i32>,
+    pub n_prev: usize,
+    /// draft expand: `[W, 3h]` fused features
+    pub feats: Vec<f32>,
+}
+
+impl KernelPlan {
+    /// A plan with every optional field empty (callers fill in the
+    /// class-specific ones).
+    pub fn new(class: OpClass, size: &str, bucket: usize, t: usize) -> KernelPlan {
+        KernelPlan {
+            class,
+            size: size.to_string(),
+            bucket,
+            t,
+            tokens: Vec::new(),
+            pos: Vec::new(),
+            mask: Vec::new(),
+            kv_len: 0,
+            write_pos: 0,
+            last_idx: 0,
+            prev_idx: Vec::new(),
+            n_prev: 0,
+            feats: Vec::new(),
+        }
+    }
+
+    pub fn key(&self) -> PlanKey {
+        PlanKey { class: self.class, size: self.size.clone(), bucket: self.bucket, t: self.t }
+    }
+
+    fn as_verify(&self) -> VerifyOp<'_> {
+        VerifyOp {
+            size: &self.size,
+            bucket: self.bucket,
+            t: self.t,
+            tokens: &self.tokens,
+            pos: &self.pos,
+            mask: &self.mask,
+            kv_len: self.kv_len,
+            prev_idx: &self.prev_idx,
+            n_prev: self.n_prev,
+        }
+    }
+
+    fn as_prefill(&self) -> PrefillOp<'_> {
+        PrefillOp {
+            size: &self.size,
+            bucket: self.bucket,
+            tokens: &self.tokens,
+            pos: &self.pos,
+            mask: &self.mask,
+            kv_len: self.kv_len,
+        }
+    }
+
+    fn as_draft_expand(&self) -> DraftExpandOp<'_> {
+        DraftExpandOp {
+            size: &self.size,
+            bucket: self.bucket,
+            tokens: &self.tokens,
+            feats: &self.feats,
+            pos: &self.pos,
+            mask: &self.mask,
+            kv_len: self.kv_len,
+            write_pos: self.write_pos,
+        }
+    }
+
+    fn as_tiny(&self) -> TinyForwardOp<'_> {
+        TinyForwardOp {
+            t: self.t,
+            tokens: &self.tokens,
+            pos: &self.pos,
+            mask: &self.mask,
+            kv_len: self.kv_len,
+            write_pos: self.write_pos,
+            last_idx: self.last_idx,
+        }
+    }
+}
+
+/// What `EngineSession::drive` reports.
+#[derive(Debug)]
+pub enum Drive {
+    /// A batchable kernel op is pending; the caller executes it (alone
+    /// or fused into a group) and calls `drive()` again.
+    Pending,
+    /// The scheduler-visible step finished; here is its outcome.
+    Complete(StepOutcome),
+    /// This session does not implement the protocol — use `step()`.
+    Unsupported,
+}
+
+/// Execute one plan against one state in place (the single-session path
+/// and the width-1 group path — always the *unbatched* backend entry
+/// point, so `step()` semantics are exactly the pre-protocol ones).
+pub fn exec_single(be: &dyn Backend, plan: &KernelPlan, state: &mut StateBuf) -> Result<()> {
+    let owned = std::mem::replace(state, StateBuf::nil());
+    let out = match plan.class {
+        OpClass::Prefill => be.prefill(&plan.as_prefill(), owned)?,
+        OpClass::VerifyFull => be.verify_full(&plan.as_verify(), owned)?,
+        OpClass::VerifyPartial => be.verify_partial(&plan.as_verify(), owned)?,
+        OpClass::DraftExpand => be.draft_expand(&plan.as_draft_expand(), owned)?,
+        OpClass::TinyForward => be.tiny_forward(&plan.as_tiny(), owned)?,
+    };
+    *state = out;
+    Ok(())
+}
+
+/// Execute a geometry-compatible group of plans as one batched backend
+/// invocation. All plans must share one [`PlanKey`] (the coordinator
+/// groups by it); byte parity with per-plan [`exec_single`] calls is the
+/// backend's batched-op contract.
+pub fn exec_batch(
+    be: &dyn Backend,
+    plans: &[&KernelPlan],
+    states: &mut [&mut StateBuf],
+) -> Result<()> {
+    let Some(first) = plans.first() else { return Ok(()) };
+    if plans.len() != states.len() {
+        bail!("plan count {} != state count {}", plans.len(), states.len());
+    }
+    match first.class {
+        OpClass::Prefill => {
+            let ops: Vec<PrefillOp> = plans.iter().map(|p| p.as_prefill()).collect();
+            be.prefill_batch(&ops, states)
+        }
+        OpClass::VerifyFull => {
+            let ops: Vec<VerifyOp> = plans.iter().map(|p| p.as_verify()).collect();
+            be.verify_full_batch(&ops, states)
+        }
+        OpClass::VerifyPartial => {
+            let ops: Vec<VerifyOp> = plans.iter().map(|p| p.as_verify()).collect();
+            be.verify_partial_batch(&ops, states)
+        }
+        OpClass::DraftExpand => {
+            let ops: Vec<DraftExpandOp> = plans.iter().map(|p| p.as_draft_expand()).collect();
+            be.draft_expand_batch(&ops, states)
+        }
+        OpClass::TinyForward => {
+            let ops: Vec<TinyForwardOp> = plans.iter().map(|p| p.as_tiny()).collect();
+            be.tiny_forward_batch(&ops, states)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_key_groups_by_geometry() {
+        let a = KernelPlan::new(OpClass::VerifyFull, "s", 1024, 16);
+        let b = KernelPlan::new(OpClass::VerifyFull, "s", 1024, 16);
+        let c = KernelPlan::new(OpClass::VerifyFull, "s", 1024, 48);
+        let d = KernelPlan::new(OpClass::VerifyPartial, "s", 1024, 16);
+        assert_eq!(a.key(), b.key());
+        assert_ne!(a.key(), c.key(), "width must split groups");
+        assert_ne!(a.key(), d.key(), "op class must split groups");
+    }
+
+    #[test]
+    fn exec_batch_rejects_mismatched_arity() {
+        let be = crate::backend::reference::ReferenceBackend::new();
+        let plan = KernelPlan::new(OpClass::VerifyFull, "s", 128, 1);
+        assert!(exec_batch(&be, &[&plan], &mut []).is_err());
+    }
+}

@@ -15,8 +15,8 @@
 use anyhow::{bail, Result};
 
 use crate::backend::{
-    pick_bucket, Backend, CommitOp, DraftExpandOp, DraftPrefillOp, GatherOp, PrefillOp, ReadOp,
-    ScoreOp, StateBuf, StateKind, StateSnapshot, TinyForwardOp, VerifyOp,
+    pick_bucket, Backend, CommitOp, DraftPrefillOp, GatherOp, PrefillOp, ReadOp, ScoreOp,
+    StateBuf, StateKind, StateSnapshot, TinyForwardOp,
 };
 use crate::cache::{DraftCache, FullCache, PartialCache};
 use crate::config::SpecPvConfig;
@@ -27,6 +27,8 @@ use crate::offload::OffloadSim;
 use crate::retrieval::GatherPlan;
 use crate::tokenizer::PAD;
 use crate::tree::{chain_mask, FlatTree};
+
+use super::plan::{exec_single, KernelPlan, OpClass};
 
 /// Move a session's state out for an ownership-taking backend op (the
 /// field gets a nil placeholder until the op's successor is stored).
@@ -216,63 +218,81 @@ impl<'a> TargetSession<'a> {
         self.state = StateBuf::nil();
     }
 
-    /// Verify a draft tree against the full cache (EAGLE3-full path and
-    /// the SpecPV "Full" mode). Applies the pending fused compaction.
-    pub fn verify_tree(&mut self, flat: &FlatTree, root_pos: usize) -> Result<ReadOut> {
+    /// The backend this session executes on. The returned reference is
+    /// independent of the `&self` borrow, so a caller can execute a plan
+    /// against one of this session's state fields.
+    pub fn backend(&self) -> &'a dyn Backend {
+        self.be
+    }
+
+    /// Plan half of [`TargetSession::verify_tree`]: consume the pending
+    /// compaction and describe the verification as a batchable
+    /// [`KernelPlan`] (DESIGN.md §12).
+    pub fn plan_verify_tree(&mut self, flat: &FlatTree, root_pos: usize) -> Result<KernelPlan> {
         let t = self.consts.tree_t;
         let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
-        let pos = flat.positions(root_pos);
-        let op = VerifyOp {
-            size: &self.size,
-            bucket: self.bucket,
-            t,
-            tokens: &flat.tokens,
-            pos: &pos,
-            mask: &flat.mask,
-            kv_len,
-            prev_idx: &idx,
-            n_prev,
-        };
-        let state = take(&mut self.state);
-        self.state = self.be.verify_full(&op, state)?;
-        self.offload
-            .touch_full(self.cache.committed + flat.n, self.kv_bpt());
+        let mut plan = KernelPlan::new(OpClass::VerifyFull, &self.size, self.bucket, t);
+        plan.tokens = flat.tokens.clone();
+        plan.pos = flat.positions(root_pos);
+        plan.mask = flat.mask.clone();
+        plan.kv_len = kv_len;
+        plan.prev_idx = idx;
+        plan.n_prev = n_prev;
+        Ok(plan)
+    }
+
+    /// Apply half of [`TargetSession::verify_tree`], run after the plan
+    /// executed: offload accounting plus the window read.
+    pub fn finish_verify_tree(&mut self, n_new: usize) -> Result<ReadOut> {
+        self.offload.touch_full(self.cache.committed + n_new, self.kv_bpt());
         self.read_window(0)
     }
 
-    /// AR decode step (T=1): returns the token's logits row.
-    pub fn decode_one(&mut self, token: u32, pos: usize) -> Result<Vec<f32>> {
+    /// Verify a draft tree against the full cache (EAGLE3-full path and
+    /// the SpecPV "Full" mode). Applies the pending fused compaction.
+    pub fn verify_tree(&mut self, flat: &FlatTree, root_pos: usize) -> Result<ReadOut> {
+        let plan = self.plan_verify_tree(flat, root_pos)?;
+        exec_single(self.be, &plan, &mut self.state)?;
+        self.finish_verify_tree(flat.n)
+    }
+
+    /// Plan half of [`TargetSession::decode_one`] (an AR T=1 verify).
+    pub fn plan_decode_one(&mut self, token: u32, pos: usize) -> Result<KernelPlan> {
         let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
-        let op = VerifyOp {
-            size: &self.size,
-            bucket: self.bucket,
-            t: 1,
-            tokens: &[token as i32],
-            pos: &[pos as i32],
-            mask: &[1.0],
-            kv_len,
-            prev_idx: &idx,
-            n_prev,
-        };
-        let state = take(&mut self.state);
-        self.state = self.be.verify_full(&op, state)?;
+        let mut plan = KernelPlan::new(OpClass::VerifyFull, &self.size, self.bucket, 1);
+        plan.tokens = vec![token as i32];
+        plan.pos = vec![pos as i32];
+        plan.mask = vec![1.0];
+        plan.kv_len = kv_len;
+        plan.prev_idx = idx;
+        plan.n_prev = n_prev;
+        Ok(plan)
+    }
+
+    /// Apply half of [`TargetSession::decode_one`]: accounting, the
+    /// next step's pending compaction, and the logits read.
+    pub fn finish_decode_one(&mut self) -> Result<Vec<f32>> {
         self.offload.touch_full(self.cache.committed + 1, self.kv_bpt());
         self.cache.set_pending(vec![0], self.consts.prev_window())?;
         let (logits, _) = self.read_last(0)?;
         Ok(logits)
     }
 
-    /// Refresh verification (SpecPV): a pv chain of `chain` tokens
-    /// followed by the draft tree, against the full cache, using the
-    /// `t_refresh`-wide step. Returns the read window positioned at the
-    /// tree (rows 0.. = chain.len() offset applied).
-    pub fn verify_refresh(
+    /// AR decode step (T=1): returns the token's logits row.
+    pub fn decode_one(&mut self, token: u32, pos: usize) -> Result<Vec<f32>> {
+        let plan = self.plan_decode_one(token, pos)?;
+        exec_single(self.be, &plan, &mut self.state)?;
+        self.finish_decode_one()
+    }
+
+    /// Plan half of [`TargetSession::verify_refresh`].
+    pub fn plan_verify_refresh(
         &mut self,
         chain: &[u32],
         chain_start_pos: usize,
         flat: &FlatTree,
         t_refresh: usize,
-    ) -> Result<ReadOut> {
+    ) -> Result<KernelPlan> {
         let n_chain = chain.len();
         let t_tree = flat.tokens.len();
         if n_chain + t_tree > t_refresh {
@@ -292,24 +312,40 @@ impl<'a> TargetSession<'a> {
             toks[n_chain + i] = flat.tokens[i];
             pos[n_chain + i] = tree_pos[i];
         }
-        let mask = crate::tree::refresh_mask(n_chain, flat, t_refresh);
-        let op = VerifyOp {
-            size: &self.size,
-            bucket: self.bucket,
-            t: t_refresh,
-            tokens: &toks,
-            pos: &pos,
-            mask: &mask,
-            kv_len,
-            prev_idx: &idx,
-            n_prev,
-        };
-        let state = take(&mut self.state);
-        self.state = self.be.verify_full(&op, state)?;
+        let mut plan =
+            KernelPlan::new(OpClass::VerifyFull, &self.size, self.bucket, t_refresh);
+        plan.tokens = toks;
+        plan.pos = pos;
+        plan.mask = crate::tree::refresh_mask(n_chain, flat, t_refresh);
+        plan.kv_len = kv_len;
+        plan.prev_idx = idx;
+        plan.n_prev = n_prev;
+        Ok(plan)
+    }
+
+    /// Apply half of [`TargetSession::verify_refresh`]: offload
+    /// accounting plus the window read positioned at the tree.
+    pub fn finish_verify_refresh(&mut self, n_chain: usize, n_new: usize) -> Result<ReadOut> {
         self.offload
-            .touch_full(self.cache.committed + n_chain + flat.n, self.kv_bpt());
+            .touch_full(self.cache.committed + n_chain + n_new, self.kv_bpt());
         // window positioned so the tree starts at row 0 when possible
         self.read_window(n_chain)
+    }
+
+    /// Refresh verification (SpecPV): a pv chain of `chain` tokens
+    /// followed by the draft tree, against the full cache, using the
+    /// `t_refresh`-wide step. Returns the read window positioned at the
+    /// tree (rows 0.. = chain.len() offset applied).
+    pub fn verify_refresh(
+        &mut self,
+        chain: &[u32],
+        chain_start_pos: usize,
+        flat: &FlatTree,
+        t_refresh: usize,
+    ) -> Result<ReadOut> {
+        let plan = self.plan_verify_refresh(chain, chain_start_pos, flat, t_refresh)?;
+        exec_single(self.be, &plan, &mut self.state)?;
+        self.finish_verify_refresh(chain.len(), flat.n)
     }
 
     /// Standalone commit after a Refresh: keep `rows` (chain + accepted
@@ -477,36 +513,49 @@ impl<'a> PartialSession<'a> {
         self.state = None;
     }
 
+    /// The backend this session executes on (see
+    /// [`TargetSession::backend`]).
+    pub fn backend(&self) -> &'a dyn Backend {
+        self.be
+    }
+
+    /// Plan half of [`PartialSession::verify_tree`].
+    pub fn plan_verify_tree(&mut self, flat: &FlatTree, root_pos: usize) -> Result<KernelPlan> {
+        if self.state.is_none() {
+            bail!("partial cache not initialised");
+        }
+        let t = self.consts.tree_t;
+        let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
+        let mut plan = KernelPlan::new(OpClass::VerifyPartial, &self.size, self.bucket, t);
+        plan.tokens = flat.tokens.clone();
+        plan.pos = flat.positions(root_pos);
+        plan.mask = flat.mask.clone();
+        plan.kv_len = kv_len;
+        plan.prev_idx = idx;
+        plan.n_prev = n_prev;
+        Ok(plan)
+    }
+
+    /// Apply half of [`PartialSession::verify_tree`]: the tree-rows read.
+    pub fn finish_verify_tree(&mut self) -> Result<ReadOut> {
+        let t = self.consts.tree_t;
+        let data = self.be.read_logits(
+            &ReadOp::Partial { size: &self.size, bucket: self.bucket },
+            self.state.as_ref().expect("partial state present after verify"),
+        )?;
+        ReadOut::new(data, t, self.info.vocab, 3 * self.info.d_model)
+    }
+
     /// Partial verification of a draft tree (paper §3.2). Same op shape
     /// as the full verify, small bucket.
     pub fn verify_tree(&mut self, flat: &FlatTree, root_pos: usize) -> Result<ReadOut> {
-        let state = match self.state.take() {
-            Some(s) => s,
-            None => bail!("partial cache not initialised"),
-        };
-        let t = self.consts.tree_t;
-        let (kv_len, idx, n_prev) = self.cache.take_pending(self.consts.prev_max())?;
-        let pos = flat.positions(root_pos);
-        let op = VerifyOp {
-            size: &self.size,
-            bucket: self.bucket,
-            t,
-            tokens: &flat.tokens,
-            pos: &pos,
-            mask: &flat.mask,
-            kv_len,
-            prev_idx: &idx,
-            n_prev,
-        };
-        let out = self.be.verify_partial(&op, state)?;
-        // store the successor before the download so a failed read keeps
-        // the (valid) partial state instead of dropping it
-        self.state = Some(out);
-        let data = self.be.read_logits(
-            &ReadOp::Partial { size: &self.size, bucket: self.bucket },
-            self.state.as_ref().unwrap(),
+        let plan = self.plan_verify_tree(flat, root_pos)?;
+        exec_single(
+            self.be,
+            &plan,
+            self.state.as_mut().expect("presence checked by plan_verify_tree"),
         )?;
-        ReadOut::new(data, t, self.info.vocab, 3 * self.info.d_model)
+        self.finish_verify_tree()
     }
 }
 
@@ -593,6 +642,46 @@ impl<'a> DraftSession<'a> {
         )
     }
 
+    /// The backend this session executes on (see
+    /// [`TargetSession::backend`]).
+    pub fn backend(&self) -> &'a dyn Backend {
+        self.be
+    }
+
+    /// Describe one W-slot draft step as a batchable [`KernelPlan`].
+    fn plan_step(
+        &mut self,
+        tokens: &[u32],
+        feats: &[f32],
+        pos: &[i32],
+        mask: &[f32],
+        write_pos: usize,
+    ) -> KernelPlan {
+        let w = self.consts.draft_w;
+        let mut toks = vec![PAD as i32; w];
+        for (i, &t) in tokens.iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        let mut plan = KernelPlan::new(OpClass::DraftExpand, &self.size, self.bucket, w);
+        plan.tokens = toks;
+        plan.feats = feats.to_vec();
+        plan.pos = pos.to_vec();
+        plan.mask = mask.to_vec();
+        plan.kv_len = self.cache.committed;
+        plan.write_pos = write_pos;
+        plan
+    }
+
+    /// Read the W draft rows the last expand produced.
+    fn read_step(&mut self) -> Result<DraftOut> {
+        let w = self.consts.draft_w;
+        let data = self.be.read_logits(
+            &ReadOp::Draft { size: &self.size, bucket: self.bucket },
+            &self.state,
+        )?;
+        DraftOut::new(data, w, self.info.vocab, self.info.d_model)
+    }
+
     fn step(
         &mut self,
         tokens: &[u32],
@@ -601,39 +690,19 @@ impl<'a> DraftSession<'a> {
         mask: &[f32],
         write_pos: usize,
     ) -> Result<DraftOut> {
-        let w = self.consts.draft_w;
-        let mut toks = vec![PAD as i32; w];
-        for (i, &t) in tokens.iter().enumerate() {
-            toks[i] = t as i32;
-        }
-        let op = DraftExpandOp {
-            size: &self.size,
-            bucket: self.bucket,
-            tokens: &toks,
-            feats,
-            pos,
-            mask,
-            kv_len: self.cache.committed,
-            write_pos,
-        };
-        let state = take(&mut self.state);
-        self.state = self.be.draft_expand(&op, state)?;
-        let data = self.be.read_logits(
-            &ReadOp::Draft { size: &self.size, bucket: self.bucket },
-            &self.state,
-        )?;
-        DraftOut::new(data, w, self.info.vocab, self.info.d_model)
+        let plan = self.plan_step(tokens, feats, pos, mask, write_pos);
+        exec_single(self.be, &plan, &mut self.state)?;
+        self.read_step()
     }
 
-    /// Catch-up chain: commit `tokens` (the previously accepted path +
-    /// bonus) into the draft cache with their features. Returns draft
-    /// outputs per chain slot (the last row's logits seed the tree).
-    pub fn chain(
+    /// Plan half of [`DraftSession::chain`]; returns the plan plus the
+    /// chain length to hand back to [`DraftSession::finish_chain`].
+    pub fn plan_chain(
         &mut self,
         tokens: &[u32],
         feats: &[f32],
         start_pos: usize,
-    ) -> Result<DraftOut> {
+    ) -> Result<(KernelPlan, usize)> {
         let w = self.consts.draft_w;
         let n = tokens.len();
         if n == 0 || n > w {
@@ -649,21 +718,41 @@ impl<'a> DraftSession<'a> {
         }
         let pos: Vec<i32> = (0..w).map(|i| (start_pos + i.min(n - 1)) as i32).collect();
         let write = self.cache.committed;
-        let out = self.step(tokens, feats, &pos, &mask, write)?;
+        Ok((self.plan_step(tokens, feats, &pos, &mask, write), n))
+    }
+
+    /// Apply half of [`DraftSession::chain`]: read the rows, then commit
+    /// the `n` chain tokens into the draft cache accounting.
+    pub fn finish_chain(&mut self, n: usize) -> Result<DraftOut> {
+        let out = self.read_step()?;
         self.cache.push_chain(n)?;
         Ok(out)
     }
 
-    /// Expand one tree level: `tokens[i]` under scratch ancestors
-    /// `anc_scratch[i]` (indices into the scratch region, self excluded).
-    /// Returns (outputs, scratch offsets of the new rows).
-    pub fn level(
+    /// Catch-up chain: commit `tokens` (the previously accepted path +
+    /// bonus) into the draft cache with their features. Returns draft
+    /// outputs per chain slot (the last row's logits seed the tree).
+    pub fn chain(
+        &mut self,
+        tokens: &[u32],
+        feats: &[f32],
+        start_pos: usize,
+    ) -> Result<DraftOut> {
+        let (plan, n) = self.plan_chain(tokens, feats, start_pos)?;
+        exec_single(self.be, &plan, &mut self.state)?;
+        self.finish_chain(n)
+    }
+
+    /// Plan half of [`DraftSession::level`]; the scratch rows are
+    /// reserved here (before the op runs), exactly like the fused path.
+    /// Returns the plan plus the scratch offsets of the new rows.
+    pub fn plan_level(
         &mut self,
         tokens: &[u32],
         feats: &[f32],
         pos: &[i32],
         anc_scratch: &[Vec<usize>],
-    ) -> Result<(DraftOut, Vec<usize>)> {
+    ) -> Result<(KernelPlan, Vec<usize>)> {
         let w = self.consts.draft_w;
         let n = tokens.len();
         if n == 0 || n > w {
@@ -685,8 +774,27 @@ impl<'a> DraftSession<'a> {
             mask[i * region + (off + i).min(region - 1)] = 1.0;
         }
         let write = self.cache.committed + off;
-        let out = self.step(tokens, feats, pos, &mask, write)?;
-        Ok((out, (off..off + n).collect()))
+        Ok((self.plan_step(tokens, feats, pos, &mask, write), (off..off + n).collect()))
+    }
+
+    /// Apply half of [`DraftSession::level`]: read the expanded rows.
+    pub fn finish_level(&mut self) -> Result<DraftOut> {
+        self.read_step()
+    }
+
+    /// Expand one tree level: `tokens[i]` under scratch ancestors
+    /// `anc_scratch[i]` (indices into the scratch region, self excluded).
+    /// Returns (outputs, scratch offsets of the new rows).
+    pub fn level(
+        &mut self,
+        tokens: &[u32],
+        feats: &[f32],
+        pos: &[i32],
+        anc_scratch: &[Vec<usize>],
+    ) -> Result<(DraftOut, Vec<usize>)> {
+        let (plan, offsets) = self.plan_level(tokens, feats, pos, anc_scratch)?;
+        exec_single(self.be, &plan, &mut self.state)?;
+        Ok((self.finish_level()?, offsets))
     }
 }
 
@@ -774,27 +882,43 @@ impl<'a> TinySession<'a> {
         Ok(logits)
     }
 
-    /// One draft step: process `token` at absolute `pos`, return logits.
-    /// The cache is a streaming ring: once full, new rows overwrite the
-    /// oldest slots (TriForce's StreamingLLM-style draft cache).
-    pub fn step(&mut self, token: u32, pos: usize) -> Result<Vec<f32>> {
-        let kv_len = self.valid.min(self.bucket);
-        let op = TinyForwardOp {
-            t: 1,
-            tokens: &[token as i32],
-            pos: &[pos as i32],
-            mask: &[1.0],
-            kv_len,
-            write_pos: self.write,
-            last_idx: 0,
-        };
-        let state = take(&mut self.state);
-        self.state = self.be.tiny_forward(&op, state)?;
+    /// The backend this session executes on (see
+    /// [`TargetSession::backend`]).
+    pub fn backend(&self) -> &'a dyn Backend {
+        self.be
+    }
+
+    /// Plan half of [`TinySession::step`]: one T=1 tiny forward at the
+    /// current ring cursors (which only advance in
+    /// [`TinySession::finish_step`], after the op ran).
+    pub fn plan_step(&mut self, token: u32, pos: usize) -> KernelPlan {
+        let mut plan = KernelPlan::new(OpClass::TinyForward, "tiny", self.bucket, 1);
+        plan.tokens = vec![token as i32];
+        plan.pos = vec![pos as i32];
+        plan.mask = vec![1.0];
+        plan.kv_len = self.valid.min(self.bucket);
+        plan.write_pos = self.write;
+        plan.last_idx = 0;
+        plan
+    }
+
+    /// Apply half of [`TinySession::step`]: advance the ring cursors and
+    /// read the kept logits row.
+    pub fn finish_step(&mut self) -> Result<Vec<f32>> {
         if self.valid < self.bucket {
             self.valid += 1;
         }
         self.write = (self.write + 1) % self.bucket;
         self.read()
+    }
+
+    /// One draft step: process `token` at absolute `pos`, return logits.
+    /// The cache is a streaming ring: once full, new rows overwrite the
+    /// oldest slots (TriForce's StreamingLLM-style draft cache).
+    pub fn step(&mut self, token: u32, pos: usize) -> Result<Vec<f32>> {
+        let plan = self.plan_step(token, pos);
+        exec_single(self.be, &plan, &mut self.state)?;
+        self.finish_step()
     }
 
     /// Roll the write cursor back over `n` rejected draft rows (their

@@ -1,11 +1,14 @@
 //! EAGLE3-YARN baseline: EAGLE-3 tree drafting with **full-KV**
 //! verification every step (the paper's strongest lossless baseline,
 //! Tables 1/3 row 3). Also the shared implementation of the "Full" mode
-//! rounds inside SpecPV. One `step()` = one draft→verify→accept round.
+//! rounds inside SpecPV. One `step()` = one draft→verify→accept round,
+//! exposed as a plan/apply machine (DESIGN.md §12): every draft-expand
+//! level and the tree verification surface as batchable kernel plans so
+//! concurrent sessions fuse per-layer matmuls.
 
 use anyhow::{bail, Result};
 
-use crate::backend::{Backend, StateKind, StateSnapshot};
+use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
 use crate::config::Config;
 use crate::kvstore::KvStore;
 use crate::manifest::Consts;
@@ -17,7 +20,8 @@ use crate::tree::Tree;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
-use super::eagle::{draft_tree, DraftInputs};
+use super::eagle::{DraftInputs, DraftTreeRun};
+use super::plan::{exec_single, Drive, KernelPlan, OpClass};
 use super::session::{DraftSession, TargetSession};
 use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
 
@@ -63,7 +67,17 @@ pub fn accept_round(tree: &Tree, picks: &[u32]) -> RoundAccept {
     RoundAccept { path_tokens, path_idx, bonus, deepest }
 }
 
+/// Where a spec_full step is between `drive()` calls.
+enum Phase {
+    Idle,
+    /// drafting: the run plans draft-expand ops one at a time
+    Draft(Box<DraftTreeRun>),
+    /// tree verification in flight
+    Verify { tree: Tree, flat_n: usize },
+}
+
 pub struct SpecFullSession<'rt> {
+    be: &'rt dyn Backend,
     target: TargetSession<'rt>,
     draft: DraftSession<'rt>,
     out: SessionOut,
@@ -79,6 +93,9 @@ pub struct SpecFullSession<'rt> {
     consts: Consts,
     prompt_len: usize,
     temperature: f32,
+    phase: Phase,
+    pending: Option<KernelPlan>,
+    sw: Stopwatch,
 }
 
 impl Engine for SpecFullEngine {
@@ -117,6 +134,7 @@ impl Engine for SpecFullEngine {
             draft.read_hidden_row((req.prompt.len() - 1) % consts.chunk)?;
 
         Ok(Box::new(SpecFullSession {
+            be,
             target,
             draft,
             out,
@@ -129,7 +147,20 @@ impl Engine for SpecFullEngine {
             consts,
             prompt_len: req.prompt.len(),
             temperature: req.temperature,
+            phase: Phase::Idle,
+            pending: None,
+            sw: Stopwatch::new(),
         }))
+    }
+}
+
+impl SpecFullSession<'_> {
+    /// Which state buffer the pending plan mutates.
+    fn pending_state(&mut self, class: OpClass) -> &mut StateBuf {
+        match class {
+            OpClass::DraftExpand => &mut self.draft.state,
+            _ => &mut self.target.state,
+        }
     }
 }
 
@@ -147,71 +178,128 @@ impl EngineSession for SpecFullSession<'_> {
     }
 
     fn step(&mut self) -> Result<StepOutcome> {
-        if self.out.done {
-            return Ok(self.out.outcome());
+        loop {
+            match self.drive()? {
+                Drive::Complete(o) => return Ok(o),
+                Drive::Pending => {
+                    let plan = self.pending.take().expect("pending plan after Drive::Pending");
+                    let be = self.be;
+                    exec_single(be, &plan, self.pending_state(plan.class))?;
+                    self.pending = Some(plan);
+                }
+                Drive::Unsupported => {
+                    unreachable!("spec_full sessions implement the protocol")
+                }
+            }
         }
-        let mut sw = Stopwatch::new();
+    }
 
-        // --- draft ----------------------------------------------------
-        let chain_start = self.prompt_len + self.out.len() - 1 - self.chain.len();
-        let round = draft_tree(
-            &mut self.draft,
-            &self.cfg,
-            &DraftInputs {
-                chain: std::mem::take(&mut self.chain),
-                bonus: self.bonus,
-                chain_start_pos: chain_start,
-                prev_hidden: std::mem::take(&mut self.prev_hidden),
-            },
-        )?;
-        let tree = round.tree;
-        self.prev_hidden = round.bonus_hidden;
-        self.stats.draft_secs += sw.lap();
+    fn drive(&mut self) -> Result<Drive> {
+        loop {
+            let phase = std::mem::replace(&mut self.phase, Phase::Idle);
+            match phase {
+                Phase::Idle => {
+                    if self.out.done {
+                        return Ok(Drive::Complete(self.out.outcome()));
+                    }
+                    self.sw = Stopwatch::new();
+                    let chain_start =
+                        self.prompt_len + self.out.len() - 1 - self.chain.len();
+                    let run = DraftTreeRun::new(
+                        &self.cfg,
+                        DraftInputs {
+                            chain: std::mem::take(&mut self.chain),
+                            bonus: self.bonus,
+                            chain_start_pos: chain_start,
+                            prev_hidden: std::mem::take(&mut self.prev_hidden),
+                        },
+                    );
+                    self.phase = Phase::Draft(Box::new(run));
+                }
+                Phase::Draft(mut run) => match run.next_op(&mut self.draft)? {
+                    Some(plan) => {
+                        self.pending = Some(plan);
+                        self.phase = Phase::Draft(run);
+                        return Ok(Drive::Pending);
+                    }
+                    None => {
+                        let round = run.finish();
+                        self.prev_hidden = round.bonus_hidden;
+                        self.stats.draft_secs += self.sw.lap();
+                        let tree = round.tree;
+                        let flat = tree.flatten(self.consts.tree_t);
+                        let root_pos = self.prompt_len + self.out.len() - 1;
+                        let plan = self.target.plan_verify_tree(&flat, root_pos)?;
+                        self.pending = Some(plan);
+                        self.phase = Phase::Verify { tree, flat_n: flat.n };
+                        return Ok(Drive::Pending);
+                    }
+                },
+                Phase::Verify { tree, flat_n } => {
+                    self.pending = None;
+                    let read = self.target.finish_verify_tree(flat_n)?;
+                    self.stats.verify_secs += self.sw.lap();
 
-        // --- verify ---------------------------------------------------
-        let flat = tree.flatten(self.consts.tree_t);
-        let root_pos = self.prompt_len + self.out.len() - 1;
-        let read = self.target.verify_tree(&flat, root_pos)?;
-        self.stats.verify_secs += sw.lap();
+                    // --- accept -----------------------------------------
+                    let picks =
+                        tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
+                    let acc = accept_round(&tree, &picks);
+                    if std::env::var("SPECPV_DEBUG").is_ok() && self.stats.verify_steps < 10 {
+                        let kids: Vec<u32> = tree
+                            .children(0)
+                            .iter()
+                            .map(|&c| tree.nodes[c].token)
+                            .collect();
+                        eprintln!(
+                            "round {}: root={:?} target_pick={:?} draft_kids={:?} hit={}",
+                            self.stats.verify_steps,
+                            char::from_u32(self.bonus).unwrap_or('?'),
+                            char::from_u32(picks[0]).unwrap_or('?'),
+                            kids.iter()
+                                .map(|&k| char::from_u32(k).unwrap_or('?'))
+                                .collect::<Vec<_>>(),
+                            kids.contains(&picks[0]),
+                        );
+                    }
+                    self.stats.verify_steps += 1;
+                    let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
+                    self.stats.accepted_total += kept;
+                    self.stats.full_steps += 1;
 
-        // --- accept ---------------------------------------------------
-        let picks = tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
-        let acc = accept_round(&tree, &picks);
-        if std::env::var("SPECPV_DEBUG").is_ok() && self.stats.verify_steps < 10 {
-            let kids: Vec<u32> =
-                tree.children(0).iter().map(|&c| tree.nodes[c].token).collect();
-            eprintln!(
-                "round {}: root={:?} target_pick={:?} draft_kids={:?} hit={}",
-                self.stats.verify_steps,
-                char::from_u32(self.bonus).unwrap_or('?'),
-                char::from_u32(picks[0]).unwrap_or('?'),
-                kids.iter()
-                    .map(|&k| char::from_u32(k).unwrap_or('?'))
-                    .collect::<Vec<_>>(),
-                kids.contains(&picks[0]),
-            );
+                    // pending compaction rows: root + accepted path
+                    let mut rows = vec![0usize];
+                    rows.extend(&acc.path_idx);
+                    self.target.cache.set_pending(rows, self.consts.prev_window())?;
+
+                    // next round's draft chain: accepted path tokens with
+                    // their target features; bonus feature = feature of
+                    // deepest node
+                    self.chain = acc
+                        .path_idx
+                        .iter()
+                        .map(|&i| (tree.nodes[i].token, read.feats(i).to_vec()))
+                        .collect();
+                    self.bonus = acc.bonus;
+                    self.stats.other_secs += self.sw.lap();
+
+                    return Ok(Drive::Complete(self.out.outcome()));
+                }
+            }
         }
-        self.stats.verify_steps += 1;
-        let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
-        self.stats.accepted_total += kept;
-        self.stats.full_steps += 1;
+    }
 
-        // pending compaction rows: root + accepted path
-        let mut rows = vec![0usize];
-        rows.extend(&acc.path_idx);
-        self.target.cache.set_pending(rows, self.consts.prev_window())?;
+    fn take_pending(&mut self) -> Option<(KernelPlan, StateBuf)> {
+        let plan = self.pending.take()?;
+        let state =
+            std::mem::replace(self.pending_state(plan.class), StateBuf::nil());
+        Some((plan, state))
+    }
 
-        // next round's draft chain: accepted path tokens with their
-        // target features; bonus feature = feature of deepest node
-        self.chain = acc
-            .path_idx
-            .iter()
-            .map(|&i| (tree.nodes[i].token, read.feats(i).to_vec()))
-            .collect();
-        self.bonus = acc.bonus;
-        self.stats.other_secs += sw.lap();
-
-        Ok(self.out.outcome())
+    fn restore_pending(&mut self, state: StateBuf) {
+        match &self.phase {
+            Phase::Draft(_) => self.draft.state = state,
+            _ => self.target.state = state,
+        }
     }
 
     fn finish(self: Box<Self>) -> GenResult {

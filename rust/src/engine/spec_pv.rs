@@ -15,33 +15,32 @@
 //! The whole mode machine is step-resumable: its loop state (pv chain,
 //! bonus, recycled hidden, partial-cache installation) lives in
 //! [`SpecPvSession`] fields so the coordinator can interleave rounds of
-//! many generations over one runtime.
+//! many generations over one runtime. Each round is additionally a
+//! plan/apply machine (DESIGN.md §12): draft expands and the
+//! full/partial/refresh verification surface as batchable kernel plans;
+//! the Refresh tail (commit, score, gather) stays inline — those ops are
+//! gather/reduce shaped, not weight-streaming shaped.
 
 use anyhow::{bail, Result};
 
-use crate::backend::{Backend, StateKind, StateSnapshot};
+use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
 use crate::config::Config;
 use crate::kvstore::KvStore;
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
-use crate::model::bucket_need;
+use crate::model::{bucket_need, ReadOut};
 use crate::offload::OffloadSim;
 use crate::retrieval::plan_gather;
 use crate::sampling::pick_token;
+use crate::tree::Tree;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
-use super::eagle::{draft_tree, DraftInputs};
+use super::eagle::{DraftInputs, DraftTreeRun};
+use super::plan::{exec_single, Drive, KernelPlan, OpClass};
 use super::session::{DraftSession, PartialSession, TargetSession};
-use super::spec_full::{accept_round, tree_picks};
+use super::spec_full::{accept_round, tree_picks, RoundAccept};
 use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Mode {
-    Full,
-    Partial,
-    Refresh,
-}
 
 pub struct SpecPvEngine {
     cfg: Config,
@@ -53,7 +52,17 @@ impl SpecPvEngine {
     }
 }
 
+/// Where a SpecPV round is between `drive()` calls.
+enum Phase {
+    Idle,
+    Draft(Box<DraftTreeRun>),
+    VerifyFull { tree: Tree, flat_n: usize },
+    VerifyPartial { tree: Tree },
+    VerifyRefresh { tree: Tree, flat_n: usize, width: usize },
+}
+
 pub struct SpecPvSession<'rt> {
+    be: &'rt dyn Backend,
     target: TargetSession<'rt>,
     draft: DraftSession<'rt>,
     partial: PartialSession<'rt>,
@@ -80,6 +89,9 @@ pub struct SpecPvSession<'rt> {
     /// compiled refresh widths for this bucket
     t_refresh: usize,
     big_refresh: Option<usize>,
+    phase: Phase,
+    pending: Option<KernelPlan>,
+    sw: Stopwatch,
 }
 
 impl Engine for SpecPvEngine {
@@ -126,6 +138,7 @@ impl Engine for SpecPvEngine {
             draft.read_hidden_row((req.prompt.len() - 1) % consts.chunk)?;
 
         Ok(Box::new(SpecPvSession {
+            be,
             target,
             draft,
             partial,
@@ -144,7 +157,40 @@ impl Engine for SpecPvEngine {
             nb,
             t_refresh,
             big_refresh,
+            phase: Phase::Idle,
+            pending: None,
+            sw: Stopwatch::new(),
         }))
+    }
+}
+
+impl SpecPvSession<'_> {
+    /// Which state buffer the pending plan mutates.
+    fn pending_state(&mut self, class: OpClass) -> &mut StateBuf {
+        match class {
+            OpClass::DraftExpand => &mut self.draft.state,
+            OpClass::VerifyPartial => self
+                .partial
+                .state
+                .as_mut()
+                .expect("partial state present for a pending partial verify"),
+            _ => &mut self.target.state,
+        }
+    }
+
+    /// Shared tail of every round: clip + emit the accepted tokens,
+    /// rebuild the next round's catch-up chain, lap the stopwatch.
+    fn round_tail(&mut self, tree: &Tree, read: &ReadOut, acc: RoundAccept) -> StepOutcome {
+        let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
+        self.stats.accepted_total += kept;
+        self.chain = acc
+            .path_idx
+            .iter()
+            .map(|&i| (tree.nodes[i].token, read.feats(i).to_vec()))
+            .collect();
+        self.bonus = acc.bonus;
+        self.stats.other_secs += self.sw.lap();
+        self.out.outcome()
     }
 }
 
@@ -162,148 +208,194 @@ impl EngineSession for SpecPvSession<'_> {
     }
 
     fn step(&mut self) -> Result<StepOutcome> {
-        if self.out.done {
-            return Ok(self.out.outcome());
+        loop {
+            match self.drive()? {
+                Drive::Complete(o) => return Ok(o),
+                Drive::Pending => {
+                    let plan = self.pending.take().expect("pending plan after Drive::Pending");
+                    let be = self.be;
+                    exec_single(be, &plan, self.pending_state(plan.class))?;
+                    self.pending = Some(plan);
+                }
+                Drive::Unsupported => {
+                    unreachable!("spec_pv sessions implement the protocol")
+                }
+            }
         }
-        let mut sw = Stopwatch::new();
+    }
 
-        // --- draft ----------------------------------------------------
-        let chain_start = self.prompt_len + self.out.len() - 1 - self.chain.len();
-        let round = draft_tree(
-            &mut self.draft,
-            &self.cfg,
-            &DraftInputs {
-                chain: std::mem::take(&mut self.chain),
-                bonus: self.bonus,
-                chain_start_pos: chain_start,
-                prev_hidden: std::mem::take(&mut self.prev_hidden),
-            },
-        )?;
-        let tree = round.tree;
-        self.prev_hidden = round.bonus_hidden;
-        self.stats.draft_secs += sw.lap();
-        let flat = tree.flatten(self.consts.tree_t);
-        let root_pos = self.prompt_len + self.out.len() - 1;
-
-        // --- SelectMode (Alg. 1) ---------------------------------------
-        let core_needed = self.cfg.specpv.core_tokens(self.consts.block);
-        let mode = if self.partial.ready()
-            && self.partial.cache.fits(flat.n, self.consts.prev_max())
-        {
-            Mode::Partial
-        } else if self.target.cache.effective_len() + self.pv.len()
-            > core_needed.max(2 * self.consts.block)
-        {
-            Mode::Refresh
-        } else {
-            Mode::Full
-        };
-
-        let (read, row_off) = match mode {
-            Mode::Full => {
-                let r = self.target.verify_tree(&flat, root_pos)?;
-                (r, 0usize)
-            }
-            Mode::Partial => {
-                let r = self.partial.verify_tree(&flat, root_pos)?;
-                (r, 0usize)
-            }
-            Mode::Refresh => {
-                // how wide a refresh do we need?
-                let width = self.pv.len() + self.consts.tree_t;
-                let t_use = if width <= self.t_refresh {
-                    self.t_refresh
-                } else if let Some(big) = self.big_refresh {
-                    if width <= big {
-                        big
-                    } else {
-                        anyhow::bail!(
-                            "pv chain {} exceeds refresh capacity",
-                            self.pv.len()
-                        );
+    fn drive(&mut self) -> Result<Drive> {
+        loop {
+            let phase = std::mem::replace(&mut self.phase, Phase::Idle);
+            match phase {
+                Phase::Idle => {
+                    if self.out.done {
+                        return Ok(Drive::Complete(self.out.outcome()));
                     }
-                } else {
-                    anyhow::bail!(
-                        "pv chain {} exceeds refresh capacity {}",
-                        self.pv.len(),
-                        self.t_refresh
+                    self.sw = Stopwatch::new();
+                    let chain_start =
+                        self.prompt_len + self.out.len() - 1 - self.chain.len();
+                    let run = DraftTreeRun::new(
+                        &self.cfg,
+                        DraftInputs {
+                            chain: std::mem::take(&mut self.chain),
+                            bonus: self.bonus,
+                            chain_start_pos: chain_start,
+                            prev_hidden: std::mem::take(&mut self.prev_hidden),
+                        },
                     );
-                };
-                let chain_pos = self.prompt_len + self.out.len() - 1 - self.pv.len();
-                let r =
-                    self.target.verify_refresh(&self.pv, chain_pos, &flat, t_use)?;
-                (r, 0usize)
-            }
-        };
-        self.stats.verify_secs += sw.lap();
+                    self.phase = Phase::Draft(Box::new(run));
+                }
+                Phase::Draft(mut run) => match run.next_op(&mut self.draft)? {
+                    Some(plan) => {
+                        self.pending = Some(plan);
+                        self.phase = Phase::Draft(run);
+                        return Ok(Drive::Pending);
+                    }
+                    None => {
+                        let round = run.finish();
+                        self.prev_hidden = round.bonus_hidden;
+                        self.stats.draft_secs += self.sw.lap();
+                        let tree = round.tree;
+                        let flat = tree.flatten(self.consts.tree_t);
+                        let root_pos = self.prompt_len + self.out.len() - 1;
 
-        // --- accept -----------------------------------------------------
-        // read window is positioned at the tree for all modes
-        let picks = tree_picks(&tree, &read, row_off, self.temperature, &mut self.rng);
-        let acc = accept_round(&tree, &picks);
-        self.stats.verify_steps += 1;
+                        // --- SelectMode (Alg. 1) ------------------------
+                        let core_needed =
+                            self.cfg.specpv.core_tokens(self.consts.block);
+                        if self.partial.ready()
+                            && self.partial.cache.fits(flat.n, self.consts.prev_max())
+                        {
+                            let plan = self.partial.plan_verify_tree(&flat, root_pos)?;
+                            self.pending = Some(plan);
+                            self.phase = Phase::VerifyPartial { tree };
+                        } else if self.target.cache.effective_len() + self.pv.len()
+                            > core_needed.max(2 * self.consts.block)
+                        {
+                            // how wide a refresh do we need?
+                            let width = self.pv.len() + self.consts.tree_t;
+                            let t_use = if width <= self.t_refresh {
+                                self.t_refresh
+                            } else if let Some(big) = self.big_refresh {
+                                if width <= big {
+                                    big
+                                } else {
+                                    bail!(
+                                        "pv chain {} exceeds refresh capacity",
+                                        self.pv.len()
+                                    );
+                                }
+                            } else {
+                                bail!(
+                                    "pv chain {} exceeds refresh capacity {}",
+                                    self.pv.len(),
+                                    self.t_refresh
+                                );
+                            };
+                            let chain_pos =
+                                self.prompt_len + self.out.len() - 1 - self.pv.len();
+                            let plan = self.target.plan_verify_refresh(
+                                &self.pv, chain_pos, &flat, t_use,
+                            )?;
+                            self.pending = Some(plan);
+                            self.phase =
+                                Phase::VerifyRefresh { tree, flat_n: flat.n, width: t_use };
+                        } else {
+                            let plan = self.target.plan_verify_tree(&flat, root_pos)?;
+                            self.pending = Some(plan);
+                            self.phase = Phase::VerifyFull { tree, flat_n: flat.n };
+                        }
+                        return Ok(Drive::Pending);
+                    }
+                },
+                Phase::VerifyFull { tree, flat_n } => {
+                    self.pending = None;
+                    let read = self.target.finish_verify_tree(flat_n)?;
+                    self.stats.verify_secs += self.sw.lap();
+                    let picks =
+                        tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
+                    let acc = accept_round(&tree, &picks);
+                    self.stats.verify_steps += 1;
+                    self.stats.full_steps += 1;
+                    let mut rows = vec![0usize];
+                    rows.extend(&acc.path_idx);
+                    self.target.cache.set_pending(rows, self.consts.prev_window())?;
+                    return Ok(Drive::Complete(self.round_tail(&tree, &read, acc)));
+                }
+                Phase::VerifyPartial { tree } => {
+                    self.pending = None;
+                    let read = self.partial.finish_verify_tree()?;
+                    self.stats.verify_secs += self.sw.lap();
+                    let picks =
+                        tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
+                    let acc = accept_round(&tree, &picks);
+                    self.stats.verify_steps += 1;
+                    self.stats.partial_steps += 1;
+                    let mut rows = vec![0usize];
+                    rows.extend(&acc.path_idx);
+                    self.partial.cache.set_pending(rows, self.consts.prev_window())?;
+                    self.partial.cache.pv_tokens.push(self.bonus);
+                    self.partial.cache.pv_tokens.extend(&acc.path_tokens);
+                    self.pv.push(self.bonus);
+                    self.pv.extend(&acc.path_tokens);
+                    return Ok(Drive::Complete(self.round_tail(&tree, &read, acc)));
+                }
+                Phase::VerifyRefresh { tree, flat_n, width } => {
+                    self.pending = None;
+                    let n_chain = self.pv.len();
+                    let read = self.target.finish_verify_refresh(n_chain, flat_n)?;
+                    self.stats.verify_secs += self.sw.lap();
+                    let picks =
+                        tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
+                    let acc = accept_round(&tree, &picks);
+                    self.stats.verify_steps += 1;
+                    self.stats.refresh_steps += 1;
+                    // commit: pv chain ++ root ++ accepted path (window-
+                    // relative rows)
+                    let mut rows: Vec<usize> = (0..=n_chain).collect();
+                    rows.extend(acc.path_idx.iter().map(|&i| n_chain + i));
+                    self.target.commit_now(&rows, width)?;
+                    self.pv.clear();
 
-        match mode {
-            Mode::Full => {
-                self.stats.full_steps += 1;
-                let mut rows = vec![0usize];
-                rows.extend(&acc.path_idx);
-                self.target.cache.set_pending(rows, self.consts.prev_window())?;
-            }
-            Mode::Partial => {
-                self.stats.partial_steps += 1;
-                let mut rows = vec![0usize];
-                rows.extend(&acc.path_idx);
-                self.partial.cache.set_pending(rows, self.consts.prev_window())?;
-                self.partial.cache.pv_tokens.push(self.bonus);
-                self.partial.cache.pv_tokens.extend(&acc.path_tokens);
-                self.pv.push(self.bonus);
-                self.pv.extend(&acc.path_tokens);
-            }
-            Mode::Refresh => {
-                self.stats.refresh_steps += 1;
-                // commit: pv chain ++ root ++ accepted path (window-
-                // relative rows)
-                let n_chain = self.pv.len();
-                let width = if n_chain + self.consts.tree_t <= self.t_refresh {
-                    self.t_refresh
-                } else {
-                    self.big_refresh.unwrap()
-                };
-                let mut rows: Vec<usize> = (0..=n_chain).collect();
-                rows.extend(acc.path_idx.iter().map(|&i| n_chain + i));
-                self.target.commit_now(&rows, width)?;
-                self.pv.clear();
-
-                // re-select retrieval blocks with the fresh queries
-                let n_queries = (n_chain + flat.n).min(self.consts.qrows);
-                let scores = self.target.score(n_queries)?;
-                let plan = plan_gather(
-                    &scores,
-                    self.target.info.n_layer,
-                    self.nb,
-                    self.consts.block,
-                    self.target.cache.committed,
-                    self.nsel,
-                    &self.cfg.specpv,
-                );
-                let pstate = self.target.gather(&plan, self.partial.bucket)?;
-                self.partial.install(pstate, plan.core_len);
+                    // re-select retrieval blocks with the fresh queries
+                    let n_queries = (n_chain + flat_n).min(self.consts.qrows);
+                    let scores = self.target.score(n_queries)?;
+                    let plan = plan_gather(
+                        &scores,
+                        self.target.info.n_layer,
+                        self.nb,
+                        self.consts.block,
+                        self.target.cache.committed,
+                        self.nsel,
+                        &self.cfg.specpv,
+                    );
+                    let pstate = self.target.gather(&plan, self.partial.bucket)?;
+                    self.partial.install(pstate, plan.core_len);
+                    return Ok(Drive::Complete(self.round_tail(&tree, &read, acc)));
+                }
             }
         }
+    }
 
-        let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
-        self.stats.accepted_total += kept;
+    fn take_pending(&mut self) -> Option<(KernelPlan, StateBuf)> {
+        let plan = self.pending.take()?;
+        let state = match plan.class {
+            OpClass::VerifyPartial => self
+                .partial
+                .state
+                .take()
+                .expect("partial state present for a pending partial verify"),
+            class => std::mem::replace(self.pending_state(class), StateBuf::nil()),
+        };
+        Some((plan, state))
+    }
 
-        self.chain = acc
-            .path_idx
-            .iter()
-            .map(|&i| (tree.nodes[i].token, read.feats(row_off + i).to_vec()))
-            .collect();
-        self.bonus = acc.bonus;
-        self.stats.other_secs += sw.lap();
-
-        Ok(self.out.outcome())
+    fn restore_pending(&mut self, state: StateBuf) {
+        match &self.phase {
+            Phase::Draft(_) => self.draft.state = state,
+            Phase::VerifyPartial { .. } => self.partial.state = Some(state),
+            _ => self.target.state = state,
+        }
     }
 
     fn finish(self: Box<Self>) -> GenResult {

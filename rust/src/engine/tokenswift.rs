@@ -4,10 +4,14 @@
 //! techniques with little effect at our scale, as the paper itself notes
 //! in §4.2) are omitted; the Medusa-draft + full-verification structure
 //! is what Table 1 row 2 measures.
+//!
+//! The Medusa head projection is a one-shot host-side matmul and stays
+//! inline; the tree verification surfaces as a batchable kernel plan
+//! (DESIGN.md §12), so concurrent sessions' verifies fuse.
 
 use anyhow::{bail, Result};
 
-use crate::backend::{Backend, StateKind, StateSnapshot};
+use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
 use crate::config::Config;
 use crate::kvstore::KvStore;
 use crate::manifest::Consts;
@@ -19,6 +23,7 @@ use crate::tree::Tree;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
+use super::plan::{exec_single, Drive, KernelPlan};
 use super::session::TargetSession;
 use super::spec_full::{accept_round, tree_picks};
 use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
@@ -62,6 +67,13 @@ fn medusa_tree(bonus: u32, heads: &[f32], vocab: usize) -> Tree {
     tree
 }
 
+/// Where a TokenSwift step is between `drive()` calls.
+enum Phase {
+    Idle,
+    /// tree verification in flight
+    Verify { tree: Tree, flat_n: usize },
+}
+
 pub struct TokenSwiftSession<'rt> {
     be: &'rt dyn Backend,
     target: TargetSession<'rt>,
@@ -76,6 +88,9 @@ pub struct TokenSwiftSession<'rt> {
     d_model: usize,
     prompt_len: usize,
     temperature: f32,
+    phase: Phase,
+    pending: Option<KernelPlan>,
+    sw: Stopwatch,
 }
 
 impl Engine for TokenSwiftEngine {
@@ -125,6 +140,9 @@ impl Engine for TokenSwiftEngine {
             d_model: h,
             prompt_len: req.prompt.len(),
             temperature: req.temperature,
+            phase: Phase::Idle,
+            pending: None,
+            sw: Stopwatch::new(),
         }))
     }
 }
@@ -143,40 +161,80 @@ impl EngineSession for TokenSwiftSession<'_> {
     }
 
     fn step(&mut self) -> Result<StepOutcome> {
-        if self.out.done {
-            return Ok(self.out.outcome());
+        loop {
+            match self.drive()? {
+                Drive::Complete(o) => return Ok(o),
+                Drive::Pending => {
+                    let plan =
+                        self.pending.as_ref().expect("pending plan after Drive::Pending");
+                    exec_single(self.be, plan, &mut self.target.state)?;
+                }
+                Drive::Unsupported => {
+                    unreachable!("tokenswift sessions implement the protocol")
+                }
+            }
         }
-        let mut sw = Stopwatch::new();
-        let h = self.d_model;
+    }
 
-        // --- Medusa draft ----------------------------------------------
-        let heads = self.be.medusa(&self.target.size, &self.feat)?;
-        let tree = medusa_tree(self.bonus, &heads, self.vocab);
-        self.stats.draft_secs += sw.lap();
+    fn drive(&mut self) -> Result<Drive> {
+        loop {
+            let phase = std::mem::replace(&mut self.phase, Phase::Idle);
+            match phase {
+                Phase::Idle => {
+                    if self.out.done {
+                        return Ok(Drive::Complete(self.out.outcome()));
+                    }
+                    self.sw = Stopwatch::new();
 
-        // --- full verification ------------------------------------------
-        let flat = tree.flatten(self.consts.tree_t);
-        let root_pos = self.prompt_len + self.out.len() - 1;
-        let read = self.target.verify_tree(&flat, root_pos)?;
-        self.stats.verify_secs += sw.lap();
+                    // --- Medusa draft (inline host-side projection) -----
+                    let heads = self.be.medusa(&self.target.size, &self.feat)?;
+                    let tree = medusa_tree(self.bonus, &heads, self.vocab);
+                    self.stats.draft_secs += self.sw.lap();
 
-        let picks = tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
-        let acc = accept_round(&tree, &picks);
-        self.stats.verify_steps += 1;
-        self.stats.full_steps += 1;
+                    let flat = tree.flatten(self.consts.tree_t);
+                    let root_pos = self.prompt_len + self.out.len() - 1;
+                    let plan = self.target.plan_verify_tree(&flat, root_pos)?;
+                    self.pending = Some(plan);
+                    self.phase = Phase::Verify { tree, flat_n: flat.n };
+                    return Ok(Drive::Pending);
+                }
+                Phase::Verify { tree, flat_n } => {
+                    self.pending = None;
+                    let h = self.d_model;
+                    let read = self.target.finish_verify_tree(flat_n)?;
+                    self.stats.verify_secs += self.sw.lap();
 
-        let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
-        self.stats.accepted_total += kept;
+                    let picks =
+                        tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
+                    let acc = accept_round(&tree, &picks);
+                    self.stats.verify_steps += 1;
+                    self.stats.full_steps += 1;
 
-        let mut rows = vec![0usize];
-        rows.extend(&acc.path_idx);
-        self.target.cache.set_pending(rows, self.consts.prev_window())?;
+                    let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
+                    self.stats.accepted_total += kept;
 
-        self.feat = read.feats(acc.deepest)[2 * h..3 * h].to_vec();
-        self.bonus = acc.bonus;
-        self.stats.other_secs += sw.lap();
+                    let mut rows = vec![0usize];
+                    rows.extend(&acc.path_idx);
+                    self.target.cache.set_pending(rows, self.consts.prev_window())?;
 
-        Ok(self.out.outcome())
+                    self.feat = read.feats(acc.deepest)[2 * h..3 * h].to_vec();
+                    self.bonus = acc.bonus;
+                    self.stats.other_secs += self.sw.lap();
+
+                    return Ok(Drive::Complete(self.out.outcome()));
+                }
+            }
+        }
+    }
+
+    fn take_pending(&mut self) -> Option<(KernelPlan, StateBuf)> {
+        let plan = self.pending.take()?;
+        let state = std::mem::replace(&mut self.target.state, StateBuf::nil());
+        Some((plan, state))
+    }
+
+    fn restore_pending(&mut self, state: StateBuf) {
+        self.target.state = state;
     }
 
     fn finish(self: Box<Self>) -> GenResult {

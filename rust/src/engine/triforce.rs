@@ -8,10 +8,15 @@
 //! the hierarchical (two-stage) speculation is collapsed into one stage —
 //! the properties under test (independent draft, full verification,
 //! streaming draft cache) are preserved.
+//!
+//! Each step is a plan/apply machine (DESIGN.md §12): the γ tiny-LM
+//! draft steps and the chain verification surface as batchable kernel
+//! plans, so concurrent TriForce sessions fuse their tiny forwards and
+//! verifies.
 
 use anyhow::{bail, Result};
 
-use crate::backend::{Backend, StateKind, StateSnapshot};
+use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
 use crate::config::Config;
 use crate::kvstore::KvStore;
 use crate::manifest::Consts;
@@ -23,6 +28,7 @@ use crate::tree::{chain_mask, FlatTree};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
+use super::plan::{exec_single, Drive, KernelPlan, OpClass};
 use super::session::{TargetSession, TinySession};
 use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
 
@@ -52,7 +58,17 @@ fn chain_flat(tokens: &[u32], t_pad: usize) -> FlatTree {
     }
 }
 
+/// Where a TriForce step is between `drive()` calls.
+enum Phase {
+    Idle,
+    /// tiny-LM chain drafting: `g` draft steps consumed so far
+    Tiny { g: usize, chain: Vec<u32> },
+    /// chain verification in flight
+    Verify { chain: Vec<u32> },
+}
+
 pub struct TriForceSession<'rt> {
+    be: &'rt dyn Backend,
     target: TargetSession<'rt>,
     tiny: TinySession<'rt>,
     out: SessionOut,
@@ -63,6 +79,9 @@ pub struct TriForceSession<'rt> {
     gamma: usize,
     prompt_len: usize,
     temperature: f32,
+    phase: Phase,
+    pending: Option<KernelPlan>,
+    sw: Stopwatch,
 }
 
 impl Engine for TriForceEngine {
@@ -99,6 +118,7 @@ impl Engine for TriForceEngine {
         out.push_first(bonus);
 
         Ok(Box::new(TriForceSession {
+            be,
             target,
             tiny,
             out,
@@ -109,7 +129,27 @@ impl Engine for TriForceEngine {
             gamma,
             prompt_len: req.prompt.len(),
             temperature: req.temperature,
+            phase: Phase::Idle,
+            pending: None,
+            sw: Stopwatch::new(),
         }))
+    }
+}
+
+impl TriForceSession<'_> {
+    /// Which state buffer the pending plan mutates.
+    fn pending_state(&mut self, class: OpClass) -> &mut StateBuf {
+        match class {
+            OpClass::TinyForward => &mut self.tiny.state,
+            _ => &mut self.target.state,
+        }
+    }
+
+    /// Plan the verification of the drafted chain.
+    fn plan_verify(&mut self, chain: &[u32]) -> Result<KernelPlan> {
+        let flat = chain_flat(chain, self.consts.tree_t);
+        let root_pos = self.prompt_len + self.out.len() - 1;
+        self.target.plan_verify_tree(&flat, root_pos)
     }
 }
 
@@ -127,51 +167,112 @@ impl EngineSession for TriForceSession<'_> {
     }
 
     fn step(&mut self) -> Result<StepOutcome> {
-        if self.out.done {
-            return Ok(self.out.outcome());
+        loop {
+            match self.drive()? {
+                Drive::Complete(o) => return Ok(o),
+                Drive::Pending => {
+                    let plan = self.pending.take().expect("pending plan after Drive::Pending");
+                    let be = self.be;
+                    exec_single(be, &plan, self.pending_state(plan.class))?;
+                    self.pending = Some(plan);
+                }
+                Drive::Unsupported => {
+                    unreachable!("triforce sessions implement the protocol")
+                }
+            }
         }
-        let mut sw = Stopwatch::new();
-        let gamma = self.gamma;
+    }
 
-        // --- draft a γ-chain with the tiny LM --------------------------
-        let mut chain: Vec<u32> = vec![self.bonus];
-        let mut cur = self.bonus;
-        for g in 0..gamma {
-            let pos = self.prompt_len + self.out.len() - 1 + g;
-            let lg = self.tiny.step(cur, pos)?;
-            cur = pick_token(&lg, self.temperature, &mut self.rng);
-            chain.push(cur);
+    fn drive(&mut self) -> Result<Drive> {
+        loop {
+            let phase = std::mem::replace(&mut self.phase, Phase::Idle);
+            match phase {
+                Phase::Idle => {
+                    if self.out.done {
+                        return Ok(Drive::Complete(self.out.outcome()));
+                    }
+                    self.sw = Stopwatch::new();
+                    let chain = vec![self.bonus];
+                    if self.gamma == 0 {
+                        self.stats.draft_secs += self.sw.lap();
+                        let plan = self.plan_verify(&chain)?;
+                        self.pending = Some(plan);
+                        self.phase = Phase::Verify { chain };
+                        return Ok(Drive::Pending);
+                    }
+                    let pos = self.prompt_len + self.out.len() - 1;
+                    let plan = self.tiny.plan_step(self.bonus, pos);
+                    self.pending = Some(plan);
+                    self.phase = Phase::Tiny { g: 0, chain };
+                    return Ok(Drive::Pending);
+                }
+                Phase::Tiny { g, mut chain } => {
+                    self.pending = None;
+                    let lg = self.tiny.finish_step()?;
+                    let cur = pick_token(&lg, self.temperature, &mut self.rng);
+                    chain.push(cur);
+                    if g + 1 < self.gamma {
+                        let pos = self.prompt_len + self.out.len() - 1 + g + 1;
+                        let plan = self.tiny.plan_step(cur, pos);
+                        self.pending = Some(plan);
+                        self.phase = Phase::Tiny { g: g + 1, chain };
+                        return Ok(Drive::Pending);
+                    }
+                    self.stats.draft_secs += self.sw.lap();
+                    let plan = self.plan_verify(&chain)?;
+                    self.pending = Some(plan);
+                    self.phase = Phase::Verify { chain };
+                    return Ok(Drive::Pending);
+                }
+                Phase::Verify { chain } => {
+                    self.pending = None;
+                    let gamma = self.gamma;
+                    let read = self.target.finish_verify_tree(chain.len())?;
+                    self.stats.verify_secs += self.sw.lap();
+
+                    // greedy walk down the chain
+                    let mut accepted = 0usize;
+                    let mut next =
+                        pick_token(read.logits(0), self.temperature, &mut self.rng);
+                    while accepted < gamma && chain[accepted + 1] == next {
+                        accepted += 1;
+                        next = pick_token(
+                            read.logits(accepted),
+                            self.temperature,
+                            &mut self.rng,
+                        );
+                    }
+                    self.stats.verify_steps += 1;
+                    self.stats.full_steps += 1;
+
+                    let kept = self.out.push_round(&chain[1..=accepted], next);
+                    self.stats.accepted_total += kept;
+
+                    // rejected tiny-cache rows are reused next round
+                    self.tiny.rollback(gamma - accepted);
+
+                    let rows: Vec<usize> = (0..=accepted).collect();
+                    self.target.cache.set_pending(rows, self.consts.prev_window())?;
+                    self.bonus = next;
+                    self.stats.other_secs += self.sw.lap();
+
+                    return Ok(Drive::Complete(self.out.outcome()));
+                }
+            }
         }
-        self.stats.draft_secs += sw.lap();
+    }
 
-        // --- target verifies [bonus, d1..dγ] ---------------------------
-        let flat = chain_flat(&chain, self.consts.tree_t);
-        let root_pos = self.prompt_len + self.out.len() - 1;
-        let read = self.target.verify_tree(&flat, root_pos)?;
-        self.stats.verify_secs += sw.lap();
+    fn take_pending(&mut self) -> Option<(KernelPlan, StateBuf)> {
+        let plan = self.pending.take()?;
+        let state = std::mem::replace(self.pending_state(plan.class), StateBuf::nil());
+        Some((plan, state))
+    }
 
-        // greedy walk down the chain
-        let mut accepted = 0usize;
-        let mut next = pick_token(read.logits(0), self.temperature, &mut self.rng);
-        while accepted < gamma && chain[accepted + 1] == next {
-            accepted += 1;
-            next = pick_token(read.logits(accepted), self.temperature, &mut self.rng);
+    fn restore_pending(&mut self, state: StateBuf) {
+        match &self.phase {
+            Phase::Tiny { .. } => self.tiny.state = state,
+            _ => self.target.state = state,
         }
-        self.stats.verify_steps += 1;
-        self.stats.full_steps += 1;
-
-        let kept = self.out.push_round(&chain[1..=accepted], next);
-        self.stats.accepted_total += kept;
-
-        // rejected tiny-cache rows are reused next round
-        self.tiny.rollback(gamma - accepted);
-
-        let rows: Vec<usize> = (0..=accepted).collect();
-        self.target.cache.set_pending(rows, self.consts.prev_window())?;
-        self.bonus = next;
-        self.stats.other_secs += sw.lap();
-
-        Ok(self.out.outcome())
     }
 
     fn finish(self: Box<Self>) -> GenResult {

@@ -18,10 +18,14 @@
 //!                 # vs cold-prefill TTFT at the 1024 bucket, snapshot
 //!                 # export/import and swap round-trip costs; writes
 //!                 # BENCH_kvstore.json at the repo root
+//! specpv bench serve [--quick]     # cross-session batched decode:
+//!                 # sweeps batch 1/2/4/8 concurrent sessions, reports
+//!                 # aggregate tok/s + p95 step latency, writes
+//!                 # BENCH_serve.json; fails unless batch=4 beats batch=1
 //! specpv inspect  # backend / artifact catalog summary
 //! ```
 //! Common flags: `--artifacts DIR --size s|m|l --engine E --budget N
-//! --backend auto|pjrt|reference --set key=value`.
+//! --backend auto|pjrt|reference --threads N --set key=value`.
 //!
 //! The backend defaults to `auto`: the PJRT artifact player when
 //! `artifacts/manifest.json` exists, the pure-Rust reference backend
@@ -90,6 +94,9 @@ fn build_config(cli: &Cli) -> Result<Config> {
     }
     if let Some(n) = cli.opt_parse::<usize>("prefix-cache-bytes")? {
         cfg.prefix_cache_bytes = n;
+    }
+    if let Some(n) = cli.opt_parse::<usize>("threads")? {
+        cfg.threads = n;
     }
     if cli.has_flag("offload") {
         cfg.offload.enabled = true;
@@ -183,6 +190,12 @@ fn main() -> Result<()> {
                 // KV state manager bench: prefix-hit vs cold TTFT,
                 // snapshot export/import, swap round-trip
                 return specpv::bench::kvstore::run(&out, cli.has_flag("quick"));
+            }
+            if id == "serve" {
+                // cross-session batched decode: sweeps batch ∈ {1,2,4,8}
+                // concurrent sessions, writes BENCH_serve.json, fails
+                // unless batch=4 beats batch=1 aggregate tok/s
+                return specpv::bench::serve::run(&out, cli.has_flag("quick"), cfg.threads);
             }
             let be = backend::from_config(&cfg)?;
             harness::run_experiment(be.as_ref(), &cfg, &id, &out, cli.has_flag("quick"))?;

@@ -345,6 +345,15 @@ fn handle_item(
                     .set("swap_ins", reg.swap_ins as i64)
                     .set("prefix_hits", reg.prefix_hits as i64)
                     .set("prefix_misses", reg.prefix_misses as i64)
+                    .set("threads", reg.threads)
+                    .set("fused_groups", reg.batch_groups as i64)
+                    .set("batch_ops_fused", reg.batch_ops_fused as i64)
+                    .set("batch_ops_single", reg.batch_ops_single as i64)
+                    .set("fallback_steps", reg.fallback_steps as i64)
+                    .set("batch_mean_width", reg.batch_mean_width())
+                    .set("batch_max_width", reg.batch_width_max)
+                    .set("batch_tick_groups", reg.batch_tick_groups)
+                    .set("batched_frac", reg.batched_frac())
                     .set("ttft_p50_s", reg.ttft.p50())
                     .set("ttft_p99_s", reg.ttft.p99()),
             );

@@ -225,6 +225,17 @@ pub fn default_threads() -> usize {
     }
 }
 
+/// Effective pool width for a configured override (the `threads` config
+/// key / `--threads` flag, mirroring the `SPECPV_THREADS` env override):
+/// an explicit `n >= 1` wins, 0 falls back to [`default_threads`].
+pub fn resolve_threads(cfg_threads: usize) -> usize {
+    if cfg_threads >= 1 {
+        cfg_threads.min(64)
+    } else {
+        default_threads()
+    }
+}
+
 /// Process-wide shared pool (kernels are tiny at the reference geometry;
 /// one pool amortizes worker spawn across every backend instance).
 pub fn global() -> &'static Arc<Pool> {

@@ -1,0 +1,517 @@
+//! Batched ≡ sequential **byte parity** (DESIGN.md §12).
+//!
+//! The batched backend ops and the coordinator's cross-session fusion
+//! must be invisible in the output: executing a group of kernel ops as
+//! one fused invocation has to leave every state — and every token ever
+//! decoded from it — bit-identical to executing the ops one at a time,
+//! at any batch size and thread count. Pinned here:
+//!
+//!   * op-level parity for every batchable op class
+//!     (prefill/verify_full/verify_partial/draft_expand/tiny_forward)
+//!     over mixed per-session kv_lens, at 1 and 4 threads;
+//!   * generation-level parity: mixed-engine concurrent sessions over
+//!     the batching coordinator ≡ `generate_with` (single-session) ≡ the
+//!     same coordinator with batching disabled, including the event
+//!     stream (commit order) and the rotation-fairness shape;
+//!   * the occupancy metrics actually observe fusion.
+
+use specpv::backend::reference::ReferenceBackend;
+use specpv::backend::{
+    Backend, DraftExpandOp, DraftPrefillOp, PrefillOp, StateBuf, StateKind, TinyForwardOp,
+    VerifyOp,
+};
+use specpv::config::{BackendKind, Config, EngineKind, SpecPvConfig};
+use specpv::coordinator::{Coordinator, Event, RequestId};
+use specpv::engine::{self, GenRequest};
+use specpv::{corpus, tokenizer, tree};
+
+const SIZE: &str = "s";
+const BUCKET: usize = 512;
+
+fn base_cfg() -> Config {
+    Config {
+        backend: BackendKind::Reference,
+        specpv: SpecPvConfig { retrieval_budget: 64, ..SpecPvConfig::default() },
+        ..Config::default()
+    }
+}
+
+/// Bitwise state comparison through the snapshot ABI (flat state + lazy
+/// hidden rows).
+fn assert_states_eq(
+    be: &ReferenceBackend,
+    kind: StateKind,
+    size: &str,
+    bucket: usize,
+    a: &StateBuf,
+    b: &StateBuf,
+    what: &str,
+) {
+    let sa = be.export_state(kind, size, bucket, a).unwrap();
+    let sb = be.export_state(kind, size, bucket, b).unwrap();
+    assert_eq!(sa.data.len(), sb.data.len(), "{what}: state sizes diverged");
+    assert_eq!(sa.extra.len(), sb.extra.len(), "{what}: lazy-row sizes diverged");
+    assert!(
+        sa.data.iter().zip(&sb.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "{what}: state bytes diverged"
+    );
+    assert!(
+        sa.extra.iter().zip(&sb.extra).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "{what}: lazy hidden rows diverged"
+    );
+}
+
+/// A full state with `chunks` committed prefill chunks (distinct token
+/// content per `salt`).
+fn warmed_full(be: &ReferenceBackend, chunks: usize, salt: i32) -> StateBuf {
+    let c = be.consts().chunk;
+    let mut st = be.alloc_state(StateKind::Full, SIZE, BUCKET).unwrap();
+    for ci in 0..chunks {
+        let toks: Vec<i32> = (0..c).map(|i| 65 + ((salt as usize + ci * c + i) % 26) as i32).collect();
+        let pos: Vec<i32> = (0..c).map(|i| (ci * c + i) as i32).collect();
+        let mask = tree::chain_mask(c, c);
+        let op = PrefillOp {
+            size: SIZE,
+            bucket: BUCKET,
+            tokens: &toks,
+            pos: &pos,
+            mask: &mask,
+            kv_len: ci * c,
+        };
+        st = be.prefill(&op, st).unwrap();
+    }
+    st
+}
+
+/// Run `ops` batched on one state set and sequentially on a bit-identical
+/// clone set; assert every resulting state matches bitwise.
+fn verify_parity_case(threads: usize) {
+    let be = ReferenceBackend::with_threads(threads);
+    let consts = be.consts().clone();
+    let t = consts.tree_t;
+    let mask = tree::chain_mask(t, t);
+    let zero = [0i32; 8];
+    // four sessions at different committed lengths (1..=4 chunks)
+    let chunks = [1usize, 2, 3, 4];
+    let mut seq: Vec<StateBuf> = Vec::new();
+    let mut bat: Vec<StateBuf> = Vec::new();
+    for (si, &k) in chunks.iter().enumerate() {
+        let st = warmed_full(&be, k, si as i32);
+        let snap = be.export_state(StateKind::Full, SIZE, BUCKET, &st).unwrap();
+        seq.push(st);
+        bat.push(be.import_state(&snap).unwrap());
+    }
+    let toks: Vec<Vec<i32>> = chunks
+        .iter()
+        .map(|&k| (0..t as i32).map(|i| 65 + (i + k as i32) % 26).collect())
+        .collect();
+    let poss: Vec<Vec<i32>> = chunks
+        .iter()
+        .map(|&k| (0..t as i32).map(|i| (k * consts.chunk) as i32 + i).collect())
+        .collect();
+    let ops: Vec<VerifyOp> = (0..chunks.len())
+        .map(|si| VerifyOp {
+            size: SIZE,
+            bucket: BUCKET,
+            t,
+            tokens: &toks[si],
+            pos: &poss[si],
+            mask: &mask,
+            kv_len: chunks[si] * consts.chunk,
+            prev_idx: &zero,
+            n_prev: 0,
+        })
+        .collect();
+    for (si, op) in ops.iter().enumerate() {
+        let st = std::mem::replace(&mut seq[si], StateBuf::nil());
+        seq[si] = be.verify_full(op, st).unwrap();
+    }
+    {
+        let mut refs: Vec<&mut StateBuf> = bat.iter_mut().collect();
+        be.verify_full_batch(&ops, &mut refs).unwrap();
+    }
+    for si in 0..chunks.len() {
+        assert_states_eq(
+            &be,
+            StateKind::Full,
+            SIZE,
+            BUCKET,
+            &seq[si],
+            &bat[si],
+            &format!("verify_full b=4 session {si} ({threads} threads)"),
+        );
+    }
+}
+
+#[test]
+fn batched_verify_full_parity_mixed_kv_lens() {
+    verify_parity_case(1);
+    verify_parity_case(4);
+}
+
+#[test]
+fn batched_prefill_parity() {
+    for threads in [1usize, 4] {
+        let be = ReferenceBackend::with_threads(threads);
+        let c = be.consts().chunk;
+        let mask = tree::chain_mask(c, c);
+        let chunks = [1usize, 2, 3];
+        let mut seq = Vec::new();
+        let mut bat = Vec::new();
+        for (si, &k) in chunks.iter().enumerate() {
+            let st = warmed_full(&be, k, 7 + si as i32);
+            let snap = be.export_state(StateKind::Full, SIZE, BUCKET, &st).unwrap();
+            seq.push(st);
+            bat.push(be.import_state(&snap).unwrap());
+        }
+        let toks: Vec<Vec<i32>> = chunks
+            .iter()
+            .map(|&k| (0..c).map(|i| 65 + ((k + i) % 26) as i32).collect())
+            .collect();
+        let poss: Vec<Vec<i32>> = chunks
+            .iter()
+            .map(|&k| (0..c).map(|i| (k * c + i) as i32).collect())
+            .collect();
+        let ops: Vec<PrefillOp> = (0..chunks.len())
+            .map(|si| PrefillOp {
+                size: SIZE,
+                bucket: BUCKET,
+                tokens: &toks[si],
+                pos: &poss[si],
+                mask: &mask,
+                kv_len: chunks[si] * c,
+            })
+            .collect();
+        for (si, op) in ops.iter().enumerate() {
+            let st = std::mem::replace(&mut seq[si], StateBuf::nil());
+            seq[si] = be.prefill(op, st).unwrap();
+        }
+        let mut refs: Vec<&mut StateBuf> = bat.iter_mut().collect();
+        be.prefill_batch(&ops, &mut refs).unwrap();
+        drop(refs);
+        for si in 0..chunks.len() {
+            assert_states_eq(
+                &be,
+                StateKind::Full,
+                SIZE,
+                BUCKET,
+                &seq[si],
+                &bat[si],
+                &format!("prefill b=3 session {si} ({threads} threads)"),
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_verify_partial_parity() {
+    for threads in [1usize, 4] {
+        let be = ReferenceBackend::with_threads(threads);
+        let consts = be.consts().clone();
+        let t = consts.tree_t;
+        let p_bucket = 224usize;
+        let nsel = p_bucket / consts.block;
+        let n_layer = be.model(SIZE).unwrap().n_layer;
+        let mask = tree::chain_mask(t, t);
+        let zero = [0i32; 8];
+        // gather a partial core out of a 3-chunk full state per session
+        let mut seq = Vec::new();
+        let mut bat = Vec::new();
+        let core_len = 2 * consts.chunk; // whole blocks, < p_bucket
+        for si in 0..3usize {
+            let full = warmed_full(&be, 3, 11 + si as i32);
+            let ncore = core_len / consts.block;
+            let mut block_idx = Vec::new();
+            for _l in 0..n_layer {
+                for s in 0..nsel {
+                    block_idx.push(s.min(ncore - 1) as i32);
+                }
+            }
+            let gop = specpv::backend::GatherOp {
+                size: SIZE,
+                bucket: BUCKET,
+                p_bucket,
+                block_idx: &block_idx,
+            };
+            let pstate = be.refresh_gather(&gop, &full).unwrap();
+            let snap = be.export_state(StateKind::Partial, SIZE, p_bucket, &pstate).unwrap();
+            seq.push(pstate);
+            bat.push(be.import_state(&snap).unwrap());
+        }
+        let toks: Vec<Vec<i32>> =
+            (0..3).map(|si| (0..t as i32).map(|i| 66 + (i + si) % 24).collect()).collect();
+        let pos: Vec<i32> = (0..t as i32).map(|i| core_len as i32 + i).collect();
+        let ops: Vec<VerifyOp> = (0..3)
+            .map(|si| VerifyOp {
+                size: SIZE,
+                bucket: p_bucket,
+                t,
+                tokens: &toks[si],
+                pos: &pos,
+                mask: &mask,
+                kv_len: core_len,
+                prev_idx: &zero,
+                n_prev: 0,
+            })
+            .collect();
+        for (si, op) in ops.iter().enumerate() {
+            let st = std::mem::replace(&mut seq[si], StateBuf::nil());
+            seq[si] = be.verify_partial(op, st).unwrap();
+        }
+        let mut refs: Vec<&mut StateBuf> = bat.iter_mut().collect();
+        be.verify_partial_batch(&ops, &mut refs).unwrap();
+        drop(refs);
+        for si in 0..3 {
+            assert_states_eq(
+                &be,
+                StateKind::Partial,
+                SIZE,
+                p_bucket,
+                &seq[si],
+                &bat[si],
+                &format!("verify_partial b=3 session {si} ({threads} threads)"),
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_draft_expand_parity() {
+    for threads in [1usize, 4] {
+        let be = ReferenceBackend::with_threads(threads);
+        let consts = be.consts().clone();
+        let c = consts.chunk;
+        let (w, region) = (consts.draft_w, consts.draft_region);
+        let h = be.model(SIZE).unwrap().d_model;
+        let chunk_mask = tree::chain_mask(c, c);
+        let mut seq = Vec::new();
+        let mut bat = Vec::new();
+        for si in 0..3usize {
+            let full = warmed_full(&be, 1, 3 + si as i32);
+            let mut dst = be.alloc_state(StateKind::Draft, SIZE, BUCKET).unwrap();
+            let toks: Vec<i32> = (0..c).map(|i| 65 + ((si + i) % 26) as i32).collect();
+            let pos: Vec<i32> = (0..c).map(|i| i as i32).collect();
+            let op = DraftPrefillOp {
+                size: SIZE,
+                bucket: BUCKET,
+                tokens: &toks,
+                pos: &pos,
+                mask: &chunk_mask,
+                kv_len: 0,
+                write_pos: 0,
+            };
+            dst = be.draft_prefill(&op, &full, dst).unwrap();
+            let snap = be.export_state(StateKind::Draft, SIZE, BUCKET, &dst).unwrap();
+            seq.push(dst);
+            bat.push(be.import_state(&snap).unwrap());
+        }
+        let toks: Vec<Vec<i32>> =
+            (0..3).map(|si| (0..w as i32).map(|i| 66 + si + i).collect()).collect();
+        let feats: Vec<Vec<f32>> =
+            (0..3).map(|si| vec![0.03 * (si as f32 + 1.0); w * 3 * h]).collect();
+        let pos: Vec<i32> = (0..w).map(|i| (c + i) as i32).collect();
+        let mut dmask = vec![0f32; w * region];
+        for i in 0..w {
+            for j in 0..=i {
+                dmask[i * region + j] = 1.0;
+            }
+        }
+        let ops: Vec<DraftExpandOp> = (0..3)
+            .map(|si| DraftExpandOp {
+                size: SIZE,
+                bucket: BUCKET,
+                tokens: &toks[si],
+                feats: &feats[si],
+                pos: &pos,
+                mask: &dmask,
+                kv_len: c,
+                write_pos: c,
+            })
+            .collect();
+        for (si, op) in ops.iter().enumerate() {
+            let st = std::mem::replace(&mut seq[si], StateBuf::nil());
+            seq[si] = be.draft_expand(op, st).unwrap();
+        }
+        let mut refs: Vec<&mut StateBuf> = bat.iter_mut().collect();
+        be.draft_expand_batch(&ops, &mut refs).unwrap();
+        drop(refs);
+        for si in 0..3 {
+            assert_states_eq(
+                &be,
+                StateKind::Draft,
+                SIZE,
+                BUCKET,
+                &seq[si],
+                &bat[si],
+                &format!("draft_expand b=3 session {si} ({threads} threads)"),
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_tiny_forward_parity() {
+    for threads in [1usize, 4] {
+        let be = ReferenceBackend::with_threads(threads);
+        let consts = be.consts().clone();
+        let c = consts.chunk;
+        let tb = consts.tiny_bucket;
+        let chunk_mask = tree::chain_mask(c, c);
+        let mut seq = Vec::new();
+        let mut bat = Vec::new();
+        for si in 0..4usize {
+            let mut st = be.alloc_state(StateKind::Tiny, "tiny", tb).unwrap();
+            let toks: Vec<i32> = (0..c).map(|i| 65 + ((si + i) % 26) as i32).collect();
+            let pos: Vec<i32> = (0..c).map(|i| i as i32).collect();
+            let op = TinyForwardOp {
+                t: c,
+                tokens: &toks,
+                pos: &pos,
+                mask: &chunk_mask,
+                kv_len: 0,
+                write_pos: 0,
+                last_idx: c - 1,
+            };
+            st = be.tiny_forward(&op, st).unwrap();
+            let snap = be.export_state(StateKind::Tiny, "tiny", tb, &st).unwrap();
+            seq.push(st);
+            bat.push(be.import_state(&snap).unwrap());
+        }
+        let toks: Vec<Vec<i32>> = (0..4).map(|si| vec![70 + si as i32]).collect();
+        let ops: Vec<TinyForwardOp> = (0..4)
+            .map(|si| TinyForwardOp {
+                t: 1,
+                tokens: &toks[si],
+                pos: &[c as i32],
+                mask: &[1.0],
+                kv_len: c,
+                write_pos: c,
+                last_idx: 0,
+            })
+            .collect();
+        for (si, op) in ops.iter().enumerate() {
+            let st = std::mem::replace(&mut seq[si], StateBuf::nil());
+            seq[si] = be.tiny_forward(op, st).unwrap();
+        }
+        let mut refs: Vec<&mut StateBuf> = bat.iter_mut().collect();
+        be.tiny_forward_batch(&ops, &mut refs).unwrap();
+        drop(refs);
+        for si in 0..4 {
+            assert_states_eq(
+                &be,
+                StateKind::Tiny,
+                "tiny",
+                tb,
+                &seq[si],
+                &bat[si],
+                &format!("tiny_forward b=4 session {si} ({threads} threads)"),
+            );
+        }
+    }
+}
+
+/// Mixed-engine workload over the coordinator: every request's tokens
+/// must equal the single-session `generate_with` bytes, the sequential
+/// (batching-off) coordinator bytes, and the 1-thread backend bytes.
+#[test]
+fn coordinator_batched_generations_match_sequential_bytewise() {
+    let prompt = corpus::continuation_prompt(21, 150);
+    let toks = tokenizer::encode(&prompt);
+    // two spec_full sessions guarantee fusable draft + verify geometry;
+    // the rest exercise mixed-class grouping
+    let kinds = [
+        EngineKind::SpecFull,
+        EngineKind::SpecFull,
+        EngineKind::SpecPv,
+        EngineKind::Autoregressive,
+        EngineKind::TriForce,
+    ];
+    let cfg = Config { max_active: kinds.len(), ..base_cfg() };
+    let run_coord = |threads: usize, batching: bool| -> (Vec<Vec<u32>>, Vec<RequestId>, u64) {
+        let be = ReferenceBackend::with_threads(threads);
+        let mut coord = Coordinator::new(&be, cfg.clone());
+        coord.set_batching(batching);
+        let ids: Vec<RequestId> = kinds
+            .iter()
+            .map(|&k| coord.submit(GenRequest::greedy(toks.clone(), 16), Some(k)).unwrap())
+            .collect();
+        coord.run_all();
+        let outs = ids
+            .iter()
+            .map(|&id| coord.get(id).unwrap().result.as_ref().unwrap().tokens.clone())
+            .collect();
+        (outs, ids, coord.registry.batch_ops_fused)
+    };
+    let (batched4, _, fused) = run_coord(4, true);
+    let (batched1, _, _) = run_coord(1, true);
+    let (sequential, _, seq_fused) = run_coord(4, false);
+    assert!(fused > 0, "mixed spec sessions must fuse at least some ops");
+    assert_eq!(seq_fused, 0, "batching off must not fuse");
+    // single-session reference for every engine
+    let be = ReferenceBackend::new();
+    for (i, &kind) in kinds.iter().enumerate() {
+        let mut c = cfg.clone();
+        c.engine = kind;
+        let solo = engine::generate_with(&c, &be, &GenRequest::greedy(toks.clone(), 16))
+            .unwrap()
+            .tokens;
+        assert_eq!(batched4[i], solo, "{kind:?}: batched coordinator diverged from solo");
+        assert_eq!(batched4[i], batched1[i], "{kind:?}: thread count changed tokens");
+        assert_eq!(batched4[i], sequential[i], "{kind:?}: batching changed tokens");
+    }
+}
+
+/// Grouping must not reorder the scheduler-visible stream: with batching
+/// on, each tick still emits at most one Step per session, rotation
+/// windows stay fair, and the full event-id sequence equals the
+/// batching-off coordinator's.
+#[test]
+fn batched_tick_preserves_rotation_and_event_order() {
+    let prompt = corpus::continuation_prompt(5, 120);
+    let toks = tokenizer::encode(&prompt);
+    let kinds = [EngineKind::SpecFull, EngineKind::SpecFull, EngineKind::Autoregressive];
+    let cfg = Config { max_active: kinds.len(), ..base_cfg() };
+    let run_events = |batching: bool| -> Vec<Vec<RequestId>> {
+        let be = ReferenceBackend::new();
+        let mut coord = Coordinator::new(&be, cfg.clone());
+        coord.set_batching(batching);
+        for &k in &kinds {
+            coord.submit(GenRequest::greedy(toks.clone(), 10), Some(k)).unwrap();
+        }
+        let mut per_tick = Vec::new();
+        while !coord.idle() {
+            let step_ids: Vec<RequestId> = coord
+                .tick()
+                .into_iter()
+                .filter_map(|e| match e {
+                    Event::Step { id, .. } => Some(id),
+                    Event::Failed { id, error } => {
+                        panic!("request {id} failed: {error}")
+                    }
+                    _ => None,
+                })
+                .collect();
+            per_tick.push(step_ids);
+        }
+        per_tick
+    };
+    let batched = run_events(true);
+    let sequential = run_events(false);
+    assert_eq!(batched, sequential, "batching reordered the event stream");
+    for (t, ids) in batched.iter().enumerate() {
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len(), "tick {t}: a session stepped twice");
+    }
+    // no session starves: every session appears in every tick until it
+    // finishes (monotone shrinking id sets)
+    for w in batched.windows(2) {
+        for id in &w[1] {
+            assert!(
+                w[0].contains(id),
+                "session {id} skipped a tick then reappeared: {batched:?}"
+            );
+        }
+    }
+}

@@ -357,6 +357,61 @@ fn swapped_request_can_be_cancelled_with_partial_output() {
     assert_eq!(c.registry.kv_resident_bytes, 0);
 }
 
+/// Batched-execution fallback (DESIGN.md §12): scripted sessions do not
+/// implement the plan/apply protocol, so the wave loop must degrade to
+/// exactly the old sequential rotation — commit order (per-tick Step
+/// emission order) follows the rotation cursor, no session ever steps
+/// twice in a tick or starves, and the occupancy metrics report the
+/// sequential fallback rather than phantom fused groups.
+#[test]
+fn grouping_never_reorders_commit_order_or_starves_scripted_sessions() {
+    let mut c = coord(3, 1);
+    // mixed lengths so sessions retire at different ticks
+    let ids = [submit(&mut c, 4), submit(&mut c, 8), submit(&mut c, 6)];
+    let mut per_tick: Vec<Vec<RequestId>> = Vec::new();
+    while !c.idle() {
+        per_tick.push(step_ids(&c.tick()));
+    }
+    // per tick: unique sessions, and the emission order is a rotation of
+    // the currently-active id set (never an arbitrary reorder)
+    for (t, ids_t) in per_tick.iter().enumerate() {
+        let mut sorted = ids_t.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids_t.len(), "tick {t}: a session stepped twice");
+        if ids_t.len() > 1 {
+            let min_pos = ids_t.iter().position(|i| *i == *ids_t.iter().min().unwrap());
+            let rotated: Vec<RequestId> = (0..ids_t.len())
+                .map(|k| ids_t[(min_pos.unwrap() + k) % ids_t.len()])
+                .collect();
+            let mut expect = rotated.clone();
+            expect.sort_unstable();
+            assert_eq!(
+                rotated,
+                expect,
+                "tick {t}: emission order {ids_t:?} is not a rotation of the active set"
+            );
+        }
+    }
+    // no starvation: every session steps every tick until it finishes
+    for w in per_tick.windows(2) {
+        for id in &w[1] {
+            assert!(w[0].contains(id), "session {id} skipped a tick: {per_tick:?}");
+        }
+    }
+    for id in ids {
+        assert_eq!(c.get(id).unwrap().state, RequestState::Done);
+    }
+    // occupancy metrics: scripted sessions are sequential-fallback steps
+    assert_eq!(c.registry.batch_groups, 0, "scripted sessions cannot fuse");
+    assert!(c.registry.fallback_steps > 0, "fallback steps must be counted");
+    assert_eq!(c.registry.batch_ops_single, 0, "no protocol ops ran");
+    assert_eq!(c.registry.batched_frac(), 0.0);
+    let s = c.registry.summary();
+    assert!(s.contains("fused_groups=0"), "{s}");
+    assert!(s.contains("threads="), "{s}");
+}
+
 /// Byte-level check that the scripted engine respects max_new exactly
 /// (the SessionOut clipping that also fixes the tau accounting).
 #[test]
