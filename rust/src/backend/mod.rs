@@ -336,20 +336,96 @@ pub trait Backend {
         Ok(self.state_layout(kind, size, bucket)?.total * 4)
     }
 
-    /// Host snapshot of a state buffer (device→host readback on pjrt; a
-    /// host copy on the reference backend). The snapshot is exact: a
-    /// state rebuilt by [`Backend::import_state`] continues generation
-    /// byte-identically.
+    // --- page-granular state ABI (DESIGN.md §13) ------------------------
+    //
+    // A state's host image is the flat f32 sequence `data ++ extra`
+    // (`data` = the DESIGN.md §4 flat state, `extra` = backend-private
+    // rows such as the reference backend's lazy-logits hiddens). The
+    // paged KV tier moves that image page-by-page: `export_pages` /
+    // `import_pages` are the required primitives, and the whole-state
+    // snapshot ABI below is the provided wrapper expressed as the full
+    // page range.
+
+    /// f32 element counts `(data_len, extra_len)` of this state's host
+    /// image — the geometry `export_pages`/`import_pages` page over.
+    fn state_image_len(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        state: &StateBuf,
+    ) -> Result<(usize, usize)>;
+
+    /// Export the pages `pages` (page ids at `page_elems` f32 per page
+    /// over the host image) of a state. Every page is `page_elems` long
+    /// except the final one, which carries the image tail. Exported
+    /// content is exact: a state rebuilt from these pages continues
+    /// generation byte-identically.
+    fn export_pages(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        state: &StateBuf,
+        pages: std::ops::Range<usize>,
+        page_elems: usize,
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Rebuild a state buffer by streaming pages: the backend calls
+    /// `read_page(page_id, &mut scratch)` for each page of the image in
+    /// order, so the caller materializes one page at a time (from the
+    /// paged pool, a snapshot, or disk) instead of one whole slab.
+    fn import_pages(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        data_len: usize,
+        extra_len: usize,
+        page_elems: usize,
+        read_page: &mut dyn FnMut(usize, &mut Vec<f32>) -> Result<()>,
+    ) -> Result<StateBuf>;
+
+    /// Whole-state host snapshot — the page ABI expressed as the full
+    /// range (one page spanning the image).
     fn export_state(
         &self,
         kind: StateKind,
         size: &str,
         bucket: usize,
         state: &StateBuf,
-    ) -> Result<StateSnapshot>;
+    ) -> Result<StateSnapshot> {
+        let (data_len, extra_len) = self.state_image_len(kind, size, bucket, state)?;
+        let total = data_len + extra_len;
+        let pe = total.max(1);
+        let mut pages =
+            self.export_pages(kind, size, bucket, state, 0..page_count(total, pe), pe)?;
+        let mut data = pages.pop().unwrap_or_default();
+        let extra = data.split_off(data_len);
+        Ok(StateSnapshot { kind, size: size.to_string(), bucket, data, extra })
+    }
 
-    /// Rebuild a state buffer from a snapshot produced by this backend.
-    fn import_state(&self, snap: &StateSnapshot) -> Result<StateBuf>;
+    /// Rebuild a state buffer from a whole-state snapshot (the full-range
+    /// page import).
+    fn import_state(&self, snap: &StateSnapshot) -> Result<StateBuf> {
+        let (data_len, extra_len) = (snap.data.len(), snap.extra.len());
+        let pe = (data_len + extra_len).max(1);
+        self.import_pages(
+            snap.kind,
+            &snap.size,
+            snap.bucket,
+            data_len,
+            extra_len,
+            pe,
+            &mut |page, buf| {
+                debug_assert_eq!(page, 0, "whole-state import is a single page");
+                buf.clear();
+                buf.extend_from_slice(&snap.data);
+                buf.extend_from_slice(&snap.extra);
+                Ok(())
+            },
+        )
+    }
 
     // --- kernel ops -----------------------------------------------------
 
@@ -492,6 +568,30 @@ pub(crate) fn check_batch(ops: usize, states: usize) -> Result<()> {
     Ok(())
 }
 
+/// Pages an image of `total` f32 elements occupies at `page_elems` per
+/// page (0 for an empty image).
+pub fn page_count(total: usize, page_elems: usize) -> usize {
+    if total == 0 {
+        0
+    } else {
+        (total + page_elems - 1) / page_elems
+    }
+}
+
+/// Copy the image element range `[start, end)` of `data ++ extra` into
+/// `out` (cleared first). Shared by backends' `export_pages` and the
+/// pool's image pager; handles ranges straddling the data/extra seam.
+pub fn copy_image_range(data: &[f32], extra: &[f32], start: usize, end: usize, out: &mut Vec<f32>) {
+    out.clear();
+    let d = data.len();
+    if start < d {
+        out.extend_from_slice(&data[start..end.min(d)]);
+    }
+    if end > d {
+        out.extend_from_slice(&extra[start.max(d) - d..end - d]);
+    }
+}
+
 /// Smallest bucket in `buckets` (ascending or not) holding `need` tokens.
 pub fn pick_bucket(buckets: &[usize], need: usize, what: &str, size: &str) -> Result<usize> {
     let mut bs = buckets.to_vec();
@@ -545,6 +645,23 @@ mod tests {
         assert_eq!(v, vec![1.0, 2.0]);
         let wrong = StateBuf::new(3usize);
         assert!(wrong.downcast::<Vec<f32>>().is_err());
+    }
+
+    #[test]
+    fn page_math() {
+        assert_eq!(page_count(0, 4), 0);
+        assert_eq!(page_count(1, 4), 1);
+        assert_eq!(page_count(8, 4), 2);
+        assert_eq!(page_count(9, 4), 3);
+        let data = [1.0f32, 2.0, 3.0];
+        let extra = [4.0f32, 5.0];
+        let mut out = Vec::new();
+        copy_image_range(&data, &extra, 0, 3, &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        copy_image_range(&data, &extra, 2, 5, &mut out); // straddles the seam
+        assert_eq!(out, [3.0, 4.0, 5.0]);
+        copy_image_range(&data, &extra, 3, 5, &mut out);
+        assert_eq!(out, [4.0, 5.0]);
     }
 
     #[test]

@@ -138,15 +138,31 @@ impl super::Backend for PjrtBackend {
         Ok(StateBuf::new(self.rt.zero_state(layout.total)?))
     }
 
-    fn export_state(
+    fn state_image_len(
         &self,
         kind: StateKind,
         size: &str,
         bucket: usize,
         state: &StateBuf,
-    ) -> Result<super::StateSnapshot> {
-        // device→host readback over the existing flat-state ABI: the
-        // threaded buffer IS the whole state, so one download suffices
+    ) -> Result<(usize, usize)> {
+        // pjrt states are one flat device buffer; there is no
+        // backend-private extra section
+        state.downcast_ref::<PjRtBuffer>()?;
+        Ok((self.state_layout(kind, size, bucket)?.total, 0))
+    }
+
+    fn export_pages(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        state: &StateBuf,
+        pages: std::ops::Range<usize>,
+        page_elems: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        // device→host readback over the flat-state ABI: PJRT exposes no
+        // sub-buffer reads, so one download serves the whole requested
+        // range (callers batch page ranges to amortize this)
         let buf = state.downcast_ref::<PjRtBuffer>()?;
         let data = self.rt.download_f32(buf)?;
         let layout = self.state_layout(kind, size, bucket)?;
@@ -158,31 +174,51 @@ impl super::Backend for PjrtBackend {
                 layout.total
             );
         }
-        Ok(super::StateSnapshot {
-            kind,
-            size: size.to_string(),
-            bucket,
-            data,
-            extra: Vec::new(),
-        })
+        let n = super::page_count(data.len(), page_elems);
+        if pages.end > n {
+            bail!("export_pages: range {pages:?} exceeds {n} pages of {} elems", data.len());
+        }
+        Ok(pages
+            .map(|p| {
+                let start = p * page_elems;
+                data[start..(start + page_elems).min(data.len())].to_vec()
+            })
+            .collect())
     }
 
-    fn import_state(&self, snap: &super::StateSnapshot) -> Result<StateBuf> {
-        if !snap.extra.is_empty() {
-            bail!("pjrt snapshots carry no extra rows (got {})", snap.extra.len());
+    fn import_pages(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        data_len: usize,
+        extra_len: usize,
+        page_elems: usize,
+        read_page: &mut dyn FnMut(usize, &mut Vec<f32>) -> Result<()>,
+    ) -> Result<StateBuf> {
+        if extra_len != 0 {
+            bail!("pjrt states carry no extra rows (got {extra_len})");
         }
-        let layout = self.state_layout(snap.kind, &snap.size, snap.bucket)?;
-        if snap.data.len() != layout.total {
+        let layout = self.state_layout(kind, size, bucket)?;
+        if data_len != layout.total {
             bail!(
-                "import: snapshot holds {} f32, {:?} {} b{} layout wants {}",
-                snap.data.len(),
-                snap.kind,
-                snap.size,
-                snap.bucket,
+                "import: image holds {data_len} f32, {kind:?} {size} b{bucket} \
+                 layout wants {}",
                 layout.total
             );
         }
-        Ok(StateBuf::new(self.rt.upload_f32(&snap.data, &[snap.data.len()])?))
+        // assemble the flat image host-side, then one upload
+        let mut data = Vec::with_capacity(data_len);
+        let mut scratch = Vec::new();
+        for p in 0..super::page_count(data_len, page_elems) {
+            read_page(p, &mut scratch)?;
+            let want = page_elems.min(data_len - p * page_elems);
+            if scratch.len() != want {
+                bail!("import: page {p} holds {} f32, want {want}", scratch.len());
+            }
+            data.extend_from_slice(&scratch);
+        }
+        Ok(StateBuf::new(self.rt.upload_f32(&data, &[data.len()])?))
     }
 
     fn prefill(&self, op: &PrefillOp, state: StateBuf) -> Result<StateBuf> {

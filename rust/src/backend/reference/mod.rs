@@ -673,13 +673,13 @@ impl super::Backend for ReferenceBackend {
         Ok(StateBuf::new(HostState::zeroed(lay.total)))
     }
 
-    fn export_state(
+    fn state_image_len(
         &self,
         kind: StateKind,
         size: &str,
         bucket: usize,
         state: &StateBuf,
-    ) -> Result<super::StateSnapshot> {
+    ) -> Result<(usize, usize)> {
         let lay = self.state_layout(kind, size, bucket)?;
         let hs = state.downcast_ref::<HostState>()?;
         if hs.data.len() != lay.total {
@@ -690,35 +690,86 @@ impl super::Backend for ReferenceBackend {
                 lay.total
             );
         }
-        // the lazy hidden rows travel with the snapshot, so a restored
-        // state materializes the exact same logits bytes on read
-        self.counters.borrow_mut().download_bytes += ((hs.data.len() + hs.hidden.len()) * 4) as u64;
-        Ok(super::StateSnapshot {
-            kind,
-            size: size.to_string(),
-            bucket,
-            data: hs.data.clone(),
-            extra: hs.hidden.clone(),
-        })
+        // the lazy hidden rows travel as the image's extra section, so a
+        // restored state materializes the exact same logits bytes on read
+        Ok((hs.data.len(), hs.hidden.len()))
     }
 
-    fn import_state(&self, snap: &super::StateSnapshot) -> Result<StateBuf> {
-        let lay = self.state_layout(snap.kind, &snap.size, snap.bucket)?;
-        if snap.data.len() != lay.total {
+    fn export_pages(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        state: &StateBuf,
+        pages: std::ops::Range<usize>,
+        page_elems: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (data_len, extra_len) = self.state_image_len(kind, size, bucket, state)?;
+        let hs = state.downcast_ref::<HostState>()?;
+        let total = data_len + extra_len;
+        let n = super::page_count(total, page_elems);
+        if pages.end > n {
+            bail!("export_pages: range {pages:?} exceeds {n} pages of {total} elems");
+        }
+        // host state: pages slice straight out of data/hidden, so a
+        // partial export genuinely moves only the requested bytes
+        let mut out = Vec::with_capacity(pages.len());
+        let mut moved = 0usize;
+        for p in pages {
+            let mut page = Vec::new();
+            let start = p * page_elems;
+            super::copy_image_range(
+                &hs.data,
+                &hs.hidden,
+                start,
+                (start + page_elems).min(total),
+                &mut page,
+            );
+            moved += page.len();
+            out.push(page);
+        }
+        self.counters.borrow_mut().download_bytes += (moved * 4) as u64;
+        Ok(out)
+    }
+
+    fn import_pages(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        data_len: usize,
+        extra_len: usize,
+        page_elems: usize,
+        read_page: &mut dyn FnMut(usize, &mut Vec<f32>) -> Result<()>,
+    ) -> Result<StateBuf> {
+        let lay = self.state_layout(kind, size, bucket)?;
+        if data_len != lay.total {
             bail!(
-                "import: snapshot length {} != {:?} {} b{} layout total {}",
-                snap.data.len(),
-                snap.kind,
-                snap.size,
-                snap.bucket,
+                "import: image data length {data_len} != {kind:?} {size} b{bucket} \
+                 layout total {}",
                 lay.total
             );
         }
-        self.counters.borrow_mut().upload_bytes += snap.bytes() as u64;
-        Ok(StateBuf::new(HostState {
-            data: snap.data.clone(),
-            hidden: snap.extra.clone(),
-        }))
+        let total = data_len + extra_len;
+        let mut data = Vec::with_capacity(data_len);
+        let mut hidden = Vec::with_capacity(extra_len);
+        let mut scratch = Vec::new();
+        for p in 0..super::page_count(total, page_elems) {
+            read_page(p, &mut scratch)?;
+            let want = page_elems.min(total - p * page_elems);
+            if scratch.len() != want {
+                bail!("import: page {p} holds {} f32, want {want}", scratch.len());
+            }
+            for (j, &x) in scratch.iter().enumerate() {
+                if p * page_elems + j < data_len {
+                    data.push(x);
+                } else {
+                    hidden.push(x);
+                }
+            }
+        }
+        self.counters.borrow_mut().upload_bytes += (total * 4) as u64;
+        Ok(StateBuf::new(HostState { data, hidden }))
     }
 
     fn prefill(&self, op: &PrefillOp, state: StateBuf) -> Result<StateBuf> {

@@ -3,17 +3,30 @@
 //!
 //! * **prefix-hit TTFT vs cold-prefill TTFT** at the 1024-token bucket:
 //!   the same long prompt started cold (every chunk prefilled) and warm
-//!   (restored from the prompt-prefix snapshot cache, only the tail
-//!   chunk prefilled). The run fails if the hit path is not strictly
-//!   faster — that speedup is the subsystem's reason to exist.
-//! * **snapshot export/import** cost of a full 1024-bucket state (the
-//!   unit of both prefix caching and swapping).
+//!   (cached prefix pages mapped into the session, only the tail chunk
+//!   prefilled). The run fails if the hit path is not strictly faster,
+//!   or if a hit materializes any new page — a prefix hit must be a
+//!   refcount bump, not a copy.
+//! * **state movement costs**: flat snapshot export/import of a full
+//!   1024-bucket state vs paged park/unpark through the block pool. The
+//!   run fails if the paged restore falls behind the flat memcpy import
+//!   by more than the noise headroom — i.e. the paged prefix-hit TTFT
+//!   must not regress vs the old snapshot-copy path.
 //! * **swap round-trip** cost of a live spec_pv session mid-generation
 //!   (suspend → resume), plus a byte-identity check against an
 //!   undisturbed run.
+//! * **session density**: N spec_pv sessions over one shared long
+//!   prefix with distinct tails, all suspended into the pool.
+//!   Zero-page + content dedup must make the paged footprint strictly
+//!   smaller than the flat-slab sum (`Σ state_bytes`), reported as
+//!   sessions-per-GiB for flat / paged / int8-demoted tiers. Resuming
+//!   every session must reproduce the undisturbed outputs byte-for-byte
+//!   (`kv_quant = none` is exact by contract; int8 is reported, not
+//!   identity-checked).
 //!
-//! Emits `results/kvstore_{ttft,costs}.{md,json}` and a combined
-//! `BENCH_kvstore.json` at the current directory (the repo root in CI).
+//! Emits `results/kvstore_{ttft,costs,density}.{md,json}` and a
+//! combined `BENCH_kvstore.json` at the current directory (the repo
+//! root in CI).
 
 use std::path::Path;
 use std::time::Instant;
@@ -22,10 +35,10 @@ use anyhow::{bail, Result};
 
 use crate::backend::reference::ReferenceBackend;
 use crate::backend::Backend;
-use crate::config::{BackendKind, Config, EngineKind, SpecPvConfig};
+use crate::config::{BackendKind, Config, EngineKind, KvQuant, SpecPvConfig};
 use crate::engine::{self, GenRequest};
 use crate::json::Json;
-use crate::kvstore::KvStore;
+use crate::kvstore::{KvCtx, KvPool, KvStore, PoolStats, DEFAULT_PAGE_BYTES};
 use crate::offload::OffloadSim;
 use crate::util::stats::Samples;
 use crate::{corpus, tokenizer};
@@ -39,6 +52,11 @@ const OUTPUT_FILE: &str = "BENCH_kvstore.json";
 const PROMPT_TOKENS: usize = 850;
 const MAX_NEW: usize = 16;
 
+/// Headroom for the paged-restore vs flat-import gate: the paged path
+/// re-assembles the image from refcounted pages, which must stay within
+/// measurement noise of one flat memcpy.
+const PAGED_RESTORE_SLACK: f64 = 1.5;
+
 fn prompt_req(be: &dyn Backend) -> (GenRequest, usize) {
     let text = corpus::continuation_prompt(1, 4 * PROMPT_TOKENS);
     let mut toks = tokenizer::encode(&text);
@@ -51,12 +69,13 @@ fn prompt_req(be: &dyn Backend) -> (GenRequest, usize) {
 }
 
 /// Cold vs prefix-hit time-to-first-token (engine start = prefill + the
-/// first pick, i.e. the TTFT the coordinator reports).
+/// first pick, i.e. the TTFT the coordinator reports). Also returns the
+/// number of pages materialized across all hit runs — must be zero.
 fn bench_ttft(
     be: &ReferenceBackend,
     warmup: usize,
     iters: usize,
-) -> Result<(Samples, Samples, usize, KvStore)> {
+) -> Result<(Samples, Samples, usize, KvStore, u64)> {
     let cfg = Config {
         backend: BackendKind::Reference,
         engine: EngineKind::Autoregressive,
@@ -64,29 +83,34 @@ fn bench_ttft(
     };
     let (req, bucket) = prompt_req(be);
 
+    let off = KvCtx::disabled();
     let cold = measure(warmup, iters, || {
-        let session = engine::build(&cfg).start(be, &req, None)?;
+        let session = engine::build(&cfg).start(be, &req, &off)?;
         drop(session);
         Ok(())
     })?;
 
     let store = KvStore::new(64 << 20);
-    // prime: one miss inserts the boundary snapshot
-    drop(engine::build(&cfg).start(be, &req, Some(&store))?);
+    let kv = KvCtx::with_prefix(store.clone());
+    // prime: one miss inserts the boundary block table
+    drop(engine::build(&cfg).start(be, &req, &kv)?);
+    let allocs_before = store.pool().stats().page_allocs;
     let warm = measure(warmup, iters, || {
-        let session = engine::build(&cfg).start(be, &req, Some(&store))?;
+        let session = engine::build(&cfg).start(be, &req, &kv)?;
         drop(session);
         Ok(())
     })?;
-    Ok((cold, warm, bucket, store))
+    let hit_new_pages = store.pool().stats().page_allocs - allocs_before;
+    Ok((cold, warm, bucket, store, hit_new_pages))
 }
 
-/// Export/import of a full state at the bench bucket.
+/// State movement at the bench bucket: flat snapshot export/import vs
+/// paged park/unpark through the block pool.
 fn bench_snapshot(
     be: &ReferenceBackend,
     warmup: usize,
     iters: usize,
-) -> Result<(Samples, Samples, usize)> {
+) -> Result<(Samples, Samples, Samples, Samples, usize)> {
     let (req, _bucket) = prompt_req(be);
     let mut target = crate::engine::session::TargetSession::new(
         be,
@@ -94,7 +118,7 @@ fn bench_snapshot(
         crate::model::bucket_need(req.prompt.len(), req.max_new, be.consts()),
         OffloadSim::new(Default::default()),
     )?;
-    target.prefill(&req.prompt, None, None)?;
+    target.prefill(&req.prompt, None, &KvCtx::disabled())?;
     let mut bytes = 0usize;
     let export = measure(warmup, iters, || {
         let snap = target.export()?;
@@ -106,7 +130,20 @@ fn bench_snapshot(
         target.restore(&snap)?;
         Ok(())
     })?;
-    Ok((export, import, bytes))
+
+    let pool = KvPool::new(0);
+    let park = measure(warmup, iters, || {
+        let ps = target.park(&pool)?;
+        pool.free_state(&ps);
+        Ok(())
+    })?;
+    let ps = target.park(&pool)?;
+    let unpark = measure(warmup, iters, || {
+        target.restore_paged(&pool, &ps)?;
+        Ok(())
+    })?;
+    pool.free_state(&ps);
+    Ok((export, import, park, unpark, bytes))
 }
 
 /// Swap round-trip (suspend → resume) on a live spec_pv session, with a
@@ -125,7 +162,7 @@ fn bench_swap(be: &ReferenceBackend, iters: usize) -> Result<(Samples, Samples, 
 
     let baseline = engine::generate_with(&cfg, be, &req)?;
 
-    let mut session = engine::build(&cfg).start(be, &req, None)?;
+    let mut session = engine::build(&cfg).start(be, &req, &KvCtx::disabled())?;
     session.step()?;
     let state_bytes = session.state_bytes();
     let mut out_s = Samples::default();
@@ -156,13 +193,118 @@ fn bench_swap(be: &ReferenceBackend, iters: usize) -> Result<(Samples, Samples, 
     Ok((out_s, in_s, state_bytes))
 }
 
+/// Session-density measurement: N suspended spec_pv sessions over one
+/// shared long prefix with distinct tails.
+struct Density {
+    n: usize,
+    /// flat-slab footprint: Σ state_bytes of the live sessions
+    flat_bytes: usize,
+    /// pool RAM after suspending all sessions (f32 pages, dedup/CoW)
+    paged_bytes: usize,
+    /// pool RAM with `kv_quant = int8` cold demotion on top
+    int8_bytes: usize,
+    /// pool gauges at peak occupancy of the f32 run
+    pages: PoolStats,
+}
+
+fn bench_density(be: &ReferenceBackend, quick: bool) -> Result<Density> {
+    let cfg = Config {
+        backend: BackendKind::Reference,
+        engine: EngineKind::SpecPv,
+        specpv: SpecPvConfig { retrieval_budget: 64, ..SpecPvConfig::default() },
+        ..Config::default()
+    };
+    let n = if quick { 4 } else { 6 };
+    let text = corpus::continuation_prompt(3, 2400);
+    let mut prefix_toks = tokenizer::encode(&text);
+    prefix_toks.truncate(520);
+    let reqs: Vec<GenRequest> = (0..n)
+        .map(|i| {
+            let mut toks = prefix_toks.clone();
+            toks.extend(tokenizer::encode(&format!(" tail variant {i} ends here.")));
+            GenRequest::greedy(toks, 12)
+        })
+        .collect();
+
+    // undisturbed outputs for the identity check
+    let baselines: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|r| engine::generate_with(&cfg, be, r).map(|g| g.tokens))
+        .collect::<Result<_>>()?;
+
+    // --- f32 pool: exact tier ------------------------------------------
+    let pool = KvPool::new(0);
+    let kv = KvCtx::with_pool(pool.clone());
+    let mut sessions = Vec::new();
+    let mut flat_bytes = 0usize;
+    for req in &reqs {
+        let mut s = engine::build(&cfg).start(be, req, &kv)?;
+        s.step()?;
+        flat_bytes += s.state_bytes();
+        sessions.push(s);
+    }
+    let mut tables = Vec::new();
+    for s in &mut sessions {
+        tables.push(s.suspend()?);
+    }
+    let pages = pool.stats();
+    let paged_bytes = pages.ram_bytes;
+
+    // resume everything and prove the parked tier is lossless
+    for (s, t) in sessions.iter_mut().zip(tables) {
+        s.resume(t)?;
+    }
+    for (i, mut s) in sessions.into_iter().enumerate() {
+        while !s.is_finished() {
+            s.step()?;
+        }
+        let got = s.finish().tokens;
+        if got != baselines[i] {
+            bail!(
+                "density session {i}: suspend/resume changed the output \
+                 ({} vs {} tokens)",
+                got.len(),
+                baselines[i].len()
+            );
+        }
+    }
+
+    // --- int8 pool: cold demotion on top -------------------------------
+    let pool8 = KvPool::with_opts(0, DEFAULT_PAGE_BYTES, None, KvQuant::Int8);
+    let kv8 = KvCtx::with_pool(pool8.clone());
+    let mut kept = Vec::new();
+    for req in &reqs {
+        let mut s = engine::build(&cfg).start(be, req, &kv8)?;
+        s.step()?;
+        let t = s.suspend()?;
+        pool8.park_cold(&t)?;
+        kept.push(t);
+    }
+    let int8_bytes = pool8.stats().ram_bytes;
+    for t in &kept {
+        for ps in t {
+            pool8.free_state(ps);
+        }
+    }
+
+    Ok(Density { n, flat_bytes, paged_bytes, int8_bytes, pages })
+}
+
+fn per_gib(n: usize, bytes: usize) -> f64 {
+    if bytes == 0 {
+        0.0
+    } else {
+        n as f64 * (1u64 << 30) as f64 / bytes as f64
+    }
+}
+
 /// Drive the kvstore bench; see the module docs for outputs.
 pub fn run(out_dir: &Path, quick: bool) -> Result<()> {
     let (warmup, iters, swap_iters) = if quick { (1, 3, 4) } else { (2, 8, 10) };
     let be = ReferenceBackend::new();
     eprintln!("[bench kvstore] {}", be.describe());
 
-    let (cold, warm, bucket, store) = bench_ttft(&be, warmup, iters)?;
+    let (cold, warm, bucket, store, hit_new_pages) = bench_ttft(&be, warmup, iters)?;
     let speedup = if warm.mean() > 0.0 { cold.mean() / warm.mean() } else { 0.0 };
     let ps = store.stats();
     let mut ttft_table = Table::new(
@@ -192,24 +334,29 @@ pub fn run(out_dir: &Path, quick: bool) -> Result<()> {
     ttft_table.emit(out_dir, "kvstore_ttft")?;
     eprintln!(
         "[bench kvstore] prefix-hit TTFT speedup at b{bucket}: {} \
-         ({} hits / {} misses, {} entries, {} bytes cached)",
+         ({} hits / {} misses, {} entries, {} bytes cached, {} pages \
+         materialized on hits)",
         fmt_speedup(speedup),
         ps.hits,
         ps.misses,
         ps.entries,
-        ps.bytes
+        ps.bytes,
+        hit_new_pages
     );
 
-    let (export, import, snap_bytes) = bench_snapshot(&be, warmup, iters)?;
+    let (export, import, park, unpark, snap_bytes) =
+        bench_snapshot(&be, warmup, iters)?;
     let (swap_out, swap_in, session_bytes) = bench_swap(&be, swap_iters)?;
     let mut costs = Table::new(
-        "KV state manager: snapshot + swap round-trip costs",
+        "KV state manager: snapshot, paging + swap round-trip costs",
         &["op", "mean ms", "bytes"],
     );
     let mut cost_rows = Vec::new();
     for (name, s, bytes) in [
         ("export_state", &export, snap_bytes),
         ("import_state", &import, snap_bytes),
+        ("park_pages", &park, snap_bytes),
+        ("unpark_pages", &unpark, snap_bytes),
         ("swap_out", &swap_out, session_bytes),
         ("swap_in", &swap_in, session_bytes),
     ] {
@@ -225,6 +372,52 @@ pub fn run(out_dir: &Path, quick: bool) -> Result<()> {
     }
     costs.emit(out_dir, "kvstore_costs")?;
 
+    let d = bench_density(&be, quick)?;
+    let density_ratio = if d.paged_bytes > 0 {
+        d.flat_bytes as f64 / d.paged_bytes as f64
+    } else {
+        0.0
+    };
+    let mut density = Table::new(
+        "KV state manager: suspended-session density (shared long prefix)",
+        &["tier", "bytes", "sessions/GiB"],
+    );
+    let mut density_rows = Vec::new();
+    for (name, bytes) in [
+        ("flat_slab", d.flat_bytes),
+        ("paged_f32", d.paged_bytes),
+        ("paged_int8", d.int8_bytes),
+    ] {
+        let row = Json::obj()
+            .set("tier", name)
+            .set("bytes", bytes)
+            .set("sessions_per_gib", per_gib(d.n, bytes))
+            .set("sessions", d.n);
+        density.row(
+            vec![
+                name.to_string(),
+                format!("{bytes}"),
+                format!("{:.1}", per_gib(d.n, bytes)),
+            ],
+            row.clone(),
+        );
+        density_rows.push(row);
+    }
+    density.emit(out_dir, "kvstore_density")?;
+    eprintln!(
+        "[bench kvstore] density over {} spec_pv sessions: flat {} B → \
+         paged {} B ({density_ratio:.2}x) → int8 {} B \
+         ({} pages resident, {} shared, {} dedup hits, {} CoW copies)",
+        d.n,
+        d.flat_bytes,
+        d.paged_bytes,
+        d.int8_bytes,
+        d.pages.pages_resident,
+        d.pages.pages_shared,
+        d.pages.dedup_hits,
+        d.pages.cow_copies
+    );
+
     let combined = Json::obj()
         .set("schema_version", SCHEMA_VERSION)
         .set("prompt_tokens", PROMPT_TOKENS)
@@ -232,8 +425,20 @@ pub fn run(out_dir: &Path, quick: bool) -> Result<()> {
         .set("ttft_speedup", speedup)
         .set("ttft", Json::Arr(ttft_rows))
         .set("costs", Json::Arr(cost_rows))
+        .set("density", Json::Arr(density_rows))
         .set("prefix_hits", ps.hits as i64)
-        .set("prefix_misses", ps.misses as i64);
+        .set("prefix_misses", ps.misses as i64)
+        .set("hit_new_pages", hit_new_pages as i64)
+        .set("sessions_per_gib_flat", per_gib(d.n, d.flat_bytes))
+        .set("sessions_per_gib_paged", per_gib(d.n, d.paged_bytes))
+        .set("sessions_per_gib_int8", per_gib(d.n, d.int8_bytes))
+        .set("density_ratio", density_ratio)
+        .set("pages_resident", d.pages.pages_resident)
+        .set("pages_shared", d.pages.pages_shared)
+        .set("dedup_hits", d.pages.dedup_hits as i64)
+        .set("cow_copies", d.pages.cow_copies as i64)
+        .set("park_ms", park.mean() * 1e3)
+        .set("unpark_ms", unpark.mean() * 1e3);
     std::fs::write(OUTPUT_FILE, combined.to_string())?;
     eprintln!("[bench kvstore] wrote {OUTPUT_FILE}");
 
@@ -242,6 +447,29 @@ pub fn run(out_dir: &Path, quick: bool) -> Result<()> {
             "prefix-hit TTFT ({:.3} ms) is not below cold-prefill TTFT ({:.3} ms)",
             warm.mean() * 1e3,
             cold.mean() * 1e3
+        );
+    }
+    if hit_new_pages != 0 {
+        bail!(
+            "prefix-cache hits materialized {hit_new_pages} new pages; \
+             a hit must only map shared pages"
+        );
+    }
+    if unpark.mean() > import.mean() * PAGED_RESTORE_SLACK {
+        bail!(
+            "paged restore ({:.3} ms) regressed past the flat snapshot \
+             import ({:.3} ms) by more than {PAGED_RESTORE_SLACK}x",
+            unpark.mean() * 1e3,
+            import.mean() * 1e3
+        );
+    }
+    if d.paged_bytes >= d.flat_bytes {
+        bail!(
+            "paged footprint ({} B) is not below the flat-slab footprint \
+             ({} B) across {} suspended sessions",
+            d.paged_bytes,
+            d.flat_bytes,
+            d.n
         );
     }
     Ok(())

@@ -129,6 +129,37 @@ impl fmt::Display for BackendKind {
     }
 }
 
+/// Storage precision for cold/swapped KV pages (`kv_quant`). Resident
+/// pages are always exact f32; int8 applies only to pages demoted by
+/// `KvPool::park_cold` and is tolerance-bounded (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvQuant {
+    #[default]
+    None,
+    Int8,
+}
+
+impl std::str::FromStr for KvQuant {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "none" | "f32" => Ok(KvQuant::None),
+            "int8" => Ok(KvQuant::Int8),
+            _ => bail!("unknown kv_quant '{s}' (none|int8)"),
+        }
+    }
+}
+
+impl fmt::Display for KvQuant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            KvQuant::None => "none",
+            KvQuant::Int8 => "int8",
+        })
+    }
+}
+
 /// SpecPV partial-cache geometry (paper §3.2). All unit = tokens unless
 /// noted. `retrieval_budget` is the headline "SpecPV-xK" knob.
 #[derive(Debug, Clone)]
@@ -218,6 +249,12 @@ pub struct Config {
     /// KV state manager: byte budget of the prompt-prefix snapshot cache
     /// consulted by prefill (0 = disabled)
     pub prefix_cache_bytes: usize,
+    /// paged KV pool: fixed page size in bytes (positive multiple of 4)
+    pub kv_page_bytes: usize,
+    /// paged KV pool: spill directory for the disk tier ("" = disabled)
+    pub kv_swap_dir: String,
+    /// paged KV pool: storage precision for cold/swapped pages
+    pub kv_quant: KvQuant,
     /// kernel thread-pool width for the reference backend, mirroring the
     /// `SPECPV_THREADS` env override (0 = env/auto default); echoed in
     /// `Registry::summary`
@@ -245,6 +282,9 @@ impl Default for Config {
             max_queue: 256,
             kv_budget_bytes: 0,
             prefix_cache_bytes: 16 << 20,
+            kv_page_bytes: 64 << 10,
+            kv_swap_dir: String::new(),
+            kv_quant: KvQuant::None,
             threads: 0,
         }
     }
@@ -276,41 +316,194 @@ impl Config {
     }
 
     /// Apply `key=value` overrides (also used for CLI `--set key=value`).
+    /// Every key is resolved through [`options`], the same table that
+    /// generates the CLI flag parser — a key registers in exactly one
+    /// place.
     pub fn apply_overrides(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
         for (k, v) in kv {
-            match k.as_str() {
-                "artifacts_dir" => self.artifacts_dir = PathBuf::from(v),
-                "model_size" => self.model_size = v.clone(),
-                "engine" => self.engine = v.parse()?,
-                "backend" => self.backend = v.parse()?,
-                "retrieval_budget" => {
-                    self.specpv.retrieval_budget = v.parse()?
-                }
-                "sink_blocks" => self.specpv.sink_blocks = v.parse()?,
-                "local_blocks" => self.specpv.local_blocks = v.parse()?,
-                "buffer_cap" => self.specpv.buffer_cap = v.parse()?,
-                "reduction" => self.specpv.reduction = v.parse()?,
-                "offload" => self.offload.enabled = v.parse()?,
-                "pcie_gbps" => self.offload.pcie_gbps = v.parse()?,
-                "overlap" => self.offload.overlap = v.parse()?,
-                "temperature" => self.temperature = v.parse()?,
-                "max_new_tokens" => self.max_new_tokens = v.parse()?,
-                "tree_top_k" => self.tree_top_k = v.parse()?,
-                "tree_depth" => self.tree_depth = v.parse()?,
-                "tree_size" => self.tree_size = v.parse()?,
-                "chain_gamma" => self.chain_gamma = v.parse()?,
-                "server_addr" => self.server_addr = v.clone(),
-                "max_active" => self.max_active = v.parse()?,
-                "max_prompt" => self.max_prompt = v.parse()?,
-                "max_queue" => self.max_queue = v.parse()?,
-                "kv_budget_bytes" => self.kv_budget_bytes = v.parse()?,
-                "prefix_cache_bytes" => self.prefix_cache_bytes = v.parse()?,
-                "threads" => self.threads = v.parse()?,
-                _ => bail!("unknown config key '{k}'"),
-            }
+            let def = options()
+                .iter()
+                .find(|d| d.key == k.as_str())
+                .ok_or_else(|| anyhow!("unknown config key '{k}'"))?;
+            def.apply(self, v)?;
         }
         Ok(())
     }
+
+    /// Spill directory for the paged-pool disk tier, if configured.
+    pub fn swap_dir(&self) -> Option<PathBuf> {
+        if self.kv_swap_dir.is_empty() {
+            None
+        } else {
+            Some(PathBuf::from(&self.kv_swap_dir))
+        }
+    }
+}
+
+/// One config key = one CLI flag, declared once. The config-file /
+/// `--set` parser ([`Config::apply_overrides`]) and the flag parser
+/// (`main::build_config`) both iterate this table, so adding a key here
+/// registers it everywhere.
+pub struct OptDef {
+    /// config-file key; the canonical CLI flag is the same with `_`→`-`
+    pub key: &'static str,
+    /// extra CLI-only alias kept for compatibility (e.g. `--budget`)
+    pub alias: Option<&'static str>,
+    /// CLI: a bare `--flag` means `true` (config files still use `k = v`)
+    pub switch: bool,
+    pub help: &'static str,
+    apply: fn(&mut Config, &str) -> Result<()>,
+}
+
+impl OptDef {
+    /// Canonical CLI flag name (`kv_page_bytes` → `kv-page-bytes`).
+    pub fn flag(&self) -> String {
+        self.key.replace('_', "-")
+    }
+
+    /// Parse `v` into the config field this option owns.
+    pub fn apply(&self, cfg: &mut Config, v: &str) -> Result<()> {
+        (self.apply)(cfg, v).map_err(|e| anyhow!("config key '{}' = '{v}': {e}", self.key))
+    }
+}
+
+macro_rules! opt {
+    ($key:literal, $help:literal, $apply:expr) => {
+        OptDef { key: $key, alias: None, switch: false, help: $help, apply: $apply }
+    };
+    ($key:literal as $alias:literal, $help:literal, $apply:expr) => {
+        OptDef { key: $key, alias: Some($alias), switch: false, help: $help, apply: $apply }
+    };
+}
+
+static OPTIONS: &[OptDef] = &[
+    opt!("artifacts_dir" as "artifacts", "AOT artifact directory", |c, v| {
+        c.artifacts_dir = PathBuf::from(v);
+        Ok(())
+    }),
+    opt!("model_size" as "size", "model size key (s|m|l)", |c, v| {
+        c.model_size = v.to_string();
+        Ok(())
+    }),
+    opt!("engine", "decoding engine (ar|spec_full|spec_pv|triforce|tokenswift)", |c, v| {
+        c.engine = v.parse()?;
+        Ok(())
+    }),
+    opt!("backend", "device backend (auto|pjrt|reference)", |c, v| {
+        c.backend = v.parse()?;
+        Ok(())
+    }),
+    opt!("retrieval_budget" as "budget", "SpecPV retrieval budget, tokens", |c, v| {
+        c.specpv.retrieval_budget = v.parse()?;
+        Ok(())
+    }),
+    opt!("sink_blocks", "SpecPV attention-sink blocks", |c, v| {
+        c.specpv.sink_blocks = v.parse()?;
+        Ok(())
+    }),
+    opt!("local_blocks", "SpecPV local-window blocks", |c, v| {
+        c.specpv.local_blocks = v.parse()?;
+        Ok(())
+    }),
+    opt!("buffer_cap", "SpecPV partial-verify buffer capacity, tokens", |c, v| {
+        c.specpv.buffer_cap = v.parse()?;
+        Ok(())
+    }),
+    opt!("reduction", "SpecPV score reduction (mean|max|last)", |c, v| {
+        c.specpv.reduction = v.parse()?;
+        Ok(())
+    }),
+    OptDef {
+        key: "offload",
+        alias: None,
+        switch: true,
+        help: "enable the PCIe KV-offload simulation",
+        apply: |c, v| {
+            c.offload.enabled = v.parse()?;
+            Ok(())
+        },
+    },
+    opt!("pcie_gbps", "offload sim: effective PCIe bandwidth, GB/s", |c, v| {
+        c.offload.pcie_gbps = v.parse()?;
+        Ok(())
+    }),
+    opt!("overlap", "offload sim: prefetch overlap fraction", |c, v| {
+        c.offload.overlap = v.parse()?;
+        Ok(())
+    }),
+    opt!("temperature", "sampling temperature (0 = greedy)", |c, v| {
+        c.temperature = v.parse()?;
+        Ok(())
+    }),
+    opt!("max_new_tokens" as "max-new", "generation length cap, tokens", |c, v| {
+        c.max_new_tokens = v.parse()?;
+        Ok(())
+    }),
+    opt!("tree_top_k", "draft tree: children of the root level", |c, v| {
+        c.tree_top_k = v.parse()?;
+        Ok(())
+    }),
+    opt!("tree_depth", "draft tree: expansion depth", |c, v| {
+        c.tree_depth = v.parse()?;
+        Ok(())
+    }),
+    opt!("tree_size", "draft tree: total nodes", |c, v| {
+        c.tree_size = v.parse()?;
+        Ok(())
+    }),
+    opt!("chain_gamma", "TriForce chain draft length", |c, v| {
+        c.chain_gamma = v.parse()?;
+        Ok(())
+    }),
+    opt!("server_addr" as "addr", "serve: listen address", |c, v| {
+        c.server_addr = v.to_string();
+        Ok(())
+    }),
+    opt!("max_active", "scheduler: concurrent live sessions", |c, v| {
+        c.max_active = v.parse()?;
+        Ok(())
+    }),
+    opt!("max_prompt", "admission: longest accepted prompt, tokens", |c, v| {
+        c.max_prompt = v.parse()?;
+        Ok(())
+    }),
+    opt!("max_queue", "admission: deepest request queue", |c, v| {
+        c.max_queue = v.parse()?;
+        Ok(())
+    }),
+    opt!("kv_budget_bytes", "admission: resident KV byte budget (0 = unlimited)", |c, v| {
+        c.kv_budget_bytes = v.parse()?;
+        Ok(())
+    }),
+    opt!("prefix_cache_bytes", "prompt-prefix cache byte budget (0 = off)", |c, v| {
+        c.prefix_cache_bytes = v.parse()?;
+        Ok(())
+    }),
+    opt!("kv_page_bytes", "paged KV pool: page size, bytes (multiple of 4)", |c, v| {
+        let n: usize = v.parse()?;
+        if n == 0 || n % 4 != 0 {
+            bail!("must be a positive multiple of 4");
+        }
+        c.kv_page_bytes = n;
+        Ok(())
+    }),
+    opt!("kv_swap_dir", "paged KV pool: disk-tier spill directory (\"\" = off)", |c, v| {
+        c.kv_swap_dir = v.to_string();
+        Ok(())
+    }),
+    opt!("kv_quant", "cold/swapped KV page precision (none|int8)", |c, v| {
+        c.kv_quant = v.parse()?;
+        Ok(())
+    }),
+    opt!("threads", "reference-backend kernel threads (0 = auto)", |c, v| {
+        c.threads = v.parse()?;
+        Ok(())
+    }),
+];
+
+/// The declarative option table (config keys + CLI flags).
+pub fn options() -> &'static [OptDef] {
+    OPTIONS
 }
 
 #[cfg(test)]
@@ -384,6 +577,61 @@ mod tests {
         assert_eq!("ref".parse::<BackendKind>().unwrap(), BackendKind::Reference);
         assert!("cuda".parse::<BackendKind>().is_err());
         assert_eq!(Config::default().backend, BackendKind::Auto);
+    }
+
+    #[test]
+    fn option_table_keys_are_unique_and_cover_every_override() {
+        let mut seen = std::collections::BTreeSet::new();
+        for def in options() {
+            assert!(seen.insert(def.key), "duplicate option key '{}'", def.key);
+            assert!(!def.help.is_empty(), "'{}' has no help text", def.key);
+            if let Some(alias) = def.alias {
+                assert_ne!(alias, def.flag(), "'{}' alias shadows its flag", def.key);
+            }
+        }
+        // the paged-pool keys register exactly once, through the table
+        for key in ["kv_page_bytes", "kv_swap_dir", "kv_quant"] {
+            assert!(seen.contains(key), "'{key}' missing from the option table");
+        }
+    }
+
+    #[test]
+    fn paged_pool_keys_parse() {
+        let mut c = Config::default();
+        assert_eq!(c.kv_page_bytes, 64 << 10);
+        assert!(c.swap_dir().is_none(), "default: no disk tier");
+        assert_eq!(c.kv_quant, KvQuant::None);
+        let mut kv = BTreeMap::new();
+        kv.insert("kv_page_bytes".to_string(), "4096".to_string());
+        kv.insert("kv_swap_dir".to_string(), "/tmp/kv".to_string());
+        kv.insert("kv_quant".to_string(), "int8".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.kv_page_bytes, 4096);
+        assert_eq!(c.swap_dir(), Some(PathBuf::from("/tmp/kv")));
+        assert_eq!(c.kv_quant, KvQuant::Int8);
+
+        let mut bad = BTreeMap::new();
+        bad.insert("kv_page_bytes".to_string(), "10".to_string());
+        assert!(c.apply_overrides(&bad).is_err(), "page bytes must be 4-aligned");
+        let mut bad = BTreeMap::new();
+        bad.insert("kv_quant".to_string(), "fp8".to_string());
+        assert!(c.apply_overrides(&bad).is_err());
+    }
+
+    #[test]
+    fn kv_quant_parse_display() {
+        for q in ["none", "int8"] {
+            let k: KvQuant = q.parse().unwrap();
+            assert_eq!(k.to_string(), q);
+        }
+    }
+
+    #[test]
+    fn flags_are_dashed_keys() {
+        let def = options().iter().find(|d| d.key == "kv_page_bytes").unwrap();
+        assert_eq!(def.flag(), "kv-page-bytes");
+        let def = options().iter().find(|d| d.key == "retrieval_budget").unwrap();
+        assert_eq!(def.alias, Some("budget"), "legacy --budget alias kept");
     }
 
     #[test]

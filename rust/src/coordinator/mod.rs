@@ -15,14 +15,18 @@
 //!                       → re-queued → (resume: restore) → Running
 //! ```
 //!
-//! Admission is **byte-aware** (the KV state manager, DESIGN.md §11):
-//! every live session registers its resident state bytes with a
-//! [`KvPool`], and a queued request is admitted only when it fits the
-//! `kv_budget_bytes` budget — `max_active` remains as a width cap, but
-//! the KV footprint governs who runs. Under pressure the lowest-priority
-//! active session is preempted: its states are exported to the host
-//! [`SwapStore`] and it re-queues, resuming byte-identically when bytes
-//! free up (PR 1's step-resumable sessions make this exact).
+//! Admission is **byte-aware** (the KV state manager, DESIGN.md §11,
+//! §13): every live session reserves its resident state bytes with the
+//! shared [`KvPool`], and a queued request is admitted only when it fits
+//! the `kv_budget_bytes` budget — `max_active` remains as a width cap,
+//! but the KV footprint governs who runs. Under pressure the
+//! lowest-priority active session is preempted: its states park as
+//! refcounted page block tables in the pool, the unshared pages demote
+//! (int8 / disk spill per `kv_quant`/`kv_swap_dir`), and it re-queues —
+//! resuming byte-identically (for `kv_quant = none`) when bytes free up.
+//! A corrupt spill file on resume is recoverable: the session is dropped
+//! and the request re-queued for a fresh prefill ([`Event::SwapFault`]),
+//! never a panic.
 //!
 //! `tick()` returns [`Event`]s (per-step token deltas, swap transitions,
 //! completions, failures) so the server can stream results keyed by
@@ -32,7 +36,7 @@
 //! shaped outer loop the L3 layer owns; the inner draft/verify loop
 //! lives in `engine`.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -44,7 +48,7 @@ use crate::engine::{
     BackendFactory, Drive, EngineSession, GenRequest, GenResult, KernelPlan, SessionFactory,
     StepOutcome,
 };
-use crate::kvstore::{KvPool, KvStats, KvStore, SwapStore};
+use crate::kvstore::{KvCtx, KvPool, KvStats, KvStore, PagedState};
 use crate::metrics::GenStats;
 use crate::util::stats::Samples;
 
@@ -55,8 +59,8 @@ pub type RequestId = u64;
 pub enum RequestState {
     Queued,
     Running,
-    /// preempted under KV-byte pressure: state exported to the host swap
-    /// store, waiting in the queue for restore-on-resume
+    /// preempted under KV-byte pressure: state parked as demoted pool
+    /// pages, waiting in the queue for restore-on-resume
     Swapped,
     Done,
     Cancelled,
@@ -102,10 +106,14 @@ pub enum Event {
     Started { id: RequestId },
     /// One step produced tokens (includes the prefill token on step 1).
     Step { id: RequestId, new_tokens: Vec<u32>, step: usize, finished: bool },
-    /// Preempted under KV-byte pressure; state parked in the swap store.
+    /// Preempted under KV-byte pressure; state parked as demoted pages.
     SwappedOut { id: RequestId },
     /// Swapped-out session restored and running again.
     Resumed { id: RequestId },
+    /// A parked session's spilled pages could not be read back (corrupt
+    /// or missing spill file); the session was dropped and the request
+    /// re-queued for a fresh prefill. Not terminal.
+    SwapFault { id: RequestId },
     /// Terminal: result available via `Coordinator::get`.
     Finished { id: RequestId },
     Cancelled { id: RequestId },
@@ -119,6 +127,7 @@ impl Event {
             | Event::Step { id, .. }
             | Event::SwappedOut { id }
             | Event::Resumed { id }
+            | Event::SwapFault { id }
             | Event::Finished { id }
             | Event::Cancelled { id }
             | Event::Failed { id, .. } => *id,
@@ -147,14 +156,25 @@ pub struct Registry {
     pub queue_depth: usize,
     /// gauge: live sessions (as of the last tick)
     pub active_sessions: usize,
-    /// gauge: device bytes registered to live sessions (KV pool)
+    /// gauge: device bytes reserved by live sessions (KV pool)
     pub kv_resident_bytes: usize,
     /// admission byte budget (0 = unlimited)
     pub kv_budget_bytes: usize,
-    /// sessions preempted to the host swap store (lifetime counter)
+    /// gauge: live pool pages (parked sessions + prefix cache). Shared
+    /// pages count once — a prefix-cache hit mapped into N sessions is
+    /// still one page here (pinned by rust/tests/scheduler.rs).
+    pub kv_pages_resident: usize,
+    /// gauge: pool pages with refcount ≥ 2 (CoW / prefix sharing)
+    pub kv_pages_shared: usize,
+    /// gauge: internal fragmentation of live pages, percent
+    pub kv_frag_pct: f64,
+    /// sessions preempted into the page pool (lifetime counter)
     pub swap_outs: u64,
-    /// sessions restored from the host swap store (lifetime counter)
+    /// sessions restored from the page pool (lifetime counter)
     pub swap_ins: u64,
+    /// spill-file read failures survived on resume (session dropped,
+    /// request re-queued)
+    pub swap_faults: u64,
     /// prompt-prefix cache counters (synced with the backend counters)
     pub prefix_hits: u64,
     pub prefix_misses: u64,
@@ -245,6 +265,7 @@ impl Registry {
              queue_depth={} active={} max_queue={} max_prompt={} \
              threads={} fused_groups={} batch_mean_w={:.2} batch_max_w={} \
              batched_frac={:.2} fallback_steps={} kv_resident={} kv_budget={} swaps={}/{} \
+             kv_pages={} kv_pages_shared={} kv_frag={:.1}% swap_faults={} \
              prefix_hits={} prefix_misses={} execs={} exec_secs={:.2}s \
              compiles={} p50_latency={:.2}s p99={:.2}s p50_ttft={:.3}s \
              p99_ttft={:.3}s mean_tok_s={:.1} mean_tau={:.2}",
@@ -267,6 +288,10 @@ impl Registry {
             self.kv_budget_bytes,
             self.swap_outs,
             self.swap_ins,
+            self.kv_pages_resident,
+            self.kv_pages_shared,
+            self.kv_frag_pct,
+            self.swap_faults,
             self.prefix_hits,
             self.prefix_misses,
             self.executions,
@@ -343,13 +368,19 @@ pub struct Coordinator<'rt> {
     requests: Vec<TrackedRequest>,
     active: Vec<ActiveEntry<'rt>>,
     /// dormant (swapped-out) session objects awaiting re-admission;
-    /// their exported state lives in `swaps`
+    /// their parked block tables live in `parked`
     swapped: HashMap<RequestId, Box<dyn EngineSession + 'rt>>,
-    /// host store of swapped-out state snapshots
-    pub swaps: SwapStore,
-    /// byte-denominated admission accounting over live sessions
+    /// parked block tables of swapped-out sessions (pages demoted to
+    /// int8/disk by `KvPool::park_cold` where the config allows)
+    parked: HashMap<RequestId, Vec<PagedState>>,
+    /// swapped requests whose spilled pages already have a disk
+    /// prefetch in flight
+    prefetched: HashSet<RequestId>,
+    /// the shared page pool: byte-denominated admission ledger plus the
+    /// page store parked sessions and the prefix cache live in
     pub pool: KvPool,
-    /// shared prompt-prefix snapshot cache (None = disabled)
+    /// shared prompt-prefix cache (None = disabled); its entries are
+    /// block tables in `pool`
     prefix: Option<KvStore>,
     /// round-robin rotation cursor
     rr: usize,
@@ -361,22 +392,18 @@ pub struct Coordinator<'rt> {
 
 impl<'rt> Coordinator<'rt> {
     /// Production constructor: sessions are started on `be` with the
-    /// config's engine geometry. A prompt-prefix snapshot cache of
-    /// `cfg.prefix_cache_bytes` is shared with every session the factory
-    /// starts (0 disables it).
+    /// config's engine geometry. The config's [`KvCtx`] (page pool sized
+    /// by `kv_budget_bytes`/`kv_page_bytes` with the configured swap dir
+    /// and cold-page quantization, plus a `prefix_cache_bytes` prefix
+    /// cache when non-zero) is shared between the factory's sessions and
+    /// the coordinator's admission/preemption accounting.
     pub fn new(be: &'rt dyn Backend, cfg: Config) -> Coordinator<'rt> {
-        let prefix = if cfg.prefix_cache_bytes > 0 {
-            Some(KvStore::new(cfg.prefix_cache_bytes))
-        } else {
-            None
-        };
-        let mut factory = BackendFactory::new(be, cfg.clone());
-        if let Some(st) = &prefix {
-            factory = factory.with_prefix(st.clone());
-        }
+        let kv = KvCtx::from_config(&cfg);
+        let factory = BackendFactory::new(be, cfg.clone()).with_kv(kv.clone());
         let mut coord = Coordinator::with_factory(cfg, Box::new(factory));
         coord.backend = Some(be);
-        coord.prefix = prefix;
+        coord.pool = kv.pool;
+        coord.prefix = kv.prefix;
         coord.registry.backend = be.name().to_string();
         coord
     }
@@ -395,7 +422,12 @@ impl<'rt> Coordinator<'rt> {
             kv_budget_bytes: cfg.kv_budget_bytes,
             ..Admission::default()
         };
-        let pool = KvPool::new(admission.kv_budget_bytes);
+        let pool = KvPool::with_opts(
+            admission.kv_budget_bytes,
+            cfg.kv_page_bytes,
+            cfg.swap_dir().as_deref(),
+            cfg.kv_quant,
+        );
         let registry = Registry {
             kv_budget_bytes: admission.kv_budget_bytes,
             max_queue: admission.max_queue,
@@ -412,7 +444,8 @@ impl<'rt> Coordinator<'rt> {
             requests: Vec::new(),
             active: Vec::new(),
             swapped: HashMap::new(),
-            swaps: SwapStore::default(),
+            parked: HashMap::new(),
+            prefetched: HashSet::new(),
             pool,
             prefix: None,
             rr: 0,
@@ -520,7 +553,12 @@ impl<'rt> Coordinator<'rt> {
             }
             RequestState::Swapped => {
                 self.queue.retain(|&q| q != id);
-                self.swaps.discard(id);
+                if let Some(tables) = self.parked.remove(&id) {
+                    for ps in &tables {
+                        self.pool.free_state(ps);
+                    }
+                }
+                self.prefetched.remove(&id);
                 let result = self.swapped.remove(&id).map(|s| s.finish());
                 let tr = &mut self.requests[id as usize];
                 tr.service_secs =
@@ -547,7 +585,18 @@ impl<'rt> Coordinator<'rt> {
         self.registry.queue_depth = self.queue.len();
         self.registry.active_sessions = self.active.len();
         self.registry.kv_resident_bytes = self.pool.resident();
+        self.sync_page_gauges();
         events
+    }
+
+    /// Refresh the page-level pool gauges. A page shared by several
+    /// block tables counts **once** in `kv_pages_resident` — the gauges
+    /// report physical pages, not the sum of block-table lengths.
+    fn sync_page_gauges(&mut self) {
+        let ps = self.pool.stats();
+        self.registry.kv_pages_resident = ps.pages_resident;
+        self.registry.kv_pages_shared = ps.pages_shared;
+        self.registry.kv_frag_pct = ps.frag_pct;
     }
 
     /// Pull the backend's execution counters into the registry. Called on
@@ -567,6 +616,7 @@ impl<'rt> Coordinator<'rt> {
             self.registry.prefix_misses = ps.misses;
         }
         self.registry.kv_resident_bytes = self.pool.resident();
+        self.sync_page_gauges();
     }
 
     /// Aggregated KV-subsystem stats (the server `cache` op).
@@ -576,10 +626,16 @@ impl<'rt> Coordinator<'rt> {
             resident_bytes: self.pool.resident(),
             budget_bytes: self.pool.budget(),
             live_states: self.pool.live(),
-            swapped: self.swaps.len(),
-            swap_bytes: self.swaps.bytes(),
+            swapped: self.parked.len(),
+            swap_bytes: self
+                .parked
+                .values()
+                .flatten()
+                .map(|ps| ps.logical_bytes())
+                .sum(),
             swap_outs: self.registry.swap_outs,
             swap_ins: self.registry.swap_ins,
+            pages: self.pool.stats(),
         }
     }
 
@@ -611,7 +667,12 @@ impl<'rt> Coordinator<'rt> {
                 self.requests[id as usize].result = Some(result);
             }
             if let Some(session) = self.swapped.remove(&id) {
-                self.swaps.discard(id);
+                if let Some(tables) = self.parked.remove(&id) {
+                    for ps in &tables {
+                        self.pool.free_state(ps);
+                    }
+                }
+                self.prefetched.remove(&id);
                 self.requests[id as usize].result = Some(session.finish());
             }
             let tr = &mut self.requests[id as usize];
@@ -641,8 +702,15 @@ impl<'rt> Coordinator<'rt> {
             };
             if !self.pool.admits(need) {
                 // make room by preempting a strictly lower-priority
-                // session; if none exists, the head waits
+                // session; if none exists, the head waits — kick off a
+                // disk prefetch of its spilled pages (once) so the
+                // eventual resume faults less
                 if !self.preempt_below(prio, events) {
+                    if let Some(tables) = self.parked.get(&id) {
+                        if self.prefetched.insert(id) {
+                            self.pool.prefetch(tables);
+                        }
+                    }
                     break;
                 }
                 continue;
@@ -672,7 +740,7 @@ impl<'rt> Coordinator<'rt> {
     ) {
         match self.factory.start_session(kind, req) {
             Ok(session) => {
-                self.pool.register(id, session.state_bytes());
+                self.pool.reserve(id, session.state_bytes());
                 let tr = &mut self.requests[id as usize];
                 tr.state = RequestState::Running;
                 tr.started = Some(Instant::now());
@@ -692,14 +760,31 @@ impl<'rt> Coordinator<'rt> {
         }
     }
 
-    /// Restore-on-resume: re-import a swapped session's snapshots and
-    /// put it back in the active set.
+    /// Restore-on-resume: promote the session's parked pages back to RAM
+    /// (faulting spilled pages in from disk), re-import them, and put the
+    /// session back in the active set. A spill file that no longer
+    /// decodes is a `SwapFault`: the dormant session is dropped and the
+    /// request re-queued from scratch — generation is deterministic per
+    /// seed, so the fresh run yields the same tokens.
     fn resume_swapped(&mut self, id: RequestId, events: &mut Vec<Event>) {
         let mut session = self.swapped.remove(&id).expect("swapped session present");
-        let snaps = self.swaps.take(id).unwrap_or_default();
-        match session.resume(snaps) {
+        let tables = self.parked.remove(&id).unwrap_or_default();
+        self.prefetched.remove(&id);
+        if let Err(e) = self.pool.promote(&tables) {
+            for ps in &tables {
+                self.pool.free_state(ps);
+            }
+            drop(session);
+            self.registry.swap_faults += 1;
+            eprintln!("[coordinator] swap fault on request {id}, re-queueing: {e:#}");
+            self.requests[id as usize].state = RequestState::Queued;
+            self.queue.push_front(id);
+            events.push(Event::SwapFault { id });
+            return;
+        }
+        match session.resume(tables) {
             Ok(()) => {
-                self.pool.register(id, session.state_bytes());
+                self.pool.reserve(id, session.state_bytes());
                 self.registry.swap_ins += 1;
                 self.requests[id as usize].state = RequestState::Running;
                 self.active.push(ActiveEntry { id, session });
@@ -735,9 +820,17 @@ impl<'rt> Coordinator<'rt> {
         let mut entry = self.active.remove(idx);
         let id = entry.id;
         match entry.session.suspend() {
-            Ok(snaps) => {
+            Ok(tables) => {
                 self.pool.release(id);
-                self.swaps.put(id, snaps);
+                // demote unshared pages (int8 and/or disk per config);
+                // a demotion error leaves pages resident, which only
+                // costs RAM, never correctness
+                if let Err(e) = self.pool.park_cold(&tables) {
+                    eprintln!(
+                        "[coordinator] cold-park of request {id} incomplete: {e:#}"
+                    );
+                }
+                self.parked.insert(id, tables);
                 self.swapped.insert(id, entry.session);
                 self.requests[id as usize].state = RequestState::Swapped;
                 // re-queue behind the preemptor: it resumes as soon as

@@ -6,9 +6,9 @@
 
 use anyhow::Result;
 
-use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
+use crate::backend::{Backend, StateBuf, StateKind};
 use crate::config::Config;
-use crate::kvstore::KvStore;
+use crate::kvstore::{KvCtx, KvPool, PagedState};
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
 use crate::offload::OffloadSim;
@@ -41,6 +41,7 @@ enum Phase {
 pub struct ArSession<'rt> {
     be: &'rt dyn Backend,
     target: TargetSession<'rt>,
+    pool: KvPool,
     out: SessionOut,
     rng: Rng,
     stats: GenStats,
@@ -60,7 +61,7 @@ impl Engine for ArEngine {
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
-        prefix: Option<&KvStore>,
+        kv: &KvCtx,
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
@@ -73,7 +74,7 @@ impl Engine for ArEngine {
         )?;
 
         let mut sw = Stopwatch::new();
-        let (logits, _) = target.prefill(&req.prompt, None, prefix)?;
+        let (logits, _) = target.prefill(&req.prompt, None, kv)?;
         stats.prefill_secs = sw.lap();
 
         let mut out = SessionOut::new(req.max_new);
@@ -81,6 +82,7 @@ impl Engine for ArEngine {
         Ok(Box::new(ArSession {
             be,
             target,
+            pool: kv.pool.clone(),
             out,
             rng,
             stats,
@@ -168,25 +170,28 @@ impl EngineSession for ArSession<'_> {
         self.target.state_bytes()
     }
 
-    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
-        let snap = self.target.export()?;
+    fn suspend(&mut self) -> Result<Vec<PagedState>> {
+        let ps = self.target.park(&self.pool)?;
         self.target.drop_state();
-        Ok(vec![snap])
+        Ok(vec![ps])
     }
 
-    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+    fn resume(&mut self, states: Vec<PagedState>) -> Result<()> {
         let mut full = false;
-        for s in &snaps {
-            match s.kind {
+        for ps in &states {
+            match ps.kind {
                 StateKind::Full => {
-                    self.target.restore(s)?;
+                    self.target.restore_paged(&self.pool, ps)?;
                     full = true;
                 }
-                k => anyhow::bail!("unexpected {k:?} snapshot for an ar session"),
+                k => anyhow::bail!("unexpected {k:?} block table for an ar session"),
             }
         }
         if !full {
-            anyhow::bail!("ar resume needs a full snapshot");
+            anyhow::bail!("ar resume needs a full block table");
+        }
+        for ps in &states {
+            self.pool.free_state(ps);
         }
         Ok(())
     }

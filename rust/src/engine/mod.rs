@@ -31,11 +31,11 @@ pub mod triforce;
 
 use anyhow::Result;
 
-use crate::backend::{pick_bucket, Backend, StateBuf, StateKind, StateSnapshot};
+use crate::backend::{pick_bucket, Backend, StateBuf, StateKind};
 
 pub use self::plan::{Drive, KernelPlan};
 use crate::config::{Config, EngineKind};
-use crate::kvstore::KvStore;
+use crate::kvstore::{KvCtx, KvStore, PagedState};
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
 use crate::tokenizer::is_eos;
@@ -105,19 +105,24 @@ pub trait EngineSession {
         0
     }
 
-    /// Swap-out: export every device state to host snapshots and drop
-    /// the device buffers. The session keeps its host-side bookkeeping
-    /// (caches, RNG, output cursor) and is dormant — `step()` is invalid
-    /// — until the snapshots come back through `resume`. Default:
-    /// stateless sessions suspend to nothing.
-    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
+    /// Swap-out: park every device state as page-pool block tables and
+    /// drop the device buffers. The caller owns the returned tables'
+    /// page refs (they survive `park_cold` demotion to int8/disk). The
+    /// session keeps its host-side bookkeeping (caches, RNG, output
+    /// cursor) and is dormant — `step()` is invalid — until the tables
+    /// come back through `resume`. Default: stateless sessions suspend
+    /// to nothing.
+    fn suspend(&mut self) -> Result<Vec<PagedState>> {
         Ok(Vec::new())
     }
 
-    /// Swap-in: re-import the snapshots produced by `suspend`, after
-    /// which `step()` continues byte-identically to an unsuspended run.
-    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
-        if snaps.is_empty() {
+    /// Swap-in: rebuild device states from the block tables produced by
+    /// `suspend` (promoted back to RAM first if demoted), after which
+    /// `step()` continues byte-identically to an unsuspended run (for
+    /// `kv_quant = none`). Consumes the tables — the session frees the
+    /// page refs after streaming them back in.
+    fn resume(&mut self, states: Vec<PagedState>) -> Result<()> {
+        if states.is_empty() {
             Ok(())
         } else {
             anyhow::bail!("session holds no device state to resume")
@@ -158,13 +163,15 @@ pub trait Engine {
     fn kind(&self) -> EngineKind;
 
     /// Prefill and return a live session positioned after the first
-    /// token. `prefix` is the shared prompt-prefix snapshot cache (None
-    /// disables consultation) — see `crate::kvstore`.
+    /// token. `kv` supplies the shared page pool sessions park into on
+    /// suspend plus the optional prompt-prefix cache consulted during
+    /// prefill ([`KvCtx::disabled`] opts out of both) — see
+    /// `crate::kvstore`.
     fn start<'be>(
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
-        prefix: Option<&KvStore>,
+        kv: &KvCtx,
     ) -> Result<Box<dyn EngineSession + 'be>>;
 }
 
@@ -295,22 +302,29 @@ pub trait SessionFactory<'be> {
 
 /// Session factory over a real backend: builds the engine named by `kind`
 /// (with the base config's geometry) and starts it, threading the shared
-/// prompt-prefix cache into every prefill when one is attached.
+/// KV context (page pool + optional prompt-prefix cache) into every
+/// session.
 pub struct BackendFactory<'be> {
     be: &'be dyn Backend,
     base: Config,
-    prefix: Option<KvStore>,
+    kv: KvCtx,
 }
 
 impl<'be> BackendFactory<'be> {
     pub fn new(be: &'be dyn Backend, base: Config) -> BackendFactory<'be> {
-        BackendFactory { be, base, prefix: None }
+        BackendFactory { be, base, kv: KvCtx::disabled() }
     }
 
-    /// Attach a shared prompt-prefix snapshot cache.
-    pub fn with_prefix(mut self, store: KvStore) -> BackendFactory<'be> {
-        self.prefix = Some(store);
+    /// Attach a KV context (shared page pool + optional prefix cache).
+    pub fn with_kv(mut self, kv: KvCtx) -> BackendFactory<'be> {
+        self.kv = kv;
         self
+    }
+
+    /// Attach a shared prompt-prefix cache (the factory's pool becomes
+    /// the store's pool).
+    pub fn with_prefix(self, store: KvStore) -> BackendFactory<'be> {
+        self.with_kv(KvCtx::with_prefix(store))
     }
 }
 
@@ -322,7 +336,7 @@ impl<'be> SessionFactory<'be> for BackendFactory<'be> {
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut cfg = self.base.clone();
         cfg.engine = kind;
-        build(&cfg).start(self.be, req, self.prefix.as_ref())
+        build(&cfg).start(self.be, req, &self.kv)
     }
 
     fn estimate_bytes(&self, kind: EngineKind, req: &GenRequest) -> usize {
@@ -340,15 +354,19 @@ pub fn generate_with(
     generate_with_store(cfg, be, req, None)
 }
 
-/// [`generate_with`] consulting (and feeding) a prompt-prefix snapshot
-/// cache. Output is byte-identical with or without the store.
+/// [`generate_with`] consulting (and feeding) a prompt-prefix cache.
+/// Output is byte-identical with or without the store.
 pub fn generate_with_store(
     cfg: &Config,
     be: &dyn Backend,
     req: &GenRequest,
     prefix: Option<&KvStore>,
 ) -> Result<GenResult> {
-    let mut session = build(cfg).start(be, req, prefix)?;
+    let kv = match prefix {
+        Some(st) => KvCtx::with_prefix(st.clone()),
+        None => KvCtx::disabled(),
+    };
+    let mut session = build(cfg).start(be, req, &kv)?;
     while !session.is_finished() {
         session.step()?;
     }

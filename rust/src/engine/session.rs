@@ -20,7 +20,7 @@ use crate::backend::{
 };
 use crate::cache::{DraftCache, FullCache, PartialCache};
 use crate::config::SpecPvConfig;
-use crate::kvstore::{prefix::geom_hash, KvStore};
+use crate::kvstore::{prefix::geom_hash, KvCtx, KvPool, PagedState};
 use crate::manifest::{Consts, ModelInfo};
 use crate::model::{self, DraftOut, ReadOut};
 use crate::offload::OffloadSim;
@@ -90,48 +90,56 @@ impl<'a> TargetSession<'a> {
     /// Chunked prefill; pairs each chunk with the draft session (when
     /// present) so the draft consumes the chunk's features device-side.
     ///
-    /// When a [`KvStore`] is supplied, the prompt-prefix cache is
-    /// consulted first: the longest cached snapshot whose prefix matches
-    /// this prompt (at a chunk boundary) restores directly and only the
-    /// tail chunks run, so TTFT for a repeated long document collapses
-    /// from O(context) to O(tail). Cold prefills (and hits that this
-    /// prompt extends) insert a snapshot at the last whole-chunk boundary
-    /// on the way through. Cache hits are exact — the restored state is
-    /// byte-identical to recomputing the prefix.
+    /// When the [`KvCtx`] carries a prefix cache, it is consulted first:
+    /// the longest cached block table whose prefix matches this prompt
+    /// (at a chunk boundary) restores directly — the shared pages are
+    /// mapped by refcount bump, no new pages are allocated for the
+    /// prefix — and only the tail chunks run, so TTFT for a repeated
+    /// long document collapses from O(context) to O(tail). Cold prefills
+    /// (and hits that this prompt extends) park a block table at the
+    /// last whole-chunk boundary on the way through. Cache hits are
+    /// exact — the restored state is byte-identical to recomputing the
+    /// prefix.
     ///
     /// Returns (last-token logits, last-token fused features).
     pub fn prefill(
         &mut self,
         tokens: &[u32],
         mut draft: Option<&mut DraftSession<'a>>,
-        store: Option<&KvStore>,
+        kv: &KvCtx,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         if tokens.is_empty() {
             bail!("empty prompt");
         }
         let c = self.consts.chunk;
-        let store = store.filter(|s| s.enabled());
+        let store = kv.prefix.as_ref().filter(|s| s.enabled());
         let geom = prefix_geom(self.be.name(), &self.size, self.bucket, c, draft.is_some());
         // tokens already present after a prefix-cache restore
         let mut restored = 0usize;
         if let Some(st) = store {
-            if let Some((len, snaps)) = st.lookup_longest(geom, tokens, c) {
+            if let Some((len, states)) = st.lookup_longest(geom, tokens, c) {
                 let want = if draft.is_some() { 2 } else { 1 };
-                if snaps.len() == want {
-                    self.restore(&snaps[0])?;
+                if states.len() == want {
+                    self.restore_paged(&kv.pool, &states[0])?;
                     self.cache = FullCache::new(self.bucket);
                     for _ in 0..len / c {
                         self.cache.push_prefill(c)?;
                     }
                     self.offload.touch_full(len, self.kv_bpt());
                     if let Some(d) = draft.as_deref_mut() {
-                        d.restore(&snaps[1])?;
+                        d.restore_paged(&kv.pool, &states[1])?;
                         d.cache = DraftCache::new(d.bucket, d.consts.draft_region);
                         for _ in 0..len / c {
                             d.cache.push_prefill(c)?;
                         }
                     }
                     restored = len;
+                }
+                // the lookup bumped every page's refcount; the restore
+                // streamed what it needed, so the shared refs go back
+                // either way (count mismatch included)
+                for ps in &states {
+                    kv.pool.free_state(ps);
                 }
             }
         }
@@ -181,11 +189,11 @@ impl<'a> TargetSession<'a> {
                         + draft.as_deref().map(|d| d.state_bytes()).unwrap_or(0)
                         + boundary * 4;
                     if st.accepts(est) {
-                        let mut snaps = vec![self.export()?];
+                        let mut states = vec![self.park(&kv.pool)?];
                         if let Some(d) = draft.as_deref() {
-                            snaps.push(d.export()?);
+                            states.push(d.park(&kv.pool)?);
                         }
-                        st.insert(geom, &tokens[..boundary], snaps);
+                        st.insert(geom, &tokens[..boundary], states);
                     }
                 }
             }
@@ -210,6 +218,25 @@ impl<'a> TargetSession<'a> {
             bail!("snapshot {snap:?} does not match full session {} b{}", self.size, self.bucket);
         }
         self.state = self.be.import_state(snap)?;
+        Ok(())
+    }
+
+    /// Park the threaded state into a page pool (suspend / prefix-cache
+    /// insert). The caller owns the returned block table's page refs.
+    pub fn park(&self, pool: &KvPool) -> Result<PagedState> {
+        pool.park_state(self.be, StateKind::Full, &self.size, self.bucket, &self.state)
+    }
+
+    /// Rebuild the threaded state from a parked block table. Does not
+    /// consume the table's page refs — the caller frees them.
+    pub fn restore_paged(&mut self, pool: &KvPool, ps: &PagedState) -> Result<()> {
+        if ps.kind != StateKind::Full || ps.size != self.size || ps.bucket != self.bucket {
+            bail!(
+                "paged state {:?}/{}/b{} does not match full session {} b{}",
+                ps.kind, ps.size, ps.bucket, self.size, self.bucket
+            );
+        }
+        self.state = pool.unpark_state(self.be, ps)?;
         Ok(())
     }
 
@@ -508,6 +535,34 @@ impl<'a> PartialSession<'a> {
         Ok(())
     }
 
+    /// Park the partial state as pool pages (None before the first
+    /// gather — a suspended pre-refresh session has nothing to park).
+    pub fn park(&self, pool: &KvPool) -> Result<Option<PagedState>> {
+        match &self.state {
+            Some(s) => Ok(Some(pool.park_state(
+                self.be,
+                StateKind::Partial,
+                &self.size,
+                self.bucket,
+                s,
+            )?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Rebuild the partial state from a parked block table (cache
+    /// accounting lives on the session object and survives the swap).
+    pub fn restore_paged(&mut self, pool: &KvPool, ps: &PagedState) -> Result<()> {
+        if ps.kind != StateKind::Partial || ps.size != self.size || ps.bucket != self.bucket {
+            bail!(
+                "paged state {:?}/{}/b{} does not match partial session {} p{}",
+                ps.kind, ps.size, ps.bucket, self.size, self.bucket
+            );
+        }
+        self.state = Some(pool.unpark_state(self.be, ps)?);
+        Ok(())
+    }
+
     /// Drop the device state (swap-out); `restore` re-installs it.
     pub fn drop_state(&mut self) {
         self.state = None;
@@ -625,6 +680,24 @@ impl<'a> DraftSession<'a> {
             bail!("snapshot {snap:?} does not match draft session {} b{}", self.size, self.bucket);
         }
         self.state = self.be.import_state(snap)?;
+        Ok(())
+    }
+
+    /// Park the draft state into a page pool (suspend / prefix-cache
+    /// insert).
+    pub fn park(&self, pool: &KvPool) -> Result<PagedState> {
+        pool.park_state(self.be, StateKind::Draft, &self.size, self.bucket, &self.state)
+    }
+
+    /// Rebuild the draft state from a parked block table.
+    pub fn restore_paged(&mut self, pool: &KvPool, ps: &PagedState) -> Result<()> {
+        if ps.kind != StateKind::Draft || ps.size != self.size || ps.bucket != self.bucket {
+            bail!(
+                "paged state {:?}/{}/b{} does not match draft session {} b{}",
+                ps.kind, ps.size, ps.bucket, self.size, self.bucket
+            );
+        }
+        self.state = pool.unpark_state(self.be, ps)?;
         Ok(())
     }
 
@@ -837,6 +910,24 @@ impl<'a> TinySession<'a> {
             bail!("snapshot {snap:?} does not match tiny session b{}", self.bucket);
         }
         self.state = self.be.import_state(snap)?;
+        Ok(())
+    }
+
+    /// Park the tiny state into a page pool (suspend).
+    pub fn park(&self, pool: &KvPool) -> Result<PagedState> {
+        pool.park_state(self.be, StateKind::Tiny, "tiny", self.bucket, &self.state)
+    }
+
+    /// Rebuild the tiny state from a parked block table (ring cursors
+    /// live on the session object and survive the swap).
+    pub fn restore_paged(&mut self, pool: &KvPool, ps: &PagedState) -> Result<()> {
+        if ps.kind != StateKind::Tiny || ps.bucket != self.bucket {
+            bail!(
+                "paged state {:?}/b{} does not match tiny session b{}",
+                ps.kind, ps.bucket, self.bucket
+            );
+        }
+        self.state = pool.unpark_state(self.be, ps)?;
         Ok(())
     }
 

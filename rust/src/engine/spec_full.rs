@@ -8,9 +8,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
+use crate::backend::{Backend, StateBuf, StateKind};
 use crate::config::Config;
-use crate::kvstore::KvStore;
+use crate::kvstore::{KvCtx, KvPool, PagedState};
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::{bucket_need, ReadOut};
@@ -80,6 +80,7 @@ pub struct SpecFullSession<'rt> {
     be: &'rt dyn Backend,
     target: TargetSession<'rt>,
     draft: DraftSession<'rt>,
+    pool: KvPool,
     out: SessionOut,
     /// the current round's tree root (last emitted by the target itself)
     bonus: u32,
@@ -107,7 +108,7 @@ impl Engine for SpecFullEngine {
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
-        prefix: Option<&KvStore>,
+        kv: &KvCtx,
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
@@ -122,7 +123,7 @@ impl Engine for SpecFullEngine {
         let mut draft = DraftSession::new(be, &self.cfg.model_size, target.bucket)?;
 
         let mut sw = Stopwatch::new();
-        let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft), prefix)?;
+        let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft), kv)?;
         stats.prefill_secs = sw.lap();
 
         let bonus = pick_token(&logits, req.temperature, &mut rng);
@@ -137,6 +138,7 @@ impl Engine for SpecFullEngine {
             be,
             target,
             draft,
+            pool: kv.pool.clone(),
             out,
             bonus,
             chain: Vec::new(),
@@ -314,30 +316,33 @@ impl EngineSession for SpecFullSession<'_> {
         self.target.state_bytes() + self.draft.state_bytes()
     }
 
-    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
-        let snaps = vec![self.target.export()?, self.draft.export()?];
+    fn suspend(&mut self) -> Result<Vec<PagedState>> {
+        let states = vec![self.target.park(&self.pool)?, self.draft.park(&self.pool)?];
         self.target.drop_state();
         self.draft.drop_state();
-        Ok(snaps)
+        Ok(states)
     }
 
-    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+    fn resume(&mut self, states: Vec<PagedState>) -> Result<()> {
         let (mut full, mut draft) = (false, false);
-        for s in &snaps {
-            match s.kind {
+        for ps in &states {
+            match ps.kind {
                 StateKind::Full => {
-                    self.target.restore(s)?;
+                    self.target.restore_paged(&self.pool, ps)?;
                     full = true;
                 }
                 StateKind::Draft => {
-                    self.draft.restore(s)?;
+                    self.draft.restore_paged(&self.pool, ps)?;
                     draft = true;
                 }
-                k => bail!("unexpected {k:?} snapshot for a spec_full session"),
+                k => bail!("unexpected {k:?} block table for a spec_full session"),
             }
         }
         if !(full && draft) {
-            bail!("spec_full resume needs full + draft snapshots");
+            bail!("spec_full resume needs full + draft block tables");
+        }
+        for ps in &states {
+            self.pool.free_state(ps);
         }
         Ok(())
     }

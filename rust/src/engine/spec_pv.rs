@@ -23,9 +23,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
+use crate::backend::{Backend, StateBuf, StateKind};
 use crate::config::Config;
-use crate::kvstore::KvStore;
+use crate::kvstore::{KvCtx, KvPool, PagedState};
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::{bucket_need, ReadOut};
@@ -66,6 +66,7 @@ pub struct SpecPvSession<'rt> {
     target: TargetSession<'rt>,
     draft: DraftSession<'rt>,
     partial: PartialSession<'rt>,
+    pool: KvPool,
     out: SessionOut,
     /// the current round's tree root (last emitted by the target itself)
     bonus: u32,
@@ -103,7 +104,7 @@ impl Engine for SpecPvEngine {
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
-        prefix: Option<&KvStore>,
+        kv: &KvCtx,
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
@@ -128,7 +129,7 @@ impl Engine for SpecPvEngine {
         let big_refresh = widths.get(1).copied();
 
         let mut sw = Stopwatch::new();
-        let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft), prefix)?;
+        let (logits, _feat_last) = target.prefill(&req.prompt, Some(&mut draft), kv)?;
         stats.prefill_secs = sw.lap();
 
         let bonus = pick_token(&logits, req.temperature, &mut rng);
@@ -142,6 +143,7 @@ impl Engine for SpecPvEngine {
             target,
             draft,
             partial,
+            pool: kv.pool.clone(),
             out,
             bonus,
             chain: Vec::new(),
@@ -410,38 +412,41 @@ impl EngineSession for SpecPvSession<'_> {
         self.target.state_bytes() + self.draft.state_bytes() + self.partial.state_bytes()
     }
 
-    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
-        let mut snaps = vec![self.target.export()?, self.draft.export()?];
-        if let Some(p) = self.partial.export()? {
-            snaps.push(p);
+    fn suspend(&mut self) -> Result<Vec<PagedState>> {
+        let mut states = vec![self.target.park(&self.pool)?, self.draft.park(&self.pool)?];
+        if let Some(p) = self.partial.park(&self.pool)? {
+            states.push(p);
         }
         self.target.drop_state();
         self.draft.drop_state();
         self.partial.drop_state();
-        Ok(snaps)
+        Ok(states)
     }
 
-    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+    fn resume(&mut self, states: Vec<PagedState>) -> Result<()> {
         let (mut full, mut draft) = (false, false);
-        for s in &snaps {
-            match s.kind {
+        for ps in &states {
+            match ps.kind {
                 StateKind::Full => {
-                    self.target.restore(s)?;
+                    self.target.restore_paged(&self.pool, ps)?;
                     full = true;
                 }
                 StateKind::Draft => {
-                    self.draft.restore(s)?;
+                    self.draft.restore_paged(&self.pool, ps)?;
                     draft = true;
                 }
-                // the partial snapshot is present iff a core was
-                // installed before the swap; its cache accounting (core
-                // length, buffer, pv chain) never left the session
-                StateKind::Partial => self.partial.restore(s)?,
-                k => bail!("unexpected {k:?} snapshot for a spec_pv session"),
+                // the partial table is present iff a core was installed
+                // before the swap; its cache accounting (core length,
+                // buffer, pv chain) never left the session
+                StateKind::Partial => self.partial.restore_paged(&self.pool, ps)?,
+                k => bail!("unexpected {k:?} block table for a spec_pv session"),
             }
         }
         if !(full && draft) {
-            bail!("spec_pv resume needs full + draft snapshots");
+            bail!("spec_pv resume needs full + draft block tables");
+        }
+        for ps in &states {
+            self.pool.free_state(ps);
         }
         Ok(())
     }

@@ -11,9 +11,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
+use crate::backend::{Backend, StateBuf, StateKind};
 use crate::config::Config;
-use crate::kvstore::KvStore;
+use crate::kvstore::{KvCtx, KvPool, PagedState};
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
@@ -77,6 +77,7 @@ enum Phase {
 pub struct TokenSwiftSession<'rt> {
     be: &'rt dyn Backend,
     target: TargetSession<'rt>,
+    pool: KvPool,
     out: SessionOut,
     bonus: u32,
     /// top-layer feature of the deepest accepted node (drives the heads)
@@ -102,7 +103,7 @@ impl Engine for TokenSwiftEngine {
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
-        prefix: Option<&KvStore>,
+        kv: &KvCtx,
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
@@ -119,7 +120,7 @@ impl Engine for TokenSwiftEngine {
         let h = target.info.d_model;
 
         let mut sw = Stopwatch::new();
-        let (logits, feat_last) = target.prefill(&req.prompt, None, prefix)?;
+        let (logits, feat_last) = target.prefill(&req.prompt, None, kv)?;
         stats.prefill_secs = sw.lap();
 
         let bonus = pick_token(&logits, req.temperature, &mut rng);
@@ -130,6 +131,7 @@ impl Engine for TokenSwiftEngine {
         Ok(Box::new(TokenSwiftSession {
             be,
             target,
+            pool: kv.pool.clone(),
             out,
             bonus,
             feat,
@@ -249,25 +251,28 @@ impl EngineSession for TokenSwiftSession<'_> {
         self.target.state_bytes()
     }
 
-    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
-        let snap = self.target.export()?;
+    fn suspend(&mut self) -> Result<Vec<PagedState>> {
+        let ps = self.target.park(&self.pool)?;
         self.target.drop_state();
-        Ok(vec![snap])
+        Ok(vec![ps])
     }
 
-    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+    fn resume(&mut self, states: Vec<PagedState>) -> Result<()> {
         let mut full = false;
-        for s in &snaps {
-            match s.kind {
+        for ps in &states {
+            match ps.kind {
                 StateKind::Full => {
-                    self.target.restore(s)?;
+                    self.target.restore_paged(&self.pool, ps)?;
                     full = true;
                 }
-                k => bail!("unexpected {k:?} snapshot for a tokenswift session"),
+                k => bail!("unexpected {k:?} block table for a tokenswift session"),
             }
         }
         if !full {
-            bail!("tokenswift resume needs a full snapshot");
+            bail!("tokenswift resume needs a full block table");
+        }
+        for ps in &states {
+            self.pool.free_state(ps);
         }
         Ok(())
     }

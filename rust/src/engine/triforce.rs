@@ -16,9 +16,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
+use crate::backend::{Backend, StateBuf, StateKind};
 use crate::config::Config;
-use crate::kvstore::KvStore;
+use crate::kvstore::{KvCtx, KvPool, PagedState};
 use crate::manifest::Consts;
 use crate::metrics::GenStats;
 use crate::model::bucket_need;
@@ -71,6 +71,7 @@ pub struct TriForceSession<'rt> {
     be: &'rt dyn Backend,
     target: TargetSession<'rt>,
     tiny: TinySession<'rt>,
+    pool: KvPool,
     out: SessionOut,
     bonus: u32,
     rng: Rng,
@@ -93,7 +94,7 @@ impl Engine for TriForceEngine {
         &self,
         be: &'be dyn Backend,
         req: &GenRequest,
-        prefix: Option<&KvStore>,
+        kv: &KvCtx,
     ) -> Result<Box<dyn EngineSession + 'be>> {
         let mut stats = GenStats::default();
         let mut rng = Rng::new(req.seed | 1);
@@ -109,7 +110,7 @@ impl Engine for TriForceEngine {
         let mut tiny = TinySession::new(be)?;
 
         let mut sw = Stopwatch::new();
-        let (logits, _) = target.prefill(&req.prompt, None, prefix)?;
+        let (logits, _) = target.prefill(&req.prompt, None, kv)?;
         tiny.prefill(&req.prompt, gamma)?;
         stats.prefill_secs = sw.lap();
 
@@ -121,6 +122,7 @@ impl Engine for TriForceEngine {
             be,
             target,
             tiny,
+            pool: kv.pool.clone(),
             out,
             bonus,
             rng,
@@ -287,30 +289,33 @@ impl EngineSession for TriForceSession<'_> {
         self.target.state_bytes() + self.tiny.state_bytes()
     }
 
-    fn suspend(&mut self) -> Result<Vec<StateSnapshot>> {
-        let snaps = vec![self.target.export()?, self.tiny.export()?];
+    fn suspend(&mut self) -> Result<Vec<PagedState>> {
+        let states = vec![self.target.park(&self.pool)?, self.tiny.park(&self.pool)?];
         self.target.drop_state();
         self.tiny.drop_state();
-        Ok(snaps)
+        Ok(states)
     }
 
-    fn resume(&mut self, snaps: Vec<StateSnapshot>) -> Result<()> {
+    fn resume(&mut self, states: Vec<PagedState>) -> Result<()> {
         let (mut full, mut tiny) = (false, false);
-        for s in &snaps {
-            match s.kind {
+        for ps in &states {
+            match ps.kind {
                 StateKind::Full => {
-                    self.target.restore(s)?;
+                    self.target.restore_paged(&self.pool, ps)?;
                     full = true;
                 }
                 StateKind::Tiny => {
-                    self.tiny.restore(s)?;
+                    self.tiny.restore_paged(&self.pool, ps)?;
                     tiny = true;
                 }
-                k => bail!("unexpected {k:?} snapshot for a triforce session"),
+                k => bail!("unexpected {k:?} block table for a triforce session"),
             }
         }
         if !(full && tiny) {
-            bail!("triforce resume needs full + tiny snapshots");
+            bail!("triforce resume needs full + tiny block tables");
+        }
+        for ps in &states {
+            self.pool.free_state(ps);
         }
         Ok(())
     }

@@ -1,55 +1,107 @@
 //! KV state manager: the subsystem that makes long-context KV state a
 //! first-class, *movable* resource instead of an opaque device buffer
-//! (DESIGN.md §11).
+//! (DESIGN.md §11, §13).
 //!
 //! Three cooperating pieces, all built on the `Backend` trait's
-//! snapshot/restore ABI ([`crate::backend::StateSnapshot`]):
+//! page-granular state ABI (`export_pages`/`import_pages`):
 //!
+//! * [`KvPool`] ([`pool`]) — the **paged block pool**: parked state
+//!   lives as fixed-size (`kv_page_bytes`) refcounted pages with
+//!   content-hash dedup, copy-on-write updates, optional int8
+//!   quantization for cold pages (`kv_quant`) and a disk spill tier
+//!   (`kv_swap_dir`). The pool doubles as the byte-denominated
+//!   **admission ledger** the coordinator gates on (`kv_budget_bytes`).
 //! * [`KvStore`] ([`prefix`]) — a content-addressed **prompt-prefix
-//!   cache**: post-prefill snapshots keyed by (geometry, prompt-prefix
-//!   hash, prefix length) with LRU + byte-budget eviction.
-//!   `TargetSession::prefill` consults it, so a request whose prompt
-//!   extends a cached prefix restores the snapshot and prefills only the
-//!   tail — TTFT for repeated long documents collapses from O(context)
-//!   to O(tail).
-//! * [`KvPool`] ([`pool`]) — **byte-denominated admission accounting**:
-//!   the coordinator registers each live session's resident state bytes
-//!   (from `Backend::state_bytes`) and gates admission on a configurable
-//!   budget (`kv_budget_bytes`) instead of a session head-count alone.
-//! * [`SwapStore`] ([`swap`]) — the **host store for swapped-out
-//!   sessions**: under byte pressure the coordinator preempts the
-//!   lowest-priority active session, exports its states here, and
-//!   re-queues it; re-admission imports the snapshots back
-//!   (restore-on-resume), turning step-resumable sessions into real
-//!   elastic scheduling.
+//!   cache**: post-prefill [`PagedState`] block tables keyed by
+//!   (geometry, prompt-prefix hash, prefix length) with LRU +
+//!   byte-budget eviction. A hit maps the cached pages into the new
+//!   session's table (refcount bump, zero pages allocated) and prefills
+//!   only the tail — TTFT for repeated long documents collapses from
+//!   O(context) to O(tail).
+//! * [`SwapStore`] ([`swap`]) — the **disk tier**: spill files with
+//!   checksummed page blobs and async prefetch on resume. Under byte
+//!   pressure the coordinator preempts the lowest-priority active
+//!   session, parks its states into the pool, demotes the unshared
+//!   pages ([`KvPool::park_cold`]) and re-queues it; re-admission
+//!   promotes the pages and rebuilds the live state
+//!   (restore-on-resume).
 //!
-//! Everything is exact: export → import → continue is byte-identical to
-//! an unsuspended run (pinned by `rust/tests/kvstore.rs`), so neither
-//! prefix hits nor swaps are observable in the output stream.
+//! Everything resident as f32 is exact: park → unpark → continue is
+//! byte-identical to an unsuspended run (pinned by
+//! `rust/tests/kvstore.rs` and the `rust/tests/paged_pool.rs` oracle
+//! property test). Int8 applies only to cold/swapped pages under
+//! `kv_quant = int8` and is tolerance-bounded by contract.
 
 pub mod pool;
 pub mod prefix;
 pub mod swap;
 
-pub use pool::KvPool;
+pub use pool::{KvPool, PageId, PagedState, PoolStats, DEFAULT_PAGE_BYTES};
 pub use prefix::{KvStore, PrefixStats};
 pub use swap::SwapStore;
 
+use crate::config::Config;
+
+/// The KV context threaded from the coordinator (or a bare
+/// `generate_with`) into every engine session: one shared page pool plus
+/// an optional prefix cache whose entries live in that same pool.
+#[derive(Clone)]
+pub struct KvCtx {
+    pub pool: KvPool,
+    pub prefix: Option<KvStore>,
+}
+
+impl KvCtx {
+    /// No budget, no prefix cache, default pages — the context used by
+    /// one-shot generation and tests that don't exercise the KV tier.
+    pub fn disabled() -> KvCtx {
+        KvCtx { pool: KvPool::new(0), prefix: None }
+    }
+
+    /// A context over an existing pool, no prefix cache.
+    pub fn with_pool(pool: KvPool) -> KvCtx {
+        KvCtx { pool, prefix: None }
+    }
+
+    /// A context sharing a prefix store's pool.
+    pub fn with_prefix(store: KvStore) -> KvCtx {
+        KvCtx { pool: store.pool(), prefix: Some(store) }
+    }
+
+    /// Build the full context a config describes: a pool sized by
+    /// `kv_budget_bytes`/`kv_page_bytes` with the configured swap dir
+    /// and cold-page quantization, plus a prefix cache when
+    /// `prefix_cache_bytes > 0`.
+    pub fn from_config(cfg: &Config) -> KvCtx {
+        let pool = KvPool::with_opts(
+            cfg.kv_budget_bytes,
+            cfg.kv_page_bytes,
+            cfg.swap_dir().as_deref(),
+            cfg.kv_quant,
+        );
+        let prefix = (cfg.prefix_cache_bytes > 0)
+            .then(|| KvStore::with_pool(cfg.prefix_cache_bytes, pool.clone()));
+        KvCtx { pool, prefix }
+    }
+}
+
 /// Aggregated snapshot of the KV subsystem, reported by the server's
-/// `{"op":"cache"}` admin op and `Coordinator::kv_stats`.
+/// admin `kv`/`cache` subcommands and `Coordinator::kv_stats`.
 #[derive(Debug, Default, Clone)]
 pub struct KvStats {
     pub prefix: PrefixStats,
-    /// device bytes currently registered to live sessions
+    /// working-set bytes currently reserved by live sessions
     pub resident_bytes: usize,
     /// admission byte budget (0 = unlimited)
     pub budget_bytes: usize,
-    /// live sessions with registered state
+    /// live sessions with a reservation
     pub live_states: usize,
-    /// sessions currently swapped out to the host store
+    /// sessions currently parked (preempted, pages possibly demoted)
     pub swapped: usize,
-    /// host bytes held by swapped-out snapshots
+    /// flat-slab-equivalent bytes of parked sessions
     pub swap_bytes: usize,
     pub swap_outs: u64,
     pub swap_ins: u64,
+    /// page-level pool residency (dedup/CoW/quant/spill gauges)
+    pub pages: PoolStats,
 }

@@ -1,76 +1,845 @@
-//! Byte-denominated admission accounting for live KV state.
+//! Paged KV block pool: fixed-size refcounted pages with content dedup,
+//! copy-on-write updates, optional int8 quantization for cold pages, and
+//! a disk spill tier (DESIGN.md §13).
 //!
-//! The coordinator registers every live session's resident state bytes
-//! (computed from `Backend::state_bytes` over the session's full /
-//! partial / draft / tiny buckets) and asks [`KvPool::admits`] before
-//! starting or resuming a session. The KV footprint — not a session
-//! head-count — is what governs who runs; `max_active` remains only as a
-//! scheduling-width cap.
+//! Session state parked here (prefix-cache entries, suspended sessions)
+//! is stored as a [`PagedState`] — a per-state block table of page ids
+//! into the pool — instead of a flat slab. Pages are deduplicated by
+//! content hash (verified byte-exact before sharing), so the all-zero
+//! padding tail of a bucket-sized state costs one page, and identical
+//! prefix KV across parked sessions is stored once. A page is never
+//! mutated while shared: [`KvPool::update`] keeps the page when the new
+//! content is byte-identical and otherwise allocates (write-to-shared
+//! triggers the copy), which is what makes mapping cached prefix pages
+//! into a new session's table safe.
+//!
+//! The pool doubles as the byte-denominated **admission** ledger the
+//! coordinator has always used: [`KvPool::reserve`]/[`KvPool::release`]
+//! track each live session's working-set bytes against
+//! `kv_budget_bytes`, unchanged semantics from the flat-slab pool
+//! (unlimited at 0; an empty pool always admits so one oversized session
+//! degrades to run-alone instead of deadlocking).
+//!
+//! Everything resident as f32 is exact; int8 applies only to pages
+//! quantized by [`KvPool::park_cold`] (cold/swapped pages) and is
+//! tolerance-bounded by contract.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
 
-/// Tracks resident bytes per live session against a budget.
-#[derive(Debug, Default)]
-pub struct KvPool {
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{copy_image_range, page_count, Backend, StateBuf, StateKind};
+use crate::config::KvQuant;
+use crate::kvstore::swap::SwapStore;
+
+/// Index of a page slot within the pool.
+pub type PageId = u32;
+
+/// Default `kv_page_bytes`: 64 KiB ≙ 16 Ki f32 elements per page.
+pub const DEFAULT_PAGE_BYTES: usize = 64 << 10;
+
+/// Pages per `export_pages` call when parking a backend state — bounds
+/// scratch memory and (on download-whole backends) transfer count.
+const PARK_BATCH_PAGES: usize = 32;
+
+/// A parked backend state as a block table of pool pages. The canonical
+/// flat image is `data ++ extra` of the matching [`StateSnapshot`]
+/// (`crate::backend::StateSnapshot`), split into page-sized runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PagedState {
+    pub kind: StateKind,
+    pub size: String,
+    pub bucket: usize,
+    /// f32 elements of the snapshot `data` section
+    pub data_len: usize,
+    /// f32 elements of the snapshot `extra` section
+    pub extra_len: usize,
+    /// block table: page ids in image order
+    pub pages: Vec<PageId>,
+}
+
+impl PagedState {
+    /// Total f32 elements of the flat image.
+    pub fn image_len(&self) -> usize {
+        self.data_len + self.extra_len
+    }
+
+    /// Bytes of the flat-slab equivalent (what a non-paged store holds).
+    pub fn logical_bytes(&self) -> usize {
+        self.image_len() * 4
+    }
+}
+
+/// Point-in-time pool gauges (page-level residency for `Registry`).
+#[derive(Debug, Default, Clone)]
+pub struct PoolStats {
+    pub page_bytes: usize,
+    /// live page slots (RAM + disk)
+    pub pages_resident: usize,
+    /// live slots with refcount ≥ 2
+    pub pages_shared: usize,
+    /// live slots stored as all-zero (no payload RAM)
+    pub pages_zero: usize,
+    /// live slots currently spilled to disk
+    pub pages_spilled: usize,
+    /// actual RAM payload bytes across live pages
+    pub ram_bytes: usize,
+    /// bytes on disk across spilled pages
+    pub disk_bytes: usize,
+    /// internal fragmentation: unused tail capacity of live pages, %
+    pub frag_pct: f64,
+    /// alloc requests (dedup hits included)
+    pub allocs: u64,
+    /// pages actually materialized (alloc misses)
+    pub page_allocs: u64,
+    pub dedup_hits: u64,
+    /// updates that diverged from a shared page (true CoW copies)
+    pub cow_copies: u64,
+    /// pages quantized to int8 by `park_cold`
+    pub quant_pages: u64,
+    pub spills: u64,
+    pub spill_loads: u64,
+    /// spill decode failures (corrupt/truncated file on resume)
+    pub swap_faults: u64,
+}
+
+enum PageData {
+    /// slot on the free list
+    Free,
+    /// all-zero payload, no storage
+    Zero,
+    F32(Vec<f32>),
+    Int8 { q: Vec<i8>, scale: f32 },
+    /// payload in the swap tier under `spill key = gen << 32 | id`
+    Disk { blob_bytes: usize },
+}
+
+struct Slot {
+    refs: u32,
+    /// generation, bumped on free — part of the spill key so a reused
+    /// slot id can never resolve a stale spill file
+    gen: u32,
+    /// payload f32 elements
+    len: usize,
+    /// content hash of the payload (dedup index key)
+    hash: u64,
+    data: PageData,
+}
+
+struct PoolInner {
+    page_bytes: usize,
+    quant: KvQuant,
+    swap: Option<SwapStore>,
+
+    slots: Vec<Slot>,
+    free: Vec<PageId>,
+    /// content hash -> candidate page ids (RAM, dedup-eligible slots)
+    index: HashMap<u64, Vec<PageId>>,
+    ram_bytes: usize,
+
+    // ---- byte-denominated admission ledger (reservation accounting) ----
     budget: usize,
-    resident: usize,
+    reserved: usize,
     by_id: HashMap<u64, usize>,
+
+    // ---- counters ----
+    allocs: u64,
+    page_allocs: u64,
+    dedup_hits: u64,
+    cow_copies: u64,
+    quant_pages: u64,
+    spills: u64,
+    spill_loads: u64,
+    swap_faults: u64,
+}
+
+fn hash_f32(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Byte-exact payload comparison (bit-level: preserves -0.0 and NaN
+/// payloads) against dedup-eligible storage only.
+fn slot_matches(slot: &Slot, content: &[f32]) -> bool {
+    if slot.len != content.len() {
+        return false;
+    }
+    match &slot.data {
+        PageData::Zero => content.iter().all(|x| x.to_bits() == 0),
+        PageData::F32(v) => {
+            v.iter().zip(content).all(|(a, b)| a.to_bits() == b.to_bits())
+        }
+        _ => false,
+    }
+}
+
+fn quantize_int8(v: &[f32]) -> (Vec<i8>, f32) {
+    let absmax = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+    let q = v
+        .iter()
+        .map(|x| (x / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (q, scale)
+}
+
+// ---- spill-file codec: magic, flags, len, scale, checksum, payload ----
+
+const SPILL_MAGIC: u32 = 0x4B56_5047; // "KVPG"
+const SPILL_F32: u32 = 0;
+const SPILL_INT8: u32 = 1;
+
+fn encode_page(data: &PageData, len: usize) -> Vec<u8> {
+    let (flags, scale, payload): (u32, f32, Vec<u8>) = match data {
+        PageData::F32(v) => {
+            (SPILL_F32, 0.0, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        PageData::Int8 { q, scale } => {
+            (SPILL_INT8, *scale, q.iter().map(|&b| b as u8).collect())
+        }
+        _ => unreachable!("only RAM payload pages are spilled"),
+    };
+    let mut out = Vec::with_capacity(24 + payload.len());
+    out.extend_from_slice(&SPILL_MAGIC.to_le_bytes());
+    out.extend_from_slice(&flags.to_le_bytes());
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&hash_bytes(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Decode + validate a spill blob; the error text is what a swap-tier
+/// fault surfaces through the coordinator (clean re-queue, never panic).
+fn decode_page(blob: &[u8], want_len: usize) -> Result<PageData> {
+    if blob.len() < 24 {
+        bail!("truncated spill blob ({} bytes)", blob.len());
+    }
+    let word = |i: usize| u32::from_le_bytes(blob[i..i + 4].try_into().unwrap());
+    if word(0) != SPILL_MAGIC {
+        bail!("bad spill magic {:#x}", word(0));
+    }
+    let flags = word(4);
+    let len = word(8) as usize;
+    let scale = f32::from_le_bytes(blob[12..16].try_into().unwrap());
+    let sum = u64::from_le_bytes(blob[16..24].try_into().unwrap());
+    let payload = &blob[24..];
+    if len != want_len {
+        bail!("spill length mismatch (file {len}, slot {want_len})");
+    }
+    if hash_bytes(payload) != sum {
+        bail!("spill checksum mismatch ({} payload bytes)", payload.len());
+    }
+    match flags {
+        SPILL_F32 => {
+            if payload.len() != len * 4 {
+                bail!("spill f32 payload truncated ({} of {})", payload.len(), len * 4);
+            }
+            Ok(PageData::F32(
+                payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ))
+        }
+        SPILL_INT8 => {
+            if payload.len() != len {
+                bail!("spill int8 payload truncated ({} of {len})", payload.len());
+            }
+            Ok(PageData::Int8 {
+                q: payload.iter().map(|&b| b as i8).collect(),
+                scale,
+            })
+        }
+        f => bail!("unknown spill flags {f:#x}"),
+    }
+}
+
+impl PoolInner {
+    fn spill_key(&self, id: PageId) -> u64 {
+        ((self.slots[id as usize].gen as u64) << 32) | id as u64
+    }
+
+    fn deindex(&mut self, id: PageId) {
+        let hash = self.slots[id as usize].hash;
+        if let Some(v) = self.index.get_mut(&hash) {
+            v.retain(|&x| x != id);
+            if v.is_empty() {
+                self.index.remove(&hash);
+            }
+        }
+    }
+
+    fn ram_bytes_of(data: &PageData) -> usize {
+        match data {
+            PageData::F32(v) => v.len() * 4,
+            PageData::Int8 { q, .. } => q.len(),
+            _ => 0,
+        }
+    }
+
+    fn alloc(&mut self, content: &[f32]) -> PageId {
+        self.allocs += 1;
+        let hash = hash_f32(content);
+        if let Some(cands) = self.index.get(&hash) {
+            let cands = cands.clone();
+            for id in cands {
+                if slot_matches(&self.slots[id as usize], content) {
+                    self.slots[id as usize].refs += 1;
+                    self.dedup_hits += 1;
+                    return id;
+                }
+            }
+        }
+        let zero = content.iter().all(|x| x.to_bits() == 0);
+        let data = if zero {
+            PageData::Zero
+        } else {
+            self.ram_bytes += content.len() * 4;
+            PageData::F32(content.to_vec())
+        };
+        let id = match self.free.pop() {
+            Some(id) => {
+                let slot = &mut self.slots[id as usize];
+                slot.refs = 1;
+                slot.len = content.len();
+                slot.hash = hash;
+                slot.data = data;
+                id
+            }
+            None => {
+                self.slots.push(Slot {
+                    refs: 1,
+                    gen: 0,
+                    len: content.len(),
+                    hash,
+                    data,
+                });
+                (self.slots.len() - 1) as PageId
+            }
+        };
+        self.index.entry(hash).or_default().push(id);
+        self.page_allocs += 1;
+        id
+    }
+
+    fn free(&mut self, id: PageId) {
+        let slot = &self.slots[id as usize];
+        debug_assert!(slot.refs > 0, "double free of kv page {id}");
+        if slot.refs > 1 {
+            self.slots[id as usize].refs -= 1;
+            return;
+        }
+        self.deindex(id);
+        let key = self.spill_key(id);
+        let slot = &mut self.slots[id as usize];
+        slot.refs = 0;
+        slot.gen = slot.gen.wrapping_add(1);
+        let data = std::mem::replace(&mut slot.data, PageData::Free);
+        slot.len = 0;
+        self.ram_bytes -= Self::ram_bytes_of(&data);
+        if matches!(data, PageData::Disk { .. }) {
+            if let Some(swap) = self.swap.as_mut() {
+                swap.remove(key);
+            }
+        }
+        self.free.push(id);
+    }
+
+    /// Materialize a page's payload into `out` (dequantizing / loading
+    /// from disk as needed). Disk reads do not promote — see `promote`.
+    fn read_into(&mut self, id: PageId, out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        let key = self.spill_key(id);
+        if matches!(self.slots[id as usize].data, PageData::Disk { .. }) {
+            let data = self.load_spilled(id, key)?;
+            match &data {
+                PageData::F32(v) => out.extend_from_slice(v),
+                PageData::Int8 { q, scale } => {
+                    out.extend(q.iter().map(|&b| b as f32 * *scale))
+                }
+                _ => unreachable!(),
+            }
+            return Ok(());
+        }
+        let slot = &self.slots[id as usize];
+        match &slot.data {
+            PageData::Free => bail!("read of freed kv page {id}"),
+            PageData::Zero => out.resize(slot.len, 0.0),
+            PageData::F32(v) => out.extend_from_slice(v),
+            PageData::Int8 { q, scale } => {
+                let scale = *scale;
+                out.extend(q.iter().map(|&b| b as f32 * scale));
+            }
+            PageData::Disk { .. } => unreachable!(),
+        }
+        Ok(())
+    }
+
+    fn load_spilled(&mut self, id: PageId, key: u64) -> Result<PageData> {
+        let len = self.slots[id as usize].len;
+        let swap = self
+            .swap
+            .as_mut()
+            .with_context(|| format!("kv page {id} spilled but no swap tier configured"))?;
+        let loaded = swap
+            .read(key)
+            .and_then(|blob| decode_page(&blob, len))
+            .with_context(|| format!("kv spill page {id}"));
+        match loaded {
+            Ok(data) => {
+                self.spill_loads += 1;
+                Ok(data)
+            }
+            Err(e) => {
+                self.swap_faults += 1;
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Cheap-clone shared handle to the paged pool (single-threaded, like
+/// [`crate::kvstore::KvStore`]); the prefix cache, coordinator, and
+/// engine sessions all hold clones of one pool.
+#[derive(Clone)]
+pub struct KvPool {
+    inner: Rc<RefCell<PoolInner>>,
 }
 
 impl KvPool {
-    /// A pool with `budget_bytes` capacity (0 = unlimited).
+    /// A pool with `budget_bytes` admission capacity (0 = unlimited) and
+    /// default page size, no quantization, no disk tier.
     pub fn new(budget_bytes: usize) -> KvPool {
-        KvPool { budget: budget_bytes, resident: 0, by_id: HashMap::new() }
+        KvPool::with_opts(budget_bytes, DEFAULT_PAGE_BYTES, None, KvQuant::None)
     }
+
+    /// Full constructor: `page_bytes` is clamped to a positive multiple
+    /// of 4; `swap_dir` enables the disk tier (created lazily on first
+    /// spill); `quant` selects cold-page storage.
+    pub fn with_opts(
+        budget_bytes: usize,
+        page_bytes: usize,
+        swap_dir: Option<&Path>,
+        quant: KvQuant,
+    ) -> KvPool {
+        let page_bytes = (page_bytes.max(4)) & !3;
+        KvPool {
+            inner: Rc::new(RefCell::new(PoolInner {
+                page_bytes,
+                quant,
+                swap: swap_dir.map(SwapStore::new),
+                slots: Vec::new(),
+                free: Vec::new(),
+                index: HashMap::new(),
+                ram_bytes: 0,
+                budget: budget_bytes,
+                reserved: 0,
+                by_id: HashMap::new(),
+                allocs: 0,
+                page_allocs: 0,
+                dedup_hits: 0,
+                cow_copies: 0,
+                quant_pages: 0,
+                spills: 0,
+                spill_loads: 0,
+                swap_faults: 0,
+            })),
+        }
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.inner.borrow().page_bytes
+    }
+
+    /// f32 elements per page.
+    pub fn page_elems(&self) -> usize {
+        self.inner.borrow().page_bytes / 4
+    }
+
+    // ---- admission ledger (reservation accounting, unchanged ABI) ----
 
     pub fn budget(&self) -> usize {
-        self.budget
+        self.inner.borrow().budget
     }
 
-    /// Bytes currently registered to live sessions.
+    /// Working-set bytes currently reserved by live sessions.
     pub fn resident(&self) -> usize {
-        self.resident
+        self.inner.borrow().reserved
     }
 
-    /// Live sessions with registered state.
+    /// Live sessions with a reservation.
     pub fn live(&self) -> usize {
-        self.by_id.len()
+        self.inner.borrow().by_id.len()
     }
 
-    /// Would a new state of `bytes` fit? Unlimited when the budget is 0;
-    /// an empty pool always admits, so one oversized session degrades to
-    /// run-alone instead of deadlocking the scheduler.
+    /// Would a new working set of `bytes` fit? Unlimited when the budget
+    /// is 0; an empty pool always admits, so one oversized session
+    /// degrades to run-alone instead of deadlocking the scheduler.
     pub fn admits(&self, bytes: usize) -> bool {
-        self.budget == 0 || self.by_id.is_empty() || self.resident + bytes <= self.budget
+        let p = self.inner.borrow();
+        p.budget == 0 || p.by_id.is_empty() || p.reserved + bytes <= p.budget
     }
 
-    /// Register (or re-register) a session's resident bytes.
-    pub fn register(&mut self, id: u64, bytes: usize) {
-        let prev = self.by_id.insert(id, bytes).unwrap_or(0);
-        self.resident = self.resident - prev + bytes;
+    /// Reserve (or re-reserve) a session's working-set bytes.
+    pub fn reserve(&self, id: u64, bytes: usize) {
+        let mut p = self.inner.borrow_mut();
+        let prev = p.by_id.insert(id, bytes).unwrap_or(0);
+        p.reserved = p.reserved - prev + bytes;
     }
 
-    /// Release a session's bytes (idempotent); returns what was held.
-    pub fn release(&mut self, id: u64) -> usize {
-        let b = self.by_id.remove(&id).unwrap_or(0);
-        self.resident -= b;
+    /// Release a session's reservation (idempotent); returns what was held.
+    pub fn release(&self, id: u64) -> usize {
+        let mut p = self.inner.borrow_mut();
+        let b = p.by_id.remove(&id).unwrap_or(0);
+        p.reserved -= b;
         b
+    }
+
+    // ---- page store ----
+
+    /// Allocate a page holding `content` (≤ one page of elements),
+    /// deduplicating byte-identical resident pages (all-zero content is
+    /// stored as a zero page with no payload RAM).
+    pub fn alloc(&self, content: &[f32]) -> PageId {
+        let mut p = self.inner.borrow_mut();
+        assert!(
+            content.len() <= p.page_bytes / 4,
+            "page content {} elems exceeds page size {} bytes",
+            content.len(),
+            p.page_bytes
+        );
+        p.alloc(content)
+    }
+
+    /// Add a reference to an existing page.
+    pub fn share(&self, id: PageId) {
+        self.inner.borrow_mut().slots[id as usize].refs += 1;
+    }
+
+    /// Drop a reference; the last reference frees the slot (and its
+    /// spill file, if any).
+    pub fn free(&self, id: PageId) {
+        self.inner.borrow_mut().free(id);
+    }
+
+    /// Copy-on-write update: returns the page to use for `content`.
+    /// Byte-identical content keeps the existing page (and its sharing);
+    /// changed content never mutates the page in place — it allocates
+    /// (dedup-aware) and drops this reference.
+    pub fn update(&self, id: PageId, content: &[f32]) -> PageId {
+        let shared = {
+            let p = self.inner.borrow();
+            if slot_matches(&p.slots[id as usize], content) {
+                return id;
+            }
+            p.slots[id as usize].refs > 1
+        };
+        if shared {
+            self.inner.borrow_mut().cow_copies += 1;
+        }
+        let nid = self.alloc(content);
+        self.free(id);
+        nid
+    }
+
+    /// Materialize a page's payload into `out`.
+    pub fn read_into(&self, id: PageId, out: &mut Vec<f32>) -> Result<()> {
+        self.inner.borrow_mut().read_into(id, out)
+    }
+
+    // ---- paged-state helpers ----
+
+    /// Park a flat image (`data ++ extra`) as pool pages.
+    pub fn park_image(
+        &self,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        data: &[f32],
+        extra: &[f32],
+    ) -> PagedState {
+        let pe = self.page_elems();
+        let total = data.len() + extra.len();
+        let n = page_count(total, pe);
+        let mut scratch = Vec::with_capacity(pe);
+        let mut pages = Vec::with_capacity(n);
+        for i in 0..n {
+            copy_image_range(data, extra, i * pe, ((i + 1) * pe).min(total), &mut scratch);
+            pages.push(self.alloc(&scratch));
+        }
+        PagedState {
+            kind,
+            size: size.to_string(),
+            bucket,
+            data_len: data.len(),
+            extra_len: extra.len(),
+            pages,
+        }
+    }
+
+    /// Reassemble a parked state's flat image as `(data, extra)`.
+    pub fn read_image(&self, ps: &PagedState) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut data = Vec::with_capacity(ps.data_len);
+        let mut extra = Vec::with_capacity(ps.extra_len);
+        let mut scratch = Vec::new();
+        for (i, &id) in ps.pages.iter().enumerate() {
+            self.read_into(id, &mut scratch)?;
+            let start = i * self.page_elems();
+            for (j, &x) in scratch.iter().enumerate() {
+                if start + j < ps.data_len {
+                    data.push(x);
+                } else {
+                    extra.push(x);
+                }
+            }
+        }
+        if data.len() != ps.data_len || extra.len() != ps.extra_len {
+            bail!(
+                "paged state image mismatch: got {}+{}, want {}+{}",
+                data.len(),
+                extra.len(),
+                ps.data_len,
+                ps.extra_len
+            );
+        }
+        Ok((data, extra))
+    }
+
+    /// Park a live backend state, streaming pages (`export_pages` in
+    /// bounded batches) instead of exporting one whole slab.
+    pub fn park_state(
+        &self,
+        be: &dyn Backend,
+        kind: StateKind,
+        size: &str,
+        bucket: usize,
+        state: &StateBuf,
+    ) -> Result<PagedState> {
+        let (data_len, extra_len) = be.state_image_len(kind, size, bucket, state)?;
+        let pe = self.page_elems();
+        let n = page_count(data_len + extra_len, pe);
+        let mut pages = Vec::with_capacity(n);
+        let mut start = 0;
+        while start < n {
+            let end = (start + PARK_BATCH_PAGES).min(n);
+            for page in be.export_pages(kind, size, bucket, state, start..end, pe)? {
+                pages.push(self.alloc(&page));
+            }
+            start = end;
+        }
+        Ok(PagedState {
+            kind,
+            size: size.to_string(),
+            bucket,
+            data_len,
+            extra_len,
+            pages,
+        })
+    }
+
+    /// Rebuild a live backend state from parked pages, streaming one
+    /// page at a time through the backend's `import_pages`.
+    pub fn unpark_state(&self, be: &dyn Backend, ps: &PagedState) -> Result<StateBuf> {
+        be.import_pages(
+            ps.kind,
+            &ps.size,
+            ps.bucket,
+            ps.data_len,
+            ps.extra_len,
+            self.page_elems(),
+            &mut |i, buf| self.read_into(ps.pages[i], buf),
+        )
+    }
+
+    /// Add a reference to every page of a parked state (prefix-cache
+    /// hits map the cached pages instead of copying a snapshot).
+    pub fn share_state(&self, ps: &PagedState) -> PagedState {
+        for &id in &ps.pages {
+            self.share(id);
+        }
+        ps.clone()
+    }
+
+    /// Drop one reference from every page of a parked state.
+    pub fn free_state(&self, ps: &PagedState) {
+        for &id in &ps.pages {
+            self.free(id);
+        }
+    }
+
+    // ---- tiering ----
+
+    /// Demote the unshared pages of parked states: quantize to int8
+    /// when `kv_quant = int8`, then spill to the disk tier when one is
+    /// configured. Shared pages (prefix cache, other parked sessions)
+    /// stay hot and exact. A spill write error leaves the page safely in
+    /// RAM and is returned to the caller.
+    pub fn park_cold(&self, states: &[PagedState]) -> Result<()> {
+        let mut p = self.inner.borrow_mut();
+        let p = &mut *p;
+        for ps in states {
+            for &id in &ps.pages {
+                let slot = &p.slots[id as usize];
+                if slot.refs != 1 {
+                    continue;
+                }
+                if p.quant == KvQuant::Int8 {
+                    if let PageData::F32(v) = &slot.data {
+                        let (q, scale) = quantize_int8(v);
+                        p.ram_bytes -= slot.len * 4 - q.len();
+                        p.deindex(id);
+                        p.slots[id as usize].data = PageData::Int8 { q, scale };
+                        p.quant_pages += 1;
+                    }
+                }
+                let slot = &p.slots[id as usize];
+                if p.swap.is_some()
+                    && matches!(slot.data, PageData::F32(_) | PageData::Int8 { .. })
+                {
+                    let blob = encode_page(&slot.data, slot.len);
+                    let key = ((slot.gen as u64) << 32) | id as u64;
+                    p.swap.as_mut().unwrap().write(key, &blob)?;
+                    p.deindex(id);
+                    let old = std::mem::replace(
+                        &mut p.slots[id as usize].data,
+                        PageData::Disk { blob_bytes: blob.len() },
+                    );
+                    p.ram_bytes -= PoolInner::ram_bytes_of(&old);
+                    p.spills += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Kick off async prefetch of any spilled pages of these states.
+    pub fn prefetch(&self, states: &[PagedState]) {
+        let mut p = self.inner.borrow_mut();
+        let p = &mut *p;
+        let mut keys = Vec::new();
+        for ps in states {
+            for &id in &ps.pages {
+                if matches!(p.slots[id as usize].data, PageData::Disk { .. }) {
+                    keys.push(((p.slots[id as usize].gen as u64) << 32) | id as u64);
+                }
+            }
+        }
+        if let Some(swap) = p.swap.as_mut() {
+            swap.prefetch(keys);
+        }
+    }
+
+    /// Load every spilled page of these states back into RAM (f32 stays
+    /// exact, int8 stays int8). A corrupt or truncated spill file
+    /// surfaces as a clean error here — the coordinator's swap-fault
+    /// path — never a panic.
+    pub fn promote(&self, states: &[PagedState]) -> Result<()> {
+        let mut p = self.inner.borrow_mut();
+        for ps in states {
+            for &id in &ps.pages {
+                let key = p.spill_key(id);
+                if !matches!(p.slots[id as usize].data, PageData::Disk { .. }) {
+                    continue;
+                }
+                let data = p.load_spilled(id, key)?;
+                let key_bytes = PoolInner::ram_bytes_of(&data);
+                if let Some(swap) = p.swap.as_mut() {
+                    swap.remove(key);
+                }
+                p.slots[id as usize].data = data;
+                p.ram_bytes += key_bytes;
+            }
+        }
+        Ok(())
+    }
+
+    /// Page-level residency gauges.
+    pub fn stats(&self) -> PoolStats {
+        let p = self.inner.borrow();
+        let mut s = PoolStats {
+            page_bytes: p.page_bytes,
+            ram_bytes: p.ram_bytes,
+            disk_bytes: p.swap.as_ref().map(|s| s.bytes()).unwrap_or(0),
+            allocs: p.allocs,
+            page_allocs: p.page_allocs,
+            dedup_hits: p.dedup_hits,
+            cow_copies: p.cow_copies,
+            quant_pages: p.quant_pages,
+            spills: p.spills,
+            spill_loads: p.spill_loads,
+            swap_faults: p.swap_faults,
+            ..PoolStats::default()
+        };
+        let mut payload_elems = 0usize;
+        for slot in &p.slots {
+            if slot.refs == 0 {
+                continue;
+            }
+            s.pages_resident += 1;
+            payload_elems += slot.len;
+            if slot.refs > 1 {
+                s.pages_shared += 1;
+            }
+            match slot.data {
+                PageData::Zero => s.pages_zero += 1,
+                PageData::Disk { .. } => s.pages_spilled += 1,
+                _ => {}
+            }
+        }
+        let cap = s.pages_resident * (p.page_bytes / 4);
+        s.frag_pct = if cap == 0 {
+            0.0
+        } else {
+            100.0 * (1.0 - payload_elems as f64 / cap as f64)
+        };
+        s
+    }
+}
+
+impl std::fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "KvPool({}B pages, {} resident / {} shared, {} RAM B, {} disk B)",
+            s.page_bytes, s.pages_resident, s.pages_shared, s.ram_bytes, s.disk_bytes
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     #[test]
-    fn accounting_roundtrip() {
-        let mut p = KvPool::new(100);
+    fn reservation_accounting_roundtrip() {
+        let p = KvPool::new(100);
         assert!(p.admits(100));
-        p.register(1, 60);
+        p.reserve(1, 60);
         assert_eq!((p.resident(), p.live()), (60, 1));
         assert!(p.admits(40));
         assert!(!p.admits(41));
-        p.register(1, 70); // re-register replaces, not adds
+        p.reserve(1, 70); // re-reserve replaces, not adds
         assert_eq!(p.resident(), 70);
         assert_eq!(p.release(1), 70);
         assert_eq!(p.release(1), 0);
@@ -81,9 +850,125 @@ mod tests {
     fn zero_budget_is_unlimited_and_empty_pool_admits_oversize() {
         let p = KvPool::new(0);
         assert!(p.admits(usize::MAX / 2));
-        let mut p = KvPool::new(10);
+        let p = KvPool::new(10);
         assert!(p.admits(1 << 30), "empty pool must admit (no deadlock)");
-        p.register(1, 5);
+        p.reserve(1, 5);
         assert!(!p.admits(1 << 30));
+    }
+
+    #[test]
+    fn alloc_dedups_and_zero_pages_cost_nothing() {
+        let p = KvPool::with_opts(0, 16, None, KvQuant::None);
+        let a = p.alloc(&[1.0, 2.0, 3.0, 4.0]);
+        let b = p.alloc(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a, b, "identical content must dedup");
+        let z1 = p.alloc(&[0.0; 4]);
+        let z2 = p.alloc(&[0.0; 4]);
+        assert_eq!(z1, z2);
+        // -0.0 is a different bit pattern: must NOT dedup into the zero page
+        let nz = p.alloc(&[-0.0, 0.0, 0.0, 0.0]);
+        assert_ne!(nz, z1, "-0.0 must not be conflated with +0.0");
+        let s = p.stats();
+        assert_eq!(s.pages_resident, 3);
+        assert_eq!(s.pages_shared, 2);
+        assert_eq!(s.pages_zero, 1);
+        assert_eq!(s.dedup_hits, 2);
+        // zero page stores no payload: only the f32 + the -0.0 page cost RAM
+        assert_eq!(s.ram_bytes, 2 * 16);
+        // drain
+        for id in [a, b, z1, z2, nz] {
+            p.free(id);
+        }
+        let s = p.stats();
+        assert_eq!((s.pages_resident, s.ram_bytes), (0, 0));
+    }
+
+    #[test]
+    fn update_is_copy_on_write() {
+        let p = KvPool::with_opts(0, 16, None, KvQuant::None);
+        let a = p.alloc(&[1.0, 2.0]);
+        p.share(a); // two logical owners
+        let same = p.update(a, &[1.0, 2.0]);
+        assert_eq!(same, a, "byte-identical update keeps the page");
+        let b = p.update(a, &[9.0, 2.0]);
+        assert_ne!(b, a, "divergent write to a shared page must copy");
+        assert_eq!(p.stats().cow_copies, 1);
+        // original owner still reads the old content
+        let mut buf = Vec::new();
+        p.read_into(a, &mut buf).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0]);
+        p.read_into(b, &mut buf).unwrap();
+        assert_eq!(buf, vec![9.0, 2.0]);
+        p.free(a);
+        p.free(b);
+        assert_eq!(p.stats().pages_resident, 0);
+    }
+
+    #[test]
+    fn park_image_roundtrip_is_bit_exact() {
+        let p = KvPool::with_opts(0, 16, None, KvQuant::None);
+        let data: Vec<f32> = vec![1.5, -0.0, f32::NAN, 0.0, 2.5, 3.5, 0.0];
+        let extra: Vec<f32> = vec![7.0, 8.0, 0.0];
+        let ps = p.park_image(StateKind::Full, "s", 128, &data, &extra);
+        assert_eq!(ps.image_len(), 10);
+        assert_eq!(ps.pages.len(), 3, "10 elems at 4/page");
+        let (d2, e2) = p.read_image(&ps).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&d2), bits(&data), "data must round-trip bit-exact");
+        assert_eq!(bits(&e2), bits(&extra));
+        p.free_state(&ps);
+        assert_eq!(p.stats().pages_resident, 0);
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("specpv-pool-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn spill_roundtrip_and_corruption_is_a_clean_error() {
+        let dir = tmp("spill");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = KvPool::with_opts(0, 16, Some(&dir), KvQuant::None);
+        let data: Vec<f32> = (0..9).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let ps = p.park_image(StateKind::Full, "s", 128, &data, &[]);
+        p.park_cold(std::slice::from_ref(&ps)).unwrap();
+        let st = p.stats();
+        assert!(st.spills >= 2, "non-zero pages must spill: {st:?}");
+        assert!(st.disk_bytes > 0);
+        // read-through (no promote) is exact for f32 spills
+        let (d2, _) = p.read_image(&ps).unwrap();
+        assert_eq!(d2, data);
+        // promote brings pages back; a truncated file is an error, not a panic
+        p.promote(std::slice::from_ref(&ps)).unwrap();
+        p.park_cold(std::slice::from_ref(&ps)).unwrap();
+        for f in std::fs::read_dir(&dir).unwrap() {
+            let path = f.unwrap().path();
+            std::fs::write(&path, b"xx").unwrap(); // corrupt every spill file
+        }
+        let err = p.promote(std::slice::from_ref(&ps)).unwrap_err();
+        assert!(format!("{err:#}").contains("spill"), "unexpected error: {err:#}");
+        assert!(p.stats().swap_faults >= 1);
+        p.free_state(&ps);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn int8_cold_pages_shrink_and_stay_within_tolerance() {
+        let p = KvPool::with_opts(0, 64, None, KvQuant::Int8);
+        let data: Vec<f32> = (0..40).map(|i| (i as f32 * 0.37).sin()).collect();
+        let ps = p.park_image(StateKind::Full, "s", 128, &data, &[]);
+        let hot = p.stats().ram_bytes;
+        p.park_cold(std::slice::from_ref(&ps)).unwrap();
+        let cold = p.stats().ram_bytes;
+        assert!(cold * 3 < hot, "int8 must shrink RAM ~4x: {hot} -> {cold}");
+        assert!(p.stats().quant_pages >= 2);
+        let (d2, _) = p.read_image(&ps).unwrap();
+        let worst = data
+            .iter()
+            .zip(&d2)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst <= 1.0 / 127.0 + 1e-6, "int8 tolerance blown: {worst}");
+        p.free_state(&ps);
     }
 }

@@ -1,24 +1,36 @@
-//! Content-addressed prompt-prefix snapshot cache (LRU + byte budget).
+//! Content-addressed prompt-prefix cache (LRU + byte budget) over the
+//! paged block pool.
 //!
 //! Keys are `(geometry hash, fnv1a over the prefix tokens, prefix len)`;
-//! the geometry hash folds in everything that makes a snapshot
-//! re-usable: backend name, model size, full bucket, prefill chunk width
-//! and whether a paired EAGLE draft state rides along. Prefixes are only
+//! the geometry hash folds in everything that makes an entry re-usable:
+//! backend name, model size, full bucket, prefill chunk width and
+//! whether a paired EAGLE draft state rides along. Prefixes are only
 //! cached at whole-chunk boundaries strictly inside the prompt, so a hit
 //! always leaves at least one tail token to prefill (the final-row read
 //! then comes from a freshly computed chunk). Hash collisions cannot
 //! corrupt output: the stored prefix tokens are compared verbatim before
 //! a hit is declared.
 //!
+//! Entries are [`PagedState`] block tables into the store's [`KvPool`],
+//! not flat snapshots: a lookup hit *maps* the cached pages into the new
+//! session's table (refcount increment per page, zero new pages
+//! allocated) instead of memcpy'ing a slab; the pool's copy-on-write
+//! contract keeps the cached entry immutable under any later divergence.
+//! Budget accounting stays in flat-slab-equivalent bytes
+//! ([`PagedState::logical_bytes`]) so `prefix_cache_bytes` means the
+//! same thing it always did, while the *actual* residency — after
+//! zero-page and cross-entry dedup — is visible in the pool's
+//! [`PoolStats`](crate::kvstore::PoolStats).
+//!
 //! The store is a cheaply clonable shared handle (`Rc<RefCell<..>>`) —
 //! the coordinator, its session factory and every live session on the
-//! single device thread share one instance.
+//! single device thread share one instance (and one pool).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use crate::backend::StateSnapshot;
+use crate::kvstore::pool::{KvPool, PagedState};
 
 const FNV_OFFSET: u64 = 0xcbf29ce484222325;
 const FNV_PRIME: u64 = 0x100000001b3;
@@ -67,6 +79,7 @@ pub fn chunk_boundary_hashes(tokens: &[u32], chunk: usize) -> Vec<(usize, u64)> 
 #[derive(Debug, Default, Clone)]
 pub struct PrefixStats {
     pub entries: usize,
+    /// flat-slab-equivalent bytes of all entries (budget denomination)
     pub bytes: usize,
     pub budget_bytes: usize,
     pub hits: u64,
@@ -77,9 +90,11 @@ pub struct PrefixStats {
 
 struct Entry {
     /// the exact prefix tokens (collision guard; also what `bytes` counts
-    /// beyond the snapshots)
+    /// beyond the states)
     tokens: Vec<u32>,
-    snaps: Rc<Vec<StateSnapshot>>,
+    /// parked post-prefill states (target first, optional draft second);
+    /// the entry owns one page reference per table slot
+    states: Vec<PagedState>,
     bytes: usize,
     /// LRU stamp (monotone per-store clock)
     stamp: u64,
@@ -99,14 +114,23 @@ struct Inner {
 /// Shared handle to the prefix cache. Cloning shares the store.
 #[derive(Clone)]
 pub struct KvStore {
+    pool: KvPool,
     inner: Rc<RefCell<Inner>>,
 }
 
 impl KvStore {
     /// A store evicting LRU entries beyond `budget_bytes` (0 disables
-    /// insertion entirely — every lookup misses).
+    /// insertion entirely — every lookup misses), backed by a private
+    /// unbounded pool. Use [`KvStore::with_pool`] to share pages with
+    /// the coordinator's pool.
     pub fn new(budget_bytes: usize) -> KvStore {
+        KvStore::with_pool(budget_bytes, KvPool::new(0))
+    }
+
+    /// A store whose entries live as pages of `pool`.
+    pub fn with_pool(budget_bytes: usize, pool: KvPool) -> KvStore {
         KvStore {
+            pool,
             inner: Rc::new(RefCell::new(Inner {
                 budget: budget_bytes,
                 bytes: 0,
@@ -120,28 +144,37 @@ impl KvStore {
         }
     }
 
+    /// The page pool backing this store's entries.
+    pub fn pool(&self) -> KvPool {
+        self.pool.clone()
+    }
+
     /// Whether this store can ever hold an entry.
     pub fn enabled(&self) -> bool {
         self.inner.borrow().budget > 0
     }
 
-    /// Whether an entry of roughly `bytes` could ever be inserted —
-    /// callers gate the (expensive, possibly device→host) export on this
-    /// so oversized snapshots are never materialized just to be dropped.
+    /// Whether an entry of roughly `bytes` (flat-slab equivalent) could
+    /// ever be inserted — callers gate the (expensive, possibly
+    /// device→host) export on this so oversized states are never
+    /// materialized just to be dropped.
     pub fn accepts(&self, bytes: usize) -> bool {
         let budget = self.inner.borrow().budget;
         budget > 0 && bytes <= budget
     }
 
     /// Longest cached prefix of `tokens` at a chunk boundary under
-    /// geometry `geom`. Returns `(prefix_len, snapshots)`; the snapshots
-    /// are shared (`Rc`), not copied. Counts one hit or one miss.
+    /// geometry `geom`. Returns `(prefix_len, states)` where the states'
+    /// pages are *shared into* the returned tables (one new reference
+    /// per page, zero pages allocated) — the caller owns those
+    /// references and must drop them with
+    /// [`KvPool::free_state`] once restored. Counts one hit or one miss.
     pub fn lookup_longest(
         &self,
         geom: u64,
         tokens: &[u32],
         chunk: usize,
-    ) -> Option<(usize, Rc<Vec<StateSnapshot>>)> {
+    ) -> Option<(usize, Vec<PagedState>)> {
         let bounds = chunk_boundary_hashes(tokens, chunk);
         let mut inner = self.inner.borrow_mut();
         inner.clock += 1;
@@ -151,26 +184,34 @@ impl KvStore {
             if let Some(e) = inner.map.get_mut(&(geom, h, len)) {
                 if e.tokens[..] == tokens[..len] {
                     e.stamp = stamp;
-                    found = Some(Rc::clone(&e.snaps));
+                    found = Some(
+                        e.states
+                            .iter()
+                            .map(|ps| self.pool.share_state(ps))
+                            .collect::<Vec<_>>(),
+                    );
                 }
             }
-            if let Some(snaps) = found {
+            if let Some(states) = found {
                 inner.hits += 1;
-                return Some((len, snaps));
+                return Some((len, states));
             }
         }
         inner.misses += 1;
         None
     }
 
-    /// Insert a post-prefill snapshot set for `prefix` under `geom`,
-    /// evicting LRU entries until the byte budget holds. Oversized
-    /// entries and duplicates are dropped silently.
-    pub fn insert(&self, geom: u64, prefix: &[u32], snaps: Vec<StateSnapshot>) {
-        let bytes =
-            snaps.iter().map(|s| s.bytes()).sum::<usize>() + prefix.len() * 4;
+    /// Insert post-prefill parked states for `prefix` under `geom`,
+    /// evicting LRU entries until the byte budget holds. The entry takes
+    /// ownership of the states' page references; oversized entries and
+    /// duplicates are dropped (their pages freed) silently.
+    pub fn insert(&self, geom: u64, prefix: &[u32], states: Vec<PagedState>) {
+        let bytes = states.iter().map(|s| s.logical_bytes()).sum::<usize>()
+            + prefix.len() * 4;
         let mut inner = self.inner.borrow_mut();
         if inner.budget == 0 || bytes > inner.budget {
+            drop(inner);
+            self.drop_states(&states);
             return;
         }
         let mut h = FNV_OFFSET;
@@ -179,16 +220,19 @@ impl KvStore {
         }
         let key = (geom, h, prefix.len());
         if inner.map.contains_key(&key) {
+            drop(inner);
+            self.drop_states(&states);
             return;
         }
         inner.clock += 1;
         let stamp = inner.clock;
         inner.map.insert(
             key,
-            Entry { tokens: prefix.to_vec(), snaps: Rc::new(snaps), bytes, stamp },
+            Entry { tokens: prefix.to_vec(), states, bytes, stamp },
         );
         inner.bytes += bytes;
         inner.insertions += 1;
+        let mut victims = Vec::new();
         while inner.bytes > inner.budget {
             // the just-inserted entry carries the newest stamp, so the
             // LRU scan can never evict it (bytes ≤ budget was checked)
@@ -201,7 +245,18 @@ impl KvStore {
             if let Some(e) = inner.map.remove(&k) {
                 inner.bytes -= e.bytes;
                 inner.evictions += 1;
+                victims.push(e);
             }
+        }
+        drop(inner);
+        for e in victims {
+            self.drop_states(&e.states);
+        }
+    }
+
+    fn drop_states(&self, states: &[PagedState]) {
+        for ps in states {
+            self.pool.free_state(ps);
         }
     }
 
@@ -217,7 +272,6 @@ impl KvStore {
             evictions: inner.evictions,
         }
     }
-
 }
 
 impl std::fmt::Debug for KvStore {
@@ -234,16 +288,10 @@ impl std::fmt::Debug for KvStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{StateKind, StateSnapshot};
+    use crate::backend::StateKind;
 
-    fn snap(n: usize) -> StateSnapshot {
-        StateSnapshot {
-            kind: StateKind::Full,
-            size: "s".into(),
-            bucket: 128,
-            data: vec![0.5; n],
-            extra: Vec::new(),
-        }
+    fn park(pool: &KvPool, n: usize) -> PagedState {
+        pool.park_image(StateKind::Full, "s", 128, &vec![0.5; n], &[])
     }
 
     #[test]
@@ -267,11 +315,17 @@ mod tests {
     #[test]
     fn lookup_prefers_longest_and_checks_tokens() {
         let st = KvStore::new(1 << 20);
+        let pool = st.pool();
         let toks: Vec<u32> = (0..100).collect();
-        st.insert(7, &toks[..32], vec![snap(10)]);
-        st.insert(7, &toks[..64], vec![snap(10)]);
-        let (len, _) = st.lookup_longest(7, &toks, 32).unwrap();
+        st.insert(7, &toks[..32], vec![park(&pool, 10)]);
+        st.insert(7, &toks[..64], vec![park(&pool, 10)]);
+        let (len, states) = st.lookup_longest(7, &toks, 32).unwrap();
         assert_eq!(len, 64);
+        // the hit mapped the cached pages: shared, not copied
+        assert!(pool.stats().pages_shared > 0);
+        for ps in &states {
+            pool.free_state(ps);
+        }
         // different geometry misses
         assert!(st.lookup_longest(8, &toks, 32).is_none());
         // a diverging prompt with the same length misses
@@ -285,34 +339,50 @@ mod tests {
     }
 
     #[test]
-    fn lru_eviction_respects_budget() {
-        // each entry ≈ 4000 (snap) + 128 (tokens) bytes
+    fn lru_eviction_respects_budget_and_frees_pages() {
+        // each entry ≈ 4000 (state) + 128 (tokens) bytes; distinct fill
+        // values defeat cross-entry dedup so page counts are observable
         let st = KvStore::new(9000);
+        let pool = st.pool();
+        let fill = |v: f32| {
+            pool.park_image(StateKind::Full, "s", 128, &vec![v; 1000], &[])
+        };
         let toks: Vec<u32> = (0..200).collect();
-        st.insert(1, &toks[..32], vec![snap(1000)]);
-        st.insert(2, &toks[..32], vec![snap(1000)]);
+        st.insert(1, &toks[..32], vec![fill(0.1)]);
+        st.insert(2, &toks[..32], vec![fill(0.2)]);
         assert_eq!(st.stats().entries, 2);
+        let resident_two = pool.stats().pages_resident;
         // touch entry 1 so entry 2 becomes LRU
-        assert!(st.lookup_longest(1, &toks[..40], 32).is_some());
-        st.insert(3, &toks[..32], vec![snap(1000)]);
+        let (_, s1) = st.lookup_longest(1, &toks[..40], 32).unwrap();
+        for ps in &s1 {
+            pool.free_state(ps);
+        }
+        st.insert(3, &toks[..32], vec![fill(0.3)]);
         let s = st.stats();
         assert_eq!(s.entries, 2);
         assert_eq!(s.evictions, 1);
         assert!(s.bytes <= 9000);
+        assert_eq!(
+            pool.stats().pages_resident,
+            resident_two,
+            "evicted entry must free its pages"
+        );
         assert!(st.lookup_longest(1, &toks[..40], 32).is_some(), "MRU kept");
         assert!(st.lookup_longest(2, &toks[..40], 32).is_none(), "LRU evicted");
         // oversized entries never land (and `accepts` predicts that
-        // without materializing the snapshot)
+        // without materializing the state)
         assert!(st.accepts(4000));
         assert!(!st.accepts(10_000));
-        st.insert(4, &toks[..32], vec![snap(1 << 20)]);
-        assert!(st.lookup_longest(4, &toks[..40], 32).is_none());
-        // a zero-budget store is inert
+        st.insert(5, &toks[..32], vec![park(&pool, 1 << 20)]);
+        assert!(st.lookup_longest(5, &toks[..40], 32).is_none());
+        // a zero-budget store is inert (and frees rejected pages)
         let off = KvStore::new(0);
+        let opool = off.pool();
         assert!(!off.enabled());
         assert!(!off.accepts(1));
-        off.insert(1, &toks[..32], vec![snap(10)]);
+        off.insert(1, &toks[..32], vec![park(&opool, 10)]);
         assert!(off.lookup_longest(1, &toks, 32).is_none());
+        assert_eq!(opool.stats().pages_resident, 0);
     }
 
     #[test]

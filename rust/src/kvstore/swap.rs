@@ -1,101 +1,175 @@
-//! Host store for swapped-out session state.
+//! Disk tier for cold KV pages: per-page spill files + async prefetch.
 //!
-//! When the coordinator preempts a session, its exported
-//! [`StateSnapshot`]s land here keyed by request id; re-admission takes
-//! them back for restore-on-resume. The store owns only the *state* —
-//! the dormant session object itself (host-side accounting, RNG, output
-//! cursor) stays with the coordinator.
+//! [`KvPool::park_cold`](crate::kvstore::KvPool::park_cold) spills
+//! unshared pages of parked sessions here; re-admission prefetches them
+//! back on a background thread so the resume path mostly reads RAM.
+//! The store moves opaque byte blobs — the page codec (header, checksum,
+//! optional int8 payload) lives in [`crate::kvstore::pool`], which
+//! validates on decode, so a truncated or corrupt spill file surfaces as
+//! a clean error there, never a panic.
+//!
+//! Spill keys carry a per-slot generation tag so a freed-and-reused page
+//! id can never read a stale prefetched blob from its previous life.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
-use crate::backend::StateSnapshot;
+use anyhow::{Context, Result};
 
-#[derive(Default)]
 pub struct SwapStore {
-    entries: HashMap<u64, Vec<StateSnapshot>>,
+    dir: PathBuf,
+    created: bool,
+    /// spill key -> file bytes on disk
+    files: HashMap<u64, usize>,
     bytes: usize,
+    /// background-prefetched blobs, consumed by `read`
+    prefetched: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    prefetches: u64,
 }
 
 impl SwapStore {
-    fn bytes_of_entry(snaps: &[StateSnapshot]) -> usize {
-        snaps.iter().map(|s| s.bytes()).sum()
-    }
-
-    /// Park a swapped-out session's snapshots.
-    pub fn put(&mut self, id: u64, snaps: Vec<StateSnapshot>) {
-        self.bytes += Self::bytes_of_entry(&snaps);
-        if let Some(old) = self.entries.insert(id, snaps) {
-            self.bytes -= Self::bytes_of_entry(&old);
+    /// A spill-file manager rooted at `dir`. The directory is created
+    /// lazily on the first write, so constructing the store is
+    /// infallible and a never-spilling pool touches no filesystem.
+    pub fn new(dir: &Path) -> SwapStore {
+        SwapStore {
+            dir: dir.to_path_buf(),
+            created: false,
+            files: HashMap::new(),
+            bytes: 0,
+            prefetched: Arc::new(Mutex::new(HashMap::new())),
+            prefetches: 0,
         }
     }
 
-    /// Take a session's snapshots back for resume.
-    pub fn take(&mut self, id: u64) -> Option<Vec<StateSnapshot>> {
-        let snaps = self.entries.remove(&id)?;
-        self.bytes -= Self::bytes_of_entry(&snaps);
-        Some(snaps)
+    fn file_name(key: u64) -> String {
+        format!("page-{key:016x}.kvp")
     }
 
-    /// Drop a session's snapshots (cancellation / expiry while swapped).
-    pub fn discard(&mut self, id: u64) {
-        let _ = self.take(id);
+    /// On-disk path of a spill key (public so fault tests can corrupt it).
+    pub fn path_of(&self, key: u64) -> PathBuf {
+        self.dir.join(Self::file_name(key))
     }
 
-    pub fn bytes_of(&self, id: u64) -> Option<usize> {
-        self.entries.get(&id).map(|s| Self::bytes_of_entry(s))
+    /// Spill one encoded page.
+    pub fn write(&mut self, key: u64, blob: &[u8]) -> Result<()> {
+        if !self.created {
+            std::fs::create_dir_all(&self.dir)
+                .with_context(|| format!("creating kv swap dir {:?}", self.dir))?;
+            self.created = true;
+        }
+        std::fs::write(self.path_of(key), blob)
+            .with_context(|| format!("kv spill write {:?}", self.path_of(key)))?;
+        self.prefetched.lock().unwrap().remove(&key);
+        if let Some(old) = self.files.insert(key, blob.len()) {
+            self.bytes -= old;
+        }
+        self.bytes += blob.len();
+        Ok(())
     }
 
-    /// Host bytes held across all parked sessions.
+    /// Read one encoded page back, consuming the prefetched copy when
+    /// the background thread already pulled it in.
+    pub fn read(&mut self, key: u64) -> Result<Vec<u8>> {
+        if let Some(blob) = self.prefetched.lock().unwrap().remove(&key) {
+            return Ok(blob);
+        }
+        std::fs::read(self.path_of(key))
+            .with_context(|| format!("kv spill read {:?}", self.path_of(key)))
+    }
+
+    /// Drop a spilled page (page freed while cold).
+    pub fn remove(&mut self, key: u64) {
+        if let Some(n) = self.files.remove(&key) {
+            self.bytes -= n;
+            let _ = std::fs::remove_file(self.path_of(key));
+        }
+        self.prefetched.lock().unwrap().remove(&key);
+    }
+
+    /// Start pulling `keys` into RAM on a background thread; `read`
+    /// consumes whatever landed and falls back to the file otherwise.
+    /// Read errors are ignored here — the synchronous `read` re-reads
+    /// and reports them with context.
+    pub fn prefetch(&mut self, keys: Vec<u64>) {
+        if keys.is_empty() {
+            return;
+        }
+        self.prefetches += keys.len() as u64;
+        let dir = self.dir.clone();
+        let map = Arc::clone(&self.prefetched);
+        std::thread::spawn(move || {
+            for key in keys {
+                if let Ok(blob) = std::fs::read(dir.join(SwapStore::file_name(key))) {
+                    map.lock().unwrap().insert(key, blob);
+                }
+            }
+        });
+    }
+
+    /// Bytes currently on disk across all spilled pages.
     pub fn bytes(&self) -> usize {
         self.bytes
     }
 
+    /// Spilled page count.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.files.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.files.is_empty()
+    }
+
+    /// Total pages handed to the prefetch thread so far.
+    pub fn prefetches(&self) -> u64 {
+        self.prefetches
     }
 }
 
 impl std::fmt::Debug for SwapStore {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "SwapStore({} sessions, {} bytes)", self.entries.len(), self.bytes)
+        write!(f, "SwapStore({:?}: {} pages, {} bytes)", self.dir, self.files.len(), self.bytes)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::StateKind;
 
-    fn snap(n: usize) -> StateSnapshot {
-        StateSnapshot {
-            kind: StateKind::Full,
-            size: "s".into(),
-            bucket: 128,
-            data: vec![0.0; n],
-            extra: vec![0.0; n],
-        }
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("specpv-swap-{tag}-{}", std::process::id()))
     }
 
     #[test]
-    fn put_take_accounting() {
-        let mut s = SwapStore::default();
+    fn write_read_remove_roundtrip() {
+        let dir = tmp("rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = SwapStore::new(&dir);
         assert!(s.is_empty());
-        s.put(3, vec![snap(10), snap(5)]);
-        assert_eq!(s.bytes(), (10 + 10 + 5 + 5) * 4);
-        assert_eq!(s.bytes_of(3), Some(s.bytes()));
-        // re-put replaces the old entry without double counting
-        s.put(3, vec![snap(2)]);
-        assert_eq!(s.bytes(), 16);
-        let got = s.take(3).unwrap();
-        assert_eq!(got.len(), 1);
-        assert_eq!((s.bytes(), s.len()), (0, 0));
-        assert!(s.take(3).is_none());
-        s.put(4, vec![snap(1)]);
-        s.discard(4);
+        s.write(7, b"hello").unwrap();
+        assert_eq!((s.len(), s.bytes()), (1, 5));
+        assert_eq!(s.read(7).unwrap(), b"hello");
+        // rewrite replaces without double counting
+        s.write(7, b"hi").unwrap();
+        assert_eq!(s.bytes(), 2);
+        s.remove(7);
         assert!(s.is_empty());
+        assert!(s.read(7).is_err(), "removed page must not read back");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefetch_lands_and_read_consumes() {
+        let dir = tmp("pf");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = SwapStore::new(&dir);
+        s.write(1, b"abc").unwrap();
+        s.prefetch(vec![1]);
+        // read must succeed whether the prefetch thread won the race or not
+        assert_eq!(s.read(1).unwrap(), b"abc");
+        assert!(s.prefetches() >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -56,50 +56,20 @@ fn build_config(cli: &Cli) -> Result<Config> {
         Some(path) => Config::from_file(std::path::Path::new(path))?,
         None => Config::default(),
     };
-    if let Some(d) = cli.opt("artifacts") {
-        cfg.artifacts_dir = PathBuf::from(d);
-    }
-    if let Some(s) = cli.opt("size") {
-        cfg.model_size = s.to_string();
-    }
-    if let Some(e) = cli.opt("engine") {
-        cfg.engine = e.parse()?;
-    }
-    if let Some(b) = cli.opt("backend") {
-        cfg.backend = b.parse()?;
-    }
-    if let Some(b) = cli.opt_parse::<usize>("budget")? {
-        cfg.specpv.retrieval_budget = b;
-    }
-    if let Some(n) = cli.opt_parse::<usize>("max-new")? {
-        cfg.max_new_tokens = n;
-    }
-    if let Some(t) = cli.opt_parse::<f32>("temperature")? {
-        cfg.temperature = t;
-    }
-    if let Some(a) = cli.opt("addr") {
-        cfg.server_addr = a.to_string();
-    }
-    if let Some(n) = cli.opt_parse::<usize>("max-active")? {
-        cfg.max_active = n;
-    }
-    if let Some(n) = cli.opt_parse::<usize>("max-queue")? {
-        cfg.max_queue = n;
-    }
-    if let Some(n) = cli.opt_parse::<usize>("max-prompt")? {
-        cfg.max_prompt = n;
-    }
-    if let Some(n) = cli.opt_parse::<usize>("kv-budget-bytes")? {
-        cfg.kv_budget_bytes = n;
-    }
-    if let Some(n) = cli.opt_parse::<usize>("prefix-cache-bytes")? {
-        cfg.prefix_cache_bytes = n;
-    }
-    if let Some(n) = cli.opt_parse::<usize>("threads")? {
-        cfg.threads = n;
-    }
-    if cli.has_flag("offload") {
-        cfg.offload.enabled = true;
+    // every config key doubles as `--<key-with-dashes>` (plus legacy
+    // aliases), generated from the one declarative table in config.rs
+    for def in specpv::config::options() {
+        let flag = def.flag();
+        let value = cli
+            .opt(&flag)
+            .or_else(|| def.alias.and_then(|a| cli.opt(a)));
+        if let Some(v) = value {
+            def.apply(&mut cfg, v)?;
+        } else if def.switch
+            && (cli.has_flag(&flag) || def.alias.is_some_and(|a| cli.has_flag(a)))
+        {
+            def.apply(&mut cfg, "true")?;
+        }
     }
     // generic overrides: --set key=value (repeatable via comma list)
     if let Some(kvs) = cli.opt("set") {

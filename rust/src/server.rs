@@ -19,11 +19,19 @@
 //!   ← {"ok":true,"id":1,"stream":true,"step":1,"delta":"…","done":false}*
 //!   ← {"ok":true,"id":1,"done":true,"text":"…",...}       (final)
 //!   → {"op":"cancel","id":1}     ← {"ok":true,"cancelled":true}
-//!   → {"op":"metrics"}           ← {"ok":true,"summary":"...",
-//!                                   "queue_depth":0,"active":0,...}
-//!   → {"op":"cache"}             ← {"ok":true,"prefix_hits":3,
-//!                                   "kv_resident_bytes":..., "swap_outs":0,...}
-//!                                   (KV state manager stats, DESIGN.md §11)
+//!   → {"op":"admin","cmd":"metrics","v":1}
+//!                                ← {"ok":true,"v":1,"cmd":"metrics",
+//!                                   "summary":"...","queue_depth":0,...}
+//!   → {"op":"admin","cmd":"cache"}  (prefix cache + swap stats; `v`
+//!                                    defaults to 1, other versions error)
+//!   → {"op":"admin","cmd":"kv"}  ← {"ok":true,"v":1,"cmd":"kv",
+//!                                   "pages_resident":..,"pages_shared":..,
+//!                                   "frag_pct":..,...}  (page-pool gauges)
+//!   → {"op":"metrics"} / {"op":"cache"}
+//!                                ← same bodies as the admin subcommands
+//!                                   plus "deprecated":true — flat op
+//!                                   names are aliases kept for old
+//!                                   clients
 //!   → {"op":"ping"}              ← {"ok":true}
 //!   → {"op":"shutdown"}          ← {"ok":true}  (server exits)
 //!
@@ -60,10 +68,29 @@ enum WorkItem {
         reply: Sender<String>,
     },
     Cancel { id: RequestId, reply: Sender<String> },
-    Metrics { reply: Sender<String> },
-    Cache { reply: Sender<String> },
+    Admin { cmd: AdminCmd, legacy: bool, reply: Sender<String> },
     Ping { reply: Sender<String> },
     Shutdown { reply: Sender<String> },
+}
+
+/// Read-only admin subcommands (`{"op":"admin","cmd":...,"v":1}`). The
+/// old flat `metrics`/`cache` op names parse to the same commands with
+/// `legacy: true` and answer with a `"deprecated":true` marker.
+#[derive(Clone, Copy)]
+enum AdminCmd {
+    Metrics,
+    Kv,
+    Cache,
+}
+
+impl AdminCmd {
+    fn name(self) -> &'static str {
+        match self {
+            AdminCmd::Metrics => "metrics",
+            AdminCmd::Kv => "kv",
+            AdminCmd::Cache => "cache",
+        }
+    }
 }
 
 /// Request-level defaults a reader thread needs to parse `generate` ops
@@ -219,8 +246,27 @@ fn parse_item(raw: &str, defaults: &Defaults, reply: Sender<String>) -> Result<W
     let op = req.get("op").and_then(|x| x.as_str()).unwrap_or("generate");
     match op {
         "ping" => Ok(WorkItem::Ping { reply }),
-        "metrics" => Ok(WorkItem::Metrics { reply }),
-        "cache" => Ok(WorkItem::Cache { reply }),
+        "admin" => {
+            let v = req.get("v").and_then(|x| x.as_i64()).unwrap_or(1);
+            if v != 1 {
+                return Err(anyhow!("unsupported admin version {v} (supported: 1)"));
+            }
+            let cmd = match req.get("cmd").and_then(|x| x.as_str()) {
+                Some("metrics") => AdminCmd::Metrics,
+                Some("kv") => AdminCmd::Kv,
+                Some("cache") => AdminCmd::Cache,
+                Some(other) => {
+                    return Err(anyhow!(
+                        "unknown admin cmd '{other}' (metrics|kv|cache)"
+                    ))
+                }
+                None => return Err(anyhow!("admin needs 'cmd'")),
+            };
+            Ok(WorkItem::Admin { cmd, legacy: false, reply })
+        }
+        // deprecated flat aliases for the admin subcommands
+        "metrics" => Ok(WorkItem::Admin { cmd: AdminCmd::Metrics, legacy: true, reply }),
+        "cache" => Ok(WorkItem::Admin { cmd: AdminCmd::Cache, legacy: true, reply }),
         "shutdown" => Ok(WorkItem::Shutdown { reply }),
         "cancel" => {
             let id = req
@@ -319,66 +365,18 @@ fn handle_item(
         WorkItem::Ping { reply } => {
             send(&reply, Json::obj().set("ok", true));
         }
-        WorkItem::Metrics { reply } => {
-            coord.sync_backend_counters();
-            let reg = &coord.registry;
-            send(
-                &reply,
-                Json::obj()
-                    .set("ok", true)
-                    .set("summary", reg.summary())
-                    .set(
-                        "backend",
-                        if reg.backend.is_empty() { "scripted" } else { reg.backend.as_str() },
-                    )
-                    .set("executions", reg.executions as i64)
-                    .set("exec_secs", reg.exec_secs)
-                    .set("compilations", reg.compilations as i64)
-                    .set("queue_depth", coord.queue_len())
-                    .set("active", coord.active_len())
-                    .set("completed", reg.completed as i64)
-                    .set("failed", reg.failed as i64)
-                    .set("cancelled", reg.cancelled as i64)
-                    .set("kv_resident_bytes", reg.kv_resident_bytes)
-                    .set("kv_budget_bytes", reg.kv_budget_bytes)
-                    .set("swap_outs", reg.swap_outs as i64)
-                    .set("swap_ins", reg.swap_ins as i64)
-                    .set("prefix_hits", reg.prefix_hits as i64)
-                    .set("prefix_misses", reg.prefix_misses as i64)
-                    .set("threads", reg.threads)
-                    .set("fused_groups", reg.batch_groups as i64)
-                    .set("batch_ops_fused", reg.batch_ops_fused as i64)
-                    .set("batch_ops_single", reg.batch_ops_single as i64)
-                    .set("fallback_steps", reg.fallback_steps as i64)
-                    .set("batch_mean_width", reg.batch_mean_width())
-                    .set("batch_max_width", reg.batch_width_max)
-                    .set("batch_tick_groups", reg.batch_tick_groups)
-                    .set("batched_frac", reg.batched_frac())
-                    .set("ttft_p50_s", reg.ttft.p50())
-                    .set("ttft_p99_s", reg.ttft.p99()),
-            );
-        }
-        WorkItem::Cache { reply } => {
-            let s = coord.kv_stats();
-            send(
-                &reply,
-                Json::obj()
-                    .set("ok", true)
-                    .set("prefix_entries", s.prefix.entries)
-                    .set("prefix_bytes", s.prefix.bytes)
-                    .set("prefix_budget_bytes", s.prefix.budget_bytes)
-                    .set("prefix_hits", s.prefix.hits as i64)
-                    .set("prefix_misses", s.prefix.misses as i64)
-                    .set("prefix_insertions", s.prefix.insertions as i64)
-                    .set("prefix_evictions", s.prefix.evictions as i64)
-                    .set("kv_resident_bytes", s.resident_bytes)
-                    .set("kv_budget_bytes", s.budget_bytes)
-                    .set("live_states", s.live_states)
-                    .set("swapped", s.swapped)
-                    .set("swap_bytes", s.swap_bytes)
-                    .set("swap_outs", s.swap_outs as i64)
-                    .set("swap_ins", s.swap_ins as i64),
-            );
+        WorkItem::Admin { cmd, legacy, reply } => {
+            let body = match cmd {
+                AdminCmd::Metrics => metrics_body(coord),
+                AdminCmd::Kv => kv_body(coord),
+                AdminCmd::Cache => cache_body(coord),
+            };
+            let body = if legacy {
+                body.set("deprecated", true)
+            } else {
+                body.set("v", 1i64).set("cmd", cmd.name())
+            };
+            send(&reply, body);
         }
         WorkItem::Shutdown { reply } => {
             send(&reply, Json::obj().set("ok", true));
@@ -424,15 +422,108 @@ fn handle_item(
     false
 }
 
+/// The `admin metrics` body: scheduler registry + backend counters.
+fn metrics_body(coord: &mut Coordinator<'_>) -> Json {
+    coord.sync_backend_counters();
+    let reg = &coord.registry;
+    Json::obj()
+        .set("ok", true)
+        .set("summary", reg.summary())
+        .set(
+            "backend",
+            if reg.backend.is_empty() { "scripted" } else { reg.backend.as_str() },
+        )
+        .set("executions", reg.executions as i64)
+        .set("exec_secs", reg.exec_secs)
+        .set("compilations", reg.compilations as i64)
+        .set("queue_depth", coord.queue_len())
+        .set("active", coord.active_len())
+        .set("completed", reg.completed as i64)
+        .set("failed", reg.failed as i64)
+        .set("cancelled", reg.cancelled as i64)
+        .set("kv_resident_bytes", reg.kv_resident_bytes)
+        .set("kv_budget_bytes", reg.kv_budget_bytes)
+        .set("kv_pages_resident", reg.kv_pages_resident)
+        .set("kv_pages_shared", reg.kv_pages_shared)
+        .set("kv_frag_pct", reg.kv_frag_pct)
+        .set("swap_outs", reg.swap_outs as i64)
+        .set("swap_ins", reg.swap_ins as i64)
+        .set("swap_faults", reg.swap_faults as i64)
+        .set("prefix_hits", reg.prefix_hits as i64)
+        .set("prefix_misses", reg.prefix_misses as i64)
+        .set("threads", reg.threads)
+        .set("fused_groups", reg.batch_groups as i64)
+        .set("batch_ops_fused", reg.batch_ops_fused as i64)
+        .set("batch_ops_single", reg.batch_ops_single as i64)
+        .set("fallback_steps", reg.fallback_steps as i64)
+        .set("batch_mean_width", reg.batch_mean_width())
+        .set("batch_max_width", reg.batch_width_max)
+        .set("batch_tick_groups", reg.batch_tick_groups)
+        .set("batched_frac", reg.batched_frac())
+        .set("ttft_p50_s", reg.ttft.p50())
+        .set("ttft_p99_s", reg.ttft.p99())
+}
+
+/// The `admin cache` body: prefix cache + swap-tier aggregates.
+fn cache_body(coord: &mut Coordinator<'_>) -> Json {
+    let s = coord.kv_stats();
+    Json::obj()
+        .set("ok", true)
+        .set("prefix_entries", s.prefix.entries)
+        .set("prefix_bytes", s.prefix.bytes)
+        .set("prefix_budget_bytes", s.prefix.budget_bytes)
+        .set("prefix_hits", s.prefix.hits as i64)
+        .set("prefix_misses", s.prefix.misses as i64)
+        .set("prefix_insertions", s.prefix.insertions as i64)
+        .set("prefix_evictions", s.prefix.evictions as i64)
+        .set("kv_resident_bytes", s.resident_bytes)
+        .set("kv_budget_bytes", s.budget_bytes)
+        .set("live_states", s.live_states)
+        .set("swapped", s.swapped)
+        .set("swap_bytes", s.swap_bytes)
+        .set("swap_outs", s.swap_outs as i64)
+        .set("swap_ins", s.swap_ins as i64)
+}
+
+/// The `admin kv` body: page-level pool gauges (residency, sharing,
+/// dedup/CoW counters, quantization and spill tiers).
+fn kv_body(coord: &mut Coordinator<'_>) -> Json {
+    let s = coord.kv_stats();
+    let p = &s.pages;
+    Json::obj()
+        .set("ok", true)
+        .set("page_bytes", p.page_bytes)
+        .set("pages_resident", p.pages_resident)
+        .set("pages_shared", p.pages_shared)
+        .set("pages_zero", p.pages_zero)
+        .set("pages_spilled", p.pages_spilled)
+        .set("ram_bytes", p.ram_bytes)
+        .set("disk_bytes", p.disk_bytes)
+        .set("frag_pct", p.frag_pct)
+        .set("page_allocs", p.page_allocs as i64)
+        .set("dedup_hits", p.dedup_hits as i64)
+        .set("cow_copies", p.cow_copies as i64)
+        .set("quant_pages", p.quant_pages as i64)
+        .set("spills", p.spills as i64)
+        .set("spill_loads", p.spill_loads as i64)
+        .set("swap_faults", p.swap_faults as i64)
+        .set("parked_sessions", s.swapped)
+        .set("parked_bytes", s.swap_bytes)
+}
+
 fn route_event(
     ev: Event,
     coord: &Coordinator<'_>,
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
     match ev {
-        // swap transitions are scheduler-internal (output is unaffected);
-        // operators observe them through the metrics/cache ops
-        Event::Started { .. } | Event::SwappedOut { .. } | Event::Resumed { .. } => {}
+        // swap transitions — including a recovered SwapFault, which only
+        // re-queues the request — are scheduler-internal (output is
+        // unaffected); operators observe them through the admin ops
+        Event::Started { .. }
+        | Event::SwappedOut { .. }
+        | Event::Resumed { .. }
+        | Event::SwapFault { .. } => {}
         Event::Step { id, new_tokens, step, .. } => {
             if let Some(p) = pending.get(&id) {
                 if p.stream && !new_tokens.is_empty() {
@@ -613,11 +704,18 @@ impl Client {
         self.call(Json::obj().set("op", "cancel").set("id", id as i64))
     }
 
+    /// Versioned admin subcommand (`metrics`, `kv`, `cache`).
+    pub fn admin(&mut self, cmd: &str) -> Result<Json> {
+        self.call(Json::obj().set("op", "admin").set("cmd", cmd).set("v", 1i64))
+    }
+
+    /// Deprecated alias for `admin("metrics")`.
     pub fn metrics(&mut self) -> Result<Json> {
         self.call(Json::obj().set("op", "metrics"))
     }
 
-    /// KV state manager stats (prefix cache, resident bytes, swaps).
+    /// Deprecated alias for `admin("cache")` — KV state manager stats
+    /// (prefix cache, resident bytes, swaps).
     pub fn cache(&mut self) -> Result<Json> {
         self.call(Json::obj().set("op", "cache"))
     }

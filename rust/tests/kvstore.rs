@@ -18,7 +18,7 @@ use specpv::config::{BackendKind, Config, EngineKind, SpecPvConfig};
 use specpv::coordinator::{Coordinator, Event, SubmitOpts};
 use specpv::corpus;
 use specpv::engine::{self, GenRequest};
-use specpv::kvstore::KvStore;
+use specpv::kvstore::{KvCtx, KvStore};
 use specpv::tokenizer;
 
 fn base_cfg() -> Config {
@@ -76,7 +76,8 @@ fn suspend_resume_is_byte_identical_for_all_engines() {
 
         // swap after every round: every engine mode (incl. SpecPV's
         // Full / Refresh / Partial) crosses a suspend boundary
-        let mut session = engine::build(&cfg).start(&be, &req, None).unwrap();
+        let mut session =
+            engine::build(&cfg).start(&be, &req, &KvCtx::disabled()).unwrap();
         let mut rounds = 0usize;
         while !session.is_finished() {
             session.step().unwrap();
@@ -171,7 +172,8 @@ fn estimate_matches_live_session_state_bytes() {
         let cfg = cfg_for(kind);
         let est = engine::estimate_state_bytes(&be, &cfg, kind, &req);
         assert!(est > 0, "{kind:?}: zero estimate");
-        let session = engine::build(&cfg).start(&be, &req, None).unwrap();
+        let session =
+            engine::build(&cfg).start(&be, &req, &KvCtx::disabled()).unwrap();
         assert_eq!(
             est,
             session.state_bytes(),

@@ -1,0 +1,297 @@
+//! Paged block-pool acceptance suite:
+//!
+//!   * property test — arbitrary seeded sequences of allocate / free /
+//!     share / copy-on-write / spill-and-promote over `KvPool` read back
+//!     byte-identically against a flat-slab oracle (the plain `Vec<f32>`
+//!     image each block table is supposed to represent);
+//!   * backend round-trip — `park_state` → `unpark_state` through the
+//!     pool reproduces exactly the image `export_state` reports for a
+//!     real prefilled reference-backend state;
+//!   * swap-fault recovery — corrupting the spill files of a preempted
+//!     session makes resume fail **cleanly**: the request is re-queued
+//!     and regenerated from scratch with identical output, the registry
+//!     counts a swap fault, and nothing panics.
+
+use std::path::PathBuf;
+
+use specpv::backend::reference::ReferenceBackend;
+use specpv::backend::{Backend, StateKind};
+use specpv::config::{BackendKind, Config, EngineKind, KvQuant};
+use specpv::coordinator::{Coordinator, Event, SubmitOpts};
+use specpv::corpus;
+use specpv::engine::{self, GenRequest};
+use specpv::kvstore::{KvCtx, KvPool, PagedState};
+use specpv::offload::OffloadSim;
+use specpv::tokenizer;
+
+/// Deterministic xorshift64* generator — the property test must replay
+/// exactly from its seed.
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n.max(1) as u64) as usize
+    }
+
+    /// Exactly-representable values, with a bias toward zero so the
+    /// all-zero page fast path gets exercised.
+    fn val(&mut self) -> f32 {
+        match self.below(4) {
+            0 => 0.0,
+            _ => (self.below(2048) as f32) - 1024.0,
+        }
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The f32 element of a flat image (`data ++ extra`) at global index
+/// `g`, as the oracle sees it.
+fn image_get(data: &[f32], extra: &[f32], g: usize) -> f32 {
+    if g < data.len() {
+        data[g]
+    } else {
+        extra[g - data.len()]
+    }
+}
+
+fn image_set(data: &mut [f32], extra: &mut [f32], g: usize, v: f32) {
+    if g < data.len() {
+        data[g] = v;
+    } else {
+        extra[g - data.len()] = v;
+    }
+}
+
+fn assert_round_trip(pool: &KvPool, data: &[f32], extra: &[f32], ps: &PagedState, ctx: &str) {
+    let (d, e) = pool.read_image(ps).unwrap();
+    let same = d.len() == data.len()
+        && e.len() == extra.len()
+        && d.iter().zip(data).all(|(a, b)| a.to_bits() == b.to_bits())
+        && e.iter().zip(extra).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same, "{ctx}: paged read-back diverged from the flat-slab oracle");
+}
+
+#[test]
+fn arbitrary_pool_op_sequences_round_trip_byte_identically() {
+    for seed in [1u64, 42, 0xdecafbad] {
+        let dir = tmp_dir(&format!("pool_prop_{seed}"));
+        // tiny pages so multi-page tables are cheap; the exact (f32)
+        // tier only — int8 is tolerance-bounded, not byte-identical
+        let pool = KvPool::with_opts(0, 64, Some(&dir), KvQuant::None);
+        let pe = pool.page_elems();
+        let mut rng = XorShift(seed | 1);
+        // the oracle: each live block table alongside the flat image it
+        // must keep representing
+        let mut live: Vec<(Vec<f32>, Vec<f32>, PagedState)> = Vec::new();
+
+        for step in 0..300 {
+            match rng.below(6) {
+                // allocate a fresh multi-page state
+                0 | 1 => {
+                    let dl = 1 + rng.below(3 * pe);
+                    let el = rng.below(pe);
+                    let data: Vec<f32> = (0..dl).map(|_| rng.val()).collect();
+                    let extra: Vec<f32> = (0..el).map(|_| rng.val()).collect();
+                    let ps = pool.park_image(StateKind::Full, "s", 64, &data, &extra);
+                    live.push((data, extra, ps));
+                }
+                // free one reference
+                2 => {
+                    if !live.is_empty() {
+                        let (_, _, ps) = live.swap_remove(rng.below(live.len()));
+                        pool.free_state(&ps);
+                    }
+                }
+                // share: a second block table over the same pages
+                3 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        let shared = pool.share_state(&live[i].2);
+                        let (d, e, _) = &live[i];
+                        live.push((d.clone(), e.clone(), shared));
+                    }
+                }
+                // copy-on-write: rewrite one page of one table; every
+                // other table sharing that page must keep its old bytes
+                4 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        let total = live[i].0.len() + live[i].1.len();
+                        let pi = rng.below(live[i].2.pages.len());
+                        let lo = pi * pe;
+                        let hi = ((pi + 1) * pe).min(total);
+                        let content: Vec<f32> =
+                            (lo..hi).map(|_| rng.val()).collect();
+                        let (data, extra, ps) = &mut live[i];
+                        let nid = pool.update(ps.pages[pi], &content);
+                        ps.pages[pi] = nid;
+                        for (j, &v) in content.iter().enumerate() {
+                            image_set(data, extra, lo + j, v);
+                        }
+                    }
+                }
+                // tiering round trip: demote to disk, promote back
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        pool.park_cold(std::slice::from_ref(&live[i].2)).unwrap();
+                        pool.promote(std::slice::from_ref(&live[i].2)).unwrap();
+                    }
+                }
+            }
+            if !live.is_empty() {
+                let i = rng.below(live.len());
+                let (d, e, ps) = &live[i];
+                assert_round_trip(&pool, d, e, ps, &format!("seed {seed} step {step}"));
+            }
+        }
+        for (i, (d, e, ps)) in live.iter().enumerate() {
+            assert_round_trip(&pool, d, e, ps, &format!("seed {seed} final state {i}"));
+        }
+        for (_, _, ps) in &live {
+            pool.free_state(ps);
+        }
+        let s = pool.stats();
+        assert_eq!(s.pages_resident, 0, "pool must drain: {s:?}");
+        assert_eq!(s.ram_bytes, 0, "freed pages must release RAM: {s:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Sanity check that the oracle verifies what the image helpers assume.
+#[test]
+fn oracle_image_indexing() {
+    let mut d = vec![1.0, 2.0];
+    let mut e = vec![3.0];
+    assert_eq!(image_get(&d, &e, 2), 3.0);
+    image_set(&mut d, &mut e, 2, 5.0);
+    assert_eq!(e[0], 5.0);
+}
+
+#[test]
+fn parked_backend_state_matches_flat_snapshot_oracle() {
+    let be = ReferenceBackend::new();
+    let prompt = tokenizer::encode(&corpus::continuation_prompt(7, 700));
+    let mut target = engine::session::TargetSession::new(
+        &be,
+        "s",
+        specpv::model::bucket_need(prompt.len().min(150), 16, be.consts()),
+        OffloadSim::new(Default::default()),
+    )
+    .unwrap();
+    let toks: Vec<u32> = prompt.into_iter().take(150).collect();
+    target.prefill(&toks, None, &KvCtx::disabled()).unwrap();
+
+    let snap = target.export().unwrap();
+    // odd page size vs the image length exercises the partial tail page
+    let pool = KvPool::with_opts(0, 1 << 10, None, KvQuant::None);
+    let ps = target.park(&pool).unwrap();
+    assert_eq!(ps.image_len() * 4, snap.bytes(), "page ABI and slab ABI disagree");
+
+    // the parked image is bit-for-bit the exported snapshot
+    let (data, extra) = pool.read_image(&ps).unwrap();
+    assert_eq!(data.len(), snap.data.len());
+    assert_eq!(extra.len(), snap.extra.len());
+    assert!(
+        data.iter().zip(&snap.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "parked data diverged from export_state"
+    );
+    assert!(
+        extra.iter().zip(&snap.extra).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "parked extra rows diverged from export_state"
+    );
+
+    // and unparking rebuilds a state whose re-export is identical
+    target.restore_paged(&pool, &ps).unwrap();
+    let back = target.export().unwrap();
+    assert!(
+        back.data.iter().zip(&snap.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "unpark → export diverged"
+    );
+    pool.free_state(&ps);
+}
+
+#[test]
+fn corrupt_spill_files_fault_cleanly_and_requeue() {
+    let be = ReferenceBackend::new();
+    let dir = tmp_dir("swap_fault");
+    let mut cfg = Config {
+        backend: BackendKind::Reference,
+        engine: EngineKind::Autoregressive,
+        ..Config::default()
+    };
+    // no prefix cache: the preempted session's pages must be unshared so
+    // park_cold actually spills them to disk
+    cfg.prefix_cache_bytes = 0;
+    cfg.kv_swap_dir = dir.to_string_lossy().into_owned();
+
+    let prompt = tokenizer::encode(&corpus::continuation_prompt(3, 150));
+    let req = GenRequest::greedy(prompt, 12);
+    let solo = engine::generate_with(&cfg, &be, &req).unwrap();
+    assert!(solo.tokens.len() >= 4, "prompt decodes too few tokens to swap");
+
+    let est = engine::estimate_state_bytes(&be, &cfg, EngineKind::Autoregressive, &req);
+    cfg.kv_budget_bytes = est * 3 / 2; // fits one session, never two
+    cfg.max_active = 4;
+
+    let mut coord = Coordinator::new(&be, cfg);
+    let low = coord
+        .submit_opts(req.clone(), SubmitOpts { priority: 0, ..SubmitOpts::default() })
+        .unwrap();
+    coord.tick();
+    coord.tick();
+    let high = coord
+        .submit_opts(req.clone(), SubmitOpts { priority: 1, ..SubmitOpts::default() })
+        .unwrap();
+
+    let mut faults = Vec::new();
+    let mut corrupted = false;
+    while !coord.idle() {
+        for ev in coord.tick() {
+            match ev {
+                Event::SwappedOut { id } => {
+                    assert_eq!(id, low);
+                    // clobber every spill file the demotion just wrote
+                    let mut n = 0;
+                    for f in std::fs::read_dir(&dir).unwrap() {
+                        std::fs::write(f.unwrap().path(), b"corrupt").unwrap();
+                        n += 1;
+                    }
+                    assert!(n > 0, "preemption spilled no pages to {dir:?}");
+                    corrupted = true;
+                }
+                Event::SwapFault { id } => faults.push(id),
+                _ => {}
+            }
+        }
+    }
+    assert!(corrupted, "low-priority session was never preempted");
+    assert_eq!(faults, vec![low], "corrupt spill files must surface as a fault");
+    assert_eq!(coord.registry.swap_faults, 1);
+
+    // the faulted request was re-queued and regenerated from scratch —
+    // deterministic seeding makes the recovered output identical
+    for id in [low, high] {
+        let tr = coord.get(id).unwrap();
+        let r = tr.result.as_ref().expect("both requests must complete");
+        assert_eq!(r.tokens, solo.tokens, "request {id} diverged after the fault");
+    }
+    let stats = coord.kv_stats();
+    assert_eq!(stats.resident_bytes, 0, "pool must drain when idle");
+    assert_eq!(stats.swapped, 0, "no session may stay parked");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -426,3 +426,50 @@ fn emitted_tokens_respect_max_new() {
     // tokens over 3-token rounds = 3 steps × ≤2 drafted
     assert!(r.stats.accepted_total <= 2 * r.stats.verify_steps);
 }
+
+/// Page-gauge accounting: a page referenced by several block tables
+/// (prefix sharing) and byte-identical parks that dedup to the same
+/// physical page must count **once** in `kv_pages_resident` —
+/// `Registry` reports physical pages, not the sum of block-table
+/// lengths.
+#[test]
+fn shared_prefix_pages_are_not_double_counted() {
+    use specpv::backend::StateKind;
+
+    let mut c = coord(1, 1);
+    // a two-page image (non-zero so dedup is content-hash, not the
+    // zero-page fast path)
+    let elems = c.pool.stats().page_bytes / 4;
+    let data: Vec<f32> = (0..elems + 7).map(|i| (i as f32) + 0.5).collect();
+    let a = c.pool.park_image(StateKind::Full, "s", 64, &data, &[]);
+    let physical = c.pool.stats().pages_resident;
+    assert!(physical >= 2, "image should span at least two pages");
+
+    // share into a second block table: same physical pages
+    let b = c.pool.share_state(&a);
+    // park the same bytes again: content dedup, still the same pages
+    let d = c.pool.park_image(StateKind::Full, "s", 64, &data, &[]);
+
+    c.tick();
+    assert_eq!(
+        c.registry.kv_pages_resident, physical,
+        "three block tables over one image must not inflate residency"
+    );
+    assert!(
+        c.registry.kv_pages_shared >= physical,
+        "every page is multiply referenced and must show as shared"
+    );
+    let summary = c.registry.summary();
+    assert!(summary.contains("kv_pages="), "{summary}");
+
+    // dropping the extra references returns to sole ownership…
+    c.pool.free_state(&b);
+    c.pool.free_state(&d);
+    c.tick();
+    assert_eq!(c.registry.kv_pages_resident, physical);
+    assert_eq!(c.registry.kv_pages_shared, 0);
+    // …and freeing the last table drains the pool
+    c.pool.free_state(&a);
+    c.tick();
+    assert_eq!(c.registry.kv_pages_resident, 0);
+}

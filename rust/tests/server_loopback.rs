@@ -225,3 +225,81 @@ fn bad_requests_get_error_lines_not_disconnects() {
     serve_on(listener, coord).unwrap();
     client.join().unwrap();
 }
+
+#[test]
+fn admin_ops_and_deprecated_aliases() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let coord = scripted_coordinator(2, 2, 0);
+
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c.generate("warm the scheduler", 8, "spec_pv").unwrap();
+        assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(true), "{r:?}");
+
+        // versioned admin subcommands answer with v/cmd markers and no
+        // deprecation flag
+        let m = c.admin("metrics").unwrap();
+        assert_eq!(m.get("ok").and_then(|x| x.as_bool()), Some(true), "{m:?}");
+        assert_eq!(m.get("v").and_then(|x| x.as_i64()), Some(1), "{m:?}");
+        assert_eq!(m.get("cmd").and_then(|x| x.as_str()), Some("metrics"));
+        assert!(m.get("deprecated").is_none(), "{m:?}");
+        assert_eq!(m.get("completed").and_then(|x| x.as_i64()), Some(1));
+        for key in ["kv_pages_resident", "kv_pages_shared", "kv_frag_pct", "swap_faults"] {
+            assert!(m.get(key).is_some(), "missing {key}: {m:?}");
+        }
+
+        let k = c.admin("kv").unwrap();
+        assert_eq!(k.get("ok").and_then(|x| x.as_bool()), Some(true), "{k:?}");
+        assert_eq!(k.get("cmd").and_then(|x| x.as_str()), Some("kv"));
+        for key in [
+            "page_bytes",
+            "pages_resident",
+            "pages_shared",
+            "pages_spilled",
+            "ram_bytes",
+            "frag_pct",
+            "dedup_hits",
+            "cow_copies",
+            "swap_faults",
+            "parked_sessions",
+        ] {
+            assert!(k.get(key).is_some(), "missing {key}: {k:?}");
+        }
+        assert_eq!(k.get("parked_sessions").and_then(|x| x.as_i64()), Some(0));
+
+        let s = c.admin("cache").unwrap();
+        assert_eq!(s.get("ok").and_then(|x| x.as_bool()), Some(true), "{s:?}");
+        assert_eq!(s.get("cmd").and_then(|x| x.as_str()), Some("cache"));
+        assert!(s.get("prefix_hits").is_some(), "{s:?}");
+
+        // the old flat op names still answer the same bodies, flagged so
+        // clients migrate
+        let lm = c.metrics().unwrap();
+        assert_eq!(lm.get("ok").and_then(|x| x.as_bool()), Some(true), "{lm:?}");
+        assert_eq!(lm.get("deprecated").and_then(|x| x.as_bool()), Some(true));
+        assert!(lm.get("v").is_none(), "{lm:?}");
+        assert!(lm.get("completed").is_some(), "{lm:?}");
+        let lc = c.cache().unwrap();
+        assert_eq!(lc.get("deprecated").and_then(|x| x.as_bool()), Some(true));
+        assert!(lc.get("prefix_hits").is_some(), "{lc:?}");
+
+        // bad admin requests are error lines, not disconnects
+        let e = c.call(Json::obj().set("op", "admin").set("cmd", "frobnicate")).unwrap();
+        assert_eq!(e.get("ok").and_then(|x| x.as_bool()), Some(false), "{e:?}");
+        let e = c
+            .call(Json::obj().set("op", "admin").set("cmd", "metrics").set("v", 2i64))
+            .unwrap();
+        assert_eq!(e.get("ok").and_then(|x| x.as_bool()), Some(false), "{e:?}");
+        let e = c.call(Json::obj().set("op", "admin")).unwrap();
+        assert_eq!(e.get("ok").and_then(|x| x.as_bool()), Some(false), "{e:?}");
+
+        // the connection still serves work afterwards
+        let r = c.generate("still alive", 8, "spec_pv").unwrap();
+        assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(true), "{r:?}");
+        c.shutdown().unwrap();
+    });
+
+    serve_on(listener, coord).unwrap();
+    client.join().unwrap();
+}
