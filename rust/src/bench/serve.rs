@@ -16,8 +16,18 @@
 //! prefill), so the sweep measures the decode path the batched kernels
 //! actually fuse; prefill fusion is exercised at the op level by
 //! `bench backend` and `rust/tests/batched_parity.rs`.
+//!
+//! A second sweep exercises **sharded serving** (DESIGN.md §14): the
+//! same total session count is driven through shards ∈ {1, 2, 4} real
+//! worker-shard loops — each shard its own reference backend (pinned to
+//! one compute thread) + coordinator, sessions placed by the
+//! prefix-affinity router — reporting aggregate tok/s and p95 TTFT per
+//! shard count. A second hard gate requires shards=2 to strictly beat
+//! shards=1 aggregate throughput: sharding must buy real parallelism.
 
 use std::path::Path;
+use std::sync::mpsc::channel;
+use std::thread;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -28,6 +38,8 @@ use crate::config::{BackendKind, Config, EngineKind, SpecPvConfig};
 use crate::coordinator::{Coordinator, Event};
 use crate::engine::GenRequest;
 use crate::json::Json;
+use crate::serve::router::Router;
+use crate::serve::shard::{run_shard, FrontEvent, ShardHandle, SubmitReq};
 use crate::util::stats::Samples;
 use crate::{corpus, tokenizer};
 
@@ -38,6 +50,13 @@ const OUTPUT_FILE: &str = "BENCH_serve.json";
 
 /// Continuous-batching widths swept.
 const BATCHES: [usize; 4] = [1, 2, 4, 8];
+
+/// Shard counts swept by the sharded-serving leg.
+const SHARDS: [usize; 3] = [1, 2, 4];
+
+/// Total concurrent sessions driven through the shard sweep (split
+/// across shards by the router).
+const SHARD_SESSIONS: usize = 8;
 
 /// CI-geometry request shape: enough prompt to be long-context shaped at
 /// the reference scale, enough decode for the batched path to dominate.
@@ -102,6 +121,100 @@ fn run_one(be: &ReferenceBackend, batch: usize, threads: usize) -> Result<RunSta
     })
 }
 
+struct ShardRunStats {
+    tokens: usize,
+    tok_s: f64,
+    p95_ttft_ms: f64,
+    routed_away: u64,
+}
+
+/// One shard-sweep point: `shards` real worker-shard loops, each its own
+/// reference backend (pinned to one compute thread so added shards are
+/// the only source of parallelism) + coordinator, with all
+/// [`SHARD_SESSIONS`] sessions placed by the prefix-affinity router and
+/// driven to completion through the shard command/event channels.
+fn run_shards(shards: usize) -> Result<ShardRunStats> {
+    let (ev_tx, ev_rx) = channel::<FrontEvent>();
+    let mut handles = Vec::with_capacity(shards);
+    let mut rxs = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let (tx, rx) = channel();
+        handles.push(ShardHandle::new(i, tx));
+        rxs.push(rx);
+    }
+    let mut router = Router::new(shards, 1.25);
+    let t0 = Instant::now();
+    thread::scope(move |s| -> Result<ShardRunStats> {
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let tx = ev_tx.clone();
+            s.spawn(move || {
+                let be = ReferenceBackend::with_threads(1);
+                let cfg = Config {
+                    backend: BackendKind::Reference,
+                    engine: EngineKind::SpecPv,
+                    specpv: SpecPvConfig {
+                        retrieval_budget: 64,
+                        ..SpecPvConfig::default()
+                    },
+                    max_active: SHARD_SESSIONS,
+                    // distinct prompts: keep the prefix cache out of the
+                    // measurement
+                    prefix_cache_bytes: 0,
+                    threads: 1,
+                    ..Config::default()
+                };
+                let mut coord = Coordinator::new(&be, cfg);
+                run_shard(i, &mut coord, rx, tx);
+            });
+        }
+        drop(ev_tx);
+        for sid in 0..SHARD_SESSIONS {
+            let prompt = corpus::continuation_prompt(sid as u64 + 1, PROMPT_BYTES);
+            let toks = tokenizer::encode(&prompt);
+            let place = router.place(&toks);
+            handles[place.shard].submit(SubmitReq {
+                gid: sid as u64,
+                conn: 0,
+                gen: GenRequest::greedy(toks, MAX_NEW),
+                engine: None,
+                stream: false,
+                deadline_secs: None,
+                priority: 0,
+            });
+        }
+        let mut done = 0usize;
+        let mut tokens = 0usize;
+        let mut ttfts = Samples::default();
+        while done < SHARD_SESSIONS {
+            match ev_rx.recv() {
+                Ok(FrontEvent::Line { line, .. }) => {
+                    let j = Json::parse(line.trim())?;
+                    if j.get("ok").and_then(|x| x.as_bool()) != Some(true) {
+                        bail!("shard bench request failed: {}", line.trim());
+                    }
+                    tokens += j.get("tokens").and_then(|x| x.as_usize()).unwrap_or(0);
+                    if let Some(t) = j.get("ttft_s").and_then(|x| x.as_f64()) {
+                        ttfts.push(t);
+                    }
+                }
+                Ok(FrontEvent::Terminal { .. }) => done += 1,
+                Ok(_) => {}
+                Err(_) => bail!("shard event channel closed early"),
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        for h in &handles {
+            h.drain();
+        }
+        Ok(ShardRunStats {
+            tokens,
+            tok_s: tokens as f64 / secs.max(1e-9),
+            p95_ttft_ms: ttfts.p95() * 1e3,
+            routed_away: router.routed_away(),
+        })
+    })
+}
+
 /// Drive the sweep; see the module docs for outputs and the hard gate.
 pub fn run(out_dir: &Path, quick: bool, threads: usize) -> Result<()> {
     let iters = if quick { 1 } else { 3 };
@@ -157,13 +270,61 @@ pub fn run(out_dir: &Path, quick: bool, threads: usize) -> Result<()> {
     }
     table.emit(out_dir, "serve")?;
 
+    // sharded-serving leg: same total sessions, split across real worker
+    // shards by the prefix-affinity router
+    let mut shard_table = Table::new(
+        "Sharded serving (8 sessions, spec_pv, 1 compute thread per shard): throughput by shard count",
+        &["shards", "agg tok/s", "p95 ttft ms", "speedup vs s1", "routed away"],
+    );
+    let mut shard_rows = Vec::new();
+    let mut base_shard_tok_s = 0f64;
+    let mut by_shards: Vec<(usize, f64)> = Vec::new();
+    for &shards in &SHARDS {
+        let mut best: Option<ShardRunStats> = None;
+        for _ in 0..iters {
+            let r = run_shards(shards)?;
+            if best.as_ref().map(|b| r.tok_s > b.tok_s).unwrap_or(true) {
+                best = Some(r);
+            }
+        }
+        let r = best.expect("at least one iteration ran");
+        if shards == 1 {
+            base_shard_tok_s = r.tok_s;
+        }
+        let speedup =
+            if base_shard_tok_s > 0.0 { r.tok_s / base_shard_tok_s } else { 0.0 };
+        let row_json = Json::obj()
+            .set("shards", shards)
+            .set("sessions", SHARD_SESSIONS)
+            .set("tokens", r.tokens)
+            .set("agg_tok_s", r.tok_s)
+            .set("p95_ttft_ms", r.p95_ttft_ms)
+            .set("speedup_vs_s1", speedup)
+            .set("routed_away", r.routed_away as i64);
+        shard_table.row(
+            vec![
+                shards.to_string(),
+                format!("{:.1}", r.tok_s),
+                format!("{:.3}", r.p95_ttft_ms),
+                fmt_speedup(speedup),
+                r.routed_away.to_string(),
+            ],
+            row_json.clone(),
+        );
+        shard_rows.push(row_json);
+        by_shards.push((shards, r.tok_s));
+    }
+    shard_table.emit(out_dir, "serve_shards")?;
+
     let combined = Json::obj()
         .set("schema_version", SCHEMA_VERSION)
         .set("threads", crate::util::pool::resolve_threads(threads))
         .set("engine", "spec_pv")
         .set("prompt_bytes", PROMPT_BYTES)
         .set("max_new", MAX_NEW)
-        .set("rows", Json::Arr(rows));
+        .set("rows", Json::Arr(rows))
+        .set("shard_sessions", SHARD_SESSIONS)
+        .set("shard_rows", Json::Arr(shard_rows));
     std::fs::write(OUTPUT_FILE, combined.to_string())?;
     eprintln!("[bench serve] wrote {OUTPUT_FILE}");
 
@@ -179,6 +340,22 @@ pub fn run(out_dir: &Path, quick: bool, threads: usize) -> Result<()> {
     eprintln!(
         "[bench serve] batch=4 vs batch=1 aggregate speedup: {}",
         fmt_speedup(b4 / b1)
+    );
+
+    // hard gate: sharding must be a strict aggregate-throughput win too
+    let stok = |n: usize| {
+        by_shards.iter().find(|(w, _)| *w == n).map(|(_, t)| *t).unwrap_or(0.0)
+    };
+    let (s1, s2) = (stok(1), stok(2));
+    if s2 <= s1 {
+        bail!(
+            "sharded serving regression: shards=2 aggregate {s2:.1} tok/s is not \
+             strictly greater than shards=1 {s1:.1} tok/s"
+        );
+    }
+    eprintln!(
+        "[bench serve] shards=2 vs shards=1 aggregate speedup: {}",
+        fmt_speedup(s2 / s1)
     );
     Ok(())
 }

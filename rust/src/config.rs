@@ -259,6 +259,14 @@ pub struct Config {
     /// `SPECPV_THREADS` env override (0 = env/auto default); echoed in
     /// `Registry::summary`
     pub threads: usize,
+    /// serve: worker shards, each owning a private `Coordinator` +
+    /// `Backend` + KV pool on its own thread (1 = today's single-worker
+    /// behavior, byte-identical outputs)
+    pub shards: usize,
+    /// serve: router spill factor — a session leaves its prefix-affinity
+    /// home shard only when `home_load + 1 > route_imbalance *
+    /// (min_load + 1)` (≥ 1.0; larger keeps affinity stickier)
+    pub route_imbalance: f64,
 }
 
 impl Default for Config {
@@ -286,6 +294,8 @@ impl Default for Config {
             kv_swap_dir: String::new(),
             kv_quant: KvQuant::None,
             threads: 0,
+            shards: 1,
+            route_imbalance: 2.0,
         }
     }
 }
@@ -499,6 +509,22 @@ static OPTIONS: &[OptDef] = &[
         c.threads = v.parse()?;
         Ok(())
     }),
+    opt!("shards", "serve: worker shards (1 = single-worker behavior)", |c, v| {
+        let n: usize = v.parse()?;
+        if n == 0 {
+            bail!("must be at least 1");
+        }
+        c.shards = n;
+        Ok(())
+    }),
+    opt!("route_imbalance", "serve: router spill factor (>= 1.0)", |c, v| {
+        let f: f64 = v.parse()?;
+        if f.is_nan() || f < 1.0 {
+            bail!("must be at least 1.0");
+        }
+        c.route_imbalance = f;
+        Ok(())
+    }),
 ];
 
 /// The declarative option table (config keys + CLI flags).
@@ -558,6 +584,26 @@ mod tests {
         kv.insert("threads".to_string(), "3".to_string());
         c.apply_overrides(&kv).unwrap();
         assert_eq!(c.threads, 3);
+    }
+
+    #[test]
+    fn shard_keys_parse() {
+        let mut c = Config::default();
+        assert_eq!(c.shards, 1, "default: single-worker serving");
+        assert_eq!(c.route_imbalance, 2.0);
+        let mut kv = BTreeMap::new();
+        kv.insert("shards".to_string(), "4".to_string());
+        kv.insert("route_imbalance".to_string(), "1.5".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.route_imbalance, 1.5);
+
+        let mut bad = BTreeMap::new();
+        bad.insert("shards".to_string(), "0".to_string());
+        assert!(c.apply_overrides(&bad).is_err(), "shards must be >= 1");
+        let mut bad = BTreeMap::new();
+        bad.insert("route_imbalance".to_string(), "0.5".to_string());
+        assert!(c.apply_overrides(&bad).is_err(), "imbalance must be >= 1.0");
     }
 
     #[test]

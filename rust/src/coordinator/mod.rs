@@ -118,6 +118,10 @@ pub enum Event {
     Finished { id: RequestId },
     Cancelled { id: RequestId },
     Failed { id: RequestId, error: String },
+    /// The coordinator entered drain (server shutdown): this in-flight
+    /// request will run to completion but no new work is admitted.
+    /// Streaming clients see a clean end instead of a dropped socket.
+    Draining { id: RequestId },
 }
 
 impl Event {
@@ -130,7 +134,8 @@ impl Event {
             | Event::SwapFault { id }
             | Event::Finished { id }
             | Event::Cancelled { id }
-            | Event::Failed { id, .. } => *id,
+            | Event::Failed { id, .. }
+            | Event::Draining { id } => *id,
         }
     }
 }
@@ -387,6 +392,9 @@ pub struct Coordinator<'rt> {
     /// fuse compatible kernel ops across sessions (DESIGN.md §12);
     /// off = every session steps through the sequential `step()` path
     batching: bool,
+    /// drain mode (server shutdown): reject new submits, run the
+    /// in-flight set to completion
+    draining: bool,
     pub registry: Registry,
 }
 
@@ -450,6 +458,7 @@ impl<'rt> Coordinator<'rt> {
             prefix: None,
             rr: 0,
             batching: true,
+            draining: false,
             registry,
         }
     }
@@ -485,6 +494,9 @@ impl<'rt> Coordinator<'rt> {
     /// Admit a request with full submit options (engine override,
     /// deadline, preemption priority).
     pub fn submit_opts(&mut self, req: GenRequest, opts: SubmitOpts) -> Result<RequestId> {
+        if self.draining {
+            anyhow::bail!("server shutting down");
+        }
         if req.prompt.len() > self.admission.max_prompt {
             anyhow::bail!(
                 "prompt {} exceeds admission limit {}",
@@ -1055,6 +1067,29 @@ impl<'rt> Coordinator<'rt> {
             self.tick();
         }
         self.sync_backend_counters();
+    }
+
+    /// Enter drain mode (server shutdown): further submits are rejected
+    /// with "server shutting down" while queued/active/swapped work runs
+    /// to completion through the normal tick path. Returns one
+    /// [`Event::Draining`] per non-terminal request so streaming clients
+    /// can be told the stream will end cleanly. Idempotent: repeat calls
+    /// return an empty vec.
+    pub fn begin_drain(&mut self) -> Vec<Event> {
+        if self.draining {
+            return Vec::new();
+        }
+        self.draining = true;
+        self.requests
+            .iter()
+            .filter(|tr| !tr.state.is_terminal())
+            .map(|tr| Event::Draining { id: tr.id })
+            .collect()
+    }
+
+    /// True once [`Coordinator::begin_drain`] has been called.
+    pub fn draining(&self) -> bool {
+        self.draining
     }
 
     pub fn get(&self, id: RequestId) -> Option<&TrackedRequest> {

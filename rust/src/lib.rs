@@ -36,6 +36,7 @@ pub mod offload;
 pub mod retrieval;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod server;
 pub mod tokenizer;
 pub mod tree;

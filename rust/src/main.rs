@@ -6,6 +6,10 @@
 //! specpv serve    [--addr 127.0.0.1:7799] [--max-active 4]
 //!                 [--max-queue 256] [--max-prompt 7168]
 //!                 [--kv-budget-bytes N] [--prefix-cache-bytes N]
+//!                 [--shards N] [--route-imbalance F]
+//!                 # N > 1: sharded serving — N workers, each its own
+//!                 # coordinator/backend/KV pool, sessions routed by
+//!                 # prompt-prefix affinity; Ctrl-C drains gracefully
 //! specpv bench    <fig1|table1|fig4|table2|table3|fig5|table4|fig6|fig7|fig8|all>
 //!                 [--out results] [--quick]
 //! specpv bench backend [--quick] [--check] [--update-baseline]
@@ -140,6 +144,9 @@ fn main() -> Result<()> {
         }
         Some("serve") => {
             let be = backend::from_config(&cfg)?;
+            // first Ctrl-C drains gracefully (in-flight requests finish,
+            // streaming clients see a draining marker); second exits hard
+            specpv::serve::install_ctrlc();
             server::serve(be.as_ref(), cfg)?;
         }
         Some("bench") => {

@@ -1,0 +1,424 @@
+//! Nonblocking event-loop front end: one poll loop multiplexes every
+//! client socket (hand-rolled `set_nonblocking` + readiness polling —
+//! mio is not in the offline vendor set), frames JSON lines in
+//! per-connection buffers, routes parsed ops to worker shards through
+//! the [`Router`] and fans shard events back to the owning connections.
+//! Replaces the old two-threads-per-connection design and its
+//! self-connect accept wakeup: all socket work happens here, and shard
+//! events arrive on one mpsc receiver whose 1 ms `recv_timeout` doubles
+//! as the idle wait (a shard event wakes the loop immediately; fresh
+//! socket bytes wait out at most the timeout).
+//!
+//! Backpressure: response lines queue in a per-connection outbox; a
+//! consumer that stops reading past `MAX_OUTBOX` buffered bytes is
+//! disconnected rather than ballooning memory. A closed connection's
+//! in-flight requests are cancelled on their shards so the routing table
+//! and load accounting converge.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::json::Json;
+
+use super::router::Router;
+use super::shard::{ConnId, FrontEvent, Gid, ShardHandle, SubmitReq};
+use super::wire::{self, AdminCmd, Defaults, Request};
+
+/// Slow-consumer disconnect threshold: a connection whose un-flushed
+/// outbox exceeds this many bytes is dropped.
+const MAX_OUTBOX: usize = 1 << 20;
+
+struct Conn {
+    stream: TcpStream,
+    /// unparsed inbound bytes (a partial JSON line)
+    rbuf: Vec<u8>,
+    /// outbox: rendered lines not yet written to the socket
+    wbuf: Vec<u8>,
+    /// write cursor into `wbuf`
+    wpos: usize,
+    /// generate gids owned by this connection still in flight
+    inflight: Vec<Gid>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            inflight: Vec::new(),
+        }
+    }
+
+    fn push_line(&mut self, j: Json) {
+        self.wbuf.extend_from_slice(wire::line_of(j).as_bytes());
+    }
+
+    fn outbox_len(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+}
+
+/// One in-flight admin fan-out (correlation id → aggregation state).
+struct AdminAgg {
+    conn: ConnId,
+    cmd: AdminCmd,
+    legacy: bool,
+    want: usize,
+    bodies: Vec<(usize, Json)>,
+}
+
+struct Frontend {
+    shards: Vec<ShardHandle>,
+    router: Router,
+    defaults: Defaults,
+    conns: HashMap<ConnId, Conn>,
+    /// gid → (shard, owning connection)
+    routes: HashMap<Gid, (usize, ConnId)>,
+    admin_pending: HashMap<u64, AdminAgg>,
+    next_conn: ConnId,
+    next_gid: Gid,
+    next_corr: u64,
+    draining: bool,
+    drained: Vec<bool>,
+    dead: Vec<ConnId>,
+}
+
+/// Run the event-loop front end until drained (a `shutdown` op or the
+/// process-wide Ctrl-C flag). Owns the listener and every client socket.
+pub fn run_frontend(
+    listener: TcpListener,
+    shards: Vec<ShardHandle>,
+    ev_rx: Receiver<FrontEvent>,
+    router: Router,
+    defaults: Defaults,
+) -> Result<()> {
+    let n = shards.len();
+    let fe = Frontend {
+        shards,
+        router,
+        defaults,
+        conns: HashMap::new(),
+        routes: HashMap::new(),
+        admin_pending: HashMap::new(),
+        next_conn: 0,
+        next_gid: 0,
+        next_corr: 0,
+        draining: false,
+        drained: vec![false; n],
+        dead: Vec::new(),
+    };
+    fe.run(listener, ev_rx)
+}
+
+impl Frontend {
+    fn run(mut self, listener: TcpListener, ev_rx: Receiver<FrontEvent>) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        loop {
+            if !self.draining && super::shutdown_requested() {
+                self.begin_drain();
+            }
+            self.accept(&listener);
+            self.read_conns();
+            loop {
+                match ev_rx.try_recv() {
+                    Ok(ev) => self.handle_event(ev),
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            }
+            self.write_conns();
+            self.reap();
+            if self.draining && self.drained.iter().all(|&d| d) {
+                // every shard has delivered its final lines; flush what
+                // the sockets will take, then exit
+                self.flush_all(Duration::from_millis(500));
+                return Ok(());
+            }
+            // idle wait: a shard event wakes us immediately; fresh socket
+            // bytes wait out at most the 1 ms timeout
+            match ev_rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(ev) => self.handle_event(ev),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    fn begin_drain(&mut self) {
+        if self.draining {
+            return;
+        }
+        self.draining = true;
+        // commands already queued (submits, admins) are processed before
+        // the Drain marker — channel order is the drain barrier
+        for h in &self.shards {
+            h.drain();
+        }
+    }
+
+    fn accept(&mut self, listener: &TcpListener) {
+        if self.draining {
+            return;
+        }
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let cid = self.next_conn;
+                    self.next_conn += 1;
+                    self.conns.insert(cid, Conn::new(stream));
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn read_conns(&mut self) {
+        let cids: Vec<ConnId> = self.conns.keys().copied().collect();
+        for cid in cids {
+            let Some(mut conn) = self.conns.remove(&cid) else { continue };
+            let mut closed = false;
+            let mut buf = [0u8; 4096];
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        closed = true;
+                        break;
+                    }
+                    Ok(n) => conn.rbuf.extend_from_slice(&buf[..n]),
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+            while let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') {
+                let raw: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                let text = String::from_utf8_lossy(&raw);
+                let line = text.trim();
+                if !line.is_empty() {
+                    self.handle_line(cid, &mut conn, line);
+                }
+            }
+            self.conns.insert(cid, conn);
+            if closed {
+                self.dead.push(cid);
+            }
+        }
+    }
+
+    fn handle_line(&mut self, cid: ConnId, conn: &mut Conn, line: &str) {
+        let req = match wire::parse_request(line, &self.defaults) {
+            Ok(r) => r,
+            Err(e) => {
+                conn.push_line(Json::obj().set("ok", false).set("error", format!("{e:#}")));
+                return;
+            }
+        };
+        match req {
+            Request::Ping => conn.push_line(Json::obj().set("ok", true)),
+            Request::Shutdown => {
+                conn.push_line(Json::obj().set("ok", true));
+                self.begin_drain();
+            }
+            Request::Cancel { id } => match self.routes.get(&id) {
+                // the owning shard answers after the final line, keeping
+                // the old final-then-ack ordering on the wire
+                Some(&(shard, _)) => self.shards[shard].cancel(id, cid),
+                None => conn.push_line(Json::obj().set("ok", true).set("cancelled", false)),
+            },
+            Request::Admin { cmd, legacy } => {
+                if self.draining {
+                    conn.push_line(
+                        Json::obj().set("ok", false).set("error", "server shutting down"),
+                    );
+                    return;
+                }
+                let corr = self.next_corr;
+                self.next_corr += 1;
+                self.admin_pending.insert(
+                    corr,
+                    AdminAgg {
+                        conn: cid,
+                        cmd,
+                        legacy,
+                        want: self.shards.len(),
+                        bodies: Vec::new(),
+                    },
+                );
+                for h in &self.shards {
+                    h.admin(corr, cmd);
+                }
+            }
+            Request::Generate { gen, engine, stream, deadline_secs, priority } => {
+                if self.draining {
+                    conn.push_line(
+                        Json::obj().set("ok", false).set("error", "server shutting down"),
+                    );
+                    return;
+                }
+                let place = self.router.place(&gen.prompt);
+                let gid = self.next_gid;
+                self.next_gid += 1;
+                self.routes.insert(gid, (place.shard, cid));
+                conn.inflight.push(gid);
+                self.shards[place.shard].submit(SubmitReq {
+                    gid,
+                    conn: cid,
+                    gen,
+                    engine,
+                    stream,
+                    deadline_secs,
+                    priority,
+                });
+            }
+        }
+    }
+
+    fn handle_event(&mut self, ev: FrontEvent) {
+        match ev {
+            FrontEvent::Line { conn, line } => {
+                // lines for a connection that already went away are dropped
+                if let Some(c) = self.conns.get_mut(&conn) {
+                    c.wbuf.extend_from_slice(line.as_bytes());
+                }
+            }
+            FrontEvent::Terminal { conn, shard, gid } => {
+                self.router.finished(shard);
+                self.routes.remove(&gid);
+                if let Some(c) = self.conns.get_mut(&conn) {
+                    c.inflight.retain(|&g| g != gid);
+                }
+            }
+            FrontEvent::Admin { corr, shard, body } => {
+                let done = match self.admin_pending.get_mut(&corr) {
+                    Some(agg) => {
+                        agg.bodies.push((shard, body));
+                        agg.bodies.len() >= agg.want
+                    }
+                    None => false,
+                };
+                if done {
+                    if let Some(agg) = self.admin_pending.remove(&corr) {
+                        let (conn, body) = self.render_admin(agg);
+                        if let Some(c) = self.conns.get_mut(&conn) {
+                            c.push_line(body);
+                        }
+                    }
+                }
+            }
+            FrontEvent::Drained { shard } => {
+                if let Some(d) = self.drained.get_mut(shard) {
+                    *d = true;
+                }
+            }
+        }
+    }
+
+    /// Assemble the final admin response from the per-shard bodies: a
+    /// verbatim pass-through at one shard, the documented merge above it,
+    /// and the structured per-shard dump for `cmd:"shards"`.
+    fn render_admin(&self, mut agg: AdminAgg) -> (ConnId, Json) {
+        agg.bodies.sort_by_key(|(s, _)| *s);
+        let body = if agg.cmd == AdminCmd::Shards {
+            let per_shard: Vec<Json> = agg
+                .bodies
+                .iter()
+                .map(|(s, b)| {
+                    b.clone()
+                        .set("placed", self.router.placed(*s) as i64)
+                        .set("load", self.router.load(*s))
+                })
+                .collect();
+            Json::obj()
+                .set("ok", true)
+                .set("shards", self.shards.len())
+                .set("routed_away", self.router.routed_away() as i64)
+                .set("per_shard", per_shard)
+        } else {
+            let bodies: Vec<Json> = agg.bodies.into_iter().map(|(_, b)| b).collect();
+            wire::merge_admin(&bodies)
+        };
+        let body = if agg.legacy {
+            body.set("deprecated", true)
+        } else {
+            body.set("v", 1i64).set("cmd", agg.cmd.name())
+        };
+        (agg.conn, body)
+    }
+
+    fn write_conns(&mut self) {
+        for (&cid, conn) in self.conns.iter_mut() {
+            while conn.wpos < conn.wbuf.len() {
+                match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                    Ok(0) => {
+                        self.dead.push(cid);
+                        break;
+                    }
+                    Ok(n) => conn.wpos += n,
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        self.dead.push(cid);
+                        break;
+                    }
+                }
+            }
+            if conn.wpos == conn.wbuf.len() {
+                conn.wbuf.clear();
+                conn.wpos = 0;
+            } else if conn.wpos > (64 << 10) {
+                // reclaim the flushed prefix of a long-lived outbox
+                conn.wbuf.drain(..conn.wpos);
+                conn.wpos = 0;
+            }
+            if conn.outbox_len() > MAX_OUTBOX {
+                eprintln!(
+                    "server: disconnecting slow consumer (conn {cid}, {} bytes buffered)",
+                    conn.outbox_len()
+                );
+                self.dead.push(cid);
+            }
+        }
+    }
+
+    /// Drop closed connections; cancel their in-flight requests on the
+    /// owning shards so every gid still reaches its Terminal event.
+    fn reap(&mut self) {
+        while let Some(cid) = self.dead.pop() {
+            let Some(conn) = self.conns.remove(&cid) else { continue };
+            for gid in conn.inflight {
+                if let Some(&(shard, _)) = self.routes.get(&gid) {
+                    self.shards[shard].cancel(gid, cid);
+                }
+            }
+        }
+    }
+
+    /// Best-effort outbox flush before exit, bounded by `budget`.
+    fn flush_all(&mut self, budget: Duration) {
+        let deadline = Instant::now() + budget;
+        loop {
+            self.write_conns();
+            self.reap();
+            let pending = self.conns.values().any(|c| c.outbox_len() > 0);
+            if !pending || Instant::now() >= deadline {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Sharded multi-worker serving (DESIGN.md §14).
+//!
+//! Three pieces replace the old thread-per-connection server:
+//!
+//! * [`shard`] — N worker shards, each one `Coordinator` + `Backend`
+//!   (+ private KV pool and prefix cache) on its own thread, driven over
+//!   a command channel and answering on a shared event channel.
+//! * [`router`] — prefix-affinity placement: sessions land on the shard
+//!   whose rendezvous hash of their prompt-prefix fingerprint wins, so
+//!   repeated prefixes hit the same shard's prefix cache; a configurable
+//!   imbalance factor spills sessions off an overloaded home shard.
+//! * [`frontend`] — a single nonblocking event loop owning every client
+//!   socket: JSON-lines framing, bounded per-connection outboxes with
+//!   slow-consumer disconnect, admin fan-out/fan-in across shards.
+//!
+//! `shards = 1` (the default) is the old single-worker behavior with
+//! byte-identical wire output — same response shapes, same id sequence.
+//!
+//! Shutdown is a drain, not an abort: a `shutdown` op (or Ctrl-C via
+//! [`install_ctrlc`]) stops admission, streams a
+//! `{"draining":true,"done":false}` marker to in-flight streaming
+//! clients, runs every shard's active set dry so each in-flight request
+//! still gets its final line, then exits.
+
+pub mod frontend;
+pub mod router;
+pub mod shard;
+pub mod wire;
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::backend::{self, Backend};
+use crate::config::Config;
+use crate::coordinator::Coordinator;
+use crate::engine::scripted::ScriptedFactory;
+use crate::json::Json;
+
+use frontend::run_frontend;
+use router::Router;
+use shard::{FrontEvent, ShardCmd, ShardHandle};
+use wire::Defaults;
+
+/// Process-wide drain flag, set by the Ctrl-C handler (or
+/// [`request_shutdown`]) and polled by the front-end loop.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Ask the running server to drain and exit, as if a `shutdown` op
+/// arrived.
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Whether a drain has been requested process-wide.
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+#[cfg(unix)]
+extern "C" {
+    fn signal(signum: i32, handler: usize) -> usize;
+    fn _exit(code: i32) -> !;
+}
+
+/// First Ctrl-C requests a graceful drain; a second one while the drain
+/// is still running exits immediately with the conventional 130.
+#[cfg(unix)]
+unsafe extern "C" fn on_sigint(_sig: i32) {
+    if SHUTDOWN.swap(true, Ordering::SeqCst) {
+        _exit(130);
+    }
+}
+
+/// Install the SIGINT handler (libc `signal` — the ctrlc crate is not in
+/// the offline vendor set). No-op off unix.
+pub fn install_ctrlc() {
+    #[cfg(unix)]
+    unsafe {
+        signal(2, on_sigint as usize);
+    }
+}
+
+/// Serve until drained on the configured address. `cfg.shards <= 1`
+/// keeps today's single-worker path (one coordinator on the caller's
+/// backend); above that, shard 0 runs on the caller's backend and shards
+/// 1..N each construct their own from the same config.
+pub fn serve(be: &dyn Backend, cfg: Config) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.server_addr)
+        .with_context(|| format!("binding {}", cfg.server_addr))?;
+    if cfg.shards <= 1 {
+        println!("specpv server listening on {} ({} backend)", cfg.server_addr, be.name());
+        let coord = Coordinator::new(be, cfg);
+        serve_on(listener, coord)
+    } else {
+        println!(
+            "specpv server listening on {} ({} backend, {} shards)",
+            cfg.server_addr,
+            be.name(),
+            cfg.shards
+        );
+        serve_sharded(listener, be, cfg)
+    }
+}
+
+/// Serve on an already-bound listener with an existing (single)
+/// coordinator. Tests inject a scripted coordinator here; `serve` binds
+/// the real one. The shard loop runs on the caller's thread — the
+/// backend's handles are not `Send` — with the front end spawned beside
+/// it.
+pub fn serve_on(listener: TcpListener, mut coord: Coordinator<'_>) -> Result<()> {
+    let defaults = Defaults {
+        max_new: coord.cfg.max_new_tokens,
+        temperature: coord.cfg.temperature,
+    };
+    let router = Router::new(1, coord.cfg.route_imbalance);
+    let (cmd_tx, cmd_rx) = channel::<ShardCmd>();
+    let (ev_tx, ev_rx) = channel::<FrontEvent>();
+    let handles = vec![ShardHandle::new(0, cmd_tx)];
+    thread::scope(|s| {
+        let fe = s.spawn(move || run_frontend(listener, handles, ev_rx, router, defaults));
+        shard::run_shard(0, &mut coord, cmd_rx, ev_tx);
+        fe.join()
+            .unwrap_or_else(|_| Err(anyhow!("front end panicked")))
+    })?;
+    println!("server metrics: {}", coord.registry.summary());
+    Ok(())
+}
+
+/// Multi-shard serve: shard 0 on the caller's backend (and thread),
+/// shards 1..N on their own threads with backends built from the same
+/// config. A shard whose backend fails to start degrades to an
+/// error-answering stub so routed clients and admin fan-ins never hang.
+fn serve_sharded(listener: TcpListener, be: &dyn Backend, cfg: Config) -> Result<()> {
+    let n = cfg.shards;
+    let defaults = Defaults {
+        max_new: cfg.max_new_tokens,
+        temperature: cfg.temperature,
+    };
+    let router = Router::new(n, cfg.route_imbalance);
+    let (ev_tx, ev_rx) = channel::<FrontEvent>();
+    let mut handles = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let (tx, rx) = channel::<ShardCmd>();
+        handles.push(ShardHandle::new(i, tx));
+        rxs.push(rx);
+    }
+    let mut rx_iter = rxs.into_iter();
+    let rx0 = rx_iter.next().expect("shards >= 2 here");
+    let mut coord0 = Coordinator::new(be, cfg.clone());
+    thread::scope(|s| {
+        for (off, rx) in rx_iter.enumerate() {
+            let shard_id = off + 1;
+            let cfgc = cfg.clone();
+            let tx = ev_tx.clone();
+            s.spawn(move || match backend::from_config(&cfgc) {
+                Ok(be) => {
+                    let mut coord = Coordinator::new(be.as_ref(), cfgc);
+                    shard::run_shard(shard_id, &mut coord, rx, tx);
+                    println!("shard {shard_id} metrics: {}", coord.registry.summary());
+                }
+                Err(e) => {
+                    eprintln!("shard {shard_id}: backend start failed: {e:#}");
+                    run_dead_shard(shard_id, format!("{e:#}"), rx, tx);
+                }
+            });
+        }
+        let fe = s.spawn(move || run_frontend(listener, handles, ev_rx, router, defaults));
+        shard::run_shard(0, &mut coord0, rx0, ev_tx);
+        fe.join()
+            .unwrap_or_else(|_| Err(anyhow!("front end panicked")))
+    })?;
+    println!("shard 0 metrics: {}", coord0.registry.summary());
+    Ok(())
+}
+
+/// Serve a multi-shard scripted server for tests: every shard gets its
+/// own coordinator over a clone of `factory`; the front end runs on the
+/// caller's thread. Returns once drained (a `shutdown` op).
+pub fn serve_scripted(listener: TcpListener, cfg: Config, factory: ScriptedFactory) -> Result<()> {
+    let n = cfg.shards.max(1);
+    let defaults = Defaults {
+        max_new: cfg.max_new_tokens,
+        temperature: cfg.temperature,
+    };
+    let router = Router::new(n, cfg.route_imbalance);
+    let (ev_tx, ev_rx) = channel::<FrontEvent>();
+    let mut handles = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let (tx, rx) = channel::<ShardCmd>();
+        handles.push(ShardHandle::new(i, tx));
+        rxs.push(rx);
+    }
+    thread::scope(|s| {
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let cfgc = cfg.clone();
+            let f = factory.clone();
+            let tx = ev_tx.clone();
+            s.spawn(move || {
+                let mut coord = Coordinator::with_factory(cfgc, Box::new(f));
+                shard::run_shard(i, &mut coord, rx, tx);
+            });
+        }
+        drop(ev_tx);
+        run_frontend(listener, handles, ev_rx, router, defaults)
+    })
+}
+
+/// Stand-in loop for a shard whose backend failed to start: answers
+/// every command with an error (or a negative ack) so the front end's
+/// routing table and admin fan-ins stay live, then reports drained.
+fn run_dead_shard(
+    shard: usize,
+    err: String,
+    cmd_rx: Receiver<ShardCmd>,
+    ev_tx: Sender<FrontEvent>,
+) {
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            ShardCmd::Submit(sr) => {
+                let _ = ev_tx.send(FrontEvent::Line {
+                    conn: sr.conn,
+                    line: wire::line_of(
+                        Json::obj()
+                            .set("ok", false)
+                            .set("error", format!("shard {shard} unavailable: {err}")),
+                    ),
+                });
+                let _ = ev_tx.send(FrontEvent::Terminal {
+                    conn: sr.conn,
+                    shard,
+                    gid: sr.gid,
+                });
+            }
+            ShardCmd::Cancel { gid: _, conn } => {
+                let _ = ev_tx.send(FrontEvent::Line {
+                    conn,
+                    line: wire::line_of(Json::obj().set("ok", true).set("cancelled", false)),
+                });
+            }
+            ShardCmd::Admin { corr, cmd: _ } => {
+                let body = Json::obj()
+                    .set("ok", false)
+                    .set("error", format!("shard {shard} unavailable: {err}"));
+                let _ = ev_tx.send(FrontEvent::Admin { corr, shard, body });
+            }
+            ShardCmd::Drain => break,
+        }
+    }
+    let _ = ev_tx.send(FrontEvent::Drained { shard });
+}

@@ -1,0 +1,200 @@
+//! Prefix-affinity router: places sessions on worker shards by a
+//! rendezvous (highest-random-weight) hash of the prompt-prefix
+//! fingerprint, with load-aware spill (DESIGN.md §14).
+//!
+//! The fingerprint reuses the `kvstore::prefix` rolling chunk-boundary
+//! hash at the reference prefill chunk width, so two prompts sharing
+//! their first cached chunk share a fingerprint — and therefore a home
+//! shard, whose prefix cache already holds their pages. Prompts shorter
+//! than one chunk fall back to a hash of all their tokens.
+
+use crate::kvstore::prefix::{chunk_boundary_hashes, geom_hash};
+
+/// Fingerprint chunk width, matching the reference backend's prefill
+/// chunk — the granularity the prefix cache stores entries at, so
+/// fingerprint-equal prompts are exactly the ones that can share a
+/// cached prefix entry.
+pub const FP_CHUNK: usize = 64;
+
+/// The prompt-prefix fingerprint: the first chunk-boundary rolling hash
+/// when the prompt spans at least one chunk, else a hash of the whole
+/// prompt.
+pub fn fingerprint(prompt: &[u32]) -> u64 {
+    if let Some(&(_, h)) = chunk_boundary_hashes(prompt, FP_CHUNK).first() {
+        return h;
+    }
+    let mut bytes = Vec::with_capacity(prompt.len() * 4);
+    for &t in prompt {
+        bytes.extend_from_slice(&t.to_le_bytes());
+    }
+    geom_hash(&[&bytes])
+}
+
+/// Routing decision for one session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// shard the session was placed on
+    pub shard: usize,
+    /// its prefix-affinity home shard
+    pub home: usize,
+}
+
+/// Session placement + per-shard load accounting. Lives in the front
+/// end; shards never see it.
+pub struct Router {
+    /// spill factor: leave the home shard only when
+    /// `home_load + 1 > imbalance * (min_load + 1)`
+    imbalance: f64,
+    /// in-flight sessions per shard (submitted − terminal)
+    load: Vec<usize>,
+    /// sessions placed per shard (lifetime counter)
+    placed: Vec<u64>,
+    /// sessions spilled off their home shard by the imbalance rule
+    routed_away: u64,
+}
+
+impl Router {
+    pub fn new(shards: usize, imbalance: f64) -> Router {
+        Router {
+            imbalance: imbalance.max(1.0),
+            load: vec![0; shards.max(1)],
+            placed: vec![0; shards.max(1)],
+            routed_away: 0,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.load.len()
+    }
+
+    /// The deterministic prefix-affinity home shard for a prompt:
+    /// rendezvous hash of the fingerprint against each shard index, so a
+    /// given prefix maps to the same shard at a fixed shard count and
+    /// reshuffles minimally when the count changes.
+    pub fn home(&self, prompt: &[u32]) -> usize {
+        let fp = fingerprint(prompt);
+        (0..self.load.len())
+            .max_by_key(|&s| {
+                geom_hash(&[&fp.to_le_bytes(), &(s as u64).to_le_bytes()])
+            })
+            .unwrap_or(0)
+    }
+
+    /// Place a session: its home shard, unless the imbalance rule spills
+    /// it to the least-loaded shard. Increments the chosen shard's load.
+    pub fn place(&mut self, prompt: &[u32]) -> Placement {
+        let home = self.home(prompt);
+        let min = (0..self.load.len())
+            .min_by_key(|&s| self.load[s])
+            .unwrap_or(home);
+        let spill = (self.load[home] + 1) as f64
+            > self.imbalance * ((self.load[min] + 1) as f64);
+        let shard = if spill {
+            self.routed_away += 1;
+            min
+        } else {
+            home
+        };
+        self.load[shard] += 1;
+        self.placed[shard] += 1;
+        Placement { shard, home }
+    }
+
+    /// A placed session reached a terminal state on `shard`.
+    pub fn finished(&mut self, shard: usize) {
+        if let Some(l) = self.load.get_mut(shard) {
+            *l = l.saturating_sub(1);
+        }
+    }
+
+    /// Current in-flight sessions on `shard`.
+    pub fn load(&self, shard: usize) -> usize {
+        self.load.get(shard).copied().unwrap_or(0)
+    }
+
+    /// Lifetime sessions placed on `shard`.
+    pub fn placed(&self, shard: usize) -> u64 {
+        self.placed.get(shard).copied().unwrap_or(0)
+    }
+
+    /// Lifetime sessions spilled off their home shard.
+    pub fn routed_away(&self) -> u64 {
+        self.routed_away
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompt(seed: u32, len: usize) -> Vec<u32> {
+        (0..len as u32).map(|i| seed.wrapping_mul(31).wrapping_add(i) % 96 + 32).collect()
+    }
+
+    #[test]
+    fn home_is_deterministic_across_instances() {
+        let a = Router::new(4, 2.0);
+        let b = Router::new(4, 2.0);
+        for s in 0..32 {
+            let p = prompt(s, 200);
+            assert_eq!(a.home(&p), b.home(&p), "seed {s}");
+            assert_eq!(a.home(&p), a.home(&p));
+        }
+    }
+
+    #[test]
+    fn shared_prefix_shares_home() {
+        let r = Router::new(4, 2.0);
+        let mut a = prompt(7, 200);
+        let mut b = a.clone();
+        // diverge after the first fingerprint chunk
+        a.push(1);
+        b.push(2);
+        b.extend_from_slice(&[9, 9, 9]);
+        assert_eq!(r.home(&a), r.home(&b), "same first chunk → same home");
+    }
+
+    #[test]
+    fn short_prompts_route_and_spread() {
+        let r = Router::new(4, 2.0);
+        let mut seen = std::collections::BTreeSet::new();
+        for s in 0..64 {
+            let p = prompt(s, 3); // below one chunk → fallback fingerprint
+            let h = r.home(&p);
+            assert!(h < 4);
+            seen.insert(h);
+        }
+        assert!(seen.len() > 1, "64 fingerprints all on one shard: {seen:?}");
+    }
+
+    #[test]
+    fn spill_reroutes_under_imbalance_and_counts() {
+        let mut r = Router::new(2, 1.0); // imbalance 1.0 → strict balance
+        let p = prompt(3, 200);
+        let home = r.home(&p);
+        let first = r.place(&p);
+        assert_eq!(first.shard, home, "empty router keeps affinity");
+        // home now has load 1, the other shard 0 → the same prefix spills
+        let second = r.place(&p);
+        assert_eq!(second.home, home);
+        assert_ne!(second.shard, home, "imbalance 1.0 must spill");
+        assert_eq!(r.routed_away(), 1);
+        assert_eq!(r.placed(home), 1);
+        // finishing the home session restores affinity
+        r.finished(home);
+        let third = r.place(&p);
+        assert_eq!(third.shard, home);
+    }
+
+    #[test]
+    fn high_imbalance_keeps_affinity() {
+        let mut r = Router::new(2, 100.0);
+        let p = prompt(5, 200);
+        let home = r.home(&p);
+        for _ in 0..10 {
+            assert_eq!(r.place(&p).shard, home);
+        }
+        assert_eq!(r.routed_away(), 0);
+        assert_eq!(r.load(home), 10);
+    }
+}

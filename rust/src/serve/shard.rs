@@ -1,0 +1,348 @@
+//! Worker shard: one `Coordinator` + `Backend` (+ private KV pool /
+//! prefix cache) driven over a command/event channel pair. The shard
+//! loop runs on the thread that owns the backend — whose handles are not
+//! `Send` — and is the only code that touches it; the front end speaks
+//! to it exclusively through [`ShardHandle`] and reads rendered response
+//! lines plus lifecycle events back on one shared mpsc receiver.
+//!
+//! Wire ids are global (`Gid`, assigned by the front end in parse
+//! order); the shard maps them to its coordinator's local `RequestId`s.
+//! Every submitted gid produces exactly one [`FrontEvent::Terminal`] —
+//! on success, failure, cancellation or rejected admission — which is
+//! what lets the front end keep its routing table and per-shard load
+//! accounting exact.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+
+use crate::config::EngineKind;
+use crate::coordinator::{Coordinator, Event, RequestId, RequestState, SubmitOpts};
+use crate::engine::GenRequest;
+use crate::json::Json;
+use crate::tokenizer;
+
+use super::wire::{self, AdminCmd};
+
+/// Front-end connection id.
+pub type ConnId = u64;
+/// Wire-visible (global) request id, assigned by the front end in parse
+/// order across all shards.
+pub type Gid = u64;
+
+/// A parsed `generate` op bound for a shard.
+pub struct SubmitReq {
+    pub gid: Gid,
+    pub conn: ConnId,
+    pub gen: GenRequest,
+    pub engine: Option<EngineKind>,
+    pub stream: bool,
+    pub deadline_secs: Option<f64>,
+    pub priority: i32,
+}
+
+/// Commands a shard consumes (front end → shard).
+pub enum ShardCmd {
+    Submit(Box<SubmitReq>),
+    /// cancel gid; the ack line goes to `conn` (the canceller), which may
+    /// differ from the request's owning connection
+    Cancel { gid: Gid, conn: ConnId },
+    /// admin subcommand; the body fans back in under correlation id `corr`
+    Admin { corr: u64, cmd: AdminCmd },
+    /// stop admitting, run the in-flight set dry, then exit the loop
+    Drain,
+}
+
+/// Events a shard emits (shard → front end).
+pub enum FrontEvent {
+    /// a rendered response line for connection `conn`
+    Line { conn: ConnId, line: String },
+    /// gid reached a terminal state on `shard` (route/load cleanup)
+    Terminal { conn: ConnId, shard: usize, gid: Gid },
+    /// one shard's admin body for fan-in under `corr`
+    Admin { corr: u64, shard: usize, body: Json },
+    /// the shard drained and exited its loop
+    Drained { shard: usize },
+}
+
+/// Cloneable front-end handle to a shard's command channel. Sends to a
+/// shard that already exited are silently dropped — a shard only exits
+/// after drain, once every outcome the front end still expects has been
+/// delivered.
+#[derive(Clone)]
+pub struct ShardHandle {
+    id: usize,
+    cmd_tx: Sender<ShardCmd>,
+}
+
+impl ShardHandle {
+    pub fn new(id: usize, cmd_tx: Sender<ShardCmd>) -> ShardHandle {
+        ShardHandle { id, cmd_tx }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn submit(&self, req: SubmitReq) {
+        let _ = self.cmd_tx.send(ShardCmd::Submit(Box::new(req)));
+    }
+
+    pub fn cancel(&self, gid: Gid, conn: ConnId) {
+        let _ = self.cmd_tx.send(ShardCmd::Cancel { gid, conn });
+    }
+
+    pub fn admin(&self, corr: u64, cmd: AdminCmd) {
+        let _ = self.cmd_tx.send(ShardCmd::Admin { corr, cmd });
+    }
+
+    pub fn drain(&self) {
+        let _ = self.cmd_tx.send(ShardCmd::Drain);
+    }
+}
+
+/// Per-request reply routing held by the shard loop.
+struct PendingReq {
+    gid: Gid,
+    conn: ConnId,
+    stream: bool,
+}
+
+/// The shard device loop: drain commands, tick the scheduler, emit
+/// response lines and lifecycle events. Returns after a `Drain` command
+/// (or a disconnected front end) once the in-flight set is dry, sending
+/// [`FrontEvent::Drained`] last.
+pub fn run_shard(
+    shard: usize,
+    coord: &mut Coordinator<'_>,
+    cmd_rx: Receiver<ShardCmd>,
+    ev_tx: Sender<FrontEvent>,
+) {
+    let mut pending: HashMap<RequestId, PendingReq> = HashMap::new();
+    let mut draining = false;
+    loop {
+        // block when there is nothing to schedule, drain otherwise
+        if coord.idle() && !draining {
+            match cmd_rx.recv() {
+                Ok(cmd) => {
+                    handle_cmd(shard, cmd, coord, &mut pending, &ev_tx, &mut draining)
+                }
+                Err(_) => draining = true,
+            }
+        }
+        loop {
+            match cmd_rx.try_recv() {
+                Ok(cmd) => {
+                    handle_cmd(shard, cmd, coord, &mut pending, &ev_tx, &mut draining)
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    draining = true;
+                    break;
+                }
+            }
+        }
+        if draining && coord.idle() {
+            break;
+        }
+        for ev in coord.tick() {
+            route_event(shard, ev, coord, &mut pending, &ev_tx);
+        }
+    }
+    coord.sync_backend_counters();
+    let _ = ev_tx.send(FrontEvent::Drained { shard });
+}
+
+fn handle_cmd(
+    shard: usize,
+    cmd: ShardCmd,
+    coord: &mut Coordinator<'_>,
+    pending: &mut HashMap<RequestId, PendingReq>,
+    ev_tx: &Sender<FrontEvent>,
+    draining: &mut bool,
+) {
+    match cmd {
+        ShardCmd::Submit(sr) => {
+            let sr = *sr;
+            let opts = SubmitOpts {
+                engine: sr.engine,
+                deadline_secs: sr.deadline_secs,
+                priority: sr.priority,
+            };
+            match coord.submit_opts(sr.gen, opts) {
+                Ok(local) => {
+                    if sr.stream {
+                        // ack with the id so the client can cancel
+                        send_line(
+                            ev_tx,
+                            sr.conn,
+                            Json::obj()
+                                .set("ok", true)
+                                .set("id", sr.gid as i64)
+                                .set("stream", true)
+                                .set("queued", true),
+                        );
+                    }
+                    pending.insert(
+                        local,
+                        PendingReq { gid: sr.gid, conn: sr.conn, stream: sr.stream },
+                    );
+                }
+                Err(e) => {
+                    send_line(
+                        ev_tx,
+                        sr.conn,
+                        Json::obj().set("ok", false).set("error", format!("{e:#}")),
+                    );
+                    let _ = ev_tx.send(FrontEvent::Terminal {
+                        conn: sr.conn,
+                        shard,
+                        gid: sr.gid,
+                    });
+                }
+            }
+        }
+        ShardCmd::Cancel { gid, conn } => {
+            let local = pending.iter().find(|(_, p)| p.gid == gid).map(|(&l, _)| l);
+            let cancelled = match local {
+                Some(l) => coord.cancel(l),
+                None => false,
+            };
+            if cancelled {
+                if let Some(l) = local {
+                    if let Some(p) = pending.remove(&l) {
+                        // final line (with the partial text) first, ack after
+                        send_final(shard, l, &p, coord, ev_tx);
+                    }
+                }
+            }
+            send_line(ev_tx, conn, Json::obj().set("ok", true).set("cancelled", cancelled));
+        }
+        ShardCmd::Admin { corr, cmd } => {
+            let body = match cmd {
+                AdminCmd::Metrics => wire::metrics_body(coord),
+                AdminCmd::Kv => wire::kv_body(coord),
+                AdminCmd::Cache => wire::cache_body(coord),
+                AdminCmd::Shards => wire::shard_body(shard, coord),
+            };
+            let _ = ev_tx.send(FrontEvent::Admin { corr, shard, body });
+        }
+        ShardCmd::Drain => {
+            *draining = true;
+            for ev in coord.begin_drain() {
+                if let Event::Draining { id } = ev {
+                    if let Some(p) = pending.get(&id) {
+                        if p.stream {
+                            send_line(
+                                ev_tx,
+                                p.conn,
+                                Json::obj()
+                                    .set("ok", true)
+                                    .set("id", p.gid as i64)
+                                    .set("draining", true)
+                                    .set("done", false),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn route_event(
+    shard: usize,
+    ev: Event,
+    coord: &Coordinator<'_>,
+    pending: &mut HashMap<RequestId, PendingReq>,
+    ev_tx: &Sender<FrontEvent>,
+) {
+    match ev {
+        // swap transitions — including a recovered SwapFault, which only
+        // re-queues the request — are scheduler-internal (output is
+        // unaffected); operators observe them through the admin ops.
+        // Draining is emitted by begin_drain, never by tick.
+        Event::Started { .. }
+        | Event::SwappedOut { .. }
+        | Event::Resumed { .. }
+        | Event::SwapFault { .. }
+        | Event::Draining { .. } => {}
+        Event::Step { id, new_tokens, step, .. } => {
+            if let Some(p) = pending.get(&id) {
+                if p.stream && !new_tokens.is_empty() {
+                    send_line(
+                        ev_tx,
+                        p.conn,
+                        Json::obj()
+                            .set("ok", true)
+                            .set("id", p.gid as i64)
+                            .set("stream", true)
+                            .set("step", step)
+                            .set("delta", tokenizer::decode(&new_tokens))
+                            .set("done", false),
+                    );
+                }
+            }
+        }
+        Event::Finished { id } | Event::Cancelled { id } | Event::Failed { id, .. } => {
+            if let Some(p) = pending.remove(&id) {
+                send_final(shard, id, &p, coord, ev_tx);
+            }
+        }
+    }
+}
+
+/// The terminal response line for a request (results keyed by id — the
+/// loop never assumes "the last submitted request finished"), followed by
+/// the [`FrontEvent::Terminal`] the front end uses for cleanup.
+fn send_final(
+    shard: usize,
+    local: RequestId,
+    p: &PendingReq,
+    coord: &Coordinator<'_>,
+    ev_tx: &Sender<FrontEvent>,
+) {
+    let resp = match coord.get(local) {
+        None => Json::obj().set("ok", false).set("error", "request vanished"),
+        Some(tr) => match (&tr.state, &tr.result) {
+            (RequestState::Done, Some(r)) => Json::obj()
+                .set("ok", true)
+                .set("id", p.gid as i64)
+                .set("done", true)
+                .set("text", r.text())
+                .set("tokens", r.tokens.len())
+                .set("tok_per_s", r.stats.throughput())
+                .set("tau", r.stats.accept_len())
+                .set(
+                    "modes",
+                    Json::obj()
+                        .set("full", r.stats.full_steps)
+                        .set("partial", r.stats.partial_steps)
+                        .set("refresh", r.stats.refresh_steps),
+                )
+                .set("latency_s", tr.service_secs)
+                .set("ttft_s", tr.ttft_secs)
+                .set("steps", tr.steps),
+            (RequestState::Cancelled, r) => Json::obj()
+                .set("ok", true)
+                .set("id", p.gid as i64)
+                .set("done", true)
+                .set("cancelled", true)
+                .set("text", r.as_ref().map(|r| r.text()).unwrap_or_default()),
+            (RequestState::Failed(e), _) => Json::obj()
+                .set("ok", false)
+                .set("id", p.gid as i64)
+                .set("done", true)
+                .set("error", e.as_str()),
+            _ => Json::obj()
+                .set("ok", false)
+                .set("id", p.gid as i64)
+                .set("error", "not finished"),
+        },
+    };
+    send_line(ev_tx, p.conn, resp);
+    let _ = ev_tx.send(FrontEvent::Terminal { conn: p.conn, shard, gid: p.gid });
+}
+
+fn send_line(ev_tx: &Sender<FrontEvent>, conn: ConnId, j: Json) {
+    let _ = ev_tx.send(FrontEvent::Line { conn, line: wire::line_of(j) });
+}

@@ -1,0 +1,373 @@
+//! Wire-level protocol pieces shared by the front end and the shards:
+//! request parsing, admin bodies, the cross-shard admin merge and line
+//! framing. The line shapes here are the byte-level compatibility
+//! contract with the original single-coordinator server (DESIGN.md §8).
+
+use anyhow::{anyhow, Result};
+
+use crate::config::EngineKind;
+use crate::coordinator::Coordinator;
+use crate::engine::GenRequest;
+use crate::json::Json;
+use crate::tokenizer;
+
+/// Read-only admin subcommands (`{"op":"admin","cmd":...,"v":1}`). The
+/// old flat `metrics`/`cache` op names parse to the same commands with
+/// `legacy: true` and answer with a `"deprecated":true` marker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdminCmd {
+    Metrics,
+    Kv,
+    Cache,
+    /// per-shard dump: queue depth, active sessions, KV residency and
+    /// routing counters (sharded serving)
+    Shards,
+}
+
+impl AdminCmd {
+    pub fn name(self) -> &'static str {
+        match self {
+            AdminCmd::Metrics => "metrics",
+            AdminCmd::Kv => "kv",
+            AdminCmd::Cache => "cache",
+            AdminCmd::Shards => "shards",
+        }
+    }
+}
+
+/// Request-level defaults the front end needs to parse `generate` ops
+/// without touching a coordinator.
+#[derive(Debug, Clone, Copy)]
+pub struct Defaults {
+    pub max_new: usize,
+    pub temperature: f32,
+}
+
+/// One parsed client operation.
+pub enum Request {
+    Generate {
+        gen: GenRequest,
+        engine: Option<EngineKind>,
+        stream: bool,
+        deadline_secs: Option<f64>,
+        priority: i32,
+    },
+    Cancel { id: u64 },
+    Admin { cmd: AdminCmd, legacy: bool },
+    Ping,
+    Shutdown,
+}
+
+/// Parse one JSON line into a [`Request`]. Error messages are part of
+/// the wire contract (clients see them verbatim in error lines).
+pub fn parse_request(raw: &str, defaults: &Defaults) -> Result<Request> {
+    let req = Json::parse(raw)?;
+    let op = req.get("op").and_then(|x| x.as_str()).unwrap_or("generate");
+    match op {
+        "ping" => Ok(Request::Ping),
+        "admin" => {
+            let v = req.get("v").and_then(|x| x.as_i64()).unwrap_or(1);
+            if v != 1 {
+                return Err(anyhow!("unsupported admin version {v} (supported: 1)"));
+            }
+            let cmd = match req.get("cmd").and_then(|x| x.as_str()) {
+                Some("metrics") => AdminCmd::Metrics,
+                Some("kv") => AdminCmd::Kv,
+                Some("cache") => AdminCmd::Cache,
+                Some("shards") => AdminCmd::Shards,
+                Some(other) => {
+                    return Err(anyhow!(
+                        "unknown admin cmd '{other}' (metrics|kv|cache|shards)"
+                    ))
+                }
+                None => return Err(anyhow!("admin needs 'cmd'")),
+            };
+            Ok(Request::Admin { cmd, legacy: false })
+        }
+        // deprecated flat aliases for the admin subcommands
+        "metrics" => Ok(Request::Admin { cmd: AdminCmd::Metrics, legacy: true }),
+        "cache" => Ok(Request::Admin { cmd: AdminCmd::Cache, legacy: true }),
+        "shutdown" => Ok(Request::Shutdown),
+        "cancel" => {
+            let id = req
+                .get("id")
+                .and_then(|x| x.as_i64())
+                .ok_or_else(|| anyhow!("cancel needs 'id'"))? as u64;
+            Ok(Request::Cancel { id })
+        }
+        "generate" => {
+            let prompt = req
+                .get("prompt")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("missing 'prompt'"))?;
+            let max_new = req
+                .get("max_new")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(defaults.max_new);
+            let temperature = req
+                .get("temperature")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(defaults.temperature as f64) as f32;
+            let engine = match req.get("engine").and_then(|x| x.as_str()) {
+                Some(e) => Some(e.parse()?),
+                None => None,
+            };
+            let seed = req.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
+            let stream =
+                req.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
+            let deadline_secs = req.get("deadline_s").and_then(|x| x.as_f64());
+            let priority =
+                req.get("priority").and_then(|x| x.as_i64()).unwrap_or(0) as i32;
+            Ok(Request::Generate {
+                gen: GenRequest {
+                    prompt: tokenizer::encode(prompt),
+                    max_new,
+                    temperature,
+                    seed,
+                },
+                engine,
+                stream,
+                deadline_secs,
+                priority,
+            })
+        }
+        other => Err(anyhow!("unknown op '{other}'")),
+    }
+}
+
+/// The `admin metrics` body: scheduler registry + backend counters.
+pub fn metrics_body(coord: &mut Coordinator<'_>) -> Json {
+    coord.sync_backend_counters();
+    let reg = &coord.registry;
+    Json::obj()
+        .set("ok", true)
+        .set("summary", reg.summary())
+        .set(
+            "backend",
+            if reg.backend.is_empty() { "scripted" } else { reg.backend.as_str() },
+        )
+        .set("executions", reg.executions as i64)
+        .set("exec_secs", reg.exec_secs)
+        .set("compilations", reg.compilations as i64)
+        .set("queue_depth", coord.queue_len())
+        .set("active", coord.active_len())
+        .set("completed", reg.completed as i64)
+        .set("failed", reg.failed as i64)
+        .set("cancelled", reg.cancelled as i64)
+        .set("kv_resident_bytes", reg.kv_resident_bytes)
+        .set("kv_budget_bytes", reg.kv_budget_bytes)
+        .set("kv_pages_resident", reg.kv_pages_resident)
+        .set("kv_pages_shared", reg.kv_pages_shared)
+        .set("kv_frag_pct", reg.kv_frag_pct)
+        .set("swap_outs", reg.swap_outs as i64)
+        .set("swap_ins", reg.swap_ins as i64)
+        .set("swap_faults", reg.swap_faults as i64)
+        .set("prefix_hits", reg.prefix_hits as i64)
+        .set("prefix_misses", reg.prefix_misses as i64)
+        .set("threads", reg.threads)
+        .set("fused_groups", reg.batch_groups as i64)
+        .set("batch_ops_fused", reg.batch_ops_fused as i64)
+        .set("batch_ops_single", reg.batch_ops_single as i64)
+        .set("fallback_steps", reg.fallback_steps as i64)
+        .set("batch_mean_width", reg.batch_mean_width())
+        .set("batch_max_width", reg.batch_width_max)
+        .set("batch_tick_groups", reg.batch_tick_groups)
+        .set("batched_frac", reg.batched_frac())
+        .set("ttft_p50_s", reg.ttft.p50())
+        .set("ttft_p99_s", reg.ttft.p99())
+}
+
+/// The `admin cache` body: prefix cache + swap-tier aggregates.
+pub fn cache_body(coord: &mut Coordinator<'_>) -> Json {
+    let s = coord.kv_stats();
+    Json::obj()
+        .set("ok", true)
+        .set("prefix_entries", s.prefix.entries)
+        .set("prefix_bytes", s.prefix.bytes)
+        .set("prefix_budget_bytes", s.prefix.budget_bytes)
+        .set("prefix_hits", s.prefix.hits as i64)
+        .set("prefix_misses", s.prefix.misses as i64)
+        .set("prefix_insertions", s.prefix.insertions as i64)
+        .set("prefix_evictions", s.prefix.evictions as i64)
+        .set("kv_resident_bytes", s.resident_bytes)
+        .set("kv_budget_bytes", s.budget_bytes)
+        .set("live_states", s.live_states)
+        .set("swapped", s.swapped)
+        .set("swap_bytes", s.swap_bytes)
+        .set("swap_outs", s.swap_outs as i64)
+        .set("swap_ins", s.swap_ins as i64)
+}
+
+/// The `admin kv` body: page-level pool gauges (residency, sharing,
+/// dedup/CoW counters, quantization and spill tiers).
+pub fn kv_body(coord: &mut Coordinator<'_>) -> Json {
+    let s = coord.kv_stats();
+    let p = &s.pages;
+    Json::obj()
+        .set("ok", true)
+        .set("page_bytes", p.page_bytes)
+        .set("pages_resident", p.pages_resident)
+        .set("pages_shared", p.pages_shared)
+        .set("pages_zero", p.pages_zero)
+        .set("pages_spilled", p.pages_spilled)
+        .set("ram_bytes", p.ram_bytes)
+        .set("disk_bytes", p.disk_bytes)
+        .set("frag_pct", p.frag_pct)
+        .set("page_allocs", p.page_allocs as i64)
+        .set("dedup_hits", p.dedup_hits as i64)
+        .set("cow_copies", p.cow_copies as i64)
+        .set("quant_pages", p.quant_pages as i64)
+        .set("spills", p.spills as i64)
+        .set("spill_loads", p.spill_loads as i64)
+        .set("swap_faults", p.swap_faults as i64)
+        .set("parked_sessions", s.swapped)
+        .set("parked_bytes", s.swap_bytes)
+}
+
+/// One entry of the `admin shards` dump: per-shard scheduler gauges,
+/// lifetime counters and KV residency (the front end adds the routing
+/// counters it owns).
+pub fn shard_body(shard: usize, coord: &mut Coordinator<'_>) -> Json {
+    coord.sync_backend_counters();
+    let s = coord.kv_stats();
+    let reg = &coord.registry;
+    Json::obj()
+        .set("shard", shard)
+        .set("queue_depth", coord.queue_len())
+        .set("active", coord.active_len())
+        .set("completed", reg.completed as i64)
+        .set("failed", reg.failed as i64)
+        .set("cancelled", reg.cancelled as i64)
+        .set("tokens_out", reg.tokens_out as i64)
+        .set("kv_resident_bytes", s.resident_bytes)
+        .set("kv_pages_resident", s.pages.pages_resident)
+        .set("prefix_entries", s.prefix.entries)
+        .set("prefix_hits", s.prefix.hits as i64)
+        .set("prefix_misses", s.prefix.misses as i64)
+}
+
+/// True for keys whose cross-shard aggregate is an average (ratios,
+/// percentiles, per-shard constants) rather than a sum.
+fn averaged_key(k: &str) -> bool {
+    k == "page_bytes"
+        || ["pct", "frac", "p50", "p95", "p99", "mean"].iter().any(|m| k.contains(m))
+}
+
+fn merge_key(k: &str, vals: &[&Json]) -> Json {
+    match vals.first() {
+        Some(Json::Bool(_)) => {
+            Json::Bool(vals.iter().all(|v| v.as_bool().unwrap_or(false)))
+        }
+        Some(Json::Num(_)) => {
+            let nums: Vec<f64> = vals.iter().filter_map(|v| v.as_f64()).collect();
+            let sum: f64 = nums.iter().sum();
+            if averaged_key(k) && !nums.is_empty() {
+                Json::Num(sum / nums.len() as f64)
+            } else {
+                Json::Num(sum)
+            }
+        }
+        Some(Json::Str(_)) => {
+            if k == "summary" {
+                Json::Str(
+                    vals.iter()
+                        .filter_map(|v| v.as_str())
+                        .collect::<Vec<_>>()
+                        .join(" | "),
+                )
+            } else {
+                (*vals[0]).clone()
+            }
+        }
+        Some(v) => (*v).clone(),
+        None => Json::Null,
+    }
+}
+
+/// Merge per-shard admin bodies into one aggregate: booleans AND,
+/// counters sum, ratio/percentile keys (and the per-shard `page_bytes`
+/// constant) average, `summary` strings join with `" | "`, other strings
+/// take the first shard's value. A single body passes through verbatim —
+/// the `shards = 1` byte-identity contract.
+pub fn merge_admin(bodies: &[Json]) -> Json {
+    if bodies.len() == 1 {
+        return bodies[0].clone();
+    }
+    let mut keys: Vec<String> = Vec::new();
+    for b in bodies {
+        if let Some(m) = b.as_obj() {
+            for k in m.keys() {
+                if !keys.contains(k) {
+                    keys.push(k.clone());
+                }
+            }
+        }
+    }
+    let mut out = Json::obj();
+    for k in &keys {
+        let vals: Vec<&Json> = bodies.iter().filter_map(|b| b.get(k)).collect();
+        out = out.set(k, merge_key(k, &vals));
+    }
+    out
+}
+
+/// Render a JSON value as one protocol line (newline-terminated).
+pub fn line_of(j: Json) -> String {
+    let mut s = j.to_string();
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_body_merges_verbatim() {
+        let b = Json::obj().set("ok", true).set("completed", 3i64).set("frag_pct", 2.5);
+        assert_eq!(merge_admin(&[b.clone()]).to_string(), b.to_string());
+    }
+
+    #[test]
+    fn multi_body_sums_counters_and_averages_ratios() {
+        let a = Json::obj()
+            .set("ok", true)
+            .set("completed", 3i64)
+            .set("frag_pct", 2.0)
+            .set("ttft_p50_s", 0.25)
+            .set("page_bytes", 4096usize)
+            .set("summary", "a")
+            .set("backend", "reference");
+        let b = Json::obj()
+            .set("ok", true)
+            .set("completed", 5i64)
+            .set("frag_pct", 4.0)
+            .set("ttft_p50_s", 0.75)
+            .set("page_bytes", 4096usize)
+            .set("summary", "b")
+            .set("backend", "reference");
+        let m = merge_admin(&[a, b]);
+        assert_eq!(m.get("ok").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(m.get("completed").and_then(|x| x.as_i64()), Some(8));
+        assert_eq!(m.get("frag_pct").and_then(|x| x.as_f64()), Some(3.0));
+        assert_eq!(m.get("ttft_p50_s").and_then(|x| x.as_f64()), Some(0.5));
+        assert_eq!(m.get("page_bytes").and_then(|x| x.as_i64()), Some(4096));
+        assert_eq!(m.get("summary").and_then(|x| x.as_str()), Some("a | b"));
+        assert_eq!(m.get("backend").and_then(|x| x.as_str()), Some("reference"));
+    }
+
+    #[test]
+    fn parse_errors_are_stable() {
+        let d = Defaults { max_new: 8, temperature: 0.0 };
+        let e = parse_request(r#"{"op":"nope"}"#, &d).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown op 'nope'"));
+        let e = parse_request(r#"{"op":"generate"}"#, &d).unwrap_err();
+        assert!(format!("{e:#}").contains("missing 'prompt'"));
+        let e = parse_request(r#"{"op":"admin","cmd":"x"}"#, &d).unwrap_err();
+        assert!(format!("{e:#}").contains("metrics|kv|cache|shards"));
+        assert!(matches!(
+            parse_request(r#"{"op":"admin","cmd":"shards"}"#, &d),
+            Ok(Request::Admin { cmd: AdminCmd::Shards, legacy: false })
+        ));
+    }
+}

@@ -1,12 +1,12 @@
 //! TCP JSON-lines serving protocol (std::net — tokio is not in the
-//! offline vendor set). Connections are served **concurrently**: each
-//! accepted socket gets a reader thread (parses ops into [`WorkItem`]s)
-//! and a writer thread (drains response lines), all feeding one shared
-//! `std::sync::mpsc` work queue. The device loop — the only thread that
-//! touches the backend, whose handles are not `Send` — drains the
-//! queue and drives the coordinator's continuous-batching `tick()`, so
-//! many clients interleave at decode-round granularity instead of
-//! waiting for whole generations.
+//! offline vendor set). `serve`/`serve_on` are thin compatibility
+//! wrappers over [`crate::serve`]: a nonblocking event-loop front end
+//! owns every client socket and routes parsed ops to worker shards —
+//! each one `Coordinator` + `Backend` on its own thread — by a
+//! prefix-affinity rendezvous hash (`--shards N`; the default 1 keeps
+//! single-worker behavior with byte-identical output). Connections are
+//! served **concurrently**: many clients interleave at decode-round
+//! granularity instead of waiting for whole generations.
 //!
 //! Protocol: one JSON object per line (see DESIGN.md §"Serving protocol").
 //!   → {"op":"generate","prompt":"...","max_new":128,"engine":"spec_pv",
@@ -27,586 +27,51 @@
 //!   → {"op":"admin","cmd":"kv"}  ← {"ok":true,"v":1,"cmd":"kv",
 //!                                   "pages_resident":..,"pages_shared":..,
 //!                                   "frag_pct":..,...}  (page-pool gauges)
+//!   → {"op":"admin","cmd":"shards"}
+//!                                ← {"ok":true,"v":1,"cmd":"shards",
+//!                                   "shards":2,"routed_away":0,
+//!                                   "per_shard":[{"shard":0,"load":..,
+//!                                    "placed":..,"tokens_out":..,...},..]}
 //!   → {"op":"metrics"} / {"op":"cache"}
 //!                                ← same bodies as the admin subcommands
 //!                                   plus "deprecated":true — flat op
 //!                                   names are aliases kept for old
 //!                                   clients
 //!   → {"op":"ping"}              ← {"ok":true}
-//!   → {"op":"shutdown"}          ← {"ok":true}  (server exits)
+//!   → {"op":"shutdown"}          ← {"ok":true}  (server drains: stops
+//!                                   admitting, in-flight streaming
+//!                                   clients get {"ok":true,"id":N,
+//!                                   "draining":true,"done":false}, every
+//!                                   in-flight request still gets its
+//!                                   final line, then the server exits)
+//!
+//! With `shards > 1`, `metrics`/`kv`/`cache` bodies are merged across
+//! shards: counters sum, ratios and percentiles average, "ok" ANDs.
 //!
 //! `generate` also accepts `"priority":N` — under KV-byte pressure the
 //! coordinator swaps out the lowest-priority active session first.
 
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::Arc;
-use std::thread;
-use std::time::Duration;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::backend::Backend;
-use crate::config::{Config, EngineKind};
-use crate::coordinator::{Coordinator, Event, RequestId, RequestState};
-use crate::engine::GenRequest;
+use crate::config::Config;
+use crate::coordinator::Coordinator;
 use crate::json::Json;
-use crate::tokenizer;
 
-/// One parsed client operation, routed to the device loop together with
-/// the originating connection's reply channel.
-enum WorkItem {
-    Generate {
-        gen: GenRequest,
-        engine: Option<EngineKind>,
-        stream: bool,
-        deadline_secs: Option<f64>,
-        priority: i32,
-        reply: Sender<String>,
-    },
-    Cancel { id: RequestId, reply: Sender<String> },
-    Admin { cmd: AdminCmd, legacy: bool, reply: Sender<String> },
-    Ping { reply: Sender<String> },
-    Shutdown { reply: Sender<String> },
-}
-
-/// Read-only admin subcommands (`{"op":"admin","cmd":...,"v":1}`). The
-/// old flat `metrics`/`cache` op names parse to the same commands with
-/// `legacy: true` and answer with a `"deprecated":true` marker.
-#[derive(Clone, Copy)]
-enum AdminCmd {
-    Metrics,
-    Kv,
-    Cache,
-}
-
-impl AdminCmd {
-    fn name(self) -> &'static str {
-        match self {
-            AdminCmd::Metrics => "metrics",
-            AdminCmd::Kv => "kv",
-            AdminCmd::Cache => "cache",
-        }
-    }
-}
-
-/// Request-level defaults a reader thread needs to parse `generate` ops
-/// without touching the coordinator.
-#[derive(Clone)]
-struct Defaults {
-    max_new: usize,
-    temperature: f32,
-}
-
-/// Serve forever (or until a `shutdown` op) on the configured address.
+/// Serve until drained (a `shutdown` op or Ctrl-C) on the configured
+/// address. Delegates to [`crate::serve::serve`].
 pub fn serve(be: &dyn Backend, cfg: Config) -> Result<()> {
-    let listener = TcpListener::bind(&cfg.server_addr)
-        .with_context(|| format!("binding {}", cfg.server_addr))?;
-    println!(
-        "specpv server listening on {} ({} backend)",
-        cfg.server_addr,
-        be.name()
-    );
-    let coord = Coordinator::new(be, cfg);
-    serve_on(listener, coord)
+    crate::serve::serve(be, cfg)
 }
 
 /// Serve on an already-bound listener with an existing coordinator.
 /// Tests inject a scripted coordinator here; `serve` binds the real one.
-pub fn serve_on(listener: TcpListener, mut coord: Coordinator<'_>) -> Result<()> {
-    let addr = listener.local_addr()?;
-    let defaults = Defaults {
-        max_new: coord.cfg.max_new_tokens,
-        temperature: coord.cfg.temperature,
-    };
-    let (work_tx, work_rx) = channel::<WorkItem>();
-    let shutdown = Arc::new(AtomicBool::new(false));
-
-    thread::scope(|s| {
-        let accept_shutdown = shutdown.clone();
-        let accept_tx = work_tx.clone();
-        let accept_defaults = defaults;
-        s.spawn(move || {
-            for stream in listener.incoming() {
-                if accept_shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
-                let Ok(stream) = stream else { continue };
-                // short read timeout so reader threads can observe
-                // shutdown instead of blocking on idle clients forever
-                let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-                let Ok(write_half) = stream.try_clone() else { continue };
-                let (conn_tx, conn_rx) = channel::<String>();
-                let wsd = accept_shutdown.clone();
-                s.spawn(move || writer_loop(write_half, conn_rx, wsd));
-                let tx = accept_tx.clone();
-                let sd = accept_shutdown.clone();
-                let d = accept_defaults.clone();
-                s.spawn(move || reader_loop(stream, tx, conn_tx, sd, d));
-            }
-        });
-
-        let served = device_loop(&mut coord, &work_rx);
-        // unblock the acceptor (and, via their timeouts, readers/writers)
-        shutdown.store(true, Ordering::SeqCst);
-        // drop work items still buffered in the channel: they hold clones
-        // of per-connection reply senders that would otherwise keep
-        // writer threads alive past shutdown
-        while work_rx.try_recv().is_ok() {}
-        let _ = TcpStream::connect(addr);
-        served
-    })?;
-    coord.sync_backend_counters();
-    println!("server metrics: {}", coord.registry.summary());
-    Ok(())
-}
-
-/// Per-connection writer: drains response lines onto the socket. Polls
-/// the shutdown flag so a sender clone buffered somewhere (e.g. a work
-/// item that was never consumed) cannot keep the thread alive past
-/// server exit.
-fn writer_loop(mut stream: TcpStream, rx: Receiver<String>, shutdown: Arc<AtomicBool>) {
-    loop {
-        match rx.recv_timeout(Duration::from_millis(200)) {
-            Ok(line) => {
-                if stream
-                    .write_all(line.as_bytes())
-                    .and_then(|_| stream.flush())
-                    .is_err()
-                {
-                    return;
-                }
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                if shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => return,
-        }
-    }
-}
-
-/// Per-connection reader: parses JSON lines into work items.
-fn reader_loop(
-    stream: TcpStream,
-    work: Sender<WorkItem>,
-    out: Sender<String>,
-    shutdown: Arc<AtomicBool>,
-    defaults: Defaults,
-) {
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => return, // client closed
-            Ok(_) => {
-                let trimmed = line.trim();
-                if !trimmed.is_empty() {
-                    match parse_item(trimmed, &defaults, out.clone()) {
-                        Ok(item) => {
-                            if work.send(item).is_err() {
-                                let _ = out.send(line_of(
-                                    Json::obj()
-                                        .set("ok", false)
-                                        .set("error", "server shutting down"),
-                                ));
-                                return;
-                            }
-                        }
-                        Err(e) => {
-                            let _ = out.send(line_of(
-                                Json::obj()
-                                    .set("ok", false)
-                                    .set("error", format!("{e:#}")),
-                            ));
-                        }
-                    }
-                }
-                line.clear();
-            }
-            Err(e)
-                if e.kind() == ErrorKind::WouldBlock
-                    || e.kind() == ErrorKind::TimedOut =>
-            {
-                if shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-            }
-            Err(_) => return,
-        }
-    }
-}
-
-fn parse_item(raw: &str, defaults: &Defaults, reply: Sender<String>) -> Result<WorkItem> {
-    let req = Json::parse(raw)?;
-    let op = req.get("op").and_then(|x| x.as_str()).unwrap_or("generate");
-    match op {
-        "ping" => Ok(WorkItem::Ping { reply }),
-        "admin" => {
-            let v = req.get("v").and_then(|x| x.as_i64()).unwrap_or(1);
-            if v != 1 {
-                return Err(anyhow!("unsupported admin version {v} (supported: 1)"));
-            }
-            let cmd = match req.get("cmd").and_then(|x| x.as_str()) {
-                Some("metrics") => AdminCmd::Metrics,
-                Some("kv") => AdminCmd::Kv,
-                Some("cache") => AdminCmd::Cache,
-                Some(other) => {
-                    return Err(anyhow!(
-                        "unknown admin cmd '{other}' (metrics|kv|cache)"
-                    ))
-                }
-                None => return Err(anyhow!("admin needs 'cmd'")),
-            };
-            Ok(WorkItem::Admin { cmd, legacy: false, reply })
-        }
-        // deprecated flat aliases for the admin subcommands
-        "metrics" => Ok(WorkItem::Admin { cmd: AdminCmd::Metrics, legacy: true, reply }),
-        "cache" => Ok(WorkItem::Admin { cmd: AdminCmd::Cache, legacy: true, reply }),
-        "shutdown" => Ok(WorkItem::Shutdown { reply }),
-        "cancel" => {
-            let id = req
-                .get("id")
-                .and_then(|x| x.as_i64())
-                .ok_or_else(|| anyhow!("cancel needs 'id'"))? as RequestId;
-            Ok(WorkItem::Cancel { id, reply })
-        }
-        "generate" => {
-            let prompt = req
-                .get("prompt")
-                .and_then(|x| x.as_str())
-                .ok_or_else(|| anyhow!("missing 'prompt'"))?;
-            let max_new = req
-                .get("max_new")
-                .and_then(|x| x.as_usize())
-                .unwrap_or(defaults.max_new);
-            let temperature = req
-                .get("temperature")
-                .and_then(|x| x.as_f64())
-                .unwrap_or(defaults.temperature as f64) as f32;
-            let engine = match req.get("engine").and_then(|x| x.as_str()) {
-                Some(e) => Some(e.parse()?),
-                None => None,
-            };
-            let seed = req.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
-            let stream =
-                req.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
-            let deadline_secs = req.get("deadline_s").and_then(|x| x.as_f64());
-            let priority =
-                req.get("priority").and_then(|x| x.as_i64()).unwrap_or(0) as i32;
-            Ok(WorkItem::Generate {
-                gen: GenRequest {
-                    prompt: tokenizer::encode(prompt),
-                    max_new,
-                    temperature,
-                    seed,
-                },
-                engine,
-                stream,
-                deadline_secs,
-                priority,
-                reply,
-            })
-        }
-        other => Err(anyhow!("unknown op '{other}'")),
-    }
-}
-
-/// Per-request reply routing held by the device loop.
-struct PendingReply {
-    reply: Sender<String>,
-    stream: bool,
-}
-
-/// The single device-owning loop: drain work items, tick the scheduler,
-/// route events back to the right connection. Returns on `shutdown`.
-fn device_loop(coord: &mut Coordinator<'_>, work_rx: &Receiver<WorkItem>) -> Result<()> {
-    let mut pending: HashMap<RequestId, PendingReply> = HashMap::new();
-    loop {
-        // block when there is nothing to schedule, drain otherwise
-        if coord.idle() {
-            match work_rx.recv() {
-                Ok(item) => {
-                    if handle_item(item, coord, &mut pending) {
-                        return Ok(());
-                    }
-                }
-                Err(_) => return Ok(()),
-            }
-        }
-        loop {
-            match work_rx.try_recv() {
-                Ok(item) => {
-                    if handle_item(item, coord, &mut pending) {
-                        return Ok(());
-                    }
-                }
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return Ok(()),
-            }
-        }
-        for ev in coord.tick() {
-            route_event(ev, coord, &mut pending);
-        }
-    }
-}
-
-/// Apply one work item; returns true on shutdown.
-fn handle_item(
-    item: WorkItem,
-    coord: &mut Coordinator<'_>,
-    pending: &mut HashMap<RequestId, PendingReply>,
-) -> bool {
-    match item {
-        WorkItem::Ping { reply } => {
-            send(&reply, Json::obj().set("ok", true));
-        }
-        WorkItem::Admin { cmd, legacy, reply } => {
-            let body = match cmd {
-                AdminCmd::Metrics => metrics_body(coord),
-                AdminCmd::Kv => kv_body(coord),
-                AdminCmd::Cache => cache_body(coord),
-            };
-            let body = if legacy {
-                body.set("deprecated", true)
-            } else {
-                body.set("v", 1i64).set("cmd", cmd.name())
-            };
-            send(&reply, body);
-        }
-        WorkItem::Shutdown { reply } => {
-            send(&reply, Json::obj().set("ok", true));
-            return true;
-        }
-        WorkItem::Cancel { id, reply } => {
-            let cancelled = coord.cancel(id);
-            if cancelled {
-                if let Some(p) = pending.remove(&id) {
-                    send_final(&p, coord, id);
-                }
-            }
-            send(&reply, Json::obj().set("ok", true).set("cancelled", cancelled));
-        }
-        WorkItem::Generate { gen, engine, stream, deadline_secs, priority, reply } => {
-            match coord.submit_opts(
-                gen,
-                crate::coordinator::SubmitOpts { engine, deadline_secs, priority },
-            ) {
-                Ok(id) => {
-                    if stream {
-                        // ack with the id so the client can cancel
-                        send(
-                            &reply,
-                            Json::obj()
-                                .set("ok", true)
-                                .set("id", id as i64)
-                                .set("stream", true)
-                                .set("queued", true),
-                        );
-                    }
-                    pending.insert(id, PendingReply { reply, stream });
-                }
-                Err(e) => {
-                    send(
-                        &reply,
-                        Json::obj().set("ok", false).set("error", format!("{e:#}")),
-                    );
-                }
-            }
-        }
-    }
-    false
-}
-
-/// The `admin metrics` body: scheduler registry + backend counters.
-fn metrics_body(coord: &mut Coordinator<'_>) -> Json {
-    coord.sync_backend_counters();
-    let reg = &coord.registry;
-    Json::obj()
-        .set("ok", true)
-        .set("summary", reg.summary())
-        .set(
-            "backend",
-            if reg.backend.is_empty() { "scripted" } else { reg.backend.as_str() },
-        )
-        .set("executions", reg.executions as i64)
-        .set("exec_secs", reg.exec_secs)
-        .set("compilations", reg.compilations as i64)
-        .set("queue_depth", coord.queue_len())
-        .set("active", coord.active_len())
-        .set("completed", reg.completed as i64)
-        .set("failed", reg.failed as i64)
-        .set("cancelled", reg.cancelled as i64)
-        .set("kv_resident_bytes", reg.kv_resident_bytes)
-        .set("kv_budget_bytes", reg.kv_budget_bytes)
-        .set("kv_pages_resident", reg.kv_pages_resident)
-        .set("kv_pages_shared", reg.kv_pages_shared)
-        .set("kv_frag_pct", reg.kv_frag_pct)
-        .set("swap_outs", reg.swap_outs as i64)
-        .set("swap_ins", reg.swap_ins as i64)
-        .set("swap_faults", reg.swap_faults as i64)
-        .set("prefix_hits", reg.prefix_hits as i64)
-        .set("prefix_misses", reg.prefix_misses as i64)
-        .set("threads", reg.threads)
-        .set("fused_groups", reg.batch_groups as i64)
-        .set("batch_ops_fused", reg.batch_ops_fused as i64)
-        .set("batch_ops_single", reg.batch_ops_single as i64)
-        .set("fallback_steps", reg.fallback_steps as i64)
-        .set("batch_mean_width", reg.batch_mean_width())
-        .set("batch_max_width", reg.batch_width_max)
-        .set("batch_tick_groups", reg.batch_tick_groups)
-        .set("batched_frac", reg.batched_frac())
-        .set("ttft_p50_s", reg.ttft.p50())
-        .set("ttft_p99_s", reg.ttft.p99())
-}
-
-/// The `admin cache` body: prefix cache + swap-tier aggregates.
-fn cache_body(coord: &mut Coordinator<'_>) -> Json {
-    let s = coord.kv_stats();
-    Json::obj()
-        .set("ok", true)
-        .set("prefix_entries", s.prefix.entries)
-        .set("prefix_bytes", s.prefix.bytes)
-        .set("prefix_budget_bytes", s.prefix.budget_bytes)
-        .set("prefix_hits", s.prefix.hits as i64)
-        .set("prefix_misses", s.prefix.misses as i64)
-        .set("prefix_insertions", s.prefix.insertions as i64)
-        .set("prefix_evictions", s.prefix.evictions as i64)
-        .set("kv_resident_bytes", s.resident_bytes)
-        .set("kv_budget_bytes", s.budget_bytes)
-        .set("live_states", s.live_states)
-        .set("swapped", s.swapped)
-        .set("swap_bytes", s.swap_bytes)
-        .set("swap_outs", s.swap_outs as i64)
-        .set("swap_ins", s.swap_ins as i64)
-}
-
-/// The `admin kv` body: page-level pool gauges (residency, sharing,
-/// dedup/CoW counters, quantization and spill tiers).
-fn kv_body(coord: &mut Coordinator<'_>) -> Json {
-    let s = coord.kv_stats();
-    let p = &s.pages;
-    Json::obj()
-        .set("ok", true)
-        .set("page_bytes", p.page_bytes)
-        .set("pages_resident", p.pages_resident)
-        .set("pages_shared", p.pages_shared)
-        .set("pages_zero", p.pages_zero)
-        .set("pages_spilled", p.pages_spilled)
-        .set("ram_bytes", p.ram_bytes)
-        .set("disk_bytes", p.disk_bytes)
-        .set("frag_pct", p.frag_pct)
-        .set("page_allocs", p.page_allocs as i64)
-        .set("dedup_hits", p.dedup_hits as i64)
-        .set("cow_copies", p.cow_copies as i64)
-        .set("quant_pages", p.quant_pages as i64)
-        .set("spills", p.spills as i64)
-        .set("spill_loads", p.spill_loads as i64)
-        .set("swap_faults", p.swap_faults as i64)
-        .set("parked_sessions", s.swapped)
-        .set("parked_bytes", s.swap_bytes)
-}
-
-fn route_event(
-    ev: Event,
-    coord: &Coordinator<'_>,
-    pending: &mut HashMap<RequestId, PendingReply>,
-) {
-    match ev {
-        // swap transitions — including a recovered SwapFault, which only
-        // re-queues the request — are scheduler-internal (output is
-        // unaffected); operators observe them through the admin ops
-        Event::Started { .. }
-        | Event::SwappedOut { .. }
-        | Event::Resumed { .. }
-        | Event::SwapFault { .. } => {}
-        Event::Step { id, new_tokens, step, .. } => {
-            if let Some(p) = pending.get(&id) {
-                if p.stream && !new_tokens.is_empty() {
-                    send(
-                        &p.reply,
-                        Json::obj()
-                            .set("ok", true)
-                            .set("id", id as i64)
-                            .set("stream", true)
-                            .set("step", step)
-                            .set("delta", tokenizer::decode(&new_tokens))
-                            .set("done", false),
-                    );
-                }
-            }
-        }
-        Event::Finished { id } | Event::Cancelled { id } | Event::Failed { id, .. } => {
-            if let Some(p) = pending.remove(&id) {
-                send_final(&p, coord, id);
-            }
-        }
-    }
-}
-
-/// The terminal response line for a request (results keyed by id — the
-/// device loop never assumes "the last submitted request finished").
-fn send_final(p: &PendingReply, coord: &Coordinator<'_>, id: RequestId) {
-    let Some(tr) = coord.get(id) else {
-        send(
-            &p.reply,
-            Json::obj().set("ok", false).set("error", "request vanished"),
-        );
-        return;
-    };
-    let resp = match (&tr.state, &tr.result) {
-        (RequestState::Done, Some(r)) => Json::obj()
-            .set("ok", true)
-            .set("id", id as i64)
-            .set("done", true)
-            .set("text", r.text())
-            .set("tokens", r.tokens.len())
-            .set("tok_per_s", r.stats.throughput())
-            .set("tau", r.stats.accept_len())
-            .set(
-                "modes",
-                Json::obj()
-                    .set("full", r.stats.full_steps)
-                    .set("partial", r.stats.partial_steps)
-                    .set("refresh", r.stats.refresh_steps),
-            )
-            .set("latency_s", tr.service_secs)
-            .set("ttft_s", tr.ttft_secs)
-            .set("steps", tr.steps),
-        (RequestState::Cancelled, r) => Json::obj()
-            .set("ok", true)
-            .set("id", id as i64)
-            .set("done", true)
-            .set("cancelled", true)
-            .set(
-                "text",
-                r.as_ref().map(|r| r.text()).unwrap_or_default(),
-            ),
-        (RequestState::Failed(e), _) => Json::obj()
-            .set("ok", false)
-            .set("id", id as i64)
-            .set("done", true)
-            .set("error", e.as_str()),
-        _ => Json::obj()
-            .set("ok", false)
-            .set("id", id as i64)
-            .set("error", "not finished"),
-    };
-    send(&p.reply, resp);
-}
-
-fn line_of(j: Json) -> String {
-    let mut s = j.to_string();
-    s.push('\n');
-    s
-}
-
-fn send(tx: &Sender<String>, j: Json) {
-    let _ = tx.send(line_of(j));
+/// Delegates to [`crate::serve::serve_on`].
+pub fn serve_on(listener: TcpListener, coord: Coordinator<'_>) -> Result<()> {
+    crate::serve::serve_on(listener, coord)
 }
 
 /// Blocking client for examples/tests.
@@ -704,7 +169,7 @@ impl Client {
         self.call(Json::obj().set("op", "cancel").set("id", id as i64))
     }
 
-    /// Versioned admin subcommand (`metrics`, `kv`, `cache`).
+    /// Versioned admin subcommand (`metrics`, `kv`, `cache`, `shards`).
     pub fn admin(&mut self, cmd: &str) -> Result<Json> {
         self.call(Json::obj().set("op", "admin").set("cmd", cmd).set("v", 1i64))
     }

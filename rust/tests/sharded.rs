@@ -1,0 +1,372 @@
+//! Integration tests of the sharded serving subsystem (DESIGN.md §14):
+//!   * a 256-client streaming soak across 2 shards — mixed engines,
+//!     mid-stream cancels, globally unique wire ids, zero lost or
+//!     duplicated lines, aggregated admin counters, clean shutdown
+//!   * the `shards = 1` compatibility pin — the server's final line
+//!     matches a direct coordinator run key-for-key and byte-for-byte,
+//!     with the same id sequence
+//!   * prefix-affinity routing on the reference backend — deterministic
+//!     home shard, repeat-prefix generations hit the home shard's prefix
+//!     cache (a repeated session start materializes zero new pages),
+//!     and a forced re-route misses the cache but stays byte-identical
+//!   * graceful drain — a `shutdown` op mid-generation streams a
+//!     `{"draining":true,"done":false}` marker, the in-flight request
+//!     still gets its full final line, and late ops are refused
+
+use std::collections::HashSet;
+use std::net::TcpListener;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use specpv::backend::reference::ReferenceBackend;
+use specpv::config::{BackendKind, Config, EngineKind};
+use specpv::coordinator::Coordinator;
+use specpv::engine::scripted::ScriptedFactory;
+use specpv::engine::{self, GenRequest};
+use specpv::json::Json;
+use specpv::kvstore::{KvCtx, KvStore};
+use specpv::serve::router::Router;
+use specpv::serve::serve_scripted;
+use specpv::server::{serve_on, Client};
+use specpv::{corpus, tokenizer};
+
+const SOAK_CLIENTS: usize = 256;
+
+#[test]
+fn soak_256_streaming_clients_across_two_shards() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = Config { max_active: 8, shards: 2, ..Config::default() };
+    let factory = ScriptedFactory {
+        tokens_per_step: 2,
+        step_micros: 200,
+        ..ScriptedFactory::default()
+    };
+    let server = thread::spawn(move || serve_scripted(listener, cfg, factory));
+
+    // wire ids must be globally unique across shards
+    let ids = Arc::new(Mutex::new(HashSet::<u64>::new()));
+    let mut clients = Vec::new();
+    for c in 0..SOAK_CLIENTS {
+        let addr = addr.clone();
+        let ids = ids.clone();
+        clients.push(thread::spawn(move || {
+            let engines = ["spec_pv", "ar", "triforce", "spec_full", "tokenswift"];
+            let engine = engines[c % engines.len()];
+            let mut cl = Client::connect(&addr).unwrap();
+            let prompt = format!("soak client {c} prompt payload");
+            if c % 16 == 0 {
+                // cancel mid-stream: a generation far too long to finish,
+                // cancelled after two delta lines
+                cl.send(
+                    Json::obj()
+                        .set("op", "generate")
+                        .set("prompt", prompt.as_str())
+                        .set("max_new", 4096usize)
+                        .set("engine", engine)
+                        .set("stream", true),
+                )
+                .unwrap();
+                let ack = cl.recv().unwrap();
+                assert_eq!(
+                    ack.get("queued").and_then(|x| x.as_bool()),
+                    Some(true),
+                    "{ack:?}"
+                );
+                let id = ack.get("id").and_then(|x| x.as_i64()).unwrap();
+                assert!(
+                    ids.lock().unwrap().insert(id as u64),
+                    "duplicate wire id {id}"
+                );
+                let mut deltas = 0usize;
+                let mut cancel_sent = false;
+                let fin = loop {
+                    let j = cl.recv().unwrap();
+                    if j.get("done").and_then(|x| x.as_bool()) == Some(true) {
+                        break j;
+                    }
+                    if j.get("delta").is_some() {
+                        deltas += 1;
+                        if deltas == 2 && !cancel_sent {
+                            cl.send(Json::obj().set("op", "cancel").set("id", id))
+                                .unwrap();
+                            cancel_sent = true;
+                        }
+                    }
+                };
+                assert_eq!(
+                    fin.get("cancelled").and_then(|x| x.as_bool()),
+                    Some(true),
+                    "not cancelled mid-flight: {fin:?}"
+                );
+                // the cancel ack arrives strictly after the final line
+                let cancel_ack = cl.recv().unwrap();
+                assert_eq!(
+                    cancel_ack.get("cancelled").and_then(|x| x.as_bool()),
+                    Some(true),
+                    "{cancel_ack:?}"
+                );
+            } else {
+                let (steps, fin) = cl.generate_stream(&prompt, 24, engine).unwrap();
+                assert_eq!(
+                    fin.get("ok").and_then(|x| x.as_bool()),
+                    Some(true),
+                    "{fin:?}"
+                );
+                assert_eq!(fin.get("tokens").and_then(|x| x.as_usize()), Some(24));
+                let id = fin.get("id").and_then(|x| x.as_i64()).unwrap();
+                assert!(
+                    ids.lock().unwrap().insert(id as u64),
+                    "duplicate wire id {id}"
+                );
+                assert_eq!(
+                    steps[0].get("id").and_then(|x| x.as_i64()),
+                    Some(id),
+                    "queued ack id mismatch: {steps:?}"
+                );
+                // zero lost or duplicated lines: the concatenated deltas
+                // reproduce the final text exactly
+                let delta_text: String = steps
+                    .iter()
+                    .filter_map(|j| j.get("delta").and_then(|x| x.as_str()))
+                    .collect();
+                assert_eq!(
+                    Some(delta_text.as_str()),
+                    fin.get("text").and_then(|x| x.as_str()),
+                    "lost/dup stream lines for client {c}"
+                );
+            }
+        }));
+    }
+    for t in clients {
+        t.join().unwrap();
+    }
+    assert_eq!(ids.lock().unwrap().len(), SOAK_CLIENTS);
+
+    let mut admin = Client::connect(&addr).unwrap();
+    let s = admin.admin("shards").unwrap();
+    assert_eq!(s.get("ok").and_then(|x| x.as_bool()), Some(true), "{s:?}");
+    assert_eq!(s.get("cmd").and_then(|x| x.as_str()), Some("shards"));
+    assert_eq!(s.get("shards").and_then(|x| x.as_usize()), Some(2));
+    let per = match s.get("per_shard") {
+        Some(Json::Arr(v)) => v.clone(),
+        other => panic!("per_shard missing: {other:?}"),
+    };
+    assert_eq!(per.len(), 2);
+    let placed: usize = per
+        .iter()
+        .map(|p| p.get("placed").and_then(|x| x.as_usize()).unwrap())
+        .sum();
+    assert_eq!(placed, SOAK_CLIENTS, "every session placed exactly once");
+    for p in &per {
+        assert_eq!(p.get("load").and_then(|x| x.as_usize()), Some(0), "{p:?}");
+        assert!(p.get("placed").and_then(|x| x.as_usize()).unwrap() > 0, "{p:?}");
+    }
+
+    // merged metrics: counters sum across both shards
+    let m = admin.admin("metrics").unwrap();
+    assert_eq!(m.get("ok").and_then(|x| x.as_bool()), Some(true), "{m:?}");
+    assert_eq!(
+        m.get("completed").and_then(|x| x.as_i64()),
+        Some((SOAK_CLIENTS - SOAK_CLIENTS / 16) as i64),
+        "{m:?}"
+    );
+    assert_eq!(
+        m.get("cancelled").and_then(|x| x.as_i64()),
+        Some((SOAK_CLIENTS / 16) as i64),
+        "{m:?}"
+    );
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+/// Drive one request through a bare coordinator to completion.
+fn direct_run(coord: &mut Coordinator<'_>, req: GenRequest) -> (String, usize) {
+    let id = coord.submit(req, Some(EngineKind::SpecPv)).unwrap();
+    while !coord.idle() {
+        coord.tick();
+    }
+    let tr = coord.get(id).unwrap();
+    let r = tr.result.as_ref().expect("request must complete");
+    (r.text(), r.tokens.len())
+}
+
+#[test]
+fn single_shard_is_byte_identical_to_direct_coordinator_run() {
+    let factory = ScriptedFactory { tokens_per_step: 3, ..ScriptedFactory::default() };
+    let cfg = Config { max_active: 2, ..Config::default() };
+
+    let mut coord = Coordinator::with_factory(cfg.clone(), Box::new(factory.clone()));
+    let req = GenRequest::greedy(tokenizer::encode("byte identity pin"), 17);
+    let (want_text, want_tokens) = direct_run(&mut coord, req);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let coord = Coordinator::with_factory(cfg, Box::new(factory));
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(&addr).unwrap();
+        let fin = c.generate("byte identity pin", 17, "spec_pv").unwrap();
+        assert_eq!(fin.get("ok").and_then(|x| x.as_bool()), Some(true), "{fin:?}");
+        assert_eq!(fin.get("text").and_then(|x| x.as_str()), Some(want_text.as_str()));
+        assert_eq!(fin.get("tokens").and_then(|x| x.as_usize()), Some(want_tokens));
+        // wire ids are assigned in parse order from 0, exactly like the
+        // old per-coordinator request ids
+        assert_eq!(fin.get("id").and_then(|x| x.as_i64()), Some(0));
+        // the final-line key set is the frozen wire contract
+        let keys: Vec<&str> =
+            fin.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            [
+                "done", "id", "latency_s", "modes", "ok", "steps", "tau", "text",
+                "tok_per_s", "tokens", "ttft_s"
+            ],
+            "final line keys drifted"
+        );
+        let fin2 = c.generate("byte identity pin", 17, "spec_pv").unwrap();
+        assert_eq!(fin2.get("id").and_then(|x| x.as_i64()), Some(1));
+        assert_eq!(
+            fin2.get("text").and_then(|x| x.as_str()),
+            Some(want_text.as_str())
+        );
+        c.shutdown().unwrap();
+    });
+    serve_on(listener, coord).unwrap();
+    client.join().unwrap();
+}
+
+#[test]
+fn prefix_affinity_hits_home_cache_and_reroute_stays_byte_identical() {
+    // routing is deterministic across router instances and sticky under
+    // shared prefixes
+    let prompt_text = corpus::continuation_prompt(11, 1200);
+    let mut prompt = tokenizer::encode(&prompt_text);
+    prompt.truncate(256);
+    let home = Router::new(2, 2.0).home(&prompt);
+    assert_eq!(home, Router::new(2, 2.0).home(&prompt), "home must be stable");
+    let mut extended = prompt.clone();
+    extended.extend_from_slice(&[7, 8, 9]);
+    assert_eq!(
+        home,
+        Router::new(2, 2.0).home(&extended),
+        "a shared first chunk must share the home shard"
+    );
+
+    let cfg = Config {
+        backend: BackendKind::Reference,
+        engine: EngineKind::Autoregressive,
+        ..Config::default()
+    };
+    let req = GenRequest::greedy(prompt.clone(), 8);
+
+    // PR 6 gate, per shard-private cache: a repeated session start on the
+    // same store materializes zero new pages
+    let be = ReferenceBackend::new();
+    let store = KvStore::new(64 << 20);
+    let kv = KvCtx::with_prefix(store.clone());
+    drop(engine::build(&cfg).start(&be, &req, &kv).unwrap());
+    let allocs_before = store.pool().stats().page_allocs;
+    drop(engine::build(&cfg).start(&be, &req, &kv).unwrap());
+    assert_eq!(
+        store.pool().stats().page_allocs - allocs_before,
+        0,
+        "repeat-prefix start must allocate zero new pages"
+    );
+
+    // two "shards": independent backends + coordinators, each with its
+    // own prefix cache, like the serving subsystem builds them
+    let be_home = ReferenceBackend::new();
+    let be_other = ReferenceBackend::new();
+    let mut coord_home = Coordinator::new(&be_home, cfg.clone());
+    let mut coord_other = Coordinator::new(&be_other, cfg.clone());
+
+    let run = |coord: &mut Coordinator<'_>| -> Vec<u32> {
+        let id = coord.submit(GenRequest::greedy(prompt.clone(), 8), None).unwrap();
+        while !coord.idle() {
+            coord.tick();
+        }
+        coord.get(id).unwrap().result.as_ref().unwrap().tokens.clone()
+    };
+
+    let first = run(&mut coord_home);
+    let hits_before = coord_home.kv_stats().prefix.hits;
+    let second = run(&mut coord_home);
+    assert_eq!(first, second, "home-shard repeat diverged");
+    assert!(
+        coord_home.kv_stats().prefix.hits > hits_before,
+        "repeat prefix missed the home shard's cache"
+    );
+
+    // a forced re-route (imbalance spill) lands on a cold cache: misses,
+    // but the output is byte-identical
+    let third = run(&mut coord_other);
+    assert_eq!(coord_other.kv_stats().prefix.hits, 0, "cold shard cannot hit");
+    assert!(coord_other.kv_stats().prefix.misses > 0);
+    assert_eq!(third, first, "re-routed generation must be byte-identical");
+}
+
+#[test]
+fn shutdown_drains_in_flight_streams_with_marker_and_final_line() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = Config { max_active: 2, shards: 2, ..Config::default() };
+    let factory = ScriptedFactory {
+        tokens_per_step: 2,
+        step_micros: 500,
+        ..ScriptedFactory::default()
+    };
+    let server = thread::spawn(move || serve_scripted(listener, cfg, factory));
+
+    // streamer tells the controller when its generation is in flight
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let a1 = addr.clone();
+    let streamer = thread::spawn(move || {
+        let mut c = Client::connect(&a1).unwrap();
+        c.send(
+            Json::obj()
+                .set("op", "generate")
+                .set("prompt", "drain me gently")
+                .set("max_new", 400usize)
+                .set("stream", true),
+        )
+        .unwrap();
+        let ack = c.recv().unwrap();
+        assert_eq!(ack.get("queued").and_then(|x| x.as_bool()), Some(true), "{ack:?}");
+        let mut signalled = false;
+        let mut saw_marker = false;
+        let fin = loop {
+            let j = c.recv().unwrap();
+            if j.get("done").and_then(|x| x.as_bool()) == Some(true) {
+                break j;
+            }
+            if j.get("draining").and_then(|x| x.as_bool()) == Some(true) {
+                saw_marker = true;
+            }
+            if j.get("delta").is_some() && !signalled {
+                started_tx.send(()).unwrap();
+                signalled = true;
+            }
+        };
+        assert!(saw_marker, "no draining marker before the final line");
+        // drain runs the request dry — full output, not a cancellation
+        assert_eq!(fin.get("ok").and_then(|x| x.as_bool()), Some(true), "{fin:?}");
+        assert_eq!(fin.get("tokens").and_then(|x| x.as_usize()), Some(400));
+        assert!(fin.get("cancelled").is_none(), "drain must not cancel: {fin:?}");
+    });
+
+    started_rx.recv().unwrap();
+    let mut ctl = Client::connect(&addr).unwrap();
+    ctl.shutdown().unwrap();
+    // post-shutdown ops on a still-open connection are refused
+    let late = ctl.generate("too late", 4, "spec_pv").unwrap();
+    assert_eq!(late.get("ok").and_then(|x| x.as_bool()), Some(false), "{late:?}");
+    assert!(
+        late.get("error")
+            .and_then(|x| x.as_str())
+            .is_some_and(|e| e.contains("shutting down")),
+        "{late:?}"
+    );
+
+    streamer.join().unwrap();
+    server.join().unwrap().unwrap();
+}
