@@ -24,7 +24,16 @@
 //! prefix-affinity router — reporting aggregate tok/s and p95 TTFT per
 //! shard count. A second hard gate requires shards=2 to strictly beat
 //! shards=1 aggregate throughput: sharding must buy real parallelism.
+//!
+//! A third leg measures **failover recovery** (DESIGN.md §15): a
+//! supervised single-shard server with a `shard_panic` failpoint armed
+//! mid-stream on a ≥ 1024-token prompt, once resuming from the periodic
+//! paged-KV checkpoint and once regenerating from the prompt. The
+//! client-visible stall (largest inter-delta gap) lands in the report;
+//! a third hard gate requires the checkpoint path to be strictly faster
+//! than regeneration.
 
+use std::net::TcpListener;
 use std::path::Path;
 use std::sync::mpsc::channel;
 use std::thread;
@@ -40,6 +49,7 @@ use crate::engine::GenRequest;
 use crate::json::Json;
 use crate::serve::router::Router;
 use crate::serve::shard::{run_shard, FrontEvent, ShardHandle, SubmitReq};
+use crate::server::Client;
 use crate::util::stats::Samples;
 use crate::{corpus, tokenizer};
 
@@ -180,6 +190,9 @@ fn run_shards(shards: usize) -> Result<ShardRunStats> {
                 stream: false,
                 deadline_secs: None,
                 priority: 0,
+                resume: None,
+                skip_tokens: 0,
+                ack_sent: false,
             });
         }
         let mut done = 0usize;
@@ -213,6 +226,95 @@ fn run_shards(shards: usize) -> Result<ShardRunStats> {
             routed_away: router.routed_away(),
         })
     })
+}
+
+/// Recovery-leg request geometry: a long-context-shaped prompt (the
+/// byte-level tokenizer makes bytes = tokens, so this is ≥ 1024 prompt
+/// tokens — the regime where checkpoint failover must beat regeneration)
+/// and enough decode to straddle the injected panic.
+const RECOVERY_PROMPT_BYTES: usize = 1280;
+const RECOVERY_MAX_NEW: usize = 24;
+/// The injected shard panic lands after this many scheduler steps.
+const RECOVERY_PANIC_STEP: usize = 12;
+
+/// One recovery measurement: a supervised single-shard server
+/// (reference backend, `ar` engine) with a `shard_panic` failpoint armed
+/// mid-stream. A streaming client times the largest gap between
+/// consecutive delta lines — detection → restart → failover → first
+/// post-recovery token — and the final text is checked for completeness
+/// (byte-determinism across the failover). Returns
+/// `(prompt_tokens, recovery_ms)`.
+fn run_recovery(checkpoint_every: usize) -> Result<(usize, f64)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let cfg = Config {
+        backend: BackendKind::Reference,
+        engine: EngineKind::Autoregressive,
+        shards: 1,
+        threads: 1,
+        prefix_cache_bytes: 0,
+        max_new_tokens: RECOVERY_MAX_NEW,
+        checkpoint_every_steps: checkpoint_every,
+        faults: format!("shard_panic@step={RECOVERY_PANIC_STEP}"),
+        ..Config::default()
+    };
+    let runtime = crate::serve::backend_runtime(&cfg);
+    let server =
+        thread::spawn(move || crate::serve::serve_supervised(listener, cfg, runtime));
+    let prompt = corpus::continuation_prompt(7, RECOVERY_PROMPT_BYTES);
+    let ptoks = tokenizer::encode(&prompt).len();
+    if ptoks < 1024 {
+        bail!("recovery prompt too short: {ptoks} tokens (need >= 1024)");
+    }
+    let mut c = Client::connect(&addr)?;
+    c.send(
+        Json::obj()
+            .set("op", "generate")
+            .set("prompt", prompt.as_str())
+            .set("max_new", RECOVERY_MAX_NEW)
+            .set("engine", "ar")
+            .set("stream", true),
+    )?;
+    let mut deltas = 0usize;
+    let mut text = String::new();
+    let mut last = Instant::now();
+    let mut max_gap = 0f64;
+    let fin = loop {
+        let j = c.recv()?;
+        if j.get("done").and_then(|x| x.as_bool()) == Some(true)
+            || j.get("ok").and_then(|x| x.as_bool()) == Some(false)
+        {
+            break j;
+        }
+        if let Some(d) = j.get("delta").and_then(|x| x.as_str()) {
+            // the gap before the first delta is prefill, not recovery
+            if deltas > 0 {
+                max_gap = max_gap.max(last.elapsed().as_secs_f64());
+            }
+            last = Instant::now();
+            deltas += 1;
+            text.push_str(d);
+        }
+    };
+    if fin.get("ok").and_then(|x| x.as_bool()) != Some(true) {
+        bail!("recovery request failed: {fin:?}");
+    }
+    let fin_text = fin.get("text").and_then(|x| x.as_str()).unwrap_or("");
+    if fin_text != text {
+        bail!(
+            "failover broke stream determinism: {} delta bytes vs {} final bytes",
+            text.len(),
+            fin_text.len()
+        );
+    }
+    if fin.get("tokens").and_then(|x| x.as_usize()) != Some(RECOVERY_MAX_NEW) {
+        bail!("recovery run truncated: {fin:?}");
+    }
+    c.shutdown()?;
+    server
+        .join()
+        .map_err(|_| anyhow::anyhow!("recovery server panicked"))??;
+    Ok((ptoks, max_gap * 1e3))
 }
 
 /// Drive the sweep; see the module docs for outputs and the hard gate.
@@ -316,6 +418,43 @@ pub fn run(out_dir: &Path, quick: bool, threads: usize) -> Result<()> {
     }
     shard_table.emit(out_dir, "serve_shards")?;
 
+    // recovery leg: injected mid-stream shard panic; compare failover
+    // from the periodic paged-KV checkpoint against full deterministic
+    // regeneration on a >= 1024-token prompt
+    let mut rec_table = Table::new(
+        "Failover recovery (1 shard, ar engine, shard_panic mid-stream, >=1024-token \
+         prompt): client-visible stall by recovery path",
+        &["path", "prompt toks", "recovery ms"],
+    );
+    let mut rec_rows = Vec::new();
+    let mut rec_ms = [0f64; 2];
+    for (slot, &(label, every)) in
+        [("checkpoint", 4usize), ("regenerate", 0usize)].iter().enumerate()
+    {
+        // best-of-iters: noise only ever inflates the stall
+        let mut best: Option<(usize, f64)> = None;
+        for _ in 0..iters {
+            let r = run_recovery(every)?;
+            if best.map(|b| r.1 < b.1).unwrap_or(true) {
+                best = Some(r);
+            }
+        }
+        let (ptoks, ms) = best.expect("at least one iteration ran");
+        rec_ms[slot] = ms;
+        let row_json = Json::obj()
+            .set("path", label)
+            .set("checkpoint_every_steps", every)
+            .set("prompt_tokens", ptoks)
+            .set("panic_step", RECOVERY_PANIC_STEP)
+            .set("recovery_ms", ms);
+        rec_table.row(
+            vec![label.to_string(), ptoks.to_string(), format!("{ms:.1}")],
+            row_json.clone(),
+        );
+        rec_rows.push(row_json);
+    }
+    rec_table.emit(out_dir, "serve_recovery")?;
+
     let combined = Json::obj()
         .set("schema_version", SCHEMA_VERSION)
         .set("threads", crate::util::pool::resolve_threads(threads))
@@ -324,7 +463,8 @@ pub fn run(out_dir: &Path, quick: bool, threads: usize) -> Result<()> {
         .set("max_new", MAX_NEW)
         .set("rows", Json::Arr(rows))
         .set("shard_sessions", SHARD_SESSIONS)
-        .set("shard_rows", Json::Arr(shard_rows));
+        .set("shard_rows", Json::Arr(shard_rows))
+        .set("recovery_rows", Json::Arr(rec_rows));
     std::fs::write(OUTPUT_FILE, combined.to_string())?;
     eprintln!("[bench serve] wrote {OUTPUT_FILE}");
 
@@ -356,6 +496,20 @@ pub fn run(out_dir: &Path, quick: bool, threads: usize) -> Result<()> {
     eprintln!(
         "[bench serve] shards=2 vs shards=1 aggregate speedup: {}",
         fmt_speedup(s2 / s1)
+    );
+
+    // hard gate: for long prompts, resuming from the checkpoint must be
+    // strictly faster than regenerating from scratch — otherwise the
+    // checkpoint machinery is dead weight
+    let (ck, regen) = (rec_ms[0], rec_ms[1]);
+    if ck >= regen {
+        bail!(
+            "failover regression: checkpoint recovery {ck:.1} ms is not strictly \
+             faster than full regeneration {regen:.1} ms on a >=1024-token prompt"
+        );
+    }
+    eprintln!(
+        "[bench serve] failover recovery: checkpoint {ck:.1} ms vs regenerate {regen:.1} ms"
     );
     Ok(())
 }

@@ -267,6 +267,23 @@ pub struct Config {
     /// home shard only when `home_load + 1 > route_imbalance *
     /// (min_load + 1)` (≥ 1.0; larger keeps affinity stickier)
     pub route_imbalance: f64,
+    /// serve: checkpoint a session's paged-KV state to the front end
+    /// every N scheduler steps so shard failover can resume instead of
+    /// regenerating (0 = off; failover regenerates from the prompt)
+    pub checkpoint_every_steps: usize,
+    /// serve: per-shard outstanding-request bound before the front end
+    /// sheds new work with `{"error":"overloaded","retry_after_ms":…}`
+    /// (0 = unlimited, today's silent-queueing behavior)
+    pub shard_queue: usize,
+    /// serve: supervised shard restarts before the shard degrades to an
+    /// error-answering stub
+    pub max_restarts: usize,
+    /// serve: a supervised shard busy for longer than this without a
+    /// heartbeat is declared wedged and failed over (0 = off)
+    pub shard_heartbeat_ms: u64,
+    /// fault injection: failpoint spec string (see
+    /// `util::failpoint::FaultSpec`; "" = all off)
+    pub faults: String,
 }
 
 impl Default for Config {
@@ -296,6 +313,11 @@ impl Default for Config {
             threads: 0,
             shards: 1,
             route_imbalance: 2.0,
+            checkpoint_every_steps: 0,
+            shard_queue: 0,
+            max_restarts: 3,
+            shard_heartbeat_ms: 0,
+            faults: String::new(),
         }
     }
 }
@@ -525,6 +547,28 @@ static OPTIONS: &[OptDef] = &[
         c.route_imbalance = f;
         Ok(())
     }),
+    opt!("checkpoint_every_steps", "serve: failover checkpoint cadence, steps (0 = off)", |c, v| {
+        c.checkpoint_every_steps = v.parse()?;
+        Ok(())
+    }),
+    opt!("shard_queue", "serve: per-shard depth before shedding (0 = unlimited)", |c, v| {
+        c.shard_queue = v.parse()?;
+        Ok(())
+    }),
+    opt!("max_restarts", "serve: supervised shard restarts before giving up", |c, v| {
+        c.max_restarts = v.parse()?;
+        Ok(())
+    }),
+    opt!("shard_heartbeat_ms", "serve: busy-shard wedge timeout, ms (0 = off)", |c, v| {
+        c.shard_heartbeat_ms = v.parse()?;
+        Ok(())
+    }),
+    opt!("faults", "failpoint spec, e.g. shard_panic@step=40,slow_op_ms=200 (\"\" = off)", |c, v| {
+        // validate eagerly — a typo must not silently disable a chaos run
+        crate::util::failpoint::FaultSpec::parse(v)?;
+        c.faults = v.to_string();
+        Ok(())
+    }),
 ];
 
 /// The declarative option table (config keys + CLI flags).
@@ -604,6 +648,35 @@ mod tests {
         let mut bad = BTreeMap::new();
         bad.insert("route_imbalance".to_string(), "0.5".to_string());
         assert!(c.apply_overrides(&bad).is_err(), "imbalance must be >= 1.0");
+    }
+
+    #[test]
+    fn fault_tolerance_keys_parse() {
+        let mut c = Config::default();
+        assert_eq!(c.checkpoint_every_steps, 0, "default: checkpoints off");
+        assert_eq!(c.shard_queue, 0, "default: unbounded per-shard depth");
+        assert_eq!(c.max_restarts, 3);
+        assert_eq!(c.shard_heartbeat_ms, 0, "default: wedge detection off");
+        assert!(c.faults.is_empty(), "default: failpoints off");
+        let mut kv = BTreeMap::new();
+        kv.insert("checkpoint_every_steps".to_string(), "8".to_string());
+        kv.insert("shard_queue".to_string(), "64".to_string());
+        kv.insert("max_restarts".to_string(), "1".to_string());
+        kv.insert("shard_heartbeat_ms".to_string(), "250".to_string());
+        kv.insert(
+            "faults".to_string(),
+            "shard_panic@step=40,backend_err_rate=0.01".to_string(),
+        );
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.checkpoint_every_steps, 8);
+        assert_eq!(c.shard_queue, 64);
+        assert_eq!(c.max_restarts, 1);
+        assert_eq!(c.shard_heartbeat_ms, 250);
+        assert!(c.faults.contains("shard_panic"));
+
+        let mut bad = BTreeMap::new();
+        bad.insert("faults".to_string(), "nonsense=1".to_string());
+        assert!(c.apply_overrides(&bad).is_err(), "bad failpoints rejected eagerly");
     }
 
     #[test]

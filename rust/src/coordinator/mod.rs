@@ -45,11 +45,13 @@ use crate::backend::{Backend, StateBuf};
 use crate::config::{Config, EngineKind};
 use crate::engine::plan::{exec_batch, exec_single, PlanKey};
 use crate::engine::{
-    BackendFactory, Drive, EngineSession, GenRequest, GenResult, KernelPlan, SessionFactory,
-    StepOutcome,
+    BackendFactory, Drive, EngineSession, GenRequest, GenResult, KernelPlan,
+    SessionCheckpoint, SessionFactory, StepOutcome,
 };
 use crate::kvstore::{KvCtx, KvPool, KvStats, KvStore, PagedState};
 use crate::metrics::GenStats;
+use crate::util::failpoint::FaultSpec;
+use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 
 /// Request ids are coordinator-scoped.
@@ -95,6 +97,10 @@ pub struct TrackedRequest {
     /// preemption rank: under KV-byte pressure the lowest-priority
     /// active session is swapped out first (default 0)
     pub priority: i32,
+    /// tokens preloaded by a checkpoint resume — already emitted on the
+    /// failed shard, never re-delivered in `Step` events (0 for fresh
+    /// sessions and regenerating failovers)
+    pub resumed_tokens: usize,
     submitted: Instant,
     started: Option<Instant>,
 }
@@ -118,6 +124,11 @@ pub enum Event {
     Finished { id: RequestId },
     Cancelled { id: RequestId },
     Failed { id: RequestId, error: String },
+    /// Terminal: the request's wall-clock deadline (`timeout_ms` /
+    /// `deadline_s` on the wire) passed before it finished. Its KV pages
+    /// are freed; the tracked state is `Failed("deadline …")` so the
+    /// result plumbing matches any other failure.
+    DeadlineExceeded { id: RequestId },
     /// The coordinator entered drain (server shutdown): this in-flight
     /// request will run to completion but no new work is admitted.
     /// Streaming clients see a clean end instead of a dropped socket.
@@ -135,6 +146,7 @@ impl Event {
             | Event::Finished { id }
             | Event::Cancelled { id }
             | Event::Failed { id, .. }
+            | Event::DeadlineExceeded { id }
             | Event::Draining { id } => *id,
         }
     }
@@ -180,6 +192,14 @@ pub struct Registry {
     /// spill-file read failures survived on resume (session dropped,
     /// request re-queued)
     pub swap_faults: u64,
+    /// requests failed by their wall-clock deadline (`timeout_ms`)
+    pub deadline_hits: u64,
+    /// supervised restarts of the shard this coordinator serves (set by
+    /// the shard loop from its supervisor's restart count)
+    pub restarts: u64,
+    /// failed-over sessions rebuilt from a checkpoint instead of a fresh
+    /// prefill (DESIGN.md §15)
+    pub checkpoint_resumes: u64,
     /// prompt-prefix cache counters (synced with the backend counters)
     pub prefix_hits: u64,
     pub prefix_misses: u64,
@@ -271,6 +291,7 @@ impl Registry {
              threads={} fused_groups={} batch_mean_w={:.2} batch_max_w={} \
              batched_frac={:.2} fallback_steps={} kv_resident={} kv_budget={} swaps={}/{} \
              kv_pages={} kv_pages_shared={} kv_frag={:.1}% swap_faults={} \
+             deadline_hits={} restarts={} ckpt_resumes={} \
              prefix_hits={} prefix_misses={} execs={} exec_secs={:.2}s \
              compiles={} p50_latency={:.2}s p99={:.2}s p50_ttft={:.3}s \
              p99_ttft={:.3}s mean_tok_s={:.1} mean_tau={:.2}",
@@ -297,6 +318,9 @@ impl Registry {
             self.kv_pages_shared,
             self.kv_frag_pct,
             self.swap_faults,
+            self.deadline_hits,
+            self.restarts,
+            self.checkpoint_resumes,
             self.prefix_hits,
             self.prefix_misses,
             self.executions,
@@ -395,6 +419,15 @@ pub struct Coordinator<'rt> {
     /// drain mode (server shutdown): reject new submits, run the
     /// in-flight set to completion
     draining: bool,
+    /// failover checkpoints attached by `submit_failover`, consumed at
+    /// admission: the session is rebuilt from the snapshot instead of a
+    /// fresh prefill (falling back to prefill if the rebuild fails)
+    resume_ckpts: HashMap<RequestId, SessionCheckpoint>,
+    /// parsed failpoint spec (`cfg.faults`; off by default)
+    faults: FaultSpec,
+    /// dedicated stream for probabilistic fault injection — never shared
+    /// with generation sampling
+    fault_rng: Rng,
     pub registry: Registry,
 }
 
@@ -413,6 +446,7 @@ impl<'rt> Coordinator<'rt> {
         coord.pool = kv.pool;
         coord.prefix = kv.prefix;
         coord.registry.backend = be.name().to_string();
+        coord.install_swap_faults();
         coord
     }
 
@@ -443,7 +477,11 @@ impl<'rt> Coordinator<'rt> {
             threads: crate::util::pool::resolve_threads(cfg.threads),
             ..Registry::default()
         };
-        Coordinator {
+        // cfg.faults was validated at config parse; a hand-built Config
+        // with a bad spec degrades to all-off rather than panicking
+        let faults = FaultSpec::parse(&cfg.faults).unwrap_or_default();
+        let fault_rng = Rng::new(faults.seed);
+        let mut coord = Coordinator {
             cfg,
             admission,
             factory,
@@ -459,7 +497,21 @@ impl<'rt> Coordinator<'rt> {
             rr: 0,
             batching: true,
             draining: false,
+            resume_ckpts: HashMap::new(),
+            faults,
+            fault_rng,
             registry,
+        };
+        coord.install_swap_faults();
+        coord
+    }
+
+    /// Arm the pool's spill-corruption failpoint (idempotent; re-applied
+    /// by [`Coordinator::new`] after it swaps in the config's pool).
+    fn install_swap_faults(&mut self) {
+        if self.faults.swap_corrupt_rate > 0.0 {
+            self.pool
+                .set_corrupt_faults(self.faults.swap_corrupt_rate, self.faults.seed);
         }
     }
 
@@ -523,6 +575,7 @@ impl<'rt> Coordinator<'rt> {
             steps: 0,
             deadline_secs: opts.deadline_secs,
             priority: opts.priority,
+            resumed_tokens: 0,
             submitted: Instant::now(),
             started: None,
         });
@@ -531,9 +584,28 @@ impl<'rt> Coordinator<'rt> {
         Ok(id)
     }
 
+    /// Admit a failed-over request with an optional checkpoint taken on
+    /// the dead shard. With a checkpoint the session is rebuilt from the
+    /// snapshot at admission (no prefill); without one — or if the
+    /// rebuild fails — admission falls back to a deterministic
+    /// regeneration from the prompt.
+    pub fn submit_failover(
+        &mut self,
+        req: GenRequest,
+        opts: SubmitOpts,
+        ck: Option<SessionCheckpoint>,
+    ) -> Result<RequestId> {
+        let id = self.submit_opts(req, opts)?;
+        if let Some(ck) = ck {
+            self.resume_ckpts.insert(id, ck);
+        }
+        Ok(id)
+    }
+
     /// Cancel a queued or running request. Running requests keep their
     /// partial output in `result`. Returns false for unknown/terminal ids.
     pub fn cancel(&mut self, id: RequestId) -> bool {
+        self.resume_ckpts.remove(&id);
         let state = match self.requests.get(id as usize) {
             Some(tr) => tr.state.clone(),
             None => return false,
@@ -582,6 +654,22 @@ impl<'rt> Coordinator<'rt> {
                 true
             }
             _ => false,
+        }
+    }
+
+    /// Snapshot a running session for failover (DESIGN.md §15). Returns
+    /// `None` when the request is not active or the session is at a
+    /// point it cannot checkpoint (mid-plan, finished, or an engine
+    /// without checkpoint support) — callers simply keep the previous
+    /// checkpoint in that case.
+    pub fn checkpoint(&self, id: RequestId) -> Option<SessionCheckpoint> {
+        let entry = self.active.iter().find(|e| e.id == id)?;
+        match entry.session.checkpoint() {
+            Ok(ck) => ck,
+            Err(e) => {
+                eprintln!("[coordinator] checkpoint of request {id} failed: {e:#}");
+                None
+            }
         }
     }
 
@@ -687,12 +775,14 @@ impl<'rt> Coordinator<'rt> {
                 self.prefetched.remove(&id);
                 self.requests[id as usize].result = Some(session.finish());
             }
+            self.resume_ckpts.remove(&id);
             let tr = &mut self.requests[id as usize];
             tr.service_secs =
                 tr.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
-            tr.state = RequestState::Failed(msg.clone());
+            tr.state = RequestState::Failed(msg);
             self.registry.record(tr);
-            events.push(Event::Failed { id, error: msg });
+            self.registry.deadline_hits += 1;
+            events.push(Event::DeadlineExceeded { id });
         }
     }
 
@@ -750,7 +840,31 @@ impl<'rt> Coordinator<'rt> {
         req: &GenRequest,
         events: &mut Vec<Event>,
     ) {
-        match self.factory.start_session(kind, req) {
+        // failover resume: a checkpoint shipped with the request rebuilds
+        // the session mid-generation (no prefill). Any rebuild error
+        // degrades to the regeneration path below — same bytes, more work.
+        let resumed = match self.resume_ckpts.remove(&id) {
+            Some(ck) => match self.factory.start_from_checkpoint(kind, req, &ck) {
+                Ok(session) => {
+                    self.registry.checkpoint_resumes += 1;
+                    self.requests[id as usize].resumed_tokens = ck.emitted.len();
+                    Some(session)
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[coordinator] checkpoint resume of request {id} failed, \
+                         regenerating: {e:#}"
+                    );
+                    None
+                }
+            },
+            None => None,
+        };
+        let started = match resumed {
+            Some(session) => Ok(session),
+            None => self.factory.start_session(kind, req),
+        };
+        match started {
             Ok(session) => {
                 self.pool.reserve(id, session.state_bytes());
                 let tr = &mut self.requests[id as usize];
@@ -904,6 +1018,15 @@ impl<'rt> Coordinator<'rt> {
             // completion, or sequential-fallback step
             for &i in &order {
                 if results[i].is_some() || planned[i] {
+                    continue;
+                }
+                // failpoint: surface a synthetic backend error for this
+                // session's step (exercises the Failed path end to end)
+                if self.faults.backend_err_rate > 0.0
+                    && self.fault_rng.f64() < self.faults.backend_err_rate
+                {
+                    results[i] =
+                        Some(Err(anyhow::anyhow!("injected backend error (failpoint)")));
                     continue;
                 }
                 if !batched {

@@ -6,7 +6,8 @@
 
 use anyhow::Result;
 
-use crate::backend::{Backend, StateBuf, StateKind};
+use crate::backend::{Backend, StateBuf, StateKind, StateSnapshot};
+use crate::config::EngineKind;
 use crate::config::Config;
 use crate::kvstore::{KvCtx, KvPool, PagedState};
 use crate::metrics::GenStats;
@@ -18,7 +19,9 @@ use crate::util::Stopwatch;
 
 use super::plan::{exec_single, Drive, KernelPlan};
 use super::session::TargetSession;
-use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
+use super::{
+    Engine, EngineSession, GenRequest, GenResult, SessionCheckpoint, SessionOut, StepOutcome,
+};
 
 pub struct ArEngine {
     cfg: Config,
@@ -93,6 +96,61 @@ impl Engine for ArEngine {
             sw: Stopwatch::new(),
         }))
     }
+
+    /// Failover resume (DESIGN.md §15): import the checkpoint's exported
+    /// full state into a fresh session on `be` — **no prefill** — and
+    /// continue exactly where the snapshot left off. The KV-cache
+    /// cursors, emitted tokens and RNG stream are restored verbatim, so
+    /// the continuation is byte-identical to the undisturbed run; what a
+    /// regenerating failover pays in prompt-length prefill, this path
+    /// pays only in a state import.
+    fn start_from_checkpoint<'be>(
+        &self,
+        be: &'be dyn Backend,
+        req: &GenRequest,
+        kv: &KvCtx,
+        ck: &SessionCheckpoint,
+    ) -> Result<Box<dyn EngineSession + 'be>> {
+        if ck.engine != EngineKind::Autoregressive {
+            anyhow::bail!("checkpoint was taken by engine {}, not ar", ck.engine);
+        }
+        if ck.emitted.is_empty() {
+            anyhow::bail!("checkpoint holds no emitted tokens");
+        }
+        let need = bucket_need(req.prompt.len(), req.max_new, be.consts());
+        let mut target = TargetSession::new(
+            be,
+            &self.cfg.model_size,
+            need,
+            OffloadSim::new(self.cfg.offload.clone()),
+        )?;
+        let snap = StateSnapshot {
+            kind: StateKind::Full,
+            size: ck.size.clone(),
+            bucket: ck.bucket,
+            data: ck.data.clone(),
+            extra: ck.extra.clone(),
+        };
+        // restore() validates size/bucket compatibility — a mismatched
+        // checkpoint errors out here and the caller regenerates instead
+        target.restore(&snap)?;
+        target.cache.committed = ck.committed;
+        target.cache.pending = ck.pending.clone();
+        let stats = GenStats { verify_steps: ck.steps, ..GenStats::default() };
+        Ok(Box::new(ArSession {
+            be,
+            target,
+            pool: kv.pool.clone(),
+            out: SessionOut::resumed(req.max_new, ck.emitted.clone()),
+            rng: Rng::from_state(ck.rng),
+            stats,
+            prompt_len: req.prompt.len(),
+            temperature: req.temperature,
+            phase: Phase::Idle,
+            pending: None,
+            sw: Stopwatch::new(),
+        }))
+    }
 }
 
 impl EngineSession for ArSession<'_> {
@@ -146,6 +204,27 @@ impl EngineSession for ArSession<'_> {
                 Ok(Drive::Complete(self.out.outcome()))
             }
         }
+    }
+
+    fn checkpoint(&self) -> Result<Option<SessionCheckpoint>> {
+        // only between steps: no in-flight plan, and a finished session
+        // needs no failover (its terminal line is authoritative)
+        if self.phase != Phase::Idle || self.pending.is_some() || self.out.done {
+            return Ok(None);
+        }
+        let snap = self.target.export()?;
+        Ok(Some(SessionCheckpoint {
+            engine: EngineKind::Autoregressive,
+            emitted: self.out.tokens.clone(),
+            steps: self.stats.verify_steps,
+            size: snap.size,
+            bucket: snap.bucket,
+            data: snap.data,
+            extra: snap.extra,
+            committed: self.target.cache.committed,
+            pending: self.target.cache.pending.clone(),
+            rng: self.rng.state(),
+        }))
     }
 
     fn take_pending(&mut self) -> Option<(KernelPlan, StateBuf)> {

@@ -78,6 +78,39 @@ pub struct StepOutcome {
     pub finished: bool,
 }
 
+/// A portable, host-side snapshot of a live session between steps —
+/// everything needed to rebuild it on a *different* backend instance
+/// (shard failover, DESIGN.md §15) and continue byte-identically: the
+/// exported device state, the KV-cache cursors, the emitted tokens and
+/// the sampling RNG state. Plain host data (`Send`), so it crosses shard
+/// threads where sessions and backends cannot.
+#[derive(Debug, Clone)]
+pub struct SessionCheckpoint {
+    pub engine: EngineKind,
+    /// tokens emitted up to the checkpoint (already clipped to `max_new`)
+    pub emitted: Vec<u32>,
+    /// scheduler steps taken up to the checkpoint
+    pub steps: usize,
+    /// exported device state: model-size key, bucket and flat payload
+    /// (the same layout `Backend::export_state` produces)
+    pub size: String,
+    pub bucket: usize,
+    pub data: Vec<f32>,
+    pub extra: Vec<f32>,
+    /// KV-cache cursors (`cache::FullCache`) at the checkpoint
+    pub committed: usize,
+    pub pending: Vec<usize>,
+    /// sampling RNG state (exact stream continuation for temperature > 0)
+    pub rng: u64,
+}
+
+impl SessionCheckpoint {
+    /// Approximate host bytes the snapshot occupies (metrics only).
+    pub fn approx_bytes(&self) -> usize {
+        (self.data.len() + self.extra.len()) * 4 + self.emitted.len() * 4
+    }
+}
+
 /// A live, step-resumable generation. Created by [`Engine::start`] (which
 /// performs prefill and picks the first token); each `step()` runs one
 /// draft→verify→accept round; `finish()` packages the result.
@@ -129,6 +162,15 @@ pub trait EngineSession {
         }
     }
 
+    /// Snapshot the session between steps for failover
+    /// (DESIGN.md §15). `Ok(None)` means "not checkpointable right now"
+    /// — mid-step, already finished, or an engine without support (the
+    /// default); failover then regenerates from the prompt, which is
+    /// equally deterministic, just slower.
+    fn checkpoint(&self) -> Result<Option<SessionCheckpoint>> {
+        Ok(None)
+    }
+
     // --- plan/apply protocol (batched execution, DESIGN.md §12) ---------
 
     /// Advance the step state machine: run host-side work (and
@@ -173,6 +215,23 @@ pub trait Engine {
         req: &GenRequest,
         kv: &KvCtx,
     ) -> Result<Box<dyn EngineSession + 'be>>;
+
+    /// Rebuild a session from a [`SessionCheckpoint`] taken on another
+    /// backend instance, skipping prefill entirely — the checkpoint's
+    /// exported state is imported as-is and generation continues
+    /// byte-identically from the snapshot point. Engines without support
+    /// (the default) report an error; the caller falls back to a fresh
+    /// deterministic `start`.
+    fn start_from_checkpoint<'be>(
+        &self,
+        be: &'be dyn Backend,
+        req: &GenRequest,
+        kv: &KvCtx,
+        ck: &SessionCheckpoint,
+    ) -> Result<Box<dyn EngineSession + 'be>> {
+        let _ = (be, req, kv, ck);
+        anyhow::bail!("engine {} does not support checkpoint resume", self.kind())
+    }
 }
 
 /// Predicted resident state bytes of a `(engine, request)` session —
@@ -225,6 +284,17 @@ pub struct SessionOut {
 impl SessionOut {
     pub fn new(max_new: usize) -> SessionOut {
         SessionOut { tokens: Vec::new(), max_new, reported: 0, done: max_new == 0 }
+    }
+
+    /// Rebuild the accounting at a checkpoint: `tokens` were already
+    /// emitted *and reported* before the snapshot, so a resumed session's
+    /// first `outcome()` drains only tokens produced after the resume.
+    pub fn resumed(max_new: usize, tokens: Vec<u32>) -> SessionOut {
+        let done = max_new == 0
+            || tokens.len() >= max_new
+            || tokens.last().is_some_and(|&t| is_eos(t));
+        let reported = tokens.len();
+        SessionOut { tokens, max_new, reported, done }
     }
 
     /// The prefill bonus token (the first output token of every engine).
@@ -298,6 +368,20 @@ pub trait SessionFactory<'be> {
     fn estimate_bytes(&self, _kind: EngineKind, _req: &GenRequest) -> usize {
         0
     }
+
+    /// Rebuild a session from a failover checkpoint instead of running
+    /// prefill. Factories without support report an error and the
+    /// scheduler falls back to `start_session` (deterministic
+    /// regeneration from the prompt).
+    fn start_from_checkpoint(
+        &mut self,
+        kind: EngineKind,
+        req: &GenRequest,
+        ck: &SessionCheckpoint,
+    ) -> Result<Box<dyn EngineSession + 'be>> {
+        let _ = (kind, req, ck);
+        anyhow::bail!("session factory does not support checkpoint resume")
+    }
 }
 
 /// Session factory over a real backend: builds the engine named by `kind`
@@ -341,6 +425,17 @@ impl<'be> SessionFactory<'be> for BackendFactory<'be> {
 
     fn estimate_bytes(&self, kind: EngineKind, req: &GenRequest) -> usize {
         estimate_state_bytes(self.be, &self.base, kind, req)
+    }
+
+    fn start_from_checkpoint(
+        &mut self,
+        kind: EngineKind,
+        req: &GenRequest,
+        ck: &SessionCheckpoint,
+    ) -> Result<Box<dyn EngineSession + 'be>> {
+        let mut cfg = self.base.clone();
+        cfg.engine = kind;
+        build(&cfg).start_from_checkpoint(self.be, req, &self.kv, ck)
     }
 }
 
@@ -415,6 +510,21 @@ mod tests {
         assert!(!s.finished);
         let s2 = o.outcome();
         assert!(s2.new_tokens.is_empty());
+    }
+
+    #[test]
+    fn session_out_resumed_reports_only_new_tokens() {
+        let mut o = SessionOut::resumed(10, vec![65, 66, 67]);
+        assert!(!o.done);
+        assert_eq!(o.len(), 3);
+        // nothing unreported at the checkpoint …
+        assert!(o.outcome().new_tokens.is_empty());
+        // … and only post-resume tokens drain afterwards
+        o.push_round(&[68], 69);
+        assert_eq!(o.outcome().new_tokens, vec![68, 69]);
+        // resuming at the cap (or past an EOS) is already done
+        assert!(SessionOut::resumed(3, vec![65, 66, 67]).done);
+        assert!(SessionOut::resumed(9, vec![65, crate::tokenizer::EOS]).done);
     }
 
     #[test]

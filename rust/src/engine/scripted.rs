@@ -17,7 +17,8 @@ use crate::config::EngineKind;
 use crate::metrics::GenStats;
 
 use super::{
-    EngineSession, GenRequest, GenResult, SessionFactory, SessionOut, StepOutcome,
+    EngineSession, GenRequest, GenResult, SessionCheckpoint, SessionFactory, SessionOut,
+    StepOutcome,
 };
 
 fn token_at(i: usize) -> u32 {
@@ -70,6 +71,32 @@ impl ScriptedSession {
         self.state_bytes = bytes;
         self
     }
+
+    /// Rebuild a session at a checkpoint: the scripted stream is
+    /// position-indexed, so preloading the emitted tokens and the step
+    /// counter continues byte-identically to an undisturbed run.
+    pub fn resumed(
+        kind: EngineKind,
+        req: &GenRequest,
+        tokens_per_step: usize,
+        ck: &SessionCheckpoint,
+    ) -> ScriptedSession {
+        let stats = GenStats {
+            prefill_secs: 1e-6,
+            verify_steps: ck.steps,
+            ..GenStats::default()
+        };
+        ScriptedSession {
+            kind,
+            out: SessionOut::resumed(req.max_new, ck.emitted.clone()),
+            tokens_per_step: tokens_per_step.max(1),
+            steps: ck.steps,
+            fail_at_step: None,
+            step_micros: 0,
+            state_bytes: 0,
+            stats,
+        }
+    }
 }
 
 impl EngineSession for ScriptedSession {
@@ -118,6 +145,24 @@ impl EngineSession for ScriptedSession {
     // device state to export — only the synthetic pool footprint below)
     fn state_bytes(&self) -> usize {
         self.state_bytes
+    }
+
+    fn checkpoint(&self) -> Result<Option<SessionCheckpoint>> {
+        if self.out.done {
+            return Ok(None);
+        }
+        Ok(Some(SessionCheckpoint {
+            engine: self.kind,
+            emitted: self.out.tokens.clone(),
+            steps: self.steps,
+            size: String::new(),
+            bucket: 0,
+            data: Vec::new(),
+            extra: Vec::new(),
+            committed: 0,
+            pending: Vec::new(),
+            rng: 0,
+        }))
     }
 }
 
@@ -176,6 +221,19 @@ impl SessionFactory<'static> for ScriptedFactory {
     fn estimate_bytes(&self, _kind: EngineKind, _req: &GenRequest) -> usize {
         self.session_bytes
     }
+
+    fn start_from_checkpoint(
+        &mut self,
+        kind: EngineKind,
+        req: &GenRequest,
+        ck: &SessionCheckpoint,
+    ) -> Result<Box<dyn EngineSession + 'static>> {
+        Ok(Box::new(
+            ScriptedSession::resumed(kind, req, self.tokens_per_step, ck)
+                .with_step_micros(self.step_micros)
+                .with_state_bytes(self.session_bytes),
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +267,33 @@ mod tests {
         let mut s = ScriptedSession::new(EngineKind::SpecPv, &req, 1, Some(1));
         assert!(s.step().is_ok());
         assert!(s.step().is_err());
+    }
+
+    #[test]
+    fn checkpoint_resume_continues_byte_identically() {
+        let req = GenRequest::greedy(vec![65, 66], 12);
+        // undisturbed reference run
+        let mut s = ScriptedSession::new(EngineKind::SpecPv, &req, 3, None);
+        let mut reference = Vec::new();
+        while !s.is_finished() {
+            reference.extend(s.step().unwrap().new_tokens);
+        }
+        let reference = Box::new(s).finish().tokens;
+        assert_eq!(reference.len(), 12);
+
+        // checkpoint after two steps, resume in a fresh session
+        let mut s = ScriptedSession::new(EngineKind::SpecPv, &req, 3, None);
+        let mut streamed = s.out.outcome().new_tokens; // prefill token
+        streamed.extend(s.step().unwrap().new_tokens);
+        streamed.extend(s.step().unwrap().new_tokens);
+        let ck = s.checkpoint().unwrap().expect("mid-flight checkpoint");
+        assert_eq!(ck.emitted, streamed);
+        let mut r = ScriptedSession::resumed(EngineKind::SpecPv, &req, 3, &ck);
+        while !r.is_finished() {
+            streamed.extend(r.step().unwrap().new_tokens);
+        }
+        assert_eq!(streamed, reference);
+        assert_eq!(Box::new(r).finish().tokens, reference);
     }
 
     #[test]

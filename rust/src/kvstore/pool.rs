@@ -34,6 +34,7 @@ use anyhow::{bail, Context, Result};
 use crate::backend::{copy_image_range, page_count, Backend, StateBuf, StateKind};
 use crate::config::KvQuant;
 use crate::kvstore::swap::SwapStore;
+use crate::util::rng::Rng;
 
 /// Index of a page slot within the pool.
 pub type PageId = u32;
@@ -144,6 +145,11 @@ struct PoolInner {
     budget: usize,
     reserved: usize,
     by_id: HashMap<u64, usize>,
+
+    // ---- fault injection (DESIGN.md §15; off by default) ----
+    /// probability that a spill read fails as if the blob were corrupt
+    corrupt_rate: f64,
+    fault_rng: Rng,
 
     // ---- counters ----
     allocs: u64,
@@ -395,6 +401,12 @@ impl PoolInner {
     }
 
     fn load_spilled(&mut self, id: PageId, key: u64) -> Result<PageData> {
+        // failpoint: fail the read as if the blob were corrupt, driving
+        // the same swap-fault recovery a real bad file would
+        if self.corrupt_rate > 0.0 && self.fault_rng.f64() < self.corrupt_rate {
+            self.swap_faults += 1;
+            bail!("kv spill page {id}: injected spill corruption (failpoint)");
+        }
         let len = self.slots[id as usize].len;
         let swap = self
             .swap
@@ -454,6 +466,8 @@ impl KvPool {
                 budget: budget_bytes,
                 reserved: 0,
                 by_id: HashMap::new(),
+                corrupt_rate: 0.0,
+                fault_rng: Rng::new(1),
                 allocs: 0,
                 page_allocs: 0,
                 dedup_hits: 0,
@@ -772,6 +786,19 @@ impl KvPool {
         Ok(())
     }
 
+    /// Arm the spill-corruption failpoint: each spill read fails with
+    /// probability `rate` as if the blob were corrupt, exercising the
+    /// coordinator's swap-fault recovery path (drop dormant session,
+    /// re-queue, deterministic replay). Off by default; `rate = 0`
+    /// disarms.
+    pub fn set_corrupt_faults(&self, rate: f64, seed: u64) {
+        let mut p = self.inner.borrow_mut();
+        p.corrupt_rate = rate;
+        // decorrelate from the coordinator's backend-error stream, which
+        // is seeded from the same spec
+        p.fault_rng = Rng::new(seed ^ 0x6b76_7370);
+    }
+
     /// Page-level residency gauges.
     pub fn stats(&self) -> PoolStats {
         let p = self.inner.borrow();
@@ -949,6 +976,56 @@ mod tests {
         assert!(format!("{err:#}").contains("spill"), "unexpected error: {err:#}");
         assert!(p.stats().swap_faults >= 1);
         p.free_state(&ps);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drain_racing_prefetch_leaves_nothing_parked() {
+        let dir = tmp("drainrace");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = KvPool::with_opts(0, 16, Some(&dir), KvQuant::None);
+        // spill, kick off an async prefetch, then free immediately while
+        // the prefetch may still be in flight — pages and spill files
+        // must fully drain, no blob parked by a late prefetch
+        for i in 0..30 {
+            let data: Vec<f32> = (0..9).map(|j| (i * 16 + j) as f32 + 0.5).collect();
+            let ps = p.park_image(StateKind::Full, "s", 128, &data, &[]);
+            p.park_cold(std::slice::from_ref(&ps)).unwrap();
+            p.prefetch(std::slice::from_ref(&ps));
+            p.free_state(&ps);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let s = p.stats();
+        assert_eq!(
+            (s.pages_resident, s.ram_bytes, s.disk_bytes),
+            (0, 0, 0),
+            "pool must drain to zero: {s:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_failpoint_fails_spill_reads_cleanly() {
+        let dir = tmp("failpoint");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = KvPool::with_opts(0, 16, Some(&dir), KvQuant::None);
+        let data: Vec<f32> = (0..9).map(|i| i as f32 + 1.0).collect();
+        let ps = p.park_image(StateKind::Full, "s", 128, &data, &[]);
+        p.park_cold(std::slice::from_ref(&ps)).unwrap();
+        p.set_corrupt_faults(1.0, 7);
+        let err = p.promote(std::slice::from_ref(&ps)).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("failpoint"),
+            "unexpected error: {err:#}"
+        );
+        assert!(p.stats().swap_faults >= 1);
+        // disarm: the on-disk blobs were never touched, so promote succeeds
+        p.set_corrupt_faults(0.0, 7);
+        p.promote(std::slice::from_ref(&ps)).unwrap();
+        let (d2, _) = p.read_image(&ps).unwrap();
+        assert_eq!(d2, data);
+        p.free_state(&ps);
+        assert_eq!(p.stats().pages_resident, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

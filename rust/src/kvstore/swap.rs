@@ -11,11 +11,25 @@
 //! Spill keys carry a per-slot generation tag so a freed-and-reused page
 //! id can never read a stale prefetched blob from its previous life.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
+
+/// State shared with the prefetch thread, under one lock. The prefetch
+/// thread reads spill files *outside* the lock, then re-checks `live`
+/// *inside* it before parking the blob: a `remove` racing an in-flight
+/// prefetch therefore always wins — the stale blob is dropped on the
+/// floor instead of parked in `blobs` forever (keys are generation-
+/// tagged, so a leaked blob would never be read again, only leaked).
+#[derive(Default)]
+struct PrefetchShared {
+    /// background-prefetched blobs, consumed by `read`
+    blobs: HashMap<u64, Vec<u8>>,
+    /// keys currently live on disk
+    live: HashSet<u64>,
+}
 
 pub struct SwapStore {
     dir: PathBuf,
@@ -23,8 +37,7 @@ pub struct SwapStore {
     /// spill key -> file bytes on disk
     files: HashMap<u64, usize>,
     bytes: usize,
-    /// background-prefetched blobs, consumed by `read`
-    prefetched: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    prefetched: Arc<Mutex<PrefetchShared>>,
     prefetches: u64,
 }
 
@@ -38,7 +51,7 @@ impl SwapStore {
             created: false,
             files: HashMap::new(),
             bytes: 0,
-            prefetched: Arc::new(Mutex::new(HashMap::new())),
+            prefetched: Arc::new(Mutex::new(PrefetchShared::default())),
             prefetches: 0,
         }
     }
@@ -61,7 +74,11 @@ impl SwapStore {
         }
         std::fs::write(self.path_of(key), blob)
             .with_context(|| format!("kv spill write {:?}", self.path_of(key)))?;
-        self.prefetched.lock().unwrap().remove(&key);
+        {
+            let mut p = self.prefetched.lock().unwrap();
+            p.blobs.remove(&key);
+            p.live.insert(key);
+        }
         if let Some(old) = self.files.insert(key, blob.len()) {
             self.bytes -= old;
         }
@@ -72,20 +89,24 @@ impl SwapStore {
     /// Read one encoded page back, consuming the prefetched copy when
     /// the background thread already pulled it in.
     pub fn read(&mut self, key: u64) -> Result<Vec<u8>> {
-        if let Some(blob) = self.prefetched.lock().unwrap().remove(&key) {
+        if let Some(blob) = self.prefetched.lock().unwrap().blobs.remove(&key) {
             return Ok(blob);
         }
         std::fs::read(self.path_of(key))
             .with_context(|| format!("kv spill read {:?}", self.path_of(key)))
     }
 
-    /// Drop a spilled page (page freed while cold).
+    /// Drop a spilled page (page freed while cold). Deregistering the
+    /// key from the live set under the lock guarantees that a prefetch
+    /// in flight for this key can never park its blob afterwards.
     pub fn remove(&mut self, key: u64) {
         if let Some(n) = self.files.remove(&key) {
             self.bytes -= n;
             let _ = std::fs::remove_file(self.path_of(key));
         }
-        self.prefetched.lock().unwrap().remove(&key);
+        let mut p = self.prefetched.lock().unwrap();
+        p.blobs.remove(&key);
+        p.live.remove(&key);
     }
 
     /// Start pulling `keys` into RAM on a background thread; `read`
@@ -98,14 +119,24 @@ impl SwapStore {
         }
         self.prefetches += keys.len() as u64;
         let dir = self.dir.clone();
-        let map = Arc::clone(&self.prefetched);
+        let shared = Arc::clone(&self.prefetched);
         std::thread::spawn(move || {
             for key in keys {
                 if let Ok(blob) = std::fs::read(dir.join(SwapStore::file_name(key))) {
-                    map.lock().unwrap().insert(key, blob);
+                    let mut p = shared.lock().unwrap();
+                    // a `remove` may have raced the file read — only park
+                    // blobs whose key is still live
+                    if p.live.contains(&key) {
+                        p.blobs.insert(key, blob);
+                    }
                 }
             }
         });
+    }
+
+    /// Blobs currently parked by the prefetch thread (leak checks).
+    pub fn prefetched_len(&self) -> usize {
+        self.prefetched.lock().unwrap().blobs.len()
     }
 
     /// Bytes currently on disk across all spilled pages.
@@ -170,6 +201,29 @@ mod tests {
         // read must succeed whether the prefetch thread won the race or not
         assert_eq!(s.read(1).unwrap(), b"abc");
         assert!(s.prefetches() >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn remove_racing_prefetch_never_parks_a_stale_blob() {
+        let dir = tmp("race");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = SwapStore::new(&dir);
+        // distinct key per round (real keys are generation-tagged, so a
+        // freed key is never reused); many rounds so both interleavings
+        // — blob parked before remove, and remove before park — occur
+        for key in 0..200u64 {
+            s.write(key, b"payload").unwrap();
+            s.prefetch(vec![key]);
+            s.remove(key);
+            // remove deregisters the key under the lock, so from here on
+            // the in-flight prefetch can never park this blob
+            assert_eq!(s.prefetched_len(), 0, "stale blob parked for key {key}");
+        }
+        // let stragglers finish, then re-check nothing landed late
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert_eq!(s.prefetched_len(), 0);
+        assert!(s.is_empty());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

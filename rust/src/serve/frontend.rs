@@ -12,10 +12,22 @@
 //! Backpressure: response lines queue in a per-connection outbox; a
 //! consumer that stops reading past `MAX_OUTBOX` buffered bytes is
 //! disconnected rather than ballooning memory. A closed connection's
-//! in-flight requests are cancelled on their shards so the routing table
+//! in-flight requests are cancelled on their shards — and its parked
+//! (queued-but-unrouted) requests released here — so the routing table
 //! and load accounting converge.
+//!
+//! Fault tolerance (DESIGN.md §15): the front end retains each admitted
+//! request (prompt + options + streaming progress) and the most recent
+//! failover checkpoint its shard shipped for it. On `ShardDown` it
+//! re-homes the dead shard's sessions onto live shards — resuming from
+//! the checkpoint when one exists, deterministically regenerating
+//! otherwise — or parks them until a shard comes back. Overload control:
+//! with `shard_queue > 0`, a generate whose target shard already carries
+//! that many in-flight sessions is shed with a structured
+//! `{"error":"overloaded","retry_after_ms":…}` line instead of queueing
+//! without bound.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
@@ -23,6 +35,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::config::EngineKind;
+use crate::engine::{GenRequest, SessionCheckpoint};
 use crate::json::Json;
 
 use super::router::Router;
@@ -74,13 +88,44 @@ struct AdminAgg {
     bodies: Vec<(usize, Json)>,
 }
 
+/// Everything needed to resubmit a request after its shard dies: the
+/// parsed request plus how much of its answer the client already has.
+struct Retained {
+    gen: GenRequest,
+    engine: Option<EngineKind>,
+    stream: bool,
+    deadline_secs: Option<f64>,
+    priority: i32,
+    /// absolute tokens already streamed to the client (dedup floor for
+    /// a failover resubmission)
+    streamed: usize,
+    /// the queued ack line already went out
+    acked: bool,
+    /// this request was displaced off a dead shard at least once
+    displaced: bool,
+}
+
+/// Routing-table entry for one admitted gid.
+struct RouteEntry {
+    /// owning shard; `None` while parked (every shard down)
+    shard: Option<usize>,
+    conn: ConnId,
+    retained: Retained,
+}
+
 struct Frontend {
     shards: Vec<ShardHandle>,
     router: Router,
     defaults: Defaults,
+    /// overload bound: shed when the target shard's in-flight load is
+    /// already this deep (0 = unbounded)
+    shard_queue: usize,
     conns: HashMap<ConnId, Conn>,
-    /// gid → (shard, owning connection)
-    routes: HashMap<Gid, (usize, ConnId)>,
+    routes: HashMap<Gid, RouteEntry>,
+    /// latest failover checkpoint per gid (front-end-owned; host data)
+    ckpts: HashMap<Gid, SessionCheckpoint>,
+    /// gids waiting for any shard to come back up
+    parked: VecDeque<Gid>,
     admin_pending: HashMap<u64, AdminAgg>,
     next_conn: ConnId,
     next_gid: Gid,
@@ -88,6 +133,11 @@ struct Frontend {
     draining: bool,
     drained: Vec<bool>,
     dead: Vec<ConnId>,
+    // observability counters (surfaced through `admin metrics`)
+    shed_requests: u64,
+    slow_consumer_disconnects: u64,
+    failover_checkpoint: u64,
+    failover_regen: u64,
 }
 
 /// Run the event-loop front end until drained (a `shutdown` op or the
@@ -98,14 +148,18 @@ pub fn run_frontend(
     ev_rx: Receiver<FrontEvent>,
     router: Router,
     defaults: Defaults,
+    shard_queue: usize,
 ) -> Result<()> {
     let n = shards.len();
     let fe = Frontend {
         shards,
         router,
         defaults,
+        shard_queue,
         conns: HashMap::new(),
         routes: HashMap::new(),
+        ckpts: HashMap::new(),
+        parked: VecDeque::new(),
         admin_pending: HashMap::new(),
         next_conn: 0,
         next_gid: 0,
@@ -113,6 +167,10 @@ pub fn run_frontend(
         draining: false,
         drained: vec![false; n],
         dead: Vec::new(),
+        shed_requests: 0,
+        slow_consumer_disconnects: 0,
+        failover_checkpoint: 0,
+        failover_regen: 0,
     };
     fe.run(listener, ev_rx)
 }
@@ -161,6 +219,28 @@ impl Frontend {
         // the Drain marker — channel order is the drain barrier
         for h in &self.shards {
             h.drain();
+        }
+        // parked requests have no shard to deliver their final line;
+        // fail them here
+        while let Some(gid) = self.parked.pop_front() {
+            self.fail_unrouted(gid, "server shutting down");
+        }
+    }
+
+    /// Terminal error line for a request that never reached (or lost)
+    /// its shard; releases all front-end state for the gid.
+    fn fail_unrouted(&mut self, gid: Gid, err: &str) {
+        self.ckpts.remove(&gid);
+        let Some(e) = self.routes.remove(&gid) else { return };
+        if let Some(c) = self.conns.get_mut(&e.conn) {
+            c.inflight.retain(|&g| g != gid);
+            c.push_line(
+                Json::obj()
+                    .set("ok", false)
+                    .set("id", gid as i64)
+                    .set("done", true)
+                    .set("error", err),
+            );
         }
     }
 
@@ -234,10 +314,35 @@ impl Frontend {
                 conn.push_line(Json::obj().set("ok", true));
                 self.begin_drain();
             }
-            Request::Cancel { id } => match self.routes.get(&id) {
+            Request::Cancel { id } => match self.routes.get(&id).and_then(|e| e.shard) {
                 // the owning shard answers after the final line, keeping
                 // the old final-then-ack ordering on the wire
-                Some(&(shard, _)) => self.shards[shard].cancel(id, cid),
+                Some(shard) => self.shards[shard].cancel(id, cid),
+                None if self.routes.contains_key(&id) => {
+                    // parked: no shard owns it — cancel here, final line
+                    // to the owner first, ack to the canceller after.
+                    // `conn` is detached from the map while its line is
+                    // handled, so route owner == canceller needs it
+                    // addressed directly.
+                    self.parked.retain(|&g| g != id);
+                    self.ckpts.remove(&id);
+                    if let Some(e) = self.routes.remove(&id) {
+                        let fin = Json::obj()
+                            .set("ok", true)
+                            .set("id", id as i64)
+                            .set("done", true)
+                            .set("cancelled", true)
+                            .set("text", "");
+                        if e.conn == cid {
+                            conn.inflight.retain(|&g| g != id);
+                            conn.push_line(fin);
+                        } else if let Some(c) = self.conns.get_mut(&e.conn) {
+                            c.inflight.retain(|&g| g != id);
+                            c.push_line(fin);
+                        }
+                    }
+                    conn.push_line(Json::obj().set("ok", true).set("cancelled", true));
+                }
                 None => conn.push_line(Json::obj().set("ok", true).set("cancelled", false)),
             },
             Request::Admin { cmd, legacy } => {
@@ -270,21 +375,121 @@ impl Frontend {
                     );
                     return;
                 }
-                let place = self.router.place(&gen.prompt);
+                // overload control: shed before admitting (no gid burned)
+                if !self.router.all_down() {
+                    let place = self.router.peek(&gen.prompt);
+                    if self.shard_queue > 0 && self.router.load(place.shard) >= self.shard_queue
+                    {
+                        let retry = 50 + 10 * self.router.load(place.shard) as u64;
+                        conn.push_line(
+                            Json::obj()
+                                .set("ok", false)
+                                .set("error", "overloaded")
+                                .set("retry_after_ms", retry as i64),
+                        );
+                        self.shed_requests += 1;
+                        return;
+                    }
+                }
                 let gid = self.next_gid;
                 self.next_gid += 1;
-                self.routes.insert(gid, (place.shard, cid));
-                conn.inflight.push(gid);
-                self.shards[place.shard].submit(SubmitReq {
-                    gid,
-                    conn: cid,
+                let retained = Retained {
                     gen,
                     engine,
                     stream,
                     deadline_secs,
                     priority,
-                });
+                    streamed: 0,
+                    acked: false,
+                    displaced: false,
+                };
+                conn.inflight.push(gid);
+                if self.router.all_down() {
+                    // hold until a shard restarts
+                    self.routes.insert(gid, RouteEntry { shard: None, conn: cid, retained });
+                    self.parked.push_back(gid);
+                    return;
+                }
+                let place = self.router.place(&retained.gen.prompt);
+                self.routes
+                    .insert(gid, RouteEntry { shard: Some(place.shard), conn: cid, retained });
+                self.submit_to(place.shard, gid, None);
             }
+        }
+    }
+
+    /// Build a [`SubmitReq`] from the retained request state and send it.
+    fn submit_to(&mut self, shard: usize, gid: Gid, resume: Option<SessionCheckpoint>) {
+        let Some(e) = self.routes.get(&gid) else { return };
+        self.shards[shard].submit(SubmitReq {
+            gid,
+            conn: e.conn,
+            gen: e.retained.gen.clone(),
+            engine: e.retained.engine,
+            stream: e.retained.stream,
+            deadline_secs: e.retained.deadline_secs,
+            priority: e.retained.priority,
+            resume: resume.map(Box::new),
+            skip_tokens: e.retained.streamed,
+            ack_sent: e.retained.acked,
+        });
+    }
+
+    /// Re-place one displaced or parked gid on a live shard, resuming
+    /// from its retained checkpoint when one exists.
+    fn resubmit(&mut self, gid: Gid) {
+        let Some(e) = self.routes.get(&gid) else { return };
+        let place = self.router.place(&e.retained.gen.prompt);
+        if let Some(e) = self.routes.get_mut(&gid) {
+            e.shard = Some(place.shard);
+        }
+        let resume = self.ckpts.get(&gid).cloned();
+        let displaced = self.routes.get(&gid).map(|e| e.retained.displaced).unwrap_or(false);
+        if resume.is_some() {
+            self.failover_checkpoint += 1;
+        } else if displaced {
+            self.failover_regen += 1;
+        }
+        self.submit_to(place.shard, gid, resume);
+    }
+
+    /// A shard's generation died: exclude it from routing, fail its
+    /// sessions over to live shards (or park them), then release the
+    /// supervisor's restart barrier.
+    fn handle_shard_down(&mut self, dead: usize) {
+        self.router.set_down(dead, true);
+        let mut gids: Vec<Gid> = self
+            .routes
+            .iter()
+            .filter(|(_, e)| e.shard == Some(dead))
+            .map(|(&g, _)| g)
+            .collect();
+        gids.sort_unstable();
+        for gid in gids {
+            self.router.finished(dead);
+            if self.draining {
+                // no live shard will re-run it during a drain; fail it
+                self.fail_unrouted(gid, &format!("shard {dead} failed during drain"));
+                continue;
+            }
+            if let Some(e) = self.routes.get_mut(&gid) {
+                e.retained.displaced = true;
+                if self.router.all_down() {
+                    e.shard = None;
+                    self.parked.push_back(gid);
+                } else {
+                    self.resubmit(gid);
+                }
+            }
+        }
+        // barrier: the supervisor may restart the generation only after
+        // every failed-over session has left the dead shard's queue
+        self.shards[dead].failover_done();
+        if self.draining {
+            // the pre-death Drain marker died with the generation;
+            // re-issue it so the restarted (or dead-ended) shard still
+            // reports Drained
+            self.shards[dead].drain();
         }
     }
 
@@ -299,8 +504,34 @@ impl Frontend {
             FrontEvent::Terminal { conn, shard, gid } => {
                 self.router.finished(shard);
                 self.routes.remove(&gid);
+                self.ckpts.remove(&gid);
                 if let Some(c) = self.conns.get_mut(&conn) {
                     c.inflight.retain(|&g| g != gid);
+                }
+            }
+            FrontEvent::Checkpoint { gid, ck } => {
+                // latest wins; dropped if the request already finished
+                if self.routes.contains_key(&gid) {
+                    self.ckpts.insert(gid, *ck);
+                }
+            }
+            FrontEvent::Progress { gid, tokens } => {
+                if let Some(e) = self.routes.get_mut(&gid) {
+                    e.retained.streamed = tokens;
+                }
+            }
+            FrontEvent::Acked { gid } => {
+                if let Some(e) = self.routes.get_mut(&gid) {
+                    e.retained.acked = true;
+                }
+            }
+            // supervisor-ledger bookkeeping only
+            FrontEvent::CancelDone { .. } => {}
+            FrontEvent::ShardDown { shard } => self.handle_shard_down(shard),
+            FrontEvent::ShardUp { shard } => {
+                self.router.set_down(shard, false);
+                while let Some(gid) = self.parked.pop_front() {
+                    self.resubmit(gid);
                 }
             }
             FrontEvent::Admin { corr, shard, body } => {
@@ -330,7 +561,9 @@ impl Frontend {
 
     /// Assemble the final admin response from the per-shard bodies: a
     /// verbatim pass-through at one shard, the documented merge above it,
-    /// and the structured per-shard dump for `cmd:"shards"`.
+    /// and the structured per-shard dump for `cmd:"shards"`. Metrics gain
+    /// the front-end-owned counters (routing, shedding, failover) that no
+    /// shard can see.
     fn render_admin(&self, mut agg: AdminAgg) -> (ConnId, Json) {
         agg.bodies.sort_by_key(|(s, _)| *s);
         let body = if agg.cmd == AdminCmd::Shards {
@@ -350,7 +583,19 @@ impl Frontend {
                 .set("per_shard", per_shard)
         } else {
             let bodies: Vec<Json> = agg.bodies.into_iter().map(|(_, b)| b).collect();
-            wire::merge_admin(&bodies)
+            let merged = wire::merge_admin(&bodies);
+            if agg.cmd == AdminCmd::Metrics {
+                merged
+                    .set("routed_away", self.router.routed_away() as i64)
+                    .set("shed_requests", self.shed_requests as i64)
+                    .set("slow_consumer_disconnects", self.slow_consumer_disconnects as i64)
+                    .set("failover_checkpoint", self.failover_checkpoint as i64)
+                    .set("failover_regen", self.failover_regen as i64)
+                    .set("parked_requests", self.parked.len())
+                    .set("retained_checkpoints", self.ckpts.len())
+            } else {
+                merged
+            }
         };
         let body = if agg.legacy {
             body.set("deprecated", true)
@@ -390,19 +635,28 @@ impl Frontend {
                     "server: disconnecting slow consumer (conn {cid}, {} bytes buffered)",
                     conn.outbox_len()
                 );
+                self.slow_consumer_disconnects += 1;
                 self.dead.push(cid);
             }
         }
     }
 
-    /// Drop closed connections; cancel their in-flight requests on the
-    /// owning shards so every gid still reaches its Terminal event.
+    /// Drop closed connections; cancel their routed in-flight requests
+    /// on the owning shards (every gid still reaches its Terminal event)
+    /// and release their parked — queued-but-unrouted — requests, which
+    /// no shard will ever answer for.
     fn reap(&mut self) {
         while let Some(cid) = self.dead.pop() {
             let Some(conn) = self.conns.remove(&cid) else { continue };
             for gid in conn.inflight {
-                if let Some(&(shard, _)) = self.routes.get(&gid) {
-                    self.shards[shard].cancel(gid, cid);
+                match self.routes.get(&gid).map(|e| e.shard) {
+                    Some(Some(shard)) => self.shards[shard].cancel(gid, cid),
+                    Some(None) => {
+                        self.routes.remove(&gid);
+                        self.ckpts.remove(&gid);
+                        self.parked.retain(|&g| g != gid);
+                    }
+                    None => {}
                 }
             }
         }

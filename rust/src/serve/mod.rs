@@ -25,11 +25,13 @@
 pub mod frontend;
 pub mod router;
 pub mod shard;
+pub mod supervisor;
 pub mod wire;
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::thread;
 
 use anyhow::{anyhow, Context, Result};
@@ -38,11 +40,12 @@ use crate::backend::{self, Backend};
 use crate::config::Config;
 use crate::coordinator::Coordinator;
 use crate::engine::scripted::ScriptedFactory;
-use crate::json::Json;
+use crate::util::failpoint::FaultSpec;
 
 use frontend::run_frontend;
 use router::Router;
 use shard::{FrontEvent, ShardCmd, ShardHandle};
+use supervisor::{ShardRuntime, SupervisorCfg};
 use wire::Defaults;
 
 /// Process-wide drain flag, set by the Ctrl-C handler (or
@@ -117,11 +120,14 @@ pub fn serve_on(listener: TcpListener, mut coord: Coordinator<'_>) -> Result<()>
         temperature: coord.cfg.temperature,
     };
     let router = Router::new(1, coord.cfg.route_imbalance);
+    let shard_queue = coord.cfg.shard_queue;
     let (cmd_tx, cmd_rx) = channel::<ShardCmd>();
     let (ev_tx, ev_rx) = channel::<FrontEvent>();
     let handles = vec![ShardHandle::new(0, cmd_tx)];
     thread::scope(|s| {
-        let fe = s.spawn(move || run_frontend(listener, handles, ev_rx, router, defaults));
+        let fe = s.spawn(move || {
+            run_frontend(listener, handles, ev_rx, router, defaults, shard_queue)
+        });
         shard::run_shard(0, &mut coord, cmd_rx, ev_tx);
         fe.join()
             .unwrap_or_else(|_| Err(anyhow!("front end panicked")))
@@ -130,64 +136,61 @@ pub fn serve_on(listener: TcpListener, mut coord: Coordinator<'_>) -> Result<()>
     Ok(())
 }
 
-/// Multi-shard serve: shard 0 on the caller's backend (and thread),
-/// shards 1..N on their own threads with backends built from the same
-/// config. A shard whose backend fails to start degrades to an
-/// error-answering stub so routed clients and admin fan-ins never hang.
-fn serve_sharded(listener: TcpListener, be: &dyn Backend, cfg: Config) -> Result<()> {
-    let n = cfg.shards;
-    let defaults = Defaults {
-        max_new: cfg.max_new_tokens,
-        temperature: cfg.temperature,
-    };
-    let router = Router::new(n, cfg.route_imbalance);
-    let (ev_tx, ev_rx) = channel::<FrontEvent>();
-    let mut handles = Vec::with_capacity(n);
-    let mut rxs = Vec::with_capacity(n);
-    for i in 0..n {
-        let (tx, rx) = channel::<ShardCmd>();
-        handles.push(ShardHandle::new(i, tx));
-        rxs.push(rx);
-    }
-    let mut rx_iter = rxs.into_iter();
-    let rx0 = rx_iter.next().expect("shards >= 2 here");
-    let mut coord0 = Coordinator::new(be, cfg.clone());
-    thread::scope(|s| {
-        for (off, rx) in rx_iter.enumerate() {
-            let shard_id = off + 1;
-            let cfgc = cfg.clone();
-            let tx = ev_tx.clone();
-            s.spawn(move || match backend::from_config(&cfgc) {
-                Ok(be) => {
-                    let mut coord = Coordinator::new(be.as_ref(), cfgc);
-                    shard::run_shard(shard_id, &mut coord, rx, tx);
-                    println!("shard {shard_id} metrics: {}", coord.registry.summary());
-                }
-                Err(e) => {
-                    eprintln!("shard {shard_id}: backend start failed: {e:#}");
-                    run_dead_shard(shard_id, format!("{e:#}"), rx, tx);
-                }
-            });
-        }
-        let fe = s.spawn(move || run_frontend(listener, handles, ev_rx, router, defaults));
-        shard::run_shard(0, &mut coord0, rx0, ev_tx);
-        fe.join()
-            .unwrap_or_else(|_| Err(anyhow!("front end panicked")))
-    })?;
-    println!("shard 0 metrics: {}", coord0.registry.summary());
-    Ok(())
+/// Multi-shard serve: every shard is **supervised** (DESIGN.md §15) —
+/// its generation runs on a disposable thread that builds its own
+/// backend from the config, so a crashed or wedged shard restarts with
+/// its in-flight sessions failed over. The caller's backend is used for
+/// the banner only; supervised generations must own theirs.
+fn serve_sharded(listener: TcpListener, _be: &dyn Backend, cfg: Config) -> Result<()> {
+    let runtime = backend_runtime(&cfg);
+    serve_supervised(listener, cfg, runtime)
 }
 
-/// Serve a multi-shard scripted server for tests: every shard gets its
-/// own coordinator over a clone of `factory`; the front end runs on the
-/// caller's thread. Returns once drained (a `shutdown` op).
-pub fn serve_scripted(listener: TcpListener, cfg: Config, factory: ScriptedFactory) -> Result<()> {
+/// A [`ShardRuntime`] that builds a backend (and coordinator) from the
+/// config inside each generation.
+pub fn backend_runtime(cfg: &Config) -> ShardRuntime {
+    let cfg = cfg.clone();
+    Arc::new(move |shard, cmd_rx, ev_tx, opts| {
+        let be = backend::from_config(&cfg)?;
+        let mut coord = Coordinator::new(be.as_ref(), cfg.clone());
+        shard::run_shard_with(shard, &mut coord, cmd_rx, ev_tx, opts);
+        println!("shard {shard} metrics: {}", coord.registry.summary());
+        Ok(())
+    })
+}
+
+/// A [`ShardRuntime`] over a scripted factory (tests, load simulation).
+pub fn scripted_runtime(cfg: &Config, factory: ScriptedFactory) -> ShardRuntime {
+    let cfg = cfg.clone();
+    Arc::new(move |shard, cmd_rx, ev_tx, opts| {
+        let mut coord = Coordinator::with_factory(cfg.clone(), Box::new(factory.clone()));
+        shard::run_shard_with(shard, &mut coord, cmd_rx, ev_tx, opts);
+        Ok(())
+    })
+}
+
+/// Serve with one supervisor per shard on an already-bound listener.
+/// The front end runs on the caller's thread; each supervisor spawns
+/// (and respawns) its shard's generation from `runtime`. Returns once
+/// drained.
+pub fn serve_supervised(
+    listener: TcpListener,
+    cfg: Config,
+    runtime: ShardRuntime,
+) -> Result<()> {
     let n = cfg.shards.max(1);
     let defaults = Defaults {
         max_new: cfg.max_new_tokens,
         temperature: cfg.temperature,
     };
     let router = Router::new(n, cfg.route_imbalance);
+    let sup = SupervisorCfg {
+        heartbeat_ms: cfg.shard_heartbeat_ms,
+        max_restarts: cfg.max_restarts,
+        checkpoint_every: cfg.checkpoint_every_steps,
+        faults: FaultSpec::parse(&cfg.faults).unwrap_or_default(),
+    };
+    let shard_queue = cfg.shard_queue;
     let (ev_tx, ev_rx) = channel::<FrontEvent>();
     let mut handles = Vec::with_capacity(n);
     let mut rxs = Vec::with_capacity(n);
@@ -198,59 +201,21 @@ pub fn serve_scripted(listener: TcpListener, cfg: Config, factory: ScriptedFacto
     }
     thread::scope(|s| {
         for (i, rx) in rxs.into_iter().enumerate() {
-            let cfgc = cfg.clone();
-            let f = factory.clone();
             let tx = ev_tx.clone();
-            s.spawn(move || {
-                let mut coord = Coordinator::with_factory(cfgc, Box::new(f));
-                shard::run_shard(i, &mut coord, rx, tx);
-            });
+            let rt = Arc::clone(&runtime);
+            let supc = sup.clone();
+            s.spawn(move || supervisor::supervise_shard(i, supc, rx, tx, rt));
         }
         drop(ev_tx);
-        run_frontend(listener, handles, ev_rx, router, defaults)
+        run_frontend(listener, handles, ev_rx, router, defaults, shard_queue)
     })
 }
 
-/// Stand-in loop for a shard whose backend failed to start: answers
-/// every command with an error (or a negative ack) so the front end's
-/// routing table and admin fan-ins stay live, then reports drained.
-fn run_dead_shard(
-    shard: usize,
-    err: String,
-    cmd_rx: Receiver<ShardCmd>,
-    ev_tx: Sender<FrontEvent>,
-) {
-    while let Ok(cmd) = cmd_rx.recv() {
-        match cmd {
-            ShardCmd::Submit(sr) => {
-                let _ = ev_tx.send(FrontEvent::Line {
-                    conn: sr.conn,
-                    line: wire::line_of(
-                        Json::obj()
-                            .set("ok", false)
-                            .set("error", format!("shard {shard} unavailable: {err}")),
-                    ),
-                });
-                let _ = ev_tx.send(FrontEvent::Terminal {
-                    conn: sr.conn,
-                    shard,
-                    gid: sr.gid,
-                });
-            }
-            ShardCmd::Cancel { gid: _, conn } => {
-                let _ = ev_tx.send(FrontEvent::Line {
-                    conn,
-                    line: wire::line_of(Json::obj().set("ok", true).set("cancelled", false)),
-                });
-            }
-            ShardCmd::Admin { corr, cmd: _ } => {
-                let body = Json::obj()
-                    .set("ok", false)
-                    .set("error", format!("shard {shard} unavailable: {err}"));
-                let _ = ev_tx.send(FrontEvent::Admin { corr, shard, body });
-            }
-            ShardCmd::Drain => break,
-        }
-    }
-    let _ = ev_tx.send(FrontEvent::Drained { shard });
+/// Serve a multi-shard scripted server for tests: every shard gets its
+/// own (supervised) coordinator over a clone of `factory`; the front
+/// end runs on the caller's thread. Returns once drained (a `shutdown`
+/// op).
+pub fn serve_scripted(listener: TcpListener, cfg: Config, factory: ScriptedFactory) -> Result<()> {
+    let runtime = scripted_runtime(&cfg, factory);
+    serve_supervised(listener, cfg, runtime)
 }

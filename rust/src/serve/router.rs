@@ -49,8 +49,11 @@ pub struct Router {
     load: Vec<usize>,
     /// sessions placed per shard (lifetime counter)
     placed: Vec<u64>,
-    /// sessions spilled off their home shard by the imbalance rule
+    /// sessions spilled off their home shard by the imbalance rule (or
+    /// re-homed off a down shard)
     routed_away: u64,
+    /// shards excluded from placement (dead or mid-failover)
+    down: Vec<bool>,
 }
 
 impl Router {
@@ -60,6 +63,7 @@ impl Router {
             load: vec![0; shards.max(1)],
             placed: vec![0; shards.max(1)],
             routed_away: 0,
+            down: vec![false; shards.max(1)],
         }
     }
 
@@ -67,37 +71,70 @@ impl Router {
         self.load.len()
     }
 
+    /// Exclude (or re-include) a shard from placement. Down shards keep
+    /// their load accounting — their in-flight sessions are re-homed by
+    /// the front end's failover path, which decrements as it goes.
+    pub fn set_down(&mut self, shard: usize, down: bool) {
+        if let Some(d) = self.down.get_mut(shard) {
+            *d = down;
+        }
+    }
+
+    pub fn is_down(&self, shard: usize) -> bool {
+        self.down.get(shard).copied().unwrap_or(false)
+    }
+
+    /// No shard can take a placement right now.
+    pub fn all_down(&self) -> bool {
+        self.down.iter().all(|&d| d)
+    }
+
     /// The deterministic prefix-affinity home shard for a prompt:
-    /// rendezvous hash of the fingerprint against each shard index, so a
-    /// given prefix maps to the same shard at a fixed shard count and
-    /// reshuffles minimally when the count changes.
+    /// rendezvous hash of the fingerprint against each live shard index,
+    /// so a given prefix maps to the same shard at a fixed shard count,
+    /// reshuffles minimally when the count changes, and re-homes
+    /// deterministically while its home shard is down.
     pub fn home(&self, prompt: &[u32]) -> usize {
         let fp = fingerprint(prompt);
         (0..self.load.len())
+            .filter(|&s| !self.down[s])
             .max_by_key(|&s| {
                 geom_hash(&[&fp.to_le_bytes(), &(s as u64).to_le_bytes()])
             })
             .unwrap_or(0)
     }
 
-    /// Place a session: its home shard, unless the imbalance rule spills
-    /// it to the least-loaded shard. Increments the chosen shard's load.
-    pub fn place(&mut self, prompt: &[u32]) -> Placement {
+    /// The placement `place` would make, without committing it — the
+    /// front end's overload check inspects the target shard's queue
+    /// depth before deciding to admit or shed.
+    pub fn peek(&self, prompt: &[u32]) -> Placement {
         let home = self.home(prompt);
         let min = (0..self.load.len())
+            .filter(|&s| !self.down[s])
             .min_by_key(|&s| self.load[s])
             .unwrap_or(home);
         let spill = (self.load[home] + 1) as f64
             > self.imbalance * ((self.load[min] + 1) as f64);
-        let shard = if spill {
-            self.routed_away += 1;
-            min
-        } else {
-            home
-        };
-        self.load[shard] += 1;
-        self.placed[shard] += 1;
+        let shard = if spill { min } else { home };
         Placement { shard, home }
+    }
+
+    /// Commit a placement from `peek`: load + lifetime counters (a
+    /// session landing off its home shard counts as routed away).
+    pub fn commit(&mut self, p: Placement) {
+        if p.shard != p.home {
+            self.routed_away += 1;
+        }
+        self.load[p.shard] += 1;
+        self.placed[p.shard] += 1;
+    }
+
+    /// Place a session: its home shard, unless the imbalance rule spills
+    /// it to the least-loaded shard. Increments the chosen shard's load.
+    pub fn place(&mut self, prompt: &[u32]) -> Placement {
+        let p = self.peek(prompt);
+        self.commit(p);
+        p
     }
 
     /// A placed session reached a terminal state on `shard`.
@@ -184,6 +221,42 @@ mod tests {
         r.finished(home);
         let third = r.place(&p);
         assert_eq!(third.shard, home);
+    }
+
+    #[test]
+    fn down_shards_are_excluded_and_rejoin() {
+        let mut r = Router::new(3, 100.0);
+        let p = prompt(11, 200);
+        let home = r.home(&p);
+        r.set_down(home, true);
+        assert!(r.is_down(home));
+        let rehomed = r.home(&p);
+        assert_ne!(rehomed, home, "down shard must not be a home");
+        // deterministic re-home: same prefix, same fallback shard
+        assert_eq!(r.home(&p), rehomed);
+        let placed = r.place(&p);
+        assert_ne!(placed.shard, home);
+        assert!(!r.all_down());
+        r.set_down((home + 1) % 3, true);
+        r.set_down((home + 2) % 3, true);
+        assert!(r.all_down());
+        // back up: affinity restored
+        r.set_down(home, false);
+        r.set_down((home + 1) % 3, false);
+        r.set_down((home + 2) % 3, false);
+        assert_eq!(r.home(&p), home);
+    }
+
+    #[test]
+    fn peek_does_not_commit() {
+        let mut r = Router::new(2, 2.0);
+        let p = prompt(9, 200);
+        let a = r.peek(&p);
+        let b = r.peek(&p);
+        assert_eq!(a, b, "peek must be pure");
+        assert_eq!(r.load(a.shard), 0);
+        r.commit(a);
+        assert_eq!(r.load(a.shard), 1);
     }
 
     #[test]

@@ -13,11 +13,13 @@
 //! accounting exact.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 
 use crate::config::EngineKind;
 use crate::coordinator::{Coordinator, Event, RequestId, RequestState, SubmitOpts};
-use crate::engine::GenRequest;
+use crate::engine::{GenRequest, SessionCheckpoint};
 use crate::json::Json;
 use crate::tokenizer;
 
@@ -38,6 +40,15 @@ pub struct SubmitReq {
     pub stream: bool,
     pub deadline_secs: Option<f64>,
     pub priority: i32,
+    /// failover resume point: the last checkpoint taken on the dead
+    /// shard (None → deterministic regeneration from the prompt)
+    pub resume: Option<Box<SessionCheckpoint>>,
+    /// tokens the client already received in deltas before failover —
+    /// re-emitted tokens below this absolute index are suppressed so the
+    /// client's concatenated stream stays byte-identical
+    pub skip_tokens: usize,
+    /// the queued ack line already went out before the shard died
+    pub ack_sent: bool,
 }
 
 /// Commands a shard consumes (front end → shard).
@@ -48,6 +59,10 @@ pub enum ShardCmd {
     Cancel { gid: Gid, conn: ConnId },
     /// admin subcommand; the body fans back in under correlation id `corr`
     Admin { corr: u64, cmd: AdminCmd },
+    /// the front end finished re-homing a dead shard's sessions — the
+    /// supervisor may now restart the generation (barrier that prevents
+    /// a restarted shard double-executing failed-over requests)
+    FailoverDone,
     /// stop admitting, run the in-flight set dry, then exit the loop
     Drain,
 }
@@ -60,6 +75,21 @@ pub enum FrontEvent {
     Terminal { conn: ConnId, shard: usize, gid: Gid },
     /// one shard's admin body for fan-in under `corr`
     Admin { corr: u64, shard: usize, body: Json },
+    /// periodic failover checkpoint for gid (front-end-owned storage)
+    Checkpoint { gid: Gid, ck: Box<SessionCheckpoint> },
+    /// `tokens` deltas have been emitted to gid's client so far —
+    /// the front end's `skip_tokens` for a later failover
+    Progress { gid: Gid, tokens: usize },
+    /// the queued ack line for gid went out (suppress it after failover)
+    Acked { gid: Gid },
+    /// a cancel ack for gid went out (supervisor ledger bookkeeping;
+    /// the front end ignores it)
+    CancelDone { gid: Gid },
+    /// the shard's generation died; the front end must re-home its
+    /// in-flight sessions and answer with `FailoverDone`
+    ShardDown { shard: usize },
+    /// a restarted generation is accepting submits again
+    ShardUp { shard: usize },
     /// the shard drained and exited its loop
     Drained { shard: usize },
 }
@@ -98,6 +128,62 @@ impl ShardHandle {
     pub fn drain(&self) {
         let _ = self.cmd_tx.send(ShardCmd::Drain);
     }
+
+    pub fn failover_done(&self) {
+        let _ = self.cmd_tx.send(ShardCmd::FailoverDone);
+    }
+}
+
+/// Liveness pulse a supervised shard ticks every loop iteration. The
+/// supervisor reads it to distinguish a wedged backend (busy, beats
+/// frozen) from an idle shard blocked on its command channel.
+#[derive(Default)]
+pub struct Pulse {
+    pub beats: AtomicU64,
+    /// inside `Coordinator::tick` (device work) right now
+    pub busy: AtomicBool,
+}
+
+/// One-shot failpoint trigger: armed once by the supervisor, fired at
+/// most once across all generation incarnations of a shard (a restarted
+/// generation must not re-fire the fault that killed its predecessor).
+#[derive(Clone)]
+pub struct OneShot {
+    armed: Arc<AtomicBool>,
+    pub value: u64,
+}
+
+impl OneShot {
+    pub fn new(value: u64) -> OneShot {
+        OneShot { armed: Arc::new(AtomicBool::new(true)), value }
+    }
+
+    /// Consume the trigger; true exactly once.
+    pub fn fire(&self) -> bool {
+        self.armed.swap(false, Ordering::SeqCst)
+    }
+
+    pub fn is_armed(&self) -> bool {
+        self.armed.load(Ordering::SeqCst)
+    }
+}
+
+/// Supervision/failpoint options for a shard loop; `Default` is the
+/// plain unsupervised loop (exactly the pre-supervision behavior).
+#[derive(Default, Clone)]
+pub struct ShardOpts {
+    /// liveness pulse shared with the supervisor
+    pub pulse: Option<Arc<Pulse>>,
+    /// panic the loop after this many routed `Step` events (one-shot)
+    pub panic_after_steps: Option<OneShot>,
+    /// stall one tick for this many ms (one-shot; with a heartbeat
+    /// configured this reads as a wedged backend)
+    pub slow_op_ms: Option<OneShot>,
+    /// checkpoint streak: snapshot each session every N of its scheduler
+    /// steps for failover (0 = off)
+    pub checkpoint_every: usize,
+    /// restart count carried into this incarnation's registry
+    pub restarts: u64,
 }
 
 /// Per-request reply routing held by the shard loop.
@@ -105,6 +191,12 @@ struct PendingReq {
     gid: Gid,
     conn: ConnId,
     stream: bool,
+    /// absolute index of the next token a `Step` event will carry
+    /// (checkpoint-resumed sessions start past the preloaded tokens)
+    next_abs: usize,
+    /// suppress delta tokens below this absolute index (already
+    /// delivered before a failover)
+    skip: usize,
 }
 
 /// The shard device loop: drain commands, tick the scheduler, emit
@@ -117,9 +209,26 @@ pub fn run_shard(
     cmd_rx: Receiver<ShardCmd>,
     ev_tx: Sender<FrontEvent>,
 ) {
+    run_shard_with(shard, coord, cmd_rx, ev_tx, ShardOpts::default());
+}
+
+/// [`run_shard`] with supervision hooks: a liveness pulse, periodic
+/// failover checkpoints, and the shard-level failpoints (DESIGN.md §15).
+pub fn run_shard_with(
+    shard: usize,
+    coord: &mut Coordinator<'_>,
+    cmd_rx: Receiver<ShardCmd>,
+    ev_tx: Sender<FrontEvent>,
+    opts: ShardOpts,
+) {
     let mut pending: HashMap<RequestId, PendingReq> = HashMap::new();
     let mut draining = false;
+    let mut steps_routed: u64 = 0;
+    coord.registry.restarts = opts.restarts;
     loop {
+        if let Some(p) = &opts.pulse {
+            p.beats.fetch_add(1, Ordering::SeqCst);
+        }
         // block when there is nothing to schedule, drain otherwise
         if coord.idle() && !draining {
             match cmd_rx.recv() {
@@ -144,8 +253,56 @@ pub fn run_shard(
         if draining && coord.idle() {
             break;
         }
-        for ev in coord.tick() {
+        if let Some(p) = &opts.pulse {
+            p.busy.store(true, Ordering::SeqCst);
+        }
+        // failpoint: one wedged tick — under a configured heartbeat the
+        // supervisor declares this generation dead and fails over
+        if let Some(slow) = &opts.slow_op_ms {
+            // only stall real work — an idle tick would fire the
+            // failpoint before any request is in flight
+            if !coord.idle() && slow.fire() {
+                std::thread::sleep(std::time::Duration::from_millis(slow.value));
+            }
+        }
+        let evs = coord.tick();
+        if let Some(p) = &opts.pulse {
+            p.busy.store(false, Ordering::SeqCst);
+        }
+        let mut panic_due = false;
+        for ev in evs {
+            // capture before route_event consumes the event
+            let ck_due = match &ev {
+                Event::Step { id, step, finished: false, .. }
+                    if opts.checkpoint_every > 0 && *step % opts.checkpoint_every == 0 =>
+                {
+                    Some(*id)
+                }
+                _ => None,
+            };
+            let is_step = matches!(ev, Event::Step { .. });
             route_event(shard, ev, coord, &mut pending, &ev_tx);
+            if let Some(id) = ck_due {
+                if let (Some(ck), Some(p)) = (coord.checkpoint(id), pending.get(&id)) {
+                    let _ = ev_tx
+                        .send(FrontEvent::Checkpoint { gid: p.gid, ck: Box::new(ck) });
+                }
+            }
+            if is_step {
+                steps_routed += 1;
+                if let Some(panic_at) = &opts.panic_after_steps {
+                    if panic_at.is_armed() && steps_routed >= panic_at.value {
+                        panic_due = true;
+                    }
+                }
+            }
+        }
+        if panic_due {
+            if let Some(panic_at) = &opts.panic_after_steps {
+                if panic_at.fire() {
+                    panic!("failpoint: shard_panic after {steps_routed} steps");
+                }
+            }
         }
     }
     coord.sync_backend_counters();
@@ -168,9 +325,9 @@ fn handle_cmd(
                 deadline_secs: sr.deadline_secs,
                 priority: sr.priority,
             };
-            match coord.submit_opts(sr.gen, opts) {
+            match coord.submit_failover(sr.gen, opts, sr.resume.map(|b| *b)) {
                 Ok(local) => {
-                    if sr.stream {
+                    if sr.stream && !sr.ack_sent {
                         // ack with the id so the client can cancel
                         send_line(
                             ev_tx,
@@ -181,10 +338,17 @@ fn handle_cmd(
                                 .set("stream", true)
                                 .set("queued", true),
                         );
+                        let _ = ev_tx.send(FrontEvent::Acked { gid: sr.gid });
                     }
                     pending.insert(
                         local,
-                        PendingReq { gid: sr.gid, conn: sr.conn, stream: sr.stream },
+                        PendingReq {
+                            gid: sr.gid,
+                            conn: sr.conn,
+                            stream: sr.stream,
+                            next_abs: 0,
+                            skip: sr.skip_tokens,
+                        },
                     );
                 }
                 Err(e) => {
@@ -211,11 +375,12 @@ fn handle_cmd(
                 if let Some(l) = local {
                     if let Some(p) = pending.remove(&l) {
                         // final line (with the partial text) first, ack after
-                        send_final(shard, l, &p, coord, ev_tx);
+                        send_final(shard, l, &p, coord, ev_tx, false);
                     }
                 }
             }
             send_line(ev_tx, conn, Json::obj().set("ok", true).set("cancelled", cancelled));
+            let _ = ev_tx.send(FrontEvent::CancelDone { gid });
         }
         ShardCmd::Admin { corr, cmd } => {
             let body = match cmd {
@@ -226,6 +391,9 @@ fn handle_cmd(
             };
             let _ = ev_tx.send(FrontEvent::Admin { corr, shard, body });
         }
+        // the barrier only matters to a supervisor waiting to restart; a
+        // live generation has nothing to do with it
+        ShardCmd::FailoverDone => {}
         ShardCmd::Drain => {
             *draining = true;
             for ev in coord.begin_drain() {
@@ -261,31 +429,64 @@ fn route_event(
         // re-queues the request — are scheduler-internal (output is
         // unaffected); operators observe them through the admin ops.
         // Draining is emitted by begin_drain, never by tick.
-        Event::Started { .. }
-        | Event::SwappedOut { .. }
+        Event::SwappedOut { .. }
         | Event::Resumed { .. }
         | Event::SwapFault { .. }
         | Event::Draining { .. } => {}
+        Event::Started { id } => {
+            // a checkpoint resume preloads tokens the client already
+            // has; future Step events index past them (a failed resume
+            // regenerated instead, so resumed_tokens reads 0 and the
+            // skip filter alone dedups the re-emitted prefix). `Started`
+            // also fires when a SwapFault re-queued the session for a
+            // fresh run mid-incarnation: raise the skip watermark to
+            // everything delivered so far so the deterministic re-run's
+            // prefix is suppressed rather than duplicated on the wire.
+            if let Some(p) = pending.get_mut(&id) {
+                p.skip = p.skip.max(p.next_abs);
+                p.next_abs = coord.get(id).map(|tr| tr.resumed_tokens).unwrap_or(0);
+            }
+        }
         Event::Step { id, new_tokens, step, .. } => {
-            if let Some(p) = pending.get(&id) {
+            if let Some(p) = pending.get_mut(&id) {
+                let base = p.next_abs;
+                p.next_abs += new_tokens.len();
                 if p.stream && !new_tokens.is_empty() {
-                    send_line(
-                        ev_tx,
-                        p.conn,
-                        Json::obj()
-                            .set("ok", true)
-                            .set("id", p.gid as i64)
-                            .set("stream", true)
-                            .set("step", step)
-                            .set("delta", tokenizer::decode(&new_tokens))
-                            .set("done", false),
-                    );
+                    // drop tokens the client received before failover
+                    let fresh: Vec<u32> = new_tokens
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, _)| base + j >= p.skip)
+                        .map(|(_, &t)| t)
+                        .collect();
+                    if !fresh.is_empty() {
+                        send_line(
+                            ev_tx,
+                            p.conn,
+                            Json::obj()
+                                .set("ok", true)
+                                .set("id", p.gid as i64)
+                                .set("stream", true)
+                                .set("step", step)
+                                .set("delta", tokenizer::decode(&fresh))
+                                .set("done", false),
+                        );
+                        let _ = ev_tx.send(FrontEvent::Progress {
+                            gid: p.gid,
+                            tokens: p.next_abs.max(p.skip),
+                        });
+                    }
                 }
             }
         }
         Event::Finished { id } | Event::Cancelled { id } | Event::Failed { id, .. } => {
             if let Some(p) = pending.remove(&id) {
-                send_final(shard, id, &p, coord, ev_tx);
+                send_final(shard, id, &p, coord, ev_tx, false);
+            }
+        }
+        Event::DeadlineExceeded { id } => {
+            if let Some(p) = pending.remove(&id) {
+                send_final(shard, id, &p, coord, ev_tx, true);
             }
         }
     }
@@ -300,6 +501,7 @@ fn send_final(
     p: &PendingReq,
     coord: &Coordinator<'_>,
     ev_tx: &Sender<FrontEvent>,
+    deadline: bool,
 ) {
     let resp = match coord.get(local) {
         None => Json::obj().set("ok", false).set("error", "request vanished"),
@@ -328,11 +530,18 @@ fn send_final(
                 .set("done", true)
                 .set("cancelled", true)
                 .set("text", r.as_ref().map(|r| r.text()).unwrap_or_default()),
-            (RequestState::Failed(e), _) => Json::obj()
-                .set("ok", false)
-                .set("id", p.gid as i64)
-                .set("done", true)
-                .set("error", e.as_str()),
+            (RequestState::Failed(e), _) => {
+                let j = Json::obj()
+                    .set("ok", false)
+                    .set("id", p.gid as i64)
+                    .set("done", true)
+                    .set("error", e.as_str());
+                if deadline {
+                    j.set("deadline_exceeded", true)
+                } else {
+                    j
+                }
+            }
             _ => Json::obj()
                 .set("ok", false)
                 .set("id", p.gid as i64)

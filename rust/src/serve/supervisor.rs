@@ -1,0 +1,443 @@
+//! Shard supervision (DESIGN.md §15): each shard's device loop runs as a
+//! disposable **generation** on a detached thread, watched by a
+//! supervisor that owns the shard's command/event channels. The
+//! supervisor proxies both directions — commands forwarded to the live
+//! generation, events relayed to the shared front-end channel — so when
+//! a generation dies (panic, backend start failure, or a wedged backend
+//! caught by the heartbeat) the supervisor can:
+//!
+//! 1. relay everything the dead generation still delivered (per-sender
+//!    FIFO keeps shard-local ordering exact),
+//! 2. answer its outstanding admin/cancel commands so fan-ins never
+//!    hang,
+//! 3. announce [`FrontEvent::ShardDown`] and wait for the front end's
+//!    [`ShardCmd::FailoverDone`] barrier (the front end re-homes the
+//!    shard's in-flight sessions from their last checkpoints — the
+//!    barrier is what stops a restarted generation from double-executing
+//!    them),
+//! 4. restart a fresh generation with exponential backoff, bounded by
+//!    `max_restarts`, degrading to an error-answering stub beyond that.
+//!
+//! A wedged generation cannot be killed (threads are cooperative), so it
+//! is **abandoned**: the supervisor drops its event receiver — every
+//! late send fails silently, so a zombie can never corrupt the wire —
+//! and its command sender, which makes the zombie drain and exit on its
+//! own if it ever un-wedges.
+
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::json::Json;
+use crate::util::failpoint::FaultSpec;
+
+use super::shard::{ConnId, FrontEvent, Gid, OneShot, Pulse, ShardCmd, ShardOpts};
+use super::wire;
+
+/// Builds and runs one shard generation: construct the backend and
+/// coordinator *inside* the call (backend handles are not `Send`, so
+/// each incarnation owns a fresh one) and drive the shard loop to
+/// drain. An `Err` means the generation could not start — the
+/// supervisor treats it like a crash.
+pub type ShardRuntime = Arc<
+    dyn Fn(usize, Receiver<ShardCmd>, Sender<FrontEvent>, ShardOpts) -> Result<()>
+        + Send
+        + Sync,
+>;
+
+/// Supervision parameters, lifted from the serving `Config`.
+#[derive(Clone)]
+pub struct SupervisorCfg {
+    /// declare a generation wedged when it sits busy inside a tick with
+    /// a frozen pulse for this long (0 = heartbeat off)
+    pub heartbeat_ms: u64,
+    /// generation restarts before the shard degrades to a dead stub
+    pub max_restarts: usize,
+    /// checkpoint cadence forwarded to the shard loop (steps, 0 = off)
+    pub checkpoint_every: usize,
+    /// failpoint spec; the shard-scoped one-shots (`shard_panic@step`,
+    /// `slow_op_ms`) are armed here so they fire once per shard, not
+    /// once per incarnation
+    pub faults: FaultSpec,
+}
+
+struct GenShared {
+    done: AtomicBool,
+    panicked: AtomicBool,
+}
+
+/// One live (or dying) generation of a shard.
+struct Generation {
+    shared: Arc<GenShared>,
+    pulse: Arc<Pulse>,
+    cmd_tx: Option<Sender<ShardCmd>>,
+    ev_rx: Receiver<FrontEvent>,
+    join: Option<thread::JoinHandle<()>>,
+    last_beats: u64,
+    beats_changed: Instant,
+}
+
+/// Commands awaiting an answer from the current generation; on death the
+/// supervisor answers them itself so nothing upstream hangs.
+#[derive(Default)]
+struct Ledger {
+    /// outstanding admin correlation ids
+    admins: HashSet<u64>,
+    /// outstanding cancels: gid → canceller's connection
+    cancels: HashMap<Gid, ConnId>,
+}
+
+fn track_event(ev: &FrontEvent, ledger: &mut Ledger) {
+    match ev {
+        FrontEvent::Admin { corr, .. } => {
+            ledger.admins.remove(corr);
+        }
+        FrontEvent::CancelDone { gid } => {
+            ledger.cancels.remove(gid);
+        }
+        _ => {}
+    }
+}
+
+fn spawn_generation(
+    shard: usize,
+    runtime: &ShardRuntime,
+    panic_shot: &Option<OneShot>,
+    slow_shot: &Option<OneShot>,
+    checkpoint_every: usize,
+    restarts: u64,
+) -> Generation {
+    let (cmd_tx, cmd_rx) = channel::<ShardCmd>();
+    let (gen_ev_tx, ev_rx) = channel::<FrontEvent>();
+    let pulse = Arc::new(Pulse::default());
+    let shared = Arc::new(GenShared {
+        done: AtomicBool::new(false),
+        panicked: AtomicBool::new(false),
+    });
+    let opts = ShardOpts {
+        pulse: Some(Arc::clone(&pulse)),
+        panic_after_steps: panic_shot.clone(),
+        slow_op_ms: slow_shot.clone(),
+        checkpoint_every,
+        restarts,
+    };
+    let rt = Arc::clone(runtime);
+    let sh = Arc::clone(&shared);
+    let join = thread::spawn(move || {
+        let outcome = catch_unwind(AssertUnwindSafe(|| rt(shard, cmd_rx, gen_ev_tx, opts)));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                eprintln!("[supervisor] shard {shard} generation failed to start: {e:#}");
+                sh.panicked.store(true, Ordering::SeqCst);
+            }
+            Err(_) => {
+                // the default panic hook already printed the message
+                sh.panicked.store(true, Ordering::SeqCst);
+            }
+        }
+        sh.done.store(true, Ordering::SeqCst);
+    });
+    Generation {
+        shared,
+        pulse,
+        cmd_tx: Some(cmd_tx),
+        ev_rx,
+        join: Some(join),
+        last_beats: 0,
+        beats_changed: Instant::now(),
+    }
+}
+
+/// Is the current generation dead? Covers a finished thread that
+/// panicked (or failed to start) and — with a heartbeat configured — a
+/// wedge: busy inside a tick with a frozen pulse past the timeout.
+fn is_dead(shard: usize, gen: &mut Generation, heartbeat_ms: u64) -> bool {
+    if gen.shared.done.load(Ordering::SeqCst) {
+        return gen.shared.panicked.load(Ordering::SeqCst);
+    }
+    if heartbeat_ms > 0 {
+        let beats = gen.pulse.beats.load(Ordering::SeqCst);
+        if beats != gen.last_beats {
+            gen.last_beats = beats;
+            gen.beats_changed = Instant::now();
+        } else if gen.pulse.busy.load(Ordering::SeqCst)
+            && gen.beats_changed.elapsed() >= Duration::from_millis(heartbeat_ms)
+        {
+            eprintln!(
+                "[supervisor] shard {shard}: generation wedged for {heartbeat_ms}ms, \
+                 abandoning it"
+            );
+            return true;
+        }
+    }
+    false
+}
+
+enum DeathOutcome {
+    /// barrier passed; restart (or degrade) per the restart budget
+    Restart,
+    /// a drain arrived during failover: report drained and exit
+    Drain,
+    /// the front end is gone; exit quietly
+    FrontendGone,
+}
+
+/// Tear down a dead generation: relay its remaining events, answer its
+/// outstanding commands, announce `ShardDown`, and hold new commands off
+/// until the front end's `FailoverDone` barrier.
+fn handle_death(
+    shard: usize,
+    gen: Generation,
+    ledger: &mut Ledger,
+    cmd_rx: &Receiver<ShardCmd>,
+    ev_tx: &Sender<FrontEvent>,
+) -> DeathOutcome {
+    // deliver everything the generation produced before dying — FIFO per
+    // sender, so the front end sees a clean prefix of the shard's stream
+    while let Ok(ev) = gen.ev_rx.try_recv() {
+        track_event(&ev, ledger);
+        if matches!(ev, FrontEvent::Drained { .. }) {
+            continue;
+        }
+        let _ = ev_tx.send(ev);
+    }
+    if gen.shared.done.load(Ordering::SeqCst) {
+        if let Some(j) = gen.join {
+            let _ = j.join();
+        }
+    }
+    // a wedged zombie keeps running, but its event receiver dies here —
+    // every late send fails silently — and dropping cmd_tx makes it
+    // drain and exit on its own if it ever un-wedges
+    // (`gen` partially moved above, remaining fields drop at scope end)
+
+    // answer what the dead generation left hanging
+    let corrs: Vec<u64> = ledger.admins.drain().collect();
+    for corr in corrs {
+        let body = Json::obj()
+            .set("ok", false)
+            .set("error", format!("shard {shard} restarting"));
+        let _ = ev_tx.send(FrontEvent::Admin { corr, shard, body });
+    }
+    let cancels: Vec<(Gid, ConnId)> = ledger.cancels.drain().collect();
+    for (_gid, conn) in cancels {
+        let _ = ev_tx.send(FrontEvent::Line {
+            conn,
+            line: wire::line_of(Json::obj().set("ok", true).set("cancelled", false)),
+        });
+    }
+    let _ = ev_tx.send(FrontEvent::ShardDown { shard });
+    // barrier: the front end re-homes this shard's sessions (checkpoint
+    // failover or deterministic regeneration) before we restart
+    let mut drain_requested = false;
+    loop {
+        match cmd_rx.recv() {
+            Ok(ShardCmd::FailoverDone) => break,
+            // raced submits were sent before the front end saw ShardDown;
+            // re-homing covers them, so they are dropped here
+            Ok(ShardCmd::Submit(_)) => {}
+            Ok(ShardCmd::Cancel { gid: _, conn }) => {
+                let _ = ev_tx.send(FrontEvent::Line {
+                    conn,
+                    line: wire::line_of(
+                        Json::obj().set("ok", true).set("cancelled", false),
+                    ),
+                });
+            }
+            Ok(ShardCmd::Admin { corr, cmd: _ }) => {
+                let body = Json::obj()
+                    .set("ok", false)
+                    .set("error", format!("shard {shard} restarting"));
+                let _ = ev_tx.send(FrontEvent::Admin { corr, shard, body });
+            }
+            Ok(ShardCmd::Drain) => drain_requested = true,
+            Err(_) => return DeathOutcome::FrontendGone,
+        }
+    }
+    if drain_requested {
+        DeathOutcome::Drain
+    } else {
+        DeathOutcome::Restart
+    }
+}
+
+/// Supervise one shard until drained: spawn a generation, proxy
+/// commands and events, and run the death → failover → restart state
+/// machine described in the module docs.
+pub fn supervise_shard(
+    shard: usize,
+    sup: SupervisorCfg,
+    cmd_rx: Receiver<ShardCmd>,
+    ev_tx: Sender<FrontEvent>,
+    runtime: ShardRuntime,
+) {
+    let panic_shot = sup.faults.shard_panic_step.map(OneShot::new);
+    let slow_shot = (sup.faults.slow_op_ms > 0).then(|| OneShot::new(sup.faults.slow_op_ms));
+    let mut restarts: u64 = 0;
+    let mut ledger = Ledger::default();
+    let mut gen = spawn_generation(
+        shard,
+        &runtime,
+        &panic_shot,
+        &slow_shot,
+        sup.checkpoint_every,
+        restarts,
+    );
+    let mut frontend_gone = false;
+    loop {
+        // 1. relay generation events
+        let mut exited_clean = false;
+        while let Ok(ev) = gen.ev_rx.try_recv() {
+            track_event(&ev, &mut ledger);
+            let drained = matches!(ev, FrontEvent::Drained { .. });
+            let _ = ev_tx.send(ev);
+            if drained {
+                exited_clean = true;
+                break;
+            }
+        }
+        if exited_clean
+            || (gen.shared.done.load(Ordering::SeqCst)
+                && !gen.shared.panicked.load(Ordering::SeqCst))
+        {
+            // every send happened before `done` was set — relay the tail
+            // (the Drained marker included) so the front end never hangs
+            while let Ok(ev) = gen.ev_rx.try_recv() {
+                track_event(&ev, &mut ledger);
+                let _ = ev_tx.send(ev);
+            }
+            if let Some(j) = gen.join.take() {
+                let _ = j.join();
+            }
+            return;
+        }
+        // 2. death check → failover → restart or degrade
+        if is_dead(shard, &mut gen, sup.heartbeat_ms) {
+            match handle_death(shard, gen, &mut ledger, &cmd_rx, &ev_tx) {
+                DeathOutcome::FrontendGone => return,
+                DeathOutcome::Drain => {
+                    let _ = ev_tx.send(FrontEvent::Drained { shard });
+                    return;
+                }
+                DeathOutcome::Restart => {
+                    restarts += 1;
+                    if restarts as usize > sup.max_restarts {
+                        eprintln!(
+                            "[supervisor] shard {shard}: restart budget exhausted \
+                             ({} restarts), degrading to dead stub",
+                            sup.max_restarts
+                        );
+                        run_dead_shard(
+                            shard,
+                            format!(
+                                "restart budget exhausted ({} restarts)",
+                                sup.max_restarts
+                            ),
+                            cmd_rx,
+                            ev_tx,
+                        );
+                        return;
+                    }
+                    let backoff = 50u64.saturating_mul(1u64 << (restarts - 1).min(5));
+                    thread::sleep(Duration::from_millis(backoff.min(2000)));
+                    eprintln!(
+                        "[supervisor] shard {shard}: restarting generation \
+                         (attempt {restarts}/{})",
+                        sup.max_restarts
+                    );
+                    gen = spawn_generation(
+                        shard,
+                        &runtime,
+                        &panic_shot,
+                        &slow_shot,
+                        sup.checkpoint_every,
+                        restarts,
+                    );
+                    let _ = ev_tx.send(FrontEvent::ShardUp { shard });
+                    continue;
+                }
+            }
+        }
+        // 3. pump commands to the generation
+        match cmd_rx.recv_timeout(Duration::from_millis(1)) {
+            Ok(cmd) => {
+                match &cmd {
+                    ShardCmd::Admin { corr, .. } => {
+                        ledger.admins.insert(*corr);
+                    }
+                    ShardCmd::Cancel { gid, conn } => {
+                        ledger.cancels.insert(*gid, *conn);
+                    }
+                    _ => {}
+                }
+                if let Some(tx) = &gen.cmd_tx {
+                    let _ = tx.send(cmd);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                if !frontend_gone {
+                    frontend_gone = true;
+                    // dropping the generation's sender makes its loop see
+                    // a disconnect and drain on its own
+                    gen.cmd_tx = None;
+                }
+                thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+/// Stand-in loop for a shard that can no longer run (backend start
+/// failure past the restart budget): answers every command with an error
+/// (or a negative ack) so the front end's routing table and admin
+/// fan-ins stay live, then reports drained.
+pub fn run_dead_shard(
+    shard: usize,
+    err: String,
+    cmd_rx: Receiver<ShardCmd>,
+    ev_tx: Sender<FrontEvent>,
+) {
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            ShardCmd::Submit(sr) => {
+                let _ = ev_tx.send(FrontEvent::Line {
+                    conn: sr.conn,
+                    line: wire::line_of(
+                        Json::obj()
+                            .set("ok", false)
+                            .set("error", format!("shard {shard} unavailable: {err}")),
+                    ),
+                });
+                let _ = ev_tx.send(FrontEvent::Terminal {
+                    conn: sr.conn,
+                    shard,
+                    gid: sr.gid,
+                });
+            }
+            ShardCmd::Cancel { gid, conn } => {
+                let _ = ev_tx.send(FrontEvent::Line {
+                    conn,
+                    line: wire::line_of(Json::obj().set("ok", true).set("cancelled", false)),
+                });
+                let _ = ev_tx.send(FrontEvent::CancelDone { gid });
+            }
+            ShardCmd::Admin { corr, cmd: _ } => {
+                let body = Json::obj()
+                    .set("ok", false)
+                    .set("error", format!("shard {shard} unavailable: {err}"));
+                let _ = ev_tx.send(FrontEvent::Admin { corr, shard, body });
+            }
+            ShardCmd::FailoverDone => {}
+            ShardCmd::Drain => break,
+        }
+    }
+    let _ = ev_tx.send(FrontEvent::Drained { shard });
+}

@@ -115,7 +115,14 @@ pub fn parse_request(raw: &str, defaults: &Defaults) -> Result<Request> {
             let seed = req.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
             let stream =
                 req.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
-            let deadline_secs = req.get("deadline_s").and_then(|x| x.as_f64());
+            // timeout_ms (the documented spelling) takes precedence over
+            // the older deadline_s; both land in the same scheduler
+            // deadline
+            let deadline_secs = req
+                .get("timeout_ms")
+                .and_then(|x| x.as_f64())
+                .map(|ms| ms / 1000.0)
+                .or_else(|| req.get("deadline_s").and_then(|x| x.as_f64()));
             let priority =
                 req.get("priority").and_then(|x| x.as_i64()).unwrap_or(0) as i32;
             Ok(Request::Generate {
@@ -175,6 +182,9 @@ pub fn metrics_body(coord: &mut Coordinator<'_>) -> Json {
         .set("batched_frac", reg.batched_frac())
         .set("ttft_p50_s", reg.ttft.p50())
         .set("ttft_p99_s", reg.ttft.p99())
+        .set("deadline_hits", reg.deadline_hits as i64)
+        .set("restarts", reg.restarts as i64)
+        .set("checkpoint_resumes", reg.checkpoint_resumes as i64)
 }
 
 /// The `admin cache` body: prefix cache + swap-tier aggregates.
@@ -354,6 +364,26 @@ mod tests {
         assert_eq!(m.get("page_bytes").and_then(|x| x.as_i64()), Some(4096));
         assert_eq!(m.get("summary").and_then(|x| x.as_str()), Some("a | b"));
         assert_eq!(m.get("backend").and_then(|x| x.as_str()), Some("reference"));
+    }
+
+    #[test]
+    fn timeout_ms_maps_to_the_deadline() {
+        let d = Defaults { max_new: 8, temperature: 0.0 };
+        let r = parse_request(r#"{"prompt":"x","timeout_ms":250}"#, &d).unwrap();
+        match r {
+            Request::Generate { deadline_secs, .. } => {
+                assert_eq!(deadline_secs, Some(0.25))
+            }
+            _ => panic!("expected generate"),
+        }
+        let r = parse_request(r#"{"prompt":"x","timeout_ms":1500,"deadline_s":9.0}"#, &d)
+            .unwrap();
+        match r {
+            Request::Generate { deadline_secs, .. } => {
+                assert_eq!(deadline_secs, Some(1.5), "timeout_ms wins over deadline_s")
+            }
+            _ => panic!("expected generate"),
+        }
     }
 
     #[test]

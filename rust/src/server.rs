@@ -10,7 +10,11 @@
 //!
 //! Protocol: one JSON object per line (see DESIGN.md §"Serving protocol").
 //!   → {"op":"generate","prompt":"...","max_new":128,"engine":"spec_pv",
-//!      "temperature":0.0,"seed":0,"deadline_s":30.0}
+//!      "temperature":0.0,"seed":0,"timeout_ms":30000}
+//!     (`timeout_ms` is the per-request deadline; the older `deadline_s`
+//!      spelling still parses and loses to `timeout_ms` when both are
+//!      present. A request that overruns it gets one final line with
+//!      "deadline_exceeded":true and its KV pages are freed.)
 //!   ← {"ok":true,"id":0,"done":true,"text":"...","tokens":57,
 //!      "tok_per_s":31.2,"tau":2.9,"ttft_s":0.21,"steps":19,
 //!      "modes":{"full":1,"partial":12,"refresh":3}}
@@ -50,6 +54,13 @@
 //!
 //! `generate` also accepts `"priority":N` — under KV-byte pressure the
 //! coordinator swaps out the lowest-priority active session first.
+//!
+//! Overload control: with `--shard-queue N`, a generate bound for a
+//! shard already carrying N in-flight sessions is shed immediately with
+//! ← {"ok":false,"error":"overloaded","retry_after_ms":M} — no id is
+//! assigned and no final line follows; clients should back off at least
+//! `retry_after_ms` (plus jitter) and resend. The [`Client`]'s
+//! `*_retry` helpers implement that loop.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -60,6 +71,31 @@ use crate::backend::Backend;
 use crate::config::Config;
 use crate::coordinator::Coordinator;
 use crate::json::Json;
+use crate::util::rng::Rng;
+
+/// Attempt cap for the [`Client`] retry helpers: the last attempt's
+/// response is returned whatever it says.
+const RETRY_ATTEMPTS: usize = 16;
+
+/// Backoff cap between retry attempts.
+const RETRY_MAX_MS: u64 = 500;
+
+/// Whether a response line is the structured overload rejection.
+fn overloaded(j: &Json) -> bool {
+    j.get("error").and_then(|x| x.as_str()) == Some("overloaded")
+}
+
+/// Sleep out the server's `retry_after_ms` hint plus up to 100% jitter
+/// (decorrelates a thundering herd of shed clients), capped.
+fn backoff(rng: &mut Rng, j: &Json) {
+    let base = j
+        .get("retry_after_ms")
+        .and_then(|x| x.as_f64())
+        .map(|ms| ms.max(1.0) as u64)
+        .unwrap_or(50);
+    let wait = (base + rng.below(base.max(1) as usize) as u64).min(RETRY_MAX_MS);
+    std::thread::sleep(std::time::Duration::from_millis(wait));
+}
 
 /// Serve until drained (a `shutdown` op or Ctrl-C) on the configured
 /// address. Delegates to [`crate::serve::serve`].
@@ -163,6 +199,52 @@ impl Client {
             }
             steps.push(j);
         }
+    }
+
+    /// [`Client::generate`] with retry on the structured overload
+    /// rejection: honors the server's `retry_after_ms` with seeded
+    /// jitter, gives up (returning the rejection) after
+    /// [`RETRY_ATTEMPTS`]. Resubmission is safe — a shed request was
+    /// never admitted (no id, no partial output).
+    pub fn generate_retry(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        engine: &str,
+        seed: u64,
+    ) -> Result<Json> {
+        let mut rng = Rng::new(seed ^ 0x7265_7472_79);
+        let mut last = self.generate(prompt, max_new, engine)?;
+        for _ in 1..RETRY_ATTEMPTS {
+            if !overloaded(&last) {
+                break;
+            }
+            backoff(&mut rng, &last);
+            last = self.generate(prompt, max_new, engine)?;
+        }
+        Ok(last)
+    }
+
+    /// [`Client::generate_stream`] with the same overload retry loop;
+    /// collected step lines reset on every attempt (a shed request
+    /// streamed nothing).
+    pub fn generate_stream_retry(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        engine: &str,
+        seed: u64,
+    ) -> Result<(Vec<Json>, Json)> {
+        let mut rng = Rng::new(seed ^ 0x7265_7472_79);
+        let mut last = self.generate_stream(prompt, max_new, engine)?;
+        for _ in 1..RETRY_ATTEMPTS {
+            if !overloaded(&last.1) {
+                break;
+            }
+            backoff(&mut rng, &last.1);
+            last = self.generate_stream(prompt, max_new, engine)?;
+        }
+        Ok(last)
     }
 
     pub fn cancel(&mut self, id: u64) -> Result<Json> {

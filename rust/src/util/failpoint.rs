@@ -1,0 +1,137 @@
+//! Fault-injection failpoints (DESIGN.md §15).
+//!
+//! A [`FaultSpec`] is parsed from the `faults` config key (`--faults`
+//! flag) and threaded — always compiled in, config-gated, off by
+//! default — through the places failures actually happen in production:
+//! backend dispatch (`backend_err_rate`), the swap tier's spill decode
+//! path (`swap_corrupt_rate`), and the shard device loops (`shard_panic`
+//! and `slow_op_ms`). The grammar is a comma-separated key list:
+//!
+//! ```text
+//! shard_panic@step=40,backend_err_rate=0.01,swap_corrupt_rate=0.05,slow_op_ms=200
+//! ```
+//!
+//! * `shard_panic@step=N` — panic the shard loop after it has routed N
+//!   step events (one-shot per shard: a restarted shard does not
+//!   re-fire, which is what lets recovery tests converge).
+//! * `backend_err_rate=P` — each scheduler step fails with probability
+//!   `P` ("injected backend error"); the request terminates `ok:false`
+//!   and a retrying client resubmits it.
+//! * `swap_corrupt_rate=P` — each spill read-back fails with
+//!   probability `P`, exercising the recoverable `SwapFault`
+//!   re-queue-and-replay path.
+//! * `slow_op_ms=T` — one-shot `T` ms stall inside the shard loop while
+//!   it is marked busy, tripping the heartbeat wedge detector.
+//! * `seed=S` — seed for the probabilistic injections (default 1).
+//!
+//! Probabilistic rates draw from a dedicated [`crate::util::rng::Rng`]
+//! stream so injection never perturbs generation randomness.
+
+use anyhow::{bail, Result};
+
+/// Parsed `faults` spec. `Default` is everything off.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    /// panic the shard loop once, after routing this many step events
+    pub shard_panic_step: Option<u64>,
+    /// probability a scheduler step fails with an injected backend error
+    pub backend_err_rate: f64,
+    /// probability a spill read-back reports corruption
+    pub swap_corrupt_rate: f64,
+    /// one-shot busy stall in the shard loop, milliseconds
+    pub slow_op_ms: u64,
+    /// seed for the probabilistic injections
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// Parse the comma-separated failpoint grammar. Empty input is the
+    /// all-off spec; unknown keys and malformed values are errors so a
+    /// typo in `--faults` cannot silently disable a chaos run.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec { seed: 1, ..FaultSpec::default() };
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            match part.split_once('=') {
+                Some(("shard_panic@step", v)) => {
+                    spec.shard_panic_step = Some(parse_u64("shard_panic@step", v)?);
+                }
+                Some(("backend_err_rate", v)) => {
+                    spec.backend_err_rate = parse_rate("backend_err_rate", v)?;
+                }
+                Some(("swap_corrupt_rate", v)) => {
+                    spec.swap_corrupt_rate = parse_rate("swap_corrupt_rate", v)?;
+                }
+                Some(("slow_op_ms", v)) => {
+                    spec.slow_op_ms = parse_u64("slow_op_ms", v)?;
+                }
+                Some(("seed", v)) => spec.seed = parse_u64("seed", v)?,
+                _ => bail!("unknown failpoint '{part}'"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// True when no failpoint is armed (the production fast path).
+    pub fn is_off(&self) -> bool {
+        self.shard_panic_step.is_none()
+            && self.backend_err_rate == 0.0
+            && self.swap_corrupt_rate == 0.0
+            && self.slow_op_ms == 0
+    }
+}
+
+fn parse_u64(key: &str, v: &str) -> Result<u64> {
+    v.parse::<u64>()
+        .map_err(|_| anyhow::anyhow!("failpoint {key}: bad integer '{v}'"))
+}
+
+fn parse_rate(key: &str, v: &str) -> Result<f64> {
+    let p: f64 = v
+        .parse()
+        .map_err(|_| anyhow::anyhow!("failpoint {key}: bad rate '{v}'"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("failpoint {key}: rate {p} outside [0, 1]");
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_off() {
+        let s = FaultSpec::parse("").unwrap();
+        assert!(s.is_off());
+        assert!(FaultSpec::default().is_off());
+    }
+
+    #[test]
+    fn full_grammar() {
+        let s = FaultSpec::parse(
+            "shard_panic@step=40,backend_err_rate=0.01,swap_corrupt_rate=0.05,slow_op_ms=200",
+        )
+        .unwrap();
+        assert_eq!(s.shard_panic_step, Some(40));
+        assert!((s.backend_err_rate - 0.01).abs() < 1e-12);
+        assert!((s.swap_corrupt_rate - 0.05).abs() < 1e-12);
+        assert_eq!(s.slow_op_ms, 200);
+        assert_eq!(s.seed, 1);
+        assert!(!s.is_off());
+    }
+
+    #[test]
+    fn whitespace_and_seed() {
+        let s = FaultSpec::parse(" slow_op_ms=5 , seed=9 ").unwrap();
+        assert_eq!(s.slow_op_ms, 5);
+        assert_eq!(s.seed, 9);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(FaultSpec::parse("nope=1").is_err());
+        assert!(FaultSpec::parse("slow_op_ms").is_err());
+        assert!(FaultSpec::parse("backend_err_rate=2.0").is_err());
+        assert!(FaultSpec::parse("shard_panic@step=abc").is_err());
+    }
+}

@@ -7,6 +7,7 @@
 //! thread pool's chunked parallel-for keeps kernel results byte-identical
 //! at any thread count).
 
+pub mod failpoint;
 pub mod pool;
 pub mod proptest;
 pub mod rng;

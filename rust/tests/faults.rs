@@ -1,0 +1,437 @@
+//! Fault-tolerance acceptance tests (DESIGN.md §15): forced shard
+//! panics mid-stream with byte-identical completion on both failover
+//! paths (checkpoint resume and deterministic regeneration), deadline
+//! and overload control producing exactly one structured terminal line,
+//! dead-connection reaping of parked requests, and a 256-client chaos
+//! soak under active failpoints with zero lost or duplicated wire
+//! lines and a drained KV pool.
+
+use std::collections::HashSet;
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use specpv::config::{Config, EngineKind};
+use specpv::coordinator::Coordinator;
+use specpv::engine::scripted::ScriptedFactory;
+use specpv::engine::GenRequest;
+use specpv::json::Json;
+use specpv::serve::serve_scripted;
+use specpv::server::Client;
+use specpv::tokenizer;
+
+/// Drive one request through a bare coordinator to completion — the
+/// undisturbed pin every failover path must match byte for byte.
+fn direct_run(factory: ScriptedFactory, cfg: Config, prompt: &str, max_new: usize) -> String {
+    let mut coord = Coordinator::with_factory(cfg, Box::new(factory));
+    let req = GenRequest::greedy(tokenizer::encode(prompt), max_new);
+    let id = coord.submit(req, Some(EngineKind::SpecPv)).unwrap();
+    while !coord.idle() {
+        coord.tick();
+    }
+    let tr = coord.get(id).unwrap();
+    tr.result.as_ref().expect("direct run must complete").text()
+}
+
+fn delta_concat(steps: &[Json]) -> String {
+    steps.iter().filter_map(|j| j.get("delta").and_then(|x| x.as_str())).collect()
+}
+
+fn num(j: &Json, key: &str) -> i64 {
+    j.get(key).and_then(|x| x.as_i64()).unwrap_or_else(|| panic!("{key} missing: {j:?}"))
+}
+
+/// A shard panic mid-stream fails the session over to the restarted
+/// shard via its last periodic checkpoint; the client's stream resumes
+/// where it left off and the final text is byte-identical to an
+/// undisturbed run.
+#[test]
+fn checkpoint_failover_resumes_byte_identical() {
+    let factory = ScriptedFactory { tokens_per_step: 2, ..ScriptedFactory::default() };
+    let want = direct_run(factory.clone(), Config::default(), "failover pin alpha", 40);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = Config {
+        shards: 1,
+        checkpoint_every_steps: 2,
+        faults: "shard_panic@step=6".into(),
+        ..Config::default()
+    };
+    let server = thread::spawn(move || serve_scripted(listener, cfg, factory));
+
+    let mut cl = Client::connect(&addr).unwrap();
+    let (steps, fin) = cl.generate_stream("failover pin alpha", 40, "spec_pv").unwrap();
+    assert_eq!(fin.get("ok").and_then(|x| x.as_bool()), Some(true), "{fin:?}");
+    assert_eq!(fin.get("tokens").and_then(|x| x.as_usize()), Some(40));
+    assert_eq!(fin.get("text").and_then(|x| x.as_str()), Some(want.as_str()));
+    // zero lost or duplicated lines across the failover
+    assert_eq!(delta_concat(&steps), want);
+
+    let m = cl.admin("metrics").unwrap();
+    assert_eq!(num(&m, "restarts"), 1, "{m:?}");
+    assert_eq!(num(&m, "checkpoint_resumes"), 1, "{m:?}");
+    assert_eq!(num(&m, "failover_checkpoint"), 1, "{m:?}");
+    assert_eq!(num(&m, "failover_regen"), 0, "{m:?}");
+    assert_eq!(num(&m, "deadline_hits"), 0, "{m:?}");
+    assert_eq!(num(&m, "parked_requests"), 0, "{m:?}");
+    assert_eq!(num(&m, "retained_checkpoints"), 0, "{m:?}");
+    cl.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+/// With checkpointing off, failover deterministically regenerates from
+/// the prompt; the already-delivered prefix is suppressed, not
+/// duplicated, and the final text still matches the undisturbed run.
+#[test]
+fn regenerate_failover_is_byte_identical() {
+    let factory = ScriptedFactory { tokens_per_step: 2, ..ScriptedFactory::default() };
+    let want = direct_run(factory.clone(), Config::default(), "failover pin beta", 40);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = Config {
+        shards: 1,
+        checkpoint_every_steps: 0,
+        faults: "shard_panic@step=6".into(),
+        ..Config::default()
+    };
+    let server = thread::spawn(move || serve_scripted(listener, cfg, factory));
+
+    let mut cl = Client::connect(&addr).unwrap();
+    let (steps, fin) = cl.generate_stream("failover pin beta", 40, "spec_pv").unwrap();
+    assert_eq!(fin.get("ok").and_then(|x| x.as_bool()), Some(true), "{fin:?}");
+    assert_eq!(fin.get("tokens").and_then(|x| x.as_usize()), Some(40));
+    assert_eq!(fin.get("text").and_then(|x| x.as_str()), Some(want.as_str()));
+    assert_eq!(delta_concat(&steps), want);
+
+    let m = cl.admin("metrics").unwrap();
+    assert_eq!(num(&m, "restarts"), 1, "{m:?}");
+    assert_eq!(num(&m, "checkpoint_resumes"), 0, "{m:?}");
+    assert_eq!(num(&m, "failover_checkpoint"), 0, "{m:?}");
+    assert_eq!(num(&m, "failover_regen"), 1, "{m:?}");
+    cl.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+/// A request that overruns its `timeout_ms` gets exactly one structured
+/// terminal line — and nothing after it.
+#[test]
+fn deadline_exceeded_is_one_structured_terminal_line() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = Config::default();
+    let factory = ScriptedFactory {
+        tokens_per_step: 1,
+        step_micros: 20_000,
+        ..ScriptedFactory::default()
+    };
+    let server = thread::spawn(move || serve_scripted(listener, cfg, factory));
+
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.send(
+        Json::obj()
+            .set("op", "generate")
+            .set("prompt", "deadline probe")
+            .set("max_new", 4096usize)
+            .set("engine", "ar")
+            .set("stream", true)
+            .set("timeout_ms", 100i64),
+    )
+    .unwrap();
+    let fin = loop {
+        let j = cl.recv().unwrap();
+        if j.get("done").and_then(|x| x.as_bool()) == Some(true)
+            || j.get("ok").and_then(|x| x.as_bool()) == Some(false)
+        {
+            break j;
+        }
+    };
+    assert_eq!(fin.get("ok").and_then(|x| x.as_bool()), Some(false), "{fin:?}");
+    assert_eq!(fin.get("done").and_then(|x| x.as_bool()), Some(true), "{fin:?}");
+    assert_eq!(fin.get("deadline_exceeded").and_then(|x| x.as_bool()), Some(true), "{fin:?}");
+    let err = fin.get("error").and_then(|x| x.as_str()).unwrap_or_default();
+    assert!(err.contains("deadline"), "{fin:?}");
+    // the terminal line is the last line for this request: the next
+    // thing the server sends on this connection is the ping reply
+    let pong = cl.call(Json::obj().set("op", "ping")).unwrap();
+    assert_eq!(pong.get("ok").and_then(|x| x.as_bool()), Some(true), "{pong:?}");
+    assert!(pong.get("id").is_none(), "stray line after terminal: {pong:?}");
+
+    let m = cl.admin("metrics").unwrap();
+    assert_eq!(num(&m, "deadline_hits"), 1, "{m:?}");
+    cl.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+/// A generate bound for a full shard is shed with exactly one
+/// structured rejection (no id, no final line); the retrying client
+/// backs off per `retry_after_ms` and eventually succeeds.
+#[test]
+fn overload_shed_is_structured_and_retry_recovers() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = Config { shards: 1, shard_queue: 1, ..Config::default() };
+    let factory = ScriptedFactory {
+        tokens_per_step: 1,
+        step_micros: 3_000,
+        ..ScriptedFactory::default()
+    };
+    let server = thread::spawn(move || serve_scripted(listener, cfg, factory));
+
+    // occupy the shard's only queue slot with a slow streaming session
+    let mut a = Client::connect(&addr).unwrap();
+    a.send(
+        Json::obj()
+            .set("op", "generate")
+            .set("prompt", "occupant")
+            .set("max_new", 100usize)
+            .set("engine", "ar")
+            .set("stream", true),
+    )
+    .unwrap();
+    let ack = a.recv().unwrap();
+    assert_eq!(ack.get("queued").and_then(|x| x.as_bool()), Some(true), "{ack:?}");
+
+    let mut b = Client::connect(&addr).unwrap();
+    let shed = b.generate("latecomer", 8, "ar").unwrap();
+    assert_eq!(shed.get("ok").and_then(|x| x.as_bool()), Some(false), "{shed:?}");
+    assert_eq!(shed.get("error").and_then(|x| x.as_str()), Some("overloaded"), "{shed:?}");
+    assert!(num(&shed, "retry_after_ms") >= 1, "{shed:?}");
+    assert!(shed.get("id").is_none(), "a shed request must not burn an id: {shed:?}");
+
+    // the retry helper honors retry_after_ms and lands once A drains
+    let fin = b.generate_retry("latecomer", 8, "ar", 1).unwrap();
+    assert_eq!(fin.get("ok").and_then(|x| x.as_bool()), Some(true), "{fin:?}");
+    assert_eq!(fin.get("tokens").and_then(|x| x.as_usize()), Some(8));
+
+    // A's stream was untouched by the shedding
+    let fin_a = loop {
+        let j = a.recv().unwrap();
+        if j.get("done").and_then(|x| x.as_bool()) == Some(true) {
+            break j;
+        }
+    };
+    assert_eq!(fin_a.get("ok").and_then(|x| x.as_bool()), Some(true), "{fin_a:?}");
+
+    let m = b.admin("metrics").unwrap();
+    assert!(num(&m, "shed_requests") >= 1, "{m:?}");
+    b.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+/// The backend-error failpoint surfaces as a clean request failure —
+/// one structured error line, nothing wedged.
+#[test]
+fn injected_backend_error_fails_request_cleanly() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = Config { faults: "backend_err_rate=1,seed=3".into(), ..Config::default() };
+    let factory = ScriptedFactory::default();
+    let server = thread::spawn(move || serve_scripted(listener, cfg, factory));
+
+    let mut cl = Client::connect(&addr).unwrap();
+    let fin = cl.generate("doomed", 16, "ar").unwrap();
+    assert_eq!(fin.get("ok").and_then(|x| x.as_bool()), Some(false), "{fin:?}");
+    let err = fin.get("error").and_then(|x| x.as_str()).unwrap_or_default();
+    assert!(err.contains("injected backend error"), "{fin:?}");
+    cl.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+/// Regression: a queued-but-unrouted (parked) request whose connection
+/// dies must be released by the reaper, not leak in the park queue.
+#[test]
+fn dead_connection_reap_releases_parked_requests() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // one shard, zero restart budget: after the forced panic the shard
+    // dead-ends and the failed-over session stays parked forever
+    let cfg = Config {
+        shards: 1,
+        max_restarts: 0,
+        faults: "shard_panic@step=2".into(),
+        ..Config::default()
+    };
+    let factory = ScriptedFactory::default();
+    let server = thread::spawn(move || serve_scripted(listener, cfg, factory));
+
+    let mut victim = Client::connect(&addr).unwrap();
+    victim
+        .send(
+            Json::obj()
+                .set("op", "generate")
+                .set("prompt", "parked forever")
+                .set("max_new", 50usize)
+                .set("engine", "ar")
+                .set("stream", true),
+        )
+        .unwrap();
+    let ack = victim.recv().unwrap();
+    assert_eq!(ack.get("queued").and_then(|x| x.as_bool()), Some(true), "{ack:?}");
+
+    let mut admin = Client::connect(&addr).unwrap();
+    let parked = |admin: &mut Client, want: i64| {
+        for _ in 0..100 {
+            let m = admin.admin("metrics").unwrap();
+            if m.get("parked_requests").and_then(|x| x.as_i64()) == Some(want) {
+                return;
+            }
+            thread::sleep(Duration::from_millis(50));
+        }
+        panic!("parked_requests never reached {want}");
+    };
+    // the panic fails the session over; with no restart budget it parks
+    parked(&mut admin, 1);
+    // the owner disconnects; the reaper must release the parked entry
+    drop(victim);
+    parked(&mut admin, 0);
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+const CHAOS_CLIENTS: usize = 256;
+
+/// Streaming generate with a priority and the overload retry loop
+/// (priorities drive KV-pressure preemption, so swapped-out sessions
+/// are also in flight when the shard panic fires).
+fn stream_retry_priority(
+    cl: &mut Client,
+    prompt: &str,
+    max_new: usize,
+    engine: &str,
+    priority: i64,
+    seed: u64,
+) -> (Vec<Json>, Json) {
+    let mut jitter = 40 + seed % 60;
+    for _ in 0..24 {
+        cl.send(
+            Json::obj()
+                .set("op", "generate")
+                .set("prompt", prompt)
+                .set("max_new", max_new)
+                .set("engine", engine)
+                .set("priority", priority)
+                .set("stream", true),
+        )
+        .unwrap();
+        let mut steps = Vec::new();
+        let fin = loop {
+            let j = cl.recv().unwrap();
+            if j.get("done").and_then(|x| x.as_bool()) == Some(true)
+                || j.get("ok").and_then(|x| x.as_bool()) == Some(false)
+            {
+                break j;
+            }
+            steps.push(j);
+        };
+        if fin.get("error").and_then(|x| x.as_str()) != Some("overloaded") {
+            return (steps, fin);
+        }
+        let hint = fin.get("retry_after_ms").and_then(|x| x.as_f64()).unwrap_or(50.0) as u64;
+        thread::sleep(Duration::from_millis((hint + jitter).min(500)));
+        jitter = jitter * 2 % 97 + 40;
+    }
+    panic!("still shed after 24 attempts");
+}
+
+/// 256 streaming clients across 2 shards under active failpoints
+/// (per-shard panics, probabilistic backend errors), tight KV bytes
+/// with mixed priorities (preemption churn), and a bounded shard queue
+/// (shedding + client retry). Ends with zero lost or duplicated wire
+/// lines, a drained KV pool, and no leaked park/checkpoint state.
+#[test]
+fn chaos_soak_256_clients_with_failpoints() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = Config {
+        max_active: 8,
+        shards: 2,
+        checkpoint_every_steps: 1,
+        shard_queue: 32,
+        kv_budget_bytes: 64 * 1024,
+        faults: "shard_panic@step=59,backend_err_rate=0.002,swap_corrupt_rate=0.3,seed=9".into(),
+        ..Config::default()
+    };
+    let factory = ScriptedFactory {
+        tokens_per_step: 2,
+        step_micros: 200,
+        session_bytes: 16 * 1024,
+        ..ScriptedFactory::default()
+    };
+    let server = thread::spawn(move || serve_scripted(listener, cfg, factory));
+
+    // the scripted stream is position-indexed: every undisturbed (and
+    // therefore every correctly failed-over) 24-token output is this
+    let want: String = (0..24u8).map(|i| (b'a' + i % 26) as char).collect();
+
+    let ids = Arc::new(Mutex::new(HashSet::<u64>::new()));
+    let failures = Arc::new(Mutex::new(0usize));
+    let mut clients = Vec::new();
+    for c in 0..CHAOS_CLIENTS {
+        let addr = addr.clone();
+        let ids = ids.clone();
+        let failures = failures.clone();
+        let want = want.clone();
+        clients.push(thread::spawn(move || {
+            let mut cl = Client::connect(&addr).unwrap();
+            let prompt = format!("chaos client {c} prompt payload");
+            let (steps, fin) =
+                stream_retry_priority(&mut cl, &prompt, 24, "ar", (c % 3) as i64, c as u64);
+            let id = fin
+                .get("id")
+                .and_then(|x| x.as_i64())
+                .unwrap_or_else(|| panic!("terminal line without id: {fin:?}"));
+            assert!(ids.lock().unwrap().insert(id as u64), "duplicate wire id {id}");
+            if fin.get("ok").and_then(|x| x.as_bool()) == Some(true) {
+                assert_eq!(fin.get("tokens").and_then(|x| x.as_usize()), Some(24), "{fin:?}");
+                assert_eq!(
+                    fin.get("text").and_then(|x| x.as_str()),
+                    Some(want.as_str()),
+                    "non-deterministic recovery for client {c}"
+                );
+                // zero lost or duplicated stream lines, across panics,
+                // failovers, preemption and re-queued fresh runs
+                assert_eq!(
+                    delta_concat(&steps),
+                    want,
+                    "lost/dup stream lines for client {c}: {fin:?}"
+                );
+            } else {
+                // the only legal failure under this fault spec is the
+                // injected backend error
+                let err = fin.get("error").and_then(|x| x.as_str()).unwrap_or_default();
+                assert!(err.contains("injected backend error"), "{fin:?}");
+                *failures.lock().unwrap() += 1;
+            }
+        }));
+    }
+    for t in clients {
+        t.join().unwrap();
+    }
+    assert_eq!(
+        ids.lock().unwrap().len(),
+        CHAOS_CLIENTS,
+        "every client got exactly one terminal line with a unique id"
+    );
+
+    let mut admin = Client::connect(&addr).unwrap();
+    let m = admin.admin("metrics").unwrap();
+    assert!(num(&m, "restarts") >= 1, "no supervised restart happened: {m:?}");
+    assert!(
+        num(&m, "checkpoint_resumes") >= 1,
+        "no session resumed from a failover checkpoint: {m:?}"
+    );
+    assert!(
+        num(&m, "failover_checkpoint") + num(&m, "failover_regen") >= 1,
+        "no session was failed over: {m:?}"
+    );
+    assert_eq!(num(&m, "parked_requests"), 0, "leaked parked requests: {m:?}");
+    assert_eq!(num(&m, "retained_checkpoints"), 0, "leaked checkpoints: {m:?}");
+    // the pool drains completely once every session terminated
+    let kv = admin.admin("kv").unwrap();
+    assert_eq!(num(&kv, "pages_resident"), 0, "{kv:?}");
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}

@@ -177,16 +177,19 @@ fn deadline_expires_request() {
     let mut failed = Vec::new();
     while !c.idle() {
         for e in c.tick() {
-            if let Event::Failed { id, error } = e {
-                assert!(error.contains("deadline"), "{error}");
+            if let Event::DeadlineExceeded { id } = e {
                 failed.push(id);
             }
         }
     }
     assert_eq!(failed, vec![id]);
-    assert!(matches!(c.get(id).unwrap().state, RequestState::Failed(_)));
+    match &c.get(id).unwrap().state {
+        RequestState::Failed(e) => assert!(e.contains("deadline"), "{e}"),
+        other => panic!("expected deadline failure, got {other:?}"),
+    }
     assert_eq!(c.get(ok).unwrap().state, RequestState::Done);
     assert_eq!(c.registry.failed, 1);
+    assert_eq!(c.registry.deadline_hits, 1);
     assert_eq!(c.registry.completed, 1);
 }
 
