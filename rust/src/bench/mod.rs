@@ -5,6 +5,7 @@
 
 pub mod backend;
 pub mod kvstore;
+pub mod policy;
 pub mod serve;
 
 use std::fs;

@@ -1,0 +1,329 @@
+//! `specpv bench policy` — sweeps the adaptive speculation policy
+//! (DESIGN.md §16) against fixed configurations on three seeded scripted
+//! workloads, in **virtual time**:
+//!
+//! * **short** — short prompts whose acceptance regime flips between a
+//!   deep-friendly phase (ceiling 6) and a collapsed phase (ceiling 1):
+//!   any fixed draft depth is a compromise across the phases; the
+//!   adaptive controller tracks them.
+//! * **long** — the same phase structure under long-context costs
+//!   (expensive verify, expensive drafts), where a wrong depth is
+//!   costlier.
+//! * **drifty** — a SpecPV-shaped workload whose acceptance ceiling
+//!   decays with rounds since the last full-verification refresh: the
+//!   fixed refresh period lets acceptance rot between refreshes; the
+//!   drift-triggered refresh re-anchors as soon as the accumulated
+//!   acceptance shortfall crosses the threshold.
+//!
+//! Every run drives real coordinator scheduling (policy tick, per-session
+//! controllers, registry counters) over [`ScriptedFactory`] sessions with
+//! a [`SpecSim`] acceptance stream; throughput is computed from the sim's
+//! virtual per-round costs, so results are byte-deterministic and never
+//! flake on loaded CI machines.
+//!
+//! Gates (`--check` hard-fails):
+//! * adaptive aggregate tok/s ≥ the best fixed configuration on **every**
+//!   workload;
+//! * on **drifty**, drift-triggered refresh **strictly** beats the best
+//!   fixed-period configuration.
+//!
+//! Emits `results/policy.{md,json}` and a schema-versioned
+//! `BENCH_policy.json` at the current directory (the repo root in CI).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Config, EngineKind, PolicyConfig, PolicyMode};
+use crate::coordinator::Coordinator;
+use crate::engine::scripted::{ScriptedFactory, SpecSim};
+use crate::engine::GenRequest;
+use crate::json::Json;
+
+use super::{Table, SCHEMA_VERSION};
+
+const OUTPUT_FILE: &str = "BENCH_policy.json";
+
+/// Concurrent scripted sessions per run.
+const SESSIONS: usize = 4;
+/// Fixed draft depths swept against the adaptive controller.
+const DEPTHS: [usize; 4] = [1, 2, 4, 6];
+
+struct Workload {
+    name: &'static str,
+    prompt_len: usize,
+    sim: SpecSim,
+}
+
+/// Phase-flipping acceptance ceilings: `hi_rounds` rounds at ceiling 6,
+/// then `lo_rounds` at ceiling 1, cycled.
+fn phased_accepts(hi_rounds: usize, lo_rounds: usize) -> Vec<usize> {
+    let mut v = vec![6; hi_rounds];
+    v.extend(std::iter::repeat(1).take(lo_rounds));
+    v
+}
+
+fn workloads() -> Vec<Workload> {
+    vec![
+        Workload {
+            name: "short",
+            prompt_len: 16,
+            sim: SpecSim {
+                accepts: phased_accepts(16, 16),
+                decay_every: 0,
+                depth: 2,
+                refresh_every: 0,
+                draft_us: 20.0,
+                verify_us: 100.0,
+                refresh_us: 400.0,
+            },
+        },
+        Workload {
+            name: "long",
+            prompt_len: 2000,
+            sim: SpecSim {
+                accepts: phased_accepts(16, 16),
+                decay_every: 0,
+                depth: 2,
+                refresh_every: 0,
+                draft_us: 45.0,
+                verify_us: 300.0,
+                refresh_us: 900.0,
+            },
+        },
+        Workload {
+            name: "drifty",
+            prompt_len: 800,
+            sim: SpecSim {
+                accepts: vec![5],
+                decay_every: 2,
+                depth: 4,
+                refresh_every: 12,
+                draft_us: 10.0,
+                verify_us: 100.0,
+                refresh_us: 500.0,
+            },
+        },
+    ]
+}
+
+/// Policy knobs used by the sweep: tight adjustment cadence so the
+/// controller tracks the scripted phase flips within a phase.
+fn policy_cfg(mode: PolicyMode) -> PolicyConfig {
+    PolicyConfig {
+        mode,
+        draft_min: 1,
+        draft_max: 6,
+        alpha: 0.5,
+        grow: 0.8,
+        shrink: 0.35,
+        adjust_every: 1,
+        drift_threshold: 1.5,
+        ..PolicyConfig::default()
+    }
+}
+
+struct RunResult {
+    tok_s: f64,
+    tokens: usize,
+    depth_moves: u64,
+    forced_refreshes: u64,
+}
+
+/// Drive `SESSIONS` scripted sessions through a coordinator under the
+/// given policy mode; aggregate tok/s is Σ tokens / Σ virtual decode
+/// seconds over the completed requests.
+fn run_one(
+    sim: &SpecSim,
+    prompt_len: usize,
+    mode: PolicyMode,
+    max_new: usize,
+) -> Result<RunResult> {
+    let cfg = Config {
+        engine: EngineKind::SpecPv,
+        max_active: SESSIONS,
+        policy: policy_cfg(mode),
+        ..Config::default()
+    };
+    let factory =
+        ScriptedFactory { spec: Some(sim.clone()), ..ScriptedFactory::default() };
+    let mut coord = Coordinator::with_factory(cfg, Box::new(factory));
+    let mut ids = Vec::with_capacity(SESSIONS);
+    for i in 0..SESSIONS {
+        let req = GenRequest::greedy(vec![1 + i as u32; prompt_len.max(1)], max_new);
+        ids.push(coord.submit(req, None)?);
+    }
+    coord.run_all();
+    let mut tokens = 0usize;
+    let mut secs = 0.0f64;
+    for id in ids {
+        let tr = coord.get(id).expect("request tracked");
+        let Some(r) = tr.result.as_ref() else {
+            bail!("bench request {id} finished without a result ({:?})", tr.state);
+        };
+        tokens += r.tokens.len();
+        secs += r.stats.decode_secs;
+    }
+    Ok(RunResult {
+        tok_s: tokens as f64 / secs.max(1e-12),
+        tokens,
+        depth_moves: coord.registry.policy_depth_changes,
+        forced_refreshes: coord.registry.policy_refreshes,
+    })
+}
+
+pub fn run(out: &Path, quick: bool, check: bool) -> Result<()> {
+    let max_new = if quick { 240 } else { 600 };
+    let mut table = Table::new(
+        "Adaptive speculation policy vs fixed configurations \
+         (virtual time, scripted acceptance streams)",
+        &["workload", "config", "tok/s (virtual)", "tokens", "depth moves", "forced refreshes"],
+    );
+    let mut gate_failures: Vec<String> = Vec::new();
+    let mut gates = Vec::new();
+    for w in workloads() {
+        let mut best_fixed = f64::NEG_INFINITY;
+        let mut best_depth = 0usize;
+        for &d in &DEPTHS {
+            let sim = SpecSim { depth: d, ..w.sim.clone() };
+            let r = run_one(&sim, w.prompt_len, PolicyMode::Fixed, max_new)?;
+            if r.tok_s > best_fixed {
+                best_fixed = r.tok_s;
+                best_depth = d;
+            }
+            table.row(
+                vec![
+                    w.name.into(),
+                    format!("fixed d={d}"),
+                    format!("{:.0}", r.tok_s),
+                    r.tokens.to_string(),
+                    "-".into(),
+                    "-".into(),
+                ],
+                Json::obj()
+                    .set("workload", w.name)
+                    .set("config", &*format!("fixed_d{d}"))
+                    .set("tok_s", r.tok_s)
+                    .set("tokens", r.tokens),
+            );
+        }
+        let a = run_one(&w.sim, w.prompt_len, PolicyMode::Adaptive, max_new)?;
+        table.row(
+            vec![
+                w.name.into(),
+                "adaptive".into(),
+                format!("{:.0}", a.tok_s),
+                a.tokens.to_string(),
+                a.depth_moves.to_string(),
+                a.forced_refreshes.to_string(),
+            ],
+            Json::obj()
+                .set("workload", w.name)
+                .set("config", "adaptive")
+                .set("tok_s", a.tok_s)
+                .set("tokens", a.tokens)
+                .set("depth_moves", a.depth_moves as i64)
+                .set("forced_refreshes", a.forced_refreshes as i64),
+        );
+        let margin = a.tok_s / best_fixed;
+        println!(
+            "[policy:{}] adaptive {:.0} tok/s vs best fixed d={} {:.0} tok/s ({:.2}x)",
+            w.name, a.tok_s, best_depth, best_fixed, margin
+        );
+        // gate: adaptive must not lose to any fixed configuration
+        // (1e-9 relative slack absorbs summation-order noise only)
+        if a.tok_s < best_fixed * (1.0 - 1e-9) {
+            gate_failures.push(format!(
+                "{}: adaptive {:.1} tok/s < best fixed d={} {:.1} tok/s",
+                w.name, a.tok_s, best_depth, best_fixed
+            ));
+        }
+        // gate: on the drifty workload the drift-triggered refresh must
+        // STRICTLY beat every fixed refresh period
+        if w.name == "drifty" {
+            if a.forced_refreshes == 0 {
+                gate_failures.push(
+                    "drifty: adaptive run never forced a drift refresh".to_string(),
+                );
+            }
+            if a.tok_s <= best_fixed {
+                gate_failures.push(format!(
+                    "drifty: adaptive {:.1} tok/s does not strictly beat \
+                     best fixed {:.1} tok/s",
+                    a.tok_s, best_fixed
+                ));
+            }
+        }
+        gates.push(
+            Json::obj()
+                .set("workload", w.name)
+                .set("adaptive_tok_s", a.tok_s)
+                .set("best_fixed_tok_s", best_fixed)
+                .set("best_fixed_depth", best_depth)
+                .set("margin", margin),
+        );
+    }
+    table.emit(out, "policy")?;
+    let bench = Json::obj()
+        .set("schema_version", SCHEMA_VERSION)
+        .set("bench", "policy")
+        .set("quick", quick)
+        .set("sessions", SESSIONS)
+        .set("max_new", max_new)
+        .set("gates", Json::Arr(gates))
+        .set("gates_ok", gate_failures.is_empty())
+        .set("table", table.to_json());
+    std::fs::write(OUTPUT_FILE, bench.to_string())?;
+    println!("wrote {OUTPUT_FILE}");
+    if !gate_failures.is_empty() {
+        let msg = gate_failures.join("; ");
+        if check {
+            bail!("bench policy gates failed: {msg}");
+        }
+        eprintln!("[bench policy] WARNING: gates failed: {msg}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_beats_best_fixed_on_every_workload() {
+        // the CI gate, exercised at quick scale so `cargo test` catches a
+        // controller regression before the perf-smoke job does
+        let max_new = 240;
+        for w in workloads() {
+            let mut best_fixed = f64::NEG_INFINITY;
+            for &d in &DEPTHS {
+                let sim = SpecSim { depth: d, ..w.sim.clone() };
+                let r = run_one(&sim, w.prompt_len, PolicyMode::Fixed, max_new).unwrap();
+                best_fixed = best_fixed.max(r.tok_s);
+            }
+            let a = run_one(&w.sim, w.prompt_len, PolicyMode::Adaptive, max_new).unwrap();
+            assert!(
+                a.tok_s >= best_fixed * (1.0 - 1e-9),
+                "{}: adaptive {:.1} < best fixed {:.1}",
+                w.name,
+                a.tok_s,
+                best_fixed
+            );
+            if w.name == "drifty" {
+                assert!(a.tok_s > best_fixed, "drifty gate must be strict");
+                assert!(a.forced_refreshes > 0, "drift refresh must fire");
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_time_runs_are_deterministic() {
+        let w = &workloads()[0];
+        let a = run_one(&w.sim, w.prompt_len, PolicyMode::Adaptive, 120).unwrap();
+        let b = run_one(&w.sim, w.prompt_len, PolicyMode::Adaptive, 120).unwrap();
+        assert_eq!(a.tok_s.to_bits(), b.tok_s.to_bits());
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.depth_moves, b.depth_moves);
+        assert_eq!(a.forced_refreshes, b.forced_refreshes);
+    }
+}

@@ -187,6 +187,7 @@ fn run_shards(shards: usize) -> Result<ShardRunStats> {
                 conn: 0,
                 gen: GenRequest::greedy(toks, MAX_NEW),
                 engine: None,
+                auto: false,
                 stream: false,
                 deadline_secs: None,
                 priority: 0,

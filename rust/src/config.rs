@@ -54,7 +54,7 @@ impl fmt::Display for Reduction {
 }
 
 /// Decoding engine selection (paper §4.1 baselines + SpecPV).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum EngineKind {
     /// standard autoregressive decoding (the speedup denominator)
     Autoregressive,
@@ -198,6 +198,93 @@ impl SpecPvConfig {
     }
 }
 
+/// Speculation policy mode (`policy` key, DESIGN.md §16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyMode {
+    /// no policy layer at all: no per-session tracking, no counters
+    Off,
+    /// observe-only: acceptance/drift counters accrue (registry + admin
+    /// metrics) but every speculation knob stays at its configured value
+    #[default]
+    Fixed,
+    /// closed loop: draft depth follows acceptance feedback and SpecPV
+    /// refreshes on the drift threshold (fixed cadence stays as the
+    /// fallback ceiling)
+    Adaptive,
+}
+
+impl std::str::FromStr for PolicyMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(PolicyMode::Off),
+            "fixed" => Ok(PolicyMode::Fixed),
+            "adaptive" => Ok(PolicyMode::Adaptive),
+            _ => bail!("unknown policy '{s}' (off|fixed|adaptive)"),
+        }
+    }
+}
+
+impl fmt::Display for PolicyMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            PolicyMode::Off => "off",
+            PolicyMode::Fixed => "fixed",
+            PolicyMode::Adaptive => "adaptive",
+        })
+    }
+}
+
+/// Adaptive speculation policy knobs (DESIGN.md §16). The controller in
+/// `crate::policy` is a pure function of the observed decode stream and
+/// these bounds.
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    pub mode: PolicyMode,
+    /// draft-depth bounds the controller never leaves
+    pub draft_min: usize,
+    pub draft_max: usize,
+    /// EWMA smoothing for the per-round acceptance ratio, (0, 1]
+    pub alpha: f64,
+    /// acceptance EWMA at or above this grows the draft depth
+    pub grow: f64,
+    /// acceptance EWMA at or below this shrinks the draft depth (also
+    /// the `engine=auto` probe's give-up-on-speculation threshold)
+    pub shrink: f64,
+    /// verify rounds between depth adjustments
+    pub adjust_every: usize,
+    /// accumulated acceptance-shortfall (partial rounds) that forces a
+    /// SpecPV refresh ahead of the buffer-cap cadence
+    pub drift_threshold: f64,
+    /// observed verify rounds before the `engine=auto` acceptance probe
+    /// may veto a speculative engine
+    pub probe_rounds: usize,
+    /// `engine=auto`: prompts shorter than this decode plain `ar`
+    pub auto_short: usize,
+    /// `engine=auto`: prompts at least this long go to `spec_pv`
+    /// (between the two bounds: `triforce`)
+    pub auto_long: usize,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            mode: PolicyMode::Fixed,
+            draft_min: 1,
+            draft_max: 6,
+            alpha: 0.3,
+            grow: 0.8,
+            shrink: 0.35,
+            adjust_every: 4,
+            drift_threshold: 1.5,
+            probe_rounds: 8,
+            auto_short: 64,
+            auto_long: 640,
+        }
+    }
+}
+
 /// Offload simulation (paper Fig. 4: RTX 4090 + PCIe KV offload).
 #[derive(Debug, Clone)]
 pub struct OffloadConfig {
@@ -220,8 +307,14 @@ pub struct Config {
     pub artifacts_dir: PathBuf,
     pub model_size: String,
     pub engine: EngineKind,
+    /// `engine = auto`: pick the engine per request (prompt length +
+    /// acceptance probe, DESIGN.md §16); `engine` stays as the fallback
+    /// when the policy layer is off
+    pub engine_auto: bool,
     /// device backend (auto: pjrt with artifacts, reference without)
     pub backend: BackendKind,
+    /// adaptive speculation policy (DESIGN.md §16)
+    pub policy: PolicyConfig,
     pub specpv: SpecPvConfig,
     pub offload: OffloadConfig,
     pub temperature: f32,
@@ -292,7 +385,9 @@ impl Default for Config {
             artifacts_dir: PathBuf::from("artifacts"),
             model_size: "s".into(),
             engine: EngineKind::SpecPv,
+            engine_auto: false,
             backend: BackendKind::Auto,
+            policy: PolicyConfig::default(),
             specpv: SpecPvConfig::default(),
             offload: OffloadConfig::default(),
             temperature: 0.0,
@@ -417,8 +512,13 @@ static OPTIONS: &[OptDef] = &[
         c.model_size = v.to_string();
         Ok(())
     }),
-    opt!("engine", "decoding engine (ar|spec_full|spec_pv|triforce|tokenswift)", |c, v| {
-        c.engine = v.parse()?;
+    opt!("engine", "decoding engine (ar|spec_full|spec_pv|triforce|tokenswift|auto)", |c, v| {
+        if v == "auto" {
+            c.engine_auto = true;
+        } else {
+            c.engine = v.parse()?;
+            c.engine_auto = false;
+        }
         Ok(())
     }),
     opt!("backend", "device backend (auto|pjrt|reference)", |c, v| {
@@ -563,6 +663,70 @@ static OPTIONS: &[OptDef] = &[
         c.shard_heartbeat_ms = v.parse()?;
         Ok(())
     }),
+    opt!("policy", "speculation policy (off|fixed|adaptive)", |c, v| {
+        c.policy.mode = v.parse()?;
+        Ok(())
+    }),
+    opt!("draft_min", "policy: smallest adaptive draft depth (>= 1)", |c, v| {
+        let n: usize = v.parse()?;
+        if n == 0 {
+            bail!("must be at least 1");
+        }
+        c.policy.draft_min = n;
+        Ok(())
+    }),
+    opt!("draft_max", "policy: largest adaptive draft depth", |c, v| {
+        let n: usize = v.parse()?;
+        if n == 0 {
+            bail!("must be at least 1");
+        }
+        c.policy.draft_max = n;
+        Ok(())
+    }),
+    opt!("policy_alpha", "policy: acceptance EWMA smoothing, (0, 1]", |c, v| {
+        let f: f64 = v.parse()?;
+        if !(f > 0.0 && f <= 1.0) {
+            bail!("must be in (0, 1]");
+        }
+        c.policy.alpha = f;
+        Ok(())
+    }),
+    opt!("policy_grow", "policy: acceptance EWMA that deepens the draft", |c, v| {
+        c.policy.grow = v.parse()?;
+        Ok(())
+    }),
+    opt!("policy_shrink", "policy: acceptance EWMA that shallows the draft", |c, v| {
+        c.policy.shrink = v.parse()?;
+        Ok(())
+    }),
+    opt!("policy_adjust_every", "policy: verify rounds between depth moves", |c, v| {
+        let n: usize = v.parse()?;
+        if n == 0 {
+            bail!("must be at least 1");
+        }
+        c.policy.adjust_every = n;
+        Ok(())
+    }),
+    opt!("drift_threshold", "policy: shortfall that forces a SpecPV refresh", |c, v| {
+        let f: f64 = v.parse()?;
+        if !(f > 0.0) {
+            bail!("must be positive");
+        }
+        c.policy.drift_threshold = f;
+        Ok(())
+    }),
+    opt!("policy_probe_rounds", "engine=auto: rounds before the acceptance probe vetoes", |c, v| {
+        c.policy.probe_rounds = v.parse()?;
+        Ok(())
+    }),
+    opt!("auto_short_prompt", "engine=auto: prompts below this decode ar", |c, v| {
+        c.policy.auto_short = v.parse()?;
+        Ok(())
+    }),
+    opt!("auto_long_prompt", "engine=auto: prompts at/above this go to spec_pv", |c, v| {
+        c.policy.auto_long = v.parse()?;
+        Ok(())
+    }),
     opt!("faults", "failpoint spec, e.g. shard_panic@step=40,slow_op_ms=200 (\"\" = off)", |c, v| {
         // validate eagerly — a typo must not silently disable a chaos run
         crate::util::failpoint::FaultSpec::parse(v)?;
@@ -677,6 +841,74 @@ mod tests {
         let mut bad = BTreeMap::new();
         bad.insert("faults".to_string(), "nonsense=1".to_string());
         assert!(c.apply_overrides(&bad).is_err(), "bad failpoints rejected eagerly");
+    }
+
+    #[test]
+    fn policy_keys_parse() {
+        let mut c = Config::default();
+        assert_eq!(c.policy.mode, PolicyMode::Fixed, "default: observe-only");
+        assert!(!c.engine_auto, "default: static engine selection");
+        assert_eq!(c.policy.draft_min, 1);
+        assert_eq!(c.policy.draft_max, 6);
+        let mut kv = BTreeMap::new();
+        kv.insert("policy".to_string(), "adaptive".to_string());
+        kv.insert("draft_min".to_string(), "2".to_string());
+        kv.insert("draft_max".to_string(), "5".to_string());
+        kv.insert("policy_alpha".to_string(), "0.5".to_string());
+        kv.insert("policy_grow".to_string(), "0.9".to_string());
+        kv.insert("policy_shrink".to_string(), "0.2".to_string());
+        kv.insert("policy_adjust_every".to_string(), "2".to_string());
+        kv.insert("drift_threshold".to_string(), "2.5".to_string());
+        kv.insert("policy_probe_rounds".to_string(), "4".to_string());
+        kv.insert("auto_short_prompt".to_string(), "32".to_string());
+        kv.insert("auto_long_prompt".to_string(), "512".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.policy.mode, PolicyMode::Adaptive);
+        assert_eq!(c.policy.draft_min, 2);
+        assert_eq!(c.policy.draft_max, 5);
+        assert_eq!(c.policy.alpha, 0.5);
+        assert_eq!(c.policy.grow, 0.9);
+        assert_eq!(c.policy.shrink, 0.2);
+        assert_eq!(c.policy.adjust_every, 2);
+        assert_eq!(c.policy.drift_threshold, 2.5);
+        assert_eq!(c.policy.probe_rounds, 4);
+        assert_eq!(c.policy.auto_short, 32);
+        assert_eq!(c.policy.auto_long, 512);
+
+        let mut bad = BTreeMap::new();
+        bad.insert("policy".to_string(), "magic".to_string());
+        assert!(c.apply_overrides(&bad).is_err());
+        let mut bad = BTreeMap::new();
+        bad.insert("draft_min".to_string(), "0".to_string());
+        assert!(c.apply_overrides(&bad).is_err(), "depth bound must be >= 1");
+        let mut bad = BTreeMap::new();
+        bad.insert("policy_alpha".to_string(), "1.5".to_string());
+        assert!(c.apply_overrides(&bad).is_err(), "alpha must be in (0, 1]");
+    }
+
+    #[test]
+    fn engine_auto_parses() {
+        let mut c = Config::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("engine".to_string(), "auto".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert!(c.engine_auto);
+        assert_eq!(c.engine, EngineKind::SpecPv, "fallback engine untouched");
+        // a concrete engine switches auto back off
+        let mut kv = BTreeMap::new();
+        kv.insert("engine".to_string(), "triforce".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert!(!c.engine_auto);
+        assert_eq!(c.engine, EngineKind::TriForce);
+    }
+
+    #[test]
+    fn policy_mode_parse_display() {
+        for m in ["off", "fixed", "adaptive"] {
+            let p: PolicyMode = m.parse().unwrap();
+            assert_eq!(p.to_string(), m);
+        }
+        assert!("on".parse::<PolicyMode>().is_err());
     }
 
     #[test]

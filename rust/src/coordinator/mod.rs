@@ -36,13 +36,14 @@
 //! shaped outer loop the L3 layer owns; the inner draft/verify loop
 //! lives in `engine`.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::backend::{Backend, StateBuf};
 use crate::config::{Config, EngineKind};
+use crate::policy::{PolicyEngine, PolicyUpdate};
 use crate::engine::plan::{exec_batch, exec_single, PlanKey};
 use crate::engine::{
     BackendFactory, Drive, EngineSession, GenRequest, GenResult, KernelPlan,
@@ -152,6 +153,45 @@ impl Event {
     }
 }
 
+/// Per-engine speculation counters (policy layer, DESIGN.md §16):
+/// synced each tick from live sessions' cumulative observations, like
+/// the KV gauges. `rounds` counts draft→verify→accept rounds.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SpecCounters {
+    /// draft tokens offered to verification
+    pub proposed: u64,
+    /// draft tokens accepted into the output
+    pub committed: u64,
+    /// verify rounds folded in
+    pub rounds: u64,
+    /// rounds verified against the full KV cache
+    pub full_steps: u64,
+    /// rounds verified against the partial cache (SpecPV)
+    pub partial_steps: u64,
+    /// full-verification refreshes taken (SpecPV)
+    pub refresh_steps: u64,
+}
+
+impl SpecCounters {
+    /// Mean accepted-run length per verify round (the paper's τ, Eq. 4).
+    pub fn tau_mean(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.committed as f64 / self.rounds as f64
+        }
+    }
+
+    /// Fraction of verify rounds served by the partial cache.
+    pub fn partial_frac(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.partial_steps as f64 / self.rounds as f64
+        }
+    }
+}
+
 /// Aggregate serving metrics (reported by the `metrics` server op and
 /// the e2e example). Counters accumulate over terminal requests; the
 /// `queue_depth`/`active_sessions` gauges reflect the last tick.
@@ -228,6 +268,18 @@ pub struct Registry {
     pub batch_width_max: usize,
     /// gauge: fused groups issued by the last tick
     pub batch_tick_groups: usize,
+    /// speculation policy mode serving this coordinator
+    /// ("off"|"fixed"|"adaptive"), echoed for operators
+    pub policy_mode: String,
+    /// depth moves commanded by the adaptive controller (lifetime)
+    pub policy_depth_changes: u64,
+    /// drift-triggered refreshes commanded ahead of the fixed cadence
+    pub policy_refreshes: u64,
+    /// per-engine speculation counters (DESIGN.md §16), keyed by engine
+    /// name, synced each tick
+    pub spec: BTreeMap<String, SpecCounters>,
+    /// `engine=auto` resolutions per selected engine
+    pub auto_selected: BTreeMap<String, u64>,
     pub latency: Samples,
     pub queue_wait: Samples,
     /// submit → first token, sampled at session start
@@ -284,8 +336,22 @@ impl Registry {
         }
     }
 
+    /// Fold one tick's policy-layer deltas into the per-engine counters.
+    pub fn note_spec(&mut self, kind: EngineKind, up: &PolicyUpdate) {
+        if up.rounds == 0 && up.proposed == 0 && up.refresh_steps == 0 {
+            return;
+        }
+        let c = self.spec.entry(kind.to_string()).or_default();
+        c.rounds += up.rounds;
+        c.proposed += up.proposed;
+        c.committed += up.committed;
+        c.full_steps += up.full_steps;
+        c.partial_steps += up.partial_steps;
+        c.refresh_steps += up.refresh_steps;
+    }
+
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "backend={} completed={} failed={} cancelled={} tokens={} \
              queue_depth={} active={} max_queue={} max_prompt={} \
              threads={} fused_groups={} batch_mean_w={:.2} batch_max_w={} \
@@ -332,7 +398,28 @@ impl Registry {
             self.ttft.p99(),
             self.throughput_tok_s.mean(),
             self.accept_len.mean(),
-        )
+        );
+        s.push_str(&format!(
+            " policy={} policy_depth_changes={} policy_refreshes={}",
+            if self.policy_mode.is_empty() { "off" } else { self.policy_mode.as_str() },
+            self.policy_depth_changes,
+            self.policy_refreshes,
+        ));
+        for (k, c) in &self.spec {
+            s.push_str(&format!(
+                " spec_{k}={}/{} spec_{k}_tau={:.2} spec_{k}_partial_frac={:.2} \
+                 spec_{k}_refreshes={}",
+                c.committed,
+                c.proposed,
+                c.tau_mean(),
+                c.partial_frac(),
+                c.refresh_steps,
+            ));
+        }
+        for (k, n) in &self.auto_selected {
+            s.push_str(&format!(" auto_{k}={n}"));
+        }
+        s
     }
 }
 
@@ -369,6 +456,10 @@ pub struct SubmitOpts {
     pub deadline_secs: Option<f64>,
     /// preemption rank — lower is swapped out first under byte pressure
     pub priority: i32,
+    /// per-request `engine=auto`: when set (and no explicit engine
+    /// override), the policy layer picks the engine from the prompt
+    /// length and the fleet's acceptance probes (DESIGN.md §16)
+    pub auto: bool,
 }
 
 struct ActiveEntry<'rt> {
@@ -428,6 +519,10 @@ pub struct Coordinator<'rt> {
     /// dedicated stream for probabilistic fault injection — never shared
     /// with generation sampling
     fault_rng: Rng,
+    /// adaptive speculation policy layer (DESIGN.md §16): per-session
+    /// controllers + per-engine acceptance probes, ticked after every
+    /// step wave
+    pub policy: PolicyEngine,
     pub registry: Registry,
 }
 
@@ -475,8 +570,10 @@ impl<'rt> Coordinator<'rt> {
             max_queue: admission.max_queue,
             max_prompt: admission.max_prompt,
             threads: crate::util::pool::resolve_threads(cfg.threads),
+            policy_mode: cfg.policy.mode.to_string(),
             ..Registry::default()
         };
+        let policy = PolicyEngine::new(cfg.policy.clone());
         // cfg.faults was validated at config parse; a hand-built Config
         // with a bad spec degrades to all-off rather than panicking
         let faults = FaultSpec::parse(&cfg.faults).unwrap_or_default();
@@ -500,6 +597,7 @@ impl<'rt> Coordinator<'rt> {
             resume_ckpts: HashMap::new(),
             faults,
             fault_rng,
+            policy,
             registry,
         };
         coord.install_swap_faults();
@@ -540,7 +638,7 @@ impl<'rt> Coordinator<'rt> {
         engine: Option<EngineKind>,
         deadline_secs: Option<f64>,
     ) -> Result<RequestId> {
-        self.submit_opts(req, SubmitOpts { engine, deadline_secs, priority: 0 })
+        self.submit_opts(req, SubmitOpts { engine, deadline_secs, ..SubmitOpts::default() })
     }
 
     /// Admit a request with full submit options (engine override,
@@ -562,11 +660,23 @@ impl<'rt> Coordinator<'rt> {
         if self.queue.len() >= self.admission.max_queue {
             anyhow::bail!("queue full ({})", self.queue.len());
         }
+        // engine=auto (DESIGN.md §16): with no explicit override, the
+        // policy layer picks per request from prompt length + the
+        // fleet's acceptance probes. Deterministic in (prompt, history).
+        let engine = match opts.engine {
+            Some(kind) => kind,
+            None if opts.auto || self.cfg.engine_auto => {
+                let kind = self.policy.select(req.prompt.len());
+                *self.registry.auto_selected.entry(kind.to_string()).or_insert(0) += 1;
+                kind
+            }
+            None => self.cfg.engine,
+        };
         let id = self.requests.len() as RequestId;
         self.requests.push(TrackedRequest {
             id,
             req,
-            engine: opts.engine.unwrap_or(self.cfg.engine),
+            engine,
             state: RequestState::Queued,
             result: None,
             queued_secs: 0.0,
@@ -625,6 +735,7 @@ impl<'rt> Coordinator<'rt> {
                 };
                 let entry = self.active.remove(idx);
                 self.pool.release(id);
+                self.policy.finish(id);
                 let result = entry.session.finish();
                 let tr = &mut self.requests[id as usize];
                 tr.service_secs =
@@ -643,6 +754,7 @@ impl<'rt> Coordinator<'rt> {
                     }
                 }
                 self.prefetched.remove(&id);
+                self.policy.finish(id);
                 let result = self.swapped.remove(&id).map(|s| s.finish());
                 let tr = &mut self.requests[id as usize];
                 tr.service_secs =
@@ -665,7 +777,14 @@ impl<'rt> Coordinator<'rt> {
     pub fn checkpoint(&self, id: RequestId) -> Option<SessionCheckpoint> {
         let entry = self.active.iter().find(|e| e.id == id)?;
         match entry.session.checkpoint() {
-            Ok(ck) => ck,
+            Ok(Some(mut ck)) => {
+                // carry the learned policy state (depth, acceptance EWMA,
+                // drift) so a failed-over session does not relearn from
+                // defaults (DESIGN.md §16)
+                ck.policy = self.policy.state(id).cloned();
+                Some(ck)
+            }
+            Ok(None) => None,
             Err(e) => {
                 eprintln!("[coordinator] checkpoint of request {id} failed: {e:#}");
                 None
@@ -682,11 +801,37 @@ impl<'rt> Coordinator<'rt> {
         self.expire_deadlines(&mut events);
         self.admit(&mut events);
         self.step_active(&mut events);
+        self.policy_tick();
         self.registry.queue_depth = self.queue.len();
         self.registry.active_sessions = self.active.len();
         self.registry.kv_resident_bytes = self.pool.resident();
         self.sync_page_gauges();
         events
+    }
+
+    /// Poll every live session's cumulative speculation counters, fold
+    /// them through the per-session controllers, and apply the resulting
+    /// directives (DESIGN.md §16). Runs after the step wave, when every
+    /// session sits at a round boundary — a directive therefore never
+    /// changes a draft round midway, and the batched plan/apply protocol
+    /// is untouched. In `policy=fixed` mode the fold only accrues
+    /// counters (every directive is a no-op); `policy=off` skips the
+    /// poll entirely.
+    fn policy_tick(&mut self) {
+        if !self.policy.enabled() {
+            return;
+        }
+        for entry in self.active.iter_mut() {
+            let Some(obs) = entry.session.spec_observe() else { continue };
+            let kind = entry.session.kind();
+            let up = self.policy.observe(entry.id, kind, obs);
+            self.registry.note_spec(kind, &up);
+            if !up.directive.is_noop() {
+                entry.session.apply_policy(&up.directive);
+            }
+        }
+        self.registry.policy_depth_changes = self.policy.depth_changes;
+        self.registry.policy_refreshes = self.policy.forced_refreshes;
     }
 
     /// Refresh the page-level pool gauges. A page shared by several
@@ -776,6 +921,7 @@ impl<'rt> Coordinator<'rt> {
                 self.requests[id as usize].result = Some(session.finish());
             }
             self.resume_ckpts.remove(&id);
+            self.policy.finish(id);
             let tr = &mut self.requests[id as usize];
             tr.service_secs =
                 tr.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
@@ -845,9 +991,21 @@ impl<'rt> Coordinator<'rt> {
         // degrades to the regeneration path below — same bytes, more work.
         let resumed = match self.resume_ckpts.remove(&id) {
             Some(ck) => match self.factory.start_from_checkpoint(kind, req, &ck) {
-                Ok(session) => {
+                Ok(mut session) => {
                     self.registry.checkpoint_resumes += 1;
                     self.requests[id as usize].resumed_tokens = ck.emitted.len();
+                    // restore the learned policy state and re-arm the
+                    // rebuilt session with its depth (the session itself
+                    // restarted at the config default)
+                    if let Some(ps) = &ck.policy {
+                        if self.policy.enabled() {
+                            self.policy.restore(id, ps.clone());
+                            let d = self.policy.directive_for(id);
+                            if !d.is_noop() {
+                                session.apply_policy(&d);
+                            }
+                        }
+                    }
                     Some(session)
                 }
                 Err(e) => {
@@ -1154,6 +1312,17 @@ impl<'rt> Coordinator<'rt> {
                 .expect("finished id in active set");
             let entry = self.active.remove(idx);
             self.pool.release(id);
+            // fold the final round's speculation counters before the
+            // session is consumed, then drop the controller state (the
+            // per-engine probe keeps what it learned)
+            if self.policy.enabled() {
+                if let Some(obs) = entry.session.spec_observe() {
+                    let kind = entry.session.kind();
+                    let up = self.policy.observe(id, kind, obs);
+                    self.registry.note_spec(kind, &up);
+                }
+                self.policy.finish(id);
+            }
             let result = entry.session.finish();
             let tr = &mut self.requests[id as usize];
             tr.service_secs =

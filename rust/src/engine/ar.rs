@@ -224,6 +224,7 @@ impl EngineSession for ArSession<'_> {
             committed: self.target.cache.committed,
             pending: self.target.cache.pending.clone(),
             rng: self.rng.state(),
+            policy: None,
         }))
     }
 

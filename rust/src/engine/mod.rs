@@ -37,6 +37,7 @@ pub use self::plan::{Drive, KernelPlan};
 use crate::config::{Config, EngineKind};
 use crate::kvstore::{KvCtx, KvStore, PagedState};
 use crate::metrics::GenStats;
+use crate::policy::{PolicyDirective, PolicyState, SpecObservation};
 use crate::model::bucket_need;
 use crate::tokenizer::is_eos;
 
@@ -102,6 +103,11 @@ pub struct SessionCheckpoint {
     pub pending: Vec<usize>,
     /// sampling RNG state (exact stream continuation for temperature > 0)
     pub rng: u64,
+    /// adaptive-policy controller state at the checkpoint (DESIGN.md
+    /// §16): a failed-over session resumes with its learned draft depth
+    /// and drift instead of resetting to defaults. `None` when the
+    /// policy layer is off or never observed the session.
+    pub policy: Option<PolicyState>,
 }
 
 impl SessionCheckpoint {
@@ -170,6 +176,23 @@ pub trait EngineSession {
     fn checkpoint(&self) -> Result<Option<SessionCheckpoint>> {
         Ok(None)
     }
+
+    // --- policy hooks (adaptive speculation, DESIGN.md §16) -------------
+
+    /// Cumulative speculation counters for the policy layer. `None`
+    /// means the session has nothing to report (plain `ar`, foreign
+    /// sessions) and the coordinator skips policy tracking for it.
+    fn spec_observe(&self) -> Option<SpecObservation> {
+        None
+    }
+
+    /// Apply a policy directive between steps (the session is always at
+    /// a round boundary when the coordinator calls this). Engines clamp
+    /// the depth to their own hard limits and ignore overrides that
+    /// would break their output contract — losslessness-pinned engines
+    /// refuse depth changes at temperature > 0, where a different draft
+    /// shape would perturb the sampling RNG stream.
+    fn apply_policy(&mut self, _d: &PolicyDirective) {}
 
     // --- plan/apply protocol (batched execution, DESIGN.md §12) ---------
 

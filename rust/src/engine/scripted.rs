@@ -15,6 +15,7 @@ use anyhow::{bail, Result};
 
 use crate::config::EngineKind;
 use crate::metrics::GenStats;
+use crate::policy::{PolicyDirective, SpecObservation};
 
 use super::{
     EngineSession, GenRequest, GenResult, SessionCheckpoint, SessionFactory, SessionOut,
@@ -23,6 +24,99 @@ use super::{
 
 fn token_at(i: usize) -> u32 {
     (b'a' + (i % 26) as u8) as u32
+}
+
+/// Scripted speculation dynamics: a deterministic acceptance stream plus
+/// a virtual-time cost model, so scheduler tests and `bench policy` can
+/// exercise the adaptive policy loop (DESIGN.md §16) without models or
+/// wall clocks.
+///
+/// Each round the session drafts `depth` tokens; the acceptance ceiling
+/// for the round is `accepts[round % accepts.len()]`, optionally decayed
+/// by drift (`rounds_since_refresh / decay_every`), and the round commits
+/// `min(depth, ceiling)` drafted tokens plus one bonus. Costs are
+/// *virtual* — they accrue to `GenStats::decode_secs` without sleeping —
+/// so simulated tok/s is a pure function of the policy's decisions.
+#[derive(Debug, Clone)]
+pub struct SpecSim {
+    /// per-round acceptance ceilings, cycled
+    pub accepts: Vec<usize>,
+    /// every N partial rounds since the last refresh the ceiling drops
+    /// by one (0 = no drift)
+    pub decay_every: usize,
+    /// initial draft depth
+    pub depth: usize,
+    /// fixed refresh cadence in rounds (0 = drift/policy only)
+    pub refresh_every: usize,
+    /// virtual cost per drafted token (µs)
+    pub draft_us: f64,
+    /// virtual cost per verification round (µs)
+    pub verify_us: f64,
+    /// virtual cost of a full-verification refresh (µs)
+    pub refresh_us: f64,
+}
+
+impl Default for SpecSim {
+    fn default() -> Self {
+        SpecSim {
+            accepts: vec![4],
+            decay_every: 0,
+            depth: 4,
+            refresh_every: 0,
+            draft_us: 10.0,
+            verify_us: 100.0,
+            refresh_us: 400.0,
+        }
+    }
+}
+
+/// Live speculation state for one scripted session driven by a [`SpecSim`].
+#[derive(Debug, Clone)]
+struct SpecSimState {
+    sim: SpecSim,
+    depth: usize,
+    round: usize,
+    rounds_since_refresh: usize,
+    force_refresh: bool,
+    proposed: u64,
+    committed: u64,
+    partial_steps: u64,
+    refresh_steps: u64,
+}
+
+impl SpecSimState {
+    fn new(sim: SpecSim) -> SpecSimState {
+        let depth = sim.depth.max(1);
+        SpecSimState {
+            sim,
+            depth,
+            round: 0,
+            rounds_since_refresh: 0,
+            force_refresh: false,
+            proposed: 0,
+            committed: 0,
+            partial_steps: 0,
+            refresh_steps: 0,
+        }
+    }
+
+    /// Whether this sim models a refreshable partial state at all: with
+    /// no drift decay and no fixed cadence a refresh restores nothing, so
+    /// the session reports no partial rounds and `pv_len = 0` (a pure
+    /// acceptance simulator, like a non-SpecPV engine).
+    fn models_refresh(&self) -> bool {
+        self.sim.decay_every > 0 || self.sim.refresh_every > 0
+    }
+
+    /// Acceptance ceiling for the current round after drift decay.
+    fn ceiling(&self) -> usize {
+        let base = self.sim.accepts[self.round % self.sim.accepts.len()];
+        if self.sim.decay_every == 0 {
+            base
+        } else {
+            base.saturating_sub(self.rounds_since_refresh / self.sim.decay_every)
+        }
+    }
 }
 
 pub struct ScriptedSession {
@@ -37,6 +131,8 @@ pub struct ScriptedSession {
     step_micros: u64,
     /// simulated resident state bytes (KV-pool admission tests)
     state_bytes: usize,
+    /// scripted speculation dynamics (policy-loop tests and `bench policy`)
+    spec: Option<SpecSimState>,
     stats: GenStats,
 }
 
@@ -58,6 +154,7 @@ impl ScriptedSession {
             fail_at_step,
             step_micros: 0,
             state_bytes: 0,
+            spec: None,
             stats,
         }
     }
@@ -69,6 +166,13 @@ impl ScriptedSession {
 
     pub fn with_state_bytes(mut self, bytes: usize) -> ScriptedSession {
         self.state_bytes = bytes;
+        self
+    }
+
+    /// Drive the session by a [`SpecSim`] acceptance stream instead of
+    /// the fixed `tokens_per_step` cadence.
+    pub fn with_spec(mut self, sim: SpecSim) -> ScriptedSession {
+        self.spec = Some(SpecSimState::new(sim));
         self
     }
 
@@ -94,8 +198,49 @@ impl ScriptedSession {
             fail_at_step: None,
             step_micros: 0,
             state_bytes: 0,
+            spec: None,
             stats,
         }
+    }
+
+    /// One speculation round under the [`SpecSim`] dynamics: refresh if
+    /// due (fixed cadence or policy-forced), then commit
+    /// `min(depth, ceiling)` drafted tokens + 1 bonus at virtual cost.
+    fn spec_round(&mut self) {
+        let s = self.spec.as_mut().expect("spec_round without SpecSim");
+        let mut cost_us = 0.0;
+        if s.models_refresh() {
+            let refresh_due = s.force_refresh
+                || (s.sim.refresh_every > 0
+                    && s.rounds_since_refresh >= s.sim.refresh_every);
+            if refresh_due {
+                s.force_refresh = false;
+                s.rounds_since_refresh = 0;
+                s.refresh_steps += 1;
+                self.stats.full_steps += 1;
+                cost_us += s.sim.refresh_us;
+            } else {
+                s.partial_steps += 1;
+            }
+        } else {
+            s.force_refresh = false;
+        }
+        let accepted = s.depth.min(s.ceiling());
+        s.round += 1;
+        s.rounds_since_refresh += 1;
+        s.proposed += s.depth as u64;
+        cost_us += s.depth as f64 * s.sim.draft_us + s.sim.verify_us;
+
+        let base = self.out.len();
+        let drafted: Vec<u32> = (0..accepted).map(|i| token_at(base + i)).collect();
+        let bonus = token_at(base + drafted.len());
+        let kept = self.out.push_round(&drafted, bonus);
+        let s = self.spec.as_mut().expect("spec state");
+        s.committed += kept.saturating_sub(1) as u64;
+        self.steps += 1;
+        self.stats.verify_steps += 1;
+        self.stats.accepted_total += kept;
+        self.stats.decode_secs += cost_us * 1e-6;
     }
 }
 
@@ -120,17 +265,21 @@ impl EngineSession for ScriptedSession {
             std::thread::sleep(std::time::Duration::from_micros(self.step_micros));
         }
         if !self.out.done {
-            // a "round": tokens_per_step-1 drafted + 1 bonus, like a spec
-            // engine with a fixed acceptance length
-            let base = self.out.len();
-            let drafted: Vec<u32> =
-                (0..self.tokens_per_step - 1).map(|i| token_at(base + i)).collect();
-            let bonus = token_at(base + drafted.len());
-            let kept = self.out.push_round(&drafted, bonus);
-            self.steps += 1;
-            self.stats.verify_steps += 1;
-            self.stats.accepted_total += kept;
-            self.stats.decode_secs += 1e-6;
+            if self.spec.is_some() {
+                self.spec_round();
+            } else {
+                // a "round": tokens_per_step-1 drafted + 1 bonus, like a
+                // spec engine with a fixed acceptance length
+                let base = self.out.len();
+                let drafted: Vec<u32> =
+                    (0..self.tokens_per_step - 1).map(|i| token_at(base + i)).collect();
+                let bonus = token_at(base + drafted.len());
+                let kept = self.out.push_round(&drafted, bonus);
+                self.steps += 1;
+                self.stats.verify_steps += 1;
+                self.stats.accepted_total += kept;
+                self.stats.decode_secs += 1e-6;
+            }
         }
         Ok(self.out.outcome())
     }
@@ -145,6 +294,33 @@ impl EngineSession for ScriptedSession {
     // device state to export — only the synthetic pool footprint below)
     fn state_bytes(&self) -> usize {
         self.state_bytes
+    }
+
+    fn spec_observe(&self) -> Option<SpecObservation> {
+        let s = self.spec.as_ref()?;
+        Some(SpecObservation {
+            proposed: s.proposed,
+            committed: s.committed,
+            verify_steps: self.stats.verify_steps as u64,
+            full_steps: self.stats.full_steps as u64,
+            partial_steps: s.partial_steps,
+            refresh_steps: s.refresh_steps,
+            context_len: self.out.len(),
+            depth: s.depth,
+            // rounds since the last full verify stand in for the pv
+            // chain length: non-zero exactly when a refresh would do work
+            pv_len: if s.models_refresh() { s.rounds_since_refresh } else { 0 },
+        })
+    }
+
+    fn apply_policy(&mut self, d: &PolicyDirective) {
+        let Some(s) = self.spec.as_mut() else { return };
+        if let Some(depth) = d.draft_depth {
+            s.depth = depth.max(1);
+        }
+        if d.force_refresh {
+            s.force_refresh = true;
+        }
     }
 
     fn checkpoint(&self) -> Result<Option<SessionCheckpoint>> {
@@ -162,6 +338,7 @@ impl EngineSession for ScriptedSession {
             committed: 0,
             pending: Vec::new(),
             rng: 0,
+            policy: None,
         }))
     }
 }
@@ -182,6 +359,9 @@ pub struct ScriptedFactory {
     /// simulated resident bytes per session (reported by both
     /// `estimate_bytes` and the live session — KV-pool admission tests)
     pub session_bytes: usize,
+    /// when set, sessions run the [`SpecSim`] acceptance stream instead
+    /// of the fixed `tokens_per_step` cadence
+    pub spec: Option<SpecSim>,
 }
 
 impl Default for ScriptedFactory {
@@ -192,6 +372,7 @@ impl Default for ScriptedFactory {
             fail_start_marker: None,
             fail_step_marker: None,
             session_bytes: 0,
+            spec: None,
         }
     }
 }
@@ -211,11 +392,13 @@ impl SessionFactory<'static> for ScriptedFactory {
             .fail_step_marker
             .filter(|m| req.prompt.contains(m))
             .map(|_| 0usize);
-        Ok(Box::new(
-            ScriptedSession::new(kind, req, self.tokens_per_step, fail_at)
-                .with_step_micros(self.step_micros)
-                .with_state_bytes(self.session_bytes),
-        ))
+        let mut s = ScriptedSession::new(kind, req, self.tokens_per_step, fail_at)
+            .with_step_micros(self.step_micros)
+            .with_state_bytes(self.session_bytes);
+        if let Some(sim) = &self.spec {
+            s = s.with_spec(sim.clone());
+        }
+        Ok(Box::new(s))
     }
 
     fn estimate_bytes(&self, _kind: EngineKind, _req: &GenRequest) -> usize {
@@ -228,11 +411,15 @@ impl SessionFactory<'static> for ScriptedFactory {
         req: &GenRequest,
         ck: &SessionCheckpoint,
     ) -> Result<Box<dyn EngineSession + 'static>> {
-        Ok(Box::new(
-            ScriptedSession::resumed(kind, req, self.tokens_per_step, ck)
-                .with_step_micros(self.step_micros)
-                .with_state_bytes(self.session_bytes),
-        ))
+        let mut s = ScriptedSession::resumed(kind, req, self.tokens_per_step, ck)
+            .with_step_micros(self.step_micros)
+            .with_state_bytes(self.session_bytes);
+        if let Some(sim) = &self.spec {
+            // sim counters restart at zero; the coordinator's restored
+            // PolicyState resets its delta base to match (DESIGN.md §16)
+            s = s.with_spec(sim.clone());
+        }
+        Ok(Box::new(s))
     }
 }
 
@@ -294,6 +481,82 @@ mod tests {
         }
         assert_eq!(streamed, reference);
         assert_eq!(Box::new(r).finish().tokens, reference);
+    }
+
+    #[test]
+    fn spec_sim_acceptance_stream_and_directives() {
+        let req = GenRequest::greedy(vec![1], 200);
+        let sim = SpecSim {
+            accepts: vec![4],
+            depth: 4,
+            refresh_every: 3,
+            ..SpecSim::default()
+        };
+        let mut s = ScriptedSession::new(EngineKind::SpecPv, &req, 1, None)
+            .with_spec(sim.clone());
+        for _ in 0..6 {
+            s.step().unwrap();
+        }
+        let o = s.spec_observe().unwrap();
+        assert_eq!(o.proposed, 24, "6 rounds × depth 4");
+        assert_eq!(o.committed, 24, "ceiling = depth → every draft accepted");
+        assert_eq!(o.refresh_steps, 1, "fixed cadence fires once in 6 rounds");
+        assert_eq!(o.partial_steps, 5);
+        assert_eq!(o.depth, 4);
+
+        // a depth directive takes effect on the next round
+        s.apply_policy(&PolicyDirective { draft_depth: Some(2), force_refresh: false });
+        s.step().unwrap();
+        let o2 = s.spec_observe().unwrap();
+        assert_eq!(o2.proposed - o.proposed, 2);
+        assert_eq!(o2.committed - o.committed, 2);
+
+        // a forced refresh fires exactly once, then the flag clears
+        let before = s.spec_observe().unwrap().refresh_steps;
+        s.apply_policy(&PolicyDirective { draft_depth: None, force_refresh: true });
+        s.step().unwrap();
+        s.step().unwrap();
+        assert_eq!(s.spec_observe().unwrap().refresh_steps, before + 1);
+
+        // byte-determinism: an identical run emits the identical stream
+        let mut a = ScriptedSession::new(EngineKind::SpecPv, &req, 1, None)
+            .with_spec(sim.clone());
+        let mut b = ScriptedSession::new(EngineKind::SpecPv, &req, 1, None)
+            .with_spec(sim);
+        while !a.is_finished() {
+            assert_eq!(
+                a.step().unwrap().new_tokens,
+                b.step().unwrap().new_tokens
+            );
+        }
+        assert!(b.is_finished());
+    }
+
+    #[test]
+    fn spec_sim_drift_decays_acceptance_until_refresh() {
+        let req = GenRequest::greedy(vec![1], 400);
+        let sim = SpecSim {
+            accepts: vec![4],
+            depth: 4,
+            decay_every: 2,
+            refresh_every: 0,
+            ..SpecSim::default()
+        };
+        let mut s =
+            ScriptedSession::new(EngineKind::SpecPv, &req, 1, None).with_spec(sim);
+        // rounds 0..6: ceiling decays 4,4,3,3,2,2 as drift accumulates
+        let mut kept = Vec::new();
+        for _ in 0..6 {
+            let before = s.emitted();
+            s.step().unwrap();
+            kept.push(s.emitted() - before - 1);
+        }
+        assert_eq!(kept, vec![4, 4, 3, 3, 2, 2]);
+        // a refresh restores the ceiling
+        s.apply_policy(&PolicyDirective { draft_depth: None, force_refresh: true });
+        let before = s.emitted();
+        s.step().unwrap();
+        assert_eq!(s.emitted() - before - 1, 4);
     }
 
     #[test]

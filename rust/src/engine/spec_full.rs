@@ -24,6 +24,7 @@ use super::eagle::{DraftInputs, DraftTreeRun};
 use super::plan::{exec_single, Drive, KernelPlan, OpClass};
 use super::session::{DraftSession, TargetSession};
 use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
+use crate::policy::{PolicyDirective, SpecObservation};
 
 pub struct SpecFullEngine {
     cfg: Config,
@@ -97,6 +98,8 @@ pub struct SpecFullSession<'rt> {
     phase: Phase,
     pending: Option<KernelPlan>,
     sw: Stopwatch,
+    /// draft tokens offered to verification (policy layer, DESIGN.md §16)
+    proposed: u64,
 }
 
 impl Engine for SpecFullEngine {
@@ -152,6 +155,7 @@ impl Engine for SpecFullEngine {
             phase: Phase::Idle,
             pending: None,
             sw: Stopwatch::new(),
+            proposed: 0,
         }))
     }
 }
@@ -264,6 +268,7 @@ impl EngineSession for SpecFullSession<'_> {
                         );
                     }
                     self.stats.verify_steps += 1;
+                    self.proposed += self.cfg.tree_depth as u64;
                     let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
                     self.stats.accepted_total += kept;
                     self.stats.full_steps += 1;
@@ -301,6 +306,38 @@ impl EngineSession for SpecFullSession<'_> {
         match &self.phase {
             Phase::Draft(_) => self.draft.state = state,
             _ => self.target.state = state,
+        }
+    }
+
+    fn spec_observe(&self) -> Option<SpecObservation> {
+        Some(SpecObservation {
+            proposed: self.proposed,
+            committed: self.stats.accepted_total as u64,
+            verify_steps: self.stats.verify_steps as u64,
+            full_steps: self.stats.full_steps as u64,
+            partial_steps: 0,
+            refresh_steps: 0,
+            context_len: self.prompt_len + self.out.len(),
+            depth: self.cfg.tree_depth,
+            pv_len: 0,
+        })
+    }
+
+    fn apply_policy(&mut self, d: &PolicyDirective) {
+        // losslessness contract: at temperature > 0 verification draws
+        // one RNG sample per tree node, so a different draft shape would
+        // shift the sampling stream and change output — keep it pinned.
+        // At greedy the picks are pure argmax and the depth only decides
+        // how far ahead each round reaches, never which tokens commit.
+        if self.temperature > 0.0 {
+            return;
+        }
+        if let Some(depth) = d.draft_depth {
+            // next round's catch-up chain is the accepted path (≤ depth
+            // tokens) plus the bonus — it must fit the compiled draft
+            // chain window
+            let cap = self.consts.draft_w.saturating_sub(2).max(1);
+            self.cfg.tree_depth = depth.clamp(1, cap);
         }
     }
 

@@ -41,6 +41,7 @@ use super::plan::{exec_single, Drive, KernelPlan, OpClass};
 use super::session::{DraftSession, PartialSession, TargetSession};
 use super::spec_full::{accept_round, tree_picks, RoundAccept};
 use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
+use crate::policy::{PolicyDirective, SpecObservation};
 
 pub struct SpecPvEngine {
     cfg: Config,
@@ -93,6 +94,12 @@ pub struct SpecPvSession<'rt> {
     phase: Phase,
     pending: Option<KernelPlan>,
     sw: Stopwatch,
+    /// draft tokens offered to verification (policy layer, DESIGN.md §16)
+    proposed: u64,
+    /// drift-triggered refresh requested by the policy layer: the next
+    /// SelectMode skips the Partial branch so the refresh (or an exact
+    /// Full round) runs ahead of the buffer-cap cadence
+    refresh_due: bool,
 }
 
 impl Engine for SpecPvEngine {
@@ -162,6 +169,8 @@ impl Engine for SpecPvEngine {
             phase: Phase::Idle,
             pending: None,
             sw: Stopwatch::new(),
+            proposed: 0,
+            refresh_due: false,
         }))
     }
 }
@@ -265,7 +274,8 @@ impl EngineSession for SpecPvSession<'_> {
                         // --- SelectMode (Alg. 1) ------------------------
                         let core_needed =
                             self.cfg.specpv.core_tokens(self.consts.block);
-                        if self.partial.ready()
+                        if !self.refresh_due
+                            && self.partial.ready()
                             && self.partial.cache.fits(flat.n, self.consts.prev_max())
                         {
                             let plan = self.partial.plan_verify_tree(&flat, root_pos)?;
@@ -318,6 +328,7 @@ impl EngineSession for SpecPvSession<'_> {
                         tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
                     let acc = accept_round(&tree, &picks);
                     self.stats.verify_steps += 1;
+                    self.proposed += self.cfg.tree_depth as u64;
                     self.stats.full_steps += 1;
                     let mut rows = vec![0usize];
                     rows.extend(&acc.path_idx);
@@ -332,6 +343,7 @@ impl EngineSession for SpecPvSession<'_> {
                         tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
                     let acc = accept_round(&tree, &picks);
                     self.stats.verify_steps += 1;
+                    self.proposed += self.cfg.tree_depth as u64;
                     self.stats.partial_steps += 1;
                     let mut rows = vec![0usize];
                     rows.extend(&acc.path_idx);
@@ -351,7 +363,9 @@ impl EngineSession for SpecPvSession<'_> {
                         tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
                     let acc = accept_round(&tree, &picks);
                     self.stats.verify_steps += 1;
+                    self.proposed += self.cfg.tree_depth as u64;
                     self.stats.refresh_steps += 1;
+                    self.refresh_due = false;
                     // commit: pv chain ++ root ++ accepted path (window-
                     // relative rows)
                     let mut rows: Vec<usize> = (0..=n_chain).collect();
@@ -397,6 +411,32 @@ impl EngineSession for SpecPvSession<'_> {
             Phase::Draft(_) => self.draft.state = state,
             Phase::VerifyPartial { .. } => self.partial.state = Some(state),
             _ => self.target.state = state,
+        }
+    }
+
+    fn spec_observe(&self) -> Option<SpecObservation> {
+        Some(SpecObservation {
+            proposed: self.proposed,
+            committed: self.stats.accepted_total as u64,
+            verify_steps: self.stats.verify_steps as u64,
+            full_steps: self.stats.full_steps as u64,
+            partial_steps: self.stats.partial_steps as u64,
+            refresh_steps: self.stats.refresh_steps as u64,
+            context_len: self.prompt_len + self.out.len(),
+            depth: self.cfg.tree_depth,
+            pv_len: self.pv.len(),
+        })
+    }
+
+    fn apply_policy(&mut self, d: &PolicyDirective) {
+        // SpecPV is the approximate engine — no losslessness contract to
+        // protect; depth adapts at any temperature
+        if let Some(depth) = d.draft_depth {
+            let cap = self.consts.draft_w.saturating_sub(2).max(1);
+            self.cfg.tree_depth = depth.clamp(1, cap);
+        }
+        if d.force_refresh {
+            self.refresh_due = true;
         }
     }
 

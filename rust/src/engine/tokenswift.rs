@@ -27,6 +27,7 @@ use super::plan::{exec_single, Drive, KernelPlan};
 use super::session::TargetSession;
 use super::spec_full::{accept_round, tree_picks};
 use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
+use crate::policy::SpecObservation;
 
 pub struct TokenSwiftEngine {
     cfg: Config,
@@ -92,6 +93,8 @@ pub struct TokenSwiftSession<'rt> {
     phase: Phase,
     pending: Option<KernelPlan>,
     sw: Stopwatch,
+    /// draft tokens offered to verification (policy layer, DESIGN.md §16)
+    proposed: u64,
 }
 
 impl Engine for TokenSwiftEngine {
@@ -145,6 +148,7 @@ impl Engine for TokenSwiftEngine {
             phase: Phase::Idle,
             pending: None,
             sw: Stopwatch::new(),
+            proposed: 0,
         }))
     }
 }
@@ -210,6 +214,7 @@ impl EngineSession for TokenSwiftSession<'_> {
                         tree_picks(&tree, &read, 0, self.temperature, &mut self.rng);
                     let acc = accept_round(&tree, &picks);
                     self.stats.verify_steps += 1;
+                    self.proposed += flat_n.saturating_sub(1) as u64;
                     self.stats.full_steps += 1;
 
                     let kept = self.out.push_round(&acc.path_tokens, acc.bonus);
@@ -237,6 +242,23 @@ impl EngineSession for TokenSwiftSession<'_> {
 
     fn restore_pending(&mut self, state: StateBuf) {
         self.target.state = state;
+    }
+
+    /// Observe-only: the Medusa tree shape is fixed by the head count, so
+    /// the session reports acceptance but ignores depth directives
+    /// (`apply_policy` keeps its default no-op).
+    fn spec_observe(&self) -> Option<SpecObservation> {
+        Some(SpecObservation {
+            proposed: self.proposed,
+            committed: self.stats.accepted_total as u64,
+            verify_steps: self.stats.verify_steps as u64,
+            full_steps: self.stats.full_steps as u64,
+            partial_steps: 0,
+            refresh_steps: 0,
+            context_len: self.prompt_len + self.out.len(),
+            depth: 3,
+            pv_len: 0,
+        })
     }
 
     fn finish(self: Box<Self>) -> GenResult {

@@ -31,6 +31,7 @@ use crate::util::Stopwatch;
 use super::plan::{exec_single, Drive, KernelPlan, OpClass};
 use super::session::{TargetSession, TinySession};
 use super::{Engine, EngineSession, GenRequest, GenResult, SessionOut, StepOutcome};
+use crate::policy::{PolicyDirective, SpecObservation};
 
 pub struct TriForceEngine {
     cfg: Config,
@@ -83,6 +84,8 @@ pub struct TriForceSession<'rt> {
     phase: Phase,
     pending: Option<KernelPlan>,
     sw: Stopwatch,
+    /// draft tokens offered to verification (policy layer, DESIGN.md §16)
+    proposed: u64,
 }
 
 impl Engine for TriForceEngine {
@@ -134,6 +137,7 @@ impl Engine for TriForceEngine {
             phase: Phase::Idle,
             pending: None,
             sw: Stopwatch::new(),
+            proposed: 0,
         }))
     }
 }
@@ -245,6 +249,7 @@ impl EngineSession for TriForceSession<'_> {
                         );
                     }
                     self.stats.verify_steps += 1;
+                    self.proposed += gamma as u64;
                     self.stats.full_steps += 1;
 
                     let kept = self.out.push_round(&chain[1..=accepted], next);
@@ -274,6 +279,38 @@ impl EngineSession for TriForceSession<'_> {
         match &self.phase {
             Phase::Tiny { .. } => self.tiny.state = state,
             _ => self.target.state = state,
+        }
+    }
+
+    fn spec_observe(&self) -> Option<SpecObservation> {
+        Some(SpecObservation {
+            proposed: self.proposed,
+            committed: self.stats.accepted_total as u64,
+            verify_steps: self.stats.verify_steps as u64,
+            full_steps: self.stats.full_steps as u64,
+            partial_steps: 0,
+            refresh_steps: 0,
+            context_len: self.prompt_len + self.out.len(),
+            depth: self.gamma,
+            pv_len: 0,
+        })
+    }
+
+    fn apply_policy(&mut self, d: &PolicyDirective) {
+        // losslessness contract: at temperature > 0 both the tiny-LM
+        // draft (γ draws) and the verify walk consume the shared
+        // sampling RNG, so a different γ would shift the stream — keep
+        // it pinned. At greedy every pick is pure argmax: γ only bounds
+        // how far a round reaches, the committed tokens are always the
+        // target's greedy continuation.
+        if self.temperature > 0.0 {
+            return;
+        }
+        if let Some(depth) = d.draft_depth {
+            // the drafted chain is γ+1 tokens padded into the compiled
+            // tree window
+            let cap = self.consts.tree_t.saturating_sub(1).max(1);
+            self.gamma = depth.clamp(1, cap);
         }
     }
 

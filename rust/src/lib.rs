@@ -33,6 +33,7 @@ pub mod manifest;
 pub mod metrics;
 pub mod model;
 pub mod offload;
+pub mod policy;
 pub mod retrieval;
 pub mod runtime;
 pub mod sampling;

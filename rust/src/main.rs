@@ -26,6 +26,12 @@
 //!                 # sweeps batch 1/2/4/8 concurrent sessions, reports
 //!                 # aggregate tok/s + p95 step latency, writes
 //!                 # BENCH_serve.json; fails unless batch=4 beats batch=1
+//! specpv bench policy [--quick] [--check]  # adaptive speculation
+//!                 # policy sweep (virtual time): adaptive vs fixed depth
+//!                 # + fixed refresh period on short/long/drifty scripted
+//!                 # workloads; writes BENCH_policy.json; --check fails
+//!                 # unless adaptive >= best fixed on every workload and
+//!                 # strictly beats the fixed refresh period on drifty
 //! specpv inspect  # backend / artifact catalog summary
 //! ```
 //! Common flags: `--artifacts DIR --size s|m|l --engine E --budget N
@@ -173,6 +179,16 @@ fn main() -> Result<()> {
                 // concurrent sessions, writes BENCH_serve.json, fails
                 // unless batch=4 beats batch=1 aggregate tok/s
                 return specpv::bench::serve::run(&out, cli.has_flag("quick"), cfg.threads);
+            }
+            if id == "policy" {
+                // adaptive speculation policy sweep in virtual time:
+                // adaptive vs fixed depth / fixed refresh period on the
+                // short/long/drifty scripted workloads
+                return specpv::bench::policy::run(
+                    &out,
+                    cli.has_flag("quick"),
+                    cli.has_flag("check"),
+                );
             }
             let be = backend::from_config(&cfg)?;
             harness::run_experiment(be.as_ref(), &cfg, &id, &out, cli.has_flag("quick"))?;

@@ -1,0 +1,492 @@
+//! Adaptive speculation policy (DESIGN.md §16): the feedback layer that
+//! closes the loop between observed decode behaviour and the speculation
+//! hyperparameters the repo previously hard-coded.
+//!
+//! Per active session the coordinator polls a cumulative
+//! [`SpecObservation`] each tick (committed vs proposed draft tokens,
+//! full/partial/refresh round counts, context length) and folds the
+//! delta into a [`PolicyState`]. A deterministic controller — a pure
+//! function of the observed stream, no wall clock and no global RNG —
+//! then emits a [`PolicyDirective`]:
+//!
+//! * **depth**: the draft depth grows while the acceptance EWMA stays at
+//!   or above `policy_grow` and shrinks at or below `policy_shrink`,
+//!   never leaving `[draft_min, draft_max]` (property-tested);
+//! * **refresh**: SpecPV's full-verification refresh fires when the
+//!   accumulated acceptance shortfall over partial rounds crosses
+//!   `drift_threshold`, instead of waiting for the fixed buffer-cap
+//!   cadence (which remains as the fallback ceiling);
+//! * **engine**: `engine=auto` picks ar / triforce / spec_pv per request
+//!   from the prompt length, vetoed down to `ar` when the candidate's
+//!   observed acceptance probe has collapsed.
+//!
+//! Engines stay in charge of their own contracts: a losslessness-pinned
+//! engine ignores depth overrides whenever applying one could perturb
+//! its sampling RNG stream (temperature > 0), so `policy=adaptive`
+//! output is byte-identical to `policy=off` on those engines.
+
+use std::collections::HashMap;
+
+use crate::config::{EngineKind, PolicyConfig, PolicyMode};
+
+/// Cumulative speculation counters a session exposes to the policy
+/// layer (`EngineSession::spec_observe`). All fields are monotone
+/// counters except the gauges `context_len`, `depth` and `pv_len`; the
+/// controller diffs consecutive snapshots.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecObservation {
+    /// draft tokens offered to verification so far
+    pub proposed: u64,
+    /// draft tokens accepted (committed to the output) so far
+    pub committed: u64,
+    /// draft→verify→accept rounds completed
+    pub verify_steps: u64,
+    /// rounds verified against the full KV cache
+    pub full_steps: u64,
+    /// rounds verified against the partial cache (SpecPV)
+    pub partial_steps: u64,
+    /// full-verification refreshes taken (SpecPV)
+    pub refresh_steps: u64,
+    /// gauge: prompt + emitted tokens
+    pub context_len: usize,
+    /// gauge: the engine's current draft depth (tree depth / chain γ)
+    pub depth: usize,
+    /// gauge: partially-verified tokens awaiting a refresh (SpecPV)
+    pub pv_len: usize,
+}
+
+/// What the controller asks an engine to do next
+/// (`EngineSession::apply_policy`). The default (no depth override, no
+/// forced refresh) is a no-op.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PolicyDirective {
+    /// pin the draft depth (tree depth / chain γ) to this value; engines
+    /// clamp to their own hard limits and ignore the override entirely
+    /// when honouring it could break their output contract
+    pub draft_depth: Option<usize>,
+    /// SpecPV: take a full-verification refresh at the next opportunity
+    /// instead of waiting for the buffer-cap cadence
+    pub force_refresh: bool,
+}
+
+impl PolicyDirective {
+    pub fn is_noop(&self) -> bool {
+        self.draft_depth.is_none() && !self.force_refresh
+    }
+}
+
+/// Per-session controller state. Serialized into `SessionCheckpoint` so
+/// a failed-over session resumes with its learned depth and drift
+/// instead of resetting to defaults (DESIGN.md §15/§16).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyState {
+    /// EWMA of the per-round acceptance ratio committed/proposed
+    pub accept_ewma: f64,
+    /// accumulated acceptance shortfall over partial rounds since the
+    /// last refresh (the partial-vs-full divergence proxy: drafts the
+    /// partial cache rejects that a tracking cache would have kept)
+    pub drift: f64,
+    /// current commanded draft depth (0 until the first observation
+    /// adopts the engine's own depth, clamped into bounds)
+    pub depth: usize,
+    /// verify rounds folded in
+    pub rounds: u64,
+    /// rounds since the last depth adjustment window closed
+    pub since_adjust: u64,
+    /// lifetime: depth moves taken by this session
+    pub depth_changes: u64,
+    /// lifetime: drift-triggered refreshes requested
+    pub forced_refreshes: u64,
+    /// a forced refresh was issued and has not been observed yet
+    pub refresh_pending: bool,
+    /// the cumulative snapshot at the previous tick (delta base)
+    pub last: SpecObservation,
+}
+
+impl Default for PolicyState {
+    fn default() -> Self {
+        PolicyState {
+            accept_ewma: 0.0,
+            drift: 0.0,
+            depth: 0,
+            rounds: 0,
+            since_adjust: 0,
+            depth_changes: 0,
+            forced_refreshes: 0,
+            refresh_pending: false,
+            last: SpecObservation::default(),
+        }
+    }
+}
+
+/// The per-tick delta a [`PolicyState::update`] fold produced, plus the
+/// directive. The coordinator feeds the deltas into the registry's
+/// per-engine counters and the `engine=auto` probe.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PolicyUpdate {
+    pub directive: PolicyDirective,
+    pub rounds: u64,
+    pub proposed: u64,
+    pub committed: u64,
+    pub full_steps: u64,
+    pub partial_steps: u64,
+    pub refresh_steps: u64,
+}
+
+impl PolicyState {
+    /// Rebuild controller state from a failover checkpoint: the learned
+    /// depth, EWMA and drift carry over, but the delta base resets — the
+    /// rebuilt session's counters restart from zero.
+    pub fn resumed(mut self) -> PolicyState {
+        self.last = SpecObservation::default();
+        self.refresh_pending = false;
+        self
+    }
+
+    /// Fold one cumulative observation snapshot into the state and
+    /// return the resulting directive. Deterministic: the same
+    /// observation stream always produces the same directive stream.
+    pub fn update(&mut self, cfg: &PolicyConfig, obs: SpecObservation) -> PolicyUpdate {
+        if self.depth == 0 {
+            self.depth = obs.depth.clamp(cfg.draft_min, cfg.draft_max);
+        }
+        let d_rounds = obs.verify_steps.saturating_sub(self.last.verify_steps);
+        let d_prop = obs.proposed.saturating_sub(self.last.proposed);
+        let d_comm = obs.committed.saturating_sub(self.last.committed);
+        let d_full = obs.full_steps.saturating_sub(self.last.full_steps);
+        let d_partial = obs.partial_steps.saturating_sub(self.last.partial_steps);
+        let d_refresh = obs.refresh_steps.saturating_sub(self.last.refresh_steps);
+        self.last = obs;
+        if d_refresh > 0 {
+            // the refresh (forced or cadence) re-anchored the partial
+            // cache on exact state — accumulated drift is gone
+            self.drift = 0.0;
+            self.refresh_pending = false;
+        }
+        if d_rounds > 0 {
+            let ratio = if d_prop == 0 {
+                1.0
+            } else {
+                (d_comm as f64 / d_prop as f64).min(1.0)
+            };
+            for _ in 0..d_rounds {
+                if self.rounds == 0 {
+                    self.accept_ewma = ratio;
+                } else {
+                    self.accept_ewma += cfg.alpha * (ratio - self.accept_ewma);
+                }
+                self.rounds += 1;
+            }
+            self.drift += d_partial as f64 * (1.0 - ratio);
+            self.since_adjust += d_rounds;
+            if cfg.mode == PolicyMode::Adaptive
+                && self.since_adjust >= cfg.adjust_every as u64
+            {
+                self.since_adjust = 0;
+                let next = if self.accept_ewma >= cfg.grow {
+                    (self.depth + 1).min(cfg.draft_max.max(cfg.draft_min))
+                } else if self.accept_ewma <= cfg.shrink {
+                    self.depth.saturating_sub(1).max(cfg.draft_min)
+                } else {
+                    self.depth
+                };
+                if next != self.depth {
+                    self.depth = next;
+                    self.depth_changes += 1;
+                }
+            }
+            if cfg.mode == PolicyMode::Adaptive
+                && !self.refresh_pending
+                && obs.pv_len > 0
+                && self.drift >= cfg.drift_threshold
+            {
+                self.refresh_pending = true;
+                self.forced_refreshes += 1;
+            }
+        }
+        PolicyUpdate {
+            directive: self.directive(cfg),
+            rounds: d_rounds,
+            proposed: d_prop,
+            committed: d_comm,
+            full_steps: d_full,
+            partial_steps: d_partial,
+            refresh_steps: d_refresh,
+        }
+    }
+
+    /// The directive this state currently commands (no-op outside
+    /// adaptive mode or before the first observation).
+    pub fn directive(&self, cfg: &PolicyConfig) -> PolicyDirective {
+        if cfg.mode != PolicyMode::Adaptive || self.depth == 0 {
+            return PolicyDirective::default();
+        }
+        PolicyDirective {
+            draft_depth: Some(self.depth),
+            force_refresh: self.refresh_pending,
+        }
+    }
+}
+
+/// Coordinator-level aggregate acceptance per engine: the `engine=auto`
+/// "early acceptance probe". Accrues across sessions (including
+/// completed ones) so a cold request inherits what the fleet learned.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineProbe {
+    pub rounds: u64,
+    pub accept_ewma: f64,
+}
+
+/// The coordinator-owned policy engine: per-session states plus the
+/// per-engine probe aggregates.
+#[derive(Debug, Default)]
+pub struct PolicyEngine {
+    pub cfg: PolicyConfig,
+    states: HashMap<u64, PolicyState>,
+    probes: HashMap<EngineKind, EngineProbe>,
+    /// lifetime counters (registry mirrors)
+    pub depth_changes: u64,
+    pub forced_refreshes: u64,
+}
+
+impl PolicyEngine {
+    pub fn new(cfg: PolicyConfig) -> PolicyEngine {
+        PolicyEngine { cfg, ..PolicyEngine::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.mode != PolicyMode::Off
+    }
+
+    /// Fold a session's latest cumulative observation; returns the
+    /// directive plus the tick's deltas for the registry counters.
+    pub fn observe(
+        &mut self,
+        id: u64,
+        kind: EngineKind,
+        obs: SpecObservation,
+    ) -> PolicyUpdate {
+        let st = self.states.entry(id).or_default();
+        let before = (st.depth_changes, st.forced_refreshes);
+        let up = st.update(&self.cfg, obs);
+        self.depth_changes += st.depth_changes - before.0;
+        self.forced_refreshes += st.forced_refreshes - before.1;
+        if up.rounds > 0 && up.proposed > 0 {
+            let ratio = (up.committed as f64 / up.proposed as f64).min(1.0);
+            let probe = self.probes.entry(kind).or_default();
+            for _ in 0..up.rounds {
+                if probe.rounds == 0 {
+                    probe.accept_ewma = ratio;
+                } else {
+                    probe.accept_ewma += self.cfg.alpha * (ratio - probe.accept_ewma);
+                }
+                probe.rounds += 1;
+            }
+        }
+        up
+    }
+
+    /// `engine=auto`: pick the engine for a fresh request. Deterministic
+    /// in (prompt length, observation history).
+    pub fn select(&self, prompt_len: usize) -> EngineKind {
+        let cand = if prompt_len >= self.cfg.auto_long {
+            EngineKind::SpecPv
+        } else if prompt_len >= self.cfg.auto_short {
+            EngineKind::TriForce
+        } else {
+            EngineKind::Autoregressive
+        };
+        // acceptance probe: speculation whose observed acceptance has
+        // collapsed decodes slower than plain AR — stop choosing it
+        if cand != EngineKind::Autoregressive {
+            if let Some(p) = self.probes.get(&cand) {
+                if p.rounds >= self.cfg.probe_rounds as u64
+                    && p.accept_ewma <= self.cfg.shrink
+                {
+                    return EngineKind::Autoregressive;
+                }
+            }
+        }
+        cand
+    }
+
+    pub fn state(&self, id: u64) -> Option<&PolicyState> {
+        self.states.get(&id)
+    }
+
+    pub fn probe(&self, kind: EngineKind) -> EngineProbe {
+        self.probes.get(&kind).copied().unwrap_or_default()
+    }
+
+    /// Adopt a checkpointed state for a failed-over session.
+    pub fn restore(&mut self, id: u64, st: PolicyState) {
+        self.states.insert(id, st.resumed());
+    }
+
+    /// The directive a session's current state commands (used to re-arm
+    /// a freshly rebuilt failover session with its learned depth).
+    pub fn directive_for(&self, id: u64) -> PolicyDirective {
+        self.states
+            .get(&id)
+            .map(|st| st.directive(&self.cfg))
+            .unwrap_or_default()
+    }
+
+    /// Drop a terminal session's state (the probe aggregate keeps what
+    /// it learned).
+    pub fn finish(&mut self, id: u64) {
+        self.states.remove(&id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mode: PolicyMode) -> PolicyConfig {
+        PolicyConfig { mode, ..PolicyConfig::default() }
+    }
+
+    fn obs_after(rounds: u64, depth: usize, accept_per_round: u64) -> SpecObservation {
+        SpecObservation {
+            proposed: rounds * depth as u64,
+            committed: rounds * accept_per_round,
+            verify_steps: rounds,
+            full_steps: rounds,
+            depth,
+            context_len: 64 + rounds as usize,
+            ..SpecObservation::default()
+        }
+    }
+
+    #[test]
+    fn depth_grows_on_high_acceptance() {
+        let c = cfg(PolicyMode::Adaptive);
+        let mut st = PolicyState::default();
+        let mut d = 0;
+        for r in 1..=16u64 {
+            let up = st.update(&c, obs_after(r, 3, 3)); // 100% acceptance
+            d = up.directive.draft_depth.unwrap();
+        }
+        assert!(d > 3, "perfect acceptance must deepen the draft (got {d})");
+        assert!(d <= c.draft_max);
+        assert!(st.depth_changes > 0);
+    }
+
+    #[test]
+    fn depth_shrinks_on_low_acceptance() {
+        let c = cfg(PolicyMode::Adaptive);
+        let mut st = PolicyState::default();
+        let mut d = 0;
+        for r in 1..=16u64 {
+            let up = st.update(&c, obs_after(r, 4, 0)); // nothing accepted
+            d = up.directive.draft_depth.unwrap();
+        }
+        assert!(d < 4, "zero acceptance must shallow the draft (got {d})");
+        assert!(d >= c.draft_min);
+    }
+
+    #[test]
+    fn fixed_mode_observes_but_never_directs() {
+        let c = cfg(PolicyMode::Fixed);
+        let mut st = PolicyState::default();
+        for r in 1..=16u64 {
+            let up = st.update(&c, obs_after(r, 3, 3));
+            assert!(up.directive.is_noop(), "fixed mode must not override");
+        }
+        assert!(st.accept_ewma > 0.9, "counters still accrue in fixed mode");
+        assert_eq!(st.depth_changes, 0);
+    }
+
+    #[test]
+    fn drift_triggers_refresh_and_refresh_resets() {
+        let c = PolicyConfig {
+            mode: PolicyMode::Adaptive,
+            drift_threshold: 1.0,
+            ..PolicyConfig::default()
+        };
+        let mut st = PolicyState::default();
+        // partial rounds at 50% acceptance: shortfall 0.5/round
+        let mut obs = SpecObservation { depth: 4, pv_len: 4, ..Default::default() };
+        let mut forced = false;
+        for r in 1..=8u64 {
+            obs.verify_steps = r;
+            obs.partial_steps = r;
+            obs.proposed = 4 * r;
+            obs.committed = 2 * r;
+            obs.pv_len = 2 * r as usize;
+            let up = st.update(&c, obs);
+            forced = forced || up.directive.force_refresh;
+        }
+        assert!(forced, "accumulated shortfall must force a refresh");
+        assert_eq!(st.forced_refreshes, 1, "idempotent until the refresh lands");
+        // the refresh happens: drift and the pending flag clear
+        obs.refresh_steps = 1;
+        obs.verify_steps += 1;
+        obs.full_steps += 1;
+        obs.pv_len = 0;
+        let up = st.update(&c, obs);
+        assert!(!up.directive.force_refresh);
+        assert_eq!(st.drift, 0.0);
+    }
+
+    #[test]
+    fn controller_is_deterministic() {
+        let c = cfg(PolicyMode::Adaptive);
+        let stream: Vec<SpecObservation> =
+            (1..=32u64).map(|r| obs_after(r, 3, (r % 4).min(3))).collect();
+        let run = |stream: &[SpecObservation]| {
+            let mut st = PolicyState::default();
+            let dirs: Vec<PolicyDirective> =
+                stream.iter().map(|o| st.update(&c, *o).directive).collect();
+            (dirs, st)
+        };
+        let (d1, s1) = run(&stream);
+        let (d2, s2) = run(&stream);
+        assert_eq!(d1, d2);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn auto_select_by_prompt_length() {
+        let pe = PolicyEngine::new(cfg(PolicyMode::Adaptive));
+        assert_eq!(pe.select(8), EngineKind::Autoregressive);
+        assert_eq!(pe.select(128), EngineKind::TriForce);
+        assert_eq!(pe.select(2048), EngineKind::SpecPv);
+    }
+
+    #[test]
+    fn auto_probe_vetoes_collapsed_speculation() {
+        let mut pe = PolicyEngine::new(cfg(PolicyMode::Adaptive));
+        // triforce sessions whose drafts never get accepted
+        let mut obs = SpecObservation { depth: 4, ..Default::default() };
+        for r in 1..=16u64 {
+            obs.verify_steps = r;
+            obs.full_steps = r;
+            obs.proposed = 4 * r;
+            obs.committed = 0;
+            pe.observe(7, EngineKind::TriForce, obs);
+        }
+        assert_eq!(
+            pe.select(128),
+            EngineKind::Autoregressive,
+            "collapsed acceptance must fall back to ar"
+        );
+        // spec_pv is a different probe — unaffected
+        assert_eq!(pe.select(2048), EngineKind::SpecPv);
+    }
+
+    #[test]
+    fn resumed_state_keeps_learning_resets_delta_base() {
+        let c = cfg(PolicyMode::Adaptive);
+        let mut st = PolicyState::default();
+        for r in 1..=16u64 {
+            st.update(&c, obs_after(r, 3, 3));
+        }
+        let learned = st.depth;
+        assert!(learned > 3);
+        let rs = st.clone().resumed();
+        assert_eq!(rs.depth, learned, "learned depth survives failover");
+        assert_eq!(rs.last, SpecObservation::default(), "delta base reset");
+    }
+}

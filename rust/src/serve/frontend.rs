@@ -93,6 +93,8 @@ struct AdminAgg {
 struct Retained {
     gen: GenRequest,
     engine: Option<EngineKind>,
+    /// per-request `engine=auto` (policy layer, DESIGN.md §16)
+    auto: bool,
     stream: bool,
     deadline_secs: Option<f64>,
     priority: i32,
@@ -368,7 +370,7 @@ impl Frontend {
                     h.admin(corr, cmd);
                 }
             }
-            Request::Generate { gen, engine, stream, deadline_secs, priority } => {
+            Request::Generate { gen, engine, auto, stream, deadline_secs, priority } => {
                 if self.draining {
                     conn.push_line(
                         Json::obj().set("ok", false).set("error", "server shutting down"),
@@ -396,6 +398,7 @@ impl Frontend {
                 let retained = Retained {
                     gen,
                     engine,
+                    auto,
                     stream,
                     deadline_secs,
                     priority,
@@ -426,6 +429,7 @@ impl Frontend {
             conn: e.conn,
             gen: e.retained.gen.clone(),
             engine: e.retained.engine,
+            auto: e.retained.auto,
             stream: e.retained.stream,
             deadline_secs: e.retained.deadline_secs,
             priority: e.retained.priority,

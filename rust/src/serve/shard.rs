@@ -37,6 +37,8 @@ pub struct SubmitReq {
     pub conn: ConnId,
     pub gen: GenRequest,
     pub engine: Option<EngineKind>,
+    /// per-request `engine=auto` (policy layer, DESIGN.md §16)
+    pub auto: bool,
     pub stream: bool,
     pub deadline_secs: Option<f64>,
     pub priority: i32,
@@ -324,6 +326,7 @@ fn handle_cmd(
                 engine: sr.engine,
                 deadline_secs: sr.deadline_secs,
                 priority: sr.priority,
+                auto: sr.auto,
             };
             match coord.submit_failover(sr.gen, opts, sr.resume.map(|b| *b)) {
                 Ok(local) => {

@@ -48,6 +48,9 @@ pub enum Request {
     Generate {
         gen: GenRequest,
         engine: Option<EngineKind>,
+        /// `"engine":"auto"`: the policy layer picks the engine per
+        /// request (DESIGN.md §16)
+        auto: bool,
         stream: bool,
         deadline_secs: Option<f64>,
         priority: i32,
@@ -108,9 +111,10 @@ pub fn parse_request(raw: &str, defaults: &Defaults) -> Result<Request> {
                 .get("temperature")
                 .and_then(|x| x.as_f64())
                 .unwrap_or(defaults.temperature as f64) as f32;
-            let engine = match req.get("engine").and_then(|x| x.as_str()) {
-                Some(e) => Some(e.parse()?),
-                None => None,
+            let (engine, auto) = match req.get("engine").and_then(|x| x.as_str()) {
+                Some("auto") => (None, true),
+                Some(e) => (Some(e.parse()?), false),
+                None => (None, false),
             };
             let seed = req.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
             let stream =
@@ -133,6 +137,7 @@ pub fn parse_request(raw: &str, defaults: &Defaults) -> Result<Request> {
                     seed,
                 },
                 engine,
+                auto,
                 stream,
                 deadline_secs,
                 priority,
@@ -146,7 +151,7 @@ pub fn parse_request(raw: &str, defaults: &Defaults) -> Result<Request> {
 pub fn metrics_body(coord: &mut Coordinator<'_>) -> Json {
     coord.sync_backend_counters();
     let reg = &coord.registry;
-    Json::obj()
+    let mut body = Json::obj()
         .set("ok", true)
         .set("summary", reg.summary())
         .set(
@@ -185,6 +190,25 @@ pub fn metrics_body(coord: &mut Coordinator<'_>) -> Json {
         .set("deadline_hits", reg.deadline_hits as i64)
         .set("restarts", reg.restarts as i64)
         .set("checkpoint_resumes", reg.checkpoint_resumes as i64)
+        .set("policy", reg.policy_mode.as_str())
+        .set("policy_depth_changes", reg.policy_depth_changes as i64)
+        .set("policy_refreshes", reg.policy_refreshes as i64);
+    // per-engine speculation counters (DESIGN.md §16): flat keys so the
+    // cross-shard merge applies — counters sum, `_tau_mean` /
+    // `_partial_frac` average per `averaged_key`
+    for (k, c) in &reg.spec {
+        body = body
+            .set(&format!("spec_{k}_proposed"), c.proposed as i64)
+            .set(&format!("spec_{k}_committed"), c.committed as i64)
+            .set(&format!("spec_{k}_rounds"), c.rounds as i64)
+            .set(&format!("spec_{k}_refreshes"), c.refresh_steps as i64)
+            .set(&format!("spec_{k}_tau_mean"), c.tau_mean())
+            .set(&format!("spec_{k}_partial_frac"), c.partial_frac());
+    }
+    for (k, n) in &reg.auto_selected {
+        body = body.set(&format!("auto_{k}"), *n as i64);
+    }
+    body
 }
 
 /// The `admin cache` body: prefix cache + swap-tier aggregates.

@@ -12,9 +12,9 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Duration;
 
-use specpv::config::{Config, EngineKind};
-use specpv::coordinator::Coordinator;
-use specpv::engine::scripted::ScriptedFactory;
+use specpv::config::{Config, EngineKind, PolicyConfig, PolicyMode};
+use specpv::coordinator::{Coordinator, SubmitOpts};
+use specpv::engine::scripted::{ScriptedFactory, SpecSim};
 use specpv::engine::GenRequest;
 use specpv::json::Json;
 use specpv::serve::serve_scripted;
@@ -289,6 +289,72 @@ fn dead_connection_reap_releases_parked_requests() {
     parked(&mut admin, 0);
     admin.shutdown().unwrap();
     server.join().unwrap().unwrap();
+}
+
+/// Regression (DESIGN.md §16): a `checkpoint_every_steps` checkpoint
+/// must carry the session's learned `PolicyState`, and a failed-over
+/// session must resume with the learned draft depth instead of
+/// relearning from the config default.
+#[test]
+fn checkpoint_carries_policy_state_and_failover_resumes_learned_depth() {
+    let policy = PolicyConfig {
+        mode: PolicyMode::Adaptive,
+        draft_min: 1,
+        draft_max: 6,
+        alpha: 0.5,
+        grow: 0.8,
+        shrink: 0.35,
+        adjust_every: 1,
+        ..PolicyConfig::default()
+    };
+    let cfg = Config {
+        engine: EngineKind::SpecPv,
+        max_active: 1,
+        policy,
+        ..Config::default()
+    };
+    // steady full acceptance: the controller grows depth 2 → draft_max
+    let factory = ScriptedFactory {
+        spec: Some(SpecSim { accepts: vec![6], depth: 2, ..SpecSim::default() }),
+        ..ScriptedFactory::default()
+    };
+    let req = GenRequest::greedy(vec![11, 12, 13], 200);
+
+    let mut a = Coordinator::with_factory(cfg.clone(), Box::new(factory.clone()));
+    let id = a.submit(req.clone(), None).unwrap();
+    for _ in 0..12 {
+        a.tick();
+    }
+    let ck = a.checkpoint(id).expect("mid-flight checkpoint");
+    let ps = ck.policy.clone().expect("checkpoint must carry PolicyState");
+    assert!(
+        ps.depth > 2,
+        "controller never grew depth before the checkpoint (depth={})",
+        ps.depth
+    );
+    let learned = ps.depth;
+    assert!(ps.rounds > 0 && ps.accept_ewma > 0.0);
+
+    // fail the session over to a fresh coordinator (a restarted shard)
+    let mut b = Coordinator::with_factory(cfg, Box::new(factory));
+    let id2 = b
+        .submit_failover(req, SubmitOpts::default(), Some(ck.clone()))
+        .unwrap();
+    b.tick(); // admit + resume
+    let resumed = b.policy.state(id2).expect("restored policy state");
+    assert_eq!(
+        resumed.depth, learned,
+        "failed-over session did not resume with the learned depth"
+    );
+    while !b.idle() {
+        b.tick();
+    }
+    let tr = b.get(id2).unwrap();
+    let got = &tr.result.as_ref().expect("failover run completes").tokens;
+    // position-indexed stream → byte-identical to an undisturbed run
+    let want: Vec<u32> = (0..200).map(|i| (b'a' + (i % 26) as u8) as u32).collect();
+    assert_eq!(got, &want);
+    assert_eq!(tr.resumed_tokens, ck.emitted.len());
 }
 
 const CHAOS_CLIENTS: usize = 256;

@@ -1,0 +1,281 @@
+//! Adaptive speculation policy tests (DESIGN.md §16) — the controller's
+//! hard invariants, the losslessness contract, and the coordinator-level
+//! policy loop over scripted acceptance streams:
+//!   * the depth controller never leaves `[draft_min, draft_max]`;
+//!   * the controller is byte-deterministic given the same observation
+//!     stream;
+//!   * `policy=adaptive` on a losslessness-contracted engine (spec_full,
+//!     triforce, tokenswift) produces output byte-identical to
+//!     `policy=off` on the real reference backend;
+//!   * the coordinator's policy tick grows depth, fires drift-triggered
+//!     refreshes (adaptive only) and publishes the per-engine counters;
+//!   * `engine=auto` picks the engine from the prompt length.
+
+use specpv::backend::reference::ReferenceBackend;
+use specpv::config::{
+    BackendKind, Config, EngineKind, PolicyConfig, PolicyMode, SpecPvConfig,
+};
+use specpv::coordinator::{Coordinator, RequestId, SubmitOpts};
+use specpv::corpus;
+use specpv::engine::scripted::{ScriptedFactory, SpecSim};
+use specpv::engine::GenRequest;
+use specpv::policy::{PolicyState, SpecObservation};
+use specpv::tokenizer;
+use specpv::util::proptest::Prop;
+
+/// Aggressive adaptive knobs: adjust every round so short runs exercise
+/// many directives.
+fn adaptive(mode: PolicyMode) -> PolicyConfig {
+    PolicyConfig {
+        mode,
+        draft_min: 1,
+        draft_max: 6,
+        alpha: 0.5,
+        grow: 0.8,
+        shrink: 0.35,
+        adjust_every: 1,
+        drift_threshold: 1.5,
+        ..PolicyConfig::default()
+    }
+}
+
+fn spec_coord(sim: SpecSim, policy: PolicyConfig) -> Coordinator<'static> {
+    let cfg = Config { engine: EngineKind::SpecPv, max_active: 4, policy, ..Config::default() };
+    let factory = ScriptedFactory { spec: Some(sim), ..ScriptedFactory::default() };
+    Coordinator::with_factory(cfg, Box::new(factory))
+}
+
+fn run_to_done(c: &mut Coordinator<'static>, id: RequestId) -> Vec<u32> {
+    while !c.idle() {
+        c.tick();
+    }
+    c.get(id).unwrap().result.as_ref().expect("completed").tokens.clone()
+}
+
+#[test]
+fn depth_controller_never_leaves_bounds() {
+    Prop::new("policy depth stays in [draft_min, draft_max]", 200).run(|g| {
+        let lo = g.usize_in(1, 4);
+        let cfg = PolicyConfig {
+            mode: PolicyMode::Adaptive,
+            draft_min: lo,
+            draft_max: lo + g.usize_in(0, 6),
+            alpha: g.f32_in(0.05, 0.95) as f64,
+            grow: g.f32_in(0.0, 1.0) as f64,
+            shrink: g.f32_in(0.0, 1.0) as f64,
+            adjust_every: g.usize_in(1, 4),
+            drift_threshold: g.f32_in(0.2, 3.0) as f64,
+            ..PolicyConfig::default()
+        };
+        let mut st = PolicyState::default();
+        // cumulative observation stream with random per-tick deltas
+        let mut obs = SpecObservation { depth: g.usize_in(1, 10), ..Default::default() };
+        for _ in 0..g.usize_in(1, 60) {
+            let rounds = g.usize_in(0, 3) as u64;
+            let prop = rounds * g.usize_in(1, 8) as u64;
+            obs.verify_steps += rounds;
+            obs.proposed += prop;
+            obs.committed += if prop == 0 { 0 } else { g.usize_in(0, prop as usize) as u64 };
+            obs.partial_steps += g.usize_in(0, rounds as usize) as u64;
+            obs.refresh_steps += g.usize_in(0, 1) as u64;
+            obs.full_steps = obs.refresh_steps;
+            obs.pv_len = g.usize_in(0, 12);
+            obs.context_len += rounds as usize;
+            let up = st.update(&cfg, obs);
+            assert!(
+                st.depth >= cfg.draft_min && st.depth <= cfg.draft_max,
+                "depth {} escaped [{}, {}]",
+                st.depth,
+                cfg.draft_min,
+                cfg.draft_max
+            );
+            if let Some(d) = up.directive.draft_depth {
+                assert!(d >= cfg.draft_min && d <= cfg.draft_max);
+            }
+        }
+    });
+}
+
+#[test]
+fn controller_is_byte_deterministic() {
+    Prop::new("same observation stream, same directive stream", 100).run(|g| {
+        let cfg = adaptive(PolicyMode::Adaptive);
+        // pre-generate a random cumulative stream, then fold it twice
+        let mut stream = Vec::new();
+        let mut obs = SpecObservation { depth: 4, ..Default::default() };
+        for _ in 0..g.usize_in(1, 40) {
+            let rounds = g.usize_in(1, 2) as u64;
+            let prop = rounds * g.usize_in(1, 6) as u64;
+            obs.verify_steps += rounds;
+            obs.proposed += prop;
+            obs.committed += g.usize_in(0, prop as usize) as u64;
+            obs.partial_steps += rounds;
+            obs.pv_len += rounds as usize;
+            stream.push(obs);
+        }
+        let (mut a, mut b) = (PolicyState::default(), PolicyState::default());
+        for o in &stream {
+            let ua = a.update(&cfg, *o);
+            let ub = b.update(&cfg, *o);
+            assert_eq!(ua.directive, ub.directive);
+            assert_eq!(a, b, "states diverged on identical input");
+        }
+    });
+}
+
+/// The losslessness contract (ISSUE criterion): on the real reference
+/// backend, a losslessness-contracted engine under `policy=adaptive`
+/// emits output byte-identical to `policy=off`.
+#[test]
+fn lossless_engines_identical_under_adaptive_policy() {
+    let cfg_base = Config {
+        backend: BackendKind::Reference,
+        // small partial core so SpecPV-style geometry stays cheap
+        specpv: SpecPvConfig { retrieval_budget: 64, ..SpecPvConfig::default() },
+        max_active: 1,
+        ..Config::default()
+    };
+    let prompt = tokenizer::encode(&corpus::continuation_prompt(0, 150));
+    for kind in [EngineKind::SpecFull, EngineKind::TriForce, EngineKind::TokenSwift] {
+        let mut runs = Vec::new();
+        for mode in [PolicyMode::Off, PolicyMode::Adaptive] {
+            let be = ReferenceBackend::new();
+            let cfg = Config { policy: adaptive(mode), ..cfg_base.clone() };
+            let mut coord = Coordinator::new(&be, cfg);
+            let id = coord
+                .submit(GenRequest::greedy(prompt.clone(), 24), Some(kind))
+                .unwrap();
+            runs.push(run_to_done(&mut coord, id));
+        }
+        assert!(!runs[0].is_empty(), "{kind:?} produced nothing");
+        assert_eq!(
+            runs[0], runs[1],
+            "{kind:?}: policy=adaptive diverged from policy=off"
+        );
+    }
+}
+
+/// High steady acceptance grows the draft depth; the registry publishes
+/// the per-engine speculation counters and the policy gauges.
+#[test]
+fn scripted_adaptive_grows_depth_and_reports_counters() {
+    let sim = SpecSim { accepts: vec![6], depth: 2, ..SpecSim::default() };
+    let mut c = spec_coord(sim, adaptive(PolicyMode::Adaptive));
+    let id = c.submit(GenRequest::greedy(vec![1, 2], 120), None).unwrap();
+    let tokens = run_to_done(&mut c, id);
+    assert_eq!(tokens.len(), 120);
+    assert!(
+        c.registry.policy_depth_changes > 0,
+        "depth never adapted: {}",
+        c.registry.summary()
+    );
+    let spec = c
+        .registry
+        .spec
+        .get(&EngineKind::SpecPv.to_string())
+        .expect("per-engine spec counters");
+    assert!(spec.proposed > 0 && spec.committed > 0);
+    assert!(spec.committed <= spec.proposed);
+    assert!(spec.tau_mean() > 0.0);
+    let s = c.registry.summary();
+    assert!(s.contains("policy=adaptive"), "{s}");
+    assert!(s.contains("policy_depth_changes="), "{s}");
+}
+
+/// Decaying acceptance accumulates drift and forces a refresh under
+/// `policy=adaptive`; under `policy=fixed` the same stream forces none.
+#[test]
+fn drift_triggered_refresh_fires_only_in_adaptive() {
+    let sim = SpecSim {
+        accepts: vec![4],
+        depth: 4,
+        decay_every: 1,
+        refresh_every: 0,
+        ..SpecSim::default()
+    };
+    let mut a = spec_coord(sim.clone(), adaptive(PolicyMode::Adaptive));
+    let id = a.submit(GenRequest::greedy(vec![1], 100), None).unwrap();
+    run_to_done(&mut a, id);
+    assert!(
+        a.registry.policy_refreshes > 0,
+        "drift never forced a refresh: {}",
+        a.registry.summary()
+    );
+
+    let mut f = spec_coord(sim, adaptive(PolicyMode::Fixed));
+    let id = f.submit(GenRequest::greedy(vec![1], 100), None).unwrap();
+    run_to_done(&mut f, id);
+    assert_eq!(f.registry.policy_refreshes, 0, "{}", f.registry.summary());
+}
+
+/// The scripted stream is position-indexed, so policy decisions change
+/// costs and counters but never bytes — pinned through the whole
+/// coordinator loop.
+#[test]
+fn scripted_output_identical_adaptive_vs_off() {
+    let sim = SpecSim {
+        accepts: vec![5],
+        depth: 3,
+        decay_every: 2,
+        refresh_every: 8,
+        ..SpecSim::default()
+    };
+    let mut outs = Vec::new();
+    for mode in [PolicyMode::Off, PolicyMode::Adaptive] {
+        let mut c = spec_coord(sim.clone(), adaptive(mode));
+        let id = c.submit(GenRequest::greedy(vec![7], 90), None).unwrap();
+        outs.push(run_to_done(&mut c, id));
+    }
+    assert_eq!(outs[0], outs[1]);
+    assert_eq!(outs[0].len(), 90);
+}
+
+/// `engine=auto`: short prompts stay autoregressive, mid-length prompts
+/// take the tree engine, long prompts take SpecPV — and the registry
+/// counts each auto selection.
+#[test]
+fn engine_auto_selects_by_prompt_length() {
+    let cfg = Config {
+        engine: EngineKind::Autoregressive,
+        engine_auto: true,
+        max_active: 4,
+        policy: adaptive(PolicyMode::Adaptive),
+        ..Config::default()
+    };
+    let factory = ScriptedFactory::default();
+    let mut c = Coordinator::with_factory(cfg, Box::new(factory));
+    // defaults: auto_short = 64, auto_long = 640
+    let cases = [
+        (10usize, EngineKind::Autoregressive),
+        (100, EngineKind::TriForce),
+        (700, EngineKind::SpecPv),
+    ];
+    let mut ids = Vec::new();
+    for (len, _) in cases {
+        let req = GenRequest::greedy(vec![3; len], 8);
+        ids.push(c.submit_opts(req, SubmitOpts { auto: true, ..SubmitOpts::default() }).unwrap());
+    }
+    while !c.idle() {
+        c.tick();
+    }
+    for (&id, (len, want)) in ids.iter().zip(cases) {
+        let tr = c.get(id).unwrap();
+        assert_eq!(tr.engine, want, "prompt_len={len} routed to {:?}", tr.engine);
+        assert_eq!(tr.result.as_ref().unwrap().tokens.len(), 8);
+    }
+    let total: u64 = c.registry.auto_selected.values().sum();
+    assert_eq!(total, 3, "{:?}", c.registry.auto_selected);
+    assert_eq!(c.registry.auto_selected.len(), 3);
+    let s = c.registry.summary();
+    assert!(s.contains("auto_"), "{s}");
+
+    // an explicit engine override bypasses auto-selection
+    let req = GenRequest::greedy(vec![3; 700], 4);
+    let id = c.submit(req, Some(EngineKind::Autoregressive)).unwrap();
+    while !c.idle() {
+        c.tick();
+    }
+    assert_eq!(c.get(id).unwrap().engine, EngineKind::Autoregressive);
+    let total: u64 = c.registry.auto_selected.values().sum();
+    assert_eq!(total, 3, "explicit engine must not count as auto");
+}
