@@ -160,6 +160,47 @@ impl fmt::Display for KvQuant {
     }
 }
 
+/// Fsync policy for the write-ahead request journal (`journal_fsync`,
+/// DESIGN.md §17). `Always` syncs every appended record (loses nothing
+/// on `kill -9`, one fsync per record), `IntervalMs(n)` syncs at most
+/// every `n` milliseconds (bounded loss window, amortized cost),
+/// `Never` leaves flushing to the OS (crash may lose the journal tail;
+/// a clean shutdown still syncs).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum JournalFsync {
+    #[default]
+    Always,
+    IntervalMs(u64),
+    Never,
+}
+
+impl std::str::FromStr for JournalFsync {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "always" => Ok(JournalFsync::Always),
+            "never" => Ok(JournalFsync::Never),
+            _ => match s.strip_prefix("interval_ms:") {
+                Some(ms) => Ok(JournalFsync::IntervalMs(ms.parse().map_err(|_| {
+                    anyhow::anyhow!("bad interval in journal_fsync '{s}'")
+                })?)),
+                None => bail!("unknown journal_fsync '{s}' (always|interval_ms:N|never)"),
+            },
+        }
+    }
+}
+
+impl fmt::Display for JournalFsync {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JournalFsync::Always => f.write_str("always"),
+            JournalFsync::IntervalMs(ms) => write!(f, "interval_ms:{ms}"),
+            JournalFsync::Never => f.write_str("never"),
+        }
+    }
+}
+
 /// SpecPV partial-cache geometry (paper §3.2). All unit = tokens unless
 /// noted. `retrieval_budget` is the headline "SpecPV-xK" knob.
 #[derive(Debug, Clone)]
@@ -377,6 +418,13 @@ pub struct Config {
     /// fault injection: failpoint spec string (see
     /// `util::failpoint::FaultSpec`; "" = all off)
     pub faults: String,
+    /// durability (DESIGN.md §17): directory for the write-ahead request
+    /// journal + durable checkpoint store ("" = off). With it set, a
+    /// cold restart replays unfinished sessions and `generate_retry`
+    /// reconnects clients to exactly the missing output suffix.
+    pub journal_dir: String,
+    /// durability: journal fsync policy (always | interval_ms:N | never)
+    pub journal_fsync: JournalFsync,
 }
 
 impl Default for Config {
@@ -413,6 +461,8 @@ impl Default for Config {
             max_restarts: 3,
             shard_heartbeat_ms: 0,
             faults: String::new(),
+            journal_dir: String::new(),
+            journal_fsync: JournalFsync::Always,
         }
     }
 }
@@ -463,6 +513,15 @@ impl Config {
             None
         } else {
             Some(PathBuf::from(&self.kv_swap_dir))
+        }
+    }
+
+    /// Durability root (journal + checkpoint store), if configured.
+    pub fn journal_path(&self) -> Option<PathBuf> {
+        if self.journal_dir.is_empty() {
+            None
+        } else {
+            Some(PathBuf::from(&self.journal_dir))
         }
     }
 }
@@ -661,6 +720,14 @@ static OPTIONS: &[OptDef] = &[
     }),
     opt!("shard_heartbeat_ms", "serve: busy-shard wedge timeout, ms (0 = off)", |c, v| {
         c.shard_heartbeat_ms = v.parse()?;
+        Ok(())
+    }),
+    opt!("journal_dir", "durability: write-ahead journal + checkpoint dir (\"\" = off)", |c, v| {
+        c.journal_dir = v.to_string();
+        Ok(())
+    }),
+    opt!("journal_fsync", "durability: journal fsync policy (always|interval_ms:N|never)", |c, v| {
+        c.journal_fsync = v.parse()?;
         Ok(())
     }),
     opt!("policy", "speculation policy (off|fixed|adaptive)", |c, v| {
@@ -975,6 +1042,31 @@ mod tests {
             let k: KvQuant = q.parse().unwrap();
             assert_eq!(k.to_string(), q);
         }
+    }
+
+    #[test]
+    fn journal_fsync_parse_display() {
+        for s in ["always", "never", "interval_ms:250"] {
+            let p: JournalFsync = s.parse().unwrap();
+            assert_eq!(p.to_string(), s);
+        }
+        assert_eq!("interval_ms:0".parse::<JournalFsync>().unwrap(), JournalFsync::IntervalMs(0));
+        assert!("sometimes".parse::<JournalFsync>().is_err());
+        assert!("interval_ms:abc".parse::<JournalFsync>().is_err());
+    }
+
+    #[test]
+    fn journal_keys_apply() {
+        let mut c = Config::default();
+        assert!(c.journal_path().is_none(), "journaling is off by default");
+        let kv: BTreeMap<String, String> = [
+            ("journal_dir".to_string(), "/tmp/j".to_string()),
+            ("journal_fsync".to_string(), "interval_ms:50".to_string()),
+        ]
+        .into();
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.journal_path(), Some(PathBuf::from("/tmp/j")));
+        assert_eq!(c.journal_fsync, JournalFsync::IntervalMs(50));
     }
 
     #[test]

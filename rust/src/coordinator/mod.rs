@@ -240,6 +240,13 @@ pub struct Registry {
     /// failed-over sessions rebuilt from a checkpoint instead of a fresh
     /// prefill (DESIGN.md §15)
     pub checkpoint_resumes: u64,
+    /// sessions rebuilt across a process restart from the write-ahead
+    /// journal + durable checkpoint store (DESIGN.md §17)
+    pub recovered_sessions: u64,
+    /// journal records replayed during cold-restart recovery
+    pub journal_replayed: u64,
+    /// torn/corrupt journal records truncated (not fatal) on boot
+    pub journal_torn_records: u64,
     /// prompt-prefix cache counters (synced with the backend counters)
     pub prefix_hits: u64,
     pub prefix_misses: u64,
@@ -358,6 +365,7 @@ impl Registry {
              batched_frac={:.2} fallback_steps={} kv_resident={} kv_budget={} swaps={}/{} \
              kv_pages={} kv_pages_shared={} kv_frag={:.1}% swap_faults={} \
              deadline_hits={} restarts={} ckpt_resumes={} \
+             recovered={} journal_replayed={} journal_torn={} \
              prefix_hits={} prefix_misses={} execs={} exec_secs={:.2}s \
              compiles={} p50_latency={:.2}s p99={:.2}s p50_ttft={:.3}s \
              p99_ttft={:.3}s mean_tok_s={:.1} mean_tau={:.2}",
@@ -387,6 +395,9 @@ impl Registry {
             self.deadline_hits,
             self.restarts,
             self.checkpoint_resumes,
+            self.recovered_sessions,
+            self.journal_replayed,
+            self.journal_torn_records,
             self.prefix_hits,
             self.prefix_misses,
             self.executions,

@@ -29,7 +29,7 @@ pub mod spec_pv;
 pub mod tokenswift;
 pub mod triforce;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::backend::{pick_bucket, Backend, StateBuf, StateKind};
 
@@ -110,10 +110,147 @@ pub struct SessionCheckpoint {
     pub policy: Option<PolicyState>,
 }
 
+/// Durable checkpoint image magic ("SPVC") + format version.
+const DURABLE_MAGIC: u32 = 0x5350_5643;
+const DURABLE_VERSION: u32 = 1;
+
+/// Bounded little-endian cursor for [`SessionCheckpoint::decode_durable`].
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() < self.i + n {
+            bail!("truncated durable checkpoint ({} bytes)", self.b.len());
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
 impl SessionCheckpoint {
     /// Approximate host bytes the snapshot occupies (metrics only).
     pub fn approx_bytes(&self) -> usize {
         (self.data.len() + self.extra.len()) * 4 + self.emitted.len() * 4
+    }
+
+    /// Serialize into the crash-consistent on-disk image the durable
+    /// checkpoint store persists (DESIGN.md §17): a checksummed JSON
+    /// metadata frame followed by the `data`/`extra` state payloads in
+    /// the KV spill-page codec (magic/len/checksum validated on decode).
+    /// The RNG state is carried as a decimal string — JSON numbers are
+    /// f64 and would corrupt a full-range u64.
+    pub fn encode_durable(&self) -> Vec<u8> {
+        use crate::json::Json;
+        let emitted: Vec<Json> = self.emitted.iter().map(|&t| Json::from(t as f64)).collect();
+        let pending: Vec<Json> = self.pending.iter().map(|&p| Json::from(p as f64)).collect();
+        let mut meta = Json::obj()
+            .set("engine", self.engine.to_string())
+            .set("steps", self.steps as f64)
+            .set("size", self.size.as_str())
+            .set("bucket", self.bucket as f64)
+            .set("committed", self.committed as f64)
+            .set("rng", format!("{}", self.rng))
+            .set("emitted", Json::Arr(emitted))
+            .set("pending", Json::Arr(pending));
+        if let Some(p) = &self.policy {
+            meta = meta.set("policy", p.to_json());
+        }
+        let meta_bytes = meta.to_string().into_bytes();
+        let data_blob = crate::kvstore::pool::encode_f32_blob(&self.data);
+        let extra_blob = crate::kvstore::pool::encode_f32_blob(&self.extra);
+        let mut out =
+            Vec::with_capacity(28 + meta_bytes.len() + data_blob.len() + extra_blob.len());
+        out.extend_from_slice(&DURABLE_MAGIC.to_le_bytes());
+        out.extend_from_slice(&DURABLE_VERSION.to_le_bytes());
+        out.extend_from_slice(&(meta_bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crate::kvstore::pool::hash_bytes(&meta_bytes).to_le_bytes());
+        out.extend_from_slice(&meta_bytes);
+        for blob in [&data_blob, &extra_blob] {
+            out.extend_from_slice(&(blob.len() as u32).to_le_bytes());
+            out.extend_from_slice(blob);
+        }
+        out
+    }
+
+    /// Inverse of [`SessionCheckpoint::encode_durable`]. Any truncation
+    /// or corruption (bad magic, checksum mismatch, torn payload)
+    /// surfaces as a clean error — recovery treats it as "no durable
+    /// checkpoint" and regenerates from the journal instead.
+    pub fn decode_durable(blob: &[u8]) -> Result<SessionCheckpoint> {
+        use crate::json::Json;
+        let mut c = Cur { b: blob, i: 0 };
+        let magic = c.u32()?;
+        if magic != DURABLE_MAGIC {
+            bail!("bad durable checkpoint magic {magic:#x}");
+        }
+        let version = c.u32()?;
+        if version != DURABLE_VERSION {
+            bail!("unsupported durable checkpoint version {version}");
+        }
+        let meta_len = c.u32()? as usize;
+        let meta_sum = c.u64()?;
+        let meta_bytes = c.take(meta_len)?;
+        if crate::kvstore::pool::hash_bytes(meta_bytes) != meta_sum {
+            bail!("durable checkpoint metadata checksum mismatch");
+        }
+        let meta = Json::parse(std::str::from_utf8(meta_bytes)?)?;
+        let data_len = c.u32()? as usize;
+        let data = crate::kvstore::pool::decode_f32_blob(c.take(data_len)?)?;
+        let extra_len = c.u32()? as usize;
+        let extra = crate::kvstore::pool::decode_f32_blob(c.take(extra_len)?)?;
+
+        let num = |k: &str| -> Result<f64> {
+            meta.at(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("checkpoint key '{k}' not a number"))
+        };
+        let arr = |k: &str| -> Result<Vec<f64>> {
+            Ok(meta
+                .at(k)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("checkpoint key '{k}' not an array"))?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect())
+        };
+        let engine: EngineKind = meta
+            .at("engine")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint engine not a string"))?
+            .parse()?;
+        let rng: u64 = meta
+            .at("rng")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint rng not a string"))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("checkpoint rng: {e}"))?;
+        Ok(SessionCheckpoint {
+            engine,
+            emitted: arr("emitted")?.into_iter().map(|x| x as u32).collect(),
+            steps: num("steps")? as usize,
+            size: meta
+                .at("size")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("checkpoint size not a string"))?
+                .to_string(),
+            bucket: num("bucket")? as usize,
+            data,
+            extra,
+            committed: num("committed")? as usize,
+            pending: arr("pending")?.into_iter().map(|x| x as usize).collect(),
+            rng,
+            policy: meta.get("policy").map(PolicyState::from_json),
+        })
     }
 }
 

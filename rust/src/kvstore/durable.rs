@@ -1,0 +1,175 @@
+//! Crash-consistent checkpoint store (DESIGN.md §17): persists the
+//! front end's retained [`SessionCheckpoint`]s so in-flight sessions
+//! survive process death, not just shard death.
+//!
+//! Each checkpoint is one file `ckpt-<gid:016x>.spc` under
+//! `<journal_dir>/ckpt/`, written via the atomic temp-file + fsync +
+//! rename path shared with the swap tier — a crash mid-save leaves
+//! either the previous image or the new one, never a torn file. The
+//! image itself ([`SessionCheckpoint::encode_durable`]) reuses the KV
+//! spill-page codec for its payloads, so corruption is detected on
+//! load (checksum/magic/length) and surfaces as "no checkpoint" —
+//! recovery then regenerates from the journaled prompt instead.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::engine::SessionCheckpoint;
+use crate::kvstore::swap::{atomic_write, purge_temps};
+
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) the store under `dir`, purging any
+    /// orphaned temp files a previous incarnation's crash left behind.
+    pub fn open(dir: &Path) -> Result<CheckpointStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint store dir {dir:?}"))?;
+        purge_temps(dir);
+        Ok(CheckpointStore { dir: dir.to_path_buf() })
+    }
+
+    fn path_of(&self, gid: u64) -> PathBuf {
+        self.dir.join(format!("ckpt-{gid:016x}.spc"))
+    }
+
+    /// Atomically persist the checkpoint for request `gid`, replacing
+    /// any previous image.
+    pub fn save(&self, gid: u64, ck: &SessionCheckpoint) -> Result<()> {
+        atomic_write(&self.path_of(gid), &ck.encode_durable())
+            .with_context(|| format!("persisting checkpoint for request {gid}"))
+    }
+
+    /// Load the durable checkpoint for `gid`, if one exists and decodes
+    /// cleanly. Corrupt or torn images return `None` — callers fall
+    /// back to regenerating from the journal.
+    pub fn load(&self, gid: u64) -> Option<SessionCheckpoint> {
+        let blob = std::fs::read(self.path_of(gid)).ok()?;
+        SessionCheckpoint::decode_durable(&blob).ok()
+    }
+
+    /// Drop the image for a finished or cancelled request.
+    pub fn remove(&self, gid: u64) {
+        let _ = std::fs::remove_file(self.path_of(gid));
+    }
+
+    /// All gids with a durable image on disk, with decode validation:
+    /// corrupt files are skipped (and deleted — they can never load).
+    pub fn scan(&self) -> BTreeMap<u64, SessionCheckpoint> {
+        let mut out = BTreeMap::new();
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return out };
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            let Some(hex) = name.strip_prefix("ckpt-").and_then(|s| s.strip_suffix(".spc"))
+            else {
+                continue;
+            };
+            let Ok(gid) = u64::from_str_radix(hex, 16) else { continue };
+            match std::fs::read(e.path()).ok().and_then(|b| {
+                SessionCheckpoint::decode_durable(&b).ok()
+            }) {
+                Some(ck) => {
+                    out.insert(gid, ck);
+                }
+                None => {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+        out
+    }
+
+    /// Delete every image (journal marked clean on graceful shutdown).
+    pub fn clear(&self) {
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if name.starts_with("ckpt-") && name.ends_with(".spc") {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for CheckpointStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CheckpointStore({:?})", self.dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+
+    fn ck(tag: u32) -> SessionCheckpoint {
+        SessionCheckpoint {
+            engine: EngineKind::SpecPv,
+            emitted: vec![tag, tag + 1, tag + 2],
+            steps: 5,
+            size: "tiny".into(),
+            bucket: 1,
+            data: vec![0.5, -1.25, 3.0],
+            extra: vec![2.0; 8],
+            committed: 7,
+            pending: vec![1, 2],
+            rng: u64::MAX - 3,
+            policy: None,
+        }
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("specpv-ckpt-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_scan() {
+        let dir = tmp("rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let st = CheckpointStore::open(&dir).unwrap();
+        st.save(7, &ck(100)).unwrap();
+        st.save(9, &ck(200)).unwrap();
+        let got = st.load(7).unwrap();
+        assert_eq!(got.emitted, vec![100, 101, 102]);
+        assert_eq!(got.rng, u64::MAX - 3);
+        assert_eq!(got.data, vec![0.5, -1.25, 3.0]);
+        let all = st.scan();
+        assert_eq!(all.keys().copied().collect::<Vec<_>>(), vec![7, 9]);
+        st.remove(7);
+        assert!(st.load(7).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_image_skipped_not_fatal() {
+        let dir = tmp("corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let st = CheckpointStore::open(&dir).unwrap();
+        st.save(3, &ck(1)).unwrap();
+        // truncate the image mid-payload: must decode as "no checkpoint"
+        let path = dir.join("ckpt-0000000000000003.spc");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(st.load(3).is_none());
+        assert!(st.scan().is_empty());
+        // scan removed the unloadable file
+        assert!(!path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_purges_orphaned_temps() {
+        let dir = tmp("temps");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("ckpt-0000000000000001.spc.tmp"), b"torn").unwrap();
+        let _st = CheckpointStore::open(&dir).unwrap();
+        assert!(!dir.join("ckpt-0000000000000001.spc.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

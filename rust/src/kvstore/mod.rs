@@ -32,10 +32,12 @@
 //! property test). Int8 applies only to cold/swapped pages under
 //! `kv_quant = int8` and is tolerance-bounded by contract.
 
+pub mod durable;
 pub mod pool;
 pub mod prefix;
 pub mod swap;
 
+pub use durable::CheckpointStore;
 pub use pool::{KvPool, PageId, PagedState, PoolStats, DEFAULT_PAGE_BYTES};
 pub use prefix::{KvStore, PrefixStats};
 pub use swap::SwapStore;

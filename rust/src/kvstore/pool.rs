@@ -224,7 +224,28 @@ fn encode_page(data: &PageData, len: usize) -> Vec<u8> {
     out
 }
 
-fn hash_bytes(bytes: &[u8]) -> u64 {
+/// Encode a raw f32 slice with the spill-file codec (magic / flags /
+/// len / checksum header + payload). The durable checkpoint store uses
+/// this so checkpoint payloads share the validated on-disk format with
+/// KV spill pages.
+pub fn encode_f32_blob(v: &[f32]) -> Vec<u8> {
+    encode_page(&PageData::F32(v.to_vec()), v.len())
+}
+
+/// Decode + validate a blob produced by [`encode_f32_blob`]. Torn or
+/// corrupt blobs surface as clean errors, never panics.
+pub fn decode_f32_blob(blob: &[u8]) -> Result<Vec<f32>> {
+    if blob.len() < 24 {
+        bail!("truncated spill blob ({} bytes)", blob.len());
+    }
+    let len = u32::from_le_bytes(blob[8..12].try_into().unwrap()) as usize;
+    match decode_page(blob, len)? {
+        PageData::F32(v) => Ok(v),
+        _ => bail!("expected f32 spill payload"),
+    }
+}
+
+pub(crate) fn hash_bytes(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;
@@ -458,7 +479,7 @@ impl KvPool {
             inner: Rc::new(RefCell::new(PoolInner {
                 page_bytes,
                 quant,
-                swap: swap_dir.map(SwapStore::new),
+                swap: swap_dir.map(SwapStore::boot_scoped),
                 slots: Vec::new(),
                 free: Vec::new(),
                 index: HashMap::new(),

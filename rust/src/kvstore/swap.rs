@@ -11,11 +11,122 @@
 //! Spill keys carry a per-slot generation tag so a freed-and-reused page
 //! id can never read a stale prefetched blob from its previous life.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
+
+/// Marker file under a swap root recording the current boot epoch.
+const EPOCH_FILE: &str = "BOOT_EPOCH";
+
+struct BootState {
+    epoch: u64,
+    next_pool: u64,
+}
+
+/// One boot epoch per swap root per process: the first pool constructed
+/// against a root bumps the on-disk epoch counter and GCs every stale
+/// epoch directory; later pools in the same process reuse the epoch and
+/// get their own subdirectory (so sibling shards can never collide on
+/// `gen<<32|id` spill keys).
+static BOOTS: Mutex<BTreeMap<PathBuf, BootState>> = Mutex::new(BTreeMap::new());
+
+/// Crash-consistent file replacement: write to `<path>.tmp`, fsync the
+/// data, rename over `path`, then fsync the parent directory so the
+/// rename itself is durable. A crash at any point leaves either the old
+/// file or the new one — never a torn mix (orphaned `*.tmp` files are
+/// purged on boot).
+pub(crate) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_path(path);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating temp file {tmp:?}"))?;
+        f.write_all(bytes).with_context(|| format!("writing temp file {tmp:?}"))?;
+        f.sync_data().with_context(|| format!("syncing temp file {tmp:?}"))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} over {path:?}"))?;
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = std::fs::File::open(parent) {
+            let _ = d.sync_data();
+        }
+    }
+    Ok(())
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Delete orphaned `*.tmp` files directly under `dir` (crash mid
+/// atomic write from a previous incarnation).
+pub(crate) fn purge_temps(dir: &Path) {
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            if e.file_name().to_string_lossy().ends_with(".tmp") {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+}
+
+/// Begin a new boot epoch under `root`: bump the `BOOT_EPOCH` marker
+/// and garbage-collect every directory belonging to a previous epoch
+/// (plus orphaned temp files at the root). Returns the new epoch.
+fn begin_epoch(root: &Path) -> Result<u64> {
+    std::fs::create_dir_all(root)
+        .with_context(|| format!("creating kv swap root {root:?}"))?;
+    let marker = root.join(EPOCH_FILE);
+    let prev = std::fs::read_to_string(&marker)
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .unwrap_or(0);
+    let epoch = prev + 1;
+    atomic_write(&marker, format!("{epoch}\n").as_bytes())?;
+    let live = format!("epoch-{epoch:08x}");
+    if let Ok(rd) = std::fs::read_dir(root) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with("epoch-") && name != live {
+                let _ = std::fs::remove_dir_all(e.path());
+            } else if name.ends_with(".tmp") {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+    Ok(epoch)
+}
+
+/// Resolve the per-pool spill directory for `root` under the current
+/// boot epoch: `root/epoch-<E>/p<N>` where `E` is bumped once per
+/// process (per root) and `N` is unique per constructed pool.
+fn resolve_boot_dir(root: &Path) -> PathBuf {
+    let mut boots = BOOTS.lock().unwrap();
+    if !boots.contains_key(root) {
+        // Epoch resolution is best-effort: an unwritable root falls back
+        // to epoch 0 (no GC) rather than failing pool construction.
+        let epoch = begin_epoch(root).unwrap_or(0);
+        boots.insert(root.to_path_buf(), BootState { epoch, next_pool: 0 });
+    }
+    let st = boots.get_mut(root).unwrap();
+    let dir = root
+        .join(format!("epoch-{:08x}", st.epoch))
+        .join(format!("p{}", st.next_pool));
+    st.next_pool += 1;
+    dir
+}
+
+/// Test hook: forget the process-cached epoch for `root`, so the next
+/// `boot_scoped` call simulates a fresh process incarnation (bumps the
+/// epoch and GCs the old one).
+#[doc(hidden)]
+pub fn force_new_boot(root: &Path) {
+    BOOTS.lock().unwrap().remove(root);
+}
 
 /// State shared with the prefetch thread, under one lock. The prefetch
 /// thread reads spill files *outside* the lock, then re-checks `live`
@@ -56,6 +167,16 @@ impl SwapStore {
         }
     }
 
+    /// A spill-file manager scoped to the current boot epoch under
+    /// `root`: spills land in `root/epoch-<E>/p<N>`, so files written by
+    /// a previous process incarnation (same `gen<<32|id` keys, dead
+    /// sessions) can never be resolved by this one, and sibling pools in
+    /// one process never collide. Stale epoch directories are
+    /// garbage-collected the first time a root is opened after boot.
+    pub fn boot_scoped(root: &Path) -> SwapStore {
+        SwapStore::new(&resolve_boot_dir(root))
+    }
+
     fn file_name(key: u64) -> String {
         format!("page-{key:016x}.kvp")
     }
@@ -65,14 +186,18 @@ impl SwapStore {
         self.dir.join(Self::file_name(key))
     }
 
-    /// Spill one encoded page.
+    /// Spill one encoded page. The write is atomic (temp file + fsync +
+    /// rename), so a crash mid-spill leaves either the previous blob or
+    /// the new one on disk — never a truncated file that would surface
+    /// later as a `SwapFault` on resume.
     pub fn write(&mut self, key: u64, blob: &[u8]) -> Result<()> {
         if !self.created {
             std::fs::create_dir_all(&self.dir)
                 .with_context(|| format!("creating kv swap dir {:?}", self.dir))?;
+            purge_temps(&self.dir);
             self.created = true;
         }
-        std::fs::write(self.path_of(key), blob)
+        atomic_write(&self.path_of(key), blob)
             .with_context(|| format!("kv spill write {:?}", self.path_of(key)))?;
         {
             let mut p = self.prefetched.lock().unwrap();
@@ -202,6 +327,76 @@ mod tests {
         assert_eq!(s.read(1).unwrap(), b"abc");
         assert!(s.prefetches() >= 1);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_temp() {
+        let dir = tmp("atomic");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("page-0000000000000001.kvp");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        let temps: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(temps.is_empty(), "atomic_write left temp files behind");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn orphaned_temps_purged_on_first_write() {
+        let dir = tmp("purge");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // a crash mid-spill from a previous incarnation
+        std::fs::write(dir.join("page-00000000000000aa.kvp.tmp"), b"torn").unwrap();
+        let mut s = SwapStore::new(&dir);
+        s.write(1, b"fresh").unwrap();
+        assert!(
+            !dir.join("page-00000000000000aa.kvp.tmp").exists(),
+            "orphaned temp must be purged on boot"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn boot_epochs_isolate_incarnations_and_gc_stale_dirs() {
+        let root = tmp("epoch");
+        let _ = std::fs::remove_dir_all(&root);
+        force_new_boot(&root);
+
+        // incarnation N spills key 42
+        let mut s1 = SwapStore::boot_scoped(&root);
+        s1.write(42, b"incarnation-one").unwrap();
+        let old_dir = s1.dir.clone();
+        assert!(old_dir.starts_with(&root));
+        assert!(old_dir.join("page-000000000000002a.kvp").exists());
+
+        // sibling pool in the same incarnation: same epoch, distinct dir
+        let s1b = SwapStore::boot_scoped(&root);
+        assert_ne!(s1b.dir, old_dir, "sibling pools must not share a spill dir");
+        assert_eq!(s1b.dir.parent(), old_dir.parent(), "siblings share the epoch");
+
+        // incarnation N+1: same slot id + generation (key 42) must never
+        // resolve incarnation N's file, and N's epoch dir is GC'd
+        force_new_boot(&root);
+        let mut s2 = SwapStore::boot_scoped(&root);
+        assert_ne!(s2.dir.parent(), old_dir.parent(), "epoch must advance across boots");
+        assert!(
+            s2.read(42).is_err(),
+            "stale-epoch spill file must not resolve in the new incarnation"
+        );
+        assert!(!old_dir.exists(), "stale epoch dir must be garbage-collected on boot");
+        s2.write(42, b"incarnation-two").unwrap();
+        assert_eq!(s2.read(42).unwrap(), b"incarnation-two");
+
+        force_new_boot(&root);
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -7,9 +7,14 @@
 //!                 [--max-queue 256] [--max-prompt 7168]
 //!                 [--kv-budget-bytes N] [--prefix-cache-bytes N]
 //!                 [--shards N] [--route-imbalance F]
+//!                 [--journal-dir DIR] [--journal-fsync always|interval_ms:N|never]
 //!                 # N > 1: sharded serving — N workers, each its own
 //!                 # coordinator/backend/KV pool, sessions routed by
 //!                 # prompt-prefix affinity; Ctrl-C drains gracefully
+//!                 # --journal-dir: write-ahead request journal +
+//!                 # durable checkpoint store; a restart recovers every
+//!                 # unfinished session and {"op":"generate_retry",
+//!                 # "id":N} replays exactly the missing suffix
 //! specpv bench    <fig1|table1|fig4|table2|table3|fig5|table4|fig6|fig7|fig8|all>
 //!                 [--out results] [--quick]
 //! specpv bench backend [--quick] [--check] [--update-baseline]
@@ -25,7 +30,10 @@
 //! specpv bench serve [--quick]     # cross-session batched decode:
 //!                 # sweeps batch 1/2/4/8 concurrent sessions, reports
 //!                 # aggregate tok/s + p95 step latency, writes
-//!                 # BENCH_serve.json; fails unless batch=4 beats batch=1
+//!                 # BENCH_serve.json; fails unless batch=4 beats batch=1,
+//!                 # shards=2 beats shards=1, and checkpoint recovery
+//!                 # (failover and journaled cold restart) beats full
+//!                 # regeneration on >=1024-token prompts
 //! specpv bench policy [--quick] [--check]  # adaptive speculation
 //!                 # policy sweep (virtual time): adaptive vs fixed depth
 //!                 # + fixed refresh period on short/long/drifty scripted

@@ -103,6 +103,65 @@ pub struct PolicyState {
     pub last: SpecObservation,
 }
 
+impl PolicyState {
+    /// Serialize for the durable checkpoint image (DESIGN.md §17). All
+    /// counters fit f64-exact JSON numbers (they count decode rounds,
+    /// far below 2^53).
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        let last = Json::obj()
+            .set("proposed", self.last.proposed as f64)
+            .set("committed", self.last.committed as f64)
+            .set("verify_steps", self.last.verify_steps as f64)
+            .set("full_steps", self.last.full_steps as f64)
+            .set("partial_steps", self.last.partial_steps as f64)
+            .set("refresh_steps", self.last.refresh_steps as f64)
+            .set("context_len", self.last.context_len as f64)
+            .set("depth", self.last.depth as f64)
+            .set("pv_len", self.last.pv_len as f64);
+        Json::obj()
+            .set("accept_ewma", self.accept_ewma)
+            .set("drift", self.drift)
+            .set("depth", self.depth as f64)
+            .set("rounds", self.rounds as f64)
+            .set("since_adjust", self.since_adjust as f64)
+            .set("depth_changes", self.depth_changes as f64)
+            .set("forced_refreshes", self.forced_refreshes as f64)
+            .set("refresh_pending", self.refresh_pending)
+            .set("last", last)
+    }
+
+    /// Inverse of [`PolicyState::to_json`]; missing keys default to 0 so
+    /// older images stay loadable.
+    pub fn from_json(j: &crate::json::Json) -> PolicyState {
+        let f = |o: &crate::json::Json, k: &str| o.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let u = |o: &crate::json::Json, k: &str| f(o, k) as u64;
+        let last_j = j.get("last").cloned().unwrap_or(crate::json::Json::Null);
+        let last = SpecObservation {
+            proposed: u(&last_j, "proposed"),
+            committed: u(&last_j, "committed"),
+            verify_steps: u(&last_j, "verify_steps"),
+            full_steps: u(&last_j, "full_steps"),
+            partial_steps: u(&last_j, "partial_steps"),
+            refresh_steps: u(&last_j, "refresh_steps"),
+            context_len: f(&last_j, "context_len") as usize,
+            depth: f(&last_j, "depth") as usize,
+            pv_len: f(&last_j, "pv_len") as usize,
+        };
+        PolicyState {
+            accept_ewma: f(j, "accept_ewma"),
+            drift: f(j, "drift"),
+            depth: f(j, "depth") as usize,
+            rounds: u(j, "rounds"),
+            since_adjust: u(j, "since_adjust"),
+            depth_changes: u(j, "depth_changes"),
+            forced_refreshes: u(j, "forced_refreshes"),
+            refresh_pending: j.get("refresh_pending").and_then(|v| v.as_bool()).unwrap_or(false),
+            last,
+        }
+    }
+}
+
 impl Default for PolicyState {
     fn default() -> Self {
         PolicyState {

@@ -27,10 +27,12 @@
 //! `{"error":"overloaded","retry_after_ms":…}` line instead of queueing
 //! without bound.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -38,7 +40,9 @@ use anyhow::Result;
 use crate::config::EngineKind;
 use crate::engine::{GenRequest, SessionCheckpoint};
 use crate::json::Json;
+use crate::kvstore::CheckpointStore;
 
+use super::journal::{self, Journal, ReplayedRequest};
 use super::router::Router;
 use super::shard::{ConnId, FrontEvent, Gid, ShardHandle, SubmitReq};
 use super::wire::{self, AdminCmd, Defaults, Request};
@@ -46,6 +50,62 @@ use super::wire::{self, AdminCmd, Defaults, Request};
 /// Slow-consumer disconnect threshold: a connection whose un-flushed
 /// outbox exceeds this many bytes is dropped.
 const MAX_OUTBOX: usize = 1 << 20;
+
+/// A journal watermark tied to a position in a connection's outbox: it
+/// fires — and is written to the journal — only once the socket accepted
+/// every byte before it. Journaling at *flush* time (not emit time) is
+/// what keeps the delivered watermark honest: tokens sitting in the
+/// outbox at crash time replay on recovery.
+#[derive(Debug, Clone, Copy)]
+enum Mark {
+    /// `tokens` absolute delta tokens delivered for gid
+    Progress(Gid, usize),
+    /// gid's final line delivered; it no longer needs recovery
+    Done(Gid),
+}
+
+/// Durable-serving state threaded into the front end when `journal_dir`
+/// is configured: the open write-ahead journal, the crash-consistent
+/// checkpoint store, and the unfinished requests replayed on boot.
+pub struct Durable {
+    pub journal: Journal,
+    pub store: CheckpointStore,
+    /// unfinished requests rebuilt by the boot-time journal scan
+    pub recovered: BTreeMap<Gid, ReplayedRequest>,
+    /// smallest gid this incarnation may assign (monotone id space)
+    pub next_gid: Gid,
+}
+
+/// Front-end knobs beyond the routing defaults.
+#[derive(Default)]
+pub struct FrontOpts {
+    /// overload bound: shed when the target shard's in-flight load is
+    /// already this deep (0 = unbounded)
+    pub shard_queue: usize,
+    /// durability layer (`journal_dir` configured)
+    pub durable: Option<Durable>,
+    /// crash-equivalent teardown flag: when set, the loop returns
+    /// immediately — no drain, no outbox flush, no journal mark-clean —
+    /// freezing the durable state exactly as a SIGKILL would (used by
+    /// the in-process crash-recovery tests and bench)
+    pub abort: Option<Arc<AtomicBool>>,
+}
+
+/// Buffered output of a recovered session that no client has claimed
+/// yet: lines accumulate here (with their journal marks) until a
+/// `generate_retry` transfers them onto a real connection. Nothing in a
+/// virtual buffer counts as delivered — the journal watermark stays
+/// frozen until the bytes reach a real socket.
+struct Virtual {
+    /// the synthetic connection id shards address lines to
+    vconn: ConnId,
+    buf: Vec<u8>,
+    marks: Vec<(usize, Mark)>,
+    /// the journaled delivered watermark (what the client already has)
+    delivered: usize,
+    /// the session ran to its final line while unclaimed
+    done: bool,
+}
 
 struct Conn {
     stream: TcpStream,
@@ -57,6 +117,9 @@ struct Conn {
     wpos: usize,
     /// generate gids owned by this connection still in flight
     inflight: Vec<Gid>,
+    /// journal watermarks keyed by outbox offset (same coordinate as
+    /// `wpos`), kept in non-decreasing offset order
+    marks: VecDeque<(usize, Mark)>,
 }
 
 impl Conn {
@@ -67,6 +130,7 @@ impl Conn {
             wbuf: Vec::new(),
             wpos: 0,
             inflight: Vec::new(),
+            marks: VecDeque::new(),
         }
     }
 
@@ -128,6 +192,17 @@ struct Frontend {
     ckpts: HashMap<Gid, SessionCheckpoint>,
     /// gids waiting for any shard to come back up
     parked: VecDeque<Gid>,
+    /// durability layer (`journal_dir` configured): WAL + checkpoint store
+    durable: Option<Durable>,
+    /// crash-equivalent teardown flag (see [`FrontOpts::abort`])
+    abort: Option<Arc<AtomicBool>>,
+    /// unclaimed recovered sessions by gid (DESIGN.md §17)
+    virtuals: HashMap<Gid, Virtual>,
+    /// synthetic connection id → recovered gid it buffers for
+    vconn_gid: HashMap<ConnId, Gid>,
+    /// synthetic connection id → the real connection that claimed it via
+    /// `generate_retry` (shards keep addressing the vconn)
+    conn_alias: HashMap<ConnId, ConnId>,
     admin_pending: HashMap<u64, AdminAgg>,
     next_conn: ConnId,
     next_gid: Gid,
@@ -152,16 +227,42 @@ pub fn run_frontend(
     defaults: Defaults,
     shard_queue: usize,
 ) -> Result<()> {
+    run_frontend_with(
+        listener,
+        shards,
+        ev_rx,
+        router,
+        defaults,
+        FrontOpts { shard_queue, ..FrontOpts::default() },
+    )
+}
+
+/// [`run_frontend`] with the durability layer and the crash-equivalent
+/// abort hook (DESIGN.md §17). Recovered sessions from the journal scan
+/// are resubmitted before the first poll iteration.
+pub fn run_frontend_with(
+    listener: TcpListener,
+    shards: Vec<ShardHandle>,
+    ev_rx: Receiver<FrontEvent>,
+    router: Router,
+    defaults: Defaults,
+    opts: FrontOpts,
+) -> Result<()> {
     let n = shards.len();
-    let fe = Frontend {
+    let mut fe = Frontend {
         shards,
         router,
         defaults,
-        shard_queue,
+        shard_queue: opts.shard_queue,
         conns: HashMap::new(),
         routes: HashMap::new(),
         ckpts: HashMap::new(),
         parked: VecDeque::new(),
+        durable: opts.durable,
+        abort: opts.abort,
+        virtuals: HashMap::new(),
+        vconn_gid: HashMap::new(),
+        conn_alias: HashMap::new(),
         admin_pending: HashMap::new(),
         next_conn: 0,
         next_gid: 0,
@@ -174,6 +275,7 @@ pub fn run_frontend(
         failover_checkpoint: 0,
         failover_regen: 0,
     };
+    fe.seed_recovered();
     fe.run(listener, ev_rx)
 }
 
@@ -181,6 +283,14 @@ impl Frontend {
     fn run(mut self, listener: TcpListener, ev_rx: Receiver<FrontEvent>) -> Result<()> {
         listener.set_nonblocking(true)?;
         loop {
+            if let Some(a) = &self.abort {
+                if a.load(Ordering::SeqCst) {
+                    // crash-equivalent teardown: no drain, no outbox
+                    // flush, no journal mark-clean — durable state
+                    // freezes exactly as a SIGKILL would leave it
+                    return Ok(());
+                }
+            }
             if !self.draining && super::shutdown_requested() {
                 self.begin_drain();
             }
@@ -198,6 +308,13 @@ impl Frontend {
                 // every shard has delivered its final lines; flush what
                 // the sockets will take, then exit
                 self.flush_all(Duration::from_millis(500));
+                // graceful shutdown: every session reached its terminal
+                // line (flush_all fired the remaining delivery marks),
+                // so a clean restart replays nothing
+                if let Some(d) = &mut self.durable {
+                    let _ = d.journal.mark_clean();
+                    d.store.clear();
+                }
                 return Ok(());
             }
             // idle wait: a shard event wakes us immediately; fresh socket
@@ -226,6 +343,84 @@ impl Frontend {
         // fail them here
         while let Some(gid) = self.parked.pop_front() {
             self.fail_unrouted(gid, "server shutting down");
+        }
+    }
+
+    /// Cold-restart recovery (DESIGN.md §17): rebuild every unfinished
+    /// request the journal replayed, attach each to a virtual connection
+    /// that buffers its output until a `generate_retry` claims it, and
+    /// resubmit — resuming from the durable checkpoint when one decodes,
+    /// deterministically regenerating from the journaled prompt
+    /// otherwise. Durable images for gids that need no recovery are
+    /// garbage-collected from disk.
+    fn seed_recovered(&mut self) {
+        let (recovered, journal_next_gid) = match &mut self.durable {
+            Some(d) => (std::mem::take(&mut d.recovered), d.next_gid),
+            None => return,
+        };
+        let mut images = match &self.durable {
+            Some(d) => d.store.scan(),
+            None => BTreeMap::new(),
+        };
+        if let Some(d) = &self.durable {
+            for gid in images.keys() {
+                if !recovered.contains_key(gid) {
+                    d.store.remove(*gid);
+                }
+            }
+        }
+        images.retain(|gid, _| recovered.contains_key(gid));
+        self.next_gid = self.next_gid.max(journal_next_gid);
+        for (gid, r) in recovered {
+            let vcid = self.next_conn;
+            self.next_conn += 1;
+            self.vconn_gid.insert(vcid, gid);
+            self.virtuals.insert(
+                gid,
+                Virtual {
+                    vconn: vcid,
+                    buf: Vec::new(),
+                    marks: Vec::new(),
+                    delivered: r.delivered,
+                    done: false,
+                },
+            );
+            let retained = Retained {
+                gen: GenRequest {
+                    prompt: r.prompt,
+                    max_new: r.max_new,
+                    temperature: r.temperature,
+                    seed: r.seed,
+                },
+                engine: r.engine,
+                auto: r.auto,
+                stream: r.stream,
+                deadline_secs: r.deadline_secs,
+                priority: r.priority,
+                streamed: r.delivered,
+                acked: true,
+                displaced: true,
+            };
+            if let Some(ck) = images.remove(&gid) {
+                self.ckpts.insert(gid, ck);
+            }
+            if self.router.all_down() {
+                self.routes.insert(gid, RouteEntry { shard: None, conn: vcid, retained });
+                self.parked.push_back(gid);
+            } else {
+                let place = self.router.place(&retained.gen.prompt);
+                self.routes.insert(
+                    gid,
+                    RouteEntry { shard: Some(place.shard), conn: vcid, retained },
+                );
+                let resume = self.ckpts.get(&gid).cloned();
+                if resume.is_some() {
+                    self.failover_checkpoint += 1;
+                } else {
+                    self.failover_regen += 1;
+                }
+                self.submit_to(place.shard, gid, resume);
+            }
         }
     }
 
@@ -406,6 +601,19 @@ impl Frontend {
                     acked: false,
                     displaced: false,
                 };
+                // write-ahead: the accept record lands before any line
+                // (even the queued ack) can reach the client
+                if let Some(d) = &mut self.durable {
+                    let _ = d.journal.append(&journal::accept_record(
+                        gid,
+                        &retained.gen,
+                        engine,
+                        auto,
+                        stream,
+                        deadline_secs,
+                        priority,
+                    ));
+                }
                 conn.inflight.push(gid);
                 if self.router.all_down() {
                     // hold until a shard restarts
@@ -417,6 +625,43 @@ impl Frontend {
                 self.routes
                     .insert(gid, RouteEntry { shard: Some(place.shard), conn: cid, retained });
                 self.submit_to(place.shard, gid, None);
+            }
+            Request::GenerateRetry { id } => {
+                let Some(mut v) = self.virtuals.remove(&id) else {
+                    conn.push_line(Json::obj().set("ok", false).set(
+                        "error",
+                        format!("unknown or already-delivered request id {id}"),
+                    ));
+                    return;
+                };
+                // header tells the client where the replayed stream picks
+                // up: everything below `delivered` was flushed to it
+                // before the crash
+                conn.push_line(
+                    Json::obj()
+                        .set("ok", true)
+                        .set("id", id as i64)
+                        .set("retry", true)
+                        .set("delivered", v.delivered)
+                        .set("done", false),
+                );
+                // transfer the buffered suffix (and its journal marks,
+                // rebased to this outbox) onto the claiming connection
+                let base = conn.wbuf.len();
+                conn.wbuf.extend_from_slice(&v.buf);
+                for (off, m) in v.marks.drain(..) {
+                    conn.marks.push_back((base + off, m));
+                }
+                if v.done {
+                    // complete answer already buffered; nothing further
+                    // will arrive for the virtual connection
+                    self.vconn_gid.remove(&v.vconn);
+                } else {
+                    // still generating: future lines addressed to the
+                    // virtual connection land here via the alias
+                    self.conn_alias.insert(v.vconn, cid);
+                    conn.inflight.push(id);
+                }
             }
         }
     }
@@ -497,31 +742,89 @@ impl Frontend {
         }
     }
 
+    /// Resolve the connection a shard-addressed id actually writes to:
+    /// claimed virtual connections forward to their claimant.
+    fn effective_conn(&self, conn: ConnId) -> ConnId {
+        self.conn_alias.get(&conn).copied().unwrap_or(conn)
+    }
+
+    /// Route one rendered line to its connection: a live socket's outbox,
+    /// an unclaimed recovered session's virtual buffer, or (connection
+    /// gone) the floor.
+    fn deliver_line(&mut self, conn: ConnId, line: String) {
+        let eff = self.effective_conn(conn);
+        if let Some(c) = self.conns.get_mut(&eff) {
+            c.wbuf.extend_from_slice(line.as_bytes());
+            return;
+        }
+        if let Some(&gid) = self.vconn_gid.get(&conn) {
+            if let Some(v) = self.virtuals.get_mut(&gid) {
+                v.buf.extend_from_slice(line.as_bytes());
+            }
+        }
+    }
+
     fn handle_event(&mut self, ev: FrontEvent) {
         match ev {
-            FrontEvent::Line { conn, line } => {
-                // lines for a connection that already went away are dropped
-                if let Some(c) = self.conns.get_mut(&conn) {
-                    c.wbuf.extend_from_slice(line.as_bytes());
-                }
-            }
+            FrontEvent::Line { conn, line } => self.deliver_line(conn, line),
             FrontEvent::Terminal { conn, shard, gid } => {
                 self.router.finished(shard);
                 self.routes.remove(&gid);
                 self.ckpts.remove(&gid);
-                if let Some(c) = self.conns.get_mut(&conn) {
+                let eff = self.effective_conn(conn);
+                if let Some(c) = self.conns.get_mut(&eff) {
                     c.inflight.retain(|&g| g != gid);
+                    if self.durable.is_some() {
+                        // journaled once the final line flushes
+                        c.marks.push_back((c.wbuf.len(), Mark::Done(gid)));
+                    }
+                } else if let Some(v) = self.virtuals.get_mut(&gid) {
+                    // finished while unclaimed: the complete answer sits
+                    // in the virtual buffer awaiting a generate_retry;
+                    // the done record fires only when it is delivered
+                    v.done = true;
+                    v.marks.push((v.buf.len(), Mark::Done(gid)));
+                } else if let Some(d) = &mut self.durable {
+                    // owner connection is gone — nothing further can be
+                    // delivered, so the session needs no recovery
+                    let _ = d.journal.append(&journal::done_record(gid));
+                    d.store.remove(gid);
+                }
+                // a claimed virtual's request finished: retire the alias
+                if self.vconn_gid.get(&conn) == Some(&gid) && !self.virtuals.contains_key(&gid)
+                {
+                    self.vconn_gid.remove(&conn);
+                    self.conn_alias.remove(&conn);
                 }
             }
             FrontEvent::Checkpoint { gid, ck } => {
                 // latest wins; dropped if the request already finished
                 if self.routes.contains_key(&gid) {
+                    if let Some(d) = &mut self.durable {
+                        // atomic replace: a crash mid-save leaves the
+                        // previous image, never a torn one
+                        let _ = d.store.save(gid, &ck);
+                    }
                     self.ckpts.insert(gid, *ck);
                 }
             }
             FrontEvent::Progress { gid, tokens } => {
-                if let Some(e) = self.routes.get_mut(&gid) {
-                    e.retained.streamed = tokens;
+                let owner = match self.routes.get_mut(&gid) {
+                    Some(e) => {
+                        e.retained.streamed = tokens;
+                        Some(e.conn)
+                    }
+                    None => None,
+                };
+                if self.durable.is_some() {
+                    if let Some(oc) = owner {
+                        let eff = self.effective_conn(oc);
+                        if let Some(c) = self.conns.get_mut(&eff) {
+                            c.marks.push_back((c.wbuf.len(), Mark::Progress(gid, tokens)));
+                        } else if let Some(v) = self.virtuals.get_mut(&gid) {
+                            v.marks.push((v.buf.len(), Mark::Progress(gid, tokens)));
+                        }
+                    }
                 }
             }
             FrontEvent::Acked { gid } => {
@@ -610,6 +913,7 @@ impl Frontend {
     }
 
     fn write_conns(&mut self) {
+        let mut fired: Vec<Mark> = Vec::new();
         for (&cid, conn) in self.conns.iter_mut() {
             while conn.wpos < conn.wbuf.len() {
                 match conn.stream.write(&conn.wbuf[conn.wpos..]) {
@@ -626,11 +930,22 @@ impl Frontend {
                     }
                 }
             }
+            // delivery watermarks: a mark fires once the socket accepted
+            // every byte before it
+            while conn.marks.front().map(|&(off, _)| off <= conn.wpos).unwrap_or(false) {
+                if let Some((_, m)) = conn.marks.pop_front() {
+                    fired.push(m);
+                }
+            }
             if conn.wpos == conn.wbuf.len() {
                 conn.wbuf.clear();
                 conn.wpos = 0;
             } else if conn.wpos > (64 << 10) {
                 // reclaim the flushed prefix of a long-lived outbox
+                // (mark offsets shift with it)
+                for m in conn.marks.iter_mut() {
+                    m.0 -= conn.wpos;
+                }
                 conn.wbuf.drain(..conn.wpos);
                 conn.wpos = 0;
             }
@@ -641,6 +956,19 @@ impl Frontend {
                 );
                 self.slow_consumer_disconnects += 1;
                 self.dead.push(cid);
+            }
+        }
+        if let Some(d) = &mut self.durable {
+            for m in fired {
+                match m {
+                    Mark::Progress(gid, tokens) => {
+                        let _ = d.journal.append(&journal::progress_record(gid, tokens));
+                    }
+                    Mark::Done(gid) => {
+                        let _ = d.journal.append(&journal::done_record(gid));
+                        d.store.remove(gid);
+                    }
+                }
             }
         }
     }

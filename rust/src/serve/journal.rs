@@ -1,0 +1,402 @@
+//! Write-ahead request journal (DESIGN.md §17): the durable record of
+//! every accepted `generate` line and every delivered-token watermark,
+//! from which a cold restart rebuilds the unfinished session set.
+//!
+//! On-disk layout: an 8-byte header (magic `SPVJ` + version) followed
+//! by appended, length-prefixed, FNV-checksummed records framing JSON
+//! payloads — `[len u32][crc u64][payload]`. Three record kinds:
+//!
+//! * `accept` — the parsed request (prompt tokens, options, the
+//!   assigned wire id, priority), written *before* the ack leaves;
+//! * `progress` — the delivered-token watermark for a gid, written only
+//!   after the line bytes were flushed to the client socket (never on
+//!   emit — tokens sitting in the outbox at crash time must replay);
+//! * `done` — the final line for a gid was flushed; the session no
+//!   longer needs recovery.
+//!
+//! Replay ([`scan_bytes`]) folds records in order and is idempotent and
+//! prefix-closed: any prefix of a journal is a consistent state, and
+//! replaying records twice changes nothing (accepts of done/known gids
+//! are ignored, watermarks max-merge). A torn or corrupt tail —
+//! whatever a crash left after the last valid record — is counted and
+//! truncated on the next open, never fatal.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{EngineKind, JournalFsync};
+use crate::engine::GenRequest;
+use crate::json::Json;
+use crate::kvstore::pool::hash_bytes;
+use crate::kvstore::swap::purge_temps;
+
+/// Journal file name under `journal_dir`.
+pub const JOURNAL_FILE: &str = "journal.wal";
+/// Checkpoint-store subdirectory under `journal_dir`.
+pub const CKPT_SUBDIR: &str = "ckpt";
+
+const JOURNAL_MAGIC: u32 = 0x5350_564A; // "SPVJ"
+const JOURNAL_VERSION: u32 = 1;
+const HEADER_LEN: u64 = 8;
+/// Sanity bound on one record's payload (a prompt is at most
+/// `max_prompt` tokens; anything larger is corruption, not data).
+const MAX_RECORD: u32 = 64 << 20;
+
+/// One unfinished request rebuilt from the journal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayedRequest {
+    pub gid: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub seed: u64,
+    pub engine: Option<EngineKind>,
+    pub auto: bool,
+    pub stream: bool,
+    pub deadline_secs: Option<f64>,
+    pub priority: i32,
+    /// delivered-token watermark: absolute tokens whose delta lines
+    /// were flushed to the client before the crash
+    pub delivered: usize,
+}
+
+/// The folded state of a journal scan.
+#[derive(Debug, Default)]
+pub struct Replay {
+    /// unfinished requests by gid (accepted, no `done` record)
+    pub requests: BTreeMap<u64, ReplayedRequest>,
+    /// gids whose final line was flushed (their accepts are ignored on
+    /// a re-replay — this is what makes the fold idempotent)
+    pub done: BTreeSet<u64>,
+    /// valid records folded
+    pub records: u64,
+    /// torn/corrupt tail records dropped (0 or 1 per scan)
+    pub torn: u64,
+    /// smallest gid the restarted front end may assign (the journaled
+    /// id space stays monotone across incarnations)
+    pub next_gid: u64,
+    /// byte offset of the last valid record's end; the file is
+    /// truncated here on open
+    pub valid_len: u64,
+}
+
+impl Replay {
+    /// Fold one record payload into the replay state.
+    pub fn fold(&mut self, j: &Json) {
+        self.records += 1;
+        let gid = j.get("gid").and_then(|x| x.as_i64()).unwrap_or(-1);
+        if gid < 0 {
+            return;
+        }
+        let gid = gid as u64;
+        self.next_gid = self.next_gid.max(gid + 1);
+        match j.get("op").and_then(|x| x.as_str()) {
+            Some("accept") => {
+                if self.done.contains(&gid) || self.requests.contains_key(&gid) {
+                    return;
+                }
+                let prompt: Vec<u32> = j
+                    .get("prompt")
+                    .and_then(|x| x.as_arr())
+                    .map(|a| a.iter().filter_map(|t| t.as_f64()).map(|t| t as u32).collect())
+                    .unwrap_or_default();
+                let engine = j
+                    .get("engine")
+                    .and_then(|x| x.as_str())
+                    .and_then(|s| s.parse::<EngineKind>().ok());
+                self.requests.insert(
+                    gid,
+                    ReplayedRequest {
+                        gid,
+                        prompt,
+                        max_new: j.get("max_new").and_then(|x| x.as_usize()).unwrap_or(0),
+                        temperature: j
+                            .get("temperature")
+                            .and_then(|x| x.as_f64())
+                            .unwrap_or(0.0) as f32,
+                        seed: j
+                            .get("seed")
+                            .and_then(|x| x.as_str())
+                            .and_then(|s| s.parse().ok())
+                            .unwrap_or(0),
+                        engine,
+                        auto: j.get("auto").and_then(|x| x.as_bool()).unwrap_or(false),
+                        stream: j.get("stream").and_then(|x| x.as_bool()).unwrap_or(false),
+                        deadline_secs: j.get("deadline_s").and_then(|x| x.as_f64()),
+                        priority: j.get("priority").and_then(|x| x.as_i64()).unwrap_or(0)
+                            as i32,
+                        delivered: 0,
+                    },
+                );
+            }
+            Some("progress") => {
+                if let Some(r) = self.requests.get_mut(&gid) {
+                    let tokens = j.get("tokens").and_then(|x| x.as_usize()).unwrap_or(0);
+                    r.delivered = r.delivered.max(tokens);
+                }
+            }
+            Some("done") => {
+                self.requests.remove(&gid);
+                self.done.insert(gid);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Frame one record payload: `[len u32][fnv crc u64][payload bytes]`.
+pub fn frame(payload: &Json) -> Vec<u8> {
+    let bytes = payload.to_string().into_bytes();
+    let mut out = Vec::with_capacity(12 + bytes.len());
+    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&hash_bytes(&bytes).to_le_bytes());
+    out.extend_from_slice(&bytes);
+    out
+}
+
+/// The `accept` record for a newly admitted generate op.
+pub fn accept_record(
+    gid: u64,
+    gen: &GenRequest,
+    engine: Option<EngineKind>,
+    auto: bool,
+    stream: bool,
+    deadline_secs: Option<f64>,
+    priority: i32,
+) -> Json {
+    let prompt: Vec<Json> = gen.prompt.iter().map(|&t| Json::from(t as f64)).collect();
+    let mut j = Json::obj()
+        .set("op", "accept")
+        .set("gid", gid as i64)
+        .set("prompt", Json::Arr(prompt))
+        .set("max_new", gen.max_new)
+        .set("temperature", gen.temperature as f64)
+        .set("seed", format!("{}", gen.seed))
+        .set("auto", auto)
+        .set("stream", stream)
+        .set("priority", priority as i64);
+    if let Some(e) = engine {
+        j = j.set("engine", e.to_string());
+    }
+    if let Some(d) = deadline_secs {
+        j = j.set("deadline_s", d);
+    }
+    j
+}
+
+/// The `progress` record: `tokens` absolute tokens flushed for `gid`.
+pub fn progress_record(gid: u64, tokens: usize) -> Json {
+    Json::obj().set("op", "progress").set("gid", gid as i64).set("tokens", tokens)
+}
+
+/// The `done` record: gid's final line was flushed.
+pub fn done_record(gid: u64) -> Json {
+    Json::obj().set("op", "done").set("gid", gid as i64)
+}
+
+/// Scan raw journal bytes into a [`Replay`]. Stops at the first invalid
+/// frame (short, oversized, checksum mismatch, or unparsable payload)
+/// and counts the remainder as one torn record — a crash can tear at
+/// most the final append.
+pub fn scan_bytes(bytes: &[u8]) -> Replay {
+    let mut rp = Replay::default();
+    if bytes.is_empty() {
+        return rp;
+    }
+    if bytes.len() < HEADER_LEN as usize
+        || u32::from_le_bytes(bytes[0..4].try_into().unwrap()) != JOURNAL_MAGIC
+        || u32::from_le_bytes(bytes[4..8].try_into().unwrap()) != JOURNAL_VERSION
+    {
+        rp.torn = 1;
+        return rp;
+    }
+    let mut i = HEADER_LEN as usize;
+    rp.valid_len = HEADER_LEN;
+    while i < bytes.len() {
+        if bytes.len() - i < 12 {
+            rp.torn = 1;
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap());
+        let crc = u64::from_le_bytes(bytes[i + 4..i + 12].try_into().unwrap());
+        if len > MAX_RECORD || bytes.len() - i - 12 < len as usize {
+            rp.torn = 1;
+            break;
+        }
+        let payload = &bytes[i + 12..i + 12 + len as usize];
+        if hash_bytes(payload) != crc {
+            rp.torn = 1;
+            break;
+        }
+        let Ok(j) = std::str::from_utf8(payload).map_err(anyhow::Error::from).and_then(|s| {
+            Json::parse(s)
+        }) else {
+            rp.torn = 1;
+            break;
+        };
+        rp.fold(&j);
+        i += 12 + len as usize;
+        rp.valid_len = i as u64;
+    }
+    rp
+}
+
+/// An open journal: appends framed records with the configured fsync
+/// policy.
+pub struct Journal {
+    file: File,
+    policy: JournalFsync,
+    last_sync: Instant,
+    /// records appended this incarnation
+    pub appended: u64,
+}
+
+impl Journal {
+    /// Open (creating if needed) the journal under `dir` and replay it:
+    /// returns the open append handle positioned after the last valid
+    /// record — a torn tail is truncated here — plus the folded
+    /// [`Replay`]. Orphaned temp files under `dir` are purged.
+    pub fn open(dir: &Path, policy: JournalFsync) -> Result<(Journal, Replay)> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {dir:?}"))?;
+        purge_temps(dir);
+        let path = dir.join(JOURNAL_FILE);
+        let bytes = std::fs::read(&path).unwrap_or_default();
+        let replay = scan_bytes(&bytes);
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)
+            .with_context(|| format!("opening journal {path:?}"))?;
+        if replay.valid_len < bytes.len() as u64 {
+            file.set_len(replay.valid_len.max(HEADER_LEN))
+                .with_context(|| format!("truncating torn journal tail in {path:?}"))?;
+        }
+        if replay.valid_len < HEADER_LEN {
+            file.set_len(0)?;
+            file.seek(SeekFrom::Start(0))?;
+            let mut header = Vec::with_capacity(HEADER_LEN as usize);
+            header.extend_from_slice(&JOURNAL_MAGIC.to_le_bytes());
+            header.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+            file.write_all(&header)?;
+            file.sync_data()?;
+        } else {
+            file.seek(SeekFrom::Start(replay.valid_len))?;
+        }
+        Ok((Journal { file, policy, last_sync: Instant::now(), appended: 0 }, replay))
+    }
+
+    /// Append one record payload, syncing per the fsync policy.
+    pub fn append(&mut self, payload: &Json) -> Result<()> {
+        self.file.write_all(&frame(payload)).context("journal append")?;
+        self.appended += 1;
+        match self.policy {
+            JournalFsync::Always => self.file.sync_data().context("journal fsync")?,
+            JournalFsync::IntervalMs(ms) => {
+                if self.last_sync.elapsed().as_millis() as u64 >= ms {
+                    self.file.sync_data().context("journal fsync")?;
+                    self.last_sync = Instant::now();
+                }
+            }
+            JournalFsync::Never => {}
+        }
+        Ok(())
+    }
+
+    /// Force a sync regardless of policy (graceful shutdown).
+    pub fn sync(&mut self) {
+        let _ = self.file.sync_data();
+    }
+
+    /// Truncate back to the header: every session reached its final
+    /// line, so a clean restart replays nothing and reports
+    /// `recovered: 0`.
+    pub fn mark_clean(&mut self) -> Result<()> {
+        self.file.set_len(HEADER_LEN).context("journal mark_clean")?;
+        self.file.seek(SeekFrom::Start(HEADER_LEN))?;
+        self.file.sync_data().context("journal fsync")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("specpv-journal-{tag}-{}", std::process::id()))
+    }
+
+    fn gen(prompt: &[u32]) -> GenRequest {
+        GenRequest { prompt: prompt.to_vec(), max_new: 8, temperature: 0.0, seed: 11 }
+    }
+
+    #[test]
+    fn append_reopen_replays_requests_and_watermarks() {
+        let dir = tmp("rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let (mut j, rp) = Journal::open(&dir, JournalFsync::Always).unwrap();
+            assert_eq!(rp.records, 0);
+            j.append(&accept_record(0, &gen(&[1, 2]), None, false, true, None, 0)).unwrap();
+            j.append(&accept_record(1, &gen(&[3]), Some(EngineKind::Autoregressive), false, true, Some(2.5), 7))
+                .unwrap();
+            j.append(&progress_record(0, 3)).unwrap();
+            j.append(&progress_record(0, 5)).unwrap();
+            j.append(&done_record(1)).unwrap();
+        }
+        let (_j, rp) = Journal::open(&dir, JournalFsync::Always).unwrap();
+        assert_eq!(rp.records, 5);
+        assert_eq!(rp.torn, 0);
+        assert_eq!(rp.next_gid, 2);
+        assert_eq!(rp.requests.len(), 1, "gid 1 is done, gid 0 unfinished");
+        let r = &rp.requests[&0];
+        assert_eq!((r.prompt.as_slice(), r.delivered, r.seed), (&[1u32, 2][..], 5, 11));
+        assert!(rp.done.contains(&1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_truncated_on_open_not_fatal() {
+        let dir = tmp("torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let (mut j, _) = Journal::open(&dir, JournalFsync::Always).unwrap();
+            j.append(&accept_record(0, &gen(&[9]), None, false, true, None, 0)).unwrap();
+        }
+        let path = dir.join(JOURNAL_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // a torn append: half a record at the tail
+        bytes.extend_from_slice(&frame(&progress_record(0, 4))[..7]);
+        std::fs::write(&path, &bytes).unwrap();
+        let (_j, rp) = Journal::open(&dir, JournalFsync::Always).unwrap();
+        assert_eq!((rp.records, rp.torn), (1, 1));
+        assert_eq!(rp.requests[&0].delivered, 0, "torn progress must not apply");
+        // the truncation stuck: a re-open sees a clean file
+        let (_j2, rp2) = Journal::open(&dir, JournalFsync::Always).unwrap();
+        assert_eq!((rp2.records, rp2.torn), (1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mark_clean_empties_the_journal() {
+        let dir = tmp("clean");
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let (mut j, _) = Journal::open(&dir, JournalFsync::Never).unwrap();
+            j.append(&accept_record(0, &gen(&[1]), None, false, true, None, 0)).unwrap();
+            j.mark_clean().unwrap();
+        }
+        let (_j, rp) = Journal::open(&dir, JournalFsync::Never).unwrap();
+        assert_eq!((rp.records, rp.torn, rp.requests.len()), (0, 0, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -23,6 +23,7 @@
 //! still gets its final line, then exits.
 
 pub mod frontend;
+pub mod journal;
 pub mod router;
 pub mod shard;
 pub mod supervisor;
@@ -42,9 +43,9 @@ use crate::coordinator::Coordinator;
 use crate::engine::scripted::ScriptedFactory;
 use crate::util::failpoint::FaultSpec;
 
-use frontend::run_frontend;
+use frontend::{run_frontend_with, Durable, FrontOpts};
 use router::Router;
-use shard::{FrontEvent, ShardCmd, ShardHandle};
+use shard::{FrontEvent, ShardCmd, ShardHandle, ShardOpts};
 use supervisor::{ShardRuntime, SupervisorCfg};
 use wire::Defaults;
 
@@ -109,26 +110,69 @@ pub fn serve(be: &dyn Backend, cfg: Config) -> Result<()> {
     }
 }
 
+/// Open the durability layer a config describes (`journal_dir` set):
+/// the write-ahead journal (replayed, torn tail truncated) and the
+/// crash-consistent checkpoint store, plus the recovery counters
+/// `[recovered_sessions, journal_replayed, journal_torn_records]` for
+/// the registry. `None` when journaling is off.
+pub fn open_durable(cfg: &Config) -> Result<Option<(Durable, [u64; 3])>> {
+    let Some(dir) = cfg.journal_path() else { return Ok(None) };
+    let (jnl, replay) = journal::Journal::open(&dir, cfg.journal_fsync)?;
+    let store = crate::kvstore::CheckpointStore::open(&dir.join(journal::CKPT_SUBDIR))?;
+    let counters = [replay.requests.len() as u64, replay.records, replay.torn];
+    let durable = Durable {
+        journal: jnl,
+        store,
+        recovered: replay.requests,
+        next_gid: replay.next_gid,
+    };
+    Ok(Some((durable, counters)))
+}
+
 /// Serve on an already-bound listener with an existing (single)
 /// coordinator. Tests inject a scripted coordinator here; `serve` binds
 /// the real one. The shard loop runs on the caller's thread — the
 /// backend's handles are not `Send` — with the front end spawned beside
 /// it.
-pub fn serve_on(listener: TcpListener, mut coord: Coordinator<'_>) -> Result<()> {
+pub fn serve_on(listener: TcpListener, coord: Coordinator<'_>) -> Result<()> {
+    serve_on_abortable(listener, coord, None)
+}
+
+/// [`serve_on`] with the crash-equivalent abort hook: when the flag
+/// flips, the front end returns without draining, flushing or marking
+/// the journal clean — process-equivalent to a SIGKILL for the
+/// durability layer (the shard loop still winds down in-process).
+pub fn serve_on_abortable(
+    listener: TcpListener,
+    mut coord: Coordinator<'_>,
+    abort: Option<Arc<AtomicBool>>,
+) -> Result<()> {
     let defaults = Defaults {
         max_new: coord.cfg.max_new_tokens,
         temperature: coord.cfg.temperature,
     };
     let router = Router::new(1, coord.cfg.route_imbalance);
     let shard_queue = coord.cfg.shard_queue;
+    let (durable, counters) = match open_durable(&coord.cfg)? {
+        Some((d, c)) => (Some(d), c),
+        None => (None, [0; 3]),
+    };
+    let opts = ShardOpts {
+        checkpoint_every: coord.cfg.checkpoint_every_steps,
+        recovered_sessions: counters[0],
+        journal_replayed: counters[1],
+        journal_torn_records: counters[2],
+        ..ShardOpts::default()
+    };
+    let fopts = FrontOpts { shard_queue, durable, abort };
     let (cmd_tx, cmd_rx) = channel::<ShardCmd>();
     let (ev_tx, ev_rx) = channel::<FrontEvent>();
     let handles = vec![ShardHandle::new(0, cmd_tx)];
     thread::scope(|s| {
         let fe = s.spawn(move || {
-            run_frontend(listener, handles, ev_rx, router, defaults, shard_queue)
+            run_frontend_with(listener, handles, ev_rx, router, defaults, fopts)
         });
-        shard::run_shard(0, &mut coord, cmd_rx, ev_tx);
+        shard::run_shard_with(0, &mut coord, cmd_rx, ev_tx, opts);
         fe.join()
             .unwrap_or_else(|_| Err(anyhow!("front end panicked")))
     })?;
@@ -178,17 +222,35 @@ pub fn serve_supervised(
     cfg: Config,
     runtime: ShardRuntime,
 ) -> Result<()> {
+    serve_supervised_abortable(listener, cfg, runtime, None)
+}
+
+/// [`serve_supervised`] with the crash-equivalent abort hook (see
+/// [`serve_on_abortable`]).
+pub fn serve_supervised_abortable(
+    listener: TcpListener,
+    cfg: Config,
+    runtime: ShardRuntime,
+    abort: Option<Arc<AtomicBool>>,
+) -> Result<()> {
     let n = cfg.shards.max(1);
     let defaults = Defaults {
         max_new: cfg.max_new_tokens,
         temperature: cfg.temperature,
     };
     let router = Router::new(n, cfg.route_imbalance);
+    let (durable, counters) = match open_durable(&cfg)? {
+        Some((d, c)) => (Some(d), c),
+        None => (None, [0; 3]),
+    };
     let sup = SupervisorCfg {
         heartbeat_ms: cfg.shard_heartbeat_ms,
         max_restarts: cfg.max_restarts,
         checkpoint_every: cfg.checkpoint_every_steps,
         faults: FaultSpec::parse(&cfg.faults).unwrap_or_default(),
+        recovered_sessions: 0,
+        journal_replayed: 0,
+        journal_torn_records: 0,
     };
     let shard_queue = cfg.shard_queue;
     let (ev_tx, ev_rx) = channel::<FrontEvent>();
@@ -203,11 +265,30 @@ pub fn serve_supervised(
         for (i, rx) in rxs.into_iter().enumerate() {
             let tx = ev_tx.clone();
             let rt = Arc::clone(&runtime);
-            let supc = sup.clone();
+            // recovery counters live on shard 0's registry only — the
+            // cross-shard admin merge sums counters, so this keeps the
+            // aggregate exact
+            let supc = if i == 0 {
+                SupervisorCfg {
+                    recovered_sessions: counters[0],
+                    journal_replayed: counters[1],
+                    journal_torn_records: counters[2],
+                    ..sup.clone()
+                }
+            } else {
+                sup.clone()
+            };
             s.spawn(move || supervisor::supervise_shard(i, supc, rx, tx, rt));
         }
         drop(ev_tx);
-        run_frontend(listener, handles, ev_rx, router, defaults, shard_queue)
+        run_frontend_with(
+            listener,
+            handles,
+            ev_rx,
+            router,
+            defaults,
+            FrontOpts { shard_queue, durable, abort },
+        )
     })
 }
 
@@ -218,4 +299,16 @@ pub fn serve_supervised(
 pub fn serve_scripted(listener: TcpListener, cfg: Config, factory: ScriptedFactory) -> Result<()> {
     let runtime = scripted_runtime(&cfg, factory);
     serve_supervised(listener, cfg, runtime)
+}
+
+/// [`serve_scripted`] with the crash-equivalent abort hook (see
+/// [`serve_on_abortable`]).
+pub fn serve_scripted_abortable(
+    listener: TcpListener,
+    cfg: Config,
+    factory: ScriptedFactory,
+    abort: Option<Arc<AtomicBool>>,
+) -> Result<()> {
+    let runtime = scripted_runtime(&cfg, factory);
+    serve_supervised_abortable(listener, cfg, runtime, abort)
 }

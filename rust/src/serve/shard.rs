@@ -186,6 +186,12 @@ pub struct ShardOpts {
     pub checkpoint_every: usize,
     /// restart count carried into this incarnation's registry
     pub restarts: u64,
+    /// cold-restart recovery counters (DESIGN.md §17), seeded into the
+    /// registry so `admin metrics` reports them; the front end sets them
+    /// on shard 0 only (the cross-shard merge sums counters)
+    pub recovered_sessions: u64,
+    pub journal_replayed: u64,
+    pub journal_torn_records: u64,
 }
 
 /// Per-request reply routing held by the shard loop.
@@ -199,6 +205,12 @@ struct PendingReq {
     /// suppress delta tokens below this absolute index (already
     /// delivered before a failover)
     skip: usize,
+    /// the resume checkpoint's emitted-token history: a durable
+    /// checkpoint can be *ahead* of the client's delivered watermark
+    /// (taken after tokens were generated but before their delivery was
+    /// journaled), and `Step` events index past the preloaded tokens —
+    /// the gap `[skip, resumed_tokens)` is re-emitted from here
+    resume_emitted: Option<Vec<u32>>,
 }
 
 /// The shard device loop: drain commands, tick the scheduler, emit
@@ -227,6 +239,9 @@ pub fn run_shard_with(
     let mut draining = false;
     let mut steps_routed: u64 = 0;
     coord.registry.restarts = opts.restarts;
+    coord.registry.recovered_sessions = opts.recovered_sessions;
+    coord.registry.journal_replayed = opts.journal_replayed;
+    coord.registry.journal_torn_records = opts.journal_torn_records;
     loop {
         if let Some(p) = &opts.pulse {
             p.beats.fetch_add(1, Ordering::SeqCst);
@@ -328,6 +343,7 @@ fn handle_cmd(
                 priority: sr.priority,
                 auto: sr.auto,
             };
+            let resume_emitted = sr.resume.as_ref().map(|b| b.emitted.clone());
             match coord.submit_failover(sr.gen, opts, sr.resume.map(|b| *b)) {
                 Ok(local) => {
                     if sr.stream && !sr.ack_sent {
@@ -351,6 +367,7 @@ fn handle_cmd(
                             stream: sr.stream,
                             next_abs: 0,
                             skip: sr.skip_tokens,
+                            resume_emitted,
                         },
                     );
                 }
@@ -448,6 +465,31 @@ fn route_event(
             if let Some(p) = pending.get_mut(&id) {
                 p.skip = p.skip.max(p.next_abs);
                 p.next_abs = coord.get(id).map(|tr| tr.resumed_tokens).unwrap_or(0);
+                // Cold-restart checkpoint resume: the durable checkpoint
+                // may hold tokens past the journaled delivered watermark
+                // (generated but not yet confirmed on the wire before the
+                // crash). Step events start past the preloaded tokens, so
+                // replay the gap from the checkpoint's emitted history.
+                if p.stream && p.next_abs > p.skip {
+                    if let Some(em) =
+                        p.resume_emitted.as_ref().filter(|em| em.len() >= p.next_abs)
+                    {
+                        send_line(
+                            ev_tx,
+                            p.conn,
+                            Json::obj()
+                                .set("ok", true)
+                                .set("id", p.gid as i64)
+                                .set("stream", true)
+                                .set("step", 0usize)
+                                .set("delta", tokenizer::decode(&em[p.skip..p.next_abs]))
+                                .set("done", false),
+                        );
+                        let _ = ev_tx
+                            .send(FrontEvent::Progress { gid: p.gid, tokens: p.next_abs });
+                        p.skip = p.next_abs;
+                    }
+                }
             }
         }
         Event::Step { id, new_tokens, step, .. } => {

@@ -65,6 +65,12 @@ pub struct SupervisorCfg {
     /// `slow_op_ms`) are armed here so they fire once per shard, not
     /// once per incarnation
     pub faults: FaultSpec,
+    /// cold-restart recovery counters seeded into every generation's
+    /// registry (DESIGN.md §17); the front end sets them on shard 0
+    /// only so the cross-shard counter-summing merge stays exact
+    pub recovered_sessions: u64,
+    pub journal_replayed: u64,
+    pub journal_torn_records: u64,
 }
 
 struct GenShared {
@@ -108,9 +114,9 @@ fn track_event(ev: &FrontEvent, ledger: &mut Ledger) {
 fn spawn_generation(
     shard: usize,
     runtime: &ShardRuntime,
+    sup: &SupervisorCfg,
     panic_shot: &Option<OneShot>,
     slow_shot: &Option<OneShot>,
-    checkpoint_every: usize,
     restarts: u64,
 ) -> Generation {
     let (cmd_tx, cmd_rx) = channel::<ShardCmd>();
@@ -124,8 +130,11 @@ fn spawn_generation(
         pulse: Some(Arc::clone(&pulse)),
         panic_after_steps: panic_shot.clone(),
         slow_op_ms: slow_shot.clone(),
-        checkpoint_every,
+        checkpoint_every: sup.checkpoint_every,
         restarts,
+        recovered_sessions: sup.recovered_sessions,
+        journal_replayed: sup.journal_replayed,
+        journal_torn_records: sup.journal_torn_records,
     };
     let rt = Arc::clone(runtime);
     let sh = Arc::clone(&shared);
@@ -282,14 +291,8 @@ pub fn supervise_shard(
     let slow_shot = (sup.faults.slow_op_ms > 0).then(|| OneShot::new(sup.faults.slow_op_ms));
     let mut restarts: u64 = 0;
     let mut ledger = Ledger::default();
-    let mut gen = spawn_generation(
-        shard,
-        &runtime,
-        &panic_shot,
-        &slow_shot,
-        sup.checkpoint_every,
-        restarts,
-    );
+    let mut gen =
+        spawn_generation(shard, &runtime, &sup, &panic_shot, &slow_shot, restarts);
     let mut frontend_gone = false;
     loop {
         // 1. relay generation events
@@ -355,9 +358,9 @@ pub fn supervise_shard(
                     gen = spawn_generation(
                         shard,
                         &runtime,
+                        &sup,
                         &panic_shot,
                         &slow_shot,
-                        sup.checkpoint_every,
                         restarts,
                     );
                     let _ = ev_tx.send(FrontEvent::ShardUp { shard });

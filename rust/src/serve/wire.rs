@@ -56,6 +56,10 @@ pub enum Request {
         priority: i32,
     },
     Cancel { id: u64 },
+    /// Reconnect to a journaled in-flight request after a server
+    /// restart: replays the undelivered suffix of `id`'s output
+    /// (DESIGN.md §17)
+    GenerateRetry { id: u64 },
     Admin { cmd: AdminCmd, legacy: bool },
     Ping,
     Shutdown,
@@ -97,6 +101,13 @@ pub fn parse_request(raw: &str, defaults: &Defaults) -> Result<Request> {
                 .and_then(|x| x.as_i64())
                 .ok_or_else(|| anyhow!("cancel needs 'id'"))? as u64;
             Ok(Request::Cancel { id })
+        }
+        "generate_retry" => {
+            let id = req
+                .get("id")
+                .and_then(|x| x.as_i64())
+                .ok_or_else(|| anyhow!("generate_retry needs 'id'"))? as u64;
+            Ok(Request::GenerateRetry { id })
         }
         "generate" => {
             let prompt = req
@@ -190,6 +201,9 @@ pub fn metrics_body(coord: &mut Coordinator<'_>) -> Json {
         .set("deadline_hits", reg.deadline_hits as i64)
         .set("restarts", reg.restarts as i64)
         .set("checkpoint_resumes", reg.checkpoint_resumes as i64)
+        .set("recovered_sessions", reg.recovered_sessions as i64)
+        .set("journal_replayed", reg.journal_replayed as i64)
+        .set("journal_torn_records", reg.journal_torn_records as i64)
         .set("policy", reg.policy_mode.as_str())
         .set("policy_depth_changes", reg.policy_depth_changes as i64)
         .set("policy_refreshes", reg.policy_refreshes as i64);
@@ -423,5 +437,16 @@ mod tests {
             parse_request(r#"{"op":"admin","cmd":"shards"}"#, &d),
             Ok(Request::Admin { cmd: AdminCmd::Shards, legacy: false })
         ));
+    }
+
+    #[test]
+    fn generate_retry_parses_and_requires_id() {
+        let d = Defaults { max_new: 8, temperature: 0.0 };
+        assert!(matches!(
+            parse_request(r#"{"op":"generate_retry","id":7}"#, &d),
+            Ok(Request::GenerateRetry { id: 7 })
+        ));
+        let e = parse_request(r#"{"op":"generate_retry"}"#, &d).unwrap_err();
+        assert!(format!("{e:#}").contains("generate_retry needs 'id'"));
     }
 }

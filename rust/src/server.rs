@@ -251,6 +251,34 @@ impl Client {
         self.call(Json::obj().set("op", "cancel").set("id", id as i64))
     }
 
+    /// Reattach to a journaled request after a server restart (or a
+    /// dropped connection). The server replies with a retry header line
+    /// (`{"ok":true,"id":..,"retry":true,"delivered":W,"done":..}`)
+    /// carrying the delivered-token watermark, then streams exactly the
+    /// lines the original connection never received. Returns
+    /// `(header, step lines, final line)`; when the session already
+    /// finished, the buffered final line follows immediately.
+    pub fn resume_stream(&mut self, id: u64) -> Result<(Json, Vec<Json>, Json)> {
+        self.send_line(
+            &Json::obj().set("op", "generate_retry").set("id", id as i64),
+        )?;
+        let header = self.read_json()?;
+        if header.get("ok").and_then(|x| x.as_bool()) == Some(false) {
+            let final_line = header.clone();
+            return Ok((header, Vec::new(), final_line));
+        }
+        let mut steps = Vec::new();
+        loop {
+            let j = self.read_json()?;
+            if j.get("done").and_then(|x| x.as_bool()) == Some(true)
+                || j.get("ok").and_then(|x| x.as_bool()) == Some(false)
+            {
+                return Ok((header, steps, j));
+            }
+            steps.push(j);
+        }
+    }
+
     /// Versioned admin subcommand (`metrics`, `kv`, `cache`, `shards`).
     pub fn admin(&mut self, cmd: &str) -> Result<Json> {
         self.call(Json::obj().set("op", "admin").set("cmd", cmd).set("v", 1i64))

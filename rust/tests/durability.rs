@@ -1,0 +1,421 @@
+//! Durability acceptance suite (DESIGN.md §17): cold-restart recovery
+//! over the write-ahead request journal and the crash-consistent
+//! checkpoint store.
+//!
+//!   * crash = process-equivalent teardown (the abort hook: no drain,
+//!     no outbox flush, no journal mark-clean) mid-stream; a second
+//!     server incarnation over the same journal dir recovers every
+//!     unfinished session and a reconnecting `generate_retry` client
+//!     receives exactly the missing suffix — byte-identical to an
+//!     undisturbed run, zero duplicated and zero lost wire lines —
+//!     on **both** recovery paths (durable-checkpoint resume and
+//!     deterministic regeneration from the journal alone);
+//!   * graceful shutdown marks the journal clean: the next boot
+//!     replays nothing and reports `recovered: 0`;
+//!   * journal replay is idempotent and prefix-closed: scanning the
+//!     journal truncated at **every** byte length never fails, folds
+//!     exactly the complete-record prefix, and flags at most one torn
+//!     record; `Journal::open` truncates the torn tail and appends
+//!     land cleanly after it.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use specpv::config::{Config, EngineKind, JournalFsync};
+use specpv::coordinator::Coordinator;
+use specpv::engine::scripted::ScriptedFactory;
+use specpv::engine::GenRequest;
+use specpv::json::Json;
+use specpv::serve::journal::{self, Journal};
+use specpv::serve::{serve_scripted, serve_scripted_abortable};
+use specpv::server::Client;
+use specpv::tokenizer;
+
+/// Tokens per scripted step; delivery marks and resume boundaries are
+/// line-aligned, so the watermark is always a multiple of this.
+const TPS: usize = 2;
+/// Per-step pacing: slow enough that the abort deterministically lands
+/// mid-generation (the client aborts after [`ABORT_DELTAS`] lines,
+/// far before the 20-step run completes), fast enough for CI.
+const STEP_MICROS: u64 = 15_000;
+const MAX_NEW: usize = 40;
+const ABORT_DELTAS: usize = 6;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+fn paced_factory() -> ScriptedFactory {
+    ScriptedFactory {
+        tokens_per_step: TPS,
+        step_micros: STEP_MICROS,
+        ..ScriptedFactory::default()
+    }
+}
+
+/// Drive one request through a bare coordinator to completion — the
+/// undisturbed pin every recovery path must match byte for byte.
+fn direct_run(factory: ScriptedFactory, prompt: &str, max_new: usize) -> String {
+    let mut coord = Coordinator::with_factory(Config::default(), Box::new(factory));
+    let req = GenRequest::greedy(tokenizer::encode(prompt), max_new);
+    let id = coord.submit(req, Some(EngineKind::SpecPv)).unwrap();
+    while !coord.idle() {
+        coord.tick();
+    }
+    let tr = coord.get(id).unwrap();
+    tr.result.as_ref().expect("direct run must complete").text()
+}
+
+fn num(j: &Json, key: &str) -> i64 {
+    j.get(key).and_then(|x| x.as_i64()).unwrap_or_else(|| panic!("{key} missing: {j:?}"))
+}
+
+fn journaled_cfg(dir: &PathBuf, checkpoint_every: usize) -> Config {
+    Config {
+        shards: 1,
+        checkpoint_every_steps: checkpoint_every,
+        journal_dir: dir.to_string_lossy().into_owned(),
+        journal_fsync: JournalFsync::Always,
+        ..Config::default()
+    }
+}
+
+/// Boot a journaled scripted server, stream `prompt` until
+/// [`ABORT_DELTAS`] delta lines arrived, flip the crash-equivalent
+/// abort, and drain the socket to EOF. Returns `(gid, received_text)` —
+/// the received text is every fully flushed line, which is exactly what
+/// the journal's delivered watermark covers.
+fn crash_mid_stream(dir: &PathBuf, checkpoint_every: usize, prompt: &str) -> (u64, String) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = journaled_cfg(dir, checkpoint_every);
+    let abort = Arc::new(AtomicBool::new(false));
+    let server = {
+        let abort = Arc::clone(&abort);
+        let factory = paced_factory();
+        thread::spawn(move || serve_scripted_abortable(listener, cfg, factory, Some(abort)))
+    };
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.send(
+        Json::obj()
+            .set("op", "generate")
+            .set("prompt", prompt)
+            .set("max_new", MAX_NEW)
+            .set("engine", "spec_pv")
+            .set("stream", true),
+    )
+    .unwrap();
+    let mut gid = None;
+    let mut recv_text = String::new();
+    let mut deltas = 0usize;
+    loop {
+        let j = match cl.recv() {
+            Ok(j) => j,
+            // the abort dropped the connection; every fully flushed
+            // line was already consumed, a torn tail line fails parse
+            Err(_) => break,
+        };
+        if gid.is_none() {
+            gid = j.get("id").and_then(|x| x.as_i64()).map(|v| v as u64);
+        }
+        assert_ne!(
+            j.get("done").and_then(|x| x.as_bool()),
+            Some(true),
+            "generation completed before the abort — pacing too fast: {j:?}"
+        );
+        if let Some(d) = j.get("delta").and_then(|x| x.as_str()) {
+            recv_text.push_str(d);
+            deltas += 1;
+            if deltas == ABORT_DELTAS {
+                abort.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+    assert!(deltas >= ABORT_DELTAS, "only {deltas} deltas before the connection died");
+    server.join().unwrap().unwrap();
+    (gid.expect("no ack line with the request id arrived"), recv_text)
+}
+
+/// Restart over the same journal dir, reattach with `generate_retry`,
+/// and return `(header, resumed_text, final_line, metrics)`.
+fn recover_and_resume(dir: &PathBuf, checkpoint_every: usize, gid: u64) -> (Json, String, Json, Json) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = journaled_cfg(dir, checkpoint_every);
+    let server =
+        thread::spawn(move || serve_scripted(listener, cfg, paced_factory()));
+    let mut cl = Client::connect(&addr).unwrap();
+    let (header, steps, fin) = cl.resume_stream(gid).unwrap();
+    let resumed: String =
+        steps.iter().filter_map(|j| j.get("delta").and_then(|x| x.as_str())).collect();
+    let m = cl.admin("metrics").unwrap();
+    cl.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    (header, resumed, fin, m)
+}
+
+fn assert_recovered_byte_identical(
+    want: &str,
+    recv_text: &str,
+    header: &Json,
+    resumed: &str,
+    fin: &Json,
+    gid: u64,
+) {
+    assert_eq!(header.get("ok").and_then(|x| x.as_bool()), Some(true), "{header:?}");
+    assert_eq!(header.get("retry").and_then(|x| x.as_bool()), Some(true), "{header:?}");
+    assert_eq!(header.get("id").and_then(|x| x.as_i64()), Some(gid as i64));
+    assert_eq!(fin.get("ok").and_then(|x| x.as_bool()), Some(true), "{fin:?}");
+    assert_eq!(fin.get("tokens").and_then(|x| x.as_usize()), Some(MAX_NEW), "{fin:?}");
+    assert_eq!(fin.get("text").and_then(|x| x.as_str()), Some(want), "{fin:?}");
+    // zero lost, zero duplicated wire lines across the crash: what the
+    // first incarnation flushed plus what the restart replayed is the
+    // whole generation, byte for byte
+    assert_eq!(
+        format!("{recv_text}{resumed}"),
+        want,
+        "received {} + resumed {} bytes do not reassemble the pin",
+        recv_text.len(),
+        resumed.len()
+    );
+    assert!(!recv_text.is_empty(), "crash landed before any delivery");
+    assert!(!resumed.is_empty(), "crash landed after the final line");
+}
+
+/// Crash mid-stream with periodic durable checkpoints on: the restart
+/// resumes from the checkpoint store and the reconnecting client gets
+/// exactly the missing suffix.
+#[test]
+fn cold_restart_checkpoint_resume_byte_identical() {
+    let dir = tmp_dir("durability_ckpt");
+    let want = direct_run(paced_factory(), "durable pin alpha", MAX_NEW);
+    let (gid, recv_text) = crash_mid_stream(&dir, 2, "durable pin alpha");
+    let (header, resumed, fin, m) = recover_and_resume(&dir, 2, gid);
+    assert_recovered_byte_identical(&want, &recv_text, &header, &resumed, &fin, gid);
+
+    assert_eq!(num(&m, "recovered_sessions"), 1, "{m:?}");
+    assert!(num(&m, "journal_replayed") >= 2, "accept + progress records: {m:?}");
+    assert_eq!(num(&m, "journal_torn_records"), 0, "{m:?}");
+    assert_eq!(num(&m, "checkpoint_resumes"), 1, "restart must use the durable checkpoint: {m:?}");
+    assert_eq!(num(&m, "failover_checkpoint"), 1, "{m:?}");
+    assert_eq!(num(&m, "failover_regen"), 0, "{m:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Crash mid-stream with checkpointing off: the restart regenerates the
+/// session deterministically from the journaled request alone,
+/// suppressing everything below the delivered watermark.
+#[test]
+fn cold_restart_regenerates_from_journal_byte_identical() {
+    let dir = tmp_dir("durability_regen");
+    let want = direct_run(paced_factory(), "durable pin beta", MAX_NEW);
+    let (gid, recv_text) = crash_mid_stream(&dir, 0, "durable pin beta");
+    let (header, resumed, fin, m) = recover_and_resume(&dir, 0, gid);
+    assert_recovered_byte_identical(&want, &recv_text, &header, &resumed, &fin, gid);
+
+    assert_eq!(num(&m, "recovered_sessions"), 1, "{m:?}");
+    assert!(num(&m, "journal_replayed") >= 2, "{m:?}");
+    assert_eq!(num(&m, "journal_torn_records"), 0, "{m:?}");
+    assert_eq!(num(&m, "checkpoint_resumes"), 0, "no checkpoint store to resume from: {m:?}");
+    assert_eq!(num(&m, "failover_checkpoint"), 0, "{m:?}");
+    assert_eq!(num(&m, "failover_regen"), 1, "{m:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A request id that was never journaled (or already delivered) is a
+/// clean structured error, not a hang.
+#[test]
+fn generate_retry_unknown_id_errors_cleanly() {
+    let dir = tmp_dir("durability_unknown");
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = journaled_cfg(&dir, 0);
+    let server = thread::spawn(move || serve_scripted(listener, cfg, paced_factory()));
+    let mut cl = Client::connect(&addr).unwrap();
+    let (header, steps, fin) = cl.resume_stream(9_999).unwrap();
+    assert_eq!(header.get("ok").and_then(|x| x.as_bool()), Some(false), "{header:?}");
+    assert!(steps.is_empty());
+    assert_eq!(fin.get("ok").and_then(|x| x.as_bool()), Some(false));
+    cl.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Graceful shutdown flushes every terminal line, marks the journal
+/// clean and clears the checkpoint store — the next boot replays
+/// nothing and serves normally.
+#[test]
+fn clean_shutdown_recovers_nothing() {
+    let dir = tmp_dir("durability_clean");
+    let want = direct_run(paced_factory(), "durable pin gamma", MAX_NEW);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = journaled_cfg(&dir, 2);
+    let server = {
+        let cfg = cfg.clone();
+        thread::spawn(move || serve_scripted(listener, cfg, paced_factory()))
+    };
+    let mut cl = Client::connect(&addr).unwrap();
+    let (_steps, fin) = cl.generate_stream("durable pin gamma", MAX_NEW, "spec_pv").unwrap();
+    assert_eq!(fin.get("text").and_then(|x| x.as_str()), Some(want.as_str()));
+    cl.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+
+    // second boot over the same journal dir: nothing to recover
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = thread::spawn(move || serve_scripted(listener, cfg, paced_factory()));
+    let mut cl = Client::connect(&addr).unwrap();
+    let m = cl.admin("metrics").unwrap();
+    assert_eq!(num(&m, "recovered_sessions"), 0, "{m:?}");
+    assert_eq!(num(&m, "journal_replayed"), 0, "{m:?}");
+    assert_eq!(num(&m, "journal_torn_records"), 0, "{m:?}");
+    // and the clean restart still serves
+    let r = cl.generate("durable pin gamma", MAX_NEW, "spec_pv").unwrap();
+    assert_eq!(r.get("text").and_then(|x| x.as_str()), Some(want.as_str()), "{r:?}");
+    cl.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A representative journal: two requests accepted, interleaved
+/// progress, one finished. Written through the real `Journal` so the
+/// bytes exercise the actual framing + header path.
+fn sample_records() -> Vec<Json> {
+    let r0 = GenRequest::greedy(vec![10, 11, 12], 8);
+    let r1 = GenRequest::greedy(vec![20, 21], 6);
+    vec![
+        journal::accept_record(0, &r0, Some(EngineKind::SpecPv), false, true, None, 0),
+        journal::progress_record(0, 2),
+        journal::accept_record(1, &r1, None, true, true, Some(1.5), 3),
+        journal::progress_record(1, 2),
+        journal::progress_record(0, 4),
+        journal::done_record(0),
+        journal::progress_record(1, 4),
+    ]
+}
+
+fn journal_bytes(dir: &PathBuf, records: &[Json]) -> Vec<u8> {
+    {
+        let (mut jnl, replay) = Journal::open(dir, JournalFsync::Never).unwrap();
+        assert_eq!(replay.records, 0, "fresh dir must start empty");
+        for r in records {
+            jnl.append(r).unwrap();
+        }
+    }
+    std::fs::read(dir.join(journal::JOURNAL_FILE)).unwrap()
+}
+
+/// Prefix closure + torn-tail tolerance at **every** byte length: a
+/// journal truncated anywhere folds exactly its complete-record prefix,
+/// flags at most one torn record, and never errors.
+#[test]
+fn journal_scan_is_prefix_closed_at_every_truncation() {
+    let dir = tmp_dir("durability_scan_prop");
+    let records = sample_records();
+    let bytes = journal_bytes(&dir, &records);
+    // record end offsets within the file (header + frame lengths)
+    let mut ends = vec![8u64];
+    for r in &records {
+        ends.push(ends.last().unwrap() + journal::frame(r).len() as u64);
+    }
+    assert_eq!(*ends.last().unwrap(), bytes.len() as u64, "frame math disagrees with the file");
+
+    for cut in 0..=bytes.len() {
+        let rp = journal::scan_bytes(&bytes[..cut]);
+        if cut == 0 {
+            assert_eq!(rp.records, 0);
+            assert_eq!(rp.torn, 0, "an empty file is fresh, not torn");
+            continue;
+        }
+        if (cut as u64) < 8 {
+            assert_eq!(rp.records, 0);
+            assert_eq!(rp.torn, 1, "a torn header is flagged (cut={cut})");
+            continue;
+        }
+        // complete records that fit in this prefix
+        let k = ends.iter().filter(|&&e| e <= cut as u64).count() - 1;
+        let mut want = journal::Replay::default();
+        for r in &records[..k] {
+            want.fold(r);
+        }
+        assert_eq!(rp.records, k as u64, "cut={cut}");
+        assert_eq!(rp.requests, want.requests, "cut={cut}");
+        assert_eq!(rp.done, want.done, "cut={cut}");
+        assert_eq!(rp.next_gid, want.next_gid, "cut={cut}");
+        assert_eq!(rp.valid_len, ends[k], "cut={cut}");
+        let boundary = ends.contains(&(cut as u64));
+        assert_eq!(rp.torn, u64::from(!boundary), "cut={cut}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Replay is idempotent: folding the whole journal a second time over
+/// the already-folded state changes nothing.
+#[test]
+fn journal_replay_is_idempotent() {
+    let records = sample_records();
+    let mut once = journal::Replay::default();
+    for r in &records {
+        once.fold(r);
+    }
+    let mut twice = journal::Replay::default();
+    for r in records.iter().chain(records.iter()) {
+        twice.fold(r);
+    }
+    assert_eq!(once.requests, twice.requests);
+    assert_eq!(once.done, twice.done);
+    assert_eq!(once.next_gid, twice.next_gid);
+    // the folded state is sane: gid 0 finished, gid 1 is outstanding at
+    // its max-merged watermark
+    assert!(once.done.contains(&0));
+    assert_eq!(once.requests.len(), 1);
+    assert_eq!(once.requests[&1].delivered, 4);
+    assert_eq!(once.next_gid, 2);
+}
+
+/// `Journal::open` on a file torn at every length inside the final
+/// record: the tail is truncated (not fatal), the fold matches the
+/// complete-record prefix, and a subsequent append lands cleanly.
+#[test]
+fn journal_open_truncates_torn_tail_and_appends_after_it() {
+    let build = tmp_dir("durability_open_src");
+    let records = sample_records();
+    let bytes = journal_bytes(&build, &records);
+    let mut ends = vec![8u64];
+    for r in &records {
+        ends.push(ends.last().unwrap() + journal::frame(r).len() as u64);
+    }
+    let last_clean = ends[ends.len() - 2];
+
+    for cut in last_clean..(bytes.len() as u64) {
+        let dir = tmp_dir("durability_open_case");
+        std::fs::write(dir.join(journal::JOURNAL_FILE), &bytes[..cut as usize]).unwrap();
+        let (mut jnl, replay) = Journal::open(&dir, JournalFsync::Never).unwrap();
+        assert_eq!(replay.records, records.len() as u64 - 1, "cut={cut}");
+        assert_eq!(replay.torn, u64::from(cut != last_clean), "cut={cut}");
+        assert_eq!(replay.valid_len, last_clean, "cut={cut}");
+        assert_eq!(
+            std::fs::metadata(dir.join(journal::JOURNAL_FILE)).unwrap().len(),
+            last_clean,
+            "open must truncate the torn tail (cut={cut})"
+        );
+        // appends after the truncation are clean and replayable
+        jnl.append(&journal::done_record(1)).unwrap();
+        drop(jnl);
+        let (_, again) = Journal::open(&dir, JournalFsync::Never).unwrap();
+        assert_eq!(again.records, records.len() as u64, "cut={cut}");
+        assert_eq!(again.torn, 0, "cut={cut}");
+        assert!(again.requests.is_empty(), "both gids are finished now (cut={cut})");
+        assert!(again.done.contains(&1), "cut={cut}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let _ = std::fs::remove_dir_all(&build);
+}

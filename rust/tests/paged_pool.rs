@@ -10,7 +10,10 @@
 //!   * swap-fault recovery — corrupting the spill files of a preempted
 //!     session makes resume fail **cleanly**: the request is re-queued
 //!     and regenerated from scratch with identical output, the registry
-//!     counts a swap fault, and nothing panics.
+//!     counts a swap fault, and nothing panics;
+//!   * boot-epoch isolation — spill pages written by one process
+//!     incarnation are GC'd on the next boot and can never be resolved
+//!     by it (DESIGN.md §17).
 
 use std::path::PathBuf;
 
@@ -56,6 +59,30 @@ fn tmp_dir(name: &str) -> PathBuf {
     let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join(name);
     let _ = std::fs::remove_dir_all(&dir);
     dir
+}
+
+/// Recursively walk `dir` for spill pages (`*.kvp`); spills live under
+/// per-boot epoch subdirectories (`epoch-<E>/p<N>`, swap.rs). Returns
+/// the page-file count; with `clobber` set, overwrites each with junk.
+fn walk_spill_pages(dir: &std::path::Path, clobber: bool) -> usize {
+    let mut n = 0;
+    let Ok(rd) = std::fs::read_dir(dir) else { return 0 };
+    for f in rd.flatten() {
+        let p = f.path();
+        if p.is_dir() {
+            n += walk_spill_pages(&p, clobber);
+        } else if p.extension().map(|e| e == "kvp").unwrap_or(false) {
+            if clobber {
+                std::fs::write(&p, b"corrupt").unwrap();
+            }
+            n += 1;
+        }
+    }
+    n
+}
+
+fn clobber_spill_pages(dir: &std::path::Path) -> usize {
+    walk_spill_pages(dir, true)
 }
 
 /// The f32 element of a flat image (`data ++ extra`) at global index
@@ -265,12 +292,10 @@ fn corrupt_spill_files_fault_cleanly_and_requeue() {
             match ev {
                 Event::SwappedOut { id } => {
                     assert_eq!(id, low);
-                    // clobber every spill file the demotion just wrote
-                    let mut n = 0;
-                    for f in std::fs::read_dir(&dir).unwrap() {
-                        std::fs::write(f.unwrap().path(), b"corrupt").unwrap();
-                        n += 1;
-                    }
+                    // clobber every spill page the demotion just wrote;
+                    // spills live under per-boot epoch subdirectories
+                    // (swap.rs), so walk recursively for `*.kvp` files
+                    let n = clobber_spill_pages(&dir);
                     assert!(n > 0, "preemption spilled no pages to {dir:?}");
                     corrupted = true;
                 }
@@ -294,4 +319,57 @@ fn corrupt_spill_files_fault_cleanly_and_requeue() {
     assert_eq!(stats.resident_bytes, 0, "pool must drain when idle");
     assert_eq!(stats.swapped, 0, "no session may stay parked");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Epoch isolation at the pool level (DESIGN.md §17): spill pages
+/// written by process incarnation N are garbage-collected — and can
+/// never be resolved — by incarnation N+1, whose own spills land in a
+/// fresh epoch directory.
+#[test]
+fn boot_epochs_isolate_pool_incarnations() {
+    let root = tmp_dir("pool_epochs");
+
+    // incarnation N: spill one parked state's pages to disk, then
+    // "crash" — drop the pool with the state still parked, so the
+    // spill files stay behind (freeing or promoting would delete them)
+    let data: Vec<f32> = (0..300).map(|i| i as f32).collect();
+    {
+        let pool = KvPool::with_opts(0, 64, Some(&root), KvQuant::None);
+        let ps = pool.park_image(StateKind::Full, "s", 64, &data, &[]);
+        pool.park_cold(std::slice::from_ref(&ps)).unwrap();
+        assert!(
+            walk_spill_pages(&root, false) > 0,
+            "park_cold spilled nothing under {root:?}"
+        );
+    }
+    let _ = std::fs::write(
+        root.join("epoch-00000001").join("p0").join("page-deadbeefdeadbeef.kvp"),
+        b"stale page from incarnation N",
+    );
+    let before = walk_spill_pages(&root, false);
+    assert!(before > 0, "incarnation N left no spill files to isolate");
+
+    // incarnation N+1: constructing a boot-scoped pool bumps the epoch
+    // and garbage-collects every stale epoch directory
+    specpv::kvstore::swap::force_new_boot(&root);
+    let pool2 = KvPool::with_opts(0, 64, Some(&root), KvQuant::None);
+    assert!(
+        !root.join("epoch-00000001").exists(),
+        "incarnation N's epoch directory survived the next boot"
+    );
+    assert_eq!(
+        walk_spill_pages(&root, false),
+        0,
+        "stale spill pages leaked across the boot epoch"
+    );
+
+    // the new incarnation's own spills round-trip in its fresh epoch dir
+    let ps2 = pool2.park_image(StateKind::Full, "s", 64, &data, &[]);
+    pool2.park_cold(std::slice::from_ref(&ps2)).unwrap();
+    assert!(walk_spill_pages(&root, false) > 0, "incarnation N+1 spilled nothing");
+    pool2.promote(std::slice::from_ref(&ps2)).unwrap();
+    let (back, _) = pool2.read_image(&ps2).unwrap();
+    assert_eq!(back, data);
+    pool2.free_state(&ps2);
+    let _ = std::fs::remove_dir_all(&root);
 }

@@ -1,0 +1,242 @@
+#!/usr/bin/env python3
+"""Crash-recovery end-to-end check against a real `specpv serve` process.
+
+Flow (DESIGN.md §17):
+
+  1. start a journaled server (`--journal-dir`, fsync always),
+  2. stream a long spec_pv generation and SIGKILL the server mid-stream,
+  3. drain the dead socket to EOF (every fully flushed line survives in
+     the kernel buffer; a torn tail line is dropped),
+  4. snapshot the journal for the CI artifact,
+  5. restart the server over the same journal dir and reattach with
+     `generate_retry`,
+  6. assert the bytes received before the kill plus the replayed suffix
+     are **byte-identical** to the final text — zero duplicated, zero
+     lost wire lines — and that the recovery counters report the replay.
+
+Stdlib only; exits non-zero on any violation. Artifacts (journal copy,
+metrics, summary) land in --out (default: recovery-artifacts/).
+"""
+
+import argparse
+import json
+import os
+import shutil
+import signal
+import socket
+import subprocess
+import sys
+import time
+
+PROMPT_BYTES = 1536
+MAX_NEW = 160
+KILL_AFTER_DELTAS = 6
+
+
+def log(msg):
+    print(f"[crash-recovery] {msg}", flush=True)
+
+
+def wait_port(addr, timeout=30.0):
+    host, port = addr.split(":")
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        try:
+            with socket.create_connection((host, int(port)), timeout=1.0):
+                return
+        except OSError:
+            time.sleep(0.05)
+    raise SystemExit(f"server on {addr} never came up")
+
+
+class Conn:
+    """One newline-delimited-JSON connection."""
+
+    def __init__(self, addr):
+        host, port = addr.split(":")
+        self.sock = socket.create_connection((host, int(port)), timeout=120.0)
+        self.rd = self.sock.makefile("rb")
+
+    def send(self, obj):
+        self.sock.sendall((json.dumps(obj) + "\n").encode())
+
+    def recv(self):
+        """Next parsed line, or None on EOF / torn tail line."""
+        line = self.rd.readline()
+        if not line or not line.endswith(b"\n"):
+            return None
+        try:
+            return json.loads(line)
+        except json.JSONDecodeError:
+            return None
+
+    def call(self, obj):
+        self.send(obj)
+        r = self.recv()
+        if r is None:
+            raise SystemExit(f"connection died answering {obj}")
+        return r
+
+    def close(self):
+        try:
+            self.rd.close()
+            self.sock.close()
+        except OSError:
+            pass
+
+
+def start_server(binary, addr, journal_dir, extra=()):
+    cmd = [
+        binary,
+        "serve",
+        "--addr", addr,
+        "--backend", "reference",
+        "--journal-dir", journal_dir,
+        "--journal-fsync", "always",
+        "--checkpoint-every-steps", "4",
+        "--shards", "1",
+        *extra,
+    ]
+    log(" ".join(cmd))
+    proc = subprocess.Popen(cmd)
+    wait_port(addr)
+    return proc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--binary", default="target/release/specpv")
+    ap.add_argument("--addr", default="127.0.0.1:7997")
+    ap.add_argument("--out", default="recovery-artifacts")
+    ap.add_argument("--journal-dir", default="recovery-journal")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    shutil.rmtree(args.journal_dir, ignore_errors=True)
+
+    prompt = ("The long context under test repeats until it is long enough. " * 64)[
+        :PROMPT_BYTES
+    ]
+
+    # --- boot 1: stream, SIGKILL mid-stream, drain to EOF -------------
+    proc = start_server(args.binary, args.addr, args.journal_dir)
+    cl = Conn(args.addr)
+    cl.send(
+        {
+            "op": "generate",
+            "prompt": prompt,
+            "max_new": MAX_NEW,
+            "engine": "spec_pv",
+            "stream": True,
+        }
+    )
+    gid = None
+    received = []
+    deltas = 0
+    killed = False
+    while True:
+        j = cl.recv()
+        if j is None:
+            break
+        if gid is None and "id" in j:
+            gid = j["id"]
+        if j.get("done"):
+            raise SystemExit(
+                "generation finished before the SIGKILL — nothing to recover; "
+                "raise MAX_NEW"
+            )
+        if "delta" in j:
+            received.append(j["delta"])
+            deltas += 1
+            if deltas == KILL_AFTER_DELTAS and not killed:
+                log(f"SIGKILL after {deltas} deltas (pid {proc.pid})")
+                os.kill(proc.pid, signal.SIGKILL)
+                killed = True
+    cl.close()
+    proc.wait()
+    if gid is None:
+        raise SystemExit("no ack line carried the request id")
+    if not killed:
+        raise SystemExit(f"stream ended after only {deltas} deltas without a kill")
+    recv_text = "".join(received)
+    log(f"request {gid}: {deltas} delta lines ({len(recv_text)} bytes) survived the kill")
+
+    # snapshot the journal before the next boot truncates/compacts it
+    wal = os.path.join(args.journal_dir, "journal.wal")
+    if not os.path.exists(wal):
+        raise SystemExit(f"journal file missing at {wal}")
+    shutil.copy(wal, os.path.join(args.out, "journal.wal"))
+    log(f"journal snapshot: {os.path.getsize(wal)} bytes")
+
+    # --- boot 2: recover and reattach ---------------------------------
+    proc = start_server(args.binary, args.addr, args.journal_dir)
+    cl = Conn(args.addr)
+    cl.send({"op": "generate_retry", "id": gid})
+    header = cl.recv()
+    if header is None or not header.get("ok") or not header.get("retry"):
+        raise SystemExit(f"generate_retry rejected after restart: {header}")
+    log(f"retry header: delivered watermark {header.get('delivered')}")
+    resumed = []
+    fin = None
+    while True:
+        j = cl.recv()
+        if j is None:
+            raise SystemExit("connection died mid-replay")
+        if j.get("done") or j.get("ok") is False:
+            fin = j
+            break
+        if "delta" in j:
+            resumed.append(j["delta"])
+    if not fin.get("ok"):
+        raise SystemExit(f"resumed request failed: {fin}")
+    resumed_text = "".join(resumed)
+
+    # --- byte identity: received + resumed == the whole generation ----
+    fin_text = fin.get("text", "")
+    joined = recv_text + resumed_text
+    if fin.get("tokens") != MAX_NEW:
+        raise SystemExit(f"resumed run truncated: tokens={fin.get('tokens')}")
+    if joined != fin_text:
+        raise SystemExit(
+            "byte identity violated across the crash: "
+            f"{len(recv_text)} received + {len(resumed_text)} resumed "
+            f"!= {len(fin_text)} final bytes"
+        )
+    log(f"byte-identical: {len(recv_text)} + {len(resumed_text)} == {len(fin_text)} bytes")
+
+    metrics = cl.call({"op": "admin", "cmd": "metrics", "v": 1})
+    for key, want in (("recovered_sessions", 1), ("journal_torn_records", 0)):
+        if metrics.get(key) != want:
+            raise SystemExit(f"metrics[{key}] = {metrics.get(key)}, want {want}: {metrics}")
+    if not metrics.get("journal_replayed", 0) >= 2:
+        raise SystemExit(f"journal_replayed too low: {metrics}")
+
+    cl.call({"op": "shutdown"})
+    cl.close()
+    proc.wait(timeout=60)
+
+    with open(os.path.join(args.out, "metrics.json"), "w") as f:
+        json.dump(metrics, f, indent=2, sort_keys=True)
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(
+            {
+                "gid": gid,
+                "deltas_before_kill": deltas,
+                "received_bytes": len(recv_text),
+                "resumed_bytes": len(resumed_text),
+                "final_bytes": len(fin_text),
+                "delivered_watermark": header.get("delivered"),
+                "recovered_sessions": metrics.get("recovered_sessions"),
+                "journal_replayed": metrics.get("journal_replayed"),
+                "journal_torn_records": metrics.get("journal_torn_records"),
+            },
+            f,
+            indent=2,
+            sort_keys=True,
+        )
+    log("PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
